@@ -1,0 +1,84 @@
+//! End-to-end validation driver (experiment E7): the full three-layer system
+//! on a real workload, sweeping the paper's rank counts with both engine
+//! arms, and reporting the headline metric — speedup over the one-CPU serial
+//! baseline — from *live* distributed runs (real messages, real tile ops,
+//! PJRT-executed Pallas kernels on the accelerated arm).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example cluster_scaling
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md §E7.
+
+use cuplss::accel::EngineKind;
+use cuplss::cluster::{Cluster, ClusterConfig, Method};
+use cuplss::comm::NetworkModel;
+use cuplss::solvers::{IterConfig, IterMethod};
+use cuplss::util::fmt;
+use cuplss::workloads::Workload;
+
+fn main() -> cuplss::Result<()> {
+    // n is CLI-overridable: `cargo run --release --example cluster_scaling -- 2048`
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(1536);
+    let tile = 128;
+    let ranks_sweep = [1usize, 2, 4, 8, 16];
+    let have_artifacts = std::path::Path::new("artifacts/manifest.txt").exists();
+    let engines: &[EngineKind] = if have_artifacts {
+        &[EngineKind::Accelerated, EngineKind::CpuSerial]
+    } else {
+        eprintln!("note: artifacts missing; running the ATLAS arm only");
+        &[EngineKind::CpuSerial]
+    };
+
+    println!("== E7: live cluster scaling, n = {n}, tile = {tile} ==\n");
+
+    for (workload, method, label) in [
+        (Workload::DiagDominant, Method::Lu, "LU (Figure 4 live analogue)"),
+        (
+            Workload::DiagDominant,
+            Method::Iterative(IterMethod::Bicgstab),
+            "BiCGSTAB (Figure 3 live analogue)",
+        ),
+    ] {
+        println!("-- {label} --");
+        // Serial baseline: P = 1, CPU engine (the paper's definition).
+        let base = Cluster::new(ClusterConfig {
+            ranks: 1,
+            tile,
+            engine: EngineKind::CpuSerial,
+            net: NetworkModel::gigabit_ethernet(),
+            iter: IterConfig { tol: 1e-8, max_iter: 400, restart: 30 },
+            ..Default::default()
+        })?
+        .solve::<f32>(workload, n, method)?;
+        let t1 = base.makespan();
+        println!("   serial baseline: {} (wall {})", fmt::secs(t1), fmt::secs(base.wall_max()));
+
+        for &engine in engines {
+            println!("   {}:", engine.label());
+            for &ranks in &ranks_sweep {
+                let report = Cluster::new(ClusterConfig {
+                    ranks,
+                    tile,
+                    engine,
+                    net: NetworkModel::gigabit_ethernet(),
+                    iter: IterConfig { tol: 1e-8, max_iter: 400, restart: 30 },
+                    ..Default::default()
+                })?
+                .solve::<f32>(workload, n, method)?;
+                println!(
+                    "     P={ranks:>2}: makespan {:>12}  speedup {:>6.2}  comm {:>4.1}%  err {:.1e}",
+                    fmt::secs(report.makespan()),
+                    t1 / report.makespan(),
+                    report.comm_fraction() * 100.0,
+                    report.max_err,
+                );
+                assert!(report.max_err < 1e-2, "solution must stay correct at P={ranks}");
+            }
+        }
+        println!();
+    }
+
+    println!("(virtual time = calibrated 2008-era cluster model; see DESIGN.md §3)");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Quickstart: solve one dense system with a direct and an iterative method.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Mirrors the paper's usage story: the API hides all distribution — you
+//! pick a workload, a method, a rank count and an engine; the library builds
+//! the 2-D mesh, distributes the tiles, runs the MPI-style algorithm with
+//! engine-accelerated local compute, and hands back the verified solution.
+
+use cuplss::accel::EngineKind;
+use cuplss::cluster::{Cluster, ClusterConfig, Method};
+use cuplss::solvers::{IterConfig, IterMethod};
+use cuplss::workloads::Workload;
+
+fn main() -> cuplss::Result<()> {
+    let n = 512;
+
+    // A 4-rank simulated cluster with serial-CPU local compute
+    // (the paper's "MPI+ATLAS" arm; switch to EngineKind::Accelerated for
+    // the PJRT/Pallas "MPI+CUDA" arm after `make artifacts`).
+    let cluster = Cluster::new(ClusterConfig {
+        ranks: 4,
+        tile: 64,
+        engine: EngineKind::CpuSerial,
+        iter: IterConfig { tol: 1e-10, max_iter: 500, restart: 30 },
+        ..Default::default()
+    })?;
+
+    // Direct: blocked LU with partial pivoting.
+    let report = cluster.solve::<f64>(Workload::DiagDominant, n, Method::Lu)?;
+    println!("{}", report.summary());
+    assert!(report.max_err < 1e-8);
+
+    // Iterative: BiCGSTAB on the same workload.
+    let report =
+        cluster.solve::<f64>(Workload::DiagDominant, n, Method::Iterative(IterMethod::Bicgstab))?;
+    println!("{}", report.summary());
+    assert!(report.max_err < 1e-6);
+
+    // SPD pairing: Cholesky vs CG.
+    let report = cluster.solve::<f64>(Workload::Spd, n, Method::Cholesky)?;
+    println!("{}", report.summary());
+    let report = cluster.solve::<f64>(Workload::Spd, n, Method::Iterative(IterMethod::Cg))?;
+    println!("{}", report.summary());
+
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,96 @@
+"""AOT driver: lower every (op, dtype, tile) combination to HLO text.
+
+This is the only place python touches the build: ``make artifacts`` runs
+``python -m compile.aot --out ../artifacts`` once, and the rust runtime
+(rust/src/runtime) loads + PJRT-compiles the text files at startup.  Python
+never runs on the solve path.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Alongside the .hlo.txt files we emit ``manifest.txt`` — a dependency-free
+line format the rust side parses by hand (no serde in the offline crate
+set)::
+
+    <artifact> <op> <dtype> <tile> <flops> <arity> <in0,in1,...> <out>
+
+shapes are 'x'-separated dims, 's' for scalar (rank-0).
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust unwrap)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_str(shape) -> str:
+    if len(shape) == 0:
+        return "s"
+    return "x".join(str(d) for d in shape)
+
+
+def build_all(out_dir: str, tiles=None, dtypes=None, verbose=True) -> int:
+    tiles = tiles or model.TILES
+    dtypes = dtypes or model.DTYPES
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    count = 0
+    for name, (_builder, shapes, flops_fn) in model.OPS.items():
+        for dtype in dtypes:
+            for tile in tiles:
+                art = model.artifact_name(name, tile, dtype)
+                path = os.path.join(out_dir, art + ".hlo.txt")
+                lowered = model.lower(name, tile, dtype)
+                text = to_hlo_text(lowered)
+                with open(path, "w") as f:
+                    f.write(text)
+                in_shapes = ",".join(_shape_str(s(tile)) for s in shapes)
+                out_shape = _shape_str(
+                    lowered.out_info[0].shape
+                    if isinstance(lowered.out_info, (list, tuple))
+                    else lowered.out_info.shape
+                )
+                manifest_lines.append(
+                    f"{art} {name} {dtype} {tile} {flops_fn(tile)} "
+                    f"{len(shapes)} {in_shapes} {out_shape}"
+                )
+                count += 1
+                if verbose:
+                    print(f"  [{count}] {art}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    if verbose:
+        print(f"wrote {count} artifacts + manifest.txt to {out_dir}")
+    return count
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts")
+    parser.add_argument("--tiles", default=None, help="comma list, e.g. 128,256")
+    parser.add_argument("--dtypes", default=None, help="comma list, e.g. f32,f64")
+    args = parser.parse_args()
+    tiles = tuple(int(t) for t in args.tiles.split(",")) if args.tiles else None
+    dtypes = tuple(args.dtypes.split(",")) if args.dtypes else None
+    n = build_all(args.out, tiles=tiles, dtypes=dtypes)
+    if n == 0:
+        sys.exit("no artifacts produced")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: tiled GEMV (and its accumulating variant).
+
+The iterative solvers (CG/BiCG/BiCGSTAB/GMRES) are matvec-dominated; on each
+rank the local shard of the distributed matvec is a dense (tile-rows x n_loc)
+GEMV.  The kernel tiles the matrix into (bm, bk) VMEM blocks and walks the
+row-block x col-block grid; the output row block stays resident in VMEM
+across the K walk (its index map ignores k), exactly like the GEMM kernel.
+
+The vector operand is blocked as (bk,) slices of x.  As with GEMM, the MXU
+executes the (bm, bk) @ (bk,) contraction; interpret=True for the CPU PJRT
+path (see gemm.py for the rationale).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK = 128
+
+
+def _gemv_kernel(a_ref, x_ref, o_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], x_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _gemv_update_kernel(y_ref, a_ref, x_ref, o_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = y_ref[...]
+
+    o_ref[...] -= jnp.dot(
+        a_ref[...], x_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _specs(m, k, bm, bk):
+    if m % bm or k % bk:
+        raise ValueError(f"gemv dims ({m},{k}) must be multiples of ({bm},{bk})")
+    grid = (m // bm, k // bk)
+    a_spec = pl.BlockSpec((bm, bk), lambda i, kk: (i, kk))
+    x_spec = pl.BlockSpec((bk,), lambda i, kk: (kk,))
+    o_spec = pl.BlockSpec((bm,), lambda i, kk: (i,))
+    return grid, a_spec, x_spec, o_spec
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk"))
+def gemv(a, x, bm=DEFAULT_BLOCK, bk=DEFAULT_BLOCK):
+    """y = A @ x via the Pallas tiled kernel.  a: (m, k), x: (k,)."""
+    m, ka = a.shape
+    assert ka == x.shape[0], (a.shape, x.shape)
+    grid, a_spec, x_spec, o_spec = _specs(m, ka, bm, bk)
+    return pl.pallas_call(
+        _gemv_kernel,
+        grid=grid,
+        in_specs=[a_spec, x_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m,), a.dtype),
+        interpret=True,
+    )(a, x)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk"))
+def gemv_update(y, a, x, bm=DEFAULT_BLOCK, bk=DEFAULT_BLOCK):
+    """y_out = y - A @ x via the Pallas tiled kernel (matvec accumulation)."""
+    m, ka = a.shape
+    assert ka == x.shape[0] and y.shape[0] == m, (y.shape, a.shape, x.shape)
+    grid, a_spec, x_spec, o_spec = _specs(m, ka, bm, bk)
+    y_spec = pl.BlockSpec((bm,), lambda i, kk: (i,))
+    return pl.pallas_call(
+        _gemv_update_kernel,
+        grid=grid,
+        in_specs=[y_spec, a_spec, x_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m,), y.dtype),
+        interpret=True,
+    )(y, a, x)

@@ -1,0 +1,92 @@
+"""Pure-jnp reference oracles for every L1/L2 tile operation.
+
+These are the single source of numerical truth: the Pallas kernels
+(``gemm.py``, ``gemv.py``) and the L2 tile ops (``model.py``) are tested
+against these functions by ``python/tests/``.  They intentionally use only
+plain ``jax.numpy`` / ``jax.scipy`` calls — no Pallas, no custom lowering —
+so a disagreement always indicts the kernel, not the oracle.
+"""
+
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+
+def ref_gemm(a, b):
+    """C = A @ B."""
+    return jnp.dot(a, b, preferred_element_type=a.dtype)
+
+
+def ref_gemm_update(c, a, b):
+    """Delayed rank-k update: C_out = C - A @ B (the BLAS-3 core of block LU)."""
+    return c - jnp.dot(a, b, preferred_element_type=a.dtype)
+
+
+def ref_syrk_update(c, a):
+    """Symmetric update: C_out = C - A @ A^T (the BLAS-3 core of block Cholesky)."""
+    return c - jnp.dot(a, a.T, preferred_element_type=a.dtype)
+
+
+def ref_gemv(a, x):
+    """y = A @ x."""
+    return jnp.dot(a, x, preferred_element_type=a.dtype)
+
+
+def ref_gemv_update(y, a, x):
+    """y_out = y - A @ x (distributed matvec accumulation step)."""
+    return y - jnp.dot(a, x, preferred_element_type=a.dtype)
+
+
+def ref_trsm_llu(l, b):
+    """Solve L X = B with L unit lower triangular (LU panel: U12 block row)."""
+    return solve_triangular(l, b, lower=True, unit_diagonal=True)
+
+
+def ref_trsm_ru(b, u):
+    """Solve X U = B with U upper triangular (LU panel: L21 block column).
+
+    X U = B  <=>  U^T X^T = B^T.
+    """
+    return solve_triangular(u.T, b.T, lower=True).T
+
+
+def ref_trsm_rlt(b, l):
+    """Solve X L^T = B with L lower triangular (Cholesky panel: L21 block).
+
+    X L^T = B  <=>  L X^T = B^T.
+    """
+    return solve_triangular(l, b.T, lower=True).T
+
+
+def ref_trsv_lu(l, b):
+    """Solve L y = b, L unit lower (forward substitution after LU)."""
+    return solve_triangular(l, b, lower=True, unit_diagonal=True)
+
+
+def ref_trsv_l(l, b):
+    """Solve L y = b, L general lower (forward substitution after Cholesky)."""
+    return solve_triangular(l, b, lower=True)
+
+
+def ref_trsv_u(u, y):
+    """Solve U x = y, U upper (backward substitution)."""
+    return solve_triangular(u, y, lower=False)
+
+
+def ref_trsv_lt(l, y):
+    """Solve L^T x = y with L lower (Cholesky backward substitution)."""
+    return solve_triangular(l.T, y, lower=False)
+
+
+def ref_potrf(a):
+    """Lower Cholesky factor of an SPD tile."""
+    return jnp.linalg.cholesky(a)
+
+
+def ref_dot(x, y):
+    """Inner product (returned as a rank-0 array)."""
+    return jnp.dot(x, y, preferred_element_type=x.dtype)
+
+
+def ref_axpy(alpha, x, y):
+    """y_out = alpha * x + y (alpha is a rank-0 array)."""
+    return alpha * x + y

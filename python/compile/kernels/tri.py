@@ -1,0 +1,131 @@
+"""Triangular solves and Cholesky as *portable HLO* (no LAPACK custom-calls).
+
+On CPU, jax lowers ``jax.scipy.linalg.solve_triangular`` and
+``jnp.linalg.cholesky`` to LAPACK typed-FFI custom-calls, which the
+``xla`` crate's xla_extension 0.5.1 refuses to compile
+("Unknown custom-call API version ... API_VERSION_TYPED_FFI").  The AOT
+artifacts therefore need these factor-tile ops expressed in primitive HLO:
+``lax.fori_loop`` + masked dense contractions, which lower to While + dot.
+
+Each step does a full masked row/column contraction (O(t) flops per element
+instead of the triangular half), trading ~2x arithmetic inside a t x t tile
+for portability — the virtual-time cost models charge the *algorithmic* flop
+count, and these ops are O(t^2)/O(t^3) next to the O(t^3) GEMM stream, so the
+overhead is invisible at solver scale.
+
+Correctness is pinned to the jax.scipy/jnp oracles by python/tests.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def trsm_llu(l, b):
+    """Solve L X = B with L unit lower triangular; B is (t, m)."""
+    t = l.shape[0]
+    idx = jnp.arange(t)
+
+    def body(i, x):
+        row = l[i, :] * (idx < i)  # L[i, :i], masked
+        xi = b[i, :] - row @ x
+        return x.at[i, :].set(xi)
+
+    return lax.fori_loop(0, t, body, jnp.zeros_like(b))
+
+
+def trsv_lu(l, b):
+    """Solve L y = b with L unit lower triangular; b is (t,)."""
+    t = l.shape[0]
+    idx = jnp.arange(t)
+
+    def body(i, y):
+        row = l[i, :] * (idx < i)
+        return y.at[i].set(b[i] - row @ y)
+
+    return lax.fori_loop(0, t, body, jnp.zeros_like(b))
+
+
+def trsv_l(l, b):
+    """Solve L y = b with L general lower triangular."""
+    t = l.shape[0]
+    idx = jnp.arange(t)
+
+    def body(i, y):
+        row = l[i, :] * (idx < i)
+        return y.at[i].set((b[i] - row @ y) / l[i, i])
+
+    return lax.fori_loop(0, t, body, jnp.zeros_like(b))
+
+
+def trsv_u(u, b):
+    """Solve U x = b with U upper triangular (backward substitution)."""
+    t = u.shape[0]
+    idx = jnp.arange(t)
+
+    def body(k, x):
+        i = t - 1 - k
+        row = u[i, :] * (idx > i)
+        return x.at[i].set((b[i] - row @ x) / u[i, i])
+
+    return lax.fori_loop(0, t, body, jnp.zeros_like(b))
+
+
+def trsv_lt(l, b):
+    """Solve L^T x = b with L lower triangular ((L^T)[i,j] = L[j,i])."""
+    t = l.shape[0]
+    idx = jnp.arange(t)
+
+    def body(k, x):
+        i = t - 1 - k
+        col = l[:, i] * (idx > i)  # row i of L^T beyond the diagonal
+        return x.at[i].set((b[i] - col @ x) / l[i, i])
+
+    return lax.fori_loop(0, t, body, jnp.zeros_like(b))
+
+
+def trsm_ru(b, u):
+    """Solve X U = B with U upper triangular; B is (m, t)."""
+    t = u.shape[0]
+    idx = jnp.arange(t)
+
+    def body(j, x):
+        col = u[:, j] * (idx < j)  # U[:j, j], masked
+        xj = (b[:, j] - x @ col) / u[j, j]
+        return x.at[:, j].set(xj)
+
+    return lax.fori_loop(0, t, body, jnp.zeros_like(b))
+
+
+def trsm_rlt(b, l):
+    """Solve X L^T = B with L lower triangular; B is (m, t).
+
+    Column j of the equation: X[:, :j] @ L[j, :j] + X[:, j] L[j, j] = B[:, j].
+    """
+    t = l.shape[0]
+    idx = jnp.arange(t)
+
+    def body(j, x):
+        row = l[j, :] * (idx < j)  # L[j, :j], masked
+        xj = (b[:, j] - x @ row) / l[j, j]
+        return x.at[:, j].set(xj)
+
+    return lax.fori_loop(0, t, body, jnp.zeros_like(b))
+
+
+def potrf(a):
+    """Lower Cholesky factor of an SPD tile, unblocked right-looking."""
+    t = a.shape[0]
+    idx = jnp.arange(t)
+
+    def body(j, l):
+        rowj = l[j, :] * (idx < j)  # L[j, :j]
+        d = l[j, j] - rowj @ rowj
+        ljj = jnp.sqrt(d)
+        # Column j below the diagonal: (a[i,j] - L[i,:j].L[j,:j]) / ljj.
+        contrib = l @ rowj
+        col = (l[:, j] - contrib) / ljj
+        new_col = jnp.where(idx == j, ljj, jnp.where(idx > j, col, 0.0))
+        return l.at[:, j].set(new_col)
+
+    return lax.fori_loop(0, t, body, a)

@@ -1,0 +1,174 @@
+"""L2: the JAX tile-op library that the rust coordinator AOT-loads.
+
+CUPLSS-RS stores every distributed matrix as fixed-size TILE x TILE local
+tiles, so every accelerator call made from the rust request path is one of a
+small, closed set of *fixed-shape* computations — exactly what AOT (static
+shapes) requires.  This module defines that set:
+
+  BLAS-3 hot spots (route through the L1 Pallas kernels, gemm.py / gemv.py):
+    gemm          C = A @ B                         (SUMMA inner step)
+    gemm_update   C -= A @ B                        (LU/Chol trailing update)
+    gemv          y = A @ x                         (Krylov matvec shard)
+    gemv_update   y -= A @ x
+  Factor-tile ops (plain jax -> HLO Cholesky / TriangularSolve):
+    potrf         L = chol(A)                       (diagonal tile)
+    trsm_llu      solve L X = B, unit lower         (LU: U12 row)
+    trsm_ru       solve X U = B                     (LU: L21 column)
+    trsm_rlt      solve X L^T = B                   (Chol: L21 column)
+    trsv_lu/l/u/lt triangular vector solves          (fwd/back substitution)
+  BLAS-1 pair (kept for engine completeness / the GPU-offload cost story):
+    dot, axpy
+
+Each op carries its example shapes and an exact flop count so that the rust
+cost models (accel/costmodel.rs) charge the virtual clock correctly.  The
+AOT driver (aot.py) lowers every (op, dtype, tile) combination to HLO text.
+
+This module is build-time only: nothing here is imported at solve time.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+from compile.kernels import gemm as gemm_k
+from compile.kernels import gemv as gemv_k
+from compile.kernels import tri
+
+jax.config.update("jax_enable_x64", True)
+
+# Tile sizes the library ships artifacts for.  128 is the MXU-native block;
+# 256 is the default library tile (2x2 MXU blocks per Pallas grid step).
+TILES = (128, 256)
+DTYPES = ("f32", "f64")
+
+_NP_DTYPE = {"f32": jnp.float32, "f64": jnp.float64}
+
+
+# --------------------------------------------------------------------------
+# Op definitions.  Each entry:
+#   name -> (builder, arg_shapes, flops_fn)
+# where arg_shapes is a tuple of shape-lambdas over the tile size t, and
+# flops_fn(t) is the exact floating-op count charged by the cost model.
+# --------------------------------------------------------------------------
+
+
+def _gemm(a, b):
+    return (gemm_k.gemm(a, b),)
+
+
+def _gemm_update(c, a, b):
+    return (gemm_k.gemm_update(c, a, b),)
+
+
+def _gemv(a, x):
+    return (gemv_k.gemv(a, x),)
+
+
+def _gemv_t(a, x):
+    # y = A^T x  (BiCG's transpose matvec).  The Pallas GEMV kernel walks the
+    # row-block grid of A^T; jnp transpose fuses into the same HLO module.
+    return (gemv_k.gemv(a.T, x),)
+
+
+def _gemm_nt_update(c, a, b):
+    # C -= A @ B^T  (block-Cholesky trailing update: A(i,j) -= L(i,k) L(j,k)^T)
+    return (gemm_k.gemm_update(c, a, b.T),)
+
+
+def _gemv_update(y, a, x):
+    return (gemv_k.gemv_update(y, a, x),)
+
+
+# Factor-tile ops come from kernels/tri.py: portable-HLO implementations
+# (jax.scipy's solve_triangular / jnp.linalg.cholesky lower to LAPACK
+# typed-FFI custom-calls on CPU, which xla_extension 0.5.1 cannot compile).
+
+
+def _potrf(a):
+    return (tri.potrf(a),)
+
+
+def _trsm_llu(l, b):
+    return (tri.trsm_llu(l, b),)
+
+
+def _trsm_ru(b, u):
+    return (tri.trsm_ru(b, u),)
+
+
+def _trsm_rlt(b, l):
+    return (tri.trsm_rlt(b, l),)
+
+
+def _trsv_lu(l, b):
+    return (tri.trsv_lu(l, b),)
+
+
+def _trsv_l(l, b):
+    return (tri.trsv_l(l, b),)
+
+
+def _trsv_u(u, y):
+    return (tri.trsv_u(u, y),)
+
+
+def _trsv_lt(l, y):
+    return (tri.trsv_lt(l, y),)
+
+
+def _dot(x, y):
+    return (jnp.dot(x, y, preferred_element_type=x.dtype),)
+
+
+def _axpy(alpha, x, y):
+    return (alpha * x + y,)
+
+
+def _mm(t):
+    return (t, t)
+
+
+def _v(t):
+    return (t,)
+
+
+def _s(_t):
+    return ()
+
+
+OPS = {
+    # name:        (builder,      arg shapes,         flops(t))
+    "gemm":        (_gemm,        (_mm, _mm),         lambda t: 2 * t**3),
+    "gemm_update": (_gemm_update, (_mm, _mm, _mm),    lambda t: 2 * t**3 + t * t),
+    "gemv":        (_gemv,        (_mm, _v),          lambda t: 2 * t * t),
+    "gemv_t":      (_gemv_t,      (_mm, _v),          lambda t: 2 * t * t),
+    "gemv_update": (_gemv_update, (_v, _mm, _v),      lambda t: 2 * t * t + t),
+    "gemm_nt_update": (_gemm_nt_update, (_mm, _mm, _mm), lambda t: 2 * t**3 + t * t),
+    "potrf":       (_potrf,       (_mm,),             lambda t: t**3 // 3),
+    "trsm_llu":    (_trsm_llu,    (_mm, _mm),         lambda t: t**3),
+    "trsm_ru":     (_trsm_ru,     (_mm, _mm),         lambda t: t**3),
+    "trsm_rlt":    (_trsm_rlt,    (_mm, _mm),         lambda t: t**3),
+    "trsv_lu":     (_trsv_lu,     (_mm, _v),          lambda t: t * t),
+    "trsv_l":      (_trsv_l,      (_mm, _v),          lambda t: t * t),
+    "trsv_u":      (_trsv_u,      (_mm, _v),          lambda t: t * t),
+    "trsv_lt":     (_trsv_lt,     (_mm, _v),          lambda t: t * t),
+    "dot":         (_dot,         (_v, _v),           lambda t: 2 * t),
+    "axpy":        (_axpy,        (_s, _v, _v),       lambda t: 2 * t),
+}
+
+
+def example_args(name, tile, dtype):
+    """ShapeDtypeStructs for lowering `name` at tile size `tile`."""
+    _, shapes, _ = OPS[name]
+    np_dt = _NP_DTYPE[dtype]
+    return tuple(jax.ShapeDtypeStruct(s(tile), np_dt) for s in shapes)
+
+
+def lower(name, tile, dtype):
+    """jax.jit-lower one op to a Lowered object (static shapes)."""
+    builder, _, _ = OPS[name]
+    return jax.jit(builder).lower(*example_args(name, tile, dtype))
+
+
+def artifact_name(name, tile, dtype):
+    return f"{name}_{dtype}_{tile}"

@@ -1,0 +1,87 @@
+"""AOT pipeline tests: HLO text round-trip, manifest format, determinism."""
+
+import os
+import tempfile
+
+import pytest
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    n = aot.build_all(out, tiles=(128,), dtypes=("f32",), verbose=False)
+    return out, n
+
+
+def test_build_count(built):
+    out, n = built
+    assert n == len(model.OPS)
+    files = [f for f in os.listdir(out) if f.endswith(".hlo.txt")]
+    assert len(files) == n
+    assert os.path.exists(os.path.join(out, "manifest.txt"))
+
+
+def test_hlo_text_is_parseable_hlo(built):
+    out, _ = built
+    for f in os.listdir(out):
+        if not f.endswith(".hlo.txt"):
+            continue
+        text = open(os.path.join(out, f)).read()
+        assert "HloModule" in text, f
+        assert "ENTRY" in text, f
+        # return_tuple=True => root is a tuple
+        assert "tuple(" in text or "tuple<" in text.lower() or ")" in text
+
+
+def test_manifest_lines_match_ops(built):
+    out, _ = built
+    lines = open(os.path.join(out, "manifest.txt")).read().strip().splitlines()
+    assert len(lines) == len(model.OPS)
+    names = set()
+    for line in lines:
+        parts = line.split()
+        assert len(parts) == 8, line
+        art, op, dtype, tile, flops, arity, ins, outs = parts
+        assert op in model.OPS
+        assert dtype == "f32" and tile == "128"
+        assert int(flops) == model.OPS[op][2](128)
+        assert int(arity) == len(model.OPS[op][1])
+        assert len(ins.split(",")) == int(arity)
+        names.add(op)
+    assert names == set(model.OPS)
+
+
+def test_deterministic_lowering():
+    """Two lowerings of the same op must produce identical HLO text."""
+    t1 = aot.to_hlo_text(model.lower("gemm", 128, "f32"))
+    t2 = aot.to_hlo_text(model.lower("gemm", 128, "f32"))
+    assert t1 == t2
+
+
+def test_hlo_executes_on_cpu_pjrt(built):
+    """Round-trip sanity: compile the lowered gemm via jax and compare to ref.
+
+    (The rust-side PJRT load of the same text is covered by cargo test
+    integration_runtime; here we check the lowered computation itself is
+    numerically the gemm we think it is.)
+    """
+    lowered = model.lower("gemm", 128, "f32")
+    compiled = lowered.compile()
+    rng = np.random.default_rng(5)
+    a = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    (got,) = compiled(a, b)
+    np.testing.assert_allclose(got, a @ b, rtol=2e-4, atol=2e-4)
+
+
+def test_shape_str():
+    assert aot._shape_str(()) == "s"
+    assert aot._shape_str((128,)) == "128"
+    assert aot._shape_str((128, 256)) == "128x256"

@@ -1,0 +1,156 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps block-aligned shapes and both dtypes; every property is a
+straight assert_allclose against the oracle, so a failure indicts the kernel.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gemm as gemm_k
+from compile.kernels import gemv as gemv_k
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+B = 128  # MXU-native Pallas block; all library shapes are multiples of it
+
+DTYPES = [jnp.float32, jnp.float64]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-4, atol=2e-4) if dtype == jnp.float32 else dict(rtol=1e-10, atol=1e-10)
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+# ---------------------------------------------------------------- GEMM
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("m,n,k", [(128, 128, 128), (256, 256, 256), (128, 256, 384)])
+def test_gemm_matches_ref(dtype, m, n, k):
+    rng = np.random.default_rng(seed=m * 7 + n * 11 + k)
+    a, b = _rand(rng, (m, k), dtype), _rand(rng, (k, n), dtype)
+    got = gemm_k.gemm(a, b)
+    np.testing.assert_allclose(got, ref.ref_gemm(a, b), **_tol(dtype))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mi=st.integers(1, 3),
+    ni=st.integers(1, 3),
+    ki=st.integers(1, 3),
+    dt=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_property(mi, ni, ki, dt, seed):
+    """Block-aligned shape sweep: gemm == ref for any (mi,ni,ki)*128 shape."""
+    m, n, k = mi * B, ni * B, ki * B
+    rng = np.random.default_rng(seed)
+    a, b = _rand(rng, (m, k), dt), _rand(rng, (k, n), dt)
+    np.testing.assert_allclose(gemm_k.gemm(a, b), ref.ref_gemm(a, b), **_tol(dt))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    mi=st.integers(1, 2),
+    ki=st.integers(1, 3),
+    dt=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_update_property(mi, ki, dt, seed):
+    m = mi * B
+    k = ki * B
+    rng = np.random.default_rng(seed)
+    c = _rand(rng, (m, m), dt)
+    a = _rand(rng, (m, k), dt)
+    b = _rand(rng, (k, m), dt)
+    got = gemm_k.gemm_update(c, a, b)
+    np.testing.assert_allclose(got, ref.ref_gemm_update(c, a, b), **_tol(dt))
+
+
+def test_gemm_block_shape_invariance():
+    """Different Pallas block shapes must give identical results."""
+    rng = np.random.default_rng(0)
+    a = _rand(rng, (256, 256), jnp.float32)
+    b = _rand(rng, (256, 256), jnp.float32)
+    base = gemm_k.gemm(a, b, bm=128, bn=128, bk=128)
+    for bm, bn, bk in [(256, 256, 256), (128, 256, 128), (256, 128, 256)]:
+        got = gemm_k.gemm(a, b, bm=bm, bn=bn, bk=bk)
+        # different K-block walks sum in different orders -> f32 rounding
+        np.testing.assert_allclose(got, base, rtol=1e-3, atol=1e-3)
+
+
+def test_gemm_rejects_unaligned():
+    a = jnp.zeros((100, 128), jnp.float32)
+    b = jnp.zeros((128, 128), jnp.float32)
+    with pytest.raises(ValueError, match="multiples"):
+        gemm_k.gemm(a, b)
+
+
+def test_gemm_update_zero_ab_is_identity():
+    rng = np.random.default_rng(1)
+    c = _rand(rng, (128, 128), jnp.float32)
+    z = jnp.zeros((128, 128), jnp.float32)
+    np.testing.assert_allclose(gemm_k.gemm_update(c, z, z), c, rtol=0, atol=0)
+
+
+def test_gemm_identity():
+    rng = np.random.default_rng(2)
+    a = _rand(rng, (256, 256), jnp.float64)
+    eye = jnp.eye(256, dtype=jnp.float64)
+    np.testing.assert_allclose(gemm_k.gemm(a, eye), a, rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(gemm_k.gemm(eye, a), a, rtol=1e-12, atol=1e-12)
+
+
+# ---------------------------------------------------------------- GEMV
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mi=st.integers(1, 4),
+    ki=st.integers(1, 4),
+    dt=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemv_property(mi, ki, dt, seed):
+    m, k = mi * B, ki * B
+    rng = np.random.default_rng(seed)
+    a, x = _rand(rng, (m, k), dt), _rand(rng, (k,), dt)
+    np.testing.assert_allclose(gemv_k.gemv(a, x), ref.ref_gemv(a, x), **_tol(dt))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    mi=st.integers(1, 2),
+    ki=st.integers(1, 3),
+    dt=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemv_update_property(mi, ki, dt, seed):
+    m, k = mi * B, ki * B
+    rng = np.random.default_rng(seed)
+    y = _rand(rng, (m,), dt)
+    a, x = _rand(rng, (m, k), dt), _rand(rng, (k,), dt)
+    got = gemv_k.gemv_update(y, a, x)
+    np.testing.assert_allclose(got, ref.ref_gemv_update(y, a, x), **_tol(dt))
+
+
+def test_gemv_identity():
+    rng = np.random.default_rng(3)
+    x = _rand(rng, (256,), jnp.float64)
+    eye = jnp.eye(256, dtype=jnp.float64)
+    np.testing.assert_allclose(gemv_k.gemv(eye, x), x, rtol=1e-12, atol=1e-12)
+
+
+def test_gemv_rejects_unaligned():
+    a = jnp.zeros((128, 100), jnp.float32)
+    x = jnp.zeros((100,), jnp.float32)
+    with pytest.raises(ValueError, match="multiples"):
+        gemv_k.gemv(a, x)

@@ -1,0 +1,189 @@
+"""L2 tile ops (model.py) vs the oracle, plus shape/flop metadata checks.
+
+Every op the rust coordinator will call must (a) match ref.py numerically,
+(b) lower with the exact static shapes the manifest advertises.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+T = 128  # tile size used for numeric checks (fast); shapes checked for all
+
+
+def _tol(dtype):
+    return dict(rtol=3e-4, atol=3e-4) if dtype == "f32" else dict(rtol=1e-9, atol=1e-9)
+
+
+def _np_dtype(d):
+    return np.float32 if d == "f32" else np.float64
+
+
+def _spd(rng, t, dt):
+    a = rng.standard_normal((t, t))
+    a = a @ a.T + t * np.eye(t)
+    return jnp.asarray(a, dtype=dt)
+
+
+def _lower_tri(rng, t, dt, unit=False):
+    # Damped off-diagonals keep the solve well-conditioned so f32
+    # comparisons against the oracle are meaningful.
+    a = np.tril(rng.standard_normal((t, t))) * 0.2
+    np.fill_diagonal(a, 1.0 if unit else np.abs(a.diagonal()) + 1.0)
+    return jnp.asarray(a, dtype=dt)
+
+
+def _upper_tri(rng, t, dt):
+    a = np.triu(rng.standard_normal((t, t))) * 0.2
+    np.fill_diagonal(a, np.abs(a.diagonal()) + 1.0)
+    return jnp.asarray(a, dtype=dt)
+
+
+def _args_for(name, rng, t, dtype):
+    """Build numerically well-posed concrete args for op `name`."""
+    dt = _np_dtype(dtype)
+    r = lambda shape: jnp.asarray(rng.standard_normal(shape), dtype=dt)
+    if name in ("gemm",):
+        return (r((t, t)), r((t, t)))
+    if name == "gemm_update":
+        return (r((t, t)), r((t, t)), r((t, t)))
+    if name in ("gemv", "gemv_t"):
+        return (r((t, t)), r((t,)))
+    if name == "gemm_nt_update":
+        return (r((t, t)), r((t, t)), r((t, t)))
+    if name == "gemv_update":
+        return (r((t,)), r((t, t)), r((t,)))
+    if name == "potrf":
+        return (_spd(rng, t, dt),)
+    if name == "trsm_llu":
+        return (_lower_tri(rng, t, dt, unit=True), r((t, t)))
+    if name == "trsm_ru":
+        return (r((t, t)), _upper_tri(rng, t, dt))
+    if name == "trsm_rlt":
+        return (r((t, t)), _lower_tri(rng, t, dt))
+    if name == "trsv_lu":
+        return (_lower_tri(rng, t, dt, unit=True), r((t,)))
+    if name == "trsv_l":
+        return (_lower_tri(rng, t, dt), r((t,)))
+    if name == "trsv_u":
+        return (_upper_tri(rng, t, dt), r((t,)))
+    if name == "trsv_lt":
+        return (_lower_tri(rng, t, dt), r((t,)))
+    if name == "dot":
+        return (r((t,)), r((t,)))
+    if name == "axpy":
+        return (jnp.asarray(rng.standard_normal(), dtype=dt), r((t,)), r((t,)))
+    raise AssertionError(name)
+
+
+_REF = {
+    "gemm": ref.ref_gemm,
+    "gemm_update": ref.ref_gemm_update,
+    "gemv": ref.ref_gemv,
+    "gemv_t": lambda a, x: ref.ref_gemv(a.T, x),
+    "gemv_update": ref.ref_gemv_update,
+    "gemm_nt_update": lambda c, a, b: ref.ref_gemm_update(c, a, b.T),
+    "potrf": ref.ref_potrf,
+    "trsm_llu": ref.ref_trsm_llu,
+    "trsm_ru": ref.ref_trsm_ru,
+    "trsm_rlt": ref.ref_trsm_rlt,
+    "trsv_lu": ref.ref_trsv_lu,
+    "trsv_l": ref.ref_trsv_l,
+    "trsv_u": ref.ref_trsv_u,
+    "trsv_lt": ref.ref_trsv_lt,
+    "dot": ref.ref_dot,
+    "axpy": ref.ref_axpy,
+}
+
+
+def test_op_table_covers_ref():
+    assert set(model.OPS) == set(_REF)
+
+
+@pytest.mark.parametrize("dtype", model.DTYPES)
+@pytest.mark.parametrize("name", sorted(model.OPS))
+def test_op_matches_ref(name, dtype):
+    rng = np.random.default_rng(hash((name, dtype)) % 2**31)
+    args = _args_for(name, rng, T, dtype)
+    builder, _, _ = model.OPS[name]
+    (got,) = builder(*args)
+    want = _REF[name](*args)
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+@pytest.mark.parametrize("name", sorted(model.OPS))
+def test_trsm_ops_actually_solve(name):
+    """For triangular ops verify the residual of the solved system directly."""
+    if not name.startswith(("trsm", "trsv")):
+        pytest.skip("not a triangular solve")
+    rng = np.random.default_rng(7)
+    args = _args_for(name, rng, T, "f64")
+    builder, _, _ = model.OPS[name]
+    (x,) = builder(*args)
+    if name == "trsm_llu":
+        l, b = args
+        resid = l @ x - b
+    elif name == "trsm_ru":
+        b, u = args
+        resid = x @ u - b
+    elif name == "trsm_rlt":
+        b, l = args
+        resid = x @ l.T - b
+    elif name == "trsv_lu" or name == "trsv_l":
+        l, b = args
+        resid = l @ x - b
+    elif name == "trsv_u":
+        u, y = args
+        resid = u @ x - y
+    elif name == "trsv_lt":
+        l, y = args
+        resid = l.T @ x - y
+    # scaled residual: random triangular systems are only moderately
+    # conditioned, so bound ||resid||_max relative to the data magnitude.
+    # (unit-lower random systems can have exponentially large solutions, so
+    # include ||x|| in the scale)
+    scale = max(
+        [float(jnp.max(jnp.abs(a))) for a in args] + [float(jnp.max(jnp.abs(x)))]
+    )
+    assert float(jnp.max(jnp.abs(resid))) / scale < 1e-7
+
+
+def test_potrf_reconstructs():
+    rng = np.random.default_rng(11)
+    (a,) = _args_for("potrf", rng, T, "f64")
+    builder, _, _ = model.OPS["potrf"]
+    (l,) = builder(a)
+    np.testing.assert_allclose(l @ l.T, a, rtol=1e-9, atol=1e-7)
+    # strictly upper part must be exactly zero
+    assert float(jnp.max(jnp.abs(jnp.triu(l, k=1)))) == 0.0
+
+
+@pytest.mark.parametrize("name", sorted(model.OPS))
+def test_example_args_shapes(name):
+    """example_args must agree with the declared shape lambdas at every tile."""
+    _, shapes, _ = model.OPS[name]
+    for tile in model.TILES:
+        for dtype in model.DTYPES:
+            args = model.example_args(name, tile, dtype)
+            assert len(args) == len(shapes)
+            for arg, s in zip(args, shapes):
+                assert arg.shape == s(tile)
+
+
+def test_flop_counts_positive_and_scale():
+    for name, (_b, _s, flops) in model.OPS.items():
+        assert flops(128) > 0, name
+        assert flops(256) > flops(128), name
+    # BLAS-3 ops must scale ~t^3, BLAS-1 ~t
+    assert model.OPS["gemm"][2](256) == 8 * model.OPS["gemm"][2](128)
+    assert model.OPS["dot"][2](256) == 2 * model.OPS["dot"][2](128)
+
+
+def test_artifact_name_format():
+    assert model.artifact_name("gemm", 256, "f32") == "gemm_f32_256"

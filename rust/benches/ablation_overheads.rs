@@ -1,0 +1,106 @@
+//! Ablation E4 — *why* is the CUDA arm's gain modest?  The paper blames
+//! "GPU memory contention on GPU device and the communication overhead
+//! incurred by the MPI processes".  This bench isolates both terms:
+//!
+//! 1. **PCIe sweep** — Figure-4 LU speedup at P = 16 as the host<->device
+//!    bandwidth varies from 1 GB/s to "infinite" (resident data).  The gap
+//!    between 5.5 GB/s (PCIe 2.0) and `inf` is exactly the paper's
+//!    "contention" loss.
+//! 2. **Network alpha sweep** — the same point as MPI latency varies from
+//!    Gigabit Ethernet (50 µs) down to an ideal network, quantifying the
+//!    "MPI processes act as synchronizing points" loss.
+//!
+//! ```sh
+//! cargo bench --bench ablation_overheads
+//! ```
+
+use cuplss::accel::ComputeProfile;
+use cuplss::bench_harness::model::{iter_makespan, lu_makespan, ModelParams};
+use cuplss::bench_harness::PAPER_N;
+use cuplss::comm::NetworkModel;
+use cuplss::mesh::MeshShape;
+use cuplss::solvers::IterMethod;
+use cuplss::util::fmt;
+
+fn params(engine: ComputeProfile, net: NetworkModel) -> ModelParams {
+    ModelParams {
+        tile: 256,
+        shape: MeshShape::near_square(16),
+        net,
+        engine,
+        panel_cpu: ComputeProfile::q6600_atlas(),
+        swap_fraction: 0.5,
+    }
+}
+
+fn main() {
+    let n = PAPER_N;
+    let net = NetworkModel::gigabit_ethernet();
+    let base_cpu = lu_makespan::<f32>(
+        n,
+        &ModelParams {
+            shape: MeshShape::new(1, 1),
+            ..params(ComputeProfile::q6600_atlas(), net)
+        },
+    );
+
+    println!("== E4.1: PCIe bandwidth sweep (LU, P=16, n={n}, SP) ==");
+    let mut rows = Vec::new();
+    let mut prev = 0.0;
+    for (label, bw) in [
+        ("1 GB/s", 1.0e9),
+        ("2.5 GB/s", 2.5e9),
+        ("5.5 GB/s (PCIe 2.0, paper)", 5.5e9),
+        ("12 GB/s", 12.0e9),
+        ("resident (no transfers)", 0.0),
+    ] {
+        let mut gpu = ComputeProfile::gtx280_cublas();
+        gpu.pcie_bw = bw;
+        let ms = lu_makespan::<f32>(n, &params(gpu, net));
+        let speedup = base_cpu / ms;
+        rows.push(vec![label.to_string(), fmt::secs(ms), format!("{speedup:.2}")]);
+        assert!(
+            speedup > prev * 0.999,
+            "more PCIe bandwidth must not hurt: {label}"
+        );
+        prev = speedup;
+    }
+    println!("{}", fmt::table(&["PCIe", "makespan", "speedup vs serial CPU"], &rows));
+
+    println!("== E4.2: MPI latency sweep (BiCGSTAB 100 iters, P=16, n={n}, SP) ==");
+    let mut rows = Vec::new();
+    for (label, alpha) in [
+        ("200 µs (congested)", 200e-6),
+        ("50 µs (Gigabit, paper)", 50e-6),
+        ("5 µs (fast interconnect)", 5e-6),
+        ("0 (ideal)", 0.0),
+    ] {
+        let mut net_v = net;
+        net_v.alpha = alpha;
+        if alpha == 0.0 {
+            net_v = NetworkModel::ideal();
+        }
+        let gpu = params(ComputeProfile::gtx280_cublas(), net_v);
+        let cpu1 = ModelParams {
+            shape: MeshShape::new(1, 1),
+            ..params(ComputeProfile::q6600_atlas(), net_v)
+        };
+        let ms = iter_makespan::<f32>(IterMethod::Bicgstab, n, 100, 30, &gpu);
+        let base = iter_makespan::<f32>(IterMethod::Bicgstab, n, 100, 30, &cpu1);
+        rows.push(vec![label.to_string(), fmt::secs(ms), format!("{:.2}", base / ms)]);
+    }
+    println!("{}", fmt::table(&["MPI latency", "makespan", "speedup vs serial CPU"], &rows));
+
+    // Headline decomposition: how much of the ideal CUDA speedup do the two
+    // overheads eat at the paper's operating point?
+    let paper = lu_makespan::<f32>(n, &params(ComputeProfile::gtx280_cublas(), net));
+    let mut resident = ComputeProfile::gtx280_cublas();
+    resident.pcie_bw = 0.0;
+    let no_pcie = lu_makespan::<f32>(n, &params(resident, net));
+    let no_net = lu_makespan::<f32>(n, &params(ComputeProfile::gtx280_cublas(), NetworkModel::ideal()));
+    println!("LU P=16 overhead shares: PCIe transfers add {:.0}% runtime, network adds {:.0}%",
+        (paper / no_pcie - 1.0) * 100.0,
+        (paper / no_net - 1.0) * 100.0,
+    );
+    println!("E4 checks passed.");
+}

@@ -1,0 +1,44 @@
+//! Bench E8 — model-vs-live calibration: run the *actual* distributed
+//! solvers (real messages, real tile ops, live virtual clock) at small n and
+//! compare against the analytic model that generates the n = 60000 figures.
+//!
+//! ```sh
+//! cargo bench --bench calibration
+//! ```
+//!
+//! Acceptance: model within 2x of live everywhere (the model's job is the
+//! *shape* of the speedup curves; a constant factor cancels in the ratio).
+
+use cuplss::bench_harness::calibrate::{calibrate, max_ratio_error, render};
+use cuplss::cluster::Method;
+use cuplss::solvers::IterMethod;
+use cuplss::workloads::Workload;
+
+fn main() {
+    let sizes = [256usize, 512, 1024];
+    let ranks = [1usize, 4, 16];
+
+    println!("== E8: live vs model, LU on DiagDominant (f64, tile 64) ==");
+    let lu = calibrate(Method::Lu, Workload::DiagDominant, &sizes, &ranks, 64)
+        .expect("lu calibration");
+    println!("{}", render(&lu));
+    let lu_err = max_ratio_error(&lu);
+    println!("max ratio error: {lu_err:.2}x\n");
+
+    println!("== E8: live vs model, BiCGSTAB on DiagDominant (f64, tile 64) ==");
+    let it = calibrate(
+        Method::Iterative(IterMethod::Bicgstab),
+        Workload::DiagDominant,
+        &sizes,
+        &ranks,
+        64,
+    )
+    .expect("bicgstab calibration");
+    println!("{}", render(&it));
+    let it_err = max_ratio_error(&it);
+    println!("max ratio error: {it_err:.2}x\n");
+
+    assert!(lu_err < 2.0, "LU model out of band: {lu_err}");
+    assert!(it_err < 2.0, "BiCGSTAB model out of band: {it_err}");
+    println!("E8 passed: analytic model within {:.2}x of live runs.", lu_err.max(it_err));
+}

@@ -1,0 +1,79 @@
+//! Bench: regenerate **Figure 3** — speedup of the parallel iterative
+//! solvers (GMRES, BiCG, BiCGSTAB) at n = 60000 over 1/2/4/8/16 ranks,
+//! MPI+CUDA vs MPI+ATLAS local compute, single precision (the paper's
+//! figure) plus the double-precision variant the text reports (E3).
+//!
+//! ```sh
+//! cargo bench --bench fig3_iterative            # both precisions
+//! cargo bench --bench fig3_iterative -- --dp    # double precision only
+//! ```
+//!
+//! Model mode (DESIGN.md §8): same cost structure as the live virtual clock,
+//! validated by `cargo bench --bench calibration`.
+
+use cuplss::bench_harness::{fig3_series, figures::render_table, PAPER_N};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let dp_only = args.iter().any(|a| a == "--dp");
+    let n = PAPER_N;
+    let iters = 100;
+    let tile = 256;
+
+    if !dp_only {
+        let sp = fig3_series::<f32>(n, iters, tile);
+        println!(
+            "{}",
+            render_table(
+                &format!("Figure 3 — iterative-solver speedup (n={n}, single precision)"),
+                &sp
+            )
+        );
+        check_shape(&sp, "SP");
+    }
+    let dp = fig3_series::<f64>(n, iters, tile);
+    println!(
+        "{}",
+        render_table(
+            &format!("Figure 3 (E3) — iterative-solver speedup (n={n}, double precision)"),
+            &dp
+        )
+    );
+    check_shape(&dp, "DP");
+
+    println!("paper-shape checks passed: monotone scaling, CUDA >= ATLAS per method.");
+}
+
+/// Assert the qualitative properties the paper's Figure 3 exhibits.
+fn check_shape(series: &[cuplss::bench_harness::FigureSeries], label: &str) {
+    for s in series {
+        for w in s.points.windows(2) {
+            assert!(
+                w[1].speedup > w[0].speedup,
+                "[{label}] {}: speedup must grow with P: {:?}",
+                s.label,
+                s.points
+            );
+        }
+    }
+    // CUDA arm >= ATLAS arm for the same method.
+    for m in ["GMRES", "BiCG (", "BiCGSTAB"] {
+        let cuda = series
+            .iter()
+            .find(|s| s.label.starts_with(m) && s.label.contains("CUDA"))
+            .expect("cuda series");
+        let atlas = series
+            .iter()
+            .find(|s| s.label.starts_with(m) && s.label.contains("ATLAS"))
+            .expect("atlas series");
+        for (c, a) in cuda.points.iter().zip(&atlas.points) {
+            assert!(
+                c.speedup >= a.speedup * 0.95,
+                "[{label}] {m} P={}: CUDA {} vs ATLAS {}",
+                c.ranks,
+                c.speedup,
+                a.speedup
+            );
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Bench: regenerate **Figure 4** — speedup of the parallel LU solver at
+//! n = 60000 over 1/2/4/8/16 ranks, MPI+CUDA vs MPI+ATLAS, single precision,
+//! plus the double-precision variant (E3) and the Cholesky companion (E5).
+//!
+//! ```sh
+//! cargo bench --bench fig4_direct
+//! cargo bench --bench fig4_direct -- --dp          # DP only
+//! cargo bench --bench fig4_direct -- --cholesky    # include Cholesky rows
+//! ```
+
+use cuplss::bench_harness::{fig3_series, fig4_series, figures::render_table, PAPER_N};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let dp_only = args.iter().any(|a| a == "--dp");
+    let cholesky = args.iter().any(|a| a == "--cholesky");
+    let n = PAPER_N;
+    let tile = 256;
+
+    if !dp_only {
+        let sp = fig4_series::<f32>(n, tile, cholesky);
+        println!(
+            "{}",
+            render_table(
+                &format!("Figure 4 — direct-solver speedup (n={n}, single precision)"),
+                &sp
+            )
+        );
+        check_shape::<f32>(&sp, n, tile, "SP");
+    }
+    let dp = fig4_series::<f64>(n, tile, cholesky);
+    println!(
+        "{}",
+        render_table(
+            &format!("Figure 4 (E3) — direct-solver speedup (n={n}, double precision)"),
+            &dp
+        )
+    );
+    check_shape::<f64>(&dp, n, tile, "DP");
+
+    println!("paper-shape checks passed: monotone, CUDA > ATLAS, LU > iterative (CUDA arm).");
+}
+
+fn check_shape<S: cuplss::Scalar>(
+    series: &[cuplss::bench_harness::FigureSeries],
+    n: usize,
+    tile: usize,
+    label: &str,
+) {
+    for s in series {
+        for w in s.points.windows(2) {
+            assert!(
+                w[1].speedup > w[0].speedup,
+                "[{label}] {}: speedup must grow with P",
+                s.label
+            );
+        }
+    }
+    let lu_cuda = series.iter().find(|s| s.label == "LU (MPI+CUDA)").unwrap();
+    let lu_atlas = series.iter().find(|s| s.label == "LU (MPI+ATLAS)").unwrap();
+    for (c, a) in lu_cuda.points.iter().zip(&lu_atlas.points) {
+        assert!(c.speedup > a.speedup, "[{label}] CUDA must beat ATLAS at P={}", c.ranks);
+    }
+    // §5: factorisation speedup exceeds the iterative methods' (CUDA arm).
+    let best_iter = fig3_series::<S>(n, 100, tile)
+        .iter()
+        .filter(|s| s.label.contains("CUDA"))
+        .map(|s| s.final_speedup())
+        .fold(0.0, f64::max);
+    assert!(
+        lu_cuda.final_speedup() > best_iter,
+        "[{label}] LU {} must out-scale iterative {best_iter}",
+        lu_cuda.final_speedup()
+    );
+}

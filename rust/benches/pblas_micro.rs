@@ -1,0 +1,108 @@
+//! Micro-benchmarks (wall-clock, in-tree harness): the real execution speed
+//! of the local engines and the distributed primitives on *this* machine.
+//! These feed the §Perf optimisation log in EXPERIMENTS.md — everything else
+//! in `benches/` reports modelled 2008-cluster time, this file reports what
+//! the library actually costs to run today.
+//!
+//! ```sh
+//! cargo bench --bench pblas_micro
+//! ```
+
+use std::sync::Arc;
+
+use cuplss::accel::{CpuEngine, Engine, XlaEngine};
+use cuplss::comm::{NetworkModel, World};
+use cuplss::dist::{Descriptor, DistMatrix, DistVector};
+use cuplss::mesh::{Mesh, MeshShape};
+use cuplss::pblas::{pdot, pgemv, Ctx};
+use cuplss::runtime::Runtime;
+use cuplss::util::timer::bench;
+use cuplss::util::{fmt, Prng};
+
+const T: usize = 256;
+
+fn flops_row(label: &str, stats: &cuplss::util::TimerStats, flops: u64) -> Vec<String> {
+    vec![
+        label.to_string(),
+        fmt::secs(stats.mean()),
+        fmt::secs(stats.min()),
+        fmt::flops(flops as f64 / stats.min()),
+    ]
+}
+
+fn main() {
+    let mut rows = Vec::new();
+    let mut rng = Prng::new(99);
+
+    // --- local engines: the tile GEMM hot path --------------------------
+    let mut a = vec![0.0f32; T * T];
+    let mut b = vec![0.0f32; T * T];
+    let mut c = vec![0.0f32; T * T];
+    rng.fill_normal(&mut a);
+    rng.fill_normal(&mut b);
+    let cpu = CpuEngine::new(T);
+    let stats = bench(2, 10, || {
+        Engine::<f32>::gemm_update(&cpu, &mut c, &a, &b).unwrap();
+    });
+    let gflops = cuplss::accel::op_flops("gemm_update", T as u64);
+    rows.push(flops_row("CpuEngine gemm_update f32 256", &stats, gflops));
+
+    let mut ad = vec![0.0f64; T * T];
+    let mut bd = vec![0.0f64; T * T];
+    let mut cd = vec![0.0f64; T * T];
+    rng.fill_normal(&mut ad);
+    rng.fill_normal(&mut bd);
+    let stats = bench(2, 10, || {
+        Engine::<f64>::gemm_update(&cpu, &mut cd, &ad, &bd).unwrap();
+    });
+    rows.push(flops_row("CpuEngine gemm_update f64 256", &stats, gflops));
+
+    // --- PJRT engine (needs artifacts) -----------------------------------
+    let artifact_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&artifact_dir).join("manifest.txt").exists() {
+        let rt = Runtime::new(&artifact_dir).expect("runtime");
+        let xla = XlaEngine::<f32>::new(&rt, T).expect("engine");
+        xla.warmup().unwrap();
+        let stats = bench(2, 10, || {
+            xla.gemm_update(&mut c, &a, &b).unwrap();
+        });
+        rows.push(flops_row("XlaEngine gemm_update f32 256 (PJRT)", &stats, gflops));
+        let mut y = vec![0.0f32; T];
+        let x = vec![1.0f32; T];
+        let stats = bench(2, 20, || {
+            xla.gemv(&a, &x, &mut y).unwrap();
+        });
+        rows.push(flops_row(
+            "XlaEngine gemv f32 256 (PJRT)",
+            &stats,
+            cuplss::accel::op_flops("gemv", T as u64),
+        ));
+    } else {
+        eprintln!("(artifacts missing: skipping PJRT rows)");
+    }
+
+    // --- distributed primitives (wall time, 4 ranks) ----------------------
+    let n = 2048usize;
+    for (label, ranks) in [("pgemv n=2048 P=1", 1usize), ("pgemv n=2048 P=4", 4)] {
+        let stats = bench(1, 5, || {
+            World::run::<f32, _, _>(ranks, NetworkModel::ideal(), |comm| {
+                let mesh = Mesh::new(&comm, MeshShape::near_square(comm.size()));
+                let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(256)));
+                let desc = Descriptor::new(n, n, 256, mesh.shape());
+                let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+                    ((i + j) % 17) as f32
+                });
+                let x = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| i as f32);
+                let y = pgemv(&ctx, &a, &x);
+                pdot(&ctx, &y, &y)
+            });
+        });
+        rows.push(flops_row(label, &stats, 2 * (n * n) as u64));
+    }
+
+    println!(
+        "{}",
+        fmt::table(&["op", "mean", "best", "rate (best)"], &rows)
+    );
+    println!("(wall-clock on this machine; modelled cluster time lives in fig3/fig4 benches)");
+}

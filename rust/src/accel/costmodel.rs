@@ -1,0 +1,209 @@
+//! Calibrated compute-cost profiles: how long a tile op takes on the
+//! hardware the paper used.
+//!
+//! The virtual clock charges each local op with the time the *paper's*
+//! testbed would need, so the regenerated Figures 3/4 reflect the paper's
+//! compute/communication balance rather than this machine's.  Two profiles:
+//!
+//! * [`ComputeProfile::gtx280_cublas`] — the CUDA path.  NVIDIA GeForce
+//!   GTX 280: 240 cores @ 1296 MHz, 141.7 GB/s device memory, PCIe 2.0 x16.
+//!   CUBLAS-era sustained rates: SGEMM ~360 GFLOP/s, DGEMM ~60 GFLOP/s
+//!   (the GT200's DP units run at 1/8 SP issue).  Every call pays
+//!   host->device->host transfers (the paper's step 4/7 flow copies operands
+//!   per call) — this is exactly why the paper finds the CUDA gain modest.
+//! * [`ComputeProfile::q6600_atlas`] — the ATLAS path.  Intel Core2 Quad
+//!   Q6600 @ 2.4 GHz, one core (the paper's baseline is serial): SSE2 gives
+//!   ~19.2 GFLOP/s SP peak per core; ATLAS sustains ~70% on SGEMM.
+
+use crate::Scalar;
+
+/// Operation class — determines which throughput term dominates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpClass {
+    /// Compute-bound: GEMM-family, tile factorisations, TRSM.
+    Blas3,
+    /// Memory-bound matrix-vector ops.
+    Blas2,
+    /// Memory-bound vector ops.
+    Blas1,
+}
+
+impl OpClass {
+    /// Classify an op by its artifact name.
+    pub fn of(op: &str) -> OpClass {
+        match op {
+            "gemm" | "gemm_update" | "gemm_nt_update" | "potrf" | "trsm_llu" | "trsm_ru"
+            | "trsm_rlt" => OpClass::Blas3,
+            "gemv" | "gemv_t" | "gemv_update" | "trsv_lu" | "trsv_l" | "trsv_u" | "trsv_lt" => {
+                OpClass::Blas2
+            }
+            _ => OpClass::Blas1,
+        }
+    }
+}
+
+/// Virtual-time charge for one op: compute vs host<->device transfer split
+/// (the transfer share is the paper's "GPU memory contention" term).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OpCost {
+    /// Seconds of device/CPU compute.
+    pub compute_secs: f64,
+    /// Seconds of host<->device transfer (0 for host engines).
+    pub transfer_secs: f64,
+}
+
+impl OpCost {
+    /// Total seconds.
+    pub fn total(&self) -> f64 {
+        self.compute_secs + self.transfer_secs
+    }
+
+    /// Charge this cost to a rank's virtual clock.
+    pub fn charge(&self, clock: &crate::comm::VClock) {
+        clock.advance_compute(self.compute_secs);
+        clock.advance_transfer(self.transfer_secs);
+    }
+}
+
+/// Sustained-rate profile of one local compute substrate.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeProfile {
+    /// Display name.
+    pub name: &'static str,
+    /// Sustained BLAS-3 FLOP/s, single precision.
+    pub flops3_sp: f64,
+    /// Sustained BLAS-3 FLOP/s, double precision.
+    pub flops3_dp: f64,
+    /// Memory bandwidth (bytes/s) bounding BLAS-1/2.
+    pub mem_bw: f64,
+    /// Per-call overhead (kernel launch / library dispatch), seconds.
+    pub launch: f64,
+    /// Host<->device bandwidth (bytes/s); 0 means host-resident (no copies).
+    pub pcie_bw: f64,
+}
+
+impl ComputeProfile {
+    /// The paper's GPU: GTX 280 + CUBLAS, PCIe 2.0 x16.
+    pub fn gtx280_cublas() -> Self {
+        ComputeProfile {
+            name: "gtx280-cublas",
+            flops3_sp: 360e9,
+            flops3_dp: 60e9,
+            mem_bw: 120e9,  // ~85% of the 141.7 GB/s peak
+            launch: 12e-6,  // CUDA-era launch + CUBLAS dispatch
+            pcie_bw: 5.5e9, // effective PCIe 2.0 x16
+        }
+    }
+
+    /// The paper's CPU baseline: one Q6600 core running ATLAS
+    /// (DDR2-800 dual channel sustains ~4 GB/s from one core).
+    pub fn q6600_atlas() -> Self {
+        ComputeProfile {
+            name: "q6600-atlas",
+            flops3_sp: 13.5e9, // ~70% of 19.2 GFLOP/s SSE2 SP peak
+            flops3_dp: 6.7e9,  // ~70% of 9.6 GFLOP/s DP peak
+            mem_bw: 4.0e9,
+            launch: 0.2e-6,
+            pcie_bw: 0.0, // host-resident
+        }
+    }
+
+    /// BLAS-3 rate for a dtype.
+    pub fn flops3<S: Scalar>(&self) -> f64 {
+        if S::BYTES == 4 { self.flops3_sp } else { self.flops3_dp }
+    }
+
+    /// Model the cost of one op invocation.
+    ///
+    /// * `flops` — exact op flop count (manifest / closed form);
+    /// * `touched_bytes` — total operand/result footprint on the compute
+    ///   device (drives the memory-bandwidth bound for BLAS-1/2);
+    /// * `stream_bytes` — bytes that cross the host<->device link *per
+    ///   call* (device-resident operands excluded; see
+    ///   [`super::engine::op_stream_elems`]).
+    pub fn op_cost<S: Scalar>(
+        &self,
+        class: OpClass,
+        flops: u64,
+        touched_bytes: usize,
+        stream_bytes: usize,
+    ) -> OpCost {
+        let rate3 = self.flops3::<S>();
+        let compute = match class {
+            OpClass::Blas3 => flops as f64 / rate3,
+            // Memory-bound classes: whichever of flops-at-1/8-rate3 or
+            // memory traffic is slower (BLAS-2/1 sustain far below peak).
+            OpClass::Blas2 | OpClass::Blas1 => {
+                let flop_time = flops as f64 / (rate3 / 8.0);
+                let mem_time = touched_bytes as f64 / self.mem_bw;
+                flop_time.max(mem_time)
+            }
+        };
+        let transfer =
+            if self.pcie_bw > 0.0 { stream_bytes as f64 / self.pcie_bw } else { 0.0 };
+        OpCost { compute_secs: compute + self.launch, transfer_secs: transfer }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_ops() {
+        assert_eq!(OpClass::of("gemm"), OpClass::Blas3);
+        assert_eq!(OpClass::of("gemm_nt_update"), OpClass::Blas3);
+        assert_eq!(OpClass::of("gemv_t"), OpClass::Blas2);
+        assert_eq!(OpClass::of("dot"), OpClass::Blas1);
+    }
+
+    #[test]
+    fn gpu_beats_cpu_on_big_gemm_but_not_small() {
+        let gpu = ComputeProfile::gtx280_cublas();
+        let cpu = ComputeProfile::q6600_atlas();
+        // 256-tile SGEMM: 2*256^3 = 33.5 MFLOP; 3 tiles in, 1 out.
+        let flops = 2 * 256u64.pow(3);
+        let bytes = 256 * 256 * 4;
+        let g = gpu.op_cost::<f32>(OpClass::Blas3, flops, 2 * bytes, bytes);
+        let c = cpu.op_cost::<f32>(OpClass::Blas3, flops, 2 * bytes, bytes);
+        assert!(g.total() < c.total(), "gpu {g:?} vs cpu {c:?}");
+        // 32-tile GEMV: transfer+launch dominates -> GPU slower.
+        let flops = 2 * 32u64.pow(2);
+        let bytes = 32 * 32 * 4;
+        let g = gpu.op_cost::<f32>(OpClass::Blas2, flops, bytes + 128, 128);
+        let c = cpu.op_cost::<f32>(OpClass::Blas2, flops, bytes + 128, 128);
+        assert!(g.total() > c.total(), "small op must be cheaper on host");
+    }
+
+    #[test]
+    fn dp_slower_than_sp_especially_on_gpu() {
+        let gpu = ComputeProfile::gtx280_cublas();
+        let flops = 2 * 256u64.pow(3);
+        let sp = gpu.op_cost::<f32>(OpClass::Blas3, flops, 0, 0);
+        let dp = gpu.op_cost::<f64>(OpClass::Blas3, flops, 0, 0);
+        // GT200 DP is ~6x slower than SP at these sustained rates.
+        let ratio = dp.compute_secs / sp.compute_secs;
+        assert!(ratio > 4.0 && ratio < 8.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn transfer_share_is_visible() {
+        // The paper's observation: per-call PCIe copies eat a large share.
+        let gpu = ComputeProfile::gtx280_cublas();
+        let t = 256usize;
+        let flops = 2 * (t as u64).pow(3);
+        let bytes = t * t * 4;
+        let cost = gpu.op_cost::<f32>(OpClass::Blas3, flops, 3 * bytes, bytes);
+        let share = cost.transfer_secs / cost.total();
+        assert!(share > 0.3, "transfer share {share} should be substantial");
+    }
+
+    #[test]
+    fn charge_updates_clock() {
+        let clock = crate::comm::VClock::new();
+        OpCost { compute_secs: 1.0, transfer_secs: 0.5 }.charge(&clock);
+        assert_eq!(clock.compute_secs(), 1.0);
+        assert_eq!(clock.transfer_secs(), 0.5);
+        assert_eq!(clock.now(), 1.5);
+    }
+}

@@ -1,0 +1,196 @@
+//! The serial-CPU engine — the paper's "ATLAS" ablation arm.
+//!
+//! Local tile ops execute through the pure-rust BLAS ([`crate::linalg`]);
+//! virtual-time charges come from the Q6600/ATLAS profile (or any profile
+//! the caller supplies, e.g. for ablation sweeps).
+
+use super::costmodel::{ComputeProfile, OpCost};
+use super::engine::{tile_op_cost, Engine};
+use crate::{linalg, Result, Scalar};
+
+/// Pure-rust serial engine with a modelled CPU profile.
+pub struct CpuEngine {
+    tile: usize,
+    profile: ComputeProfile,
+}
+
+impl CpuEngine {
+    /// Engine over `tile`-sized tiles with the classic ATLAS profile.
+    pub fn new(tile: usize) -> Self {
+        CpuEngine { tile, profile: ComputeProfile::q6600_atlas() }
+    }
+
+    /// Engine with an explicit cost profile (ablations).
+    pub fn with_profile(tile: usize, profile: ComputeProfile) -> Self {
+        CpuEngine { tile, profile }
+    }
+
+    /// The active profile.
+    pub fn profile(&self) -> &ComputeProfile {
+        &self.profile
+    }
+
+    fn cost<S: Scalar>(&self, op: &str) -> OpCost {
+        tile_op_cost::<S>(&self.profile, op, self.tile)
+    }
+}
+
+impl<S: Scalar> Engine<S> for CpuEngine {
+    fn name(&self) -> &'static str {
+        "cpu-serial"
+    }
+
+    fn tile(&self) -> usize {
+        self.tile
+    }
+
+    fn gemm(&self, a: &[S], b: &[S], c: &mut [S]) -> Result<OpCost> {
+        let t = self.tile;
+        linalg::gemm(t, t, t, a, b, c);
+        Ok(self.cost::<S>("gemm"))
+    }
+
+    fn gemm_update(&self, c: &mut [S], a: &[S], b: &[S]) -> Result<OpCost> {
+        let t = self.tile;
+        linalg::gemm_sub(t, t, t, a, b, c);
+        Ok(self.cost::<S>("gemm_update"))
+    }
+
+    fn gemm_nt_update(&self, c: &mut [S], a: &[S], b: &[S]) -> Result<OpCost> {
+        let t = self.tile;
+        linalg::gemm_nt_sub(t, t, t, a, b, c);
+        Ok(self.cost::<S>("gemm_nt_update"))
+    }
+
+    fn gemv(&self, a: &[S], x: &[S], y: &mut [S]) -> Result<OpCost> {
+        let t = self.tile;
+        linalg::gemv(t, t, a, x, y);
+        Ok(self.cost::<S>("gemv"))
+    }
+
+    fn gemv_t(&self, a: &[S], x: &[S], y: &mut [S]) -> Result<OpCost> {
+        let t = self.tile;
+        linalg::gemv_t(t, t, a, x, y);
+        Ok(self.cost::<S>("gemv_t"))
+    }
+
+    fn gemv_update(&self, y: &mut [S], a: &[S], x: &[S]) -> Result<OpCost> {
+        let t = self.tile;
+        linalg::gemv_sub(t, t, a, x, y);
+        Ok(self.cost::<S>("gemv_update"))
+    }
+
+    fn trsm_llu(&self, l: &[S], b: &mut [S]) -> Result<OpCost> {
+        let t = self.tile;
+        linalg::trsm_llu(t, t, l, b);
+        Ok(self.cost::<S>("trsm_llu"))
+    }
+
+    fn trsm_ru(&self, b: &mut [S], u: &[S]) -> Result<OpCost> {
+        let t = self.tile;
+        linalg::trsm_ru(t, t, u, b);
+        Ok(self.cost::<S>("trsm_ru"))
+    }
+
+    fn trsm_rlt(&self, b: &mut [S], l: &[S]) -> Result<OpCost> {
+        let t = self.tile;
+        linalg::trsm_rlt(t, t, l, b);
+        Ok(self.cost::<S>("trsm_rlt"))
+    }
+
+    fn trsv_lu(&self, l: &[S], b: &mut [S]) -> Result<OpCost> {
+        let t = self.tile;
+        linalg::trsv_lu(t, l, b);
+        Ok(self.cost::<S>("trsv_lu"))
+    }
+
+    fn trsv_l(&self, l: &[S], b: &mut [S]) -> Result<OpCost> {
+        let t = self.tile;
+        linalg::trsv_l(t, l, b);
+        Ok(self.cost::<S>("trsv_l"))
+    }
+
+    fn trsv_u(&self, u: &[S], b: &mut [S]) -> Result<OpCost> {
+        let t = self.tile;
+        linalg::trsv_u(t, u, b);
+        Ok(self.cost::<S>("trsv_u"))
+    }
+
+    fn trsv_lt(&self, l: &[S], b: &mut [S]) -> Result<OpCost> {
+        let t = self.tile;
+        linalg::trsv_lt(t, l, b);
+        Ok(self.cost::<S>("trsv_lt"))
+    }
+
+    fn potrf(&self, a: &mut [S]) -> Result<OpCost> {
+        let t = self.tile;
+        linalg::potrf(t, a)?;
+        Ok(self.cost::<S>("potrf"))
+    }
+
+    fn blas1_cost(&self, len: usize) -> OpCost {
+        // touched: 2 reads + 1 write; host engine streams nothing.
+        self.profile.op_cost::<S>(
+            super::costmodel::OpClass::Blas1,
+            2 * len as u64,
+            3 * len * S::BYTES,
+            3 * len * S::BYTES,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::engine::Engine as _;
+    use crate::util::Prng;
+
+    #[test]
+    fn gemm_runs_and_costs() {
+        let e = CpuEngine::new(8);
+        let mut rng = Prng::new(1);
+        let mut a = vec![0.0f64; 64];
+        let mut b = vec![0.0f64; 64];
+        rng.fill_normal(&mut a);
+        rng.fill_normal(&mut b);
+        let mut c = vec![0.0f64; 64];
+        let cost = Engine::<f64>::gemm(&e, &a, &b, &mut c).unwrap();
+        assert!(cost.compute_secs > 0.0);
+        assert_eq!(cost.transfer_secs, 0.0, "host engine has no PCIe term");
+        // numerically correct?
+        let mut want = vec![0.0f64; 64];
+        crate::linalg::gemm(8, 8, 8, &a, &b, &mut want);
+        assert_eq!(c, want);
+    }
+
+    #[test]
+    fn trsm_inverse_of_gemm() {
+        let e = CpuEngine::new(4);
+        // L unit lower, X random; B = L X; solve must recover X.
+        let l = vec![
+            1.0f64, 0.0, 0.0, 0.0, //
+            0.5, 1.0, 0.0, 0.0, //
+            -0.25, 0.75, 1.0, 0.0, //
+            0.1, -0.2, 0.3, 1.0,
+        ];
+        let mut rng = Prng::new(2);
+        let mut x = vec![0.0f64; 16];
+        rng.fill_normal(&mut x);
+        let mut b = vec![0.0f64; 16];
+        crate::linalg::gemm(4, 4, 4, &l, &x, &mut b);
+        Engine::<f64>::trsm_llu(&e, &l, &mut b).unwrap();
+        for i in 0..16 {
+            assert!((b[i] - x[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn blas1_helpers() {
+        let e = CpuEngine::new(16);
+        let x = vec![1.0f32; 16];
+        let y = vec![2.0f32; 16];
+        let (d, cost) = Engine::<f32>::dot(&e, &x, &y);
+        assert_eq!(d, 32.0);
+        assert!(cost.total() > 0.0);
+    }
+}

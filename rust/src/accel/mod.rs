@@ -1,0 +1,84 @@
+//! Local acceleration layer (CUPLSS level 2): the [`Engine`] trait plus its
+//! two implementations — the PJRT-backed [`XlaEngine`] (the paper's
+//! CUDA/CUBLAS path) and the pure-rust [`CpuEngine`] (the serial-ATLAS
+//! ablation path) — and the calibrated hardware cost models that drive the
+//! virtual clock.
+
+pub mod costmodel;
+pub mod cpu_engine;
+pub mod engine;
+pub mod xla_engine;
+
+pub use costmodel::{ComputeProfile, OpClass, OpCost};
+pub use cpu_engine::CpuEngine;
+pub use engine::{op_flops, Engine, TILE_OPS};
+pub use xla_engine::XlaEngine;
+
+use crate::{Result, Scalar};
+use std::sync::Arc;
+
+/// Which local-compute arm to use — the paper's ablation axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Accelerated local compute (the paper's MPI+CUDA configuration).
+    Accelerated,
+    /// Serial CPU local compute (the paper's MPI+ATLAS configuration).
+    CpuSerial,
+}
+
+impl EngineKind {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "cuda" | "accel" | "xla" | "gpu" => Ok(EngineKind::Accelerated),
+            "atlas" | "cpu" | "serial" => Ok(EngineKind::CpuSerial),
+            other => Err(crate::Error::config(format!(
+                "unknown engine {other:?} (expected cuda|atlas)"
+            ))),
+        }
+    }
+
+    /// Display label matching the paper's figure legends.
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineKind::Accelerated => "MPI+CUDA",
+            EngineKind::CpuSerial => "MPI+ATLAS",
+        }
+    }
+}
+
+/// Construct an engine of `kind` over `tile`-sized tiles.
+/// `runtime` is required for the accelerated arm.
+pub fn make_engine<S: Scalar>(
+    kind: EngineKind,
+    tile: usize,
+    runtime: Option<&Arc<crate::runtime::Runtime>>,
+) -> Result<Arc<dyn Engine<S>>> {
+    match kind {
+        EngineKind::CpuSerial => Ok(Arc::new(CpuEngine::new(tile))),
+        EngineKind::Accelerated => {
+            let rt = runtime.ok_or_else(|| {
+                crate::Error::config("accelerated engine needs a PJRT runtime")
+            })?;
+            Ok(Arc::new(XlaEngine::<S>::new(rt, tile)?))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses() {
+        assert_eq!(EngineKind::parse("cuda").unwrap(), EngineKind::Accelerated);
+        assert_eq!(EngineKind::parse("atlas").unwrap(), EngineKind::CpuSerial);
+        assert!(EngineKind::parse("quantum").is_err());
+    }
+
+    #[test]
+    fn labels_match_paper() {
+        assert_eq!(EngineKind::Accelerated.label(), "MPI+CUDA");
+        assert_eq!(EngineKind::CpuSerial.label(), "MPI+ATLAS");
+    }
+}

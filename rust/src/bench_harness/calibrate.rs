@@ -1,0 +1,111 @@
+//! Experiment E8: model-vs-live calibration.
+//!
+//! The figure series at n = 60000 come from the analytic model
+//! ([`super::model`]); this module runs the *live* distributed solver (real
+//! messages, real tile ops, virtual clock) at small n and compares the two
+//! makespans.  Agreement here is what licenses the model-mode figures.
+
+use crate::accel::EngineKind;
+use crate::cluster::{Cluster, ClusterConfig, Method};
+use crate::comm::NetworkModel;
+use crate::solvers::IterConfig;
+use crate::workloads::Workload;
+use crate::Result;
+
+use super::figures;
+use super::model::{method_makespan, ModelParams};
+
+/// One calibration sample.
+#[derive(Clone, Debug)]
+pub struct CalibrationPoint {
+    /// Problem size.
+    pub n: usize,
+    /// Ranks.
+    pub ranks: usize,
+    /// Live virtual-time makespan (real distributed run).
+    pub live: f64,
+    /// Analytic model makespan.
+    pub model: f64,
+}
+
+impl CalibrationPoint {
+    /// model / live ratio (1.0 = perfect).
+    pub fn ratio(&self) -> f64 {
+        self.model / self.live
+    }
+}
+
+/// Run live-vs-model for `method` on the CPU arm across sizes and ranks.
+pub fn calibrate(
+    method: Method,
+    workload: Workload,
+    sizes: &[usize],
+    ranks: &[usize],
+    tile: usize,
+) -> Result<Vec<CalibrationPoint>> {
+    let mut out = Vec::new();
+    for &n in sizes {
+        for &p in ranks {
+            let cfg = ClusterConfig {
+                ranks: p,
+                tile,
+                engine: EngineKind::CpuSerial,
+                net: NetworkModel::gigabit_ethernet(),
+                iter: IterConfig { tol: 1e-10, max_iter: 400, restart: 30 },
+                ..Default::default()
+            };
+            let cluster = Cluster::new(cfg)?;
+            let report = cluster.solve::<f64>(workload, n, method)?;
+            let iters = report.iter_stats.map(|(i, _, _)| i).unwrap_or(0);
+            let params = ModelParams {
+                tile,
+                shape: crate::mesh::MeshShape::near_square(p),
+                net: NetworkModel::gigabit_ethernet(),
+                engine: crate::accel::ComputeProfile::q6600_atlas(),
+                panel_cpu: crate::accel::ComputeProfile::q6600_atlas(),
+                // The calibration workloads are diagonally dominant: partial
+                // pivoting never interchanges, so the live runs send no swap
+                // messages and the model must not charge any.
+                swap_fraction: match workload {
+                    Workload::DiagDominant | Workload::Spd | Workload::Poisson2d => 0.0,
+                    Workload::Econometric => 0.0,
+                },
+            };
+            let model = method_makespan::<f64>(method, n, iters, 30, &params);
+            out.push(CalibrationPoint { n, ranks: p, live: report.makespan(), model });
+        }
+    }
+    Ok(out)
+}
+
+/// Render calibration rows.
+pub fn render(points: &[CalibrationPoint]) -> String {
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.n.to_string(),
+                p.ranks.to_string(),
+                crate::util::fmt::secs(p.live),
+                crate::util::fmt::secs(p.model),
+                format!("{:.2}", p.ratio()),
+            ]
+        })
+        .collect();
+    crate::util::fmt::table(&["n", "P", "live makespan", "model makespan", "model/live"], &rows)
+}
+
+/// Convenience used by the calibration bench: assert the model is within a
+/// factor band of live runs (loose — the model is for figure *shape*).
+pub fn max_ratio_error(points: &[CalibrationPoint]) -> f64 {
+    points
+        .iter()
+        .map(|p| {
+            let r = p.ratio();
+            if r < 1.0 { 1.0 / r } else { r }
+        })
+        .fold(1.0, f64::max)
+}
+
+/// Keep figures linked in so model-mode users see both entry points.
+pub use figures::render_table as _render_table;

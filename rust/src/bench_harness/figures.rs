@@ -1,0 +1,236 @@
+//! Regeneration of the paper's Figures 3 and 4 (speedup vs ranks).
+//!
+//! Speedup is computed exactly as the paper defines it: parallel makespan
+//! against "a serial version that uses one CPU" — i.e. the P = 1 /
+//! CPU-engine arm is the common baseline for *both* the MPI+CUDA and the
+//! MPI+ATLAS series.
+
+use crate::accel::{ComputeProfile, EngineKind};
+use crate::cluster::Method;
+use crate::comm::NetworkModel;
+use crate::mesh::MeshShape;
+use crate::solvers::IterMethod;
+use crate::util::fmt;
+use crate::Scalar;
+
+use super::model::{method_makespan, ModelParams};
+use super::PAPER_RANKS;
+
+/// One (ranks, makespan, speedup) sample.
+#[derive(Clone, Copy, Debug)]
+pub struct FigurePoint {
+    /// Rank count.
+    pub ranks: usize,
+    /// Modelled (or measured) makespan, seconds.
+    pub makespan: f64,
+    /// Speedup over the serial CPU baseline.
+    pub speedup: f64,
+}
+
+/// One labelled curve of a figure.
+#[derive(Clone, Debug)]
+pub struct FigureSeries {
+    /// Legend label, e.g. "BiCGSTAB (MPI+CUDA)".
+    pub label: String,
+    /// Samples in rank order.
+    pub points: Vec<FigurePoint>,
+}
+
+impl FigureSeries {
+    /// Speedup at the largest rank count.
+    pub fn final_speedup(&self) -> f64 {
+        self.points.last().map(|p| p.speedup).unwrap_or(0.0)
+    }
+}
+
+fn params_for(engine: EngineKind, ranks: usize, tile: usize, net: NetworkModel) -> ModelParams {
+    ModelParams {
+        tile,
+        shape: MeshShape::near_square(ranks),
+        net,
+        engine: match engine {
+            EngineKind::Accelerated => ComputeProfile::gtx280_cublas(),
+            EngineKind::CpuSerial => ComputeProfile::q6600_atlas(),
+        },
+        panel_cpu: ComputeProfile::q6600_atlas(),
+        // The paper's fixture is a general dense matrix: partial pivoting
+        // interchanges on roughly half the elimination steps.
+        swap_fraction: 0.5,
+    }
+}
+
+/// Model-mode speedup series for one method over both engine arms.
+pub fn speedup_series<S: Scalar>(
+    method: Method,
+    n: usize,
+    iters: usize,
+    restart: usize,
+    tile: usize,
+    net: NetworkModel,
+    ranks: &[usize],
+) -> Vec<FigureSeries> {
+    // Common serial baseline: P = 1, CPU engine (the paper's "one CPU").
+    let base = method_makespan::<S>(
+        method,
+        n,
+        iters,
+        restart,
+        &params_for(EngineKind::CpuSerial, 1, tile, net),
+    );
+    [EngineKind::Accelerated, EngineKind::CpuSerial]
+        .iter()
+        .map(|&engine| {
+            let points = ranks
+                .iter()
+                .map(|&p| {
+                    let ms = method_makespan::<S>(
+                        method,
+                        n,
+                        iters,
+                        restart,
+                        &params_for(engine, p, tile, net),
+                    );
+                    FigurePoint { ranks: p, makespan: ms, speedup: base / ms }
+                })
+                .collect();
+            FigureSeries {
+                label: format!("{} ({})", method.name(), engine.label()),
+                points,
+            }
+        })
+        .collect()
+}
+
+/// Figure 3: speedup of the iterative solvers (GMRES, BiCG, BiCGSTAB).
+pub fn fig3_series<S: Scalar>(n: usize, iters: usize, tile: usize) -> Vec<FigureSeries> {
+    let net = NetworkModel::gigabit_ethernet();
+    let mut out = Vec::new();
+    for m in [IterMethod::Gmres, IterMethod::Bicg, IterMethod::Bicgstab] {
+        out.extend(speedup_series::<S>(
+            Method::Iterative(m),
+            n,
+            iters,
+            30,
+            tile,
+            net,
+            PAPER_RANKS,
+        ));
+    }
+    out
+}
+
+/// Figure 4: speedup of the LU direct solver (optionally Cholesky, E5).
+pub fn fig4_series<S: Scalar>(n: usize, tile: usize, include_cholesky: bool) -> Vec<FigureSeries> {
+    let net = NetworkModel::gigabit_ethernet();
+    let mut out = speedup_series::<S>(Method::Lu, n, 0, 0, tile, net, PAPER_RANKS);
+    if include_cholesky {
+        out.extend(speedup_series::<S>(Method::Cholesky, n, 0, 0, tile, net, PAPER_RANKS));
+    }
+    out
+}
+
+/// Render series as the aligned table the bench binaries print.
+pub fn render_table(title: &str, series: &[FigureSeries]) -> String {
+    let mut header: Vec<String> = vec!["P".to_string()];
+    for s in series {
+        header.push(s.label.clone());
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let nrows = series.first().map(|s| s.points.len()).unwrap_or(0);
+    let mut rows = Vec::with_capacity(nrows);
+    for r in 0..nrows {
+        let mut row = vec![series[0].points[r].ranks.to_string()];
+        for s in series {
+            row.push(format!("{:.2}", s.points[r].speedup));
+        }
+        rows.push(row);
+    }
+    let mut out = format!("== {title} ==\n");
+    out.push_str(&fmt::table(&header_refs, &rows));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_shape_matches_paper() {
+        let series = fig4_series::<f32>(super::super::PAPER_N, 256, false);
+        assert_eq!(series.len(), 2);
+        let cuda = &series[0];
+        let atlas = &series[1];
+        assert!(cuda.label.contains("CUDA"));
+        // Monotone increasing speedup with P for both arms.
+        for s in &series {
+            for w in s.points.windows(2) {
+                assert!(
+                    w[1].speedup > w[0].speedup,
+                    "{}: speedup not monotone: {:?}",
+                    s.label,
+                    s.points
+                );
+            }
+        }
+        // CUDA arm above ATLAS arm at every P.
+        for (c, a) in cuda.points.iter().zip(&atlas.points) {
+            assert!(c.speedup >= a.speedup * 0.99, "CUDA {c:?} vs ATLAS {a:?}");
+        }
+        // Sub-linear at 16 ranks.
+        assert!(cuda.final_speedup() < 16.0 * 40.0); // (CUDA baseline is CPU-serial, can exceed P)
+        assert!(atlas.final_speedup() < 16.0);
+    }
+
+    #[test]
+    fn fig3_lower_than_fig4_speedup() {
+        // Paper §5: "The speedup is higher for the methods based on matrix
+        // factorization compared with the iterative algorithms."  This holds
+        // in the paper's headline MPI+CUDA configuration: LU's O(n³) BLAS-3
+        // stream gains the full GPU compute advantage, while the iterative
+        // methods' memory-bound matvecs gain little over the CPU.  (On the
+        // pure-ATLAS arm our honestly-modelled iterative matvec scales
+        // near-ideally and edges out LU's panel critical path — see
+        // EXPERIMENTS.md E1/E2 discussion.)
+        let f3 = fig3_series::<f32>(super::super::PAPER_N, 100, 256);
+        let f4 = fig4_series::<f32>(super::super::PAPER_N, 256, false);
+        let best_iter_cuda = f3
+            .iter()
+            .filter(|s| s.label.contains("CUDA"))
+            .map(|s| s.final_speedup())
+            .fold(0.0, f64::max);
+        let lu_cuda = f4
+            .iter()
+            .find(|s| s.label.contains("CUDA"))
+            .unwrap()
+            .final_speedup();
+        assert!(
+            lu_cuda > best_iter_cuda,
+            "LU {lu_cuda} must out-scale iterative {best_iter_cuda} in the CUDA arm"
+        );
+        // And the iterative CUDA gain over ATLAS is modest (the paper's
+        // "this increase in the speedup is not very high").
+        for m in ["GMRES", "BiCG (", "BiCGSTAB"] {
+            let cuda = f3
+                .iter()
+                .find(|s| s.label.starts_with(m) && s.label.contains("CUDA"))
+                .unwrap()
+                .final_speedup();
+            let atlas = f3
+                .iter()
+                .find(|s| s.label.starts_with(m) && s.label.contains("ATLAS"))
+                .unwrap()
+                .final_speedup();
+            let gain = cuda / atlas;
+            assert!(gain > 1.0 && gain < 2.0, "{m}: iterative CUDA gain {gain}");
+        }
+    }
+
+    #[test]
+    fn render_table_contains_all_series() {
+        let f4 = fig4_series::<f32>(8192, 256, true);
+        let table = render_table("Figure 4", &f4);
+        assert!(table.contains("LU (MPI+CUDA)"));
+        assert!(table.contains("Cholesky (MPI+ATLAS)"));
+        assert!(table.lines().count() >= 7);
+    }
+}

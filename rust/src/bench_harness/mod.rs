@@ -1,0 +1,25 @@
+//! Figure-regeneration machinery (DESIGN.md §6).
+//!
+//! Two modes:
+//!
+//! * **real mode** — run the actual distributed solve in-process
+//!   ([`crate::cluster::Cluster`]) and read the virtual-time makespan from
+//!   the rank clocks.  Used at n ≤ ~2048 for validation and calibration.
+//! * **model mode** ([`model`]) — evaluate the same per-algorithm cost
+//!   structure analytically (op counts x engine cost model + message counts
+//!   x network model), which reproduces the paper's n = 60000 figures
+//!   without 28.8 GB of matrix.  [`calibrate`] quantifies model-vs-real
+//!   agreement at small n (experiment E8).
+
+pub mod calibrate;
+pub mod figures;
+pub mod model;
+
+pub use figures::{fig3_series, fig4_series, FigurePoint, FigureSeries};
+pub use model::ModelParams;
+
+/// The paper's rank sweep (Figures 3 and 4).
+pub const PAPER_RANKS: &[usize] = &[1, 2, 4, 8, 16];
+
+/// The paper's fixed matrix order.
+pub const PAPER_N: usize = 60_000;

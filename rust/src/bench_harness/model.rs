@@ -1,0 +1,298 @@
+//! Analytic virtual-time model of the distributed algorithms.
+//!
+//! Mirrors, term by term, what the *implementation* does — same tile-op
+//! sequence, same collectives — but evaluates counts instead of executing,
+//! so the paper's n = 60000 runs fit in microseconds of bench time.  Every
+//! per-op cost comes from the same [`ComputeProfile`]s and [`NetworkModel`]
+//! the live virtual clock uses; `calibrate` checks the model against live
+//! runs at small n.
+//!
+//! Conventions: `kt = ceil(n / tile)` tile steps; per-rank tile counts use
+//! the balanced block-cyclic bounds `ceil(x / pr)` / `ceil(x / pc)`.
+
+use crate::accel::engine::tile_op_cost;
+use crate::accel::{ComputeProfile, OpClass};
+use crate::comm::NetworkModel;
+use crate::dist::ceil_div;
+use crate::mesh::MeshShape;
+use crate::solvers::IterMethod;
+use crate::Scalar;
+
+/// Everything the analytic model needs.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelParams {
+    /// Tile size.
+    pub tile: usize,
+    /// Mesh shape.
+    pub shape: MeshShape,
+    /// Network profile.
+    pub net: NetworkModel,
+    /// Tile-op profile (GTX 280 for the CUDA arm, Q6600 for ATLAS).
+    pub engine: ComputeProfile,
+    /// Panel-factorisation profile (always host CPU — the MAGMA-style split).
+    pub panel_cpu: ComputeProfile,
+    /// Expected fraction of LU elimination steps whose pivot row differs
+    /// from the diagonal row (drives the row-swap message count): ~0.5+ for
+    /// general matrices, ~0 for diagonally-dominant ones (no interchanges).
+    pub swap_fraction: f64,
+}
+
+impl ModelParams {
+    fn op<S: Scalar>(&self, name: &str) -> f64 {
+        tile_op_cost::<S>(&self.engine, name, self.tile).total()
+    }
+
+    fn blas1<S: Scalar>(&self, len: usize) -> f64 {
+        // BLAS-1 executes on the host in both arms (see XlaEngine::blas1_cost).
+        self.panel_cpu
+            .op_cost::<S>(OpClass::Blas1, 2 * len as u64, 3 * len * S::BYTES, 3 * len * S::BYTES)
+            .total()
+    }
+
+    /// One point-to-point message of `elems` scalars.
+    fn msg<S: Scalar>(&self, elems: usize) -> f64 {
+        self.net.p2p_secs(elems * S::BYTES)
+    }
+
+    /// A binomial broadcast/reduce of `elems` scalars over `p` ranks
+    /// (critical path: ceil(log2 p) rounds).
+    fn tree<S: Scalar>(&self, p: usize, elems: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let rounds = usize::BITS - (p - 1).leading_zeros();
+        rounds as f64 * self.msg::<S>(elems)
+    }
+
+    /// Ring allgather of per-rank blocks of `elems` scalars over `p` ranks.
+    fn ring<S: Scalar>(&self, p: usize, elems: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        (p - 1) as f64 * self.msg::<S>(elems)
+    }
+}
+
+/// Modelled makespan of the distributed block LU **factorisation + solve**.
+pub fn lu_makespan<S: Scalar>(n: usize, p: &ModelParams) -> f64 {
+    let t = p.tile;
+    let kt = ceil_div(n, t);
+    let (pr, pc) = (p.shape.pr, p.shape.pc);
+    let t2 = t * t;
+    let mut total = 0.0;
+
+    for k in 0..kt {
+        let mk = kt - k; // panel tiles (incl. diagonal)
+        let trailing = mk - 1;
+        // 1. panel gather + scatter.  Gather: the (pr-1) senders stream
+        //    their ~mk/pr tiles concurrently (each serialised on its own
+        //    NIC); scatter: the owner streams all remote tiles back through
+        //    its single NIC — the asymmetric bottleneck.
+        let remote_tiles = mk - ceil_div(mk, pr); // tiles not already on the owner
+        if pr > 1 {
+            total += (ceil_div(mk, pr) + remote_tiles) as f64 * p.msg::<S>(t2);
+        }
+        // 2. host getrf of the (mk*t x t) real panel.
+        let flops = (mk * t) as u64 * (t as u64) * (t as u64);
+        total += p
+            .panel_cpu
+            .op_cost::<S>(OpClass::Blas3, flops, mk * t2 * S::BYTES, mk * t2 * S::BYTES)
+            .total();
+        // 3. pivot broadcast + row swaps.  A swap is a cross-row message
+        //    pair only when the two rows live on different process rows
+        //    (probability (pr-1)/pr); same-row swaps are local copies.
+        total += p.tree::<S>(pr * pc, t);
+        if pr > 1 && p.swap_fraction > 0.0 {
+            let seg = ceil_div(kt, pc) * t; // row segment elems per rank
+            let cross = (pr - 1) as f64 / pr as f64;
+            total += p.swap_fraction * cross * t as f64 * p.msg::<S>(seg);
+        }
+        if trailing == 0 {
+            continue;
+        }
+        // 4. L11 row broadcast + U12 trsm on the pivot row.
+        total += p.tree::<S>(pc, t2);
+        total += ceil_div(trailing, pc) as f64 * p.op::<S>("trsm_llu");
+        // 5. panel broadcasts: L21 along rows, U12 along columns.
+        total += ceil_div(trailing, pr) as f64 * p.tree::<S>(pc, t2);
+        total += ceil_div(trailing, pc) as f64 * p.tree::<S>(pr, t2);
+        // 6. trailing update per rank.
+        let my_tiles = ceil_div(trailing, pr) * ceil_div(trailing, pc);
+        total += my_tiles as f64 * p.op::<S>("gemm_update");
+    }
+    // Solve: two triangular substitutions.
+    total += trsv_makespan::<S>(n, p) * 2.0;
+    total
+}
+
+/// Modelled makespan of the distributed block Cholesky factorisation+solve.
+pub fn chol_makespan<S: Scalar>(n: usize, p: &ModelParams) -> f64 {
+    let t = p.tile;
+    let kt = ceil_div(n, t);
+    let (pr, pc) = (p.shape.pr, p.shape.pc);
+    let t2 = t * t;
+    let mut total = 0.0;
+    for k in 0..kt {
+        let trailing = kt - k - 1;
+        // potrf + column broadcast of L11.
+        total += p.op::<S>("potrf");
+        total += p.tree::<S>(pr, t2);
+        // panel trsm_rlt on the column's ranks.
+        total += ceil_div(trailing, pr) as f64 * p.op::<S>("trsm_rlt");
+        if trailing == 0 {
+            continue;
+        }
+        // row + column broadcasts of the panel.
+        total += ceil_div(trailing, pr) as f64 * p.tree::<S>(pc, t2);
+        total += ceil_div(trailing, pc) as f64 * p.tree::<S>(pr, t2);
+        // trailing update, lower half only: ~half the tiles.
+        let my_tiles = (ceil_div(trailing, pr) * ceil_div(trailing, pc)).div_ceil(2);
+        total += my_tiles as f64 * p.op::<S>("gemm_nt_update");
+    }
+    // Forward solve + transpose redistribution + backward solve.
+    total += trsv_makespan::<S>(n, p) * 2.0;
+    let my_tiles = ceil_div(kt, p.shape.pr) * ceil_div(kt, p.shape.pc);
+    total += my_tiles as f64 * p.msg::<S>(t2); // ptranspose traffic per rank
+    total
+}
+
+/// Modelled makespan of one distributed triangular substitution.
+pub fn trsv_makespan<S: Scalar>(n: usize, p: &ModelParams) -> f64 {
+    let t = p.tile;
+    let kt = ceil_div(n, t);
+    let (pr, pc) = (p.shape.pr, p.shape.pc);
+    let mut total = 0.0;
+    for k in 0..kt {
+        let others = kt - k - 1;
+        // diag trsv + world bcast of y(k).
+        total += p.op::<S>("trsv_lu");
+        total += p.tree::<S>(pr * pc, t);
+        // column tiles broadcast along rows + local gemv_update per rank.
+        let my_rows = ceil_div(others, pr);
+        total += my_rows as f64 * (p.tree::<S>(pc, t * t) + p.op::<S>("gemv_update"));
+    }
+    total
+}
+
+/// Modelled makespan of `iters` iterations of an iterative method.
+pub fn iter_makespan<S: Scalar>(
+    method: IterMethod,
+    n: usize,
+    iters: usize,
+    restart: usize,
+    p: &ModelParams,
+) -> f64 {
+    let t = p.tile;
+    let kt = ceil_div(n, t);
+    let (pr, pc) = (p.shape.pr, p.shape.pc);
+    let my_rows = ceil_div(kt, pr);
+    let my_cols = ceil_div(kt, pc);
+    let vec_elems = my_rows * t;
+
+    // One distributed matvec (pgemv): allgather + per-tile gemv/axpy + allreduce.
+    let matvec = p.ring::<S>(pr, vec_elems)
+        + (my_rows * my_cols) as f64 * (p.op::<S>("gemv") + p.blas1::<S>(t))
+        + 2.0 * p.tree::<S>(pc, vec_elems);
+    // Transposed matvec (pgemv_t): local + per-col reduce + row allgather.
+    let matvec_t = (my_rows * my_cols) as f64 * (p.op::<S>("gemv_t") + p.blas1::<S>(t))
+        + my_cols as f64 * p.tree::<S>(pr, t)
+        + p.ring::<S>(pc, vec_elems);
+    // A distributed dot: local blas1 + scalar allreduce over the column comm.
+    let dot = my_rows as f64 * p.blas1::<S>(t) + 2.0 * p.tree::<S>(pr, 1);
+    // A local vector op.
+    let vop = my_rows as f64 * p.blas1::<S>(t);
+
+    let per_iter = match method {
+        IterMethod::Cg => matvec + 2.0 * dot + 3.0 * vop,
+        IterMethod::Bicg => matvec + matvec_t + 3.0 * dot + 7.0 * vop,
+        IterMethod::Bicgstab => 2.0 * matvec + 5.0 * dot + 6.0 * vop,
+        IterMethod::Gmres => {
+            // Average Arnoldi step at restart m: ~(m/2 + 1) dots and axpys.
+            let m = restart.max(1) as f64;
+            matvec + (m / 2.0 + 1.0) * (dot + vop) + 2.0 * vop
+        }
+    };
+    iters as f64 * per_iter
+}
+
+/// Modelled makespan for a (method, engine) arm.
+pub fn method_makespan<S: Scalar>(
+    method: crate::cluster::Method,
+    n: usize,
+    iters: usize,
+    restart: usize,
+    p: &ModelParams,
+) -> f64 {
+    match method {
+        crate::cluster::Method::Lu => lu_makespan::<S>(n, p),
+        crate::cluster::Method::Cholesky => chol_makespan::<S>(n, p),
+        crate::cluster::Method::Iterative(m) => iter_makespan::<S>(m, n, iters, restart, p),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(ranks: usize, gpu: bool) -> ModelParams {
+        ModelParams {
+            tile: 256,
+            shape: MeshShape::near_square(ranks),
+            net: NetworkModel::gigabit_ethernet(),
+            engine: if gpu {
+                ComputeProfile::gtx280_cublas()
+            } else {
+                ComputeProfile::q6600_atlas()
+            },
+            panel_cpu: ComputeProfile::q6600_atlas(),
+            swap_fraction: 0.5,
+        }
+    }
+
+    #[test]
+    fn lu_scales_down_with_ranks() {
+        let n = 8192;
+        let t1 = lu_makespan::<f32>(n, &params(1, false));
+        let t4 = lu_makespan::<f32>(n, &params(4, false));
+        let t16 = lu_makespan::<f32>(n, &params(16, false));
+        assert!(t4 < t1 && t16 < t4, "{t1} {t4} {t16}");
+        // sub-linear (communication overhead)
+        assert!(t1 / t16 < 16.0);
+        assert!(t1 / t16 > 2.0);
+    }
+
+    #[test]
+    fn gpu_arm_faster_but_not_dramatically() {
+        // The paper's core observation at n = 60000.
+        let n = 60_000;
+        let cpu = lu_makespan::<f32>(n, &params(16, false));
+        let gpu = lu_makespan::<f32>(n, &params(16, true));
+        let ratio = cpu / gpu;
+        assert!(ratio > 1.0, "CUDA arm must win: {ratio}");
+        assert!(ratio < 30.0, "but transfers cap the gain: {ratio}");
+    }
+
+    #[test]
+    fn iterative_scales() {
+        let n = 16_384;
+        let t1 = iter_makespan::<f32>(IterMethod::Bicgstab, n, 100, 30, &params(1, false));
+        let t16 = iter_makespan::<f32>(IterMethod::Bicgstab, n, 100, 30, &params(16, false));
+        assert!(t16 < t1);
+        assert!(t1 / t16 < 16.0);
+    }
+
+    #[test]
+    fn dp_slower_than_sp() {
+        let n = 30_000;
+        let sp = lu_makespan::<f32>(n, &params(8, true));
+        let dp = lu_makespan::<f64>(n, &params(8, true));
+        assert!(dp > sp, "{dp} vs {sp}");
+    }
+
+    #[test]
+    fn trsv_minor_vs_factorisation() {
+        let n = 30_000;
+        let p = params(8, false);
+        assert!(trsv_makespan::<f32>(n, &p) < 0.1 * lu_makespan::<f32>(n, &p));
+    }
+}

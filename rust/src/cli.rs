@@ -1,0 +1,108 @@
+//! Minimal CLI argument parser (no clap in the offline crate set):
+//! `--key value`, `--key=value`, `--flag`, and positionals.
+
+use std::collections::HashMap;
+
+use crate::{Error, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Option names that take a value (anything else after `--` is a flag).
+const VALUE_OPTS: &[&str] = &[
+    "ranks", "tile", "engine", "method", "workload", "n", "dtype", "tol", "max-iter",
+    "restart", "config", "net", "iters", "out",
+];
+
+impl Args {
+    /// Parse an argv-style iterator (without the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if VALUE_OPTS.contains(&body) {
+                    let v = it.next().ok_or_else(|| {
+                        Error::config(format!("--{body} expects a value"))
+                    })?;
+                    args.opts.insert(body.to_string(), v);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process's own command line.
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// The subcommand (first positional), if any.
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Positional arguments after the subcommand.
+    pub fn rest(&self) -> &[String] {
+        if self.positional.is_empty() { &[] } else { &self.positional[1..] }
+    }
+
+    /// Is a bare flag present?
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Raw option value.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn opt_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("bad value for --{name}: {v:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = parse("solve --ranks 16 --tile=128 --verbose --method lu extra");
+        assert_eq!(a.command(), Some("solve"));
+        assert_eq!(a.opt_or("ranks", 0usize).unwrap(), 16);
+        assert_eq!(a.opt_or("tile", 0usize).unwrap(), 128);
+        assert_eq!(a.opt("method"), Some("lu"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.rest(), &["extra".to_string()]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("bench");
+        assert_eq!(a.opt_or("ranks", 9usize).unwrap(), 9);
+        assert!(parse("x --n abc").opt_or("n", 0usize).is_err());
+        assert!(Args::parse(["--ranks".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,181 @@
+//! Per-rank and per-solve metrics: the raw material of every figure.
+
+use crate::accel::EngineKind;
+use crate::comm::Comm;
+use crate::workloads::Workload;
+use crate::Scalar;
+
+/// One rank's accounting after a solve.
+#[derive(Clone, Debug)]
+pub struct RankMetrics {
+    /// World rank.
+    pub rank: usize,
+    /// Final virtual time (seconds).
+    pub vtime: f64,
+    /// Virtual seconds of local compute.
+    pub compute: f64,
+    /// Virtual seconds blocked on messages.
+    pub comm_wait: f64,
+    /// Virtual seconds of host<->accelerator transfer.
+    pub transfer: f64,
+    /// Messages sent.
+    pub msgs: u64,
+    /// Payload bytes sent.
+    pub bytes: u64,
+    /// Wall-clock seconds this rank actually took (calibration data).
+    pub wall: f64,
+}
+
+impl RankMetrics {
+    /// Snapshot a rank's clock + traffic counters.
+    pub fn capture<S: Scalar>(comm: &Comm<S>, wall: f64) -> Self {
+        RankMetrics {
+            rank: comm.rank(),
+            vtime: comm.clock().now(),
+            compute: comm.clock().compute_secs(),
+            comm_wait: comm.clock().comm_wait_secs(),
+            transfer: comm.clock().transfer_secs(),
+            msgs: comm.stats().msgs_sent(),
+            bytes: comm.stats().bytes_sent(),
+            wall,
+        }
+    }
+}
+
+/// Result of one distributed solve.
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    /// Solver name ("LU", "BiCGSTAB", ...).
+    pub method: &'static str,
+    /// Workload solved.
+    pub workload: Workload,
+    /// Problem size.
+    pub n: usize,
+    /// Ranks used.
+    pub ranks: usize,
+    /// Local-compute arm.
+    pub engine: EngineKind,
+    /// Per-rank accounting.
+    pub per_rank: Vec<RankMetrics>,
+    /// Max abs error vs the workload's known solution.
+    pub max_err: f64,
+    /// (iterations, final relative residual, converged) for iterative runs.
+    pub iter_stats: Option<(usize, f64, bool)>,
+}
+
+impl SolveReport {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        method: &'static str,
+        workload: Workload,
+        n: usize,
+        ranks: usize,
+        engine: EngineKind,
+        per_rank: Vec<RankMetrics>,
+        max_err: f64,
+        iter_stats: Option<(usize, f64, bool)>,
+    ) -> Self {
+        SolveReport { method, workload, n, ranks, engine, per_rank, max_err, iter_stats }
+    }
+
+    /// Virtual-time makespan: max over rank clocks — what a real cluster's
+    /// wall clock would have read.
+    pub fn makespan(&self) -> f64 {
+        self.per_rank.iter().map(|m| m.vtime).fold(0.0, f64::max)
+    }
+
+    /// Total virtual compute seconds across ranks.
+    pub fn total_compute(&self) -> f64 {
+        self.per_rank.iter().map(|m| m.compute).sum()
+    }
+
+    /// Total virtual transfer (PCIe) seconds across ranks.
+    pub fn total_transfer(&self) -> f64 {
+        self.per_rank.iter().map(|m| m.transfer).sum()
+    }
+
+    /// Mean fraction of makespan the ranks spent blocked on communication.
+    pub fn comm_fraction(&self) -> f64 {
+        let ms = self.makespan();
+        if ms == 0.0 {
+            return 0.0;
+        }
+        let mean_wait: f64 =
+            self.per_rank.iter().map(|m| m.comm_wait).sum::<f64>() / self.per_rank.len() as f64;
+        mean_wait / ms
+    }
+
+    /// Total messages sent.
+    pub fn total_msgs(&self) -> u64 {
+        self.per_rank.iter().map(|m| m.msgs).sum()
+    }
+
+    /// Total payload bytes sent.
+    pub fn total_bytes(&self) -> u64 {
+        self.per_rank.iter().map(|m| m.bytes).sum()
+    }
+
+    /// Max wall-clock across ranks (the real elapsed time of the run).
+    pub fn wall_max(&self) -> f64 {
+        self.per_rank.iter().map(|m| m.wall).fold(0.0, f64::max)
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        let iter = match self.iter_stats {
+            Some((it, res, conv)) => {
+                format!(", {it} iters, res {res:.2e}{}", if conv { "" } else { " (no conv)" })
+            }
+            None => String::new(),
+        };
+        format!(
+            "{} on {:?} n={} P={} [{}]: makespan {}, err {:.2e}, comm {:.0}%{}",
+            self.method,
+            self.workload,
+            self.n,
+            self.ranks,
+            self.engine.label(),
+            crate::util::fmt::secs(self.makespan()),
+            self.max_err,
+            self.comm_fraction() * 100.0,
+            iter
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(vtime: f64, compute: f64, wait: f64) -> RankMetrics {
+        RankMetrics {
+            rank: 0,
+            vtime,
+            compute,
+            comm_wait: wait,
+            transfer: 0.0,
+            msgs: 10,
+            bytes: 100,
+            wall: 0.01,
+        }
+    }
+
+    #[test]
+    fn makespan_is_max() {
+        let r = SolveReport::new(
+            "LU",
+            Workload::Spd,
+            64,
+            2,
+            EngineKind::CpuSerial,
+            vec![mk(1.0, 0.8, 0.1), mk(2.0, 1.5, 0.5)],
+            1e-12,
+            None,
+        );
+        assert_eq!(r.makespan(), 2.0);
+        assert!((r.total_compute() - 2.3).abs() < 1e-12);
+        assert!((r.comm_fraction() - 0.15).abs() < 1e-12);
+        assert_eq!(r.total_msgs(), 20);
+        assert!(r.summary().contains("LU"));
+    }
+}

@@ -1,0 +1,266 @@
+//! The cluster runtime: CUPLSS's user-facing entry point ("the parallelism
+//! is hidden from the user", paper §3).
+//!
+//! [`Cluster::solve`] spins up the simulated MPI world, distributes the
+//! workload, runs the requested solver with the requested local-compute
+//! engine, verifies the solution against the workload's known answer, and
+//! returns a [`SolveReport`] with the virtual-time breakdown per rank —
+//! everything the bench harness needs to plot the paper's figures.
+
+pub mod metrics;
+
+pub use metrics::{RankMetrics, SolveReport};
+
+use std::sync::Arc;
+
+use crate::accel::{make_engine, Engine, EngineKind};
+use crate::comm::{NetworkModel, World};
+use crate::dist::{gather_vector, Descriptor, DistMatrix, DistVector};
+use crate::mesh::{Mesh, MeshShape};
+use crate::pblas::Ctx;
+use crate::runtime::Runtime;
+use crate::solvers::{bicg, bicgstab, cg, gmres, pchol_solve, plu_solve, IterConfig, IterMethod};
+use crate::workloads::Workload;
+use crate::{Error, Result, Scalar};
+
+/// Which solver to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Blocked LU with partial pivoting + triangular solves.
+    Lu,
+    /// Blocked Cholesky + triangular solves (SPD only).
+    Cholesky,
+    /// A non-stationary iterative method.
+    Iterative(IterMethod),
+}
+
+impl Method {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "lu" => Ok(Method::Lu),
+            "chol" | "cholesky" => Ok(Method::Cholesky),
+            other => Ok(Method::Iterative(IterMethod::parse(other)?)),
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Lu => "LU",
+            Method::Cholesky => "Cholesky",
+            Method::Iterative(m) => m.name(),
+        }
+    }
+}
+
+/// Everything needed to run one distributed solve.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Number of ranks (the paper sweeps 1, 2, 4, 8, 16).
+    pub ranks: usize,
+    /// Tile size (must have matching artifacts for the accelerated engine).
+    pub tile: usize,
+    /// Local-compute arm (the paper's CUDA-vs-ATLAS axis).
+    pub engine: EngineKind,
+    /// Network profile for the virtual clock.
+    pub net: NetworkModel,
+    /// Artifact directory (PJRT runtime), used by the accelerated arm.
+    pub artifact_dir: String,
+    /// Iterative controls.
+    pub iter: IterConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            ranks: 4,
+            tile: crate::DEFAULT_TILE,
+            engine: EngineKind::CpuSerial,
+            net: NetworkModel::gigabit_ethernet(),
+            artifact_dir: crate::runtime::DEFAULT_ARTIFACT_DIR.to_string(),
+            iter: IterConfig::default(),
+        }
+    }
+}
+
+/// The cluster facade.
+pub struct Cluster {
+    cfg: ClusterConfig,
+    runtime: Option<Arc<Runtime>>,
+}
+
+impl Cluster {
+    /// Construct; loads the PJRT runtime when the accelerated engine is
+    /// requested.
+    pub fn new(cfg: ClusterConfig) -> Result<Self> {
+        let runtime = match cfg.engine {
+            EngineKind::Accelerated => Some(Runtime::new(&cfg.artifact_dir)?),
+            EngineKind::CpuSerial => None,
+        };
+        Ok(Cluster { cfg, runtime })
+    }
+
+    /// The active config.
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// Solve an `n x n` instance of `workload` with `method`; returns the
+    /// report (makespan, per-rank breakdown, solution error vs the known
+    /// answer).
+    pub fn solve<S: Scalar>(&self, workload: Workload, n: usize, method: Method) -> Result<SolveReport> {
+        if matches!(method, Method::Cholesky | Method::Iterative(IterMethod::Cg))
+            && !workload.is_spd()
+        {
+            return Err(Error::config(format!(
+                "{} requires an SPD workload, got {workload:?}",
+                method.name()
+            )));
+        }
+        let cfg = &self.cfg;
+        let shape = MeshShape::near_square(cfg.ranks);
+        // Shared engine: constructed once, used by all rank threads (each
+        // node in the paper has its own GPU; the cost model is per-op, so
+        // sharing the compiled executables is timing-neutral).
+        let engine: Arc<dyn Engine<S>> =
+            make_engine(cfg.engine, cfg.tile, self.runtime.as_ref())?;
+        let iter_cfg = cfg.iter;
+        let tile = cfg.tile;
+
+        let results = World::run::<S, Result<(RankMetrics, Option<Vec<S>>, Option<(usize, f64, bool)>)>, _>(
+            cfg.ranks,
+            cfg.net,
+            move |comm| {
+                let mesh = Mesh::new(&comm, shape);
+                let ctx = Ctx::new(&mesh, engine.clone());
+                let desc = Descriptor::new(n, n, tile, shape);
+                let elem = workload.elem::<S>(n);
+                let rhs = workload.rhs::<S>(n);
+                let a0 = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), elem);
+                let b = DistVector::from_fn(desc, mesh.row(), mesh.col(), rhs);
+                // Synchronise before timing (all ranks at t=0 after setup).
+                comm.clock().reset();
+                let wall = crate::util::Stopwatch::start();
+
+                let (x, iter_stats) = match method {
+                    Method::Lu => {
+                        let mut a = a0;
+                        (plu_solve(&ctx, &mut a, &b)?, None)
+                    }
+                    Method::Cholesky => {
+                        let mut a = a0;
+                        (pchol_solve(&ctx, &mut a, &b)?, None)
+                    }
+                    Method::Iterative(m) => {
+                        let (x, st) = match m {
+                            IterMethod::Cg => cg(&ctx, &a0, &b, &iter_cfg)?,
+                            IterMethod::Bicg => bicg(&ctx, &a0, &b, &iter_cfg)?,
+                            IterMethod::Bicgstab => bicgstab(&ctx, &a0, &b, &iter_cfg)?,
+                            IterMethod::Gmres => gmres(&ctx, &a0, &b, &iter_cfg)?,
+                        };
+                        (
+                            x,
+                            Some((
+                                st.iterations,
+                                st.rel_residual.to_f64().unwrap_or(f64::NAN),
+                                st.converged,
+                            )),
+                        )
+                    }
+                };
+                let metrics = RankMetrics::capture(&comm, wall.secs());
+                let gathered = gather_vector(&mesh, &x);
+                Ok((metrics, gathered, iter_stats))
+            },
+        );
+
+        let mut per_rank = Vec::with_capacity(cfg.ranks);
+        let mut solution: Option<Vec<S>> = None;
+        let mut iter_stats = None;
+        for r in results {
+            let (m, sol, st) = r?;
+            per_rank.push(m);
+            if sol.is_some() {
+                solution = sol;
+            }
+            if st.is_some() {
+                iter_stats = st;
+            }
+        }
+        let solution = solution.expect("rank 0 gathers the solution");
+        let xt = workload.x_true::<S>(n);
+        let mut max_err = 0.0f64;
+        for (i, &xi) in solution.iter().enumerate() {
+            let want = xt(i).to_f64().unwrap();
+            let err = (xi.to_f64().unwrap() - want).abs();
+            max_err = max_err.max(err);
+        }
+        Ok(SolveReport::new(
+            method.name(),
+            workload,
+            n,
+            cfg.ranks,
+            cfg.engine,
+            per_rank,
+            max_err,
+            iter_stats,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse() {
+        assert_eq!(Method::parse("lu").unwrap(), Method::Lu);
+        assert_eq!(Method::parse("cholesky").unwrap(), Method::Cholesky);
+        assert_eq!(Method::parse("gmres").unwrap(), Method::Iterative(IterMethod::Gmres));
+        assert!(Method::parse("qr").is_err());
+    }
+
+    #[test]
+    fn cholesky_rejects_nonsym_workload() {
+        let cluster = Cluster::new(ClusterConfig {
+            ranks: 1,
+            tile: 8,
+            ..Default::default()
+        })
+        .unwrap();
+        let err = cluster.solve::<f64>(Workload::DiagDominant, 16, Method::Cholesky);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn small_lu_solve_end_to_end() {
+        let cluster = Cluster::new(ClusterConfig {
+            ranks: 4,
+            tile: 8,
+            ..Default::default()
+        })
+        .unwrap();
+        let report = cluster.solve::<f64>(Workload::DiagDominant, 32, Method::Lu).unwrap();
+        assert!(report.max_err < 1e-8, "max_err {}", report.max_err);
+        assert_eq!(report.per_rank.len(), 4);
+        assert!(report.makespan() > 0.0);
+    }
+
+    #[test]
+    fn small_iterative_solve_end_to_end() {
+        let cluster = Cluster::new(ClusterConfig {
+            ranks: 2,
+            tile: 8,
+            iter: IterConfig { tol: 1e-10, max_iter: 400, restart: 20 },
+            ..Default::default()
+        })
+        .unwrap();
+        let report = cluster
+            .solve::<f64>(Workload::Spd, 32, Method::Iterative(IterMethod::Cg))
+            .unwrap();
+        assert!(report.max_err < 1e-6, "max_err {}", report.max_err);
+        let (iters, _res, conv) = report.iter_stats.unwrap();
+        assert!(conv && iters > 0);
+    }
+}

@@ -1,0 +1,429 @@
+//! MPI-style collectives over a [`Group`], built from real point-to-point
+//! messages with the same algorithmic structure MPICH uses:
+//!
+//! * broadcast / reduce — binomial trees (`log P` rounds);
+//! * allreduce — reduce-to-0 + broadcast;
+//! * allgather — bandwidth-optimal ring (`P-1` rounds);
+//! * gather / scatter — linear (our payloads are long tiles, where MPICH
+//!   also switches to linear);
+//! * barrier — dissemination.
+//!
+//! Because each tree edge is an actual message through the transport, the
+//! virtual clock picks up the right `alpha·log P + bytes·beta` cost shape
+//! without a separate collective cost model.
+
+use super::message::{Payload, Tag};
+use super::transport::Group;
+use crate::Scalar;
+
+/// Element-wise reduction operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceOp {
+    /// Element-wise sum.
+    Sum,
+    /// Element-wise max.
+    Max,
+    /// Element-wise min.
+    Min,
+}
+
+impl ReduceOp {
+    fn combine<S: Scalar>(self, a: S, b: S) -> S {
+        match self {
+            ReduceOp::Sum => a + b,
+            ReduceOp::Max => {
+                if b > a { b } else { a }
+            }
+            ReduceOp::Min => {
+                if b < a { b } else { a }
+            }
+        }
+    }
+
+    fn combine_vec<S: Scalar>(self, acc: &mut [S], other: &[S]) {
+        assert_eq!(acc.len(), other.len(), "reduce length mismatch");
+        for (a, &b) in acc.iter_mut().zip(other) {
+            *a = self.combine(*a, b);
+        }
+    }
+}
+
+impl<'a, S: Scalar> Group<'a, S> {
+    /// Binomial-tree broadcast from group rank `root`.  `data` is the
+    /// payload on the root and ignored elsewhere; every rank returns the
+    /// broadcast payload.
+    pub fn bcast(&self, root: usize, tag: u32, data: Option<Payload<S>>) -> Payload<S> {
+        let p = self.size();
+        let me = self.rank();
+        if p == 1 {
+            return data.expect("bcast root must supply data");
+        }
+        let rel = (me + p - root) % p;
+        let mut payload = if me == root {
+            Some(data.expect("bcast root must supply data"))
+        } else {
+            None
+        };
+        // Receive phase: find the bit on which this rank receives.
+        let mut mask = 1usize;
+        while mask < p {
+            if rel & mask != 0 {
+                let src = (me + p - mask) % p;
+                payload = Some(self.comm().recv(self.world_rank(src), Tag::Bcast(tag)));
+                break;
+            }
+            mask <<= 1;
+        }
+        // Send phase: forward down the tree.
+        let pl = payload.expect("binomial bcast bookkeeping");
+        let mut mask = mask >> 1;
+        while mask > 0 {
+            if rel + mask < p {
+                let dst = (me + mask) % p;
+                self.comm().send(self.world_rank(dst), Tag::Bcast(tag), pl.clone());
+            }
+            mask >>= 1;
+        }
+        pl
+    }
+
+    /// Binomial-tree element-wise reduction of equal-length vectors to group
+    /// rank `root`.  Returns `Some(result)` on the root, `None` elsewhere.
+    pub fn reduce_vec(
+        &self,
+        root: usize,
+        tag: u32,
+        mut mine: Vec<S>,
+        op: ReduceOp,
+    ) -> Option<Vec<S>> {
+        let p = self.size();
+        let me = self.rank();
+        if p == 1 {
+            return Some(mine);
+        }
+        let rel = (me + p - root) % p;
+        let mut mask = 1usize;
+        while mask < p {
+            if rel & mask == 0 {
+                let peer_rel = rel | mask;
+                if peer_rel < p {
+                    let src = (peer_rel + root) % p;
+                    let other =
+                        self.comm().recv(self.world_rank(src), Tag::Reduce(tag)).into_data();
+                    op.combine_vec(&mut mine, &other);
+                }
+            } else {
+                let dst = (rel - mask + root) % p;
+                self.comm().send(self.world_rank(dst), Tag::Reduce(tag), Payload::Data(mine));
+                return None;
+            }
+            mask <<= 1;
+        }
+        Some(mine)
+    }
+
+    /// Allreduce of equal-length vectors: reduce to rank 0, then broadcast.
+    pub fn allreduce_vec(&self, tag: u32, mine: Vec<S>, op: ReduceOp) -> Vec<S> {
+        let reduced = self.reduce_vec(0, tag, mine, op);
+        self.bcast(0, tag, reduced.map(Payload::Data)).into_data()
+    }
+
+    /// Allreduce of a single scalar.
+    pub fn allreduce_scalar(&self, tag: u32, mine: S, op: ReduceOp) -> S {
+        self.allreduce_vec(tag, vec![mine], op)[0]
+    }
+
+    /// Allreduce of an (|value|, index) pair under max-abs — the pivot search
+    /// of distributed partial pivoting (MPI_MAXLOC).  Ties break toward the
+    /// smaller index so every rank picks the identical pivot.
+    pub fn allreduce_maxabsloc(&self, tag: u32, value: S, index: i64) -> (S, i64) {
+        // Pack as two lanes; combine manually via gather-to-0 + bcast on a
+        // binomial tree (reuse reduce machinery with a custom fold).
+        let p = self.size();
+        let me = self.rank();
+        let mut best = (value, index);
+        if p > 1 {
+            let rel = me; // root 0
+            let mut mask = 1usize;
+            let mut sent = false;
+            while mask < p && !sent {
+                if rel & mask == 0 {
+                    let peer = rel | mask;
+                    if peer < p {
+                        let data =
+                            self.comm().recv(self.world_rank(peer), Tag::Reduce(tag)).into_data();
+                        let (v, i) = (data[0], data[1].to_f64().unwrap() as i64);
+                        if v.abs() > best.0.abs()
+                            || (v.abs() == best.0.abs() && i < best.1)
+                        {
+                            best = (v, i);
+                        }
+                    }
+                } else {
+                    let dst = rel & !mask;
+                    let enc = vec![best.0, S::from_f64(best.1 as f64).unwrap()];
+                    self.comm().send(self.world_rank(dst), Tag::Reduce(tag), Payload::Data(enc));
+                    sent = true;
+                }
+                mask <<= 1;
+            }
+            let enc = if me == 0 {
+                Some(Payload::Data(vec![best.0, S::from_f64(best.1 as f64).unwrap()]))
+            } else {
+                None
+            };
+            let out = self.bcast(0, tag, enc).into_data();
+            best = (out[0], out[1].to_f64().unwrap() as i64);
+        }
+        best
+    }
+
+    /// Ring allgather: every rank contributes `mine`; everyone returns all
+    /// contributions indexed by group rank.  Block lengths may differ.
+    pub fn allgather(&self, tag: u32, mine: Vec<S>) -> Vec<Vec<S>> {
+        let p = self.size();
+        let me = self.rank();
+        let mut blocks: Vec<Option<Vec<S>>> = (0..p).map(|_| None).collect();
+        blocks[me] = Some(mine);
+        let next = (me + 1) % p;
+        let prev = (me + p - 1) % p;
+        for r in 0..p.saturating_sub(1) {
+            // Send the block that originated at (me - r), receive the one
+            // that originated at (prev - r) == (me - r - 1).
+            let send_origin = (me + p - r % p) % p;
+            let recv_origin = (me + p - r % p + p - 1) % p;
+            let out = blocks[send_origin].clone().expect("ring allgather order");
+            self.comm().send(self.world_rank(next), Tag::AllGather(tag), Payload::Data(out));
+            let got = self.comm().recv(self.world_rank(prev), Tag::AllGather(tag)).into_data();
+            blocks[recv_origin] = Some(got);
+        }
+        blocks.into_iter().map(|b| b.expect("ring allgather complete")).collect()
+    }
+
+    /// Linear gather to group rank `root`: root returns all blocks indexed by
+    /// group rank, others return `None`.
+    pub fn gather(&self, root: usize, tag: u32, mine: Vec<S>) -> Option<Vec<Vec<S>>> {
+        let p = self.size();
+        let me = self.rank();
+        if me != root {
+            self.comm().send(self.world_rank(root), Tag::Gather(tag), Payload::Data(mine));
+            return None;
+        }
+        let mut out: Vec<Vec<S>> = (0..p).map(|_| Vec::new()).collect();
+        out[me] = mine;
+        for src in 0..p {
+            if src != me {
+                out[src] = self.comm().recv(self.world_rank(src), Tag::Gather(tag)).into_data();
+            }
+        }
+        Some(out)
+    }
+
+    /// Linear scatter from `root`: root supplies one block per group rank;
+    /// every rank returns its block.
+    pub fn scatter(&self, root: usize, tag: u32, blocks: Option<Vec<Vec<S>>>) -> Vec<S> {
+        let p = self.size();
+        let me = self.rank();
+        if me == root {
+            let mut blocks = blocks.expect("scatter root must supply blocks");
+            assert_eq!(blocks.len(), p, "scatter needs one block per rank");
+            let mut own = Vec::new();
+            for (dst, block) in blocks.drain(..).enumerate() {
+                if dst == me {
+                    own = block;
+                } else {
+                    self.comm().send(self.world_rank(dst), Tag::Scatter(tag), Payload::Data(block));
+                }
+            }
+            own
+        } else {
+            self.comm().recv(self.world_rank(root), Tag::Scatter(tag)).into_data()
+        }
+    }
+
+    /// Dissemination barrier (works for any group size).
+    pub fn barrier(&self, tag: u32) {
+        let p = self.size();
+        let me = self.rank();
+        let mut k = 0u32;
+        let mut dist = 1usize;
+        while dist < p {
+            let dst = (me + dist) % p;
+            let src = (me + p - dist) % p;
+            self.comm().send(self.world_rank(dst), Tag::Barrier(tag + k), Payload::Empty);
+            self.comm().recv(self.world_rank(src), Tag::Barrier(tag + k));
+            dist <<= 1;
+            k += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{NetworkModel, World};
+
+    fn run<R: Send>(p: usize, f: impl Fn(crate::comm::Comm<f64>) -> R + Send + Sync) -> Vec<R> {
+        World::run::<f64, _, _>(p, NetworkModel::ideal(), f)
+    }
+
+    #[test]
+    fn bcast_all_sizes_all_roots() {
+        for p in [1usize, 2, 3, 4, 5, 8] {
+            for root in 0..p {
+                let out = run(p, move |comm| {
+                    let g = comm.world();
+                    let data = if comm.rank() == root {
+                        Some(Payload::Data(vec![42.0, root as f64]))
+                    } else {
+                        None
+                    };
+                    g.bcast(root, 1, data).into_data()
+                });
+                for v in out {
+                    assert_eq!(v, vec![42.0, root as f64], "p={p} root={root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_sum_matches() {
+        for p in [1usize, 2, 3, 4, 7, 8] {
+            let out = run(p, move |comm| {
+                let g = comm.world();
+                let mine = vec![comm.rank() as f64, 1.0];
+                g.reduce_vec(0, 2, mine, ReduceOp::Sum)
+            });
+            let expect_sum: f64 = (0..p).map(|r| r as f64).sum();
+            assert_eq!(out[0].as_ref().unwrap(), &vec![expect_sum, p as f64]);
+            for r in 1..p {
+                assert!(out[r].is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_ops() {
+        for p in [2usize, 3, 4, 6] {
+            let out = run(p, move |comm| {
+                let g = comm.world();
+                let r = comm.rank() as f64;
+                (
+                    g.allreduce_scalar(3, r, ReduceOp::Sum),
+                    g.allreduce_scalar(4, r, ReduceOp::Max),
+                    g.allreduce_scalar(5, r, ReduceOp::Min),
+                )
+            });
+            let sum: f64 = (0..p).map(|r| r as f64).sum();
+            for (s, mx, mn) in out {
+                assert_eq!(s, sum);
+                assert_eq!(mx, (p - 1) as f64);
+                assert_eq!(mn, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn maxabsloc_picks_global_pivot() {
+        for p in [1usize, 2, 3, 5, 8] {
+            let out = run(p, move |comm| {
+                let g = comm.world();
+                // rank r contributes value (-1)^r * r with index 100 + r.
+                let r = comm.rank();
+                let v = if r % 2 == 0 { r as f64 } else { -(r as f64) };
+                g.allreduce_maxabsloc(6, v, 100 + r as i64)
+            });
+            let best = (p - 1) as f64;
+            for (v, i) in out {
+                assert_eq!(v.abs(), best, "p={p}");
+                assert_eq!(i, 100 + (p - 1) as i64);
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_ring() {
+        for p in [1usize, 2, 3, 4, 5] {
+            let out = run(p, move |comm| {
+                let g = comm.world();
+                // variable-length contribution: rank r sends r+1 copies of r.
+                let mine = vec![comm.rank() as f64; comm.rank() + 1];
+                g.allgather(7, mine)
+            });
+            for blocks in out {
+                assert_eq!(blocks.len(), p);
+                for (r, b) in blocks.iter().enumerate() {
+                    assert_eq!(b, &vec![r as f64; r + 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        for p in [1usize, 2, 4, 5] {
+            for root in 0..p {
+                let out = run(p, move |comm| {
+                    let g = comm.world();
+                    let mine = vec![comm.rank() as f64 * 10.0];
+                    let gathered = g.gather(root, 8, mine);
+                    // root redistributes doubled blocks
+                    let blocks = gathered.map(|bs| {
+                        bs.into_iter()
+                            .map(|b| b.iter().map(|x| x * 2.0).collect())
+                            .collect::<Vec<_>>()
+                    });
+                    g.scatter(root, 9, blocks)
+                });
+                for (r, b) in out.iter().enumerate() {
+                    assert_eq!(b, &vec![r as f64 * 20.0], "p={p} root={root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_synchronises_clocks() {
+        let net = NetworkModel::gigabit_ethernet();
+        let out = World::run::<f64, _, _>(4, net, |comm| {
+            // Rank 2 is slow.
+            if comm.rank() == 2 {
+                comm.clock().advance_compute(1.0);
+            }
+            comm.world().barrier(20);
+            comm.clock().now()
+        });
+        for t in &out {
+            assert!(*t >= 1.0, "barrier must not complete before slowest rank: {out:?}");
+        }
+    }
+
+    #[test]
+    fn bcast_cost_scales_log_p() {
+        // Under the alpha-beta model, a small-message bcast over p ranks
+        // costs ~ceil(log2 p) * alpha on the critical path.
+        let net = NetworkModel::gigabit_ethernet();
+        let mut costs = Vec::new();
+        for p in [2usize, 4, 8, 16] {
+            let out = World::run::<f64, _, _>(p, net, |comm| {
+                let g = comm.world();
+                let data =
+                    if comm.rank() == 0 { Some(Payload::Scalar(1.0)) } else { None };
+                g.bcast(0, 1, data);
+                comm.clock().now()
+            });
+            costs.push(out.iter().cloned().fold(0.0, f64::max));
+        }
+        // log2: 1, 2, 3, 4 rounds.
+        for (i, c) in costs.iter().enumerate() {
+            let rounds = (i + 1) as f64;
+            assert!(
+                (*c - rounds * net.alpha).abs() < net.alpha * 0.51,
+                "p=2^{} cost {c} vs {} rounds",
+                i + 1,
+                rounds,
+            );
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Typed messages exchanged between ranks.
+
+use crate::Scalar;
+
+/// Message tags: every distinct communication context gets its own tag so a
+/// mismatched send/recv pair fails loudly instead of silently crossing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Tag {
+    /// Point-to-point data transfer (dist/redistribute, row swaps...).
+    P2p(u32),
+    /// Broadcast tree edges.
+    Bcast(u32),
+    /// Reduce tree edges.
+    Reduce(u32),
+    /// All-gather rounds.
+    AllGather(u32),
+    /// Scatter tree edges.
+    Scatter(u32),
+    /// Gather tree edges.
+    Gather(u32),
+    /// Barrier rounds.
+    Barrier(u32),
+    /// Pivot-row exchange during LU.
+    PivotSwap(u32),
+}
+
+/// Message payloads.  `Vec<S>` covers matrix/vector tiles; the integer
+/// variants carry pivot indices and control data.
+#[derive(Clone, Debug)]
+pub enum Payload<S: Scalar> {
+    /// Dense scalar data (tiles, vector blocks, partial sums).
+    Data(Vec<S>),
+    /// A single scalar (dot products, norms, convergence flags).
+    Scalar(S),
+    /// Integer data (pivot vectors, dimensions).
+    Ints(Vec<i64>),
+    /// Empty (barrier tokens).
+    Empty,
+}
+
+impl<S: Scalar> Payload<S> {
+    /// Payload size in bytes as it would cross the wire (element bytes only;
+    /// the alpha term of the network model covers per-message framing).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::Data(v) => v.len() * S::BYTES,
+            Payload::Scalar(_) => S::BYTES,
+            Payload::Ints(v) => v.len() * 8,
+            Payload::Empty => 0,
+        }
+    }
+
+    /// Unwrap `Data`, panicking with context otherwise (a tag mismatch is a
+    /// library bug, not a user error).
+    pub fn into_data(self) -> Vec<S> {
+        match self {
+            Payload::Data(v) => v,
+            other => panic!("expected Payload::Data, got {other:?}"),
+        }
+    }
+
+    /// Unwrap `Scalar`.
+    pub fn into_scalar(self) -> S {
+        match self {
+            Payload::Scalar(s) => s,
+            other => panic!("expected Payload::Scalar, got {other:?}"),
+        }
+    }
+
+    /// Unwrap `Ints`.
+    pub fn into_ints(self) -> Vec<i64> {
+        match self {
+            Payload::Ints(v) => v,
+            other => panic!("expected Payload::Ints, got {other:?}"),
+        }
+    }
+}
+
+/// A message in flight: payload + tag + virtual arrival time.
+#[derive(Debug)]
+pub struct Message<S: Scalar> {
+    /// Sending rank (world numbering).
+    pub src: usize,
+    /// Communication context tag.
+    pub tag: Tag,
+    /// The data.
+    pub payload: Payload<S>,
+    /// Virtual time at which this message arrives at the receiver
+    /// (sender clock at send + network model transfer cost).
+    pub arrival: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_bytes() {
+        let p: Payload<f32> = Payload::Data(vec![0.0; 10]);
+        assert_eq!(p.wire_bytes(), 40);
+        let p: Payload<f64> = Payload::Data(vec![0.0; 10]);
+        assert_eq!(p.wire_bytes(), 80);
+        let p: Payload<f64> = Payload::Scalar(1.0);
+        assert_eq!(p.wire_bytes(), 8);
+        let p: Payload<f32> = Payload::Ints(vec![1, 2, 3]);
+        assert_eq!(p.wire_bytes(), 24);
+        let p: Payload<f32> = Payload::Empty;
+        assert_eq!(p.wire_bytes(), 0);
+    }
+
+    #[test]
+    fn unwrap_helpers() {
+        let p: Payload<f64> = Payload::Data(vec![1.0, 2.0]);
+        assert_eq!(p.into_data(), vec![1.0, 2.0]);
+        let p: Payload<f64> = Payload::Scalar(3.0);
+        assert_eq!(p.into_scalar(), 3.0);
+        let p: Payload<f64> = Payload::Ints(vec![7]);
+        assert_eq!(p.into_ints(), vec![7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "expected Payload::Data")]
+    fn unwrap_mismatch_panics() {
+        let p: Payload<f64> = Payload::Empty;
+        p.into_data();
+    }
+
+    #[test]
+    fn tags_distinct() {
+        assert_ne!(Tag::P2p(1), Tag::P2p(2));
+        assert_ne!(Tag::Bcast(1), Tag::Reduce(1));
+    }
+}

@@ -1,0 +1,30 @@
+//! The message-passing substrate: CUPLSS's MPI stand-in.
+//!
+//! The paper runs on a 16-workstation MPICH cluster over Gigabit Ethernet.
+//! This module reproduces that *programming model* in-process:
+//!
+//! * a [`World`] of `P` ranks, one OS thread per rank;
+//! * lossless, FIFO, typed point-to-point channels ([`transport`]);
+//! * MPI-style collectives with the same algorithmic structure MPICH uses
+//!   (binomial trees, recursive doubling — [`collectives`]);
+//! * a **virtual clock** per rank ([`clock`]): local compute advances it via
+//!   the engine cost models, and every message advances the receiver to
+//!   `max(recv_clock, send_clock + α + β·bytes)` under a configurable network
+//!   profile ([`model`]).  The parallel makespan is `max` over rank clocks —
+//!   this is how the paper's wall-clock speedup curves are regenerated
+//!   without 16 physical machines (DESIGN.md §3).
+//!
+//! Payloads really move between ranks, so every distributed algorithm is
+//! genuinely message-passing; the virtual clock is bookkeeping on the side.
+
+pub mod clock;
+pub mod collectives;
+pub mod message;
+pub mod model;
+pub mod transport;
+
+pub use clock::VClock;
+pub use message::{Payload, Tag};
+pub use model::NetworkModel;
+pub use collectives::ReduceOp;
+pub use transport::{Comm, CommStats, Group, World};

@@ -1,0 +1,97 @@
+//! Network cost model (the "Gigabit Ethernet" of the simulated cluster).
+//!
+//! A postal / alpha-beta model: a point-to-point message of `b` bytes from
+//! rank `s` to rank `d` arrives at
+//!
+//! ```text
+//!     t_arrive = t_send + alpha + b * beta        (s != d)
+//!     t_arrive = t_send + alpha_local             (s == d, loopback)
+//! ```
+//!
+//! MPICH's collectives decompose into point-to-point rounds, so modelling the
+//! p2p cost and letting the collectives emit real messages reproduces the
+//! `log P` scaling terms without a separate collective model.
+
+/// Alpha-beta network profile.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetworkModel {
+    /// Per-message latency, seconds (MPI stack + switch + NIC).
+    pub alpha: f64,
+    /// Per-byte cost, seconds (inverse effective bandwidth).
+    pub beta: f64,
+    /// Loopback (same-rank) per-message cost, seconds.
+    pub alpha_local: f64,
+}
+
+impl NetworkModel {
+    /// The paper's testbed: "standard Gigabit LAN", MPICH.
+    /// ~50 µs MPI p2p latency; 1 Gb/s ≈ 117 MiB/s effective ≈ 8.5 ns/B.
+    pub fn gigabit_ethernet() -> Self {
+        NetworkModel { alpha: 50e-6, beta: 8.5e-9, alpha_local: 0.5e-6 }
+    }
+
+    /// A much faster interconnect (for ablation E4: how much of the lost
+    /// speedup is network?).  ~2 µs latency, ~25 Gb/s.
+    pub fn fast_interconnect() -> Self {
+        NetworkModel { alpha: 2e-6, beta: 0.32e-9, alpha_local: 0.2e-6 }
+    }
+
+    /// Zero-cost network (upper bound / algorithmic-overhead-only runs).
+    pub fn ideal() -> Self {
+        NetworkModel { alpha: 0.0, beta: 0.0, alpha_local: 0.0 }
+    }
+
+    /// Transfer time for `bytes` between distinct ranks.
+    pub fn p2p_secs(&self, bytes: usize) -> f64 {
+        self.alpha + bytes as f64 * self.beta
+    }
+
+    /// Transfer time for a loopback message.
+    pub fn local_secs(&self, _bytes: usize) -> f64 {
+        self.alpha_local
+    }
+
+    /// Cost of a message from `src` to `dst`.
+    pub fn msg_secs(&self, src: usize, dst: usize, bytes: usize) -> f64 {
+        if src == dst { self.local_secs(bytes) } else { self.p2p_secs(bytes) }
+    }
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        Self::gigabit_ethernet()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gigabit_magnitudes() {
+        let m = NetworkModel::gigabit_ethernet();
+        // 1 MiB at ~117 MiB/s ≈ 8.9 ms; plus 50 µs latency.
+        let t = m.p2p_secs(1 << 20);
+        assert!(t > 8e-3 && t < 10e-3, "t={t}");
+        // Tiny message dominated by latency.
+        let t0 = m.p2p_secs(8);
+        assert!((t0 - 50e-6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn loopback_cheaper() {
+        let m = NetworkModel::gigabit_ethernet();
+        assert!(m.msg_secs(3, 3, 1 << 20) < m.msg_secs(3, 4, 1 << 20));
+    }
+
+    #[test]
+    fn ordering_of_profiles() {
+        let slow = NetworkModel::gigabit_ethernet();
+        let fast = NetworkModel::fast_interconnect();
+        let ideal = NetworkModel::ideal();
+        let b = 1 << 16;
+        assert!(slow.p2p_secs(b) > fast.p2p_secs(b));
+        assert!(fast.p2p_secs(b) > ideal.p2p_secs(b));
+        assert_eq!(ideal.p2p_secs(b), 0.0);
+    }
+}

@@ -1,0 +1,364 @@
+//! In-process transport: the `World` of ranks and each rank's `Comm` endpoint.
+//!
+//! A [`World`] owns a full mesh of lossless FIFO channels (one per ordered
+//! rank pair, like MPI's reliable transport).  [`World::run`] spawns one OS
+//! thread per rank and hands each a [`Comm`] endpoint — the analogue of
+//! `MPI_COMM_WORLD` after `MPI_Init`.
+//!
+//! [`Comm::group`] carves out sub-communicators (the 2-D mesh's row/col
+//! communicators) by rank translation, without extra channels — exactly how
+//! `MPI_Comm_split` behaves from the user's point of view.
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::sync::mpsc;
+
+use super::clock::VClock;
+use super::message::{Message, Payload, Tag};
+use super::model::NetworkModel;
+use crate::Scalar;
+
+/// Per-endpoint traffic statistics (virtual *and* wall time are tracked; the
+/// wall numbers feed the calibration experiment E8).
+#[derive(Debug, Default)]
+pub struct CommStats {
+    msgs_sent: Cell<u64>,
+    bytes_sent: Cell<u64>,
+    wall_wait: Cell<f64>,
+}
+
+impl CommStats {
+    /// Messages sent from this endpoint.
+    pub fn msgs_sent(&self) -> u64 {
+        self.msgs_sent.get()
+    }
+
+    /// Payload bytes sent from this endpoint.
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_sent.get()
+    }
+
+    /// Wall-clock seconds spent blocked in `recv`.
+    pub fn wall_wait_secs(&self) -> f64 {
+        self.wall_wait.get()
+    }
+}
+
+struct PendingRx<S: Scalar> {
+    rx: mpsc::Receiver<Message<S>>,
+    /// Messages received but not yet claimed (tag mismatch buffering).
+    pending: VecDeque<Message<S>>,
+}
+
+/// One rank's endpoint: owned by that rank's thread, never shared.
+pub struct Comm<S: Scalar> {
+    rank: usize,
+    size: usize,
+    /// senders[dst]: channel from this rank to `dst`.
+    senders: Vec<mpsc::Sender<Message<S>>>,
+    /// receivers[src]: channel from `src` to this rank.
+    receivers: Vec<RefCell<PendingRx<S>>>,
+    clock: VClock,
+    net: NetworkModel,
+    stats: CommStats,
+}
+
+impl<S: Scalar> Comm<S> {
+    /// This endpoint's world rank.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// World size.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// The rank's virtual clock.
+    pub fn clock(&self) -> &VClock {
+        &self.clock
+    }
+
+    /// The network model in force.
+    pub fn net(&self) -> &NetworkModel {
+        self.net_ref()
+    }
+
+    fn net_ref(&self) -> &NetworkModel {
+        &self.net
+    }
+
+    /// Traffic statistics.
+    pub fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+
+    /// Send `payload` to world rank `dst` under `tag`.
+    ///
+    /// LogGP semantics: the sender's clock advances by the NIC occupancy
+    /// `beta * bytes` (back-to-back sends from one rank serialise at line
+    /// rate, as on a real Gigabit NIC), then the message arrives at the
+    /// receiver after the additional wire latency `alpha`.
+    pub fn send(&self, dst: usize, tag: Tag, payload: Payload<S>) {
+        assert!(dst < self.size, "send to rank {dst} of {}", self.size);
+        let bytes = payload.wire_bytes();
+        let arrival = if dst == self.rank {
+            self.clock.now() + self.net.local_secs(bytes)
+        } else {
+            self.clock.advance_send(bytes as f64 * self.net.beta);
+            self.clock.now() + self.net.alpha
+        };
+        self.stats.msgs_sent.set(self.stats.msgs_sent.get() + 1);
+        self.stats.bytes_sent.set(self.stats.bytes_sent.get() + bytes as u64);
+        let msg = Message { src: self.rank, tag, payload, arrival };
+        // A send can only fail if the receiving rank already exited — that is
+        // a protocol bug (mismatched collective participation), so panic.
+        self.senders[dst]
+            .send(msg)
+            .unwrap_or_else(|_| panic!("rank {} send to dead rank {dst}", self.rank));
+    }
+
+    /// Blocking receive of the next message from `src` with `tag`.
+    /// Messages from `src` with other tags are buffered, preserving FIFO per
+    /// tag — mirroring MPI's (source, tag) matching.
+    pub fn recv(&self, src: usize, tag: Tag) -> Payload<S> {
+        assert!(src < self.size, "recv from rank {src} of {}", self.size);
+        let mut rx = self.receivers[src].borrow_mut();
+        // Buffered first.
+        if let Some(pos) = rx.pending.iter().position(|m| m.tag == tag) {
+            let msg = rx.pending.remove(pos).unwrap();
+            self.clock.observe_arrival(msg.arrival);
+            return msg.payload;
+        }
+        let sw = std::time::Instant::now();
+        loop {
+            let msg = rx
+                .rx
+                .recv()
+                .unwrap_or_else(|_| panic!("rank {} recv from dead rank {src}", self.rank));
+            if msg.tag == tag {
+                self.stats
+                    .wall_wait
+                    .set(self.stats.wall_wait.get() + sw.elapsed().as_secs_f64());
+                self.clock.observe_arrival(msg.arrival);
+                return msg.payload;
+            }
+            rx.pending.push_back(msg);
+        }
+    }
+
+    /// A sub-communicator over `ranks` (world numbering).  This rank must be
+    /// a member.  Collectives and rank-translated send/recv live on the
+    /// returned [`Group`].
+    pub fn group<'a>(&'a self, ranks: &[usize]) -> Group<'a, S> {
+        let me = ranks
+            .iter()
+            .position(|&r| r == self.rank)
+            .unwrap_or_else(|| panic!("rank {} not in group {ranks:?}", self.rank));
+        Group { comm: self, ranks: ranks.to_vec(), me }
+    }
+
+    /// The full world as a [`Group`].
+    pub fn world(&self) -> Group<'_, S> {
+        Group { comm: self, ranks: (0..self.size).collect(), me: self.rank }
+    }
+}
+
+/// A sub-communicator view: group-rank numbering over a subset of the world.
+pub struct Group<'a, S: Scalar> {
+    pub(crate) comm: &'a Comm<S>,
+    pub(crate) ranks: Vec<usize>,
+    pub(crate) me: usize,
+}
+
+impl<'a, S: Scalar> Group<'a, S> {
+    /// This rank's position within the group.
+    pub fn rank(&self) -> usize {
+        self.me
+    }
+
+    /// Group size.
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Translate group rank to world rank.
+    pub fn world_rank(&self, group_rank: usize) -> usize {
+        self.ranks[group_rank]
+    }
+
+    /// The underlying endpoint.
+    pub fn comm(&self) -> &'a Comm<S> {
+        self.comm
+    }
+
+    /// Send to a group rank.
+    pub fn send(&self, dst: usize, tag: Tag, payload: Payload<S>) {
+        self.comm.send(self.ranks[dst], tag, payload);
+    }
+
+    /// Receive from a group rank.
+    pub fn recv(&self, src: usize, tag: Tag) -> Payload<S> {
+        self.comm.recv(self.ranks[src], tag)
+    }
+}
+
+/// The simulated cluster: builds the channel mesh and runs one closure per
+/// rank on its own OS thread.
+pub struct World;
+
+impl World {
+    /// Run `f(comm)` on `p` ranks; returns each rank's result, indexed by
+    /// rank.  Panics in any rank propagate (fail-fast, like an MPI abort).
+    pub fn run<S, R, F>(p: usize, net: NetworkModel, f: F) -> Vec<R>
+    where
+        S: Scalar,
+        R: Send,
+        F: Fn(Comm<S>) -> R + Send + Sync,
+    {
+        assert!(p > 0, "world size must be positive");
+        // channels[src][dst]
+        let mut senders: Vec<Vec<mpsc::Sender<Message<S>>>> = Vec::with_capacity(p);
+        let mut receivers: Vec<Vec<Option<mpsc::Receiver<Message<S>>>>> =
+            (0..p).map(|_| (0..p).map(|_| None).collect()).collect();
+        for src in 0..p {
+            let mut row = Vec::with_capacity(p);
+            for dst in 0..p {
+                let (tx, rx) = mpsc::channel();
+                row.push(tx);
+                receivers[dst][src] = Some(rx);
+            }
+            senders.push(row);
+        }
+        let mut comms: Vec<Comm<S>> = senders
+            .into_iter()
+            .zip(receivers)
+            .enumerate()
+            .map(|(rank, (senders, rxs))| Comm {
+                rank,
+                size: p,
+                senders,
+                receivers: rxs
+                    .into_iter()
+                    .map(|rx| {
+                        RefCell::new(PendingRx { rx: rx.unwrap(), pending: VecDeque::new() })
+                    })
+                    .collect(),
+                clock: VClock::new(),
+                net,
+                stats: CommStats::default(),
+            })
+            .collect();
+
+        std::thread::scope(|scope| {
+            let f = &f;
+            let handles: Vec<_> = comms
+                .drain(..)
+                .map(|comm| scope.spawn(move || f(comm)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("rank thread panicked"))
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2p_roundtrip() {
+        let results = World::run::<f64, _, _>(2, NetworkModel::ideal(), |comm| {
+            if comm.rank() == 0 {
+                comm.send(1, Tag::P2p(0), Payload::Data(vec![1.0, 2.0, 3.0]));
+                comm.recv(1, Tag::P2p(1)).into_scalar()
+            } else {
+                let v = comm.recv(0, Tag::P2p(0)).into_data();
+                let sum: f64 = v.iter().sum();
+                comm.send(0, Tag::P2p(1), Payload::Scalar(sum));
+                sum
+            }
+        });
+        assert_eq!(results, vec![6.0, 6.0]);
+    }
+
+    #[test]
+    fn tag_mismatch_buffers() {
+        // Rank 0 sends tag B then tag A; rank 1 receives A first, then B.
+        let results = World::run::<f64, _, _>(2, NetworkModel::ideal(), |comm| {
+            if comm.rank() == 0 {
+                comm.send(1, Tag::P2p(7), Payload::Scalar(7.0));
+                comm.send(1, Tag::P2p(8), Payload::Scalar(8.0));
+                0.0
+            } else {
+                let a = comm.recv(0, Tag::P2p(8)).into_scalar();
+                let b = comm.recv(0, Tag::P2p(7)).into_scalar();
+                a * 10.0 + b
+            }
+        });
+        assert_eq!(results[1], 87.0);
+    }
+
+    #[test]
+    fn virtual_clock_advances_on_recv() {
+        let net = NetworkModel::gigabit_ethernet();
+        let results = World::run::<f32, _, _>(2, net, |comm| {
+            if comm.rank() == 0 {
+                comm.send(1, Tag::P2p(0), Payload::Data(vec![0.0f32; 1 << 18])); // 1 MiB
+                comm.clock().now()
+            } else {
+                comm.recv(0, Tag::P2p(0));
+                comm.clock().now()
+            }
+        });
+        // Sender pays the NIC occupancy (beta*bytes)...
+        let occupy = (1u64 << 20) as f64 * net.beta;
+        assert!((results[0] - occupy).abs() < 1e-12, "{} vs {occupy}", results[0]);
+        // ...receiver sees occupancy + wire latency = the full alpha-beta cost.
+        let expect = net.p2p_secs(1 << 20);
+        assert!((results[1] - expect).abs() < 1e-9, "{} vs {expect}", results[1]);
+    }
+
+    #[test]
+    fn group_rank_translation() {
+        let results = World::run::<f64, _, _>(4, NetworkModel::ideal(), |comm| {
+            // Group of even ranks {0, 2}: group rank 1 is world rank 2.
+            if comm.rank() % 2 == 0 {
+                let g = comm.group(&[0, 2]);
+                if g.rank() == 0 {
+                    g.send(1, Tag::P2p(0), Payload::Scalar(5.0));
+                    0.0
+                } else {
+                    g.recv(0, Tag::P2p(0)).into_scalar()
+                }
+            } else {
+                -1.0
+            }
+        });
+        assert_eq!(results, vec![0.0, -1.0, 5.0, -1.0]);
+    }
+
+    #[test]
+    fn stats_count_traffic() {
+        let results = World::run::<f64, _, _>(2, NetworkModel::ideal(), |comm| {
+            if comm.rank() == 0 {
+                comm.send(1, Tag::P2p(0), Payload::Data(vec![0.0; 100]));
+                (comm.stats().msgs_sent(), comm.stats().bytes_sent())
+            } else {
+                comm.recv(0, Tag::P2p(0));
+                (0, 0)
+            }
+        });
+        assert_eq!(results[0], (1, 800));
+    }
+
+    #[test]
+    #[should_panic]
+    fn group_requires_membership() {
+        World::run::<f64, _, _>(2, NetworkModel::ideal(), |comm| {
+            comm.group(&[1]); // rank 0 is not a member -> panic on rank 0
+        });
+    }
+}

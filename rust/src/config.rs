@@ -1,0 +1,188 @@
+//! Config-file support: a dependency-free `key = value` format with
+//! `[section]` headers (a TOML subset — the offline crate set has no serde).
+//!
+//! ```text
+//! # cluster.conf
+//! [cluster]
+//! ranks = 16
+//! tile = 256
+//! engine = cuda          # cuda | atlas
+//!
+//! [network]
+//! alpha_us = 50
+//! beta_ns_per_byte = 8.5
+//!
+//! [solver]
+//! tol = 1e-8
+//! max_iter = 500
+//! restart = 30
+//! ```
+
+use std::collections::HashMap;
+
+use crate::accel::EngineKind;
+use crate::cluster::ClusterConfig;
+use crate::comm::NetworkModel;
+use crate::solvers::IterConfig;
+use crate::{Error, Result};
+
+/// Parsed config: `section.key -> value` (top-level keys use section "").
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: HashMap<String, String>,
+}
+
+impl Config {
+    /// Parse config text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::config(format!("line {}: unclosed section", lineno + 1)))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::config(format!("line {}: expected key = value, got {line:?}", lineno + 1))
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, v.trim().to_string());
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &str) -> Result<Config> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed lookup with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("bad value for {key}: {v:?}"))),
+        }
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Is the config empty?
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Assemble a [`ClusterConfig`] from `[cluster]`, `[network]`, `[solver]`.
+    pub fn cluster_config(&self) -> Result<ClusterConfig> {
+        let mut net = NetworkModel::gigabit_ethernet();
+        net.alpha = self.get_or("network.alpha_us", net.alpha * 1e6)? * 1e-6;
+        net.beta = self.get_or("network.beta_ns_per_byte", net.beta * 1e9)? * 1e-9;
+        let engine = match self.get("cluster.engine") {
+            Some(s) => EngineKind::parse(s)?,
+            None => EngineKind::CpuSerial,
+        };
+        Ok(ClusterConfig {
+            ranks: self.get_or("cluster.ranks", 4)?,
+            tile: self.get_or("cluster.tile", crate::DEFAULT_TILE)?,
+            engine,
+            net,
+            artifact_dir: self
+                .get("cluster.artifacts")
+                .unwrap_or(crate::runtime::DEFAULT_ARTIFACT_DIR)
+                .to_string(),
+            iter: IterConfig {
+                tol: self.get_or("solver.tol", 1e-8)?,
+                max_iter: self.get_or("solver.max_iter", 500)?,
+                restart: self.get_or("solver.restart", 30)?,
+            },
+        })
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    match line.find('#') {
+        Some(pos) => &line[..pos],
+        None => line,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "
+# comment
+top = 1
+[cluster]
+ranks = 16
+tile = 128
+engine = cuda
+[solver]
+tol = 1e-6
+";
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("top"), Some("1"));
+        assert_eq!(c.get("cluster.ranks"), Some("16"));
+        assert_eq!(c.get_or("cluster.tile", 0usize).unwrap(), 128);
+        assert_eq!(c.get_or("missing", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn builds_cluster_config() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let cc = c.cluster_config().unwrap();
+        assert_eq!(cc.ranks, 16);
+        assert_eq!(cc.tile, 128);
+        assert_eq!(cc.engine, crate::accel::EngineKind::Accelerated);
+        assert!((cc.iter.tol - 1e-6).abs() < 1e-18);
+        // defaults preserved
+        assert_eq!(cc.iter.max_iter, 500);
+    }
+
+    #[test]
+    fn network_overrides() {
+        let c = Config::parse("[network]\nalpha_us = 2\nbeta_ns_per_byte = 0.5\n").unwrap();
+        let cc = c.cluster_config().unwrap();
+        assert!((cc.net.alpha - 2e-6).abs() < 1e-12);
+        assert!((cc.net.beta - 0.5e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[open\n").is_err());
+        assert!(Config::parse("novalue\n").is_err());
+        let c = Config::parse("x = notanumber").unwrap();
+        assert!(c.get_or("x", 1usize).is_err());
+    }
+
+    #[test]
+    fn empty_is_default() {
+        let c = Config::parse("").unwrap();
+        assert!(c.is_empty());
+        let cc = c.cluster_config().unwrap();
+        assert_eq!(cc.ranks, 4);
+    }
+}

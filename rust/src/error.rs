@@ -1,0 +1,84 @@
+//! Library-wide error type.
+
+/// Errors surfaced by CUPLSS-RS.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Shape / distribution mismatch between operands.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// Invalid configuration (CLI, config file, mesh, tile size...).
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    /// A communication primitive was misused (unknown rank, tag clash...).
+    #[error("communication error: {0}")]
+    Comm(String),
+
+    /// The PJRT runtime failed (artifact missing, compile error...).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// An iterative solver failed to converge within its iteration budget.
+    #[error("solver did not converge: {method}: residual {residual:.3e} after {iterations} iterations (tol {tol:.3e})")]
+    NoConvergence {
+        method: &'static str,
+        residual: f64,
+        iterations: usize,
+        tol: f64,
+    },
+
+    /// A factorization broke down (zero pivot, non-SPD matrix...).
+    #[error("numerical breakdown in {method}: {detail}")]
+    Breakdown {
+        method: &'static str,
+        detail: String,
+    },
+
+    /// Underlying XLA error.
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+
+    /// I/O error (artifact files, config files).
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Helper: shape error from anything displayable.
+    pub fn shape(msg: impl std::fmt::Display) -> Self {
+        Error::Shape(msg.to_string())
+    }
+
+    /// Helper: config error.
+    pub fn config(msg: impl std::fmt::Display) -> Self {
+        Error::Config(msg.to_string())
+    }
+
+    /// Helper: comm error.
+    pub fn comm(msg: impl std::fmt::Display) -> Self {
+        Error::Comm(msg.to_string())
+    }
+
+    /// Helper: runtime error.
+    pub fn runtime(msg: impl std::fmt::Display) -> Self {
+        Error::Runtime(msg.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::shape("a 2x2 vs b 3x3");
+        assert!(e.to_string().contains("2x2"));
+        let e = Error::NoConvergence { method: "bicgstab", residual: 1.0, iterations: 7, tol: 1e-9 };
+        let s = e.to_string();
+        assert!(s.contains("bicgstab") && s.contains('7'));
+    }
+}

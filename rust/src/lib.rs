@@ -1,0 +1,89 @@
+//! # CUPLSS-RS
+//!
+//! A reproduction of *"Developing a High Performance Software Library with
+//! MPI and CUDA for Matrix Computations"* (Oancea & Andrei, 2015) as a
+//! three-layer rust + JAX/Pallas + PJRT stack.
+//!
+//! The paper's CUPLSS library distributes dense matrices over an MPI cluster
+//! (coarse-grained parallelism) and accelerates each node's local BLAS with
+//! CUDA/CUBLAS (fine-grained parallelism).  Here:
+//!
+//! * the **cluster** is an in-process simulated MPI world — one OS thread per
+//!   rank, lossless ordered channels, binomial-tree collectives, and a
+//!   virtual-time model of a Gigabit-Ethernet network ([`comm`]);
+//! * the **GPU** is an XLA/PJRT executable AOT-compiled from Pallas kernels
+//!   ([`runtime`], [`accel::XlaEngine`]), with a calibrated GTX-280 cost
+//!   model; the **ATLAS** serial-BLAS baseline is a pure-rust blocked BLAS
+//!   ([`linalg`], [`accel::CpuEngine`]);
+//! * the **solvers** are the paper's: blocked LU with partial pivoting and
+//!   Cholesky (direct), CG / BiCG / BiCGSTAB / GMRES(m) (non-stationary
+//!   iterative), over 2-D block-cyclic distributed matrices ([`dist`],
+//!   [`pblas`], [`solvers`]).
+//!
+//! Mirroring the paper's Figure 2, the crate is layered:
+//!
+//! | CUPLSS level | this crate |
+//! |---|---|
+//! | 4. user API | [`cluster`], [`solvers`] entry points |
+//! | 3. data distribution | [`dist`], [`mesh`], [`pblas`] |
+//! | 2. architecture independence | [`accel::Engine`] trait |
+//! | 1. CUDA/CUBLAS/MPI/C runtimes | [`runtime`] (PJRT), [`linalg`], [`comm`] |
+//!
+//! See `DESIGN.md` for the substitution table (what the paper ran on real
+//! hardware vs. what this repo simulates) and `EXPERIMENTS.md` for the
+//! regenerated Figures 3 and 4.
+
+pub mod accel;
+pub mod bench_harness;
+pub mod cli;
+pub mod cluster;
+pub mod comm;
+pub mod config;
+pub mod dist;
+pub mod error;
+pub mod linalg;
+pub mod mesh;
+pub mod pblas;
+pub mod runtime;
+pub mod solvers;
+pub mod util;
+pub mod workloads;
+
+pub use error::{Error, Result};
+
+/// Default library tile size (elements per tile edge).  Every distributed
+/// matrix is stored as `TILE x TILE` local tiles so that each accelerator
+/// call is one of a closed set of fixed-shape AOT executables.
+pub const DEFAULT_TILE: usize = 256;
+
+/// Scalar element trait: the library is generic over `f32` / `f64`
+/// (the paper evaluates both single and double precision).
+pub trait Scalar:
+    Copy
+    + Send
+    + Sync
+    + 'static
+    + std::fmt::Debug
+    + std::fmt::Display
+    + num_traits::Float
+    + num_traits::NumAssign
+    + num_traits::FromPrimitive
+    + num_traits::ToPrimitive
+    + xla::NativeType
+    + xla::ArrayElement
+{
+    /// Short dtype tag used in artifact names ("f32" / "f64").
+    const DTYPE: &'static str;
+    /// Bytes per element (for the network / PCIe cost models).
+    const BYTES: usize;
+}
+
+impl Scalar for f32 {
+    const DTYPE: &'static str = "f32";
+    const BYTES: usize = 4;
+}
+
+impl Scalar for f64 {
+    const DTYPE: &'static str = "f64";
+    const BYTES: usize = 8;
+}

@@ -1,0 +1,112 @@
+//! Level-2 BLAS: matrix-vector operations (row-major, packed).
+
+use crate::Scalar;
+
+/// `y = A x` with A `m x n` row-major.
+pub fn gemv<S: Scalar>(m: usize, n: usize, a: &[S], x: &[S], y: &mut [S]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(x.len(), n);
+    debug_assert_eq!(y.len(), m);
+    for i in 0..m {
+        y[i] = super::blas1::dot(&a[i * n..(i + 1) * n], x);
+    }
+}
+
+/// `y -= A x` (accumulating matvec used by distributed substitution).
+pub fn gemv_sub<S: Scalar>(m: usize, n: usize, a: &[S], x: &[S], y: &mut [S]) {
+    debug_assert_eq!(a.len(), m * n);
+    for i in 0..m {
+        y[i] -= super::blas1::dot(&a[i * n..(i + 1) * n], x);
+    }
+}
+
+/// `y = A^T x` with A `m x n` row-major (y has length n).
+pub fn gemv_t<S: Scalar>(m: usize, n: usize, a: &[S], x: &[S], y: &mut [S]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(x.len(), m);
+    debug_assert_eq!(y.len(), n);
+    for v in y.iter_mut() {
+        *v = S::zero();
+    }
+    // Row-major A: accumulate row i of A scaled by x[i] — unit-stride inner loop.
+    for i in 0..m {
+        let xi = x[i];
+        let row = &a[i * n..(i + 1) * n];
+        for (yj, &aij) in y.iter_mut().zip(row) {
+            *yj += xi * aij;
+        }
+    }
+}
+
+/// `y -= A^T x`.
+pub fn gemv_t_sub<S: Scalar>(m: usize, n: usize, a: &[S], x: &[S], y: &mut [S]) {
+    debug_assert_eq!(a.len(), m * n);
+    for i in 0..m {
+        let xi = x[i];
+        let row = &a[i * n..(i + 1) * n];
+        for (yj, &aij) in y.iter_mut().zip(row) {
+            *yj -= xi * aij;
+        }
+    }
+}
+
+/// Rank-1 update `A -= x y^T` (the inner step of unblocked LU).
+pub fn ger_sub<S: Scalar>(m: usize, n: usize, a: &mut [S], x: &[S], y: &[S]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(x.len(), m);
+    debug_assert_eq!(y.len(), n);
+    for i in 0..m {
+        let xi = x[i];
+        let row = &mut a[i * n..(i + 1) * n];
+        for (aij, &yj) in row.iter_mut().zip(y) {
+            *aij -= xi * yj;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // A = [[1,2,3],[4,5,6]] (2x3)
+    const A: [f64; 6] = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+
+    #[test]
+    fn gemv_basic() {
+        let x = [1.0, 0.0, -1.0];
+        let mut y = [0.0; 2];
+        gemv(2, 3, &A, &x, &mut y);
+        assert_eq!(y, [-2.0, -2.0]);
+    }
+
+    #[test]
+    fn gemv_sub_accumulates() {
+        let x = [1.0, 1.0, 1.0];
+        let mut y = [10.0, 20.0];
+        gemv_sub(2, 3, &A, &x, &mut y);
+        assert_eq!(y, [10.0 - 6.0, 20.0 - 15.0]);
+    }
+
+    #[test]
+    fn gemv_t_basic() {
+        let x = [1.0, 2.0];
+        let mut y = [0.0; 3];
+        gemv_t(2, 3, &A, &x, &mut y);
+        assert_eq!(y, [9.0, 12.0, 15.0]); // A^T x
+    }
+
+    #[test]
+    fn gemv_t_sub_accumulates() {
+        let x = [1.0, 1.0];
+        let mut y = [10.0, 10.0, 10.0];
+        gemv_t_sub(2, 3, &A, &x, &mut y);
+        assert_eq!(y, [5.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn ger_sub_rank1() {
+        let mut a = [0.0f64; 6];
+        ger_sub(2, 3, &mut a, &[1.0, 2.0], &[3.0, 4.0, 5.0]);
+        assert_eq!(a, [-3.0, -4.0, -5.0, -6.0, -8.0, -10.0]);
+    }
+}

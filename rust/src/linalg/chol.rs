@@ -1,0 +1,114 @@
+//! Local Cholesky factorisation (`potrf`), row-major, lower variant.
+
+use crate::{Error, Result, Scalar};
+
+/// In-place lower Cholesky of an `n x n` SPD matrix: A = L·L^T, L written to
+/// the lower triangle (the strict upper triangle is zeroed so the buffer can
+/// be used directly as L).
+pub fn potrf<S: Scalar>(n: usize, a: &mut [S]) -> Result<()> {
+    debug_assert_eq!(a.len(), n * n);
+    for j in 0..n {
+        // d = a[j,j] - sum_{k<j} L[j,k]^2
+        let mut d = a[j * n + j];
+        for k in 0..j {
+            let l = a[j * n + k];
+            d -= l * l;
+        }
+        if d <= S::zero() {
+            return Err(Error::Breakdown {
+                method: "potrf",
+                detail: format!("matrix not positive definite at column {j}"),
+            });
+        }
+        let ljj = d.sqrt();
+        a[j * n + j] = ljj;
+        let inv = S::one() / ljj;
+        for i in j + 1..n {
+            // L[i,j] = (a[i,j] - sum_{k<j} L[i,k] L[j,k]) / L[j,j]
+            let mut s = a[i * n + j];
+            let (jrow, irow) = {
+                let (head, tail) = a.split_at(i * n);
+                (&head[j * n..j * n + j], &tail[..j])
+            };
+            for (&ljk, &lik) in jrow.iter().zip(irow) {
+                s -= ljk * lik;
+            }
+            a[i * n + j] = s * inv;
+        }
+    }
+    // Zero the strict upper triangle.
+    for i in 0..n {
+        for j in i + 1..n {
+            a[i * n + j] = S::zero();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn spd(rng: &mut Prng, n: usize) -> Vec<f64> {
+        let mut g = vec![0.0f64; n * n];
+        rng.fill_normal(&mut g);
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += g[i * n + k] * g[j * n + k];
+                }
+                a[i * n + j] = s;
+            }
+            a[i * n + i] += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn potrf_reconstructs() {
+        let mut rng = Prng::new(31);
+        for n in [1usize, 2, 7, 20] {
+            let a0 = spd(&mut rng, n);
+            let mut l = a0.clone();
+            potrf(n, &mut l).unwrap();
+            // check L L^T == A and upper zero
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for k in 0..=i.min(j) {
+                        s += l[i * n + k] * l[j * n + k];
+                    }
+                    assert!((s - a0[i * n + j]).abs() < 1e-8, "n={n} ({i},{j})");
+                    if j > i {
+                        assert_eq!(l[i * n + j], 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn potrf_rejects_indefinite() {
+        let mut a = vec![1.0f64, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(matches!(potrf(2, &mut a), Err(Error::Breakdown { .. })));
+    }
+
+    #[test]
+    fn potrf_identity() {
+        let n = 5;
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        potrf(n, &mut a).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert_eq!(a[i * n + j], want);
+            }
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Givens rotations — the GMRES Hessenberg least-squares machinery.
+//!
+//! GMRES(m) reduces the (k+1) x k Hessenberg matrix to triangular form with
+//! one rotation per column, applied incrementally as columns arrive.  The
+//! rotations and the small triangular system are replicated on every rank
+//! (they are O(m²) data), so this is plain serial code.
+
+use crate::Scalar;
+
+/// A single Givens rotation (c, s) chosen so that
+/// `[c s; -s c]^T [a; b] = [r; 0]`.
+#[derive(Clone, Copy, Debug)]
+pub struct Givens<S> {
+    /// cosine
+    pub c: S,
+    /// sine
+    pub s: S,
+}
+
+impl<S: Scalar> Givens<S> {
+    /// Construct the rotation annihilating `b` against `a`; returns
+    /// (rotation, r).
+    pub fn make(a: S, b: S) -> (Self, S) {
+        if b == S::zero() {
+            (Givens { c: S::one(), s: S::zero() }, a)
+        } else {
+            // Numerically-stable form (avoids overflow in a*a + b*b).
+            let (aa, ab) = (a.abs(), b.abs());
+            let scale = aa.max(ab);
+            let an = a / scale;
+            let bn = b / scale;
+            let r = scale * (an * an + bn * bn).sqrt();
+            (Givens { c: a / r, s: b / r }, r)
+        }
+    }
+
+    /// Apply to a pair: returns (c*a + s*b, -s*a + c*b).
+    pub fn apply(&self, a: S, b: S) -> (S, S) {
+        (self.c * a + self.s * b, self.c * b - self.s * a)
+    }
+}
+
+/// Incremental Hessenberg QR for GMRES: maintains the rotations, the
+/// triangularised columns and the rotated RHS `g`; exposes the current
+/// residual norm `|g[k]|` for the convergence test.
+pub struct HessenbergQr<S: Scalar> {
+    m: usize,
+    /// Upper-triangular R, column-major by insertion order (r[j] has j+1 entries).
+    r: Vec<Vec<S>>,
+    rot: Vec<Givens<S>>,
+    g: Vec<S>,
+}
+
+impl<S: Scalar> HessenbergQr<S> {
+    /// Start a new least-squares problem of max size `m` with initial
+    /// residual norm `beta` (g = beta * e1).
+    pub fn new(m: usize, beta: S) -> Self {
+        let mut g = vec![S::zero(); m + 1];
+        g[0] = beta;
+        HessenbergQr { m, r: Vec::new(), rot: Vec::new(), g }
+    }
+
+    /// Insert Hessenberg column `h` (length k+2 for column k: entries
+    /// h[0..=k+1]); returns the updated residual norm.
+    pub fn push_column(&mut self, mut h: Vec<S>) -> S {
+        let k = self.r.len();
+        assert!(k < self.m, "HessenbergQr over capacity");
+        assert_eq!(h.len(), k + 2, "column {k} must have {} entries", k + 2);
+        // Apply previous rotations.
+        for (j, rot) in self.rot.iter().enumerate() {
+            let (a, b) = rot.apply(h[j], h[j + 1]);
+            h[j] = a;
+            h[j + 1] = b;
+        }
+        // New rotation annihilates h[k+1].
+        let (rot, r) = Givens::make(h[k], h[k + 1]);
+        h[k] = r;
+        h.truncate(k + 1);
+        self.r.push(h);
+        // Rotate g.
+        let (ga, gb) = rot.apply(self.g[k], self.g[k + 1]);
+        self.g[k] = ga;
+        self.g[k + 1] = gb;
+        self.rot.push(rot);
+        self.g[k + 1].abs()
+    }
+
+    /// Number of columns inserted so far.
+    pub fn len(&self) -> usize {
+        self.r.len()
+    }
+
+    /// True if no columns have been inserted.
+    pub fn is_empty(&self) -> bool {
+        self.r.is_empty()
+    }
+
+    /// Current residual norm |g[k]|.
+    pub fn residual(&self) -> S {
+        self.g[self.r.len()].abs()
+    }
+
+    /// Solve R y = g for the current k columns (back substitution).
+    pub fn solve(&self) -> Vec<S> {
+        let k = self.r.len();
+        let mut y = vec![S::zero(); k];
+        for j in (0..k).rev() {
+            let mut s = self.g[j];
+            for i in j + 1..k {
+                s -= self.r[i][j] * y[i];
+            }
+            y[j] = s / self.r[j][j];
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn givens_annihilates() {
+        let (g, r) = Givens::make(3.0f64, 4.0);
+        let (x, y) = g.apply(3.0, 4.0);
+        assert!((x - 5.0).abs() < 1e-12 && y.abs() < 1e-12);
+        assert!((r - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn givens_zero_b() {
+        let (g, r) = Givens::make(2.0f64, 0.0);
+        assert_eq!((g.c, g.s), (1.0, 0.0));
+        assert_eq!(r, 2.0);
+    }
+
+    #[test]
+    fn hessenberg_qr_small_least_squares() {
+        // Solve min || H y - beta e1 || for a known 3x2 Hessenberg.
+        // H = [[2, 1], [1, 3], [0, 1]], beta = 1.
+        let mut qr = HessenbergQr::<f64>::new(2, 1.0);
+        qr.push_column(vec![2.0, 1.0]);
+        let res = qr.push_column(vec![1.0, 3.0, 1.0]);
+        let y = qr.solve();
+        // Check against normal equations: H^T H y = H^T (beta e1).
+        let h = [[2.0, 1.0], [1.0, 3.0], [0.0, 1.0]];
+        let hth = [
+            [h[0][0] * h[0][0] + h[1][0] * h[1][0], h[0][0] * h[0][1] + h[1][0] * h[1][1]],
+            [
+                h[0][0] * h[0][1] + h[1][0] * h[1][1],
+                h[0][1] * h[0][1] + h[1][1] * h[1][1] + h[2][1] * h[2][1],
+            ],
+        ];
+        let htb = [h[0][0], h[0][1]];
+        // solve 2x2
+        let det = hth[0][0] * hth[1][1] - hth[0][1] * hth[1][0];
+        let y0 = (htb[0] * hth[1][1] - hth[0][1] * htb[1]) / det;
+        let y1 = (hth[0][0] * htb[1] - htb[0] * hth[1][0]) / det;
+        assert!((y[0] - y0).abs() < 1e-12, "{y:?} vs ({y0},{y1})");
+        assert!((y[1] - y1).abs() < 1e-12);
+        // Residual from QR should match direct computation.
+        let r0 = 1.0 - (h[0][0] * y[0] + h[0][1] * y[1]);
+        let r1 = -(h[1][0] * y[0] + h[1][1] * y[1]);
+        let r2 = -(h[2][1] * y[1]);
+        let want = (r0 * r0 + r1 * r1 + r2 * r2).sqrt();
+        assert!((res - want).abs() < 1e-12, "res {res} want {want}");
+    }
+
+    #[test]
+    fn residual_decreases_monotonically() {
+        let mut qr = HessenbergQr::<f64>::new(3, 2.0);
+        let r0 = qr.push_column(vec![1.0, 0.5]);
+        let r1 = qr.push_column(vec![0.3, 1.0, 0.4]);
+        let r2 = qr.push_column(vec![0.1, 0.2, 1.0, 0.3]);
+        assert!(r0 <= 2.0 + 1e-15);
+        assert!(r1 <= r0 + 1e-15);
+        assert!(r2 <= r1 + 1e-15);
+        assert_eq!(qr.len(), 3);
+    }
+}

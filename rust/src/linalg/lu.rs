@@ -1,0 +1,218 @@
+//! Local LU factorisation with partial pivoting (`getrf`) and row
+//! interchange application (`laswp`) — LAPACK-style, row-major.
+//!
+//! `getrf` factorises a (possibly rectangular) `m x n` panel in place:
+//! `P A = L U` with L unit lower (its strict lower part stored in A) and U
+//! upper.  The distributed block LU gathers each panel to its owner, calls
+//! this, and scatters the factors back (DESIGN.md S9).
+
+use super::blas1;
+use crate::{Error, Result, Scalar};
+
+/// In-place partial-pivoted LU of an `m x n` row-major panel.
+/// Returns the pivot vector: `piv[j] = i` means rows j and i were swapped at
+/// step j (LAPACK ipiv convention, 0-based).
+pub fn getrf<S: Scalar>(m: usize, n: usize, a: &mut [S]) -> Result<Vec<usize>> {
+    getrf_lda(m, n, n, a)
+}
+
+/// [`getrf`] over a sub-panel embedded in a wider buffer (row stride `lda`):
+/// the distributed factorisation uses this to factor the *real* rows/columns
+/// of a tile-padded panel without disturbing the identity padding.
+pub fn getrf_lda<S: Scalar>(m: usize, n: usize, lda: usize, a: &mut [S]) -> Result<Vec<usize>> {
+    debug_assert!(lda >= n);
+    debug_assert!(a.len() >= m * lda || m == 0);
+    let steps = m.min(n);
+    let mut piv = Vec::with_capacity(steps);
+    for j in 0..steps {
+        // Pivot search in column j, rows j..m.
+        let mut p = j;
+        let mut best = a[j * lda + j].abs();
+        for i in j + 1..m {
+            let v = a[i * lda + j].abs();
+            if v > best {
+                best = v;
+                p = i;
+            }
+        }
+        if best == S::zero() {
+            return Err(Error::Breakdown {
+                method: "getrf",
+                detail: format!("exactly singular at column {j}"),
+            });
+        }
+        piv.push(p);
+        if p != j {
+            let (lo, hi) = a.split_at_mut(p * lda);
+            blas1::swap(&mut lo[j * lda..j * lda + n], &mut hi[..n]);
+        }
+        // Scale multipliers, rank-1 update of the trailing block.
+        let pivot = a[j * lda + j];
+        let inv = S::one() / pivot;
+        for i in j + 1..m {
+            a[i * lda + j] *= inv;
+        }
+        for i in j + 1..m {
+            let lij = a[i * lda + j];
+            if lij == S::zero() {
+                continue;
+            }
+            // a[i, j+1..n] -= lij * a[j, j+1..n]; split_at_mut for aliasing.
+            let (urow, irow) = {
+                let (head, tail) = a.split_at_mut(i * lda);
+                (&head[j * lda + j + 1..j * lda + n], &mut tail[j + 1..n])
+            };
+            for (x, &u) in irow.iter_mut().zip(urow) {
+                *x -= lij * u;
+            }
+        }
+    }
+    Ok(piv)
+}
+
+/// Apply the row interchanges recorded by [`getrf`] to an `m x n` matrix
+/// (forward order).  `piv[j] = i` swaps rows j and i.
+pub fn laswp<S: Scalar>(n: usize, a: &mut [S], piv: &[usize]) {
+    for (j, &p) in piv.iter().enumerate() {
+        if p != j {
+            let (lo_idx, hi_idx) = (j.min(p), j.max(p));
+            let (lo, hi) = a.split_at_mut(hi_idx * n);
+            blas1::swap(&mut lo[lo_idx * n..(lo_idx + 1) * n], &mut hi[..n]);
+        }
+    }
+}
+
+/// Convenience: solve `A x = b` densely via LU (serial path / oracles).
+pub fn lu_solve<S: Scalar>(n: usize, a: &mut [S], b: &mut [S]) -> Result<()> {
+    debug_assert_eq!(a.len(), n * n);
+    debug_assert_eq!(b.len(), n);
+    let piv = getrf(n, n, a)?;
+    // Apply pivots to b.
+    for (j, &p) in piv.iter().enumerate() {
+        if p != j {
+            b.swap(j, p);
+        }
+    }
+    super::trsm::trsv_lu(n, a, b);
+    super::trsm::trsv_u(n, a, b);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn reconstruct(m: usize, n: usize, lu: &[f64], piv: &[usize]) -> Vec<f64> {
+        // build L (m x s) and U (s x n), s = min(m, n); return P^T L U
+        let s = m.min(n);
+        let mut l = vec![0.0; m * s];
+        let mut u = vec![0.0; s * n];
+        for i in 0..m {
+            for j in 0..s.min(i) {
+                l[i * s + j] = lu[i * n + j];
+            }
+            if i < s {
+                l[i * s + i] = 1.0;
+            }
+        }
+        for i in 0..s {
+            for j in i..n {
+                u[i * n + j] = lu[i * n + j];
+            }
+        }
+        let mut pa = vec![0.0; m * n];
+        for i in 0..m {
+            for p in 0..s {
+                for j in 0..n {
+                    pa[i * n + j] += l[i * s + p] * u[p * n + j];
+                }
+            }
+        }
+        // undo pivots (apply inverse permutation: reverse order swaps)
+        for (j, &p) in piv.iter().enumerate().rev() {
+            if p != j {
+                for col in 0..n {
+                    pa.swap(j * n + col, p * n + col);
+                }
+            }
+        }
+        pa
+    }
+
+    #[test]
+    fn getrf_reconstructs_square() {
+        let mut rng = Prng::new(21);
+        for n in [1usize, 2, 5, 16, 33] {
+            let mut a0 = vec![0.0f64; n * n];
+            rng.fill_normal(&mut a0);
+            let mut a = a0.clone();
+            let piv = getrf(n, n, &mut a).unwrap();
+            let got = reconstruct(n, n, &a, &piv);
+            for i in 0..n * n {
+                assert!((got[i] - a0[i]).abs() < 1e-9, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn getrf_reconstructs_tall_panel() {
+        let mut rng = Prng::new(22);
+        let (m, n) = (40, 8);
+        let mut a0 = vec![0.0f64; m * n];
+        rng.fill_normal(&mut a0);
+        let mut a = a0.clone();
+        let piv = getrf(m, n, &mut a).unwrap();
+        assert_eq!(piv.len(), 8);
+        let got = reconstruct(m, n, &a, &piv);
+        for i in 0..m * n {
+            assert!((got[i] - a0[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn getrf_pivots_actually_pivot() {
+        // Matrix needing a swap: first pivot is 0.
+        let mut a = vec![0.0f64, 1.0, 1.0, 0.0];
+        let piv = getrf(2, 2, &mut a).unwrap();
+        assert_eq!(piv[0], 1);
+    }
+
+    #[test]
+    fn getrf_singular_errors() {
+        let mut a = vec![1.0f64, 2.0, 2.0, 4.0]; // rank 1
+        let err = getrf(2, 2, &mut a).unwrap_err();
+        assert!(matches!(err, Error::Breakdown { .. }));
+    }
+
+    #[test]
+    fn laswp_applies_in_forward_order() {
+        // 3 rows; piv = [2, 2]: step0 swaps r0<->r2, step1 swaps r1<->r2.
+        let mut a: Vec<f64> = vec![0.0, 1.0, 2.0]; // one column
+        laswp(1, &mut a, &[2, 2]);
+        assert_eq!(a, vec![2.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn lu_solve_random_system() {
+        let mut rng = Prng::new(23);
+        let n = 24;
+        let mut a = vec![0.0f64; n * n];
+        rng.fill_normal(&mut a);
+        for i in 0..n {
+            a[i * n + i] += n as f64; // well-conditioned
+        }
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
+        let mut b = vec![0.0; n];
+        for i in 0..n {
+            for j in 0..n {
+                b[i] += a[i * n + j] * x_true[j];
+            }
+        }
+        let mut a_f = a.clone();
+        lu_solve(n, &mut a_f, &mut b).unwrap();
+        for i in 0..n {
+            assert!((b[i] - x_true[i]).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! Local dense linear algebra in pure rust — the library's "serial ATLAS".
+//!
+//! The paper's ablation replaces CUBLAS-accelerated local computation with a
+//! tuned serial CPU BLAS (ATLAS).  This module plays that role: row-major
+//! dense kernels, register/cache-blocked where it matters (GEMM), used both
+//! by the [`crate::accel::CpuEngine`] and by the serial reference solvers.
+//!
+//! Everything is generic over [`crate::Scalar`] (`f32` / `f64`) and operates
+//! on caller-owned slices with explicit dimensions, row-major, tightly packed
+//! (`lda == ncols`) — matching the tile storage of [`crate::dist`].
+
+pub mod blas1;
+pub mod blas2;
+pub mod blas3;
+pub mod chol;
+pub mod givens;
+pub mod lu;
+pub mod trsm;
+
+pub use blas1::{axpy, copy, dot, iamax, nrm2, scal, swap};
+pub use blas2::{gemv, gemv_sub, gemv_t, gemv_t_sub, ger_sub};
+pub use blas3::{gemm, gemm_nt_sub, gemm_sub};
+pub use chol::potrf;
+pub use lu::{getrf, getrf_lda, laswp, lu_solve};
+pub use trsm::{trsm_llu, trsm_rlt, trsm_ru, trsv_l, trsv_lt, trsv_lu, trsv_u};

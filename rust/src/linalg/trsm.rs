@@ -1,0 +1,283 @@
+//! Triangular solves (tile-local), matching the AOT op set of
+//! `python/compile/model.py` so the CPU and XLA engines are interchangeable.
+//!
+//! All matrices are `n x n` row-major, packed; B/X are `n x m` row-major
+//! (or length-n vectors for the `trsv_*` forms).  Solves are in place.
+
+use crate::Scalar;
+
+/// Solve `L X = B` with L **unit** lower triangular; B (`n x m`) is
+/// overwritten with X.  (Block LU: computes the U12 block row.)
+pub fn trsm_llu<S: Scalar>(n: usize, m: usize, l: &[S], b: &mut [S]) {
+    debug_assert_eq!(l.len(), n * n);
+    debug_assert_eq!(b.len(), n * m);
+    for i in 0..n {
+        // b[i] -= sum_{j<i} L[i,j] * b[j]
+        let (head, tail) = b.split_at_mut(i * m);
+        let bi = &mut tail[..m];
+        for j in 0..i {
+            let lij = l[i * n + j];
+            if lij != S::zero() {
+                let bj = &head[j * m..(j + 1) * m];
+                for (x, &y) in bi.iter_mut().zip(bj) {
+                    *x -= lij * y;
+                }
+            }
+        }
+    }
+}
+
+/// Solve `X U = B` with U upper triangular; B (`m x n`) overwritten with X.
+/// (Block LU: computes the L21 block column.)
+pub fn trsm_ru<S: Scalar>(m: usize, n: usize, u: &[S], b: &mut [S]) {
+    debug_assert_eq!(u.len(), n * n);
+    debug_assert_eq!(b.len(), m * n);
+    // Row-oriented: each row of B solves x U = b independently.
+    for r in 0..m {
+        let row = &mut b[r * n..(r + 1) * n];
+        for j in 0..n {
+            let mut s = row[j];
+            for k in 0..j {
+                s -= row[k] * u[k * n + j];
+            }
+            row[j] = s / u[j * n + j];
+        }
+    }
+}
+
+/// Solve `X L^T = B` with L lower triangular; B (`m x n`) overwritten with X.
+/// (Block Cholesky: computes the L21 block column.)
+pub fn trsm_rlt<S: Scalar>(m: usize, n: usize, l: &[S], b: &mut [S]) {
+    debug_assert_eq!(l.len(), n * n);
+    debug_assert_eq!(b.len(), m * n);
+    // X L^T = B row-wise: x_j = (b_j - sum_{k<j} x_k L[j,k]) / L[j,j]
+    for r in 0..m {
+        let row = &mut b[r * n..(r + 1) * n];
+        for j in 0..n {
+            let mut s = row[j];
+            let lrow = &l[j * n..j * n + j];
+            for (k, &ljk) in lrow.iter().enumerate() {
+                s -= row[k] * ljk;
+            }
+            row[j] = s / l[j * n + j];
+        }
+    }
+}
+
+/// Solve `L y = b` with L **unit** lower triangular (vector form, in place).
+pub fn trsv_lu<S: Scalar>(n: usize, l: &[S], b: &mut [S]) {
+    debug_assert_eq!(l.len(), n * n);
+    debug_assert_eq!(b.len(), n);
+    for i in 0..n {
+        let mut s = b[i];
+        for j in 0..i {
+            s -= l[i * n + j] * b[j];
+        }
+        b[i] = s;
+    }
+}
+
+/// Solve `L y = b` with L general lower triangular (vector form, in place).
+pub fn trsv_l<S: Scalar>(n: usize, l: &[S], b: &mut [S]) {
+    debug_assert_eq!(l.len(), n * n);
+    for i in 0..n {
+        let mut s = b[i];
+        for j in 0..i {
+            s -= l[i * n + j] * b[j];
+        }
+        b[i] = s / l[i * n + i];
+    }
+}
+
+/// Solve `U x = y` with U upper triangular (vector form, in place).
+pub fn trsv_u<S: Scalar>(n: usize, u: &[S], b: &mut [S]) {
+    debug_assert_eq!(u.len(), n * n);
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for j in i + 1..n {
+            s -= u[i * n + j] * b[j];
+        }
+        b[i] = s / u[i * n + i];
+    }
+}
+
+/// Solve `L^T x = y` with L lower triangular (vector form, in place).
+pub fn trsv_lt<S: Scalar>(n: usize, l: &[S], b: &mut [S]) {
+    debug_assert_eq!(l.len(), n * n);
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for j in i + 1..n {
+            s -= l[j * n + i] * b[j]; // (L^T)[i,j] = L[j,i]
+        }
+        b[i] = s / l[i * n + i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn rand_lower(rng: &mut Prng, n: usize, unit: bool) -> Vec<f64> {
+        let mut l = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                l[i * n + j] = rng.normal() * 0.3;
+            }
+            l[i * n + i] = if unit { 1.0 } else { rng.normal().abs() + 1.0 };
+        }
+        l
+    }
+
+    fn rand_upper(rng: &mut Prng, n: usize) -> Vec<f64> {
+        let mut u = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in i..n {
+                u[i * n + j] = rng.normal() * 0.3;
+            }
+            u[i * n + i] = rng.normal().abs() + 1.0;
+        }
+        u
+    }
+
+    fn matmul(m: usize, n: usize, k: usize, a: &[f64], b: &[f64]) -> Vec<f64> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn trsm_llu_solves() {
+        let mut rng = Prng::new(10);
+        let (n, m) = (13, 7);
+        let l = rand_lower(&mut rng, n, true);
+        let mut b = vec![0.0f64; n * m];
+        rng.fill_normal(&mut b);
+        let b0 = b.clone();
+        trsm_llu(n, m, &l, &mut b);
+        let lb = matmul(n, m, n, &l, &b);
+        for i in 0..n * m {
+            assert!((lb[i] - b0[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn trsm_ru_solves() {
+        let mut rng = Prng::new(11);
+        let (m, n) = (9, 12);
+        let u = rand_upper(&mut rng, n);
+        let mut b = vec![0.0f64; m * n];
+        rng.fill_normal(&mut b);
+        let b0 = b.clone();
+        trsm_ru(m, n, &u, &mut b);
+        let xu = matmul(m, n, n, &b, &u);
+        for i in 0..m * n {
+            assert!((xu[i] - b0[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn trsm_rlt_solves() {
+        let mut rng = Prng::new(12);
+        let (m, n) = (8, 11);
+        let l = rand_lower(&mut rng, n, false);
+        let mut b = vec![0.0f64; m * n];
+        rng.fill_normal(&mut b);
+        let b0 = b.clone();
+        trsm_rlt(m, n, &l, &mut b);
+        // X L^T == B ?
+        let mut lt = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                lt[i * n + j] = l[j * n + i];
+            }
+        }
+        let xlt = matmul(m, n, n, &b, &lt);
+        for i in 0..m * n {
+            assert!((xlt[i] - b0[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn trsv_variants_solve() {
+        let mut rng = Prng::new(13);
+        let n = 17;
+        let l = rand_lower(&mut rng, n, false);
+        let lu = rand_lower(&mut rng, n, true);
+        let u = rand_upper(&mut rng, n);
+        let mut b = vec![0.0f64; n];
+        rng.fill_normal(&mut b);
+
+        // trsv_l
+        let mut x = b.clone();
+        trsv_l(n, &l, &mut x);
+        let mut r = vec![0.0; n];
+        for i in 0..n {
+            for j in 0..n {
+                r[i] += l[i * n + j] * x[j];
+            }
+        }
+        for i in 0..n {
+            assert!((r[i] - b[i]).abs() < 1e-9, "trsv_l");
+        }
+
+        // trsv_lu
+        let mut x = b.clone();
+        trsv_lu(n, &lu, &mut x);
+        let mut r = vec![0.0; n];
+        for i in 0..n {
+            for j in 0..n {
+                r[i] += lu[i * n + j] * x[j];
+            }
+        }
+        for i in 0..n {
+            assert!((r[i] - b[i]).abs() < 1e-9, "trsv_lu");
+        }
+
+        // trsv_u
+        let mut x = b.clone();
+        trsv_u(n, &u, &mut x);
+        let mut r = vec![0.0; n];
+        for i in 0..n {
+            for j in 0..n {
+                r[i] += u[i * n + j] * x[j];
+            }
+        }
+        for i in 0..n {
+            assert!((r[i] - b[i]).abs() < 1e-9, "trsv_u");
+        }
+
+        // trsv_lt
+        let mut x = b.clone();
+        trsv_lt(n, &l, &mut x);
+        let mut r = vec![0.0; n];
+        for i in 0..n {
+            for j in 0..n {
+                r[i] += l[j * n + i] * x[j];
+            }
+        }
+        for i in 0..n {
+            assert!((r[i] - b[i]).abs() < 1e-9, "trsv_lt");
+        }
+    }
+
+    #[test]
+    fn unit_diagonal_ignored_values() {
+        // trsm_llu must never read the diagonal: poison it.
+        let n = 5;
+        let mut rng = Prng::new(14);
+        let mut l = rand_lower(&mut rng, n, true);
+        for i in 0..n {
+            l[i * n + i] = f64::NAN;
+        }
+        let mut b = vec![1.0f64; n];
+        trsv_lu(n, &l, &mut b);
+        assert!(b.iter().all(|x| x.is_finite()), "diagonal must be implicit");
+    }
+}

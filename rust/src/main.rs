@@ -1,0 +1,198 @@
+//! `cuplss` — the CUPLSS-RS launcher.
+//!
+//! ```text
+//! cuplss solve  --workload diagdom --method lu --n 512 --ranks 4 \
+//!               --engine atlas|cuda --tile 128|256 --dtype f32|f64
+//! cuplss fig3   [--dp] [--n 60000] [--iters 100]      # model-mode Figure 3
+//! cuplss fig4   [--dp] [--n 60000] [--cholesky]       # model-mode Figure 4
+//! cuplss calibrate [--method lu]                      # live vs model (E8)
+//! cuplss info                                         # artifacts + profiles
+//! ```
+//!
+//! `--config FILE` loads `[cluster] / [network] / [solver]` sections
+//! (see `rust/src/config.rs`); explicit CLI options override the file.
+
+use cuplss::accel::{ComputeProfile, EngineKind};
+use cuplss::bench_harness::{self, calibrate, figures};
+use cuplss::cli::Args;
+use cuplss::cluster::{Cluster, ClusterConfig, Method};
+use cuplss::config::Config;
+use cuplss::runtime::Runtime;
+use cuplss::solvers::IterConfig;
+use cuplss::util::fmt;
+use cuplss::workloads::Workload;
+use cuplss::Result;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cluster_config(args: &Args) -> Result<ClusterConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => Config::load(path)?.cluster_config()?,
+        None => ClusterConfig::default(),
+    };
+    cfg.ranks = args.opt_or("ranks", cfg.ranks)?;
+    cfg.tile = args.opt_or("tile", cfg.tile)?;
+    if let Some(e) = args.opt("engine") {
+        cfg.engine = EngineKind::parse(e)?;
+    }
+    cfg.iter = IterConfig {
+        tol: args.opt_or("tol", cfg.iter.tol)?,
+        max_iter: args.opt_or("max-iter", cfg.iter.max_iter)?,
+        restart: args.opt_or("restart", cfg.iter.restart)?,
+    };
+    Ok(cfg)
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command() {
+        Some("solve") => cmd_solve(args),
+        Some("fig3") => cmd_fig3(args),
+        Some("fig4") => cmd_fig4(args),
+        Some("calibrate") => cmd_calibrate(args),
+        Some("info") => cmd_info(args),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown command {cmd:?}\n");
+            }
+            eprintln!(
+                "usage: cuplss <solve|fig3|fig4|calibrate|info> [options]\n\
+                 see rust/src/main.rs header for the option list"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let cfg = cluster_config(args)?;
+    let workload = Workload::parse(args.opt("workload").unwrap_or("diagdom"))?;
+    let method = Method::parse(args.opt("method").unwrap_or("lu"))?;
+    let n: usize = args.opt_or("n", 512)?;
+    let dtype = args.opt("dtype").unwrap_or("f64");
+    let cluster = Cluster::new(cfg)?;
+    let report = match dtype {
+        "f32" => cluster.solve::<f32>(workload, n, method)?,
+        "f64" => cluster.solve::<f64>(workload, n, method)?,
+        other => return Err(cuplss::Error::config(format!("dtype {other:?} (f32|f64)"))),
+    };
+    println!("{}", report.summary());
+    println!(
+        "  virtual makespan {}   wall {}   msgs {}   volume {}",
+        fmt::secs(report.makespan()),
+        fmt::secs(report.wall_max()),
+        report.total_msgs(),
+        fmt::bytes(report.total_bytes() as f64),
+    );
+    for m in &report.per_rank {
+        println!(
+            "  rank {:>2}: vtime {} (compute {}, wait {}, pcie {})",
+            m.rank,
+            fmt::secs(m.vtime),
+            fmt::secs(m.compute),
+            fmt::secs(m.comm_wait),
+            fmt::secs(m.transfer),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let n: usize = args.opt_or("n", bench_harness::PAPER_N)?;
+    let iters: usize = args.opt_or("iters", 100)?;
+    let tile: usize = args.opt_or("tile", cuplss::DEFAULT_TILE)?;
+    let series = if args.has_flag("dp") {
+        figures::fig3_series::<f64>(n, iters, tile)
+    } else {
+        figures::fig3_series::<f32>(n, iters, tile)
+    };
+    let label = if args.has_flag("dp") { "double" } else { "single" };
+    println!(
+        "{}",
+        figures::render_table(
+            &format!("Figure 3: iterative-solver speedup, n={n}, {label} precision"),
+            &series
+        )
+    );
+    Ok(())
+}
+
+fn cmd_fig4(args: &Args) -> Result<()> {
+    let n: usize = args.opt_or("n", bench_harness::PAPER_N)?;
+    let tile: usize = args.opt_or("tile", cuplss::DEFAULT_TILE)?;
+    let chol = args.has_flag("cholesky");
+    let series = if args.has_flag("dp") {
+        figures::fig4_series::<f64>(n, tile, chol)
+    } else {
+        figures::fig4_series::<f32>(n, tile, chol)
+    };
+    let label = if args.has_flag("dp") { "double" } else { "single" };
+    println!(
+        "{}",
+        figures::render_table(
+            &format!("Figure 4: direct-solver speedup, n={n}, {label} precision"),
+            &series
+        )
+    );
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let method = Method::parse(args.opt("method").unwrap_or("lu"))?;
+    let workload = if matches!(method, Method::Cholesky) {
+        Workload::Spd
+    } else {
+        Workload::DiagDominant
+    };
+    let tile: usize = args.opt_or("tile", 64)?;
+    let points = calibrate::calibrate(method, workload, &[256, 512], &[1, 4], tile)?;
+    println!("{}", calibrate::render(&points));
+    println!("max ratio error: {:.2}x", calibrate::max_ratio_error(&points));
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args
+        .opt("out")
+        .unwrap_or(cuplss::runtime::DEFAULT_ARTIFACT_DIR)
+        .to_string();
+    println!("CUPLSS-RS — hybrid distributed linear algebra (paper reproduction)");
+    println!("profiles:");
+    for p in [ComputeProfile::gtx280_cublas(), ComputeProfile::q6600_atlas()] {
+        println!(
+            "  {:<14} SGEMM {}  DGEMM {}  mem {}/s  pcie {}",
+            p.name,
+            fmt::flops(p.flops3_sp),
+            fmt::flops(p.flops3_dp),
+            fmt::bytes(p.mem_bw),
+            if p.pcie_bw > 0.0 { fmt::bytes(p.pcie_bw) + "/s" } else { "-".into() },
+        );
+    }
+    match Runtime::new(&dir) {
+        Ok(rt) => {
+            println!("artifacts ({}): {} executables in manifest", dir, rt.manifest().len());
+            let mut names: Vec<_> = rt.manifest().iter().map(|m| m.artifact.clone()).collect();
+            names.sort();
+            for chunk in names.chunks(4) {
+                println!("  {}", chunk.join("  "));
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,214 @@
+//! The logical 2-D process mesh (CUPLSS "uses a logical bidimensional mesh of
+//! processors").
+//!
+//! `P` ranks are arranged as a `pr x pc` grid in row-major order:
+//! rank = row * pc + col.  The factorisation is chosen as close to square as
+//! possible (`pr <= pc`), the standard choice for block-cyclic dense linear
+//! algebra because it balances row- and column-communicator sizes.
+
+use crate::comm::{Comm, Group};
+use crate::Scalar;
+
+/// Shape and coordinates of the 2-D mesh.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MeshShape {
+    /// Process rows.
+    pub pr: usize,
+    /// Process columns.
+    pub pc: usize,
+}
+
+impl MeshShape {
+    /// Near-square factorisation of `p` with `pr <= pc`.
+    pub fn near_square(p: usize) -> Self {
+        assert!(p > 0);
+        let mut pr = (p as f64).sqrt() as usize;
+        while pr > 1 && p % pr != 0 {
+            pr -= 1;
+        }
+        let pr = pr.max(1);
+        MeshShape { pr, pc: p / pr }
+    }
+
+    /// Explicit shape (validated).
+    pub fn new(pr: usize, pc: usize) -> Self {
+        assert!(pr > 0 && pc > 0);
+        MeshShape { pr, pc }
+    }
+
+    /// Total ranks.
+    pub fn size(&self) -> usize {
+        self.pr * self.pc
+    }
+
+    /// (row, col) of a world rank.
+    pub fn coords(&self, rank: usize) -> (usize, usize) {
+        debug_assert!(rank < self.size());
+        (rank / self.pc, rank % self.pc)
+    }
+
+    /// World rank at (row, col).
+    pub fn rank_at(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.pr && col < self.pc);
+        row * self.pc + col
+    }
+
+    /// World ranks of process row `row` (a row communicator's members).
+    pub fn row_ranks(&self, row: usize) -> Vec<usize> {
+        (0..self.pc).map(|c| self.rank_at(row, c)).collect()
+    }
+
+    /// World ranks of process column `col`.
+    pub fn col_ranks(&self, col: usize) -> Vec<usize> {
+        (0..self.pr).map(|r| self.rank_at(r, col)).collect()
+    }
+}
+
+/// A rank's view of the mesh: its coordinates plus row/column communicators.
+pub struct Mesh<'a, S: Scalar> {
+    comm: &'a Comm<S>,
+    shape: MeshShape,
+    row: usize,
+    col: usize,
+}
+
+impl<'a, S: Scalar> Mesh<'a, S> {
+    /// Build the mesh view for this rank.  `comm.size()` must equal
+    /// `shape.size()`.
+    pub fn new(comm: &'a Comm<S>, shape: MeshShape) -> Self {
+        assert_eq!(
+            comm.size(),
+            shape.size(),
+            "mesh {}x{} needs exactly {} ranks",
+            shape.pr,
+            shape.pc,
+            shape.size()
+        );
+        let (row, col) = shape.coords(comm.rank());
+        Mesh { comm, shape, row, col }
+    }
+
+    /// Near-square mesh over the whole world.
+    pub fn near_square(comm: &'a Comm<S>) -> Self {
+        Self::new(comm, MeshShape::near_square(comm.size()))
+    }
+
+    /// Mesh shape.
+    pub fn shape(&self) -> MeshShape {
+        self.shape
+    }
+
+    /// This rank's process row.
+    pub fn row(&self) -> usize {
+        self.row
+    }
+
+    /// This rank's process column.
+    pub fn col(&self) -> usize {
+        self.col
+    }
+
+    /// The underlying endpoint.
+    pub fn comm(&self) -> &'a Comm<S> {
+        self.comm
+    }
+
+    /// Row communicator: all ranks in this rank's process row
+    /// (group rank == process column).
+    pub fn row_comm(&self) -> Group<'a, S> {
+        self.comm.group(&self.shape.row_ranks(self.row))
+    }
+
+    /// Column communicator: all ranks in this rank's process column
+    /// (group rank == process row).
+    pub fn col_comm(&self) -> Group<'a, S> {
+        self.comm.group(&self.shape.col_ranks(self.col))
+    }
+
+    /// World communicator.
+    pub fn world(&self) -> Group<'a, S> {
+        self.comm.world()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{NetworkModel, Payload, Tag, World};
+
+    #[test]
+    fn near_square_shapes() {
+        assert_eq!(MeshShape::near_square(1), MeshShape { pr: 1, pc: 1 });
+        assert_eq!(MeshShape::near_square(2), MeshShape { pr: 1, pc: 2 });
+        assert_eq!(MeshShape::near_square(4), MeshShape { pr: 2, pc: 2 });
+        assert_eq!(MeshShape::near_square(8), MeshShape { pr: 2, pc: 4 });
+        assert_eq!(MeshShape::near_square(16), MeshShape { pr: 4, pc: 4 });
+        assert_eq!(MeshShape::near_square(6), MeshShape { pr: 2, pc: 3 });
+        assert_eq!(MeshShape::near_square(7), MeshShape { pr: 1, pc: 7 });
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let m = MeshShape::new(3, 4);
+        for rank in 0..m.size() {
+            let (r, c) = m.coords(rank);
+            assert_eq!(m.rank_at(r, c), rank);
+        }
+    }
+
+    #[test]
+    fn row_col_ranks_partition() {
+        let m = MeshShape::new(2, 3);
+        let mut all: Vec<usize> = (0..2).flat_map(|r| m.row_ranks(r)).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..6).collect::<Vec<_>>());
+        let mut all: Vec<usize> = (0..3).flat_map(|c| m.col_ranks(c)).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn row_comm_communicates_within_row() {
+        let out = World::run::<f64, _, _>(6, NetworkModel::ideal(), |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(2, 3));
+            // Column 0 of each row broadcasts its world rank along the row.
+            let g = mesh.row_comm();
+            let data = if mesh.col() == 0 {
+                Some(Payload::Scalar(comm.rank() as f64))
+            } else {
+                None
+            };
+            g.bcast(0, 1, data).into_scalar()
+        });
+        assert_eq!(out, vec![0.0, 0.0, 0.0, 3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn col_comm_communicates_within_col() {
+        let out = World::run::<f64, _, _>(6, NetworkModel::ideal(), |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(2, 3));
+            let g = mesh.col_comm();
+            use crate::comm::collectives::ReduceOp;
+            g.allreduce_scalar(2, comm.rank() as f64, ReduceOp::Sum)
+        });
+        // columns are {0,3}, {1,4}, {2,5} -> sums 3, 5, 7
+        assert_eq!(out, vec![3.0, 5.0, 7.0, 3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn cross_row_p2p_via_world() {
+        let out = World::run::<f64, _, _>(4, NetworkModel::ideal(), |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(2, 2));
+            // (0,0) sends to (1,1) directly.
+            if (mesh.row(), mesh.col()) == (0, 0) {
+                comm.send(mesh.shape().rank_at(1, 1), Tag::P2p(0), Payload::Scalar(9.0));
+                0.0
+            } else if (mesh.row(), mesh.col()) == (1, 1) {
+                comm.recv(0, Tag::P2p(0)).into_scalar()
+            } else {
+                -1.0
+            }
+        });
+        assert_eq!(out[3], 9.0);
+    }
+}

@@ -1,0 +1,60 @@
+//! Parallel BLAS over the 2-D block-cyclic layout — the workhorse layer the
+//! CUPLSS API exposes ("routines that implement parallel BLAS operations").
+//!
+//! Every routine is SPMD: each rank calls it with its own shard and its
+//! [`Ctx`]; real messages flow through the mesh communicators and every
+//! local tile op goes through the active [`crate::accel::Engine`]
+//! (accelerated or serial), charging the rank's virtual clock.
+//!
+//! Tag discipline: each routine owns a tag block (see `tags`), so no two
+//! overlapping collectives can cross-match.
+
+pub mod pgemm;
+pub mod pgemv;
+pub mod pvec;
+
+pub use pgemm::pgemm_acc;
+pub use pgemv::{pgemv, pgemv_t};
+pub use pvec::{paxpy, pcopy, pdot, pnorm2, pscal};
+
+use std::sync::Arc;
+
+use crate::accel::{Engine, OpCost};
+use crate::mesh::Mesh;
+use crate::Scalar;
+
+/// Tag blocks per routine family (collectives add small offsets).
+pub(crate) mod tags {
+    pub const PGEMV: u32 = 100;
+    pub const PGEMV_T: u32 = 200;
+    pub const PDOT: u32 = 300;
+    pub const PGEMM: u32 = 400;
+    pub const LU: u32 = 1_000;
+    pub const CHOL: u32 = 2_000;
+    pub const TRSV: u32 = 3_000;
+}
+
+/// Per-rank execution context: mesh view + local compute engine.
+pub struct Ctx<'a, S: Scalar> {
+    /// This rank's mesh view.
+    pub mesh: &'a Mesh<'a, S>,
+    /// Local tile-compute engine (shared across ranks).
+    pub engine: Arc<dyn Engine<S>>,
+}
+
+impl<'a, S: Scalar> Ctx<'a, S> {
+    /// Bundle a mesh view and an engine.
+    pub fn new(mesh: &'a Mesh<'a, S>, engine: Arc<dyn Engine<S>>) -> Self {
+        Ctx { mesh, engine }
+    }
+
+    /// Charge an op cost to this rank's virtual clock.
+    pub fn charge(&self, cost: OpCost) {
+        cost.charge(self.mesh.comm().clock());
+    }
+
+    /// Tile edge of the active engine.
+    pub fn tile(&self) -> usize {
+        self.engine.tile()
+    }
+}

@@ -1,0 +1,211 @@
+//! Distributed matrix-vector products — the kernel of every Krylov solver.
+//!
+//! Layouts: `A` is 2-D block-cyclic; `x`, `y` are row-distributed /
+//! column-replicated ([`DistVector`]).  Only square matrices are supported
+//! (the solvers' domain).
+//!
+//! `y = A x` ([`pgemv`]):
+//!   1. **column allgather** — every rank collects the x-blocks of its
+//!      process column's tile columns (they live spread over process rows);
+//!   2. **local** — per owned tile, `y_part(I) += A(I,J) x(J)` via the
+//!      engine's GEMV;
+//!   3. **row allreduce** — partial sums meet across the process row, leaving
+//!      y replicated exactly like x.
+//!
+//! `y = A^T x` ([`pgemv_t`], BiCG's second sequence):
+//!   1. **local** — `w_part(J) += A(I,J)^T x(I)` (x blocks are already home);
+//!   2. **column reduce** per tile column to the process row that owns tile
+//!      row J in the *vector* layout;
+//!   3. **row allgather** — replicate the finished blocks across rows.
+
+use super::{tags, Ctx};
+use crate::comm::ReduceOp;
+use crate::dist::{DistMatrix, DistVector};
+use crate::{linalg, Scalar};
+
+/// `y = A x`; returns y in the same layout as x.
+pub fn pgemv<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &DistMatrix<S>,
+    x: &DistVector<S>,
+) -> DistVector<S> {
+    let desc = *a.desc();
+    assert!(desc.is_square(), "pgemv requires a square matrix");
+    let t = desc.tile;
+    let mesh = ctx.mesh;
+
+    // 1. Column allgather of x blocks (contributions indexed by process row).
+    let mut mine = Vec::with_capacity(x.local_blocks() * t);
+    for l in 0..x.local_blocks() {
+        mine.extend_from_slice(x.block(l));
+    }
+    let col = mesh.col_comm();
+    let by_row = col.allgather(tags::PGEMV, mine);
+    let x_block = |tj: usize| -> &[S] {
+        let owner = tj % desc.shape.pr;
+        let off = desc.local_ti(tj) * t;
+        &by_row[owner][off..off + t]
+    };
+
+    // 2. Local partial products.
+    let mut y_part = vec![S::zero(); x.local_blocks() * t];
+    let mut tmp = vec![S::zero(); t];
+    for (lti, ltj, _ti, tj) in a.owned_tiles() {
+        let cost = ctx.engine.gemv(a.tile(lti, ltj), x_block(tj), &mut tmp).expect("gemv");
+        ctx.charge(cost);
+        linalg::axpy(S::one(), &tmp, &mut y_part[lti * t..(lti + 1) * t]);
+        ctx.charge(ctx.engine.blas1_cost(t));
+    }
+
+    // 3. Row allreduce of partials.
+    let row = mesh.row_comm();
+    let summed = row.allreduce_vec(tags::PGEMV + 1, y_part, ReduceOp::Sum);
+
+    let mut y = DistVector::zeros(desc, mesh.row(), mesh.col());
+    for l in 0..y.local_blocks() {
+        y.block_mut(l).copy_from_slice(&summed[l * t..(l + 1) * t]);
+    }
+    y
+}
+
+/// `y = A^T x`; returns y in the same layout as x.
+pub fn pgemv_t<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &DistMatrix<S>,
+    x: &DistVector<S>,
+) -> DistVector<S> {
+    let desc = *a.desc();
+    assert!(desc.is_square(), "pgemv_t requires a square matrix");
+    let t = desc.tile;
+    let mesh = ctx.mesh;
+    let (pr, pc) = (desc.shape.pr, desc.shape.pc);
+
+    // 1. Local partials per owned tile column.
+    let lnt = a.local_nt();
+    let mut w_part = vec![S::zero(); lnt * t];
+    let mut tmp = vec![S::zero(); t];
+    for (lti, ltj, ti, _tj) in a.owned_tiles() {
+        let cost = ctx
+            .engine
+            .gemv_t(a.tile(lti, ltj), x.global_block(ti), &mut tmp)
+            .expect("gemv_t");
+        ctx.charge(cost);
+        linalg::axpy(S::one(), &tmp, &mut w_part[ltj * t..(ltj + 1) * t]);
+        ctx.charge(ctx.engine.blas1_cost(t));
+    }
+
+    // 2. Column reduce per tile column, rooted at the process row that owns
+    //    tile row `tj` in the vector layout.
+    let col = mesh.col_comm();
+    let mut finished: Vec<(usize, Vec<S>)> = Vec::new(); // (tj, block)
+    for ltj in 0..lnt {
+        let tj = desc.global_tj(mesh.col(), ltj);
+        let root = tj % pr;
+        let block = w_part[ltj * t..(ltj + 1) * t].to_vec();
+        if let Some(sum) = col.reduce_vec(root, tags::PGEMV_T, block, ReduceOp::Sum) {
+            finished.push((tj, sum));
+        }
+    }
+
+    // 3. Row allgather of finished blocks (each rank contributes the blocks
+    //    it rooted, in ascending tj order).
+    let mut mine = Vec::with_capacity(finished.len() * t);
+    for (_, b) in &finished {
+        mine.extend_from_slice(b);
+    }
+    let row = mesh.row_comm();
+    let by_col = row.allgather(tags::PGEMV_T + 1, mine);
+
+    // Source (r=my prow, c) holds blocks { tj : tj%pr==prow && tj%pc==c }.
+    let mut y = DistVector::zeros(desc, mesh.row(), mesh.col());
+    let nt = desc.nt();
+    for c in 0..pc {
+        let mut pos = 0usize;
+        for tj in 0..nt {
+            if tj % pr == mesh.row() && tj % pc == c {
+                let src = &by_col[c][pos * t..(pos + 1) * t];
+                y.global_block_mut(tj).copy_from_slice(src);
+                pos += 1;
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::CpuEngine;
+    use crate::comm::{NetworkModel, World};
+    use crate::dist::{gather_vector, Descriptor};
+    use crate::mesh::{Mesh, MeshShape};
+    use std::sync::Arc;
+
+    fn elem(i: usize, j: usize) -> f64 {
+        ((i * 31 + j * 7) as f64).sin()
+    }
+
+    fn xval(i: usize) -> f64 {
+        (i as f64 * 0.37).cos()
+    }
+
+    fn serial_matvec(n: usize, transpose: bool) -> Vec<f64> {
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            for j in 0..n {
+                if transpose {
+                    y[j] += elem(i, j) * xval(i);
+                } else {
+                    y[i] += elem(i, j) * xval(j);
+                }
+            }
+        }
+        y
+    }
+
+    fn run_case(n: usize, tile: usize, pr: usize, pc: usize, transpose: bool) {
+        let out = World::run::<f64, _, _>(pr * pc, NetworkModel::ideal(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+            let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(tile)));
+            let desc = Descriptor::new(n, n, tile, mesh.shape());
+            // identity-padded A would perturb the transpose result only in
+            // pad rows, which are sliced away by gather_vector.
+            let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), elem);
+            let x = DistVector::from_fn(desc, mesh.row(), mesh.col(), xval);
+            let y = if transpose { pgemv_t(&ctx, &a, &x) } else { pgemv(&ctx, &a, &x) };
+            gather_vector(&mesh, &y)
+        });
+        let got = out[0].as_ref().unwrap();
+        let want = serial_matvec(n, transpose);
+        for i in 0..n {
+            assert!(
+                (got[i] - want[i]).abs() < 1e-10,
+                "n={n} tile={tile} {pr}x{pc} T={transpose} i={i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn pgemv_matches_serial() {
+        for (pr, pc) in [(1, 1), (2, 1), (1, 2), (2, 2), (2, 3), (3, 2)] {
+            run_case(12, 4, pr, pc, false); // aligned
+            run_case(13, 4, pr, pc, false); // padded edge tile
+        }
+    }
+
+    #[test]
+    fn pgemv_t_matches_serial() {
+        for (pr, pc) in [(1, 1), (2, 1), (1, 2), (2, 2), (2, 3), (3, 2)] {
+            run_case(12, 4, pr, pc, true);
+            run_case(13, 4, pr, pc, true);
+        }
+    }
+
+    #[test]
+    fn pgemv_larger_mesh() {
+        run_case(32, 4, 4, 4, false);
+        run_case(32, 4, 4, 4, true);
+    }
+}

@@ -1,0 +1,126 @@
+//! Distributed vector BLAS-1: dot, norm, axpy, scal, copy.
+//!
+//! Vectors are row-distributed / column-replicated ([`DistVector`]), so axpy,
+//! scal and copy are purely local (each replica updates identically); dot
+//! and norm need one allreduce over the *column* communicator (one member
+//! per process row = the full distributed sum, computed redundantly in every
+//! process column — no second collective needed).
+
+use super::{tags, Ctx};
+use crate::comm::ReduceOp;
+use crate::dist::DistVector;
+use crate::Scalar;
+
+/// Distributed inner product `x . y` (result replicated on every rank).
+pub fn pdot<S: Scalar>(ctx: &Ctx<'_, S>, x: &DistVector<S>, y: &DistVector<S>) -> S {
+    assert_eq!(x.local_blocks(), y.local_blocks(), "pdot layout mismatch");
+    let mut partial = S::zero();
+    for l in 0..x.local_blocks() {
+        let (d, cost) = ctx.engine.dot(x.block(l), y.block(l));
+        partial += d;
+        ctx.charge(cost);
+    }
+    let col = ctx.mesh.col_comm();
+    col.allreduce_scalar(tags::PDOT, partial, ReduceOp::Sum)
+}
+
+/// Distributed 2-norm.
+pub fn pnorm2<S: Scalar>(ctx: &Ctx<'_, S>, x: &DistVector<S>) -> S {
+    pdot(ctx, x, x).sqrt()
+}
+
+/// `y += alpha x` (local on every replica).
+pub fn paxpy<S: Scalar>(ctx: &Ctx<'_, S>, alpha: S, x: &DistVector<S>, y: &mut DistVector<S>) {
+    assert_eq!(x.local_blocks(), y.local_blocks(), "paxpy layout mismatch");
+    for l in 0..x.local_blocks() {
+        let cost = ctx.engine.axpy(alpha, x.block(l), y.block_mut(l));
+        ctx.charge(cost);
+    }
+}
+
+/// `x *= alpha` (local).
+pub fn pscal<S: Scalar>(ctx: &Ctx<'_, S>, alpha: S, x: &mut DistVector<S>) {
+    for l in 0..x.local_blocks() {
+        let cost = ctx.engine.scal(alpha, x.block_mut(l));
+        ctx.charge(cost);
+    }
+}
+
+/// `y = x` (local; no cost model charge — a memcpy is free next to BLAS).
+pub fn pcopy<S: Scalar>(_ctx: &Ctx<'_, S>, x: &DistVector<S>, y: &mut DistVector<S>) {
+    y.copy_from(x);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::CpuEngine;
+    use crate::comm::{NetworkModel, World};
+    use crate::dist::Descriptor;
+    use crate::mesh::{Mesh, MeshShape};
+    use std::sync::Arc;
+
+    fn with_ctx<R: Send>(
+        pr: usize,
+        pc: usize,
+        tile: usize,
+        f: impl Fn(&Ctx<'_, f64>) -> R + Send + Sync,
+    ) -> Vec<R> {
+        World::run::<f64, _, _>(pr * pc, NetworkModel::ideal(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+            let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(tile)));
+            f(&ctx)
+        })
+    }
+
+    #[test]
+    fn pdot_matches_serial_all_mesh_shapes() {
+        let n = 23usize;
+        for (pr, pc) in [(1, 1), (2, 1), (1, 3), (2, 2), (2, 3)] {
+            let out = with_ctx(pr, pc, 4, move |ctx| {
+                let desc = Descriptor::new(n, n, 4, ctx.mesh.shape());
+                let x = DistVector::from_fn(desc, ctx.mesh.row(), ctx.mesh.col(), |i| {
+                    (i as f64 + 1.0).sin()
+                });
+                let y = DistVector::from_fn(desc, ctx.mesh.row(), ctx.mesh.col(), |i| {
+                    (i as f64).cos()
+                });
+                pdot(ctx, &x, &y)
+            });
+            let want: f64 = (0..n).map(|i| ((i as f64) + 1.0).sin() * (i as f64).cos()).sum();
+            for v in out {
+                assert!((v - want).abs() < 1e-12, "pr={pr} pc={pc}: {v} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn pnorm_and_axpy() {
+        let n = 10usize;
+        let out = with_ctx(2, 2, 4, move |ctx| {
+            let desc = Descriptor::new(n, n, 4, ctx.mesh.shape());
+            let x = DistVector::from_fn(desc, ctx.mesh.row(), ctx.mesh.col(), |_| 2.0);
+            let mut y = DistVector::from_fn(desc, ctx.mesh.row(), ctx.mesh.col(), |_| 1.0);
+            paxpy(ctx, 3.0, &x, &mut y); // y = 7 everywhere
+            pscal(ctx, 0.5, &mut y); // 3.5
+            (pnorm2(ctx, &x), pdot(ctx, &y, &y))
+        });
+        for (nx, dy) in out {
+            assert!((nx - (4.0 * n as f64).sqrt()).abs() < 1e-12);
+            assert!((dy - 3.5 * 3.5 * n as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn virtual_cost_charged() {
+        let out = with_ctx(2, 1, 4, |ctx| {
+            let desc = Descriptor::new(8, 8, 4, ctx.mesh.shape());
+            let x = DistVector::from_fn(desc, ctx.mesh.row(), ctx.mesh.col(), |_| 1.0);
+            let _ = pdot(ctx, &x, &x);
+            ctx.mesh.comm().clock().now()
+        });
+        for t in out {
+            assert!(t > 0.0, "pdot must advance the virtual clock");
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Artifact manifest parsing.
+//!
+//! `make artifacts` writes `artifacts/manifest.txt` with one line per AOT
+//! executable (see `python/compile/aot.py`):
+//!
+//! ```text
+//! <artifact> <op> <dtype> <tile> <flops> <arity> <in0,in1,...> <out>
+//! ```
+//!
+//! Shapes are `x`-separated dims, `s` for a rank-0 scalar.  The format is
+//! deliberately dependency-free (the offline crate set has no serde).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+/// Metadata of one AOT-compiled tile op.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    /// Artifact file stem, e.g. `gemm_f32_256`.
+    pub artifact: String,
+    /// Op name, e.g. `gemm`.
+    pub op: String,
+    /// `f32` or `f64`.
+    pub dtype: String,
+    /// Tile edge the shapes are built from.
+    pub tile: usize,
+    /// Exact flop count of one invocation (cost-model input).
+    pub flops: u64,
+    /// Input shapes (empty vec = rank-0 scalar).
+    pub in_shapes: Vec<Vec<usize>>,
+    /// Output shape.
+    pub out_shape: Vec<usize>,
+    /// Absolute path of the `.hlo.txt` file.
+    pub path: PathBuf,
+}
+
+impl ArtifactMeta {
+    /// Number of inputs.
+    pub fn arity(&self) -> usize {
+        self.in_shapes.len()
+    }
+
+    /// Elements in a shape.
+    pub fn elems(shape: &[usize]) -> usize {
+        shape.iter().product()
+    }
+
+    /// Total input elements (host->device traffic per call).
+    pub fn in_elems(&self) -> usize {
+        self.in_shapes.iter().map(|s| Self::elems(s)).sum()
+    }
+
+    /// Output elements (device->host traffic per call).
+    pub fn out_elems(&self) -> usize {
+        Self::elems(&self.out_shape)
+    }
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    if s == "s" {
+        return Ok(Vec::new());
+    }
+    s.split('x')
+        .map(|d| {
+            d.parse::<usize>()
+                .map_err(|_| Error::runtime(format!("bad shape component {d:?}")))
+        })
+        .collect()
+}
+
+/// Parse one manifest line.
+fn parse_line(dir: &Path, line: &str) -> Result<ArtifactMeta> {
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    if parts.len() != 8 {
+        return Err(Error::runtime(format!("manifest line has {} fields: {line:?}", parts.len())));
+    }
+    let arity: usize =
+        parts[5].parse().map_err(|_| Error::runtime(format!("bad arity in {line:?}")))?;
+    let in_shapes: Vec<Vec<usize>> =
+        parts[6].split(',').map(parse_shape).collect::<Result<_>>()?;
+    if in_shapes.len() != arity {
+        return Err(Error::runtime(format!("arity mismatch in {line:?}")));
+    }
+    Ok(ArtifactMeta {
+        artifact: parts[0].to_string(),
+        op: parts[1].to_string(),
+        dtype: parts[2].to_string(),
+        tile: parts[3].parse().map_err(|_| Error::runtime("bad tile"))?,
+        flops: parts[4].parse().map_err(|_| Error::runtime("bad flops"))?,
+        in_shapes,
+        out_shape: parse_shape(parts[7])?,
+        path: dir.join(format!("{}.hlo.txt", parts[0])),
+    })
+}
+
+/// The parsed manifest: artifact name -> metadata.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    entries: HashMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.txt")).map_err(|e| {
+            Error::runtime(format!(
+                "cannot read {}/manifest.txt (run `make artifacts` first): {e}",
+                dir.display()
+            ))
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (artifact paths resolved against `dir`).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let mut entries = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let meta = parse_line(dir, line)?;
+            entries.insert(meta.artifact.clone(), meta);
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Look up by artifact name (`gemm_f32_256`).
+    pub fn get(&self, artifact: &str) -> Option<&ArtifactMeta> {
+        self.entries.get(artifact)
+    }
+
+    /// Look up by (op, dtype, tile).
+    pub fn find(&self, op: &str, dtype: &str, tile: usize) -> Option<&ArtifactMeta> {
+        self.entries.get(&format!("{op}_{dtype}_{tile}"))
+    }
+
+    /// Number of artifacts.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no artifacts are listed.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// All entries (arbitrary order).
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.entries.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+gemm_f32_256 gemm f32 256 33554432 2 256x256,256x256 256x256
+axpy_f64_128 axpy f64 128 256 3 s,128,128 128
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.len(), 2);
+        let g = m.get("gemm_f32_256").unwrap();
+        assert_eq!(g.op, "gemm");
+        assert_eq!(g.tile, 256);
+        assert_eq!(g.flops, 33_554_432);
+        assert_eq!(g.in_shapes, vec![vec![256, 256], vec![256, 256]]);
+        assert_eq!(g.out_shape, vec![256, 256]);
+        assert_eq!(g.path, Path::new("/tmp/a/gemm_f32_256.hlo.txt"));
+        let a = m.find("axpy", "f64", 128).unwrap();
+        assert_eq!(a.arity(), 3);
+        assert_eq!(a.in_shapes[0], Vec::<usize>::new()); // scalar
+        assert_eq!(a.in_elems(), 1 + 128 + 128);
+        assert_eq!(a.out_elems(), 128);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse(Path::new("/"), "too few fields\n").is_err());
+        assert!(Manifest::parse(Path::new("/"), "a b f32 256 1 1 1x1\n").is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let m = Manifest::parse(Path::new("/"), "# c\n\n").unwrap();
+        assert!(m.is_empty());
+    }
+}

@@ -1,0 +1,159 @@
+//! PJRT execution of the AOT artifacts — the library's "CUDA runtime".
+//!
+//! One process-wide [`Runtime`] owns a PJRT CPU client and a lazily-populated
+//! cache of compiled executables, keyed by artifact name.  Node threads share
+//! it: the underlying `TfrtCpuClient` is thread-safe for compile/execute
+//! (this is how jax drives it from multiple host threads), but the `xla`
+//! crate's raw-pointer wrappers don't declare `Send`/`Sync`, so we provide a
+//! justified `unsafe impl` on a private wrapper.  Compilation is serialised
+//! behind a mutex; execution is lock-free.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+
+use super::artifact::{ArtifactMeta, Manifest};
+use crate::{Error, Result, Scalar};
+
+/// `xla` crate objects wrap thread-safe C++ (PJRT CPU client / loaded
+/// executables / immutable literals) in raw pointers without Send/Sync.
+/// SAFETY: TfrtCpuClient's compile+execute are thread-safe; executables are
+/// immutable after compilation; we never share `Literal`s across threads.
+struct ShareableExe(xla::PjRtLoadedExecutable);
+unsafe impl Send for ShareableExe {}
+unsafe impl Sync for ShareableExe {}
+
+struct ShareableClient(xla::PjRtClient);
+unsafe impl Send for ShareableClient {}
+unsafe impl Sync for ShareableClient {}
+
+/// A compiled tile op, shareable across rank threads.
+#[derive(Clone)]
+pub struct Executable {
+    exe: Arc<ShareableExe>,
+    meta: ArtifactMeta,
+}
+
+impl Executable {
+    /// The artifact metadata (shapes, flops).
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Execute with `inputs` matching the artifact's declared shapes; returns
+    /// the flattened output buffer.
+    pub fn run<S: Scalar>(&self, inputs: &[&[S]]) -> Result<Vec<S>> {
+        let metas = &self.meta.in_shapes;
+        if inputs.len() != metas.len() {
+            return Err(Error::runtime(format!(
+                "{}: got {} inputs, expected {}",
+                self.meta.artifact,
+                inputs.len(),
+                metas.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, shape) in inputs.iter().zip(metas) {
+            let elems = ArtifactMeta::elems(shape);
+            if buf.len() != elems {
+                return Err(Error::runtime(format!(
+                    "{}: input len {} != shape {:?}",
+                    self.meta.artifact,
+                    buf.len(),
+                    shape
+                )));
+            }
+            let bytes = unsafe {
+                std::slice::from_raw_parts(buf.as_ptr() as *const u8, buf.len() * S::BYTES)
+            };
+            let lit = xla::Literal::create_from_shape_and_untyped_data(S::TY, shape, bytes)?;
+            literals.push(lit);
+        }
+        let result = self.exe.0.execute::<xla::Literal>(&literals)?;
+        let out = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True -> 1-tuple.
+        let out = out.to_tuple1()?;
+        Ok(out.to_vec::<S>()?)
+    }
+}
+
+/// Process-wide PJRT runtime: client + executable cache.
+pub struct Runtime {
+    client: ShareableClient,
+    manifest: Manifest,
+    cache: RwLock<HashMap<String, Executable>>,
+    compile_lock: Mutex<()>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifact directory (reads the manifest; the
+    /// PJRT client starts immediately, executables compile on first use).
+    pub fn new(artifact_dir: impl Into<PathBuf>) -> Result<Arc<Runtime>> {
+        let dir = artifact_dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Arc::new(Runtime {
+            client: ShareableClient(client),
+            manifest,
+            cache: RwLock::new(HashMap::new()),
+            compile_lock: Mutex::new(()),
+            dir,
+        }))
+    }
+
+    /// The process-wide shared runtime for the default `artifacts/` dir
+    /// (first call wins; later calls with a different dir error).
+    pub fn global(artifact_dir: &str) -> Result<Arc<Runtime>> {
+        static GLOBAL: OnceLock<std::result::Result<Arc<Runtime>, String>> = OnceLock::new();
+        let r = GLOBAL.get_or_init(|| Runtime::new(artifact_dir).map_err(|e| e.to_string()));
+        match r {
+            Ok(rt) => Ok(rt.clone()),
+            Err(e) => Err(Error::runtime(e.clone())),
+        }
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Artifact directory.
+    pub fn dir(&self) -> &std::path::Path {
+        &self.dir
+    }
+
+    /// Get (compiling if needed) the executable for `artifact`.
+    pub fn executable(&self, artifact: &str) -> Result<Executable> {
+        if let Some(e) = self.cache.read().unwrap().get(artifact) {
+            return Ok(e.clone());
+        }
+        // Compile outside the read lock; serialise compilation.
+        let _guard = self.compile_lock.lock().unwrap();
+        if let Some(e) = self.cache.read().unwrap().get(artifact) {
+            return Ok(e.clone()); // raced
+        }
+        let meta = self
+            .manifest
+            .get(artifact)
+            .ok_or_else(|| Error::runtime(format!("unknown artifact {artifact:?}")))?
+            .clone();
+        let proto = xla::HloModuleProto::from_text_file(&meta.path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.0.compile(&comp)?;
+        let executable = Executable { exe: Arc::new(ShareableExe(exe)), meta };
+        self.cache.write().unwrap().insert(artifact.to_string(), executable.clone());
+        Ok(executable)
+    }
+
+    /// Get (compiling if needed) the executable for (op, dtype, tile).
+    pub fn op<S: Scalar>(&self, op: &str, tile: usize) -> Result<Executable> {
+        let name = format!("{op}_{}_{tile}", S::DTYPE);
+        self.executable(&name)
+    }
+
+    /// Number of executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.read().unwrap().len()
+    }
+}

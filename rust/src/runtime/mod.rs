@@ -1,0 +1,13 @@
+//! The PJRT runtime (CUPLSS level 1, "CUDA runtime + CUBLAS" slot): loads
+//! the HLO-text artifacts emitted by `python/compile/aot.py`, compiles them
+//! once on the PJRT CPU client, and executes them from the rust request path.
+//! Python never runs at solve time.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{ArtifactMeta, Manifest};
+pub use executor::{Executable, Runtime};
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

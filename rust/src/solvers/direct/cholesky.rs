@@ -1,0 +1,120 @@
+//! Distributed right-looking block Cholesky (the paper's SPD direct method).
+//!
+//! Per tile step `k`:
+//! 1. the diagonal owner factors its tile with the engine's `potrf` and
+//!    broadcasts L11 down its process column;
+//! 2. that column's owners of tile rows i > k solve
+//!    `L(i,k) · L11^T = A(i,k)` with the engine's `trsm_rlt`;
+//! 3. the L(·,k) tiles broadcast along process rows; each owned *column*
+//!    block L(j,k) then broadcasts down its process column;
+//! 4. trailing update on the lower half: `A(i,j) -= L(i,k) · L(j,k)^T`
+//!    (i ≥ j > k) via the engine's fused `gemm_nt_update`.
+//!
+//! Only the lower triangle is referenced or updated; the strict upper
+//! triangle of the shard is left stale.
+
+use crate::comm::Payload;
+use crate::dist::DistMatrix;
+use crate::pblas::{tags, Ctx};
+use crate::{Result, Scalar};
+
+/// In-place distributed Cholesky: on return the lower triangle of `a` holds
+/// L (with its diagonal); the strict upper triangle is unspecified.
+pub fn pchol_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<()> {
+    let desc = *a.desc();
+    assert!(desc.is_square(), "pchol_factor requires a square matrix");
+    let kt = desc.mt();
+    let mesh = ctx.mesh;
+    let (pr, pc) = (desc.shape.pr, desc.shape.pc);
+
+    for k in 0..kt {
+        let ck = k % pc;
+        let rk = k % pr;
+
+        // --- 1. factor diagonal tile, broadcast L11 down the column -------
+        let col = mesh.col_comm();
+        let mut l11: Option<Vec<S>> = None;
+        if mesh.col() == ck {
+            let payload = if mesh.row() == rk {
+                let tile = a.global_tile_mut(k, k);
+                let cost = ctx.engine.potrf(tile)?;
+                ctx.charge(cost);
+                Some(Payload::Data(tile.clone()))
+            } else {
+                None
+            };
+            l11 = Some(col.bcast(rk, tags::CHOL, payload).into_data());
+        }
+
+        // --- 2. panel solve L(i,k) = A(i,k) L11^{-T} -----------------------
+        if mesh.col() == ck {
+            let l11 = l11.as_ref().expect("column ck has L11");
+            for lti in 0..a.local_mt() {
+                let ti = desc.global_ti(mesh.row(), lti);
+                if ti > k {
+                    let cost = ctx.engine.trsm_rlt(a.tile_mut(lti, desc.local_tj(k)), l11)?;
+                    ctx.charge(cost);
+                }
+            }
+        }
+
+        if k + 1 == kt {
+            break;
+        }
+
+        // --- 3a. broadcast L(i,k) along process rows ------------------------
+        let row = mesh.row_comm();
+        let mut l_rows: Vec<Option<Vec<S>>> = vec![None; a.local_mt()];
+        for lti in 0..a.local_mt() {
+            let ti = desc.global_ti(mesh.row(), lti);
+            if ti > k {
+                let data = if mesh.col() == ck {
+                    Some(Payload::Data(a.tile(lti, desc.local_tj(k)).to_vec()))
+                } else {
+                    None
+                };
+                l_rows[lti] = Some(row.bcast(ck, tags::CHOL + 1, data).into_data());
+            }
+        }
+
+        // --- 3b. broadcast L(j,k) down each owned process column -----------
+        // After 3a, rank (j % pr, c) holds L(j,k) for every owned row j; the
+        // tile (i,j) owners in column c sit in the same process column.
+        let mut l_cols: Vec<Option<Vec<S>>> = vec![None; a.local_nt()];
+        for ltj in 0..a.local_nt() {
+            let tj = desc.global_tj(mesh.col(), ltj);
+            if tj > k {
+                let root = tj % pr;
+                let data = if mesh.row() == root {
+                    // From 3a: this rank's row-broadcast copy of L(tj, k).
+                    let lti = desc.local_ti(tj);
+                    Some(Payload::Data(
+                        l_rows[lti].as_ref().expect("row tj broadcast").clone(),
+                    ))
+                } else {
+                    None
+                };
+                l_cols[ltj] = Some(col.bcast(root, tags::CHOL + 2, data).into_data());
+            }
+        }
+
+        // --- 4. trailing update, lower half only ----------------------------
+        for lti in 0..a.local_mt() {
+            let ti = desc.global_ti(mesh.row(), lti);
+            if ti <= k {
+                continue;
+            }
+            let l_ik = l_rows[lti].as_ref().expect("L row tile");
+            for ltj in 0..a.local_nt() {
+                let tj = desc.global_tj(mesh.col(), ltj);
+                if tj <= k || tj > ti {
+                    continue; // lower half only (i >= j)
+                }
+                let l_jk = l_cols[ltj].as_ref().expect("L col tile");
+                let cost = ctx.engine.gemm_nt_update(a.tile_mut(lti, ltj), l_ik, l_jk)?;
+                ctx.charge(cost);
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,309 @@
+//! Distributed right-looking block LU with partial pivoting — the paper's
+//! primary direct method ("the most important computational step being the
+//! matrix factorization", §2).
+//!
+//! Per tile step `k` (panel = tile column k, tile rows k..KT):
+//!
+//! 1. **panel gather** — the panel's tiles (spread over the process rows of
+//!    process column `k mod pc`) gather to the diagonal owner, which factors
+//!    them with host-side partial-pivoted `getrf` (the MAGMA-style split the
+//!    paper also uses: pivot search on CPU, BLAS-3 updates on the device);
+//! 2. **scatter + pivot broadcast** — factored tiles return to their owners;
+//!    the pivot map broadcasts to the whole mesh;
+//! 3. **row swaps** — every column of the matrix outside the panel applies
+//!    the same interchanges (the distributed `laswp`), exchanging row
+//!    segments between the two owning process rows;
+//! 4. **U12 row** — the diagonal tile broadcasts along its process row; the
+//!    owners of tile row k solve `L11 · U12 = A(k, j)` with the engine's
+//!    `trsm_llu`;
+//! 5. **panel broadcasts** — L21 tiles broadcast along process rows, U12
+//!    tiles along process columns;
+//! 6. **trailing update** — every rank runs the delayed rank-T update
+//!    `A(i,j) -= L(i,k) · U(k,j)` on its owned trailing tiles via the
+//!    engine's fused `gemm_update` (the BLAS-3 hot spot the paper offloads
+//!    to CUBLAS).
+//!
+//! Padding: the panel's *real* sub-block (`getrf_lda`) is factored so the
+//! identity padding of the last tile row/column is preserved — the padded
+//! factorisation embeds the original exactly (see `dist::descriptor`).
+
+use crate::comm::{Payload, Tag};
+use crate::dist::DistMatrix;
+use crate::pblas::{tags, Ctx};
+use crate::{linalg, Error, Result, Scalar};
+
+/// Pivot record of one factorisation: `swaps[g] = p` means global rows
+/// `g` and `p` were exchanged at elimination step `g` (applied in order).
+#[derive(Clone, Debug, Default)]
+pub struct PivotMap {
+    swaps: Vec<(usize, usize)>,
+}
+
+impl PivotMap {
+    /// The ordered swap list.
+    pub fn swaps(&self) -> &[(usize, usize)] {
+        &self.swaps
+    }
+
+    /// Apply to a plain host vector (serial verification path).
+    pub fn apply_host<S: Scalar>(&self, b: &mut [S]) {
+        for &(g1, g2) in &self.swaps {
+            b.swap(g1, g2);
+        }
+    }
+}
+
+/// In-place distributed LU: on return `a` holds L (unit lower, implicit
+/// diagonal) and U; the returned [`PivotMap`] records the interchanges.
+pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<PivotMap> {
+    let desc = *a.desc();
+    assert!(desc.is_square(), "plu_factor requires a square matrix");
+    let t = desc.tile;
+    let kt = desc.mt();
+    let mesh = ctx.mesh;
+    let comm = mesh.comm();
+    let (pr, pc) = (desc.shape.pr, desc.shape.pc);
+    let mut pivots = PivotMap::default();
+
+    for k in 0..kt {
+        let ck = k % pc; // panel's process column
+        let rk = k % pr; // diagonal tile's process row
+        let diag_rank = desc.shape.rank_at(rk, ck);
+        let in_panel_col = mesh.col() == ck;
+        let panel_tiles = kt - k;
+
+        // Real (unpadded) extent of the panel.
+        let m_real = desc.m - k * t; // rows below the panel top
+        let n_real = m_real.min(t); // panel width
+
+        // --- 1. gather panel to the diagonal owner ------------------------
+        let panel_tag = |ti: usize| Tag::P2p(tags::LU + 10 + ti as u32);
+        let mut panel: Vec<S> = Vec::new();
+        if comm.rank() == diag_rank {
+            panel = vec![S::zero(); panel_tiles * t * t];
+            for ti in k..kt {
+                let src = desc.shape.rank_at(ti % pr, ck);
+                let dst_off = (ti - k) * t * t;
+                if src == comm.rank() {
+                    panel[dst_off..dst_off + t * t].copy_from_slice(a.global_tile(ti, k));
+                } else {
+                    let data = comm.recv(src, panel_tag(ti)).into_data();
+                    panel[dst_off..dst_off + t * t].copy_from_slice(&data);
+                }
+            }
+        } else if in_panel_col {
+            for ti in k..kt {
+                if a.owns_tile_row(ti) {
+                    comm.send(diag_rank, panel_tag(ti), Payload::Data(a.global_tile(ti, k).to_vec()));
+                }
+            }
+        }
+
+        // --- 2. factor the real sub-panel on the diagonal owner -----------
+        // (host-side: pivot search is latency-bound, kept on CPU as in
+        // MAGMA-style hybrid factorisations; cost charged at CPU rates.)
+        let mut piv_global: Vec<i64> = Vec::new();
+        if comm.rank() == diag_rank {
+            let piv = linalg::getrf_lda(m_real.min(panel_tiles * t), n_real, t, &mut panel)
+                .map_err(|e| match e {
+                    Error::Breakdown { detail, .. } => Error::Breakdown {
+                        method: "plu_factor",
+                        detail: format!("panel {k}: {detail}"),
+                    },
+                    other => other,
+                })?;
+            // Panel-relative pivot row -> global row.
+            piv_global = piv.iter().map(|&p| (k * t + p) as i64).collect();
+            // Charge the panel factorisation at serial-CPU rates:
+            // ~ m_real * n_real^2 flops.
+            let flops = (m_real as u64) * (n_real as u64) * (n_real as u64);
+            let profile = crate::accel::ComputeProfile::q6600_atlas();
+            ctx.charge(profile.op_cost::<S>(
+                crate::accel::OpClass::Blas3,
+                flops,
+                m_real * n_real * S::BYTES,
+                m_real * n_real * S::BYTES,
+            ));
+        }
+
+        // --- 3. scatter factored panel back, broadcast pivots -------------
+        if comm.rank() == diag_rank {
+            for ti in k..kt {
+                let dst = desc.shape.rank_at(ti % pr, ck);
+                let off = (ti - k) * t * t;
+                if dst == comm.rank() {
+                    a.global_tile_mut(ti, k).copy_from_slice(&panel[off..off + t * t]);
+                } else {
+                    comm.send(dst, panel_tag(ti), Payload::Data(panel[off..off + t * t].to_vec()));
+                }
+            }
+        } else if in_panel_col {
+            for ti in k..kt {
+                if a.owns_tile_row(ti) {
+                    let data = comm.recv(diag_rank, panel_tag(ti)).into_data();
+                    a.global_tile_mut(ti, k).copy_from_slice(&data);
+                }
+            }
+        }
+        let world = comm.world();
+        let piv_payload = if comm.rank() == diag_rank {
+            Some(Payload::Ints(piv_global.clone()))
+        } else {
+            None
+        };
+        let piv_global = world.bcast(diag_rank, tags::LU + 1, piv_payload).into_ints();
+
+        // --- 4. apply row swaps outside the panel column -------------------
+        for (j, &pg) in piv_global.iter().enumerate() {
+            let g1 = k * t + j;
+            let g2 = pg as usize;
+            if g1 != g2 {
+                pivots.swaps.push((g1, g2));
+                swap_rows_outside_panel(ctx, a, g1, g2, k);
+            }
+        }
+
+        if k + 1 == kt && n_real >= m_real {
+            break; // no trailing work after the last panel
+        }
+
+        // --- 5. U12 row: broadcast diag tile along row rk, trsm ------------
+        let row = mesh.row_comm();
+        if mesh.row() == rk {
+            let diag_payload = if mesh.col() == ck {
+                Some(Payload::Data(a.global_tile(k, k).to_vec()))
+            } else {
+                None
+            };
+            let l11 = row.bcast(ck, tags::LU + 2, diag_payload).into_data();
+            for ltj in 0..a.local_nt() {
+                let tj = desc.global_tj(mesh.col(), ltj);
+                if tj > k {
+                    let lti = desc.local_ti(k);
+                    let cost = ctx.engine.trsm_llu(&l11, a.tile_mut(lti, ltj))?;
+                    ctx.charge(cost);
+                }
+            }
+        }
+
+        // --- 6. broadcast L21 along rows, U12 along columns ----------------
+        let mut l_panel: Vec<Option<Vec<S>>> = vec![None; a.local_mt()];
+        for lti in 0..a.local_mt() {
+            let ti = desc.global_ti(mesh.row(), lti);
+            if ti > k {
+                let data = if mesh.col() == ck {
+                    Some(Payload::Data(a.tile(lti, desc.local_tj(k)).to_vec()))
+                } else {
+                    None
+                };
+                l_panel[lti] = Some(row.bcast(ck, tags::LU + 3, data).into_data());
+            }
+        }
+        let col = mesh.col_comm();
+        let mut u_panel: Vec<Option<Vec<S>>> = vec![None; a.local_nt()];
+        for ltj in 0..a.local_nt() {
+            let tj = desc.global_tj(mesh.col(), ltj);
+            if tj > k {
+                let data = if mesh.row() == rk {
+                    Some(Payload::Data(a.tile(desc.local_ti(k), ltj).to_vec()))
+                } else {
+                    None
+                };
+                u_panel[ltj] = Some(col.bcast(rk, tags::LU + 4, data).into_data());
+            }
+        }
+
+        // --- 7. trailing rank-T update (the CUBLAS-offloaded hot spot) -----
+        for lti in 0..a.local_mt() {
+            let ti = desc.global_ti(mesh.row(), lti);
+            if ti <= k {
+                continue;
+            }
+            let l_tile = l_panel[lti].as_ref().expect("L tile broadcast");
+            for ltj in 0..a.local_nt() {
+                let tj = desc.global_tj(mesh.col(), ltj);
+                if tj <= k {
+                    continue;
+                }
+                let u_tile = u_panel[ltj].as_ref().expect("U tile broadcast");
+                let cost = ctx.engine.gemm_update(a.tile_mut(lti, ltj), l_tile, u_tile)?;
+                ctx.charge(cost);
+            }
+        }
+    }
+    Ok(pivots)
+}
+
+/// Exchange global rows `g1` and `g2` in every tile column except `panel_k`
+/// (whose tiles were already pivoted inside `getrf`).
+fn swap_rows_outside_panel<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &mut DistMatrix<S>,
+    g1: usize,
+    g2: usize,
+    panel_k: usize,
+) {
+    let desc = *a.desc();
+    let t = desc.tile;
+    let mesh = ctx.mesh;
+    let comm = mesh.comm();
+    let (t1, r1) = (g1 / t, g1 % t);
+    let (t2, r2) = (g2 / t, g2 % t);
+    let pr1 = t1 % desc.shape.pr;
+    let pr2 = t2 % desc.shape.pr;
+
+    // Tile columns this rank participates in.
+    let my_cols: Vec<usize> = (0..a.local_nt())
+        .filter(|&ltj| desc.global_tj(mesh.col(), ltj) != panel_k)
+        .collect();
+    if my_cols.is_empty() {
+        return;
+    }
+
+    if pr1 == pr2 {
+        if mesh.row() == pr1 {
+            // Both rows local to this process row: in-place swap.
+            for &ltj in &my_cols {
+                let lt1 = desc.local_ti(t1);
+                let lt2 = desc.local_ti(t2);
+                if t1 == t2 {
+                    let tile = a.tile_mut(lt1, ltj);
+                    for c in 0..t {
+                        tile.swap(r1 * t + c, r2 * t + c);
+                    }
+                } else {
+                    // Two different local tiles: swap row slices via split.
+                    let (i1, i2) = (lt1, lt2);
+                    // take rows out, swap, put back (avoids double-borrow)
+                    let row1: Vec<S> = a.tile(i1, ltj)[r1 * t..(r1 + 1) * t].to_vec();
+                    let row2: Vec<S> = a.tile(i2, ltj)[r2 * t..(r2 + 1) * t].to_vec();
+                    a.tile_mut(i1, ltj)[r1 * t..(r1 + 1) * t].copy_from_slice(&row2);
+                    a.tile_mut(i2, ltj)[r2 * t..(r2 + 1) * t].copy_from_slice(&row1);
+                }
+            }
+        }
+        return;
+    }
+
+    // Rows live on different process rows: pairwise exchange within my
+    // process column.  Both sides send first (channels are buffered).
+    let (my_row_tile, my_r, peer_prow, tag_off) = if mesh.row() == pr1 {
+        (t1, r1, pr2, 0)
+    } else if mesh.row() == pr2 {
+        (t2, r2, pr1, 1)
+    } else {
+        return;
+    };
+    let peer = desc.shape.rank_at(peer_prow, mesh.col());
+    let lti = desc.local_ti(my_row_tile);
+    let mut out = Vec::with_capacity(my_cols.len() * t);
+    for &ltj in &my_cols {
+        out.extend_from_slice(&a.tile(lti, ltj)[my_r * t..(my_r + 1) * t]);
+    }
+    comm.send(peer, Tag::PivotSwap(tags::LU + tag_off), Payload::Data(out));
+    let incoming = comm.recv(peer, Tag::PivotSwap(tags::LU + (1 - tag_off))).into_data();
+    for (idx, &ltj) in my_cols.iter().enumerate() {
+        a.tile_mut(lti, ltj)[my_r * t..(my_r + 1) * t]
+            .copy_from_slice(&incoming[idx * t..(idx + 1) * t]);
+    }
+}

@@ -1,0 +1,87 @@
+//! Direct distributed solvers: factor + substitute (the paper's two-step
+//! method: `A = LU` / `A = L·L^T`, then two triangular solves).
+
+pub mod cholesky;
+pub mod lu;
+pub mod trsv;
+
+pub use cholesky::pchol_factor;
+pub use lu::{plu_factor, PivotMap};
+pub use trsv::{ptrsv, TriKind};
+
+use crate::comm::{Payload, Tag};
+use crate::dist::{ptranspose, DistMatrix, DistVector};
+use crate::pblas::Ctx;
+use crate::{Result, Scalar};
+
+/// Apply a pivot map to a distributed (column-replicated) vector, in order.
+pub fn apply_pivots<S: Scalar>(ctx: &Ctx<'_, S>, piv: &PivotMap, b: &mut DistVector<S>) {
+    let desc = *b.desc();
+    let t = desc.tile;
+    let mesh = ctx.mesh;
+    let comm = mesh.comm();
+    for (s, &(g1, g2)) in piv.swaps().iter().enumerate() {
+        let (t1, r1) = (g1 / t, g1 % t);
+        let (t2, r2) = (g2 / t, g2 % t);
+        let pr1 = t1 % desc.shape.pr;
+        let pr2 = t2 % desc.shape.pr;
+        if pr1 == pr2 {
+            if mesh.row() == pr1 {
+                if t1 == t2 {
+                    b.global_block_mut(t1).swap(r1, r2);
+                } else {
+                    let v1 = b.global_block(t1)[r1];
+                    let v2 = b.global_block(t2)[r2];
+                    b.global_block_mut(t1)[r1] = v2;
+                    b.global_block_mut(t2)[r2] = v1;
+                }
+            }
+            continue;
+        }
+        // Cross-row exchange within this process column.
+        let tag = |dir: u32| Tag::PivotSwap(4_000 + 2 * (s as u32 % 500) + dir);
+        if mesh.row() == pr1 {
+            let peer = desc.shape.rank_at(pr2, mesh.col());
+            let mine = b.global_block(t1)[r1];
+            comm.send(peer, tag(0), Payload::Scalar(mine));
+            b.global_block_mut(t1)[r1] = comm.recv(peer, tag(1)).into_scalar();
+        } else if mesh.row() == pr2 {
+            let peer = desc.shape.rank_at(pr1, mesh.col());
+            let mine = b.global_block(t2)[r2];
+            comm.send(peer, tag(1), Payload::Scalar(mine));
+            b.global_block_mut(t2)[r2] = comm.recv(peer, tag(0)).into_scalar();
+        }
+    }
+}
+
+/// Solve `A x = b` by distributed LU: factors `a` in place, then runs the
+/// pivoted forward/backward substitutions.  Returns x (same layout as b).
+pub fn plu_solve<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &mut DistMatrix<S>,
+    b: &DistVector<S>,
+) -> Result<DistVector<S>> {
+    let piv = plu_factor(ctx, a)?;
+    let mut x = b.clone_vec();
+    apply_pivots(ctx, &piv, &mut x);
+    ptrsv(ctx, a, &mut x, TriKind::LowerUnit)?;
+    ptrsv(ctx, a, &mut x, TriKind::Upper)?;
+    Ok(x)
+}
+
+/// Solve `A x = b` (SPD) by distributed Cholesky: factor, forward solve with
+/// L, transpose-redistribute, backward solve with `L^T`.
+pub fn pchol_solve<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &mut DistMatrix<S>,
+    b: &DistVector<S>,
+) -> Result<DistVector<S>> {
+    pchol_factor(ctx, a)?;
+    let mut x = b.clone_vec();
+    ptrsv(ctx, a, &mut x, TriKind::Lower)?;
+    // U = L^T: the Upper substitution only reads the (valid) upper triangle
+    // of the transposed factor; the stale strict-lower half is never touched.
+    let lt = ptranspose(ctx.mesh, a);
+    ptrsv(ctx, &lt, &mut x, TriKind::Upper)?;
+    Ok(x)
+}

@@ -1,0 +1,69 @@
+//! BiConjugate Gradients — the paper's §2: "BiCG generates two mutually
+//! orthogonal sequences of residual vectors... performed using the system's
+//! matrix and its transpose."  The transpose sequence uses
+//! [`crate::pblas::pgemv_t`], which exercises the 2-D layout's
+//! column-reduce/row-allgather path.
+
+use super::{IterConfig, IterStats};
+use crate::dist::{DistMatrix, DistVector};
+use crate::pblas::{paxpy, pdot, pgemv, pgemv_t, pnorm2, pscal, Ctx};
+use crate::{Error, Result, Scalar};
+
+/// Solve `A x = b` (general nonsymmetric) from the zero initial guess.
+pub fn bicg<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &DistMatrix<S>,
+    b: &DistVector<S>,
+    cfg: &IterConfig,
+) -> Result<(DistVector<S>, IterStats<S>)> {
+    let desc = *a.desc();
+    let mesh = ctx.mesh;
+    let bnorm = pnorm2(ctx, b);
+    let mut x = DistVector::zeros(desc, mesh.row(), mesh.col());
+    if bnorm == S::zero() {
+        return Ok((x, IterStats::new(0, S::zero(), true)));
+    }
+    let tol = S::from_f64(cfg.tol).unwrap() * bnorm;
+
+    let mut r = b.clone_vec();
+    let mut rt = b.clone_vec(); // shadow residual (r~ = r0 is the usual choice)
+    let mut p = r.clone_vec();
+    let mut pt = rt.clone_vec();
+    let mut rho = pdot(ctx, &rt, &r);
+
+    for it in 0..cfg.max_iter {
+        if rho == S::zero() {
+            return Err(Error::Breakdown {
+                method: "bicg",
+                detail: format!("rho = 0 at iteration {it}"),
+            });
+        }
+        let ap = pgemv(ctx, a, &p);
+        let atpt = pgemv_t(ctx, a, &pt);
+        let ptap = pdot(ctx, &pt, &ap);
+        if ptap == S::zero() {
+            return Err(Error::Breakdown {
+                method: "bicg",
+                detail: format!("pt^T A p = 0 at iteration {it}"),
+            });
+        }
+        let alpha = rho / ptap;
+        paxpy(ctx, alpha, &p, &mut x);
+        paxpy(ctx, -alpha, &ap, &mut r);
+        paxpy(ctx, -alpha, &atpt, &mut rt);
+        let rnorm = pnorm2(ctx, &r);
+        if rnorm <= tol {
+            return Ok((x, IterStats::new(it + 1, rnorm / bnorm, true)));
+        }
+        let rho_new = pdot(ctx, &rt, &r);
+        let beta = rho_new / rho;
+        rho = rho_new;
+        // p = r + beta p ; pt = rt + beta pt
+        pscal(ctx, beta, &mut p);
+        paxpy(ctx, S::one(), &r, &mut p);
+        pscal(ctx, beta, &mut pt);
+        paxpy(ctx, S::one(), &rt, &mut pt);
+    }
+    let rnorm = pnorm2(ctx, &r);
+    Ok((x, IterStats::new(cfg.max_iter, rnorm / bnorm, false)))
+}

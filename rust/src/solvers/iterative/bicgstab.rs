@@ -1,0 +1,84 @@
+//! BiCGSTAB — "in our library we've implemented a version of BiCG called
+//! BiCGSTAB" (paper §2): the smoothed variant that avoids A^T and BiCG's
+//! irregular convergence.
+
+use super::{IterConfig, IterStats};
+use crate::dist::{DistMatrix, DistVector};
+use crate::pblas::{paxpy, pdot, pgemv, pnorm2, pscal, Ctx};
+use crate::{Error, Result, Scalar};
+
+/// Solve `A x = b` (general nonsymmetric) from the zero initial guess.
+pub fn bicgstab<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &DistMatrix<S>,
+    b: &DistVector<S>,
+    cfg: &IterConfig,
+) -> Result<(DistVector<S>, IterStats<S>)> {
+    let desc = *a.desc();
+    let mesh = ctx.mesh;
+    let bnorm = pnorm2(ctx, b);
+    let mut x = DistVector::zeros(desc, mesh.row(), mesh.col());
+    if bnorm == S::zero() {
+        return Ok((x, IterStats::new(0, S::zero(), true)));
+    }
+    let tol = S::from_f64(cfg.tol).unwrap() * bnorm;
+
+    let mut r = b.clone_vec();
+    let r0 = b.clone_vec(); // shadow residual
+    let mut p = r.clone_vec();
+    let mut rho = pdot(ctx, &r0, &r);
+
+    for it in 0..cfg.max_iter {
+        if rho == S::zero() {
+            return Err(Error::Breakdown {
+                method: "bicgstab",
+                detail: format!("rho = 0 at iteration {it}"),
+            });
+        }
+        let v = pgemv(ctx, a, &p);
+        let r0v = pdot(ctx, &r0, &v);
+        if r0v == S::zero() {
+            return Err(Error::Breakdown {
+                method: "bicgstab",
+                detail: format!("r0.v = 0 at iteration {it}"),
+            });
+        }
+        let alpha = rho / r0v;
+        // s = r - alpha v
+        let mut s = r.clone_vec();
+        paxpy(ctx, -alpha, &v, &mut s);
+        let snorm = pnorm2(ctx, &s);
+        if snorm <= tol {
+            paxpy(ctx, alpha, &p, &mut x);
+            return Ok((x, IterStats::new(it + 1, snorm / bnorm, true)));
+        }
+        let t = pgemv(ctx, a, &s);
+        let tt = pdot(ctx, &t, &t);
+        if tt == S::zero() {
+            return Err(Error::Breakdown {
+                method: "bicgstab",
+                detail: format!("t.t = 0 at iteration {it}"),
+            });
+        }
+        let omega = pdot(ctx, &t, &s) / tt;
+        // x += alpha p + omega s
+        paxpy(ctx, alpha, &p, &mut x);
+        paxpy(ctx, omega, &s, &mut x);
+        // r = s - omega t
+        r = s;
+        paxpy(ctx, -omega, &t, &mut r);
+        let rnorm = pnorm2(ctx, &r);
+        if rnorm <= tol {
+            return Ok((x, IterStats::new(it + 1, rnorm / bnorm, true)));
+        }
+        let rho_new = pdot(ctx, &r0, &r);
+        let beta = (rho_new / rho) * (alpha / omega);
+        rho = rho_new;
+        // p = r + beta (p - omega v)
+        paxpy(ctx, -omega, &v, &mut p);
+        pscal(ctx, beta, &mut p);
+        paxpy(ctx, S::one(), &r, &mut p);
+    }
+    let rnorm = pnorm2(ctx, &r);
+    Ok((x, IterStats::new(cfg.max_iter, rnorm / bnorm, false)))
+}

@@ -1,0 +1,54 @@
+//! Conjugate gradients — the classical Krylov method the paper's §2 builds
+//! from ("one of the most used Krylov methods... solves SPD systems").
+
+use super::{IterConfig, IterStats};
+use crate::dist::{DistMatrix, DistVector};
+use crate::pblas::{paxpy, pdot, pgemv, pnorm2, pscal, Ctx};
+use crate::{Error, Result, Scalar};
+
+/// Solve `A x = b` (A SPD) from the zero initial guess.
+pub fn cg<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &DistMatrix<S>,
+    b: &DistVector<S>,
+    cfg: &IterConfig,
+) -> Result<(DistVector<S>, IterStats<S>)> {
+    let desc = *a.desc();
+    let mesh = ctx.mesh;
+    let bnorm = pnorm2(ctx, b);
+    let mut x = DistVector::zeros(desc, mesh.row(), mesh.col());
+    if bnorm == S::zero() {
+        return Ok((x, IterStats::new(0, S::zero(), true)));
+    }
+    let tol = S::from_f64(cfg.tol).unwrap() * bnorm;
+
+    let mut r = b.clone_vec();
+    let mut p = r.clone_vec();
+    let mut rr = pdot(ctx, &r, &r);
+
+    for it in 0..cfg.max_iter {
+        let ap = pgemv(ctx, a, &p);
+        let pap = pdot(ctx, &p, &ap);
+        if pap <= S::zero() {
+            return Err(Error::Breakdown {
+                method: "cg",
+                detail: format!("p^T A p = {pap} at iteration {it} (matrix not SPD?)"),
+            });
+        }
+        let alpha = rr / pap;
+        paxpy(ctx, alpha, &p, &mut x);
+        paxpy(ctx, -alpha, &ap, &mut r);
+        let rr_new = pdot(ctx, &r, &r);
+        let rnorm = rr_new.sqrt();
+        if rnorm <= tol {
+            return Ok((x, IterStats::new(it + 1, rnorm / bnorm, true)));
+        }
+        let beta = rr_new / rr;
+        rr = rr_new;
+        // p = r + beta p
+        pscal(ctx, beta, &mut p);
+        paxpy(ctx, S::one(), &r, &mut p);
+    }
+    let rnorm = pnorm2(ctx, &r);
+    Ok((x, IterStats::new(cfg.max_iter, rnorm / bnorm, false)))
+}

@@ -1,0 +1,102 @@
+//! Restarted GMRES(m) — the paper's §2: Arnoldi with Gram-Schmidt
+//! orthogonalisation, "restarting the computations after a fixed number of
+//! iterations" to bound the growing basis storage.
+//!
+//! Distributed structure: the Krylov basis is a list of [`DistVector`]s; the
+//! (m+1) x m Hessenberg least-squares problem is O(m²) data, solved
+//! redundantly on every rank with the incremental Givens QR
+//! ([`crate::linalg::givens::HessenbergQr`]) so no extra communication is
+//! needed beyond the matvecs and dots.
+
+use super::{IterConfig, IterStats};
+use crate::dist::{DistMatrix, DistVector};
+use crate::linalg::givens::HessenbergQr;
+use crate::pblas::{paxpy, pdot, pgemv, pnorm2, pscal, Ctx};
+use crate::{Result, Scalar};
+
+/// Solve `A x = b` (general nonsymmetric) from the zero initial guess with
+/// restart length `cfg.restart`.
+pub fn gmres<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &DistMatrix<S>,
+    b: &DistVector<S>,
+    cfg: &IterConfig,
+) -> Result<(DistVector<S>, IterStats<S>)> {
+    let desc = *a.desc();
+    let mesh = ctx.mesh;
+    let bnorm = pnorm2(ctx, b);
+    let mut x = DistVector::zeros(desc, mesh.row(), mesh.col());
+    if bnorm == S::zero() {
+        return Ok((x, IterStats::new(0, S::zero(), true)));
+    }
+    let tol = S::from_f64(cfg.tol).unwrap() * bnorm;
+    let m = cfg.restart.max(1);
+    let mut total_iters = 0usize;
+
+    loop {
+        // r = b - A x (fresh residual at each restart).
+        let ax = pgemv(ctx, a, &x);
+        let mut r = b.clone_vec();
+        paxpy(ctx, -S::one(), &ax, &mut r);
+        let beta = pnorm2(ctx, &r);
+        if beta <= tol {
+            return Ok((x, IterStats::new(total_iters, beta / bnorm, true)));
+        }
+        if total_iters >= cfg.max_iter {
+            return Ok((x, IterStats::new(total_iters, beta / bnorm, false)));
+        }
+
+        // Arnoldi with modified Gram-Schmidt.
+        let mut basis: Vec<DistVector<S>> = Vec::with_capacity(m + 1);
+        pscal(ctx, S::one() / beta, &mut r);
+        basis.push(r);
+        let mut qr = HessenbergQr::<S>::new(m, beta);
+        let mut k = 0usize;
+        while k < m && total_iters < cfg.max_iter {
+            let mut w = pgemv(ctx, a, &basis[k]);
+            let mut h = Vec::with_capacity(k + 2);
+            for v in basis.iter() {
+                let hij = pdot(ctx, v, &w);
+                paxpy(ctx, -hij, v, &mut w);
+                h.push(hij);
+            }
+            let wnorm = pnorm2(ctx, &w);
+            h.push(wnorm);
+            let res = qr.push_column(h);
+            total_iters += 1;
+            k += 1;
+            if wnorm == S::zero() {
+                break; // lucky breakdown: exact solution in the basis
+            }
+            pscal(ctx, S::one() / wnorm, &mut w);
+            basis.push(w);
+            if res <= tol {
+                break;
+            }
+        }
+
+        // x += V_k y, y from the triangularised least-squares problem.
+        let y = qr.solve();
+        for (j, yj) in y.iter().enumerate() {
+            paxpy(ctx, *yj, &basis[j], &mut x);
+        }
+        let res = qr.residual();
+        if res <= tol {
+            // Confirm with a true residual (restart loop re-checks too).
+            let ax = pgemv(ctx, a, &x);
+            let mut r = b.clone_vec();
+            paxpy(ctx, -S::one(), &ax, &mut r);
+            let rnorm = pnorm2(ctx, &r);
+            if rnorm <= tol {
+                return Ok((x, IterStats::new(total_iters, rnorm / bnorm, true)));
+            }
+        }
+        if total_iters >= cfg.max_iter {
+            let ax = pgemv(ctx, a, &x);
+            let mut r = b.clone_vec();
+            paxpy(ctx, -S::one(), &ax, &mut r);
+            let rnorm = pnorm2(ctx, &r);
+            return Ok((x, IterStats::new(total_iters, rnorm / bnorm, rnorm <= tol)));
+        }
+    }
+}

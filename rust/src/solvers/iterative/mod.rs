@@ -1,0 +1,119 @@
+//! Non-stationary iterative solvers (the paper's §2 set): CG, BiCG,
+//! BiCGSTAB and restarted GMRES, over distributed operands.
+//!
+//! All solvers share the same SPMD structure: matvecs via
+//! [`crate::pblas::pgemv`] (and [`crate::pblas::pgemv_t`] for BiCG's second
+//! sequence), inner products via [`crate::pblas::pdot`] — every scalar
+//! recurrence coefficient is computed from allreduced dots, so all ranks
+//! advance identically.
+
+pub mod bicg;
+pub mod bicgstab;
+pub mod cg;
+pub mod gmres;
+pub mod precond;
+
+pub use bicg::bicg;
+pub use bicgstab::bicgstab;
+pub use cg::cg;
+pub use gmres::gmres;
+pub use precond::JacobiPrecond;
+
+use crate::Scalar;
+
+/// Convergence controls shared by all iterative solvers.
+#[derive(Clone, Copy, Debug)]
+pub struct IterConfig {
+    /// Relative residual target: stop when `||r|| <= tol * ||b||`.
+    pub tol: f64,
+    /// Iteration budget (matvec count for CG/BiCG-family; total inner
+    /// iterations for GMRES).
+    pub max_iter: usize,
+    /// GMRES restart length `m` (ignored by the other methods).
+    pub restart: usize,
+}
+
+impl Default for IterConfig {
+    fn default() -> Self {
+        IterConfig { tol: 1e-8, max_iter: 500, restart: 30 }
+    }
+}
+
+/// Outcome of an iterative solve.
+#[derive(Clone, Copy, Debug)]
+pub struct IterStats<S> {
+    /// Iterations actually performed.
+    pub iterations: usize,
+    /// Final relative residual `||r|| / ||b||`.
+    pub rel_residual: S,
+    /// Whether the tolerance was met within the budget.
+    pub converged: bool,
+}
+
+impl<S: Scalar> IterStats<S> {
+    pub(crate) fn new(iterations: usize, rel_residual: S, converged: bool) -> Self {
+        IterStats { iterations, rel_residual, converged }
+    }
+}
+
+/// Named solver selector (CLI / bench harness).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IterMethod {
+    /// Conjugate gradients (SPD).
+    Cg,
+    /// BiConjugate gradients.
+    Bicg,
+    /// BiCGSTAB.
+    Bicgstab,
+    /// Restarted GMRES(m).
+    Gmres,
+}
+
+impl IterMethod {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "cg" => Ok(IterMethod::Cg),
+            "bicg" => Ok(IterMethod::Bicg),
+            "bicgstab" => Ok(IterMethod::Bicgstab),
+            "gmres" => Ok(IterMethod::Gmres),
+            other => Err(crate::Error::config(format!(
+                "unknown iterative method {other:?} (cg|bicg|bicgstab|gmres)"
+            ))),
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            IterMethod::Cg => "CG",
+            IterMethod::Bicg => "BiCG",
+            IterMethod::Bicgstab => "BiCGSTAB",
+            IterMethod::Gmres => "GMRES",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for (s, m) in [
+            ("cg", IterMethod::Cg),
+            ("BiCG", IterMethod::Bicg),
+            ("bicgstab", IterMethod::Bicgstab),
+            ("GMRES", IterMethod::Gmres),
+        ] {
+            assert_eq!(IterMethod::parse(s).unwrap(), m);
+        }
+        assert!(IterMethod::parse("sor").is_err());
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = IterConfig::default();
+        assert!(c.tol > 0.0 && c.max_iter > 0 && c.restart > 1);
+    }
+}

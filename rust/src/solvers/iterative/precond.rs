@@ -1,0 +1,99 @@
+//! Jacobi (diagonal) preconditioning — an extension beyond the paper's
+//! solver set (its future-work direction is richer preconditioning; the
+//! diagonal scaler is the natural first step and exercises the same
+//! distributed plumbing).
+//!
+//! Rather than threading M^{-1} through every solver, the preconditioner
+//! *transforms the system*: solve `(D^{-1/2} A D^{-1/2}) (D^{1/2} x) =
+//! D^{-1/2} b` — symmetric scaling that preserves SPD-ness for CG.
+
+use crate::dist::{DistMatrix, DistVector};
+use crate::pblas::Ctx;
+use crate::Scalar;
+
+/// Symmetric Jacobi scaling of a distributed system.
+pub struct JacobiPrecond<S: Scalar> {
+    /// d[i] = 1/sqrt(|A[i,i]|), replicated like a distributed vector.
+    dinv_sqrt: DistVector<S>,
+}
+
+impl<S: Scalar> JacobiPrecond<S> {
+    /// Extract the diagonal of `a` and build the scaler.  The diagonal tiles
+    /// live on the mesh diagonal; each owner broadcasts its block along its
+    /// process row, then the standard vector layout is assembled locally.
+    pub fn build(ctx: &Ctx<'_, S>, a: &DistMatrix<S>) -> Self {
+        let desc = *a.desc();
+        let t = desc.tile;
+        let mesh = ctx.mesh;
+        let row = mesh.row_comm();
+        let mut dinv = DistVector::zeros(desc, mesh.row(), mesh.col());
+        for l in 0..dinv.local_blocks() {
+            let ti = desc.global_ti(mesh.row(), l);
+            let owner_col = ti % desc.shape.pc;
+            let data = if mesh.col() == owner_col {
+                let tile = a.global_tile(ti, ti);
+                let mut d = vec![S::zero(); t];
+                for i in 0..t {
+                    d[i] = tile[i * t + i];
+                }
+                Some(crate::comm::Payload::Data(d))
+            } else {
+                None
+            };
+            let d = row.bcast(owner_col, 5_000 + ti as u32, data).into_data();
+            let blk = dinv.block_mut(l);
+            for i in 0..t {
+                let v = d[i].abs();
+                blk[i] = if v > S::zero() { S::one() / v.sqrt() } else { S::one() };
+            }
+        }
+        JacobiPrecond { dinv_sqrt: dinv }
+    }
+
+    /// Scale the matrix in place: `A := D^{-1/2} A D^{-1/2}`.
+    pub fn scale_matrix(&self, ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) {
+        let desc = *a.desc();
+        let t = desc.tile;
+        let mesh = ctx.mesh;
+        // Row scaling needs d for owned tile rows (local); column scaling
+        // needs d for owned tile cols (allgather over the column comm, same
+        // pattern as pgemv's x distribution).
+        let mut mine = Vec::new();
+        for l in 0..self.dinv_sqrt.local_blocks() {
+            mine.extend_from_slice(self.dinv_sqrt.block(l));
+        }
+        let col = mesh.col_comm();
+        let by_row = col.allgather(5_100, mine);
+        for (lti, ltj, ti, tj) in a.owned_tiles().collect::<Vec<_>>() {
+            let drow = self.dinv_sqrt.global_block(ti).to_vec();
+            let owner = tj % desc.shape.pr;
+            let off = desc.local_ti(tj) * t;
+            let dcol = by_row[owner][off..off + t].to_vec();
+            let tile = a.tile_mut(lti, ltj);
+            for i in 0..t {
+                for j in 0..t {
+                    tile[i * t + j] *= drow[i] * dcol[j];
+                }
+            }
+            ctx.charge(ctx.engine.blas1_cost(t * t));
+        }
+    }
+
+    /// Scale a rhs: `b := D^{-1/2} b`.
+    pub fn scale_rhs(&self, ctx: &Ctx<'_, S>, b: &mut DistVector<S>) {
+        for l in 0..b.local_blocks() {
+            let d = self.dinv_sqrt.block(l).to_vec();
+            let blk = b.block_mut(l);
+            for i in 0..blk.len() {
+                blk[i] *= d[i];
+            }
+            ctx.charge(ctx.engine.blas1_cost(blk.len()));
+        }
+    }
+
+    /// Recover the original unknowns: `x := D^{-1/2} x_scaled`.
+    pub fn unscale_solution(&self, ctx: &Ctx<'_, S>, x: &mut DistVector<S>) {
+        // (D^{1/2} x) was solved for, so x = D^{-1/2} x_scaled.
+        self.scale_rhs(ctx, x);
+    }
+}

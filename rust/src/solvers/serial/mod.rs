@@ -1,0 +1,391 @@
+//! Serial reference solvers — host-side, single-buffer implementations of
+//! every method the distributed layer provides.  They serve two roles:
+//!
+//! 1. **numerical oracles** for the distributed solvers' tests;
+//! 2. the **"classic programs written to be run on a single CPU"** the paper
+//!    compares against — though for *timing* the baseline is the distributed
+//!    code on a 1x1 mesh with the CPU engine (identical arithmetic, zero
+//!    communication), which is how the bench harness computes `T_1`.
+
+use crate::linalg::{self, givens::HessenbergQr};
+use crate::{Error, Result, Scalar};
+
+/// Iteration outcome (mirrors the distributed `IterStats`).
+#[derive(Clone, Copy, Debug)]
+pub struct SerialStats<S> {
+    /// Iterations performed.
+    pub iterations: usize,
+    /// Final relative residual.
+    pub rel_residual: S,
+    /// Tolerance met?
+    pub converged: bool,
+}
+
+/// Dense LU solve (destroys `a`, overwrites `b` with x).
+pub fn lu_solve<S: Scalar>(n: usize, a: &mut [S], b: &mut [S]) -> Result<()> {
+    linalg::lu::lu_solve(n, a, b)
+}
+
+/// Dense Cholesky solve (destroys `a`, overwrites `b` with x).
+pub fn chol_solve<S: Scalar>(n: usize, a: &mut [S], b: &mut [S]) -> Result<()> {
+    linalg::potrf(n, a)?;
+    linalg::trsv_l(n, a, b);
+    linalg::trsv_lt(n, a, b);
+    Ok(())
+}
+
+fn matvec<S: Scalar>(n: usize, a: &[S], x: &[S], y: &mut [S]) {
+    linalg::gemv(n, n, a, x, y);
+}
+
+/// Serial CG from the zero guess.
+pub fn cg<S: Scalar>(
+    n: usize,
+    a: &[S],
+    b: &[S],
+    tol: f64,
+    max_iter: usize,
+) -> Result<(Vec<S>, SerialStats<S>)> {
+    let bnorm = linalg::nrm2(b);
+    let mut x = vec![S::zero(); n];
+    if bnorm == S::zero() {
+        return Ok((x, SerialStats { iterations: 0, rel_residual: S::zero(), converged: true }));
+    }
+    let tol = S::from_f64(tol).unwrap() * bnorm;
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut ap = vec![S::zero(); n];
+    let mut rr = linalg::dot(&r, &r);
+    for it in 0..max_iter {
+        matvec(n, a, &p, &mut ap);
+        let pap = linalg::dot(&p, &ap);
+        if pap <= S::zero() {
+            return Err(Error::Breakdown {
+                method: "serial cg",
+                detail: format!("pAp = {pap} at iteration {it}"),
+            });
+        }
+        let alpha = rr / pap;
+        linalg::axpy(alpha, &p, &mut x);
+        linalg::axpy(-alpha, &ap, &mut r);
+        let rr_new = linalg::dot(&r, &r);
+        if rr_new.sqrt() <= tol {
+            return Ok((
+                x,
+                SerialStats {
+                    iterations: it + 1,
+                    rel_residual: rr_new.sqrt() / bnorm,
+                    converged: true,
+                },
+            ));
+        }
+        let beta = rr_new / rr;
+        rr = rr_new;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+    }
+    let res = linalg::nrm2(&r) / bnorm;
+    Ok((x, SerialStats { iterations: max_iter, rel_residual: res, converged: false }))
+}
+
+/// Serial BiCG from the zero guess.
+pub fn bicg<S: Scalar>(
+    n: usize,
+    a: &[S],
+    b: &[S],
+    tol: f64,
+    max_iter: usize,
+) -> Result<(Vec<S>, SerialStats<S>)> {
+    let bnorm = linalg::nrm2(b);
+    let mut x = vec![S::zero(); n];
+    if bnorm == S::zero() {
+        return Ok((x, SerialStats { iterations: 0, rel_residual: S::zero(), converged: true }));
+    }
+    let tol = S::from_f64(tol).unwrap() * bnorm;
+    let mut r = b.to_vec();
+    let mut rt = b.to_vec();
+    let mut p = r.clone();
+    let mut pt = rt.clone();
+    let mut ap = vec![S::zero(); n];
+    let mut atpt = vec![S::zero(); n];
+    let mut rho = linalg::dot(&rt, &r);
+    for it in 0..max_iter {
+        if rho == S::zero() {
+            return Err(Error::Breakdown {
+                method: "serial bicg",
+                detail: format!("rho = 0 at iteration {it}"),
+            });
+        }
+        matvec(n, a, &p, &mut ap);
+        linalg::gemv_t(n, n, a, &pt, &mut atpt);
+        let ptap = linalg::dot(&pt, &ap);
+        if ptap == S::zero() {
+            return Err(Error::Breakdown {
+                method: "serial bicg",
+                detail: format!("ptAp = 0 at iteration {it}"),
+            });
+        }
+        let alpha = rho / ptap;
+        linalg::axpy(alpha, &p, &mut x);
+        linalg::axpy(-alpha, &ap, &mut r);
+        linalg::axpy(-alpha, &atpt, &mut rt);
+        let rnorm = linalg::nrm2(&r);
+        if rnorm <= tol {
+            return Ok((
+                x,
+                SerialStats { iterations: it + 1, rel_residual: rnorm / bnorm, converged: true },
+            ));
+        }
+        let rho_new = linalg::dot(&rt, &r);
+        let beta = rho_new / rho;
+        rho = rho_new;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+            pt[i] = rt[i] + beta * pt[i];
+        }
+    }
+    let res = linalg::nrm2(&r) / bnorm;
+    Ok((x, SerialStats { iterations: max_iter, rel_residual: res, converged: false }))
+}
+
+/// Serial BiCGSTAB from the zero guess.
+pub fn bicgstab<S: Scalar>(
+    n: usize,
+    a: &[S],
+    b: &[S],
+    tol: f64,
+    max_iter: usize,
+) -> Result<(Vec<S>, SerialStats<S>)> {
+    let bnorm = linalg::nrm2(b);
+    let mut x = vec![S::zero(); n];
+    if bnorm == S::zero() {
+        return Ok((x, SerialStats { iterations: 0, rel_residual: S::zero(), converged: true }));
+    }
+    let tol = S::from_f64(tol).unwrap() * bnorm;
+    let mut r = b.to_vec();
+    let r0 = b.to_vec();
+    let mut p = r.clone();
+    let mut v = vec![S::zero(); n];
+    let mut t = vec![S::zero(); n];
+    let mut rho = linalg::dot(&r0, &r);
+    for it in 0..max_iter {
+        if rho == S::zero() {
+            return Err(Error::Breakdown {
+                method: "serial bicgstab",
+                detail: format!("rho = 0 at iteration {it}"),
+            });
+        }
+        matvec(n, a, &p, &mut v);
+        let r0v = linalg::dot(&r0, &v);
+        if r0v == S::zero() {
+            return Err(Error::Breakdown {
+                method: "serial bicgstab",
+                detail: format!("r0.v = 0 at iteration {it}"),
+            });
+        }
+        let alpha = rho / r0v;
+        let mut s = r.clone();
+        linalg::axpy(-alpha, &v, &mut s);
+        let snorm = linalg::nrm2(&s);
+        if snorm <= tol {
+            linalg::axpy(alpha, &p, &mut x);
+            return Ok((
+                x,
+                SerialStats { iterations: it + 1, rel_residual: snorm / bnorm, converged: true },
+            ));
+        }
+        matvec(n, a, &s, &mut t);
+        let tt = linalg::dot(&t, &t);
+        if tt == S::zero() {
+            return Err(Error::Breakdown {
+                method: "serial bicgstab",
+                detail: format!("t.t = 0 at iteration {it}"),
+            });
+        }
+        let omega = linalg::dot(&t, &s) / tt;
+        linalg::axpy(alpha, &p, &mut x);
+        linalg::axpy(omega, &s, &mut x);
+        r = s;
+        linalg::axpy(-omega, &t, &mut r);
+        let rnorm = linalg::nrm2(&r);
+        if rnorm <= tol {
+            return Ok((
+                x,
+                SerialStats { iterations: it + 1, rel_residual: rnorm / bnorm, converged: true },
+            ));
+        }
+        let rho_new = linalg::dot(&r0, &r);
+        let beta = (rho_new / rho) * (alpha / omega);
+        rho = rho_new;
+        for i in 0..n {
+            p[i] = r[i] + beta * (p[i] - omega * v[i]);
+        }
+    }
+    let res = linalg::nrm2(&r) / bnorm;
+    Ok((x, SerialStats { iterations: max_iter, rel_residual: res, converged: false }))
+}
+
+/// Serial restarted GMRES(m) from the zero guess.
+pub fn gmres<S: Scalar>(
+    n: usize,
+    a: &[S],
+    b: &[S],
+    tol: f64,
+    max_iter: usize,
+    restart: usize,
+) -> Result<(Vec<S>, SerialStats<S>)> {
+    let bnorm = linalg::nrm2(b);
+    let mut x = vec![S::zero(); n];
+    if bnorm == S::zero() {
+        return Ok((x, SerialStats { iterations: 0, rel_residual: S::zero(), converged: true }));
+    }
+    let tol_abs = S::from_f64(tol).unwrap() * bnorm;
+    let m = restart.max(1);
+    let mut total = 0usize;
+    let mut ax = vec![S::zero(); n];
+    loop {
+        matvec(n, a, &x, &mut ax);
+        let mut r: Vec<S> = b.iter().zip(&ax).map(|(&bi, &ai)| bi - ai).collect();
+        let beta = linalg::nrm2(&r);
+        if beta <= tol_abs || total >= max_iter {
+            return Ok((
+                x,
+                SerialStats {
+                    iterations: total,
+                    rel_residual: beta / bnorm,
+                    converged: beta <= tol_abs,
+                },
+            ));
+        }
+        linalg::scal(S::one() / beta, &mut r);
+        let mut basis = vec![r];
+        let mut qr = HessenbergQr::<S>::new(m, beta);
+        let mut k = 0;
+        while k < m && total < max_iter {
+            let mut w = vec![S::zero(); n];
+            matvec(n, a, &basis[k], &mut w);
+            let mut h = Vec::with_capacity(k + 2);
+            for v in &basis {
+                let hij = linalg::dot(v, &w);
+                linalg::axpy(-hij, v, &mut w);
+                h.push(hij);
+            }
+            let wnorm = linalg::nrm2(&w);
+            h.push(wnorm);
+            let res = qr.push_column(h);
+            total += 1;
+            k += 1;
+            if wnorm == S::zero() {
+                break;
+            }
+            linalg::scal(S::one() / wnorm, &mut w);
+            basis.push(w);
+            if res <= tol_abs {
+                break;
+            }
+        }
+        let y = qr.solve();
+        for (j, yj) in y.iter().enumerate() {
+            linalg::axpy(*yj, &basis[j], &mut x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn spd_system(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let mut rng = Prng::new(seed);
+        let mut g = vec![0.0f64; n * n];
+        rng.fill_normal(&mut g);
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += g[i * n + k] * g[j * n + k];
+                }
+                a[i * n + j] = s;
+            }
+            a[i * n + i] += n as f64;
+        }
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).sin()).collect();
+        let mut b = vec![0.0; n];
+        linalg::gemv(n, n, &a, &x_true, &mut b);
+        (a, b, x_true)
+    }
+
+    fn nonsym_system(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let mut rng = Prng::new(seed);
+        let mut a = vec![0.0f64; n * n];
+        rng.fill_normal(&mut a);
+        for i in 0..n {
+            a[i * n + i] += n as f64; // diagonally dominant
+        }
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).cos()).collect();
+        let mut b = vec![0.0; n];
+        linalg::gemv(n, n, &a, &x_true, &mut b);
+        (a, b, x_true)
+    }
+
+    #[test]
+    fn serial_direct_solvers() {
+        let n = 40;
+        let (a, b, x_true) = spd_system(n, 1);
+        let mut af = a.clone();
+        let mut xb = b.clone();
+        lu_solve(n, &mut af, &mut xb).unwrap();
+        for i in 0..n {
+            assert!((xb[i] - x_true[i]).abs() < 1e-8, "lu");
+        }
+        let mut af = a.clone();
+        let mut xb = b.clone();
+        chol_solve(n, &mut af, &mut xb).unwrap();
+        for i in 0..n {
+            assert!((xb[i] - x_true[i]).abs() < 1e-8, "chol");
+        }
+    }
+
+    #[test]
+    fn serial_cg_converges() {
+        let n = 60;
+        let (a, b, x_true) = spd_system(n, 2);
+        let (x, st) = cg(n, &a, &b, 1e-12, 400).unwrap();
+        assert!(st.converged, "res {}", st.rel_residual);
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn serial_bicg_bicgstab_gmres_converge() {
+        let n = 50;
+        let (a, b, x_true) = nonsym_system(n, 3);
+        let (x, st) = bicg(n, &a, &b, 1e-12, 400).unwrap();
+        assert!(st.converged, "bicg res {}", st.rel_residual);
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-6, "bicg");
+        }
+        let (x, st) = bicgstab(n, &a, &b, 1e-12, 400).unwrap();
+        assert!(st.converged, "bicgstab res {}", st.rel_residual);
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-6, "bicgstab");
+        }
+        let (x, st) = gmres(n, &a, &b, 1e-12, 400, 25).unwrap();
+        assert!(st.converged, "gmres res {}", st.rel_residual);
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-6, "gmres");
+        }
+    }
+
+    #[test]
+    fn gmres_restart_shorter_than_needed_still_converges() {
+        let n = 50;
+        let (a, b, _x) = nonsym_system(n, 4);
+        let (_x, st) = gmres(n, &a, &b, 1e-10, 500, 5).unwrap();
+        assert!(st.converged, "restarted gmres res {}", st.rel_residual);
+    }
+}

@@ -1,0 +1,115 @@
+//! Number / table formatting for bench reports (EXPERIMENTS.md output).
+
+/// Format seconds with an adaptive unit (ns/µs/ms/s).
+pub fn secs(s: f64) -> String {
+    if !s.is_finite() {
+        return format!("{s}");
+    }
+    let a = s.abs();
+    if a >= 1.0 {
+        format!("{s:.3} s")
+    } else if a >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if a >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Format a FLOP/s rate (K/M/G/T).
+pub fn flops(f: f64) -> String {
+    let a = f.abs();
+    if a >= 1e12 {
+        format!("{:.2} TFLOP/s", f / 1e12)
+    } else if a >= 1e9 {
+        format!("{:.2} GFLOP/s", f / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2} MFLOP/s", f / 1e6)
+    } else {
+        format!("{f:.0} FLOP/s")
+    }
+}
+
+/// Format a byte count (KiB/MiB/GiB).
+pub fn bytes(b: f64) -> String {
+    let a = b.abs();
+    if a >= (1u64 << 30) as f64 {
+        format!("{:.2} GiB", b / (1u64 << 30) as f64)
+    } else if a >= (1u64 << 20) as f64 {
+        format!("{:.2} MiB", b / (1u64 << 20) as f64)
+    } else if a >= 1024.0 {
+        format!("{:.2} KiB", b / 1024.0)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Render an aligned ASCII table: `header` then `rows`.
+pub fn table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let cols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(cols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: Vec<String>, widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+        }
+        line.push('\n');
+        line
+    };
+    out.push_str(&fmt_row(header.iter().map(|s| s.to_string()).collect(), &widths));
+    let mut sep = String::from("|");
+    for w in &widths {
+        sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+    }
+    sep.push('\n');
+    out.push_str(&sep);
+    for row in rows {
+        out.push_str(&fmt_row(row.clone(), &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn secs_units() {
+        assert!(secs(2.5).contains("2.500 s"));
+        assert!(secs(2.5e-3).contains("ms"));
+        assert!(secs(2.5e-6).contains("µs"));
+        assert!(secs(2.5e-9).contains("ns"));
+    }
+
+    #[test]
+    fn flops_units() {
+        assert!(flops(3.2e12).contains("TFLOP"));
+        assert!(flops(3.2e9).contains("GFLOP"));
+        assert!(flops(3.2e6).contains("MFLOP"));
+    }
+
+    #[test]
+    fn bytes_units() {
+        assert!(bytes(2.0 * 1024.0 * 1024.0 * 1024.0).contains("GiB"));
+        assert!(bytes(2.0 * 1024.0 * 1024.0).contains("MiB"));
+        assert!(bytes(2048.0).contains("KiB"));
+        assert!(bytes(12.0).contains('B'));
+    }
+
+    #[test]
+    fn table_aligns() {
+        let t = table(
+            &["p", "speedup"],
+            &[vec!["1".into(), "1.00".into()], vec!["16".into(), "11.31".into()]],
+        );
+        assert!(t.contains("| p  | speedup |"));
+        assert!(t.lines().count() == 4);
+    }
+}

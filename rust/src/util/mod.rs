@@ -1,0 +1,11 @@
+//! Small in-tree utilities the offline crate set forces us to own:
+//! a deterministic PRNG, a property-testing helper, wall-clock timers with
+//! summary statistics, and number formatting for the bench reports.
+
+pub mod fmt;
+pub mod prng;
+pub mod prop;
+pub mod timer;
+
+pub use prng::Prng;
+pub use timer::{Stopwatch, TimerStats};

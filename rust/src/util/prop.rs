@@ -1,0 +1,71 @@
+//! Minimal property-testing helper (no proptest in the offline crate set).
+//!
+//! `forall(cases, seed, f)` runs `f` against `cases` deterministic seeded
+//! [`Prng`] streams and reports the failing case's seed so it can be replayed
+//! verbatim (`replay(seed, f)`).  No shrinking — our generators take explicit
+//! size parameters, so tests shrink by construction (start small).
+
+use super::prng::Prng;
+
+/// Run `f` over `cases` deterministic pseudo-random cases derived from
+/// `seed`.  Panics with the case index + derived seed on first failure.
+pub fn forall<F: FnMut(&mut Prng)>(cases: usize, seed: u64, mut f: F) {
+    for case in 0..cases {
+        let case_seed = seed ^ (0x9e37_79b9_7f4a_7c15u64.wrapping_mul(case as u64 + 1));
+        let mut rng = Prng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(payload) = result {
+            eprintln!(
+                "property failed at case {case}/{cases} (replay with seed {case_seed:#x})"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Replay a single failing case by its derived seed.
+pub fn replay<F: FnOnce(&mut Prng)>(case_seed: u64, f: F) {
+    let mut rng = Prng::new(case_seed);
+    f(&mut rng);
+}
+
+/// Pick one element of a slice.
+pub fn choose<'a, T>(rng: &mut Prng, xs: &'a [T]) -> &'a T {
+    &xs[rng.below(xs.len())]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall(25, 1, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn forall_cases_differ() {
+        let mut first = Vec::new();
+        forall(10, 2, |rng| first.push(rng.next_u64()));
+        assert_eq!(first.len(), 10);
+        let unique: std::collections::HashSet<_> = first.iter().collect();
+        assert_eq!(unique.len(), 10, "cases must use distinct streams");
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failure() {
+        forall(10, 3, |rng| assert!(rng.uniform() < 0.5));
+    }
+
+    #[test]
+    fn choose_in_slice() {
+        let xs = [1, 2, 3];
+        let mut rng = Prng::new(5);
+        for _ in 0..20 {
+            assert!(xs.contains(choose(&mut rng, &xs)));
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Wall-clock timing utilities for the bench harness and metrics.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    /// Seconds elapsed since `start`.
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Online summary statistics over a stream of samples (seconds).
+#[derive(Clone, Debug, Default)]
+pub struct TimerStats {
+    n: usize,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl TimerStats {
+    /// Empty stats.
+    pub fn new() -> Self {
+        TimerStats { n: 0, sum: 0.0, sum_sq: 0.0, min: f64::INFINITY, max: 0.0 }
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, secs: f64) {
+        self.n += 1;
+        self.sum += secs;
+        self.sum_sq += secs * secs;
+        self.min = self.min.min(secs);
+        self.max = self.max.max(secs);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    /// Total seconds.
+    pub fn total(&self) -> f64 {
+        self.sum
+    }
+
+    /// Mean seconds (0 if empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.sum / self.n as f64 }
+    }
+
+    /// Sample standard deviation (0 if < 2 samples).
+    pub fn stddev(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        ((self.sum_sq / self.n as f64 - m * m).max(0.0) * self.n as f64 / (self.n - 1) as f64)
+            .sqrt()
+    }
+
+    /// Fastest sample (inf if empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Slowest sample.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Merge another stats object into this one.
+    pub fn merge(&mut self, other: &TimerStats) {
+        self.n += other.n;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Run `f` `iters` times after `warmup` discarded runs; return stats.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> TimerStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = TimerStats::new();
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        f();
+        stats.record(sw.secs());
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let mut s = TimerStats::new();
+        for v in [1.0, 2.0, 3.0] {
+            s.record(v);
+        }
+        assert_eq!(s.count(), 3);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 3.0);
+        assert!((s.stddev() - 1.0).abs() < 1e-12);
+        assert!((s.total() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_merge() {
+        let mut a = TimerStats::new();
+        a.record(1.0);
+        let mut b = TimerStats::new();
+        b.record(3.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut calls = 0;
+        let s = bench(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(s.count(), 5);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(sw.secs() >= 0.004);
+    }
+}

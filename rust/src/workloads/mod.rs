@@ -1,0 +1,242 @@
+//! Workload generators: the linear systems the paper's introduction
+//! motivates ("from physics and engineering to macroeconometric modeling").
+//!
+//! Each workload is a deterministic element function — every rank
+//! regenerates exactly its own shard with no data movement (the paper's
+//! step 2, "initialize matrices and vectors in the host memory") — plus a
+//! right-hand side with a *known* solution so residual checks are exact.
+
+use crate::Scalar;
+
+/// A named linear-system workload with deterministic elements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// Dense symmetric positive definite (Cholesky / CG).
+    Spd,
+    /// Dense diagonally-dominant nonsymmetric (LU / BiCG / BiCGSTAB / GMRES).
+    DiagDominant,
+    /// 2-D Poisson 5-point stencil on a `g x g` grid, stored dense
+    /// (n = g²) — the engineering PDE workload.
+    Poisson2d,
+    /// Macroeconometric simultaneous-equations structure: dense country
+    /// blocks on the diagonal, sparse trade-linkage coupling off-diagonal
+    /// (the paper authors' own application domain).
+    Econometric,
+}
+
+impl Workload {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "spd" => Ok(Workload::Spd),
+            "diagdom" | "dense" | "nonsym" => Ok(Workload::DiagDominant),
+            "poisson" | "poisson2d" => Ok(Workload::Poisson2d),
+            "econ" | "econometric" => Ok(Workload::Econometric),
+            other => Err(crate::Error::config(format!(
+                "unknown workload {other:?} (spd|diagdom|poisson2d|econometric)"
+            ))),
+        }
+    }
+
+    /// Is the generated matrix symmetric positive definite?
+    pub fn is_spd(&self) -> bool {
+        matches!(self, Workload::Spd | Workload::Poisson2d)
+    }
+
+    /// Element function for an `n x n` instance of this workload.
+    pub fn elem<S: Scalar>(&self, n: usize) -> impl Fn(usize, usize) -> S + Clone + Send + Sync {
+        let kind = *self;
+        move |i, j| S::from_f64(elem_f64(kind, n, i, j)).unwrap()
+    }
+
+    /// The known solution the rhs is generated from.
+    pub fn x_true<S: Scalar>(&self, _n: usize) -> impl Fn(usize) -> S + Clone + Send + Sync {
+        move |i| S::from_f64(x_true_f64(i)).unwrap()
+    }
+
+    /// Right-hand side b = A x_true (O(n) per element; evaluated lazily by
+    /// each rank for its own blocks).
+    pub fn rhs<S: Scalar>(&self, n: usize) -> impl Fn(usize) -> S + Clone + Send + Sync {
+        let kind = *self;
+        move |i| {
+            let mut s = 0.0;
+            match kind {
+                // Poisson rows have <= 5 nonzeros: sum only those.
+                Workload::Poisson2d => {
+                    let g = isqrt(n);
+                    for j in poisson_neighbors(g, i) {
+                        s += elem_f64(kind, n, i, j) * x_true_f64(j);
+                    }
+                }
+                _ => {
+                    for j in 0..n {
+                        s += elem_f64(kind, n, i, j) * x_true_f64(j);
+                    }
+                }
+            }
+            S::from_f64(s).unwrap()
+        }
+    }
+}
+
+fn x_true_f64(i: usize) -> f64 {
+    ((i as f64) * 0.21).sin() + 1.0
+}
+
+fn isqrt(n: usize) -> usize {
+    let g = (n as f64).sqrt().round() as usize;
+    assert_eq!(g * g, n, "poisson2d needs a square size (got n={n})");
+    g
+}
+
+fn poisson_neighbors(g: usize, i: usize) -> Vec<usize> {
+    let (r, c) = (i / g, i % g);
+    let mut out = vec![i];
+    if r > 0 {
+        out.push(i - g);
+    }
+    if r + 1 < g {
+        out.push(i + g);
+    }
+    if c > 0 {
+        out.push(i - 1);
+    }
+    if c + 1 < g {
+        out.push(i + 1);
+    }
+    out
+}
+
+fn elem_f64(kind: Workload, n: usize, i: usize, j: usize) -> f64 {
+    match kind {
+        Workload::Spd => {
+            let base = (((i * 37 + j * 61) % 97) as f64) / 97.0 - 0.5;
+            let sym = base + ((((j * 37 + i * 61) % 97) as f64) / 97.0 - 0.5);
+            if i == j {
+                2.0 * n as f64 + sym
+            } else {
+                0.5 * sym
+            }
+        }
+        Workload::DiagDominant => {
+            let v = (((i * 13 + j * 29 + 7) % 101) as f64) / 101.0 - 0.5;
+            if i == j {
+                n as f64 + 1.0 + v
+            } else {
+                v
+            }
+        }
+        Workload::Poisson2d => {
+            let g = isqrt(n);
+            let (ri, ci) = (i / g, i % g);
+            let (rj, cj) = (j / g, j % g);
+            if i == j {
+                4.0
+            } else if (ri == rj && ci.abs_diff(cj) == 1) || (ci == cj && ri.abs_diff(rj) == 1) {
+                -1.0
+            } else {
+                0.0
+            }
+        }
+        Workload::Econometric => {
+            // Country blocks of 32 equations; dense within a block,
+            // weak trade coupling between blocks decaying with distance.
+            const BS: usize = 32;
+            let (bi, bj) = (i / BS, j / BS);
+            if bi == bj {
+                let v = (((i * 17 + j * 23 + 3) % 89) as f64) / 89.0 - 0.5;
+                if i == j {
+                    BS as f64 * 2.0 + v.abs() + 1.0
+                } else {
+                    v
+                }
+            } else {
+                let d = bi.abs_diff(bj) as f64;
+                let v = (((i * 7 + j * 11 + 1) % 83) as f64) / 83.0 - 0.5;
+                v * 0.3 / (d * d)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Workload::parse("spd").unwrap(), Workload::Spd);
+        assert_eq!(Workload::parse("poisson2d").unwrap(), Workload::Poisson2d);
+        assert_eq!(Workload::parse("econ").unwrap(), Workload::Econometric);
+        assert!(Workload::parse("nope").is_err());
+    }
+
+    #[test]
+    fn spd_is_symmetric_and_dominant() {
+        let n = 40;
+        let f = Workload::Spd.elem::<f64>(n);
+        for i in 0..n {
+            let mut off = 0.0;
+            for j in 0..n {
+                assert_eq!(f(i, j), f(j, i), "symmetry ({i},{j})");
+                if i != j {
+                    off += f(i, j).abs();
+                }
+            }
+            assert!(f(i, i) > off, "row {i} not dominant: {} vs {off}", f(i, i));
+        }
+    }
+
+    #[test]
+    fn diagdom_rows_dominant() {
+        let n = 50;
+        let f = Workload::DiagDominant.elem::<f64>(n);
+        for i in 0..n {
+            let off: f64 =
+                (0..n).filter(|&j| j != i).map(|j| f(i, j).abs()).sum();
+            assert!(f(i, i).abs() > off);
+        }
+    }
+
+    #[test]
+    fn poisson_structure() {
+        let g = 5;
+        let n = g * g;
+        let f = Workload::Poisson2d.elem::<f64>(n);
+        assert_eq!(f(0, 0), 4.0);
+        assert_eq!(f(0, 1), -1.0);
+        assert_eq!(f(0, g), -1.0);
+        assert_eq!(f(0, 2), 0.0);
+        // row ends don't wrap
+        assert_eq!(f(g - 1, g), 0.0);
+        // symmetric
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(f(i, j), f(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn rhs_matches_dense_sum() {
+        let n = 25;
+        for w in [Workload::Spd, Workload::DiagDominant, Workload::Poisson2d] {
+            let f = w.elem::<f64>(n);
+            let rhs = w.rhs::<f64>(n);
+            let xt = w.x_true::<f64>(n);
+            for i in 0..n {
+                let want: f64 = (0..n).map(|j| f(i, j) * xt(j)).sum();
+                assert!((rhs(i) - want).abs() < 1e-12, "{w:?} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn econometric_block_structure() {
+        let n = 96;
+        let f = Workload::Econometric.elem::<f64>(n);
+        // within-block entries larger than cross-block
+        assert!(f(0, 0) > 1.0);
+        assert!(f(0, 80).abs() < 0.5, "far blocks weakly coupled: {}", f(0, 80));
+    }
+}

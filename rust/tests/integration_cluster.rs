@@ -1,0 +1,170 @@
+//! End-to-end cluster tests: the public `Cluster` facade over every solver
+//! and workload, on both engine arms (the XLA arm needs `make artifacts`).
+
+use cuplss::accel::EngineKind;
+use cuplss::cluster::{Cluster, ClusterConfig, Method};
+use cuplss::comm::NetworkModel;
+use cuplss::solvers::{IterConfig, IterMethod};
+use cuplss::workloads::Workload;
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&artifacts_dir()).join("manifest.txt").exists()
+}
+
+fn cpu_cluster(ranks: usize, tile: usize) -> Cluster {
+    Cluster::new(ClusterConfig {
+        ranks,
+        tile,
+        engine: EngineKind::CpuSerial,
+        net: NetworkModel::gigabit_ethernet(),
+        artifact_dir: artifacts_dir(),
+        iter: IterConfig { tol: 1e-10, max_iter: 600, restart: 30 },
+    })
+    .expect("cluster")
+}
+
+#[test]
+fn all_methods_all_workload_pairings_cpu() {
+    let cluster = cpu_cluster(4, 8);
+    let cases: &[(Workload, Method, usize)] = &[
+        (Workload::DiagDominant, Method::Lu, 40),
+        (Workload::Spd, Method::Lu, 40),
+        (Workload::Spd, Method::Cholesky, 40),
+        (Workload::Spd, Method::Iterative(IterMethod::Cg), 40),
+        (Workload::DiagDominant, Method::Iterative(IterMethod::Bicg), 40),
+        (Workload::DiagDominant, Method::Iterative(IterMethod::Bicgstab), 40),
+        (Workload::DiagDominant, Method::Iterative(IterMethod::Gmres), 40),
+        (Workload::Econometric, Method::Lu, 64),
+        (Workload::Econometric, Method::Iterative(IterMethod::Bicgstab), 64),
+        (Workload::Poisson2d, Method::Iterative(IterMethod::Cg), 36),
+        (Workload::Poisson2d, Method::Cholesky, 49),
+    ];
+    for &(w, m, n) in cases {
+        let report = cluster.solve::<f64>(w, n, m).unwrap_or_else(|e| {
+            panic!("{} on {w:?} n={n}: {e}", m.name());
+        });
+        assert!(
+            report.max_err < 1e-5,
+            "{} on {w:?} n={n}: max_err {}",
+            m.name(),
+            report.max_err
+        );
+        assert!(report.makespan() > 0.0);
+        if let Some((_, _, converged)) = report.iter_stats {
+            assert!(converged, "{} on {w:?} did not converge", m.name());
+        }
+    }
+}
+
+#[test]
+fn f32_solves_work() {
+    let cluster = cpu_cluster(4, 8);
+    let report = cluster.solve::<f32>(Workload::DiagDominant, 32, Method::Lu).unwrap();
+    assert!(report.max_err < 1e-2, "f32 LU max_err {}", report.max_err);
+    let report = cluster
+        .solve::<f32>(Workload::Spd, 32, Method::Iterative(IterMethod::Cg))
+        .unwrap();
+    assert!(report.max_err < 1e-2, "f32 CG max_err {}", report.max_err);
+}
+
+#[test]
+fn report_metrics_are_consistent() {
+    let cluster = cpu_cluster(4, 8);
+    let report = cluster.solve::<f64>(Workload::DiagDominant, 48, Method::Lu).unwrap();
+    assert_eq!(report.per_rank.len(), 4);
+    for m in &report.per_rank {
+        // clock decomposition can't exceed the total
+        assert!(m.compute + m.comm_wait + m.transfer <= m.vtime + 1e-9);
+        assert!(m.msgs > 0, "every rank communicates in a 2x2 LU");
+    }
+    assert!(report.makespan() >= report.per_rank.iter().map(|m| m.vtime).fold(0.0, f64::max));
+    assert!(report.comm_fraction() >= 0.0 && report.comm_fraction() <= 1.0);
+    assert!(report.total_bytes() > 0);
+    assert!(report.summary().contains("LU"));
+}
+
+#[test]
+fn makespan_shrinks_with_ranks_under_ideal_network() {
+    let mk = |ranks| {
+        Cluster::new(ClusterConfig {
+            ranks,
+            tile: 8,
+            engine: EngineKind::CpuSerial,
+            net: NetworkModel::ideal(),
+            artifact_dir: artifacts_dir(),
+            iter: IterConfig::default(),
+        })
+        .unwrap()
+        .solve::<f64>(Workload::DiagDominant, 64, Method::Lu)
+        .unwrap()
+        .makespan()
+    };
+    let t1 = mk(1);
+    let t4 = mk(4);
+    assert!(t4 < t1, "P=4 {t4} must beat P=1 {t1}");
+}
+
+#[test]
+fn xla_engine_cluster_end_to_end() {
+    // The full three-layer path: rust coordinator -> PJRT executables
+    // (Pallas GEMM + portable-HLO factor tiles) on every rank.
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let cluster = Cluster::new(ClusterConfig {
+        ranks: 4,
+        tile: 128,
+        engine: EngineKind::Accelerated,
+        net: NetworkModel::gigabit_ethernet(),
+        artifact_dir: artifacts_dir(),
+        iter: IterConfig { tol: 1e-9, max_iter: 400, restart: 30 },
+    })
+    .expect("accelerated cluster");
+    // LU on a padded size (exercises identity padding through XLA tiles).
+    let report = cluster.solve::<f64>(Workload::DiagDominant, 200, Method::Lu).unwrap();
+    assert!(report.max_err < 1e-6, "XLA LU max_err {}", report.max_err);
+    assert!(report.total_transfer() > 0.0, "accelerated arm must charge PCIe time");
+    // An iterative method through the Pallas GEMV path.
+    let report = cluster
+        .solve::<f64>(Workload::Spd, 200, Method::Iterative(IterMethod::Bicgstab))
+        .unwrap();
+    assert!(report.max_err < 1e-5, "XLA BiCGSTAB max_err {}", report.max_err);
+    let (_, _, conv) = report.iter_stats.unwrap();
+    assert!(conv);
+}
+
+#[test]
+fn accelerated_vs_cpu_same_answer() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let n = 150;
+    let cpu = Cluster::new(ClusterConfig {
+        ranks: 2,
+        tile: 128,
+        engine: EngineKind::CpuSerial,
+        artifact_dir: artifacts_dir(),
+        ..Default::default()
+    })
+    .unwrap()
+    .solve::<f64>(Workload::Spd, n, Method::Cholesky)
+    .unwrap();
+    let xla = Cluster::new(ClusterConfig {
+        ranks: 2,
+        tile: 128,
+        engine: EngineKind::Accelerated,
+        artifact_dir: artifacts_dir(),
+        ..Default::default()
+    })
+    .unwrap()
+    .solve::<f64>(Workload::Spd, n, Method::Cholesky)
+    .unwrap();
+    // Both close to the true solution; engines agree to solver tolerance.
+    assert!(cpu.max_err < 1e-7 && xla.max_err < 1e-7, "{} {}", cpu.max_err, xla.max_err);
+}

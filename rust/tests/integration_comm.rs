@@ -1,0 +1,181 @@
+//! Integration + property tests of the message-passing substrate:
+//! collectives composed, interleaved on sub-groups, and stressed with
+//! seeded random payloads (in-tree property harness, no proptest offline).
+
+use cuplss::comm::{NetworkModel, Payload, ReduceOp, Tag, World};
+use cuplss::mesh::{Mesh, MeshShape};
+use cuplss::util::prop;
+
+#[test]
+fn allreduce_equals_serial_sum_property() {
+    // For random world sizes and payload lengths, allreduce == serial sum.
+    prop::forall(15, 0xC0FFEE, |rng| {
+        let p = 1 + rng.below(8);
+        let len = 1 + rng.below(50);
+        let seed = rng.next_u64();
+        let out = World::run::<f64, _, _>(p, NetworkModel::ideal(), move |comm| {
+            let mut local = cuplss::util::Prng::new(seed ^ comm.rank() as u64);
+            let mine: Vec<f64> = (0..len).map(|_| local.normal()).collect();
+            let got = comm.world().allreduce_vec(1, mine.clone(), ReduceOp::Sum);
+            (mine, got)
+        });
+        let mut want = vec![0.0; len];
+        for (mine, _) in &out {
+            for (w, m) in want.iter_mut().zip(mine) {
+                *w += m;
+            }
+        }
+        for (_, got) in &out {
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-9);
+            }
+        }
+    });
+}
+
+#[test]
+fn bcast_arbitrary_roots_property() {
+    prop::forall(15, 0xBEEF, |rng| {
+        let p = 1 + rng.below(9);
+        let root = rng.below(p);
+        let len = 1 + rng.below(64);
+        let out = World::run::<f32, _, _>(p, NetworkModel::ideal(), move |comm| {
+            let data = if comm.rank() == root {
+                Some(Payload::Data(
+                    (0..len).map(|i| (i + root) as f32).collect(),
+                ))
+            } else {
+                None
+            };
+            comm.world().bcast(root, 9, data).into_data()
+        });
+        for v in out {
+            assert_eq!(v.len(), len);
+            assert_eq!(v[0], root as f32);
+        }
+    });
+}
+
+#[test]
+fn gather_scatter_inverse_property() {
+    prop::forall(10, 0xFACE, |rng| {
+        let p = 1 + rng.below(6);
+        let root = rng.below(p);
+        let out = World::run::<f64, _, _>(p, NetworkModel::ideal(), move |comm| {
+            let g = comm.world();
+            let mine = vec![comm.rank() as f64; comm.rank() + 1];
+            let blocks = g.gather(root, 3, mine.clone());
+            let back = g.scatter(root, 4, blocks);
+            (mine, back)
+        });
+        for (mine, back) in out {
+            assert_eq!(mine, back, "scatter(gather(x)) == x");
+        }
+    });
+}
+
+#[test]
+fn interleaved_collectives_on_row_and_col_groups() {
+    // Row and column collectives interleave without cross-matching:
+    // every rank does row-allreduce then col-allreduce then world barrier,
+    // several times, with tags reused across iterations.
+    let (pr, pc) = (3usize, 3usize);
+    let out = World::run::<f64, _, _>(pr * pc, NetworkModel::gigabit_ethernet(), move |comm| {
+        let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+        let mut acc = 0.0;
+        for it in 0..10 {
+            let row_sum = mesh
+                .row_comm()
+                .allreduce_scalar(40, (comm.rank() + it) as f64, ReduceOp::Sum);
+            let col_sum = mesh
+                .col_comm()
+                .allreduce_scalar(41, (comm.rank() * 2 + it) as f64, ReduceOp::Sum);
+            mesh.world().barrier(42);
+            acc += row_sum + col_sum;
+        }
+        acc
+    });
+    // Deterministic expected value per rank.
+    for (rank, got) in out.iter().enumerate() {
+        let (r, c) = MeshShape::new(pr, pc).coords(rank);
+        let mut want = 0.0;
+        for it in 0..10 {
+            let row_sum: f64 =
+                (0..pc).map(|cc| (MeshShape::new(pr, pc).rank_at(r, cc) + it) as f64).sum();
+            let col_sum: f64 = (0..pr)
+                .map(|rr| (MeshShape::new(pr, pc).rank_at(rr, c) * 2 + it) as f64)
+                .sum();
+            want += row_sum + col_sum;
+        }
+        assert!((got - want).abs() < 1e-9, "rank {rank}: {got} vs {want}");
+    }
+}
+
+#[test]
+fn p2p_heavy_crossing_traffic() {
+    // All-pairs exchange with per-pair tags: no message may be lost,
+    // duplicated or cross-delivered.
+    let p = 6usize;
+    let out = World::run::<f64, _, _>(p, NetworkModel::ideal(), move |comm| {
+        let me = comm.rank();
+        for dst in 0..p {
+            if dst != me {
+                comm.send(
+                    dst,
+                    Tag::P2p((me * p + dst) as u32),
+                    Payload::Data(vec![me as f64, dst as f64]),
+                );
+            }
+        }
+        let mut sum = 0.0;
+        for src in 0..p {
+            if src != me {
+                let v = comm.recv(src, Tag::P2p((src * p + me) as u32)).into_data();
+                assert_eq!(v, vec![src as f64, me as f64]);
+                sum += v[0];
+            }
+        }
+        sum
+    });
+    let total: f64 = (0..p).map(|r| r as f64).sum();
+    for (me, got) in out.iter().enumerate() {
+        assert_eq!(*got, total - me as f64);
+    }
+}
+
+#[test]
+fn makespan_reflects_critical_path_chain() {
+    // A chain 0 -> 1 -> 2 -> 3 of 1 MiB messages: the last rank's clock must
+    // be ~3x the single-hop cost.
+    let net = NetworkModel::gigabit_ethernet();
+    let elems = (1usize << 20) / 8;
+    let out = World::run::<f64, _, _>(4, net, move |comm| {
+        let me = comm.rank();
+        if me > 0 {
+            comm.recv(me - 1, Tag::P2p(me as u32)).into_data();
+        }
+        if me < 3 {
+            comm.send(me + 1, Tag::P2p((me + 1) as u32), Payload::Data(vec![0.0; elems]));
+        }
+        comm.clock().now()
+    });
+    let hop = net.p2p_secs(1 << 20);
+    assert!((out[3] - 3.0 * hop).abs() < hop * 0.01, "{} vs {}", out[3], 3.0 * hop);
+    // rank 0 pays only its own NIC occupancy
+    let occupy = (1u64 << 20) as f64 * net.beta;
+    assert!((out[0] - occupy).abs() < 1e-12);
+}
+
+#[test]
+fn maxabsloc_ties_break_deterministically() {
+    // Two ranks contribute the same |value|: everyone must agree on the
+    // smaller index.
+    let out = World::run::<f64, _, _>(4, NetworkModel::ideal(), |comm| {
+        let v = if comm.rank() == 1 || comm.rank() == 3 { -5.0 } else { 1.0 };
+        comm.world().allreduce_maxabsloc(7, v, comm.rank() as i64)
+    });
+    for (v, i) in out {
+        assert_eq!(v, -5.0);
+        assert_eq!(i, 1, "tie must break to the smaller index");
+    }
+}

@@ -1,0 +1,187 @@
+//! Property tests of the block-cyclic distribution layer: ownership
+//! invariants, round-trips, transposes, and PBLAS consistency under random
+//! shapes (seeded in-tree property harness).
+
+use std::sync::Arc;
+
+use cuplss::accel::CpuEngine;
+use cuplss::comm::{NetworkModel, World};
+use cuplss::dist::{
+    gather_matrix, gather_vector, ptranspose, Descriptor, DistMatrix, DistVector,
+};
+use cuplss::mesh::{Mesh, MeshShape};
+use cuplss::pblas::{pdot, pgemv, pgemv_t, Ctx};
+use cuplss::util::prop;
+
+#[test]
+fn every_tile_has_exactly_one_owner_property() {
+    prop::forall(30, 0xD157, |rng| {
+        let m = 1 + rng.below(200);
+        let n = 1 + rng.below(200);
+        let tile = 1 + rng.below(16);
+        let pr = 1 + rng.below(4);
+        let pc = 1 + rng.below(4);
+        let desc = Descriptor::new(m, n, tile, MeshShape::new(pr, pc));
+        for ti in 0..desc.mt() {
+            for tj in 0..desc.nt() {
+                let (orow, ocol) = desc.owner(ti, tj);
+                assert!(orow < pr && ocol < pc);
+                // local index round-trips
+                assert_eq!(desc.global_ti(orow, desc.local_ti(ti)), ti);
+                assert_eq!(desc.global_tj(ocol, desc.local_tj(tj)), tj);
+            }
+        }
+        // local counts partition the tile grid
+        let total: usize =
+            (0..pr).map(|r| desc.local_mt(r)).sum::<usize>() * 0
+                + (0..pr)
+                    .flat_map(|r| (0..pc).map(move |c| (r, c)))
+                    .map(|(r, c)| desc.local_mt(r) * desc.local_nt(c))
+                    .sum::<usize>();
+        assert_eq!(total, desc.mt() * desc.nt());
+    });
+}
+
+#[test]
+fn matrix_gather_roundtrip_property() {
+    prop::forall(8, 0xD158, |rng| {
+        let m = 5 + rng.below(40);
+        let n = 5 + rng.below(40);
+        let tile = 2 + rng.below(7);
+        let pr = 1 + rng.below(3);
+        let pc = 1 + rng.below(3);
+        let out = World::run::<f64, _, _>(pr * pc, NetworkModel::ideal(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+            let desc = Descriptor::new(m, n, tile, mesh.shape());
+            let dm = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+                (i * 1000 + j) as f64
+            });
+            gather_matrix(&mesh, &dm)
+        });
+        let g = out[0].as_ref().unwrap();
+        for i in 0..m {
+            for j in 0..n {
+                assert_eq!(g[i * n + j], (i * 1000 + j) as f64);
+            }
+        }
+    });
+}
+
+#[test]
+fn double_transpose_is_identity_property() {
+    prop::forall(8, 0xD159, |rng| {
+        let n = 5 + rng.below(30);
+        let tile = 2 + rng.below(6);
+        let pr = 1 + rng.below(3);
+        let pc = 1 + rng.below(3);
+        let out = World::run::<f64, _, _>(pr * pc, NetworkModel::ideal(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+            let desc = Descriptor::new(n, n, tile, mesh.shape());
+            let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+                ((i * 31 + j * 17) % 13) as f64
+            });
+            let att = ptranspose(&mesh, &ptranspose(&mesh, &a));
+            let ga = gather_matrix(&mesh, &a);
+            let gt = gather_matrix(&mesh, &att);
+            (ga, gt)
+        });
+        let (ga, gt) = &out[0];
+        assert_eq!(ga.as_ref().unwrap(), gt.as_ref().unwrap());
+    });
+}
+
+#[test]
+fn pgemv_transpose_consistency_property() {
+    // <A x, y> == <x, A^T y> for random sizes/meshes — ties pgemv and
+    // pgemv_t together without a serial reference.
+    prop::forall(6, 0xD15A, |rng| {
+        let n = 8 + rng.below(40);
+        let tile = 4 + rng.below(5);
+        let pr = 1 + rng.below(3);
+        let pc = 1 + rng.below(3);
+        let seed = rng.next_u64();
+        let out = World::run::<f64, _, _>(pr * pc, NetworkModel::ideal(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+            let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(tile)));
+            let desc = Descriptor::new(n, n, tile, mesh.shape());
+            let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+                let mut h = seed ^ ((i * 131 + j) as u64);
+                h ^= h >> 33;
+                h = h.wrapping_mul(0xff51afd7ed558ccd);
+                ((h >> 11) as f64 / (1u64 << 53) as f64) - 0.5
+            });
+            let x = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| {
+                (i as f64 * 0.37).sin()
+            });
+            let y = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| {
+                (i as f64 * 0.11).cos()
+            });
+            let ax = pgemv(&ctx, &a, &x);
+            let aty = pgemv_t(&ctx, &a, &y);
+            let lhs = pdot(&ctx, &ax, &y);
+            let rhs = pdot(&ctx, &x, &aty);
+            (lhs, rhs)
+        });
+        for (lhs, rhs) in out {
+            assert!(
+                (lhs - rhs).abs() < 1e-9 * (1.0 + lhs.abs()),
+                "<Ax,y>={lhs} vs <x,Aty>={rhs}"
+            );
+        }
+    });
+}
+
+#[test]
+fn vector_scatter_gather_property() {
+    prop::forall(8, 0xD15B, |rng| {
+        let m = 3 + rng.below(60);
+        let tile = 2 + rng.below(8);
+        let pr = 1 + rng.below(3);
+        let pc = 1 + rng.below(3);
+        let out = World::run::<f32, _, _>(pr * pc, NetworkModel::ideal(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+            let desc = Descriptor::new(m, m, tile, mesh.shape());
+            let v = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| (i * i) as f32);
+            gather_vector(&mesh, &v)
+        });
+        let g = out[0].as_ref().unwrap();
+        for i in 0..m {
+            assert_eq!(g[i], (i * i) as f32);
+        }
+    });
+}
+
+#[test]
+fn replicas_stay_identical_after_ops() {
+    // Column-replicated vectors must remain bit-identical across process
+    // columns after pgemv (the invariant the whole layout rests on).
+    let (pr, pc) = (2usize, 3usize);
+    let n = 24usize;
+    let out = World::run::<f64, _, _>(pr * pc, NetworkModel::ideal(), move |comm| {
+        let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+        let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(4)));
+        let desc = Descriptor::new(n, n, 4, mesh.shape());
+        let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+            ((i + 2 * j) % 7) as f64
+        });
+        let x = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| i as f64);
+        let y = pgemv(&ctx, &a, &x);
+        // serialize local blocks with row id for cross-replica comparison
+        let mut blocks = Vec::new();
+        for l in 0..y.local_blocks() {
+            blocks.extend_from_slice(y.block(l));
+        }
+        (mesh.row(), mesh.col(), blocks)
+    });
+    for r in 0..pr {
+        let replicas: Vec<&Vec<f64>> = out
+            .iter()
+            .filter(|(row, _, _)| *row == r)
+            .map(|(_, _, b)| b)
+            .collect();
+        assert_eq!(replicas.len(), pc);
+        for w in replicas.windows(2) {
+            assert_eq!(w[0], w[1], "row {r} replicas diverged");
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! Integration: PJRT runtime loads the AOT artifacts and the XLA engine
+//! agrees numerically with the pure-rust CPU engine on every tile op.
+//!
+//! Requires `make artifacts` to have run (skips with a message otherwise).
+
+use std::sync::Arc;
+
+use cuplss::accel::{CpuEngine, Engine, XlaEngine};
+use cuplss::runtime::Runtime;
+use cuplss::util::Prng;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+const T: usize = 128;
+
+fn rand_tile(rng: &mut Prng) -> Vec<f64> {
+    let mut v = vec![0.0f64; T * T];
+    rng.fill_normal(&mut v);
+    v
+}
+
+fn rand_vec(rng: &mut Prng) -> Vec<f64> {
+    let mut v = vec![0.0f64; T];
+    rng.fill_normal(&mut v);
+    v
+}
+
+fn lower_unit(rng: &mut Prng) -> Vec<f64> {
+    let mut l = vec![0.0f64; T * T];
+    for i in 0..T {
+        for j in 0..i {
+            l[i * T + j] = rng.normal() * 0.1;
+        }
+        l[i * T + i] = 1.0;
+    }
+    l
+}
+
+fn lower_nonunit(rng: &mut Prng) -> Vec<f64> {
+    let mut l = lower_unit(rng);
+    for i in 0..T {
+        l[i * T + i] = rng.normal().abs() + 1.0;
+    }
+    l
+}
+
+fn upper_nonunit(rng: &mut Prng) -> Vec<f64> {
+    let mut u = vec![0.0f64; T * T];
+    for i in 0..T {
+        for j in i + 1..T {
+            u[i * T + j] = rng.normal() * 0.1;
+        }
+        u[i * T + i] = rng.normal().abs() + 1.0;
+    }
+    u
+}
+
+fn spd_tile(rng: &mut Prng) -> Vec<f64> {
+    let g = rand_tile(rng);
+    let mut a = vec![0.0f64; T * T];
+    for i in 0..T {
+        for j in 0..=i {
+            let mut s = 0.0;
+            for k in 0..T {
+                s += g[i * T + k] * g[j * T + k];
+            }
+            a[i * T + j] = s;
+            a[j * T + i] = s;
+        }
+        a[i * T + i] += T as f64;
+    }
+    a
+}
+
+fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len());
+    let mut worst = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        worst = worst.max((x - y).abs());
+    }
+    assert!(worst < tol, "{what}: max abs diff {worst}");
+}
+
+#[test]
+fn xla_engine_matches_cpu_engine_on_all_ops() {
+    let Some(rt) = runtime() else { return };
+    let xla = XlaEngine::<f64>::new(&rt, T).expect("xla engine");
+    let cpu = CpuEngine::new(T);
+    let mut rng = Prng::new(2024);
+
+    // gemm
+    let (a, b) = (rand_tile(&mut rng), rand_tile(&mut rng));
+    let mut c1 = vec![0.0; T * T];
+    let mut c2 = vec![0.0; T * T];
+    xla.gemm(&a, &b, &mut c1).unwrap();
+    Engine::<f64>::gemm(&cpu, &a, &b, &mut c2).unwrap();
+    assert_close(&c1, &c2, 1e-9, "gemm");
+
+    // gemm_update
+    let c0 = rand_tile(&mut rng);
+    let mut c1 = c0.clone();
+    let mut c2 = c0.clone();
+    xla.gemm_update(&mut c1, &a, &b).unwrap();
+    Engine::<f64>::gemm_update(&cpu, &mut c2, &a, &b).unwrap();
+    assert_close(&c1, &c2, 1e-9, "gemm_update");
+
+    // gemm_nt_update
+    let mut c1 = c0.clone();
+    let mut c2 = c0.clone();
+    xla.gemm_nt_update(&mut c1, &a, &b).unwrap();
+    Engine::<f64>::gemm_nt_update(&cpu, &mut c2, &a, &b).unwrap();
+    assert_close(&c1, &c2, 1e-9, "gemm_nt_update");
+
+    // gemv family
+    let x = rand_vec(&mut rng);
+    let mut y1 = vec![0.0; T];
+    let mut y2 = vec![0.0; T];
+    xla.gemv(&a, &x, &mut y1).unwrap();
+    Engine::<f64>::gemv(&cpu, &a, &x, &mut y2).unwrap();
+    assert_close(&y1, &y2, 1e-9, "gemv");
+
+    xla.gemv_t(&a, &x, &mut y1).unwrap();
+    Engine::<f64>::gemv_t(&cpu, &a, &x, &mut y2).unwrap();
+    assert_close(&y1, &y2, 1e-9, "gemv_t");
+
+    let y0 = rand_vec(&mut rng);
+    let mut y1 = y0.clone();
+    let mut y2 = y0.clone();
+    xla.gemv_update(&mut y1, &a, &x).unwrap();
+    Engine::<f64>::gemv_update(&cpu, &mut y2, &a, &x).unwrap();
+    assert_close(&y1, &y2, 1e-9, "gemv_update");
+
+    // triangular block solves
+    let l = lower_unit(&mut rng);
+    let b0 = rand_tile(&mut rng);
+    let mut b1 = b0.clone();
+    let mut b2 = b0.clone();
+    xla.trsm_llu(&l, &mut b1).unwrap();
+    Engine::<f64>::trsm_llu(&cpu, &l, &mut b2).unwrap();
+    assert_close(&b1, &b2, 1e-8, "trsm_llu");
+
+    let u = upper_nonunit(&mut rng);
+    let mut b1 = b0.clone();
+    let mut b2 = b0.clone();
+    xla.trsm_ru(&mut b1, &u).unwrap();
+    Engine::<f64>::trsm_ru(&cpu, &mut b2, &u).unwrap();
+    assert_close(&b1, &b2, 1e-8, "trsm_ru");
+
+    let ln = lower_nonunit(&mut rng);
+    let mut b1 = b0.clone();
+    let mut b2 = b0.clone();
+    xla.trsm_rlt(&mut b1, &ln).unwrap();
+    Engine::<f64>::trsm_rlt(&cpu, &mut b2, &ln).unwrap();
+    assert_close(&b1, &b2, 1e-8, "trsm_rlt");
+
+    // triangular vector solves
+    let v0 = rand_vec(&mut rng);
+
+    let mut v1 = v0.clone();
+    let mut v2 = v0.clone();
+    xla.trsv_lu(&l, &mut v1).unwrap();
+    Engine::<f64>::trsv_lu(&cpu, &l, &mut v2).unwrap();
+    assert_close(&v1, &v2, 1e-8, "trsv_lu");
+
+    let mut v1 = v0.clone();
+    let mut v2 = v0.clone();
+    xla.trsv_l(&ln, &mut v1).unwrap();
+    Engine::<f64>::trsv_l(&cpu, &ln, &mut v2).unwrap();
+    assert_close(&v1, &v2, 1e-8, "trsv_l");
+
+    let mut v1 = v0.clone();
+    let mut v2 = v0.clone();
+    xla.trsv_u(&u, &mut v1).unwrap();
+    Engine::<f64>::trsv_u(&cpu, &u, &mut v2).unwrap();
+    assert_close(&v1, &v2, 1e-8, "trsv_u");
+
+    let mut v1 = v0.clone();
+    let mut v2 = v0.clone();
+    xla.trsv_lt(&ln, &mut v1).unwrap();
+    Engine::<f64>::trsv_lt(&cpu, &ln, &mut v2).unwrap();
+    assert_close(&v1, &v2, 1e-8, "trsv_lt");
+
+    // potrf
+    let spd = spd_tile(&mut rng);
+    let mut a1 = spd.clone();
+    let mut a2 = spd.clone();
+    xla.potrf(&mut a1).unwrap();
+    Engine::<f64>::potrf(&cpu, &mut a2).unwrap();
+    assert_close(&a1, &a2, 1e-8, "potrf");
+}
+
+#[test]
+fn xla_engine_f32_variant_works() {
+    let Some(rt) = runtime() else { return };
+    let xla = XlaEngine::<f32>::new(&rt, T).expect("f32 engine");
+    let mut rng = Prng::new(7);
+    let mut a = vec![0.0f32; T * T];
+    let mut b = vec![0.0f32; T * T];
+    rng.fill_normal(&mut a);
+    rng.fill_normal(&mut b);
+    let mut c = vec![0.0f32; T * T];
+    xla.gemm(&a, &b, &mut c).unwrap();
+    let cpu = CpuEngine::new(T);
+    let mut want = vec![0.0f32; T * T];
+    Engine::<f32>::gemm(&cpu, &a, &b, &mut want).unwrap();
+    let mut worst = 0.0f32;
+    for (x, y) in c.iter().zip(&want) {
+        worst = worst.max((x - y).abs());
+    }
+    assert!(worst < 1e-2, "f32 gemm diff {worst}");
+}
+
+#[test]
+fn concurrent_execution_from_many_threads() {
+    // The engine is shared across rank threads; PJRT must tolerate
+    // concurrent execute calls (validates the Send/Sync wrapper).
+    let Some(rt) = runtime() else { return };
+    let xla = std::sync::Arc::new(XlaEngine::<f64>::new(&rt, T).expect("engine"));
+    let mut handles = Vec::new();
+    for seed in 0..8u64 {
+        let e = xla.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Prng::new(seed);
+            let a = {
+                let mut v = vec![0.0f64; T * T];
+                rng.fill_normal(&mut v);
+                v
+            };
+            let x = {
+                let mut v = vec![0.0f64; T];
+                rng.fill_normal(&mut v);
+                v
+            };
+            for _ in 0..5 {
+                let mut y = vec![0.0f64; T];
+                e.gemv(&a, &x, &mut y).unwrap();
+                // spot-check one element
+                let want: f64 = (0..T).map(|j| a[j] * x[j]).sum();
+                assert!((y[0] - want).abs() < 1e-9);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn runtime_caches_executables() {
+    let Some(rt) = runtime() else { return };
+    let _e1 = rt.op::<f64>("gemm", T).unwrap();
+    let after_first = rt.compiled_count();
+    let _e2 = rt.op::<f64>("gemm", T).unwrap();
+    assert_eq!(rt.compiled_count(), after_first, "second fetch must hit cache");
+}
+
+#[test]
+fn manifest_covers_engine_ops() {
+    let Some(rt) = runtime() else { return };
+    for &op in cuplss::accel::TILE_OPS {
+        for dtype in ["f32", "f64"] {
+            for tile in [128usize, 256] {
+                assert!(
+                    rt.manifest().find(op, dtype, tile).is_some(),
+                    "missing artifact {op}_{dtype}_{tile}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn executable_rejects_bad_inputs() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.op::<f64>("gemm", T).unwrap();
+    // wrong arity
+    let a = vec![0.0f64; T * T];
+    assert!(exe.run::<f64>(&[&a]).is_err());
+    // wrong length
+    let short = vec![0.0f64; 3];
+    assert!(exe.run::<f64>(&[&a, &short]).is_err());
+}
