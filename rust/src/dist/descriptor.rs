@@ -1,0 +1,219 @@
+//! The block-cyclic distribution descriptor — the single source of truth for
+//! "which rank owns which tile, and where does it live locally".
+//!
+//! A global `m x n` matrix is cut into `TILE x TILE` tiles (the last tile row
+//! and column are padded; see [`crate::dist::matrix`]).  Tile `(ti, tj)` is
+//! assigned to the process at mesh coordinates `(ti mod pr, tj mod pc)` —
+//! the classic 2-D block-cyclic map (ScaLAPACK / CUPLSS), which keeps every
+//! phase of a right-looking factorisation load-balanced as the active window
+//! shrinks.  Locally a rank stores its tiles densely: global tile row `ti`
+//! sits at local row `ti / pr`, so global↔local index conversion is pure
+//! arithmetic — no lookup tables, no communication.
+
+use crate::mesh::MeshShape;
+
+/// Integer ceiling division (`ceil(a / b)`).
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// Shape + layout descriptor of one distributed matrix (or the row layout of
+/// a distributed vector).  `Copy`, compared by value: two operands are
+/// conformable exactly when their descriptors are equal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockDesc {
+    /// Global rows.
+    pub m: usize,
+    /// Global columns.
+    pub n: usize,
+    /// Tile edge (every local tile op is `tile x tile`).
+    pub tile: usize,
+    /// The process-grid extents this matrix is distributed over.
+    pub shape: MeshShape,
+}
+
+/// The name the rest of the crate uses for [`BlockDesc`].
+pub type Descriptor = BlockDesc;
+
+impl BlockDesc {
+    /// Describe an `m x n` matrix in `tile`-sized tiles over `shape`.
+    pub fn new(m: usize, n: usize, tile: usize, shape: MeshShape) -> Self {
+        assert!(m > 0 && n > 0, "empty matrix {m}x{n}");
+        assert!(tile > 0, "tile size must be positive");
+        BlockDesc { m, n, tile, shape }
+    }
+
+    /// Is the global shape square?
+    pub fn is_square(&self) -> bool {
+        self.m == self.n
+    }
+
+    /// Tile rows (`ceil(m / tile)`).
+    pub fn mt(&self) -> usize {
+        ceil_div(self.m, self.tile)
+    }
+
+    /// Tile columns (`ceil(n / tile)`).
+    pub fn nt(&self) -> usize {
+        ceil_div(self.n, self.tile)
+    }
+
+    /// Mesh coordinates of the rank owning tile `(ti, tj)`.
+    pub fn owner(&self, ti: usize, tj: usize) -> (usize, usize) {
+        (ti % self.shape.pr, tj % self.shape.pc)
+    }
+
+    /// Local tile-row index of global tile row `ti` on its owning process
+    /// row.
+    pub fn local_ti(&self, ti: usize) -> usize {
+        ti / self.shape.pr
+    }
+
+    /// Local tile-column index of global tile column `tj` on its owning
+    /// process column.
+    pub fn local_tj(&self, tj: usize) -> usize {
+        tj / self.shape.pc
+    }
+
+    /// Global tile row stored at local row `lti` on process row `prow`.
+    pub fn global_ti(&self, prow: usize, lti: usize) -> usize {
+        lti * self.shape.pr + prow
+    }
+
+    /// Global tile column stored at local column `ltj` on process column
+    /// `pcol`.
+    pub fn global_tj(&self, pcol: usize, ltj: usize) -> usize {
+        ltj * self.shape.pc + pcol
+    }
+
+    /// Number of tile rows owned by process row `prow`
+    /// (`|{ti < mt : ti ≡ prow (mod pr)}|`).
+    pub fn local_mt(&self, prow: usize) -> usize {
+        let (mt, pr) = (self.mt(), self.shape.pr);
+        debug_assert!(prow < pr, "process row {prow} outside mesh with {pr} rows");
+        (mt + pr - 1 - prow) / pr
+    }
+
+    /// Number of tile columns owned by process column `pcol`.
+    pub fn local_nt(&self, pcol: usize) -> usize {
+        let (nt, pc) = (self.nt(), self.shape.pc);
+        debug_assert!(pcol < pc, "process column {pcol} outside mesh with {pc} columns");
+        (nt + pc - 1 - pcol) / pc
+    }
+
+    /// Padded global extent of the tile-row range (`mt * tile >= m`).
+    pub fn padded_m(&self) -> usize {
+        self.mt() * self.tile
+    }
+
+    /// Padded global extent of the tile-column range.
+    pub fn padded_n(&self) -> usize {
+        self.nt() * self.tile
+    }
+
+    /// The value stored at padded position `(gi, gj)` when it falls outside
+    /// the real matrix: identity padding.  Pad rows/columns carry `e_i` so a
+    /// padded LU/Cholesky factorisation embeds the original factorisation
+    /// exactly, and padded matvec/dot contributions vanish against the
+    /// zero-padded vector blocks.
+    pub fn pad<S: crate::Scalar>(&self, gi: usize, gj: usize) -> S {
+        debug_assert!(gi >= self.m || gj >= self.n);
+        if gi == gj {
+            S::one()
+        } else {
+            S::zero()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn desc(m: usize, n: usize, tile: usize, pr: usize, pc: usize) -> BlockDesc {
+        BlockDesc::new(m, n, tile, MeshShape::new(pr, pc))
+    }
+
+    #[test]
+    fn tile_counts_round_up() {
+        let d = desc(13, 7, 4, 2, 3);
+        assert_eq!(d.mt(), 4);
+        assert_eq!(d.nt(), 2);
+        assert_eq!(d.padded_m(), 16);
+        assert_eq!(d.padded_n(), 8);
+        assert!(!d.is_square());
+    }
+
+    #[test]
+    fn global_local_owner_roundtrip_non_divisible() {
+        // Non-divisible everything: 5 tile rows over 3 process rows,
+        // 7 tile cols over 2 process cols.
+        let d = desc(5 * 3 - 1, 7 * 2 - 1, 3, 3, 2);
+        for ti in 0..d.mt() {
+            for tj in 0..d.nt() {
+                let (r, c) = d.owner(ti, tj);
+                assert!(r < 3 && c < 2);
+                assert_eq!(d.global_ti(r, d.local_ti(ti)), ti);
+                assert_eq!(d.global_tj(c, d.local_tj(tj)), tj);
+            }
+        }
+    }
+
+    #[test]
+    fn local_counts_partition_the_grid() {
+        for (m, n, tile, pr, pc) in
+            [(1, 1, 1, 4, 4), (17, 11, 3, 2, 3), (64, 64, 8, 3, 5), (9, 30, 4, 4, 1)]
+        {
+            let d = desc(m, n, tile, pr, pc);
+            let rows: usize = (0..pr).map(|r| d.local_mt(r)).sum();
+            let cols: usize = (0..pc).map(|c| d.local_nt(c)).sum();
+            assert_eq!(rows, d.mt(), "{m}x{n}/{tile} on {pr}x{pc}");
+            assert_eq!(cols, d.nt());
+            // And each count matches a direct enumeration.
+            for r in 0..pr {
+                let direct = (0..d.mt()).filter(|ti| ti % pr == r).count();
+                assert_eq!(d.local_mt(r), direct);
+            }
+            for c in 0..pc {
+                let direct = (0..d.nt()).filter(|tj| tj % pc == c).count();
+                assert_eq!(d.local_nt(c), direct);
+            }
+        }
+    }
+
+    #[test]
+    fn ranks_without_tiles_have_zero_count() {
+        // 1 tile row over 4 process rows: rows 1..3 own nothing.
+        let d = desc(3, 3, 4, 4, 4);
+        assert_eq!(d.mt(), 1);
+        assert_eq!(d.local_mt(0), 1);
+        for r in 1..4 {
+            assert_eq!(d.local_mt(r), 0);
+        }
+    }
+
+    #[test]
+    fn descriptors_compare_by_value() {
+        let a = desc(8, 8, 4, 2, 2);
+        let b = desc(8, 8, 4, 2, 2);
+        let c = desc(8, 8, 2, 2, 2);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn identity_padding_values() {
+        let d = desc(5, 5, 4, 1, 1);
+        assert_eq!(d.pad::<f64>(6, 6), 1.0);
+        assert_eq!(d.pad::<f64>(6, 5), 0.0);
+        assert_eq!(d.pad::<f64>(2, 7), 0.0);
+    }
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+}

@@ -1,0 +1,240 @@
+//! The distributed dense matrix: one rank's shard of a 2-D block-cyclic
+//! matrix.
+//!
+//! Storage is tile-major: `local_mt x local_nt` tiles, each a packed
+//! row-major `tile x tile` buffer, so every local operand handed to the
+//! [`crate::accel::Engine`] is one of a closed set of fixed-shape buffers
+//! (the AOT-executable contract).  Edge tiles are **identity padded**
+//! ([`BlockDesc::pad`]): out-of-range diagonal entries are 1, off-diagonal 0,
+//! which embeds the real factorisation exactly inside the padded one and
+//! keeps padded matvec contributions at zero against zero-padded vectors.
+
+use super::descriptor::Descriptor;
+use crate::Scalar;
+
+/// One rank's shard of a block-cyclic distributed matrix.
+#[derive(Clone, Debug)]
+pub struct DistMatrix<S: Scalar> {
+    desc: Descriptor,
+    prow: usize,
+    pcol: usize,
+    lmt: usize,
+    lnt: usize,
+    /// `lmt * lnt` tiles, row-major by (local tile row, local tile col).
+    tiles: Vec<Vec<S>>,
+}
+
+impl<S: Scalar> DistMatrix<S> {
+    /// The all-zero shard for the rank at mesh coordinates `(prow, pcol)`.
+    pub fn zeros(desc: Descriptor, prow: usize, pcol: usize) -> Self {
+        assert!(
+            prow < desc.shape.pr && pcol < desc.shape.pc,
+            "coords ({prow},{pcol}) outside mesh {}x{}",
+            desc.shape.pr,
+            desc.shape.pc
+        );
+        let lmt = desc.local_mt(prow);
+        let lnt = desc.local_nt(pcol);
+        let t2 = desc.tile * desc.tile;
+        let tiles = (0..lmt * lnt).map(|_| vec![S::zero(); t2]).collect();
+        DistMatrix { desc, prow, pcol, lmt, lnt, tiles }
+    }
+
+    /// Build this rank's shard from a global element function `f(i, j)`.
+    /// Every rank evaluates only its own tiles (the paper's step 2: each
+    /// node initialises its shard locally, no data movement).  Positions
+    /// outside `m x n` take the identity padding.
+    pub fn from_fn(
+        desc: Descriptor,
+        prow: usize,
+        pcol: usize,
+        f: impl Fn(usize, usize) -> S,
+    ) -> Self {
+        let mut a = Self::zeros(desc, prow, pcol);
+        let t = desc.tile;
+        for lti in 0..a.lmt {
+            let ti = desc.global_ti(prow, lti);
+            for ltj in 0..a.lnt {
+                let tj = desc.global_tj(pcol, ltj);
+                let tile = &mut a.tiles[lti * a.lnt + ltj];
+                for r in 0..t {
+                    let gi = ti * t + r;
+                    for (c, slot) in tile[r * t..(r + 1) * t].iter_mut().enumerate() {
+                        let gj = tj * t + c;
+                        *slot = if gi < desc.m && gj < desc.n {
+                            f(gi, gj)
+                        } else {
+                            desc.pad(gi, gj)
+                        };
+                    }
+                }
+            }
+        }
+        a
+    }
+
+    /// Rebuild a shard from a flat tile stream (local tile-major order, as
+    /// produced by the gather/scatter redistributions).
+    pub(crate) fn from_tiles(
+        desc: Descriptor,
+        prow: usize,
+        pcol: usize,
+        data: Vec<S>,
+    ) -> Self {
+        let mut a = Self::zeros(desc, prow, pcol);
+        let t2 = desc.tile * desc.tile;
+        assert_eq!(data.len(), a.lmt * a.lnt * t2, "tile stream length mismatch");
+        for (l, tile) in a.tiles.iter_mut().enumerate() {
+            tile.copy_from_slice(&data[l * t2..(l + 1) * t2]);
+        }
+        a
+    }
+
+    /// The layout descriptor.
+    pub fn desc(&self) -> &Descriptor {
+        &self.desc
+    }
+
+    /// This rank's process row.
+    pub fn prow(&self) -> usize {
+        self.prow
+    }
+
+    /// This rank's process column.
+    pub fn pcol(&self) -> usize {
+        self.pcol
+    }
+
+    /// Local tile rows on this rank.
+    pub fn local_mt(&self) -> usize {
+        self.lmt
+    }
+
+    /// Local tile columns on this rank.
+    pub fn local_nt(&self) -> usize {
+        self.lnt
+    }
+
+    /// Does this rank's process row own global tile row `ti`?
+    pub fn owns_tile_row(&self, ti: usize) -> bool {
+        ti % self.desc.shape.pr == self.prow
+    }
+
+    /// Does this rank's process column own global tile column `tj`?
+    pub fn owns_tile_col(&self, tj: usize) -> bool {
+        tj % self.desc.shape.pc == self.pcol
+    }
+
+    /// Local tile at `(lti, ltj)` (packed row-major `tile x tile`).
+    pub fn tile(&self, lti: usize, ltj: usize) -> &[S] {
+        &self.tiles[lti * self.lnt + ltj]
+    }
+
+    /// Mutable local tile at `(lti, ltj)`.
+    pub fn tile_mut(&mut self, lti: usize, ltj: usize) -> &mut [S] {
+        &mut self.tiles[lti * self.lnt + ltj]
+    }
+
+    /// Tile addressed by *global* tile coordinates; this rank must own it.
+    pub fn global_tile(&self, ti: usize, tj: usize) -> &[S] {
+        debug_assert_eq!(self.desc.owner(ti, tj), (self.prow, self.pcol));
+        self.tile(self.desc.local_ti(ti), self.desc.local_tj(tj))
+    }
+
+    /// Mutable tile addressed by global tile coordinates (returned as the
+    /// owned buffer so callers can `clone()` it straight into a payload).
+    pub fn global_tile_mut(&mut self, ti: usize, tj: usize) -> &mut Vec<S> {
+        debug_assert_eq!(self.desc.owner(ti, tj), (self.prow, self.pcol));
+        let idx = self.desc.local_ti(ti) * self.lnt + self.desc.local_tj(tj);
+        &mut self.tiles[idx]
+    }
+
+    /// Iterate this rank's tiles as `(lti, ltj, ti, tj)` — local indices
+    /// paired with the global tile coordinates they hold.
+    pub fn owned_tiles(&self) -> impl Iterator<Item = (usize, usize, usize, usize)> + '_ {
+        let (desc, prow, pcol, lnt) = (self.desc, self.prow, self.pcol, self.lnt);
+        (0..self.lmt).flat_map(move |lti| {
+            (0..lnt).map(move |ltj| {
+                (lti, ltj, desc.global_ti(prow, lti), desc.global_tj(pcol, ltj))
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::MeshShape;
+
+    fn desc(m: usize, n: usize, tile: usize, pr: usize, pc: usize) -> Descriptor {
+        Descriptor::new(m, n, tile, MeshShape::new(pr, pc))
+    }
+
+    #[test]
+    fn shards_jointly_cover_every_element_once() {
+        let d = desc(13, 9, 4, 2, 3);
+        let mut seen = vec![0u32; d.m * d.n];
+        for r in 0..2 {
+            for c in 0..3 {
+                let a = DistMatrix::from_fn(d, r, c, |i, j| (i * 100 + j) as f64);
+                for (lti, ltj, ti, tj) in a.owned_tiles() {
+                    let tile = a.tile(lti, ltj);
+                    for rr in 0..d.tile {
+                        for cc in 0..d.tile {
+                            let (gi, gj) = (ti * d.tile + rr, tj * d.tile + cc);
+                            if gi < d.m && gj < d.n {
+                                assert_eq!(tile[rr * d.tile + cc], (gi * 100 + gj) as f64);
+                                seen[gi * d.n + gj] += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        assert!(seen.iter().all(|&k| k == 1), "every element owned exactly once");
+    }
+
+    #[test]
+    fn edge_tiles_are_identity_padded() {
+        let d = desc(5, 5, 4, 1, 1);
+        let a = DistMatrix::from_fn(d, 0, 0, |_, _| 7.0f64);
+        // Tile (1,1) holds global rows/cols 4..8; only (4,4) is real.
+        let t = a.global_tile(1, 1);
+        assert_eq!(t[0], 7.0); // (4,4) real
+        assert_eq!(t[1 * 4 + 1], 1.0); // (5,5) pad diagonal
+        assert_eq!(t[1 * 4 + 2], 0.0); // (5,6) pad off-diagonal
+        // Tile (0,1): rows 0..4, cols 4..8; col 4 real, rest zero pad
+        // (off the global diagonal except (4,4) which is not in this tile).
+        let t = a.global_tile(0, 1);
+        assert_eq!(t[0], 7.0); // (0,4) real
+        assert_eq!(t[1], 0.0); // (0,5) pad
+    }
+
+    #[test]
+    fn global_tile_addressing_matches_local() {
+        let d = desc(16, 16, 4, 2, 2);
+        let mut a = DistMatrix::from_fn(d, 1, 0, |i, j| (i + j) as f64);
+        // rank (1,0) owns tile rows {1,3}, tile cols {0,2}
+        assert!(a.owns_tile_row(1) && a.owns_tile_row(3));
+        assert!(!a.owns_tile_row(0));
+        assert!(a.owns_tile_col(2) && !a.owns_tile_col(1));
+        let via_global = a.global_tile(3, 2).to_vec();
+        assert_eq!(via_global, a.tile(1, 1));
+        a.global_tile_mut(3, 2)[0] = -1.0;
+        assert_eq!(a.tile(1, 1)[0], -1.0);
+    }
+
+    #[test]
+    fn owned_tiles_enumerates_all_local_tiles() {
+        let d = desc(20, 12, 4, 2, 3);
+        let a = DistMatrix::<f32>::zeros(d, 0, 2);
+        let tiles: Vec<_> = a.owned_tiles().collect();
+        assert_eq!(tiles.len(), a.local_mt() * a.local_nt());
+        for (lti, ltj, ti, tj) in tiles {
+            assert_eq!(ti % 2, 0);
+            assert_eq!(tj % 3, 2);
+            assert_eq!(d.local_ti(ti), lti);
+            assert_eq!(d.local_tj(tj), ltj);
+        }
+    }
+}

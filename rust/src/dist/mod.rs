@@ -1,0 +1,44 @@
+//! Data distribution (CUPLSS level 3): the 2-D block-cyclic layout every
+//! solver and PBLAS routine in this crate operates on.
+//!
+//! The layer has three parts:
+//!
+//! * [`BlockDesc`] (aliased [`Descriptor`]) — the layout contract: global
+//!   shape, tile size and process-grid extents, with pure-arithmetic
+//!   global↔local↔owner index maps.  Operand conformability is descriptor
+//!   equality — the shape validation every consumer performs.
+//! * [`DistMatrix`] / [`DistVector`] — one rank's shard: identity-padded
+//!   `tile x tile` matrix tiles and zero-padded, column-replicated vector
+//!   blocks.  Fixed tile shapes are what let every local op dispatch to an
+//!   AOT-compiled [`crate::accel::Engine`] executable.
+//! * redistribution ([`gather_matrix`], [`scatter_matrix`],
+//!   [`gather_vector`], [`scatter_vector`], [`ptranspose`]) — host↔cluster
+//!   movement and the transpose (row↔column) exchange, all as real messages
+//!   through [`crate::comm`] so the virtual clock sees the traffic.
+//!
+//! Layout recap for a 4-tile-square matrix on a 2x2 mesh (rank = `(row,col)`
+//! owning tile `(ti mod 2, tj mod 2)`):
+//!
+//! ```text
+//!        tj=0      tj=1      tj=2      tj=3
+//! ti=0  (0,0)     (0,1)     (0,0)     (0,1)
+//! ti=1  (1,0)     (1,1)     (1,0)     (1,1)
+//! ti=2  (0,0)     (0,1)     (0,0)     (0,1)
+//! ti=3  (1,0)     (1,1)     (1,0)     (1,1)
+//! ```
+//!
+//! Vectors follow the tile rows (block `ti` on process row `ti mod 2`),
+//! replicated across the process columns — see `DESIGN.md` for why that
+//! layout makes every Krylov recurrence communication-minimal.
+
+pub mod descriptor;
+pub mod matrix;
+pub mod redistribute;
+pub mod vector;
+
+pub use descriptor::{ceil_div, BlockDesc, Descriptor};
+pub use matrix::DistMatrix;
+pub use redistribute::{
+    gather_matrix, gather_vector, ptranspose, scatter_matrix, scatter_vector,
+};
+pub use vector::DistVector;

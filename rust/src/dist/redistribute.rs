@@ -1,0 +1,335 @@
+//! Redistribution between the block-cyclic layout and host-side buffers,
+//! plus the transpose redistribution — all built on real messages through
+//! [`crate::comm`] so the virtual clock charges every byte moved.
+//!
+//! * [`gather_matrix`] / [`gather_vector`] — collect a distributed operand
+//!   on world rank 0 (trimmed of padding); the verification path of every
+//!   solver test and of [`crate::cluster::Cluster::solve`].
+//! * [`scatter_matrix`] / [`scatter_vector`] — the inverse: rank 0 holds a
+//!   host buffer and deals each rank its shard (identity/zero padded).
+//! * [`ptranspose`] — the row↔column redistribution `B = A^T`: every tile
+//!   `(ti, tj)` moves to the owner of `(tj, ti)` transposed, the step that
+//!   turns a Cholesky `L` into the `L^T` the backward substitution reads.
+
+use super::descriptor::Descriptor;
+use super::matrix::DistMatrix;
+use super::vector::DistVector;
+use crate::comm::{Payload, Tag};
+use crate::mesh::Mesh;
+use crate::Scalar;
+
+/// Tag blocks owned by the redistribution routines (collectives translate
+/// them into their own [`Tag`] variants, so they cannot cross-match the
+/// solver tag ranges).
+mod tags {
+    pub const GATHER_MAT: u32 = 6_000;
+    pub const GATHER_VEC: u32 = 6_001;
+    pub const SCATTER_MAT: u32 = 6_002;
+    pub const SCATTER_VEC: u32 = 6_003;
+    /// Base of the per-tile p2p tag range used by `ptranspose`.
+    pub const TRANSPOSE: u32 = 7_000;
+}
+
+/// This rank's tiles as one flat stream (local tile-major order).
+fn tile_stream<S: Scalar>(a: &DistMatrix<S>) -> Vec<S> {
+    let t2 = a.desc().tile * a.desc().tile;
+    let mut out = Vec::with_capacity(a.local_mt() * a.local_nt() * t2);
+    for lti in 0..a.local_mt() {
+        for ltj in 0..a.local_nt() {
+            out.extend_from_slice(a.tile(lti, ltj));
+        }
+    }
+    out
+}
+
+/// Gather a distributed matrix to world rank 0 as a row-major `m x n`
+/// buffer (padding trimmed).  Returns `Some` on rank 0, `None` elsewhere.
+/// Every rank must call (it is a collective).
+pub fn gather_matrix<S: Scalar>(mesh: &Mesh<'_, S>, a: &DistMatrix<S>) -> Option<Vec<S>> {
+    let desc = *a.desc();
+    let t = desc.tile;
+    let streams = mesh.world().gather(0, tags::GATHER_MAT, tile_stream(a))?;
+    let mut out = vec![S::zero(); desc.m * desc.n];
+    for (rank, data) in streams.iter().enumerate() {
+        let (pr, pc) = mesh.shape().coords(rank);
+        let lnt = desc.local_nt(pc);
+        for lti in 0..desc.local_mt(pr) {
+            let ti = desc.global_ti(pr, lti);
+            for ltj in 0..lnt {
+                let tj = desc.global_tj(pc, ltj);
+                let tile = &data[(lti * lnt + ltj) * t * t..][..t * t];
+                for r in 0..t {
+                    let gi = ti * t + r;
+                    if gi >= desc.m {
+                        break;
+                    }
+                    for (c, &v) in tile[r * t..(r + 1) * t].iter().enumerate() {
+                        let gj = tj * t + c;
+                        if gj < desc.n {
+                            out[gi * desc.n + gj] = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Some(out)
+}
+
+/// Gather a distributed vector to world rank 0 as a length-`m` buffer
+/// (padding trimmed).  Replicas are identical, so only process column 0's
+/// blocks are read.  Collective: every rank must call.
+pub fn gather_vector<S: Scalar>(mesh: &Mesh<'_, S>, v: &DistVector<S>) -> Option<Vec<S>> {
+    let desc = *v.desc();
+    let t = desc.tile;
+    let mut mine = Vec::with_capacity(v.local_blocks() * t);
+    for l in 0..v.local_blocks() {
+        mine.extend_from_slice(v.block(l));
+    }
+    let streams = mesh.world().gather(0, tags::GATHER_VEC, mine)?;
+    let mut out = vec![S::zero(); desc.m];
+    for (rank, data) in streams.iter().enumerate() {
+        let (pr, pc) = mesh.shape().coords(rank);
+        if pc != 0 {
+            continue; // replicas: column 0 suffices
+        }
+        for l in 0..desc.local_mt(pr) {
+            let ti = desc.global_ti(pr, l);
+            for (k, &x) in data[l * t..(l + 1) * t].iter().enumerate() {
+                let gi = ti * t + k;
+                if gi < desc.m {
+                    out[gi] = x;
+                }
+            }
+        }
+    }
+    Some(out)
+}
+
+/// Scatter a host row-major `m x n` buffer (present on world rank 0) into
+/// the block-cyclic layout.  Edge tiles take the identity padding, so the
+/// result is exactly what [`DistMatrix::from_fn`] over the same elements
+/// would build.  Collective: every rank must call; only rank 0's
+/// `host` is read.
+pub fn scatter_matrix<S: Scalar>(
+    mesh: &Mesh<'_, S>,
+    desc: Descriptor,
+    host: Option<&[S]>,
+) -> DistMatrix<S> {
+    let world = mesh.world();
+    let t = desc.tile;
+    let per_rank = if world.rank() == 0 {
+        let host = host.expect("scatter_matrix: rank 0 must supply the host matrix");
+        assert_eq!(host.len(), desc.m * desc.n, "host buffer is not m x n");
+        let mut blocks = Vec::with_capacity(world.size());
+        for rank in 0..world.size() {
+            let (pr, pc) = mesh.shape().coords(rank);
+            let (lmt, lnt) = (desc.local_mt(pr), desc.local_nt(pc));
+            let mut data = Vec::with_capacity(lmt * lnt * t * t);
+            for lti in 0..lmt {
+                let ti = desc.global_ti(pr, lti);
+                for ltj in 0..lnt {
+                    let tj = desc.global_tj(pc, ltj);
+                    for r in 0..t {
+                        let gi = ti * t + r;
+                        for c in 0..t {
+                            let gj = tj * t + c;
+                            data.push(if gi < desc.m && gj < desc.n {
+                                host[gi * desc.n + gj]
+                            } else {
+                                desc.pad(gi, gj)
+                            });
+                        }
+                    }
+                }
+            }
+            blocks.push(data);
+        }
+        Some(blocks)
+    } else {
+        None
+    };
+    let mine = world.scatter(0, tags::SCATTER_MAT, per_rank);
+    DistMatrix::from_tiles(desc, mesh.row(), mesh.col(), mine)
+}
+
+/// Scatter a host length-`m` buffer (present on world rank 0) into the
+/// row-distributed / column-replicated vector layout (zero padded).
+/// Collective: every rank must call.
+pub fn scatter_vector<S: Scalar>(
+    mesh: &Mesh<'_, S>,
+    desc: Descriptor,
+    host: Option<&[S]>,
+) -> DistVector<S> {
+    let world = mesh.world();
+    let t = desc.tile;
+    let per_rank = if world.rank() == 0 {
+        let host = host.expect("scatter_vector: rank 0 must supply the host vector");
+        assert_eq!(host.len(), desc.m, "host buffer is not length m");
+        let mut blocks = Vec::with_capacity(world.size());
+        for rank in 0..world.size() {
+            let (pr, _pc) = mesh.shape().coords(rank);
+            let lmt = desc.local_mt(pr);
+            let mut data = Vec::with_capacity(lmt * t);
+            for l in 0..lmt {
+                let ti = desc.global_ti(pr, l);
+                for k in 0..t {
+                    let gi = ti * t + k;
+                    data.push(if gi < desc.m { host[gi] } else { S::zero() });
+                }
+            }
+            blocks.push(data);
+        }
+        Some(blocks)
+    } else {
+        None
+    };
+    let mine = world.scatter(0, tags::SCATTER_VEC, per_rank);
+    DistVector::from_blocks(desc, mesh.row(), mesh.col(), mine)
+}
+
+/// Transpose redistribution: returns `B = A^T` in the same descriptor.
+/// Tile `(ti, tj)` transposes locally and moves to the owner of `(tj, ti)`;
+/// with the buffered transport every rank can post all its sends before
+/// draining its receives, so the exchange is deadlock-free in one round.
+pub fn ptranspose<S: Scalar>(mesh: &Mesh<'_, S>, a: &DistMatrix<S>) -> DistMatrix<S> {
+    let desc = *a.desc();
+    assert!(desc.is_square(), "ptranspose requires a square matrix");
+    let t = desc.tile;
+    let nt = desc.nt();
+    let comm = mesh.comm();
+    // Tag keyed by the *destination* tile coordinates in B.
+    let tag = |ti: usize, tj: usize| Tag::P2p(tags::TRANSPOSE + (ti * nt + tj) as u32);
+
+    let mut b = DistMatrix::zeros(desc, mesh.row(), mesh.col());
+
+    // Send phase (self-destined tiles are placed directly).
+    let mut local: Vec<(usize, usize, Vec<S>)> = Vec::new();
+    for (lti, ltj, ti, tj) in a.owned_tiles() {
+        let src = a.tile(lti, ltj);
+        let mut tt = vec![S::zero(); t * t];
+        for r in 0..t {
+            for c in 0..t {
+                tt[c * t + r] = src[r * t + c];
+            }
+        }
+        let (dr, dc) = desc.owner(tj, ti);
+        let dst = desc.shape.rank_at(dr, dc);
+        if dst == comm.rank() {
+            local.push((tj, ti, tt));
+        } else {
+            comm.send(dst, tag(tj, ti), Payload::Data(tt));
+        }
+    }
+    for (ti, tj, tt) in local {
+        b.global_tile_mut(ti, tj).copy_from_slice(&tt);
+    }
+
+    // Receive phase: fill every remotely-sourced tile this rank owns in B.
+    let coords: Vec<_> = b.owned_tiles().collect();
+    for (lti, ltj, ti, tj) in coords {
+        let (sr, sc) = desc.owner(tj, ti); // B(ti,tj) comes from A(tj,ti)
+        let src = desc.shape.rank_at(sr, sc);
+        if src != comm.rank() {
+            let data = comm.recv(src, tag(ti, tj)).into_data();
+            b.tile_mut(lti, ltj).copy_from_slice(&data);
+        }
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{NetworkModel, World};
+    use crate::mesh::MeshShape;
+
+    fn elem(i: usize, j: usize) -> f64 {
+        (i * 57 + j * 13 + 1) as f64
+    }
+
+    #[test]
+    fn scatter_gather_matrix_roundtrip() {
+        for (m, n, tile, pr, pc) in [(12, 12, 4, 2, 2), (13, 9, 4, 2, 3), (7, 7, 3, 1, 2)] {
+            let host: Vec<f64> = (0..m * n).map(|k| elem(k / n, k % n)).collect();
+            let host2 = host.clone();
+            let out = World::run::<f64, _, _>(pr * pc, NetworkModel::ideal(), move |comm| {
+                let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+                let desc = Descriptor::new(m, n, tile, mesh.shape());
+                let root = if comm.rank() == 0 { Some(&host2[..]) } else { None };
+                let a = scatter_matrix(&mesh, desc, root);
+                gather_matrix(&mesh, &a)
+            });
+            assert_eq!(out[0].as_ref().unwrap(), &host, "{m}x{n}/{tile} on {pr}x{pc}");
+        }
+    }
+
+    #[test]
+    fn scatter_matches_from_fn_including_padding() {
+        let (m, tile, pr, pc) = (10usize, 4usize, 2usize, 2usize);
+        let host: Vec<f64> = (0..m * m).map(|k| elem(k / m, k % m)).collect();
+        let out = World::run::<f64, _, _>(pr * pc, NetworkModel::ideal(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+            let desc = Descriptor::new(m, m, tile, mesh.shape());
+            let root = if comm.rank() == 0 { Some(&host[..]) } else { None };
+            let scattered = scatter_matrix(&mesh, desc, root);
+            let direct = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), elem);
+            let mut same = true;
+            for (lti, ltj, _, _) in scattered.owned_tiles() {
+                same &= scattered.tile(lti, ltj) == direct.tile(lti, ltj);
+            }
+            same
+        });
+        assert!(out.into_iter().all(|ok| ok), "scatter must equal from_fn, pad included");
+    }
+
+    #[test]
+    fn scatter_gather_vector_roundtrip() {
+        for (m, tile, pr, pc) in [(16, 4, 2, 2), (11, 3, 3, 1), (5, 4, 1, 3)] {
+            let host: Vec<f64> = (0..m).map(|i| (i * i) as f64).collect();
+            let host2 = host.clone();
+            let out = World::run::<f64, _, _>(pr * pc, NetworkModel::ideal(), move |comm| {
+                let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+                let desc = Descriptor::new(m, m, tile, mesh.shape());
+                let root = if comm.rank() == 0 { Some(&host2[..]) } else { None };
+                let v = scatter_vector(&mesh, desc, root);
+                gather_vector(&mesh, &v)
+            });
+            assert_eq!(out[0].as_ref().unwrap(), &host, "m={m} tile={tile} {pr}x{pc}");
+        }
+    }
+
+    #[test]
+    fn transpose_matches_host_transpose() {
+        for (n, tile, pr, pc) in [(12, 4, 2, 2), (10, 4, 2, 3), (9, 3, 1, 1)] {
+            let out = World::run::<f64, _, _>(pr * pc, NetworkModel::ideal(), move |comm| {
+                let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+                let desc = Descriptor::new(n, n, tile, mesh.shape());
+                let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), elem);
+                let at = ptranspose(&mesh, &a);
+                gather_matrix(&mesh, &at)
+            });
+            let got = out[0].as_ref().unwrap();
+            for i in 0..n {
+                for j in 0..n {
+                    assert_eq!(got[i * n + j], elem(j, i), "n={n} {pr}x{pc} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_charges_comm_time_on_multirank_meshes() {
+        let out = World::run::<f64, _, _>(4, NetworkModel::gigabit_ethernet(), |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(2, 2));
+            let desc = Descriptor::new(16, 16, 4, mesh.shape());
+            let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), elem);
+            let _ = ptranspose(&mesh, &a);
+            comm.clock().now()
+        });
+        assert!(
+            out.iter().any(|&t| t > 0.0),
+            "cross-rank tile moves must advance the virtual clock: {out:?}"
+        );
+    }
+}

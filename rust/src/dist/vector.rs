@@ -1,0 +1,192 @@
+//! The distributed vector: row-distributed, column-replicated.
+//!
+//! A length-`m` vector is cut into the same `tile`-sized blocks as the
+//! matrix's tile rows; block `ti` lives on process row `ti mod pr` and is
+//! **replicated on every process column** of that row.  This is the layout
+//! every solver in the crate assumes: BLAS-1 ops are purely local (all
+//! replicas update identically), a distributed dot needs one column-comm
+//! allreduce, and `pgemv` leaves its result in the same layout it consumed.
+//! Blocks beyond `m` are zero padded (so padded dot/matvec terms vanish
+//! against the matrix's identity padding).
+
+use super::descriptor::Descriptor;
+use crate::Scalar;
+
+/// One rank's replica of a row-distributed, column-replicated vector.
+#[derive(Clone, Debug)]
+pub struct DistVector<S: Scalar> {
+    desc: Descriptor,
+    prow: usize,
+    pcol: usize,
+    /// `desc.local_mt(prow)` blocks of `desc.tile` elements.
+    blocks: Vec<Vec<S>>,
+}
+
+impl<S: Scalar> DistVector<S> {
+    /// The all-zero vector for the rank at `(prow, pcol)`.
+    pub fn zeros(desc: Descriptor, prow: usize, pcol: usize) -> Self {
+        assert!(
+            prow < desc.shape.pr && pcol < desc.shape.pc,
+            "coords ({prow},{pcol}) outside mesh {}x{}",
+            desc.shape.pr,
+            desc.shape.pc
+        );
+        let blocks = (0..desc.local_mt(prow)).map(|_| vec![S::zero(); desc.tile]).collect();
+        DistVector { desc, prow, pcol, blocks }
+    }
+
+    /// Build this rank's blocks from a global element function `f(i)`;
+    /// positions at or beyond `desc.m` are zero padded.
+    pub fn from_fn(desc: Descriptor, prow: usize, pcol: usize, f: impl Fn(usize) -> S) -> Self {
+        let mut v = Self::zeros(desc, prow, pcol);
+        let t = desc.tile;
+        for (l, block) in v.blocks.iter_mut().enumerate() {
+            let ti = desc.global_ti(prow, l);
+            for (k, slot) in block.iter_mut().enumerate() {
+                let gi = ti * t + k;
+                *slot = if gi < desc.m { f(gi) } else { S::zero() };
+            }
+        }
+        v
+    }
+
+    /// Rebuild from a flat block stream (ascending local block order, as
+    /// produced by the scatter redistribution).
+    pub(crate) fn from_blocks(
+        desc: Descriptor,
+        prow: usize,
+        pcol: usize,
+        data: Vec<S>,
+    ) -> Self {
+        let mut v = Self::zeros(desc, prow, pcol);
+        assert_eq!(data.len(), v.blocks.len() * desc.tile, "block stream length mismatch");
+        for (l, block) in v.blocks.iter_mut().enumerate() {
+            block.copy_from_slice(&data[l * desc.tile..(l + 1) * desc.tile]);
+        }
+        v
+    }
+
+    /// The layout descriptor (shared with the matrices it pairs with).
+    pub fn desc(&self) -> &Descriptor {
+        &self.desc
+    }
+
+    /// This rank's process row.
+    pub fn prow(&self) -> usize {
+        self.prow
+    }
+
+    /// This rank's process column.
+    pub fn pcol(&self) -> usize {
+        self.pcol
+    }
+
+    /// Number of blocks stored locally.
+    pub fn local_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Does this rank's process row own global block `ti`?
+    pub fn owns(&self, ti: usize) -> bool {
+        ti % self.desc.shape.pr == self.prow
+    }
+
+    /// Local block `l` (length `tile`).
+    pub fn block(&self, l: usize) -> &[S] {
+        &self.blocks[l]
+    }
+
+    /// Mutable local block `l`.
+    pub fn block_mut(&mut self, l: usize) -> &mut [S] {
+        &mut self.blocks[l]
+    }
+
+    /// Block addressed by *global* tile index; this process row must own it.
+    pub fn global_block(&self, ti: usize) -> &[S] {
+        debug_assert!(self.owns(ti), "block {ti} not on process row {}", self.prow);
+        &self.blocks[self.desc.local_ti(ti)]
+    }
+
+    /// Mutable block addressed by global tile index (returned as the owned
+    /// buffer so callers can `clone()` it straight into a payload).
+    pub fn global_block_mut(&mut self, ti: usize) -> &mut Vec<S> {
+        debug_assert!(self.owns(ti), "block {ti} not on process row {}", self.prow);
+        let l = self.desc.local_ti(ti);
+        &mut self.blocks[l]
+    }
+
+    /// An owned copy with the same layout (the solvers' working-vector
+    /// constructor).
+    pub fn clone_vec(&self) -> Self {
+        self.clone()
+    }
+
+    /// Overwrite this replica with `other` (layouts must match).
+    pub fn copy_from(&mut self, other: &Self) {
+        assert_eq!(&self.desc, other.desc(), "copy_from layout mismatch");
+        debug_assert_eq!((self.prow, self.pcol), (other.prow, other.pcol));
+        for (dst, src) in self.blocks.iter_mut().zip(&other.blocks) {
+            dst.copy_from_slice(src);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::MeshShape;
+
+    fn desc(m: usize, tile: usize, pr: usize, pc: usize) -> Descriptor {
+        Descriptor::new(m, m, tile, MeshShape::new(pr, pc))
+    }
+
+    #[test]
+    fn rows_partition_and_columns_replicate() {
+        let d = desc(11, 4, 2, 3);
+        let mut owners = vec![0u32; d.m];
+        for r in 0..2 {
+            let replicas: Vec<DistVector<f64>> =
+                (0..3).map(|c| DistVector::from_fn(d, r, c, |i| i as f64)).collect();
+            for l in 0..replicas[0].local_blocks() {
+                let ti = d.global_ti(r, l);
+                for v in &replicas {
+                    assert_eq!(v.block(l), replicas[0].block(l), "replica divergence");
+                }
+                for k in 0..d.tile {
+                    let gi = ti * d.tile + k;
+                    if gi < d.m {
+                        assert_eq!(replicas[0].block(l)[k], gi as f64);
+                        owners[gi] += 1;
+                    } else {
+                        assert_eq!(replicas[0].block(l)[k], 0.0, "pad must be zero");
+                    }
+                }
+            }
+        }
+        assert!(owners.iter().all(|&k| k == 1));
+    }
+
+    #[test]
+    fn global_block_addressing() {
+        let d = desc(16, 4, 2, 1);
+        let mut v = DistVector::from_fn(d, 1, 0, |i| i as f32);
+        // process row 1 owns blocks 1 and 3
+        assert!(v.owns(1) && v.owns(3) && !v.owns(2));
+        assert_eq!(v.global_block(3)[0], 12.0);
+        v.global_block_mut(3)[0] = -5.0;
+        assert_eq!(v.block(1)[0], -5.0);
+    }
+
+    #[test]
+    fn clone_and_copy_roundtrip() {
+        let d = desc(9, 4, 1, 1);
+        let v = DistVector::from_fn(d, 0, 0, |i| (i * i) as f64);
+        let mut w = DistVector::zeros(d, 0, 0);
+        w.copy_from(&v);
+        let u = v.clone_vec();
+        for l in 0..v.local_blocks() {
+            assert_eq!(w.block(l), v.block(l));
+            assert_eq!(u.block(l), v.block(l));
+        }
+    }
+}

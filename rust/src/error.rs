@@ -1,47 +1,94 @@
 //! Library-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror` in the offline crate
+//! set); the message formats are part of the public behaviour and are
+//! covered by tests.
+
+use std::fmt;
 
 /// Errors surfaced by CUPLSS-RS.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Shape / distribution mismatch between operands.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
     /// Invalid configuration (CLI, config file, mesh, tile size...).
-    #[error("invalid configuration: {0}")]
     Config(String),
 
     /// A communication primitive was misused (unknown rank, tag clash...).
-    #[error("communication error: {0}")]
     Comm(String),
 
     /// The PJRT runtime failed (artifact missing, compile error...).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// An iterative solver failed to converge within its iteration budget.
-    #[error("solver did not converge: {method}: residual {residual:.3e} after {iterations} iterations (tol {tol:.3e})")]
     NoConvergence {
+        /// Solver name.
         method: &'static str,
+        /// Final relative residual.
         residual: f64,
+        /// Iterations performed.
         iterations: usize,
+        /// The tolerance that was not met.
         tol: f64,
     },
 
     /// A factorization broke down (zero pivot, non-SPD matrix...).
-    #[error("numerical breakdown in {method}: {detail}")]
     Breakdown {
+        /// Routine name.
         method: &'static str,
+        /// What went wrong.
         detail: String,
     },
 
     /// Underlying XLA error.
-    #[error("xla: {0}")]
-    Xla(#[from] xla::Error),
+    Xla(xla::Error),
 
     /// I/O error (artifact files, config files).
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(msg) => write!(f, "shape mismatch: {msg}"),
+            Error::Config(msg) => write!(f, "invalid configuration: {msg}"),
+            Error::Comm(msg) => write!(f, "communication error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::NoConvergence { method, residual, iterations, tol } => write!(
+                f,
+                "solver did not converge: {method}: residual {residual:.3e} \
+                 after {iterations} iterations (tol {tol:.3e})"
+            ),
+            Error::Breakdown { method, detail } => {
+                write!(f, "numerical breakdown in {method}: {detail}")
+            }
+            Error::Xla(e) => write!(f, "xla: {e}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Library-wide result alias.
@@ -80,5 +127,12 @@ mod tests {
         let e = Error::NoConvergence { method: "bicgstab", residual: 1.0, iterations: 7, tol: 1e-9 };
         let s = e.to_string();
         assert!(s.contains("bicgstab") && s.contains('7'));
+    }
+
+    #[test]
+    fn io_and_xla_wrap_with_source() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().starts_with("io:"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

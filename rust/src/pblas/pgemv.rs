@@ -31,6 +31,7 @@ pub fn pgemv<S: Scalar>(
 ) -> DistVector<S> {
     let desc = *a.desc();
     assert!(desc.is_square(), "pgemv requires a square matrix");
+    assert_eq!(&desc, x.desc(), "pgemv operand descriptors differ");
     let t = desc.tile;
     let mesh = ctx.mesh;
 
@@ -76,6 +77,7 @@ pub fn pgemv_t<S: Scalar>(
 ) -> DistVector<S> {
     let desc = *a.desc();
     assert!(desc.is_square(), "pgemv_t requires a square matrix");
+    assert_eq!(&desc, x.desc(), "pgemv_t operand descriptors differ");
     let t = desc.tile;
     let mesh = ctx.mesh;
     let (pr, pc) = (desc.shape.pr, desc.shape.pc);

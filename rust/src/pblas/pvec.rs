@@ -13,7 +13,7 @@ use crate::Scalar;
 
 /// Distributed inner product `x . y` (result replicated on every rank).
 pub fn pdot<S: Scalar>(ctx: &Ctx<'_, S>, x: &DistVector<S>, y: &DistVector<S>) -> S {
-    assert_eq!(x.local_blocks(), y.local_blocks(), "pdot layout mismatch");
+    assert_eq!(x.desc(), y.desc(), "pdot descriptor mismatch");
     let mut partial = S::zero();
     for l in 0..x.local_blocks() {
         let (d, cost) = ctx.engine.dot(x.block(l), y.block(l));
@@ -31,7 +31,7 @@ pub fn pnorm2<S: Scalar>(ctx: &Ctx<'_, S>, x: &DistVector<S>) -> S {
 
 /// `y += alpha x` (local on every replica).
 pub fn paxpy<S: Scalar>(ctx: &Ctx<'_, S>, alpha: S, x: &DistVector<S>, y: &mut DistVector<S>) {
-    assert_eq!(x.local_blocks(), y.local_blocks(), "paxpy layout mismatch");
+    assert_eq!(x.desc(), y.desc(), "paxpy descriptor mismatch");
     for l in 0..x.local_blocks() {
         let cost = ctx.engine.axpy(alpha, x.block(l), y.block_mut(l));
         ctx.charge(cost);

@@ -4,7 +4,7 @@
 //! [`crate::pblas::pgemv_t`], which exercises the 2-D layout's
 //! column-reduce/row-allgather path.
 
-use super::{IterConfig, IterStats};
+use super::{norm_negligible, IterConfig, IterStats};
 use crate::dist::{DistMatrix, DistVector};
 use crate::pblas::{paxpy, pdot, pgemv, pgemv_t, pnorm2, pscal, Ctx};
 use crate::{Error, Result, Scalar};
@@ -20,7 +20,7 @@ pub fn bicg<S: Scalar>(
     let mesh = ctx.mesh;
     let bnorm = pnorm2(ctx, b);
     let mut x = DistVector::zeros(desc, mesh.row(), mesh.col());
-    if bnorm == S::zero() {
+    if norm_negligible(bnorm, desc.m) {
         return Ok((x, IterStats::new(0, S::zero(), true)));
     }
     let tol = S::from_f64(cfg.tol).unwrap() * bnorm;

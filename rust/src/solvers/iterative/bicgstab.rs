@@ -2,7 +2,7 @@
 //! BiCGSTAB" (paper §2): the smoothed variant that avoids A^T and BiCG's
 //! irregular convergence.
 
-use super::{IterConfig, IterStats};
+use super::{norm_negligible, IterConfig, IterStats};
 use crate::dist::{DistMatrix, DistVector};
 use crate::pblas::{paxpy, pdot, pgemv, pnorm2, pscal, Ctx};
 use crate::{Error, Result, Scalar};
@@ -18,7 +18,7 @@ pub fn bicgstab<S: Scalar>(
     let mesh = ctx.mesh;
     let bnorm = pnorm2(ctx, b);
     let mut x = DistVector::zeros(desc, mesh.row(), mesh.col());
-    if bnorm == S::zero() {
+    if norm_negligible(bnorm, desc.m) {
         return Ok((x, IterStats::new(0, S::zero(), true)));
     }
     let tol = S::from_f64(cfg.tol).unwrap() * bnorm;

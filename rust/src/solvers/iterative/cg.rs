@@ -1,7 +1,7 @@
 //! Conjugate gradients — the classical Krylov method the paper's §2 builds
 //! from ("one of the most used Krylov methods... solves SPD systems").
 
-use super::{IterConfig, IterStats};
+use super::{norm_negligible, IterConfig, IterStats};
 use crate::dist::{DistMatrix, DistVector};
 use crate::pblas::{paxpy, pdot, pgemv, pnorm2, pscal, Ctx};
 use crate::{Error, Result, Scalar};
@@ -17,7 +17,7 @@ pub fn cg<S: Scalar>(
     let mesh = ctx.mesh;
     let bnorm = pnorm2(ctx, b);
     let mut x = DistVector::zeros(desc, mesh.row(), mesh.col());
-    if bnorm == S::zero() {
+    if norm_negligible(bnorm, desc.m) {
         return Ok((x, IterStats::new(0, S::zero(), true)));
     }
     let tol = S::from_f64(cfg.tol).unwrap() * bnorm;

@@ -8,7 +8,7 @@
 //! ([`crate::linalg::givens::HessenbergQr`]) so no extra communication is
 //! needed beyond the matvecs and dots.
 
-use super::{IterConfig, IterStats};
+use super::{negligible_at_scale, norm_negligible, IterConfig, IterStats};
 use crate::dist::{DistMatrix, DistVector};
 use crate::linalg::givens::HessenbergQr;
 use crate::pblas::{paxpy, pdot, pgemv, pnorm2, pscal, Ctx};
@@ -26,7 +26,7 @@ pub fn gmres<S: Scalar>(
     let mesh = ctx.mesh;
     let bnorm = pnorm2(ctx, b);
     let mut x = DistVector::zeros(desc, mesh.row(), mesh.col());
-    if bnorm == S::zero() {
+    if norm_negligible(bnorm, desc.m) {
         return Ok((x, IterStats::new(0, S::zero(), true)));
     }
     let tol = S::from_f64(cfg.tol).unwrap() * bnorm;
@@ -62,10 +62,11 @@ pub fn gmres<S: Scalar>(
             }
             let wnorm = pnorm2(ctx, &w);
             h.push(wnorm);
+            let hscale = h.iter().fold(S::zero(), |acc, &v| acc.max(v.abs()));
             let res = qr.push_column(h);
             total_iters += 1;
             k += 1;
-            if wnorm == S::zero() {
+            if negligible_at_scale(wnorm, hscale, desc.m) {
                 break; // lucky breakdown: exact solution in the basis
             }
             pscal(ctx, S::one() / wnorm, &mut w);

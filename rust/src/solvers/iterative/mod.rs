@@ -21,6 +21,27 @@ pub use precond::JacobiPrecond;
 
 use crate::Scalar;
 
+/// Underflow guard for vector norms, replacing the exact `norm == 0` float
+/// comparisons the Krylov solvers used to make.  Below
+/// `sqrt(MIN_POSITIVE) * n` the recurrences stop being meaningful — squared
+/// norms (`rr = <r, r>`) and products like `tol * ||b||` underflow to
+/// denormals or zero — so such a right-hand side takes the degenerate-case
+/// path.  The threshold is far beneath any legitimately scaled data
+/// (~1e-19·n for f32, ~1e-154·n for f64), so small-but-valid systems are
+/// *not* swallowed; this is deliberately an underflow test, not a
+/// magnitude test.
+pub fn norm_negligible<S: Scalar>(norm: S, n: usize) -> bool {
+    norm <= S::min_positive_value().sqrt() * S::from_f64(n.max(1) as f64).unwrap()
+}
+
+/// Relative round-off test: is `value` negligible next to `scale` (the
+/// magnitude of the quantities it was computed from)?  Used for the GMRES
+/// lucky-breakdown check, where the Arnoldi residual's natural scale is the
+/// Hessenberg column it came out of (~||A||), not 1.
+pub fn negligible_at_scale<S: Scalar>(value: S, scale: S, n: usize) -> bool {
+    value <= S::epsilon() * S::from_f64(n.max(1) as f64).unwrap() * scale
+}
+
 /// Convergence controls shared by all iterative solvers.
 #[derive(Clone, Copy, Debug)]
 pub struct IterConfig {
@@ -115,5 +136,26 @@ mod tests {
     fn default_config_sane() {
         let c = IterConfig::default();
         assert!(c.tol > 0.0 && c.max_iter > 0 && c.restart > 1);
+    }
+
+    #[test]
+    fn norm_negligible_is_an_underflow_guard_not_a_magnitude_test() {
+        // Exact zero and denormal-scale norms are negligible...
+        assert!(norm_negligible(0.0f64, 1000));
+        assert!(norm_negligible(f64::MIN_POSITIVE, 1000));
+        assert!(norm_negligible(0.0f32, 20_000));
+        // ...but small, legitimately scaled right-hand sides are not.
+        assert!(!norm_negligible(5e-9f32, 20_000));
+        assert!(!norm_negligible(1e-30f64, 20_000));
+    }
+
+    #[test]
+    fn negligible_at_scale_tracks_the_operand_magnitude() {
+        // wnorm ~ 1e-4 next to a column of scale 1e-4 is NOT a breakdown...
+        assert!(!negligible_at_scale(1e-4f32, 1e-4f32, 10_000));
+        // ...but the same wnorm next to an O(1) column is round-off (f32:
+        // eps * n = 1.2e-3), and exact zero always is.
+        assert!(negligible_at_scale(1e-4f32, 1.0f32, 10_000));
+        assert!(negligible_at_scale(0.0f64, 0.0f64, 10));
     }
 }

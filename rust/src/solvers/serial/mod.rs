@@ -8,6 +8,7 @@
 //!    communication), which is how the bench harness computes `T_1`.
 
 use crate::linalg::{self, givens::HessenbergQr};
+use crate::solvers::iterative::{negligible_at_scale, norm_negligible};
 use crate::{Error, Result, Scalar};
 
 /// Iteration outcome (mirrors the distributed `IterStats`).
@@ -48,7 +49,7 @@ pub fn cg<S: Scalar>(
 ) -> Result<(Vec<S>, SerialStats<S>)> {
     let bnorm = linalg::nrm2(b);
     let mut x = vec![S::zero(); n];
-    if bnorm == S::zero() {
+    if norm_negligible(bnorm, n) {
         return Ok((x, SerialStats { iterations: 0, rel_residual: S::zero(), converged: true }));
     }
     let tol = S::from_f64(tol).unwrap() * bnorm;
@@ -99,7 +100,7 @@ pub fn bicg<S: Scalar>(
 ) -> Result<(Vec<S>, SerialStats<S>)> {
     let bnorm = linalg::nrm2(b);
     let mut x = vec![S::zero(); n];
-    if bnorm == S::zero() {
+    if norm_negligible(bnorm, n) {
         return Ok((x, SerialStats { iterations: 0, rel_residual: S::zero(), converged: true }));
     }
     let tol = S::from_f64(tol).unwrap() * bnorm;
@@ -159,7 +160,7 @@ pub fn bicgstab<S: Scalar>(
 ) -> Result<(Vec<S>, SerialStats<S>)> {
     let bnorm = linalg::nrm2(b);
     let mut x = vec![S::zero(); n];
-    if bnorm == S::zero() {
+    if norm_negligible(bnorm, n) {
         return Ok((x, SerialStats { iterations: 0, rel_residual: S::zero(), converged: true }));
     }
     let tol = S::from_f64(tol).unwrap() * bnorm;
@@ -237,7 +238,7 @@ pub fn gmres<S: Scalar>(
 ) -> Result<(Vec<S>, SerialStats<S>)> {
     let bnorm = linalg::nrm2(b);
     let mut x = vec![S::zero(); n];
-    if bnorm == S::zero() {
+    if norm_negligible(bnorm, n) {
         return Ok((x, SerialStats { iterations: 0, rel_residual: S::zero(), converged: true }));
     }
     let tol_abs = S::from_f64(tol).unwrap() * bnorm;
@@ -273,10 +274,11 @@ pub fn gmres<S: Scalar>(
             }
             let wnorm = linalg::nrm2(&w);
             h.push(wnorm);
+            let hscale = h.iter().fold(S::zero(), |acc, &v| acc.max(v.abs()));
             let res = qr.push_column(h);
             total += 1;
             k += 1;
-            if wnorm == S::zero() {
+            if negligible_at_scale(wnorm, hscale, n) {
                 break;
             }
             linalg::scal(S::one() / wnorm, &mut w);

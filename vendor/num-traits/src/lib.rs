@@ -1,0 +1,349 @@
+//! Offline stand-in for the `num-traits` crate, restricted to what CUPLSS-RS
+//! uses: the [`Float`] / [`NumAssign`] / [`FromPrimitive`] / [`ToPrimitive`]
+//! bounds of `cuplss::Scalar`, implemented for `f32` and `f64` only.
+//!
+//! The trait *names and method signatures* match the real crate, so swapping
+//! this path dependency for the crates.io `num-traits` is a one-line
+//! `Cargo.toml` change with no source edits.
+
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Rem, RemAssign, Sub, SubAssign};
+
+/// Additive identity.
+pub trait Zero: Sized + Add<Self, Output = Self> {
+    /// The value `0`.
+    fn zero() -> Self;
+    /// Is this exactly `0`?
+    fn is_zero(&self) -> bool;
+}
+
+/// Multiplicative identity.
+pub trait One: Sized + Mul<Self, Output = Self> {
+    /// The value `1`.
+    fn one() -> Self;
+}
+
+/// The four arithmetic operators plus remainder (the real crate's `NumOps`).
+pub trait NumOps<Rhs = Self, Output = Self>:
+    Add<Rhs, Output = Output>
+    + Sub<Rhs, Output = Output>
+    + Mul<Rhs, Output = Output>
+    + Div<Rhs, Output = Output>
+    + Rem<Rhs, Output = Output>
+{
+}
+
+impl<T, Rhs, Output> NumOps<Rhs, Output> for T where
+    T: Add<Rhs, Output = Output>
+        + Sub<Rhs, Output = Output>
+        + Mul<Rhs, Output = Output>
+        + Div<Rhs, Output = Output>
+        + Rem<Rhs, Output = Output>
+{
+}
+
+/// Basic numeric type: identities, equality and the arithmetic operators.
+pub trait Num: PartialEq + Zero + One + NumOps {}
+
+impl<T: PartialEq + Zero + One + NumOps> Num for T {}
+
+/// The compound-assignment operators (the real crate's `NumAssignOps`).
+pub trait NumAssignOps<Rhs = Self>:
+    AddAssign<Rhs> + SubAssign<Rhs> + MulAssign<Rhs> + DivAssign<Rhs> + RemAssign<Rhs>
+{
+}
+
+impl<T, Rhs> NumAssignOps<Rhs> for T where
+    T: AddAssign<Rhs> + SubAssign<Rhs> + MulAssign<Rhs> + DivAssign<Rhs> + RemAssign<Rhs>
+{
+}
+
+/// `Num` with compound assignment.
+pub trait NumAssign: Num + NumAssignOps {}
+
+impl<T: Num + NumAssignOps> NumAssign for T {}
+
+/// Conversion out of a numeric type (lossy where necessary).
+pub trait ToPrimitive {
+    /// To `i64`, `None` when out of range.
+    fn to_i64(&self) -> Option<i64>;
+    /// To `u64`, `None` when negative or out of range.
+    fn to_u64(&self) -> Option<u64>;
+    /// To `usize`.
+    fn to_usize(&self) -> Option<usize> {
+        self.to_u64().map(|v| v as usize)
+    }
+    /// To `f32` (always succeeds for floats, with rounding).
+    fn to_f32(&self) -> Option<f32>;
+    /// To `f64`.
+    fn to_f64(&self) -> Option<f64>;
+}
+
+/// Conversion into a numeric type.
+pub trait FromPrimitive: Sized {
+    /// From `i64`.
+    fn from_i64(n: i64) -> Option<Self>;
+    /// From `u64`.
+    fn from_u64(n: u64) -> Option<Self>;
+    /// From `usize`.
+    fn from_usize(n: usize) -> Option<Self> {
+        Self::from_u64(n as u64)
+    }
+    /// From `f32`.
+    fn from_f32(n: f32) -> Option<Self> {
+        Self::from_f64(n as f64)
+    }
+    /// From `f64`.
+    fn from_f64(n: f64) -> Option<Self>;
+}
+
+/// IEEE-754 floating point operations (the subset CUPLSS-RS calls).
+pub trait Float: Num + Copy + PartialOrd + Neg<Output = Self> {
+    /// Not-a-number.
+    fn nan() -> Self;
+    /// Positive infinity.
+    fn infinity() -> Self;
+    /// Negative infinity.
+    fn neg_infinity() -> Self;
+    /// Smallest positive normal value.
+    fn min_positive_value() -> Self;
+    /// Machine epsilon (distance from 1.0 to the next representable value).
+    fn epsilon() -> Self;
+    /// Largest finite value.
+    fn max_value() -> Self;
+    /// Smallest finite value.
+    fn min_value() -> Self;
+    /// Absolute value.
+    fn abs(self) -> Self;
+    /// Square root.
+    fn sqrt(self) -> Self;
+    /// Natural logarithm.
+    fn ln(self) -> Self;
+    /// Exponential.
+    fn exp(self) -> Self;
+    /// Integer power.
+    fn powi(self, n: i32) -> Self;
+    /// Float power.
+    fn powf(self, p: Self) -> Self;
+    /// Sine.
+    fn sin(self) -> Self;
+    /// Cosine.
+    fn cos(self) -> Self;
+    /// Round down.
+    fn floor(self) -> Self;
+    /// Round up.
+    fn ceil(self) -> Self;
+    /// Round to nearest.
+    fn round(self) -> Self;
+    /// Truncate toward zero.
+    fn trunc(self) -> Self;
+    /// Reciprocal.
+    fn recip(self) -> Self;
+    /// Sign (`±1`, or NaN).
+    fn signum(self) -> Self;
+    /// Elementwise maximum (NaN-ignoring, like `f64::max`).
+    fn max(self, other: Self) -> Self;
+    /// Elementwise minimum.
+    fn min(self, other: Self) -> Self;
+    /// `sqrt(self² + other²)` without intermediate overflow.
+    fn hypot(self, other: Self) -> Self;
+    /// Is this NaN?
+    fn is_nan(self) -> bool;
+    /// Is this finite?
+    fn is_finite(self) -> bool;
+    /// Is this ±infinity?
+    fn is_infinite(self) -> bool;
+    /// Is the sign bit clear?
+    fn is_sign_positive(self) -> bool;
+    /// Is the sign bit set?
+    fn is_sign_negative(self) -> bool;
+}
+
+macro_rules! impl_float {
+    ($t:ty) => {
+        impl Zero for $t {
+            fn zero() -> Self {
+                0.0
+            }
+            fn is_zero(&self) -> bool {
+                *self == 0.0
+            }
+        }
+
+        impl One for $t {
+            fn one() -> Self {
+                1.0
+            }
+        }
+
+        impl ToPrimitive for $t {
+            fn to_i64(&self) -> Option<i64> {
+                if self.is_finite() && *self >= i64::MIN as $t && *self <= i64::MAX as $t {
+                    Some(*self as i64)
+                } else {
+                    None
+                }
+            }
+            fn to_u64(&self) -> Option<u64> {
+                if self.is_finite() && *self >= 0.0 && *self <= u64::MAX as $t {
+                    Some(*self as u64)
+                } else {
+                    None
+                }
+            }
+            fn to_f32(&self) -> Option<f32> {
+                Some(*self as f32)
+            }
+            fn to_f64(&self) -> Option<f64> {
+                Some(*self as f64)
+            }
+        }
+
+        impl FromPrimitive for $t {
+            fn from_i64(n: i64) -> Option<Self> {
+                Some(n as $t)
+            }
+            fn from_u64(n: u64) -> Option<Self> {
+                Some(n as $t)
+            }
+            fn from_f64(n: f64) -> Option<Self> {
+                Some(n as $t)
+            }
+        }
+
+        impl Float for $t {
+            fn nan() -> Self {
+                <$t>::NAN
+            }
+            fn infinity() -> Self {
+                <$t>::INFINITY
+            }
+            fn neg_infinity() -> Self {
+                <$t>::NEG_INFINITY
+            }
+            fn min_positive_value() -> Self {
+                <$t>::MIN_POSITIVE
+            }
+            fn epsilon() -> Self {
+                <$t>::EPSILON
+            }
+            fn max_value() -> Self {
+                <$t>::MAX
+            }
+            fn min_value() -> Self {
+                <$t>::MIN
+            }
+            fn abs(self) -> Self {
+                <$t>::abs(self)
+            }
+            fn sqrt(self) -> Self {
+                <$t>::sqrt(self)
+            }
+            fn ln(self) -> Self {
+                <$t>::ln(self)
+            }
+            fn exp(self) -> Self {
+                <$t>::exp(self)
+            }
+            fn powi(self, n: i32) -> Self {
+                <$t>::powi(self, n)
+            }
+            fn powf(self, p: Self) -> Self {
+                <$t>::powf(self, p)
+            }
+            fn sin(self) -> Self {
+                <$t>::sin(self)
+            }
+            fn cos(self) -> Self {
+                <$t>::cos(self)
+            }
+            fn floor(self) -> Self {
+                <$t>::floor(self)
+            }
+            fn ceil(self) -> Self {
+                <$t>::ceil(self)
+            }
+            fn round(self) -> Self {
+                <$t>::round(self)
+            }
+            fn trunc(self) -> Self {
+                <$t>::trunc(self)
+            }
+            fn recip(self) -> Self {
+                <$t>::recip(self)
+            }
+            fn signum(self) -> Self {
+                <$t>::signum(self)
+            }
+            fn max(self, other: Self) -> Self {
+                <$t>::max(self, other)
+            }
+            fn min(self, other: Self) -> Self {
+                <$t>::min(self, other)
+            }
+            fn hypot(self, other: Self) -> Self {
+                <$t>::hypot(self, other)
+            }
+            fn is_nan(self) -> bool {
+                <$t>::is_nan(self)
+            }
+            fn is_finite(self) -> bool {
+                <$t>::is_finite(self)
+            }
+            fn is_infinite(self) -> bool {
+                <$t>::is_infinite(self)
+            }
+            fn is_sign_positive(self) -> bool {
+                <$t>::is_sign_positive(self)
+            }
+            fn is_sign_negative(self) -> bool {
+                <$t>::is_sign_negative(self)
+            }
+        }
+    };
+}
+
+impl_float!(f32);
+impl_float!(f64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn generic_sum<S: Float + FromPrimitive + ToPrimitive>(xs: &[S]) -> f64 {
+        let mut acc = S::zero();
+        for &x in xs {
+            acc = acc + x;
+        }
+        acc.to_f64().unwrap()
+    }
+
+    #[test]
+    fn float_bounds_compose() {
+        assert_eq!(generic_sum(&[1.0f64, 2.0, 3.0]), 6.0);
+        assert_eq!(generic_sum(&[1.0f32, 2.0]), 3.0);
+    }
+
+    #[test]
+    fn identities_and_eps() {
+        assert_eq!(f64::zero(), 0.0);
+        assert_eq!(f32::one(), 1.0);
+        assert!(f64::epsilon() > 0.0 && f64::epsilon() < 1e-10);
+        assert!(f32::epsilon() > f64::epsilon() as f32);
+    }
+
+    #[test]
+    fn conversions() {
+        assert_eq!(f64::from_usize(7).unwrap(), 7.0);
+        assert_eq!(3.9f64.to_i64().unwrap(), 3);
+        assert_eq!((-1.0f64).to_u64(), None);
+        assert_eq!(f64::nan().to_i64(), None);
+    }
+
+    #[test]
+    fn float_methods_delegate() {
+        assert_eq!(Float::abs(-2.0f64), 2.0);
+        assert_eq!(Float::sqrt(9.0f32), 3.0);
+        assert_eq!(Float::max(1.0f64, 2.0), 2.0);
+        assert!(Float::is_nan(f64::nan()));
+    }
+}
