@@ -1,0 +1,112 @@
+//! Sparse workload: the 2-D Poisson operator as *distributed CSR*, solved
+//! with the operator-generic Krylov solvers — the "very large systems"
+//! regime the paper motivates iterative methods with, where dense storage
+//! (n² elements for 5n nonzeros) stops making sense.
+//!
+//! ```sh
+//! cargo run --release --example sparse_poisson
+//! ```
+//!
+//! Contrasts the same solve through the dense and the sparse operand
+//! (identical iterations — the math doesn't change, only storage and the
+//! matvec), then uses model mode to project a paper-scale grid no dense
+//! operand could hold.
+
+use std::sync::Arc;
+
+use cuplss::accel::{ComputeProfile, CpuEngine};
+use cuplss::bench_harness::model::{sparse_iter_makespan, ModelParams};
+use cuplss::comm::{NetworkModel, World};
+use cuplss::dist::{gather_vector, Descriptor, DistMatrix, DistVector};
+use cuplss::mesh::{Mesh, MeshShape};
+use cuplss::pblas::Ctx;
+use cuplss::solvers::{cg, gmres, IterConfig, IterMethod};
+use cuplss::util::fmt;
+use cuplss::workloads::stencil::{poisson2d_nnz, poisson2d_row, stencil_rhs};
+use cuplss::workloads::{poisson2d_csr, Workload};
+
+fn main() -> cuplss::Result<()> {
+    let g = 24usize; // 24 x 24 interior grid -> n = 576
+    let n = g * g;
+    let (pr, pc) = (2usize, 2usize);
+    let tile = 48usize;
+    println!("2-D Poisson, {g}x{g} grid (n = {n}), {} ranks", pr * pc);
+    println!(
+        "dense operand: {} elements; sparse CSR: {} stored entries\n",
+        n * n,
+        poisson2d_nnz(g)
+    );
+
+    let x_true = |i: usize| ((i as f64) * 0.21).sin() + 1.0;
+    let results = World::run::<f64, _, _>(pr * pc, NetworkModel::gigabit_ethernet(), move |comm| {
+        let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+        let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(tile)));
+        let desc = Descriptor::new(n, n, tile, mesh.shape());
+        let b = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| {
+            stencil_rhs(&poisson2d_row::<f64>(g, i), x_true)
+        });
+        let cfg = IterConfig { tol: 1e-10, max_iter: 2_000, restart: 40 };
+
+        // The same operator, twice: dense block-cyclic and sparse CSR.
+        let dense =
+            DistMatrix::from_fn(desc, mesh.row(), mesh.col(), Workload::Poisson2d.elem::<f64>(n));
+        let sparse = poisson2d_csr::<f64>(desc, mesh.row(), mesh.col());
+
+        let mut report = Vec::new();
+        comm.clock().reset();
+        let (xd, st) = cg(&ctx, &dense, &b, &cfg)?;
+        report.push(("CG", "dense ", st.iterations, comm.clock().now(), xd));
+        comm.clock().reset();
+        let (xs, st) = cg(&ctx, &sparse, &b, &cfg)?;
+        report.push(("CG", "sparse", st.iterations, comm.clock().now(), xs));
+        comm.clock().reset();
+        let (xg, st) = gmres(&ctx, &sparse, &b, &cfg)?;
+        report.push(("GMRES", "sparse", st.iterations, comm.clock().now(), xg));
+
+        let gathered: Vec<_> = report
+            .into_iter()
+            .map(|(m, fmt_, it, t, x)| (m, fmt_, it, t, gather_vector(&mesh, &x)))
+            .collect();
+        Ok::<_, cuplss::Error>(gathered)
+    });
+
+    for row in results.into_iter().next().unwrap()? {
+        let (method, format, iters, vtime, x) = row;
+        if let Some(x) = x {
+            let err = x
+                .iter()
+                .enumerate()
+                .map(|(i, &xi)| (xi - x_true(i)).abs())
+                .fold(0.0f64, f64::max);
+            println!(
+                "  {method:<6} {format}  {iters:>4} iters  vtime {:>12}  max err {err:.2e}",
+                fmt::secs(vtime)
+            );
+            assert!(err < 1e-6, "{method}/{format}: {err}");
+        }
+    }
+
+    // Model mode: a 1000x1000 grid (n = 1e6) — the dense operand would
+    // need 8 TB; the CSR needs ~5e6 entries.
+    let gm = 1_000usize;
+    let nm = gm * gm;
+    println!("\nModel-mode projection, {gm}x{gm} grid (n = {nm}), 100 CG iterations:");
+    for ranks in [1usize, 4, 16] {
+        let p = ModelParams {
+            tile: 256,
+            shape: MeshShape::near_square(ranks),
+            net: NetworkModel::gigabit_ethernet(),
+            engine: ComputeProfile::q6600_atlas(),
+            panel_cpu: ComputeProfile::q6600_atlas(),
+            swap_fraction: 0.0,
+        };
+        let t = sparse_iter_makespan::<f64>(IterMethod::Cg, nm, poisson2d_nnz(gm), 100, 30, &p);
+        println!("  P = {ranks:>2}: {}", fmt::secs(t));
+    }
+    println!("\nNote: on Gigabit Ethernet the halo-free full-vector allgather moves");
+    println!("~n elements per matvec regardless of P, so the sparse makespan stops");
+    println!("improving with ranks — the honest cost of the simple exchange, and");
+    println!("orders of magnitude below the dense operand either way (DESIGN.md §10).");
+    println!("\nsparse_poisson OK");
+    Ok(())
+}

@@ -5,7 +5,8 @@
 //! the caller supplies, e.g. for ablation sweeps).
 
 use super::costmodel::{ComputeProfile, OpCost};
-use super::engine::{tile_op_cost, Engine};
+use super::engine::{spmv_cost, tile_op_cost, Engine};
+use crate::sparse::CsrMatrix;
 use crate::{linalg, Result, Scalar};
 
 /// Pure-rust serial engine with a modelled CPU profile.
@@ -126,6 +127,16 @@ impl<S: Scalar> Engine<S> for CpuEngine {
         let t = self.tile;
         linalg::potrf(t, a)?;
         Ok(self.cost::<S>("potrf"))
+    }
+
+    fn spmv(&self, a: &CsrMatrix<S>, x: &[S], y: &mut [S]) -> Result<OpCost> {
+        a.spmv(x, y);
+        Ok(spmv_cost::<S>(&self.profile, a.nnz(), a.nrows(), a.nrows()))
+    }
+
+    fn spmv_t(&self, a: &CsrMatrix<S>, x: &[S], y: &mut [S]) -> Result<OpCost> {
+        a.spmv_t(x, y);
+        Ok(spmv_cost::<S>(&self.profile, a.nnz(), a.nrows(), a.ncols()))
     }
 
     fn blas1_cost(&self, len: usize) -> OpCost {

@@ -15,6 +15,7 @@
 //! the paper's finding that fine-grained ops cap the GPU's contribution.
 
 use super::costmodel::{OpClass, OpCost};
+use crate::sparse::CsrMatrix;
 use crate::{Result, Scalar};
 
 /// Exact flop counts per tile op (must match `python/compile/model.py`).
@@ -68,6 +69,19 @@ pub trait Engine<S: Scalar>: Send + Sync {
     fn trsv_lt(&self, l: &[S], b: &mut [S]) -> Result<OpCost>;
     /// In-place lower Cholesky of a diagonal tile.
     fn potrf(&self, a: &mut [S]) -> Result<OpCost>;
+
+    /// Sparse `y = A x` over one CSR row block (`x.len() == a.ncols()`,
+    /// `y.len() == a.nrows()`, `y` overwritten).  Unlike the tile ops this
+    /// is variable-shape, so the accelerated engine — whose contract is a
+    /// closed set of fixed-shape AOT executables — gates it off with a
+    /// runtime error; sparse operands run on the CPU arm (see `DESIGN.md`
+    /// §10).  Note [`crate::pblas::pspmv()`] panics its rank on an engine
+    /// error, like every PBLAS routine.
+    fn spmv(&self, a: &CsrMatrix<S>, x: &[S], y: &mut [S]) -> Result<OpCost>;
+
+    /// Sparse `y = A^T x` (`x.len() == a.nrows()`, `y.len() == a.ncols()`,
+    /// `y` overwritten) — the BiCG second sequence on sparse operands.
+    fn spmv_t(&self, a: &CsrMatrix<S>, x: &[S], y: &mut [S]) -> Result<OpCost>;
 
     /// Modelled cost of a BLAS-1 op of `len` elements on this engine.
     fn blas1_cost(&self, len: usize) -> OpCost;
@@ -141,6 +155,32 @@ pub fn op_touched_elems(op: &str, t: usize) -> (usize, usize) {
     }
 }
 
+/// Flop count of a CSR matvec with `nnz` stored entries (one multiply-add
+/// per entry) — the `2·nnz` the sparse cost model charges.
+pub fn spmv_flops(nnz: u64) -> u64 {
+    2 * nnz
+}
+
+/// Modelled cost of a CSR matvec under a profile — shared by the engines
+/// and `bench_harness::model::sparse_iter_makespan`.
+///
+/// Memory-bound ([`OpClass::Blas2`]): per stored entry one value (`S`), one
+/// 4-byte column index and one gathered `x` read stream through memory,
+/// plus `nrows + 1` row pointers and `nout` output writes (`nout = nrows`
+/// for `y = A x`, `ncols` for the transpose matvec).  Indices are priced
+/// at the standard 4-byte CSR int even though the host [`CsrMatrix`]
+/// stores `usize` — the model prices what a production kernel would
+/// stream.
+pub fn spmv_cost<S: Scalar>(
+    profile: &super::costmodel::ComputeProfile,
+    nnz: usize,
+    nrows: usize,
+    nout: usize,
+) -> OpCost {
+    let bytes = nnz * (2 * S::BYTES + 4) + (nrows + 1) * 4 + nout * S::BYTES;
+    profile.op_cost::<S>(OpClass::Blas2, spmv_flops(nnz as u64), bytes, bytes)
+}
+
 /// Helper shared by engine impls and the analytic model: cost of a tile op
 /// under a profile, with the op's standard touched/streamed footprints.
 pub fn tile_op_cost<S: Scalar>(
@@ -177,5 +217,20 @@ mod tests {
     #[should_panic(expected = "unknown op")]
     fn unknown_op_panics() {
         op_flops("nope", 1);
+    }
+
+    #[test]
+    fn spmv_cost_is_memory_bound_and_scales_with_nnz() {
+        assert_eq!(spmv_flops(5), 10);
+        let cpu = crate::accel::ComputeProfile::q6600_atlas();
+        let small = spmv_cost::<f64>(&cpu, 1_000, 100, 100);
+        let big = spmv_cost::<f64>(&cpu, 100_000, 100, 100);
+        assert!(big.total() > small.total());
+        assert_eq!(small.transfer_secs, 0.0, "host profile streams nothing");
+        // Transpose pricing: same row pointers, wider output.
+        assert!(spmv_cost::<f64>(&cpu, 1_000, 100, 400).total() > small.total());
+        // The accelerated profile pays PCIe per call, as for every tile op.
+        let gpu = crate::accel::ComputeProfile::gtx280_cublas();
+        assert!(spmv_cost::<f64>(&gpu, 1_000, 100, 100).transfer_secs > 0.0);
     }
 }

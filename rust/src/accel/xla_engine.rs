@@ -12,6 +12,7 @@ use std::sync::Arc;
 use super::costmodel::{ComputeProfile, OpCost};
 use super::engine::{tile_op_cost, Engine, TILE_OPS};
 use crate::runtime::{Executable, Runtime};
+use crate::sparse::CsrMatrix;
 use crate::{Error, Result, Scalar};
 
 /// PJRT-backed engine with an accelerator cost profile.
@@ -152,6 +153,23 @@ impl<S: Scalar> Engine<S> for XlaEngine<S> {
         let result = self.exe("potrf").run::<S>(&[a])?;
         a.copy_from_slice(&result);
         Ok(self.cost("potrf"))
+    }
+
+    fn spmv(&self, _a: &CsrMatrix<S>, _x: &[S], _y: &mut [S]) -> Result<OpCost> {
+        // Sparse matvecs are variable-shape: there is no AOT artifact to
+        // dispatch to, so the accelerated arm gates off exactly like a
+        // missing artifact would (sparse operands run on the CPU engine).
+        Err(Error::runtime(
+            "spmv is not available on the accelerated engine: no AOT sparse kernel \
+             artifact (run sparse operands with the CPU engine)",
+        ))
+    }
+
+    fn spmv_t(&self, _a: &CsrMatrix<S>, _x: &[S], _y: &mut [S]) -> Result<OpCost> {
+        Err(Error::runtime(
+            "spmv_t is not available on the accelerated engine: no AOT sparse kernel \
+             artifact (run sparse operands with the CPU engine)",
+        ))
     }
 
     fn blas1_cost(&self, len: usize) -> OpCost {

@@ -9,6 +9,46 @@
 //! shrinks.  Locally a rank stores its tiles densely: global tile row `ti`
 //! sits at local row `ti / pr`, so global↔local index conversion is pure
 //! arithmetic — no lookup tables, no communication.
+//!
+//! The owner and index maps are total and mutually inverse — for every
+//! tile, `global_ti(owner_row, local_ti(ti)) == ti` (and likewise for
+//! columns):
+//!
+//! ```
+//! use cuplss::dist::Descriptor;
+//! use cuplss::mesh::MeshShape;
+//!
+//! // 13x13 in 4-wide tiles on a 2x3 mesh: 4x4 tiles, last one padded.
+//! let d = Descriptor::new(13, 13, 4, MeshShape::new(2, 3));
+//! assert_eq!((d.mt(), d.nt()), (4, 4));
+//! // Tile (2, 3): owned by mesh rank (2 mod 2, 3 mod 3) = (0, 0) ...
+//! assert_eq!(d.owner(2, 3), (0, 0));
+//! // ... stored locally at (2 / 2, 3 / 3) = (1, 1) ...
+//! assert_eq!((d.local_ti(2), d.local_tj(3)), (1, 1));
+//! // ... and the maps invert exactly.
+//! assert_eq!(d.global_ti(0, d.local_ti(2)), 2);
+//! assert_eq!(d.global_tj(0, d.local_tj(3)), 3);
+//! ```
+//!
+//! Per-rank tile counts partition the grid, and positions beyond the real
+//! extent take the *identity* padding (pad diagonal 1, off-diagonal 0 —
+//! the invariant that lets padded factorisations embed real ones exactly
+//! while padded matvec terms vanish against zero-padded vectors):
+//!
+//! ```
+//! use cuplss::dist::Descriptor;
+//! use cuplss::mesh::MeshShape;
+//!
+//! // 10 rows in 4-wide tiles over 2 process rows: 3 tile rows, 2 padded.
+//! let d = Descriptor::new(10, 10, 4, MeshShape::new(2, 2));
+//! assert_eq!(d.mt(), 3);
+//! assert_eq!(d.local_mt(0), 2); // process row 0 holds tile rows {0, 2}
+//! assert_eq!(d.local_mt(1), 1); // process row 1 holds tile row {1}
+//! assert_eq!(d.local_mt(0) + d.local_mt(1), d.mt());
+//! assert_eq!(d.padded_m(), 12);
+//! assert_eq!(d.pad::<f64>(11, 11), 1.0); // pad diagonal: identity
+//! assert_eq!(d.pad::<f64>(11, 3), 0.0); // pad off-diagonal: zero
+//! ```
 
 use crate::mesh::MeshShape;
 

@@ -4,10 +4,22 @@
 //! Storage is tile-major: `local_mt x local_nt` tiles, each a packed
 //! row-major `tile x tile` buffer, so every local operand handed to the
 //! [`crate::accel::Engine`] is one of a closed set of fixed-shape buffers
-//! (the AOT-executable contract).  Edge tiles are **identity padded**
-//! ([`BlockDesc::pad`]): out-of-range diagonal entries are 1, off-diagonal 0,
-//! which embeds the real factorisation exactly inside the padded one and
-//! keeps padded matvec contributions at zero against zero-padded vectors.
+//! (the AOT-executable contract).
+//!
+//! Invariants every consumer may rely on:
+//!
+//! * **ownership** — the rank at mesh coordinates `(prow, pcol)` holds
+//!   exactly the tiles `{(ti, tj) : ti ≡ prow (mod pr), tj ≡ pcol (mod
+//!   pc)}` ([`super::descriptor::BlockDesc::owner`]); jointly the shards
+//!   cover every global element exactly once;
+//! * **identity padding of edge tiles** ([`super::descriptor::BlockDesc::pad`]):
+//!   out-of-range diagonal entries are 1, off-diagonal 0, which embeds the
+//!   real factorisation exactly inside the padded one (pad rows of L/U are
+//!   `e_i`, never pivoted against) and keeps padded matvec contributions at
+//!   zero against zero-padded vectors;
+//! * **conformability is descriptor equality** — two operands interoperate
+//!   iff their [`Descriptor`]s compare equal; every PBLAS routine asserts
+//!   this before communicating.
 
 use super::descriptor::Descriptor;
 use crate::Scalar;

@@ -28,8 +28,11 @@
 //! ```
 //!
 //! Vectors follow the tile rows (block `ti` on process row `ti mod 2`),
-//! replicated across the process columns — see `DESIGN.md` for why that
-//! layout makes every Krylov recurrence communication-minimal.
+//! replicated across the process columns — see `DESIGN.md` §2 for why that
+//! layout makes every Krylov recurrence communication-minimal.  The sparse
+//! operand format ([`crate::sparse::DistCsrMatrix`]) reuses this same rule
+//! for its *rows*, which is what lets it pair with [`DistVector`] without
+//! any new descriptor machinery (`DESIGN.md` §10).
 
 pub mod descriptor;
 pub mod matrix;

@@ -10,6 +10,14 @@
 //! * [`ptranspose`] — the row↔column redistribution `B = A^T`: every tile
 //!   `(ti, tj)` moves to the owner of `(tj, ti)` transposed, the step that
 //!   turns a Cholesky `L` into the `L^T` the backward substitution reads.
+//!
+//! All five preserve the layout invariants documented in
+//! [`super::matrix`] / [`super::vector`]: scatter re-applies the identity
+//! (matrix) / zero (vector) padding, so a scatter is indistinguishable
+//! from building the same operand with `from_fn`; gather reads only
+//! process column 0's vector replicas (replication makes the others
+//! redundant by invariant); ptranspose keeps identity padding intact
+//! because the pad pattern is itself symmetric.
 
 use super::descriptor::Descriptor;
 use super::matrix::DistMatrix;

@@ -3,11 +3,28 @@
 //! A length-`m` vector is cut into the same `tile`-sized blocks as the
 //! matrix's tile rows; block `ti` lives on process row `ti mod pr` and is
 //! **replicated on every process column** of that row.  This is the layout
-//! every solver in the crate assumes: BLAS-1 ops are purely local (all
-//! replicas update identically), a distributed dot needs one column-comm
-//! allreduce, and `pgemv` leaves its result in the same layout it consumed.
-//! Blocks beyond `m` are zero padded (so padded dot/matvec terms vanish
-//! against the matrix's identity padding).
+//! every solver in the crate assumes, and its invariants are what make the
+//! Krylov recurrences communication-minimal:
+//!
+//! * **replication rule** — all `pc` replicas of a block are bit-identical
+//!   at every step: BLAS-1 ops apply the same local update everywhere, and
+//!   collective results (allreduced dots, matvec outputs) are identical by
+//!   construction, so no re-synchronisation ever happens;
+//! * **zero padding** — block entries at or beyond `m` are exactly zero,
+//!   so padded dot/matvec terms vanish against the matrix's identity
+//!   padding; every writer of a vector that feeds dots or matvecs must
+//!   keep them zero.  (One documented exception: the Jacobi
+//!   preconditioner's *scale* vector stores 1s at padded positions — it
+//!   multiplies operands elementwise instead of entering reductions, and
+//!   pad scales of 1 are what preserve the matrix identity padding; see
+//!   [`crate::solvers::JacobiPrecond`].);
+//! * **conformability is descriptor equality** — a vector pairs with a
+//!   matrix (dense [`crate::dist::DistMatrix`] or sparse
+//!   [`crate::sparse::DistCsrMatrix`]) iff the descriptors compare equal;
+//! * a distributed dot needs one *column*-comm allreduce (the column's
+//!   members, one per process row, jointly hold the whole vector), and
+//!   `pgemv`/`pspmv` consume and produce this same layout, so solver
+//!   iterations chain without redistribution.
 
 use super::descriptor::Descriptor;
 use crate::Scalar;

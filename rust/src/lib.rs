@@ -18,20 +18,26 @@
 //! * the **solvers** are the paper's: blocked LU with partial pivoting and
 //!   Cholesky (direct), CG / BiCG / BiCGSTAB / GMRES(m) (non-stationary
 //!   iterative), over 2-D block-cyclic distributed matrices ([`dist`],
-//!   [`pblas`], [`solvers`]).
+//!   [`pblas`], [`solvers`]);
+//! * the iterative solvers additionally accept **sparse** operands: a
+//!   row-block-distributed CSR format ([`sparse`], [`pblas::pspmv()`]) behind
+//!   the operator-generic [`pblas::LinOp`] trait, with 2-D/3-D Poisson
+//!   stencil generators in [`workloads::stencil`] — the regime ("very
+//!   large" systems) the paper motivates iterative methods with.
 //!
 //! Mirroring the paper's Figure 2, the crate is layered:
 //!
 //! | CUPLSS level | this crate |
 //! |---|---|
 //! | 4. user API | [`cluster`], [`solvers`] entry points |
-//! | 3. data distribution | [`dist`], [`mesh`], [`pblas`] |
+//! | 3. data distribution | [`dist`], [`sparse`], [`mesh`], [`pblas`] |
 //! | 2. architecture independence | [`accel::Engine`] trait |
 //! | 1. CUDA/CUBLAS/MPI/C runtimes | [`runtime`] (PJRT), [`linalg`], [`comm`] |
 //!
-//! See `DESIGN.md` for the substitution table (what the paper ran on real
-//! hardware vs. what this repo simulates) and `EXPERIMENTS.md` for the
-//! regenerated Figures 3 and 4.
+//! See `README.md` for a quickstart, `DESIGN.md` for the substitution
+//! table (what the paper ran on real hardware vs. what this repo
+//! simulates; §10 covers the sparse subsystem) and `EXPERIMENTS.md` for
+//! the regenerated Figures 3 and 4.
 
 pub mod accel;
 pub mod bench_harness;
@@ -46,6 +52,7 @@ pub mod mesh;
 pub mod pblas;
 pub mod runtime;
 pub mod solvers;
+pub mod sparse;
 pub mod util;
 pub mod workloads;
 

@@ -1,0 +1,262 @@
+//! The operator abstraction the Krylov solvers run on.
+//!
+//! Every non-stationary iterative method in this crate touches its system
+//! matrix only through matvecs (`A x`, and `A^T x` for the BiCG family)
+//! plus, for Jacobi preconditioning, diagonal extraction and symmetric
+//! scaling.  [`LinOp`] captures exactly that contract, so the *same*
+//! solver code runs on a dense 2-D block-cyclic [`DistMatrix`] (delegating
+//! to [`pgemv`]/[`pgemv_t`]) or a sparse row-block [`DistCsrMatrix`]
+//! (delegating to [`super::pspmv()`]/[`super::pspmv_t`]) with no per-solver
+//! forks — the dense/sparse analogue of the engine swap at level 2.
+//!
+//! Contract (see `DESIGN.md` §10):
+//!
+//! * `desc()` names the layout; operands are conformable with a vector iff
+//!   the descriptors are equal (the validation every PBLAS routine makes);
+//! * `apply`/`apply_t` consume and produce the standard row-distributed,
+//!   column-replicated [`DistVector`] layout, charging the virtual clock
+//!   for local compute and every message;
+//! * `extract_diag` returns the operator's diagonal in that same vector
+//!   layout (positions at or beyond `m` are unspecified — callers guard);
+//! * `scale_sym` applies the two-sided scaling `A := diag(d) A diag(d)`
+//!   used by [`crate::solvers::JacobiPrecond`].
+
+use super::pgemv::{pgemv, pgemv_t};
+use super::pspmv::{pspmv, pspmv_t};
+use super::{tags, Ctx};
+use crate::comm::Payload;
+use crate::dist::{Descriptor, DistMatrix, DistVector};
+use crate::sparse::DistCsrMatrix;
+use crate::Scalar;
+
+/// A distributed linear operator the Krylov solvers can consume.
+pub trait LinOp<S: Scalar> {
+    /// The layout descriptor vectors must match (descriptor equality is
+    /// conformability).
+    fn desc(&self) -> &Descriptor;
+
+    /// `y = A x` in the standard vector layout.
+    fn apply(&self, ctx: &Ctx<'_, S>, x: &DistVector<S>) -> DistVector<S>;
+
+    /// `y = A^T x` (the BiCG/QMR-style second sequence).
+    fn apply_t(&self, ctx: &Ctx<'_, S>, x: &DistVector<S>) -> DistVector<S>;
+
+    /// The operator's diagonal as a standard distributed vector.  Entries
+    /// at padded positions (global index ≥ `m`) are format-specific
+    /// (identity padding for dense, zero for sparse) — callers must guard.
+    fn extract_diag(&self, ctx: &Ctx<'_, S>) -> DistVector<S>;
+
+    /// Two-sided symmetric scaling `A := diag(d) A diag(d)`.
+    fn scale_sym(&mut self, ctx: &Ctx<'_, S>, d: &DistVector<S>);
+}
+
+impl<S: Scalar> LinOp<S> for DistMatrix<S> {
+    fn desc(&self) -> &Descriptor {
+        DistMatrix::desc(self)
+    }
+
+    fn apply(&self, ctx: &Ctx<'_, S>, x: &DistVector<S>) -> DistVector<S> {
+        pgemv(ctx, self, x)
+    }
+
+    fn apply_t(&self, ctx: &Ctx<'_, S>, x: &DistVector<S>) -> DistVector<S> {
+        pgemv_t(ctx, self, x)
+    }
+
+    /// The diagonal tiles live at mesh coordinates `(ti mod pr, ti mod pc)`;
+    /// each owner broadcasts its tile's diagonal along its process row, and
+    /// the standard vector layout is assembled locally.
+    fn extract_diag(&self, ctx: &Ctx<'_, S>) -> DistVector<S> {
+        let desc = *DistMatrix::desc(self);
+        assert!(desc.is_square(), "extract_diag requires a square matrix");
+        let t = desc.tile;
+        let mesh = ctx.mesh;
+        let row = mesh.row_comm();
+        let mut diag = DistVector::zeros(desc, mesh.row(), mesh.col());
+        for l in 0..diag.local_blocks() {
+            let ti = desc.global_ti(mesh.row(), l);
+            let owner_col = ti % desc.shape.pc;
+            let data = if mesh.col() == owner_col {
+                let tile = self.global_tile(ti, ti);
+                let mut d = vec![S::zero(); t];
+                for i in 0..t {
+                    d[i] = tile[i * t + i];
+                }
+                Some(Payload::Data(d))
+            } else {
+                None
+            };
+            let d = row.bcast(owner_col, tags::DIAG + ti as u32, data).into_data();
+            diag.block_mut(l).copy_from_slice(&d);
+        }
+        diag
+    }
+
+    /// Row scaling needs `d` for owned tile rows (local); column scaling
+    /// needs `d` over every tile row — the same full-vector assembly
+    /// `pspmv` uses ([`super::pspmv::allgather_full`]).
+    fn scale_sym(&mut self, ctx: &Ctx<'_, S>, d: &DistVector<S>) {
+        let desc = *DistMatrix::desc(self);
+        assert!(desc.is_square(), "scale_sym requires a square matrix");
+        assert_eq!(&desc, d.desc(), "scale_sym layout mismatch");
+        let t = desc.tile;
+        let dfull = super::pspmv::allgather_full(ctx, d, tags::SCALE);
+        let tiles: Vec<_> = self.owned_tiles().collect();
+        for (lti, ltj, ti, tj) in tiles {
+            let drow = d.global_block(ti);
+            let dcol = &dfull[tj * t..(tj + 1) * t];
+            let tile = self.tile_mut(lti, ltj);
+            for i in 0..t {
+                for j in 0..t {
+                    tile[i * t + j] *= drow[i] * dcol[j];
+                }
+            }
+            ctx.charge(ctx.engine.blas1_cost(t * t));
+        }
+    }
+}
+
+impl<S: Scalar> LinOp<S> for DistCsrMatrix<S> {
+    fn desc(&self) -> &Descriptor {
+        DistCsrMatrix::desc(self)
+    }
+
+    fn apply(&self, ctx: &Ctx<'_, S>, x: &DistVector<S>) -> DistVector<S> {
+        pspmv(ctx, self, x)
+    }
+
+    fn apply_t(&self, ctx: &Ctx<'_, S>, x: &DistVector<S>) -> DistVector<S> {
+        pspmv_t(ctx, self, x)
+    }
+
+    /// Row-block layout: each rank's diagonal entries sit inside its own
+    /// rows (replicated across process columns like the vector itself), so
+    /// extraction is purely local — no communication.
+    fn extract_diag(&self, _ctx: &Ctx<'_, S>) -> DistVector<S> {
+        let desc = *DistCsrMatrix::desc(self);
+        let t = desc.tile;
+        let mut diag = DistVector::zeros(desc, self.prow(), self.pcol());
+        for l in 0..diag.local_blocks() {
+            let ti = desc.global_ti(self.prow(), l);
+            let blk = diag.block_mut(l);
+            for k in 0..t {
+                let gi = ti * t + k;
+                if let Some(v) = self.local().get(l * t + k, gi) {
+                    blk[k] = v;
+                }
+            }
+        }
+        diag
+    }
+
+    /// Row scales are local (owned rows pair with owned `d` blocks); column
+    /// scales come from the same full-vector assembly `pspmv` uses.
+    fn scale_sym(&mut self, ctx: &Ctx<'_, S>, d: &DistVector<S>) {
+        let desc = *DistCsrMatrix::desc(self);
+        assert_eq!(&desc, d.desc(), "scale_sym layout mismatch");
+        let t = desc.tile;
+        let dfull = super::pspmv::allgather_full(ctx, d, tags::SCALE + 1);
+        let nnz = self.local().nnz();
+        let nrows = self.local().nrows();
+        for li in 0..nrows {
+            let drow = d.block(li / t)[li % t];
+            let (cols, vals) = self.local_mut().row_mut(li);
+            for (v, &c) in vals.iter_mut().zip(cols) {
+                *v *= drow * dfull[c];
+            }
+        }
+        ctx.charge(ctx.engine.blas1_cost(2 * nnz));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::CpuEngine;
+    use crate::comm::{NetworkModel, World};
+    use crate::dist::gather_vector;
+    use crate::mesh::{Mesh, MeshShape};
+    use std::sync::Arc;
+
+    fn dense_elem(i: usize, j: usize) -> f64 {
+        if i == j {
+            10.0 + i as f64
+        } else {
+            ((i * 3 + j * 5) % 7) as f64 * 0.1
+        }
+    }
+
+    fn sparse_rows(n: usize) -> impl Fn(usize) -> Vec<(usize, f64)> + Clone + Send + Sync {
+        move |i| {
+            let mut r = vec![(i, 10.0 + i as f64)];
+            if i + 1 < n {
+                r.push((i + 1, -0.3));
+            }
+            if i >= 1 {
+                r.push((i - 1, -0.2));
+            }
+            r
+        }
+    }
+
+    /// `extract_diag` agrees between the dense broadcast path and the
+    /// sparse local path, on a padded (non-divisible) size.
+    #[test]
+    fn diag_extraction_dense_vs_sparse() {
+        let n = 11usize;
+        for (pr, pc) in [(1usize, 1usize), (2, 2), (2, 3)] {
+            let out = World::run::<f64, _, _>(pr * pc, NetworkModel::ideal(), move |comm| {
+                let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+                let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(4)));
+                let desc = Descriptor::new(n, n, 4, mesh.shape());
+                let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), dense_elem);
+                let s = DistCsrMatrix::from_row_fn(desc, mesh.row(), mesh.col(), |i| {
+                    vec![(i, dense_elem(i, i))]
+                });
+                let da = a.extract_diag(&ctx);
+                let ds = s.extract_diag(&ctx);
+                (gather_vector(&mesh, &da), gather_vector(&mesh, &ds))
+            });
+            let (da, ds) = out[0].clone();
+            let (da, ds) = (da.unwrap(), ds.unwrap());
+            for i in 0..n {
+                assert_eq!(da[i], dense_elem(i, i), "{pr}x{pc} dense diag {i}");
+                assert_eq!(ds[i], da[i], "{pr}x{pc} sparse diag {i}");
+            }
+        }
+    }
+
+    /// Symmetric scaling agrees with the serial formula on both formats,
+    /// through the generic `apply`.
+    #[test]
+    fn scale_sym_matches_serial_on_both_formats() {
+        let n = 10usize;
+        let dval = |i: usize| 1.0 + 0.1 * i as f64;
+        let xv = |i: usize| (i as f64 * 0.3).sin() + 0.2;
+        let out = World::run::<f64, _, _>(4, NetworkModel::ideal(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(2, 2));
+            let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(4)));
+            let desc = Descriptor::new(n, n, 4, mesh.shape());
+            let mut a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), dense_elem);
+            let mut s = DistCsrMatrix::from_row_fn(desc, mesh.row(), mesh.col(), sparse_rows(n));
+            let d = DistVector::from_fn(desc, mesh.row(), mesh.col(), dval);
+            a.scale_sym(&ctx, &d);
+            s.scale_sym(&ctx, &d);
+            let x = DistVector::from_fn(desc, mesh.row(), mesh.col(), xv);
+            let ya = a.apply(&ctx, &x);
+            let ys = s.apply(&ctx, &x);
+            (gather_vector(&mesh, &ya), gather_vector(&mesh, &ys))
+        });
+        let (ya, ys) = out[0].clone();
+        let (ya, ys) = (ya.unwrap(), ys.unwrap());
+        let rows = sparse_rows(n);
+        for i in 0..n {
+            let want_dense: f64 =
+                (0..n).map(|j| dval(i) * dense_elem(i, j) * dval(j) * xv(j)).sum();
+            let want_sparse: f64 =
+                rows(i).into_iter().map(|(j, v)| dval(i) * v * dval(j) * xv(j)).sum();
+            assert!((ya[i] - want_dense).abs() < 1e-11, "dense row {i}");
+            assert!((ys[i] - want_sparse).abs() < 1e-12, "sparse row {i}");
+        }
+    }
+}

@@ -6,15 +6,24 @@
 //! local tile op goes through the active [`crate::accel::Engine`]
 //! (accelerated or serial), charging the rank's virtual clock.
 //!
+//! Two operand formats share the layer: dense 2-D block-cyclic matrices
+//! ([`pgemv()`], [`pgemm_acc`]) and sparse row-block CSR matrices
+//! ([`pspmv()`]); the [`LinOp`] trait presents both to the Krylov solvers
+//! through one `apply`/`apply_t` interface (see `DESIGN.md` §10).
+//!
 //! Tag discipline: each routine owns a tag block (see `tags`), so no two
 //! overlapping collectives can cross-match.
 
+pub mod linop;
 pub mod pgemm;
 pub mod pgemv;
+pub mod pspmv;
 pub mod pvec;
 
+pub use linop::LinOp;
 pub use pgemm::pgemm_acc;
 pub use pgemv::{pgemv, pgemv_t};
+pub use pspmv::{pspmv, pspmv_t};
 pub use pvec::{paxpy, pcopy, pdot, pnorm2, pscal};
 
 use std::sync::Arc;
@@ -29,9 +38,15 @@ pub(crate) mod tags {
     pub const PGEMV_T: u32 = 200;
     pub const PDOT: u32 = 300;
     pub const PGEMM: u32 = 400;
+    pub const PSPMV: u32 = 500;
+    pub const PSPMV_T: u32 = 600;
     pub const LU: u32 = 1_000;
     pub const CHOL: u32 = 2_000;
     pub const TRSV: u32 = 3_000;
+    /// Diagonal-extraction broadcasts (offset by the tile row index).
+    pub const DIAG: u32 = 5_000;
+    /// Symmetric-scaling allgathers.
+    pub const SCALE: u32 = 5_100;
 }
 
 /// Per-rank execution context: mesh view + local compute engine.

@@ -1,0 +1,223 @@
+//! Distributed sparse matrix-vector products over row-block CSR operands —
+//! the kernel that puts the Krylov solvers in their natural (sparse) regime.
+//!
+//! Layouts: `A` is a [`DistCsrMatrix`] (rows in the vector layout's tile
+//! blocks, replicated across process columns); `x`, `y` are row-distributed
+//! / column-replicated ([`DistVector`]).  Conformability is descriptor
+//! equality, exactly as for [`super::pgemv()`].
+//!
+//! `y = A x` ([`pspmv`]):
+//!   1. **column allgather** — assemble the full (padded) x on every rank:
+//!      the column comm's members, one per process row, jointly hold the
+//!      whole vector.  This is the halo-free exchange the sparse cost model
+//!      prices — no attempt to ship only the stencil halo;
+//!   2. **local** — one engine `spmv` of the owned CSR row block against
+//!      the assembled x: every owned row is computed whole, so unlike
+//!      `pgemv` there are no partial sums and **no row allreduce**.
+//!
+//! `y = A^T x` ([`pspmv_t`], BiCG's second sequence):
+//!   1. **local** — `w = A_local^T x_local` over the full global column
+//!      range (the owned x blocks are already home);
+//!   2. **column allreduce** of the full-length partials, then each rank
+//!      keeps its own blocks — y lands replicated exactly like x.
+//!
+//! Every process column performs the identical redundant computation, so
+//! results stay column-replicated without extra traffic.
+//!
+//! Engine errors panic the calling rank (the same convention as
+//! [`super::pgemv()`]'s tile ops): in particular the accelerated engine
+//! has no sparse AOT artifact and always errors — run sparse operands
+//! with the CPU engine ([`crate::accel::CpuEngine`]).  The gate is
+//! testable directly on [`crate::accel::Engine::spmv`].
+
+use super::{tags, Ctx};
+use crate::comm::ReduceOp;
+use crate::dist::DistVector;
+use crate::sparse::DistCsrMatrix;
+use crate::Scalar;
+
+/// Assemble the full padded vector (`desc.padded_m()` elements) from this
+/// rank's blocks via one column-comm allgather.  Shared with
+/// [`super::linop`]'s sparse symmetric scaling, which needs the same
+/// assembly for its column scales.
+pub(super) fn allgather_full<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    x: &DistVector<S>,
+    tag: u32,
+) -> Vec<S> {
+    let desc = *x.desc();
+    let t = desc.tile;
+    let mut mine = Vec::with_capacity(x.local_blocks() * t);
+    for l in 0..x.local_blocks() {
+        mine.extend_from_slice(x.block(l));
+    }
+    let by_row = ctx.mesh.col_comm().allgather(tag, mine);
+    let mut full = vec![S::zero(); desc.padded_m()];
+    for ti in 0..desc.mt() {
+        let owner = ti % desc.shape.pr;
+        let off = desc.local_ti(ti) * t;
+        full[ti * t..(ti + 1) * t].copy_from_slice(&by_row[owner][off..off + t]);
+    }
+    full
+}
+
+/// `y = A x`; returns y in the same layout as x.
+pub fn pspmv<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &DistCsrMatrix<S>,
+    x: &DistVector<S>,
+) -> DistVector<S> {
+    let desc = *a.desc();
+    assert_eq!(&desc, x.desc(), "pspmv operand descriptors differ");
+    let t = desc.tile;
+    let mesh = ctx.mesh;
+
+    // 1. Assemble the full x (halo-free row-block exchange).
+    let xfull = allgather_full(ctx, x, tags::PSPMV);
+
+    // 2. One local sparse matvec over the owned row block.
+    let mut yloc = vec![S::zero(); a.local().nrows()];
+    let cost = ctx.engine.spmv(a.local(), &xfull, &mut yloc).expect("spmv");
+    ctx.charge(cost);
+
+    let mut y = DistVector::zeros(desc, mesh.row(), mesh.col());
+    for l in 0..y.local_blocks() {
+        y.block_mut(l).copy_from_slice(&yloc[l * t..(l + 1) * t]);
+    }
+    y
+}
+
+/// `y = A^T x`; returns y in the same layout as x.
+pub fn pspmv_t<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &DistCsrMatrix<S>,
+    x: &DistVector<S>,
+) -> DistVector<S> {
+    let desc = *a.desc();
+    assert_eq!(&desc, x.desc(), "pspmv_t operand descriptors differ");
+    let t = desc.tile;
+    let mesh = ctx.mesh;
+
+    // 1. Local transpose product: owned rows of A are owned entries of x.
+    let mut xloc = Vec::with_capacity(x.local_blocks() * t);
+    for l in 0..x.local_blocks() {
+        xloc.extend_from_slice(x.block(l));
+    }
+    let mut part = vec![S::zero(); desc.padded_n()];
+    let cost = ctx.engine.spmv_t(a.local(), &xloc, &mut part).expect("spmv_t");
+    ctx.charge(cost);
+
+    // 2. Column allreduce of the full-length partials (one member per
+    //    process row = the complete distributed sum).
+    let summed = mesh.col_comm().allreduce_vec(tags::PSPMV_T, part, ReduceOp::Sum);
+
+    // 3. Keep this rank's blocks.
+    let mut y = DistVector::zeros(desc, mesh.row(), mesh.col());
+    for l in 0..y.local_blocks() {
+        let ti = desc.global_ti(mesh.row(), l);
+        y.block_mut(l).copy_from_slice(&summed[ti * t..(ti + 1) * t]);
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::CpuEngine;
+    use crate::comm::{NetworkModel, World};
+    use crate::dist::{gather_vector, Descriptor};
+    use crate::mesh::{Mesh, MeshShape};
+    use std::sync::Arc;
+
+    /// Deterministic sparse rows: diagonal + bands at ±2 and ±5.
+    fn rows_of(n: usize) -> impl Fn(usize) -> Vec<(usize, f64)> + Clone + Send + Sync {
+        move |i| {
+            let mut r = vec![(i, 3.0 + ((i * 7) % 5) as f64)];
+            for d in [2usize, 5] {
+                if i + d < n {
+                    r.push((i + d, -0.5 - (d as f64) * 0.1));
+                }
+                if i >= d {
+                    r.push((i - d, 0.25 + (d as f64) * 0.05));
+                }
+            }
+            r
+        }
+    }
+
+    fn xval(i: usize) -> f64 {
+        (i as f64 * 0.43).cos() + 0.1
+    }
+
+    fn serial_matvec(n: usize, transpose: bool) -> Vec<f64> {
+        let rows = rows_of(n);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            for (j, v) in rows(i) {
+                if transpose {
+                    y[j] += v * xval(i);
+                } else {
+                    y[i] += v * xval(j);
+                }
+            }
+        }
+        y
+    }
+
+    fn run_case(n: usize, tile: usize, pr: usize, pc: usize, transpose: bool) {
+        let out = World::run::<f64, _, _>(pr * pc, NetworkModel::ideal(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+            let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(tile)));
+            let desc = Descriptor::new(n, n, tile, mesh.shape());
+            let a = DistCsrMatrix::from_row_fn(desc, mesh.row(), mesh.col(), rows_of(n));
+            let x = DistVector::from_fn(desc, mesh.row(), mesh.col(), xval);
+            let y = if transpose { pspmv_t(&ctx, &a, &x) } else { pspmv(&ctx, &a, &x) };
+            gather_vector(&mesh, &y)
+        });
+        let got = out[0].as_ref().unwrap();
+        let want = serial_matvec(n, transpose);
+        for i in 0..n {
+            assert!(
+                (got[i] - want[i]).abs() < 1e-12,
+                "n={n} tile={tile} {pr}x{pc} T={transpose} i={i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn pspmv_matches_serial() {
+        for (pr, pc) in [(1, 1), (2, 1), (1, 2), (2, 2), (2, 3), (3, 2)] {
+            run_case(12, 4, pr, pc, false); // aligned
+            run_case(13, 4, pr, pc, false); // padded edge block
+        }
+    }
+
+    #[test]
+    fn pspmv_t_matches_serial() {
+        for (pr, pc) in [(1, 1), (2, 1), (1, 2), (2, 2), (2, 3), (3, 2)] {
+            run_case(12, 4, pr, pc, true);
+            run_case(13, 4, pr, pc, true);
+        }
+    }
+
+    #[test]
+    fn pspmv_charges_comm_and_compute_on_multirank_meshes() {
+        let out = World::run::<f64, _, _>(4, NetworkModel::gigabit_ethernet(), |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(2, 2));
+            let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(4)));
+            let desc = Descriptor::new(16, 16, 4, mesh.shape());
+            let a = DistCsrMatrix::from_row_fn(desc, mesh.row(), mesh.col(), rows_of(16));
+            let x = DistVector::from_fn(desc, mesh.row(), mesh.col(), xval);
+            let _ = pspmv(&ctx, &a, &x);
+            let c = comm.clock();
+            (c.compute_secs(), c.comm_wait_secs())
+        });
+        assert!(out.iter().all(|&(comp, _)| comp > 0.0), "spmv must charge compute: {out:?}");
+        assert!(
+            out.iter().any(|&(_, comm)| comm > 0.0),
+            "the x allgather must charge communication time: {out:?}"
+        );
+    }
+}

@@ -1,18 +1,20 @@
 //! BiConjugate Gradients — the paper's §2: "BiCG generates two mutually
 //! orthogonal sequences of residual vectors... performed using the system's
-//! matrix and its transpose."  The transpose sequence uses
-//! [`crate::pblas::pgemv_t`], which exercises the 2-D layout's
-//! column-reduce/row-allgather path.
+//! matrix and its transpose."  The transpose sequence uses the operator's
+//! `apply_t` — [`crate::pblas::pgemv_t`] (dense: the 2-D layout's
+//! column-reduce/row-allgather path) or [`crate::pblas::pspmv_t`] (sparse:
+//! local transpose matvec + column allreduce).
 
 use super::{norm_negligible, IterConfig, IterStats};
-use crate::dist::{DistMatrix, DistVector};
-use crate::pblas::{paxpy, pdot, pgemv, pgemv_t, pnorm2, pscal, Ctx};
+use crate::dist::DistVector;
+use crate::pblas::{paxpy, pdot, pnorm2, pscal, Ctx, LinOp};
 use crate::{Error, Result, Scalar};
 
 /// Solve `A x = b` (general nonsymmetric) from the zero initial guess.
-pub fn bicg<S: Scalar>(
+/// `A` is any [`LinOp`]; the transpose sequence uses its `apply_t`.
+pub fn bicg<S: Scalar, A: LinOp<S> + ?Sized>(
     ctx: &Ctx<'_, S>,
-    a: &DistMatrix<S>,
+    a: &A,
     b: &DistVector<S>,
     cfg: &IterConfig,
 ) -> Result<(DistVector<S>, IterStats<S>)> {
@@ -38,8 +40,8 @@ pub fn bicg<S: Scalar>(
                 detail: format!("rho = 0 at iteration {it}"),
             });
         }
-        let ap = pgemv(ctx, a, &p);
-        let atpt = pgemv_t(ctx, a, &pt);
+        let ap = a.apply(ctx, &p);
+        let atpt = a.apply_t(ctx, &pt);
         let ptap = pdot(ctx, &pt, &ap);
         if ptap == S::zero() {
             return Err(Error::Breakdown {

@@ -3,14 +3,15 @@
 //! irregular convergence.
 
 use super::{norm_negligible, IterConfig, IterStats};
-use crate::dist::{DistMatrix, DistVector};
-use crate::pblas::{paxpy, pdot, pgemv, pnorm2, pscal, Ctx};
+use crate::dist::DistVector;
+use crate::pblas::{paxpy, pdot, pnorm2, pscal, Ctx, LinOp};
 use crate::{Error, Result, Scalar};
 
 /// Solve `A x = b` (general nonsymmetric) from the zero initial guess.
-pub fn bicgstab<S: Scalar>(
+/// `A` is any [`LinOp`] (dense or sparse).
+pub fn bicgstab<S: Scalar, A: LinOp<S> + ?Sized>(
     ctx: &Ctx<'_, S>,
-    a: &DistMatrix<S>,
+    a: &A,
     b: &DistVector<S>,
     cfg: &IterConfig,
 ) -> Result<(DistVector<S>, IterStats<S>)> {
@@ -35,7 +36,7 @@ pub fn bicgstab<S: Scalar>(
                 detail: format!("rho = 0 at iteration {it}"),
             });
         }
-        let v = pgemv(ctx, a, &p);
+        let v = a.apply(ctx, &p);
         let r0v = pdot(ctx, &r0, &v);
         if r0v == S::zero() {
             return Err(Error::Breakdown {
@@ -52,7 +53,7 @@ pub fn bicgstab<S: Scalar>(
             paxpy(ctx, alpha, &p, &mut x);
             return Ok((x, IterStats::new(it + 1, snorm / bnorm, true)));
         }
-        let t = pgemv(ctx, a, &s);
+        let t = a.apply(ctx, &s);
         let tt = pdot(ctx, &t, &t);
         if tt == S::zero() {
             return Err(Error::Breakdown {

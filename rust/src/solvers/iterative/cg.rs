@@ -1,15 +1,18 @@
 //! Conjugate gradients — the classical Krylov method the paper's §2 builds
 //! from ("one of the most used Krylov methods... solves SPD systems").
+//!
+//! Operator-generic: `A` is any [`LinOp`] — dense block-cyclic or sparse
+//! row-block CSR (`DESIGN.md` §10).
 
 use super::{norm_negligible, IterConfig, IterStats};
-use crate::dist::{DistMatrix, DistVector};
-use crate::pblas::{paxpy, pdot, pgemv, pnorm2, pscal, Ctx};
+use crate::dist::DistVector;
+use crate::pblas::{paxpy, pdot, pnorm2, pscal, Ctx, LinOp};
 use crate::{Error, Result, Scalar};
 
 /// Solve `A x = b` (A SPD) from the zero initial guess.
-pub fn cg<S: Scalar>(
+pub fn cg<S: Scalar, A: LinOp<S> + ?Sized>(
     ctx: &Ctx<'_, S>,
-    a: &DistMatrix<S>,
+    a: &A,
     b: &DistVector<S>,
     cfg: &IterConfig,
 ) -> Result<(DistVector<S>, IterStats<S>)> {
@@ -27,7 +30,7 @@ pub fn cg<S: Scalar>(
     let mut rr = pdot(ctx, &r, &r);
 
     for it in 0..cfg.max_iter {
-        let ap = pgemv(ctx, a, &p);
+        let ap = a.apply(ctx, &p);
         let pap = pdot(ctx, &p, &ap);
         if pap <= S::zero() {
             return Err(Error::Breakdown {

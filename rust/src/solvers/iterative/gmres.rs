@@ -9,16 +9,16 @@
 //! needed beyond the matvecs and dots.
 
 use super::{negligible_at_scale, norm_negligible, IterConfig, IterStats};
-use crate::dist::{DistMatrix, DistVector};
+use crate::dist::DistVector;
 use crate::linalg::givens::HessenbergQr;
-use crate::pblas::{paxpy, pdot, pgemv, pnorm2, pscal, Ctx};
+use crate::pblas::{paxpy, pdot, pnorm2, pscal, Ctx, LinOp};
 use crate::{Result, Scalar};
 
 /// Solve `A x = b` (general nonsymmetric) from the zero initial guess with
-/// restart length `cfg.restart`.
-pub fn gmres<S: Scalar>(
+/// restart length `cfg.restart`.  `A` is any [`LinOp`] (dense or sparse).
+pub fn gmres<S: Scalar, A: LinOp<S> + ?Sized>(
     ctx: &Ctx<'_, S>,
-    a: &DistMatrix<S>,
+    a: &A,
     b: &DistVector<S>,
     cfg: &IterConfig,
 ) -> Result<(DistVector<S>, IterStats<S>)> {
@@ -35,7 +35,7 @@ pub fn gmres<S: Scalar>(
 
     loop {
         // r = b - A x (fresh residual at each restart).
-        let ax = pgemv(ctx, a, &x);
+        let ax = a.apply(ctx, &x);
         let mut r = b.clone_vec();
         paxpy(ctx, -S::one(), &ax, &mut r);
         let beta = pnorm2(ctx, &r);
@@ -53,7 +53,7 @@ pub fn gmres<S: Scalar>(
         let mut qr = HessenbergQr::<S>::new(m, beta);
         let mut k = 0usize;
         while k < m && total_iters < cfg.max_iter {
-            let mut w = pgemv(ctx, a, &basis[k]);
+            let mut w = a.apply(ctx, &basis[k]);
             let mut h = Vec::with_capacity(k + 2);
             for v in basis.iter() {
                 let hij = pdot(ctx, v, &w);
@@ -84,7 +84,7 @@ pub fn gmres<S: Scalar>(
         let res = qr.residual();
         if res <= tol {
             // Confirm with a true residual (restart loop re-checks too).
-            let ax = pgemv(ctx, a, &x);
+            let ax = a.apply(ctx, &x);
             let mut r = b.clone_vec();
             paxpy(ctx, -S::one(), &ax, &mut r);
             let rnorm = pnorm2(ctx, &r);
@@ -93,7 +93,7 @@ pub fn gmres<S: Scalar>(
             }
         }
         if total_iters >= cfg.max_iter {
-            let ax = pgemv(ctx, a, &x);
+            let ax = a.apply(ctx, &x);
             let mut r = b.clone_vec();
             paxpy(ctx, -S::one(), &ax, &mut r);
             let rnorm = pnorm2(ctx, &r);

@@ -1,11 +1,16 @@
 //! Non-stationary iterative solvers (the paper's §2 set): CG, BiCG,
 //! BiCGSTAB and restarted GMRES, over distributed operands.
 //!
-//! All solvers share the same SPMD structure: matvecs via
-//! [`crate::pblas::pgemv`] (and [`crate::pblas::pgemv_t`] for BiCG's second
-//! sequence), inner products via [`crate::pblas::pdot`] — every scalar
-//! recurrence coefficient is computed from allreduced dots, so all ranks
-//! advance identically.
+//! All solvers are **operator-generic**: the system matrix is any
+//! [`LinOp`] — a dense block-cyclic [`crate::dist::DistMatrix`] (matvecs
+//! via [`crate::pblas::pgemv()`]/[`crate::pblas::pgemv_t`]) or a sparse
+//! row-block [`crate::sparse::DistCsrMatrix`] (via
+//! [`crate::pblas::pspmv()`]/[`crate::pblas::pspmv_t`]) — with no per-solver
+//! forks; see `DESIGN.md` §10 for the trait contract.  All share the same
+//! SPMD structure: matvecs through `LinOp::apply`/`apply_t`, inner
+//! products via [`crate::pblas::pdot`] — every scalar recurrence
+//! coefficient is computed from allreduced dots, so all ranks advance
+//! identically.
 
 pub mod bicg;
 pub mod bicgstab;
@@ -18,6 +23,8 @@ pub use bicgstab::bicgstab;
 pub use cg::cg;
 pub use gmres::gmres;
 pub use precond::JacobiPrecond;
+
+pub use crate::pblas::LinOp;
 
 use crate::Scalar;
 

@@ -6,77 +6,61 @@
 //! Rather than threading M^{-1} through every solver, the preconditioner
 //! *transforms the system*: solve `(D^{-1/2} A D^{-1/2}) (D^{1/2} x) =
 //! D^{-1/2} b` — symmetric scaling that preserves SPD-ness for CG.
+//!
+//! Operator-generic: [`JacobiPrecond::build`] works on any
+//! [`LinOp`] — the dense path broadcasts diagonal tiles along process
+//! rows, the sparse path reads its locally owned rows (see
+//! [`LinOp::extract_diag`] and `DESIGN.md` §10).
+//!
+//! Guards: a diagonal entry that is zero, non-finite, or below the
+//! underflow threshold — and every *padded* position (global index ≥ `m`,
+//! identity `1` for dense operands, structural zero for sparse ones) —
+//! keeps scale `1` instead of emitting an `inf`/overflowed `1/sqrt(d)`
+//! that would poison every row it touches.  Keeping padded scales at `1`
+//! also preserves the dense identity-padding invariant through
+//! [`LinOp::scale_sym`].
 
-use crate::dist::{DistMatrix, DistVector};
-use crate::pblas::Ctx;
+use crate::dist::DistVector;
+use crate::pblas::{Ctx, LinOp};
 use crate::Scalar;
 
 /// Symmetric Jacobi scaling of a distributed system.
 pub struct JacobiPrecond<S: Scalar> {
-    /// d[i] = 1/sqrt(|A[i,i]|), replicated like a distributed vector.
+    /// d[i] = 1/sqrt(|A[i,i]|) (or 1 where unscalable), in the standard
+    /// row-distributed / column-replicated vector layout.
     dinv_sqrt: DistVector<S>,
 }
 
 impl<S: Scalar> JacobiPrecond<S> {
-    /// Extract the diagonal of `a` and build the scaler.  The diagonal tiles
-    /// live on the mesh diagonal; each owner broadcasts its block along its
-    /// process row, then the standard vector layout is assembled locally.
-    pub fn build(ctx: &Ctx<'_, S>, a: &DistMatrix<S>) -> Self {
+    /// Extract the diagonal of `a` and build the scaler.
+    pub fn build<A: LinOp<S> + ?Sized>(ctx: &Ctx<'_, S>, a: &A) -> Self {
         let desc = *a.desc();
         let t = desc.tile;
         let mesh = ctx.mesh;
-        let row = mesh.row_comm();
+        let diag = a.extract_diag(ctx);
         let mut dinv = DistVector::zeros(desc, mesh.row(), mesh.col());
         for l in 0..dinv.local_blocks() {
             let ti = desc.global_ti(mesh.row(), l);
-            let owner_col = ti % desc.shape.pc;
-            let data = if mesh.col() == owner_col {
-                let tile = a.global_tile(ti, ti);
-                let mut d = vec![S::zero(); t];
-                for i in 0..t {
-                    d[i] = tile[i * t + i];
-                }
-                Some(crate::comm::Payload::Data(d))
-            } else {
-                None
-            };
-            let d = row.bcast(owner_col, 5_000 + ti as u32, data).into_data();
+            let src = diag.block(l).to_vec();
             let blk = dinv.block_mut(l);
-            for i in 0..t {
-                let v = d[i].abs();
-                blk[i] = if v > S::zero() { S::one() / v.sqrt() } else { S::one() };
+            for k in 0..t {
+                let gi = ti * t + k;
+                let v = src[k].abs();
+                // Padded rows and zero / subnormal / non-finite diagonal
+                // entries are unscalable: keep scale 1.
+                blk[k] = if gi < desc.m && v.is_finite() && v >= S::min_positive_value() {
+                    S::one() / v.sqrt()
+                } else {
+                    S::one()
+                };
             }
         }
         JacobiPrecond { dinv_sqrt: dinv }
     }
 
-    /// Scale the matrix in place: `A := D^{-1/2} A D^{-1/2}`.
-    pub fn scale_matrix(&self, ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) {
-        let desc = *a.desc();
-        let t = desc.tile;
-        let mesh = ctx.mesh;
-        // Row scaling needs d for owned tile rows (local); column scaling
-        // needs d for owned tile cols (allgather over the column comm, same
-        // pattern as pgemv's x distribution).
-        let mut mine = Vec::new();
-        for l in 0..self.dinv_sqrt.local_blocks() {
-            mine.extend_from_slice(self.dinv_sqrt.block(l));
-        }
-        let col = mesh.col_comm();
-        let by_row = col.allgather(5_100, mine);
-        for (lti, ltj, ti, tj) in a.owned_tiles().collect::<Vec<_>>() {
-            let drow = self.dinv_sqrt.global_block(ti).to_vec();
-            let owner = tj % desc.shape.pr;
-            let off = desc.local_ti(tj) * t;
-            let dcol = by_row[owner][off..off + t].to_vec();
-            let tile = a.tile_mut(lti, ltj);
-            for i in 0..t {
-                for j in 0..t {
-                    tile[i * t + j] *= drow[i] * dcol[j];
-                }
-            }
-            ctx.charge(ctx.engine.blas1_cost(t * t));
-        }
+    /// Scale the operator in place: `A := D^{-1/2} A D^{-1/2}`.
+    pub fn scale_matrix<A: LinOp<S> + ?Sized>(&self, ctx: &Ctx<'_, S>, a: &mut A) {
+        a.scale_sym(ctx, &self.dinv_sqrt);
     }
 
     /// Scale a rhs: `b := D^{-1/2} b`.
@@ -95,5 +79,130 @@ impl<S: Scalar> JacobiPrecond<S> {
     pub fn unscale_solution(&self, ctx: &Ctx<'_, S>, x: &mut DistVector<S>) {
         // (D^{1/2} x) was solved for, so x = D^{-1/2} x_scaled.
         self.scale_rhs(ctx, x);
+    }
+
+    /// The scale vector (inspection / tests).
+    pub fn dinv_sqrt(&self) -> &DistVector<S> {
+        &self.dinv_sqrt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::CpuEngine;
+    use crate::comm::{NetworkModel, World};
+    use crate::dist::{gather_vector, Descriptor, DistMatrix};
+    use crate::mesh::{Mesh, MeshShape};
+    use crate::pblas::pdot;
+    use crate::solvers::{cg, IterConfig};
+    use crate::sparse::DistCsrMatrix;
+    use std::sync::Arc;
+
+    /// Badly scaled SPD elements: diagonal spans 8 orders of magnitude.
+    fn skewed_elem(n: usize) -> impl Fn(usize, usize) -> f64 + Clone + Send + Sync {
+        move |i, j| {
+            let di = 10f64.powi((i % 9) as i32 - 4);
+            let dj = 10f64.powi((j % 9) as i32 - 4);
+            if i == j {
+                di * dj * 2.0 * n as f64
+            } else {
+                let sym = ((((i * 37 + j * 61) + (j * 37 + i * 61)) % 97) as f64) / 97.0 - 1.0;
+                di * dj * 0.5 * sym
+            }
+        }
+    }
+
+    /// Non-divisible n (edge-tile padding) on non-square meshes: the
+    /// extract-diagonal path must read the right diagonal tiles, padded
+    /// scales must stay exactly 1, and the scaled system must still solve.
+    #[test]
+    fn build_and_solve_with_edge_tile_padding() {
+        let n = 11usize; // tile 4 -> mt = 3, last tile padded
+        for (pr, pc) in [(1usize, 1usize), (2, 2), (2, 3), (3, 2)] {
+            let out = World::run::<f64, _, _>(pr * pc, NetworkModel::ideal(), move |comm| {
+                let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+                let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(4)));
+                let desc = Descriptor::new(n, n, 4, mesh.shape());
+                let mut a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), skewed_elem(n));
+                let xt = |i: usize| (i as f64 * 0.21).sin() + 1.0;
+                let elem = skewed_elem(n);
+                let mut b = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| {
+                    (0..n).map(|j| elem(i, j) * xt(j)).sum()
+                });
+                let pre = JacobiPrecond::build(&ctx, &a);
+                // Every scale must be finite; padded positions exactly 1.
+                let scales = gather_vector(&mesh, pre.dinv_sqrt());
+                let pad_ok = {
+                    let mut ok = true;
+                    for l in 0..pre.dinv_sqrt().local_blocks() {
+                        let ti = desc.global_ti(mesh.row(), l);
+                        for (k, &s) in pre.dinv_sqrt().block(l).iter().enumerate() {
+                            if ti * 4 + k >= n {
+                                ok &= s == 1.0;
+                            }
+                            ok &= s.is_finite() && s > 0.0;
+                        }
+                    }
+                    ok
+                };
+                pre.scale_matrix(&ctx, &mut a);
+                pre.scale_rhs(&ctx, &mut b);
+                let cfg = IterConfig { tol: 1e-12, max_iter: 500, restart: 30 };
+                let (mut x, st) = cg(&ctx, &a, &b, &cfg).expect("cg on scaled system");
+                pre.unscale_solution(&ctx, &mut x);
+                (gather_vector(&mesh, &x), scales, pad_ok, st.converged)
+            });
+            let (x, _scales, pad_ok, converged) = out[0].clone();
+            assert!(pad_ok, "{pr}x{pc}: padded/zero scales must be finite 1s");
+            assert!(converged, "{pr}x{pc}: scaled CG must converge");
+            let x = x.unwrap();
+            for (i, &xi) in x.iter().enumerate() {
+                let want = (i as f64 * 0.21).sin() + 1.0;
+                assert!((xi - want).abs() < 1e-6, "{pr}x{pc} x[{i}] = {xi} vs {want}");
+            }
+        }
+    }
+
+    /// A zero (stored or structural) diagonal entry must not emit an inf
+    /// scale, on either operand format.
+    #[test]
+    fn zero_diagonal_entries_keep_scale_one() {
+        let n = 6usize;
+        let out = World::run::<f64, _, _>(2, NetworkModel::ideal(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(2, 1));
+            let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(4)));
+            let desc = Descriptor::new(n, n, 4, mesh.shape());
+            // Dense: row 2 has an exactly-zero diagonal entry.
+            let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+                if i == j && i == 2 {
+                    0.0
+                } else if i == j {
+                    4.0
+                } else {
+                    0.0
+                }
+            });
+            // Sparse: row 3's diagonal is structurally absent.
+            let s = DistCsrMatrix::from_row_fn(desc, mesh.row(), mesh.col(), |i| {
+                if i == 3 {
+                    vec![]
+                } else {
+                    vec![(i, 4.0)]
+                }
+            });
+            let pa = JacobiPrecond::build(&ctx, &a);
+            let ps = JacobiPrecond::build(&ctx, &s);
+            // All-finite check via a dot with itself (inf would propagate).
+            let fa = pdot(&ctx, pa.dinv_sqrt(), pa.dinv_sqrt());
+            let fs = pdot(&ctx, ps.dinv_sqrt(), ps.dinv_sqrt());
+            (gather_vector(&mesh, pa.dinv_sqrt()), gather_vector(&mesh, ps.dinv_sqrt()), fa, fs)
+        });
+        let (da, ds, fa, fs) = out[0].clone();
+        assert!(fa.is_finite() && fs.is_finite());
+        let (da, ds) = (da.unwrap(), ds.unwrap());
+        assert_eq!(da[2], 1.0, "zero dense diagonal keeps scale 1: {da:?}");
+        assert_eq!(ds[3], 1.0, "missing sparse diagonal keeps scale 1: {ds:?}");
+        assert!((da[0] - 0.5).abs() < 1e-15, "normal entries scale: {da:?}");
     }
 }

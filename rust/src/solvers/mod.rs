@@ -1,11 +1,15 @@
 //! The CUPLSS solver API (level 4 of the paper's Figure 2): direct methods
-//! (blocked LU with partial pivoting, Cholesky) and non-stationary iterative
-//! methods (CG, BiCG, BiCGSTAB, GMRES(m)), over 2-D block-cyclic operands,
-//! plus the serial reference implementations.
+//! (blocked LU with partial pivoting, Cholesky) over 2-D block-cyclic
+//! operands, and non-stationary iterative methods (CG, BiCG, BiCGSTAB,
+//! GMRES(m)) over any [`LinOp`] operand — dense block-cyclic or sparse
+//! row-block CSR (`DESIGN.md` §10) — plus the serial reference
+//! implementations.
 
 pub mod direct;
 pub mod iterative;
 pub mod serial;
 
 pub use direct::{apply_pivots, pchol_factor, pchol_solve, plu_factor, plu_solve, ptrsv, PivotMap, TriKind};
-pub use iterative::{bicg, bicgstab, cg, gmres, IterConfig, IterMethod, IterStats, JacobiPrecond};
+pub use iterative::{
+    bicg, bicgstab, cg, gmres, IterConfig, IterMethod, IterStats, JacobiPrecond, LinOp,
+};

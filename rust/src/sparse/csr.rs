@@ -1,0 +1,219 @@
+//! The local compressed-sparse-row matrix: one rank's row block of a
+//! sparse operator (or a whole serial operator).
+//!
+//! Classic three-array CSR: `row_ptr[i]..row_ptr[i+1]` indexes the stored
+//! entries of row `i` in `col_idx`/`vals`.  The builders guarantee the
+//! entries of every row are **sorted by column and unique** (duplicate
+//! triplets are summed, the conventional assembly semantics for FEM/stencil
+//! operators) — consumers such as [`CsrMatrix::diag`] rely on that order for
+//! binary search.
+//!
+//! Unlike [`crate::dist::DistMatrix`] there is no identity padding: sparse
+//! operands feed only matvec-based (Krylov) solvers, never factorisations,
+//! so padded rows are simply *empty* and their matvec contributions vanish
+//! against zero-padded vector blocks.
+
+use crate::Scalar;
+
+/// A sparse `nrows x ncols` matrix in compressed-sparse-row form.
+#[derive(Clone, Debug)]
+pub struct CsrMatrix<S: Scalar> {
+    nrows: usize,
+    ncols: usize,
+    /// `nrows + 1` offsets into `col_idx`/`vals`.
+    row_ptr: Vec<usize>,
+    /// Column index of each stored entry (sorted within each row).
+    col_idx: Vec<usize>,
+    /// Value of each stored entry.
+    vals: Vec<S>,
+}
+
+impl<S: Scalar> CsrMatrix<S> {
+    /// Build from per-row entry lists `(col, val)`.  Rows may be unsorted
+    /// and may contain duplicate columns; duplicates are **summed**.
+    pub fn from_rows(ncols: usize, mut rows: Vec<Vec<(usize, S)>>) -> Self {
+        let nrows = rows.len();
+        let mut row_ptr = Vec::with_capacity(nrows + 1);
+        row_ptr.push(0);
+        let mut col_idx = Vec::new();
+        let mut vals: Vec<S> = Vec::new();
+        for row in &mut rows {
+            row.sort_by_key(|&(c, _)| c);
+            let mut last = usize::MAX;
+            for &(c, v) in row.iter() {
+                assert!(c < ncols, "column {c} outside 0..{ncols}");
+                if c == last {
+                    let k = vals.len() - 1;
+                    vals[k] += v; // duplicate assembly entries sum
+                } else {
+                    col_idx.push(c);
+                    vals.push(v);
+                    last = c;
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        CsrMatrix { nrows, ncols, row_ptr, col_idx, vals }
+    }
+
+    /// Build from a global triplet list `(row, col, val)` in any order;
+    /// duplicate `(row, col)` entries are summed.
+    pub fn from_triplets(nrows: usize, ncols: usize, triplets: &[(usize, usize, S)]) -> Self {
+        let mut rows: Vec<Vec<(usize, S)>> = vec![Vec::new(); nrows];
+        for &(r, c, v) in triplets {
+            assert!(r < nrows, "row {r} outside 0..{nrows}");
+            rows[r].push((c, v));
+        }
+        Self::from_rows(ncols, rows)
+    }
+
+    /// Stored rows.
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    /// Stored columns.
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Stored entries (explicit zeros included).
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Row `i` as parallel `(columns, values)` slices, columns ascending.
+    pub fn row(&self, i: usize) -> (&[usize], &[S]) {
+        let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[s..e], &self.vals[s..e])
+    }
+
+    /// Row `i` with mutable values (columns stay immutable: the sparsity
+    /// pattern of a built matrix is fixed).
+    pub fn row_mut(&mut self, i: usize) -> (&[usize], &mut [S]) {
+        let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[s..e], &mut self.vals[s..e])
+    }
+
+    /// The stored entry at `(i, j)` (`None` if the position is not stored —
+    /// structurally zero).  Binary search over the row's sorted columns.
+    pub fn get(&self, i: usize, j: usize) -> Option<S> {
+        let (cols, vals) = self.row(i);
+        cols.binary_search(&j).ok().map(|k| vals[k])
+    }
+
+    /// The stored diagonal entry of row `i` (`None` if structurally zero).
+    pub fn diag(&self, i: usize) -> Option<S> {
+        self.get(i, i)
+    }
+
+    /// `y = A x` (`x.len() == ncols`, `y.len() == nrows`, `y` overwritten).
+    pub fn spmv(&self, x: &[S], y: &mut [S]) {
+        assert_eq!(x.len(), self.ncols, "spmv: x length != ncols");
+        assert_eq!(y.len(), self.nrows, "spmv: y length != nrows");
+        for i in 0..self.nrows {
+            let mut acc = S::zero();
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                acc += self.vals[k] * x[self.col_idx[k]];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// `y = A^T x` (`x.len() == nrows`, `y.len() == ncols`, `y` overwritten).
+    pub fn spmv_t(&self, x: &[S], y: &mut [S]) {
+        assert_eq!(x.len(), self.nrows, "spmv_t: x length != nrows");
+        assert_eq!(y.len(), self.ncols, "spmv_t: y length != ncols");
+        y.fill(S::zero());
+        for i in 0..self.nrows {
+            let xi = x[i];
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                y[self.col_idx[k]] += self.vals[k] * xi;
+            }
+        }
+    }
+
+    /// Densify (row-major `nrows x ncols`) — test/oracle helper.
+    pub fn to_dense(&self) -> Vec<S> {
+        let mut out = vec![S::zero(); self.nrows * self.ncols];
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                out[i * self.ncols + c] = v;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triplets_roundtrip_with_duplicate_summing() {
+        // (1,2) appears twice: 5 + 2.5 = 7.5; (0,0) twice: 1 - 1 = 0
+        // (stored explicitly, still counted in nnz).
+        let t = [
+            (1usize, 2usize, 5.0f64),
+            (0, 0, 1.0),
+            (2, 1, -3.0),
+            (1, 2, 2.5),
+            (0, 0, -1.0),
+            (1, 0, 4.0),
+        ];
+        let a = CsrMatrix::from_triplets(3, 3, &t);
+        assert_eq!(a.nnz(), 4);
+        let d = a.to_dense();
+        let want = [0.0, 0.0, 0.0, 4.0, 0.0, 7.5, 0.0, -3.0, 0.0];
+        assert_eq!(d, want);
+    }
+
+    #[test]
+    fn rows_sorted_and_unique_after_build() {
+        let a = CsrMatrix::from_rows(
+            4,
+            vec![vec![(3, 1.0f32), (0, 2.0), (3, 1.0)], vec![], vec![(2, 5.0)]],
+        );
+        let (cols, vals) = a.row(0);
+        assert_eq!(cols, &[0, 3]);
+        assert_eq!(vals, &[2.0, 2.0]);
+        assert_eq!(a.row(1).0.len(), 0);
+        assert_eq!(a.diag(2), Some(5.0));
+        assert_eq!(a.diag(1), None);
+    }
+
+    #[test]
+    fn spmv_and_transpose_match_dense() {
+        let t = [
+            (0usize, 0usize, 2.0f64),
+            (0, 3, -1.0),
+            (1, 1, 3.0),
+            (2, 0, 1.0),
+            (2, 2, 4.0),
+            (2, 3, 0.5),
+        ];
+        let a = CsrMatrix::from_triplets(3, 4, &t);
+        let dense = a.to_dense();
+        let x4 = [1.0, -2.0, 0.5, 3.0];
+        let mut y = vec![0.0; 3];
+        a.spmv(&x4, &mut y);
+        for i in 0..3 {
+            let want: f64 = (0..4).map(|j| dense[i * 4 + j] * x4[j]).sum();
+            assert!((y[i] - want).abs() < 1e-14, "row {i}");
+        }
+        let x3 = [2.0, 1.0, -1.0];
+        let mut z = vec![9.0; 4]; // pre-filled: spmv_t must overwrite
+        a.spmv_t(&x3, &mut z);
+        for j in 0..4 {
+            let want: f64 = (0..3).map(|i| dense[i * 4 + j] * x3[i]).sum();
+            assert!((z[j] - want).abs() < 1e-14, "col {j}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside")]
+    fn out_of_range_triplet_panics() {
+        let _ = CsrMatrix::from_triplets(2, 2, &[(0usize, 5usize, 1.0f64)]);
+    }
+}

@@ -1,0 +1,242 @@
+//! The distributed sparse matrix: row-block distributed CSR.
+//!
+//! Distribution rule: the matrix's *rows* follow exactly the
+//! [`crate::dist::DistVector`] layout — tile row `ti` lives on process row
+//! `ti mod pr` and is **replicated on every process column** of that row.
+//! Each rank therefore stores one [`CsrMatrix`] holding its process row's
+//! padded row blocks (`local_mt * tile` rows) over the *global* (padded)
+//! column range.  Consequences:
+//!
+//! * a [`Descriptor`]-conformable [`crate::dist::DistVector`] composes
+//!   unchanged — the same descriptor-equality validation the dense PBLAS
+//!   performs applies verbatim;
+//! * `y = A x` ([`crate::pblas::pspmv()`]) needs one column-comm allgather of
+//!   the x blocks, then every owned row is computed *whole* (no partial
+//!   sums, no row allreduce — rows are never split across ranks);
+//! * `y = A^T x` ([`crate::pblas::pspmv_t`]) is local against the owned x
+//!   blocks plus one column-comm allreduce of the full-length partials;
+//! * the replicas on each process column compute identically, so results
+//!   stay column-replicated like every vector in the crate.
+//!
+//! Padded rows (global index ≥ `m`) are empty (all-zero) rather than
+//! identity-padded: sparse operands feed only the matvec-based Krylov
+//! solvers, and zero rows times zero-padded vector blocks contribute
+//! nothing.  See `DESIGN.md` §10.
+
+use super::csr::CsrMatrix;
+use crate::dist::Descriptor;
+use crate::Scalar;
+
+/// One rank's replica of a row-block-distributed CSR matrix.
+#[derive(Clone, Debug)]
+pub struct DistCsrMatrix<S: Scalar> {
+    desc: Descriptor,
+    prow: usize,
+    pcol: usize,
+    /// Owned padded row blocks (`desc.local_mt(prow) * desc.tile` rows)
+    /// over `desc.padded_n()` global columns.
+    local: CsrMatrix<S>,
+}
+
+impl<S: Scalar> DistCsrMatrix<S> {
+    fn check_coords(desc: &Descriptor, prow: usize, pcol: usize) {
+        assert!(
+            desc.is_square(),
+            "sparse operators are square (the Krylov solvers' domain), got {}x{}",
+            desc.m,
+            desc.n
+        );
+        assert!(
+            prow < desc.shape.pr && pcol < desc.shape.pc,
+            "coords ({prow},{pcol}) outside mesh {}x{}",
+            desc.shape.pr,
+            desc.shape.pc
+        );
+    }
+
+    /// Build this rank's shard from a global row function: `row_of(i)`
+    /// returns the nonzero `(col, val)` entries of global row `i < m`
+    /// (any order; duplicates summed).  Every rank evaluates only its own
+    /// rows — no data movement, mirroring [`crate::dist::DistMatrix::from_fn`].
+    pub fn from_row_fn(
+        desc: Descriptor,
+        prow: usize,
+        pcol: usize,
+        row_of: impl Fn(usize) -> Vec<(usize, S)>,
+    ) -> Self {
+        Self::check_coords(&desc, prow, pcol);
+        let t = desc.tile;
+        let lmt = desc.local_mt(prow);
+        let mut rows: Vec<Vec<(usize, S)>> = Vec::with_capacity(lmt * t);
+        for l in 0..lmt {
+            let ti = desc.global_ti(prow, l);
+            for k in 0..t {
+                let gi = ti * t + k;
+                if gi < desc.m {
+                    let r = row_of(gi);
+                    // Hard assert (matching `from_triplets`): columns in
+                    // [n, padded_n) would pass the CSR builder's bound but
+                    // multiply against zero padding — a silent wrong answer.
+                    assert!(
+                        r.iter().all(|&(j, _)| j < desc.n),
+                        "row {gi} references a column outside 0..{}",
+                        desc.n
+                    );
+                    rows.push(r);
+                } else {
+                    rows.push(Vec::new()); // zero-padded row
+                }
+            }
+        }
+        let local = CsrMatrix::from_rows(desc.padded_n(), rows);
+        DistCsrMatrix { desc, prow, pcol, local }
+    }
+
+    /// Build this rank's shard from a *global* triplet list: entries whose
+    /// row this process row owns are kept (duplicates summed), the rest are
+    /// ignored.  Every rank may pass the same full list.
+    pub fn from_triplets(
+        desc: Descriptor,
+        prow: usize,
+        pcol: usize,
+        triplets: &[(usize, usize, S)],
+    ) -> Self {
+        Self::check_coords(&desc, prow, pcol);
+        let t = desc.tile;
+        let lmt = desc.local_mt(prow);
+        let mut local_trip = Vec::new();
+        for &(i, j, v) in triplets {
+            assert!(i < desc.m && j < desc.n, "triplet ({i},{j}) outside {}x{}", desc.m, desc.n);
+            let ti = i / t;
+            if ti % desc.shape.pr == prow {
+                local_trip.push((desc.local_ti(ti) * t + i % t, j, v));
+            }
+        }
+        let local = CsrMatrix::from_triplets(lmt * t, desc.padded_n(), &local_trip);
+        DistCsrMatrix { desc, prow, pcol, local }
+    }
+
+    /// The layout descriptor (shared with the vectors it pairs with).
+    pub fn desc(&self) -> &Descriptor {
+        &self.desc
+    }
+
+    /// This rank's process row.
+    pub fn prow(&self) -> usize {
+        self.prow
+    }
+
+    /// This rank's process column.
+    pub fn pcol(&self) -> usize {
+        self.pcol
+    }
+
+    /// The owned row block as a local CSR matrix (local row `l * tile + k`
+    /// holds global row `desc.global_ti(prow, l) * tile + k`; columns are
+    /// global).
+    pub fn local(&self) -> &CsrMatrix<S> {
+        &self.local
+    }
+
+    /// Mutable access to the owned row block (values only; the pattern of a
+    /// built operator is fixed).
+    pub fn local_mut(&mut self) -> &mut CsrMatrix<S> {
+        &mut self.local
+    }
+
+    /// Stored entries on this rank.
+    pub fn local_nnz(&self) -> usize {
+        self.local.nnz()
+    }
+
+    /// Global row index held by local row `li`.
+    pub fn global_row(&self, li: usize) -> usize {
+        let t = self.desc.tile;
+        self.desc.global_ti(self.prow, li / t) * t + li % t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::MeshShape;
+
+    fn desc(m: usize, tile: usize, pr: usize, pc: usize) -> Descriptor {
+        Descriptor::new(m, m, tile, MeshShape::new(pr, pc))
+    }
+
+    /// A small deterministic sparse pattern: diagonal + one off-diagonal
+    /// band at distance 3.
+    fn rows_of(m: usize) -> impl Fn(usize) -> Vec<(usize, f64)> + Clone {
+        move |i| {
+            let mut r = vec![(i, 2.0 + i as f64)];
+            if i + 3 < m {
+                r.push((i + 3, -1.0));
+            }
+            if i >= 3 {
+                r.push((i - 3, 0.5));
+            }
+            r
+        }
+    }
+
+    #[test]
+    fn shards_jointly_cover_every_row_once() {
+        let m = 11;
+        let d = desc(m, 4, 3, 2);
+        let mut seen = vec![0u32; m];
+        for prow in 0..3 {
+            // replicas across pcol must be identical
+            let shards: Vec<DistCsrMatrix<f64>> =
+                (0..2).map(|pcol| DistCsrMatrix::from_row_fn(d, prow, pcol, rows_of(m))).collect();
+            for li in 0..shards[0].local().nrows() {
+                assert_eq!(shards[0].local().row(li), shards[1].local().row(li));
+                let gi = shards[0].global_row(li);
+                if gi < m {
+                    seen[gi] += 1;
+                    let (cols, vals) = shards[0].local().row(li);
+                    let want = {
+                        let mut w = rows_of(m)(gi);
+                        w.sort_by_key(|&(c, _)| c);
+                        w
+                    };
+                    assert_eq!(cols.len(), want.len());
+                    for (k, &(c, v)) in want.iter().enumerate() {
+                        assert_eq!(cols[k], c);
+                        assert_eq!(vals[k], v);
+                    }
+                } else {
+                    assert_eq!(shards[0].local().row(li).0.len(), 0, "pad rows are empty");
+                }
+            }
+        }
+        assert!(seen.iter().all(|&k| k == 1), "each row owned exactly once: {seen:?}");
+    }
+
+    #[test]
+    fn from_triplets_matches_from_row_fn() {
+        let m = 10;
+        let d = desc(m, 4, 2, 2);
+        let mut trip = Vec::new();
+        for i in 0..m {
+            for (j, v) in rows_of(m)(i) {
+                trip.push((i, j, v));
+            }
+        }
+        for prow in 0..2 {
+            let a = DistCsrMatrix::from_triplets(d, prow, 0, &trip);
+            let b = DistCsrMatrix::from_row_fn(d, prow, 0, rows_of(m));
+            assert_eq!(a.local_nnz(), b.local_nnz());
+            for li in 0..a.local().nrows() {
+                assert_eq!(a.local().row(li), b.local().row(li), "prow {prow} row {li}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "square")]
+    fn rectangular_descriptor_rejected() {
+        let d = Descriptor::new(8, 6, 2, MeshShape::new(1, 1));
+        let _ = DistCsrMatrix::<f64>::from_row_fn(d, 0, 0, |_| Vec::new());
+    }
+}

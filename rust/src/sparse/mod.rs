@@ -1,0 +1,27 @@
+//! Sparse operands (CUPLSS level 3, sparse side): CSR storage and its
+//! row-block distribution.
+//!
+//! The paper's iterative solvers exist for systems too large for dense
+//! direct methods — exactly the regime where the operator is usually
+//! *sparse* (PDE stencils, circuit and network matrices).  This module
+//! supplies that missing operand class:
+//!
+//! * [`CsrMatrix`] — one rank's (or a serial) compressed-sparse-row block:
+//!   `row_ptr`/`col_idx`/`vals`, built from triplets or per-row entry lists
+//!   with duplicate summing, with `spmv`/`spmv_t` kernels;
+//! * [`DistCsrMatrix`] — the distributed operator: rows partitioned into
+//!   the *same* tile row blocks as [`crate::dist::Descriptor`] (tile row
+//!   `ti` on process row `ti mod pr`, replicated across process columns),
+//!   so it composes with [`crate::dist::DistVector`] unchanged.
+//!
+//! Distributed matvecs live in [`crate::pblas::pspmv()`] /
+//! [`crate::pblas::pspmv_t`]; the [`crate::pblas::LinOp`] trait lets every
+//! Krylov solver consume dense and sparse operands through one interface.
+//! Stencil generators (2-D/3-D Poisson) are in [`crate::workloads::stencil`].
+//! See `DESIGN.md` §10 for the layout contract and the sparse cost model.
+
+pub mod csr;
+pub mod dist_csr;
+
+pub use csr::CsrMatrix;
+pub use dist_csr::DistCsrMatrix;

@@ -5,6 +5,14 @@
 //! regenerates exactly its own shard with no data movement (the paper's
 //! step 2, "initialize matrices and vectors in the host memory") — plus a
 //! right-hand side with a *known* solution so residual checks are exact.
+//!
+//! Dense workloads live in this module ([`Workload`]); the sparse stencil
+//! workloads (2-D/3-D Poisson emitted directly as distributed CSR) are in
+//! [`stencil`].
+
+pub mod stencil;
+
+pub use stencil::{poisson2d_csr, poisson2d_row, poisson3d_csr, poisson3d_row};
 
 use crate::Scalar;
 

@@ -1,0 +1,222 @@
+//! Sparse stencil workloads: the discretised Poisson operators that put
+//! the Krylov solvers in their natural regime — very large systems with a
+//! handful of nonzeros per row, where dense storage (and dense direct
+//! methods) stop making sense.
+//!
+//! Two operators, both SPD in natural (lexicographic) ordering with
+//! homogeneous Dirichlet boundaries:
+//!
+//! * **2-D, 5-point**: `g x g` interior grid, `n = g²`; row `i` couples
+//!   `(4, -1, -1, -1, -1)` to itself and its N/S/E/W neighbours;
+//! * **3-D, 7-point**: `g x g x g` grid, `n = g³`; diagonal `6`, six
+//!   `-1` neighbours along the axes.
+//!
+//! Each generator emits the operator **directly as distributed CSR**
+//! ([`DistCsrMatrix`]) — every rank materialises only its own row blocks
+//! from the row function, no dense `n x n` detour and no data movement
+//! (the paper's "each node initialises its shard locally" step 2).
+//!
+//! `nnz` closed forms ([`poisson2d_nnz`], [`poisson3d_nnz`]) feed the
+//! model-mode sparse cost entry
+//! [`crate::bench_harness::model::sparse_iter_makespan`].
+
+use crate::dist::Descriptor;
+use crate::sparse::DistCsrMatrix;
+use crate::Scalar;
+
+/// Grid side from a stencil problem size: asserts `n = g^dim` exactly.
+fn grid_side(n: usize, dim: u32) -> usize {
+    let g = (n as f64).powf(1.0 / f64::from(dim)).round() as usize;
+    assert_eq!(g.pow(dim), n, "stencil workload needs n = g^{dim} (got n = {n})");
+    g
+}
+
+/// Nonzero `(col, val)` entries of row `i` of the 2-D 5-point Poisson
+/// operator on a `g x g` grid (columns ascending).
+pub fn poisson2d_row<S: Scalar>(g: usize, i: usize) -> Vec<(usize, S)> {
+    assert!(i < g * g, "row {i} outside the {g}x{g} grid");
+    let (r, c) = (i / g, i % g);
+    let mut out = Vec::with_capacity(5);
+    if r > 0 {
+        out.push((i - g, -S::one()));
+    }
+    if c > 0 {
+        out.push((i - 1, -S::one()));
+    }
+    out.push((i, S::from_f64(4.0).unwrap()));
+    if c + 1 < g {
+        out.push((i + 1, -S::one()));
+    }
+    if r + 1 < g {
+        out.push((i + g, -S::one()));
+    }
+    out
+}
+
+/// Nonzero `(col, val)` entries of row `i` of the 3-D 7-point Poisson
+/// operator on a `g x g x g` grid (columns ascending).
+pub fn poisson3d_row<S: Scalar>(g: usize, i: usize) -> Vec<(usize, S)> {
+    assert!(i < g * g * g, "row {i} outside the {g}^3 grid");
+    let (z, rem) = (i / (g * g), i % (g * g));
+    let (y, x) = (rem / g, rem % g);
+    let mut out = Vec::with_capacity(7);
+    if z > 0 {
+        out.push((i - g * g, -S::one()));
+    }
+    if y > 0 {
+        out.push((i - g, -S::one()));
+    }
+    if x > 0 {
+        out.push((i - 1, -S::one()));
+    }
+    out.push((i, S::from_f64(6.0).unwrap()));
+    if x + 1 < g {
+        out.push((i + 1, -S::one()));
+    }
+    if y + 1 < g {
+        out.push((i + g, -S::one()));
+    }
+    if z + 1 < g {
+        out.push((i + g * g, -S::one()));
+    }
+    out
+}
+
+/// This rank's shard of the distributed-CSR 2-D Poisson operator
+/// (`desc.m` must be a perfect square `g²`).
+pub fn poisson2d_csr<S: Scalar>(desc: Descriptor, prow: usize, pcol: usize) -> DistCsrMatrix<S> {
+    let g = grid_side(desc.m, 2);
+    DistCsrMatrix::from_row_fn(desc, prow, pcol, |i| poisson2d_row(g, i))
+}
+
+/// This rank's shard of the distributed-CSR 3-D Poisson operator
+/// (`desc.m` must be a perfect cube `g³`).
+pub fn poisson3d_csr<S: Scalar>(desc: Descriptor, prow: usize, pcol: usize) -> DistCsrMatrix<S> {
+    let g = grid_side(desc.m, 3);
+    DistCsrMatrix::from_row_fn(desc, prow, pcol, |i| poisson3d_row(g, i))
+}
+
+/// Stored entries of the 2-D operator: `5g² - 4g`.
+pub fn poisson2d_nnz(g: usize) -> usize {
+    5 * g * g - 4 * g
+}
+
+/// Stored entries of the 3-D operator: `7g³ - 6g²`.
+pub fn poisson3d_nnz(g: usize) -> usize {
+    7 * g * g * g - 6 * g * g
+}
+
+/// Exact right-hand-side entry `b_i = Σ_j A_ij · x_true(j)` for a stencil
+/// row — only the stored nonzeros contribute, so each rank can evaluate
+/// its rhs blocks in O(row nnz).
+pub fn stencil_rhs<S: Scalar>(row: &[(usize, S)], x_true: impl Fn(usize) -> S) -> S {
+    row.iter().fold(S::zero(), |acc, &(j, v)| acc + v * x_true(j))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::MeshShape;
+
+    #[test]
+    fn poisson2d_rows_match_the_dense_workload() {
+        // The dense Poisson2d workload and the sparse generator must agree
+        // entry for entry.
+        let g = 5;
+        let n = g * g;
+        let dense = crate::workloads::Workload::Poisson2d.elem::<f64>(n);
+        for i in 0..n {
+            let row = poisson2d_row::<f64>(g, i);
+            let mut from_dense: Vec<(usize, f64)> =
+                (0..n).filter(|&j| dense(i, j) != 0.0).map(|j| (j, dense(i, j))).collect();
+            from_dense.sort_by_key(|&(c, _)| c);
+            assert_eq!(row, from_dense, "row {i}");
+        }
+    }
+
+    #[test]
+    fn poisson_rows_are_symmetric_and_dominant() {
+        let cases: [(usize, fn(usize) -> Vec<(usize, f64)>); 2] =
+            [(16, |i| poisson2d_row(4, i)), (27, |i| poisson3d_row(3, i))];
+        for (n, row) in cases {
+            for i in 0..n {
+                let ri = row(i);
+                let mut off = 0.0;
+                let mut diag = 0.0;
+                for &(j, v) in &ri {
+                    if j == i {
+                        diag = v;
+                    } else {
+                        off += v.abs();
+                        // symmetry: (j, i) carries the same value
+                        let back = row(j);
+                        let &(_, w) = back.iter().find(|&&(c, _)| c == i).expect("sym");
+                        assert_eq!(w, v, "({i},{j})");
+                    }
+                }
+                assert!(diag >= off, "row {i}: {diag} vs {off}");
+            }
+        }
+    }
+
+    #[test]
+    fn nnz_closed_forms_match_enumeration() {
+        for g in [1usize, 2, 3, 5, 8] {
+            let count2: usize = (0..g * g).map(|i| poisson2d_row::<f64>(g, i).len()).sum();
+            assert_eq!(count2, poisson2d_nnz(g), "2d g={g}");
+            let count3: usize = (0..g * g * g).map(|i| poisson3d_row::<f64>(g, i).len()).sum();
+            assert_eq!(count3, poisson3d_nnz(g), "3d g={g}");
+        }
+    }
+
+    #[test]
+    fn distributed_generators_cover_all_rows() {
+        let g = 4usize;
+        for (n, dim) in [(g * g, 2u32), (g * g * g, 3)] {
+            let shape = MeshShape::new(2, 2);
+            let desc = Descriptor::new(n, n, 4, shape);
+            let mut seen = vec![0u32; n];
+            for prow in 0..2 {
+                let a = if dim == 2 {
+                    poisson2d_csr::<f64>(desc, prow, 0)
+                } else {
+                    poisson3d_csr::<f64>(desc, prow, 0)
+                };
+                for li in 0..a.local().nrows() {
+                    let gi = a.global_row(li);
+                    if gi < n {
+                        seen[gi] += 1;
+                        let want =
+                            if dim == 2 { poisson2d_row(g, gi) } else { poisson3d_row(g, gi) };
+                        let (cols, vals) = a.local().row(li);
+                        assert_eq!(cols.len(), want.len(), "dim {dim} row {gi}");
+                        for (k, &(c, v)) in want.iter().enumerate() {
+                            assert_eq!((cols[k], vals[k]), (c, v));
+                        }
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&k| k == 1), "dim {dim}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "needs n = g^2")]
+    fn non_square_size_rejected() {
+        let desc = Descriptor::new(10, 10, 4, MeshShape::new(1, 1));
+        let _ = poisson2d_csr::<f64>(desc, 0, 0);
+    }
+
+    #[test]
+    fn stencil_rhs_matches_dense_sum() {
+        let g = 4;
+        let n = g * g;
+        let dense = crate::workloads::Workload::Poisson2d.elem::<f64>(n);
+        let xt = |j: usize| (j as f64 * 0.7).cos();
+        for i in 0..n {
+            let want: f64 = (0..n).map(|j| dense(i, j) * xt(j)).sum();
+            let got = stencil_rhs(&poisson2d_row::<f64>(g, i), xt);
+            assert!((got - want).abs() < 1e-14, "row {i}");
+        }
+    }
+}
