@@ -1,0 +1,455 @@
+"""Simulation oracles for the split-phase / overlap refactor (DESIGN.md §11).
+
+The rust side cannot always be executed in CI-less containers, so the
+*mathematical* content of the overlap PR is verified here against numpy:
+
+* the two-timeline virtual clock's bounds (max <= overlapped <= sum,
+  overlap never loses vs blocking on an identical trace);
+* the depth-1 lookahead LU schedule (deferred pivot application, column
+  k+1 updated and factored ahead of the trailing update) produces results
+  *bit-identical* to the classic right-looking schedule, which itself
+  satisfies P A = L U;
+* the lookahead Cholesky schedule, likewise bit-identical to classic;
+* the split (diagonal-block / off-block) masked spmv composes to the full
+  matvec;
+* rectangular tiled GEMM with identity edge padding requires the pad mask
+  the pipelined SUMMA applies — and is exact with it;
+* the pipelined-CG (Ghysels) recurrences solve SPD systems to the same
+  tolerance as classic CG.
+
+Pure numpy: runs in the CI `python-oracles` job without jax.
+"""
+
+import numpy as np
+import pytest
+
+RNG = np.random.default_rng(0xC0FFEE)
+
+
+# ---------------------------------------------------------------------------
+# Two-timeline virtual clock
+# ---------------------------------------------------------------------------
+
+class Clock:
+    """Mirror of comm::clock::VClock (now + nic_free timelines)."""
+
+    def __init__(self):
+        self.now = 0.0
+        self.nic_free = 0.0
+        self.compute = 0.0
+        self.comm_wait = 0.0
+
+    def advance_compute(self, dt):
+        self.now += dt
+        self.compute += dt
+
+    def nic_occupy(self, dt):
+        start = max(self.now, self.nic_free)
+        self.nic_free = start + dt
+        return self.nic_free
+
+    def observe_arrival(self, arrival):
+        if arrival > self.now:
+            self.comm_wait += arrival - self.now
+            self.now = arrival
+
+    def advance_send(self, dt):  # blocking send
+        self.observe_arrival(self.nic_occupy(dt))
+
+    def busy_until(self):
+        return max(self.now, self.nic_free)
+
+
+def test_clock_overlap_bounds_hold_on_random_traces():
+    for case in range(300):
+        rng = np.random.default_rng(case)
+        blocking, overlapped = Clock(), Clock()
+        total_compute = total_send = total_comm_blocking = 0.0
+        for _ in range(rng.integers(1, 40)):
+            kind = rng.integers(0, 3)
+            if kind == 0:
+                dt = float(rng.uniform(0, 2))
+                blocking.advance_compute(dt)
+                overlapped.advance_compute(dt)
+                total_compute += dt
+            elif kind == 1:
+                dt = float(rng.uniform(0, 1))
+                blocking.advance_send(dt)
+                overlapped.nic_occupy(dt)
+                total_send += dt
+                total_comm_blocking += dt
+            else:
+                arr = float(rng.uniform(0, 10))
+                total_comm_blocking += max(0.0, arr - blocking.now)
+                blocking.observe_arrival(arr)
+                overlapped.observe_arrival(arr)
+        ms_over, ms_block = overlapped.busy_until(), blocking.busy_until()
+        eps = 1e-12
+        assert max(total_compute, total_send) <= ms_over + eps
+        assert ms_over <= total_compute + total_comm_blocking + eps
+        assert ms_over <= ms_block + eps
+        assert abs(overlapped.compute - total_compute) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Tile-level LU schedules (classic vs depth-1 lookahead)
+# ---------------------------------------------------------------------------
+
+def _embed_identity(a, t):
+    """Pad to a multiple of t with the identity (dist::descriptor::pad)."""
+    n = a.shape[0]
+    kt = -(-n // t)
+    out = np.eye(kt * t, dtype=a.dtype)
+    out[:n, :n] = a
+    return out, kt
+
+
+def _factor_panel(a, k, t, n_real_total):
+    """getrf with partial pivoting on panel column k (rows k*t..), pivot
+    search restricted to the real (unpadded) rows; swaps applied *within the
+    panel column only*.  Returns global pivot rows, one per eliminated
+    column (mirrors linalg::getrf_lda + the rust factor_panel)."""
+    kt = a.shape[0] // t
+    top = k * t
+    m_real = n_real_total - top          # real rows below the panel top
+    n_real = min(m_real, t)              # real panel width
+    piv = []
+    for col in range(n_real):
+        g = top + col
+        # pivot search over real rows only
+        sub = a[g:n_real_total, top + col]
+        p = g + int(np.argmax(np.abs(sub)))
+        piv.append(p)
+        if p != g:
+            a[[g, p], top:top + t] = a[[p, g], top:top + t]  # panel column only
+        pivval = a[g, top + col]
+        assert abs(pivval) > 1e-300, "singular panel"
+        a[g + 1:kt * t, top + col] /= pivval
+        a[g + 1:kt * t, top + col + 1:top + t] -= np.outer(
+            a[g + 1:kt * t, top + col], a[g, top + col + 1:top + t]
+        )
+    return piv
+
+
+def _apply_swaps_outside(a, piv, k, t):
+    swaps = []
+    top = k * t
+    for j, pg in enumerate(piv):
+        g1 = top + j
+        if g1 != pg:
+            swaps.append((g1, pg))
+            cols = np.r_[0:top, top + t:a.shape[1]]
+            a[np.ix_([g1, pg], cols)] = a[np.ix_([pg, g1], cols)]
+    return swaps
+
+
+def _u12_row(a, k, t, kt):
+    top = k * t
+    l11 = np.tril(a[top:top + t, top:top + t], -1) + np.eye(t)
+    for j in range(k + 1, kt):
+        a[top:top + t, j * t:(j + 1) * t] = np.linalg.solve(
+            l11, a[top:top + t, j * t:(j + 1) * t]
+        )
+
+
+def _tile_update(a, i, k, j, t):
+    a[i * t:(i + 1) * t, j * t:(j + 1) * t] -= (
+        a[i * t:(i + 1) * t, k * t:(k + 1) * t]
+        @ a[k * t:(k + 1) * t, j * t:(j + 1) * t]
+    )
+
+
+def lu_classic(a0, t, n_real):
+    a = a0.copy()
+    kt = a.shape[0] // t
+    swaps = []
+    for k in range(kt):
+        piv = _factor_panel(a, k, t, n_real)
+        swaps += _apply_swaps_outside(a, piv, k, t)
+        if k + 1 == kt:
+            break
+        _u12_row(a, k, t, kt)
+        for i in range(k + 1, kt):
+            for j in range(k + 1, kt):
+                _tile_update(a, i, k, j, t)
+    return a, swaps
+
+
+def lu_lookahead(a0, t, n_real):
+    """Mirror of the new solvers/direct/lu.rs schedule."""
+    a = a0.copy()
+    kt = a.shape[0] // t
+    swaps = []
+    piv_pending = _factor_panel(a, 0, t, n_real)
+    for k in range(kt):
+        piv = piv_pending
+        swaps += _apply_swaps_outside(a, piv, k, t)
+        if k + 1 == kt:
+            break
+        _u12_row(a, k, t, kt)
+        # lookahead: tile column k+1 first, then factor it early
+        for i in range(k + 1, kt):
+            _tile_update(a, i, k, k + 1, t)
+        piv_pending = _factor_panel(a, k + 1, t, n_real)
+        # trailing update for the remaining columns
+        for i in range(k + 1, kt):
+            for j in range(k + 2, kt):
+                _tile_update(a, i, k, j, t)
+    return a, swaps
+
+
+@pytest.mark.parametrize("n,t", [(16, 4), (24, 8), (13, 4), (21, 8), (7, 8)])
+def test_lookahead_lu_bit_identical_to_classic_and_correct(n, t):
+    a0 = RNG.standard_normal((n, n))
+    ap, kt = _embed_identity(a0, t)
+    classic, swaps_c = lu_classic(ap, t, n)
+    look, swaps_l = lu_lookahead(ap, t, n)
+    # The lookahead schedule reorders whole-tile ops but every element sees
+    # the identical op sequence: results must match bit for bit.
+    assert swaps_c == swaps_l
+    assert np.array_equal(classic, look)
+    # And the classic schedule is a genuine LU: P A = L U on the real block.
+    pa = ap.copy()
+    for g1, g2 in swaps_c:
+        pa[[g1, g2], :] = pa[[g2, g1], :]
+    # swaps inside the panel columns were applied during factorisation; the
+    # full permutation applied to A0 is the ordered swap list
+    nn = ap.shape[0]
+    l = np.tril(look, -1) + np.eye(nn)
+    u = np.triu(look)
+    assert np.allclose(l @ u, pa, atol=1e-10), np.abs(l @ u - pa).max()
+    # identity padding is preserved exactly
+    assert np.array_equal(look[n:, n:], np.eye(nn - n))
+
+
+# ---------------------------------------------------------------------------
+# Tile-level Cholesky schedules
+# ---------------------------------------------------------------------------
+
+def _chol_panel(a, k, t, kt):
+    top = k * t
+    a[top:top + t, top:top + t] = np.linalg.cholesky(a[top:top + t, top:top + t])
+    l11 = a[top:top + t, top:top + t]
+    for i in range(k + 1, kt):
+        # solve L(i,k) L11^T = A(i,k)
+        a[i * t:(i + 1) * t, top:top + t] = np.linalg.solve(
+            l11, a[i * t:(i + 1) * t, top:top + t].T
+        ).T
+
+
+def _chol_tile_update(a, i, k, j, t):
+    a[i * t:(i + 1) * t, j * t:(j + 1) * t] -= (
+        a[i * t:(i + 1) * t, k * t:(k + 1) * t]
+        @ a[j * t:(j + 1) * t, k * t:(k + 1) * t].T
+    )
+
+
+def chol_classic(a0, t):
+    a = a0.copy()
+    kt = a.shape[0] // t
+    for k in range(kt):
+        _chol_panel(a, k, t, kt)
+        for i in range(k + 1, kt):
+            for j in range(k + 1, i + 1):
+                _chol_tile_update(a, i, k, j, t)
+    return a
+
+
+def chol_lookahead(a0, t):
+    """Mirror of the new solvers/direct/cholesky.rs schedule."""
+    a = a0.copy()
+    kt = a.shape[0] // t
+    _chol_panel(a, 0, t, kt)
+    for k in range(kt):
+        if k + 1 == kt:
+            break
+        # lookahead: column k+1 first, factor it early
+        for i in range(k + 1, kt):
+            _chol_tile_update(a, i, k, k + 1, t)
+        _chol_panel(a, k + 1, t, kt)
+        # remaining lower-half trailing columns
+        for i in range(k + 1, kt):
+            for j in range(k + 2, i + 1):
+                _chol_tile_update(a, i, k, j, t)
+    return a
+
+
+@pytest.mark.parametrize("n,t", [(16, 4), (24, 8), (12, 4)])
+def test_lookahead_cholesky_bit_identical_to_classic_and_correct(n, t):
+    m = RNG.standard_normal((n, n))
+    a0 = m @ m.T + n * np.eye(n)
+    classic = chol_classic(a0, t)
+    look = chol_lookahead(a0, t)
+    assert np.array_equal(np.tril(classic), np.tril(look))
+    l = np.tril(look)
+    assert np.allclose(l @ l.T, a0, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Split (masked) spmv
+# ---------------------------------------------------------------------------
+
+def test_masked_spmv_composes_to_full_matvec():
+    n, t, pr = 64, 4, 2
+    density = 0.15
+    a = RNG.standard_normal((n, n)) * (RNG.random((n, n)) < density)
+    x = RNG.standard_normal(n)
+    kt = n // t
+    for prow in range(pr):
+        owned = np.zeros(n, dtype=bool)
+        for ti in range(kt):
+            if ti % pr == prow:
+                owned[ti * t:(ti + 1) * t] = True
+        # pass 1 reads only owned columns (remote x may be garbage)
+        x_garbage = np.where(owned, x, np.nan)
+        y = (a[:, owned] @ x_garbage[owned])
+        y += a[:, ~owned] @ x[~owned]
+        assert np.allclose(y, a @ x, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Rectangular tiled GEMM with identity padding: the pad mask is required
+# ---------------------------------------------------------------------------
+
+def _pad_identity_rect(a, t):
+    m, n = a.shape
+    mt, nt = -(-m // t), -(-n // t)
+    out = np.zeros((mt * t, nt * t), dtype=a.dtype)
+    for i in range(mt * t):
+        for j in range(nt * t):
+            if i < m and j < n:
+                out[i, j] = a[i, j]
+            elif i == j:
+                out[i, j] = 1.0  # identity pad diagonal
+    return out
+
+
+def test_rectangular_padded_gemm_needs_the_mask():
+    m, k, n, t = 10, 6, 14, 4
+    a = RNG.standard_normal((m, k))
+    b = RNG.standard_normal((k, n))
+    ap, bp = _pad_identity_rect(a, t), _pad_identity_rect(b, t)
+    want = a @ b
+    # Unmasked: the pad-diagonal of A's columns 6..8 hits the pad-diagonal
+    # of B's rows 6..8 and corrupts C's real diagonal at (6,6), (7,7).
+    c_raw = (ap @ bp)[:m, :n]
+    wrong = np.abs(c_raw - want)
+    assert wrong[6, 6] > 0.5 and wrong[7, 7] > 0.5, "expected pad pollution"
+    # Masked (what pgemm_acc broadcasts): pads zeroed -> exact.
+    am, bm = ap.copy(), bp.copy()
+    am[m:, :] = 0.0
+    am[:, k:] = 0.0
+    bm[k:, :] = 0.0
+    bm[:, n:] = 0.0
+    c_masked = (am @ bm)[:m, :n]
+    assert np.allclose(c_masked, want, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Pipelined CG (Ghysels recurrences)
+# ---------------------------------------------------------------------------
+
+def pipecg(a, b, tol=1e-10, max_iter=500):
+    n = len(b)
+    x = np.zeros(n)
+    r = b.copy()
+    w = a @ r
+    z = s = p = None
+    gamma_prev = alpha_prev = None
+    bnorm = np.linalg.norm(b)
+    for it in range(max_iter):
+        gamma = r @ r
+        delta = w @ r
+        q = a @ w  # overlapped with the (gamma, delta) reduction
+        if np.sqrt(gamma) <= tol * bnorm:
+            return x, it, True
+        if it == 0:
+            alpha, beta = gamma / delta, 0.0
+            z, s, p = q.copy(), w.copy(), r.copy()
+        else:
+            beta = gamma / gamma_prev
+            denom = delta - beta * gamma / alpha_prev
+            assert denom > 0, "pipelined breakdown"
+            alpha = gamma / denom
+            z = q + beta * z
+            s = w + beta * s
+            p = r + beta * p
+        x += alpha * p
+        r -= alpha * s
+        w -= alpha * z
+        gamma_prev, alpha_prev = gamma, alpha
+    return x, max_iter, False
+
+
+def cg_classic(a, b, tol=1e-10, max_iter=500):
+    x = np.zeros(len(b))
+    r = b.copy()
+    p = r.copy()
+    rr = r @ r
+    bnorm = np.linalg.norm(b)
+    for it in range(max_iter):
+        ap = a @ p
+        alpha = rr / (p @ ap)
+        x += alpha * p
+        r -= alpha * ap
+        rr_new = r @ r
+        if np.sqrt(rr_new) <= tol * bnorm:
+            return x, it + 1, True
+        p = r + (rr_new / rr) * p
+        rr = rr_new
+    return x, max_iter, False
+
+
+def _poisson1d(n):
+    a = np.zeros((n, n))
+    for i in range(n):
+        a[i, i] = 2.0
+        if i > 0:
+            a[i, i - 1] = -1.0
+        if i + 1 < n:
+            a[i, i + 1] = -1.0
+    return a
+
+
+@pytest.mark.parametrize("n", [32, 100])
+def test_pipecg_matches_cg_solution_and_iteration_scale(n):
+    a = _poisson1d(n)
+    xt = RNG.standard_normal(n)
+    b = a @ xt
+    x_pipe, it_pipe, conv_pipe = pipecg(a, b, tol=1e-12, max_iter=5 * n)
+    x_cg, it_cg, conv_cg = cg_classic(a, b, tol=1e-12, max_iter=5 * n)
+    assert conv_pipe and conv_cg
+    assert np.allclose(x_pipe, xt, atol=1e-6)
+    assert np.allclose(x_cg, xt, atol=1e-6)
+    # Same Krylov method: iteration counts agree up to round-off drift.
+    assert abs(it_pipe - it_cg) <= max(3, n // 10)
+
+
+def test_pipecg_spd_random_matrix():
+    n = 60
+    m = RNG.standard_normal((n, n))
+    a = m @ m.T + n * np.eye(n)
+    xt = RNG.standard_normal(n)
+    b = a @ xt
+    x, _, conv = pipecg(a, b, tol=1e-12, max_iter=10 * n)
+    assert conv
+    assert np.allclose(x, xt, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Overlap model invariants (max-form vs sum-form)
+# ---------------------------------------------------------------------------
+
+def test_overlapped_schedule_model_never_loses():
+    for case in range(200):
+        rng = np.random.default_rng(1000 + case)
+        panel = rng.uniform(0, 1, 12)
+        pre = rng.uniform(0, 1, 12)
+        update = rng.uniform(0, 2, 12)
+        blocking = float(np.sum(panel + pre + update))
+        look = panel[0] + float(
+            np.sum(pre) + sum(max(u, p) for u, p in zip(update, list(panel[1:]) + [0.0]))
+        )
+        assert look <= blocking + 1e-12
+        if np.all(panel[1:] > 0) and np.all(update[:-1] > 0):
+            assert look < blocking

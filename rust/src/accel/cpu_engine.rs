@@ -139,6 +139,36 @@ impl<S: Scalar> Engine<S> for CpuEngine {
         Ok(spmv_cost::<S>(&self.profile, a.nnz(), a.nrows(), a.ncols()))
     }
 
+    fn spmv_part(
+        &self,
+        part: &CsrMatrix<S>,
+        total_nnz: usize,
+        x: &[S],
+        y: &mut [S],
+    ) -> Result<OpCost> {
+        assert_eq!(x.len(), part.ncols(), "spmv_part: x length != ncols");
+        assert_eq!(y.len(), part.nrows(), "spmv_part: y length != nrows");
+        assert!(part.nnz() <= total_nnz, "spmv_part: part larger than its whole");
+        for (i, yi) in y.iter_mut().enumerate() {
+            let (cols, vals) = part.row(i);
+            let mut acc = S::zero();
+            for (&c, &v) in cols.iter().zip(vals) {
+                acc += v * x[c];
+            }
+            *yi += acc;
+        }
+        // Charged as this part's *share* of the one fused matvec the
+        // blocking schedule prices: complementary parts sum exactly to
+        // `spmv_cost`, so splitting never costs more virtual compute than
+        // one `spmv` (the overlap-never-loses invariant).
+        let total = spmv_cost::<S>(&self.profile, total_nnz, part.nrows(), part.nrows());
+        let frac = if total_nnz == 0 { 0.0 } else { part.nnz() as f64 / total_nnz as f64 };
+        Ok(OpCost {
+            compute_secs: total.compute_secs * frac,
+            transfer_secs: total.transfer_secs * frac,
+        })
+    }
+
     fn blas1_cost(&self, len: usize) -> OpCost {
         // touched: 2 reads + 1 write; host engine streams nothing.
         self.profile.op_cost::<S>(

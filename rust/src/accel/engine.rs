@@ -83,6 +83,24 @@ pub trait Engine<S: Scalar>: Send + Sync {
     /// `y` overwritten) — the BiCG second sequence on sparse operands.
     fn spmv_t(&self, a: &CsrMatrix<S>, x: &[S], y: &mut [S]) -> Result<OpCost>;
 
+    /// Sparse accumulation `y += A_part x` over one column-split *part* of
+    /// a row block (see [`crate::sparse::SplitBlocks`]): the split-phase
+    /// `pspmv` runs the diagonal-block part while the x allgather is in
+    /// flight and the off-block part on completion (`DESIGN.md` §11).  The
+    /// part references only its own columns, so the rest of `x` may be
+    /// garbage.  Cost contract: `total_nnz` is the whole row block's
+    /// stored-entry count and each call charges its part's *share* of one
+    /// full [`spmv_cost`], so complementary parts sum to exactly one
+    /// matvec — splitting never charges more than the blocking schedule.
+    /// Gated off on the accelerated engine like the other sparse ops.
+    fn spmv_part(
+        &self,
+        part: &CsrMatrix<S>,
+        total_nnz: usize,
+        x: &[S],
+        y: &mut [S],
+    ) -> Result<OpCost>;
+
     /// Modelled cost of a BLAS-1 op of `len` elements on this engine.
     fn blas1_cost(&self, len: usize) -> OpCost;
 

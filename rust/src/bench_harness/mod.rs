@@ -16,7 +16,10 @@ pub mod figures;
 pub mod model;
 
 pub use figures::{fig3_series, fig4_series, FigurePoint, FigureSeries};
-pub use model::ModelParams;
+pub use model::{
+    lu_makespan_lookahead, sparse_cg_split_makespan, sparse_pipecg_overlap_makespan,
+    summa_makespan, ModelParams,
+};
 
 /// The paper's rank sweep (Figures 3 and 4).
 pub const PAPER_RANKS: &[usize] = &[1, 2, 4, 8, 16];

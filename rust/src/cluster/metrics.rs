@@ -22,21 +22,34 @@ pub struct RankMetrics {
     pub msgs: u64,
     /// Payload bytes sent.
     pub bytes: u64,
+    /// Peak number of split-phase requests simultaneously outstanding.
+    pub max_outstanding_reqs: u64,
+    /// Virtual seconds of communication latency hidden by overlap
+    /// (what blocking would have charged minus what `wait` charged).
+    pub wait_saved: f64,
     /// Wall-clock seconds this rank actually took (calibration data).
     pub wall: f64,
 }
 
 impl RankMetrics {
-    /// Snapshot a rank's clock + traffic counters.
+    /// Snapshot a rank's clock + traffic counters.  `vtime` reads
+    /// [`crate::comm::VClock::busy_until`]: a rank whose last act was an
+    /// isend is busy until its NIC drains.  For the same reason that tail
+    /// backlog is netted out of `wait_saved` — occupancy still queued at
+    /// capture time extends the makespan, so it was credited at post but
+    /// not actually hidden.
     pub fn capture<S: Scalar>(comm: &Comm<S>, wall: f64) -> Self {
+        let tail_backlog = (comm.clock().nic_free() - comm.clock().now()).max(0.0);
         RankMetrics {
             rank: comm.rank(),
-            vtime: comm.clock().now(),
+            vtime: comm.clock().busy_until(),
             compute: comm.clock().compute_secs(),
             comm_wait: comm.clock().comm_wait_secs(),
             transfer: comm.clock().transfer_secs(),
             msgs: comm.stats().msgs_sent(),
             bytes: comm.stats().bytes_sent(),
+            max_outstanding_reqs: comm.stats().max_outstanding_reqs(),
+            wait_saved: (comm.stats().wait_saved_secs() - tail_backlog).max(0.0),
             wall,
         }
     }
@@ -110,6 +123,16 @@ impl SolveReport {
         self.per_rank.iter().map(|m| m.msgs).sum()
     }
 
+    /// Total virtual seconds of latency hidden by split-phase overlap.
+    pub fn total_wait_saved(&self) -> f64 {
+        self.per_rank.iter().map(|m| m.wait_saved).sum()
+    }
+
+    /// Peak outstanding split-phase requests on any rank.
+    pub fn max_outstanding_reqs(&self) -> u64 {
+        self.per_rank.iter().map(|m| m.max_outstanding_reqs).max().unwrap_or(0)
+    }
+
     /// Total payload bytes sent.
     pub fn total_bytes(&self) -> u64 {
         self.per_rank.iter().map(|m| m.bytes).sum()
@@ -129,7 +152,8 @@ impl SolveReport {
             None => String::new(),
         };
         format!(
-            "{} on {:?} n={} P={} [{}]: makespan {}, err {:.2e}, comm {:.0}%{}",
+            "{} on {:?} n={} P={} [{}]: makespan {}, err {:.2e}, comm {:.0}%, \
+             hidden {}, reqs<={}{}",
             self.method,
             self.workload,
             self.n,
@@ -138,6 +162,8 @@ impl SolveReport {
             crate::util::fmt::secs(self.makespan()),
             self.max_err,
             self.comm_fraction() * 100.0,
+            crate::util::fmt::secs(self.total_wait_saved()),
+            self.max_outstanding_reqs(),
             iter
         )
     }
@@ -156,6 +182,8 @@ mod tests {
             transfer: 0.0,
             msgs: 10,
             bytes: 100,
+            max_outstanding_reqs: 3,
+            wait_saved: 0.25,
             wall: 0.01,
         }
     }
@@ -176,6 +204,9 @@ mod tests {
         assert!((r.total_compute() - 2.3).abs() < 1e-12);
         assert!((r.comm_fraction() - 0.15).abs() < 1e-12);
         assert_eq!(r.total_msgs(), 20);
+        assert!((r.total_wait_saved() - 0.5).abs() < 1e-12);
+        assert_eq!(r.max_outstanding_reqs(), 3);
         assert!(r.summary().contains("LU"));
+        assert!(r.summary().contains("hidden"));
     }
 }

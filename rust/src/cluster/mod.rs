@@ -19,7 +19,9 @@ use crate::dist::{gather_vector, Descriptor, DistMatrix, DistVector};
 use crate::mesh::{Mesh, MeshShape};
 use crate::pblas::Ctx;
 use crate::runtime::Runtime;
-use crate::solvers::{bicg, bicgstab, cg, gmres, pchol_solve, plu_solve, IterConfig, IterMethod};
+use crate::solvers::{
+    bicg, bicgstab, cg, gmres, pchol_solve, pipecg, plu_solve, IterConfig, IterMethod,
+};
 use crate::workloads::Workload;
 use crate::{Error, Result, Scalar};
 
@@ -110,8 +112,10 @@ impl Cluster {
     /// report (makespan, per-rank breakdown, solution error vs the known
     /// answer).
     pub fn solve<S: Scalar>(&self, workload: Workload, n: usize, method: Method) -> Result<SolveReport> {
-        if matches!(method, Method::Cholesky | Method::Iterative(IterMethod::Cg))
-            && !workload.is_spd()
+        if matches!(
+            method,
+            Method::Cholesky | Method::Iterative(IterMethod::Cg | IterMethod::PipeCg)
+        ) && !workload.is_spd()
         {
             return Err(Error::config(format!(
                 "{} requires an SPD workload, got {workload:?}",
@@ -155,6 +159,7 @@ impl Cluster {
                     Method::Iterative(m) => {
                         let (x, st) = match m {
                             IterMethod::Cg => cg(&ctx, &a0, &b, &iter_cfg)?,
+                            IterMethod::PipeCg => pipecg(&ctx, &a0, &b, &iter_cfg)?,
                             IterMethod::Bicg => bicg(&ctx, &a0, &b, &iter_cfg)?,
                             IterMethod::Bicgstab => bicgstab(&ctx, &a0, &b, &iter_cfg)?,
                             IterMethod::Gmres => gmres(&ctx, &a0, &b, &iter_cfg)?,

@@ -1,11 +1,24 @@
-//! Per-rank virtual clock (Lamport-style timestamp propagation).
+//! Per-rank virtual clock (Lamport-style timestamp propagation) with **two
+//! overlappable timelines**.
 //!
-//! Each rank owns a `VClock`.  Local compute advances it by the engine cost
-//! model's estimate; receiving a message advances it to the message's arrival
-//! time if that is later.  Because every distributed algorithm in this crate
-//! is deterministic message passing, the resulting `max` over rank clocks is
-//! exactly the makespan a real cluster with those compute/network costs would
-//! see — this is the quantity the paper's Figures 3/4 plot (via speedup).
+//! Each rank owns a `VClock`.  Local compute advances the *compute* timeline
+//! (`now`) by the engine cost model's estimate; receiving a message advances
+//! it to the message's arrival time if that is later.  Because every
+//! distributed algorithm in this crate is deterministic message passing, the
+//! resulting `max` over rank clocks is exactly the makespan a real cluster
+//! with those compute/network costs would see — this is the quantity the
+//! paper's Figures 3/4 plot (via speedup).
+//!
+//! The second timeline is the **NIC** (`nic_free`): outgoing bytes serialise
+//! at line rate on the rank's network interface, but — as on a real cluster
+//! with non-blocking MPI — that serialisation proceeds *while the CPU
+//! computes*.  A blocking send advances the compute timeline to the end of
+//! the NIC occupancy (the old fully-synchronous behaviour); a split-phase
+//! `isend` only occupies the NIC timeline and leaves `now` untouched, so the
+//! occupancy is hidden unless the rank later has to wait for it.  `wait` on
+//! an in-flight message charges only the *remaining* latency: the part of
+//! the transfer that did not fit under the compute performed since the
+//! request was posted (DESIGN.md §11).
 //!
 //! The clock also accumulates a breakdown (compute vs communication wait vs
 //! accelerator transfer) used by the bench reports.
@@ -18,6 +31,9 @@ use std::cell::Cell;
 #[derive(Debug, Default)]
 pub struct VClock {
     now: Cell<f64>,
+    /// When this rank's NIC finishes serialising everything queued so far.
+    /// Always `>= 0`; may run ahead of `now` while isends are in flight.
+    nic_free: Cell<f64>,
     compute: Cell<f64>,
     comm_wait: Cell<f64>,
     xfer: Cell<f64>,
@@ -29,9 +45,21 @@ impl VClock {
         Self::default()
     }
 
-    /// Current virtual time (seconds).
+    /// Current virtual time on the compute timeline (seconds).
     pub fn now(&self) -> f64 {
         self.now.get()
+    }
+
+    /// When the NIC timeline drains (>= `now` only while sends are queued).
+    pub fn nic_free(&self) -> f64 {
+        self.nic_free.get()
+    }
+
+    /// The instant this rank is completely idle: compute done *and* NIC
+    /// drained.  This is what the makespan aggregation reads — a rank whose
+    /// last act was an isend is still busy until the bytes leave the wire.
+    pub fn busy_until(&self) -> f64 {
+        self.now.get().max(self.nic_free.get())
     }
 
     /// Advance by a local-compute interval.
@@ -50,18 +78,38 @@ impl VClock {
         self.xfer.set(self.xfer.get() + dt);
     }
 
-    /// Advance by a send-side occupancy interval (LogGP's `G·bytes`: the
-    /// NIC serialises outgoing bytes at line rate, so a burst of sends from
-    /// one rank cannot overlap — accounted as communication time).
-    pub fn advance_send(&self, dt: f64) {
+    /// Occupy the NIC timeline for `dt` seconds starting no earlier than
+    /// `at` (and never before previously queued traffic).  Returns the
+    /// occupancy's end time — the instant the last byte leaves the wire.
+    /// Does **not** advance the compute timeline: this is the split-phase
+    /// half of a send.
+    pub fn nic_occupy_from(&self, at: f64, dt: f64) -> f64 {
         debug_assert!(dt >= 0.0);
-        self.now.set(self.now.get() + dt);
-        self.comm_wait.set(self.comm_wait.get() + dt);
+        let start = self.nic_free.get().max(at);
+        let end = start + dt;
+        self.nic_free.set(end);
+        end
+    }
+
+    /// Occupy the NIC starting from the current compute time.
+    pub fn nic_occupy(&self, dt: f64) -> f64 {
+        self.nic_occupy_from(self.now.get(), dt)
+    }
+
+    /// Advance by a send-side occupancy interval (LogGP's `G·bytes`) on the
+    /// *blocking* path: the occupancy is queued on the NIC timeline and the
+    /// compute timeline blocks until it drains — accounted as communication
+    /// time, exactly the old fully-synchronous semantics when no isends are
+    /// outstanding.
+    pub fn advance_send(&self, dt: f64) {
+        let end = self.nic_occupy(dt);
+        self.observe_arrival(end);
     }
 
     /// Observe a message that arrives at absolute virtual time `arrival`:
     /// the rank blocks until then if it is early (that blocked interval is
-    /// communication wait).
+    /// communication wait — the *remaining* latency of an overlapped
+    /// transfer, or the whole latency of a blocking one).
     pub fn observe_arrival(&self, arrival: f64) {
         let now = self.now.get();
         if arrival > now {
@@ -94,6 +142,7 @@ impl VClock {
     /// Reset to t = 0 (between bench repetitions).
     pub fn reset(&self) {
         self.now.set(0.0);
+        self.nic_free.set(0.0);
         self.compute.set(0.0);
         self.comm_wait.set(0.0);
         self.xfer.set(0.0);
@@ -103,6 +152,7 @@ impl VClock {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::forall;
 
     #[test]
     fn advance_and_breakdown() {
@@ -133,13 +183,117 @@ mod tests {
     }
 
     #[test]
+    fn blocking_send_still_charges_full_occupancy() {
+        // The legacy semantics: with nothing queued, advance_send moves the
+        // compute timeline by exactly dt and attributes it to comm.
+        let c = VClock::new();
+        c.advance_compute(1.0);
+        c.advance_send(0.5);
+        assert!((c.now() - 1.5).abs() < 1e-12);
+        assert!((c.comm_wait_secs() - 0.5).abs() < 1e-12);
+        assert_eq!(c.nic_free(), c.now());
+    }
+
+    #[test]
+    fn isend_occupancy_is_hidden_behind_compute() {
+        let c = VClock::new();
+        let end = c.nic_occupy(0.5); // split-phase: now untouched
+        assert_eq!(end, 0.5);
+        assert_eq!(c.now(), 0.0);
+        assert_eq!(c.busy_until(), 0.5);
+        c.advance_compute(2.0); // compute runs past the occupancy
+        assert_eq!(c.busy_until(), 2.0);
+        assert_eq!(c.comm_wait_secs(), 0.0);
+    }
+
+    #[test]
+    fn queued_isends_serialise_on_the_nic() {
+        let c = VClock::new();
+        assert_eq!(c.nic_occupy(0.25), 0.25);
+        assert_eq!(c.nic_occupy(0.25), 0.5); // back-to-back: queued
+        c.advance_compute(1.0);
+        assert_eq!(c.nic_occupy(0.25), 1.25); // NIC idle since 0.5: restarts at now
+        // A blocking send behind a busy NIC waits for the queue to drain.
+        c.advance_send(0.25);
+        assert!((c.now() - 1.5).abs() < 1e-12);
+        assert!((c.comm_wait_secs() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
     fn reset_clears() {
         let c = VClock::new();
         c.advance_compute(1.0);
+        c.nic_occupy(4.0);
         c.observe_arrival(9.0);
         c.reset();
         assert_eq!(c.now(), 0.0);
+        assert_eq!(c.nic_free(), 0.0);
         assert_eq!(c.compute_secs(), 0.0);
         assert_eq!(c.comm_wait_secs(), 0.0);
+    }
+
+    /// The overlap-clock property the bench reports rely on: replay one
+    /// random trace of compute intervals, sends and message arrivals in
+    /// (a) blocking mode (every send via `advance_send`) and (b) overlapped
+    /// mode (every send via `nic_occupy`).  Then, per rank:
+    ///
+    /// * `max(total_compute, total_send_occupancy) <= overlapped makespan`,
+    /// * `overlapped makespan <= total_compute + total_comm` (serialisation
+    ///   is the worst case), and
+    /// * the overlapped makespan never exceeds the blocking one.
+    #[test]
+    fn overlap_never_loses_and_is_bounded() {
+        forall(200, 0xc10c, |rng| {
+            let blocking = VClock::new();
+            let overlapped = VClock::new();
+            let mut total_compute = 0.0f64;
+            let mut total_send = 0.0f64;
+            let mut total_comm_blocking = 0.0f64;
+            let n_events = 1 + rng.below(30);
+            for _ in 0..n_events {
+                match rng.below(3) {
+                    0 => {
+                        let dt = rng.uniform() * 2.0;
+                        blocking.advance_compute(dt);
+                        overlapped.advance_compute(dt);
+                        total_compute += dt;
+                    }
+                    1 => {
+                        let dt = rng.uniform();
+                        blocking.advance_send(dt);
+                        overlapped.nic_occupy(dt);
+                        total_send += dt;
+                        total_comm_blocking += dt;
+                    }
+                    _ => {
+                        // An externally-stamped arrival: same absolute time
+                        // observed by both replays (identical trace).
+                        let arr = rng.uniform() * 10.0;
+                        let before = blocking.now();
+                        blocking.observe_arrival(arr);
+                        total_comm_blocking += (arr - before).max(0.0);
+                        overlapped.observe_arrival(arr);
+                    }
+                }
+            }
+            let ms_over = overlapped.busy_until();
+            let ms_block = blocking.busy_until();
+            let eps = 1e-12;
+            assert!(
+                total_compute.max(total_send) <= ms_over + eps,
+                "lower bound: max({total_compute}, {total_send}) vs {ms_over}"
+            );
+            assert!(
+                ms_over <= total_compute + total_comm_blocking + eps,
+                "upper bound: {ms_over} vs {total_compute} + {total_comm_blocking}"
+            );
+            assert!(
+                ms_over <= ms_block + eps,
+                "overlap must never lose: {ms_over} vs blocking {ms_block}"
+            );
+            // Breakdown is preserved: compute attribution identical in both.
+            assert!((overlapped.compute_secs() - total_compute).abs() < 1e-9);
+            assert!((blocking.compute_secs() - total_compute).abs() < 1e-9);
+        });
     }
 }

@@ -12,8 +12,11 @@
 //! virtual clock picks up the right `alpha·log P + bytes·beta` cost shape
 //! without a separate collective cost model.
 
+use std::cell::Cell;
+use std::rc::Rc;
+
 use super::message::{Payload, Tag};
-use super::transport::Group;
+use super::transport::{Comm, Group};
 use crate::Scalar;
 
 /// Element-wise reduction operators.
@@ -48,6 +51,45 @@ impl ReduceOp {
     }
 }
 
+/// The bit on which tree-relative rank `rel` (> 0) receives its copy in
+/// the binomial broadcast tree over `p` nodes: the lowest set bit of `rel`.
+fn bcast_recv_mask(rel: usize, p: usize) -> usize {
+    debug_assert!(rel > 0 && rel < p);
+    let mut mask = 1usize;
+    while rel & mask == 0 {
+        mask <<= 1;
+    }
+    mask
+}
+
+/// Tree-relative ranks of the subtree children `rel` forwards to in the
+/// binomial broadcast tree over `p` nodes, in send order.  `recv_mask` is
+/// the bit on which `rel` received its copy ([`bcast_recv_mask`]); pass 0
+/// for the root, which owns the whole tree.  Every broadcast path —
+/// blocking, split-phase start, stamped forwarding, the allreduce down
+/// phase — enumerates its edges through this one function, which is what
+/// keeps their message order (and therefore solver reproducibility)
+/// identical across the blocking and overlapped schedules.
+fn bcast_children(rel: usize, p: usize, recv_mask: usize) -> Vec<usize> {
+    let mut mask = if recv_mask == 0 {
+        let mut m = 1usize;
+        while m < p {
+            m <<= 1;
+        }
+        m >> 1
+    } else {
+        recv_mask >> 1
+    };
+    let mut out = Vec::new();
+    while mask > 0 {
+        if rel + mask < p {
+            out.push(rel + mask);
+        }
+        mask >>= 1;
+    }
+    out
+}
+
 impl<'a, S: Scalar> Group<'a, S> {
     /// Binomial-tree broadcast from group rank `root`.  `data` is the
     /// payload on the root and ignored elsewhere; every rank returns the
@@ -59,30 +101,18 @@ impl<'a, S: Scalar> Group<'a, S> {
             return data.expect("bcast root must supply data");
         }
         let rel = (me + p - root) % p;
-        let mut payload = if me == root {
-            Some(data.expect("bcast root must supply data"))
+        // Receive phase.
+        let (pl, recv_mask) = if me == root {
+            (data.expect("bcast root must supply data"), 0)
         } else {
-            None
+            let recv_mask = bcast_recv_mask(rel, p);
+            let src = (me + p - recv_mask) % p;
+            (self.comm().recv(self.world_rank(src), Tag::Bcast(tag)), recv_mask)
         };
-        // Receive phase: find the bit on which this rank receives.
-        let mut mask = 1usize;
-        while mask < p {
-            if rel & mask != 0 {
-                let src = (me + p - mask) % p;
-                payload = Some(self.comm().recv(self.world_rank(src), Tag::Bcast(tag)));
-                break;
-            }
-            mask <<= 1;
-        }
-        // Send phase: forward down the tree.
-        let pl = payload.expect("binomial bcast bookkeeping");
-        let mut mask = mask >> 1;
-        while mask > 0 {
-            if rel + mask < p {
-                let dst = (me + mask) % p;
-                self.comm().send(self.world_rank(dst), Tag::Bcast(tag), pl.clone());
-            }
-            mask >>= 1;
+        // Send phase: forward down the subtree.
+        for child in bcast_children(rel, p, recv_mask) {
+            let dst = (me + (child - rel)) % p;
+            self.comm().send(self.world_rank(dst), Tag::Bcast(tag), pl.clone());
         }
         pl
     }
@@ -241,6 +271,114 @@ impl<'a, S: Scalar> Group<'a, S> {
         }
     }
 
+    /// Start a split-phase binomial broadcast (same tree, same message
+    /// order as [`Group::bcast`]).  The root's tree edges are posted
+    /// immediately with the payload's availability stamp, so the transfer
+    /// progresses on the network timeline while the caller computes;
+    /// [`BcastRequest::wait`] charges only the latency that compute did not
+    /// cover.  Non-root interior ranks forward their edges at `wait`, but
+    /// stamped from the *arrival* of the incoming message — modelling the
+    /// asynchronous progression a real MPI progress engine provides.
+    pub fn ibcast(&self, root: usize, tag: u32, data: Option<Payload<S>>) -> BcastRequest<'a, S> {
+        let p = self.size();
+        let me = self.rank();
+        self.comm().req_open();
+        if p == 1 {
+            let pl = data.expect("bcast root must supply data");
+            return BcastRequest {
+                comm: self.comm(),
+                ranks: self.ranks.clone(),
+                me,
+                root,
+                tag,
+                payload: Some(pl),
+                recv_mask: 0,
+                posted_at: self.comm().clock().now(),
+                done: Cell::new(false),
+            };
+        }
+        let rel = (me + p - root) % p;
+        let posted_at = self.comm().clock().now();
+        if me == root {
+            // Post every tree edge now: the payload is already available.
+            let pl = data.expect("bcast root must supply data");
+            for child in bcast_children(0, p, 0) {
+                let dst = (me + child) % p;
+                self.comm().post_at(self.world_rank(dst), Tag::Bcast(tag), pl.clone(), posted_at);
+            }
+            return BcastRequest {
+                comm: self.comm(),
+                ranks: self.ranks.clone(),
+                me,
+                root,
+                tag,
+                payload: Some(pl),
+                recv_mask: 0,
+                posted_at,
+                done: Cell::new(false),
+            };
+        }
+        BcastRequest {
+            comm: self.comm(),
+            ranks: self.ranks.clone(),
+            me,
+            root,
+            tag,
+            payload: None,
+            recv_mask: bcast_recv_mask(rel, p),
+            posted_at,
+            done: Cell::new(false),
+        }
+    }
+
+    /// Start a split-phase ring allgather (same ring, same message order as
+    /// [`Group::allgather`]).  This rank's own block is posted immediately;
+    /// the remaining `P-2` forwarding hops are stamped from each incoming
+    /// arrival at [`AllgatherRequest::wait`] — the ring progresses in the
+    /// background while the caller computes on data it already owns (the
+    /// split-phase `pspmv` pattern).
+    pub fn iallgather(&self, tag: u32, mine: Vec<S>) -> AllgatherRequest<'a, S> {
+        let p = self.size();
+        let me = self.rank();
+        self.comm().req_open();
+        let posted_at = self.comm().clock().now();
+        if p > 1 {
+            let next = (me + 1) % p;
+            self.comm().post_at(
+                self.world_rank(next),
+                Tag::AllGather(tag),
+                Payload::Data(mine.clone()),
+                posted_at,
+            );
+        }
+        let mut blocks: Vec<Option<Vec<S>>> = (0..p).map(|_| None).collect();
+        blocks[me] = Some(mine);
+        let (comm, ranks) = (self.comm(), self.ranks.clone());
+        AllgatherRequest { comm, ranks, me, tag, blocks, posted_at, done: Cell::new(false) }
+    }
+
+    /// Start a split-phase allreduce (binomial reduce-to-0 + broadcast, the
+    /// same tree and combine order as [`Group::allreduce_vec`] so results
+    /// are bit-identical).  All tree edges are stamped from data
+    /// availability — a leaf's contribution from the post time, an interior
+    /// combine from the latest arrival feeding it — so the whole reduction
+    /// progresses as if driven by a progress thread while the caller
+    /// computes (the Ghysels pipelined-CG overlap);
+    /// [`AllreduceRequest::wait`] charges only the uncovered remainder.
+    pub fn iallreduce_vec(&self, tag: u32, mine: Vec<S>, op: ReduceOp) -> AllreduceRequest<'a, S> {
+        self.comm().req_open();
+        AllreduceRequest {
+            comm: self.comm(),
+            ranks: self.ranks.clone(),
+            me: self.rank(),
+            tag,
+            op,
+            mine: Some(mine),
+            posted_at: self.comm().clock().now(),
+            done: Cell::new(false),
+        }
+    }
+
     /// Dissemination barrier (works for any group size).
     pub fn barrier(&self, tag: u32) {
         let p = self.size();
@@ -255,6 +393,212 @@ impl<'a, S: Scalar> Group<'a, S> {
             dist <<= 1;
             k += 1;
         }
+    }
+}
+
+/// In-flight split-phase broadcast (see [`Group::ibcast`]).
+#[must_use = "a split-phase collective must be waited"]
+pub struct BcastRequest<'a, S: Scalar> {
+    comm: &'a Comm<S>,
+    ranks: Rc<[usize]>,
+    me: usize,
+    root: usize,
+    tag: u32,
+    payload: Option<Payload<S>>,
+    recv_mask: usize,
+    posted_at: f64,
+    done: Cell<bool>,
+}
+
+impl<S: Scalar> Drop for BcastRequest<'_, S> {
+    fn drop(&mut self) {
+        // Balance the request counter even on an unwaited drop (e.g. an
+        // in-flight lookahead panel abandoned by an error return).
+        if !self.done.get() {
+            self.comm.req_close();
+        }
+    }
+}
+
+impl<S: Scalar> BcastRequest<'_, S> {
+    /// Complete the broadcast: receive this rank's copy (charging only the
+    /// remaining latency), forward the subtree edges stamped from the
+    /// arrival, and return the payload.
+    pub fn wait(mut self) -> Payload<S> {
+        self.done.set(true);
+        self.comm.req_close();
+        if let Some(pl) = self.payload.take() {
+            return pl; // root (or singleton group): data was local all along
+        }
+        let p = self.ranks.len();
+        let rel = (self.me + p - self.root) % p;
+        let src = (self.me + p - self.recv_mask) % p;
+        let msg = self.comm.take_matching(self.ranks[src], Tag::Bcast(self.tag));
+        // Forward down the subtree as a progress engine would: available the
+        // instant the incoming copy landed, not when this wait ran.
+        for child in bcast_children(rel, p, self.recv_mask) {
+            let dst = (self.me + (child - rel)) % p;
+            self.comm.post_at(
+                self.ranks[dst],
+                Tag::Bcast(self.tag),
+                msg.payload.clone(),
+                msg.arrival,
+            );
+        }
+        self.comm.credit_overlap(self.posted_at, msg.arrival);
+        self.comm.clock().observe_arrival(msg.arrival);
+        msg.payload
+    }
+}
+
+/// In-flight split-phase ring allgather (see [`Group::iallgather`]).
+#[must_use = "a split-phase collective must be waited"]
+pub struct AllgatherRequest<'a, S: Scalar> {
+    comm: &'a Comm<S>,
+    ranks: Rc<[usize]>,
+    me: usize,
+    tag: u32,
+    blocks: Vec<Option<Vec<S>>>,
+    posted_at: f64,
+    done: Cell<bool>,
+}
+
+impl<S: Scalar> Drop for AllgatherRequest<'_, S> {
+    fn drop(&mut self) {
+        if !self.done.get() {
+            self.comm.req_close();
+        }
+    }
+}
+
+impl<S: Scalar> AllgatherRequest<'_, S> {
+    /// Complete the ring: drain the remaining rounds (forwards stamped from
+    /// each arrival), charge only the uncovered latency of the last hop,
+    /// and return all contributions indexed by group rank.
+    pub fn wait(mut self) -> Vec<Vec<S>> {
+        self.done.set(true);
+        self.comm.req_close();
+        let p = self.ranks.len();
+        let me = self.me;
+        let next = (me + 1) % p;
+        let prev = (me + p - 1) % p;
+        let mut last_arrival = self.posted_at;
+        for r in 0..p.saturating_sub(1) {
+            let recv_origin = (me + p - r % p + p - 1) % p;
+            let msg = self.comm.take_matching(self.ranks[prev], Tag::AllGather(self.tag));
+            last_arrival = last_arrival.max(msg.arrival);
+            if r + 1 < p - 1 {
+                // This block is what the ring sends next round — forward it
+                // the moment it landed, not when this wait ran.
+                self.comm.post_at(
+                    self.ranks[next],
+                    Tag::AllGather(self.tag),
+                    msg.payload.clone(),
+                    msg.arrival,
+                );
+            }
+            self.blocks[recv_origin] = Some(msg.payload.into_data());
+        }
+        self.comm.credit_overlap(self.posted_at, last_arrival);
+        self.comm.clock().observe_arrival(last_arrival);
+        let blocks = std::mem::take(&mut self.blocks);
+        blocks.into_iter().map(|b| b.expect("ring allgather complete")).collect()
+    }
+}
+
+/// In-flight split-phase allreduce (see [`Group::iallreduce_vec`]).
+#[must_use = "a split-phase collective must be waited"]
+pub struct AllreduceRequest<'a, S: Scalar> {
+    comm: &'a Comm<S>,
+    ranks: Rc<[usize]>,
+    me: usize,
+    tag: u32,
+    op: ReduceOp,
+    mine: Option<Vec<S>>,
+    posted_at: f64,
+    done: Cell<bool>,
+}
+
+impl<S: Scalar> Drop for AllreduceRequest<'_, S> {
+    fn drop(&mut self) {
+        if !self.done.get() {
+            self.comm.req_close();
+        }
+    }
+}
+
+impl<S: Scalar> AllreduceRequest<'_, S> {
+    /// Complete the reduction: run the reduce-to-0 tree and the down
+    /// broadcast with availability stamps (each edge leaves the instant its
+    /// inputs exist), charge only the latency compute did not cover, and
+    /// return the reduced vector.
+    pub fn wait(mut self) -> Vec<S> {
+        self.done.set(true);
+        self.comm.req_close();
+        let p = self.ranks.len();
+        let me = self.me;
+        let mut acc = self.mine.take().expect("allreduce contribution");
+        if p == 1 {
+            return acc;
+        }
+        // --- up phase: binomial reduce to group rank 0, stamped -----------
+        // `avail` is when this rank's partial sum exists: its own post time,
+        // pushed later by every child arrival it folds in.
+        let mut avail = self.posted_at;
+        let mut mask = 1usize;
+        let mut sent = false;
+        while mask < p && !sent {
+            if me & mask == 0 {
+                let peer = me | mask;
+                if peer < p {
+                    let msg = self.comm.take_matching(self.ranks[peer], Tag::Reduce(self.tag));
+                    avail = avail.max(msg.arrival);
+                    self.op.combine_vec(&mut acc, &msg.payload.into_data());
+                }
+            } else {
+                let dst = me & !mask;
+                self.comm.post_at(
+                    self.ranks[dst],
+                    Tag::Reduce(self.tag),
+                    Payload::Data(acc.clone()),
+                    avail,
+                );
+                sent = true;
+            }
+            mask <<= 1;
+        }
+        // --- down phase: binomial broadcast from 0, stamped ----------------
+        // (root 0, so tree-relative rank == group rank and children are
+        // absolute; same edge enumeration as every other broadcast path.)
+        let final_arrival;
+        if me == 0 {
+            final_arrival = avail;
+            for child in bcast_children(0, p, 0) {
+                self.comm.post_at(
+                    self.ranks[child],
+                    Tag::Bcast(self.tag),
+                    Payload::Data(acc.clone()),
+                    avail,
+                );
+            }
+        } else {
+            let recv_mask = bcast_recv_mask(me, p);
+            let src = me - recv_mask;
+            let msg = self.comm.take_matching(self.ranks[src], Tag::Bcast(self.tag));
+            final_arrival = msg.arrival;
+            for child in bcast_children(me, p, recv_mask) {
+                self.comm.post_at(
+                    self.ranks[child],
+                    Tag::Bcast(self.tag),
+                    msg.payload.clone(),
+                    msg.arrival,
+                );
+            }
+            acc = msg.payload.into_data();
+        }
+        self.comm.credit_overlap(self.posted_at, final_arrival);
+        self.comm.clock().observe_arrival(final_arrival);
+        acc
     }
 }
 
@@ -396,6 +740,99 @@ mod tests {
         });
         for t in &out {
             assert!(*t >= 1.0, "barrier must not complete before slowest rank: {out:?}");
+        }
+    }
+
+    #[test]
+    fn ibcast_matches_bcast_on_all_sizes_and_roots() {
+        for p in [1usize, 2, 3, 4, 5, 8] {
+            for root in 0..p {
+                let out = run(p, move |comm| {
+                    let g = comm.world();
+                    let data = if comm.rank() == root {
+                        Some(Payload::Data(vec![root as f64, 42.0]))
+                    } else {
+                        None
+                    };
+                    g.ibcast(root, 11, data).wait().into_data()
+                });
+                for v in out {
+                    assert_eq!(v, vec![root as f64, 42.0], "p={p} root={root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn iallgather_matches_allgather() {
+        for p in [1usize, 2, 3, 5] {
+            let out = run(p, move |comm| {
+                let g = comm.world();
+                let mine = vec![comm.rank() as f64; comm.rank() + 1];
+                g.iallgather(12, mine).wait()
+            });
+            for blocks in out {
+                for (r, b) in blocks.iter().enumerate() {
+                    assert_eq!(b, &vec![r as f64; r + 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn iallreduce_bit_identical_to_blocking() {
+        // Same tree, same combine order: the split-phase sum must be
+        // *bit-identical* to the blocking one (solver reproducibility).
+        for p in [1usize, 2, 3, 4, 6, 7, 8] {
+            let out = run(p, move |comm| {
+                let g = comm.world();
+                let mine = vec![
+                    (comm.rank() as f64 * 0.1).sin(),
+                    1.0 / (comm.rank() as f64 + 3.0),
+                ];
+                let blocking = g.allreduce_vec(13, mine.clone(), ReduceOp::Sum);
+                let split = g.iallreduce_vec(14, mine, ReduceOp::Sum).wait();
+                (blocking, split)
+            });
+            for (blocking, split) in out {
+                assert_eq!(blocking, split, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn unwaited_collective_requests_still_close_the_counter() {
+        // Dropping a request unwaited (e.g. an abandoned lookahead panel on
+        // an error return) must balance the outstanding-request counter.
+        let out = run(1, |comm| {
+            for _ in 0..3 {
+                let _r = comm.world().iallreduce_vec(99, vec![1.0], ReduceOp::Sum);
+            }
+            comm.stats().max_outstanding_reqs()
+        });
+        assert_eq!(out[0], 1, "sequential dropped requests must not stack");
+    }
+
+    #[test]
+    fn split_phase_collectives_hide_latency_behind_compute() {
+        // Every rank starts an allreduce, computes for longer than the
+        // whole tree takes, then waits: the wait must be (nearly) free and
+        // the saving recorded, while a blocking allreduce at the same spot
+        // charges the full tree latency on at least the leaf ranks.
+        let net = NetworkModel::gigabit_ethernet();
+        let compute = 1.0; // far above any alpha*log(p)
+        let out = World::run::<f64, _, _>(8, net, move |comm| {
+            let g = comm.world();
+            let req = g.iallreduce_vec(15, vec![comm.rank() as f64], ReduceOp::Sum);
+            comm.clock().advance_compute(compute);
+            let s = req.wait();
+            (s[0], comm.clock().comm_wait_secs(), comm.stats().wait_saved_secs())
+        });
+        let want: f64 = (0..8).map(|r| r as f64).sum();
+        for (s, wait, saved) in out {
+            assert_eq!(s, want);
+            assert!(wait < 1e-3, "overlapped wait must be tiny: {wait}");
+            assert!(saved > 0.0, "hidden latency must be recorded");
         }
     }
 

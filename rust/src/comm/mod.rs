@@ -16,6 +16,18 @@
 //!
 //! Payloads really move between ranks, so every distributed algorithm is
 //! genuinely message-passing; the virtual clock is bookkeeping on the side.
+//!
+//! Communication comes in two flavours (DESIGN.md §11):
+//!
+//! * **blocking** — `send`/`recv` and the plain collectives charge the full
+//!   transfer to the caller's compute timeline, exactly as before;
+//! * **split-phase** — [`Comm::isend`]/[`Comm::irecv`] and the
+//!   `i`-collectives ([`transport::Group::ibcast`] and friends) return
+//!   request handles; the transfer progresses on the rank's *network*
+//!   timeline while the caller computes, and `wait` charges only the
+//!   latency compute did not cover.  The hot paths (pipelined SUMMA,
+//!   lookahead LU/Cholesky, split-phase `pspmv`, pipelined CG) are built on
+//!   these.
 
 pub mod clock;
 pub mod collectives;
@@ -26,5 +38,5 @@ pub mod transport;
 pub use clock::VClock;
 pub use message::{Payload, Tag};
 pub use model::NetworkModel;
-pub use collectives::ReduceOp;
-pub use transport::{Comm, CommStats, Group, World};
+pub use collectives::{AllgatherRequest, AllreduceRequest, BcastRequest, ReduceOp};
+pub use transport::{Comm, CommStats, Group, RecvRequest, SendRequest, World};

@@ -11,6 +11,7 @@
 
 use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
+use std::rc::Rc;
 use std::sync::mpsc;
 
 use super::clock::VClock;
@@ -25,6 +26,9 @@ pub struct CommStats {
     msgs_sent: Cell<u64>,
     bytes_sent: Cell<u64>,
     wall_wait: Cell<f64>,
+    cur_reqs: Cell<u64>,
+    max_reqs: Cell<u64>,
+    wait_saved: Cell<f64>,
 }
 
 impl CommStats {
@@ -41,6 +45,47 @@ impl CommStats {
     /// Wall-clock seconds spent blocked in `recv`.
     pub fn wall_wait_secs(&self) -> f64 {
         self.wall_wait.get()
+    }
+
+    /// Peak number of split-phase requests (isend/irecv/collective handles)
+    /// simultaneously outstanding on this endpoint.
+    pub fn max_outstanding_reqs(&self) -> u64 {
+        self.max_reqs.get()
+    }
+
+    /// Virtual seconds of communication latency hidden by overlap: what the
+    /// blocking equivalent would have charged at post time, minus what the
+    /// split-phase `wait` actually charged.  Occupancy is credited
+    /// optimistically when posted; a blocking send that later stalls on
+    /// that queued occupancy revokes the credit, and the metrics capture
+    /// nets out any backlog still queued at snapshot time (which extends
+    /// `busy_until`, so it was not hidden either).
+    pub fn wait_saved_secs(&self) -> f64 {
+        self.wait_saved.get()
+    }
+
+    fn req_open(&self) {
+        let cur = self.cur_reqs.get() + 1;
+        self.cur_reqs.set(cur);
+        if cur > self.max_reqs.get() {
+            self.max_reqs.set(cur);
+        }
+    }
+
+    fn req_close(&self) {
+        self.cur_reqs.set(self.cur_reqs.get().saturating_sub(1));
+    }
+
+    fn add_wait_saved(&self, secs: f64) {
+        if secs > 0.0 {
+            self.wait_saved.set(self.wait_saved.get() + secs);
+        }
+    }
+
+    fn revoke_wait_saved(&self, secs: f64) {
+        if secs > 0.0 {
+            self.wait_saved.set((self.wait_saved.get() - secs).max(0.0));
+        }
     }
 }
 
@@ -93,7 +138,7 @@ impl<S: Scalar> Comm<S> {
         &self.stats
     }
 
-    /// Send `payload` to world rank `dst` under `tag`.
+    /// Send `payload` to world rank `dst` under `tag` (blocking semantics).
     ///
     /// LogGP semantics: the sender's clock advances by the NIC occupancy
     /// `beta * bytes` (back-to-back sends from one rank serialise at line
@@ -105,9 +150,50 @@ impl<S: Scalar> Comm<S> {
         let arrival = if dst == self.rank {
             self.clock.now() + self.net.local_secs(bytes)
         } else {
+            // Occupancy still queued from earlier isends is about to stall
+            // this blocking send — that part was credited as hidden at post
+            // time but is being paid after all, so revoke it.
+            let backlog = (self.clock.nic_free() - self.clock.now()).max(0.0);
+            self.stats.revoke_wait_saved(backlog);
             self.clock.advance_send(bytes as f64 * self.net.beta);
             self.clock.now() + self.net.alpha
         };
+        self.push(dst, tag, payload, arrival, bytes);
+    }
+
+    /// Split-phase send: the payload leaves immediately (channels are
+    /// buffered), the NIC occupancy is queued on the network timeline
+    /// instead of blocking the compute timeline, and the returned request
+    /// completes trivially (payloads move by value, so there is no buffer to
+    /// protect — `wait` exists for symmetry and request accounting).
+    pub fn isend(&self, dst: usize, tag: Tag, payload: Payload<S>) -> SendRequest<'_, S> {
+        self.post_at(dst, tag, payload, self.clock.now());
+        self.stats.req_open();
+        SendRequest { comm: self, done: Cell::new(false) }
+    }
+
+    /// Internal stamped send: the payload becomes available for the wire at
+    /// virtual time `available_at` (>= any earlier traffic on this NIC),
+    /// *without* advancing the sender's compute timeline.  This is how the
+    /// split-phase collectives model background progression: a forwarded
+    /// tree edge is stamped from the incoming message's arrival, as if a
+    /// progress thread had relayed it the moment it landed.
+    pub(crate) fn post_at(&self, dst: usize, tag: Tag, payload: Payload<S>, available_at: f64) {
+        assert!(dst < self.size, "send to rank {dst} of {}", self.size);
+        let bytes = payload.wire_bytes();
+        let arrival = if dst == self.rank {
+            available_at + self.net.local_secs(bytes)
+        } else {
+            let occupancy = bytes as f64 * self.net.beta;
+            // Occupancy that never blocks the compute timeline is latency
+            // hidden by overlap (a blocking send would have charged it).
+            self.stats.add_wait_saved(occupancy);
+            self.clock.nic_occupy_from(available_at, occupancy) + self.net.alpha
+        };
+        self.push(dst, tag, payload, arrival, bytes);
+    }
+
+    fn push(&self, dst: usize, tag: Tag, payload: Payload<S>, arrival: f64, bytes: usize) {
         self.stats.msgs_sent.set(self.stats.msgs_sent.get() + 1);
         self.stats.bytes_sent.set(self.stats.bytes_sent.get() + bytes as u64);
         let msg = Message { src: self.rank, tag, payload, arrival };
@@ -122,13 +208,30 @@ impl<S: Scalar> Comm<S> {
     /// Messages from `src` with other tags are buffered, preserving FIFO per
     /// tag — mirroring MPI's (source, tag) matching.
     pub fn recv(&self, src: usize, tag: Tag) -> Payload<S> {
+        let msg = self.take_matching(src, tag);
+        self.clock.observe_arrival(msg.arrival);
+        msg.payload
+    }
+
+    /// Post a split-phase receive.  The message is claimed (and the
+    /// remaining latency charged) at [`RecvRequest::wait`]; latency that
+    /// elapsed under compute performed between post and wait is recorded as
+    /// [`CommStats::wait_saved_secs`].
+    pub fn irecv(&self, src: usize, tag: Tag) -> RecvRequest<'_, S> {
+        assert!(src < self.size, "recv from rank {src} of {}", self.size);
+        self.stats.req_open();
+        RecvRequest { comm: self, src, tag, posted_at: self.clock.now(), done: Cell::new(false) }
+    }
+
+    /// Thread-blocking matching of the next `(src, tag)` message, without
+    /// touching the virtual clock — shared by the blocking and split-phase
+    /// receive paths.
+    pub(crate) fn take_matching(&self, src: usize, tag: Tag) -> Message<S> {
         assert!(src < self.size, "recv from rank {src} of {}", self.size);
         let mut rx = self.receivers[src].borrow_mut();
         // Buffered first.
         if let Some(pos) = rx.pending.iter().position(|m| m.tag == tag) {
-            let msg = rx.pending.remove(pos).unwrap();
-            self.clock.observe_arrival(msg.arrival);
-            return msg.payload;
+            return rx.pending.remove(pos).unwrap();
         }
         let sw = std::time::Instant::now();
         loop {
@@ -140,11 +243,26 @@ impl<S: Scalar> Comm<S> {
                 self.stats
                     .wall_wait
                     .set(self.stats.wall_wait.get() + sw.elapsed().as_secs_f64());
-                self.clock.observe_arrival(msg.arrival);
-                return msg.payload;
+                return msg;
             }
             rx.pending.push_back(msg);
         }
+    }
+
+    /// Record how much latency a split-phase wait hid: the blocking
+    /// equivalent posted at `posted_at` would have charged up to `arrival`;
+    /// the overlapped wait at `now` only charged the remainder.
+    pub(crate) fn credit_overlap(&self, posted_at: f64, arrival: f64) {
+        let now = self.clock.now();
+        self.stats.add_wait_saved(arrival.min(now) - posted_at);
+    }
+
+    pub(crate) fn req_open(&self) {
+        self.stats.req_open();
+    }
+
+    pub(crate) fn req_close(&self) {
+        self.stats.req_close();
     }
 
     /// A sub-communicator over `ranks` (world numbering).  This rank must be
@@ -155,19 +273,88 @@ impl<S: Scalar> Comm<S> {
             .iter()
             .position(|&r| r == self.rank)
             .unwrap_or_else(|| panic!("rank {} not in group {ranks:?}", self.rank));
-        Group { comm: self, ranks: ranks.to_vec(), me }
+        Group { comm: self, ranks: Rc::from(ranks), me }
     }
 
     /// The full world as a [`Group`].
     pub fn world(&self) -> Group<'_, S> {
-        Group { comm: self, ranks: (0..self.size).collect(), me: self.rank }
+        Group { comm: self, ranks: (0..self.size).collect::<Vec<_>>().into(), me: self.rank }
+    }
+}
+
+/// Handle of a split-phase send.  Completion is trivial (payloads move by
+/// value), but waiting (or dropping) the handle closes the request for the
+/// [`CommStats::max_outstanding_reqs`] accounting.
+#[must_use = "split-phase requests should be waited"]
+pub struct SendRequest<'a, S: Scalar> {
+    comm: &'a Comm<S>,
+    done: Cell<bool>,
+}
+
+impl<S: Scalar> SendRequest<'_, S> {
+    /// Complete the send (free in virtual time: the buffer already moved).
+    pub fn wait(self) {
+        self.done.set(true);
+        self.comm.stats.req_close();
+    }
+}
+
+impl<S: Scalar> Drop for SendRequest<'_, S> {
+    fn drop(&mut self) {
+        if !self.done.get() {
+            self.comm.stats.req_close();
+        }
+    }
+}
+
+/// Handle of a split-phase receive: claim the message with [`wait`].
+///
+/// Matching is lazy: the message is claimed at `wait`, FIFO per
+/// `(src, tag)` among whoever claims — so a *blocking* `recv` on the same
+/// pair issued between post and wait claims first (unlike MPI's
+/// posted-receive queue; don't mix the two styles on one tag).  Dropping a
+/// request without waiting leaves the message unclaimed in the channel —
+/// legal, but any later receive on the pair will match it first, so in
+/// practice every posted receive should be waited, exactly as in MPI.
+///
+/// [`wait`]: RecvRequest::wait
+#[must_use = "a posted receive must be waited"]
+pub struct RecvRequest<'a, S: Scalar> {
+    comm: &'a Comm<S>,
+    src: usize,
+    tag: Tag,
+    posted_at: f64,
+    done: Cell<bool>,
+}
+
+impl<S: Scalar> RecvRequest<'_, S> {
+    /// Block until the message lands; charge only the latency that was not
+    /// hidden by compute performed since the request was posted.
+    pub fn wait(self) -> Payload<S> {
+        let msg = self.comm.take_matching(self.src, self.tag);
+        self.comm.credit_overlap(self.posted_at, msg.arrival);
+        self.comm.clock().observe_arrival(msg.arrival);
+        self.done.set(true);
+        self.comm.stats.req_close();
+        msg.payload
+    }
+}
+
+impl<S: Scalar> Drop for RecvRequest<'_, S> {
+    fn drop(&mut self) {
+        if !self.done.get() {
+            self.comm.stats.req_close();
+        }
     }
 }
 
 /// A sub-communicator view: group-rank numbering over a subset of the world.
 pub struct Group<'a, S: Scalar> {
     pub(crate) comm: &'a Comm<S>,
-    pub(crate) ranks: Vec<usize>,
+    /// Group-to-world rank translation, shared with every split-phase
+    /// request started on this group (an `Rc` clone per request, not a
+    /// fresh `Vec` — requests are per-tile on the pipelined hot paths).
+    pub(crate) ranks: Rc<[usize]>,
     pub(crate) me: usize,
 }
 
@@ -200,6 +387,16 @@ impl<'a, S: Scalar> Group<'a, S> {
     /// Receive from a group rank.
     pub fn recv(&self, src: usize, tag: Tag) -> Payload<S> {
         self.comm.recv(self.ranks[src], tag)
+    }
+
+    /// Split-phase send to a group rank.
+    pub fn isend(&self, dst: usize, tag: Tag, payload: Payload<S>) -> SendRequest<'a, S> {
+        self.comm.isend(self.ranks[dst], tag, payload)
+    }
+
+    /// Post a split-phase receive from a group rank.
+    pub fn irecv(&self, src: usize, tag: Tag) -> RecvRequest<'a, S> {
+        self.comm.irecv(self.ranks[src], tag)
     }
 }
 
@@ -360,5 +557,119 @@ mod tests {
         World::run::<f64, _, _>(2, NetworkModel::ideal(), |comm| {
             comm.group(&[1]); // rank 0 is not a member -> panic on rank 0
         });
+    }
+
+    #[test]
+    fn isend_hides_occupancy_behind_compute() {
+        let net = NetworkModel::gigabit_ethernet();
+        let occupy = (1u64 << 20) as f64 * net.beta;
+        let results = World::run::<f32, _, _>(2, net, move |comm| {
+            if comm.rank() == 0 {
+                let req = comm.isend(1, Tag::P2p(0), Payload::Data(vec![0.0f32; 1 << 18]));
+                comm.clock().advance_compute(2.0 * occupy);
+                req.wait();
+                (comm.clock().now(), comm.clock().comm_wait_secs(), comm.stats().wait_saved_secs())
+            } else {
+                comm.recv(0, Tag::P2p(0));
+                (0.0, 0.0, 0.0)
+            }
+        });
+        let (now, wait, saved) = results[0];
+        // Compute only: the NIC serialised the megabyte in the background.
+        assert!((now - 2.0 * occupy).abs() < 1e-12, "{now} vs {}", 2.0 * occupy);
+        assert_eq!(wait, 0.0);
+        assert!((saved - occupy).abs() < 1e-12, "hidden occupancy {saved} vs {occupy}");
+    }
+
+    #[test]
+    fn blocking_send_revokes_wait_saved_for_backlog_it_pays() {
+        // isend a megabyte then immediately issue a blocking send: the
+        // queued occupancy stalls the blocking send, so it was never
+        // hidden — wait_saved must not report it.
+        let net = NetworkModel::gigabit_ethernet();
+        let occupy = (1u64 << 20) as f64 * net.beta;
+        let results = World::run::<f32, _, _>(2, net, move |comm| {
+            if comm.rank() == 0 {
+                let req = comm.isend(1, Tag::P2p(0), Payload::Data(vec![0.0f32; 1 << 18]));
+                comm.send(1, Tag::P2p(1), Payload::Scalar(1.0)); // stalls on the backlog
+                req.wait();
+                (comm.stats().wait_saved_secs(), comm.clock().comm_wait_secs())
+            } else {
+                comm.recv(0, Tag::P2p(0));
+                comm.recv(0, Tag::P2p(1));
+                (0.0, 0.0)
+            }
+        });
+        let (saved, wait) = results[0];
+        assert!(saved < 1e-12, "credit must be revoked once the backlog is paid: {saved}");
+        assert!(wait >= occupy, "the blocking send pays the queued occupancy: {wait}");
+    }
+
+    #[test]
+    fn irecv_charges_only_remaining_latency() {
+        let net = NetworkModel::gigabit_ethernet();
+        let full = net.p2p_secs(1 << 20);
+        let results = World::run::<f32, _, _>(2, net, move |comm| {
+            if comm.rank() == 0 {
+                comm.isend(1, Tag::P2p(0), Payload::Data(vec![0.0f32; 1 << 18])).wait();
+                (0.0, 0.0)
+            } else {
+                let req = comm.irecv(0, Tag::P2p(0));
+                // Compute covering half the transfer: only the rest waits.
+                comm.clock().advance_compute(full / 2.0);
+                req.wait();
+                (comm.clock().comm_wait_secs(), comm.stats().wait_saved_secs())
+            }
+        });
+        let (wait, saved) = results[1];
+        assert!((wait - full / 2.0).abs() < 1e-9, "remaining wait {wait} vs {}", full / 2.0);
+        assert!((saved - full / 2.0).abs() < 1e-9, "hidden latency {saved}");
+    }
+
+    #[test]
+    fn split_phase_matches_blocking_payloads_and_order() {
+        // Messages claim FIFO per (src, tag) at *wait* time: waits in post
+        // order see the sends in send order, and other tags stay buffered.
+        let results = World::run::<f64, _, _>(2, NetworkModel::ideal(), |comm| {
+            if comm.rank() == 0 {
+                comm.isend(1, Tag::P2p(1), Payload::Scalar(1.0)).wait();
+                comm.isend(1, Tag::P2p(2), Payload::Scalar(2.0)).wait();
+                comm.isend(1, Tag::P2p(1), Payload::Scalar(3.0)).wait();
+                0.0
+            } else {
+                let r1a = comm.irecv(0, Tag::P2p(1));
+                let r1b = comm.irecv(0, Tag::P2p(1));
+                let r2 = comm.irecv(0, Tag::P2p(2));
+                let a = r1a.wait().into_scalar();
+                let b = r1b.wait().into_scalar();
+                let c = r2.wait().into_scalar();
+                a * 100.0 + b * 10.0 + c
+            }
+        });
+        assert_eq!(results[1], 1.0 * 100.0 + 3.0 * 10.0 + 2.0);
+    }
+
+    #[test]
+    fn outstanding_requests_are_counted() {
+        let results = World::run::<f64, _, _>(2, NetworkModel::ideal(), |comm| {
+            if comm.rank() == 0 {
+                let a = comm.isend(1, Tag::P2p(0), Payload::Scalar(1.0));
+                let b = comm.isend(1, Tag::P2p(1), Payload::Scalar(2.0));
+                let c = comm.isend(1, Tag::P2p(2), Payload::Scalar(3.0));
+                a.wait();
+                b.wait();
+                c.wait();
+                comm.stats().max_outstanding_reqs()
+            } else {
+                let r0 = comm.irecv(0, Tag::P2p(0));
+                let r1 = comm.irecv(0, Tag::P2p(1));
+                r0.wait();
+                r1.wait();
+                comm.recv(0, Tag::P2p(2));
+                comm.stats().max_outstanding_reqs()
+            }
+        });
+        assert_eq!(results[0], 3);
+        assert_eq!(results[1], 2);
     }
 }

@@ -16,9 +16,14 @@
 //!   model; the **ATLAS** serial-BLAS baseline is a pure-rust blocked BLAS
 //!   ([`linalg`], [`accel::CpuEngine`]);
 //! * the **solvers** are the paper's: blocked LU with partial pivoting and
-//!   Cholesky (direct), CG / BiCG / BiCGSTAB / GMRES(m) (non-stationary
-//!   iterative), over 2-D block-cyclic distributed matrices ([`dist`],
-//!   [`pblas`], [`solvers`]);
+//!   Cholesky (direct, both with depth-1 lookahead), CG / pipelined CG /
+//!   BiCG / BiCGSTAB / GMRES(m) (non-stationary iterative), over 2-D
+//!   block-cyclic distributed matrices ([`dist`], [`pblas`], [`solvers`]);
+//! * **communication overlaps compute**: split-phase `isend`/`irecv` and
+//!   `i`-collectives with request handles, a two-timeline virtual clock
+//!   (NIC progresses during compute), pipelined SUMMA, split-phase sparse
+//!   matvec and a Ghysels-style pipelined CG — see `DESIGN.md` §11 and
+//!   `cargo bench --bench overlap`;
 //! * the iterative solvers additionally accept **sparse** operands: a
 //!   row-block-distributed CSR format ([`sparse`], [`pblas::pspmv()`]) behind
 //!   the operator-generic [`pblas::LinOp`] trait, with 2-D/3-D Poisson
@@ -36,8 +41,8 @@
 //!
 //! See `README.md` for a quickstart, `DESIGN.md` for the substitution
 //! table (what the paper ran on real hardware vs. what this repo
-//! simulates; §10 covers the sparse subsystem) and `EXPERIMENTS.md` for
-//! the regenerated Figures 3 and 4.
+//! simulates; §10 covers the sparse subsystem, §11 the split-phase comm
+//! layer) and `EXPERIMENTS.md` for the regenerated Figures 3 and 4.
 
 pub mod accel;
 pub mod bench_harness;

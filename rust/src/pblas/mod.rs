@@ -24,7 +24,7 @@ pub use linop::LinOp;
 pub use pgemm::pgemm_acc;
 pub use pgemv::{pgemv, pgemv_t};
 pub use pspmv::{pspmv, pspmv_t};
-pub use pvec::{paxpy, pcopy, pdot, pnorm2, pscal};
+pub use pvec::{paxpy, pcopy, pdot, pdot_partial, pnorm2, pscal};
 
 use std::sync::Arc;
 
@@ -40,6 +40,8 @@ pub(crate) mod tags {
     pub const PGEMM: u32 = 400;
     pub const PSPMV: u32 = 500;
     pub const PSPMV_T: u32 = 600;
+    /// Pipelined CG's fused (gamma, delta) allreduce.
+    pub const PIPECG: u32 = 700;
     pub const LU: u32 = 1_000;
     pub const CHOL: u32 = 2_000;
     pub const TRSV: u32 = 3_000;

@@ -3,63 +3,137 @@
 //! The classic algorithm: for each tile step `kk`, the owners of tile column
 //! `A(:,kk)` broadcast their tiles along process rows, the owners of tile row
 //! `B(kk,:)` broadcast along process columns, and every rank accumulates
-//! `C(i,j) += A(i,kk)·B(kk,j)` locally.  One panel in flight at a time —
-//! the bandwidth-friendly variant; the virtual clock sees `nt` rounds of
-//! `log P`-deep broadcasts, matching SUMMA's known cost shape.
+//! `C(i,j) += A(i,kk)·B(kk,j)` locally.
+//!
+//! This is the **pipelined** (double-buffered) variant: panel `kk+1`'s
+//! broadcasts are *started* (split-phase, [`crate::comm::BcastRequest`])
+//! before the rank multiplies panel `kk`, so the next panel streams through
+//! the network while the current one streams through the FPUs — the virtual
+//! clock sees `max(bcast, gemm)` per step instead of their sum (DESIGN.md
+//! §11).  Message order and numerics are identical to the one-panel-in-
+//! flight algorithm: panels are waited in `kk` order and the accumulation
+//! order is unchanged.
+//!
+//! Operands may be **rectangular**: `A` is `m x k`, `B` is `k x n`, `C` is
+//! `m x n`, all square-tiled on the same mesh with the same tile size.
+//! Edge-tile padding (identity for dense operands) is masked to zero in the
+//! broadcast copies so padded positions of `A`'s columns / `B`'s rows never
+//! pollute real entries of `C` — with a rectangular inner dimension the pad
+//! diagonal of `A`'s last tile column would otherwise multiply the pad
+//! diagonal of `B`'s last tile row straight into `C`'s real diagonal.
 
 use super::{tags, Ctx};
-use crate::comm::Payload;
+use crate::comm::{BcastRequest, Payload};
 use crate::dist::DistMatrix;
 use crate::{linalg, Scalar};
 
-/// `C += A·B`.  All three matrices must share descriptor geometry (square,
-/// same tile, same mesh).
+/// One SUMMA panel in flight: the split-phase broadcasts of `A(:,kk)` along
+/// process rows and `B(kk,:)` along process columns.
+struct PanelInFlight<'a, S: Scalar> {
+    a: Vec<BcastRequest<'a, S>>,
+    b: Vec<BcastRequest<'a, S>>,
+}
+
+impl<'a, S: Scalar> PanelInFlight<'a, S> {
+    fn wait(self) -> (Vec<Vec<S>>, Vec<Vec<S>>) {
+        let a = self.a.into_iter().map(|r| r.wait().into_data()).collect();
+        let b = self.b.into_iter().map(|r| r.wait().into_data()).collect();
+        (a, b)
+    }
+}
+
+/// Copy tile `(ti, tj)` of `m`'s descriptor with any padded rows/columns
+/// zeroed (the identity pad is a factorisation invariant, not a GEMM one).
+fn masked_tile<S: Scalar>(
+    m: &DistMatrix<S>,
+    lti: usize,
+    ltj: usize,
+    ti: usize,
+    tj: usize,
+) -> Vec<S> {
+    let d = m.desc();
+    let t = d.tile;
+    let mut out = m.tile(lti, ltj).to_vec();
+    let real_rows = d.m.saturating_sub(ti * t).min(t);
+    let real_cols = d.n.saturating_sub(tj * t).min(t);
+    if real_rows < t || real_cols < t {
+        for r in 0..t {
+            for c in 0..t {
+                if r >= real_rows || c >= real_cols {
+                    out[r * t + c] = S::zero();
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Start the split-phase broadcasts of panel `kk`.
+fn start_panel<'a, S: Scalar>(
+    ctx: &Ctx<'a, S>,
+    a: &DistMatrix<S>,
+    b: &DistMatrix<S>,
+    kk: usize,
+) -> PanelInFlight<'a, S> {
+    let mesh = ctx.mesh;
+    let shape = mesh.shape();
+    let a_owner_col = kk % shape.pc;
+    let b_owner_row = kk % shape.pr;
+    let row = mesh.row_comm();
+    let col = mesh.col_comm();
+
+    let mut a_req = Vec::with_capacity(a.local_mt());
+    for lti in 0..a.local_mt() {
+        let data = if mesh.col() == a_owner_col {
+            let ti = a.desc().global_ti(mesh.row(), lti);
+            Some(Payload::Data(masked_tile(a, lti, a.desc().local_tj(kk), ti, kk)))
+        } else {
+            None
+        };
+        a_req.push(row.ibcast(a_owner_col, tags::PGEMM, data));
+    }
+    let mut b_req = Vec::with_capacity(b.local_nt());
+    for ltj in 0..b.local_nt() {
+        let data = if mesh.row() == b_owner_row {
+            let tj = b.desc().global_tj(mesh.col(), ltj);
+            Some(Payload::Data(masked_tile(b, b.desc().local_ti(kk), ltj, kk, tj)))
+        } else {
+            None
+        };
+        b_req.push(col.ibcast(b_owner_row, tags::PGEMM + 1, data));
+    }
+    PanelInFlight { a: a_req, b: b_req }
+}
+
+/// `C += A·B` for conformable square-tiled operands: `A` is `m x k`, `B` is
+/// `k x n`, `C` is `m x n`, all with the same tile size on the same mesh.
 pub fn pgemm_acc<S: Scalar>(
     ctx: &Ctx<'_, S>,
     a: &DistMatrix<S>,
     b: &DistMatrix<S>,
     c: &mut DistMatrix<S>,
 ) {
-    let desc = *a.desc();
-    assert_eq!(&desc, b.desc(), "pgemm operand descriptors differ");
-    assert_eq!(&desc, c.desc(), "pgemm output descriptor differs");
-    assert!(desc.is_square(), "pgemm_acc requires square operands");
-    let t = desc.tile;
-    let mesh = ctx.mesh;
-    let row = mesh.row_comm();
-    let col = mesh.col_comm();
-    let nt = desc.nt();
+    let (ad, bd, cd) = (*a.desc(), *b.desc(), *c.desc());
+    assert_eq!(ad.tile, bd.tile, "pgemm operand tile sizes differ");
+    assert_eq!(ad.tile, cd.tile, "pgemm output tile size differs");
+    assert_eq!(ad.shape, bd.shape, "pgemm operand meshes differ");
+    assert_eq!(ad.shape, cd.shape, "pgemm output mesh differs");
+    assert_eq!(ad.m, cd.m, "pgemm: A rows ({}) != C rows ({})", ad.m, cd.m);
+    assert_eq!(bd.n, cd.n, "pgemm: B cols ({}) != C cols ({})", bd.n, cd.n);
+    assert_eq!(ad.n, bd.m, "pgemm: inner dimensions differ ({} vs {})", ad.n, bd.m);
+    let t = ad.tile;
+    let kt = ad.nt(); // == bd.mt(): tile steps along the inner dimension
 
+    // Double-buffer: panel kk+1 is on the wire while panel kk multiplies.
+    let mut inflight = Some(start_panel(ctx, a, b, 0));
     let mut tmp = vec![S::zero(); t * t];
-    for kk in 0..nt {
-        let a_owner_col = kk % desc.shape.pc;
-        let b_owner_row = kk % desc.shape.pr;
-
-        // A(:, kk) tiles broadcast along rows (one per owned tile row).
-        let mut a_panel: Vec<Vec<S>> = Vec::with_capacity(a.local_mt());
-        for lti in 0..a.local_mt() {
-            let data = if mesh.col() == a_owner_col {
-                Some(Payload::Data(a.tile(lti, desc.local_tj(kk)).to_vec()))
-            } else {
-                None
-            };
-            let tile = row.bcast(a_owner_col, tags::PGEMM, data).into_data();
-            a_panel.push(tile);
+    for kk in 0..kt {
+        let (a_panel, b_panel) = inflight.take().expect("panel in flight").wait();
+        if kk + 1 < kt {
+            inflight = Some(start_panel(ctx, a, b, kk + 1));
         }
 
-        // B(kk, :) tiles broadcast along columns (one per owned tile col).
-        let mut b_panel: Vec<Vec<S>> = Vec::with_capacity(b.local_nt());
-        for ltj in 0..b.local_nt() {
-            let data = if mesh.row() == b_owner_row {
-                Some(Payload::Data(b.tile(desc.local_ti(kk), ltj).to_vec()))
-            } else {
-                None
-            };
-            let tile = col.bcast(b_owner_row, tags::PGEMM + 1, data).into_data();
-            b_panel.push(tile);
-        }
-
-        // Local accumulation.
+        // Local accumulation (order identical to the blocking variant).
         for lti in 0..c.local_mt() {
             for ltj in 0..c.local_nt() {
                 let cost =
@@ -119,6 +193,63 @@ mod tests {
     }
 
     #[test]
+    fn summa_rectangular_with_padding_matches_serial() {
+        // m x k * k x n with every dimension padding differently; the inner
+        // dimension's pad identity must NOT leak into C's real diagonal.
+        let (m, k, n) = (10usize, 6usize, 14usize);
+        let tile = 4usize;
+        for (pr, pc) in [(1, 1), (2, 2), (2, 3), (3, 2)] {
+            let out = World::run::<f64, _, _>(pr * pc, NetworkModel::ideal(), move |comm| {
+                let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+                let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(tile)));
+                let da = Descriptor::new(m, k, tile, mesh.shape());
+                let db = Descriptor::new(k, n, tile, mesh.shape());
+                let dc = Descriptor::new(m, n, tile, mesh.shape());
+                let a = DistMatrix::from_fn(da, mesh.row(), mesh.col(), aval);
+                let b = DistMatrix::from_fn(db, mesh.row(), mesh.col(), bval);
+                let mut c = DistMatrix::zeros(dc, mesh.row(), mesh.col());
+                pgemm_acc(&ctx, &a, &b, &mut c);
+                gather_matrix(&mesh, &c)
+            });
+            let got = out[0].as_ref().unwrap();
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f64 = (0..k).map(|kk| aval(i, kk) * bval(kk, j)).sum();
+                    assert!(
+                        (got[i * n + j] - want).abs() < 1e-10,
+                        "{pr}x{pc} ({i},{j}): {} vs {want}",
+                        got[i * n + j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic] // "inner dimensions differ", surfaced through the rank thread join
+    fn summa_rejects_nonconformable() {
+        let out = World::run::<f64, _, _>(1, NetworkModel::ideal(), |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(1, 1));
+            let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(4)));
+            let a = DistMatrix::from_fn(
+                Descriptor::new(8, 4, 4, mesh.shape()),
+                0,
+                0,
+                aval,
+            );
+            let b = DistMatrix::from_fn(
+                Descriptor::new(8, 8, 4, mesh.shape()),
+                0,
+                0,
+                bval,
+            );
+            let mut c = DistMatrix::zeros(Descriptor::new(8, 8, 4, mesh.shape()), 0, 0);
+            pgemm_acc(&ctx, &a, &b, &mut c);
+        });
+        drop(out);
+    }
+
+    #[test]
     fn summa_accumulates_into_c() {
         let n = 8usize;
         let out = World::run::<f64, _, _>(4, NetworkModel::ideal(), move |comm| {
@@ -139,5 +270,26 @@ mod tests {
                 assert!((got[i * n + j] - (10.0 + aval(i, j))).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn pipelining_overlaps_panel_broadcasts() {
+        // On a gigabit network the double-buffered SUMMA must spend less
+        // virtual time blocked than a serialised panel stream would: with
+        // prefetch, some latency is recorded as hidden.
+        let out = World::run::<f64, _, _>(4, NetworkModel::gigabit_ethernet(), |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(2, 2));
+            let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(8)));
+            let desc = Descriptor::new(64, 64, 8, mesh.shape());
+            let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), aval);
+            let b = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), bval);
+            let mut c = DistMatrix::zeros(desc, mesh.row(), mesh.col());
+            pgemm_acc(&ctx, &a, &b, &mut c);
+            comm.stats().wait_saved_secs()
+        });
+        assert!(
+            out.iter().any(|&s| s > 0.0),
+            "prefetch must hide some panel latency: {out:?}"
+        );
     }
 }

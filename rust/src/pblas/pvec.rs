@@ -13,6 +13,16 @@ use crate::Scalar;
 
 /// Distributed inner product `x . y` (result replicated on every rank).
 pub fn pdot<S: Scalar>(ctx: &Ctx<'_, S>, x: &DistVector<S>, y: &DistVector<S>) -> S {
+    let partial = pdot_partial(ctx, x, y);
+    let col = ctx.mesh.col_comm();
+    col.allreduce_scalar(tags::PDOT, partial, ReduceOp::Sum)
+}
+
+/// This rank's local contribution to `x . y` (engine-charged, no
+/// communication).  The split-phase solvers fuse several partials into one
+/// overlapped allreduce instead of paying one blocking reduction per dot —
+/// the pipelined-CG pattern (`DESIGN.md` §11).
+pub fn pdot_partial<S: Scalar>(ctx: &Ctx<'_, S>, x: &DistVector<S>, y: &DistVector<S>) -> S {
     assert_eq!(x.desc(), y.desc(), "pdot descriptor mismatch");
     let mut partial = S::zero();
     for l in 0..x.local_blocks() {
@@ -20,8 +30,7 @@ pub fn pdot<S: Scalar>(ctx: &Ctx<'_, S>, x: &DistVector<S>, y: &DistVector<S>) -
         partial += d;
         ctx.charge(cost);
     }
-    let col = ctx.mesh.col_comm();
-    col.allreduce_scalar(tags::PDOT, partial, ReduceOp::Sum)
+    partial
 }
 
 /// Distributed 2-norm.

@@ -1,22 +1,83 @@
-//! Distributed right-looking block Cholesky (the paper's SPD direct method).
+//! Distributed right-looking block Cholesky (the paper's SPD direct method)
+//! with **depth-1 lookahead**.
 //!
-//! Per tile step `k`:
-//! 1. the diagonal owner factors its tile with the engine's `potrf` and
-//!    broadcasts L11 down its process column;
-//! 2. that column's owners of tile rows i > k solve
-//!    `L(i,k) · L11^T = A(i,k)` with the engine's `trsm_rlt`;
-//! 3. the L(·,k) tiles broadcast along process rows; each owned *column*
-//!    block L(j,k) then broadcasts down its process column;
-//! 4. trailing update on the lower half: `A(i,j) -= L(i,k) · L(j,k)^T`
-//!    (i ≥ j > k) via the engine's fused `gemm_nt_update`.
+//! The classic step `k`: factor the diagonal tile (`potrf`), solve the
+//! panel (`trsm_rlt`), broadcast the panel tiles along process rows (3a)
+//! and down process columns (3b), then apply the symmetric trailing update
+//! `A(i,j) -= L(i,k) · L(j,k)^T` (i ≥ j > k).
+//!
+//! The lookahead schedule performs panel `k+1`'s work *inside* step `k`:
+//! after panel `k`'s broadcasts land, tile column `k+1` is updated first,
+//! panel `k+1` is factored immediately (potrf + trsm on its process
+//! column), and its row broadcasts are started split-phase
+//! ([`crate::comm::BcastRequest`]) — they then ride the network while every
+//! rank runs step `k`'s remaining trailing update (`j > k+1`), so the panel
+//! critical path is hidden behind the BLAS-3 stream (DESIGN.md §11).  The
+//! operation set and operands are identical to the classic schedule, so the
+//! factor is bit-for-bit the same.
 //!
 //! Only the lower triangle is referenced or updated; the strict upper
 //! triangle of the shard is left stale.
 
-use crate::comm::Payload;
+use crate::comm::{BcastRequest, Payload};
 use crate::dist::DistMatrix;
 use crate::pblas::{tags, Ctx};
 use crate::{Result, Scalar};
+
+/// Factor panel `k` (its column must already hold all updates through step
+/// `k-1`): potrf the diagonal tile, broadcast L11 down the panel's process
+/// column, solve the sub-diagonal tiles, and start the split-phase row
+/// broadcasts of the finished L(·,k) tiles.
+fn factor_panel<'a, S: Scalar>(
+    ctx: &Ctx<'a, S>,
+    a: &mut DistMatrix<S>,
+    k: usize,
+) -> Result<Vec<Option<BcastRequest<'a, S>>>> {
+    let desc = *a.desc();
+    let mesh = ctx.mesh;
+    let (pr, pc) = (desc.shape.pr, desc.shape.pc);
+    let ck = k % pc;
+    let rk = k % pr;
+
+    // --- factor diagonal tile, broadcast L11 down the column, panel solve --
+    if mesh.col() == ck {
+        let col = mesh.col_comm();
+        let payload = if mesh.row() == rk {
+            let tile = a.global_tile_mut(k, k);
+            let cost = ctx.engine.potrf(tile)?;
+            ctx.charge(cost);
+            Some(Payload::Data(tile.clone()))
+        } else {
+            None
+        };
+        let l11 = col.bcast(rk, tags::CHOL, payload).into_data();
+        for lti in 0..a.local_mt() {
+            let ti = desc.global_ti(mesh.row(), lti);
+            if ti > k {
+                let cost = ctx.engine.trsm_rlt(a.tile_mut(lti, desc.local_tj(k)), &l11)?;
+                ctx.charge(cost);
+            }
+        }
+    }
+
+    // --- start the split-phase row broadcasts of L(i,k), i > k -------------
+    let row = mesh.row_comm();
+    let mut l_rows: Vec<Option<BcastRequest<'a, S>>> = Vec::with_capacity(a.local_mt());
+    for lti in 0..a.local_mt() {
+        let ti = desc.global_ti(mesh.row(), lti);
+        if ti > k {
+            let data = if mesh.col() == ck {
+                Some(Payload::Data(a.tile(lti, desc.local_tj(k)).to_vec()))
+            } else {
+                None
+            };
+            l_rows.push(Some(row.ibcast(ck, tags::CHOL + 1, data)));
+        } else {
+            l_rows.push(None);
+        }
+    }
+    Ok(l_rows)
+}
 
 /// In-place distributed Cholesky: on return the lower triangle of `a` holds
 /// L (with its diagonal); the strict upper triangle is unspecified.
@@ -25,68 +86,37 @@ pub fn pchol_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Resul
     assert!(desc.is_square(), "pchol_factor requires a square matrix");
     let kt = desc.mt();
     let mesh = ctx.mesh;
-    let (pr, pc) = (desc.shape.pr, desc.shape.pc);
+    let pr = desc.shape.pr;
+
+    // Prologue: factor panel 0; its row broadcasts go on the wire now.
+    let mut pending = Some(factor_panel(ctx, a, 0)?);
 
     for k in 0..kt {
-        let ck = k % pc;
-        let rk = k % pr;
+        let inflight = pending.take().expect("panel in flight");
 
-        // --- 1. factor diagonal tile, broadcast L11 down the column -------
-        let col = mesh.col_comm();
-        let mut l11: Option<Vec<S>> = None;
-        if mesh.col() == ck {
-            let payload = if mesh.row() == rk {
-                let tile = a.global_tile_mut(k, k);
-                let cost = ctx.engine.potrf(tile)?;
-                ctx.charge(cost);
-                Some(Payload::Data(tile.clone()))
-            } else {
-                None
-            };
-            l11 = Some(col.bcast(rk, tags::CHOL, payload).into_data());
-        }
-
-        // --- 2. panel solve L(i,k) = A(i,k) L11^{-T} -----------------------
-        if mesh.col() == ck {
-            let l11 = l11.as_ref().expect("column ck has L11");
-            for lti in 0..a.local_mt() {
-                let ti = desc.global_ti(mesh.row(), lti);
-                if ti > k {
-                    let cost = ctx.engine.trsm_rlt(a.tile_mut(lti, desc.local_tj(k)), l11)?;
-                    ctx.charge(cost);
-                }
+        // --- 1. complete the L(i,k) row broadcasts -------------------------
+        let mut l_rows: Vec<Option<Vec<S>>> = vec![None; a.local_mt()];
+        for (lti, req) in inflight.into_iter().enumerate() {
+            if let Some(req) = req {
+                l_rows[lti] = Some(req.wait().into_data());
             }
         }
 
         if k + 1 == kt {
-            break;
+            break; // last panel: no trailing tiles, nothing left in flight
         }
 
-        // --- 3a. broadcast L(i,k) along process rows ------------------------
-        let row = mesh.row_comm();
-        let mut l_rows: Vec<Option<Vec<S>>> = vec![None; a.local_mt()];
-        for lti in 0..a.local_mt() {
-            let ti = desc.global_ti(mesh.row(), lti);
-            if ti > k {
-                let data = if mesh.col() == ck {
-                    Some(Payload::Data(a.tile(lti, desc.local_tj(k)).to_vec()))
-                } else {
-                    None
-                };
-                l_rows[lti] = Some(row.bcast(ck, tags::CHOL + 1, data).into_data());
-            }
-        }
-
-        // --- 3b. broadcast L(j,k) down each owned process column -----------
-        // After 3a, rank (j % pr, c) holds L(j,k) for every owned row j; the
-        // tile (i,j) owners in column c sit in the same process column.
+        // --- 2. broadcast L(j,k) down each owned process column ------------
+        // After step 1, rank (j % pr, c) holds L(j,k) for every owned row j;
+        // the tile (i,j) owners in column c sit in the same process column.
+        let col = mesh.col_comm();
         let mut l_cols: Vec<Option<Vec<S>>> = vec![None; a.local_nt()];
         for ltj in 0..a.local_nt() {
             let tj = desc.global_tj(mesh.col(), ltj);
             if tj > k {
                 let root = tj % pr;
                 let data = if mesh.row() == root {
-                    // From 3a: this rank's row-broadcast copy of L(tj, k).
+                    // From step 1: this rank's row-broadcast copy of L(tj, k).
                     let lti = desc.local_ti(tj);
                     Some(Payload::Data(
                         l_rows[lti].as_ref().expect("row tj broadcast").clone(),
@@ -98,7 +128,24 @@ pub fn pchol_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Resul
             }
         }
 
-        // --- 4. trailing update, lower half only ----------------------------
+        // --- 3. lookahead: update tile column k+1 first, then factor it ----
+        let next_ck = (k + 1) % desc.shape.pc;
+        if mesh.col() == next_ck {
+            let ltj = desc.local_tj(k + 1);
+            let l_jk = l_cols[ltj].as_ref().expect("L col tile for lookahead column");
+            for lti in 0..a.local_mt() {
+                let ti = desc.global_ti(mesh.row(), lti);
+                if ti > k {
+                    let l_ik = l_rows[lti].as_ref().expect("L row tile");
+                    let cost = ctx.engine.gemm_nt_update(a.tile_mut(lti, ltj), l_ik, l_jk)?;
+                    ctx.charge(cost);
+                }
+            }
+        }
+        pending = Some(factor_panel(ctx, a, k + 1)?);
+
+        // --- 4. trailing update, lower half, remaining columns (j > k+1) ---
+        // Hides panel k+1's potrf/trsm critical path and its broadcasts.
         for lti in 0..a.local_mt() {
             let ti = desc.global_ti(mesh.row(), lti);
             if ti <= k {
@@ -107,8 +154,8 @@ pub fn pchol_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Resul
             let l_ik = l_rows[lti].as_ref().expect("L row tile");
             for ltj in 0..a.local_nt() {
                 let tj = desc.global_tj(mesh.col(), ltj);
-                if tj <= k || tj > ti {
-                    continue; // lower half only (i >= j)
+                if tj <= k + 1 || tj > ti {
+                    continue; // lower half only (i >= j); k+1 already done
                 }
                 let l_jk = l_cols[ltj].as_ref().expect("L col tile");
                 let cost = ctx.engine.gemm_nt_update(a.tile_mut(lti, ltj), l_ik, l_jk)?;

@@ -1,33 +1,43 @@
 //! Distributed right-looking block LU with partial pivoting — the paper's
 //! primary direct method ("the most important computational step being the
-//! matrix factorization", §2).
+//! matrix factorization", §2) — with **depth-1 lookahead**.
 //!
-//! Per tile step `k` (panel = tile column k, tile rows k..KT):
+//! Per tile step `k` (panel = tile column k, tile rows k..KT), the panel
+//! work of step `k+1` is performed *inside* step `k`, between the panel-k
+//! column update and the trailing update, so the panel critical path
+//! (gather → host `getrf` → scatter → pivot broadcast → L21 broadcasts)
+//! rides the network and the diagonal owner's CPU while every other rank is
+//! busy with step `k`'s rank-T update (the HPL-style lookahead; DESIGN.md
+//! §11).  Concretely, one iteration runs:
 //!
-//! 1. **panel gather** — the panel's tiles (spread over the process rows of
-//!    process column `k mod pc`) gather to the diagonal owner, which factors
-//!    them with host-side partial-pivoted `getrf` (the MAGMA-style split the
-//!    paper also uses: pivot search on CPU, BLAS-3 updates on the device);
-//! 2. **scatter + pivot broadcast** — factored tiles return to their owners;
-//!    the pivot map broadcasts to the whole mesh;
-//! 3. **row swaps** — every column of the matrix outside the panel applies
-//!    the same interchanges (the distributed `laswp`), exchanging row
-//!    segments between the two owning process rows;
-//! 4. **U12 row** — the diagonal tile broadcasts along its process row; the
-//!    owners of tile row k solve `L11 · U12 = A(k, j)` with the engine's
-//!    `trsm_llu`;
-//! 5. **panel broadcasts** — L21 tiles broadcast along process rows, U12
-//!    tiles along process columns;
-//! 6. **trailing update** — every rank runs the delayed rank-T update
-//!    `A(i,j) -= L(i,k) · U(k,j)` on its owned trailing tiles via the
-//!    engine's fused `gemm_update` (the BLAS-3 hot spot the paper offloads
-//!    to CUBLAS).
+//! 1. **pivot wait** — complete the split-phase pivot broadcast started
+//!    when panel `k` was factored (during step `k-1`'s trailing update);
+//! 2. **row swaps** — every column outside the panel applies the
+//!    interchanges (the distributed `laswp`);
+//! 3. **U12 row** — the diagonal tile broadcasts along its process row; the
+//!    owners of tile row k solve `L11 · U12 = A(k, j)` with `trsm_llu`,
+//!    then U12 tiles broadcast along process columns;
+//! 4. **L21 wait** — complete the split-phase L21 row broadcasts (also in
+//!    flight since panel `k` was factored);
+//! 5. **lookahead** — update *only* tile column `k+1` with panel `k`, then
+//!    factor panel `k+1` (gather → `getrf` → scatter) and put its pivot
+//!    broadcast and L21 row broadcasts on the wire, split-phase;
+//! 6. **trailing update** — the delayed rank-T update
+//!    `A(i,j) -= L(i,k) · U(k,j)` on the remaining trailing tiles
+//!    (`j > k+1`) via the engine's fused `gemm_update` — the BLAS-3 hot
+//!    spot that now hides step `k+1`'s panel path.
+//!
+//! The operation *set* (and therefore every floating-point result) is
+//! identical to the non-lookahead schedule: each tile still receives its
+//! updates in ascending `k` order, swaps are applied after the update of
+//! the step that produced them and before the next one, and the panel
+//! factorisation sees exactly the same bytes.
 //!
 //! Padding: the panel's *real* sub-block (`getrf_lda`) is factored so the
 //! identity padding of the last tile row/column is preserved — the padded
 //! factorisation embeds the original exactly (see `dist::descriptor`).
 
-use crate::comm::{Payload, Tag};
+use crate::comm::{BcastRequest, Payload, Tag};
 use crate::dist::DistMatrix;
 use crate::pblas::{tags, Ctx};
 use crate::{linalg, Error, Result, Scalar};
@@ -53,6 +63,140 @@ impl PivotMap {
     }
 }
 
+/// Split-phase state of one factored panel: its pivot broadcast and its L21
+/// row broadcasts, all started the moment the panel left the host `getrf`.
+struct PanelInFlight<'a, S: Scalar> {
+    /// World broadcast of the panel's global pivot rows.
+    piv: BcastRequest<'a, S>,
+    /// Per local tile row: the row-communicator broadcast of L(ti, k)
+    /// (`None` for tile rows at or above the panel).
+    l21: Vec<Option<BcastRequest<'a, S>>>,
+}
+
+/// Gather panel `k` to the diagonal owner, factor it on the host, scatter
+/// the factored tiles back, and start the split-phase pivot + L21
+/// broadcasts.  Mirrors steps 1–3 of the classic schedule; the broadcasts
+/// ride the network while the caller returns to trailing-update work.
+fn factor_panel<'a, S: Scalar>(
+    ctx: &Ctx<'a, S>,
+    a: &mut DistMatrix<S>,
+    k: usize,
+) -> Result<PanelInFlight<'a, S>> {
+    let desc = *a.desc();
+    let t = desc.tile;
+    let kt = desc.mt();
+    let mesh = ctx.mesh;
+    let comm = mesh.comm();
+    let (pr, pc) = (desc.shape.pr, desc.shape.pc);
+    let ck = k % pc;
+    let rk = k % pr;
+    let diag_rank = desc.shape.rank_at(rk, ck);
+    let in_panel_col = mesh.col() == ck;
+    let panel_tiles = kt - k;
+
+    // Real (unpadded) extent of the panel.
+    let m_real = desc.m - k * t; // rows below the panel top
+    let n_real = m_real.min(t); // panel width
+
+    // --- gather panel to the diagonal owner --------------------------------
+    let panel_tag = |ti: usize| Tag::P2p(tags::LU + 10 + ti as u32);
+    let mut panel: Vec<S> = Vec::new();
+    if comm.rank() == diag_rank {
+        panel = vec![S::zero(); panel_tiles * t * t];
+        for ti in k..kt {
+            let src = desc.shape.rank_at(ti % pr, ck);
+            let dst_off = (ti - k) * t * t;
+            if src == comm.rank() {
+                panel[dst_off..dst_off + t * t].copy_from_slice(a.global_tile(ti, k));
+            } else {
+                let data = comm.recv(src, panel_tag(ti)).into_data();
+                panel[dst_off..dst_off + t * t].copy_from_slice(&data);
+            }
+        }
+    } else if in_panel_col {
+        for ti in k..kt {
+            if a.owns_tile_row(ti) {
+                comm.isend(diag_rank, panel_tag(ti), Payload::Data(a.global_tile(ti, k).to_vec()))
+                    .wait();
+            }
+        }
+    }
+
+    // --- factor the real sub-panel on the diagonal owner -------------------
+    // (host-side: pivot search is latency-bound, kept on CPU as in
+    // MAGMA-style hybrid factorisations; cost charged at CPU rates.)
+    let mut piv_global: Vec<i64> = Vec::new();
+    if comm.rank() == diag_rank {
+        let piv = linalg::getrf_lda(m_real.min(panel_tiles * t), n_real, t, &mut panel)
+            .map_err(|e| match e {
+                Error::Breakdown { detail, .. } => Error::Breakdown {
+                    method: "plu_factor",
+                    detail: format!("panel {k}: {detail}"),
+                },
+                other => other,
+            })?;
+        // Panel-relative pivot row -> global row.
+        piv_global = piv.iter().map(|&p| (k * t + p) as i64).collect();
+        // Charge the panel factorisation at serial-CPU rates:
+        // ~ m_real * n_real^2 flops.
+        let flops = (m_real as u64) * (n_real as u64) * (n_real as u64);
+        let profile = crate::accel::ComputeProfile::q6600_atlas();
+        ctx.charge(profile.op_cost::<S>(
+            crate::accel::OpClass::Blas3,
+            flops,
+            m_real * n_real * S::BYTES,
+            m_real * n_real * S::BYTES,
+        ));
+    }
+
+    // --- scatter factored panel back ---------------------------------------
+    if comm.rank() == diag_rank {
+        for ti in k..kt {
+            let dst = desc.shape.rank_at(ti % pr, ck);
+            let off = (ti - k) * t * t;
+            if dst == comm.rank() {
+                a.global_tile_mut(ti, k).copy_from_slice(&panel[off..off + t * t]);
+            } else {
+                comm.isend(dst, panel_tag(ti), Payload::Data(panel[off..off + t * t].to_vec()))
+                    .wait();
+            }
+        }
+    } else if in_panel_col {
+        for ti in k..kt {
+            if a.owns_tile_row(ti) {
+                let data = comm.recv(diag_rank, panel_tag(ti)).into_data();
+                a.global_tile_mut(ti, k).copy_from_slice(&data);
+            }
+        }
+    }
+
+    // --- start the split-phase pivot + L21 broadcasts ----------------------
+    let world = comm.world();
+    let piv_payload = if comm.rank() == diag_rank {
+        Some(Payload::Ints(piv_global))
+    } else {
+        None
+    };
+    let piv = world.ibcast(diag_rank, tags::LU + 1, piv_payload);
+
+    let row = mesh.row_comm();
+    let mut l21: Vec<Option<BcastRequest<'a, S>>> = Vec::with_capacity(a.local_mt());
+    for lti in 0..a.local_mt() {
+        let ti = desc.global_ti(mesh.row(), lti);
+        if ti > k {
+            let data = if in_panel_col {
+                Some(Payload::Data(a.tile(lti, desc.local_tj(k)).to_vec()))
+            } else {
+                None
+            };
+            l21.push(Some(row.ibcast(ck, tags::LU + 3, data)));
+        } else {
+            l21.push(None);
+        }
+    }
+    Ok(PanelInFlight { piv, l21 })
+}
+
 /// In-place distributed LU: on return `a` holds L (unit lower, implicit
 /// diagonal) and U; the returned [`PivotMap`] records the interchanges.
 pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<PivotMap> {
@@ -61,99 +205,24 @@ pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
     let t = desc.tile;
     let kt = desc.mt();
     let mesh = ctx.mesh;
-    let comm = mesh.comm();
     let (pr, pc) = (desc.shape.pr, desc.shape.pc);
     let mut pivots = PivotMap::default();
+
+    // Prologue: factor panel 0; its pivots and L21 go on the wire now.
+    let mut pending = Some(factor_panel(ctx, a, 0)?);
 
     for k in 0..kt {
         let ck = k % pc; // panel's process column
         let rk = k % pr; // diagonal tile's process row
-        let diag_rank = desc.shape.rank_at(rk, ck);
-        let in_panel_col = mesh.col() == ck;
-        let panel_tiles = kt - k;
+        let inflight = pending.take().expect("panel in flight");
 
-        // Real (unpadded) extent of the panel.
-        let m_real = desc.m - k * t; // rows below the panel top
-        let n_real = m_real.min(t); // panel width
+        let m_real = desc.m - k * t;
+        let n_real = m_real.min(t);
 
-        // --- 1. gather panel to the diagonal owner ------------------------
-        let panel_tag = |ti: usize| Tag::P2p(tags::LU + 10 + ti as u32);
-        let mut panel: Vec<S> = Vec::new();
-        if comm.rank() == diag_rank {
-            panel = vec![S::zero(); panel_tiles * t * t];
-            for ti in k..kt {
-                let src = desc.shape.rank_at(ti % pr, ck);
-                let dst_off = (ti - k) * t * t;
-                if src == comm.rank() {
-                    panel[dst_off..dst_off + t * t].copy_from_slice(a.global_tile(ti, k));
-                } else {
-                    let data = comm.recv(src, panel_tag(ti)).into_data();
-                    panel[dst_off..dst_off + t * t].copy_from_slice(&data);
-                }
-            }
-        } else if in_panel_col {
-            for ti in k..kt {
-                if a.owns_tile_row(ti) {
-                    comm.send(diag_rank, panel_tag(ti), Payload::Data(a.global_tile(ti, k).to_vec()));
-                }
-            }
-        }
+        // --- 1. complete the pivot broadcast -------------------------------
+        let piv_global = inflight.piv.wait().into_ints();
 
-        // --- 2. factor the real sub-panel on the diagonal owner -----------
-        // (host-side: pivot search is latency-bound, kept on CPU as in
-        // MAGMA-style hybrid factorisations; cost charged at CPU rates.)
-        let mut piv_global: Vec<i64> = Vec::new();
-        if comm.rank() == diag_rank {
-            let piv = linalg::getrf_lda(m_real.min(panel_tiles * t), n_real, t, &mut panel)
-                .map_err(|e| match e {
-                    Error::Breakdown { detail, .. } => Error::Breakdown {
-                        method: "plu_factor",
-                        detail: format!("panel {k}: {detail}"),
-                    },
-                    other => other,
-                })?;
-            // Panel-relative pivot row -> global row.
-            piv_global = piv.iter().map(|&p| (k * t + p) as i64).collect();
-            // Charge the panel factorisation at serial-CPU rates:
-            // ~ m_real * n_real^2 flops.
-            let flops = (m_real as u64) * (n_real as u64) * (n_real as u64);
-            let profile = crate::accel::ComputeProfile::q6600_atlas();
-            ctx.charge(profile.op_cost::<S>(
-                crate::accel::OpClass::Blas3,
-                flops,
-                m_real * n_real * S::BYTES,
-                m_real * n_real * S::BYTES,
-            ));
-        }
-
-        // --- 3. scatter factored panel back, broadcast pivots -------------
-        if comm.rank() == diag_rank {
-            for ti in k..kt {
-                let dst = desc.shape.rank_at(ti % pr, ck);
-                let off = (ti - k) * t * t;
-                if dst == comm.rank() {
-                    a.global_tile_mut(ti, k).copy_from_slice(&panel[off..off + t * t]);
-                } else {
-                    comm.send(dst, panel_tag(ti), Payload::Data(panel[off..off + t * t].to_vec()));
-                }
-            }
-        } else if in_panel_col {
-            for ti in k..kt {
-                if a.owns_tile_row(ti) {
-                    let data = comm.recv(diag_rank, panel_tag(ti)).into_data();
-                    a.global_tile_mut(ti, k).copy_from_slice(&data);
-                }
-            }
-        }
-        let world = comm.world();
-        let piv_payload = if comm.rank() == diag_rank {
-            Some(Payload::Ints(piv_global.clone()))
-        } else {
-            None
-        };
-        let piv_global = world.bcast(diag_rank, tags::LU + 1, piv_payload).into_ints();
-
-        // --- 4. apply row swaps outside the panel column -------------------
+        // --- 2. apply row swaps outside the panel column -------------------
         for (j, &pg) in piv_global.iter().enumerate() {
             let g1 = k * t + j;
             let g2 = pg as usize;
@@ -164,10 +233,12 @@ pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
         }
 
         if k + 1 == kt && n_real >= m_real {
-            break; // no trailing work after the last panel
+            // No trailing work after the last panel; its L21 broadcasts were
+            // empty (no tile rows below the panel), so nothing is in flight.
+            break;
         }
 
-        // --- 5. U12 row: broadcast diag tile along row rk, trsm ------------
+        // --- 3. U12 row: broadcast diag tile along row rk, trsm ------------
         let row = mesh.row_comm();
         if mesh.row() == rk {
             let diag_payload = if mesh.col() == ck {
@@ -186,17 +257,11 @@ pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
             }
         }
 
-        // --- 6. broadcast L21 along rows, U12 along columns ----------------
+        // --- 4. complete the L21 row broadcasts; U12 column broadcasts -----
         let mut l_panel: Vec<Option<Vec<S>>> = vec![None; a.local_mt()];
-        for lti in 0..a.local_mt() {
-            let ti = desc.global_ti(mesh.row(), lti);
-            if ti > k {
-                let data = if mesh.col() == ck {
-                    Some(Payload::Data(a.tile(lti, desc.local_tj(k)).to_vec()))
-                } else {
-                    None
-                };
-                l_panel[lti] = Some(row.bcast(ck, tags::LU + 3, data).into_data());
+        for (lti, req) in inflight.l21.into_iter().enumerate() {
+            if let Some(req) = req {
+                l_panel[lti] = Some(req.wait().into_data());
             }
         }
         let col = mesh.col_comm();
@@ -213,7 +278,26 @@ pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
             }
         }
 
-        // --- 7. trailing rank-T update (the CUBLAS-offloaded hot spot) -----
+        // --- 5. lookahead: update tile column k+1 first, factor it, and put
+        //        its pivot + L21 broadcasts on the wire ----------------------
+        if k + 1 < kt {
+            let next_ck = (k + 1) % pc;
+            if mesh.col() == next_ck {
+                let ltj = desc.local_tj(k + 1);
+                let u_tile = u_panel[ltj].as_ref().expect("U tile for lookahead column");
+                for lti in 0..a.local_mt() {
+                    let ti = desc.global_ti(mesh.row(), lti);
+                    if ti > k {
+                        let l_tile = l_panel[lti].as_ref().expect("L tile broadcast");
+                        let cost = ctx.engine.gemm_update(a.tile_mut(lti, ltj), l_tile, u_tile)?;
+                        ctx.charge(cost);
+                    }
+                }
+            }
+            pending = Some(factor_panel(ctx, a, k + 1)?);
+        }
+
+        // --- 6. trailing rank-T update (hides step k+1's panel path) -------
         for lti in 0..a.local_mt() {
             let ti = desc.global_ti(mesh.row(), lti);
             if ti <= k {
@@ -222,8 +306,8 @@ pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
             let l_tile = l_panel[lti].as_ref().expect("L tile broadcast");
             for ltj in 0..a.local_nt() {
                 let tj = desc.global_tj(mesh.col(), ltj);
-                if tj <= k {
-                    continue;
+                if tj <= k || tj == k + 1 {
+                    continue; // k+1 was updated ahead of the panel factorisation
                 }
                 let u_tile = u_panel[ltj].as_ref().expect("U tile broadcast");
                 let cost = ctx.engine.gemm_update(a.tile_mut(lti, ltj), l_tile, u_tile)?;

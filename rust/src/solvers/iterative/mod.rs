@@ -16,12 +16,14 @@ pub mod bicg;
 pub mod bicgstab;
 pub mod cg;
 pub mod gmres;
+pub mod pipecg;
 pub mod precond;
 
 pub use bicg::bicg;
 pub use bicgstab::bicgstab;
 pub use cg::cg;
 pub use gmres::gmres;
+pub use pipecg::pipecg;
 pub use precond::JacobiPrecond;
 
 pub use crate::pblas::LinOp;
@@ -89,6 +91,9 @@ impl<S: Scalar> IterStats<S> {
 pub enum IterMethod {
     /// Conjugate gradients (SPD).
     Cg,
+    /// Pipelined CG (SPD): one fused, matvec-overlapped reduction per
+    /// iteration (Ghysels-style; see [`pipecg()`]).
+    PipeCg,
     /// BiConjugate gradients.
     Bicg,
     /// BiCGSTAB.
@@ -102,11 +107,12 @@ impl IterMethod {
     pub fn parse(s: &str) -> crate::Result<Self> {
         match s.to_ascii_lowercase().as_str() {
             "cg" => Ok(IterMethod::Cg),
+            "pipecg" => Ok(IterMethod::PipeCg),
             "bicg" => Ok(IterMethod::Bicg),
             "bicgstab" => Ok(IterMethod::Bicgstab),
             "gmres" => Ok(IterMethod::Gmres),
             other => Err(crate::Error::config(format!(
-                "unknown iterative method {other:?} (cg|bicg|bicgstab|gmres)"
+                "unknown iterative method {other:?} (cg|pipecg|bicg|bicgstab|gmres)"
             ))),
         }
     }
@@ -115,6 +121,7 @@ impl IterMethod {
     pub fn name(&self) -> &'static str {
         match self {
             IterMethod::Cg => "CG",
+            IterMethod::PipeCg => "PipeCG",
             IterMethod::Bicg => "BiCG",
             IterMethod::Bicgstab => "BiCGSTAB",
             IterMethod::Gmres => "GMRES",
@@ -130,6 +137,7 @@ mod tests {
     fn method_parse_roundtrip() {
         for (s, m) in [
             ("cg", IterMethod::Cg),
+            ("PipeCG", IterMethod::PipeCg),
             ("BiCG", IterMethod::Bicg),
             ("bicgstab", IterMethod::Bicgstab),
             ("GMRES", IterMethod::Gmres),

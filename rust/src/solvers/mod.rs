@@ -11,5 +11,5 @@ pub mod serial;
 
 pub use direct::{apply_pivots, pchol_factor, pchol_solve, plu_factor, plu_solve, ptrsv, PivotMap, TriKind};
 pub use iterative::{
-    bicg, bicgstab, cg, gmres, IterConfig, IterMethod, IterStats, JacobiPrecond, LinOp,
+    bicg, bicgstab, cg, gmres, pipecg, IterConfig, IterMethod, IterStats, JacobiPrecond, LinOp,
 };

@@ -23,9 +23,25 @@
 //! solvers, and zero rows times zero-padded vector blocks contribute
 //! nothing.  See `DESIGN.md` §10.
 
+use std::cell::{Ref, RefCell};
+
 use super::csr::CsrMatrix;
 use crate::dist::Descriptor;
 use crate::Scalar;
+
+/// The column split of one rank's row block: the entries whose column tile
+/// this process row also owns (so the matching `x` blocks are local) vs.
+/// everything else.  This is the working set of the split-phase `pspmv`:
+/// `diag` multiplies while the x allgather is in flight, `off` after it
+/// completes (DESIGN.md §11).  Both halves span the full padded column
+/// range; their stored entries are disjoint and union to the row block.
+#[derive(Clone, Debug)]
+pub struct SplitBlocks<S: Scalar> {
+    /// Entries with locally-owned column tiles.
+    pub diag: CsrMatrix<S>,
+    /// Entries with remote column tiles.
+    pub off: CsrMatrix<S>,
+}
 
 /// One rank's replica of a row-block-distributed CSR matrix.
 #[derive(Clone, Debug)]
@@ -36,6 +52,9 @@ pub struct DistCsrMatrix<S: Scalar> {
     /// Owned padded row blocks (`desc.local_mt(prow) * desc.tile` rows)
     /// over `desc.padded_n()` global columns.
     local: CsrMatrix<S>,
+    /// Lazily built column split for the split-phase matvec; invalidated
+    /// by [`DistCsrMatrix::local_mut`] (value edits change both halves).
+    split: RefCell<Option<SplitBlocks<S>>>,
 }
 
 impl<S: Scalar> DistCsrMatrix<S> {
@@ -89,7 +108,7 @@ impl<S: Scalar> DistCsrMatrix<S> {
             }
         }
         let local = CsrMatrix::from_rows(desc.padded_n(), rows);
-        DistCsrMatrix { desc, prow, pcol, local }
+        DistCsrMatrix { desc, prow, pcol, local, split: RefCell::new(None) }
     }
 
     /// Build this rank's shard from a *global* triplet list: entries whose
@@ -113,7 +132,7 @@ impl<S: Scalar> DistCsrMatrix<S> {
             }
         }
         let local = CsrMatrix::from_triplets(lmt * t, desc.padded_n(), &local_trip);
-        DistCsrMatrix { desc, prow, pcol, local }
+        DistCsrMatrix { desc, prow, pcol, local, split: RefCell::new(None) }
     }
 
     /// The layout descriptor (shared with the vectors it pairs with).
@@ -139,9 +158,42 @@ impl<S: Scalar> DistCsrMatrix<S> {
     }
 
     /// Mutable access to the owned row block (values only; the pattern of a
-    /// built operator is fixed).
+    /// built operator is fixed).  Invalidates the cached column split.
     pub fn local_mut(&mut self) -> &mut CsrMatrix<S> {
+        *self.split.borrow_mut() = None;
         &mut self.local
+    }
+
+    /// The column split of the row block (built on first use, rebuilt after
+    /// any [`DistCsrMatrix::local_mut`]): the split-phase `pspmv` runs one
+    /// plain pass over each half instead of a masked double scan of every
+    /// stored entry.
+    pub fn split_blocks(&self) -> Ref<'_, SplitBlocks<S>> {
+        if self.split.borrow().is_none() {
+            let t = self.desc.tile;
+            let pr = self.desc.shape.pr;
+            let nrows = self.local.nrows();
+            let mut diag: Vec<Vec<(usize, S)>> = Vec::with_capacity(nrows);
+            let mut off: Vec<Vec<(usize, S)>> = Vec::with_capacity(nrows);
+            for li in 0..nrows {
+                let (cols, vals) = self.local.row(li);
+                let (mut dr, mut or) = (Vec::new(), Vec::new());
+                for (&c, &v) in cols.iter().zip(vals) {
+                    if (c / t) % pr == self.prow {
+                        dr.push((c, v));
+                    } else {
+                        or.push((c, v));
+                    }
+                }
+                diag.push(dr);
+                off.push(or);
+            }
+            *self.split.borrow_mut() = Some(SplitBlocks {
+                diag: CsrMatrix::from_rows(self.desc.padded_n(), diag),
+                off: CsrMatrix::from_rows(self.desc.padded_n(), off),
+            });
+        }
+        Ref::map(self.split.borrow(), |o| o.as_ref().expect("split just built"))
     }
 
     /// Stored entries on this rank.
@@ -238,5 +290,41 @@ mod tests {
     fn rectangular_descriptor_rejected() {
         let d = Descriptor::new(8, 6, 2, MeshShape::new(1, 1));
         let _ = DistCsrMatrix::<f64>::from_row_fn(d, 0, 0, |_| Vec::new());
+    }
+
+    #[test]
+    fn split_blocks_partition_the_row_block_and_track_mutation() {
+        let m = 11;
+        let d = desc(m, 4, 3, 1);
+        for prow in 0..3 {
+            let mut a = DistCsrMatrix::from_row_fn(d, prow, 0, rows_of(m));
+            {
+                let s = a.split_blocks();
+                // Disjoint by column-tile ownership, jointly the whole block.
+                assert_eq!(s.diag.nnz() + s.off.nnz(), a.local_nnz());
+                for li in 0..a.local().nrows() {
+                    for (&c, &v) in s.diag.row(li).0.iter().zip(s.diag.row(li).1) {
+                        assert_eq!((c / 4) % 3, prow, "diag col {c} must be owned");
+                        assert_eq!(a.local().get(li, c), Some(v));
+                    }
+                    for &c in s.off.row(li).0 {
+                        assert_ne!((c / 4) % 3, prow, "off col {c} must be remote");
+                    }
+                }
+            }
+            // Value edits invalidate the cached split.
+            let before = a.split_blocks().diag.nnz();
+            let li = (0..a.local().nrows()).find(|&li| !a.local().row(li).0.is_empty()).unwrap();
+            {
+                let (_, vals) = a.local_mut().row_mut(li);
+                vals[0] *= 2.0;
+            }
+            let s = a.split_blocks();
+            assert_eq!(s.diag.nnz(), before, "pattern unchanged");
+            let c = a.local().row(li).0[0];
+            let v = a.local().row(li).1[0];
+            let in_split = if (c / 4) % 3 == prow { s.diag.get(li, c) } else { s.off.get(li, c) };
+            assert_eq!(in_split, Some(v), "rebuilt split sees the new value");
+        }
     }
 }

@@ -24,4 +24,4 @@ pub mod csr;
 pub mod dist_csr;
 
 pub use csr::CsrMatrix;
-pub use dist_csr::DistCsrMatrix;
+pub use dist_csr::{DistCsrMatrix, SplitBlocks};

@@ -167,6 +167,59 @@ fn makespan_reflects_critical_path_chain() {
 }
 
 #[test]
+fn split_phase_collectives_bit_identical_and_never_slower() {
+    // The overlap acceptance property, end to end: on identical traffic
+    // with compute interleaved, the split-phase collectives return values
+    // *bit-identical* to the blocking ones (same tree, same combine order)
+    // and no rank's overlapped makespan exceeds its blocking one.
+    fn run_mode(
+        p: usize,
+        len: usize,
+        seed: u64,
+        split: bool,
+    ) -> Vec<(Vec<f64>, Vec<Vec<f64>>, f64)> {
+        World::run::<f64, _, _>(p, NetworkModel::gigabit_ethernet(), move |comm| {
+            let mut local = cuplss::util::Prng::new(seed ^ comm.rank() as u64);
+            let mine: Vec<f64> = (0..len).map(|_| local.normal()).collect();
+            let g = comm.world();
+            let compute = 1e-3; // enough to cover the whole tree latency
+            let (sum, all) = if split {
+                let red = g.iallreduce_vec(5, mine.clone(), ReduceOp::Sum);
+                comm.clock().advance_compute(compute);
+                let sum = red.wait();
+                let gat = g.iallgather(6, mine.clone());
+                comm.clock().advance_compute(compute);
+                (sum, gat.wait())
+            } else {
+                let sum = g.allreduce_vec(5, mine.clone(), ReduceOp::Sum);
+                comm.clock().advance_compute(compute);
+                let all = g.allgather(6, mine);
+                comm.clock().advance_compute(compute);
+                (sum, all)
+            };
+            (sum, all, comm.clock().busy_until())
+        })
+    }
+    prop::forall(12, 0x5EED, |rng| {
+        let p = 1 + rng.below(6);
+        let len = 1 + rng.below(32);
+        let seed = rng.next_u64();
+        let blocking = run_mode(p, len, seed, false);
+        let split = run_mode(p, len, seed, true);
+        for (rank, ((sb, ab, tb), (ss, as_, ts))) in
+            blocking.iter().zip(&split).enumerate()
+        {
+            assert_eq!(sb, ss, "allreduce must be bit-identical (rank {rank})");
+            assert_eq!(ab, as_, "allgather must be bit-identical (rank {rank})");
+            assert!(
+                *ts <= tb + 1e-12,
+                "rank {rank}: overlapped {ts} slower than blocking {tb}"
+            );
+        }
+    });
+}
+
+#[test]
 fn maxabsloc_ties_break_deterministically() {
     // Two ranks contribute the same |value|: everyone must agree on the
     // smaller index.

@@ -12,7 +12,9 @@ use cuplss::dist::{gather_vector, Descriptor, DistMatrix, DistVector};
 use cuplss::linalg;
 use cuplss::mesh::{Mesh, MeshShape};
 use cuplss::pblas::Ctx;
-use cuplss::solvers::{self, bicg, bicgstab, cg, gmres, pchol_solve, plu_solve, IterConfig};
+use cuplss::solvers::{
+    self, bicg, bicgstab, cg, gmres, pchol_solve, pipecg, plu_solve, IterConfig,
+};
 
 /// Deterministic dense SPD test matrix (same on all ranks).
 fn spd_elem(n: usize) -> impl Fn(usize, usize) -> f64 + Clone + Send + Sync {
@@ -62,7 +64,7 @@ fn solve_distributed(
         let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(tile)));
         let desc = Descriptor::new(n, n, tile, mesh.shape());
         let cfg = IterConfig { tol: 1e-11, max_iter: 600, restart: 25 };
-        let spd = matches!(which, "cg" | "chol");
+        let spd = matches!(which, "cg" | "pipecg" | "chol");
         let a0 = if spd {
             DistMatrix::from_fn(desc, mesh.row(), mesh.col(), spd_elem(n))
         } else {
@@ -87,6 +89,7 @@ fn solve_distributed(
                 pchol_solve(&ctx, &mut a, &b).expect("pchol")
             }
             "cg" => cg(&ctx, &a0, &b, &cfg).expect("cg").0,
+            "pipecg" => pipecg(&ctx, &a0, &b, &cfg).expect("pipecg").0,
             "bicg" => bicg(&ctx, &a0, &b, &cfg).expect("bicg").0,
             "bicgstab" => bicgstab(&ctx, &a0, &b, &cfg).expect("bicgstab").0,
             "gmres" => gmres(&ctx, &a0, &b, &cfg).expect("gmres").0,
@@ -128,6 +131,11 @@ fn pchol_all_meshes() {
 #[test]
 fn cg_all_meshes() {
     check_solver("cg", 48, 8, 1e-7);
+}
+
+#[test]
+fn pipecg_all_meshes() {
+    check_solver("pipecg", 48, 8, 1e-7);
 }
 
 #[test]

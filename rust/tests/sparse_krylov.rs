@@ -9,7 +9,7 @@ use cuplss::comm::{NetworkModel, World};
 use cuplss::dist::{gather_vector, Descriptor, DistVector};
 use cuplss::mesh::{Mesh, MeshShape};
 use cuplss::pblas::Ctx;
-use cuplss::solvers::{bicg, bicgstab, cg, gmres, IterConfig, JacobiPrecond};
+use cuplss::solvers::{bicg, bicgstab, cg, gmres, pipecg, IterConfig, JacobiPrecond};
 use cuplss::sparse::{CsrMatrix, DistCsrMatrix};
 use cuplss::workloads::stencil::{
     poisson2d_csr, poisson2d_row, poisson3d_csr, poisson3d_row, stencil_rhs,
@@ -43,6 +43,7 @@ fn solve_sparse_2d(
         let cfg = IterConfig { tol: 1e-12, max_iter: 2_000, restart: 30 };
         let (x, st) = match which {
             "cg" => cg(&ctx, &a, &b, &cfg).expect("cg"),
+            "pipecg" => pipecg(&ctx, &a, &b, &cfg).expect("pipecg"),
             "bicg" => bicg(&ctx, &a, &b, &cfg).expect("bicg"),
             "bicgstab" => bicgstab(&ctx, &a, &b, &cfg).expect("bicgstab"),
             "gmres" => gmres(&ctx, &a, &b, &cfg).expect("gmres"),
@@ -73,6 +74,41 @@ fn check_2d(which: &'static str, g: usize, tile: usize, tol: f64) {
 fn sparse_cg_all_meshes() {
     check_2d("cg", 6, 4, 1e-8); // n = 36: 9 tile rows, uneven split across process rows
     check_2d("cg", 5, 4, 1e-8); // n = 25: non-divisible, padded edge block
+}
+
+#[test]
+fn sparse_pipecg_all_meshes() {
+    // The pipelined recurrences must land on the same solution through the
+    // split-phase pspmv + fused overlapped reduction, on every mesh shape.
+    check_2d("pipecg", 6, 4, 1e-8);
+    check_2d("pipecg", 5, 4, 1e-8);
+}
+
+#[test]
+fn sparse_pipecg_converges_like_cg_and_hides_latency() {
+    let g = 6usize;
+    let n = g * g;
+    let out = World::run::<f64, _, _>(4, NetworkModel::gigabit_ethernet(), move |comm| {
+        let mesh = Mesh::new(&comm, MeshShape::new(2, 2));
+        let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(4)));
+        let desc = Descriptor::new(n, n, 4, mesh.shape());
+        let a = poisson2d_csr::<f64>(desc, mesh.row(), mesh.col());
+        let b = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| {
+            stencil_rhs(&poisson2d_row::<f64>(g, i), x_true)
+        });
+        let cfg = IterConfig { tol: 1e-10, max_iter: 2_000, restart: 30 };
+        let (_, st_cg) = cg(&ctx, &a, &b, &cfg).expect("cg");
+        let (_, st_pipe) = pipecg(&ctx, &a, &b, &cfg).expect("pipecg");
+        (st_cg.iterations, st_pipe.iterations, comm.stats().wait_saved_secs())
+    });
+    for &(it_cg, it_pipe, saved) in &out {
+        // Same Krylov space: iteration counts agree up to round-off drift.
+        assert!(
+            (it_cg as i64 - it_pipe as i64).unsigned_abs() <= 5,
+            "CG {it_cg} vs PipeCG {it_pipe} iterations"
+        );
+        assert!(saved > 0.0, "overlap must hide some latency");
+    }
 }
 
 #[test]
