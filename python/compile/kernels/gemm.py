@@ -66,6 +66,19 @@ def _update_kernel(c_ref, a_ref, b_ref, o_ref, *, k_steps):
     )
 
 
+def _acc_kernel(c_ref, a_ref, b_ref, o_ref, *, k_steps):
+    """One grid step of the accumulation: o[i,j] = c[i,j] + sum_k a[i,k]@b[k,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
 def _grid_specs(m, n, k, bm, bn, bk):
     if m % bm or n % bn or k % bk:
         raise ValueError(
@@ -121,3 +134,28 @@ def gemm_update(c, a, b, bm=DEFAULT_BLOCK, bn=DEFAULT_BLOCK, bk=DEFAULT_BLOCK):
         out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
         interpret=True,
     )(c, a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm_acc(c, a, b, bm=DEFAULT_BLOCK, bn=DEFAULT_BLOCK, bk=DEFAULT_BLOCK):
+    """SUMMA accumulation C_out = C + A @ B as one fused Pallas kernel.
+
+    The residency refactor folds the coordinator's former gemm-then-axpy
+    pair into this single kernel so the C tile can stay device-resident
+    across panel steps (DESIGN.md §12).
+    """
+    m, ka = a.shape
+    kb, n = b.shape
+    assert ka == kb and c.shape == (m, n), (c.shape, a.shape, b.shape)
+    grid, a_spec, b_spec, o_spec = _grid_specs(m, n, ka, bm, bn, bk)
+    c_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    kernel = functools.partial(_acc_kernel, k_steps=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[c_spec, a_spec, b_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        interpret=True,
+    )(c, a, b)
+

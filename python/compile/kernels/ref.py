@@ -21,6 +21,11 @@ def ref_gemm_update(c, a, b):
     return c - jnp.dot(a, b, preferred_element_type=a.dtype)
 
 
+def ref_gemm_acc(c, a, b):
+    """SUMMA accumulation: C_out = C + A @ B (the fused gemm-plus-axpy)."""
+    return c + jnp.dot(a, b, preferred_element_type=a.dtype)
+
+
 def ref_syrk_update(c, a):
     """Symmetric update: C_out = C - A @ A^T (the BLAS-3 core of block Cholesky)."""
     return c - jnp.dot(a, a.T, preferred_element_type=a.dtype)

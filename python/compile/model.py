@@ -60,6 +60,12 @@ def _gemm_update(c, a, b):
     return (gemm_k.gemm_update(c, a, b),)
 
 
+def _gemm_acc(c, a, b):
+    # C += A @ B: the SUMMA accumulation fused into one kernel so the C
+    # tile can stay device-resident across panel steps (rust DESIGN.md §12).
+    return (gemm_k.gemm_acc(c, a, b),)
+
+
 def _gemv(a, x):
     return (gemv_k.gemv(a, x),)
 
@@ -139,6 +145,7 @@ def _s(_t):
 OPS = {
     # name:        (builder,      arg shapes,         flops(t))
     "gemm":        (_gemm,        (_mm, _mm),         lambda t: 2 * t**3),
+    "gemm_acc":    (_gemm_acc,    (_mm, _mm, _mm),    lambda t: 2 * t**3 + t * t),
     "gemm_update": (_gemm_update, (_mm, _mm, _mm),    lambda t: 2 * t**3 + t * t),
     "gemv":        (_gemv,        (_mm, _v),          lambda t: 2 * t * t),
     "gemv_t":      (_gemv_t,      (_mm, _v),          lambda t: 2 * t * t),

@@ -1,0 +1,704 @@
+"""Faithful Python transcription of `rust/src/bench_harness/model.rs` (plus
+the cost/network models it rides on) — the no-toolchain verification oracle
+for the residency PR.
+
+Every function mirrors its rust namesake term by term (same operation
+order, f64 arithmetic), so the inequalities the rust benches assert
+(`cargo bench --bench overlap` / `--bench residency`) can be checked here,
+and the committed `BENCH_*.json` artifacts can be generated without a rust
+toolchain.  If a rust-side formula changes, change it here in the same way.
+"""
+
+import math
+from dataclasses import dataclass
+
+# ---------------------------------------------------------------------------
+# accel/costmodel.rs
+# ---------------------------------------------------------------------------
+
+DEFAULT_DEVICE_MEM = 1 << 30  # accel/residency.rs: GTX 280 = 1 GiB
+
+BLAS3 = "blas3"
+BLAS2 = "blas2"
+BLAS1 = "blas1"
+
+_BLAS3_OPS = {
+    "gemm", "gemm_acc", "gemm_update", "gemm_nt_update", "potrf",
+    "trsm_llu", "trsm_ru", "trsm_rlt",
+}
+_BLAS2_OPS = {"gemv", "gemv_t", "gemv_update", "trsv_lu", "trsv_l", "trsv_u", "trsv_lt"}
+
+
+def op_class(op):
+    if op in _BLAS3_OPS:
+        return BLAS3
+    if op in _BLAS2_OPS:
+        return BLAS2
+    return BLAS1
+
+
+@dataclass(frozen=True)
+class ComputeProfile:
+    name: str
+    flops3_sp: float
+    flops3_dp: float
+    mem_bw: float
+    launch: float
+    pcie_bw: float
+
+    def flops3(self, bytes_per_elem):
+        return self.flops3_sp if bytes_per_elem == 4 else self.flops3_dp
+
+    def op_cost_total(self, klass, flops, touched_bytes, stream_bytes, b):
+        """Total seconds of one op: compute + launch + transfer."""
+        rate3 = self.flops3(b)
+        if klass == BLAS3:
+            compute = flops / rate3
+        else:
+            compute = max(flops / (rate3 / 8.0), touched_bytes / self.mem_bw)
+        transfer = stream_bytes / self.pcie_bw if self.pcie_bw > 0.0 else 0.0
+        return compute + self.launch + transfer
+
+
+def gtx280_cublas():
+    return ComputeProfile("gtx280-cublas", 360e9, 60e9, 120e9, 12e-6, 5.5e9)
+
+
+def q6600_atlas():
+    return ComputeProfile("q6600-atlas", 13.5e9, 6.7e9, 4.0e9, 0.2e-6, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# accel/engine.rs — op tables
+# ---------------------------------------------------------------------------
+
+
+def op_flops(op, t):
+    if op == "gemm":
+        return 2 * t**3
+    if op in ("gemm_update", "gemm_nt_update", "gemm_acc"):
+        return 2 * t**3 + t * t
+    if op in ("gemv", "gemv_t"):
+        return 2 * t * t
+    if op == "gemv_update":
+        return 2 * t * t + t
+    if op == "potrf":
+        return t**3 // 3
+    if op in ("trsm_llu", "trsm_ru", "trsm_rlt"):
+        return t**3
+    if op in ("trsv_lu", "trsv_l", "trsv_u", "trsv_lt"):
+        return t * t
+    if op in ("dot", "axpy"):
+        return 2 * t
+    raise KeyError(op)
+
+
+def op_operand_elems(op, t):
+    t2 = t * t
+    table = {
+        "gemm": ([t2, t2], t2),
+        "gemm_acc": ([t2, t2, t2], t2),
+        "gemm_update": ([t2, t2, t2], t2),
+        "gemm_nt_update": ([t2, t2, t2], t2),
+        "gemv": ([t2, t], t),
+        "gemv_t": ([t2, t], t),
+        "gemv_update": ([t, t2, t], t),
+        "potrf": ([t2], t2),
+        "trsm_llu": ([t2, t2], t2),
+        "trsm_ru": ([t2, t2], t2),
+        "trsm_rlt": ([t2, t2], t2),
+        "trsv_lu": ([t2, t], t),
+        "trsv_l": ([t2, t], t),
+        "trsv_u": ([t2, t], t),
+        "trsv_lt": ([t2, t], t),
+    }
+    return table[op]
+
+
+def op_touched_elems(op, t):
+    ins, out = op_operand_elems(op, t)
+    return sum(ins), out
+
+
+def tile_op_cost_total(profile, op, tile, b):
+    tin, tout = op_touched_elems(op, tile)
+    return profile.op_cost_total(
+        op_class(op), op_flops(op, tile), (tin + tout) * b, (tin + tout) * b, b
+    )
+
+
+def spmv_cost_total(profile, nnz, nrows, nout, b):
+    bytes_ = nnz * (2 * b + 4) + (nrows + 1) * 4 + nout * b
+    return profile.op_cost_total(BLAS2, 2 * nnz, bytes_, bytes_, b)
+
+
+# ---------------------------------------------------------------------------
+# comm/model.rs + mesh/mod.rs + dist ceil_div
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class NetworkModel:
+    alpha: float
+    beta: float
+    alpha_local: float
+
+    def p2p_secs(self, bytes_):
+        return self.alpha + bytes_ * self.beta
+
+
+def gigabit_ethernet():
+    return NetworkModel(50e-6, 8.5e-9, 0.5e-6)
+
+
+def near_square(p):
+    pr = int(math.sqrt(p))
+    while pr > 1 and p % pr != 0:
+        pr -= 1
+    pr = max(pr, 1)
+    return pr, p // pr
+
+
+def ceil_div(a, b):
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# bench_harness/model.rs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelParams:
+    tile: int
+    pr: int
+    pc: int
+    net: NetworkModel
+    engine: ComputeProfile
+    panel_cpu: ComputeProfile
+    swap_fraction: float
+    device_mem: int = DEFAULT_DEVICE_MEM
+
+    def op(self, name, b):
+        return tile_op_cost_total(self.engine, name, self.tile, b)
+
+    def blas1(self, length, b):
+        return self.panel_cpu.op_cost_total(
+            BLAS1, 2 * length, 3 * length * b, 3 * length * b, b
+        )
+
+    def msg(self, elems, b):
+        return self.net.p2p_secs(elems * b)
+
+    def tree(self, p, elems, b):
+        if p <= 1:
+            return 0.0
+        rounds = (p - 1).bit_length()
+        return rounds * self.msg(elems, b)
+
+    def ring(self, p, elems, b):
+        if p <= 1:
+            return 0.0
+        return (p - 1) * self.msg(elems, b)
+
+    def op_resident(self, name, b):
+        tin, tout = op_touched_elems(name, self.tile)
+        return self.engine.op_cost_total(
+            op_class(name), op_flops(name, self.tile), (tin + tout) * b, 0, b
+        )
+
+    def xfer(self, elems, b):
+        if self.engine.pcie_bw > 0.0:
+            return elems * b / self.engine.pcie_bw
+        return 0.0
+
+    def resident_extra(self, my_rows, my_cols, my_tiles, first_step,
+                       invalidated, clamp_calls, panel_copies, b):
+        """ModelParams::resident_extra — shared residency pricing of the
+        LU/Cholesky/SUMMA twins (see the rust doc comment)."""
+        t2 = self.tile * self.tile
+        ws = (my_tiles + panel_copies * (my_rows + my_cols)) * t2 * b
+        c_factor = 2.0 if (ws > self.device_mem or first_step) else invalidated
+        extra = (my_rows + my_cols) * t2 + c_factor * (my_tiles * t2)
+        return self.xfer(int(min(extra, clamp_calls * my_tiles * t2)), b)
+
+    def blas1_fused(self, length, streams, flops_per_elem, b):
+        nbytes = streams * length * b
+        flops = flops_per_elem * length
+        own = self.engine.op_cost_total(BLAS1, flops, nbytes, nbytes, b)
+        if self.engine.pcie_bw <= 0.0:
+            return own
+        host = self.panel_cpu.op_cost_total(BLAS1, flops, nbytes, nbytes, b)
+        return min(own, host)
+
+
+def lu_step_parts(n, p, b, resident=False):
+    t = p.tile
+    kt = ceil_div(n, t)
+    pr, pc = p.pr, p.pc
+    t2 = t * t
+    parts = []
+    for k in range(kt):
+        mk = kt - k
+        trailing = mk - 1
+        panel_cpu = 0.0
+        panel_comm = 0.0
+        pre = 0.0
+        update = 0.0
+        remote_tiles = mk - ceil_div(mk, pr)
+        if pr > 1:
+            panel_comm += (ceil_div(mk, pr) + remote_tiles) * p.msg(t2, b)
+        flops = (mk * t) * t * t
+        panel_cpu += p.panel_cpu.op_cost_total(
+            BLAS3, flops, mk * t2 * b, mk * t2 * b, b
+        )
+        panel_comm += p.tree(pr * pc, t, b)
+        if pr > 1 and p.swap_fraction > 0.0:
+            seg = ceil_div(kt, pc) * t
+            cross = (pr - 1) / pr
+            pre += p.swap_fraction * cross * t * p.msg(seg, b)
+        if trailing > 0:
+            pre += p.tree(pc, t2, b)
+            pre += ceil_div(trailing, pc) * p.op("trsm_llu", b)
+            panel_comm += ceil_div(trailing, pr) * p.tree(pc, t2, b)
+            pre += ceil_div(trailing, pc) * p.tree(pr, t2, b)
+            my_rows = ceil_div(trailing, pr)
+            my_cols = ceil_div(trailing, pc)
+            my_tiles = my_rows * my_cols
+            if resident and p.engine.pcie_bw > 0.0:
+                update = my_tiles * p.op_resident("gemm_update", b) + p.resident_extra(
+                    my_rows, my_cols, my_tiles, k == 0, p.swap_fraction, 4, 1, b
+                )
+            else:
+                update = my_tiles * p.op("gemm_update", b)
+        parts.append((panel_cpu, panel_comm, pre, update))
+    return parts
+
+
+def trsv_makespan(n, p, b):
+    t = p.tile
+    kt = ceil_div(n, t)
+    pr, pc = p.pr, p.pc
+    total = 0.0
+    for k in range(kt):
+        others = kt - k - 1
+        total += p.op("trsv_lu", b)
+        total += p.tree(pr * pc, t, b)
+        my_rows = ceil_div(others, pr)
+        total += my_rows * (p.tree(pc, t * t, b) + p.op("gemv_update", b))
+    return total
+
+
+def lu_makespan(n, p, b):
+    total = sum(sum(part) for part in lu_step_parts(n, p, b))
+    return total + trsv_makespan(n, p, b) * 2.0
+
+
+def _lu_lookahead_assembly(parts):
+    kt = len(parts)
+    total = parts[0][0] + parts[0][1]
+    for k, (_, _, pre, update) in enumerate(parts):
+        if k + 1 < kt:
+            next_cpu, next_comm = parts[k + 1][0], parts[k + 1][1]
+        else:
+            next_cpu, next_comm = 0.0, 0.0
+        total += pre + next_cpu + max(update, next_comm)
+    return total
+
+
+def lu_makespan_lookahead(n, p, b):
+    return _lu_lookahead_assembly(lu_step_parts(n, p, b)) + trsv_makespan(n, p, b) * 2.0
+
+
+def lu_makespan_resident(n, p, b):
+    return (
+        _lu_lookahead_assembly(lu_step_parts(n, p, b, resident=True))
+        + trsv_makespan(n, p, b) * 2.0
+    )
+
+
+def summa_makespan(n, p, b, overlapped):
+    t = p.tile
+    kt = ceil_div(n, t)
+    my_rows = ceil_div(kt, p.pr)
+    my_cols = ceil_div(kt, p.pc)
+    bcast = my_rows * p.tree(p.pc, t * t, b) + my_cols * p.tree(p.pr, t * t, b)
+    compute = (my_rows * my_cols) * (p.op("gemm", b) + p.blas1(t * t, b))
+    if overlapped:
+        return bcast + (kt - 1) * max(bcast, compute) + compute
+    return kt * (bcast + compute)
+
+
+def summa_makespan_resident(n, p, b, overlapped):
+    t = p.tile
+    t2 = t * t
+    kt = ceil_div(n, t)
+    my_rows = ceil_div(kt, p.pr)
+    my_cols = ceil_div(kt, p.pc)
+    my_tiles = my_rows * my_cols
+    bcast = my_rows * p.tree(p.pc, t2, b) + my_cols * p.tree(p.pr, t2, b)
+    gacc = my_tiles * p.op_resident("gemm_acc", b)
+
+    def step_extra(k):
+        return p.resident_extra(my_rows, my_cols, my_tiles, k == 0, 0.0, 3, 2, b)
+
+    if overlapped:
+        total = bcast
+        for k in range(kt):
+            compute = gacc + step_extra(k)
+            total += max(compute, bcast) if k + 1 < kt else compute
+        return total
+    return sum(bcast + gacc + step_extra(k) for k in range(kt))
+
+
+def chol_makespan(n, p, b, resident=False):
+    t = p.tile
+    kt = ceil_div(n, t)
+    pr, pc = p.pr, p.pc
+    t2 = t * t
+    total = 0.0
+    for k in range(kt):
+        trailing = kt - k - 1
+        total += p.op("potrf", b)
+        total += p.tree(pr, t2, b)
+        total += ceil_div(trailing, pr) * p.op("trsm_rlt", b)
+        if trailing == 0:
+            continue
+        total += ceil_div(trailing, pr) * p.tree(pc, t2, b)
+        total += ceil_div(trailing, pc) * p.tree(pr, t2, b)
+        my_rows = ceil_div(trailing, pr)
+        my_cols = ceil_div(trailing, pc)
+        my_tiles = ceil_div(my_rows * my_cols, 2)
+        if resident and p.engine.pcie_bw > 0.0:
+            total += my_tiles * p.op_resident("gemm_nt_update", b) + p.resident_extra(
+                my_rows, my_cols, my_tiles, k == 0, 0.0, 4, 1, b
+            )
+        else:
+            total += my_tiles * p.op("gemm_nt_update", b)
+    total += trsv_makespan(n, p, b) * 2.0
+    my_tiles = ceil_div(kt, p.pr) * ceil_div(kt, p.pc)
+    total += my_tiles * p.msg(t2, b)
+    return total
+
+
+def chol_makespan_resident(n, p, b):
+    return chol_makespan(n, p, b, resident=True)
+
+
+def iter_makespan(method, n, iters, restart, p, b):
+    t = p.tile
+    kt = ceil_div(n, t)
+    pr, pc = p.pr, p.pc
+    my_rows = ceil_div(kt, pr)
+    my_cols = ceil_div(kt, pc)
+    vec_elems = my_rows * t
+    matvec = (
+        p.ring(pr, vec_elems, b)
+        + (my_rows * my_cols) * (p.op("gemv", b) + p.blas1(t, b))
+        + 2.0 * p.tree(pc, vec_elems, b)
+    )
+    matvec_t = (
+        (my_rows * my_cols) * (p.op("gemv_t", b) + p.blas1(t, b))
+        + my_cols * p.tree(pr, t, b)
+        + p.ring(pc, vec_elems, b)
+    )
+    dot = my_rows * p.blas1(t, b) + 2.0 * p.tree(pr, 1, b)
+    vop = my_rows * p.blas1(t, b)
+    if method == "cg":
+        per_iter = matvec + 2.0 * dot + 3.0 * vop
+    elif method == "pipecg":
+        per_iter = matvec + 2.0 * p.tree(pr, 2, b) + 11.0 * vop
+    elif method == "bicg":
+        per_iter = matvec + matvec_t + 3.0 * dot + 7.0 * vop
+    elif method == "bicgstab":
+        per_iter = 2.0 * matvec + 5.0 * dot + 6.0 * vop
+    elif method == "gmres":
+        m = max(restart, 1)
+        per_iter = matvec + (m / 2.0 + 1.0) * (dot + vop) + 2.0 * vop
+    else:
+        raise KeyError(method)
+    return iters * per_iter
+
+
+def iter_makespan_fused(method, n, iters, restart, p, b):
+    t = p.tile
+    kt = ceil_div(n, t)
+    pr, pc = p.pr, p.pc
+    my_rows = ceil_div(kt, pr)
+    my_cols = ceil_div(kt, pc)
+    my_tiles = my_rows * my_cols
+    vec_elems = my_rows * t
+
+    a_fits = my_tiles * t * t * b <= p.device_mem
+    if p.engine.pcie_bw > 0.0 and a_fits:
+        gemv = p.op_resident("gemv", b) + p.xfer(2 * t, b)
+        a_load = p.xfer(my_tiles * t * t, b)
+    else:
+        gemv = p.op("gemv", b)
+        a_load = 0.0
+    matvec = (
+        p.ring(pr, vec_elems, b)
+        + my_tiles * (gemv + p.blas1(t, b))
+        + 2.0 * p.tree(pc, vec_elems, b)
+    )
+    dot = my_rows * p.blas1(t, b) + 2.0 * p.tree(pr, 1, b)
+    vop = my_rows * p.blas1(t, b)
+    axpy_norm2 = p.blas1_fused(vec_elems, 3, 4, b) + 2.0 * p.tree(pr, 1, b)
+    axpy_norm2_dot = p.blas1_fused(vec_elems, 4, 6, b) + 2.0 * p.tree(pr, 2, b)
+    norm2_dot = p.blas1_fused(vec_elems, 2, 4, b) + 2.0 * p.tree(pr, 2, b)
+    xpay = p.blas1_fused(vec_elems, 3, 2, b)
+
+    if iters == 0:
+        return 0.0
+    if method == "cg":
+        per_iter = matvec + dot + vop + axpy_norm2 + xpay
+    elif method == "pipecg":
+        per_iter = (
+            matvec
+            + p.blas1_fused(vec_elems, 2, 4, b)
+            + 2.0 * p.tree(pr, 2, b)
+            + 3.0 * xpay
+            + 3.0 * vop
+        )
+    elif method == "bicgstab":
+        per_iter = (
+            2.0 * matvec + dot + axpy_norm2 + norm2_dot + 3.0 * vop
+            + axpy_norm2_dot + xpay
+        )
+    else:
+        return iter_makespan(method, n, iters, restart, p, b)
+    return iters * per_iter + a_load
+
+
+def sparse_cg_terms(n, nnz, p, b):
+    t = p.tile
+    kt = ceil_div(n, t)
+    pr = p.pr
+    my_rows = ceil_div(kt, pr)
+    vec_elems = my_rows * t
+    local_nnz = ceil_div(nnz, pr)
+    ring = p.ring(pr, vec_elems, b)
+    spmv = spmv_cost_total(p.engine, local_nnz, vec_elems, vec_elems, b)
+    dot = my_rows * p.blas1(t, b) + 2.0 * p.tree(pr, 1, b)
+    vop = my_rows * p.blas1(t, b)
+    return ring, spmv, dot, vop
+
+
+def sparse_iter_makespan(method, n, nnz, iters, restart, p, b):
+    t = p.tile
+    kt = ceil_div(n, t)
+    pr = p.pr
+    my_rows = ceil_div(kt, pr)
+    vec_elems = my_rows * t
+    full_elems = kt * t
+    local_nnz = ceil_div(nnz, pr)
+    ring, spmv, dot, vop = sparse_cg_terms(n, nnz, p, b)
+    matvec = ring + spmv
+    matvec_t = spmv_cost_total(
+        p.engine, local_nnz, vec_elems, full_elems, b
+    ) + 2.0 * p.tree(pr, full_elems, b)
+    if method == "cg":
+        per_iter = matvec + 2.0 * dot + 3.0 * vop
+    elif method == "pipecg":
+        per_iter = matvec + 2.0 * p.tree(pr, 2, b) + 11.0 * vop
+    elif method == "bicg":
+        per_iter = matvec + matvec_t + 3.0 * dot + 7.0 * vop
+    elif method == "bicgstab":
+        per_iter = 2.0 * matvec + 5.0 * dot + 6.0 * vop
+    elif method == "gmres":
+        m = max(restart, 1)
+        per_iter = matvec + (m / 2.0 + 1.0) * (dot + vop) + 2.0 * vop
+    else:
+        raise KeyError(method)
+    return iters * per_iter
+
+
+def sparse_iter_makespan_fused(method, n, nnz, iters, restart, p, b):
+    t = p.tile
+    kt = ceil_div(n, t)
+    pr = p.pr
+    my_rows = ceil_div(kt, pr)
+    vec_elems = my_rows * t
+    ring, spmv, dot, vop = sparse_cg_terms(n, nnz, p, b)
+    matvec = ring + spmv
+    axpy_norm2 = p.blas1_fused(vec_elems, 3, 4, b) + 2.0 * p.tree(pr, 1, b)
+    axpy_norm2_dot = p.blas1_fused(vec_elems, 4, 6, b) + 2.0 * p.tree(pr, 2, b)
+    norm2_dot = p.blas1_fused(vec_elems, 2, 4, b) + 2.0 * p.tree(pr, 2, b)
+    xpay = p.blas1_fused(vec_elems, 3, 2, b)
+    if method == "cg":
+        per_iter = matvec + dot + vop + axpy_norm2 + xpay
+    elif method == "pipecg":
+        per_iter = (
+            matvec
+            + p.blas1_fused(vec_elems, 2, 4, b)
+            + 2.0 * p.tree(pr, 2, b)
+            + 3.0 * xpay
+            + 3.0 * vop
+        )
+    elif method == "bicgstab":
+        per_iter = (
+            2.0 * matvec + dot + axpy_norm2 + norm2_dot + 3.0 * vop
+            + axpy_norm2_dot + xpay
+        )
+    else:
+        return sparse_iter_makespan(method, n, nnz, iters, restart, p, b)
+    return iters * per_iter
+
+
+def sparse_cg_split_makespan(n, nnz, iters, diag_frac, p, b):
+    ring, spmv, dot, vop = sparse_cg_terms(n, nnz, p, b)
+    matvec = max(ring, diag_frac * spmv) + (1.0 - diag_frac) * spmv
+    return iters * (matvec + 2.0 * dot + 3.0 * vop)
+
+
+def sparse_pipecg_overlap_makespan(n, nnz, iters, diag_frac, p, b):
+    ring, spmv, _dot, vop = sparse_cg_terms(n, nnz, p, b)
+    matvec = max(ring, diag_frac * spmv) + (1.0 - diag_frac) * spmv
+    reduction = 2.0 * p.tree(p.pr, 2, b)
+    return iters * (max(matvec, reduction) + 11.0 * vop)
+
+
+# ---------------------------------------------------------------------------
+# Bench-row generation (mirrors rust/benches/{overlap,residency}.rs)
+# ---------------------------------------------------------------------------
+
+PAPER_RANKS = (1, 2, 4, 8, 16)
+PAPER_N = 60_000
+STENCIL_DIAG_FRAC = 0.9
+
+
+def params(ranks, gpu, swap_fraction=0.5):
+    pr, pc = near_square(ranks)
+    return ModelParams(
+        tile=256,
+        pr=pr,
+        pc=pc,
+        net=gigabit_ethernet(),
+        engine=gtx280_cublas() if gpu else q6600_atlas(),
+        panel_cpu=q6600_atlas(),
+        swap_fraction=swap_fraction,
+    )
+
+
+def overlap_rows():
+    """Rows of BENCH_overlap.json (rust/benches/overlap.rs)."""
+    grid = 1_000
+    sparse_n, nnz = grid * grid, 5 * grid * grid - 4 * grid
+    iters = 100
+    rows = []
+    for ranks in PAPER_RANKS:
+        for gpu in (False, True):
+            p = params(ranks, gpu)
+            engine = "MPI+CUDA" if gpu else "MPI+ATLAS"
+            rows.append((
+                "LU", engine, PAPER_N, ranks,
+                lu_makespan(PAPER_N, p, 4), lu_makespan_lookahead(PAPER_N, p, 4),
+            ))
+            rows.append((
+                "SUMMA", engine, PAPER_N, ranks,
+                summa_makespan(PAPER_N, p, 4, False), summa_makespan(PAPER_N, p, 4, True),
+            ))
+            if not gpu:
+                rows.append((
+                    "sparse CG", engine, sparse_n, ranks,
+                    sparse_iter_makespan("cg", sparse_n, nnz, iters, 30, p, 8),
+                    sparse_cg_split_makespan(sparse_n, nnz, iters, STENCIL_DIAG_FRAC, p, 8),
+                ))
+                rows.append((
+                    "pipelined CG", engine, sparse_n, ranks,
+                    sparse_iter_makespan("pipecg", sparse_n, nnz, iters, 30, p, 8),
+                    sparse_pipecg_overlap_makespan(
+                        sparse_n, nnz, iters, STENCIL_DIAG_FRAC, p, 8
+                    ),
+                ))
+    return rows
+
+
+def residency_rows():
+    """Rows of BENCH_residency.json (rust/benches/residency.rs): each row is
+    (kernel, engine, n, ranks, streaming, cached, strict)."""
+    grid = 1_000
+    sparse_n, nnz = grid * grid, 5 * grid * grid - 4 * grid
+    iters = 100
+    rows = []
+    for ranks in PAPER_RANKS:
+        for gpu in (False, True):
+            p = params(ranks, gpu)
+            engine = "MPI+CUDA" if gpu else "MPI+ATLAS"
+            rows.append((
+                "LU", engine, PAPER_N, ranks,
+                lu_makespan_lookahead(PAPER_N, p, 4),
+                lu_makespan_resident(PAPER_N, p, 4),
+                gpu,
+            ))
+            rows.append((
+                "Cholesky", engine, PAPER_N, ranks,
+                chol_makespan(PAPER_N, p, 4),
+                chol_makespan_resident(PAPER_N, p, 4),
+                gpu,
+            ))
+            rows.append((
+                "SUMMA", engine, PAPER_N, ranks,
+                summa_makespan(PAPER_N, p, 4, True),
+                summa_makespan_resident(PAPER_N, p, 4, True),
+                True,
+            ))
+            for m, name in (("cg", "CG"), ("pipecg", "pipelined CG"),
+                            ("bicgstab", "BiCGSTAB")):
+                rows.append((
+                    name, engine, PAPER_N, ranks,
+                    iter_makespan(m, PAPER_N, iters, 30, p, 4),
+                    iter_makespan_fused(m, PAPER_N, iters, 30, p, 4),
+                    True,
+                ))
+            if not gpu:
+                for m, name in (("cg", "sparse CG"), ("pipecg", "sparse pipelined CG")):
+                    rows.append((
+                        name, engine, sparse_n, ranks,
+                        sparse_iter_makespan(m, sparse_n, nnz, iters, 30, p, 8),
+                        sparse_iter_makespan_fused(m, sparse_n, nnz, iters, 30, p, 8),
+                        True,
+                    ))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Committed-artifact rendering (byte-identical to the rust benches' output)
+# ---------------------------------------------------------------------------
+
+
+def _rust_e6(x):
+    """Rust's `{:.6e}`: no '+' sign, no zero-padded exponent."""
+    m, e = f"{x:.6e}".split("e")
+    return f"{m}e{int(e)}"
+
+
+def render_overlap_json():
+    """The exact bytes `cargo bench --bench overlap` writes."""
+    rows = overlap_rows()
+    lines = ['{', '  "network": "gigabit_ethernet",', '  "entries": [']
+    for i, (kernel, engine, n, ranks, blocking, overlapped) in enumerate(rows):
+        comma = "," if i + 1 < len(rows) else ""
+        lines.append(
+            f'    {{"kernel": "{kernel}", "engine": "{engine}", "n": {n}, '
+            f'"ranks": {ranks}, "blocking_secs": {_rust_e6(blocking)}, '
+            f'"overlapped_secs": {_rust_e6(overlapped)}, '
+            f'"hidden_frac": {1.0 - overlapped / blocking:.4f}}}{comma}'
+        )
+    return "\n".join(lines + ["  ]", "}", ""])
+
+
+def render_residency_json():
+    """The exact bytes `cargo bench --bench residency` writes."""
+    rows = residency_rows()
+    lines = ['{', '  "network": "gigabit_ethernet",',
+             f'  "device_mem_bytes": {DEFAULT_DEVICE_MEM},', '  "entries": [']
+    for i, (kernel, engine, n, ranks, streaming, cached, _strict) in enumerate(rows):
+        comma = "," if i + 1 < len(rows) else ""
+        lines.append(
+            f'    {{"kernel": "{kernel}", "engine": "{engine}", "n": {n}, '
+            f'"ranks": {ranks}, "streaming_secs": {_rust_e6(streaming)}, '
+            f'"cached_secs": {_rust_e6(cached)}, '
+            f'"saved_frac": {1.0 - cached / streaming:.4f}}}{comma}'
+        )
+    return "\n".join(lines + ["  ]", "}", ""])

@@ -75,6 +75,31 @@ def test_gemm_update_property(mi, ki, dt, seed):
     np.testing.assert_allclose(got, ref.ref_gemm_update(c, a, b), **_tol(dt))
 
 
+@settings(max_examples=15, deadline=None)
+@given(
+    mi=st.integers(1, 2),
+    ki=st.integers(1, 3),
+    dt=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_acc_property(mi, ki, dt, seed):
+    m = mi * B
+    k = ki * B
+    rng = np.random.default_rng(seed)
+    c = _rand(rng, (m, m), dt)
+    a = _rand(rng, (m, k), dt)
+    b = _rand(rng, (k, m), dt)
+    got = gemm_k.gemm_acc(c, a, b)
+    np.testing.assert_allclose(got, ref.ref_gemm_acc(c, a, b), **_tol(dt))
+
+
+def test_gemm_acc_zero_ab_is_identity():
+    rng = np.random.default_rng(3)
+    c = _rand(rng, (128, 128), jnp.float32)
+    z = jnp.zeros((128, 128), jnp.float32)
+    np.testing.assert_allclose(gemm_k.gemm_acc(c, z, z), c, rtol=0, atol=0)
+
+
 def test_gemm_block_shape_invariance():
     """Different Pallas block shapes must give identical results."""
     rng = np.random.default_rng(0)

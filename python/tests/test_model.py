@@ -51,7 +51,7 @@ def _args_for(name, rng, t, dtype):
     r = lambda shape: jnp.asarray(rng.standard_normal(shape), dtype=dt)
     if name in ("gemm",):
         return (r((t, t)), r((t, t)))
-    if name == "gemm_update":
+    if name in ("gemm_update", "gemm_acc"):
         return (r((t, t)), r((t, t)), r((t, t)))
     if name in ("gemv", "gemv_t"):
         return (r((t, t)), r((t,)))
@@ -84,6 +84,7 @@ def _args_for(name, rng, t, dtype):
 
 _REF = {
     "gemm": ref.ref_gemm,
+    "gemm_acc": ref.ref_gemm_acc,
     "gemm_update": ref.ref_gemm_update,
     "gemv": ref.ref_gemv,
     "gemv_t": lambda a, x: ref.ref_gemv(a.T, x),

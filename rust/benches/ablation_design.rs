@@ -35,6 +35,7 @@ fn main() {
             engine: gpu,
             panel_cpu: cpu,
             swap_fraction: 0.5,
+            device_mem: cuplss::accel::DEFAULT_DEVICE_MEM,
         };
         let lu = lu_makespan::<f32>(n, &p);
         let it = iter_makespan::<f32>(IterMethod::Bicgstab, n, 100, 30, &p);
@@ -53,6 +54,7 @@ fn main() {
             engine: cpu,
             panel_cpu: cpu,
             swap_fraction: 0.5,
+            device_mem: cuplss::accel::DEFAULT_DEVICE_MEM,
         };
         let lu = lu_makespan::<f32>(n, &p);
         if lu < best.1 {

@@ -30,6 +30,7 @@ fn params(engine: ComputeProfile, net: NetworkModel) -> ModelParams {
         engine,
         panel_cpu: ComputeProfile::q6600_atlas(),
         swap_fraction: 0.5,
+        device_mem: cuplss::accel::DEFAULT_DEVICE_MEM,
     }
 }
 

@@ -54,6 +54,7 @@ fn params(ranks: usize, gpu: bool) -> ModelParams {
         },
         panel_cpu: ComputeProfile::q6600_atlas(),
         swap_fraction: 0.5,
+        device_mem: cuplss::accel::DEFAULT_DEVICE_MEM,
     }
 }
 

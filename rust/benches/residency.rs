@@ -1,0 +1,205 @@
+//! Bench: paper §3 copy-per-call streaming vs device residency + fused
+//! BLAS-1 — the printed number behind the tile-cache subsystem
+//! (`DESIGN.md` §12).
+//!
+//! For every paper rank count and both engine arms on the gigabit network,
+//! evaluates the analytic model in its streaming and residency/fused forms
+//! for the refactored hot paths:
+//!
+//! * **LU / Cholesky** — trailing updates over once-streamed broadcast
+//!   panels and device-resident trailing tiles;
+//! * **SUMMA** — fused `gemm_acc` with device-resident C;
+//! * **CG / pipelined CG / BiCGSTAB** — resident matvec operands (budget
+//!   permitting) + fused BLAS-1 chains; the sparse CG rows isolate the
+//!   fusion win (sparse operands run host-side).
+//!
+//! Emits `BENCH_residency.json` and asserts the acceptance shape: cached
+//! `<=` streaming on *every* configuration, strictly smaller wherever
+//! `pcie_bw > 0` or a BLAS-1 chain was fused.
+//!
+//! ```sh
+//! cargo bench --bench residency
+//! ```
+
+use cuplss::accel::{ComputeProfile, DEFAULT_DEVICE_MEM};
+use cuplss::bench_harness::model::{
+    chol_makespan, chol_makespan_resident, iter_makespan, iter_makespan_fused,
+    lu_makespan_lookahead, lu_makespan_resident, sparse_iter_makespan,
+    sparse_iter_makespan_fused, summa_makespan, summa_makespan_resident,
+};
+use cuplss::bench_harness::{ModelParams, PAPER_N, PAPER_RANKS};
+use cuplss::comm::NetworkModel;
+use cuplss::mesh::MeshShape;
+use cuplss::solvers::IterMethod;
+use cuplss::util::fmt;
+
+struct Row {
+    kernel: &'static str,
+    engine: &'static str,
+    n: usize,
+    ranks: usize,
+    streaming: f64,
+    cached: f64,
+    /// Must the cached arm win strictly (PCIe to save, or launches fused)?
+    strict: bool,
+}
+
+fn params(ranks: usize, gpu: bool) -> ModelParams {
+    ModelParams {
+        tile: 256,
+        shape: MeshShape::near_square(ranks),
+        net: NetworkModel::gigabit_ethernet(),
+        engine: if gpu {
+            ComputeProfile::gtx280_cublas()
+        } else {
+            ComputeProfile::q6600_atlas()
+        },
+        panel_cpu: ComputeProfile::q6600_atlas(),
+        swap_fraction: 0.5,
+        device_mem: DEFAULT_DEVICE_MEM,
+    }
+}
+
+fn main() {
+    let grid = 1_000usize;
+    let (sparse_n, nnz) = (grid * grid, 5 * grid * grid - 4 * grid);
+    let iters = 100usize;
+    let mut rows: Vec<Row> = Vec::new();
+
+    for &ranks in PAPER_RANKS {
+        for gpu in [false, true] {
+            let p = params(ranks, gpu);
+            let engine = if gpu { "MPI+CUDA" } else { "MPI+ATLAS" };
+            rows.push(Row {
+                kernel: "LU",
+                engine,
+                n: PAPER_N,
+                ranks,
+                streaming: lu_makespan_lookahead::<f32>(PAPER_N, &p),
+                cached: lu_makespan_resident::<f32>(PAPER_N, &p),
+                // Host arm: LU charges identically (nothing streams).
+                strict: gpu,
+            });
+            rows.push(Row {
+                kernel: "Cholesky",
+                engine,
+                n: PAPER_N,
+                ranks,
+                streaming: chol_makespan::<f32>(PAPER_N, &p),
+                cached: chol_makespan_resident::<f32>(PAPER_N, &p),
+                strict: gpu,
+            });
+            rows.push(Row {
+                kernel: "SUMMA",
+                engine,
+                n: PAPER_N,
+                ranks,
+                // The cached arm also folds the host axpy into gemm_acc,
+                // so it must win strictly on both arms.
+                streaming: summa_makespan::<f32>(PAPER_N, &p, true),
+                cached: summa_makespan_resident::<f32>(PAPER_N, &p, true),
+                strict: true,
+            });
+            for (m, name) in [
+                (IterMethod::Cg, "CG"),
+                (IterMethod::PipeCg, "pipelined CG"),
+                (IterMethod::Bicgstab, "BiCGSTAB"),
+            ] {
+                rows.push(Row {
+                    kernel: name,
+                    engine,
+                    n: PAPER_N,
+                    ranks,
+                    streaming: iter_makespan::<f32>(m, PAPER_N, iters, 30, &p),
+                    cached: iter_makespan_fused::<f32>(m, PAPER_N, iters, 30, &p),
+                    // Fused BLAS-1 wins on both arms.
+                    strict: true,
+                });
+            }
+            if !gpu {
+                // Sparse operands run host-side: pure fusion rows.
+                for (m, name) in [
+                    (IterMethod::Cg, "sparse CG"),
+                    (IterMethod::PipeCg, "sparse pipelined CG"),
+                ] {
+                    rows.push(Row {
+                        kernel: name,
+                        engine,
+                        n: sparse_n,
+                        ranks,
+                        streaming: sparse_iter_makespan::<f64>(m, sparse_n, nnz, iters, 30, &p),
+                        cached: sparse_iter_makespan_fused::<f64>(
+                            m, sparse_n, nnz, iters, 30, &p,
+                        ),
+                        strict: true,
+                    });
+                }
+            }
+        }
+    }
+
+    // Table for the terminal.
+    let header = ["kernel", "engine", "P", "streaming", "cached", "saved"];
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.kernel.to_string(),
+                r.engine.to_string(),
+                r.ranks.to_string(),
+                fmt::secs(r.streaming),
+                fmt::secs(r.cached),
+                format!("{:.1}%", (1.0 - r.cached / r.streaming) * 100.0),
+            ]
+        })
+        .collect();
+    println!("== Streaming (paper §3 flow) vs device residency + fusion ==");
+    println!("{}", fmt::table(&header, &body));
+
+    // Acceptance shape.
+    for r in &rows {
+        assert!(
+            r.cached <= r.streaming * (1.0 + 1e-9),
+            "{} {} P={}: cached {} > streaming {}",
+            r.kernel,
+            r.engine,
+            r.ranks,
+            r.cached,
+            r.streaming
+        );
+        if r.strict {
+            assert!(
+                r.cached < r.streaming,
+                "{} {} P={}: residency/fusion must strictly win",
+                r.kernel,
+                r.engine,
+                r.ranks
+            );
+        }
+    }
+
+    // BENCH_residency.json (hand-rolled: the offline crate set has no serde).
+    let mut json = format!(
+        "{{\n  \"network\": \"gigabit_ethernet\",\n  \"device_mem_bytes\": {DEFAULT_DEVICE_MEM},\n  \"entries\": [\n"
+    );
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"engine\": \"{}\", \"n\": {}, \"ranks\": {}, \
+             \"streaming_secs\": {:.6e}, \"cached_secs\": {:.6e}, \"saved_frac\": {:.4}}}{}\n",
+            r.kernel,
+            r.engine,
+            r.n,
+            r.ranks,
+            r.streaming,
+            r.cached,
+            1.0 - r.cached / r.streaming,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_residency.json", &json).expect("write BENCH_residency.json");
+    println!(
+        "wrote BENCH_residency.json ({} entries); residency + fusion never lose.",
+        rows.len()
+    );
+}

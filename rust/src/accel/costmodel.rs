@@ -32,8 +32,8 @@ impl OpClass {
     /// Classify an op by its artifact name.
     pub fn of(op: &str) -> OpClass {
         match op {
-            "gemm" | "gemm_update" | "gemm_nt_update" | "potrf" | "trsm_llu" | "trsm_ru"
-            | "trsm_rlt" => OpClass::Blas3,
+            "gemm" | "gemm_acc" | "gemm_update" | "gemm_nt_update" | "potrf" | "trsm_llu"
+            | "trsm_ru" | "trsm_rlt" => OpClass::Blas3,
             "gemv" | "gemv_t" | "gemv_update" | "trsv_lu" | "trsv_l" | "trsv_u" | "trsv_lt" => {
                 OpClass::Blas2
             }
@@ -120,7 +120,7 @@ impl ComputeProfile {
     ///   device (drives the memory-bandwidth bound for BLAS-1/2);
     /// * `stream_bytes` — bytes that cross the host<->device link *per
     ///   call* (device-resident operands excluded; see
-    ///   [`super::engine::op_stream_elems`]).
+    ///   [`super::engine::op_operand_elems`] and [`super::TileCache`]).
     pub fn op_cost<S: Scalar>(
         &self,
         class: OpClass,

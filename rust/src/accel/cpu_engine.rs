@@ -26,11 +26,6 @@ impl CpuEngine {
         CpuEngine { tile, profile }
     }
 
-    /// The active profile.
-    pub fn profile(&self) -> &ComputeProfile {
-        &self.profile
-    }
-
     fn cost<S: Scalar>(&self, op: &str) -> OpCost {
         tile_op_cost::<S>(&self.profile, op, self.tile)
     }
@@ -45,10 +40,20 @@ impl<S: Scalar> Engine<S> for CpuEngine {
         self.tile
     }
 
+    fn profile(&self) -> &ComputeProfile {
+        &self.profile
+    }
+
     fn gemm(&self, a: &[S], b: &[S], c: &mut [S]) -> Result<OpCost> {
         let t = self.tile;
         linalg::gemm(t, t, t, a, b, c);
         Ok(self.cost::<S>("gemm"))
+    }
+
+    fn gemm_acc(&self, c: &mut [S], a: &[S], b: &[S]) -> Result<OpCost> {
+        let t = self.tile;
+        linalg::gemm_add(t, t, t, a, b, c);
+        Ok(self.cost::<S>("gemm_acc"))
     }
 
     fn gemm_update(&self, c: &mut [S], a: &[S], b: &[S]) -> Result<OpCost> {

@@ -22,7 +22,7 @@ use crate::{Result, Scalar};
 pub fn op_flops(op: &str, t: u64) -> u64 {
     match op {
         "gemm" => 2 * t * t * t,
-        "gemm_update" | "gemm_nt_update" => 2 * t * t * t + t * t,
+        "gemm_update" | "gemm_nt_update" | "gemm_acc" => 2 * t * t * t + t * t,
         "gemv" | "gemv_t" => 2 * t * t,
         "gemv_update" => 2 * t * t + t,
         "potrf" => t * t * t / 3,
@@ -41,8 +41,18 @@ pub trait Engine<S: Scalar>: Send + Sync {
     /// Tile edge this engine is built for.
     fn tile(&self) -> usize;
 
+    /// The cost profile tile ops are charged at.  Residency-aware callers
+    /// ([`crate::pblas::Ctx::charge_op`]) read `pcie_bw` from here to
+    /// re-price the transfer share of an [`OpCost`] after consulting the
+    /// per-rank [`super::TileCache`].
+    fn profile(&self) -> &super::costmodel::ComputeProfile;
+
     /// `C = A·B`.
     fn gemm(&self, a: &[S], b: &[S], c: &mut [S]) -> Result<OpCost>;
+    /// `C += A·B` (SUMMA local accumulation: folds the former
+    /// gemm-then-host-axpy pair into one kernel, so `C` can stay
+    /// device-resident across the `kk` panel steps).
+    fn gemm_acc(&self, c: &mut [S], a: &[S], b: &[S]) -> Result<OpCost>;
     /// `C -= A·B` (delayed rank-k update).
     fn gemm_update(&self, c: &mut [S], a: &[S], b: &[S]) -> Result<OpCost>;
     /// `C -= A·B^T` (symmetric trailing update).
@@ -104,6 +114,42 @@ pub trait Engine<S: Scalar>: Send + Sync {
     /// Modelled cost of a BLAS-1 op of `len` elements on this engine.
     fn blas1_cost(&self, len: usize) -> OpCost;
 
+    /// Modelled cost of one **fused** BLAS-1 kernel over a rank's whole
+    /// local vector: `len` elements, `streams` vector-length operand
+    /// streams through memory, `flops` total — one launch, one memory
+    /// pass (Rupp et al., *Pipelined Iterative Solvers with Kernel Fusion
+    /// for GPUs*).  Unlike [`Engine::blas1_cost`] (which both engines keep
+    /// host-side), a fused kernel may run on **this engine's own
+    /// profile**: fusion is what makes device-side BLAS-1 profitable once
+    /// the vectors are cache-resident.  The dispatch picks whichever arm
+    /// is cheaper per call — below a crossover length the device launch
+    /// overhead still loses to the host pass, and a sane runtime keeps
+    /// tiny fused ops on the host exactly like the unfused ones.  The
+    /// host arm is pinned to the Q6600 profile, same as
+    /// [`super::XlaEngine`]'s `blas1_cost`; the analytic twin
+    /// (`ModelParams::blas1_fused`) prices that arm from its `panel_cpu`
+    /// field, so ablations that swap `panel_cpu` away from the Q6600 must
+    /// expect live-vs-model drift on the dispatch crossover.
+    fn blas1_fused_cost(&self, len: usize, streams: usize, flops: u64) -> OpCost {
+        let bytes = streams * len * S::BYTES;
+        let own = self.profile().op_cost::<S>(
+            super::costmodel::OpClass::Blas1,
+            flops,
+            bytes,
+            bytes,
+        );
+        if self.profile().pcie_bw <= 0.0 {
+            return own;
+        }
+        let host = super::costmodel::ComputeProfile::q6600_atlas().op_cost::<S>(
+            super::costmodel::OpClass::Blas1,
+            flops,
+            bytes,
+            bytes,
+        );
+        if host.total() < own.total() { host } else { own }
+    }
+
     /// Host-side dot with this engine's modelled cost.
     fn dot(&self, x: &[S], y: &[S]) -> (S, OpCost) {
         (crate::linalg::dot(x, y), self.blas1_cost(x.len()))
@@ -128,22 +174,10 @@ pub trait Engine<S: Scalar>: Send + Sync {
     }
 }
 
-/// Elements that *stream* host<->device per invocation of `op`
-/// (`(in_elems, out_elems)`).
-///
-/// The paper's §3 flow copies every operand per call ("Step 4: Copy matrices
-/// from host memory to device memory ... Step 7: Copy back the results"), so
-/// every operand streams.  This per-call PCIe traffic is precisely why the
-/// paper finds the CUDA arm's gain "not very high" for the memory-bound
-/// iterative kernels while the compute-bound factorisation updates still win
-/// big — the model keeps that behaviour.
-pub fn op_stream_elems(op: &str, t: usize) -> (usize, usize) {
-    op_touched_elems(op, t)
-}
-
 /// Every tile op the engines implement — used by warmup and tests.
 pub const TILE_OPS: &[&str] = &[
     "gemm",
+    "gemm_acc",
     "gemm_update",
     "gemm_nt_update",
     "gemv",
@@ -159,18 +193,36 @@ pub const TILE_OPS: &[&str] = &[
     "potrf",
 ];
 
-/// Total elements an op touches (device-memory footprint, `(in, out)`).
-pub fn op_touched_elems(op: &str, t: usize) -> (usize, usize) {
+/// Per-operand traffic decomposition of one tile-op call: element counts of
+/// the *read* operands (in call-argument order) and of the single written
+/// operand.  This is the **one source of truth** for per-call traffic: the
+/// paper §3 streaming totals ([`op_touched_elems`]) are its sums, and the
+/// residency layer ([`super::TileCache`]) prices each operand individually
+/// so a cache-resident operand stops streaming.  A read-write operand (the
+/// `C` of the update ops) appears in both lists.
+pub fn op_operand_elems(op: &str, t: usize) -> (Vec<usize>, usize) {
+    let t2 = t * t;
     match op {
-        "gemm" => (2 * t * t, t * t),
-        "gemm_update" | "gemm_nt_update" => (3 * t * t, t * t),
-        "gemv" | "gemv_t" => (t * t + t, t),
-        "gemv_update" => (t * t + 2 * t, t),
-        "potrf" => (t * t, t * t),
-        "trsm_llu" | "trsm_ru" | "trsm_rlt" => (2 * t * t, t * t),
-        "trsv_lu" | "trsv_l" | "trsv_u" | "trsv_lt" => (t * t + t, t),
+        "gemm" => (vec![t2, t2], t2),
+        "gemm_acc" | "gemm_update" | "gemm_nt_update" => (vec![t2, t2, t2], t2),
+        "gemv" | "gemv_t" => (vec![t2, t], t),
+        "gemv_update" => (vec![t, t2, t], t),
+        "potrf" => (vec![t2], t2),
+        "trsm_llu" | "trsm_ru" | "trsm_rlt" => (vec![t2, t2], t2),
+        "trsv_lu" | "trsv_l" | "trsv_u" | "trsv_lt" => (vec![t2, t], t),
         _ => panic!("unknown op {op:?}"),
     }
+}
+
+/// Total elements an op touches (`(in, out)`) — the sums of
+/// [`op_operand_elems`].  Under the paper's §3 flow ("Step 4: Copy matrices
+/// from host memory to device memory ... Step 7: Copy back the results")
+/// this is also exactly what *streams* host<->device per call, which is why
+/// the paper finds the CUDA arm's gain "not very high" for memory-bound
+/// kernels; the residency subsystem exists to beat precisely this tax.
+pub fn op_touched_elems(op: &str, t: usize) -> (usize, usize) {
+    let (ins, out) = op_operand_elems(op, t);
+    (ins.iter().sum(), out)
 }
 
 /// Flop count of a CSR matvec with `nnz` stored entries (one multiply-add
@@ -200,19 +252,20 @@ pub fn spmv_cost<S: Scalar>(
 }
 
 /// Helper shared by engine impls and the analytic model: cost of a tile op
-/// under a profile, with the op's standard touched/streamed footprints.
+/// under a profile, with the op's standard touched footprint streaming in
+/// full per call (the paper §3 flow; residency-aware callers re-price the
+/// transfer share afterwards via [`crate::pblas::Ctx::charge_op`]).
 pub fn tile_op_cost<S: Scalar>(
     profile: &super::costmodel::ComputeProfile,
     op: &str,
     tile: usize,
 ) -> OpCost {
     let (tin, tout) = op_touched_elems(op, tile);
-    let (sin, sout) = op_stream_elems(op, tile);
     profile.op_cost::<S>(
         OpClass::of(op),
         op_flops(op, tile as u64),
         (tin + tout) * S::BYTES,
-        (sin + sout) * S::BYTES,
+        (tin + tout) * S::BYTES,
     )
 }
 
@@ -225,10 +278,28 @@ mod tests {
         // spot values from artifacts/manifest.txt
         assert_eq!(op_flops("gemm", 256), 33_554_432);
         assert_eq!(op_flops("gemm_update", 256), 33_619_968);
+        assert_eq!(op_flops("gemm_acc", 256), 33_619_968);
         assert_eq!(op_flops("gemv", 128), 32_768);
         assert_eq!(op_flops("potrf", 128), 699_050);
         assert_eq!(op_flops("trsv_u", 128), 16_384);
         assert_eq!(op_flops("dot", 128), 256);
+    }
+
+    #[test]
+    fn operand_decomposition_sums_to_touched_footprint() {
+        // `op_operand_elems` is the single source of truth; the aggregate
+        // views must be its sums for every op the engines dispatch.
+        for &op in TILE_OPS {
+            let (ins, out) = op_operand_elems(op, 32);
+            let (tin, tout) = op_touched_elems(op, 32);
+            assert_eq!(ins.iter().sum::<usize>(), tin, "{op}");
+            assert_eq!(out, tout, "{op}");
+            assert!(!ins.is_empty() && out > 0, "{op}");
+        }
+        // The update family reads its output tile too (3 ins), gemm doesn't.
+        assert_eq!(op_operand_elems("gemm", 8).0.len(), 2);
+        assert_eq!(op_operand_elems("gemm_acc", 8).0.len(), 3);
+        assert_eq!(op_operand_elems("gemm_update", 8).0.len(), 3);
     }
 
     #[test]

@@ -1,17 +1,21 @@
 //! Local acceleration layer (CUPLSS level 2): the [`Engine`] trait plus its
 //! two implementations — the PJRT-backed [`XlaEngine`] (the paper's
 //! CUDA/CUBLAS path) and the pure-rust [`CpuEngine`] (the serial-ATLAS
-//! ablation path) — and the calibrated hardware cost models that drive the
-//! virtual clock.
+//! ablation path) — the calibrated hardware cost models that drive the
+//! virtual clock, and the device-[`residency`] subsystem ([`TileCache`])
+//! that lets hot paths stop paying the paper's copy-per-call PCIe tax
+//! (`DESIGN.md` §12).
 
 pub mod costmodel;
 pub mod cpu_engine;
 pub mod engine;
+pub mod residency;
 pub mod xla_engine;
 
 pub use costmodel::{ComputeProfile, OpClass, OpCost};
 pub use cpu_engine::CpuEngine;
 pub use engine::{op_flops, Engine, TILE_OPS};
+pub use residency::{BufKey, TileCache, Traffic, DEFAULT_DEVICE_MEM};
 pub use xla_engine::XlaEngine;
 
 use crate::{Result, Scalar};

@@ -47,11 +47,6 @@ impl<S: Scalar> XlaEngine<S> {
         Ok(XlaEngine { tile, profile, exes, _marker: std::marker::PhantomData })
     }
 
-    /// The active profile.
-    pub fn profile(&self) -> &ComputeProfile {
-        &self.profile
-    }
-
     fn exe(&self, op: &'static str) -> &Executable {
         &self.exes[op]
     }
@@ -77,8 +72,18 @@ impl<S: Scalar> Engine<S> for XlaEngine<S> {
         self.tile
     }
 
+    fn profile(&self) -> &ComputeProfile {
+        &self.profile
+    }
+
     fn gemm(&self, a: &[S], b: &[S], c: &mut [S]) -> Result<OpCost> {
         self.run_into("gemm", &[a, b], c)
+    }
+
+    fn gemm_acc(&self, c: &mut [S], a: &[S], b: &[S]) -> Result<OpCost> {
+        let result = self.exe("gemm_acc").run::<S>(&[c, a, b])?;
+        c.copy_from_slice(&result);
+        Ok(self.cost("gemm_acc"))
     }
 
     fn gemm_update(&self, c: &mut [S], a: &[S], b: &[S]) -> Result<OpCost> {
@@ -186,9 +191,13 @@ impl<S: Scalar> Engine<S> for XlaEngine<S> {
     }
 
     fn blas1_cost(&self, len: usize) -> OpCost {
-        // Vector-vector ops stay on the host even in the accelerated arm:
-        // shipping a 1 KiB axpy over PCIe costs more than computing it, so
-        // (like every sane CUBLAS-era code) only matrix kernels offload.
+        // *Unfused* vector-vector ops stay on the host even in the
+        // accelerated arm: shipping a 1 KiB axpy over PCIe costs more than
+        // computing it, so (like every sane CUBLAS-era code) only matrix
+        // kernels offload.  *Fused* BLAS-1 chains are different — the
+        // trait-default `blas1_fused_cost` prices them at this engine's own
+        // (device) profile, because one launch over the whole resident
+        // vector is exactly when offloading starts to pay (DESIGN.md §12).
         ComputeProfile::q6600_atlas().op_cost::<S>(
             super::costmodel::OpClass::Blas1,
             2 * len as u64,

@@ -70,8 +70,17 @@ pub fn calibrate(
                     Workload::DiagDominant | Workload::Spd | Workload::Poisson2d => 0.0,
                     Workload::Econometric => 0.0,
                 },
+                device_mem: crate::accel::DEFAULT_DEVICE_MEM,
             };
-            let model = method_makespan::<f64>(method, n, iters, 30, &params);
+            // Iterative solvers run on the fused BLAS-1 kernels since the
+            // residency PR, so the fused twin is the one that mirrors the
+            // live charges (on the host arm residency itself is a no-op).
+            let model = match method {
+                Method::Iterative(m) => {
+                    super::model::iter_makespan_fused::<f64>(m, n, iters, 30, &params)
+                }
+                _ => method_makespan::<f64>(method, n, iters, 30, &params),
+            };
             out.push(CalibrationPoint { n, ranks: p, live: report.makespan(), model });
         }
     }

@@ -56,6 +56,7 @@ fn params_for(engine: EngineKind, ranks: usize, tile: usize, net: NetworkModel) 
         // The paper's fixture is a general dense matrix: partial pivoting
         // interchanges on roughly half the elimination steps.
         swap_fraction: 0.5,
+        device_mem: crate::accel::DEFAULT_DEVICE_MEM,
     }
 }
 

@@ -27,6 +27,11 @@ pub struct RankMetrics {
     /// Virtual seconds of communication latency hidden by overlap
     /// (what blocking would have charged minus what `wait` charged).
     pub wait_saved: f64,
+    /// PCIe bytes the device-residency layer kept off the host<->device
+    /// link (0 on host profiles — nothing streams there to begin with).
+    pub pcie_saved_bytes: u64,
+    /// Kernel launches eliminated by fused BLAS-1 ops.
+    pub launches_fused: u64,
     /// Wall-clock seconds this rank actually took (calibration data).
     pub wall: f64,
 }
@@ -50,6 +55,8 @@ impl RankMetrics {
             bytes: comm.stats().bytes_sent(),
             max_outstanding_reqs: comm.stats().max_outstanding_reqs(),
             wait_saved: (comm.stats().wait_saved_secs() - tail_backlog).max(0.0),
+            pcie_saved_bytes: comm.stats().pcie_saved_bytes(),
+            launches_fused: comm.stats().launches_fused(),
             wall,
         }
     }
@@ -138,6 +145,16 @@ impl SolveReport {
         self.per_rank.iter().map(|m| m.bytes).sum()
     }
 
+    /// Total PCIe bytes kept off the host<->device link by residency.
+    pub fn total_pcie_saved(&self) -> u64 {
+        self.per_rank.iter().map(|m| m.pcie_saved_bytes).sum()
+    }
+
+    /// Total kernel launches eliminated by fused BLAS-1 ops.
+    pub fn total_launches_fused(&self) -> u64 {
+        self.per_rank.iter().map(|m| m.launches_fused).sum()
+    }
+
     /// Max wall-clock across ranks (the real elapsed time of the run).
     pub fn wall_max(&self) -> f64 {
         self.per_rank.iter().map(|m| m.wall).fold(0.0, f64::max)
@@ -153,7 +170,7 @@ impl SolveReport {
         };
         format!(
             "{} on {:?} n={} P={} [{}]: makespan {}, err {:.2e}, comm {:.0}%, \
-             hidden {}, reqs<={}{}",
+             hidden {}, reqs<={}, pcie saved {}, fused {}{}",
             self.method,
             self.workload,
             self.n,
@@ -164,6 +181,8 @@ impl SolveReport {
             self.comm_fraction() * 100.0,
             crate::util::fmt::secs(self.total_wait_saved()),
             self.max_outstanding_reqs(),
+            crate::util::fmt::bytes(self.total_pcie_saved() as f64),
+            self.total_launches_fused(),
             iter
         )
     }
@@ -184,6 +203,8 @@ mod tests {
             bytes: 100,
             max_outstanding_reqs: 3,
             wait_saved: 0.25,
+            pcie_saved_bytes: 1024,
+            launches_fused: 7,
             wall: 0.01,
         }
     }
@@ -206,7 +227,10 @@ mod tests {
         assert_eq!(r.total_msgs(), 20);
         assert!((r.total_wait_saved() - 0.5).abs() < 1e-12);
         assert_eq!(r.max_outstanding_reqs(), 3);
+        assert_eq!(r.total_pcie_saved(), 2048);
+        assert_eq!(r.total_launches_fused(), 14);
         assert!(r.summary().contains("LU"));
         assert!(r.summary().contains("hidden"));
+        assert!(r.summary().contains("pcie saved"));
     }
 }

@@ -69,6 +69,12 @@ pub struct ClusterConfig {
     pub net: NetworkModel,
     /// Artifact directory (PJRT runtime), used by the accelerated arm.
     pub artifact_dir: String,
+    /// Device residency: keep tiles/vectors device-side across calls
+    /// (`DESIGN.md` §12).  `false` reproduces the paper's §3
+    /// copy-per-call flow.  Never changes results, only PCIe charges.
+    pub residency: bool,
+    /// Device-memory budget for the residency cache, bytes.
+    pub device_mem: usize,
     /// Iterative controls.
     pub iter: IterConfig,
 }
@@ -81,6 +87,8 @@ impl Default for ClusterConfig {
             engine: EngineKind::CpuSerial,
             net: NetworkModel::gigabit_ethernet(),
             artifact_dir: crate::runtime::DEFAULT_ARTIFACT_DIR.to_string(),
+            residency: true,
+            device_mem: crate::accel::DEFAULT_DEVICE_MEM,
             iter: IterConfig::default(),
         }
     }
@@ -131,13 +139,18 @@ impl Cluster {
             make_engine(cfg.engine, cfg.tile, self.runtime.as_ref())?;
         let iter_cfg = cfg.iter;
         let tile = cfg.tile;
+        let (residency, device_mem) = (cfg.residency, cfg.device_mem);
 
         let results = World::run::<S, Result<(RankMetrics, Option<Vec<S>>, Option<(usize, f64, bool)>)>, _>(
             cfg.ranks,
             cfg.net,
             move |comm| {
                 let mesh = Mesh::new(&comm, shape);
-                let ctx = Ctx::new(&mesh, engine.clone());
+                let ctx = if residency {
+                    Ctx::with_device_mem(&mesh, engine.clone(), device_mem)
+                } else {
+                    Ctx::streaming(&mesh, engine.clone())
+                };
                 let desc = Descriptor::new(n, n, tile, shape);
                 let elem = workload.elem::<S>(n);
                 let rhs = workload.rhs::<S>(n);

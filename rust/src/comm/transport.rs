@@ -29,6 +29,8 @@ pub struct CommStats {
     cur_reqs: Cell<u64>,
     max_reqs: Cell<u64>,
     wait_saved: Cell<f64>,
+    pcie_saved: Cell<u64>,
+    launches_fused: Cell<u64>,
 }
 
 impl CommStats {
@@ -62,6 +64,27 @@ impl CommStats {
     /// `busy_until`, so it was not hidden either).
     pub fn wait_saved_secs(&self) -> f64 {
         self.wait_saved.get()
+    }
+
+    /// PCIe bytes the residency layer kept off the host<->device link (0
+    /// on host profiles, where nothing streams in the first place).
+    pub fn pcie_saved_bytes(&self) -> u64 {
+        self.pcie_saved.get()
+    }
+
+    /// Kernel launches eliminated by fused BLAS-1 ops (per fused call: the
+    /// launches the unfused op-per-block sequence would have made, minus
+    /// the one launch actually charged).
+    pub fn launches_fused(&self) -> u64 {
+        self.launches_fused.get()
+    }
+
+    pub(crate) fn add_pcie_saved(&self, bytes: u64) {
+        self.pcie_saved.set(self.pcie_saved.get() + bytes);
+    }
+
+    pub(crate) fn add_launches_fused(&self, n: u64) {
+        self.launches_fused.set(self.launches_fused.get() + n);
     }
 
     fn req_open(&self) {

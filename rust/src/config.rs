@@ -7,6 +7,8 @@
 //! ranks = 16
 //! tile = 256
 //! engine = cuda          # cuda | atlas
+//! residency = true       # device tile cache (false = paper copy-per-call)
+//! device_mem = 1073741824  # residency budget, bytes (GTX 280 = 1 GiB)
 //!
 //! [network]
 //! alpha_us = 50
@@ -110,6 +112,8 @@ impl Config {
                 .get("cluster.artifacts")
                 .unwrap_or(crate::runtime::DEFAULT_ARTIFACT_DIR)
                 .to_string(),
+            residency: self.get_or("cluster.residency", true)?,
+            device_mem: self.get_or("cluster.device_mem", crate::accel::DEFAULT_DEVICE_MEM)?,
             iter: IterConfig {
                 tol: self.get_or("solver.tol", 1e-8)?,
                 max_iter: self.get_or("solver.max_iter", 500)?,
@@ -160,6 +164,21 @@ tol = 1e-6
         assert!((cc.iter.tol - 1e-6).abs() < 1e-18);
         // defaults preserved
         assert_eq!(cc.iter.max_iter, 500);
+        assert!(cc.residency);
+        assert_eq!(cc.device_mem, crate::accel::DEFAULT_DEVICE_MEM);
+    }
+
+    #[test]
+    fn residency_overrides() {
+        let c =
+            Config::parse("[cluster]\nresidency = false\ndevice_mem = 4096\n").unwrap();
+        let cc = c.cluster_config().unwrap();
+        assert!(!cc.residency);
+        assert_eq!(cc.device_mem, 4096);
+        assert!(Config::parse("[cluster]\nresidency = maybe\n")
+            .unwrap()
+            .cluster_config()
+            .is_err());
     }
 
     #[test]

@@ -24,6 +24,11 @@
 //!   (NIC progresses during compute), pipelined SUMMA, split-phase sparse
 //!   matvec and a Ghysels-style pipelined CG — see `DESIGN.md` §11 and
 //!   `cargo bench --bench overlap`;
+//! * **operands stay device-resident**: a per-rank [`accel::TileCache`]
+//!   stops the paper's copy-per-call PCIe tax (operands stream only on
+//!   first touch or after host mutation), and the Krylov BLAS-1 chains run
+//!   as fused one-launch kernels — see `DESIGN.md` §12 and
+//!   `cargo bench --bench residency`;
 //! * the iterative solvers additionally accept **sparse** operands: a
 //!   row-block-distributed CSR format ([`sparse`], [`pblas::pspmv()`]) behind
 //!   the operator-generic [`pblas::LinOp`] trait, with 2-D/3-D Poisson
@@ -42,7 +47,8 @@
 //! See `README.md` for a quickstart, `DESIGN.md` for the substitution
 //! table (what the paper ran on real hardware vs. what this repo
 //! simulates; §10 covers the sparse subsystem, §11 the split-phase comm
-//! layer) and `EXPERIMENTS.md` for the regenerated Figures 3 and 4.
+//! layer, §12 the device-residency and kernel-fusion model) and
+//! `EXPERIMENTS.md` for the regenerated Figures 3 and 4.
 
 pub mod accel;
 pub mod bench_harness;

@@ -39,6 +39,30 @@ pub fn scal<S: Scalar>(alpha: S, x: &mut [S]) {
     }
 }
 
+/// `y = x + beta * y` in one pass — the fused form of `scal(beta, y)`
+/// followed by `axpy(1, x, y)`.  Bit-identical to that pair: IEEE addition
+/// commutes, so `x + beta*y == beta*y + 1*x` exactly.
+pub fn xpay<S: Scalar>(beta: S, x: &[S], y: &mut [S]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi = xi + beta * *yi;
+    }
+}
+
+/// Fused `y += alpha * x; ⟨y, y⟩` — one pass over both vectors instead of
+/// an axpy kernel plus a dot kernel.  The arithmetic is the unfused
+/// sequence's exactly (same axpy loop, then the same 4-way-unrolled dot).
+pub fn axpy_norm2<S: Scalar>(alpha: S, x: &[S], y: &mut [S]) -> S {
+    axpy(alpha, x, y);
+    dot(y, y)
+}
+
+/// Fused `(⟨x, x⟩, ⟨x, y⟩)` — the pipelined-CG reduction pair computed in
+/// one pass; each lane is the plain [`dot`] bit-for-bit.
+pub fn norm2_dot<S: Scalar>(x: &[S], y: &[S]) -> (S, S) {
+    (dot(x, x), dot(x, y))
+}
+
 /// Euclidean norm.
 pub fn nrm2<S: Scalar>(x: &[S]) -> S {
     dot(x, x).sqrt()
@@ -91,6 +115,29 @@ mod tests {
         assert_eq!(y, vec![12.0, 24.0, 36.0]);
         scal(0.5, &mut y);
         assert_eq!(y, vec![6.0, 12.0, 18.0]);
+    }
+
+    #[test]
+    fn fused_ops_match_unfused_sequences_bitwise() {
+        let x: Vec<f64> = (0..37).map(|i| (i as f64 * 0.7).sin()).collect();
+        let y0: Vec<f64> = (0..37).map(|i| (i as f64 * 1.3).cos()).collect();
+        // xpay == scal-then-axpy, bit for bit.
+        let beta = 0.8311;
+        let mut a = y0.clone();
+        scal(beta, &mut a);
+        axpy(1.0, &x, &mut a);
+        let mut b = y0.clone();
+        xpay(beta, &x, &mut b);
+        assert_eq!(a, b);
+        // axpy_norm2 == axpy-then-dot, bit for bit.
+        let mut c = y0.clone();
+        axpy(-0.25, &x, &mut c);
+        let want = dot(&c, &c);
+        let mut d = y0.clone();
+        assert_eq!(axpy_norm2(-0.25, &x, &mut d), want);
+        assert_eq!(c, d);
+        // norm2_dot lanes are the plain dots.
+        assert_eq!(norm2_dot(&x, &y0), (dot(&x, &x), dot(&x, &y0)));
     }
 
     #[test]

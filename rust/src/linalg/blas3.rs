@@ -24,17 +24,27 @@ fn gemm_block<S: Scalar, const SUB: bool>(
     p0: usize,
     p1: usize,
 ) {
+    // Branch-free 4-wide micro-kernel: on dense random tiles a
+    // data-dependent zero-skip per multiply is pure misprediction overhead,
+    // so every `a` element is applied unconditionally; the j-loop is
+    // unrolled 4-wide over unit-stride B and C rows (independent
+    // accumulators keep the FMA pipes full and auto-vectorise cleanly).
     for i in i0..i1 {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
         for p in p0..p1 {
             let aip = if SUB { S::zero() - arow[p] } else { arow[p] };
-            if aip == S::zero() {
-                continue;
-            }
             let brow = &b[p * n..(p + 1) * n];
-            for (cij, &bpj) in crow.iter_mut().zip(brow) {
-                *cij += aip * bpj;
+            let chunks = n / 4;
+            for q in 0..chunks {
+                let j = q * 4;
+                crow[j] += aip * brow[j];
+                crow[j + 1] += aip * brow[j + 1];
+                crow[j + 2] += aip * brow[j + 2];
+                crow[j + 3] += aip * brow[j + 3];
+            }
+            for j in chunks * 4..n {
+                crow[j] += aip * brow[j];
             }
         }
     }
@@ -48,6 +58,22 @@ pub fn gemm<S: Scalar>(m: usize, n: usize, k: usize, a: &[S], b: &[S], c: &mut [
     for v in c.iter_mut() {
         *v = S::zero();
     }
+    for i0 in (0..m).step_by(MC) {
+        let i1 = (i0 + MC).min(m);
+        for p0 in (0..k).step_by(KC) {
+            let p1 = (p0 + KC).min(k);
+            gemm_block::<S, false>(n, k, a, b, c, i0, i1, p0, p1);
+        }
+    }
+}
+
+/// `C += A·B` — the SUMMA local accumulation ([`crate::accel::Engine::gemm_acc`]):
+/// one kernel instead of a fresh-GEMM-plus-host-axpy pair, so `C` can stay
+/// device-resident across panel steps.
+pub fn gemm_add<S: Scalar>(m: usize, n: usize, k: usize, a: &[S], b: &[S], c: &mut [S]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
     for i0 in (0..m).step_by(MC) {
         let i1 = (i0 + MC).min(m);
         for p0 in (0..k).step_by(KC) {
@@ -156,6 +182,54 @@ mod tests {
                 let prod: f64 = (0..k).map(|p| a[i * k + p] * b[j * k + p]).sum();
                 assert!((c[i * n + j] - (c0[i * n + j] - prod)).abs() < 1e-10);
             }
+        }
+    }
+
+    #[test]
+    fn gemm_add_accumulates() {
+        let mut rng = Prng::new(7);
+        for (m, n, k) in [(3, 4, 5), (17, 9, 33), (64, 64, 64), (13, 7, 2)] {
+            let mut a = vec![0.0f64; m * k];
+            let mut b = vec![0.0f64; k * n];
+            let mut c0 = vec![0.0f64; m * n];
+            rng.fill_normal(&mut a);
+            rng.fill_normal(&mut b);
+            rng.fill_normal(&mut c0);
+            let mut c = c0.clone();
+            gemm_add(m, n, k, &a, &b, &mut c);
+            let prod = naive_gemm(m, n, k, &a, &b);
+            for i in 0..m * n {
+                assert!((c[i] - (c0[i] + prod[i])).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_operands_survive_the_branch_free_kernel() {
+        // The old inner loop skipped a == 0 terms; the branch-free kernel
+        // must produce the same result on zero-heavy operands (incl. the
+        // -0.0 corner: 0 - 0.0 multiplies through harmlessly).
+        let mut rng = Prng::new(11);
+        let (m, n, k) = (19, 23, 17);
+        let mut a = vec![0.0f64; m * k];
+        rng.fill_normal(&mut a);
+        for (i, v) in a.iter_mut().enumerate() {
+            if i % 3 != 0 {
+                *v = 0.0;
+            }
+        }
+        let mut b = vec![0.0f64; k * n];
+        rng.fill_normal(&mut b);
+        let mut c = vec![0.0f64; m * n];
+        gemm(m, n, k, &a, &b, &mut c);
+        let want = naive_gemm(m, n, k, &a, &b);
+        for i in 0..m * n {
+            assert!((c[i] - want[i]).abs() < 1e-12);
+        }
+        let mut cs = want.clone();
+        gemm_sub(m, n, k, &a, &b, &mut cs);
+        for v in &cs {
+            assert!(v.abs() < 1e-10, "C - A·B with C = A·B must vanish");
         }
     }
 

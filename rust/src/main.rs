@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! cuplss solve  --workload diagdom --method lu --n 512 --ranks 4 \
-//!               --engine atlas|cuda --tile 128|256 --dtype f32|f64
+//!               --engine atlas|cuda --tile 128|256 --dtype f32|f64 \
+//!               [--streaming] [--device-mem BYTES]
 //! cuplss fig3   [--dp] [--n 60000] [--iters 100]      # model-mode Figure 3
 //! cuplss fig4   [--dp] [--n 60000] [--cholesky]       # model-mode Figure 4
 //! cuplss calibrate [--method lu]                      # live vs model (E8)
@@ -56,6 +57,15 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
         max_iter: args.opt_or("max-iter", cfg.iter.max_iter)?,
         restart: args.opt_or("restart", cfg.iter.restart)?,
     };
+    // --streaming disables the tile cache: every operand pays the paper's
+    // copy-per-call §3 *transfer* accounting again.  The fused BLAS-1
+    // kernels are part of the solvers themselves (bit-identical math, so
+    // there is nothing to A/B) and stay active either way; --device-mem
+    // sizes the cache (bytes, GTX 280 = 1 GiB).
+    if args.has_flag("streaming") {
+        cfg.residency = false;
+    }
+    cfg.device_mem = args.opt_or("device-mem", cfg.device_mem)?;
     Ok(cfg)
 }
 
@@ -93,11 +103,14 @@ fn cmd_solve(args: &Args) -> Result<()> {
     };
     println!("{}", report.summary());
     println!(
-        "  virtual makespan {}   wall {}   msgs {}   volume {}",
+        "  virtual makespan {}   wall {}   msgs {}   volume {}   \
+         pcie saved {}   launches fused {}",
         fmt::secs(report.makespan()),
         fmt::secs(report.wall_max()),
         report.total_msgs(),
         fmt::bytes(report.total_bytes() as f64),
+        fmt::bytes(report.total_pcie_saved() as f64),
+        report.total_launches_fused(),
     );
     for m in &report.per_rank {
         println!(

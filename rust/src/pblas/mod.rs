@@ -24,11 +24,15 @@ pub use linop::LinOp;
 pub use pgemm::pgemm_acc;
 pub use pgemv::{pgemv, pgemv_t};
 pub use pspmv::{pspmv, pspmv_t};
-pub use pvec::{paxpy, pcopy, pdot, pdot_partial, pnorm2, pscal};
+pub use pvec::{
+    paxpy, pcopy, pdot, pdot_partial, pfused_axpy_norm2, pfused_axpy_norm2_dot,
+    pfused_norm2_dot, pfused_norm2_dot_partial, pnorm2, pscal, pxpay,
+};
 
+use std::cell::RefCell;
 use std::sync::Arc;
 
-use crate::accel::{Engine, OpCost};
+use crate::accel::{BufKey, Engine, OpCost, TileCache, DEFAULT_DEVICE_MEM};
 use crate::mesh::Mesh;
 use crate::Scalar;
 
@@ -42,6 +46,8 @@ pub(crate) mod tags {
     pub const PSPMV_T: u32 = 600;
     /// Pipelined CG's fused (gamma, delta) allreduce.
     pub const PIPECG: u32 = 700;
+    /// Two-lane allreduces of the fused BLAS-1 kernels.
+    pub const FUSED: u32 = 800;
     pub const LU: u32 = 1_000;
     pub const CHOL: u32 = 2_000;
     pub const TRSV: u32 = 3_000;
@@ -51,23 +57,144 @@ pub(crate) mod tags {
     pub const SCALE: u32 = 5_100;
 }
 
-/// Per-rank execution context: mesh view + local compute engine.
+/// Per-rank execution context: mesh view + local compute engine + the
+/// rank's device-residency tracker ([`TileCache`], `DESIGN.md` §12).
 pub struct Ctx<'a, S: Scalar> {
     /// This rank's mesh view.
     pub mesh: &'a Mesh<'a, S>,
     /// Local tile-compute engine (shared across ranks).
     pub engine: Arc<dyn Engine<S>>,
+    /// Device residency tracker; `None` reproduces the paper's §3
+    /// copy-per-call flow exactly.  Single-threaded per rank, hence the
+    /// `RefCell` (same pattern as the comm endpoint's counters).
+    cache: Option<RefCell<TileCache>>,
 }
 
 impl<'a, S: Scalar> Ctx<'a, S> {
-    /// Bundle a mesh view and an engine.
+    /// Bundle a mesh view and an engine, with device residency enabled at
+    /// the default (GTX 280) budget.  Residency only re-prices PCIe
+    /// traffic, never changes results, so this is always safe.
     pub fn new(mesh: &'a Mesh<'a, S>, engine: Arc<dyn Engine<S>>) -> Self {
-        Ctx { mesh, engine }
+        Self::with_device_mem(mesh, engine, DEFAULT_DEVICE_MEM)
     }
 
-    /// Charge an op cost to this rank's virtual clock.
+    /// Residency with an explicit device-memory budget (bytes).
+    pub fn with_device_mem(
+        mesh: &'a Mesh<'a, S>,
+        engine: Arc<dyn Engine<S>>,
+        budget: usize,
+    ) -> Self {
+        Ctx { mesh, engine, cache: Some(RefCell::new(TileCache::new(budget))) }
+    }
+
+    /// The paper's §3 flow: every operand streams host<->device per call.
+    pub fn streaming(mesh: &'a Mesh<'a, S>, engine: Arc<dyn Engine<S>>) -> Self {
+        Ctx { mesh, engine, cache: None }
+    }
+
+    /// Is the residency subsystem active?
+    pub fn residency_enabled(&self) -> bool {
+        self.cache.is_some()
+    }
+
+    /// Charge an op cost to this rank's virtual clock, as-is (no
+    /// residency adjustment — for ops whose operands can't stay resident).
     pub fn charge(&self, cost: OpCost) {
         cost.charge(self.mesh.comm().clock());
+    }
+
+    /// The residency tracker, if the engine's profile actually streams
+    /// (host profiles never pay PCIe, so there is nothing to track — and
+    /// `pcie_saved_bytes` must stay 0 on them).
+    fn active_cache(&self) -> Option<&RefCell<TileCache>> {
+        if self.engine.profile().pcie_bw > 0.0 { self.cache.as_ref() } else { None }
+    }
+
+    /// Charge a tile-op cost with its transfer share re-priced by
+    /// residency: `ins` are the operands the op read, `out` the operand it
+    /// wrote (`cost` as returned by the engine, i.e. full paper-flow
+    /// streaming).  A resident read operand stops streaming H2D; a written
+    /// operand pays its D2H write-back once per dirty period instead of
+    /// per call.  The bytes kept off the link are recorded in
+    /// [`crate::comm::CommStats::pcie_saved_bytes`].
+    pub fn charge_op(&self, cost: OpCost, ins: &[&[S]], out: Option<&[S]>) {
+        let Some(cache) = self.active_cache() else {
+            self.charge(cost);
+            return;
+        };
+        let keys: Vec<BufKey> = ins.iter().map(|b| BufKey::of(b)).collect();
+        let traffic = cache.borrow_mut().access(&keys, out.map(BufKey::of));
+        let pcie = self.engine.profile().pcie_bw;
+        let adjusted = OpCost {
+            compute_secs: cost.compute_secs,
+            transfer_secs: traffic.streamed() as f64 / pcie,
+        };
+        adjusted.charge(self.mesh.comm().clock());
+        self.mesh.comm().stats().add_pcie_saved(traffic.saved() as u64);
+    }
+
+    /// Charge one fused BLAS-1 kernel over vector blocks (`ins` read,
+    /// `outs` written), crediting the `replaced - 1` launches the unfused
+    /// op-per-block sequence would have made.  A zero transfer share means
+    /// the fused dispatch stayed host-side (tiny vectors — see
+    /// [`crate::accel::Engine::blas1_fused_cost`]): no new PCIe traffic,
+    /// but the *invalidation rules* still apply exactly as for the unfused
+    /// host ops — the host observed every read operand (ending its dirty
+    /// period) and mutated every written one (dropping its device copy).
+    pub fn charge_fused(&self, cost: OpCost, ins: &[&[S]], outs: &[&[S]], replaced: u64) {
+        if cost.transfer_secs == 0.0 {
+            for buf in ins {
+                self.host_read(buf);
+            }
+            for buf in outs {
+                self.host_mut(buf);
+            }
+            self.charge(cost);
+            self.mesh.comm().stats().add_launches_fused(replaced.saturating_sub(1));
+            return;
+        }
+        if let Some(cache) = self.active_cache() {
+            let mut traffic = crate::accel::Traffic::default();
+            {
+                let mut c = cache.borrow_mut();
+                let in_keys: Vec<BufKey> = ins.iter().map(|b| BufKey::of(b)).collect();
+                let t = c.access(&in_keys, None);
+                traffic.h2d_bytes += t.h2d_bytes;
+                traffic.full_bytes += t.full_bytes;
+                for o in outs {
+                    let t = c.access(&[], Some(BufKey::of(o)));
+                    traffic.d2h_bytes += t.d2h_bytes;
+                    traffic.full_bytes += t.full_bytes;
+                }
+            }
+            let pcie = self.engine.profile().pcie_bw;
+            let adjusted = OpCost {
+                compute_secs: cost.compute_secs,
+                transfer_secs: traffic.streamed() as f64 / pcie,
+            };
+            adjusted.charge(self.mesh.comm().clock());
+            self.mesh.comm().stats().add_pcie_saved(traffic.saved() as u64);
+        } else {
+            self.charge(cost);
+        }
+        self.mesh.comm().stats().add_launches_fused(replaced.saturating_sub(1));
+    }
+
+    /// The host observes `buf`'s current value (message payload, gather,
+    /// pivot search): ends the buffer's device dirty period.
+    pub fn host_read(&self, buf: &[S]) {
+        if let Some(cache) = self.active_cache() {
+            cache.borrow_mut().host_read(BufKey::of(buf));
+        }
+    }
+
+    /// The host mutated `buf` (row swap, panel scatter) — or is about to
+    /// free it (transient broadcast buffers are *retired* so a reused
+    /// allocation can never alias a stale device copy).
+    pub fn host_mut(&self, buf: &[S]) {
+        if let Some(cache) = self.active_cache() {
+            cache.borrow_mut().host_mut(BufKey::of(buf));
+        }
     }
 
     /// Tile edge of the active engine.

@@ -25,7 +25,7 @@
 use super::{tags, Ctx};
 use crate::comm::{BcastRequest, Payload};
 use crate::dist::DistMatrix;
-use crate::{linalg, Scalar};
+use crate::Scalar;
 
 /// One SUMMA panel in flight: the split-phase broadcasts of `A(:,kk)` along
 /// process rows and `B(kk,:)` along process columns.
@@ -126,22 +126,38 @@ pub fn pgemm_acc<S: Scalar>(
 
     // Double-buffer: panel kk+1 is on the wire while panel kk multiplies.
     let mut inflight = Some(start_panel(ctx, a, b, 0));
-    let mut tmp = vec![S::zero(); t * t];
     for kk in 0..kt {
         let (a_panel, b_panel) = inflight.take().expect("panel in flight").wait();
         if kk + 1 < kt {
             inflight = Some(start_panel(ctx, a, b, kk + 1));
         }
 
-        // Local accumulation (order identical to the blocking variant).
+        // Local accumulation (order identical to the blocking variant):
+        // one fused `C += A·B` kernel per tile, so each C tile stays
+        // device-resident across the kk steps — the panel buffers stream
+        // up once per step (their first touch), C never leaves the device
+        // until somebody reads it host-side (DESIGN.md §12).  The former
+        // gemm-into-scratch + host-axpy pair paid a per-call D2H for the
+        // scratch *and* a full extra memory pass.
         for lti in 0..c.local_mt() {
             for ltj in 0..c.local_nt() {
-                let cost =
-                    ctx.engine.gemm(&a_panel[lti], &b_panel[ltj], &mut tmp).expect("gemm");
-                ctx.charge(cost);
-                linalg::axpy(S::one(), &tmp, c.tile_mut(lti, ltj));
-                ctx.charge(ctx.engine.blas1_cost(t * t));
+                let cost = ctx
+                    .engine
+                    .gemm_acc(c.tile_mut(lti, ltj), &a_panel[lti], &b_panel[ltj])
+                    .expect("gemm_acc");
+                let c_tile = c.tile(lti, ltj);
+                ctx.charge_op(
+                    cost,
+                    &[c_tile, &a_panel[lti], &b_panel[ltj]],
+                    Some(c_tile),
+                );
             }
+        }
+
+        // Retire the panel buffers before they drop: a reused allocation
+        // must never alias a stale device copy.
+        for buf in a_panel.iter().chain(&b_panel) {
+            ctx.host_mut(buf);
         }
     }
 }

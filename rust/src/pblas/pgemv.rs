@@ -38,6 +38,7 @@ pub fn pgemv<S: Scalar>(
     // 1. Column allgather of x blocks (contributions indexed by process row).
     let mut mine = Vec::with_capacity(x.local_blocks() * t);
     for l in 0..x.local_blocks() {
+        ctx.host_read(x.block(l)); // payload read ends any device dirty period
         mine.extend_from_slice(x.block(l));
     }
     let col = mesh.col_comm();
@@ -48,15 +49,29 @@ pub fn pgemv<S: Scalar>(
         &by_row[owner][off..off + t]
     };
 
-    // 2. Local partial products.
+    // 2. Local partial products.  The A tiles are read-only stream
+    // operands: with residency they pay their H2D on the first iteration
+    // of a Krylov solve and then stay device-side — the Ioannidis et al.
+    // keep-the-matrix-on-the-GPU optimisation.  The gemv result is
+    // host-consumed immediately (the partial-sum axpy), so its D2H stays
+    // per call, as does the x block's first-touch H2D per step.
     let mut y_part = vec![S::zero(); x.local_blocks() * t];
     let mut tmp = vec![S::zero(); t];
     for (lti, ltj, _ti, tj) in a.owned_tiles() {
         let cost = ctx.engine.gemv(a.tile(lti, ltj), x_block(tj), &mut tmp).expect("gemv");
-        ctx.charge(cost);
+        ctx.charge_op(cost, &[a.tile(lti, ltj), x_block(tj)], Some(&tmp));
+        ctx.host_read(&tmp);
         linalg::axpy(S::one(), &tmp, &mut y_part[lti * t..(lti + 1) * t]);
         ctx.charge(ctx.engine.blas1_cost(t));
     }
+    // Retire the transient allgather slices before they drop (the cache is
+    // keyed per x-block slice, so retire at the same granularity).
+    for buf in &by_row {
+        for chunk in buf.chunks(t) {
+            ctx.host_mut(chunk);
+        }
+    }
+    ctx.host_mut(&tmp);
 
     // 3. Row allreduce of partials.
     let row = mesh.row_comm();
@@ -65,6 +80,9 @@ pub fn pgemv<S: Scalar>(
     let mut y = DistVector::zeros(desc, mesh.row(), mesh.col());
     for l in 0..y.local_blocks() {
         y.block_mut(l).copy_from_slice(&summed[l * t..(l + 1) * t]);
+        // Fresh host-written blocks: drop any device entry a reused
+        // allocation might alias (a prior iteration's matvec output).
+        ctx.host_mut(y.block(l));
     }
     y
 }
@@ -91,10 +109,12 @@ pub fn pgemv_t<S: Scalar>(
             .engine
             .gemv_t(a.tile(lti, ltj), x.global_block(ti), &mut tmp)
             .expect("gemv_t");
-        ctx.charge(cost);
+        ctx.charge_op(cost, &[a.tile(lti, ltj), x.global_block(ti)], Some(&tmp));
+        ctx.host_read(&tmp);
         linalg::axpy(S::one(), &tmp, &mut w_part[ltj * t..(ltj + 1) * t]);
         ctx.charge(ctx.engine.blas1_cost(t));
     }
+    ctx.host_mut(&tmp);
 
     // 2. Column reduce per tile column, rooted at the process row that owns
     //    tile row `tj` in the vector layout.
@@ -127,6 +147,7 @@ pub fn pgemv_t<S: Scalar>(
             if tj % pr == mesh.row() && tj % pc == c {
                 let src = &by_col[c][pos * t..(pos + 1) * t];
                 y.global_block_mut(tj).copy_from_slice(src);
+                ctx.host_mut(y.global_block(tj)); // fresh host data
                 pos += 1;
             }
         }

@@ -1,15 +1,26 @@
-//! Distributed vector BLAS-1: dot, norm, axpy, scal, copy.
+//! Distributed vector BLAS-1: dot, norm, axpy, scal, copy — plus the
+//! **fused** kernels the Krylov solvers iterate on.
 //!
 //! Vectors are row-distributed / column-replicated ([`DistVector`]), so axpy,
 //! scal and copy are purely local (each replica updates identically); dot
 //! and norm need one allreduce over the *column* communicator (one member
 //! per process row = the full distributed sum, computed redundantly in every
 //! process column — no second collective needed).
+//!
+//! The fused routines ([`pfused_axpy_norm2`], [`pxpay`],
+//! [`pfused_norm2_dot_partial`], ...) collapse an unfused chain of
+//! one-kernel-per-block BLAS-1 calls into **one launch and one memory pass
+//! over the whole local replica** (Rupp et al.-style kernel fusion), charged
+//! through [`crate::accel::Engine::blas1_fused_cost`]; the launches they
+//! eliminate are counted in [`crate::comm::CommStats::launches_fused`].
+//! Arithmetic is the unfused sequence's bit for bit (same per-block loops,
+//! same partial-sum order, same reduction trees), so fusing never perturbs a
+//! solver's iterates.
 
 use super::{tags, Ctx};
 use crate::comm::ReduceOp;
 use crate::dist::DistVector;
-use crate::Scalar;
+use crate::{linalg, Scalar};
 
 /// Distributed inner product `x . y` (result replicated on every rank).
 pub fn pdot<S: Scalar>(ctx: &Ctx<'_, S>, x: &DistVector<S>, y: &DistVector<S>) -> S {
@@ -26,6 +37,10 @@ pub fn pdot_partial<S: Scalar>(ctx: &Ctx<'_, S>, x: &DistVector<S>, y: &DistVect
     assert_eq!(x.desc(), y.desc(), "pdot descriptor mismatch");
     let mut partial = S::zero();
     for l in 0..x.local_blocks() {
+        // Host-side op: observing a device-dirty block ends its dirty
+        // period (the residency invalidation rules, DESIGN.md §12).
+        ctx.host_read(x.block(l));
+        ctx.host_read(y.block(l));
         let (d, cost) = ctx.engine.dot(x.block(l), y.block(l));
         partial += d;
         ctx.charge(cost);
@@ -38,26 +53,146 @@ pub fn pnorm2<S: Scalar>(ctx: &Ctx<'_, S>, x: &DistVector<S>) -> S {
     pdot(ctx, x, x).sqrt()
 }
 
-/// `y += alpha x` (local on every replica).
+/// `y += alpha x` (local on every replica; host-side — mutating `y` on the
+/// host invalidates any device copy of its blocks).
 pub fn paxpy<S: Scalar>(ctx: &Ctx<'_, S>, alpha: S, x: &DistVector<S>, y: &mut DistVector<S>) {
     assert_eq!(x.desc(), y.desc(), "paxpy descriptor mismatch");
     for l in 0..x.local_blocks() {
+        ctx.host_read(x.block(l));
+        ctx.host_mut(y.block(l));
         let cost = ctx.engine.axpy(alpha, x.block(l), y.block_mut(l));
         ctx.charge(cost);
     }
 }
 
-/// `x *= alpha` (local).
+/// `x *= alpha` (local, host-side).
 pub fn pscal<S: Scalar>(ctx: &Ctx<'_, S>, alpha: S, x: &mut DistVector<S>) {
     for l in 0..x.local_blocks() {
+        ctx.host_mut(x.block(l));
         let cost = ctx.engine.scal(alpha, x.block_mut(l));
         ctx.charge(cost);
     }
 }
 
 /// `y = x` (local; no cost model charge — a memcpy is free next to BLAS).
-pub fn pcopy<S: Scalar>(_ctx: &Ctx<'_, S>, x: &DistVector<S>, y: &mut DistVector<S>) {
+pub fn pcopy<S: Scalar>(ctx: &Ctx<'_, S>, x: &DistVector<S>, y: &mut DistVector<S>) {
+    for l in 0..x.local_blocks() {
+        ctx.host_read(x.block(l));
+        ctx.host_mut(y.block(l));
+    }
     y.copy_from(x);
+}
+
+/// Total local elements of a replica (for the fused-kernel cost).
+fn local_len<S: Scalar>(x: &DistVector<S>) -> usize {
+    x.local_blocks() * x.desc().tile
+}
+
+/// Charge one fused kernel spanning every block of the listed vectors:
+/// `reads`/`writes` count vector-length operand streams, `flops_per_elem`
+/// the fused arithmetic, `replaced` the launches the unfused sequence
+/// would have made.
+fn charge_fused_vec<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    reads: &[&DistVector<S>],
+    writes: &[&DistVector<S>],
+    flops_per_elem: u64,
+    replaced: u64,
+) {
+    let len = local_len(*reads.first().or(writes.first()).expect("an operand"));
+    let streams = reads.len() + writes.len();
+    let cost = ctx.engine.blas1_fused_cost(len, streams, flops_per_elem * len as u64);
+    let in_blocks: Vec<&[S]> =
+        reads.iter().flat_map(|v| (0..v.local_blocks()).map(|l| v.block(l))).collect();
+    let out_blocks: Vec<&[S]> =
+        writes.iter().flat_map(|v| (0..v.local_blocks()).map(|l| v.block(l))).collect();
+    ctx.charge_fused(cost, &in_blocks, &out_blocks, replaced);
+}
+
+/// Fused `y += alpha x; return ⟨y,y⟩` — one kernel + the usual column-comm
+/// allreduce, replacing an axpy launch and a dot launch per block.  Same
+/// arithmetic and same reduction as `paxpy` + `pdot(y, y)`.
+pub fn pfused_axpy_norm2<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    alpha: S,
+    x: &DistVector<S>,
+    y: &mut DistVector<S>,
+) -> S {
+    assert_eq!(x.desc(), y.desc(), "pfused_axpy_norm2 descriptor mismatch");
+    let mut partial = S::zero();
+    for l in 0..x.local_blocks() {
+        partial += linalg::axpy_norm2(alpha, x.block(l), y.block_mut(l));
+    }
+    charge_fused_vec(ctx, &[x, &*y], &[&*y], 4, 2 * x.local_blocks() as u64);
+    let col = ctx.mesh.col_comm();
+    col.allreduce_scalar(tags::PDOT, partial, ReduceOp::Sum)
+}
+
+/// Fused `y += alpha x; return (⟨y,y⟩, ⟨w,y⟩)` with **one** two-lane
+/// allreduce — BiCGSTAB's residual update, norm check and `rho` recurrence
+/// in a single kernel + a single reduction (the unfused chain pays two
+/// reduction latencies).  Lane values are bit-identical to the separate
+/// dots; the two-lane tree combines each lane exactly like the scalar one.
+pub fn pfused_axpy_norm2_dot<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    alpha: S,
+    x: &DistVector<S>,
+    y: &mut DistVector<S>,
+    w: &DistVector<S>,
+) -> (S, S) {
+    assert_eq!(x.desc(), y.desc(), "pfused_axpy_norm2_dot descriptor mismatch");
+    assert_eq!(w.desc(), y.desc(), "pfused_axpy_norm2_dot descriptor mismatch");
+    let (mut n2, mut d) = (S::zero(), S::zero());
+    for l in 0..x.local_blocks() {
+        linalg::axpy(alpha, x.block(l), y.block_mut(l));
+        n2 += linalg::dot(y.block(l), y.block(l));
+        d += linalg::dot(w.block(l), y.block(l));
+    }
+    charge_fused_vec(ctx, &[x, w, &*y], &[&*y], 6, 3 * x.local_blocks() as u64);
+    let col = ctx.mesh.col_comm();
+    let reduced = col.allreduce_vec(tags::FUSED, vec![n2, d], ReduceOp::Sum);
+    (reduced[0], reduced[1])
+}
+
+/// Fused `(⟨x,x⟩, ⟨x,y⟩)` with one two-lane allreduce (BiCGSTAB's
+/// `(⟨t,t⟩, ⟨t,s⟩)` pair).
+pub fn pfused_norm2_dot<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    x: &DistVector<S>,
+    y: &DistVector<S>,
+) -> (S, S) {
+    let (n2, d) = pfused_norm2_dot_partial(ctx, x, y);
+    let col = ctx.mesh.col_comm();
+    let reduced = col.allreduce_vec(tags::FUSED, vec![n2, d], ReduceOp::Sum);
+    (reduced[0], reduced[1])
+}
+
+/// Local partials of `(⟨x,x⟩, ⟨x,y⟩)` in one fused pass — pipelined CG's
+/// `(γ, δ)` pair, whose reduction the caller overlaps with the matvec.
+pub fn pfused_norm2_dot_partial<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    x: &DistVector<S>,
+    y: &DistVector<S>,
+) -> (S, S) {
+    assert_eq!(x.desc(), y.desc(), "pfused_norm2_dot descriptor mismatch");
+    let (mut n2, mut d) = (S::zero(), S::zero());
+    for l in 0..x.local_blocks() {
+        let (bn2, bd) = linalg::norm2_dot(x.block(l), y.block(l));
+        n2 += bn2;
+        d += bd;
+    }
+    charge_fused_vec(ctx, &[x, y], &[], 4, 2 * x.local_blocks() as u64);
+    (n2, d)
+}
+
+/// Fused `y = x + beta y` — one pass instead of a scal launch plus an axpy
+/// launch per block (the `p = r + beta p` recurrence of CG and friends).
+pub fn pxpay<S: Scalar>(ctx: &Ctx<'_, S>, beta: S, x: &DistVector<S>, y: &mut DistVector<S>) {
+    assert_eq!(x.desc(), y.desc(), "pxpay descriptor mismatch");
+    for l in 0..x.local_blocks() {
+        linalg::xpay(beta, x.block(l), y.block_mut(l));
+    }
+    charge_fused_vec(ctx, &[x, &*y], &[&*y], 2, 2 * x.local_blocks() as u64);
 }
 
 #[cfg(test)]
@@ -117,6 +252,50 @@ mod tests {
         for (nx, dy) in out {
             assert!((nx - (4.0 * n as f64).sqrt()).abs() < 1e-12);
             assert!((dy - 3.5 * 3.5 * n as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fused_ops_match_unfused_bitwise_and_count_launches() {
+        let n = 23usize;
+        for (pr, pc) in [(1, 1), (2, 2), (2, 3)] {
+            let out = with_ctx(pr, pc, 4, move |ctx| {
+                let desc = Descriptor::new(n, n, 4, ctx.mesh.shape());
+                let mk = |f: fn(usize) -> f64| {
+                    DistVector::from_fn(desc, ctx.mesh.row(), ctx.mesh.col(), f)
+                };
+                let x = mk(|i| ((i + 1) as f64).sin());
+                let w = mk(|i| (i as f64 * 0.9).cos());
+                // Unfused reference sequence.
+                let mut yu = mk(|i| (i as f64).cos());
+                paxpy(ctx, -0.375, &x, &mut yu);
+                let rru = pdot(ctx, &yu, &yu);
+                pscal(ctx, 1.25, &mut yu);
+                paxpy(ctx, 1.0, &x, &mut yu);
+                let ddu = (pdot(ctx, &yu, &yu), pdot(ctx, &yu, &w));
+                // Fused sequence.
+                let mut yf = mk(|i| (i as f64).cos());
+                let rrf = pfused_axpy_norm2(ctx, -0.375, &x, &mut yf);
+                pxpay(ctx, 1.25, &x, &mut yf);
+                let ddf = pfused_norm2_dot(ctx, &yf, &w);
+                let bits_eq = (0..yu.local_blocks()).all(|l| {
+                    yu.block(l)
+                        .iter()
+                        .zip(yf.block(l))
+                        .all(|(a, b)| a.to_bits() == b.to_bits())
+                });
+                (
+                    bits_eq,
+                    rru.to_bits() == rrf.to_bits(),
+                    ddu.0.to_bits() == ddf.0.to_bits() && ddu.1.to_bits() == ddf.1.to_bits(),
+                    ctx.mesh.comm().stats().launches_fused(),
+                )
+            });
+            for (bits_eq, rr_eq, dd_eq, fused) in out {
+                assert!(bits_eq, "{pr}x{pc}: fused vector bits differ");
+                assert!(rr_eq && dd_eq, "{pr}x{pc}: fused reductions differ");
+                assert!(fused > 0, "{pr}x{pc}: fused launches must be counted");
+            }
         }
     }
 

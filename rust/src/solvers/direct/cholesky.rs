@@ -43,10 +43,11 @@ fn factor_panel<'a, S: Scalar>(
     if mesh.col() == ck {
         let col = mesh.col_comm();
         let payload = if mesh.row() == rk {
-            let tile = a.global_tile_mut(k, k);
-            let cost = ctx.engine.potrf(tile)?;
-            ctx.charge(cost);
-            Some(Payload::Data(tile.clone()))
+            let cost = ctx.engine.potrf(a.global_tile_mut(k, k))?;
+            ctx.charge_op(cost, &[a.global_tile(k, k)], Some(a.global_tile(k, k)));
+            // The broadcast payload is a host read of the potrf result.
+            ctx.host_read(a.global_tile(k, k));
+            Some(Payload::Data(a.global_tile(k, k).to_vec()))
         } else {
             None
         };
@@ -55,9 +56,11 @@ fn factor_panel<'a, S: Scalar>(
             let ti = desc.global_ti(mesh.row(), lti);
             if ti > k {
                 let cost = ctx.engine.trsm_rlt(a.tile_mut(lti, desc.local_tj(k)), &l11)?;
-                ctx.charge(cost);
+                let tile = a.tile(lti, desc.local_tj(k));
+                ctx.charge_op(cost, &[tile, &l11], Some(tile));
             }
         }
+        ctx.host_mut(&l11); // transient broadcast buffer: retire
     }
 
     // --- start the split-phase row broadcasts of L(i,k), i > k -------------
@@ -67,6 +70,8 @@ fn factor_panel<'a, S: Scalar>(
         let ti = desc.global_ti(mesh.row(), lti);
         if ti > k {
             let data = if mesh.col() == ck {
+                // Payload read of the trsm result ends its dirty period.
+                ctx.host_read(a.tile(lti, desc.local_tj(k)));
                 Some(Payload::Data(a.tile(lti, desc.local_tj(k)).to_vec()))
             } else {
                 None
@@ -103,6 +108,9 @@ pub fn pchol_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Resul
         }
 
         if k + 1 == kt {
+            for buf in l_rows.iter().flatten() {
+                ctx.host_mut(buf); // retire before the buffers drop
+            }
             break; // last panel: no trailing tiles, nothing left in flight
         }
 
@@ -138,7 +146,11 @@ pub fn pchol_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Resul
                 if ti > k {
                     let l_ik = l_rows[lti].as_ref().expect("L row tile");
                     let cost = ctx.engine.gemm_nt_update(a.tile_mut(lti, ltj), l_ik, l_jk)?;
-                    ctx.charge(cost);
+                    ctx.charge_op(
+                        cost,
+                        &[a.tile(lti, ltj), l_ik, l_jk],
+                        Some(a.tile(lti, ltj)),
+                    );
                 }
             }
         }
@@ -146,6 +158,9 @@ pub fn pchol_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Resul
 
         // --- 4. trailing update, lower half, remaining columns (j > k+1) ---
         // Hides panel k+1's potrf/trsm critical path and its broadcasts.
+        // With residency each broadcast L(i,k)/L(j,k) buffer streams H2D
+        // once per step and the trailing tiles stay device-resident across
+        // the k steps (DESIGN.md §12).
         for lti in 0..a.local_mt() {
             let ti = desc.global_ti(mesh.row(), lti);
             if ti <= k {
@@ -159,8 +174,17 @@ pub fn pchol_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Resul
                 }
                 let l_jk = l_cols[ltj].as_ref().expect("L col tile");
                 let cost = ctx.engine.gemm_nt_update(a.tile_mut(lti, ltj), l_ik, l_jk)?;
-                ctx.charge(cost);
+                ctx.charge_op(
+                    cost,
+                    &[a.tile(lti, ltj), l_ik, l_jk],
+                    Some(a.tile(lti, ltj)),
+                );
             }
+        }
+
+        // Retire the step's broadcast buffers before they drop.
+        for buf in l_rows.iter().chain(&l_cols).flatten() {
+            ctx.host_mut(buf);
         }
     }
     Ok(())

@@ -99,6 +99,9 @@ fn factor_panel<'a, S: Scalar>(
     let n_real = m_real.min(t); // panel width
 
     // --- gather panel to the diagonal owner --------------------------------
+    // The panel tiles carry trailing updates computed on the device; the
+    // host observing them (copy / message payload) ends their dirty
+    // periods (residency rules, DESIGN.md §12).
     let panel_tag = |ti: usize| Tag::P2p(tags::LU + 10 + ti as u32);
     let mut panel: Vec<S> = Vec::new();
     if comm.rank() == diag_rank {
@@ -107,6 +110,7 @@ fn factor_panel<'a, S: Scalar>(
             let src = desc.shape.rank_at(ti % pr, ck);
             let dst_off = (ti - k) * t * t;
             if src == comm.rank() {
+                ctx.host_read(a.global_tile(ti, k));
                 panel[dst_off..dst_off + t * t].copy_from_slice(a.global_tile(ti, k));
             } else {
                 let data = comm.recv(src, panel_tag(ti)).into_data();
@@ -116,6 +120,7 @@ fn factor_panel<'a, S: Scalar>(
     } else if in_panel_col {
         for ti in k..kt {
             if a.owns_tile_row(ti) {
+                ctx.host_read(a.global_tile(ti, k));
                 comm.isend(diag_rank, panel_tag(ti), Payload::Data(a.global_tile(ti, k).to_vec()))
                     .wait();
             }
@@ -150,12 +155,14 @@ fn factor_panel<'a, S: Scalar>(
     }
 
     // --- scatter factored panel back ---------------------------------------
+    // Host writes: any device copy of a written tile is now stale.
     if comm.rank() == diag_rank {
         for ti in k..kt {
             let dst = desc.shape.rank_at(ti % pr, ck);
             let off = (ti - k) * t * t;
             if dst == comm.rank() {
                 a.global_tile_mut(ti, k).copy_from_slice(&panel[off..off + t * t]);
+                ctx.host_mut(a.global_tile(ti, k));
             } else {
                 comm.isend(dst, panel_tag(ti), Payload::Data(panel[off..off + t * t].to_vec()))
                     .wait();
@@ -166,6 +173,7 @@ fn factor_panel<'a, S: Scalar>(
             if a.owns_tile_row(ti) {
                 let data = comm.recv(diag_rank, panel_tag(ti)).into_data();
                 a.global_tile_mut(ti, k).copy_from_slice(&data);
+                ctx.host_mut(a.global_tile(ti, k));
             }
         }
     }
@@ -242,6 +250,7 @@ pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
         let row = mesh.row_comm();
         if mesh.row() == rk {
             let diag_payload = if mesh.col() == ck {
+                ctx.host_read(a.global_tile(k, k));
                 Some(Payload::Data(a.global_tile(k, k).to_vec()))
             } else {
                 None
@@ -252,9 +261,10 @@ pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
                 if tj > k {
                     let lti = desc.local_ti(k);
                     let cost = ctx.engine.trsm_llu(&l11, a.tile_mut(lti, ltj))?;
-                    ctx.charge(cost);
+                    ctx.charge_op(cost, &[&l11, a.tile(lti, ltj)], Some(a.tile(lti, ltj)));
                 }
             }
+            ctx.host_mut(&l11); // transient broadcast buffer: retire
         }
 
         // --- 4. complete the L21 row broadcasts; U12 column broadcasts -----
@@ -270,6 +280,8 @@ pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
             let tj = desc.global_tj(mesh.col(), ltj);
             if tj > k {
                 let data = if mesh.row() == rk {
+                    // Payload read of the trsm result ends its dirty period.
+                    ctx.host_read(a.tile(desc.local_ti(k), ltj));
                     Some(Payload::Data(a.tile(desc.local_ti(k), ltj).to_vec()))
                 } else {
                     None
@@ -290,7 +302,11 @@ pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
                     if ti > k {
                         let l_tile = l_panel[lti].as_ref().expect("L tile broadcast");
                         let cost = ctx.engine.gemm_update(a.tile_mut(lti, ltj), l_tile, u_tile)?;
-                        ctx.charge(cost);
+                        ctx.charge_op(
+                            cost,
+                            &[a.tile(lti, ltj), l_tile, u_tile],
+                            Some(a.tile(lti, ltj)),
+                        );
                     }
                 }
             }
@@ -298,6 +314,10 @@ pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
         }
 
         // --- 6. trailing rank-T update (hides step k+1's panel path) -------
+        // The residency layer is what makes this leg cheap on the CUDA arm:
+        // each broadcast L21/U12 buffer streams H2D once and is then reused
+        // across the whole trailing sweep, and the C tiles stay device-
+        // resident (and dirty) across the k steps (DESIGN.md §12).
         for lti in 0..a.local_mt() {
             let ti = desc.global_ti(mesh.row(), lti);
             if ti <= k {
@@ -311,8 +331,17 @@ pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
                 }
                 let u_tile = u_panel[ltj].as_ref().expect("U tile broadcast");
                 let cost = ctx.engine.gemm_update(a.tile_mut(lti, ltj), l_tile, u_tile)?;
-                ctx.charge(cost);
+                ctx.charge_op(
+                    cost,
+                    &[a.tile(lti, ltj), l_tile, u_tile],
+                    Some(a.tile(lti, ltj)),
+                );
             }
+        }
+
+        // Retire the step's broadcast panels before their buffers drop.
+        for buf in l_panel.iter().chain(&u_panel).flatten() {
+            ctx.host_mut(buf);
         }
     }
     Ok(pivots)
@@ -346,7 +375,8 @@ fn swap_rows_outside_panel<S: Scalar>(
 
     if pr1 == pr2 {
         if mesh.row() == pr1 {
-            // Both rows local to this process row: in-place swap.
+            // Both rows local to this process row: in-place swap.  Host
+            // mutation: any device copy of a touched tile goes stale.
             for &ltj in &my_cols {
                 let lt1 = desc.local_ti(t1);
                 let lt2 = desc.local_ti(t2);
@@ -355,6 +385,7 @@ fn swap_rows_outside_panel<S: Scalar>(
                     for c in 0..t {
                         tile.swap(r1 * t + c, r2 * t + c);
                     }
+                    ctx.host_mut(a.tile(lt1, ltj));
                 } else {
                     // Two different local tiles: swap row slices via split.
                     let (i1, i2) = (lt1, lt2);
@@ -363,6 +394,8 @@ fn swap_rows_outside_panel<S: Scalar>(
                     let row2: Vec<S> = a.tile(i2, ltj)[r2 * t..(r2 + 1) * t].to_vec();
                     a.tile_mut(i1, ltj)[r1 * t..(r1 + 1) * t].copy_from_slice(&row2);
                     a.tile_mut(i2, ltj)[r2 * t..(r2 + 1) * t].copy_from_slice(&row1);
+                    ctx.host_mut(a.tile(i1, ltj));
+                    ctx.host_mut(a.tile(i2, ltj));
                 }
             }
         }
@@ -389,5 +422,6 @@ fn swap_rows_outside_panel<S: Scalar>(
     for (idx, &ltj) in my_cols.iter().enumerate() {
         a.tile_mut(lti, ltj)[my_r * t..(my_r + 1) * t]
             .copy_from_slice(&incoming[idx * t..(idx + 1) * t]);
+        ctx.host_mut(a.tile(lti, ltj));
     }
 }

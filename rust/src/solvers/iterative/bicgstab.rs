@@ -1,10 +1,20 @@
 //! BiCGSTAB — "in our library we've implemented a version of BiCG called
 //! BiCGSTAB" (paper §2): the smoothed variant that avoids A^T and BiCG's
 //! irregular convergence.
+//!
+//! The BLAS-1 chain runs on the fused kernels (`DESIGN.md` §12): the two
+//! residual updates fuse with their norm/ρ reductions
+//! ([`pfused_axpy_norm2`], [`pfused_axpy_norm2_dot`]), `(⟨t,t⟩, ⟨t,s⟩)`
+//! shares one two-lane allreduce, and the `p` recurrence ends in one
+//! [`pxpay`] — four reduction latencies per iteration instead of six, with
+//! every scalar bit-identical to the unfused sequence's.
 
 use super::{norm_negligible, IterConfig, IterStats};
 use crate::dist::DistVector;
-use crate::pblas::{paxpy, pdot, pnorm2, pscal, Ctx, LinOp};
+use crate::pblas::{
+    paxpy, pdot, pfused_axpy_norm2, pfused_axpy_norm2_dot, pfused_norm2_dot, pnorm2, pxpay,
+    Ctx, LinOp,
+};
 use crate::{Error, Result, Scalar};
 
 /// Solve `A x = b` (general nonsymmetric) from the zero initial guess.
@@ -45,40 +55,47 @@ pub fn bicgstab<S: Scalar, A: LinOp<S> + ?Sized>(
             });
         }
         let alpha = rho / r0v;
-        // s = r - alpha v
+        // s = r - alpha v, fused with ||s||^2.  The fresh clone's blocks are
+        // host-authoritative: drop any aliased device entries first.
         let mut s = r.clone_vec();
-        paxpy(ctx, -alpha, &v, &mut s);
-        let snorm = pnorm2(ctx, &s);
+        for l in 0..s.local_blocks() {
+            ctx.host_mut(s.block(l));
+        }
+        let snorm = pfused_axpy_norm2(ctx, -alpha, &v, &mut s).sqrt();
         if snorm <= tol {
             paxpy(ctx, alpha, &p, &mut x);
             return Ok((x, IterStats::new(it + 1, snorm / bnorm, true)));
         }
         let t = a.apply(ctx, &s);
-        let tt = pdot(ctx, &t, &t);
+        // (t.t, t.s) in one pass and one two-lane allreduce.
+        let (tt, ts) = pfused_norm2_dot(ctx, &t, &s);
         if tt == S::zero() {
             return Err(Error::Breakdown {
                 method: "bicgstab",
                 detail: format!("t.t = 0 at iteration {it}"),
             });
         }
-        let omega = pdot(ctx, &t, &s) / tt;
+        let omega = ts / tt;
         // x += alpha p + omega s
         paxpy(ctx, alpha, &p, &mut x);
         paxpy(ctx, omega, &s, &mut x);
-        // r = s - omega t
+        // r = s - omega t, fused with ||r||^2 and the next rho = r0.r.
+        // Retire the old residual's device entries before its buffers drop
+        // (a later clone could alias the freed allocation).
+        for l in 0..r.local_blocks() {
+            ctx.host_mut(r.block(l));
+        }
         r = s;
-        paxpy(ctx, -omega, &t, &mut r);
-        let rnorm = pnorm2(ctx, &r);
+        let (rr, rho_new) = pfused_axpy_norm2_dot(ctx, -omega, &t, &mut r, &r0);
+        let rnorm = rr.sqrt();
         if rnorm <= tol {
             return Ok((x, IterStats::new(it + 1, rnorm / bnorm, true)));
         }
-        let rho_new = pdot(ctx, &r0, &r);
         let beta = (rho_new / rho) * (alpha / omega);
         rho = rho_new;
         // p = r + beta (p - omega v)
         paxpy(ctx, -omega, &v, &mut p);
-        pscal(ctx, beta, &mut p);
-        paxpy(ctx, S::one(), &r, &mut p);
+        pxpay(ctx, beta, &r, &mut p);
     }
     let rnorm = pnorm2(ctx, &r);
     Ok((x, IterStats::new(cfg.max_iter, rnorm / bnorm, false)))

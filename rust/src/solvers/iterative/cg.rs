@@ -3,10 +3,16 @@
 //!
 //! Operator-generic: `A` is any [`LinOp`] — dense block-cyclic or sparse
 //! row-block CSR (`DESIGN.md` §10).
+//!
+//! The per-iteration BLAS-1 chain runs on the **fused** kernels
+//! (`DESIGN.md` §12): the residual update + norm collapse into one
+//! [`pfused_axpy_norm2`] and the `p = r + beta p` recurrence into one
+//! [`pxpay`] — same arithmetic bit for bit, 3 memory passes and a
+//! launch-per-block fewer each iteration.
 
 use super::{norm_negligible, IterConfig, IterStats};
 use crate::dist::DistVector;
-use crate::pblas::{paxpy, pdot, pnorm2, pscal, Ctx, LinOp};
+use crate::pblas::{paxpy, pdot, pfused_axpy_norm2, pnorm2, pxpay, Ctx, LinOp};
 use crate::{Error, Result, Scalar};
 
 /// Solve `A x = b` (A SPD) from the zero initial guess.
@@ -40,17 +46,15 @@ pub fn cg<S: Scalar, A: LinOp<S> + ?Sized>(
         }
         let alpha = rr / pap;
         paxpy(ctx, alpha, &p, &mut x);
-        paxpy(ctx, -alpha, &ap, &mut r);
-        let rr_new = pdot(ctx, &r, &r);
+        // r -= alpha A p and ||r||^2 in one fused kernel.
+        let rr_new = pfused_axpy_norm2(ctx, -alpha, &ap, &mut r);
         let rnorm = rr_new.sqrt();
         if rnorm <= tol {
             return Ok((x, IterStats::new(it + 1, rnorm / bnorm, true)));
         }
         let beta = rr_new / rr;
         rr = rr_new;
-        // p = r + beta p
-        pscal(ctx, beta, &mut p);
-        paxpy(ctx, S::one(), &r, &mut p);
+        pxpay(ctx, beta, &r, &mut p); // p = r + beta p
     }
     let rnorm = pnorm2(ctx, &r);
     Ok((x, IterStats::new(cfg.max_iter, rnorm / bnorm, false)))

@@ -14,11 +14,17 @@
 //! which is why this is a separate solver rather than a CG flag.
 //!
 //! Unpreconditioned, from the zero initial guess, like [`super::cg()`].
+//! The (γ, δ) partials and the three recurrences run on the fused BLAS-1
+//! kernels (`DESIGN.md` §12): one pass computes both dot partials, one
+//! `xpay` pass each replaces the scal + axpy pairs — 5 kernels per
+//! iteration where the unfused chain launched 8 per block.
 
 use super::{norm_negligible, IterConfig, IterStats};
 use crate::comm::ReduceOp;
 use crate::dist::DistVector;
-use crate::pblas::{paxpy, pcopy, pdot_partial, pnorm2, pscal, tags, Ctx, LinOp};
+use crate::pblas::{
+    paxpy, pcopy, pfused_norm2_dot_partial, pnorm2, pxpay, tags, Ctx, LinOp,
+};
 use crate::{Error, Result, Scalar};
 
 /// Solve `A x = b` (A SPD) from the zero initial guess with pipelined CG.
@@ -46,8 +52,10 @@ pub fn pipecg<S: Scalar, A: LinOp<S> + ?Sized>(
     let mut alpha_prev = S::zero();
 
     for it in 0..cfg.max_iter {
-        // One fused reduction per iteration, overlapped with the matvec.
-        let partials = vec![pdot_partial(ctx, &r, &r), pdot_partial(ctx, &w, &r)];
+        // One fused reduction per iteration, overlapped with the matvec;
+        // the (γ, δ) partials come from a single fused memory pass too.
+        let (gamma_part, delta_part) = pfused_norm2_dot_partial(ctx, &r, &w);
+        let partials = vec![gamma_part, delta_part];
         let reduction = mesh.col_comm().iallreduce_vec(tags::PIPECG, partials, ReduceOp::Sum);
         let q = a.apply(ctx, &w); // q = A w rides over the reduction
         let reduced = reduction.wait();
@@ -85,13 +93,11 @@ pub fn pipecg<S: Scalar, A: LinOp<S> + ?Sized>(
             pcopy(ctx, &w, &mut s); // s = w
             pcopy(ctx, &r, &mut p); // p = r
         } else {
-            // z = q + beta z;  s = w + beta s;  p = r + beta p
-            pscal(ctx, beta, &mut z);
-            paxpy(ctx, S::one(), &q, &mut z);
-            pscal(ctx, beta, &mut s);
-            paxpy(ctx, S::one(), &w, &mut s);
-            pscal(ctx, beta, &mut p);
-            paxpy(ctx, S::one(), &r, &mut p);
+            // z = q + beta z;  s = w + beta s;  p = r + beta p — each a
+            // single fused xpay pass instead of a scal + axpy pair.
+            pxpay(ctx, beta, &q, &mut z);
+            pxpay(ctx, beta, &w, &mut s);
+            pxpay(ctx, beta, &r, &mut p);
         }
         paxpy(ctx, alpha, &p, &mut x);
         paxpy(ctx, -alpha, &s, &mut r);

@@ -1,0 +1,234 @@
+//! Device-residency integration tests (`DESIGN.md` §12).
+//!
+//! The tile cache only ever re-prices the PCIe share of an op's virtual
+//! cost — the math executes identically either way — so every solver must
+//! produce **bit-identical** results with the cache enabled vs the paper's
+//! copy-per-call streaming flow, on every mesh.  On an accelerated profile
+//! the cached run must charge strictly less transfer time (and report the
+//! saved bytes); on host profiles (`pcie_bw == 0`) the residency layer is
+//! inert and `pcie_saved_bytes` stays exactly 0.
+
+use std::sync::Arc;
+
+use cuplss::accel::{ComputeProfile, CpuEngine, Engine};
+use cuplss::comm::{NetworkModel, World};
+use cuplss::dist::{gather_matrix, gather_vector, Descriptor, DistMatrix, DistVector};
+use cuplss::mesh::{Mesh, MeshShape};
+use cuplss::pblas::{pgemm_acc, Ctx};
+use cuplss::solvers::{cg, pchol_factor, plu_solve, IterConfig};
+
+const TILE: usize = 8;
+const N: usize = 24;
+
+fn engine(gpu: bool) -> Arc<CpuEngine> {
+    Arc::new(if gpu {
+        CpuEngine::with_profile(TILE, ComputeProfile::gtx280_cublas())
+    } else {
+        CpuEngine::new(TILE)
+    })
+}
+
+/// Per-rank virtual-clock observations of one run.
+#[derive(Clone, Debug)]
+struct Obs {
+    bits: Vec<u64>,
+    compute: f64,
+    transfer: f64,
+    pcie_saved: u64,
+    launches_fused: u64,
+}
+
+/// Run `kernel` on a pr x pc mesh with/without the cache; returns (cached,
+/// streaming) observations per rank.  `kernel` returns the result vector to
+/// compare bitwise.
+fn run_both<F>(pr: usize, pc: usize, gpu: bool, kernel: F) -> (Vec<Obs>, Vec<Obs>)
+where
+    F: Fn(&Ctx<'_, f64>) -> Vec<f64> + Send + Sync + Copy + 'static,
+{
+    let run = |cached: bool| -> Vec<Obs> {
+        let eng = engine(gpu);
+        World::run::<f64, _, _>(pr * pc, NetworkModel::gigabit_ethernet(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+            let ctx = if cached {
+                Ctx::new(&mesh, eng.clone() as Arc<dyn Engine<f64>>)
+            } else {
+                Ctx::streaming(&mesh, eng.clone() as Arc<dyn Engine<f64>>)
+            };
+            let out = kernel(&ctx);
+            Obs {
+                bits: out.iter().map(|v| v.to_bits()).collect(),
+                compute: comm.clock().compute_secs(),
+                transfer: comm.clock().transfer_secs(),
+                pcie_saved: comm.stats().pcie_saved_bytes(),
+                launches_fused: comm.stats().launches_fused(),
+            }
+        })
+    };
+    (run(true), run(false))
+}
+
+fn meshes() -> Vec<(usize, usize)> {
+    vec![(1, 1), (2, 1), (2, 2)]
+}
+
+fn lu_kernel(ctx: &Ctx<'_, f64>) -> Vec<f64> {
+    let mesh = ctx.mesh;
+    let desc = Descriptor::new(N, N, TILE, mesh.shape());
+    let mut a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+        ((i * 7 + j * 13) as f64 * 0.37).sin() + if i == j { 4.0 } else { 0.0 }
+    });
+    let b = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| (i as f64 * 0.21).cos());
+    let x = plu_solve(ctx, &mut a, &b).expect("lu solve");
+    gather_vector(mesh, &x).unwrap_or_default()
+}
+
+fn chol_kernel(ctx: &Ctx<'_, f64>) -> Vec<f64> {
+    let mesh = ctx.mesh;
+    let desc = Descriptor::new(N, N, TILE, mesh.shape());
+    // SPD: diagonally dominant symmetric.
+    let mut a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+        let v = ((i.min(j) * 5 + i.max(j) * 3) as f64 * 0.11).sin() * 0.3;
+        if i == j { 6.0 + v } else { v }
+    });
+    pchol_factor(ctx, &mut a).expect("cholesky");
+    gather_matrix(mesh, &a).unwrap_or_default()
+}
+
+fn summa_kernel(ctx: &Ctx<'_, f64>) -> Vec<f64> {
+    let mesh = ctx.mesh;
+    let desc = Descriptor::new(N, N, TILE, mesh.shape());
+    let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+        ((i + 2 * j) as f64 * 0.1).sin()
+    });
+    let b = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+        ((3 * i + j) as f64 * 0.07).cos()
+    });
+    let mut c = DistMatrix::zeros(desc, mesh.row(), mesh.col());
+    pgemm_acc(ctx, &a, &b, &mut c);
+    gather_matrix(mesh, &c).unwrap_or_default()
+}
+
+fn cg_kernel(ctx: &Ctx<'_, f64>) -> Vec<f64> {
+    let mesh = ctx.mesh;
+    let desc = Descriptor::new(N, N, TILE, mesh.shape());
+    let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+        let v = ((i.min(j) * 5 + i.max(j) * 3) as f64 * 0.11).sin() * 0.3;
+        if i == j { 6.0 + v } else { v }
+    });
+    let b = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| (i as f64 * 0.5).sin());
+    let cfg = IterConfig { tol: 1e-12, max_iter: 200, restart: 30 };
+    let (x, stats) = cg(ctx, &a, &b, &cfg).expect("cg");
+    assert!(stats.converged);
+    gather_vector(mesh, &x).unwrap_or_default()
+}
+
+fn assert_bit_identical_and_accounted(
+    name: &str,
+    pr: usize,
+    pc: usize,
+    gpu: bool,
+    cached: &[Obs],
+    streaming: &[Obs],
+) {
+    for (rank, (c, s)) in cached.iter().zip(streaming).enumerate() {
+        assert_eq!(
+            c.bits, s.bits,
+            "{name} {pr}x{pc} gpu={gpu} rank {rank}: cache changed the results"
+        );
+        assert!(
+            (c.compute - s.compute).abs() < 1e-12 * s.compute.max(1.0),
+            "{name} {pr}x{pc} rank {rank}: residency must not touch compute time"
+        );
+        assert_eq!(s.pcie_saved, 0, "streaming run never saves PCIe");
+        if gpu {
+            assert!(
+                c.transfer <= s.transfer + 1e-15,
+                "{name} {pr}x{pc} rank {rank}: cached transfer {} > streaming {}",
+                c.transfer,
+                s.transfer
+            );
+        } else {
+            assert_eq!(c.transfer, 0.0, "host profile streams nothing");
+            assert_eq!(c.pcie_saved, 0, "pcie_saved must be 0 when pcie_bw == 0");
+        }
+    }
+    if gpu {
+        let saved: u64 = cached.iter().map(|o| o.pcie_saved).sum();
+        assert!(saved > 0, "{name} {pr}x{pc}: residency must save PCIe bytes");
+        let (ct, st) = (
+            cached.iter().map(|o| o.transfer).sum::<f64>(),
+            streaming.iter().map(|o| o.transfer).sum::<f64>(),
+        );
+        assert!(ct < st, "{name} {pr}x{pc}: total transfer must drop ({ct} vs {st})");
+    }
+}
+
+#[test]
+fn lu_bit_identical_with_cache_on_and_off() {
+    for (pr, pc) in meshes() {
+        for gpu in [false, true] {
+            let (c, s) = run_both(pr, pc, gpu, lu_kernel);
+            assert_bit_identical_and_accounted("LU", pr, pc, gpu, &c, &s);
+        }
+    }
+}
+
+#[test]
+fn cholesky_bit_identical_with_cache_on_and_off() {
+    for (pr, pc) in meshes() {
+        for gpu in [false, true] {
+            let (c, s) = run_both(pr, pc, gpu, chol_kernel);
+            assert_bit_identical_and_accounted("Cholesky", pr, pc, gpu, &c, &s);
+        }
+    }
+}
+
+#[test]
+fn summa_bit_identical_with_cache_on_and_off() {
+    for (pr, pc) in meshes() {
+        for gpu in [false, true] {
+            let (c, s) = run_both(pr, pc, gpu, summa_kernel);
+            assert_bit_identical_and_accounted("SUMMA", pr, pc, gpu, &c, &s);
+        }
+    }
+}
+
+#[test]
+fn cg_bit_identical_with_cache_on_and_off() {
+    for (pr, pc) in meshes() {
+        for gpu in [false, true] {
+            let (c, s) = run_both(pr, pc, gpu, cg_kernel);
+            assert_bit_identical_and_accounted("CG", pr, pc, gpu, &c, &s);
+            // The fused BLAS-1 chain fires in both modes.
+            assert!(c.iter().all(|o| o.launches_fused > 0));
+            assert_eq!(
+                c.iter().map(|o| o.launches_fused).collect::<Vec<_>>(),
+                s.iter().map(|o| o.launches_fused).collect::<Vec<_>>(),
+            );
+        }
+    }
+}
+
+#[test]
+fn tiny_budget_still_correct_just_slower() {
+    // A cache two tiles big must thrash, never corrupt: results stay
+    // bit-identical and the charged transfer lands between the resident
+    // and streaming extremes.
+    let eng = engine(true);
+    let budget = 2 * TILE * TILE * std::mem::size_of::<f64>();
+    let out = World::run::<f64, _, _>(4, NetworkModel::gigabit_ethernet(), move |comm| {
+        let mesh = Mesh::new(&comm, MeshShape::new(2, 2));
+        let ctx = Ctx::with_device_mem(&mesh, eng.clone() as _, budget);
+        let bits = summa_kernel(&ctx);
+        (bits, comm.clock().transfer_secs())
+    });
+    let (full_c, _) = run_both(2, 2, true, summa_kernel);
+    for (rank, ((bits, transfer), c)) in out.iter().zip(&full_c).enumerate() {
+        assert_eq!(
+            bits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            c.bits,
+            "rank {rank}: tiny budget changed results"
+        );
+        assert!(*transfer >= c.transfer - 1e-15, "thrash can't beat a big cache");
+    }
+}
