@@ -45,6 +45,18 @@ def _gemv_update_kernel(y_ref, a_ref, x_ref, o_ref):
     )
 
 
+def _gemv_acc_kernel(y_ref, a_ref, x_ref, o_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = y_ref[...]
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], x_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
 def _specs(m, k, bm, bk):
     if m % bm or k % bk:
         raise ValueError(f"gemv dims ({m},{k}) must be multiples of ({bm},{bk})")
@@ -80,6 +92,29 @@ def gemv_update(y, a, x, bm=DEFAULT_BLOCK, bk=DEFAULT_BLOCK):
     y_spec = pl.BlockSpec((bm,), lambda i, kk: (i,))
     return pl.pallas_call(
         _gemv_update_kernel,
+        grid=grid,
+        in_specs=[y_spec, a_spec, x_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m,), y.dtype),
+        interpret=True,
+    )(y, a, x)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk"))
+def gemv_acc(y, a, x, bm=DEFAULT_BLOCK, bk=DEFAULT_BLOCK):
+    """y_out = y + A @ x as one fused Pallas kernel.
+
+    The matvec partial-sum accumulation of the distributed pgemv: fusing the
+    add lets the output block stay device-resident across a rank's tile-row
+    sweep instead of round-tripping through a host axpy per tile (rust
+    DESIGN.md §13).
+    """
+    m, ka = a.shape
+    assert ka == x.shape[0] and y.shape[0] == m, (y.shape, a.shape, x.shape)
+    grid, a_spec, x_spec, o_spec = _specs(m, ka, bm, bk)
+    y_spec = pl.BlockSpec((bm,), lambda i, kk: (i,))
+    return pl.pallas_call(
+        _gemv_acc_kernel,
         grid=grid,
         in_specs=[y_spec, a_spec, x_spec],
         out_specs=o_spec,

@@ -41,6 +41,16 @@ def ref_gemv_update(y, a, x):
     return y - jnp.dot(a, x, preferred_element_type=a.dtype)
 
 
+def ref_gemv_acc(y, a, x):
+    """y_out = y + A @ x (device-resident matvec partial accumulation)."""
+    return y + jnp.dot(a, x, preferred_element_type=a.dtype)
+
+
+def ref_gemv_t_acc(y, a, x):
+    """y_out = y + A^T @ x (transpose twin, BiCG's second sequence)."""
+    return y + jnp.dot(a.T, x, preferred_element_type=a.dtype)
+
+
 def ref_trsm_llu(l, b):
     """Solve L X = B with L unit lower triangular (LU panel: U12 block row)."""
     return solve_triangular(l, b, lower=True, unit_diagonal=True)

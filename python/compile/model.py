@@ -85,6 +85,19 @@ def _gemv_update(y, a, x):
     return (gemv_k.gemv_update(y, a, x),)
 
 
+def _gemv_acc(y, a, x):
+    # y += A @ x: the matvec partial-sum accumulation fused into one kernel,
+    # so pgemv's output block stays device-resident across a rank's tile-row
+    # sweep (rust DESIGN.md §13).
+    return (gemv_k.gemv_acc(y, a, x),)
+
+
+def _gemv_t_acc(y, a, x):
+    # y += A^T @ x (pgemv_t / BiCG's transpose sequence); the transpose
+    # fuses into the same HLO module, as for gemv_t.
+    return (gemv_k.gemv_acc(y, a.T, x),)
+
+
 # Factor-tile ops come from kernels/tri.py: portable-HLO implementations
 # (jax.scipy's solve_triangular / jnp.linalg.cholesky lower to LAPACK
 # typed-FFI custom-calls on CPU, which xla_extension 0.5.1 cannot compile).
@@ -150,6 +163,8 @@ OPS = {
     "gemv":        (_gemv,        (_mm, _v),          lambda t: 2 * t * t),
     "gemv_t":      (_gemv_t,      (_mm, _v),          lambda t: 2 * t * t),
     "gemv_update": (_gemv_update, (_v, _mm, _v),      lambda t: 2 * t * t + t),
+    "gemv_acc":    (_gemv_acc,    (_v, _mm, _v),      lambda t: 2 * t * t + t),
+    "gemv_t_acc":  (_gemv_t_acc,  (_v, _mm, _v),      lambda t: 2 * t * t + t),
     "gemm_nt_update": (_gemm_nt_update, (_mm, _mm, _mm), lambda t: 2 * t**3 + t * t),
     "potrf":       (_potrf,       (_mm,),             lambda t: t**3 // 3),
     "trsm_llu":    (_trsm_llu,    (_mm, _mm),         lambda t: t**3),

@@ -26,7 +26,10 @@ _BLAS3_OPS = {
     "gemm", "gemm_acc", "gemm_update", "gemm_nt_update", "potrf",
     "trsm_llu", "trsm_ru", "trsm_rlt",
 }
-_BLAS2_OPS = {"gemv", "gemv_t", "gemv_update", "trsv_lu", "trsv_l", "trsv_u", "trsv_lt"}
+_BLAS2_OPS = {
+    "gemv", "gemv_t", "gemv_update", "gemv_acc", "gemv_t_acc",
+    "trsv_lu", "trsv_l", "trsv_u", "trsv_lt",
+}
 
 
 def op_class(op):
@@ -80,7 +83,7 @@ def op_flops(op, t):
         return 2 * t**3 + t * t
     if op in ("gemv", "gemv_t"):
         return 2 * t * t
-    if op == "gemv_update":
+    if op in ("gemv_update", "gemv_acc", "gemv_t_acc"):
         return 2 * t * t + t
     if op == "potrf":
         return t**3 // 3
@@ -103,6 +106,8 @@ def op_operand_elems(op, t):
         "gemv": ([t2, t], t),
         "gemv_t": ([t2, t], t),
         "gemv_update": ([t, t2, t], t),
+        "gemv_acc": ([t, t2, t], t),
+        "gemv_t_acc": ([t, t2, t], t),
         "potrf": ([t2], t2),
         "trsm_llu": ([t2, t2], t2),
         "trsm_ru": ([t2, t2], t2),
@@ -233,6 +238,9 @@ class ModelParams:
 
 
 def lu_step_parts(n, p, b, resident=False):
+    """Per-step (panel_cpu, panel_comm, pre, update_compute, update_pcie):
+    the trailing leg split so the resident twin sums the shares while the
+    prefetch twin takes their max (rust lu_step_parts)."""
     t = p.tile
     kt = ceil_div(n, t)
     pr, pc = p.pr, p.pc
@@ -245,6 +253,7 @@ def lu_step_parts(n, p, b, resident=False):
         panel_comm = 0.0
         pre = 0.0
         update = 0.0
+        update_pcie = 0.0
         remote_tiles = mk - ceil_div(mk, pr)
         if pr > 1:
             panel_comm += (ceil_div(mk, pr) + remote_tiles) * p.msg(t2, b)
@@ -266,13 +275,19 @@ def lu_step_parts(n, p, b, resident=False):
             my_cols = ceil_div(trailing, pc)
             my_tiles = my_rows * my_cols
             if resident and p.engine.pcie_bw > 0.0:
-                update = my_tiles * p.op_resident("gemm_update", b) + p.resident_extra(
+                update = my_tiles * p.op_resident("gemm_update", b)
+                update_pcie = p.resident_extra(
                     my_rows, my_cols, my_tiles, k == 0, p.swap_fraction, 4, 1, b
                 )
             else:
                 update = my_tiles * p.op("gemm_update", b)
-        parts.append((panel_cpu, panel_comm, pre, update))
+        parts.append((panel_cpu, panel_comm, pre, update, update_pcie))
     return parts
+
+
+def _fold_update(parts, combine):
+    """rust fold_update: fold the split trailing leg with `combine`."""
+    return [(cpu, comm, pre, combine(uc, up)) for cpu, comm, pre, uc, up in parts]
 
 
 def trsv_makespan(n, p, b):
@@ -306,15 +321,44 @@ def _lu_lookahead_assembly(parts):
     return total
 
 
+def _add(a, b):
+    return a + b
+
+
 def lu_makespan_lookahead(n, p, b):
-    return _lu_lookahead_assembly(lu_step_parts(n, p, b)) + trsv_makespan(n, p, b) * 2.0
+    return (
+        _lu_lookahead_assembly(_fold_update(lu_step_parts(n, p, b), _add))
+        + trsv_makespan(n, p, b) * 2.0
+    )
 
 
 def lu_makespan_resident(n, p, b):
     return (
-        _lu_lookahead_assembly(lu_step_parts(n, p, b, resident=True))
+        _lu_lookahead_assembly(_fold_update(lu_step_parts(n, p, b, resident=True), _add))
         + trsv_makespan(n, p, b) * 2.0
     )
+
+
+def lu_makespan_prefetch(n, p, b):
+    """rust lu_makespan_prefetch: the trailing PCIe extra rides the
+    copy-engine timeline under the gemm stream (max instead of +)."""
+    return (
+        _lu_lookahead_assembly(_fold_update(lu_step_parts(n, p, b, resident=True), max))
+        + trsv_makespan(n, p, b) * 2.0
+    )
+
+
+def lu_prefetch_headroom(n, p, b):
+    """rust lu_prefetch_headroom: did residency leave PCIe on the critical
+    path (some step's resident trailing leg exceeds the next panel comm)?"""
+    parts = lu_step_parts(n, p, b, resident=True)
+    kt = len(parts)
+    for k in range(kt):
+        _, _, _, uc, up = parts[k]
+        next_comm = parts[k + 1][1] if k + 1 < kt else 0.0
+        if uc > 0.0 and up > 0.0 and uc + up > next_comm:
+            return True
+    return False
 
 
 def summa_makespan(n, p, b, overlapped):
@@ -330,6 +374,14 @@ def summa_makespan(n, p, b, overlapped):
 
 
 def summa_makespan_resident(n, p, b, overlapped):
+    return _summa_makespan_cached(n, p, b, overlapped, _add)
+
+
+def summa_makespan_prefetch(n, p, b, overlapped):
+    return _summa_makespan_cached(n, p, b, overlapped, max)
+
+
+def _summa_makespan_cached(n, p, b, overlapped, combine):
     t = p.tile
     t2 = t * t
     kt = ceil_div(n, t)
@@ -345,13 +397,13 @@ def summa_makespan_resident(n, p, b, overlapped):
     if overlapped:
         total = bcast
         for k in range(kt):
-            compute = gacc + step_extra(k)
+            compute = combine(gacc, step_extra(k))
             total += max(compute, bcast) if k + 1 < kt else compute
         return total
-    return sum(bcast + gacc + step_extra(k) for k in range(kt))
+    return sum(bcast + combine(gacc, step_extra(k)) for k in range(kt))
 
 
-def chol_makespan(n, p, b, resident=False):
+def chol_makespan(n, p, b, resident=False, combine=_add):
     t = p.tile
     kt = ceil_div(n, t)
     pr, pc = p.pr, p.pc
@@ -370,8 +422,9 @@ def chol_makespan(n, p, b, resident=False):
         my_cols = ceil_div(trailing, pc)
         my_tiles = ceil_div(my_rows * my_cols, 2)
         if resident and p.engine.pcie_bw > 0.0:
-            total += my_tiles * p.op_resident("gemm_nt_update", b) + p.resident_extra(
-                my_rows, my_cols, my_tiles, k == 0, 0.0, 4, 1, b
+            total += combine(
+                my_tiles * p.op_resident("gemm_nt_update", b),
+                p.resident_extra(my_rows, my_cols, my_tiles, k == 0, 0.0, 4, 1, b),
             )
         else:
             total += my_tiles * p.op("gemm_nt_update", b)
@@ -385,6 +438,10 @@ def chol_makespan_resident(n, p, b):
     return chol_makespan(n, p, b, resident=True)
 
 
+def chol_makespan_prefetch(n, p, b):
+    return chol_makespan(n, p, b, resident=True, combine=max)
+
+
 def iter_makespan(method, n, iters, restart, p, b):
     t = p.tile
     kt = ceil_div(n, t)
@@ -394,11 +451,11 @@ def iter_makespan(method, n, iters, restart, p, b):
     vec_elems = my_rows * t
     matvec = (
         p.ring(pr, vec_elems, b)
-        + (my_rows * my_cols) * (p.op("gemv", b) + p.blas1(t, b))
+        + (my_rows * my_cols) * p.op("gemv_acc", b)
         + 2.0 * p.tree(pc, vec_elems, b)
     )
     matvec_t = (
-        (my_rows * my_cols) * (p.op("gemv_t", b) + p.blas1(t, b))
+        (my_rows * my_cols) * p.op("gemv_t_acc", b)
         + my_cols * p.tree(pr, t, b)
         + p.ring(pc, vec_elems, b)
     )
@@ -421,24 +478,47 @@ def iter_makespan(method, n, iters, restart, p, b):
 
 
 def iter_makespan_fused(method, n, iters, restart, p, b):
+    return _iter_makespan_cached(method, n, iters, restart, p, b, _add)
+
+
+def iter_makespan_prefetch(method, n, iters, restart, p, b):
+    """rust iter_makespan_prefetch: the matvec's surviving PCIe rides the
+    copy-engine timeline (max instead of +)."""
+    return _iter_makespan_cached(method, n, iters, restart, p, b, max)
+
+
+def dense_matvec_terms(p, n, b):
+    """rust dense_matvec_terms: (gemv compute stream, per-matvec PCIe,
+    one-time A load) under the residency flow."""
+    t = p.tile
+    kt = ceil_div(n, t)
+    my_rows = ceil_div(kt, p.pr)
+    my_cols = ceil_div(kt, p.pc)
+    my_tiles = my_rows * my_cols
+    a_fits = my_tiles * t * t * b <= p.device_mem
+    if p.engine.pcie_bw <= 0.0:
+        return my_tiles * p.op("gemv_acc", b), 0.0, 0.0
+    compute = my_tiles * p.op_resident("gemv_acc", b)
+    if a_fits:
+        return (
+            compute,
+            p.xfer((my_cols + my_rows) * t, b),
+            p.xfer(my_tiles * t * t, b),
+        )
+    return compute, my_tiles * p.xfer(t * t + 3 * t, b), 0.0
+
+
+def _iter_makespan_cached(method, n, iters, restart, p, b, combine):
     t = p.tile
     kt = ceil_div(n, t)
     pr, pc = p.pr, p.pc
     my_rows = ceil_div(kt, pr)
-    my_cols = ceil_div(kt, pc)
-    my_tiles = my_rows * my_cols
     vec_elems = my_rows * t
 
-    a_fits = my_tiles * t * t * b <= p.device_mem
-    if p.engine.pcie_bw > 0.0 and a_fits:
-        gemv = p.op_resident("gemv", b) + p.xfer(2 * t, b)
-        a_load = p.xfer(my_tiles * t * t, b)
-    else:
-        gemv = p.op("gemv", b)
-        a_load = 0.0
+    gemv_stream, matvec_pcie, a_load = dense_matvec_terms(p, n, b)
     matvec = (
         p.ring(pr, vec_elems, b)
-        + my_tiles * (gemv + p.blas1(t, b))
+        + combine(gemv_stream, matvec_pcie)
         + 2.0 * p.tree(pc, vec_elems, b)
     )
     dot = my_rows * p.blas1(t, b) + 2.0 * p.tree(pr, 1, b)
@@ -543,6 +623,12 @@ def sparse_iter_makespan_fused(method, n, nnz, iters, restart, p, b):
     else:
         return sparse_iter_makespan(method, n, nnz, iters, restart, p, b)
     return iters * per_iter
+
+
+def sparse_iter_makespan_prefetch(method, n, nnz, iters, restart, p, b):
+    """Identical to the fused twin by definition: sparse operands run
+    host-side, the copy engine is idle (rust sparse_iter_makespan_prefetch)."""
+    return sparse_iter_makespan_fused(method, n, nnz, iters, restart, p, b)
 
 
 def sparse_cg_split_makespan(n, nnz, iters, diag_frac, p, b):
@@ -662,6 +748,64 @@ def residency_rows():
     return rows
 
 
+def prefetch_rows():
+    """Rows of BENCH_prefetch.json (rust/benches/prefetch.rs): each row is
+    (kernel, engine, n, ranks, streaming, resident, prefetch, strict) where
+    `strict` means prefetch must beat resident strictly (PCIe was on the
+    compute path)."""
+    grid = 1_000
+    sparse_n, nnz = grid * grid, 5 * grid * grid - 4 * grid
+    iters = 100
+    rows = []
+    for ranks in PAPER_RANKS:
+        for gpu in (False, True):
+            p = params(ranks, gpu)
+            engine = "MPI+CUDA" if gpu else "MPI+ATLAS"
+            rows.append((
+                "LU", engine, PAPER_N, ranks,
+                lu_makespan_lookahead(PAPER_N, p, 4),
+                lu_makespan_resident(PAPER_N, p, 4),
+                lu_makespan_prefetch(PAPER_N, p, 4),
+                # Strict only where residency left PCIe on the critical
+                # path: the lookahead already hides the trailing leg behind
+                # panel comm at large rank counts.
+                gpu and lu_prefetch_headroom(PAPER_N, p, 4),
+            ))
+            rows.append((
+                "Cholesky", engine, PAPER_N, ranks,
+                chol_makespan(PAPER_N, p, 4),
+                chol_makespan_resident(PAPER_N, p, 4),
+                chol_makespan_prefetch(PAPER_N, p, 4),
+                gpu,
+            ))
+            rows.append((
+                "SUMMA", engine, PAPER_N, ranks,
+                summa_makespan(PAPER_N, p, 4, True),
+                summa_makespan_resident(PAPER_N, p, 4, True),
+                summa_makespan_prefetch(PAPER_N, p, 4, True),
+                gpu,
+            ))
+            for m, name in (("cg", "CG"), ("pipecg", "pipelined CG"),
+                            ("bicgstab", "BiCGSTAB")):
+                rows.append((
+                    name, engine, PAPER_N, ranks,
+                    iter_makespan(m, PAPER_N, iters, 30, p, 4),
+                    iter_makespan_fused(m, PAPER_N, iters, 30, p, 4),
+                    iter_makespan_prefetch(m, PAPER_N, iters, 30, p, 4),
+                    gpu,
+                ))
+            if not gpu:
+                for m, name in (("cg", "sparse CG"), ("pipecg", "sparse pipelined CG")):
+                    rows.append((
+                        name, engine, sparse_n, ranks,
+                        sparse_iter_makespan(m, sparse_n, nnz, iters, 30, p, 8),
+                        sparse_iter_makespan_fused(m, sparse_n, nnz, iters, 30, p, 8),
+                        sparse_iter_makespan_prefetch(m, sparse_n, nnz, iters, 30, p, 8),
+                        False,
+                    ))
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # Committed-artifact rendering (byte-identical to the rust benches' output)
 # ---------------------------------------------------------------------------
@@ -684,6 +828,23 @@ def render_overlap_json():
             f'"ranks": {ranks}, "blocking_secs": {_rust_e6(blocking)}, '
             f'"overlapped_secs": {_rust_e6(overlapped)}, '
             f'"hidden_frac": {1.0 - overlapped / blocking:.4f}}}{comma}'
+        )
+    return "\n".join(lines + ["  ]", "}", ""])
+
+
+def render_prefetch_json():
+    """The exact bytes `cargo bench --bench prefetch` writes."""
+    rows = prefetch_rows()
+    lines = ['{', '  "network": "gigabit_ethernet",',
+             f'  "device_mem_bytes": {DEFAULT_DEVICE_MEM},', '  "entries": [']
+    for i, (kernel, engine, n, ranks, streaming, resident, prefetch, _s) in enumerate(rows):
+        comma = "," if i + 1 < len(rows) else ""
+        lines.append(
+            f'    {{"kernel": "{kernel}", "engine": "{engine}", "n": {n}, '
+            f'"ranks": {ranks}, "streaming_secs": {_rust_e6(streaming)}, '
+            f'"resident_secs": {_rust_e6(resident)}, '
+            f'"prefetch_secs": {_rust_e6(prefetch)}, '
+            f'"hidden_frac": {1.0 - prefetch / resident:.4f}}}{comma}'
         )
     return "\n".join(lines + ["  ]", "}", ""])
 

@@ -167,6 +167,42 @@ def test_gemv_update_property(mi, ki, dt, seed):
     np.testing.assert_allclose(got, ref.ref_gemv_update(y, a, x), **_tol(dt))
 
 
+@settings(max_examples=15, deadline=None)
+@given(
+    mi=st.integers(1, 2),
+    ki=st.integers(1, 3),
+    dt=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemv_acc_property(mi, ki, dt, seed):
+    m, k = mi * B, ki * B
+    rng = np.random.default_rng(seed)
+    y = _rand(rng, (m,), dt)
+    a, x = _rand(rng, (m, k), dt), _rand(rng, (k,), dt)
+    got = gemv_k.gemv_acc(y, a, x)
+    np.testing.assert_allclose(got, ref.ref_gemv_acc(y, a, x), **_tol(dt))
+
+
+def test_gemv_acc_zero_a_is_identity():
+    rng = np.random.default_rng(7)
+    y = _rand(rng, (256,), jnp.float64)
+    z = jnp.zeros((256, 256), jnp.float64)
+    x = _rand(rng, (256,), jnp.float64)
+    np.testing.assert_allclose(gemv_k.gemv_acc(y, z, x), y, rtol=0, atol=0)
+
+
+def test_gemv_t_acc_ref_matches_transpose():
+    # The L2 builder lowers gemv_t_acc as gemv_acc(y, a.T, x); pin the
+    # reference relation the rust op relies on.
+    rng = np.random.default_rng(8)
+    y = _rand(rng, (256,), jnp.float64)
+    a = _rand(rng, (256, 256), jnp.float64)
+    x = _rand(rng, (256,), jnp.float64)
+    np.testing.assert_allclose(
+        gemv_k.gemv_acc(y, a.T, x), ref.ref_gemv_t_acc(y, a, x), rtol=1e-12, atol=1e-12
+    )
+
+
 def test_gemv_identity():
     rng = np.random.default_rng(3)
     x = _rand(rng, (256,), jnp.float64)

@@ -57,7 +57,7 @@ def _args_for(name, rng, t, dtype):
         return (r((t, t)), r((t,)))
     if name == "gemm_nt_update":
         return (r((t, t)), r((t, t)), r((t, t)))
-    if name == "gemv_update":
+    if name in ("gemv_update", "gemv_acc", "gemv_t_acc"):
         return (r((t,)), r((t, t)), r((t,)))
     if name == "potrf":
         return (_spd(rng, t, dt),)
@@ -89,6 +89,8 @@ _REF = {
     "gemv": ref.ref_gemv,
     "gemv_t": lambda a, x: ref.ref_gemv(a.T, x),
     "gemv_update": ref.ref_gemv_update,
+    "gemv_acc": ref.ref_gemv_acc,
+    "gemv_t_acc": ref.ref_gemv_t_acc,
     "gemm_nt_update": lambda c, a, b: ref.ref_gemm_update(c, a, b.T),
     "potrf": ref.ref_potrf,
     "trsm_llu": ref.ref_trsm_llu,

@@ -1,0 +1,241 @@
+//! Bench: synchronous residency accounting vs the copy-engine timeline —
+//! the printed number behind the async prefetch / write-back subsystem
+//! (`DESIGN.md` §13).
+//!
+//! For every paper rank count and both engine arms on the gigabit network,
+//! evaluates the analytic model in three flows for each refactored hot
+//! path: **streaming** (the paper's §3 copy-per-call), **resident**
+//! (PR 4's tile cache, surviving transfers on the compute timeline) and
+//! **prefetch** (the same transfers moved to the copy-engine timeline,
+//! hidden under compute):
+//!
+//! * **LU / Cholesky** — the trailing sweep's panel first-touch and C-tile
+//!   streams ride under the gemm stream;
+//! * **SUMMA** — panel H2D under the `gemm_acc` sweep;
+//! * **CG / pipelined CG / BiCGSTAB** — x first-touch + the (now
+//!   device-resident) matvec output's single write-back under the gemv
+//!   sweep, or the full thrash re-streams when the budget forces eviction;
+//!   the sparse rows pin the degenerate case (host-side operands, copy
+//!   engine idle: prefetch == resident by definition).
+//!
+//! Emits `BENCH_prefetch.json` and asserts the acceptance shape:
+//! `prefetch <= resident <= streaming` on *every* configuration, prefetch
+//! strictly smaller wherever residency still paid PCIe on the compute
+//! timeline (the accelerated arm), and exactly equal on host profiles.
+//!
+//! ```sh
+//! cargo bench --bench prefetch
+//! ```
+
+use cuplss::accel::{ComputeProfile, DEFAULT_DEVICE_MEM};
+use cuplss::bench_harness::model::{
+    chol_makespan, chol_makespan_prefetch, chol_makespan_resident, iter_makespan,
+    iter_makespan_fused, iter_makespan_prefetch, lu_makespan_lookahead, lu_makespan_prefetch,
+    lu_makespan_resident, lu_prefetch_headroom, sparse_iter_makespan,
+    sparse_iter_makespan_fused, sparse_iter_makespan_prefetch, summa_makespan,
+    summa_makespan_prefetch, summa_makespan_resident,
+};
+use cuplss::bench_harness::{ModelParams, PAPER_N, PAPER_RANKS};
+use cuplss::comm::NetworkModel;
+use cuplss::mesh::MeshShape;
+use cuplss::solvers::IterMethod;
+use cuplss::util::fmt;
+
+struct Row {
+    kernel: &'static str,
+    engine: &'static str,
+    n: usize,
+    ranks: usize,
+    streaming: f64,
+    resident: f64,
+    prefetch: f64,
+    /// Must prefetch win strictly over resident (PCIe on the compute path)?
+    strict: bool,
+}
+
+fn params(ranks: usize, gpu: bool) -> ModelParams {
+    ModelParams {
+        tile: 256,
+        shape: MeshShape::near_square(ranks),
+        net: NetworkModel::gigabit_ethernet(),
+        engine: if gpu {
+            ComputeProfile::gtx280_cublas()
+        } else {
+            ComputeProfile::q6600_atlas()
+        },
+        panel_cpu: ComputeProfile::q6600_atlas(),
+        swap_fraction: 0.5,
+        device_mem: DEFAULT_DEVICE_MEM,
+    }
+}
+
+fn main() {
+    let grid = 1_000usize;
+    let (sparse_n, nnz) = (grid * grid, 5 * grid * grid - 4 * grid);
+    let iters = 100usize;
+    let mut rows: Vec<Row> = Vec::new();
+
+    for &ranks in PAPER_RANKS {
+        for gpu in [false, true] {
+            let p = params(ranks, gpu);
+            let engine = if gpu { "MPI+CUDA" } else { "MPI+ATLAS" };
+            rows.push(Row {
+                kernel: "LU",
+                engine,
+                n: PAPER_N,
+                ranks,
+                streaming: lu_makespan_lookahead::<f32>(PAPER_N, &p),
+                resident: lu_makespan_resident::<f32>(PAPER_N, &p),
+                prefetch: lu_makespan_prefetch::<f32>(PAPER_N, &p),
+                // Strict only where residency left PCIe on the critical
+                // path — the comm lookahead already hides the trailing leg
+                // outright at large rank counts.
+                strict: gpu && lu_prefetch_headroom::<f32>(PAPER_N, &p),
+            });
+            rows.push(Row {
+                kernel: "Cholesky",
+                engine,
+                n: PAPER_N,
+                ranks,
+                streaming: chol_makespan::<f32>(PAPER_N, &p),
+                resident: chol_makespan_resident::<f32>(PAPER_N, &p),
+                prefetch: chol_makespan_prefetch::<f32>(PAPER_N, &p),
+                strict: gpu,
+            });
+            rows.push(Row {
+                kernel: "SUMMA",
+                engine,
+                n: PAPER_N,
+                ranks,
+                streaming: summa_makespan::<f32>(PAPER_N, &p, true),
+                resident: summa_makespan_resident::<f32>(PAPER_N, &p, true),
+                prefetch: summa_makespan_prefetch::<f32>(PAPER_N, &p, true),
+                strict: gpu,
+            });
+            for (m, name) in [
+                (IterMethod::Cg, "CG"),
+                (IterMethod::PipeCg, "pipelined CG"),
+                (IterMethod::Bicgstab, "BiCGSTAB"),
+            ] {
+                rows.push(Row {
+                    kernel: name,
+                    engine,
+                    n: PAPER_N,
+                    ranks,
+                    streaming: iter_makespan::<f32>(m, PAPER_N, iters, 30, &p),
+                    resident: iter_makespan_fused::<f32>(m, PAPER_N, iters, 30, &p),
+                    prefetch: iter_makespan_prefetch::<f32>(m, PAPER_N, iters, 30, &p),
+                    strict: gpu,
+                });
+            }
+            if !gpu {
+                // Sparse operands run host-side: the copy engine is idle,
+                // prefetch == resident by definition — the degenerate row.
+                for (m, name) in [
+                    (IterMethod::Cg, "sparse CG"),
+                    (IterMethod::PipeCg, "sparse pipelined CG"),
+                ] {
+                    rows.push(Row {
+                        kernel: name,
+                        engine,
+                        n: sparse_n,
+                        ranks,
+                        streaming: sparse_iter_makespan::<f64>(m, sparse_n, nnz, iters, 30, &p),
+                        resident: sparse_iter_makespan_fused::<f64>(
+                            m, sparse_n, nnz, iters, 30, &p,
+                        ),
+                        prefetch: sparse_iter_makespan_prefetch::<f64>(
+                            m, sparse_n, nnz, iters, 30, &p,
+                        ),
+                        strict: false,
+                    });
+                }
+            }
+        }
+    }
+
+    // Table for the terminal.
+    let header = ["kernel", "engine", "P", "streaming", "resident", "prefetch", "hidden"];
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.kernel.to_string(),
+                r.engine.to_string(),
+                r.ranks.to_string(),
+                fmt::secs(r.streaming),
+                fmt::secs(r.resident),
+                fmt::secs(r.prefetch),
+                format!("{:.1}%", (1.0 - r.prefetch / r.resident) * 100.0),
+            ]
+        })
+        .collect();
+    println!("== Synchronous residency vs copy-engine prefetch ==");
+    println!("{}", fmt::table(&header, &body));
+
+    // Acceptance shape.
+    for r in &rows {
+        assert!(
+            r.prefetch <= r.resident * (1.0 + 1e-9),
+            "{} {} P={}: prefetch {} > resident {}",
+            r.kernel,
+            r.engine,
+            r.ranks,
+            r.prefetch,
+            r.resident
+        );
+        assert!(
+            r.resident <= r.streaming * (1.0 + 1e-9),
+            "{} {} P={}: resident {} > streaming {}",
+            r.kernel,
+            r.engine,
+            r.ranks,
+            r.resident,
+            r.streaming
+        );
+        if r.strict {
+            assert!(
+                r.prefetch < r.resident,
+                "{} {} P={}: the copy engine must strictly win",
+                r.kernel,
+                r.engine,
+                r.ranks
+            );
+        } else {
+            assert!(
+                (r.prefetch - r.resident).abs() <= 1e-12 * r.resident.max(1.0),
+                "{} {} P={}: nothing streams — prefetch must be a wash",
+                r.kernel,
+                r.engine,
+                r.ranks
+            );
+        }
+    }
+
+    // BENCH_prefetch.json (hand-rolled: the offline crate set has no serde).
+    let mut json = format!(
+        "{{\n  \"network\": \"gigabit_ethernet\",\n  \"device_mem_bytes\": {DEFAULT_DEVICE_MEM},\n  \"entries\": [\n"
+    );
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"engine\": \"{}\", \"n\": {}, \"ranks\": {}, \
+             \"streaming_secs\": {:.6e}, \"resident_secs\": {:.6e}, \
+             \"prefetch_secs\": {:.6e}, \"hidden_frac\": {:.4}}}{}\n",
+            r.kernel,
+            r.engine,
+            r.n,
+            r.ranks,
+            r.streaming,
+            r.resident,
+            r.prefetch,
+            1.0 - r.prefetch / r.resident,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_prefetch.json", &json).expect("write BENCH_prefetch.json");
+    println!(
+        "wrote BENCH_prefetch.json ({} entries); the copy engine never loses.",
+        rows.len()
+    );
+}

@@ -34,9 +34,8 @@ impl OpClass {
         match op {
             "gemm" | "gemm_acc" | "gemm_update" | "gemm_nt_update" | "potrf" | "trsm_llu"
             | "trsm_ru" | "trsm_rlt" => OpClass::Blas3,
-            "gemv" | "gemv_t" | "gemv_update" | "trsv_lu" | "trsv_l" | "trsv_u" | "trsv_lt" => {
-                OpClass::Blas2
-            }
+            "gemv" | "gemv_t" | "gemv_update" | "gemv_acc" | "gemv_t_acc" | "trsv_lu"
+            | "trsv_l" | "trsv_u" | "trsv_lt" => OpClass::Blas2,
             _ => OpClass::Blas1,
         }
     }

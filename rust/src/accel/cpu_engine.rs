@@ -86,6 +86,18 @@ impl<S: Scalar> Engine<S> for CpuEngine {
         Ok(self.cost::<S>("gemv_update"))
     }
 
+    fn gemv_acc(&self, y: &mut [S], a: &[S], x: &[S]) -> Result<OpCost> {
+        let t = self.tile;
+        linalg::gemv_add(t, t, a, x, y);
+        Ok(self.cost::<S>("gemv_acc"))
+    }
+
+    fn gemv_t_acc(&self, y: &mut [S], a: &[S], x: &[S]) -> Result<OpCost> {
+        let t = self.tile;
+        linalg::gemv_t_add(t, t, a, x, y);
+        Ok(self.cost::<S>("gemv_t_acc"))
+    }
+
     fn trsm_llu(&self, l: &[S], b: &mut [S]) -> Result<OpCost> {
         let t = self.tile;
         linalg::trsm_llu(t, t, l, b);

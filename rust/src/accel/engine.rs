@@ -24,7 +24,7 @@ pub fn op_flops(op: &str, t: u64) -> u64 {
         "gemm" => 2 * t * t * t,
         "gemm_update" | "gemm_nt_update" | "gemm_acc" => 2 * t * t * t + t * t,
         "gemv" | "gemv_t" => 2 * t * t,
-        "gemv_update" => 2 * t * t + t,
+        "gemv_update" | "gemv_acc" | "gemv_t_acc" => 2 * t * t + t,
         "potrf" => t * t * t / 3,
         "trsm_llu" | "trsm_ru" | "trsm_rlt" => t * t * t,
         "trsv_lu" | "trsv_l" | "trsv_u" | "trsv_lt" => t * t,
@@ -63,6 +63,16 @@ pub trait Engine<S: Scalar>: Send + Sync {
     fn gemv_t(&self, a: &[S], x: &[S], y: &mut [S]) -> Result<OpCost>;
     /// `y -= A·x`.
     fn gemv_update(&self, y: &mut [S], a: &[S], x: &[S]) -> Result<OpCost>;
+    /// `y += A·x` — the matvec partial-sum accumulation fused into one
+    /// kernel, so the distributed matvec's output block can stay
+    /// device-resident across a rank's tile-row sweep instead of paying a
+    /// host-side axpy (and its D2H) per tile (`DESIGN.md` §13).  Element
+    /// values are bit-identical to the former gemv-into-scratch + host-axpy
+    /// pair: same row-dot order, one final add per element.
+    fn gemv_acc(&self, y: &mut [S], a: &[S], x: &[S]) -> Result<OpCost>;
+    /// `y += A^T·x` — transpose twin of [`Engine::gemv_acc`] (BiCG's second
+    /// sequence / `pgemv_t`'s partial accumulation).
+    fn gemv_t_acc(&self, y: &mut [S], a: &[S], x: &[S]) -> Result<OpCost>;
     /// Solve `L X = B` (unit-lower L), B := X.
     fn trsm_llu(&self, l: &[S], b: &mut [S]) -> Result<OpCost>;
     /// Solve `X U = B` (upper U), B := X.
@@ -183,6 +193,8 @@ pub const TILE_OPS: &[&str] = &[
     "gemv",
     "gemv_t",
     "gemv_update",
+    "gemv_acc",
+    "gemv_t_acc",
     "trsm_llu",
     "trsm_ru",
     "trsm_rlt",
@@ -206,7 +218,7 @@ pub fn op_operand_elems(op: &str, t: usize) -> (Vec<usize>, usize) {
         "gemm" => (vec![t2, t2], t2),
         "gemm_acc" | "gemm_update" | "gemm_nt_update" => (vec![t2, t2, t2], t2),
         "gemv" | "gemv_t" => (vec![t2, t], t),
-        "gemv_update" => (vec![t, t2, t], t),
+        "gemv_update" | "gemv_acc" | "gemv_t_acc" => (vec![t, t2, t], t),
         "potrf" => (vec![t2], t2),
         "trsm_llu" | "trsm_ru" | "trsm_rlt" => (vec![t2, t2], t2),
         "trsv_lu" | "trsv_l" | "trsv_u" | "trsv_lt" => (vec![t2, t], t),
@@ -280,6 +292,8 @@ mod tests {
         assert_eq!(op_flops("gemm_update", 256), 33_619_968);
         assert_eq!(op_flops("gemm_acc", 256), 33_619_968);
         assert_eq!(op_flops("gemv", 128), 32_768);
+        assert_eq!(op_flops("gemv_acc", 128), 32_896);
+        assert_eq!(op_flops("gemv_t_acc", 128), 32_896);
         assert_eq!(op_flops("potrf", 128), 699_050);
         assert_eq!(op_flops("trsv_u", 128), 16_384);
         assert_eq!(op_flops("dot", 128), 256);
@@ -300,6 +314,8 @@ mod tests {
         assert_eq!(op_operand_elems("gemm", 8).0.len(), 2);
         assert_eq!(op_operand_elems("gemm_acc", 8).0.len(), 3);
         assert_eq!(op_operand_elems("gemm_update", 8).0.len(), 3);
+        assert_eq!(op_operand_elems("gemv_acc", 8).0.len(), 3);
+        assert_eq!(op_operand_elems("gemv_t_acc", 8).0.len(), 3);
     }
 
     #[test]

@@ -38,7 +38,7 @@
 //! math itself always executes identically, which is why results are
 //! bit-identical with the cache on or off (pinned by `tests/residency.rs`).
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, HashSet};
 
 /// The GTX 280's device memory: the default residency budget.
 pub const DEFAULT_DEVICE_MEM: usize = 1 << 30; // 1 GiB
@@ -106,6 +106,12 @@ pub struct TileCache {
     /// the first entry — O(log n) eviction even under thrash, where the
     /// hot paths miss on nearly every access.
     lru: BTreeMap<u64, BufKey>,
+    /// Entries with an async transfer in flight (`DESIGN.md` §13): never
+    /// evicted — a DMA's source/target cannot be dropped mid-transfer.
+    /// Admission *declines* instead when pinned entries block the room, so
+    /// a pathologically tight budget degrades to per-call streaming rather
+    /// than evicting the very operands the imminent op prefetched.
+    pinned: HashSet<BufKey>,
     used: usize,
     tick: u64,
 }
@@ -113,7 +119,14 @@ pub struct TileCache {
 impl TileCache {
     /// A cache bounded by `budget` device bytes.
     pub fn new(budget: usize) -> Self {
-        TileCache { budget, map: HashMap::new(), lru: BTreeMap::new(), used: 0, tick: 0 }
+        TileCache {
+            budget,
+            map: HashMap::new(),
+            lru: BTreeMap::new(),
+            pinned: HashSet::new(),
+            used: 0,
+            tick: 0,
+        }
     }
 
     /// A cache with the GTX 280 budget.
@@ -141,12 +154,18 @@ impl TileCache {
         self.tick
     }
 
-    /// Evict least-recently-used entries until `extra` more bytes fit.
-    /// Dirty victims were paid for at write time, so eviction is free.
+    /// Evict least-recently-used **unpinned** entries until `extra` more
+    /// bytes fit (or only pinned entries remain).  Dirty victims were paid
+    /// for at write time, so eviction is free.
     fn make_room(&mut self, extra: usize) {
-        while self.used + extra > self.budget && !self.map.is_empty() {
-            let (_, victim) = self.lru.pop_first().expect("lru tracks every entry");
+        while self.used + extra > self.budget {
+            let Some(victim) =
+                self.lru.values().copied().find(|k| !self.pinned.contains(k))
+            else {
+                break; // everything left is mid-transfer: admission declines
+            };
             let e = self.map.remove(&victim).expect("victim resident");
+            self.lru.remove(&e.tick);
             self.used -= e.bytes;
         }
     }
@@ -157,17 +176,50 @@ impl TileCache {
         self.lru.insert(tick, key);
     }
 
-    fn insert(&mut self, key: BufKey, dirty: bool, tick: u64) {
+    /// Admit `key` if room can be made without touching pinned entries;
+    /// returns whether it is now resident (a decline means the buffer
+    /// streams per call until the pins drain — the caller already charged
+    /// the stream either way).
+    fn insert(&mut self, key: BufKey, dirty: bool, tick: u64) -> bool {
         self.make_room(key.bytes);
+        if self.used + key.bytes > self.budget {
+            return false;
+        }
         self.map.insert(key, Entry { bytes: key.bytes, dirty, tick });
         self.lru.insert(tick, key);
         self.used += key.bytes;
+        true
+    }
+
+    /// Is `key` currently resident?
+    pub fn is_resident(&self, key: BufKey) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    /// Pin a resident entry against eviction while its async transfer is
+    /// in flight (`DESIGN.md` §13); no-op if not resident.
+    pub fn pin(&mut self, key: BufKey) {
+        if self.map.contains_key(&key) {
+            self.pinned.insert(key);
+        }
+    }
+
+    /// Drop a pin (the in-flight transfer was consumed or abandoned).
+    pub fn unpin(&mut self, key: BufKey) {
+        self.pinned.remove(&key);
     }
 
     /// Ensure `key` is resident as a *clean* read copy; returns the H2D
     /// bytes this streams (0 on a hit).  Buffers larger than the whole
     /// budget stream per call and are never inserted.
-    fn touch_read(&mut self, key: BufKey) -> usize {
+    ///
+    /// Public as the **async prefetch** entry point (`DESIGN.md` §13): the
+    /// returned byte count is what [`crate::pblas::Ctx::prefetch`] queues
+    /// on the copy-engine timeline ahead of use.  Prefetching is plain
+    /// first-touch admission — same LRU, same budget — so a prefetched
+    /// entry is indistinguishable from a demand-streamed one; only *when*
+    /// the bytes cross the link changes, never whether.
+    pub fn touch_read(&mut self, key: BufKey) -> usize {
         let tick = self.next_tick();
         if let Some(e) = self.map.get_mut(&key) {
             let old = e.tick;
@@ -178,13 +230,15 @@ impl TileCache {
         if key.bytes > self.budget {
             return key.bytes;
         }
-        self.insert(key, false, tick);
+        self.insert(key, false, tick); // may decline under pin pressure
         key.bytes
     }
 
     /// Record a device write to `key`; returns the D2H write-back bytes to
-    /// charge now (one per dirty period; 0 while already dirty).
-    fn touch_write(&mut self, key: BufKey) -> usize {
+    /// charge now (one per dirty period; 0 while already dirty).  Public so
+    /// the async accounting path can queue the write-back on the
+    /// copy-engine timeline instead of the compute timeline.
+    pub fn touch_write(&mut self, key: BufKey) -> usize {
         let tick = self.next_tick();
         if let Some(e) = self.map.get_mut(&key) {
             let old = e.tick;
@@ -227,8 +281,10 @@ impl TileCache {
     }
 
     /// The host mutates (or is about to free) `buf`: the device copy is
-    /// stale and is dropped; the next device use re-streams.
+    /// stale and is dropped (pins too — the transfer's consumer is gone);
+    /// the next device use re-streams.
     pub fn host_mut(&mut self, key: BufKey) {
+        self.pinned.remove(&key);
         if let Some(e) = self.map.remove(&key) {
             self.lru.remove(&e.tick);
             self.used -= e.bytes;
@@ -239,6 +295,7 @@ impl TileCache {
     pub fn clear(&mut self) {
         self.map.clear();
         self.lru.clear();
+        self.pinned.clear();
         self.used = 0;
     }
 }
@@ -303,6 +360,29 @@ mod tests {
         assert!(c.resident_bytes() <= 3000);
         assert_eq!(c.access(&[a], None).h2d_bytes, 0, "a survived");
         assert_eq!(c.access(&[b], None).h2d_bytes, 1024, "b was evicted");
+    }
+
+    #[test]
+    fn pinned_entries_survive_pressure_and_admission_declines() {
+        let mut c = TileCache::new(2048);
+        let (a, b, d) = (key(0x1, 1024), key(0x2, 1024), key(0x3, 1024));
+        c.access(&[a, b], None);
+        c.pin(a);
+        c.pin(b);
+        // With everything pinned, admitting d must decline, not evict.
+        assert_eq!(c.access(&[d], None).h2d_bytes, 1024, "d streams");
+        assert!(!c.is_resident(d), "admission declined under pin pressure");
+        assert!(c.is_resident(a) && c.is_resident(b), "pins survive");
+        // Unpinning one frees a victim: the next admission evicts it.
+        c.unpin(a);
+        assert_eq!(c.access(&[d], None).h2d_bytes, 1024);
+        assert!(c.is_resident(d) && !c.is_resident(a));
+        assert!(c.is_resident(b), "the still-pinned entry survives");
+        assert!(c.resident_bytes() <= c.budget());
+        // host_mut drops entry and pin together.
+        c.host_mut(b);
+        assert!(!c.is_resident(b));
+        assert_eq!(c.access(&[a], None).h2d_bytes, 1024, "a re-admits freely");
     }
 
     #[test]

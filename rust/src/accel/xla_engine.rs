@@ -112,6 +112,18 @@ impl<S: Scalar> Engine<S> for XlaEngine<S> {
         Ok(self.cost("gemv_update"))
     }
 
+    fn gemv_acc(&self, y: &mut [S], a: &[S], x: &[S]) -> Result<OpCost> {
+        let result = self.exe("gemv_acc").run::<S>(&[y, a, x])?;
+        y.copy_from_slice(&result);
+        Ok(self.cost("gemv_acc"))
+    }
+
+    fn gemv_t_acc(&self, y: &mut [S], a: &[S], x: &[S]) -> Result<OpCost> {
+        let result = self.exe("gemv_t_acc").run::<S>(&[y, a, x])?;
+        y.copy_from_slice(&result);
+        Ok(self.cost("gemv_t_acc"))
+    }
+
     fn trsm_llu(&self, l: &[S], b: &mut [S]) -> Result<OpCost> {
         let result = self.exe("trsm_llu").run::<S>(&[l, b])?;
         b.copy_from_slice(&result);

@@ -30,6 +30,12 @@ pub struct RankMetrics {
     /// PCIe bytes the device-residency layer kept off the host<->device
     /// link (0 on host profiles — nothing streams there to begin with).
     pub pcie_saved_bytes: u64,
+    /// Virtual seconds of PCIe transfer hidden behind compute by the
+    /// copy-engine timeline (async prefetch / write-back; 0 on host
+    /// profiles and with `--no-prefetch`).
+    pub pcie_hidden_secs: f64,
+    /// Operand accesses served by an in-flight async prefetch.
+    pub prefetch_hits: u64,
     /// Kernel launches eliminated by fused BLAS-1 ops.
     pub launches_fused: u64,
     /// Wall-clock seconds this rank actually took (calibration data).
@@ -45,6 +51,7 @@ impl RankMetrics {
     /// not actually hidden.
     pub fn capture<S: Scalar>(comm: &Comm<S>, wall: f64) -> Self {
         let tail_backlog = (comm.clock().nic_free() - comm.clock().now()).max(0.0);
+        let pcie_backlog = (comm.clock().pcie_free() - comm.clock().now()).max(0.0);
         RankMetrics {
             rank: comm.rank(),
             vtime: comm.clock().busy_until(),
@@ -56,6 +63,8 @@ impl RankMetrics {
             max_outstanding_reqs: comm.stats().max_outstanding_reqs(),
             wait_saved: (comm.stats().wait_saved_secs() - tail_backlog).max(0.0),
             pcie_saved_bytes: comm.stats().pcie_saved_bytes(),
+            pcie_hidden_secs: (comm.stats().pcie_hidden_secs() - pcie_backlog).max(0.0),
+            prefetch_hits: comm.stats().prefetch_hits(),
             launches_fused: comm.stats().launches_fused(),
             wall,
         }
@@ -150,6 +159,17 @@ impl SolveReport {
         self.per_rank.iter().map(|m| m.pcie_saved_bytes).sum()
     }
 
+    /// Total virtual seconds of PCIe transfer hidden behind compute by the
+    /// copy-engine timeline.
+    pub fn total_pcie_hidden(&self) -> f64 {
+        self.per_rank.iter().map(|m| m.pcie_hidden_secs).sum()
+    }
+
+    /// Total operand accesses served by an in-flight async prefetch.
+    pub fn total_prefetch_hits(&self) -> u64 {
+        self.per_rank.iter().map(|m| m.prefetch_hits).sum()
+    }
+
     /// Total kernel launches eliminated by fused BLAS-1 ops.
     pub fn total_launches_fused(&self) -> u64 {
         self.per_rank.iter().map(|m| m.launches_fused).sum()
@@ -170,7 +190,8 @@ impl SolveReport {
         };
         format!(
             "{} on {:?} n={} P={} [{}]: makespan {}, err {:.2e}, comm {:.0}%, \
-             hidden {}, reqs<={}, pcie saved {}, fused {}{}",
+             hidden {}, reqs<={}, pcie saved {}, pcie hidden {}, prefetch hits {}, \
+             fused {}{}",
             self.method,
             self.workload,
             self.n,
@@ -182,6 +203,8 @@ impl SolveReport {
             crate::util::fmt::secs(self.total_wait_saved()),
             self.max_outstanding_reqs(),
             crate::util::fmt::bytes(self.total_pcie_saved() as f64),
+            crate::util::fmt::secs(self.total_pcie_hidden()),
+            self.total_prefetch_hits(),
             self.total_launches_fused(),
             iter
         )
@@ -204,6 +227,8 @@ mod tests {
             max_outstanding_reqs: 3,
             wait_saved: 0.25,
             pcie_saved_bytes: 1024,
+            pcie_hidden_secs: 0.125,
+            prefetch_hits: 5,
             launches_fused: 7,
             wall: 0.01,
         }
@@ -228,9 +253,13 @@ mod tests {
         assert!((r.total_wait_saved() - 0.5).abs() < 1e-12);
         assert_eq!(r.max_outstanding_reqs(), 3);
         assert_eq!(r.total_pcie_saved(), 2048);
+        assert!((r.total_pcie_hidden() - 0.25).abs() < 1e-12);
+        assert_eq!(r.total_prefetch_hits(), 10);
         assert_eq!(r.total_launches_fused(), 14);
         assert!(r.summary().contains("LU"));
         assert!(r.summary().contains("hidden"));
         assert!(r.summary().contains("pcie saved"));
+        assert!(r.summary().contains("pcie hidden"));
+        assert!(r.summary().contains("prefetch hits"));
     }
 }

@@ -75,6 +75,12 @@ pub struct ClusterConfig {
     pub residency: bool,
     /// Device-memory budget for the residency cache, bytes.
     pub device_mem: usize,
+    /// Copy-engine timeline: route surviving transfers through async H2D
+    /// prefetch / D2H write-back overlapped with compute (`DESIGN.md`
+    /// §13).  `false` keeps residency's synchronous accounting — the
+    /// `--no-prefetch` A/B arm.  Never changes results, only *when* PCIe
+    /// time is charged.  Inert without residency.
+    pub prefetch: bool,
     /// Iterative controls.
     pub iter: IterConfig,
 }
@@ -89,6 +95,7 @@ impl Default for ClusterConfig {
             artifact_dir: crate::runtime::DEFAULT_ARTIFACT_DIR.to_string(),
             residency: true,
             device_mem: crate::accel::DEFAULT_DEVICE_MEM,
+            prefetch: true,
             iter: IterConfig::default(),
         }
     }
@@ -139,7 +146,7 @@ impl Cluster {
             make_engine(cfg.engine, cfg.tile, self.runtime.as_ref())?;
         let iter_cfg = cfg.iter;
         let tile = cfg.tile;
-        let (residency, device_mem) = (cfg.residency, cfg.device_mem);
+        let (residency, device_mem, prefetch) = (cfg.residency, cfg.device_mem, cfg.prefetch);
 
         let results = World::run::<S, Result<(RankMetrics, Option<Vec<S>>, Option<(usize, f64, bool)>)>, _>(
             cfg.ranks,
@@ -148,6 +155,7 @@ impl Cluster {
                 let mesh = Mesh::new(&comm, shape);
                 let ctx = if residency {
                     Ctx::with_device_mem(&mesh, engine.clone(), device_mem)
+                        .with_prefetch(prefetch)
                 } else {
                     Ctx::streaming(&mesh, engine.clone())
                 };

@@ -1,4 +1,4 @@
-//! Per-rank virtual clock (Lamport-style timestamp propagation) with **two
+//! Per-rank virtual clock (Lamport-style timestamp propagation) with **three
 //! overlappable timelines**.
 //!
 //! Each rank owns a `VClock`.  Local compute advances the *compute* timeline
@@ -20,6 +20,15 @@
 //! the transfer that did not fit under the compute performed since the
 //! request was posted (DESIGN.md §11).
 //!
+//! The third timeline is the **copy engine** (`pcie_free`): real CUDA
+//! devices have dedicated DMA engines, so host<->device transfers can
+//! stream while the SMs compute.  A blocking transfer still advances the
+//! compute timeline ([`VClock::advance_transfer`], the paper's §3
+//! semantics); an *asynchronous* transfer ([`VClock::pcie_occupy`]) only
+//! occupies the copy-engine timeline, and [`VClock::pcie_wait`] at use time
+//! charges only the latency compute did not cover — same occupy/block/wait
+//! discipline as the NIC, applied to PCIe (DESIGN.md §13).
+//!
 //! The clock also accumulates a breakdown (compute vs communication wait vs
 //! accelerator transfer) used by the bench reports.
 
@@ -34,6 +43,10 @@ pub struct VClock {
     /// When this rank's NIC finishes serialising everything queued so far.
     /// Always `>= 0`; may run ahead of `now` while isends are in flight.
     nic_free: Cell<f64>,
+    /// When this rank's copy engine finishes every queued async transfer.
+    /// Like `nic_free`, may run ahead of `now` while prefetches / flushes
+    /// are in flight.
+    pcie_free: Cell<f64>,
     compute: Cell<f64>,
     comm_wait: Cell<f64>,
     xfer: Cell<f64>,
@@ -55,11 +68,18 @@ impl VClock {
         self.nic_free.get()
     }
 
-    /// The instant this rank is completely idle: compute done *and* NIC
-    /// drained.  This is what the makespan aggregation reads — a rank whose
-    /// last act was an isend is still busy until the bytes leave the wire.
+    /// When the copy-engine timeline drains (>= `now` only while async
+    /// transfers are queued).
+    pub fn pcie_free(&self) -> f64 {
+        self.pcie_free.get()
+    }
+
+    /// The instant this rank is completely idle: compute done, NIC drained
+    /// *and* copy engine drained.  This is what the makespan aggregation
+    /// reads — a rank whose last act was an isend (or an async write-back)
+    /// is still busy until the bytes leave the wire / the link.
     pub fn busy_until(&self) -> f64 {
-        self.now.get().max(self.nic_free.get())
+        self.now.get().max(self.nic_free.get()).max(self.pcie_free.get())
     }
 
     /// Advance by a local-compute interval.
@@ -94,6 +114,37 @@ impl VClock {
     /// Occupy the NIC starting from the current compute time.
     pub fn nic_occupy(&self, dt: f64) -> f64 {
         self.nic_occupy_from(self.now.get(), dt)
+    }
+
+    /// Occupy the copy-engine timeline for `dt` seconds starting no earlier
+    /// than the current compute time (and never before previously queued
+    /// async transfers).  Returns the occupancy's end time — the instant
+    /// the transfer lands.  Does **not** advance the compute timeline: this
+    /// is the split-phase half of an async H2D prefetch or D2H write-back.
+    pub fn pcie_occupy(&self, dt: f64) -> f64 {
+        self.pcie_occupy_from(self.now.get(), dt)
+    }
+
+    /// Occupy the copy-engine timeline starting no earlier than `at`.
+    pub fn pcie_occupy_from(&self, at: f64, dt: f64) -> f64 {
+        debug_assert!(dt >= 0.0);
+        let start = self.pcie_free.get().max(at);
+        let end = start + dt;
+        self.pcie_free.set(end);
+        end
+    }
+
+    /// Block the compute timeline until an async transfer queued on the
+    /// copy engine has landed (its `pcie_occupy` end time): charges only the
+    /// *remaining* latency — the part of the transfer that did not fit under
+    /// the compute performed since it was issued — attributed to the
+    /// host<->device transfer breakdown, like a blocking transfer would be.
+    pub fn pcie_wait(&self, ready: f64) {
+        let now = self.now.get();
+        if ready > now {
+            self.xfer.set(self.xfer.get() + (ready - now));
+            self.now.set(ready);
+        }
     }
 
     /// Advance by a send-side occupancy interval (LogGP's `G·bytes`) on the
@@ -143,6 +194,7 @@ impl VClock {
     pub fn reset(&self) {
         self.now.set(0.0);
         self.nic_free.set(0.0);
+        self.pcie_free.set(0.0);
         self.compute.set(0.0);
         self.comm_wait.set(0.0);
         self.xfer.set(0.0);
@@ -224,34 +276,79 @@ mod tests {
         let c = VClock::new();
         c.advance_compute(1.0);
         c.nic_occupy(4.0);
+        c.pcie_occupy(2.0);
         c.observe_arrival(9.0);
         c.reset();
         assert_eq!(c.now(), 0.0);
         assert_eq!(c.nic_free(), 0.0);
+        assert_eq!(c.pcie_free(), 0.0);
         assert_eq!(c.compute_secs(), 0.0);
         assert_eq!(c.comm_wait_secs(), 0.0);
     }
 
-    /// The overlap-clock property the bench reports rely on: replay one
-    /// random trace of compute intervals, sends and message arrivals in
-    /// (a) blocking mode (every send via `advance_send`) and (b) overlapped
-    /// mode (every send via `nic_occupy`).  Then, per rank:
+    #[test]
+    fn async_transfer_hides_behind_compute() {
+        let c = VClock::new();
+        let ready = c.pcie_occupy(0.5); // issue: compute timeline untouched
+        assert_eq!(ready, 0.5);
+        assert_eq!(c.now(), 0.0);
+        assert_eq!(c.busy_until(), 0.5);
+        c.advance_compute(2.0); // compute runs past the transfer
+        c.pcie_wait(ready); // fully hidden: zero remaining latency
+        assert_eq!(c.now(), 2.0);
+        assert_eq!(c.transfer_secs(), 0.0);
+    }
+
+    #[test]
+    fn async_transfer_waited_early_charges_only_the_remainder() {
+        let c = VClock::new();
+        let ready = c.pcie_occupy(1.0);
+        c.advance_compute(0.25);
+        c.pcie_wait(ready); // 0.75 of the transfer did not hide
+        assert!((c.now() - 1.0).abs() < 1e-12);
+        assert!((c.transfer_secs() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn queued_async_transfers_serialise_on_the_copy_engine() {
+        let c = VClock::new();
+        assert_eq!(c.pcie_occupy(0.25), 0.25);
+        assert_eq!(c.pcie_occupy(0.25), 0.5); // back-to-back: queued
+        c.advance_compute(1.0);
+        assert_eq!(c.pcie_occupy(0.25), 1.25); // engine idle since 0.5: restarts at now
+        // The copy engine and the NIC are independent timelines.
+        c.nic_occupy(10.0);
+        assert_eq!(c.pcie_free(), 1.25);
+        assert_eq!(c.busy_until(), 11.0);
+    }
+
+    /// The overlap-clock property the bench reports rely on, extended to
+    /// **three** timelines: replay one random trace of compute intervals,
+    /// sends, message arrivals and host<->device transfers in (a) blocking
+    /// mode (sends via `advance_send`, transfers via `advance_transfer`)
+    /// and (b) overlapped mode (sends via `nic_occupy`, transfers via
+    /// `pcie_occupy` + `pcie_wait` a few events later).  Then, per rank:
     ///
-    /// * `max(total_compute, total_send_occupancy) <= overlapped makespan`,
-    /// * `overlapped makespan <= total_compute + total_comm` (serialisation
-    ///   is the worst case), and
+    /// * `max(compute, send occupancy, transfer occupancy) <= overlapped
+    ///   makespan` (each timeline is a lower bound),
+    /// * `overlapped makespan <= compute + comm + transfer` (full
+    ///   serialisation is the worst case), and
     /// * the overlapped makespan never exceeds the blocking one.
     #[test]
-    fn overlap_never_loses_and_is_bounded() {
+    fn overlap_never_loses_and_is_bounded_on_three_timelines() {
         forall(200, 0xc10c, |rng| {
             let blocking = VClock::new();
             let overlapped = VClock::new();
             let mut total_compute = 0.0f64;
             let mut total_send = 0.0f64;
+            let mut total_xfer = 0.0f64;
             let mut total_comm_blocking = 0.0f64;
-            let n_events = 1 + rng.below(30);
+            // Async transfers outstanding on the overlapped clock, waited
+            // lazily (a later event or the end of the trace).
+            let mut pending: Vec<f64> = Vec::new();
+            let n_events = 1 + rng.below(40);
             for _ in 0..n_events {
-                match rng.below(3) {
+                match rng.below(5) {
                     0 => {
                         let dt = rng.uniform() * 2.0;
                         blocking.advance_compute(dt);
@@ -265,6 +362,17 @@ mod tests {
                         total_send += dt;
                         total_comm_blocking += dt;
                     }
+                    2 => {
+                        let dt = rng.uniform() * 0.5;
+                        blocking.advance_transfer(dt);
+                        pending.push(overlapped.pcie_occupy(dt));
+                        total_xfer += dt;
+                    }
+                    3 => {
+                        if let Some(ready) = pending.pop() {
+                            overlapped.pcie_wait(ready);
+                        }
+                    }
                     _ => {
                         // An externally-stamped arrival: same absolute time
                         // observed by both replays (identical trace).
@@ -276,24 +384,31 @@ mod tests {
                     }
                 }
             }
+            for ready in pending.drain(..) {
+                overlapped.pcie_wait(ready);
+            }
             let ms_over = overlapped.busy_until();
             let ms_block = blocking.busy_until();
             let eps = 1e-12;
             assert!(
-                total_compute.max(total_send) <= ms_over + eps,
-                "lower bound: max({total_compute}, {total_send}) vs {ms_over}"
+                total_compute.max(total_send).max(total_xfer) <= ms_over + eps,
+                "lower bound: max({total_compute}, {total_send}, {total_xfer}) vs {ms_over}"
             );
             assert!(
-                ms_over <= total_compute + total_comm_blocking + eps,
-                "upper bound: {ms_over} vs {total_compute} + {total_comm_blocking}"
+                ms_over <= total_compute + total_comm_blocking + total_xfer + eps,
+                "upper bound: {ms_over} vs \
+                 {total_compute} + {total_comm_blocking} + {total_xfer}"
             );
             assert!(
                 ms_over <= ms_block + eps,
                 "overlap must never lose: {ms_over} vs blocking {ms_block}"
             );
-            // Breakdown is preserved: compute attribution identical in both.
+            // Breakdown is preserved: compute attribution identical in
+            // both, and the overlapped transfer charge never exceeds the
+            // blocking one (waits charge only the remainder).
             assert!((overlapped.compute_secs() - total_compute).abs() < 1e-9);
             assert!((blocking.compute_secs() - total_compute).abs() < 1e-9);
+            assert!(overlapped.transfer_secs() <= blocking.transfer_secs() + eps);
         });
     }
 }

@@ -31,6 +31,8 @@ pub struct CommStats {
     wait_saved: Cell<f64>,
     pcie_saved: Cell<u64>,
     launches_fused: Cell<u64>,
+    pcie_hidden: Cell<f64>,
+    prefetch_hits: Cell<u64>,
 }
 
 impl CommStats {
@@ -79,8 +81,41 @@ impl CommStats {
         self.launches_fused.get()
     }
 
+    /// Virtual seconds of PCIe transfer hidden behind compute by the
+    /// copy-engine timeline (async H2D prefetch / async D2H write-back,
+    /// `DESIGN.md` §13).  Occupancy is credited optimistically at issue; a
+    /// wait that still blocks revokes the remainder, and the metrics
+    /// capture nets out any occupancy still queued at snapshot time (which
+    /// extends `busy_until`, so it was not hidden either) — the same
+    /// discipline as [`CommStats::wait_saved_secs`] on the NIC.
+    pub fn pcie_hidden_secs(&self) -> f64 {
+        self.pcie_hidden.get()
+    }
+
+    /// Operand accesses served by an in-flight async prefetch (the operand
+    /// was already on the copy-engine timeline when the op needed it).
+    pub fn prefetch_hits(&self) -> u64 {
+        self.prefetch_hits.get()
+    }
+
     pub(crate) fn add_pcie_saved(&self, bytes: u64) {
         self.pcie_saved.set(self.pcie_saved.get() + bytes);
+    }
+
+    pub(crate) fn add_pcie_hidden(&self, secs: f64) {
+        if secs > 0.0 {
+            self.pcie_hidden.set(self.pcie_hidden.get() + secs);
+        }
+    }
+
+    pub(crate) fn revoke_pcie_hidden(&self, secs: f64) {
+        if secs > 0.0 {
+            self.pcie_hidden.set((self.pcie_hidden.get() - secs).max(0.0));
+        }
+    }
+
+    pub(crate) fn add_prefetch_hit(&self) {
+        self.prefetch_hits.set(self.prefetch_hits.get() + 1);
     }
 
     pub(crate) fn add_launches_fused(&self, n: u64) {

@@ -29,6 +29,12 @@
 //!   first touch or after host mutation), and the Krylov BLAS-1 chains run
 //!   as fused one-launch kernels — see `DESIGN.md` §12 and
 //!   `cargo bench --bench residency`;
+//! * **the surviving transfers hide behind compute**: a third virtual-clock
+//!   timeline models the device's copy engine — hot paths prefetch their
+//!   next operands async H2D and flush write-backs async D2H, so a
+//!   transfer covered by compute costs zero makespan, and the matvec
+//!   output stays device-resident via a fused `gemv_acc` — see `DESIGN.md`
+//!   §13 and `cargo bench --bench prefetch`;
 //! * the iterative solvers additionally accept **sparse** operands: a
 //!   row-block-distributed CSR format ([`sparse`], [`pblas::pspmv()`]) behind
 //!   the operator-generic [`pblas::LinOp`] trait, with 2-D/3-D Poisson

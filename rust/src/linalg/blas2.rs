@@ -12,6 +12,33 @@ pub fn gemv<S: Scalar>(m: usize, n: usize, a: &[S], x: &[S], y: &mut [S]) {
     }
 }
 
+/// `y += A x` (the device-resident matvec accumulation: each element adds
+/// one finished row dot, so the result is bit-identical to the former
+/// gemv-into-scratch + axpy pair — same dot order, one final add).
+pub fn gemv_add<S: Scalar>(m: usize, n: usize, a: &[S], x: &[S], y: &mut [S]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(x.len(), n);
+    debug_assert_eq!(y.len(), m);
+    for i in 0..m {
+        y[i] += super::blas1::dot(&a[i * n..(i + 1) * n], x);
+    }
+}
+
+/// `y += A^T x`.  The column sums are finished in a scratch pass with the
+/// same accumulation order as [`gemv_t`], then added element-wise — which
+/// keeps the result bit-identical to the former gemv_t-into-scratch + axpy
+/// pair (in-place accumulation would re-associate the sums).
+pub fn gemv_t_add<S: Scalar>(m: usize, n: usize, a: &[S], x: &[S], y: &mut [S]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(x.len(), m);
+    debug_assert_eq!(y.len(), n);
+    let mut tmp = vec![S::zero(); n];
+    gemv_t(m, n, a, x, &mut tmp);
+    for (yj, &tj) in y.iter_mut().zip(&tmp) {
+        *yj += tj;
+    }
+}
+
 /// `y -= A x` (accumulating matvec used by distributed substitution).
 pub fn gemv_sub<S: Scalar>(m: usize, n: usize, a: &[S], x: &[S], y: &mut [S]) {
     debug_assert_eq!(a.len(), m * n);
@@ -77,6 +104,34 @@ mod tests {
         let mut y = [0.0; 2];
         gemv(2, 3, &A, &x, &mut y);
         assert_eq!(y, [-2.0, -2.0]);
+    }
+
+    #[test]
+    fn gemv_add_matches_gemv_then_axpy_bitwise() {
+        let x = [0.371, -1.25, 0.8];
+        let mut y = [10.0, -3.5];
+        let mut tmp = [0.0; 2];
+        gemv(2, 3, &A, &x, &mut tmp);
+        let mut want = y;
+        for i in 0..2 {
+            want[i] += tmp[i];
+        }
+        gemv_add(2, 3, &A, &x, &mut y);
+        assert_eq!(y.map(f64::to_bits), want.map(f64::to_bits));
+    }
+
+    #[test]
+    fn gemv_t_add_matches_gemv_t_then_axpy_bitwise() {
+        let x = [0.371, -1.25];
+        let mut y = [10.0, -3.5, 0.125];
+        let mut tmp = [0.0; 3];
+        gemv_t(2, 3, &A, &x, &mut tmp);
+        let mut want = y;
+        for j in 0..3 {
+            want[j] += tmp[j];
+        }
+        gemv_t_add(2, 3, &A, &x, &mut y);
+        assert_eq!(y.map(f64::to_bits), want.map(f64::to_bits));
     }
 
     #[test]

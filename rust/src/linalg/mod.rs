@@ -18,7 +18,7 @@ pub mod lu;
 pub mod trsm;
 
 pub use blas1::{axpy, axpy_norm2, copy, dot, iamax, norm2_dot, nrm2, scal, swap, xpay};
-pub use blas2::{gemv, gemv_sub, gemv_t, gemv_t_sub, ger_sub};
+pub use blas2::{gemv, gemv_add, gemv_sub, gemv_t, gemv_t_add, gemv_t_sub, ger_sub};
 pub use blas3::{gemm, gemm_add, gemm_nt_sub, gemm_sub};
 pub use chol::potrf;
 pub use lu::{getrf, getrf_lda, laswp, lu_solve};

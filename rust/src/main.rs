@@ -3,7 +3,7 @@
 //! ```text
 //! cuplss solve  --workload diagdom --method lu --n 512 --ranks 4 \
 //!               --engine atlas|cuda --tile 128|256 --dtype f32|f64 \
-//!               [--streaming] [--device-mem BYTES]
+//!               [--streaming] [--no-prefetch] [--device-mem BYTES]
 //! cuplss fig3   [--dp] [--n 60000] [--iters 100]      # model-mode Figure 3
 //! cuplss fig4   [--dp] [--n 60000] [--cholesky]       # model-mode Figure 4
 //! cuplss calibrate [--method lu]                      # live vs model (E8)
@@ -61,9 +61,16 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
     // copy-per-call §3 *transfer* accounting again.  The fused BLAS-1
     // kernels are part of the solvers themselves (bit-identical math, so
     // there is nothing to A/B) and stay active either way; --device-mem
-    // sizes the cache (bytes, GTX 280 = 1 GiB).
+    // sizes the cache (bytes, GTX 280 = 1 GiB).  --no-prefetch keeps the
+    // cache but turns the copy-engine timeline off, so every surviving
+    // transfer charges the compute timeline synchronously — the A/B arm
+    // for the async prefetch / write-back subsystem (DESIGN.md §13);
+    // results are bit-identical either way.
     if args.has_flag("streaming") {
         cfg.residency = false;
+    }
+    if args.has_flag("no-prefetch") {
+        cfg.prefetch = false;
     }
     cfg.device_mem = args.opt_or("device-mem", cfg.device_mem)?;
     Ok(cfg)
@@ -104,12 +111,14 @@ fn cmd_solve(args: &Args) -> Result<()> {
     println!("{}", report.summary());
     println!(
         "  virtual makespan {}   wall {}   msgs {}   volume {}   \
-         pcie saved {}   launches fused {}",
+         pcie saved {}   pcie hidden {}   prefetch hits {}   launches fused {}",
         fmt::secs(report.makespan()),
         fmt::secs(report.wall_max()),
         report.total_msgs(),
         fmt::bytes(report.total_bytes() as f64),
         fmt::bytes(report.total_pcie_saved() as f64),
+        fmt::secs(report.total_pcie_hidden()),
+        report.total_prefetch_hits(),
         report.total_launches_fused(),
     );
     for m in &report.per_rank {

@@ -30,6 +30,7 @@ pub use pvec::{
 };
 
 use std::cell::RefCell;
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::accel::{BufKey, Engine, OpCost, TileCache, DEFAULT_DEVICE_MEM};
@@ -58,7 +59,8 @@ pub(crate) mod tags {
 }
 
 /// Per-rank execution context: mesh view + local compute engine + the
-/// rank's device-residency tracker ([`TileCache`], `DESIGN.md` §12).
+/// rank's device-residency tracker ([`TileCache`], `DESIGN.md` §12) + the
+/// copy-engine state for async prefetch / write-back (`DESIGN.md` §13).
 pub struct Ctx<'a, S: Scalar> {
     /// This rank's mesh view.
     pub mesh: &'a Mesh<'a, S>,
@@ -68,12 +70,24 @@ pub struct Ctx<'a, S: Scalar> {
     /// copy-per-call flow exactly.  Single-threaded per rank, hence the
     /// `RefCell` (same pattern as the comm endpoint's counters).
     cache: Option<RefCell<TileCache>>,
+    /// Route transfers through the copy-engine timeline (async H2D
+    /// prefetch + async D2H write-back)?  `false` keeps residency's
+    /// synchronous accounting: every surviving transfer charges the
+    /// compute timeline — the `--no-prefetch` A/B arm.
+    prefetch: bool,
+    /// In-flight H2D prefetches by buffer identity: `(completion time,
+    /// occupancy)` — the occupancy is what gets revoked from the hidden
+    /// credit if the prefetch is abandoned before use.
+    inflight: RefCell<HashMap<BufKey, (f64, f64)>>,
+    /// Completion times of in-flight async D2H write-backs.
+    flushes: RefCell<HashMap<BufKey, f64>>,
 }
 
 impl<'a, S: Scalar> Ctx<'a, S> {
     /// Bundle a mesh view and an engine, with device residency enabled at
-    /// the default (GTX 280) budget.  Residency only re-prices PCIe
-    /// traffic, never changes results, so this is always safe.
+    /// the default (GTX 280) budget and copy-engine prefetch on.
+    /// Residency and prefetch only re-price PCIe traffic (and *when* it
+    /// crosses the link), never change results, so this is always safe.
     pub fn new(mesh: &'a Mesh<'a, S>, engine: Arc<dyn Engine<S>>) -> Self {
         Self::with_device_mem(mesh, engine, DEFAULT_DEVICE_MEM)
     }
@@ -84,17 +98,44 @@ impl<'a, S: Scalar> Ctx<'a, S> {
         engine: Arc<dyn Engine<S>>,
         budget: usize,
     ) -> Self {
-        Ctx { mesh, engine, cache: Some(RefCell::new(TileCache::new(budget))) }
+        Ctx {
+            mesh,
+            engine,
+            cache: Some(RefCell::new(TileCache::new(budget))),
+            prefetch: true,
+            inflight: RefCell::new(HashMap::new()),
+            flushes: RefCell::new(HashMap::new()),
+        }
     }
 
     /// The paper's §3 flow: every operand streams host<->device per call.
     pub fn streaming(mesh: &'a Mesh<'a, S>, engine: Arc<dyn Engine<S>>) -> Self {
-        Ctx { mesh, engine, cache: None }
+        Ctx {
+            mesh,
+            engine,
+            cache: None,
+            prefetch: false,
+            inflight: RefCell::new(HashMap::new()),
+            flushes: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// Toggle the copy-engine timeline (builder style): with `false`, every
+    /// surviving transfer charges the compute timeline synchronously — the
+    /// `--no-prefetch` A/B arm.  Inert without residency.
+    pub fn with_prefetch(mut self, enabled: bool) -> Self {
+        self.prefetch = enabled;
+        self
     }
 
     /// Is the residency subsystem active?
     pub fn residency_enabled(&self) -> bool {
         self.cache.is_some()
+    }
+
+    /// Is the copy-engine (async prefetch / write-back) timeline active?
+    pub fn prefetch_enabled(&self) -> bool {
+        self.prefetch && self.cache.is_some()
     }
 
     /// Charge an op cost to this rank's virtual clock, as-is (no
@@ -110,6 +151,50 @@ impl<'a, S: Scalar> Ctx<'a, S> {
         if self.engine.profile().pcie_bw > 0.0 { self.cache.as_ref() } else { None }
     }
 
+    /// Issue an **async H2D prefetch** of `buf` on the copy-engine timeline
+    /// (`DESIGN.md` §13): if the buffer has no device copy, it is admitted
+    /// to the cache exactly as a demand read would admit it, but the
+    /// transfer occupies [`crate::comm::VClock::pcie_free`] instead of
+    /// blocking compute — a later [`Ctx::charge_op`] on the same operand
+    /// waits only the *remaining* latency, so a transfer fully covered by
+    /// interleaved compute costs zero makespan.  The admitted entry is
+    /// **pinned** until consumed — a later insertion declines rather than
+    /// evict a buffer mid-DMA, so a pathologically tight budget degrades
+    /// to the synchronous flow instead of wasting copy-engine traffic.
+    /// No-op without residency, on host profiles (nothing streams) and
+    /// with prefetch disabled; a no-op on cache hits and declined
+    /// admissions too, so callers prefetch unconditionally.
+    pub fn prefetch(&self, buf: &[S]) {
+        if !self.prefetch {
+            return;
+        }
+        let Some(cache) = self.active_cache() else {
+            return;
+        };
+        let key = BufKey::of(buf);
+        {
+            let mut c = cache.borrow_mut();
+            if c.is_resident(key) {
+                // Hit (possibly still in flight from an earlier prefetch):
+                // nothing to queue — and no recency retouch either, so the
+                // eviction order stays exactly the demand accesses', like
+                // the `--no-prefetch` arm (a real prefetch of present data
+                // is a no-op, not an access).
+                return;
+            }
+            let bytes = c.touch_read(key);
+            if bytes == 0 || !c.is_resident(key) {
+                // Oversized, or declined by pin pressure: nothing to queue.
+                return;
+            }
+            c.pin(key);
+        }
+        let dt = key.bytes() as f64 / self.engine.profile().pcie_bw;
+        let ready = self.mesh.comm().clock().pcie_occupy(dt);
+        self.mesh.comm().stats().add_pcie_hidden(dt);
+        self.inflight.borrow_mut().insert(key, (ready, dt));
+    }
+
     /// Charge a tile-op cost with its transfer share re-priced by
     /// residency: `ins` are the operands the op read, `out` the operand it
     /// wrote (`cost` as returned by the engine, i.e. full paper-flow
@@ -117,20 +202,95 @@ impl<'a, S: Scalar> Ctx<'a, S> {
     /// operand pays its D2H write-back once per dirty period instead of
     /// per call.  The bytes kept off the link are recorded in
     /// [`crate::comm::CommStats::pcie_saved_bytes`].
+    ///
+    /// With the copy-engine timeline active ([`Ctx::prefetch_enabled`]),
+    /// the surviving transfers move off the compute timeline: a prefetched
+    /// read operand waits only its remaining latency, and the write-back
+    /// becomes an async D2H flushed at the next [`Ctx::host_read`] /
+    /// retire barrier.  Per operand the compute-timeline charge is `<=`
+    /// the synchronous residency charge, which is itself `<=` streaming —
+    /// and the math executes identically in all three flows, so results
+    /// are bit-identical (`tests/prefetch.rs`).
     pub fn charge_op(&self, cost: OpCost, ins: &[&[S]], out: Option<&[S]>) {
         let Some(cache) = self.active_cache() else {
             self.charge(cost);
             return;
         };
-        let keys: Vec<BufKey> = ins.iter().map(|b| BufKey::of(b)).collect();
-        let traffic = cache.borrow_mut().access(&keys, out.map(BufKey::of));
+        if !self.prefetch {
+            let keys: Vec<BufKey> = ins.iter().map(|b| BufKey::of(b)).collect();
+            let traffic = cache.borrow_mut().access(&keys, out.map(BufKey::of));
+            let pcie = self.engine.profile().pcie_bw;
+            let adjusted = OpCost {
+                compute_secs: cost.compute_secs,
+                transfer_secs: traffic.streamed() as f64 / pcie,
+            };
+            adjusted.charge(self.mesh.comm().clock());
+            self.mesh.comm().stats().add_pcie_saved(traffic.saved() as u64);
+            return;
+        }
+        // Copy-engine accounting.  Per read operand: an in-flight prefetch
+        // is waited (remaining latency only), a cold miss streams
+        // synchronously, a resident hit is free.  The op's compute runs
+        // after its operands land; the write-back is queued async.
         let pcie = self.engine.profile().pcie_bw;
-        let adjusted = OpCost {
-            compute_secs: cost.compute_secs,
-            transfer_secs: traffic.streamed() as f64 / pcie,
-        };
-        adjusted.charge(self.mesh.comm().clock());
-        self.mesh.comm().stats().add_pcie_saved(traffic.saved() as u64);
+        let clock = self.mesh.comm().clock();
+        let stats = self.mesh.comm().stats();
+        let (mut full, mut streamed) = (0usize, 0usize);
+        {
+            let mut c = cache.borrow_mut();
+            let mut inflight = self.inflight.borrow_mut();
+            for buf in ins {
+                let key = BufKey::of(buf);
+                full += key.bytes();
+                let h2d = c.touch_read(key);
+                if h2d == 0 {
+                    if let Some((ready, _dt)) = inflight.remove(&key) {
+                        // Served by an async prefetch: those bytes did
+                        // cross the link (just on the copy engine), so
+                        // they are not "saved"; block only for whatever
+                        // compute failed to cover.
+                        c.unpin(key);
+                        streamed += key.bytes();
+                        stats.add_prefetch_hit();
+                        let remaining = (ready - clock.now()).max(0.0);
+                        clock.pcie_wait(ready);
+                        stats.revoke_pcie_hidden(remaining);
+                    }
+                } else {
+                    // Cold miss: synchronous stream, as without prefetch.
+                    // (A stale in-flight entry would mean the prefetched
+                    // copy vanished before use — pinning prevents that,
+                    // but stay defensive: the DMA then hid nothing, so
+                    // take its whole credit back.)
+                    if let Some((_ready, dt)) = inflight.remove(&key) {
+                        c.unpin(key);
+                        stats.revoke_pcie_hidden(dt);
+                    }
+                    streamed += h2d;
+                    clock.advance_transfer(h2d as f64 / pcie);
+                }
+            }
+            clock.advance_compute(cost.compute_secs);
+            if let Some(buf) = out {
+                let key = BufKey::of(buf);
+                full += key.bytes();
+                let d2h = c.touch_write(key);
+                if d2h > 0 {
+                    // Async flush: occupies the copy engine now, blocks
+                    // nobody until the host needs the value.  The flush
+                    // ledger lives on the Ctx, not the cache, so this
+                    // covers oversized / admission-declined buffers too —
+                    // their repeated write-backs queue on the copy engine
+                    // instead of serialising with compute.
+                    streamed += d2h;
+                    let dt = d2h as f64 / pcie;
+                    let ready = clock.pcie_occupy(dt);
+                    stats.add_pcie_hidden(dt);
+                    self.flushes.borrow_mut().insert(key, ready);
+                }
+            }
+        }
+        stats.add_pcie_saved((full - streamed) as u64);
     }
 
     /// Charge one fused BLAS-1 kernel over vector blocks (`ins` read,
@@ -181,19 +341,42 @@ impl<'a, S: Scalar> Ctx<'a, S> {
     }
 
     /// The host observes `buf`'s current value (message payload, gather,
-    /// pivot search): ends the buffer's device dirty period.
+    /// pivot search): ends the buffer's device dirty period.  This is also
+    /// the copy-engine **flush barrier**: an async D2H write-back still in
+    /// flight must land before the host can read the value, so the caller
+    /// blocks for its remaining latency (`DESIGN.md` §13).
     pub fn host_read(&self, buf: &[S]) {
         if let Some(cache) = self.active_cache() {
-            cache.borrow_mut().host_read(BufKey::of(buf));
+            let key = BufKey::of(buf);
+            if let Some(ready) = self.flushes.borrow_mut().remove(&key) {
+                let clock = self.mesh.comm().clock();
+                let remaining = (ready - clock.now()).max(0.0);
+                clock.pcie_wait(ready);
+                self.mesh.comm().stats().revoke_pcie_hidden(remaining);
+            }
+            cache.borrow_mut().host_read(key);
         }
     }
 
     /// The host mutated `buf` (row swap, panel scatter) — or is about to
     /// free it (transient broadcast buffers are *retired* so a reused
-    /// allocation can never alias a stale device copy).
+    /// allocation can never alias a stale device copy).  Any in-flight
+    /// async transfer for the buffer is abandoned without blocking: the
+    /// host overwrites (or frees) the value, so it never needs the device
+    /// copy — the occupancy already queued on the copy engine stays queued
+    /// (the DMA was issued), but an abandoned *prefetch*'s hidden credit
+    /// is revoked, since it never served an op.
     pub fn host_mut(&self, buf: &[S]) {
         if let Some(cache) = self.active_cache() {
-            cache.borrow_mut().host_mut(BufKey::of(buf));
+            let key = BufKey::of(buf);
+            if let Some((_ready, dt)) = self.inflight.borrow_mut().remove(&key) {
+                // Abandoned before use: the DMA ran but hid nothing — take
+                // the optimistic credit back so `pcie_hidden_secs` only
+                // counts transfers that actually served an op.
+                self.mesh.comm().stats().revoke_pcie_hidden(dt);
+            }
+            self.flushes.borrow_mut().remove(&key);
+            cache.borrow_mut().host_mut(key);
         }
     }
 

@@ -10,7 +10,10 @@
 //! before the rank multiplies panel `kk`, so the next panel streams through
 //! the network while the current one streams through the FPUs — the virtual
 //! clock sees `max(bcast, gemm)` per step instead of their sum (DESIGN.md
-//! §11).  Message order and numerics are identical to the one-panel-in-
+//! §11).  The same discipline applies to PCIe: the accumulation loop
+//! prefetches the next tile's operands onto the copy-engine timeline, so
+//! the panel H2D streams hide under the gemm stream too (DESIGN.md §13).
+//! Message order and numerics are identical to the one-panel-in-
 //! flight algorithm: panels are waited in `kk` order and the accumulation
 //! order is unchanged.
 //!
@@ -138,20 +141,30 @@ pub fn pgemm_acc<S: Scalar>(
         // up once per step (their first touch), C never leaves the device
         // until somebody reads it host-side (DESIGN.md §12).  The former
         // gemm-into-scratch + host-axpy pair paid a per-call D2H for the
-        // scratch *and* a full extra memory pass.
-        for lti in 0..c.local_mt() {
-            for ltj in 0..c.local_nt() {
-                let cost = ctx
-                    .engine
-                    .gemm_acc(c.tile_mut(lti, ltj), &a_panel[lti], &b_panel[ltj])
-                    .expect("gemm_acc");
-                let c_tile = c.tile(lti, ltj);
-                ctx.charge_op(
-                    cost,
-                    &[c_tile, &a_panel[lti], &b_panel[ltj]],
-                    Some(c_tile),
-                );
+        // scratch *and* a full extra memory pass.  Each step prefetches
+        // the *next* tile's operands onto the copy-engine timeline, so
+        // this step's panel H2D (first touch of `a_panel`/`b_panel`, and
+        // the C fill on step 0) rides under the gemm stream instead of
+        // serialising with it (DESIGN.md §13).
+        let tiles: Vec<(usize, usize)> = (0..c.local_mt())
+            .flat_map(|lti| (0..c.local_nt()).map(move |ltj| (lti, ltj)))
+            .collect();
+        for (idx, &(lti, ltj)) in tiles.iter().enumerate() {
+            if let Some(&(nlti, nltj)) = tiles.get(idx + 1) {
+                ctx.prefetch(c.tile(nlti, nltj));
+                ctx.prefetch(&a_panel[nlti]);
+                ctx.prefetch(&b_panel[nltj]);
             }
+            let cost = ctx
+                .engine
+                .gemm_acc(c.tile_mut(lti, ltj), &a_panel[lti], &b_panel[ltj])
+                .expect("gemm_acc");
+            let c_tile = c.tile(lti, ltj);
+            ctx.charge_op(
+                cost,
+                &[c_tile, &a_panel[lti], &b_panel[ltj]],
+                Some(c_tile),
+            );
         }
 
         // Retire the panel buffers before they drop: a reused allocation

@@ -8,20 +8,27 @@
 //!   1. **column allgather** — every rank collects the x-blocks of its
 //!      process column's tile columns (they live spread over process rows);
 //!   2. **local** — per owned tile, `y_part(I) += A(I,J) x(J)` via the
-//!      engine's GEMV;
+//!      engine's fused `gemv_acc`, so the partial-sum block stays
+//!      device-resident across the tile sweep (one write-back per matvec,
+//!      not one per tile — DESIGN.md §13);
 //!   3. **row allreduce** — partial sums meet across the process row, leaving
 //!      y replicated exactly like x.
 //!
 //! `y = A^T x` ([`pgemv_t`], BiCG's second sequence):
-//!   1. **local** — `w_part(J) += A(I,J)^T x(I)` (x blocks are already home);
+//!   1. **local** — `w_part(J) += A(I,J)^T x(I)` via `gemv_t_acc` (x blocks
+//!      are already home);
 //!   2. **column reduce** per tile column to the process row that owns tile
 //!      row J in the *vector* layout;
 //!   3. **row allgather** — replicate the finished blocks across rows.
+//!
+//! Both local sweeps prefetch the next tile's operands onto the
+//! copy-engine timeline, so first-touch / post-eviction H2D streams hide
+//! under the current tile's compute.
 
 use super::{tags, Ctx};
 use crate::comm::ReduceOp;
 use crate::dist::{DistMatrix, DistVector};
-use crate::{linalg, Scalar};
+use crate::Scalar;
 
 /// `y = A x`; returns y in the same layout as x.
 pub fn pgemv<S: Scalar>(
@@ -49,20 +56,30 @@ pub fn pgemv<S: Scalar>(
         &by_row[owner][off..off + t]
     };
 
-    // 2. Local partial products.  The A tiles are read-only stream
-    // operands: with residency they pay their H2D on the first iteration
-    // of a Krylov solve and then stay device-side — the Ioannidis et al.
-    // keep-the-matrix-on-the-GPU optimisation.  The gemv result is
-    // host-consumed immediately (the partial-sum axpy), so its D2H stays
-    // per call, as does the x block's first-touch H2D per step.
+    // 2. Local partial products via the fused `gemv_acc` (y += A·x): the
+    // partial-sum block stays device-resident across the whole tile sweep
+    // — one D2H per block per matvec (at the allreduce's host read) where
+    // the former gemv-into-scratch + host-axpy pair paid a D2H *per tile*
+    // (DESIGN.md §13).  The A tiles are read-only stream operands: with
+    // residency they pay their H2D on the first iteration of a Krylov
+    // solve and then stay device-side — the Ioannidis et al.
+    // keep-the-matrix-on-the-GPU optimisation.  Each step prefetches the
+    // *next* tile's operands onto the copy-engine timeline, so first-touch
+    // (and post-eviction re-)streams hide under the current tile's gemv.
     let mut y_part = vec![S::zero(); x.local_blocks() * t];
-    let mut tmp = vec![S::zero(); t];
-    for (lti, ltj, _ti, tj) in a.owned_tiles() {
-        let cost = ctx.engine.gemv(a.tile(lti, ltj), x_block(tj), &mut tmp).expect("gemv");
-        ctx.charge_op(cost, &[a.tile(lti, ltj), x_block(tj)], Some(&tmp));
-        ctx.host_read(&tmp);
-        linalg::axpy(S::one(), &tmp, &mut y_part[lti * t..(lti + 1) * t]);
-        ctx.charge(ctx.engine.blas1_cost(t));
+    let tiles: Vec<(usize, usize, usize, usize)> = a.owned_tiles().collect();
+    for (idx, &(lti, ltj, _ti, tj)) in tiles.iter().enumerate() {
+        if let Some(&(nlti, nltj, _nti, ntj)) = tiles.get(idx + 1) {
+            ctx.prefetch(a.tile(nlti, nltj));
+            ctx.prefetch(x_block(ntj));
+            ctx.prefetch(&y_part[nlti * t..(nlti + 1) * t]);
+        }
+        let cost = ctx
+            .engine
+            .gemv_acc(&mut y_part[lti * t..(lti + 1) * t], a.tile(lti, ltj), x_block(tj))
+            .expect("gemv_acc");
+        let y_block = &y_part[lti * t..(lti + 1) * t];
+        ctx.charge_op(cost, &[y_block, a.tile(lti, ltj), x_block(tj)], Some(y_block));
     }
     // Retire the transient allgather slices before they drop (the cache is
     // keyed per x-block slice, so retire at the same granularity).
@@ -71,7 +88,13 @@ pub fn pgemv<S: Scalar>(
             ctx.host_mut(chunk);
         }
     }
-    ctx.host_mut(&tmp);
+    // The allreduce payload is a host read of every partial block: the
+    // flush barrier for their async write-backs.  Retire them afterwards —
+    // the buffer moves into the collective and is freed there.
+    for chunk in y_part.chunks(t) {
+        ctx.host_read(chunk);
+        ctx.host_mut(chunk);
+    }
 
     // 3. Row allreduce of partials.
     let row = mesh.row_comm();
@@ -100,33 +123,46 @@ pub fn pgemv_t<S: Scalar>(
     let mesh = ctx.mesh;
     let (pr, pc) = (desc.shape.pr, desc.shape.pc);
 
-    // 1. Local partials per owned tile column.
+    // 1. Local partials per owned tile column, via the fused `gemv_t_acc`
+    //    (w += A^T·x): like `pgemv`, the partial block stays
+    //    device-resident across the tile sweep — one write-back per block
+    //    per matvec instead of a per-tile host axpy + D2H (the ROADMAP's
+    //    "pgemv_t partial accumulation" open item) — and each step
+    //    prefetches the next tile's operands under the current gemv_t.
     let lnt = a.local_nt();
     let mut w_part = vec![S::zero(); lnt * t];
-    let mut tmp = vec![S::zero(); t];
-    for (lti, ltj, ti, _tj) in a.owned_tiles() {
+    let tiles: Vec<(usize, usize, usize, usize)> = a.owned_tiles().collect();
+    for (idx, &(lti, ltj, ti, _tj)) in tiles.iter().enumerate() {
+        if let Some(&(nlti, nltj, nti, _ntj)) = tiles.get(idx + 1) {
+            ctx.prefetch(a.tile(nlti, nltj));
+            ctx.prefetch(x.global_block(nti));
+            ctx.prefetch(&w_part[nltj * t..(nltj + 1) * t]);
+        }
         let cost = ctx
             .engine
-            .gemv_t(a.tile(lti, ltj), x.global_block(ti), &mut tmp)
-            .expect("gemv_t");
-        ctx.charge_op(cost, &[a.tile(lti, ltj), x.global_block(ti)], Some(&tmp));
-        ctx.host_read(&tmp);
-        linalg::axpy(S::one(), &tmp, &mut w_part[ltj * t..(ltj + 1) * t]);
-        ctx.charge(ctx.engine.blas1_cost(t));
+            .gemv_t_acc(&mut w_part[ltj * t..(ltj + 1) * t], a.tile(lti, ltj), x.global_block(ti))
+            .expect("gemv_t_acc");
+        let w_block = &w_part[ltj * t..(ltj + 1) * t];
+        ctx.charge_op(cost, &[w_block, a.tile(lti, ltj), x.global_block(ti)], Some(w_block));
     }
-    ctx.host_mut(&tmp);
 
     // 2. Column reduce per tile column, rooted at the process row that owns
-    //    tile row `tj` in the vector layout.
+    //    tile row `tj` in the vector layout.  The reduction payload is a
+    //    host read of each partial block (flush barrier); the blocks are
+    //    retired afterwards — `w_part` is transient.
     let col = mesh.col_comm();
     let mut finished: Vec<(usize, Vec<S>)> = Vec::new(); // (tj, block)
     for ltj in 0..lnt {
         let tj = desc.global_tj(mesh.col(), ltj);
         let root = tj % pr;
+        ctx.host_read(&w_part[ltj * t..(ltj + 1) * t]);
         let block = w_part[ltj * t..(ltj + 1) * t].to_vec();
         if let Some(sum) = col.reduce_vec(root, tags::PGEMV_T, block, ReduceOp::Sum) {
             finished.push((tj, sum));
         }
+    }
+    for chunk in w_part.chunks(t) {
+        ctx.host_mut(chunk);
     }
 
     // 3. Row allgather of finished blocks (each rank contributes the blocks

@@ -12,9 +12,12 @@
 //! column), and its row broadcasts are started split-phase
 //! ([`crate::comm::BcastRequest`]) — they then ride the network while every
 //! rank runs step `k`'s remaining trailing update (`j > k+1`), so the panel
-//! critical path is hidden behind the BLAS-3 stream (DESIGN.md §11).  The
-//! operation set and operands are identical to the classic schedule, so the
-//! factor is bit-for-bit the same.
+//! critical path is hidden behind the BLAS-3 stream (DESIGN.md §11).  On
+//! the accelerated arm the update sweeps additionally prefetch the next
+//! tile's operands onto the copy-engine timeline ([`Ctx::prefetch`]), so
+//! the surviving PCIe streams hide under the BLAS-3 stream as well
+//! (DESIGN.md §13).  The operation set and operands are identical to the
+//! classic schedule, so the factor is bit-for-bit the same.
 //!
 //! Only the lower triangle is referenced or updated; the strict upper
 //! triangle of the shard is left stale.
@@ -141,17 +144,23 @@ pub fn pchol_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Resul
         if mesh.col() == next_ck {
             let ltj = desc.local_tj(k + 1);
             let l_jk = l_cols[ltj].as_ref().expect("L col tile for lookahead column");
-            for lti in 0..a.local_mt() {
-                let ti = desc.global_ti(mesh.row(), lti);
-                if ti > k {
-                    let l_ik = l_rows[lti].as_ref().expect("L row tile");
-                    let cost = ctx.engine.gemm_nt_update(a.tile_mut(lti, ltj), l_ik, l_jk)?;
-                    ctx.charge_op(
-                        cost,
-                        &[a.tile(lti, ltj), l_ik, l_jk],
-                        Some(a.tile(lti, ltj)),
-                    );
+            let rows: Vec<usize> = (0..a.local_mt())
+                .filter(|&lti| desc.global_ti(mesh.row(), lti) > k)
+                .collect();
+            for (idx, &lti) in rows.iter().enumerate() {
+                // Prefetch the next row's operands onto the copy engine
+                // while this row's update runs (DESIGN.md §13).
+                if let Some(&nlti) = rows.get(idx + 1) {
+                    ctx.prefetch(a.tile(nlti, ltj));
+                    ctx.prefetch(l_rows[nlti].as_ref().expect("L row tile"));
                 }
+                let l_ik = l_rows[lti].as_ref().expect("L row tile");
+                let cost = ctx.engine.gemm_nt_update(a.tile_mut(lti, ltj), l_ik, l_jk)?;
+                ctx.charge_op(
+                    cost,
+                    &[a.tile(lti, ltj), l_ik, l_jk],
+                    Some(a.tile(lti, ltj)),
+                );
             }
         }
         pending = Some(factor_panel(ctx, a, k + 1)?);
@@ -160,26 +169,30 @@ pub fn pchol_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Resul
         // Hides panel k+1's potrf/trsm critical path and its broadcasts.
         // With residency each broadcast L(i,k)/L(j,k) buffer streams H2D
         // once per step and the trailing tiles stay device-resident across
-        // the k steps (DESIGN.md §12).
-        for lti in 0..a.local_mt() {
-            let ti = desc.global_ti(mesh.row(), lti);
-            if ti <= k {
-                continue;
+        // the k steps (DESIGN.md §12); the surviving streams ride the
+        // copy-engine timeline via depth-1 prefetch (DESIGN.md §13).
+        let trailing: Vec<(usize, usize)> = (0..a.local_mt())
+            .flat_map(|lti| (0..a.local_nt()).map(move |ltj| (lti, ltj)))
+            .filter(|&(lti, ltj)| {
+                let ti = desc.global_ti(mesh.row(), lti);
+                let tj = desc.global_tj(mesh.col(), ltj);
+                ti > k && tj > k + 1 && tj <= ti // lower half only; k+1 done
+            })
+            .collect();
+        for (idx, &(lti, ltj)) in trailing.iter().enumerate() {
+            if let Some(&(nlti, nltj)) = trailing.get(idx + 1) {
+                ctx.prefetch(a.tile(nlti, nltj));
+                ctx.prefetch(l_rows[nlti].as_ref().expect("L row tile"));
+                ctx.prefetch(l_cols[nltj].as_ref().expect("L col tile"));
             }
             let l_ik = l_rows[lti].as_ref().expect("L row tile");
-            for ltj in 0..a.local_nt() {
-                let tj = desc.global_tj(mesh.col(), ltj);
-                if tj <= k + 1 || tj > ti {
-                    continue; // lower half only (i >= j); k+1 already done
-                }
-                let l_jk = l_cols[ltj].as_ref().expect("L col tile");
-                let cost = ctx.engine.gemm_nt_update(a.tile_mut(lti, ltj), l_ik, l_jk)?;
-                ctx.charge_op(
-                    cost,
-                    &[a.tile(lti, ltj), l_ik, l_jk],
-                    Some(a.tile(lti, ltj)),
-                );
-            }
+            let l_jk = l_cols[ltj].as_ref().expect("L col tile");
+            let cost = ctx.engine.gemm_nt_update(a.tile_mut(lti, ltj), l_ik, l_jk)?;
+            ctx.charge_op(
+                cost,
+                &[a.tile(lti, ltj), l_ik, l_jk],
+                Some(a.tile(lti, ltj)),
+            );
         }
 
         // Retire the step's broadcast buffers before they drop.

@@ -27,6 +27,12 @@
 //!    (`j > k+1`) via the engine's fused `gemm_update` — the BLAS-3 hot
 //!    spot that now hides step `k+1`'s panel path.
 //!
+//! On the accelerated arm the trailing sweep additionally prefetches the
+//! next tile's operands onto the copy-engine timeline ([`Ctx::prefetch`]),
+//! so the surviving PCIe streams (panel first touch, swap-invalidated
+//! trailing tiles) hide under the gemm stream — compounding with the comm
+//! lookahead (DESIGN.md §13).
+//!
 //! The operation *set* (and therefore every floating-point result) is
 //! identical to the non-lookahead schedule: each tile still receives its
 //! updates in ascending `k` order, swaps are applied after the update of
@@ -297,17 +303,23 @@ pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
             if mesh.col() == next_ck {
                 let ltj = desc.local_tj(k + 1);
                 let u_tile = u_panel[ltj].as_ref().expect("U tile for lookahead column");
-                for lti in 0..a.local_mt() {
-                    let ti = desc.global_ti(mesh.row(), lti);
-                    if ti > k {
-                        let l_tile = l_panel[lti].as_ref().expect("L tile broadcast");
-                        let cost = ctx.engine.gemm_update(a.tile_mut(lti, ltj), l_tile, u_tile)?;
-                        ctx.charge_op(
-                            cost,
-                            &[a.tile(lti, ltj), l_tile, u_tile],
-                            Some(a.tile(lti, ltj)),
-                        );
+                let rows: Vec<usize> = (0..a.local_mt())
+                    .filter(|&lti| desc.global_ti(mesh.row(), lti) > k)
+                    .collect();
+                for (idx, &lti) in rows.iter().enumerate() {
+                    // Prefetch the next row's operands onto the copy engine
+                    // while this row's gemm_update runs (DESIGN.md §13).
+                    if let Some(&nlti) = rows.get(idx + 1) {
+                        ctx.prefetch(a.tile(nlti, ltj));
+                        ctx.prefetch(l_panel[nlti].as_ref().expect("L tile broadcast"));
                     }
+                    let l_tile = l_panel[lti].as_ref().expect("L tile broadcast");
+                    let cost = ctx.engine.gemm_update(a.tile_mut(lti, ltj), l_tile, u_tile)?;
+                    ctx.charge_op(
+                        cost,
+                        &[a.tile(lti, ltj), l_tile, u_tile],
+                        Some(a.tile(lti, ltj)),
+                    );
                 }
             }
             pending = Some(factor_panel(ctx, a, k + 1)?);
@@ -317,26 +329,35 @@ pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
         // The residency layer is what makes this leg cheap on the CUDA arm:
         // each broadcast L21/U12 buffer streams H2D once and is then reused
         // across the whole trailing sweep, and the C tiles stay device-
-        // resident (and dirty) across the k steps (DESIGN.md §12).
-        for lti in 0..a.local_mt() {
-            let ti = desc.global_ti(mesh.row(), lti);
-            if ti <= k {
-                continue;
+        // resident (and dirty) across the k steps (DESIGN.md §12).  The
+        // surviving streams (panel first touch, swap-invalidated tiles)
+        // ride the copy-engine timeline: each step prefetches the next
+        // tile's operands under the current gemm_update (DESIGN.md §13).
+        let trailing: Vec<(usize, usize)> = (0..a.local_mt())
+            .filter(|&lti| desc.global_ti(mesh.row(), lti) > k)
+            .flat_map(|lti| {
+                (0..a.local_nt())
+                    .filter(|&ltj| {
+                        let tj = desc.global_tj(mesh.col(), ltj);
+                        tj > k && tj != k + 1 // k+1 was updated ahead of the panel
+                    })
+                    .map(move |ltj| (lti, ltj))
+            })
+            .collect();
+        for (idx, &(lti, ltj)) in trailing.iter().enumerate() {
+            if let Some(&(nlti, nltj)) = trailing.get(idx + 1) {
+                ctx.prefetch(a.tile(nlti, nltj));
+                ctx.prefetch(l_panel[nlti].as_ref().expect("L tile broadcast"));
+                ctx.prefetch(u_panel[nltj].as_ref().expect("U tile broadcast"));
             }
             let l_tile = l_panel[lti].as_ref().expect("L tile broadcast");
-            for ltj in 0..a.local_nt() {
-                let tj = desc.global_tj(mesh.col(), ltj);
-                if tj <= k || tj == k + 1 {
-                    continue; // k+1 was updated ahead of the panel factorisation
-                }
-                let u_tile = u_panel[ltj].as_ref().expect("U tile broadcast");
-                let cost = ctx.engine.gemm_update(a.tile_mut(lti, ltj), l_tile, u_tile)?;
-                ctx.charge_op(
-                    cost,
-                    &[a.tile(lti, ltj), l_tile, u_tile],
-                    Some(a.tile(lti, ltj)),
-                );
-            }
+            let u_tile = u_panel[ltj].as_ref().expect("U tile broadcast");
+            let cost = ctx.engine.gemm_update(a.tile_mut(lti, ltj), l_tile, u_tile)?;
+            ctx.charge_op(
+                cost,
+                &[a.tile(lti, ltj), l_tile, u_tile],
+                Some(a.tile(lti, ltj)),
+            );
         }
 
         // Retire the step's broadcast panels before their buffers drop.

@@ -7,6 +7,14 @@
 //! its own (column-replicated) rhs blocks with the engine's fused
 //! `gemv_update`.  O(n²) work next to the O(n³) factorisation — the paper's
 //! "second step" — with O(n² log pc) broadcast volume.
+//!
+//! All tile-op charges route through [`Ctx::charge_op`] (the ROADMAP's
+//! "remaining copy-per-call paths" item): with residency the rhs blocks
+//! stay device-resident across the `kt` downdate steps and the factor
+//! tiles across repeated solves, instead of paying the paper's per-call
+//! stream; broadcast payload reads / host writes follow the standard
+//! invalidation rules, and transient broadcast buffers are retired before
+//! they drop (DESIGN.md §12–§13).
 
 use crate::comm::Payload;
 use crate::dist::{DistMatrix, DistVector};
@@ -57,19 +65,25 @@ pub fn ptrsv<S: Scalar>(
                 TriKind::Lower => ctx.engine.trsv_l(diag, blk)?,
                 TriKind::Upper => ctx.engine.trsv_u(diag, blk)?,
             };
-            ctx.charge(cost);
-            Some(Payload::Data(blk.clone()))
+            let blk = b.global_block(k);
+            ctx.charge_op(cost, &[a.global_tile(k, k), blk], Some(blk));
+            // The broadcast payload is a host read of the solved block.
+            ctx.host_read(blk);
+            Some(Payload::Data(blk.to_vec()))
         } else {
             None
         };
         let world = comm.world();
         let yk = world.bcast(diag_rank, tags::TRSV, yk_payload).into_data();
-        if b.owns(k) {
+        if b.owns(k) && comm.rank() != diag_rank {
             b.global_block_mut(k).copy_from_slice(&yk);
+            ctx.host_mut(b.global_block(k)); // fresh host data
         }
 
         // 2. Column-k tiles broadcast along process rows; every rank
-        //    downdates its replica blocks.
+        //    downdates its replica blocks.  With residency the rhs blocks
+        //    stay device-resident (and dirty) across the kt steps; the
+        //    broadcast tile is a transient buffer, retired before it drops.
         let row = mesh.row_comm();
         for lti in 0..a.local_mt() {
             let ti = desc.global_ti(mesh.row(), lti);
@@ -81,14 +95,23 @@ pub fn ptrsv<S: Scalar>(
                 continue;
             }
             let data = if mesh.col() == ck {
+                ctx.host_read(a.tile(lti, desc.local_tj(k)));
                 Some(Payload::Data(a.tile(lti, desc.local_tj(k)).to_vec()))
             } else {
                 None
             };
             let tile = row.bcast(ck, tags::TRSV + 1, data).into_data();
             let cost = ctx.engine.gemv_update(b.global_block_mut(ti), &tile, &yk)?;
-            ctx.charge(cost);
+            let blk = b.global_block(ti);
+            ctx.charge_op(cost, &[blk, &tile, &yk], Some(blk));
+            ctx.host_mut(&tile);
         }
+        ctx.host_mut(&yk);
+    }
+    // The solver hands the finished vector back to the host (payload
+    // gathers, residual checks): flush every block's pending write-back.
+    for l in 0..b.local_blocks() {
+        ctx.host_read(b.block(l));
     }
     Ok(())
 }

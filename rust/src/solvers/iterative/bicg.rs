@@ -4,10 +4,21 @@
 //! `apply_t` — [`crate::pblas::pgemv_t`] (dense: the 2-D layout's
 //! column-reduce/row-allgather path) or [`crate::pblas::pspmv_t`] (sparse:
 //! local transpose matvec + column allreduce).
+//!
+//! The BLAS-1 chain runs on the **fused** kernels (`DESIGN.md` §12), like
+//! CG/PipeCG/BiCGSTAB: the residual update fuses with its norm *and* the
+//! next `rho = <r~, r>` into one [`pfused_axpy_norm2_dot`] (one kernel, one
+//! two-lane allreduce where the unfused chain paid two scalar reductions),
+//! and both direction recurrences collapse to one [`pxpay`] pass each.
+//! Every scalar is bit-identical to the unfused sequence's: the shadow
+//! residual is updated first (the two updates are independent, so the
+//! values cannot differ), the fused lanes are the same dots in the same
+//! order, and `xpay` re-associates nothing (`x + beta*y` multiplies then
+//! adds exactly like scal-then-axpy).
 
 use super::{norm_negligible, IterConfig, IterStats};
 use crate::dist::DistVector;
-use crate::pblas::{paxpy, pdot, pnorm2, pscal, Ctx, LinOp};
+use crate::pblas::{paxpy, pdot, pfused_axpy_norm2_dot, pnorm2, pxpay, Ctx, LinOp};
 use crate::{Error, Result, Scalar};
 
 /// Solve `A x = b` (general nonsymmetric) from the zero initial guess.
@@ -51,20 +62,21 @@ pub fn bicg<S: Scalar, A: LinOp<S> + ?Sized>(
         }
         let alpha = rho / ptap;
         paxpy(ctx, alpha, &p, &mut x);
-        paxpy(ctx, -alpha, &ap, &mut r);
+        // The shadow residual first (independent of r, so reordering ahead
+        // of the r update cannot change any value), then the r update
+        // fused with ||r||^2 and the next rho = <r~, r> — one kernel and
+        // one two-lane allreduce instead of an axpy plus two scalar dots.
         paxpy(ctx, -alpha, &atpt, &mut rt);
-        let rnorm = pnorm2(ctx, &r);
+        let (rr, rho_new) = pfused_axpy_norm2_dot(ctx, -alpha, &ap, &mut r, &rt);
+        let rnorm = rr.sqrt();
         if rnorm <= tol {
             return Ok((x, IterStats::new(it + 1, rnorm / bnorm, true)));
         }
-        let rho_new = pdot(ctx, &rt, &r);
         let beta = rho_new / rho;
         rho = rho_new;
-        // p = r + beta p ; pt = rt + beta pt
-        pscal(ctx, beta, &mut p);
-        paxpy(ctx, S::one(), &r, &mut p);
-        pscal(ctx, beta, &mut pt);
-        paxpy(ctx, S::one(), &rt, &mut pt);
+        // p = r + beta p ; pt = rt + beta pt — one fused pass each.
+        pxpay(ctx, beta, &r, &mut p);
+        pxpay(ctx, beta, &rt, &mut pt);
     }
     let rnorm = pnorm2(ctx, &r);
     Ok((x, IterStats::new(cfg.max_iter, rnorm / bnorm, false)))

@@ -7,12 +7,40 @@
 //! redundantly on every rank with the incremental Givens QR
 //! ([`crate::linalg::givens::HessenbergQr`]) so no extra communication is
 //! needed beyond the matvecs and dots.
+//!
+//! The BLAS-1 chain runs on the **fused** kernels where the data flow
+//! allows (`DESIGN.md` §12): every residual formation `r = b - A x` fuses
+//! its axpy with `||r||²` ([`pfused_axpy_norm2`]), and the *last* modified
+//! Gram-Schmidt step of each Arnoldi iteration fuses its axpy with the
+//! `||w||` that immediately follows — one kernel and one reduction fewer
+//! per inner iteration.  (The earlier MGS steps cannot fuse: each `h_ij`
+//! dot depends on the previous axpy's result.)  Arithmetic is the unfused
+//! sequence's bit for bit: the fused kernel is the same per-block axpy
+//! loop followed by the same 4-wide dot, in the same order.
 
 use super::{negligible_at_scale, norm_negligible, IterConfig, IterStats};
 use crate::dist::DistVector;
 use crate::linalg::givens::HessenbergQr;
-use crate::pblas::{paxpy, pdot, pnorm2, pscal, Ctx, LinOp};
+use crate::pblas::{paxpy, pdot, pfused_axpy_norm2, pnorm2, pscal, Ctx, LinOp};
 use crate::{Result, Scalar};
+
+/// `||b - A x||²` with the subtraction fused into the norm pass: clone `b`,
+/// retire the clone's blocks (a reused allocation must never alias a stale
+/// device entry), one fused axpy+norm² kernel.  Returns `(r, ||r||)`.
+fn residual_fused<S: Scalar, A: LinOp<S> + ?Sized>(
+    ctx: &Ctx<'_, S>,
+    a: &A,
+    b: &DistVector<S>,
+    x: &DistVector<S>,
+) -> (DistVector<S>, S) {
+    let ax = a.apply(ctx, x);
+    let mut r = b.clone_vec();
+    for l in 0..r.local_blocks() {
+        ctx.host_mut(r.block(l));
+    }
+    let rr = pfused_axpy_norm2(ctx, -S::one(), &ax, &mut r);
+    (r, rr.sqrt())
+}
 
 /// Solve `A x = b` (general nonsymmetric) from the zero initial guess with
 /// restart length `cfg.restart`.  `A` is any [`LinOp`] (dense or sparse).
@@ -34,11 +62,8 @@ pub fn gmres<S: Scalar, A: LinOp<S> + ?Sized>(
     let mut total_iters = 0usize;
 
     loop {
-        // r = b - A x (fresh residual at each restart).
-        let ax = a.apply(ctx, &x);
-        let mut r = b.clone_vec();
-        paxpy(ctx, -S::one(), &ax, &mut r);
-        let beta = pnorm2(ctx, &r);
+        // r = b - A x (fresh residual at each restart), fused with ||r||².
+        let (mut r, beta) = residual_fused(ctx, a, b, &x);
         if beta <= tol {
             return Ok((x, IterStats::new(total_iters, beta / bnorm, true)));
         }
@@ -55,12 +80,19 @@ pub fn gmres<S: Scalar, A: LinOp<S> + ?Sized>(
         while k < m && total_iters < cfg.max_iter {
             let mut w = a.apply(ctx, &basis[k]);
             let mut h = Vec::with_capacity(k + 2);
-            for v in basis.iter() {
+            // MGS against all but the newest basis vector: each h_ij dot
+            // reads the previous axpy's w, so these stay unfused.
+            for v in basis.iter().take(k) {
                 let hij = pdot(ctx, v, &w);
                 paxpy(ctx, -hij, v, &mut w);
                 h.push(hij);
             }
-            let wnorm = pnorm2(ctx, &w);
+            // The newest vector's step fuses its axpy with the ||w|| that
+            // follows — same axpy, same dot, one kernel and one reduction.
+            let hkk = pdot(ctx, &basis[k], &w);
+            let wnorm2 = pfused_axpy_norm2(ctx, -hkk, &basis[k], &mut w);
+            h.push(hkk);
+            let wnorm = wnorm2.sqrt();
             h.push(wnorm);
             let hscale = h.iter().fold(S::zero(), |acc, &v| acc.max(v.abs()));
             let res = qr.push_column(h);
@@ -84,19 +116,13 @@ pub fn gmres<S: Scalar, A: LinOp<S> + ?Sized>(
         let res = qr.residual();
         if res <= tol {
             // Confirm with a true residual (restart loop re-checks too).
-            let ax = a.apply(ctx, &x);
-            let mut r = b.clone_vec();
-            paxpy(ctx, -S::one(), &ax, &mut r);
-            let rnorm = pnorm2(ctx, &r);
+            let (_r, rnorm) = residual_fused(ctx, a, b, &x);
             if rnorm <= tol {
                 return Ok((x, IterStats::new(total_iters, rnorm / bnorm, true)));
             }
         }
         if total_iters >= cfg.max_iter {
-            let ax = a.apply(ctx, &x);
-            let mut r = b.clone_vec();
-            paxpy(ctx, -S::one(), &ax, &mut r);
-            let rnorm = pnorm2(ctx, &r);
+            let (_r, rnorm) = residual_fused(ctx, a, b, &x);
             return Ok((x, IterStats::new(total_iters, rnorm / bnorm, rnorm <= tol)));
         }
     }

@@ -10,7 +10,9 @@
 //! SPMD structure: matvecs through `LinOp::apply`/`apply_t`, inner
 //! products via [`crate::pblas::pdot`] — every scalar recurrence
 //! coefficient is computed from allreduced dots, so all ranks advance
-//! identically.
+//! identically.  All five solvers run their BLAS-1 chains on the **fused**
+//! `pvec` kernels wherever the data flow allows (`DESIGN.md` §12),
+//! bit-identically to the unfused sequences.
 
 pub mod bicg;
 pub mod bicgstab;

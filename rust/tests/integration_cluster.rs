@@ -23,6 +23,7 @@ fn cpu_cluster(ranks: usize, tile: usize) -> Cluster {
         net: NetworkModel::gigabit_ethernet(),
         artifact_dir: artifacts_dir(),
         iter: IterConfig { tol: 1e-10, max_iter: 600, restart: 30 },
+        ..Default::default()
     })
     .expect("cluster")
 }
@@ -97,6 +98,7 @@ fn makespan_shrinks_with_ranks_under_ideal_network() {
             net: NetworkModel::ideal(),
             artifact_dir: artifacts_dir(),
             iter: IterConfig::default(),
+            ..Default::default()
         })
         .unwrap()
         .solve::<f64>(Workload::DiagDominant, 64, Method::Lu)
@@ -123,6 +125,7 @@ fn xla_engine_cluster_end_to_end() {
         net: NetworkModel::gigabit_ethernet(),
         artifact_dir: artifacts_dir(),
         iter: IterConfig { tol: 1e-9, max_iter: 400, restart: 30 },
+        ..Default::default()
     })
     .expect("accelerated cluster");
     // LU on a padded size (exercises identity padding through XLA tiles).

@@ -1,0 +1,311 @@
+//! Copy-engine timeline integration tests (`DESIGN.md` §13).
+//!
+//! The prefetch subsystem only ever re-times PCIe traffic — moving it from
+//! the compute timeline to the copy-engine timeline — so every solver must
+//! produce **bit-identical** results with prefetch enabled vs the
+//! synchronous residency accounting (`--no-prefetch`), on every mesh.  On
+//! an accelerated profile the prefetch run must charge no more
+//! compute-timeline transfer and must report hidden PCIe seconds and
+//! prefetch hits; on host profiles (`pcie_bw == 0`) the copy engine is
+//! inert and both counters stay exactly 0.
+
+use std::sync::Arc;
+
+use cuplss::accel::{ComputeProfile, CpuEngine, Engine};
+use cuplss::comm::{NetworkModel, World};
+use cuplss::dist::{gather_matrix, gather_vector, Descriptor, DistMatrix, DistVector};
+use cuplss::mesh::{Mesh, MeshShape};
+use cuplss::pblas::{pgemm_acc, pgemv, Ctx};
+use cuplss::solvers::{cg, pchol_factor, plu_solve, IterConfig, TriKind};
+
+const TILE: usize = 8;
+const N: usize = 24;
+
+fn engine(gpu: bool) -> Arc<CpuEngine> {
+    Arc::new(if gpu {
+        CpuEngine::with_profile(TILE, ComputeProfile::gtx280_cublas())
+    } else {
+        CpuEngine::new(TILE)
+    })
+}
+
+/// Per-rank virtual-clock observations of one run.
+#[derive(Clone, Debug)]
+struct Obs {
+    bits: Vec<u64>,
+    compute: f64,
+    transfer: f64,
+    vtime: f64,
+    pcie_hidden: f64,
+    prefetch_hits: u64,
+}
+
+/// Run `kernel` on a pr x pc mesh with the copy engine on/off; returns
+/// (prefetch, synchronous) observations per rank.
+fn run_both<F>(pr: usize, pc: usize, gpu: bool, kernel: F) -> (Vec<Obs>, Vec<Obs>)
+where
+    F: Fn(&Ctx<'_, f64>) -> Vec<f64> + Send + Sync + Copy + 'static,
+{
+    let run = |prefetch: bool| -> Vec<Obs> {
+        let eng = engine(gpu);
+        World::run::<f64, _, _>(pr * pc, NetworkModel::gigabit_ethernet(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+            let ctx = Ctx::new(&mesh, eng.clone() as Arc<dyn Engine<f64>>)
+                .with_prefetch(prefetch);
+            let out = kernel(&ctx);
+            Obs {
+                bits: out.iter().map(|v| v.to_bits()).collect(),
+                compute: comm.clock().compute_secs(),
+                transfer: comm.clock().transfer_secs(),
+                vtime: comm.clock().busy_until(),
+                pcie_hidden: comm.stats().pcie_hidden_secs(),
+                prefetch_hits: comm.stats().prefetch_hits(),
+            }
+        })
+    };
+    (run(true), run(false))
+}
+
+fn meshes() -> Vec<(usize, usize)> {
+    vec![(1, 1), (2, 1), (2, 2)]
+}
+
+fn lu_kernel(ctx: &Ctx<'_, f64>) -> Vec<f64> {
+    let mesh = ctx.mesh;
+    let desc = Descriptor::new(N, N, TILE, mesh.shape());
+    let mut a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+        ((i * 7 + j * 13) as f64 * 0.37).sin() + if i == j { 4.0 } else { 0.0 }
+    });
+    let b = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| (i as f64 * 0.21).cos());
+    let x = plu_solve(ctx, &mut a, &b).expect("lu solve");
+    gather_vector(mesh, &x).unwrap_or_default()
+}
+
+fn chol_kernel(ctx: &Ctx<'_, f64>) -> Vec<f64> {
+    let mesh = ctx.mesh;
+    let desc = Descriptor::new(N, N, TILE, mesh.shape());
+    let mut a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+        let v = ((i.min(j) * 5 + i.max(j) * 3) as f64 * 0.11).sin() * 0.3;
+        if i == j { 6.0 + v } else { v }
+    });
+    pchol_factor(ctx, &mut a).expect("cholesky");
+    gather_matrix(mesh, &a).unwrap_or_default()
+}
+
+fn summa_kernel(ctx: &Ctx<'_, f64>) -> Vec<f64> {
+    let mesh = ctx.mesh;
+    let desc = Descriptor::new(N, N, TILE, mesh.shape());
+    let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+        ((i + 2 * j) as f64 * 0.1).sin()
+    });
+    let b = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+        ((3 * i + j) as f64 * 0.07).cos()
+    });
+    let mut c = DistMatrix::zeros(desc, mesh.row(), mesh.col());
+    pgemm_acc(ctx, &a, &b, &mut c);
+    gather_matrix(mesh, &c).unwrap_or_default()
+}
+
+fn cg_kernel(ctx: &Ctx<'_, f64>) -> Vec<f64> {
+    let mesh = ctx.mesh;
+    let desc = Descriptor::new(N, N, TILE, mesh.shape());
+    let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+        let v = ((i.min(j) * 5 + i.max(j) * 3) as f64 * 0.11).sin() * 0.3;
+        if i == j { 6.0 + v } else { v }
+    });
+    let b = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| (i as f64 * 0.5).sin());
+    let cfg = IterConfig { tol: 1e-12, max_iter: 200, restart: 30 };
+    let (x, stats) = cg(ctx, &a, &b, &cfg).expect("cg");
+    assert!(stats.converged);
+    gather_vector(mesh, &x).unwrap_or_default()
+}
+
+fn assert_bit_identical_and_retimed(
+    name: &str,
+    pr: usize,
+    pc: usize,
+    gpu: bool,
+    prefetch: &[Obs],
+    sync: &[Obs],
+) {
+    for (rank, (p, s)) in prefetch.iter().zip(sync).enumerate() {
+        assert_eq!(
+            p.bits, s.bits,
+            "{name} {pr}x{pc} gpu={gpu} rank {rank}: prefetch changed the results"
+        );
+        assert!(
+            (p.compute - s.compute).abs() < 1e-12 * s.compute.max(1.0),
+            "{name} {pr}x{pc} rank {rank}: prefetch must not touch compute time"
+        );
+        // Waiting only the remaining latency can never charge more
+        // compute-timeline transfer than the synchronous accounting.
+        assert!(
+            p.transfer <= s.transfer + 1e-15,
+            "{name} {pr}x{pc} rank {rank}: prefetch transfer {} > sync {}",
+            p.transfer,
+            s.transfer
+        );
+        assert_eq!(s.pcie_hidden, 0.0, "sync accounting hides nothing");
+        assert_eq!(s.prefetch_hits, 0, "sync accounting issues no prefetches");
+        if !gpu {
+            assert_eq!(p.pcie_hidden, 0.0, "host profile: copy engine inert");
+            assert_eq!(p.prefetch_hits, 0, "host profile: no prefetch issued");
+            assert_eq!(p.transfer, 0.0, "host profile streams nothing");
+        }
+    }
+    if gpu {
+        let hidden: f64 = prefetch.iter().map(|o| o.pcie_hidden).sum();
+        let hits: u64 = prefetch.iter().map(|o| o.prefetch_hits).sum();
+        assert!(hidden > 0.0, "{name} {pr}x{pc}: some PCIe must hide behind compute");
+        assert!(hits > 0, "{name} {pr}x{pc}: some operands must be served by prefetch");
+        let (pt, st) = (
+            prefetch.iter().map(|o| o.transfer).sum::<f64>(),
+            sync.iter().map(|o| o.transfer).sum::<f64>(),
+        );
+        assert!(pt < st, "{name} {pr}x{pc}: blocked transfer must drop ({pt} vs {st})");
+    }
+}
+
+#[test]
+fn lu_bit_identical_with_prefetch_on_and_off() {
+    for (pr, pc) in meshes() {
+        for gpu in [false, true] {
+            let (p, s) = run_both(pr, pc, gpu, lu_kernel);
+            assert_bit_identical_and_retimed("LU", pr, pc, gpu, &p, &s);
+        }
+    }
+}
+
+#[test]
+fn cholesky_bit_identical_with_prefetch_on_and_off() {
+    for (pr, pc) in meshes() {
+        for gpu in [false, true] {
+            let (p, s) = run_both(pr, pc, gpu, chol_kernel);
+            assert_bit_identical_and_retimed("Cholesky", pr, pc, gpu, &p, &s);
+        }
+    }
+}
+
+#[test]
+fn summa_bit_identical_with_prefetch_on_and_off() {
+    for (pr, pc) in meshes() {
+        for gpu in [false, true] {
+            let (p, s) = run_both(pr, pc, gpu, summa_kernel);
+            assert_bit_identical_and_retimed("SUMMA", pr, pc, gpu, &p, &s);
+        }
+    }
+}
+
+#[test]
+fn cg_bit_identical_with_prefetch_on_and_off() {
+    for (pr, pc) in meshes() {
+        for gpu in [false, true] {
+            let (p, s) = run_both(pr, pc, gpu, cg_kernel);
+            assert_bit_identical_and_retimed("CG", pr, pc, gpu, &p, &s);
+        }
+    }
+}
+
+#[test]
+fn prefetch_never_extends_the_makespan() {
+    // busy_until covers the copy-engine tail: even with occupancy queued
+    // at capture, the async replay must not exceed the synchronous one.
+    for (pr, pc) in meshes() {
+        let (p, s) = run_both(pr, pc, true, summa_kernel);
+        let (pm, sm) = (
+            p.iter().map(|o| o.vtime).fold(0.0, f64::max),
+            s.iter().map(|o| o.vtime).fold(0.0, f64::max),
+        );
+        assert!(pm <= sm + 1e-12, "{pr}x{pc}: prefetch makespan {pm} > sync {sm}");
+    }
+}
+
+#[test]
+fn trsv_routes_through_residency_and_stays_exact() {
+    // The ROADMAP's remaining copy-per-call path: ptrsv now charges
+    // through the tile cache.  Solve L y = b against a dense lower
+    // triangle and pin both the numerics (vs the no-cache flow) and that
+    // the gpu arm saves transfer relative to streaming.
+    use cuplss::solvers::ptrsv;
+    let kernel = |ctx: &Ctx<'_, f64>| -> Vec<f64> {
+        let mesh = ctx.mesh;
+        let desc = Descriptor::new(N, N, TILE, mesh.shape());
+        let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+            if i == j {
+                3.0
+            } else if j < i {
+                ((i * 3 + j) as f64 * 0.2).sin() * 0.4
+            } else {
+                0.0
+            }
+        });
+        let mut b =
+            DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| (i as f64 * 0.3).cos());
+        ptrsv(ctx, &a, &mut b, TriKind::Lower).expect("trsv");
+        gather_vector(mesh, &b).unwrap_or_default()
+    };
+    for (pr, pc) in meshes() {
+        let eng = engine(true);
+        let out = World::run::<f64, _, _>(
+            pr * pc,
+            NetworkModel::gigabit_ethernet(),
+            move |comm| {
+                let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+                let cached = Ctx::new(&mesh, eng.clone() as Arc<dyn Engine<f64>>);
+                let bits: Vec<u64> = kernel(&cached).iter().map(|v| v.to_bits()).collect();
+                let cached_xfer = comm.clock().transfer_secs();
+                comm.clock().reset();
+                let streaming = Ctx::streaming(&mesh, eng.clone() as Arc<dyn Engine<f64>>);
+                let bits_s: Vec<u64> =
+                    kernel(&streaming).iter().map(|v| v.to_bits()).collect();
+                (bits, bits_s, cached_xfer, comm.clock().transfer_secs())
+            },
+        );
+        for (rank, (bits, bits_s, cx, sx)) in out.iter().enumerate() {
+            assert_eq!(bits, bits_s, "{pr}x{pc} rank {rank}: cache changed trsv");
+            assert!(cx <= sx, "{pr}x{pc} rank {rank}: trsv must not charge more");
+        }
+        let (ct, st): (f64, f64) =
+            out.iter().fold((0.0, 0.0), |(a, b), o| (a + o.2, b + o.3));
+        assert!(ct < st, "{pr}x{pc}: trsv residency must save transfer ({ct} vs {st})");
+    }
+}
+
+#[test]
+fn pgemv_output_stays_device_resident() {
+    // Repeated matvecs: with residency the per-call D2H collapses to one
+    // write-back per partial block per matvec (vs per tile in streaming) —
+    // total transfer must drop strictly, and the results stay bit-equal.
+    let eng = engine(true);
+    let out = World::run::<f64, _, _>(4, NetworkModel::gigabit_ethernet(), move |comm| {
+        let mesh = Mesh::new(&comm, MeshShape::new(2, 2));
+        let desc = Descriptor::new(N, N, TILE, mesh.shape());
+        let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+            ((i * 31 + j * 7) as f64).sin()
+        });
+        let x0 = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| (i as f64 * 0.37).cos());
+        let run = |ctx: &Ctx<'_, f64>| -> Vec<u64> {
+            let mut x = x0.clone_vec();
+            for _ in 0..3 {
+                x = pgemv(ctx, &a, &x);
+            }
+            gather_vector(&mesh, &x)
+                .unwrap_or_default()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect()
+        };
+        let cached = Ctx::new(&mesh, eng.clone() as Arc<dyn Engine<f64>>);
+        let bits_c = run(&cached);
+        let cx = comm.clock().transfer_secs();
+        comm.clock().reset();
+        let streaming = Ctx::streaming(&mesh, eng.clone() as Arc<dyn Engine<f64>>);
+        let bits_s = run(&streaming);
+        (bits_c, bits_s, cx, comm.clock().transfer_secs())
+    });
+    for (rank, (bc, bs, _cx, _sx)) in out.iter().enumerate() {
+        assert_eq!(bc, bs, "rank {rank}: residency changed the matvec chain");
+    }
+    let (ct, st): (f64, f64) = out.iter().fold((0.0, 0.0), |(a, b), o| (a + o.2, b + o.3));
+    assert!(ct < st, "resident matvec output must cut transfer ({ct} vs {st})");
+}
