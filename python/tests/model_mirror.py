@@ -403,7 +403,9 @@ def _summa_makespan_cached(n, p, b, overlapped, combine):
     return sum(bcast + combine(gacc, step_extra(k)) for k in range(kt))
 
 
-def chol_makespan(n, p, b, resident=False, combine=_add):
+def chol_factor_impl(n, p, b, resident=False, combine=_add):
+    """rust chol_factor_impl: the factor loop alone (no substitutions, no
+    transpose traffic) — split out so the batched solve twin can reuse it."""
     t = p.tile
     kt = ceil_div(n, t)
     pr, pc = p.pr, p.pc
@@ -428,10 +430,24 @@ def chol_makespan(n, p, b, resident=False, combine=_add):
             )
         else:
             total += my_tiles * p.op("gemm_nt_update", b)
-    total += trsv_makespan(n, p, b) * 2.0
-    my_tiles = ceil_div(kt, p.pr) * ceil_div(kt, p.pc)
-    total += my_tiles * p.msg(t2, b)
     return total
+
+
+def chol_transpose_traffic(n, p, b):
+    """rust chol_transpose_traffic: the one `ptranspose` redistribution."""
+    t = p.tile
+    kt = ceil_div(n, t)
+    my_tiles = ceil_div(kt, p.pr) * ceil_div(kt, p.pc)
+    return my_tiles * p.msg(t * t, b)
+
+
+def chol_makespan(n, p, b, resident=False, combine=_add):
+    # Same association order as before the split: (factor + trsv*2) + traffic.
+    return (
+        chol_factor_impl(n, p, b, resident, combine)
+        + trsv_makespan(n, p, b) * 2.0
+        + chol_transpose_traffic(n, p, b)
+    )
 
 
 def chol_makespan_resident(n, p, b):
@@ -645,6 +661,187 @@ def sparse_pipecg_overlap_makespan(n, nnz, iters, diag_frac, p, b):
 
 
 # ---------------------------------------------------------------------------
+# accel/engine.rs RHS-panel ops + bench_harness/model.rs batched twins
+# ---------------------------------------------------------------------------
+
+
+def panel_op_flops(op, t, k):
+    """rust panel_op_flops: k columns' worth of the single-column flops."""
+    return k * op_flops(op, t)
+
+
+def panel_operand_elems(op, t, k):
+    """rust panel_operand_elems: the tile-sized operand is touched once for
+    all k columns; vector-length operands scale by k."""
+    t2 = t * t
+    ins, out = op_operand_elems(op, t)
+    ins = [e if e == t2 else e * k for e in ins]
+    return ins, (out if out == t2 else out * k)
+
+
+def panel_op_cost_total(profile, op, tile, k, b):
+    """rust panel_op_cost .total(): k columns, one launch, tile streamed
+    once.  k = 1 prices exactly like tile_op_cost_total."""
+    ins, out = panel_operand_elems(op, tile, k)
+    touched = (sum(ins) + out) * b
+    return profile.op_cost_total(
+        op_class(op), panel_op_flops(op, tile, k), touched, touched, b
+    )
+
+
+def _panel_op(p, name, k, b):
+    """rust ModelParams::panel_op."""
+    return panel_op_cost_total(p.engine, name, p.tile, k, b)
+
+
+def trsm_makespan(n, k, p, b):
+    """rust trsm_makespan: one RHS-panel triangular substitution — per step
+    one panel trsv, one world bcast of the k·t chunk, per owned column
+    tile ONE broadcast (amortized over columns) + one panel gemv_update.
+    trsm_makespan(n, 1, p) == trsv_makespan(n, p) exactly."""
+    t = p.tile
+    kt = ceil_div(n, t)
+    pr, pc = p.pr, p.pc
+    total = 0.0
+    for s in range(kt):
+        others = kt - s - 1
+        total += _panel_op(p, "trsv_lu", k, b)
+        total += p.tree(pr * pc, k * t, b)
+        my_rows = ceil_div(others, pr)
+        total += my_rows * (p.tree(pc, t * t, b) + _panel_op(p, "gemv_update", k, b))
+    return total
+
+
+def lu_solve_makespan_batched(n, k, p, b):
+    """rust lu_solve_makespan_batched: one factorization + two RHS-panel
+    substitutions.  k = 1 reproduces lu_makespan bit for bit."""
+    total = sum(sum(part) for part in lu_step_parts(n, p, b))
+    return total + trsm_makespan(n, k, p, b) * 2.0
+
+
+def chol_solve_makespan_batched(n, k, p, b):
+    """rust chol_solve_makespan_batched: one factorization, ONE transpose
+    redistribution, two RHS-panel substitutions.  k = 1 == chol_makespan."""
+    return (
+        chol_factor_impl(n, p, b)
+        + trsm_makespan(n, k, p, b) * 2.0
+        + chol_transpose_traffic(n, p, b)
+    )
+
+
+def cg_makespan_batched(n, k, iters, p, b):
+    """rust cg_makespan_batched: blocked CG — k-column collectives, one
+    panel gemv_acc per owned A tile, k-lane dots, column-batched vector
+    recurrences.  k = 1 reproduces the iter_makespan CG arm bit for bit."""
+    t = p.tile
+    kt = ceil_div(n, t)
+    pr, pc = p.pr, p.pc
+    my_rows = ceil_div(kt, pr)
+    my_cols = ceil_div(kt, pc)
+    vec_elems = my_rows * t
+    matvec = (
+        p.ring(pr, k * vec_elems, b)
+        + (my_rows * my_cols) * _panel_op(p, "gemv_acc", k, b)
+        + 2.0 * p.tree(pc, k * vec_elems, b)
+    )
+    dot = k * (my_rows * p.blas1(t, b)) + 2.0 * p.tree(pr, k, b)
+    vop = my_rows * p.blas1(k * t, b)
+    return iters * (matvec + 2.0 * dot + 3.0 * vop)
+
+
+# ---------------------------------------------------------------------------
+# serve/mod.rs — request stream, batching and the scheduling timeline
+# ---------------------------------------------------------------------------
+
+
+def demo_stream(length, base_n):
+    """rust serve::demo_stream: groups of four share an operator, methods
+    cycle lu/cg/chol/bicgstab across groups, sizes cycle base_n·{1,2,3},
+    tolerances alternate, arrivals tick every 2 ms.  Pure arithmetic."""
+    out = []
+    for i in range(length):
+        group = i // 4
+        method = ("lu", "cg", "chol", "bicgstab")[group % 4]
+        workload = "spd" if method in ("chol", "cg") else "diagdom"
+        out.append({
+            "id": i,
+            "workload": workload,
+            "n": base_n * (1 + group % 3),
+            "method": method,
+            "tol": 1e-6 if i % 2 == 0 else 1e-8,
+            "arrival": 0.002 * i,
+        })
+    return out
+
+
+def _compatible(a, b):
+    return a["workload"] == b["workload"] and a["n"] == b["n"] and a["method"] == b["method"]
+
+
+def form_batches(requests, rhs_batch=8, batching=True):
+    """rust serve::form_batches: FIFO, merge only consecutive compatible
+    requests, cap rhs_batch (1 when batching is off)."""
+    cap = max(rhs_batch, 1) if batching else 1
+    batches = []
+    for i in range(len(requests)):
+        if batches and len(batches[-1]) < cap and _compatible(
+            requests[batches[-1][0]], requests[i]
+        ):
+            batches[-1].append(i)
+        else:
+            batches.append([i])
+    return batches
+
+
+def schedule(requests, rhs_batch, batching, price):
+    """rust serve::schedule: a batch starts when the cluster is free AND
+    its last member has arrived; latency = finish − arrival.  `price`
+    maps a member list to the batch makespan.  Returns
+    ((arrival, finish) per request in stream order, batch count)."""
+    batches = form_batches(requests, rhs_batch, batching)
+    clock = 0.0
+    outcomes = []
+    for batch in batches:
+        members = [requests[i] for i in batch]
+        makespan = price(members)
+        ready = 0.0
+        for r in members:
+            ready = max(ready, r["arrival"])
+        start = max(clock, ready)
+        finish = start + makespan
+        clock = finish
+        outcomes.extend((r["arrival"], finish) for r in members)
+    return outcomes, len(batches)
+
+
+def throughput(outcomes):
+    """rust ServeReport::throughput."""
+    if not outcomes:
+        return 0.0
+    first = min(a for a, _ in outcomes)
+    last = 0.0
+    for _, f in outcomes:
+        last = max(last, f)
+    return len(outcomes) / (last - first) if last > first else 0.0
+
+
+def latency_percentile(outcomes, q):
+    """rust ServeReport::latency_percentile (nearest-rank)."""
+    lats = sorted(f - a for a, f in outcomes)
+    if not lats:
+        return 0.0
+    idx = min(max(math.ceil(q * len(lats)), 1), len(lats)) - 1
+    return lats[idx]
+
+
+def latency_max(outcomes):
+    m = 0.0
+    for a, f in outcomes:
+        m = max(m, f - a)
+    return m
+
+
+# ---------------------------------------------------------------------------
 # Bench-row generation (mirrors rust/benches/{overlap,residency}.rs)
 # ---------------------------------------------------------------------------
 
@@ -806,6 +1003,85 @@ def prefetch_rows():
     return rows
 
 
+SERVE_ITERS = 100
+SERVE_REQUESTS = 16
+SERVE_BASE_N = 20_000
+SERVE_RANKS = 16
+
+
+def serving_entries():
+    """Amortization-sweep rows of BENCH_serving.json
+    (rust/benches/serving.rs): each row is
+    (kernel, engine, n, ranks, k, single, looped, batched)."""
+    iters = SERVE_ITERS
+    rows = []
+    for ranks in PAPER_RANKS:
+        for gpu in (False, True):
+            p = params(ranks, gpu)
+            engine = "MPI+CUDA" if gpu else "MPI+ATLAS"
+            singles = (
+                ("TRSM", trsm_makespan(PAPER_N, 1, p, 4)),
+                ("LU solve", lu_solve_makespan_batched(PAPER_N, 1, p, 4)),
+                ("Cholesky solve", chol_solve_makespan_batched(PAPER_N, 1, p, 4)),
+                ("blocked CG", cg_makespan_batched(PAPER_N, 1, iters, p, 4)),
+            )
+            for k in (1, 2, 4, 8):
+                for kernel, single in singles:
+                    if kernel == "TRSM":
+                        batched = trsm_makespan(PAPER_N, k, p, 4)
+                    elif kernel == "LU solve":
+                        batched = lu_solve_makespan_batched(PAPER_N, k, p, 4)
+                    elif kernel == "Cholesky solve":
+                        batched = chol_solve_makespan_batched(PAPER_N, k, p, 4)
+                    else:
+                        batched = cg_makespan_batched(PAPER_N, k, iters, p, 4)
+                    rows.append((
+                        kernel, engine, PAPER_N, ranks, k,
+                        single, k * single, batched,
+                    ))
+    return rows
+
+
+def _serve_price(p, members):
+    """rust serving.rs model_batch_cost: direct methods ride the batched
+    solve twins, CG the blocked twin, BiCGSTAB prices as k looped singles
+    (no batched twin — the scheduler claims no amortization there)."""
+    head = members[0]
+    k = len(members)
+    n = head["n"]
+    m = head["method"]
+    if m == "lu":
+        return lu_solve_makespan_batched(n, k, p, 4)
+    if m == "chol":
+        return chol_solve_makespan_batched(n, k, p, 4)
+    if m == "cg":
+        return cg_makespan_batched(n, k, SERVE_ITERS, p, 4)
+    return k * iter_makespan(m, n, SERVE_ITERS, 30, p, 4)
+
+
+def serving_rows():
+    """Serving-scenario rows of BENCH_serving.json: each row is
+    (engine, ranks, requests, base_n, batching, batches, throughput,
+    p50, p95, max)."""
+    stream = demo_stream(SERVE_REQUESTS, SERVE_BASE_N)
+    rows = []
+    for gpu in (False, True):
+        p = params(SERVE_RANKS, gpu)
+        engine = "MPI+CUDA" if gpu else "MPI+ATLAS"
+        for batching in (True, False):
+            outcomes, nbatches = schedule(
+                stream, 8, batching, lambda members: _serve_price(p, members)
+            )
+            rows.append((
+                engine, SERVE_RANKS, SERVE_REQUESTS, SERVE_BASE_N, batching,
+                nbatches, throughput(outcomes),
+                latency_percentile(outcomes, 0.50),
+                latency_percentile(outcomes, 0.95),
+                latency_max(outcomes),
+            ))
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # Committed-artifact rendering (byte-identical to the rust benches' output)
 # ---------------------------------------------------------------------------
@@ -861,5 +1137,36 @@ def render_residency_json():
             f'"ranks": {ranks}, "streaming_secs": {_rust_e6(streaming)}, '
             f'"cached_secs": {_rust_e6(cached)}, '
             f'"saved_frac": {1.0 - cached / streaming:.4f}}}{comma}'
+        )
+    return "\n".join(lines + ["  ]", "}", ""])
+
+
+def render_serving_json():
+    """The exact bytes `cargo bench --bench serving` writes."""
+    rows = serving_entries()
+    srows = serving_rows()
+    lines = ['{', '  "network": "gigabit_ethernet",', '  "tile": 256,',
+             f'  "iters": {SERVE_ITERS},', '  "entries": [']
+    for i, (kernel, engine, n, ranks, k, single, looped, batched) in enumerate(rows):
+        comma = "," if i + 1 < len(rows) else ""
+        lines.append(
+            f'    {{"kernel": "{kernel}", "engine": "{engine}", "n": {n}, '
+            f'"ranks": {ranks}, "k": {k}, "single_secs": {_rust_e6(single)}, '
+            f'"looped_secs": {_rust_e6(looped)}, '
+            f'"batched_secs": {_rust_e6(batched)}, '
+            f'"speedup": {looped / batched:.4f}}}{comma}'
+        )
+    lines += ['  ],', '  "serving": [']
+    for i, (engine, ranks, requests, base_n, batching, batches,
+            tput, p50, p95, mx) in enumerate(srows):
+        comma = "," if i + 1 < len(srows) else ""
+        flag = "true" if batching else "false"
+        lines.append(
+            f'    {{"engine": "{engine}", "ranks": {ranks}, '
+            f'"requests": {requests}, "base_n": {base_n}, '
+            f'"batching": {flag}, "batches": {batches}, '
+            f'"throughput_rps": {_rust_e6(tput)}, '
+            f'"p50_secs": {_rust_e6(p50)}, "p95_secs": {_rust_e6(p95)}, '
+            f'"max_secs": {_rust_e6(mx)}}}{comma}'
         )
     return "\n".join(lines + ["  ]", "}", ""])

@@ -1,0 +1,246 @@
+"""No-toolchain verification of the batched multi-RHS + serving PR (rust
+DESIGN.md §14).
+
+Four independent oracles:
+
+1. **Model-twin inequalities** — exactly what `cargo bench --bench
+   serving` asserts: on *every* emitted configuration, `batched == single`
+   bit for bit at k = 1 (the batched paths ARE the single-RHS paths) and
+   `batched < k x single` strictly for k > 1 (launches, tile broadcasts
+   and message latencies are paid per panel step, not per vector) — plus
+   off-bench sweeps (odd meshes, both dtypes, non-bench k, tiny n).
+2. **Panel-op pricing** — the accel-layer contract the twins ride on:
+   a one-column panel prices identically to the single tile op for every
+   op and both engine profiles, wider panels strictly beat k looped calls,
+   and the cost is monotone in k.
+3. **Scheduler arithmetic** — a mirror of `serve/mod.rs` (demo stream,
+   FIFO consecutive-compatible batching, the virtual timeline, nearest-rank
+   percentiles) replaying the rust unit tests' exact expectations, plus
+   the serving-scenario A/B: batching must raise throughput and never
+   worsen the tail on the backlogged demo stream.
+4. **Committed artifact** — `BENCH_serving.json` must be byte-identical
+   to what the mirror renders.
+"""
+
+import pathlib
+
+import pytest
+
+import model_mirror as mm
+
+LE_SLACK = 1.0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# 1. model twins — the bench acceptance shape
+# ---------------------------------------------------------------------------
+
+
+def test_serving_bench_acceptance_shape():
+    rows = mm.serving_entries()
+    # 5 rank counts x 2 engines x 4 widths x 4 kernels.
+    assert len(rows) == len(mm.PAPER_RANKS) * 2 * 4 * 4
+    for kernel, engine, n, ranks, k, single, looped, batched in rows:
+        assert looped == k * single
+        if k == 1:
+            assert batched == single, (
+                f"{kernel} {engine} P={ranks}: k=1 must be the single-RHS "
+                f"path bit for bit"
+            )
+        else:
+            assert batched < looped, (
+                f"{kernel} {engine} P={ranks} k={k}: batched {batched} must "
+                f"beat {looped} looped singles"
+            )
+
+
+def test_k_1_twins_are_the_single_rhs_twins_bitwise():
+    # The bench's assert_eq! pair plus the LU/Cholesky k=1 identities: the
+    # batched twins at one column must reproduce the PR-3/PR-4 singles
+    # exactly (same terms, same association), not approximately.
+    for ranks in mm.PAPER_RANKS:
+        for gpu in (False, True):
+            for b in (4, 8):
+                p = mm.params(ranks, gpu)
+                assert mm.trsm_makespan(mm.PAPER_N, 1, p, b) == (
+                    mm.trsv_makespan(mm.PAPER_N, p, b)
+                ), (ranks, gpu, b)
+                assert mm.lu_solve_makespan_batched(mm.PAPER_N, 1, p, b) == (
+                    mm.lu_makespan(mm.PAPER_N, p, b)
+                ), (ranks, gpu, b)
+                assert mm.chol_solve_makespan_batched(mm.PAPER_N, 1, p, b) == (
+                    mm.chol_makespan(mm.PAPER_N, p, b)
+                ), (ranks, gpu, b)
+                assert mm.cg_makespan_batched(mm.PAPER_N, 1, 100, p, b) == (
+                    mm.iter_makespan("cg", mm.PAPER_N, 100, 30, p, b)
+                ), (ranks, gpu, b)
+
+
+def test_twins_hold_beyond_bench_configs():
+    # Non-bench meshes (incl. non-square), both dtypes, widths the bench
+    # never sweeps, small n: the amortization must be structural, not
+    # tuned to the emitted grid.  Batched cost must also be monotone in k
+    # (more columns never cost less).
+    for ranks in (1, 2, 3, 6, 8, 12):
+        for gpu in (False, True):
+            for b in (4, 8):
+                for n in (256, 1_024, 8_192):
+                    p = mm.params(ranks, gpu)
+                    prev = {"trsm": 0.0, "lu": 0.0, "chol": 0.0, "cg": 0.0}
+                    for k in (1, 2, 3, 5, 16):
+                        cur = {
+                            "trsm": mm.trsm_makespan(n, k, p, b),
+                            "lu": mm.lu_solve_makespan_batched(n, k, p, b),
+                            "chol": mm.chol_solve_makespan_batched(n, k, p, b),
+                            "cg": mm.cg_makespan_batched(n, k, 17, p, b),
+                        }
+                        singles = {
+                            "trsm": mm.trsv_makespan(n, p, b),
+                            "lu": mm.lu_makespan(n, p, b),
+                            "chol": mm.chol_makespan(n, p, b),
+                            "cg": mm.iter_makespan("cg", n, 17, 30, p, b),
+                        }
+                        for key in cur:
+                            if k == 1:
+                                assert cur[key] == singles[key], (
+                                    ranks, gpu, b, n, key
+                                )
+                            else:
+                                assert cur[key] < k * singles[key], (
+                                    ranks, gpu, b, n, k, key
+                                )
+                            assert cur[key] > prev[key], (ranks, gpu, b, n, k, key)
+                        prev = cur
+
+
+# ---------------------------------------------------------------------------
+# 2. panel-op pricing (accel/engine.rs panel_op_cost)
+# ---------------------------------------------------------------------------
+
+PANEL_OPS = ("trsv_lu", "trsv_l", "trsv_u", "trsv_lt", "gemv_update",
+             "gemv_acc", "gemv", "gemv_t")
+
+
+def test_one_column_panel_prices_as_the_single_tile_op():
+    for profile in (mm.q6600_atlas(), mm.gtx280_cublas()):
+        for op in PANEL_OPS:
+            for b in (4, 8):
+                assert mm.panel_op_cost_total(profile, op, 256, 1, b) == (
+                    mm.tile_op_cost_total(profile, op, 256, b)
+                ), (profile.name, op, b)
+
+
+def test_wider_panels_strictly_beat_looped_singles_and_are_monotone():
+    # One launch + the tile operand streamed once: strictly below k looped
+    # calls for every k > 1, on both profiles (both charge launches), and
+    # monotone in k.
+    for profile in (mm.q6600_atlas(), mm.gtx280_cublas()):
+        for op in PANEL_OPS:
+            single = mm.tile_op_cost_total(profile, op, 256, 4)
+            prev = 0.0
+            for k in (1, 2, 4, 8, 32):
+                c = mm.panel_op_cost_total(profile, op, 256, k, 4)
+                if k > 1:
+                    assert c < k * single, (profile.name, op, k)
+                assert c > prev, (profile.name, op, k)
+                prev = c
+
+
+def test_panel_flops_are_exactly_k_times_the_column_flops():
+    # Bit-identity contract: batching changes cost, never arithmetic.
+    for op in PANEL_OPS:
+        for k in (1, 2, 7):
+            assert mm.panel_op_flops(op, 256, k) == k * mm.op_flops(op, 256)
+            ins, out = mm.panel_operand_elems(op, 256, k)
+            sins, sout = mm.op_operand_elems(op, 256)
+            # The tile operand appears once; vector operands scale by k.
+            assert out == (sout if sout == 256 * 256 else sout * k)
+            assert len(ins) == len(sins)
+
+
+# ---------------------------------------------------------------------------
+# 3. scheduler arithmetic (serve/mod.rs mirror)
+# ---------------------------------------------------------------------------
+
+
+def test_demo_stream_is_deterministic_and_mixed():
+    s = mm.demo_stream(16, 64)
+    assert len(s) == 16
+    assert mm._compatible(s[0], s[3])
+    assert [s[i]["method"] for i in (0, 4, 8, 12)] == [
+        "lu", "cg", "chol", "bicgstab"
+    ]
+    assert not mm._compatible(s[3], s[4])
+    assert s[4]["workload"] == "spd" and s[0]["workload"] == "diagdom"
+    assert s[1]["arrival"] > s[0]["arrival"]
+    assert s[0]["tol"] != s[1]["tol"]
+    assert s == mm.demo_stream(16, 64)
+
+
+def test_batches_merge_only_consecutive_compatible_requests():
+    s = mm.demo_stream(9, 64)
+    assert mm.form_batches(s) == [[0, 1, 2, 3], [4, 5, 6, 7], [8]]
+    b2 = mm.form_batches(s, rhs_batch=3)
+    assert b2[0] == [0, 1, 2] and b2[1] == [3]
+    b1 = mm.form_batches(s, batching=False)
+    assert len(b1) == 9 and all(len(g) == 1 for g in b1)
+    # The batching is a partition: every request exactly once, in order.
+    flat = [i for g in mm.form_batches(mm.demo_stream(23, 64)) for i in g]
+    assert flat == list(range(23))
+
+
+def test_schedule_timeline_and_percentiles():
+    # The rust unit test's exact numbers: every batch priced at 1 s.
+    s = mm.demo_stream(8, 64)
+    outcomes, nbatches = mm.schedule(s, 8, True, lambda members: 1.0)
+    assert nbatches == 2
+    arrival0, finish0 = outcomes[0]
+    assert finish0 == 0.006 + 1.0  # batch 0 waits for request 3
+    arrival4, finish4 = outcomes[4]
+    assert finish4 == 1.006 + 1.0  # batch 1 queued behind batch 0
+    assert abs((finish4 - arrival4) - (2.006 - 0.008)) < 1e-12
+    assert mm.latency_max(outcomes) == finish4 - arrival4
+    assert mm.latency_percentile(outcomes, 1.0) == mm.latency_max(outcomes)
+    assert (
+        mm.latency_percentile(outcomes, 0.50)
+        <= mm.latency_percentile(outcomes, 0.95)
+        <= mm.latency_max(outcomes)
+    )
+    assert abs(mm.throughput(outcomes) - 8.0 / 2.006) < 1e-9
+    assert mm.throughput([]) == 0.0
+    assert mm.latency_percentile([], 0.5) == 0.0
+
+
+def test_serving_scenario_batching_never_loses():
+    # The bench's serving A/B on the real pricing: 4 rows (two engines x
+    # on/off); on the backlogged demo stream batching must raise
+    # throughput strictly and never worsen the worst latency.
+    rows = mm.serving_rows()
+    assert len(rows) == 4
+    for on, off in (rows[0:2], rows[2:4]):
+        assert on[4] is True and off[4] is False  # batching flag
+        assert on[0] == off[0]  # same engine arm
+        assert on[5] == 4 and off[5] == 16  # groups of four vs singletons
+        assert on[6] > off[6], f"{on[0]}: batching must raise throughput"
+        assert on[9] <= off[9] * LE_SLACK, f"{on[0]}: tail must not worsen"
+        assert on[7] <= on[8] <= on[9]  # p50 <= p95 <= max
+
+
+def test_rhs_coeff_is_exact_and_stream_is_arrival_ordered():
+    s = mm.demo_stream(32, 100)
+    assert all(a["arrival"] <= b["arrival"] for a, b in zip(s, s[1:]))
+    # rhs_coeff mirrors rust SolveRequest::rhs_coeff: 1 + (id%8)/8, exact
+    # in binary floating point.
+    for r in s:
+        coeff = 1.0 + 0.125 * (r["id"] % 8)
+        assert coeff == 1.0 + (r["id"] % 8) / 8.0
+
+
+# ---------------------------------------------------------------------------
+# 4. committed artifact
+# ---------------------------------------------------------------------------
+
+
+def test_committed_serving_artifact_matches_the_mirror():
+    root = pathlib.Path(__file__).resolve().parents[2]
+    assert (root / "BENCH_serving.json").read_text() == mm.render_serving_json()

@@ -1,0 +1,304 @@
+//! Bench: batched multi-RHS solves + the solve-request scheduler — the
+//! printed numbers behind the serving subsystem (`DESIGN.md` §14).
+//!
+//! Two sections:
+//!
+//! * **amortization sweep** — for every paper rank count, both engine arms
+//!   and RHS-panel widths k ∈ {1, 2, 4, 8}, evaluates each batched model
+//!   twin against `k ×` its single-RHS baseline: **TRSM** (RHS-panel
+//!   triangular substitution vs k looped `ptrsv` passes), **LU solve** and
+//!   **Cholesky solve** (one factorization + two panel substitutions vs k
+//!   full solves) and **blocked CG** (shared matvec sweeps, k-lane
+//!   reductions, column-batched recurrences vs k looped solves);
+//! * **serving scenario** — the deterministic mixed demo stream priced
+//!   through [`cuplss::serve::schedule`] with the model twins as the batch
+//!   pricer, batching on vs off (`--no-batching` A/B), reporting
+//!   throughput and latency percentiles.
+//!
+//! Emits `BENCH_serving.json` and asserts the acceptance shape:
+//! `batched <= k x single` on *every* configuration (strictly below for
+//! k > 1 — launches, tile broadcasts and message latencies are paid per
+//! panel step, not per vector), bit-exact equality at k = 1 (the batched
+//! paths are the single-RHS paths), and batched serving throughput
+//! strictly above the unbatched A/B on a backlogged stream.
+//!
+//! ```sh
+//! cargo bench --bench serving
+//! ```
+
+use cuplss::accel::{ComputeProfile, DEFAULT_DEVICE_MEM};
+use cuplss::bench_harness::model::{
+    cg_makespan_batched, chol_solve_makespan_batched, iter_makespan, lu_solve_makespan_batched,
+    trsm_makespan, trsv_makespan,
+};
+use cuplss::bench_harness::{ModelParams, PAPER_N, PAPER_RANKS};
+use cuplss::cluster::Method;
+use cuplss::comm::NetworkModel;
+use cuplss::mesh::MeshShape;
+use cuplss::serve::{demo_stream, schedule, BatchCost, ServeConfig};
+use cuplss::solvers::IterMethod;
+use cuplss::util::fmt;
+
+struct Row {
+    kernel: &'static str,
+    engine: &'static str,
+    n: usize,
+    ranks: usize,
+    k: usize,
+    single: f64,
+    looped: f64,
+    batched: f64,
+}
+
+struct ServeRow {
+    engine: &'static str,
+    ranks: usize,
+    requests: usize,
+    base_n: usize,
+    batching: bool,
+    batches: usize,
+    throughput: f64,
+    p50: f64,
+    p95: f64,
+    max: f64,
+}
+
+fn params(ranks: usize, gpu: bool) -> ModelParams {
+    ModelParams {
+        tile: 256,
+        shape: MeshShape::near_square(ranks),
+        net: NetworkModel::gigabit_ethernet(),
+        engine: if gpu {
+            ComputeProfile::gtx280_cublas()
+        } else {
+            ComputeProfile::q6600_atlas()
+        },
+        panel_cpu: ComputeProfile::q6600_atlas(),
+        swap_fraction: 0.5,
+        device_mem: DEFAULT_DEVICE_MEM,
+    }
+}
+
+/// Price one serving batch with the analytic twins: direct methods ride
+/// one factorization + panel substitutions, CG rides the blocked sweep,
+/// BiCGSTAB (no batched twin yet) prices as k looped singles — honest:
+/// the scheduler never claims amortization the model does not grant.
+fn model_batch_cost(method: Method, n: usize, k: usize, iters: usize, p: &ModelParams) -> f64 {
+    match method {
+        Method::Lu => lu_solve_makespan_batched::<f32>(n, k, p),
+        Method::Cholesky => chol_solve_makespan_batched::<f32>(n, k, p),
+        Method::Iterative(IterMethod::Cg) => cg_makespan_batched::<f32>(n, k, iters, p),
+        Method::Iterative(m) => k as f64 * iter_makespan::<f32>(m, n, iters, 30, p),
+    }
+}
+
+fn main() {
+    let iters = 100usize;
+    let mut rows: Vec<Row> = Vec::new();
+
+    for &ranks in PAPER_RANKS {
+        for gpu in [false, true] {
+            let p = params(ranks, gpu);
+            let engine = if gpu { "MPI+CUDA" } else { "MPI+ATLAS" };
+            // k = 1 is the single-RHS path, bit for bit.
+            assert_eq!(
+                trsm_makespan::<f32>(PAPER_N, 1, &p),
+                trsv_makespan::<f32>(PAPER_N, &p),
+                "{engine} P={ranks}: a one-column panel must price as ptrsv"
+            );
+            assert_eq!(
+                cg_makespan_batched::<f32>(PAPER_N, 1, iters, &p),
+                iter_makespan::<f32>(IterMethod::Cg, PAPER_N, iters, 30, &p),
+                "{engine} P={ranks}: one-column blocked CG must price as CG"
+            );
+            let singles = [
+                ("TRSM", trsm_makespan::<f32>(PAPER_N, 1, &p)),
+                ("LU solve", lu_solve_makespan_batched::<f32>(PAPER_N, 1, &p)),
+                ("Cholesky solve", chol_solve_makespan_batched::<f32>(PAPER_N, 1, &p)),
+                ("blocked CG", cg_makespan_batched::<f32>(PAPER_N, 1, iters, &p)),
+            ];
+            for k in [1usize, 2, 4, 8] {
+                for (kernel, single) in singles {
+                    let batched = match kernel {
+                        "TRSM" => trsm_makespan::<f32>(PAPER_N, k, &p),
+                        "LU solve" => lu_solve_makespan_batched::<f32>(PAPER_N, k, &p),
+                        "Cholesky solve" => chol_solve_makespan_batched::<f32>(PAPER_N, k, &p),
+                        _ => cg_makespan_batched::<f32>(PAPER_N, k, iters, &p),
+                    };
+                    rows.push(Row {
+                        kernel,
+                        engine,
+                        n: PAPER_N,
+                        ranks,
+                        k,
+                        single,
+                        looped: k as f64 * single,
+                        batched,
+                    });
+                }
+            }
+        }
+    }
+
+    // Serving scenario: the mixed demo stream, batching on vs off.
+    let (n_requests, base_n, serve_ranks) = (16usize, 20_000usize, 16usize);
+    let stream = demo_stream(n_requests, base_n);
+    let mut serve_rows: Vec<ServeRow> = Vec::new();
+    for gpu in [false, true] {
+        let p = params(serve_ranks, gpu);
+        let engine = if gpu { "MPI+CUDA" } else { "MPI+ATLAS" };
+        for batching in [true, false] {
+            let cfg = ServeConfig { rhs_batch: 8, batching };
+            let rep = schedule(&stream, &cfg, |members| {
+                let head = members[0];
+                let k = members.len();
+                let makespan = model_batch_cost(head.method, head.n, k, iters, &p);
+                Ok(BatchCost {
+                    makespan,
+                    per_request_secs: vec![makespan / k as f64; k],
+                    max_err: 0.0,
+                })
+            })
+            .expect("demo stream is arrival-ordered");
+            serve_rows.push(ServeRow {
+                engine,
+                ranks: serve_ranks,
+                requests: n_requests,
+                base_n,
+                batching,
+                batches: rep.batches,
+                throughput: rep.throughput(),
+                p50: rep.p50(),
+                p95: rep.p95(),
+                max: rep.latency_max(),
+            });
+        }
+    }
+
+    // Tables for the terminal.
+    let header = ["kernel", "engine", "P", "k", "k x single", "batched", "speedup"];
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.kernel.to_string(),
+                r.engine.to_string(),
+                r.ranks.to_string(),
+                r.k.to_string(),
+                fmt::secs(r.looped),
+                fmt::secs(r.batched),
+                format!("{:.2}x", r.looped / r.batched),
+            ]
+        })
+        .collect();
+    println!("== Batched multi-RHS solves vs k looped singles ==");
+    println!("{}", fmt::table(&header, &body));
+
+    let sheader =
+        ["engine", "P", "batching", "batches", "req/s", "p50", "p95", "max latency"];
+    let sbody: Vec<Vec<String>> = serve_rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.engine.to_string(),
+                r.ranks.to_string(),
+                if r.batching { "on".to_string() } else { "off".to_string() },
+                r.batches.to_string(),
+                format!("{:.3}", r.throughput),
+                fmt::secs(r.p50),
+                fmt::secs(r.p95),
+                fmt::secs(r.max),
+            ]
+        })
+        .collect();
+    println!("== Serving the mixed demo stream ({n_requests} requests) ==");
+    println!("{}", fmt::table(&sheader, &sbody));
+
+    // Acceptance shape.
+    for r in &rows {
+        if r.k == 1 {
+            assert!(
+                r.batched == r.single,
+                "{} {} P={}: k=1 must be the single-RHS path bit for bit",
+                r.kernel,
+                r.engine,
+                r.ranks
+            );
+        } else {
+            assert!(
+                r.batched < r.looped,
+                "{} {} P={} k={}: batched {} must beat {} looped singles",
+                r.kernel,
+                r.engine,
+                r.ranks,
+                r.k,
+                r.batched,
+                r.looped
+            );
+        }
+    }
+    for pair in serve_rows.chunks(2) {
+        let (on, off) = (&pair[0], &pair[1]);
+        assert!(on.batching && !off.batching);
+        assert!(
+            on.throughput > off.throughput,
+            "{}: batching must raise throughput ({} vs {})",
+            on.engine,
+            on.throughput,
+            off.throughput
+        );
+        assert!(
+            on.max <= off.max * (1.0 + 1e-9),
+            "{}: batching must not worsen the tail on a backlogged stream",
+            on.engine
+        );
+    }
+
+    // BENCH_serving.json (hand-rolled: the offline crate set has no serde).
+    let mut json = format!(
+        "{{\n  \"network\": \"gigabit_ethernet\",\n  \"tile\": 256,\n  \"iters\": {iters},\n  \"entries\": [\n"
+    );
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"engine\": \"{}\", \"n\": {}, \"ranks\": {}, \
+             \"k\": {}, \"single_secs\": {:.6e}, \"looped_secs\": {:.6e}, \
+             \"batched_secs\": {:.6e}, \"speedup\": {:.4}}}{}\n",
+            r.kernel,
+            r.engine,
+            r.n,
+            r.ranks,
+            r.k,
+            r.single,
+            r.looped,
+            r.batched,
+            r.looped / r.batched,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n  \"serving\": [\n");
+    for (i, r) in serve_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"engine\": \"{}\", \"ranks\": {}, \"requests\": {}, \"base_n\": {}, \
+             \"batching\": {}, \"batches\": {}, \"throughput_rps\": {:.6e}, \
+             \"p50_secs\": {:.6e}, \"p95_secs\": {:.6e}, \"max_secs\": {:.6e}}}{}\n",
+            r.engine,
+            r.ranks,
+            r.requests,
+            r.base_n,
+            r.batching,
+            r.batches,
+            r.throughput,
+            r.p50,
+            r.p95,
+            r.max,
+            if i + 1 < serve_rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_serving.json", &json).expect("write BENCH_serving.json");
+    println!(
+        "wrote BENCH_serving.json ({} entries, {} serving rows); batching never loses.",
+        rows.len(),
+        serve_rows.len()
+    );
+}

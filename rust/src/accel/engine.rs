@@ -182,6 +182,92 @@ pub trait Engine<S: Scalar>: Send + Sync {
     fn warmup(&self) -> Result<()> {
         Ok(())
     }
+
+    /// RHS-panel triangular solve (a `trsm`-shaped op): solve the same
+    /// `tile x tile` triangle against every column block of `cols` in one
+    /// batched kernel — `op` names the single-column `trsv_*` variant.
+    /// Arithmetic is the looped single-column calls', bit for bit (each
+    /// column routes through the very same [`Engine::trsv_lu`]-family
+    /// method); only the cost batches: one launch, the triangle streamed
+    /// once, priced by [`panel_op_cost`] (`<= k x` the single-column cost,
+    /// strictly so for `k > 1`).
+    fn trsm_panel(&self, op: &str, tri: &[S], cols: &mut [&mut [S]]) -> Result<OpCost> {
+        for blk in cols.iter_mut() {
+            match op {
+                "trsv_lu" => self.trsv_lu(tri, blk)?,
+                "trsv_l" => self.trsv_l(tri, blk)?,
+                "trsv_u" => self.trsv_u(tri, blk)?,
+                "trsv_lt" => self.trsv_lt(tri, blk)?,
+                other => {
+                    return Err(crate::Error::config(format!(
+                        "trsm_panel: unknown column op {other:?}"
+                    )))
+                }
+            };
+        }
+        Ok(panel_op_cost::<S>(self.profile(), op, self.tile(), cols.len()))
+    }
+
+    /// RHS-panel matvec update (a `gemm`-shaped op): apply the same tile to
+    /// `k` paired (y, x) column blocks in one batched kernel — `op` names
+    /// the single-column `gemv_update`/`gemv_acc`/`gemv_t_acc` variant.
+    /// Same bit-identity + batched-cost contract as [`Engine::trsm_panel`].
+    fn gemm_panel(
+        &self,
+        op: &str,
+        cols: &mut [&mut [S]],
+        a: &[S],
+        xs: &[&[S]],
+    ) -> Result<OpCost> {
+        assert_eq!(cols.len(), xs.len(), "gemm_panel column pairing mismatch");
+        for (yb, xb) in cols.iter_mut().zip(xs) {
+            match op {
+                "gemv_update" => self.gemv_update(yb, a, xb)?,
+                "gemv_acc" => self.gemv_acc(yb, a, xb)?,
+                "gemv_t_acc" => self.gemv_t_acc(yb, a, xb)?,
+                other => {
+                    return Err(crate::Error::config(format!(
+                        "gemm_panel: unknown column op {other:?}"
+                    )))
+                }
+            };
+        }
+        Ok(panel_op_cost::<S>(self.profile(), op, self.tile(), cols.len()))
+    }
+}
+
+/// Flop count of an RHS-panel op: `k` columns through one batched kernel
+/// do exactly the arithmetic of `k` single-column calls (bit-identity is
+/// the contract — batching changes cost, never values).
+pub fn panel_op_flops(op: &str, t: u64, k: u64) -> u64 {
+    k * op_flops(op, t)
+}
+
+/// Per-operand traffic of an RHS-panel op: the `tile x tile` operand is
+/// touched **once** for all `k` columns (this is the amortization batching
+/// buys), while every vector-length operand scales by `k`.  Derived from
+/// [`op_operand_elems`], the single-column source of truth.
+pub fn panel_operand_elems(op: &str, t: usize, k: usize) -> (Vec<usize>, usize) {
+    let t2 = t * t;
+    let (ins, out) = op_operand_elems(op, t);
+    let ins = ins.into_iter().map(|e| if e == t2 { e } else { e * k }).collect();
+    (ins, if out == t2 { out } else { out * k })
+}
+
+/// Cost of one RHS-panel op under a profile: `k` columns' flops, the tile
+/// streamed once, the vectors streamed `k` times, **one** launch.  By
+/// construction `panel_op_cost(op, t, k) <= k * tile_op_cost(op, t)` —
+/// strictly for `k > 1` whenever the profile charges launches or the op
+/// has a tile operand to amortize (both engines do).
+pub fn panel_op_cost<S: Scalar>(
+    profile: &super::costmodel::ComputeProfile,
+    op: &str,
+    tile: usize,
+    k: usize,
+) -> OpCost {
+    let (ins, out) = panel_operand_elems(op, tile, k);
+    let touched = (ins.iter().sum::<usize>() + out) * S::BYTES;
+    profile.op_cost::<S>(OpClass::of(op), panel_op_flops(op, tile as u64, k as u64), touched, touched)
 }
 
 /// Every tile op the engines implement — used by warmup and tests.
@@ -322,6 +408,51 @@ mod tests {
     #[should_panic(expected = "unknown op")]
     fn unknown_op_panics() {
         op_flops("nope", 1);
+    }
+
+    #[test]
+    fn panel_decomposition_amortizes_the_tile_only() {
+        let (t, k) = (32usize, 5usize);
+        for op in ["trsv_lu", "trsv_l", "trsv_u", "trsv_lt", "gemv_update", "gemv_acc"] {
+            assert_eq!(panel_op_flops(op, t as u64, k as u64), k as u64 * op_flops(op, t as u64));
+            let (ins, out) = panel_operand_elems(op, t, k);
+            let (sins, sout) = op_operand_elems(op, t);
+            // Tile operands appear once, vector operands k times.
+            for (p, s) in ins.iter().zip(&sins) {
+                assert_eq!(*p, if *s == t * t { *s } else { s * k }, "{op}");
+            }
+            assert_eq!(out, if sout == t * t { sout } else { sout * k }, "{op}");
+            assert!(ins.iter().sum::<usize>() + out < k * (sins.iter().sum::<usize>() + sout));
+        }
+        // k = 1 degenerates to the single-column decomposition exactly.
+        for op in ["trsv_lu", "gemv_update"] {
+            assert_eq!(panel_operand_elems(op, t, 1), op_operand_elems(op, t));
+        }
+    }
+
+    #[test]
+    fn panel_cost_at_most_k_times_single_and_strict_for_k_gt_1() {
+        for profile in [
+            crate::accel::ComputeProfile::q6600_atlas(),
+            crate::accel::ComputeProfile::gtx280_cublas(),
+        ] {
+            for op in ["trsv_lu", "trsv_u", "gemv_update", "gemv_acc"] {
+                let single = tile_op_cost::<f32>(&profile, op, 256).total();
+                for k in [1usize, 2, 3, 8] {
+                    let panel = panel_op_cost::<f32>(&profile, op, 256, k).total();
+                    assert!(
+                        panel <= k as f64 * single * (1.0 + 1e-12),
+                        "{op} k={k}: {panel} vs {}",
+                        k as f64 * single
+                    );
+                    if k > 1 {
+                        assert!(panel < k as f64 * single, "{op} k={k} must amortize");
+                    }
+                }
+                // k = 1 is priced exactly like the single-column op.
+                assert_eq!(panel_op_cost::<f32>(&profile, op, 256, 1).total(), single);
+            }
+        }
     }
 
     #[test]

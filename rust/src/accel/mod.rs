@@ -14,7 +14,7 @@ pub mod xla_engine;
 
 pub use costmodel::{ComputeProfile, OpClass, OpCost};
 pub use cpu_engine::CpuEngine;
-pub use engine::{op_flops, Engine, TILE_OPS};
+pub use engine::{op_flops, panel_op_cost, panel_op_flops, panel_operand_elems, Engine, TILE_OPS};
 pub use residency::{BufKey, TileCache, Traffic, DEFAULT_DEVICE_MEM};
 pub use xla_engine::XlaEngine;
 

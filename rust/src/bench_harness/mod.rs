@@ -17,10 +17,12 @@ pub mod model;
 
 pub use figures::{fig3_series, fig4_series, FigurePoint, FigureSeries};
 pub use model::{
-    chol_makespan_prefetch, chol_makespan_resident, iter_makespan_fused, iter_makespan_prefetch,
-    lu_makespan_lookahead, lu_makespan_prefetch, lu_makespan_resident, sparse_cg_split_makespan,
-    sparse_iter_makespan_fused, sparse_iter_makespan_prefetch, sparse_pipecg_overlap_makespan,
-    summa_makespan, summa_makespan_prefetch, summa_makespan_resident, ModelParams,
+    chol_makespan_prefetch, chol_makespan_resident, chol_solve_makespan_batched,
+    cg_makespan_batched, iter_makespan_fused, iter_makespan_prefetch, lu_makespan_lookahead,
+    lu_makespan_prefetch, lu_makespan_resident, lu_solve_makespan_batched,
+    sparse_cg_split_makespan, sparse_iter_makespan_fused, sparse_iter_makespan_prefetch,
+    sparse_pipecg_overlap_makespan, summa_makespan, summa_makespan_prefetch,
+    summa_makespan_resident, trsm_makespan, ModelParams,
 };
 
 /// The paper's rank sweep (Figures 3 and 4).

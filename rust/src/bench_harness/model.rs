@@ -128,6 +128,14 @@ impl ModelParams {
         self.xfer::<S>(extra.min((clamp_calls * my_tiles * t2) as f64) as usize)
     }
 
+    /// One RHS-panel tile op ([`crate::accel::panel_op_cost`]): k columns
+    /// through one launch, the shared tile operand counted once.  At
+    /// `k = 1` this prices exactly like [`ModelParams::op`] — the identity
+    /// that pins the batched twins to their single-RHS baselines.
+    fn panel_op<S: Scalar>(&self, name: &str, k: usize) -> f64 {
+        crate::accel::panel_op_cost::<S>(&self.engine, name, self.tile, k).total()
+    }
+
     /// One fused BLAS-1 kernel over a rank's whole local vector, mirroring
     /// [`crate::accel::Engine::blas1_fused_cost`]: one launch, `streams`
     /// vector-wide memory streams, dispatched to whichever arm is cheaper
@@ -435,6 +443,20 @@ fn chol_makespan_impl<S: Scalar>(
     resident: bool,
     combine: fn(f64, f64) -> f64,
 ) -> f64 {
+    chol_factor_impl::<S>(n, p, resident, combine)
+        + trsv_makespan::<S>(n, p) * 2.0
+        + chol_transpose_traffic::<S>(n, p)
+}
+
+/// The Cholesky factorisation loop alone (no solve phase) — shared between
+/// the per-vector flows and the batched-RHS twin, so `k = 1` batched prices
+/// bit-identically to [`chol_makespan`].
+fn chol_factor_impl<S: Scalar>(
+    n: usize,
+    p: &ModelParams,
+    resident: bool,
+    combine: fn(f64, f64) -> f64,
+) -> f64 {
     let t = p.tile;
     let kt = ceil_div(n, t);
     let (pr, pc) = (p.shape.pr, p.shape.pc);
@@ -467,11 +489,16 @@ fn chol_makespan_impl<S: Scalar>(
             total += my_tiles as f64 * p.op::<S>("gemm_nt_update");
         }
     }
-    // Forward solve + transpose redistribution + backward solve.
-    total += trsv_makespan::<S>(n, p) * 2.0;
-    let my_tiles = ceil_div(kt, p.shape.pr) * ceil_div(kt, p.shape.pc);
-    total += my_tiles as f64 * p.msg::<S>(t2); // ptranspose traffic per rank
     total
+}
+
+/// The `ptranspose` redistribution between the two Cholesky substitutions:
+/// every owned tile crosses the network once (per-rank traffic).
+fn chol_transpose_traffic<S: Scalar>(n: usize, p: &ModelParams) -> f64 {
+    let t = p.tile;
+    let kt = ceil_div(n, t);
+    let my_tiles = ceil_div(kt, p.shape.pr) * ceil_div(kt, p.shape.pc);
+    my_tiles as f64 * p.msg::<S>(t * t)
 }
 
 /// Residency twin of [`chol_makespan`] (what `pchol_factor` charges with
@@ -507,6 +534,88 @@ pub fn trsv_makespan<S: Scalar>(n: usize, p: &ModelParams) -> f64 {
         total += my_rows as f64 * (p.tree::<S>(pc, t * t) + p.op::<S>("gemv_update"));
     }
     total
+}
+
+/// Modelled makespan of one RHS-panel triangular substitution
+/// ([`crate::solvers::ptrsm`] with `k` right-hand sides): per panel step
+/// one panel trsv (k columns, one launch, the diagonal tile counted once),
+/// one world broadcast of the `k·t` solved panel chunk, and per owned
+/// column tile **one** broadcast (amortized over all k columns — the term
+/// a looped [`trsv_makespan`] pays k times) plus one panel `gemv_update`.
+///
+/// `trsm_makespan(n, 1, p) == trsv_makespan(n, p)` exactly (same terms,
+/// and the panel ops price a one-column panel identically to the single
+/// ops); for `k > 1` it is strictly below `k ×` the single-vector cost —
+/// the tile broadcasts, launches and message latencies are paid once per
+/// step, not once per vector.
+pub fn trsm_makespan<S: Scalar>(n: usize, k: usize, p: &ModelParams) -> f64 {
+    let t = p.tile;
+    let kt = ceil_div(n, t);
+    let (pr, pc) = (p.shape.pr, p.shape.pc);
+    let mut total = 0.0;
+    for s in 0..kt {
+        let others = kt - s - 1;
+        // diag panel trsv + world bcast of the k-column chunk.
+        total += p.panel_op::<S>("trsv_lu", k);
+        total += p.tree::<S>(pr * pc, k * t);
+        // column tiles broadcast once along rows + panel gemv per rank.
+        let my_rows = ceil_div(others, pr);
+        total += my_rows as f64 * (p.tree::<S>(pc, t * t) + p.panel_op::<S>("gemv_update", k));
+    }
+    total
+}
+
+/// Modelled makespan of a batched LU solve
+/// ([`crate::solvers::plu_solve_panel`]): the factorisation is paid
+/// **once** for the whole batch, then two RHS-panel substitutions.
+/// `k = 1` reproduces [`lu_makespan`] bit for bit; `k > 1` is strictly
+/// below `k ×` single (the factorisation amortizes outright and the
+/// substitutions batch).
+pub fn lu_solve_makespan_batched<S: Scalar>(n: usize, k: usize, p: &ModelParams) -> f64 {
+    let mut total = 0.0;
+    for (panel_cpu, panel_comm, pre, update, update_pcie) in lu_step_parts::<S>(n, p, false) {
+        total += panel_cpu + panel_comm + pre + update + update_pcie;
+    }
+    total + trsm_makespan::<S>(n, k, p) * 2.0
+}
+
+/// Modelled makespan of a batched Cholesky solve
+/// ([`crate::solvers::pchol_solve_panel`]): one factorisation, **one**
+/// transpose redistribution (the looped flow pays it per vector), two
+/// RHS-panel substitutions.  `k = 1` reproduces [`chol_makespan`] bit for
+/// bit.
+pub fn chol_solve_makespan_batched<S: Scalar>(n: usize, k: usize, p: &ModelParams) -> f64 {
+    chol_factor_impl::<S>(n, p, false, |a, b| a + b)
+        + trsm_makespan::<S>(n, k, p) * 2.0
+        + chol_transpose_traffic::<S>(n, p)
+}
+
+/// Modelled makespan of `iters` blocked-CG iterations over `k` right-hand
+/// sides ([`crate::solvers::block_cg`]): the matvec's allgather/allreduce
+/// carry all k columns in one collective (one tree latency for the batch),
+/// each owned `A` tile feeds one panel `gemv_acc` (streamed once, one
+/// launch), the two dots ride a single k-lane allreduce, and the three
+/// vector recurrences run one pass over `k·t`-wide blocks.  `k = 1`
+/// reproduces the [`iter_makespan`] CG arm bit for bit; `k > 1` is
+/// strictly below `k ×` single (shared tiles, launches and latencies).
+pub fn cg_makespan_batched<S: Scalar>(n: usize, k: usize, iters: usize, p: &ModelParams) -> f64 {
+    let t = p.tile;
+    let kt = ceil_div(n, t);
+    let (pr, pc) = (p.shape.pr, p.shape.pc);
+    let my_rows = ceil_div(kt, pr);
+    let my_cols = ceil_div(kt, pc);
+    let vec_elems = my_rows * t;
+
+    // Shared matvec: one k-column allgather, one panel gemv_acc per owned
+    // tile, one k-column allreduce.
+    let matvec = p.ring::<S>(pr, k * vec_elems)
+        + (my_rows * my_cols) as f64 * p.panel_op::<S>("gemv_acc", k)
+        + 2.0 * p.tree::<S>(pc, k * vec_elems);
+    // k-lane dot: per-column local partials (unchanged), one k-lane tree.
+    let dot = k as f64 * (my_rows as f64 * p.blas1::<S>(t)) + 2.0 * p.tree::<S>(pr, k);
+    // Column-batched vector op: one pass over the k-wide block row.
+    let vop = my_rows as f64 * p.blas1::<S>(k * t);
+    iters as f64 * (matvec + 2.0 * dot + 3.0 * vop)
 }
 
 /// Modelled makespan of `iters` iterations of an iterative method.
@@ -1125,6 +1234,68 @@ mod tests {
             let c = iter_makespan_fused::<f32>(IterMethod::Cg, n, 100, 30, &p);
             assert!(c < s, "P={ranks}: {c} vs {s}");
         }
+    }
+
+    #[test]
+    fn batched_twins_at_most_k_times_single_and_exact_at_k_1() {
+        // Acceptance shape of BENCH_serving.json: on every modeled
+        // configuration, batched <= k x single-RHS; strict for k > 1
+        // (shared factorization / tiles / launches / latencies); and a
+        // one-column batch prices bit-identically to the single-RHS model.
+        let le = |b: f64, s: f64| b <= s * (1.0 + 1e-9);
+        let n = 30_000usize;
+        for ranks in [1usize, 2, 4, 8, 16] {
+            for gpu in [false, true] {
+                let p = params(ranks, gpu);
+                // k = 1 degenerate batch: exact reproduction.
+                assert_eq!(trsm_makespan::<f32>(n, 1, &p), trsv_makespan::<f32>(n, &p));
+                assert_eq!(lu_solve_makespan_batched::<f32>(n, 1, &p), lu_makespan::<f32>(n, &p));
+                assert_eq!(
+                    chol_solve_makespan_batched::<f32>(n, 1, &p),
+                    chol_makespan::<f32>(n, &p)
+                );
+                assert_eq!(
+                    cg_makespan_batched::<f32>(n, 1, 100, &p),
+                    iter_makespan::<f32>(IterMethod::Cg, n, 100, 30, &p)
+                );
+                for k in [2usize, 4, 8, 16] {
+                    let kf = k as f64;
+                    let (tb, ts) =
+                        (trsm_makespan::<f32>(n, k, &p), trsv_makespan::<f32>(n, &p));
+                    assert!(le(tb, kf * ts), "trsm P={ranks} gpu={gpu} k={k}");
+                    assert!(tb < kf * ts, "trsm must strictly amortize at k={k}");
+                    let (lb, ls) =
+                        (lu_solve_makespan_batched::<f32>(n, k, &p), lu_makespan::<f32>(n, &p));
+                    assert!(lb < kf * ls, "LU batch must strictly win P={ranks} k={k}");
+                    let (cb, cs) = (
+                        chol_solve_makespan_batched::<f32>(n, k, &p),
+                        chol_makespan::<f32>(n, &p),
+                    );
+                    assert!(cb < kf * cs, "Chol batch must strictly win P={ranks} k={k}");
+                    let (gb, gs) = (
+                        cg_makespan_batched::<f32>(n, k, 100, &p),
+                        iter_makespan::<f32>(IterMethod::Cg, n, 100, 30, &p),
+                    );
+                    assert!(gb < kf * gs, "CG batch must strictly win P={ranks} k={k}");
+                    // Direct methods amortize the whole factorisation: the
+                    // batch must cost far less than k solves, approaching
+                    // 1x as the solve phase vanishes next to the factor.
+                    assert!(lb < 1.5 * ls, "k solves ride one LU factor: {lb} vs {ls}");
+                }
+            }
+        }
+        // The paper-scale acceptance point: dense solves at n = 60000,
+        // f32, CUDA arm, 16 ranks — batching must pay there.
+        let p = params(16, true);
+        let k = 8usize;
+        assert!(
+            lu_solve_makespan_batched::<f32>(60_000, k, &p)
+                < k as f64 * lu_makespan::<f32>(60_000, &p)
+        );
+        assert!(
+            cg_makespan_batched::<f32>(60_000, k, 100, &p)
+                < k as f64 * iter_makespan::<f32>(IterMethod::Cg, 60_000, 100, 30, &p)
+        );
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub struct Args {
 /// Option names that take a value (anything else after `--` is a flag).
 const VALUE_OPTS: &[&str] = &[
     "ranks", "tile", "engine", "method", "workload", "n", "dtype", "tol", "max-iter",
-    "restart", "config", "net", "iters", "out", "device-mem",
+    "restart", "config", "net", "iters", "out", "device-mem", "rhs-batch", "requests",
 ];
 
 impl Args {

@@ -89,7 +89,16 @@ pub struct SolveReport {
     /// Max abs error vs the workload's known solution.
     pub max_err: f64,
     /// (iterations, final relative residual, converged) for iterative runs.
+    /// For a batch this is the worst column: max iterations, max residual,
+    /// converged only if every column converged.
     pub iter_stats: Option<(usize, f64, bool)>,
+    /// Right-hand sides solved together (1 for the single-RHS entry point).
+    pub nrhs: usize,
+    /// Per-request attribution: engine-priced virtual seconds summed over
+    /// ranks, `nrhs + 1` buckets — one per right-hand side plus a final
+    /// *shared* bucket (factorization, panel kernels, batched collectives).
+    /// Empty when attribution was not enabled (single-RHS solves).
+    pub attribution: Vec<f64>,
 }
 
 impl SolveReport {
@@ -104,7 +113,38 @@ impl SolveReport {
         max_err: f64,
         iter_stats: Option<(usize, f64, bool)>,
     ) -> Self {
-        SolveReport { method, workload, n, ranks, engine, per_rank, max_err, iter_stats }
+        SolveReport {
+            method,
+            workload,
+            n,
+            ranks,
+            engine,
+            per_rank,
+            max_err,
+            iter_stats,
+            nrhs: 1,
+            attribution: Vec::new(),
+        }
+    }
+
+    /// Attach batch metadata (builder-style, so single-RHS call sites stay
+    /// untouched): the RHS count and the per-request attribution buckets.
+    pub(crate) fn with_batch(mut self, nrhs: usize, attribution: Vec<f64>) -> Self {
+        self.nrhs = nrhs;
+        self.attribution = attribution;
+        self
+    }
+
+    /// Per-request virtual seconds: each request's own bucket plus an even
+    /// share of the batch's shared bucket (the honest way to price an
+    /// amortized factorization back to its beneficiaries).  Empty when
+    /// attribution was off.
+    pub fn per_request_secs(&self) -> Vec<f64> {
+        if self.attribution.len() != self.nrhs + 1 {
+            return Vec::new();
+        }
+        let share = self.attribution[self.nrhs] / self.nrhs as f64;
+        (0..self.nrhs).map(|j| self.attribution[j] + share).collect()
     }
 
     /// Virtual-time makespan: max over rank clocks — what a real cluster's
@@ -261,5 +301,27 @@ mod tests {
         assert!(r.summary().contains("pcie saved"));
         assert!(r.summary().contains("pcie hidden"));
         assert!(r.summary().contains("prefetch hits"));
+    }
+
+    #[test]
+    fn per_request_secs_shares_the_common_bucket_evenly() {
+        let r = SolveReport::new(
+            "LU",
+            Workload::Spd,
+            64,
+            2,
+            EngineKind::CpuSerial,
+            vec![mk(1.0, 0.8, 0.1)],
+            1e-12,
+            None,
+        );
+        assert_eq!(r.nrhs, 1);
+        assert!(r.attribution.is_empty() && r.per_request_secs().is_empty());
+        let r = r.with_batch(2, vec![0.5, 0.3, 4.0]);
+        let per = r.per_request_secs();
+        assert_eq!(per.len(), 2);
+        assert!((per[0] - 2.5).abs() < 1e-12 && (per[1] - 2.3).abs() < 1e-12);
+        // The split is conservative: buckets sum to the attributed total.
+        assert!((per.iter().sum::<f64>() - 4.8).abs() < 1e-12);
     }
 }

@@ -15,12 +15,13 @@ use std::sync::Arc;
 
 use crate::accel::{make_engine, Engine, EngineKind};
 use crate::comm::{NetworkModel, World};
-use crate::dist::{gather_vector, Descriptor, DistMatrix, DistVector};
+use crate::dist::{gather_vector, Descriptor, DistMatrix, DistMultiVector, DistVector};
 use crate::mesh::{Mesh, MeshShape};
 use crate::pblas::Ctx;
 use crate::runtime::Runtime;
 use crate::solvers::{
-    bicg, bicgstab, cg, gmres, pchol_solve, pipecg, plu_solve, IterConfig, IterMethod,
+    bicg, bicgstab, block_bicgstab, block_cg, cg, gmres, pchol_solve, pchol_solve_panel,
+    pipecg, plu_solve, plu_solve_panel, IterConfig, IterMethod, IterStats,
 };
 use crate::workloads::Workload;
 use crate::{Error, Result, Scalar};
@@ -98,6 +99,17 @@ impl Default for ClusterConfig {
             prefetch: true,
             iter: IterConfig::default(),
         }
+    }
+}
+
+impl ClusterConfig {
+    /// Small-instance config for tests and demos: `ranks` ranks on
+    /// `tile`-sized tiles, everything else default.  Prefer this (or at
+    /// least `..Default::default()`) over spelling out full literals in
+    /// tests — a new config field then inherits its default instead of
+    /// breaking every literal in the tree (`DESIGN.md` §14).
+    pub fn small(ranks: usize, tile: usize) -> Self {
+        ClusterConfig { ranks, tile, ..Default::default() }
     }
 }
 
@@ -233,6 +245,176 @@ impl Cluster {
             iter_stats,
         ))
     }
+
+    /// Solve `A X = B` for a whole batch of `k = coeffs.len()` right-hand
+    /// sides sharing one operator: `b_j = coeffs[j] · b` (so the known
+    /// answer is `x_j = coeffs[j] · x_true`) with per-request tolerance
+    /// `tols[j]`.  Direct methods factor **once** and run the RHS-panel
+    /// substitutions ([`plu_solve_panel`]/[`pchol_solve_panel`]); CG and
+    /// BiCGSTAB run blocked (shared matvec sweeps, k-lane reductions);
+    /// the remaining iterative methods loop single-RHS solves under the
+    /// same attribution accounting.  The report carries per-request
+    /// attribution buckets ([`SolveReport::attribution`]) and worst-column
+    /// `iter_stats`.
+    pub fn solve_batch<S: Scalar>(
+        &self,
+        workload: Workload,
+        n: usize,
+        method: Method,
+        coeffs: &[f64],
+        tols: &[f64],
+    ) -> Result<SolveReport> {
+        let k = coeffs.len();
+        if k == 0 || tols.len() != k {
+            return Err(Error::config(format!(
+                "solve_batch needs matching non-empty coeffs/tols, got {}/{}",
+                k,
+                tols.len()
+            )));
+        }
+        if matches!(
+            method,
+            Method::Cholesky | Method::Iterative(IterMethod::Cg | IterMethod::PipeCg)
+        ) && !workload.is_spd()
+        {
+            return Err(Error::config(format!(
+                "{} requires an SPD workload, got {workload:?}",
+                method.name()
+            )));
+        }
+        let cfg = &self.cfg;
+        let shape = MeshShape::near_square(cfg.ranks);
+        let engine: Arc<dyn Engine<S>> =
+            make_engine(cfg.engine, cfg.tile, self.runtime.as_ref())?;
+        let iter_cfg = cfg.iter;
+        let tile = cfg.tile;
+        let (residency, device_mem, prefetch) = (cfg.residency, cfg.device_mem, cfg.prefetch);
+        let coeffs_owned: Vec<f64> = coeffs.to_vec();
+        let tols_owned: Vec<f64> = tols.to_vec();
+
+        type BatchOut<S> =
+            (RankMetrics, Option<Vec<Vec<S>>>, Option<Vec<(usize, f64, bool)>>, Vec<f64>);
+        let results = World::run::<S, Result<BatchOut<S>>, _>(cfg.ranks, cfg.net, move |comm| {
+            let mesh = Mesh::new(&comm, shape);
+            let ctx = if residency {
+                Ctx::with_device_mem(&mesh, engine.clone(), device_mem).with_prefetch(prefetch)
+            } else {
+                Ctx::streaming(&mesh, engine.clone())
+            };
+            let desc = Descriptor::new(n, n, tile, shape);
+            let elem = workload.elem::<S>(n);
+            let rhs = workload.rhs::<S>(n);
+            let a0 = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), elem);
+            let scales: Vec<S> =
+                coeffs_owned.iter().map(|&c| S::from_f64(c).unwrap()).collect();
+            let b = DistMultiVector::from_fn(desc, mesh.row(), mesh.col(), k, |i, j| {
+                scales[j] * rhs(i)
+            });
+            ctx.enable_attribution(k);
+            comm.clock().reset();
+            let wall = crate::util::Stopwatch::start();
+
+            let (x, col_stats): (DistMultiVector<S>, Option<Vec<IterStats<S>>>) = match method {
+                Method::Lu => {
+                    let mut a = a0;
+                    (plu_solve_panel(&ctx, &mut a, &b)?, None)
+                }
+                Method::Cholesky => {
+                    let mut a = a0;
+                    (pchol_solve_panel(&ctx, &mut a, &b)?, None)
+                }
+                Method::Iterative(IterMethod::Cg) => {
+                    let (x, st) = block_cg(&ctx, &a0, &b, &iter_cfg, &tols_owned)?;
+                    (x, Some(st))
+                }
+                Method::Iterative(IterMethod::Bicgstab) => {
+                    let (x, st) = block_bicgstab(&ctx, &a0, &b, &iter_cfg, &tols_owned)?;
+                    (x, Some(st))
+                }
+                Method::Iterative(m) => {
+                    // No blocked variant: loop single-RHS solves, tagging
+                    // each for attribution (factor-free methods amortize
+                    // nothing here, but the serving path stays uniform).
+                    let mut cols = Vec::with_capacity(k);
+                    let mut st = Vec::with_capacity(k);
+                    for j in 0..k {
+                        let cfg_j = IterConfig { tol: tols_owned[j], ..iter_cfg };
+                        ctx.set_tenant(Some(j));
+                        let out = match m {
+                            IterMethod::PipeCg => pipecg(&ctx, &a0, b.col(j), &cfg_j),
+                            IterMethod::Bicg => bicg(&ctx, &a0, b.col(j), &cfg_j),
+                            IterMethod::Gmres => gmres(&ctx, &a0, b.col(j), &cfg_j),
+                            IterMethod::Cg | IterMethod::Bicgstab => unreachable!(),
+                        };
+                        ctx.set_tenant(None);
+                        let (x, s) = out?;
+                        cols.push(x);
+                        st.push(s);
+                    }
+                    (DistMultiVector::from_cols(cols), Some(st))
+                }
+            };
+            let metrics = RankMetrics::capture(&comm, wall.secs());
+            let mut gathered: Option<Vec<Vec<S>>> = None;
+            for j in 0..k {
+                if let Some(col) = gather_vector(&mesh, x.col(j)) {
+                    gathered.get_or_insert_with(Vec::new).push(col);
+                }
+            }
+            let col_stats = col_stats.map(|st| {
+                st.iter()
+                    .map(|s| {
+                        (s.iterations, s.rel_residual.to_f64().unwrap_or(f64::NAN), s.converged)
+                    })
+                    .collect()
+            });
+            Ok((metrics, gathered, col_stats, ctx.attribution()))
+        });
+
+        let mut per_rank = Vec::with_capacity(cfg.ranks);
+        let mut solution: Option<Vec<Vec<S>>> = None;
+        let mut col_stats: Option<Vec<(usize, f64, bool)>> = None;
+        let mut attribution = vec![0.0f64; k + 1];
+        for r in results {
+            let (m, sol, st, attr) = r?;
+            per_rank.push(m);
+            if sol.is_some() {
+                solution = sol;
+            }
+            if st.is_some() {
+                col_stats = st;
+            }
+            for (acc, v) in attribution.iter_mut().zip(attr) {
+                *acc += v;
+            }
+        }
+        let solution = solution.expect("rank 0 gathers the solution");
+        let xt = workload.x_true::<S>(n);
+        let mut max_err = 0.0f64;
+        for (j, col) in solution.iter().enumerate() {
+            for (i, &xi) in col.iter().enumerate() {
+                let want = coeffs[j] * xt(i).to_f64().unwrap();
+                max_err = max_err.max((xi.to_f64().unwrap() - want).abs());
+            }
+        }
+        // Worst column: the batch is done when its slowest member is.
+        let iter_stats = col_stats.map(|st| {
+            st.iter().fold((0usize, 0.0f64, true), |(it, res, conv), &(i, r, c)| {
+                (it.max(i), if r.is_nan() || r > res { r } else { res }, conv && c)
+            })
+        });
+        Ok(SolveReport::new(
+            method.name(),
+            workload,
+            n,
+            cfg.ranks,
+            cfg.engine,
+            per_rank,
+            max_err,
+            iter_stats,
+        )
+        .with_batch(k, attribution))
+    }
 }
 
 #[cfg(test)]
@@ -249,24 +431,14 @@ mod tests {
 
     #[test]
     fn cholesky_rejects_nonsym_workload() {
-        let cluster = Cluster::new(ClusterConfig {
-            ranks: 1,
-            tile: 8,
-            ..Default::default()
-        })
-        .unwrap();
+        let cluster = Cluster::new(ClusterConfig::small(1, 8)).unwrap();
         let err = cluster.solve::<f64>(Workload::DiagDominant, 16, Method::Cholesky);
         assert!(err.is_err());
     }
 
     #[test]
     fn small_lu_solve_end_to_end() {
-        let cluster = Cluster::new(ClusterConfig {
-            ranks: 4,
-            tile: 8,
-            ..Default::default()
-        })
-        .unwrap();
+        let cluster = Cluster::new(ClusterConfig::small(4, 8)).unwrap();
         let report = cluster.solve::<f64>(Workload::DiagDominant, 32, Method::Lu).unwrap();
         assert!(report.max_err < 1e-8, "max_err {}", report.max_err);
         assert_eq!(report.per_rank.len(), 4);
@@ -274,12 +446,45 @@ mod tests {
     }
 
     #[test]
+    fn solve_batch_end_to_end_with_attribution() {
+        let cluster = Cluster::new(ClusterConfig::small(2, 8)).unwrap();
+        let report = cluster
+            .solve_batch::<f64>(Workload::DiagDominant, 24, Method::Lu, &[1.0, 1.5], &[1e-8; 2])
+            .unwrap();
+        assert!(report.max_err < 1e-8, "max_err {}", report.max_err);
+        assert_eq!(report.nrhs, 2);
+        // k per-request buckets + the shared bucket, all finite, some work
+        // actually attributed somewhere.
+        assert_eq!(report.attribution.len(), 3);
+        assert!(report.attribution.iter().all(|v| v.is_finite() && *v >= 0.0));
+        assert!(report.attribution.iter().sum::<f64>() > 0.0);
+        assert_eq!(report.per_request_secs().len(), 2);
+        // A batch of two must beat two separate solves on the clock.
+        let single = cluster.solve::<f64>(Workload::DiagDominant, 24, Method::Lu).unwrap();
+        assert!(
+            report.makespan() < 2.0 * single.makespan(),
+            "batched {} vs 2x single {}",
+            report.makespan(),
+            2.0 * single.makespan()
+        );
+    }
+
+    #[test]
+    fn solve_batch_rejects_mismatched_widths() {
+        let cluster = Cluster::new(ClusterConfig::small(1, 8)).unwrap();
+        assert!(cluster
+            .solve_batch::<f64>(Workload::DiagDominant, 16, Method::Lu, &[], &[])
+            .is_err());
+        assert!(cluster
+            .solve_batch::<f64>(Workload::DiagDominant, 16, Method::Lu, &[1.0, 2.0], &[1e-8])
+            .is_err());
+    }
+
+    #[test]
     fn small_iterative_solve_end_to_end() {
         let cluster = Cluster::new(ClusterConfig {
-            ranks: 2,
-            tile: 8,
             iter: IterConfig { tol: 1e-10, max_iter: 400, restart: 20 },
-            ..Default::default()
+            ..ClusterConfig::small(2, 8)
         })
         .unwrap();
         let report = cluster

@@ -36,11 +36,13 @@
 
 pub mod descriptor;
 pub mod matrix;
+pub mod multivector;
 pub mod redistribute;
 pub mod vector;
 
 pub use descriptor::{ceil_div, BlockDesc, Descriptor};
 pub use matrix::DistMatrix;
+pub use multivector::DistMultiVector;
 pub use redistribute::{
     gather_matrix, gather_vector, ptranspose, scatter_matrix, scatter_vector,
 };

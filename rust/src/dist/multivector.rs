@@ -1,0 +1,120 @@
+//! A panel of right-hand sides: `k` [`DistVector`]s sharing one layout.
+//!
+//! The multi-RHS paths (`ptrsm`, `plu_solve_panel`, block Krylov, the
+//! `serve` scheduler) carry their columns through shared broadcast /
+//! tile-sweep / reduction structure, but each column's *arithmetic* is
+//! exactly the single-vector kernels' — batching changes cost accounting,
+//! never values (the bit-identity contract `tests/multi_rhs.rs` pins).
+//! Keeping the columns as plain [`DistVector`]s makes that contract true
+//! by construction: any column can be handed to a single-RHS routine.
+
+use super::{Descriptor, DistVector};
+use crate::Scalar;
+
+/// `k` conformable distributed vectors (an `n x k` RHS panel).
+#[derive(Clone, Debug)]
+pub struct DistMultiVector<S> {
+    cols: Vec<DistVector<S>>,
+}
+
+impl<S: Scalar> DistMultiVector<S> {
+    /// Bundle existing columns; all descriptors must match.
+    pub fn from_cols(cols: Vec<DistVector<S>>) -> Self {
+        assert!(!cols.is_empty(), "a multivector needs at least one column");
+        let d = *cols[0].desc();
+        for c in &cols {
+            assert_eq!(c.desc(), &d, "multivector column descriptors differ");
+        }
+        DistMultiVector { cols }
+    }
+
+    /// `k` zero columns in the standard layout.
+    pub fn zeros(desc: Descriptor, prow: usize, pcol: usize, k: usize) -> Self {
+        Self::from_cols((0..k).map(|_| DistVector::zeros(desc, prow, pcol)).collect())
+    }
+
+    /// `k` columns, element `(i, j)` from `f`.
+    pub fn from_fn(
+        desc: Descriptor,
+        prow: usize,
+        pcol: usize,
+        k: usize,
+        f: impl Fn(usize, usize) -> S,
+    ) -> Self {
+        Self::from_cols(
+            (0..k).map(|j| DistVector::from_fn(desc, prow, pcol, |i| f(i, j))).collect(),
+        )
+    }
+
+    /// Number of columns.
+    pub fn ncols(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Shared layout descriptor.
+    pub fn desc(&self) -> &Descriptor {
+        self.cols[0].desc()
+    }
+
+    /// Column `j`.
+    pub fn col(&self, j: usize) -> &DistVector<S> {
+        &self.cols[j]
+    }
+
+    /// Column `j`, mutably.
+    pub fn col_mut(&mut self, j: usize) -> &mut DistVector<S> {
+        &mut self.cols[j]
+    }
+
+    /// All columns.
+    pub fn cols(&self) -> &[DistVector<S>] {
+        &self.cols
+    }
+
+    /// All columns, mutably (disjoint borrows per column).
+    pub fn cols_mut(&mut self) -> &mut [DistVector<S>] {
+        &mut self.cols
+    }
+
+    /// Deep copy (column-wise [`DistVector::clone_vec`]).
+    pub fn clone_panel(&self) -> Self {
+        DistMultiVector { cols: self.cols.iter().map(|c| c.clone_vec()).collect() }
+    }
+
+    /// Unbundle into the column vectors.
+    pub fn into_cols(self) -> Vec<DistVector<S>> {
+        self.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::MeshShape;
+
+    #[test]
+    fn construction_and_access() {
+        let desc = Descriptor::new(10, 10, 4, MeshShape::new(1, 1));
+        let mut m = DistMultiVector::<f64>::from_fn(desc, 0, 0, 3, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m.ncols(), 3);
+        assert_eq!(m.col(2).global_block(0)[1], 12.0);
+        m.col_mut(0).global_block_mut(0)[0] = -1.0;
+        let c = m.clone_panel();
+        assert_eq!(c.col(0).global_block(0)[0], -1.0);
+        assert_eq!(c.into_cols().len(), 3);
+        let z = DistMultiVector::<f64>::zeros(desc, 0, 0, 2);
+        assert_eq!(z.ncols(), 2);
+        assert!(z.col(1).global_block(1).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "descriptors differ")]
+    fn mismatched_columns_panic() {
+        let d1 = Descriptor::new(10, 10, 4, MeshShape::new(1, 1));
+        let d2 = Descriptor::new(12, 12, 4, MeshShape::new(1, 1));
+        DistMultiVector::from_cols(vec![
+            DistVector::<f64>::zeros(d1, 0, 0),
+            DistVector::<f64>::zeros(d2, 0, 0),
+        ]);
+    }
+}

@@ -39,7 +39,14 @@
 //!   row-block-distributed CSR format ([`sparse`], [`pblas::pspmv()`]) behind
 //!   the operator-generic [`pblas::LinOp`] trait, with 2-D/3-D Poisson
 //!   stencil generators in [`workloads::stencil`] — the regime ("very
-//!   large" systems) the paper motivates iterative methods with.
+//!   large" systems) the paper motivates iterative methods with;
+//! * **many right-hand sides amortize**: RHS-panel triangular solves
+//!   ([`solvers::ptrsm`]), blocked CG/BiCGSTAB with per-column convergence
+//!   masking ([`solvers::block_cg`]) — bit-identical per column to the
+//!   looped single-RHS solvers — and a solve-request [`serve`] scheduler
+//!   that batches compatible requests over one factorization or shared
+//!   matvec sweeps and reports throughput + latency percentiles — see
+//!   `DESIGN.md` §14 and `cargo bench --bench serving`.
 //!
 //! Mirroring the paper's Figure 2, the crate is layered:
 //!
@@ -68,6 +75,7 @@ pub mod linalg;
 pub mod mesh;
 pub mod pblas;
 pub mod runtime;
+pub mod serve;
 pub mod solvers;
 pub mod sparse;
 pub mod util;

@@ -4,6 +4,8 @@
 //! cuplss solve  --workload diagdom --method lu --n 512 --ranks 4 \
 //!               --engine atlas|cuda --tile 128|256 --dtype f32|f64 \
 //!               [--streaming] [--no-prefetch] [--device-mem BYTES]
+//! cuplss serve  [--requests 16] [--n 192] [--ranks 4] [--rhs-batch 8] \
+//!               [--no-batching]                       # solve-request scheduler
 //! cuplss fig3   [--dp] [--n 60000] [--iters 100]      # model-mode Figure 3
 //! cuplss fig4   [--dp] [--n 60000] [--cholesky]       # model-mode Figure 4
 //! cuplss calibrate [--method lu]                      # live vs model (E8)
@@ -79,6 +81,7 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
 fn run(args: &Args) -> Result<()> {
     match args.command() {
         Some("solve") => cmd_solve(args),
+        Some("serve") => cmd_serve(args),
         Some("fig3") => cmd_fig3(args),
         Some("fig4") => cmd_fig4(args),
         Some("calibrate") => cmd_calibrate(args),
@@ -88,7 +91,7 @@ fn run(args: &Args) -> Result<()> {
                 eprintln!("unknown command {cmd:?}\n");
             }
             eprintln!(
-                "usage: cuplss <solve|fig3|fig4|calibrate|info> [options]\n\
+                "usage: cuplss <solve|serve|fig3|fig4|calibrate|info> [options]\n\
                  see rust/src/main.rs header for the option list"
             );
             Ok(())
@@ -129,6 +132,49 @@ fn cmd_solve(args: &Args) -> Result<()> {
             fmt::secs(m.compute),
             fmt::secs(m.comm_wait),
             fmt::secs(m.transfer),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use cuplss::serve::{demo_stream, serve_cluster, ServeConfig};
+    let cfg = cluster_config(args)?;
+    let n_requests: usize = args.opt_or("requests", 16)?;
+    let base_n: usize = args.opt_or("n", 192)?;
+    let dtype = args.opt("dtype").unwrap_or("f64");
+    // --no-batching is the A/B arm: the identical stream, singleton
+    // batches, no amortization — same answers, worse timeline.
+    let scfg = ServeConfig {
+        rhs_batch: args.opt_or("rhs-batch", 8)?,
+        batching: !args.has_flag("no-batching"),
+    };
+    let cluster = Cluster::new(cfg)?;
+    let stream = demo_stream(n_requests, base_n);
+    let report = match dtype {
+        "f32" => serve_cluster::<f32>(&cluster, &stream, &scfg)?,
+        "f64" => serve_cluster::<f64>(&cluster, &stream, &scfg)?,
+        other => return Err(cuplss::Error::config(format!("dtype {other:?} (f32|f64)"))),
+    };
+    println!(
+        "serve: {} requests, rhs-batch {}, batching {}",
+        n_requests,
+        scfg.rhs_batch,
+        if scfg.batching { "on" } else { "off" }
+    );
+    println!("{}", report.summary());
+    for o in &report.outcomes {
+        println!(
+            "  req {:>3} {:<9} n={:<6} batch {:>2}  arrived {}  finished {}  \
+             latency {}  attributed {}",
+            o.id,
+            o.method,
+            o.n,
+            o.batch,
+            fmt::secs(o.arrival),
+            fmt::secs(o.finish),
+            fmt::secs(o.latency()),
+            fmt::secs(o.attributed_secs),
         );
     }
     Ok(())

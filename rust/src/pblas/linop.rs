@@ -21,11 +21,11 @@
 //! * `scale_sym` applies the two-sided scaling `A := diag(d) A diag(d)`
 //!   used by [`crate::solvers::JacobiPrecond`].
 
-use super::pgemv::{pgemv, pgemv_t};
+use super::pgemv::{pgemv, pgemv_cols, pgemv_t};
 use super::pspmv::{pspmv, pspmv_t};
 use super::{tags, Ctx};
 use crate::comm::Payload;
-use crate::dist::{Descriptor, DistMatrix, DistVector};
+use crate::dist::{Descriptor, DistMatrix, DistMultiVector, DistVector};
 use crate::sparse::DistCsrMatrix;
 use crate::Scalar;
 
@@ -40,6 +40,34 @@ pub trait LinOp<S: Scalar> {
 
     /// `y = A^T x` (the BiCG/QMR-style second sequence).
     fn apply_t(&self, ctx: &Ctx<'_, S>, x: &DistVector<S>) -> DistVector<S>;
+
+    /// `Y = A X` over an RHS panel with a per-column activity mask — the
+    /// shared matvec sweep of the block Krylov solvers.  Masked columns
+    /// return zero vectors.  The default loops [`LinOp::apply`] per active
+    /// column (tagging each for per-request attribution); dense operators
+    /// override with the tile-amortized [`pgemv_cols`].  Either path is
+    /// bit-identical, column for column, to the looped single-column apply.
+    fn apply_cols(
+        &self,
+        ctx: &Ctx<'_, S>,
+        x: &DistMultiVector<S>,
+        active: &[bool],
+    ) -> DistMultiVector<S> {
+        assert_eq!(x.ncols(), active.len(), "apply_cols mask width mismatch");
+        let cols = (0..x.ncols())
+            .map(|j| {
+                if active[j] {
+                    ctx.set_tenant(Some(j));
+                    let y = self.apply(ctx, x.col(j));
+                    ctx.set_tenant(None);
+                    y
+                } else {
+                    DistVector::zeros(*x.desc(), ctx.mesh.row(), ctx.mesh.col())
+                }
+            })
+            .collect();
+        DistMultiVector::from_cols(cols)
+    }
 
     /// The operator's diagonal as a standard distributed vector.  Entries
     /// at padded positions (global index ≥ `m`) are format-specific
@@ -61,6 +89,18 @@ impl<S: Scalar> LinOp<S> for DistMatrix<S> {
 
     fn apply_t(&self, ctx: &Ctx<'_, S>, x: &DistVector<S>) -> DistVector<S> {
         pgemv_t(ctx, self, x)
+    }
+
+    /// Dense override: one allgather / one tile sweep / one allreduce for
+    /// the whole panel ([`pgemv_cols`]) — each `A` tile streams once for
+    /// all k columns instead of once per column.
+    fn apply_cols(
+        &self,
+        ctx: &Ctx<'_, S>,
+        x: &DistMultiVector<S>,
+        active: &[bool],
+    ) -> DistMultiVector<S> {
+        pgemv_cols(ctx, self, x, active)
     }
 
     /// The diagonal tiles live at mesh coordinates `(ti mod pr, ti mod pc)`;

@@ -22,11 +22,13 @@ pub mod pvec;
 
 pub use linop::LinOp;
 pub use pgemm::pgemm_acc;
-pub use pgemv::{pgemv, pgemv_t};
+pub use pgemv::{pgemv, pgemv_cols, pgemv_t};
 pub use pspmv::{pspmv, pspmv_t};
 pub use pvec::{
-    paxpy, pcopy, pdot, pdot_partial, pfused_axpy_norm2, pfused_axpy_norm2_dot,
-    pfused_norm2_dot, pfused_norm2_dot_partial, pnorm2, pscal, pxpay,
+    paxpy, paxpy_cols, pcopy, pdot, pdot_cols, pdot_partial, pfused_axpy_norm2,
+    pfused_axpy_norm2_cols, pfused_axpy_norm2_dot, pfused_axpy_norm2_dot_cols,
+    pfused_norm2_dot, pfused_norm2_dot_cols, pfused_norm2_dot_partial, pnorm2, pnorm2_cols,
+    pscal, pxpay, pxpay_cols,
 };
 
 use std::cell::RefCell;
@@ -49,9 +51,13 @@ pub(crate) mod tags {
     pub const PIPECG: u32 = 700;
     /// Two-lane allreduces of the fused BLAS-1 kernels.
     pub const FUSED: u32 = 800;
+    /// k-lane allreduces of the column-batched (multi-RHS) pvec kernels.
+    pub const PBLOCK: u32 = 900;
     pub const LU: u32 = 1_000;
     pub const CHOL: u32 = 2_000;
     pub const TRSV: u32 = 3_000;
+    /// RHS-panel triangular solve (`ptrsm`) broadcasts.
+    pub const TRSM: u32 = 3_500;
     /// Diagonal-extraction broadcasts (offset by the tile row index).
     pub const DIAG: u32 = 5_000;
     /// Symmetric-scaling allgathers.
@@ -81,6 +87,14 @@ pub struct Ctx<'a, S: Scalar> {
     inflight: RefCell<HashMap<BufKey, (f64, f64)>>,
     /// Completion times of in-flight async D2H write-backs.
     flushes: RefCell<HashMap<BufKey, f64>>,
+    /// Per-request attribution buckets (the `serve` layer's multi-tenant
+    /// accounting, `DESIGN.md` §14): when enabled (`len == k + 1`), every
+    /// charge adds its engine-priced total to the current tenant's bucket,
+    /// or to the last (shared) bucket when no tenant is set.  Empty =
+    /// attribution off (the default — single-request solves pay nothing).
+    attribution: RefCell<Vec<f64>>,
+    /// The request index charges are currently attributed to.
+    tenant: std::cell::Cell<Option<usize>>,
 }
 
 impl<'a, S: Scalar> Ctx<'a, S> {
@@ -105,6 +119,8 @@ impl<'a, S: Scalar> Ctx<'a, S> {
             prefetch: true,
             inflight: RefCell::new(HashMap::new()),
             flushes: RefCell::new(HashMap::new()),
+            attribution: RefCell::new(Vec::new()),
+            tenant: std::cell::Cell::new(None),
         }
     }
 
@@ -117,6 +133,8 @@ impl<'a, S: Scalar> Ctx<'a, S> {
             prefetch: false,
             inflight: RefCell::new(HashMap::new()),
             flushes: RefCell::new(HashMap::new()),
+            attribution: RefCell::new(Vec::new()),
+            tenant: std::cell::Cell::new(None),
         }
     }
 
@@ -141,7 +159,45 @@ impl<'a, S: Scalar> Ctx<'a, S> {
     /// Charge an op cost to this rank's virtual clock, as-is (no
     /// residency adjustment — for ops whose operands can't stay resident).
     pub fn charge(&self, cost: OpCost) {
+        self.attribute(&cost);
         cost.charge(self.mesh.comm().clock());
+    }
+
+    /// Turn on per-request attribution with `k` tenants (the `serve`
+    /// layer's multi-tenant accounting): every subsequent charge adds its
+    /// engine-priced total to the current tenant's bucket, or to the
+    /// shared bucket when none is set.  Buckets reset on each call.
+    pub fn enable_attribution(&self, k: usize) {
+        *self.attribution.borrow_mut() = vec![0.0; k + 1];
+        self.tenant.set(None);
+    }
+
+    /// Route subsequent charges to request `j`'s bucket (`None` = shared).
+    pub fn set_tenant(&self, j: Option<usize>) {
+        self.tenant.set(j);
+    }
+
+    /// Snapshot of the attribution buckets: `k` per-request totals followed
+    /// by the shared bucket.  Empty when attribution is off.
+    pub fn attribution(&self) -> Vec<f64> {
+        self.attribution.borrow().clone()
+    }
+
+    /// Book `cost` against the current attribution bucket.  Attribution
+    /// records the **engine-priced** (paper-flow) total — a residency- and
+    /// prefetch-independent measure of each request's work, so tenant
+    /// shares don't wobble with cache state (`DESIGN.md` §14).
+    fn attribute(&self, cost: &OpCost) {
+        let mut a = self.attribution.borrow_mut();
+        if a.is_empty() {
+            return;
+        }
+        let shared = a.len() - 1;
+        let idx = match self.tenant.get() {
+            Some(j) if j < shared => j,
+            _ => shared,
+        };
+        a[idx] += cost.total();
     }
 
     /// The residency tracker, if the engine's profile actually streams
@@ -212,8 +268,9 @@ impl<'a, S: Scalar> Ctx<'a, S> {
     /// and the math executes identically in all three flows, so results
     /// are bit-identical (`tests/prefetch.rs`).
     pub fn charge_op(&self, cost: OpCost, ins: &[&[S]], out: Option<&[S]>) {
+        self.attribute(&cost);
         let Some(cache) = self.active_cache() else {
-            self.charge(cost);
+            cost.charge(self.mesh.comm().clock());
             return;
         };
         if !self.prefetch {
@@ -302,6 +359,7 @@ impl<'a, S: Scalar> Ctx<'a, S> {
     /// host ops — the host observed every read operand (ending its dirty
     /// period) and mutated every written one (dropping its device copy).
     pub fn charge_fused(&self, cost: OpCost, ins: &[&[S]], outs: &[&[S]], replaced: u64) {
+        self.attribute(&cost);
         if cost.transfer_secs == 0.0 {
             for buf in ins {
                 self.host_read(buf);
@@ -309,7 +367,7 @@ impl<'a, S: Scalar> Ctx<'a, S> {
             for buf in outs {
                 self.host_mut(buf);
             }
-            self.charge(cost);
+            cost.charge(self.mesh.comm().clock());
             self.mesh.comm().stats().add_launches_fused(replaced.saturating_sub(1));
             return;
         }
@@ -335,9 +393,95 @@ impl<'a, S: Scalar> Ctx<'a, S> {
             adjusted.charge(self.mesh.comm().clock());
             self.mesh.comm().stats().add_pcie_saved(traffic.saved() as u64);
         } else {
-            self.charge(cost);
+            cost.charge(self.mesh.comm().clock());
         }
         self.mesh.comm().stats().add_launches_fused(replaced.saturating_sub(1));
+    }
+
+    /// Charge an RHS-panel tile op (`trsm_panel`/`gemm_panel`): like
+    /// [`Ctx::charge_op`] but with **several** written operands — one per
+    /// panel column.  Residency prices each operand individually (the tile
+    /// streams once for the whole panel, each column block pays its own
+    /// dirty-period write-back); with the copy-engine timeline the
+    /// write-backs queue async exactly as the single-column op's would.
+    pub fn charge_panel_op(&self, cost: OpCost, ins: &[&[S]], outs: &[&[S]]) {
+        if outs.len() <= 1 {
+            self.charge_op(cost, ins, outs.first().copied());
+            return;
+        }
+        self.attribute(&cost);
+        let Some(cache) = self.active_cache() else {
+            cost.charge(self.mesh.comm().clock());
+            return;
+        };
+        let pcie = self.engine.profile().pcie_bw;
+        if !self.prefetch {
+            let in_keys: Vec<BufKey> = ins.iter().map(|b| BufKey::of(b)).collect();
+            let mut traffic = crate::accel::Traffic::default();
+            {
+                let mut c = cache.borrow_mut();
+                let t = c.access(&in_keys, None);
+                traffic.h2d_bytes += t.h2d_bytes;
+                traffic.full_bytes += t.full_bytes;
+                for o in outs {
+                    let t = c.access(&[], Some(BufKey::of(o)));
+                    traffic.d2h_bytes += t.d2h_bytes;
+                    traffic.full_bytes += t.full_bytes;
+                }
+            }
+            let adjusted = OpCost {
+                compute_secs: cost.compute_secs,
+                transfer_secs: traffic.streamed() as f64 / pcie,
+            };
+            adjusted.charge(self.mesh.comm().clock());
+            self.mesh.comm().stats().add_pcie_saved(traffic.saved() as u64);
+            return;
+        }
+        // Copy-engine accounting: reads as in `charge_op`, then one async
+        // write-back per panel column.
+        let clock = self.mesh.comm().clock();
+        let stats = self.mesh.comm().stats();
+        let (mut full, mut streamed) = (0usize, 0usize);
+        {
+            let mut c = cache.borrow_mut();
+            let mut inflight = self.inflight.borrow_mut();
+            for buf in ins {
+                let key = BufKey::of(buf);
+                full += key.bytes();
+                let h2d = c.touch_read(key);
+                if h2d == 0 {
+                    if let Some((ready, _dt)) = inflight.remove(&key) {
+                        c.unpin(key);
+                        streamed += key.bytes();
+                        stats.add_prefetch_hit();
+                        let remaining = (ready - clock.now()).max(0.0);
+                        clock.pcie_wait(ready);
+                        stats.revoke_pcie_hidden(remaining);
+                    }
+                } else {
+                    if let Some((_ready, dt)) = inflight.remove(&key) {
+                        c.unpin(key);
+                        stats.revoke_pcie_hidden(dt);
+                    }
+                    streamed += h2d;
+                    clock.advance_transfer(h2d as f64 / pcie);
+                }
+            }
+            clock.advance_compute(cost.compute_secs);
+            for buf in outs {
+                let key = BufKey::of(buf);
+                full += key.bytes();
+                let d2h = c.touch_write(key);
+                if d2h > 0 {
+                    streamed += d2h;
+                    let dt = d2h as f64 / pcie;
+                    let ready = clock.pcie_occupy(dt);
+                    stats.add_pcie_hidden(dt);
+                    self.flushes.borrow_mut().insert(key, ready);
+                }
+            }
+        }
+        stats.add_pcie_saved((full - streamed) as u64);
     }
 
     /// The host observes `buf`'s current value (message payload, gather,

@@ -19,7 +19,7 @@
 
 use super::{tags, Ctx};
 use crate::comm::ReduceOp;
-use crate::dist::DistVector;
+use crate::dist::{DistMultiVector, DistVector};
 use crate::{linalg, Scalar};
 
 /// Distributed inner product `x . y` (result replicated on every rank).
@@ -195,6 +195,250 @@ pub fn pxpay<S: Scalar>(ctx: &Ctx<'_, S>, beta: S, x: &DistVector<S>, y: &mut Di
     charge_fused_vec(ctx, &[x, &*y], &[&*y], 2, 2 * x.local_blocks() as u64);
 }
 
+// ---------------------------------------------------------------------------
+// Column-batched (multi-RHS) variants: the same per-column arithmetic as the
+// single-vector kernels above — bit for bit, same block loops, same partial
+// order — but the launches batch into **one** fused kernel over the active
+// panel and the reductions share **one** k-lane allreduce (one tree latency
+// for the whole batch instead of one per column; the lane-wise combine is
+// the scalar tree's, so lane values match the looped solvers' exactly).
+// Inactive columns (converged / masked) are skipped entirely: their lanes
+// reduce as zero and their blocks are neither read nor written.
+// ---------------------------------------------------------------------------
+
+/// Charge one fused kernel spanning the listed panel columns' blocks:
+/// `streams` operand streams *per column element*, `ncols` active columns.
+#[allow(clippy::too_many_arguments)]
+fn charge_fused_panel<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    reads: &[&DistVector<S>],
+    writes: &[&DistVector<S>],
+    streams: usize,
+    ncols: usize,
+    flops_per_elem: u64,
+    replaced: u64,
+) {
+    if ncols == 0 {
+        return;
+    }
+    let len = local_len(*reads.first().or(writes.first()).expect("an operand")) * ncols;
+    let cost = ctx.engine.blas1_fused_cost(len, streams, flops_per_elem * len as u64);
+    let in_blocks: Vec<&[S]> =
+        reads.iter().flat_map(|v| (0..v.local_blocks()).map(|l| v.block(l))).collect();
+    let out_blocks: Vec<&[S]> =
+        writes.iter().flat_map(|v| (0..v.local_blocks()).map(|l| v.block(l))).collect();
+    ctx.charge_fused(cost, &in_blocks, &out_blocks, replaced);
+}
+
+/// Per-column inner products `x_j . y_j` over an RHS panel, reduced in
+/// **one** k-lane allreduce.  Masked columns return zero.  The per-column
+/// compute is charged to that column's attribution tenant.
+pub fn pdot_cols<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    x: &DistMultiVector<S>,
+    y: &DistMultiVector<S>,
+    active: &[bool],
+) -> Vec<S> {
+    assert_eq!(x.ncols(), y.ncols(), "pdot_cols panel width mismatch");
+    assert_eq!(x.ncols(), active.len(), "pdot_cols mask width mismatch");
+    let mut partials = vec![S::zero(); x.ncols()];
+    for j in 0..x.ncols() {
+        if !active[j] {
+            continue;
+        }
+        ctx.set_tenant(Some(j));
+        partials[j] = pdot_partial(ctx, x.col(j), y.col(j));
+        ctx.set_tenant(None);
+    }
+    let col = ctx.mesh.col_comm();
+    col.allreduce_vec(tags::PBLOCK, partials, ReduceOp::Sum)
+}
+
+/// Per-column 2-norms of an RHS panel (all columns), one k-lane allreduce.
+pub fn pnorm2_cols<S: Scalar>(ctx: &Ctx<'_, S>, x: &DistMultiVector<S>) -> Vec<S> {
+    let all = vec![true; x.ncols()];
+    pdot_cols(ctx, x, x, &all).into_iter().map(|v| v.sqrt()).collect()
+}
+
+/// `y_j += alpha_j x_j` per active column (the per-column axpy of the
+/// looped solver, charged to that column's tenant).
+pub fn paxpy_cols<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    alpha: &[S],
+    x: &DistMultiVector<S>,
+    y: &mut DistMultiVector<S>,
+    active: &[bool],
+) {
+    assert_eq!(x.ncols(), y.ncols(), "paxpy_cols panel width mismatch");
+    assert_eq!(x.ncols(), alpha.len(), "paxpy_cols coefficient width mismatch");
+    for j in 0..x.ncols() {
+        if !active[j] {
+            continue;
+        }
+        ctx.set_tenant(Some(j));
+        paxpy(ctx, alpha[j], x.col(j), y.col_mut(j));
+        ctx.set_tenant(None);
+    }
+}
+
+/// Fused `y_j += alpha_j x_j; return ⟨y_j,y_j⟩` over an RHS panel: **one**
+/// launch for every active column and **one** k-lane allreduce — the
+/// batched twin of [`pfused_axpy_norm2`], lane values bit-identical to the
+/// looped single-column calls'.
+pub fn pfused_axpy_norm2_cols<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    alpha: &[S],
+    x: &DistMultiVector<S>,
+    y: &mut DistMultiVector<S>,
+    active: &[bool],
+) -> Vec<S> {
+    let k = x.ncols();
+    assert_eq!(k, y.ncols(), "pfused_axpy_norm2_cols panel width mismatch");
+    assert_eq!(k, alpha.len(), "pfused_axpy_norm2_cols coefficient width mismatch");
+    assert_eq!(k, active.len(), "pfused_axpy_norm2_cols mask width mismatch");
+    let mut partials = vec![S::zero(); k];
+    for j in 0..k {
+        if !active[j] {
+            continue;
+        }
+        let xj = x.col(j);
+        let yj = y.col_mut(j);
+        let mut p = S::zero();
+        for l in 0..xj.local_blocks() {
+            p += linalg::axpy_norm2(alpha[j], xj.block(l), yj.block_mut(l));
+        }
+        partials[j] = p;
+    }
+    let actives: Vec<usize> = (0..k).filter(|&j| active[j]).collect();
+    let blocks = x.col(0).local_blocks() as u64;
+    let mut reads: Vec<&DistVector<S>> = Vec::new();
+    let mut writes: Vec<&DistVector<S>> = Vec::new();
+    for &j in &actives {
+        reads.push(x.col(j));
+        reads.push(y.col(j));
+        writes.push(y.col(j));
+    }
+    charge_fused_panel(ctx, &reads, &writes, 3, actives.len(), 4, 2 * blocks * actives.len() as u64);
+    let col = ctx.mesh.col_comm();
+    col.allreduce_vec(tags::PBLOCK + 1, partials, ReduceOp::Sum)
+}
+
+/// Fused `y_j += alpha_j x_j; return (⟨y_j,y_j⟩, ⟨w_j,y_j⟩)` over an RHS
+/// panel with **one** 2k-lane allreduce — the batched twin of
+/// [`pfused_axpy_norm2_dot`] (block-BiCGSTAB's residual update, norm check
+/// and `rho` recurrence for the whole batch in one reduction).
+pub fn pfused_axpy_norm2_dot_cols<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    alpha: &[S],
+    x: &DistMultiVector<S>,
+    y: &mut DistMultiVector<S>,
+    w: &DistMultiVector<S>,
+    active: &[bool],
+) -> (Vec<S>, Vec<S>) {
+    let k = x.ncols();
+    assert_eq!(k, y.ncols(), "pfused_axpy_norm2_dot_cols panel width mismatch");
+    assert_eq!(k, w.ncols(), "pfused_axpy_norm2_dot_cols panel width mismatch");
+    let (mut n2, mut d) = (vec![S::zero(); k], vec![S::zero(); k]);
+    for j in 0..k {
+        if !active[j] {
+            continue;
+        }
+        let (xj, wj) = (x.col(j), w.col(j));
+        let yj = y.col_mut(j);
+        for l in 0..xj.local_blocks() {
+            linalg::axpy(alpha[j], xj.block(l), yj.block_mut(l));
+            n2[j] += linalg::dot(yj.block(l), yj.block(l));
+            d[j] += linalg::dot(wj.block(l), yj.block(l));
+        }
+    }
+    let actives: Vec<usize> = (0..k).filter(|&j| active[j]).collect();
+    let blocks = x.col(0).local_blocks() as u64;
+    let mut reads: Vec<&DistVector<S>> = Vec::new();
+    let mut writes: Vec<&DistVector<S>> = Vec::new();
+    for &j in &actives {
+        reads.push(x.col(j));
+        reads.push(w.col(j));
+        reads.push(y.col(j));
+        writes.push(y.col(j));
+    }
+    charge_fused_panel(ctx, &reads, &writes, 4, actives.len(), 6, 3 * blocks * actives.len() as u64);
+    let mut lanes = n2;
+    lanes.extend(d);
+    let col = ctx.mesh.col_comm();
+    let reduced = col.allreduce_vec(tags::PBLOCK + 2, lanes, ReduceOp::Sum);
+    (reduced[..k].to_vec(), reduced[k..].to_vec())
+}
+
+/// Fused `(⟨x_j,x_j⟩, ⟨x_j,y_j⟩)` per active column with one 2k-lane
+/// allreduce — the batched twin of [`pfused_norm2_dot`].
+pub fn pfused_norm2_dot_cols<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    x: &DistMultiVector<S>,
+    y: &DistMultiVector<S>,
+    active: &[bool],
+) -> (Vec<S>, Vec<S>) {
+    let k = x.ncols();
+    assert_eq!(k, y.ncols(), "pfused_norm2_dot_cols panel width mismatch");
+    let (mut n2, mut d) = (vec![S::zero(); k], vec![S::zero(); k]);
+    for j in 0..k {
+        if !active[j] {
+            continue;
+        }
+        for l in 0..x.col(j).local_blocks() {
+            let (bn2, bd) = linalg::norm2_dot(x.col(j).block(l), y.col(j).block(l));
+            n2[j] += bn2;
+            d[j] += bd;
+        }
+    }
+    let actives: Vec<usize> = (0..k).filter(|&j| active[j]).collect();
+    let blocks = x.col(0).local_blocks() as u64;
+    let mut reads: Vec<&DistVector<S>> = Vec::new();
+    for &j in &actives {
+        reads.push(x.col(j));
+        reads.push(y.col(j));
+    }
+    charge_fused_panel(ctx, &reads, &[], 2, actives.len(), 4, 2 * blocks * actives.len() as u64);
+    let mut lanes = n2;
+    lanes.extend(d);
+    let col = ctx.mesh.col_comm();
+    let reduced = col.allreduce_vec(tags::PBLOCK + 3, lanes, ReduceOp::Sum);
+    (reduced[..k].to_vec(), reduced[k..].to_vec())
+}
+
+/// Fused `y_j = x_j + beta_j y_j` over an RHS panel — one launch for every
+/// active column (the batched `p = r + beta p` recurrence).
+pub fn pxpay_cols<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    beta: &[S],
+    x: &DistMultiVector<S>,
+    y: &mut DistMultiVector<S>,
+    active: &[bool],
+) {
+    let k = x.ncols();
+    assert_eq!(k, y.ncols(), "pxpay_cols panel width mismatch");
+    assert_eq!(k, beta.len(), "pxpay_cols coefficient width mismatch");
+    for j in 0..k {
+        if !active[j] {
+            continue;
+        }
+        let xj = x.col(j);
+        let yj = y.col_mut(j);
+        for l in 0..xj.local_blocks() {
+            linalg::xpay(beta[j], xj.block(l), yj.block_mut(l));
+        }
+    }
+    let actives: Vec<usize> = (0..k).filter(|&j| active[j]).collect();
+    let blocks = x.col(0).local_blocks() as u64;
+    let mut reads: Vec<&DistVector<S>> = Vec::new();
+    let mut writes: Vec<&DistVector<S>> = Vec::new();
+    for &j in &actives {
+        reads.push(x.col(j));
+        reads.push(y.col(j));
+        writes.push(y.col(j));
+    }
+    charge_fused_panel(ctx, &reads, &writes, 3, actives.len(), 2, 2 * blocks * actives.len() as u64);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -295,6 +539,66 @@ mod tests {
                 assert!(bits_eq, "{pr}x{pc}: fused vector bits differ");
                 assert!(rr_eq && dd_eq, "{pr}x{pc}: fused reductions differ");
                 assert!(fused > 0, "{pr}x{pc}: fused launches must be counted");
+            }
+        }
+    }
+
+    #[test]
+    fn cols_variants_match_looped_singles_bitwise() {
+        let n = 23usize;
+        let k = 3usize;
+        for (pr, pc) in [(1, 1), (2, 2), (2, 3)] {
+            let out = with_ctx(pr, pc, 4, move |ctx| {
+                let desc = Descriptor::new(n, n, 4, ctx.mesh.shape());
+                let (prow, pcol) = (ctx.mesh.row(), ctx.mesh.col());
+                let x = DistMultiVector::from_fn(desc, prow, pcol, k, |i, j| {
+                    ((i + 7 * j + 1) as f64).sin()
+                });
+                let y0 = DistMultiVector::from_fn(desc, prow, pcol, k, |i, j| {
+                    (i as f64 * 0.3 + j as f64).cos()
+                });
+                let alpha = [-0.375, 0.5, 0.25];
+                let active = [true, false, true];
+                // Batched panel sequence (column 1 masked throughout).
+                let mut yb = y0.clone_panel();
+                let rrb = pfused_axpy_norm2_cols(ctx, &alpha, &x, &mut yb, &active);
+                let ddb = pdot_cols(ctx, &x, &yb, &active);
+                pxpay_cols(ctx, &alpha, &x, &mut yb, &active);
+                let ndb = pfused_norm2_dot_cols(ctx, &yb, &x, &active);
+                // Looped single-column reference.
+                let mut eq = true;
+                for j in 0..k {
+                    if !active[j] {
+                        // Masked column: untouched, bit for bit.
+                        for l in 0..yb.col(j).local_blocks() {
+                            eq &= yb.col(j).block(l) == y0.col(j).block(l);
+                        }
+                        eq &= rrb[j] == 0.0 && ddb[j] == 0.0;
+                        continue;
+                    }
+                    let mut ys = y0.col(j).clone_vec();
+                    let rrs = pfused_axpy_norm2(ctx, alpha[j], x.col(j), &mut ys);
+                    let dds = pdot(ctx, x.col(j), &ys);
+                    pxpay(ctx, alpha[j], x.col(j), &mut ys);
+                    let nds = pfused_norm2_dot(ctx, &ys, x.col(j));
+                    eq &= rrb[j].to_bits() == rrs.to_bits();
+                    eq &= ddb[j].to_bits() == dds.to_bits();
+                    eq &= ndb.0[j].to_bits() == nds.0.to_bits();
+                    eq &= ndb.1[j].to_bits() == nds.1.to_bits();
+                    for l in 0..ys.local_blocks() {
+                        eq &= yb
+                            .col(j)
+                            .block(l)
+                            .iter()
+                            .zip(ys.block(l))
+                            .all(|(a, b)| a.to_bits() == b.to_bits());
+                    }
+                }
+                (eq, ctx.mesh.comm().stats().launches_fused())
+            });
+            for (eq, fused) in out {
+                assert!(eq, "{pr}x{pc}: batched cols differ from looped singles");
+                assert!(fused > 0, "{pr}x{pc}: batched launches must be fused-counted");
             }
         }
     }

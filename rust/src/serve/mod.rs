@@ -1,0 +1,395 @@
+//! The solve-request serving layer: admit a stream of solve requests
+//! (mixed kernels, sizes, tolerances), batch compatible ones, schedule the
+//! batches over the cluster, and report throughput + latency percentiles.
+//!
+//! Batching is the whole point: requests sharing an operator — same
+//! [`Workload`], size and [`Method`] — ride **one** factorization (direct
+//! methods, [`crate::solvers::plu_solve_panel`]) or shared matvec sweeps
+//! (blocked Krylov, [`crate::solvers::block_cg`]), so a batch of k costs
+//! far less than k solos.  Tolerances may differ within a batch: the block
+//! solvers converge per column.  The scheduler is deliberately simple —
+//! FIFO, batching only *consecutive* compatible requests up to
+//! [`ServeConfig::rhs_batch`] — so the reported latencies are honest (no
+//! reordering a real queue could not do) and the batched-vs-solo A/B
+//! (`--no-batching`) isolates exactly the amortization.
+//!
+//! The timeline is virtual: a batch starts when the cluster is free *and*
+//! its last member has arrived, and runs for the batch's virtual-clock
+//! makespan.  Latency = finish − arrival.  [`schedule`] is generic over
+//! how a batch is priced — the CLI runs the live cluster simulation
+//! ([`serve_cluster`]), the serving bench prices batches with the analytic
+//! model twins — so the queueing/percentile arithmetic is shared (and
+//! mirrored by the python oracle).
+
+use crate::cluster::{Cluster, Method};
+use crate::workloads::Workload;
+use crate::{Error, Result, Scalar};
+
+/// One solve request admitted to the serving layer.
+#[derive(Clone, Copy, Debug)]
+pub struct SolveRequest {
+    /// Stream-unique id (drives the deterministic RHS coefficient).
+    pub id: usize,
+    /// Operator family.
+    pub workload: Workload,
+    /// Problem size.
+    pub n: usize,
+    /// Solver.
+    pub method: Method,
+    /// Relative residual target (iterative methods; direct solves ignore).
+    pub tol: f64,
+    /// Arrival time on the virtual timeline, seconds.
+    pub arrival: f64,
+}
+
+impl SolveRequest {
+    /// Two requests may share a batch iff they share the operator: same
+    /// workload, size and method (tolerance may differ — the block solvers
+    /// converge per column).
+    pub fn compatible(&self, other: &SolveRequest) -> bool {
+        self.workload == other.workload && self.n == other.n && self.method == other.method
+    }
+
+    /// The request's deterministic RHS coefficient: `b = coeff · b0`, so
+    /// the known answer is `coeff · x_true`.  `1 + id%8 / 8` is exact in
+    /// floating point — error checks stay as tight as the base workload's.
+    pub fn rhs_coeff(&self) -> f64 {
+        1.0 + 0.125 * (self.id % 8) as f64
+    }
+}
+
+/// Scheduler knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Max right-hand sides per batch (the RHS-panel width cap).
+    pub rhs_batch: usize,
+    /// The A/B switch: `false` forces singleton batches (`--no-batching`),
+    /// pricing the same stream without any amortization.
+    pub batching: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { rhs_batch: 8, batching: true }
+    }
+}
+
+/// A deterministic mixed demo stream: groups of four consecutive requests
+/// share an operator (so batching has something to merge), methods cycle
+/// LU / CG / Cholesky / BiCGSTAB across groups, sizes cycle
+/// `base_n · {1,2,3}`, tolerances alternate 1e-6 / 1e-8 within a group,
+/// and arrivals tick every 2 ms.  Pure arithmetic — no RNG, no clock — so
+/// the rust bench and the python oracle generate the identical stream.
+pub fn demo_stream(len: usize, base_n: usize) -> Vec<SolveRequest> {
+    use crate::solvers::IterMethod;
+    (0..len)
+        .map(|i| {
+            let group = i / 4;
+            let method = match group % 4 {
+                0 => Method::Lu,
+                1 => Method::Iterative(IterMethod::Cg),
+                2 => Method::Cholesky,
+                _ => Method::Iterative(IterMethod::Bicgstab),
+            };
+            let workload = match method {
+                Method::Cholesky | Method::Iterative(IterMethod::Cg) => Workload::Spd,
+                _ => Workload::DiagDominant,
+            };
+            SolveRequest {
+                id: i,
+                workload,
+                n: base_n * (1 + group % 3),
+                method,
+                tol: if i % 2 == 0 { 1e-6 } else { 1e-8 },
+                arrival: 0.002 * i as f64,
+            }
+        })
+        .collect()
+}
+
+/// Group a (arrival-ordered) request stream into batches: FIFO, merging
+/// only *consecutive* compatible requests, capped at `rhs_batch` (1 when
+/// batching is off).  Returns index groups into `requests`.
+pub fn form_batches(requests: &[SolveRequest], cfg: &ServeConfig) -> Vec<Vec<usize>> {
+    let cap = if cfg.batching { cfg.rhs_batch.max(1) } else { 1 };
+    let mut batches: Vec<Vec<usize>> = Vec::new();
+    for i in 0..requests.len() {
+        match batches.last_mut() {
+            Some(batch)
+                if batch.len() < cap
+                    && requests[batch[0]].compatible(&requests[i]) =>
+            {
+                batch.push(i);
+            }
+            _ => batches.push(vec![i]),
+        }
+    }
+    batches
+}
+
+/// What running one batch cost — produced by the pricing closure
+/// ([`schedule`]'s `run_batch`): the live cluster simulation or the
+/// analytic model.
+#[derive(Clone, Debug)]
+pub struct BatchCost {
+    /// Virtual-clock makespan of the batched solve.
+    pub makespan: f64,
+    /// Per-request attributed virtual seconds (own bucket + even share of
+    /// the batch's shared bucket); empty if attribution is unavailable.
+    pub per_request_secs: Vec<f64>,
+    /// Max abs solution error across the batch vs the known answers.
+    pub max_err: f64,
+}
+
+/// One request's fate on the serving timeline.
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    /// Request id.
+    pub id: usize,
+    /// Solver name.
+    pub method: &'static str,
+    /// Problem size.
+    pub n: usize,
+    /// Arrival time, seconds.
+    pub arrival: f64,
+    /// When its batch started executing.
+    pub start: f64,
+    /// When its batch finished.
+    pub finish: f64,
+    /// Index of the batch it rode in.
+    pub batch: usize,
+    /// Attributed virtual seconds (0 when attribution was unavailable).
+    pub attributed_secs: f64,
+    /// Max abs error of the whole batch (requests share the check).
+    pub max_err: f64,
+}
+
+impl RequestOutcome {
+    /// Queueing + execution latency: finish − arrival.
+    pub fn latency(&self) -> f64 {
+        self.finish - self.arrival
+    }
+}
+
+/// The serving run's ledger.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Per-request outcomes, in stream order.
+    pub outcomes: Vec<RequestOutcome>,
+    /// Batches executed.
+    pub batches: usize,
+}
+
+impl ServeReport {
+    /// Completed requests per virtual second: stream length over the span
+    /// from first arrival to last finish.
+    pub fn throughput(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        let first = self.outcomes.iter().map(|o| o.arrival).fold(f64::INFINITY, f64::min);
+        let last = self.outcomes.iter().map(|o| o.finish).fold(0.0f64, f64::max);
+        if last > first {
+            self.outcomes.len() as f64 / (last - first)
+        } else {
+            0.0
+        }
+    }
+
+    /// Nearest-rank latency percentile (`q` in (0, 1]): the smallest
+    /// latency ≥ that fraction of the distribution.
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        let mut lats: Vec<f64> = self.outcomes.iter().map(|o| o.latency()).collect();
+        if lats.is_empty() {
+            return 0.0;
+        }
+        lats.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        let idx = ((q * lats.len() as f64).ceil() as usize).clamp(1, lats.len()) - 1;
+        lats[idx]
+    }
+
+    /// Median latency.
+    pub fn p50(&self) -> f64 {
+        self.latency_percentile(0.50)
+    }
+
+    /// Tail latency.
+    pub fn p95(&self) -> f64 {
+        self.latency_percentile(0.95)
+    }
+
+    /// Worst latency.
+    pub fn latency_max(&self) -> f64 {
+        self.outcomes.iter().map(|o| o.latency()).fold(0.0f64, f64::max)
+    }
+
+    /// Worst solution error across all batches.
+    pub fn max_err(&self) -> f64 {
+        self.outcomes.iter().map(|o| o.max_err).fold(0.0f64, f64::max)
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests in {} batches: {:.3} req/s, latency p50 {} p95 {} max {}, err {:.2e}",
+            self.outcomes.len(),
+            self.batches,
+            self.throughput(),
+            crate::util::fmt::secs(self.p50()),
+            crate::util::fmt::secs(self.p95()),
+            crate::util::fmt::secs(self.latency_max()),
+            self.max_err(),
+        )
+    }
+}
+
+/// Run the serving timeline: form batches, price each with `run_batch`,
+/// advance the virtual clock (a batch starts when the cluster is free and
+/// its last member has arrived), and ledger every request.  `requests`
+/// must be arrival-ordered (the FIFO contract).
+pub fn schedule<F>(
+    requests: &[SolveRequest],
+    cfg: &ServeConfig,
+    mut run_batch: F,
+) -> Result<ServeReport>
+where
+    F: FnMut(&[&SolveRequest]) -> Result<BatchCost>,
+{
+    if requests.windows(2).any(|w| w[0].arrival > w[1].arrival) {
+        return Err(Error::config("serve requests must be arrival-ordered".to_string()));
+    }
+    let batches = form_batches(requests, cfg);
+    let mut outcomes: Vec<RequestOutcome> = Vec::with_capacity(requests.len());
+    let mut clock = 0.0f64;
+    for (bi, batch) in batches.iter().enumerate() {
+        let members: Vec<&SolveRequest> = batch.iter().map(|&i| &requests[i]).collect();
+        let cost = run_batch(&members)?;
+        let ready = members.iter().map(|r| r.arrival).fold(0.0f64, f64::max);
+        let start = clock.max(ready);
+        let finish = start + cost.makespan;
+        clock = finish;
+        for (j, r) in members.iter().enumerate() {
+            outcomes.push(RequestOutcome {
+                id: r.id,
+                method: r.method.name(),
+                n: r.n,
+                arrival: r.arrival,
+                start,
+                finish,
+                batch: bi,
+                attributed_secs: cost.per_request_secs.get(j).copied().unwrap_or(0.0),
+                max_err: cost.max_err,
+            });
+        }
+    }
+    Ok(ServeReport { outcomes, batches: batches.len() })
+}
+
+/// Serve a request stream over the live cluster simulation: each batch is
+/// one [`Cluster::solve_batch`] call (shared factorization / blocked
+/// Krylov, per-request attribution enabled).
+pub fn serve_cluster<S: Scalar>(
+    cluster: &Cluster,
+    requests: &[SolveRequest],
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    schedule(requests, cfg, |members| {
+        let head = members[0];
+        let coeffs: Vec<f64> = members.iter().map(|r| r.rhs_coeff()).collect();
+        let tols: Vec<f64> = members.iter().map(|r| r.tol).collect();
+        let report =
+            cluster.solve_batch::<S>(head.workload, head.n, head.method, &coeffs, &tols)?;
+        Ok(BatchCost {
+            makespan: report.makespan(),
+            per_request_secs: report.per_request_secs(),
+            max_err: report.max_err,
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::IterMethod;
+
+    #[test]
+    fn demo_stream_is_deterministic_and_mixed() {
+        let s = demo_stream(16, 64);
+        assert_eq!(s.len(), 16);
+        // Groups of four share an operator...
+        assert!(s[0].compatible(&s[3]));
+        assert_eq!(s[0].method, Method::Lu);
+        assert_eq!(s[4].method, Method::Iterative(IterMethod::Cg));
+        assert_eq!(s[8].method, Method::Cholesky);
+        assert_eq!(s[12].method, Method::Iterative(IterMethod::Bicgstab));
+        // ...across groups the operator changes.
+        assert!(!s[3].compatible(&s[4]));
+        // SPD methods get SPD workloads.
+        assert_eq!(s[4].workload, Workload::Spd);
+        assert_eq!(s[0].workload, Workload::DiagDominant);
+        // Arrivals tick and tolerances alternate.
+        assert!(s[1].arrival > s[0].arrival);
+        assert_ne!(s[0].tol, s[1].tol);
+        // Identical on every call.
+        let t = demo_stream(16, 64);
+        assert_eq!(s[7].n, t[7].n);
+        assert_eq!(s[7].arrival, t[7].arrival);
+    }
+
+    #[test]
+    fn batches_merge_only_consecutive_compatible_requests() {
+        let s = demo_stream(9, 64);
+        let b = form_batches(&s, &ServeConfig::default());
+        assert_eq!(b, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7], vec![8]]);
+        // Cap splits a group.
+        let b2 = form_batches(&s, &ServeConfig { rhs_batch: 3, batching: true });
+        assert_eq!(b2[0], vec![0, 1, 2]);
+        assert_eq!(b2[1], vec![3]);
+        // Batching off: singletons.
+        let b1 = form_batches(&s, &ServeConfig { rhs_batch: 8, batching: false });
+        assert_eq!(b1.len(), 9);
+        assert!(b1.iter().all(|g| g.len() == 1));
+    }
+
+    #[test]
+    fn schedule_timeline_and_percentiles() {
+        let s = demo_stream(8, 64);
+        // Price every batch at 1 virtual second, regardless of width.
+        let rep = schedule(&s, &ServeConfig::default(), |members| {
+            Ok(BatchCost {
+                makespan: 1.0,
+                per_request_secs: vec![0.25; members.len()],
+                max_err: 1e-12,
+            })
+        })
+        .unwrap();
+        assert_eq!(rep.batches, 2);
+        // Batch 0 waits for request 3 (arrival 0.006), then runs 1 s.
+        assert_eq!(rep.outcomes[0].start, 0.006);
+        assert_eq!(rep.outcomes[0].finish, 1.006);
+        // Batch 1's members all arrived before the cluster freed up.
+        assert_eq!(rep.outcomes[4].start, 1.006);
+        assert_eq!(rep.outcomes[4].finish, 2.006);
+        // Latency = finish − arrival; max is the last batch's first member.
+        assert!((rep.outcomes[4].latency() - (2.006 - 0.008)).abs() < 1e-12);
+        assert_eq!(rep.latency_max(), rep.outcomes[4].latency());
+        // Nearest-rank percentiles: p50 of 8 = 4th smallest; max = p100.
+        assert_eq!(rep.latency_percentile(1.0), rep.latency_max());
+        assert!(rep.p50() <= rep.p95() && rep.p95() <= rep.latency_max());
+        // Throughput spans first arrival to last finish.
+        assert!((rep.throughput() - 8.0 / 2.006).abs() < 1e-9);
+        assert_eq!(rep.outcomes[3].attributed_secs, 0.25);
+    }
+
+    #[test]
+    fn schedule_rejects_unordered_streams() {
+        let mut s = demo_stream(4, 64);
+        s.swap(0, 3);
+        assert!(schedule(&s, &ServeConfig::default(), |_| Ok(BatchCost {
+            makespan: 1.0,
+            per_request_secs: vec![],
+            max_err: 0.0,
+        }))
+        .is_err());
+    }
+}

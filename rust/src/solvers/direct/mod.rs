@@ -3,14 +3,16 @@
 
 pub mod cholesky;
 pub mod lu;
+pub mod trsm;
 pub mod trsv;
 
 pub use cholesky::pchol_factor;
 pub use lu::{plu_factor, PivotMap};
+pub use trsm::ptrsm;
 pub use trsv::{ptrsv, TriKind};
 
 use crate::comm::{Payload, Tag};
-use crate::dist::{ptranspose, DistMatrix, DistVector};
+use crate::dist::{ptranspose, DistMatrix, DistMultiVector, DistVector};
 use crate::pblas::Ctx;
 use crate::{Result, Scalar};
 
@@ -56,32 +58,65 @@ pub fn apply_pivots<S: Scalar>(ctx: &Ctx<'_, S>, piv: &PivotMap, b: &mut DistVec
 
 /// Solve `A x = b` by distributed LU: factors `a` in place, then runs the
 /// pivoted forward/backward substitutions.  Returns x (same layout as b).
+/// Routed through the RHS-panel path ([`plu_solve_panel`]) with `k = 1` —
+/// the panel kernels price a one-column panel exactly like the
+/// single-column ops, and the arithmetic is identical.
 pub fn plu_solve<S: Scalar>(
     ctx: &Ctx<'_, S>,
     a: &mut DistMatrix<S>,
     b: &DistVector<S>,
 ) -> Result<DistVector<S>> {
+    let x = plu_solve_panel(ctx, a, &DistMultiVector::from_cols(vec![b.clone_vec()]))?;
+    Ok(x.into_cols().remove(0))
+}
+
+/// Solve `A X = B` by distributed LU for a whole RHS panel: factor **once**
+/// (amortized over every column), apply the pivot map per column, then run
+/// the two panel substitutions ([`ptrsm`]) — one broadcast/downdate sweep
+/// per panel step instead of one full [`ptrsv`] pass per vector.
+pub fn plu_solve_panel<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &mut DistMatrix<S>,
+    b: &DistMultiVector<S>,
+) -> Result<DistMultiVector<S>> {
     let piv = plu_factor(ctx, a)?;
-    let mut x = b.clone_vec();
-    apply_pivots(ctx, &piv, &mut x);
-    ptrsv(ctx, a, &mut x, TriKind::LowerUnit)?;
-    ptrsv(ctx, a, &mut x, TriKind::Upper)?;
+    let mut x = b.clone_panel();
+    for j in 0..x.ncols() {
+        ctx.set_tenant(Some(j));
+        apply_pivots(ctx, &piv, x.col_mut(j));
+        ctx.set_tenant(None);
+    }
+    ptrsm(ctx, a, &mut x, TriKind::LowerUnit)?;
+    ptrsm(ctx, a, &mut x, TriKind::Upper)?;
     Ok(x)
 }
 
 /// Solve `A x = b` (SPD) by distributed Cholesky: factor, forward solve with
-/// L, transpose-redistribute, backward solve with `L^T`.
+/// L, transpose-redistribute, backward solve with `L^T`.  Routed through
+/// the RHS-panel path ([`pchol_solve_panel`]) with `k = 1`.
 pub fn pchol_solve<S: Scalar>(
     ctx: &Ctx<'_, S>,
     a: &mut DistMatrix<S>,
     b: &DistVector<S>,
 ) -> Result<DistVector<S>> {
+    let x = pchol_solve_panel(ctx, a, &DistMultiVector::from_cols(vec![b.clone_vec()]))?;
+    Ok(x.into_cols().remove(0))
+}
+
+/// Solve `A X = B` (SPD) by distributed Cholesky for a whole RHS panel:
+/// one factorization and **one** transpose-redistribution amortized over
+/// every column, with both substitutions batched through [`ptrsm`].
+pub fn pchol_solve_panel<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &mut DistMatrix<S>,
+    b: &DistMultiVector<S>,
+) -> Result<DistMultiVector<S>> {
     pchol_factor(ctx, a)?;
-    let mut x = b.clone_vec();
-    ptrsv(ctx, a, &mut x, TriKind::Lower)?;
+    let mut x = b.clone_panel();
+    ptrsm(ctx, a, &mut x, TriKind::Lower)?;
     // U = L^T: the Upper substitution only reads the (valid) upper triangle
     // of the transposed factor; the stale strict-lower half is never touched.
     let lt = ptranspose(ctx.mesh, a);
-    ptrsv(ctx, &lt, &mut x, TriKind::Upper)?;
+    ptrsm(ctx, &lt, &mut x, TriKind::Upper)?;
     Ok(x)
 }

@@ -1,0 +1,156 @@
+//! RHS-panel triangular substitution (`ptrsm`): [`ptrsv`]'s column-fan-out
+//! algorithm generalized to a `k`-column right-hand-side panel, paying the
+//! per-step communication and tile traffic **once for the whole panel**.
+//!
+//! At tile step `k` the diagonal owner panel-solves its `tile x tile`
+//! system against all `k` rhs blocks in one batched kernel
+//! ([`crate::accel::Engine::trsm_panel`]), the `k` solution blocks
+//! broadcast world-wide as **one** `k·tile` payload (one tree latency
+//! instead of `k`), the tiles of column `k` broadcast along their process
+//! rows once — shared by every rhs column — and each rank downdates its
+//! replica blocks with one `gemm`-shaped panel kernel per tile
+//! ([`crate::accel::Engine::gemm_panel`]).  The factored tiles stay in the
+//! [`crate::accel::TileCache`] across panel columns and repeated solves,
+//! and the downdate sweep prefetches the next step's rhs blocks depth-1.
+//!
+//! Per column the arithmetic is exactly [`ptrsv`]'s — same diag solve,
+//! same downdate order, no cross-column operations — so a `k`-column
+//! `ptrsm` is bit-identical to `k` looped `ptrsv` calls
+//! (`tests/multi_rhs.rs`); with `k = 1` the panel kernels price exactly
+//! like the single-column ops (only the depth-1 rhs prefetch, which never
+//! changes results, is new).
+//!
+//! [`ptrsv`]: super::ptrsv
+
+use super::trsv::TriKind;
+use crate::comm::Payload;
+use crate::dist::{DistMatrix, DistMultiVector};
+use crate::pblas::{tags, Ctx};
+use crate::{Result, Scalar};
+
+/// Solve `T Y = B` in place (`b` becomes `Y`), `T` taken from the
+/// corresponding triangle of the factored matrix `a`, for every column of
+/// the rhs panel `b`.
+pub fn ptrsm<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &DistMatrix<S>,
+    b: &mut DistMultiVector<S>,
+    kind: TriKind,
+) -> Result<()> {
+    let desc = *a.desc();
+    assert_eq!(&desc, b.desc(), "ptrsm operand descriptors differ");
+    let kt = desc.mt();
+    let t = desc.tile;
+    let nrhs = b.ncols();
+    let mesh = ctx.mesh;
+    let comm = mesh.comm();
+    let (pr, pc) = (desc.shape.pr, desc.shape.pc);
+
+    let steps: Vec<usize> = match kind {
+        TriKind::LowerUnit | TriKind::Lower => (0..kt).collect(),
+        TriKind::Upper => (0..kt).rev().collect(),
+    };
+
+    let op = match kind {
+        TriKind::LowerUnit => "trsv_lu",
+        TriKind::Lower => "trsv_l",
+        TriKind::Upper => "trsv_u",
+    };
+
+    for &k in &steps {
+        let ck = k % pc;
+        let rk = k % pr;
+        let diag_rank = desc.shape.rank_at(rk, ck);
+
+        // 1. Panel diagonal solve on the owner: one batched kernel over
+        //    all k rhs blocks, one world broadcast of the k·t payload.
+        let yk_payload = if comm.rank() == diag_rank {
+            let diag = a.global_tile(k, k);
+            let cost = {
+                let mut cols: Vec<&mut [S]> = b
+                    .cols_mut()
+                    .iter_mut()
+                    .map(|v| &mut v.global_block_mut(k)[..])
+                    .collect();
+                ctx.engine.trsm_panel(op, diag, &mut cols)?
+            };
+            let mut operands: Vec<&[S]> = vec![a.global_tile(k, k)];
+            let outs: Vec<&[S]> = b.cols().iter().map(|v| v.global_block(k)).collect();
+            operands.extend(outs.iter().copied());
+            ctx.charge_panel_op(cost, &operands, &outs);
+            // The broadcast payload is a host read of every solved block.
+            let mut payload = Vec::with_capacity(nrhs * t);
+            for v in b.cols() {
+                ctx.host_read(v.global_block(k));
+                payload.extend_from_slice(v.global_block(k));
+            }
+            Some(Payload::Data(payload))
+        } else {
+            None
+        };
+        let world = comm.world();
+        let yk = world.bcast(diag_rank, tags::TRSM, yk_payload).into_data();
+        if b.col(0).owns(k) && comm.rank() != diag_rank {
+            for (j, v) in b.cols_mut().iter_mut().enumerate() {
+                v.global_block_mut(k).copy_from_slice(&yk[j * t..(j + 1) * t]);
+                ctx.host_mut(v.global_block(k)); // fresh host data
+            }
+        }
+
+        // 2. Column-k tiles broadcast along process rows — once per tile,
+        //    shared by every rhs column — and each rank panel-downdates its
+        //    replica blocks.  The next active step's rhs blocks prefetch
+        //    depth-1 under the current downdate.
+        let row = mesh.row_comm();
+        let active: Vec<(usize, usize)> = (0..a.local_mt())
+            .map(|lti| (lti, desc.global_ti(mesh.row(), lti)))
+            .filter(|&(_, ti)| match kind {
+                TriKind::LowerUnit | TriKind::Lower => ti > k,
+                TriKind::Upper => ti < k,
+            })
+            .collect();
+        let xs: Vec<&[S]> = (0..nrhs).map(|j| &yk[j * t..(j + 1) * t]).collect();
+        for (idx, &(lti, ti)) in active.iter().enumerate() {
+            if let Some(&(nlti, nti)) = active.get(idx + 1) {
+                if mesh.col() == ck {
+                    ctx.prefetch(a.tile(nlti, desc.local_tj(k)));
+                }
+                for v in b.cols() {
+                    ctx.prefetch(v.global_block(nti));
+                }
+            }
+            let data = if mesh.col() == ck {
+                ctx.host_read(a.tile(lti, desc.local_tj(k)));
+                Some(Payload::Data(a.tile(lti, desc.local_tj(k)).to_vec()))
+            } else {
+                None
+            };
+            let tile = row.bcast(ck, tags::TRSM + 1, data).into_data();
+            let cost = {
+                let mut cols: Vec<&mut [S]> = b
+                    .cols_mut()
+                    .iter_mut()
+                    .map(|v| &mut v.global_block_mut(ti)[..])
+                    .collect();
+                ctx.engine.gemm_panel("gemv_update", &mut cols, &tile, &xs)?
+            };
+            let outs: Vec<&[S]> = b.cols().iter().map(|v| v.global_block(ti)).collect();
+            let mut operands: Vec<&[S]> = outs.clone();
+            operands.push(&tile);
+            operands.extend(xs.iter().copied());
+            ctx.charge_panel_op(cost, &operands, &outs);
+            ctx.host_mut(&tile);
+        }
+        for chunk in xs {
+            ctx.host_mut(chunk);
+        }
+    }
+    // Hand the finished panel back to the host: flush every column block's
+    // pending write-back.
+    for v in b.cols() {
+        for l in 0..v.local_blocks() {
+            ctx.host_read(v.block(l));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,272 @@
+//! Blocked (multi-RHS) Krylov solvers: k residuals carried through
+//! **shared** matvec sweeps — the `A` tiles stream once per iteration for
+//! every right-hand side ([`crate::pblas::pgemv_cols`]), the per-iteration
+//! reductions ride k-lane allreduces (one tree latency for the batch), and
+//! the BLAS-1 chain runs on the column-batched fused kernels (one launch
+//! per block per panel instead of one per block per column).
+//!
+//! **Bit-identity contract**: every column's arithmetic is exactly the
+//! looped single-RHS solver's — same recurrence coefficients from the same
+//! lane-wise-identical reductions, same fused update kernels, same
+//! convergence tests in the same order — so `block_cg` with k columns
+//! returns bit-for-bit what k independent [`super::cg()`] calls return
+//! (pinned by `tests/multi_rhs.rs`), and batching changes only the *cost*
+//! of getting there.  Columns converge independently: a finished column is
+//! masked out of every subsequent kernel (convergence masking) without
+//! perturbing its neighbours.
+//!
+//! Per-column tolerances let a serving batch mix accuracy targets (the
+//! [`crate::serve`] scheduler groups requests by operator, not tolerance).
+
+use super::{norm_negligible, IterConfig, IterStats};
+use crate::dist::DistMultiVector;
+use crate::pblas::{
+    paxpy_cols, pdot_cols, pfused_axpy_norm2_cols, pfused_axpy_norm2_dot_cols,
+    pfused_norm2_dot_cols, pnorm2, pnorm2_cols, pxpay_cols, Ctx, LinOp,
+};
+use crate::{Error, Result, Scalar};
+
+/// Per-column relative tolerances: `tols[j]` plays the role of
+/// [`IterConfig::tol`] for column `j`.
+fn check_widths(k: usize, tols: &[f64], what: &str) {
+    assert_eq!(k, tols.len(), "{what} per-column tolerance width mismatch");
+}
+
+/// Solve `A X = B` (A SPD) for a whole RHS panel from the zero initial
+/// guess, one CG recurrence per column through shared matvec sweeps.
+/// Returns the solution panel and one [`IterStats`] per column.
+pub fn block_cg<S: Scalar, A: LinOp<S> + ?Sized>(
+    ctx: &Ctx<'_, S>,
+    a: &A,
+    b: &DistMultiVector<S>,
+    cfg: &IterConfig,
+    tols: &[f64],
+) -> Result<(DistMultiVector<S>, Vec<IterStats<S>>)> {
+    let desc = *a.desc();
+    let k = b.ncols();
+    check_widths(k, tols, "block_cg");
+    let mesh = ctx.mesh;
+    let bnorm = pnorm2_cols(ctx, b);
+    let mut x = DistMultiVector::zeros(desc, mesh.row(), mesh.col(), k);
+    let mut active = vec![true; k];
+    let mut stats: Vec<Option<IterStats<S>>> = vec![None; k];
+    for j in 0..k {
+        if norm_negligible(bnorm[j], desc.m) {
+            active[j] = false;
+            stats[j] = Some(IterStats::new(0, S::zero(), true));
+        }
+    }
+    let tol: Vec<S> =
+        (0..k).map(|j| S::from_f64(tols[j]).unwrap() * bnorm[j]).collect();
+
+    let mut r = b.clone_panel();
+    let mut p = r.clone_panel();
+    let mut rr = pdot_cols(ctx, &r, &r, &active);
+
+    for it in 0..cfg.max_iter {
+        if active.iter().all(|a| !a) {
+            break;
+        }
+        let ap = a.apply_cols(ctx, &p, &active);
+        let pap = pdot_cols(ctx, &p, &ap, &active);
+        for j in 0..k {
+            if active[j] && pap[j] <= S::zero() {
+                return Err(Error::Breakdown {
+                    method: "block_cg",
+                    detail: format!(
+                        "p^T A p = {} for column {j} at iteration {it} (matrix not SPD?)",
+                        pap[j]
+                    ),
+                });
+            }
+        }
+        let alpha: Vec<S> =
+            (0..k).map(|j| if active[j] { rr[j] / pap[j] } else { S::zero() }).collect();
+        paxpy_cols(ctx, &alpha, &p, &mut x, &active);
+        // r_j -= alpha_j A p_j and ||r_j||^2, one panel launch per block.
+        let neg: Vec<S> = alpha.iter().map(|&a| -a).collect();
+        let rr_new = pfused_axpy_norm2_cols(ctx, &neg, &ap, &mut r, &active);
+        for j in 0..k {
+            if !active[j] {
+                continue;
+            }
+            let rnorm = rr_new[j].sqrt();
+            if rnorm <= tol[j] {
+                active[j] = false;
+                stats[j] = Some(IterStats::new(it + 1, rnorm / bnorm[j], true));
+            }
+        }
+        let beta: Vec<S> =
+            (0..k).map(|j| if active[j] { rr_new[j] / rr[j] } else { S::zero() }).collect();
+        rr = rr_new;
+        pxpay_cols(ctx, &beta, &r, &mut p, &active); // p_j = r_j + beta_j p_j
+    }
+    for j in 0..k {
+        if active[j] {
+            ctx.set_tenant(Some(j));
+            let rnorm = pnorm2(ctx, r.col(j));
+            ctx.set_tenant(None);
+            stats[j] = Some(IterStats::new(cfg.max_iter, rnorm / bnorm[j], false));
+        }
+    }
+    Ok((x, stats.into_iter().map(|s| s.expect("every column reported")).collect()))
+}
+
+/// Solve `A X = B` (general nonsymmetric) for a whole RHS panel, one
+/// BiCGSTAB recurrence per column through shared matvec sweeps.
+///
+/// "Lite": where the single-RHS [`super::bicgstab()`] aborts the whole
+/// solve on a scalar breakdown (`rho = 0`, `r0·v = 0`, `t·t = 0`), the
+/// blocked variant *deactivates the affected column* with
+/// `converged = false` and lets its batch-mates finish — one pathological
+/// right-hand side must not sink a serving batch.  On breakdown-free runs
+/// every column is bit-identical to the looped solver (the k = 1 case is
+/// pinned by `tests/multi_rhs.rs`).
+pub fn block_bicgstab<S: Scalar, A: LinOp<S> + ?Sized>(
+    ctx: &Ctx<'_, S>,
+    a: &A,
+    b: &DistMultiVector<S>,
+    cfg: &IterConfig,
+    tols: &[f64],
+) -> Result<(DistMultiVector<S>, Vec<IterStats<S>>)> {
+    let desc = *a.desc();
+    let k = b.ncols();
+    check_widths(k, tols, "block_bicgstab");
+    let mesh = ctx.mesh;
+    let bnorm = pnorm2_cols(ctx, b);
+    let mut x = DistMultiVector::zeros(desc, mesh.row(), mesh.col(), k);
+    let mut active = vec![true; k];
+    let mut stats: Vec<Option<IterStats<S>>> = vec![None; k];
+    for j in 0..k {
+        if norm_negligible(bnorm[j], desc.m) {
+            active[j] = false;
+            stats[j] = Some(IterStats::new(0, S::zero(), true));
+        }
+    }
+    let tol: Vec<S> =
+        (0..k).map(|j| S::from_f64(tols[j]).unwrap() * bnorm[j]).collect();
+
+    let mut r = b.clone_panel();
+    let r0 = b.clone_panel(); // shadow residuals
+    let mut p = r.clone_panel();
+    let mut rho = pdot_cols(ctx, &r0, &r, &active);
+
+    for it in 0..cfg.max_iter {
+        if active.iter().all(|a| !a) {
+            break;
+        }
+        for j in 0..k {
+            if active[j] && rho[j] == S::zero() {
+                // rho breakdown: retire the lane, current residual is r_j.
+                active[j] = false;
+                ctx.set_tenant(Some(j));
+                let rnorm = pnorm2(ctx, r.col(j));
+                ctx.set_tenant(None);
+                stats[j] = Some(IterStats::new(it, rnorm / bnorm[j], false));
+            }
+        }
+        let v = a.apply_cols(ctx, &p, &active);
+        let r0v = pdot_cols(ctx, &r0, &v, &active);
+        for j in 0..k {
+            if active[j] && r0v[j] == S::zero() {
+                active[j] = false;
+                ctx.set_tenant(Some(j));
+                let rnorm = pnorm2(ctx, r.col(j));
+                ctx.set_tenant(None);
+                stats[j] = Some(IterStats::new(it, rnorm / bnorm[j], false));
+            }
+        }
+        let alpha: Vec<S> =
+            (0..k).map(|j| if active[j] { rho[j] / r0v[j] } else { S::zero() }).collect();
+        // s_j = r_j - alpha_j v_j fused with ||s_j||^2.  Fresh clones are
+        // host-authoritative: drop aliased device entries first.
+        let mut s = r.clone_panel();
+        for col in s.cols() {
+            for l in 0..col.local_blocks() {
+                ctx.host_mut(col.block(l));
+            }
+        }
+        let neg_alpha: Vec<S> = alpha.iter().map(|&a| -a).collect();
+        let ss = pfused_axpy_norm2_cols(ctx, &neg_alpha, &v, &mut s, &active);
+        // Early convergence at the half step: x_j += alpha_j p_j, done.
+        let mut early = vec![false; k];
+        for j in 0..k {
+            if !active[j] {
+                continue;
+            }
+            let snorm = ss[j].sqrt();
+            if snorm <= tol[j] {
+                early[j] = true;
+                active[j] = false;
+                stats[j] = Some(IterStats::new(it + 1, snorm / bnorm[j], true));
+            }
+        }
+        if early.iter().any(|&e| e) {
+            paxpy_cols(ctx, &alpha, &p, &mut x, &early);
+        }
+        let t = a.apply_cols(ctx, &s, &active);
+        // (t_j·t_j, t_j·s_j) in one pass and one 2k-lane allreduce.
+        let (tt, ts) = pfused_norm2_dot_cols(ctx, &t, &s, &active);
+        let mut tt_break = vec![false; k];
+        for j in 0..k {
+            if active[j] && tt[j] == S::zero() {
+                // t·t breakdown: take the half step (residual becomes s_j)
+                // and retire the lane unconverged.
+                tt_break[j] = true;
+                active[j] = false;
+                stats[j] = Some(IterStats::new(it + 1, ss[j].sqrt() / bnorm[j], false));
+            }
+        }
+        if tt_break.iter().any(|&e| e) {
+            paxpy_cols(ctx, &alpha, &p, &mut x, &tt_break);
+        }
+        let omega: Vec<S> =
+            (0..k).map(|j| if active[j] { ts[j] / tt[j] } else { S::zero() }).collect();
+        // x_j += alpha_j p_j + omega_j s_j
+        paxpy_cols(ctx, &alpha, &p, &mut x, &active);
+        paxpy_cols(ctx, &omega, &s, &mut x, &active);
+        // r_j = s_j - omega_j t_j fused with ||r_j||^2 and rho_j = r0_j·r_j.
+        // Retire the old residuals' device entries before the buffers drop.
+        for col in r.cols() {
+            for l in 0..col.local_blocks() {
+                ctx.host_mut(col.block(l));
+            }
+        }
+        r = s;
+        let neg_omega: Vec<S> = omega.iter().map(|&w| -w).collect();
+        let (rr, rho_new) =
+            pfused_axpy_norm2_dot_cols(ctx, &neg_omega, &t, &mut r, &r0, &active);
+        for j in 0..k {
+            if !active[j] {
+                continue;
+            }
+            let rnorm = rr[j].sqrt();
+            if rnorm <= tol[j] {
+                active[j] = false;
+                stats[j] = Some(IterStats::new(it + 1, rnorm / bnorm[j], true));
+            }
+        }
+        let beta: Vec<S> = (0..k)
+            .map(|j| {
+                if active[j] {
+                    (rho_new[j] / rho[j]) * (alpha[j] / omega[j])
+                } else {
+                    S::zero()
+                }
+            })
+            .collect();
+        rho = rho_new;
+        // p_j = r_j + beta_j (p_j - omega_j v_j)
+        paxpy_cols(ctx, &neg_omega, &v, &mut p, &active);
+        pxpay_cols(ctx, &beta, &r, &mut p, &active);
+    }
+    for j in 0..k {
+        if active[j] {
+            ctx.set_tenant(Some(j));
+            let rnorm = pnorm2(ctx, r.col(j));
+            ctx.set_tenant(None);
+            stats[j] = Some(IterStats::new(cfg.max_iter, rnorm / bnorm[j], false));
+        }
+    }
+    Ok((x, stats.into_iter().map(|s| s.expect("every column reported")).collect()))
+}

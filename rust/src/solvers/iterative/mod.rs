@@ -16,6 +16,7 @@
 
 pub mod bicg;
 pub mod bicgstab;
+pub mod block;
 pub mod cg;
 pub mod gmres;
 pub mod pipecg;
@@ -23,6 +24,7 @@ pub mod precond;
 
 pub use bicg::bicg;
 pub use bicgstab::bicgstab;
+pub use block::{block_bicgstab, block_cg};
 pub use cg::cg;
 pub use gmres::gmres;
 pub use pipecg::pipecg;

@@ -9,7 +9,11 @@ pub mod direct;
 pub mod iterative;
 pub mod serial;
 
-pub use direct::{apply_pivots, pchol_factor, pchol_solve, plu_factor, plu_solve, ptrsv, PivotMap, TriKind};
+pub use direct::{
+    apply_pivots, pchol_factor, pchol_solve, pchol_solve_panel, plu_factor, plu_solve,
+    plu_solve_panel, ptrsm, ptrsv, PivotMap, TriKind,
+};
 pub use iterative::{
-    bicg, bicgstab, cg, gmres, pipecg, IterConfig, IterMethod, IterStats, JacobiPrecond, LinOp,
+    bicg, bicgstab, block_bicgstab, block_cg, cg, gmres, pipecg, IterConfig, IterMethod,
+    IterStats, JacobiPrecond, LinOp,
 };

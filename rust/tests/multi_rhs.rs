@@ -1,0 +1,288 @@
+//! Integration: batched multi-RHS solves vs looped single-RHS solves.
+//!
+//! The contract (`DESIGN.md` §14): batching changes *cost accounting and
+//! communication shape only* — per-column arithmetic is untouched.  So a
+//! k-column panel solve must reproduce k looped single solves **bit for
+//! bit** (LU, Cholesky, blocked CG), on every mesh, including edge tiles
+//! (n not a multiple of the tile) and the k = 1 degenerate panel.
+//! Block BiCGSTAB is pinned bitwise at k = 1 and to solver accuracy for
+//! k > 1 (its breakdown handling is per-column "lite" masking).
+
+use std::sync::Arc;
+
+use cuplss::accel::CpuEngine;
+use cuplss::comm::{NetworkModel, World};
+use cuplss::dist::{gather_vector, Descriptor, DistMatrix, DistMultiVector, DistVector};
+use cuplss::mesh::{Mesh, MeshShape};
+use cuplss::pblas::Ctx;
+use cuplss::solvers::{
+    bicgstab, block_bicgstab, block_cg, cg, pchol_solve, pchol_solve_panel, plu_solve,
+    plu_solve_panel, IterConfig,
+};
+
+/// Deterministic dense SPD test matrix (same on all ranks).
+fn spd_elem(n: usize) -> impl Fn(usize, usize) -> f64 + Clone + Send + Sync {
+    move |i, j| {
+        let base = (((i * 37 + j * 61) % 97) as f64) / 97.0 - 0.5;
+        let sym = base + ((((j * 37 + i * 61) % 97) as f64) / 97.0 - 0.5);
+        if i == j {
+            2.0 * n as f64 + sym
+        } else {
+            sym * 0.5
+        }
+    }
+}
+
+/// Deterministic diagonally-dominant nonsymmetric matrix.
+fn nonsym_elem(n: usize) -> impl Fn(usize, usize) -> f64 + Clone + Send + Sync {
+    move |i, j| {
+        let v = (((i * 13 + j * 29 + 7) % 101) as f64) / 101.0 - 0.5;
+        if i == j {
+            n as f64 + 1.0 + v
+        } else {
+            v
+        }
+    }
+}
+
+fn rhs_elem(n: usize, elem: &impl Fn(usize, usize) -> f64, i: usize) -> f64 {
+    let xt = |j: usize| ((j as f64) * 0.21).sin() + 1.0;
+    (0..n).map(|j| elem(i, j) * xt(j)).sum()
+}
+
+/// Per-column RHS coefficients: exact in floating point (`serve`'s
+/// `rhs_coeff` scheme), so `coeff * b` scales without rounding surprises.
+const COEFFS: &[f64] = &[1.0, 1.625, 1.25];
+
+/// 1 / 2 / 4 ranks — the panel paths must not care about the mesh shape.
+const MESHES: &[(usize, usize)] = &[(1, 1), (1, 2), (2, 2)];
+
+/// Gather every column of a batched solve and of k looped single solves;
+/// assert bitwise equality per element.
+fn assert_bitwise(batch: &[Vec<f64>], looped: &[Vec<f64>], what: &str, pr: usize, pc: usize) {
+    assert_eq!(batch.len(), looped.len());
+    for (j, (xb, xs)) in batch.iter().zip(looped).enumerate() {
+        assert_eq!(xb.len(), xs.len());
+        for i in 0..xb.len() {
+            assert!(
+                xb[i].to_bits() == xs[i].to_bits(),
+                "{what} mesh {pr}x{pc} col {j} row {i}: batched {} != single {}",
+                xb[i],
+                xs[i]
+            );
+        }
+    }
+}
+
+/// Run `which` ("lu" | "chol") batched-vs-looped on one mesh; k columns.
+fn direct_panel_vs_looped(n: usize, tile: usize, pr: usize, pc: usize, which: &'static str) {
+    let k = COEFFS.len();
+    let out = World::run::<f64, _, _>(pr * pc, NetworkModel::gigabit_ethernet(), move |comm| {
+        let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+        let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(tile)));
+        let desc = Descriptor::new(n, n, tile, mesh.shape());
+        let spd = which == "chol";
+        let a0 = if spd {
+            DistMatrix::from_fn(desc, mesh.row(), mesh.col(), spd_elem(n))
+        } else {
+            DistMatrix::from_fn(desc, mesh.row(), mesh.col(), nonsym_elem(n))
+        };
+        let rhs = move |i: usize| {
+            if spd {
+                rhs_elem(n, &spd_elem(n), i)
+            } else {
+                rhs_elem(n, &nonsym_elem(n), i)
+            }
+        };
+        let bp = DistMultiVector::from_fn(desc, mesh.row(), mesh.col(), k, |i, j| {
+            COEFFS[j] * rhs(i)
+        });
+
+        // Batched: one factorization, RHS-panel substitutions.
+        let mut a = a0.clone();
+        let xp = if spd {
+            pchol_solve_panel(&ctx, &mut a, &bp).expect("panel chol")
+        } else {
+            plu_solve_panel(&ctx, &mut a, &bp).expect("panel lu")
+        };
+        let batch: Vec<Vec<f64>> =
+            (0..k).map(|j| gather_vector(&mesh, xp.col(j))).collect();
+
+        // Looped: k full single-RHS solves (fresh factorization each).
+        let looped: Vec<Vec<f64>> = (0..k)
+            .map(|j| {
+                let b = DistVector::from_fn(desc, mesh.row(), mesh.col(), move |i| {
+                    COEFFS[j] * rhs(i)
+                });
+                let mut a = a0.clone();
+                let x = if spd {
+                    pchol_solve(&ctx, &mut a, &b).expect("single chol")
+                } else {
+                    plu_solve(&ctx, &mut a, &b).expect("single lu")
+                };
+                gather_vector(&mesh, &x)
+            })
+            .collect();
+        (batch, looped)
+    });
+    // Gathers land on rank 0 only.
+    let (batch, looped) = out.into_iter().next().unwrap();
+    let (batch, looped): (Vec<Vec<f64>>, Vec<Vec<f64>>) = (
+        batch.into_iter().map(|c| c.unwrap()).collect(),
+        looped.into_iter().map(|c| c.unwrap()).collect(),
+    );
+    assert_bitwise(&batch, &looped, which, pr, pc);
+}
+
+#[test]
+fn plu_panel_matches_looped_singles_bitwise() {
+    // n = 45, tile = 8: edge tiles + identity padding on the last panel —
+    // the non-divisible case the RHS panel must survive.
+    for &(pr, pc) in MESHES {
+        direct_panel_vs_looped(45, 8, pr, pc, "lu");
+    }
+}
+
+#[test]
+fn pchol_panel_matches_looped_singles_bitwise() {
+    for &(pr, pc) in MESHES {
+        direct_panel_vs_looped(42, 8, pr, pc, "chol");
+    }
+}
+
+#[test]
+fn block_cg_matches_looped_cg_bitwise_with_mixed_tolerances() {
+    let (n, tile) = (48usize, 8usize);
+    let k = COEFFS.len();
+    // Mixed per-column targets: columns converge at different iterations,
+    // so the masking path is exercised, not just the all-active sweep.
+    let tols = [1e-8, 1e-10, 1e-6];
+    for &(pr, pc) in MESHES {
+        let out =
+            World::run::<f64, _, _>(pr * pc, NetworkModel::gigabit_ethernet(), move |comm| {
+                let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+                let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(tile)));
+                let desc = Descriptor::new(n, n, tile, mesh.shape());
+                let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), spd_elem(n));
+                let rhs = move |i: usize| rhs_elem(n, &spd_elem(n), i);
+                let bp = DistMultiVector::from_fn(desc, mesh.row(), mesh.col(), k, |i, j| {
+                    COEFFS[j] * rhs(i)
+                });
+                let cfg = IterConfig { tol: 1e-8, max_iter: 400, restart: 30 };
+                let (xp, stats) = block_cg(&ctx, &a, &bp, &cfg, &tols).expect("block cg");
+                let batch: Vec<Vec<f64>> =
+                    (0..k).map(|j| gather_vector(&mesh, xp.col(j))).collect();
+                let mut looped = Vec::new();
+                let mut looped_stats = Vec::new();
+                for j in 0..k {
+                    let b = DistVector::from_fn(desc, mesh.row(), mesh.col(), move |i| {
+                        COEFFS[j] * rhs(i)
+                    });
+                    let cfg_j = IterConfig { tol: tols[j], ..cfg };
+                    let (x, st) = cg(&ctx, &a, &b, &cfg_j).expect("single cg");
+                    looped.push(gather_vector(&mesh, &x));
+                    looped_stats.push((st.iterations, st.converged));
+                }
+                let batch_stats: Vec<(usize, bool)> =
+                    stats.iter().map(|s| (s.iterations, s.converged)).collect();
+                (batch, looped, batch_stats, looped_stats)
+            });
+        let (batch, looped, bs, ls) = out.into_iter().next().unwrap();
+        let (batch, looped): (Vec<Vec<f64>>, Vec<Vec<f64>>) = (
+            batch.into_iter().map(|c| c.unwrap()).collect(),
+            looped.into_iter().map(|c| c.unwrap()).collect(),
+        );
+        assert_bitwise(&batch, &looped, "block_cg", pr, pc);
+        // Same convergence story, column by column.
+        assert_eq!(bs, ls, "mesh {pr}x{pc}: per-column iteration counts differ");
+    }
+}
+
+#[test]
+fn k_1_panels_are_the_single_rhs_path_bitwise() {
+    // The degenerate batch: a one-column panel is *defined* as the single
+    // path (plu_solve/pchol_solve route through it), and the block Krylov
+    // solvers must collapse to their scalar recurrences.
+    let (n, tile, pr, pc) = (40usize, 8usize, 2usize, 2usize);
+    let out = World::run::<f64, _, _>(pr * pc, NetworkModel::gigabit_ethernet(), move |comm| {
+        let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+        let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(tile)));
+        let desc = Descriptor::new(n, n, tile, mesh.shape());
+        let cfg = IterConfig { tol: 1e-9, max_iter: 400, restart: 30 };
+
+        let a_spd = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), spd_elem(n));
+        let b_spd = DistVector::from_fn(desc, mesh.row(), mesh.col(), move |i| {
+            rhs_elem(n, &spd_elem(n), i)
+        });
+        let bp_spd = DistMultiVector::from_cols(vec![b_spd.clone_vec()]);
+        let (x1, s1) = block_cg(&ctx, &a_spd, &bp_spd, &cfg, &[cfg.tol]).expect("block cg");
+        let (x0, s0) = cg(&ctx, &a_spd, &b_spd, &cfg).expect("cg");
+
+        let a_ns = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), nonsym_elem(n));
+        let b_ns = DistVector::from_fn(desc, mesh.row(), mesh.col(), move |i| {
+            rhs_elem(n, &nonsym_elem(n), i)
+        });
+        let bp_ns = DistMultiVector::from_cols(vec![b_ns.clone_vec()]);
+        let (y1, t1) =
+            block_bicgstab(&ctx, &a_ns, &bp_ns, &cfg, &[cfg.tol]).expect("block bicgstab");
+        let (y0, t0) = bicgstab(&ctx, &a_ns, &b_ns, &cfg).expect("bicgstab");
+
+        (
+            gather_vector(&mesh, x1.col(0)),
+            gather_vector(&mesh, &x0),
+            (s1[0].iterations, s1[0].converged, s0.iterations, s0.converged),
+            gather_vector(&mesh, y1.col(0)),
+            gather_vector(&mesh, &y0),
+            (t1[0].iterations, t1[0].converged, t0.iterations, t0.converged),
+        )
+    });
+    let (x1, x0, s, y1, y0, t) = out.into_iter().next().unwrap();
+    let (x1, x0, y1, y0) = (x1.unwrap(), x0.unwrap(), y1.unwrap(), y0.unwrap());
+    assert_bitwise(&[x1], &[x0], "block_cg k=1", pr, pc);
+    assert_bitwise(&[y1], &[y0], "block_bicgstab k=1", pr, pc);
+    assert_eq!(s.0, s.2, "cg iteration count");
+    assert_eq!(s.1, s.3, "cg convergence flag");
+    assert_eq!(t.0, t.2, "bicgstab iteration count");
+    assert_eq!(t.1, t.3, "bicgstab convergence flag");
+}
+
+#[test]
+fn block_bicgstab_solves_k_rhs_to_solver_accuracy() {
+    // k > 1 BiCGSTAB: pinned to accuracy (not bits — its per-column
+    // breakdown masking is "lite", DESIGN.md §14) against known answers.
+    let (n, tile) = (40usize, 8usize);
+    let k = COEFFS.len();
+    for &(pr, pc) in MESHES {
+        let out =
+            World::run::<f64, _, _>(pr * pc, NetworkModel::gigabit_ethernet(), move |comm| {
+                let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+                let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(tile)));
+                let desc = Descriptor::new(n, n, tile, mesh.shape());
+                let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), nonsym_elem(n));
+                let rhs = move |i: usize| rhs_elem(n, &nonsym_elem(n), i);
+                let bp = DistMultiVector::from_fn(desc, mesh.row(), mesh.col(), k, |i, j| {
+                    COEFFS[j] * rhs(i)
+                });
+                let cfg = IterConfig { tol: 1e-10, max_iter: 400, restart: 30 };
+                let (xp, stats) =
+                    block_bicgstab(&ctx, &a, &bp, &cfg, &[1e-10; 3]).expect("block bicgstab");
+                let cols: Vec<Vec<f64>> =
+                    (0..k).map(|j| gather_vector(&mesh, xp.col(j))).collect();
+                let conv: Vec<bool> = stats.iter().map(|s| s.converged).collect();
+                (cols, conv)
+            });
+        let (cols, conv) = out.into_iter().next().unwrap();
+        assert!(conv.iter().all(|&c| c), "mesh {pr}x{pc}: all columns converge");
+        for (j, col) in cols.into_iter().enumerate() {
+            let col = col.unwrap();
+            for i in 0..n {
+                let want = COEFFS[j] * (((i as f64) * 0.21).sin() + 1.0);
+                assert!(
+                    (col[i] - want).abs() < 1e-7,
+                    "mesh {pr}x{pc} col {j} row {i}: {} vs {want}",
+                    col[i]
+                );
+            }
+        }
+    }
+}
