@@ -647,6 +647,56 @@ def sparse_iter_makespan_prefetch(method, n, nnz, iters, restart, p, b):
     return sparse_iter_makespan_fused(method, n, nnz, iters, restart, p, b)
 
 
+def halo_wire(p, neighbors, ghost_elems, b):
+    """rust halo_wire: `neighbors` point-to-point ghost segments of
+    ceil(ghost_elems / neighbors) scalars; zero with no neighbors."""
+    if neighbors == 0:
+        return 0.0
+    return neighbors * p.msg(ceil_div(ghost_elems, neighbors), b)
+
+
+def _sparse_fused_with_wire(method, n, nnz, iters, diag_frac, wire, p, b):
+    """rust sparse_fused_with_wire: max(wire, diag) + off per matvec, the
+    fused BLAS-1 chain for the rest — CG and BiCGSTAB arms only."""
+    t = p.tile
+    kt = ceil_div(n, t)
+    pr = p.pr
+    my_rows = ceil_div(kt, pr)
+    vec_elems = my_rows * t
+    _ring, spmv, dot, vop = sparse_cg_terms(n, nnz, p, b)
+    matvec = max(wire, diag_frac * spmv) + (1.0 - diag_frac) * spmv
+    axpy_norm2 = p.blas1_fused(vec_elems, 3, 4, b) + 2.0 * p.tree(pr, 1, b)
+    axpy_norm2_dot = p.blas1_fused(vec_elems, 4, 6, b) + 2.0 * p.tree(pr, 2, b)
+    norm2_dot = p.blas1_fused(vec_elems, 2, 4, b) + 2.0 * p.tree(pr, 2, b)
+    xpay = p.blas1_fused(vec_elems, 3, 2, b)
+    if method == "cg":
+        per_iter = matvec + dot + vop + axpy_norm2 + xpay
+    elif method == "bicgstab":
+        per_iter = (
+            2.0 * matvec + dot + axpy_norm2 + norm2_dot + 3.0 * vop
+            + axpy_norm2_dot + xpay
+        )
+    else:
+        raise KeyError(method)
+    return iters * per_iter
+
+
+def sparse_iter_makespan_split(method, n, nnz, iters, diag_frac, p, b):
+    """rust sparse_iter_makespan_split: the allgather arm of the halo
+    bench — wire leg = the column-comm ring of the whole padded vector."""
+    ring, _spmv, _dot, _vop = sparse_cg_terms(n, nnz, p, b)
+    return _sparse_fused_with_wire(method, n, nnz, iters, diag_frac, ring, p, b)
+
+
+def sparse_iter_makespan_halo(method, n, nnz, iters, diag_frac,
+                              neighbors, ghost_elems, p, b):
+    """rust sparse_iter_makespan_halo: wire leg = halo_wire over the exact
+    enumerated coupling surface; everything else shared with the split
+    twin, so halo can never model slower than allgather."""
+    wire = halo_wire(p, neighbors, ghost_elems, b)
+    return _sparse_fused_with_wire(method, n, nnz, iters, diag_frac, wire, p, b)
+
+
 def sparse_cg_split_makespan(n, nnz, iters, diag_frac, p, b):
     ring, spmv, dot, vop = sparse_cg_terms(n, nnz, p, b)
     matvec = max(ring, diag_frac * spmv) + (1.0 - diag_frac) * spmv
@@ -658,6 +708,84 @@ def sparse_pipecg_overlap_makespan(n, nnz, iters, diag_frac, p, b):
     matvec = max(ring, diag_frac * spmv) + (1.0 - diag_frac) * spmv
     reduction = 2.0 * p.tree(p.pr, 2, b)
     return iters * (max(matvec, reduction) + 11.0 * vop)
+
+
+# ---------------------------------------------------------------------------
+# workloads/stencil.rs — nnz closed forms + the exact halo-surface counts
+# ---------------------------------------------------------------------------
+
+
+def poisson1d_nnz(g):
+    return 3 * g - 2
+
+
+def poisson2d_nnz(g):
+    return 5 * g * g - 4 * g
+
+
+def poisson3d_nnz(g):
+    return 7 * g**3 - 6 * g * g
+
+
+def stencil_strides(g, dim):
+    """rust stencil_strides: row i's off-diagonal couplings sit at i ± g^k."""
+    return [g**k for k in range(dim)]
+
+
+def stencil_halo_counts(g, dim, tile, pr):
+    """Verbatim port of rust workloads::stencil_halo_counts — the exact
+    O(n·dim) enumeration of a dim-D Poisson stencil's coupling surface
+    under the round-robin tile-row distribution (tile row ti on process
+    row ti mod pr).  Max fields are worst-case over process rows."""
+    n = g**dim
+    strides = stencil_strides(g, dim)
+
+    def owner(x):
+        return (x // tile) % pr
+
+    ghost = [0] * pr
+    send = [0] * pr
+    pair = [[False] * pr for _ in range(pr)]
+    diag_nnz = n  # every diagonal entry is owned by its own row
+    total_nnz = n
+    for j in range(n):
+        oj = owner(j)
+        # Process rows referencing column j from a remote row i = j -+ s.
+        refs = []
+        for s in strides:
+            # i = j - s references j = i + s: valid when i's axis
+            # coordinate is below the far face.
+            if j >= s and (j - s) // s % g < g - 1:
+                oi = owner(j - s)
+                total_nnz += 1
+                if oi != oj:
+                    if oi not in refs:
+                        refs.append(oi)
+                else:
+                    diag_nnz += 1
+            # i = j + s references j = i - s: valid when i's axis
+            # coordinate is above the near face.
+            if j + s < n and (j + s) // s % g > 0:
+                oi = owner(j + s)
+                total_nnz += 1
+                if oi != oj:
+                    if oi not in refs:
+                        refs.append(oi)
+                else:
+                    diag_nnz += 1
+        for r in refs:
+            ghost[r] += 1
+            pair[r][oj] = True
+            pair[oj][r] = True
+        send[oj] += len(refs)
+    neighbors = max(sum(1 for q in range(pr) if pair[r][q]) for r in range(pr))
+    return {
+        "ghost_elems": max(ghost),
+        "send_elems": max(send),
+        "neighbors": neighbors,
+        "diag_nnz": diag_nnz,
+        "total_nnz": total_nnz,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -1082,6 +1210,39 @@ def serving_rows():
     return rows
 
 
+HALO_STENCILS = (("poisson2d", 512, 2), ("poisson3d", 64, 3))
+HALO_ITERS = 100
+
+
+def halo_rows():
+    """Rows of BENCH_halo.json (rust/benches/halo.rs): each row is
+    (stencil, method, grid, n, nnz, ranks, pr, neighbors, ghost_elems,
+    diag_frac, allgather, halo, strict).  ATLAS arm only — the sparse path
+    has no AOT kernels."""
+    rows = []
+    for ranks in PAPER_RANKS:
+        p = params(ranks, gpu=False)
+        pr = p.pr
+        for stencil, grid, dim in HALO_STENCILS:
+            n = grid**dim
+            h = stencil_halo_counts(grid, dim, p.tile, pr)
+            diag_frac = h["diag_nnz"] / h["total_nnz"]
+            for m, name in (("cg", "CG"), ("bicgstab", "BiCGSTAB")):
+                rows.append((
+                    stencil, name, grid, n, h["total_nnz"], ranks, pr,
+                    h["neighbors"], h["ghost_elems"], diag_frac,
+                    sparse_iter_makespan_split(
+                        m, n, h["total_nnz"], HALO_ITERS, diag_frac, p, 8
+                    ),
+                    sparse_iter_makespan_halo(
+                        m, n, h["total_nnz"], HALO_ITERS, diag_frac,
+                        h["neighbors"], h["ghost_elems"], p, 8
+                    ),
+                    pr > 1,
+                ))
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # Committed-artifact rendering (byte-identical to the rust benches' output)
 # ---------------------------------------------------------------------------
@@ -1137,6 +1298,24 @@ def render_residency_json():
             f'"ranks": {ranks}, "streaming_secs": {_rust_e6(streaming)}, '
             f'"cached_secs": {_rust_e6(cached)}, '
             f'"saved_frac": {1.0 - cached / streaming:.4f}}}{comma}'
+        )
+    return "\n".join(lines + ["  ]", "}", ""])
+
+
+def render_halo_json():
+    """The exact bytes `cargo bench --bench halo` writes."""
+    rows = halo_rows()
+    lines = ['{', '  "network": "gigabit_ethernet",', '  "entries": [']
+    for i, (stencil, method, grid, n, nnz, ranks, pr, neighbors, ghost,
+            diag_frac, ag, ha, _strict) in enumerate(rows):
+        comma = "," if i + 1 < len(rows) else ""
+        lines.append(
+            f'    {{"stencil": "{stencil}", "method": "{method}", '
+            f'"grid": {grid}, "n": {n}, "nnz": {nnz}, "ranks": {ranks}, '
+            f'"pr": {pr}, "neighbors": {neighbors}, "ghost_elems": {ghost}, '
+            f'"diag_frac": {diag_frac:.6f}, '
+            f'"allgather_secs": {_rust_e6(ag)}, "halo_secs": {_rust_e6(ha)}, '
+            f'"saved_frac": {1.0 - ha / ag:.4f}}}{comma}'
         )
     return "\n".join(lines + ["  ]", "}", ""])
 

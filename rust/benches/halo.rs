@@ -1,0 +1,190 @@
+//! Bench: neighbor-exchange (halo) `pspmv` vs the allgather exchange —
+//! the printed number behind the sparse scaling subsystem (`DESIGN.md`
+//! §15).
+//!
+//! For every paper rank count on the gigabit network (host engine — the
+//! sparse path has no AOT kernels), evaluates the analytic model for 2-D
+//! and 3-D Poisson stencils in two arms that differ **only** in the
+//! matvec's wire leg:
+//!
+//! * **allgather** — the split-phase schedule shipping the whole padded
+//!   vector around the column ring each matvec (O(n) wire);
+//! * **halo** — the same schedule with the point-to-point ghost exchange:
+//!   `neighbors` messages of the exact enumerated coupling surface
+//!   (O(surface) wire), overlapped with the same diagonal-block compute.
+//!
+//! The surface inputs (`ghost_elems`, `neighbors`, `diag_frac`) come from
+//! `stencil_halo_counts` — an exact enumeration of the stencil under the
+//! round-robin tile distribution, not a closed-form guess.
+//!
+//! Emits `BENCH_halo.json` and asserts the acceptance shape: halo <=
+//! allgather on every configuration, strictly smaller wherever the mesh
+//! has more than one process row (P >= 4 here: `near_square` folds P = 2
+//! into one row), and an exact wash at one process row (both wires are
+//! zero).
+//!
+//! ```sh
+//! cargo bench --bench halo
+//! ```
+
+use cuplss::accel::{ComputeProfile, DEFAULT_DEVICE_MEM};
+use cuplss::bench_harness::model::{sparse_iter_makespan_halo, sparse_iter_makespan_split};
+use cuplss::bench_harness::{ModelParams, PAPER_RANKS};
+use cuplss::comm::NetworkModel;
+use cuplss::mesh::MeshShape;
+use cuplss::solvers::IterMethod;
+use cuplss::util::fmt;
+use cuplss::workloads::stencil_halo_counts;
+
+struct Row {
+    stencil: &'static str,
+    method: &'static str,
+    grid: usize,
+    n: usize,
+    nnz: usize,
+    ranks: usize,
+    pr: usize,
+    neighbors: usize,
+    ghost_elems: usize,
+    diag_frac: f64,
+    allgather: f64,
+    halo: f64,
+    /// Must the halo win strictly (more than one process row)?
+    strict: bool,
+}
+
+fn params(ranks: usize) -> ModelParams {
+    ModelParams {
+        tile: 256,
+        shape: MeshShape::near_square(ranks),
+        net: NetworkModel::gigabit_ethernet(),
+        engine: ComputeProfile::q6600_atlas(),
+        panel_cpu: ComputeProfile::q6600_atlas(),
+        swap_fraction: 0.5,
+        device_mem: DEFAULT_DEVICE_MEM,
+    }
+}
+
+fn main() {
+    let iters = 100usize;
+    let mut rows: Vec<Row> = Vec::new();
+
+    for &ranks in PAPER_RANKS {
+        let p = params(ranks);
+        let pr = p.shape.pr;
+        for (stencil, grid, dim) in [("poisson2d", 512usize, 2u32), ("poisson3d", 64, 3)] {
+            let n = grid.pow(dim);
+            let h = stencil_halo_counts(grid, dim, p.tile, pr);
+            let diag_frac = h.diag_nnz as f64 / h.total_nnz as f64;
+            for (m, name) in [(IterMethod::Cg, "CG"), (IterMethod::Bicgstab, "BiCGSTAB")] {
+                rows.push(Row {
+                    stencil,
+                    method: name,
+                    grid,
+                    n,
+                    nnz: h.total_nnz,
+                    ranks,
+                    pr,
+                    neighbors: h.neighbors,
+                    ghost_elems: h.ghost_elems,
+                    diag_frac,
+                    allgather: sparse_iter_makespan_split::<f64>(
+                        m, n, h.total_nnz, iters, diag_frac, &p,
+                    ),
+                    halo: sparse_iter_makespan_halo::<f64>(
+                        m,
+                        n,
+                        h.total_nnz,
+                        iters,
+                        diag_frac,
+                        h.neighbors,
+                        h.ghost_elems,
+                        &p,
+                    ),
+                    strict: pr > 1,
+                });
+            }
+        }
+    }
+
+    // Table for the terminal.
+    let header =
+        ["stencil", "method", "P", "pr", "ghosts", "nbrs", "allgather", "halo", "saved"];
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.stencil.to_string(),
+                r.method.to_string(),
+                r.ranks.to_string(),
+                r.pr.to_string(),
+                r.ghost_elems.to_string(),
+                r.neighbors.to_string(),
+                fmt::secs(r.allgather),
+                fmt::secs(r.halo),
+                format!("{:.1}%", (1.0 - r.halo / r.allgather) * 100.0),
+            ]
+        })
+        .collect();
+    println!("== Halo exchange vs allgather (sparse matvec wire) ==");
+    println!("{}", fmt::table(&header, &body));
+
+    // Acceptance shape.
+    for r in &rows {
+        assert!(
+            r.halo <= r.allgather * (1.0 + 1e-9),
+            "{} {} P={}: halo {} > allgather {}",
+            r.stencil,
+            r.method,
+            r.ranks,
+            r.halo,
+            r.allgather
+        );
+        if r.strict {
+            assert!(
+                r.halo < r.allgather,
+                "{} {} P={} (pr={}): the halo must strictly win",
+                r.stencil,
+                r.method,
+                r.ranks,
+                r.pr
+            );
+        } else {
+            assert!(
+                (r.halo - r.allgather).abs() <= 1e-12 * r.allgather.max(1.0),
+                "{} {} P={}: one process row must be a wash",
+                r.stencil,
+                r.method,
+                r.ranks
+            );
+        }
+    }
+
+    // BENCH_halo.json (hand-rolled: the offline crate set has no serde).
+    let mut json = String::from("{\n  \"network\": \"gigabit_ethernet\",\n  \"entries\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"stencil\": \"{}\", \"method\": \"{}\", \"grid\": {}, \"n\": {}, \
+             \"nnz\": {}, \"ranks\": {}, \"pr\": {}, \"neighbors\": {}, \
+             \"ghost_elems\": {}, \"diag_frac\": {:.6}, \"allgather_secs\": {:.6e}, \
+             \"halo_secs\": {:.6e}, \"saved_frac\": {:.4}}}{}\n",
+            r.stencil,
+            r.method,
+            r.grid,
+            r.n,
+            r.nnz,
+            r.ranks,
+            r.pr,
+            r.neighbors,
+            r.ghost_elems,
+            r.diag_frac,
+            r.allgather,
+            r.halo,
+            1.0 - r.halo / r.allgather,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_halo.json", &json).expect("write BENCH_halo.json");
+    println!("wrote BENCH_halo.json ({} entries); the halo never loses.", rows.len());
+}

@@ -186,6 +186,41 @@ impl<S: Scalar> Engine<S> for CpuEngine {
         })
     }
 
+    fn spmv_t_part(
+        &self,
+        part: &CsrMatrix<S>,
+        total_nnz: usize,
+        total_ncols: usize,
+        x: &[S],
+        y: &mut [S],
+    ) -> Result<OpCost> {
+        assert_eq!(x.len(), part.nrows(), "spmv_t_part: x length != nrows");
+        assert_eq!(y.len(), part.ncols(), "spmv_t_part: y length != ncols");
+        assert!(part.nnz() <= total_nnz, "spmv_t_part: part larger than its whole");
+        // Same accumulation order as CsrMatrix::spmv_t, but *without* the
+        // zero-fill: rows ascending, CSR column order within each row, one
+        // `y[c] += v * x[i]` per stored entry — so running the column-split
+        // parts back to back reproduces the unsplit transpose matvec bit
+        // for bit on each part's own columns.
+        for i in 0..part.nrows() {
+            let (cols, vals) = part.row(i);
+            let xi = x[i];
+            for (&c, &v) in cols.iter().zip(vals) {
+                y[c] += v * xi;
+            }
+        }
+        // Fractional share of the one *transpose* matvec the blocking
+        // schedule prices (output width `total_ncols`), mirroring
+        // `spmv_part`'s share contract: complementary parts sum to exactly
+        // `spmv_cost(total_nnz, nrows, total_ncols)`.
+        let total = spmv_cost::<S>(&self.profile, total_nnz, part.nrows(), total_ncols);
+        let frac = if total_nnz == 0 { 0.0 } else { part.nnz() as f64 / total_nnz as f64 };
+        Ok(OpCost {
+            compute_secs: total.compute_secs * frac,
+            transfer_secs: total.transfer_secs * frac,
+        })
+    }
+
     fn blas1_cost(&self, len: usize) -> OpCost {
         // touched: 2 reads + 1 write; host engine streams nothing.
         self.profile.op_cost::<S>(

@@ -121,6 +121,26 @@ pub trait Engine<S: Scalar>: Send + Sync {
         y: &mut [S],
     ) -> Result<OpCost>;
 
+    /// Transpose twin of [`Engine::spmv_part`]: accumulate `y += A_part^T x`
+    /// over one column-split part of a row block.  `y.len() == part.ncols()`
+    /// (the part's own compact column space — the halo `pspmv_t` runs one
+    /// call per part and scatters each compact output itself).  Cost
+    /// contract mirrors `spmv_part` against the *transpose* matvec price:
+    /// each call charges `part.nnz / total_nnz` of one
+    /// `spmv_cost(total_nnz, part.nrows(), total_ncols)`, so complementary
+    /// parts sum to exactly the blocking transpose matvec — the compact
+    /// halo layout never charges more virtual compute than the full-width
+    /// `spmv_t` it replaces.  Gated off on the accelerated engine like the
+    /// other sparse ops.
+    fn spmv_t_part(
+        &self,
+        part: &CsrMatrix<S>,
+        total_nnz: usize,
+        total_ncols: usize,
+        x: &[S],
+        y: &mut [S],
+    ) -> Result<OpCost>;
+
     /// Modelled cost of a BLAS-1 op of `len` elements on this engine.
     fn blas1_cost(&self, len: usize) -> OpCost;
 

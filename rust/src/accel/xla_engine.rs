@@ -202,6 +202,20 @@ impl<S: Scalar> Engine<S> for XlaEngine<S> {
         ))
     }
 
+    fn spmv_t_part(
+        &self,
+        _part: &CsrMatrix<S>,
+        _total_nnz: usize,
+        _total_ncols: usize,
+        _x: &[S],
+        _y: &mut [S],
+    ) -> Result<OpCost> {
+        Err(Error::runtime(
+            "spmv_t_part is not available on the accelerated engine: no AOT sparse \
+             kernel artifact (run sparse operands with the CPU engine)",
+        ))
+    }
+
     fn blas1_cost(&self, len: usize) -> OpCost {
         // *Unfused* vector-vector ops stay on the host even in the
         // accelerated arm: shipping a 1 KiB axpy over PCIe costs more than

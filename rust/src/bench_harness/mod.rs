@@ -20,9 +20,9 @@ pub use model::{
     chol_makespan_prefetch, chol_makespan_resident, chol_solve_makespan_batched,
     cg_makespan_batched, iter_makespan_fused, iter_makespan_prefetch, lu_makespan_lookahead,
     lu_makespan_prefetch, lu_makespan_resident, lu_solve_makespan_batched,
-    sparse_cg_split_makespan, sparse_iter_makespan_fused, sparse_iter_makespan_prefetch,
-    sparse_pipecg_overlap_makespan, summa_makespan, summa_makespan_prefetch,
-    summa_makespan_resident, trsm_makespan, ModelParams,
+    halo_wire, sparse_cg_split_makespan, sparse_iter_makespan_fused, sparse_iter_makespan_halo,
+    sparse_iter_makespan_prefetch, sparse_iter_makespan_split, sparse_pipecg_overlap_makespan,
+    summa_makespan, summa_makespan_prefetch, summa_makespan_resident, trsm_makespan, ModelParams,
 };
 
 /// The paper's rank sweep (Figures 3 and 4).

@@ -33,10 +33,12 @@ pub mod clock;
 pub mod collectives;
 pub mod message;
 pub mod model;
+pub mod neighbor;
 pub mod transport;
 
 pub use clock::VClock;
 pub use message::{Payload, Tag};
 pub use model::NetworkModel;
 pub use collectives::{AllgatherRequest, AllreduceRequest, BcastRequest, ReduceOp};
+pub use neighbor::NeighborExchange;
 pub use transport::{Comm, CommStats, Group, RecvRequest, SendRequest, World};

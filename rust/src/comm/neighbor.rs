@@ -1,0 +1,150 @@
+//! Point-to-point neighbor exchange — the sparse halo's communication
+//! primitive (`DESIGN.md` §15).
+//!
+//! A [`NeighborExchange`] posts one split-phase receive per expected
+//! neighbor and one split-phase send per outgoing ghost segment, then
+//! returns immediately so the caller can compute under the exchange (the
+//! halo `pspmv`'s diagonal-block pass).  [`NeighborExchange::wait`] drains
+//! the receives (charging only latency compute did not cover, exactly like
+//! the `i`-collectives) and then retires the sends.
+//!
+//! Unlike the collectives there is no fixed algorithmic shape: the peer
+//! sets come from data (a [`crate::sparse::HaloPlan`]'s send/recv lists),
+//! may be empty (interior ranks of a 1-D stencil chain talk to at most two
+//! neighbors; a rank whose columns are all local talks to nobody), and are
+//! in general asymmetric per direction.  What *is* fixed is the wire
+//! discipline: every posted message really moves through the transport and
+//! charges the NIC timeline `alpha + beta * bytes`, so the cost model's
+//! O(surface) halo terms are measuring the same machinery the allgather
+//! path does — just with far fewer bytes on it.
+
+use super::message::{Payload, Tag};
+use super::transport::{Group, RecvRequest, SendRequest};
+use crate::Scalar;
+
+/// An in-flight neighbor exchange over a [`Group`]: ghost segments out to
+/// each send-neighbor, one segment expected back from each recv-neighbor.
+pub struct NeighborExchange<'a, S: Scalar> {
+    recvs: Vec<(usize, RecvRequest<'a, S>)>,
+    sends: Vec<SendRequest<'a, S>>,
+}
+
+impl<'a, S: Scalar> NeighborExchange<'a, S> {
+    /// Start the exchange: post a receive from every group rank in
+    /// `incoming`, then send each `(group rank, segment)` of `outgoing`.
+    /// Receives are posted before any send so a symmetric exchange never
+    /// deadlocks regardless of peer order; self-loops are a caller bug
+    /// (a halo never ships locally-owned data).
+    pub fn start(
+        group: &Group<'a, S>,
+        tag: u32,
+        outgoing: Vec<(usize, Vec<S>)>,
+        incoming: &[usize],
+    ) -> Self {
+        let me = group.rank();
+        let recvs = incoming
+            .iter()
+            .map(|&src| {
+                assert_ne!(src, me, "neighbor exchange: receive from self");
+                (src, group.irecv(src, Tag::P2p(tag)))
+            })
+            .collect();
+        let sends = outgoing
+            .into_iter()
+            .map(|(dst, data)| {
+                assert_ne!(dst, me, "neighbor exchange: send to self");
+                group.isend(dst, Tag::P2p(tag), Payload::Data(data))
+            })
+            .collect();
+        NeighborExchange { recvs, sends }
+    }
+
+    /// Complete the exchange: wait every receive (in posted order),
+    /// then retire the sends.  Returns `(group rank, segment)` per
+    /// incoming neighbor, in the order `incoming` was given.
+    pub fn wait(self) -> Vec<(usize, Vec<S>)> {
+        let received: Vec<(usize, Vec<S>)> = self
+            .recvs
+            .into_iter()
+            .map(|(src, req)| (src, req.wait().into_data()))
+            .collect();
+        for s in self.sends {
+            s.wait();
+        }
+        received
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{NetworkModel, World};
+
+    #[test]
+    fn ring_exchange_delivers_each_segment() {
+        // 3 ranks, each sends its rank-stamped segment to the next and
+        // expects one from the previous.
+        let out = World::run::<f64, _, _>(3, NetworkModel::ideal(), |comm| {
+            let g = comm.world();
+            let me = g.rank();
+            let p = g.size();
+            let next = (me + 1) % p;
+            let prev = (me + p - 1) % p;
+            let seg = vec![me as f64; 4];
+            let ex = NeighborExchange::start(&g, 7, vec![(next, seg)], &[prev]);
+            let got = ex.wait();
+            assert_eq!(got.len(), 1);
+            assert_eq!(got[0].0, prev);
+            got[0].1.clone()
+        });
+        for (me, seg) in out.iter().enumerate() {
+            let prev = (me + 3 - 1) % 3;
+            assert_eq!(seg, &vec![prev as f64; 4]);
+        }
+    }
+
+    #[test]
+    fn empty_exchange_is_a_no_op() {
+        // A rank with no neighbors posts nothing and never blocks — and the
+        // wire stays silent.
+        let out = World::run::<f64, _, _>(2, NetworkModel::gigabit_ethernet(), |comm| {
+            let g = comm.world();
+            let ex = NeighborExchange::start(&g, 9, Vec::new(), &[]);
+            assert!(ex.wait().is_empty());
+            comm.stats().bytes_sent()
+        });
+        assert!(out.iter().all(|&b| b == 0), "no ghost traffic expected: {out:?}");
+    }
+
+    #[test]
+    fn asymmetric_peer_sets_complete() {
+        // Rank 0 broadcasts a segment to 1 and 2; only rank 1 replies.
+        let out = World::run::<f32, _, _>(3, NetworkModel::ideal(), |comm| {
+            let g = comm.world();
+            match g.rank() {
+                0 => {
+                    let ex = NeighborExchange::start(
+                        &g,
+                        3,
+                        vec![(1, vec![1.5f32]), (2, vec![2.5f32])],
+                        &[1],
+                    );
+                    let got = ex.wait();
+                    (got[0].0, got[0].1[0])
+                }
+                1 => {
+                    let ex =
+                        NeighborExchange::start(&g, 3, vec![(0, vec![9.0f32])], &[0]);
+                    let got = ex.wait();
+                    (got[0].0, got[0].1[0])
+                }
+                _ => {
+                    let ex = NeighborExchange::start(&g, 3, Vec::new(), &[0]);
+                    let got = ex.wait();
+                    (got[0].0, got[0].1[0])
+                }
+            }
+        });
+        assert_eq!(out, vec![(1, 9.0), (0, 1.5), (0, 2.5)]);
+    }
+}

@@ -22,11 +22,11 @@
 //!   used by [`crate::solvers::JacobiPrecond`].
 
 use super::pgemv::{pgemv, pgemv_cols, pgemv_t};
-use super::pspmv::{pspmv, pspmv_t};
+use super::pspmv::{pspmv, pspmv_halo, pspmv_t, pspmv_t_halo};
 use super::{tags, Ctx};
 use crate::comm::Payload;
 use crate::dist::{Descriptor, DistMatrix, DistMultiVector, DistVector};
-use crate::sparse::DistCsrMatrix;
+use crate::sparse::{DistCsrMatrix, HaloCsr};
 use crate::Scalar;
 
 /// A distributed linear operator the Krylov solvers can consume.
@@ -206,6 +206,35 @@ impl<S: Scalar> LinOp<S> for DistCsrMatrix<S> {
             }
         }
         ctx.charge(ctx.engine.blas1_cost(2 * nnz));
+    }
+}
+
+/// The halo-exchange routing of the sparse operator: the same row-block
+/// layout and the same results (bit for bit — see
+/// [`crate::sparse::HaloPlan`]'s renumbering contract), but matvecs run the
+/// point-to-point ghost exchange ([`pspmv_halo`]/[`pspmv_t_halo`]) instead
+/// of the O(n) allgather/allreduce.  Diagonal extraction and symmetric
+/// scaling delegate to the wrapped operator (`scale_sym` edits values via
+/// `local_mut`, which also invalidates the cached halo plan).
+impl<S: Scalar> LinOp<S> for HaloCsr<S> {
+    fn desc(&self) -> &Descriptor {
+        DistCsrMatrix::desc(self.inner())
+    }
+
+    fn apply(&self, ctx: &Ctx<'_, S>, x: &DistVector<S>) -> DistVector<S> {
+        pspmv_halo(ctx, self.inner(), x)
+    }
+
+    fn apply_t(&self, ctx: &Ctx<'_, S>, x: &DistVector<S>) -> DistVector<S> {
+        pspmv_t_halo(ctx, self.inner(), x)
+    }
+
+    fn extract_diag(&self, ctx: &Ctx<'_, S>) -> DistVector<S> {
+        self.inner().extract_diag(ctx)
+    }
+
+    fn scale_sym(&mut self, ctx: &Ctx<'_, S>, d: &DistVector<S>) {
+        self.inner_mut().scale_sym(ctx, d);
     }
 }
 

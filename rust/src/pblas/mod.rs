@@ -23,7 +23,7 @@ pub mod pvec;
 pub use linop::LinOp;
 pub use pgemm::pgemm_acc;
 pub use pgemv::{pgemv, pgemv_cols, pgemv_t};
-pub use pspmv::{pspmv, pspmv_t};
+pub use pspmv::{pspmv, pspmv_halo, pspmv_t, pspmv_t_halo};
 pub use pvec::{
     paxpy, paxpy_cols, pcopy, pdot, pdot_cols, pdot_partial, pfused_axpy_norm2,
     pfused_axpy_norm2_cols, pfused_axpy_norm2_dot, pfused_axpy_norm2_dot_cols,
@@ -62,6 +62,12 @@ pub(crate) mod tags {
     pub const DIAG: u32 = 5_000;
     /// Symmetric-scaling allgathers.
     pub const SCALE: u32 = 5_100;
+    /// Halo-exchange ghost segments (`+0` forward, `+1` transpose).
+    pub const HALO: u32 = 6_000;
+    /// The halo plan's one-time index handshake.
+    pub const HALO_PLAN: u32 = 6_100;
+    /// Schur-complement interface-system scalar allreduces.
+    pub const SCHUR: u32 = 6_200;
 }
 
 /// Per-rank execution context: mesh view + local compute engine + the

@@ -37,9 +37,9 @@
 //! testable directly on [`crate::accel::Engine::spmv`].
 
 use super::{tags, Ctx};
-use crate::comm::ReduceOp;
+use crate::comm::{NeighborExchange, ReduceOp};
 use crate::dist::DistVector;
-use crate::sparse::DistCsrMatrix;
+use crate::sparse::{owned_local_col, DistCsrMatrix};
 use crate::Scalar;
 
 /// This rank's vector blocks concatenated in local order — the per-rank
@@ -168,6 +168,142 @@ pub fn pspmv_t<S: Scalar>(
     for l in 0..y.local_blocks() {
         let ti = desc.global_ti(mesh.row(), l);
         y.block_mut(l).copy_from_slice(&summed[ti * t..(ti + 1) * t]);
+    }
+    y
+}
+
+/// `y = A x` over the **halo-exchange** distribution (`DESIGN.md` §15):
+/// instead of allgathering the whole padded vector, each rank ships only
+/// the ghost elements its neighbors' patterns reference — O(surface) wire
+/// volume — through point-to-point `isend`/`irecv`
+/// ([`crate::comm::NeighborExchange`]), with the diagonal-block pass
+/// overlapped under the exchange exactly like [`pspmv`]'s split-phase
+/// path.
+///
+/// **Bit-identical to [`pspmv`]**: the plan's compact column renumbering
+/// is monotone (see [`crate::sparse::HaloPlan`]), so every row's
+/// accumulation order — diagonal-block entries first, off-block entries
+/// second, CSR column order within each — matches the allgather path
+/// operation for operation.  First call builds (and caches) the plan via
+/// one collective index handshake; subsequent matvecs reuse it.
+pub fn pspmv_halo<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &DistCsrMatrix<S>,
+    x: &DistVector<S>,
+) -> DistVector<S> {
+    let desc = *a.desc();
+    assert_eq!(&desc, x.desc(), "pspmv_halo operand descriptors differ");
+    let t = desc.tile;
+    let mesh = ctx.mesh;
+    let col = mesh.col_comm();
+    let plan = a.halo_plan(&col, tags::HALO_PLAN);
+    let xloc = concat_blocks(x);
+
+    // 1. Start the ghost exchange: only the neighbor-referenced elements
+    //    hit the wire.
+    let exchange = plan.start_exchange(&col, tags::HALO, &desc, &xloc);
+
+    // 2. Overlapped: the diagonal-block pass over the compact local block.
+    let mut yloc = vec![S::zero(); a.local().nrows()];
+    let cost =
+        ctx.engine.spmv_part(&plan.diag_local, a.local_nnz(), &xloc, &mut yloc).expect("spmv");
+    ctx.charge(cost);
+
+    // 3. Finish the exchange (uncovered latency only), scatter the ghost
+    //    segments, and accumulate the off-block pass.
+    let received = exchange.wait();
+    let mut xghost = vec![S::zero(); plan.ghost_elems()];
+    plan.scatter_recv(&received, &mut xghost);
+    let cost =
+        ctx.engine.spmv_part(&plan.off_ghost, a.local_nnz(), &xghost, &mut yloc).expect("spmv");
+    ctx.charge(cost);
+
+    let mut y = DistVector::zeros(desc, mesh.row(), mesh.col());
+    for l in 0..y.local_blocks() {
+        y.block_mut(l).copy_from_slice(&yloc[l * t..(l + 1) * t]);
+    }
+    y
+}
+
+/// `y = A^T x` over the halo-exchange distribution: each rank's off-block
+/// entries produce contributions to *remote-owned* columns, which travel
+/// back along the reversed ghost routes (send and recv lists swap roles)
+/// instead of through a full-length column allreduce.
+///
+/// **Bit-identical to [`pspmv_t`]**: the owned-column partial is folded
+/// with the per-neighbor contributions in the column allreduce's exact
+/// binomial-tree association — including explicit `+0.0` partials for
+/// process rows whose patterns never touch the column, which is what the
+/// allgather path's zero-filled full-length partials contribute — so every
+/// element reproduces `allreduce_vec`'s floating-point sum bit for bit.
+pub fn pspmv_t_halo<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &DistCsrMatrix<S>,
+    x: &DistVector<S>,
+) -> DistVector<S> {
+    let desc = *a.desc();
+    assert_eq!(&desc, x.desc(), "pspmv_t_halo operand descriptors differ");
+    let t = desc.tile;
+    let mesh = ctx.mesh;
+    let col = mesh.col_comm();
+    let pr = desc.shape.pr;
+    let me = mesh.row();
+    let plan = a.halo_plan(&col, tags::HALO_PLAN);
+    let xloc = concat_blocks(x);
+    let width = a.local().nrows();
+
+    // 1. Ghost-column partials first, so their exchange can start early.
+    let mut wghost = vec![S::zero(); plan.ghost_elems()];
+    let cost = ctx
+        .engine
+        .spmv_t_part(&plan.off_ghost, a.local_nnz(), desc.padded_n(), &xloc, &mut wghost)
+        .expect("spmv_t");
+    ctx.charge(cost);
+
+    // 2. Reverse exchange: our ghost contributions go home to their
+    //    columns' owners (forward recv lists become sends and vice versa).
+    let outgoing: Vec<(usize, Vec<S>)> = (0..pr)
+        .filter(|&q| !plan.recv[q].is_empty())
+        .map(|q| (q, plan.recv_slots[q].iter().map(|&s| wghost[s]).collect()))
+        .collect();
+    let incoming: Vec<usize> = (0..pr).filter(|&q| !plan.send[q].is_empty()).collect();
+    let exchange = NeighborExchange::start(&col, tags::HALO + 1, outgoing, &incoming);
+
+    // 3. Overlapped: the owned-column partials.
+    let mut wdiag = vec![S::zero(); width];
+    let cost = ctx
+        .engine
+        .spmv_t_part(&plan.diag_local, a.local_nnz(), desc.padded_n(), &xloc, &mut wdiag)
+        .expect("spmv_t");
+    ctx.charge(cost);
+
+    // 4. Fold the per-process-row contributions in `allreduce_vec`'s exact
+    //    binomial association: level `mask` folds partner `r | mask` into
+    //    survivor `r`, zeros standing in for non-contributing rows.
+    let received = exchange.wait();
+    let mut acc: Vec<Vec<S>> = (0..pr).map(|_| vec![S::zero(); width]).collect();
+    acc[me] = wdiag;
+    for (q, seg) in &received {
+        for (&c, &v) in plan.send[*q].iter().zip(seg.iter()) {
+            acc[*q][owned_local_col(&desc, c)] = v;
+        }
+    }
+    let mut mask = 1;
+    while mask < pr {
+        let mut r = 0;
+        while r + mask < pr {
+            let (lo, hi) = acc.split_at_mut(r + mask);
+            for (ai, bi) in lo[r].iter_mut().zip(hi[0].iter()) {
+                *ai += *bi;
+            }
+            r += 2 * mask;
+        }
+        mask <<= 1;
+    }
+
+    let mut y = DistVector::zeros(desc, mesh.row(), mesh.col());
+    for l in 0..y.local_blocks() {
+        y.block_mut(l).copy_from_slice(&acc[0][l * t..(l + 1) * t]);
     }
     y
 }

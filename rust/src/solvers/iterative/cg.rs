@@ -10,6 +10,7 @@
 //! [`pxpay`] — same arithmetic bit for bit, 3 memory passes and a
 //! launch-per-block fewer each iteration.
 
+use super::precond::Preconditioner;
 use super::{norm_negligible, IterConfig, IterStats};
 use crate::dist::DistVector;
 use crate::pblas::{paxpy, pdot, pfused_axpy_norm2, pnorm2, pxpay, Ctx, LinOp};
@@ -55,6 +56,71 @@ pub fn cg<S: Scalar, A: LinOp<S> + ?Sized>(
         let beta = rr_new / rr;
         rr = rr_new;
         pxpay(ctx, beta, &r, &mut p); // p = r + beta p
+    }
+    let rnorm = pnorm2(ctx, &r);
+    Ok((x, IterStats::new(cfg.max_iter, rnorm / bnorm, false)))
+}
+
+/// Preconditioned CG: solve `A x = b` (A SPD) with a [`Preconditioner`]
+/// `m` approximating `A^{-1}` — the standard PCG recurrence on the
+/// `M^{-1}`-inner product.  Convergence is still judged on the *true*
+/// residual norm `||r||`, so results are comparable with [`cg`] at the
+/// same tolerance; the preconditioner only changes how fast it gets there.
+pub fn pcg<S: Scalar, A: LinOp<S> + ?Sized, M: Preconditioner<S> + ?Sized>(
+    ctx: &Ctx<'_, S>,
+    a: &A,
+    m: &M,
+    b: &DistVector<S>,
+    cfg: &IterConfig,
+) -> Result<(DistVector<S>, IterStats<S>)> {
+    let desc = *a.desc();
+    let mesh = ctx.mesh;
+    let bnorm = pnorm2(ctx, b);
+    let mut x = DistVector::zeros(desc, mesh.row(), mesh.col());
+    if norm_negligible(bnorm, desc.m) {
+        return Ok((x, IterStats::new(0, S::zero(), true)));
+    }
+    let tol = S::from_f64(cfg.tol).unwrap() * bnorm;
+
+    let mut r = b.clone_vec();
+    let z = m.apply(ctx, &r)?;
+    let mut p = z.clone_vec();
+    let mut rz = pdot(ctx, &r, &z);
+    if rz <= S::zero() {
+        return Err(Error::Breakdown {
+            method: "pcg",
+            detail: format!("r^T M^-1 r = {rz} at startup (preconditioner not SPD?)"),
+        });
+    }
+
+    for it in 0..cfg.max_iter {
+        let ap = a.apply(ctx, &p);
+        let pap = pdot(ctx, &p, &ap);
+        if pap <= S::zero() {
+            return Err(Error::Breakdown {
+                method: "pcg",
+                detail: format!("p^T A p = {pap} at iteration {it} (matrix not SPD?)"),
+            });
+        }
+        let alpha = rz / pap;
+        paxpy(ctx, alpha, &p, &mut x);
+        // r -= alpha A p and ||r||^2 in one fused kernel.
+        let rr_new = pfused_axpy_norm2(ctx, -alpha, &ap, &mut r);
+        let rnorm = rr_new.sqrt();
+        if rnorm <= tol {
+            return Ok((x, IterStats::new(it + 1, rnorm / bnorm, true)));
+        }
+        let z = m.apply(ctx, &r)?;
+        let rz_new = pdot(ctx, &r, &z);
+        if rz_new <= S::zero() {
+            return Err(Error::Breakdown {
+                method: "pcg",
+                detail: format!("r^T M^-1 r = {rz_new} at iteration {it}"),
+            });
+        }
+        let beta = rz_new / rz;
+        rz = rz_new;
+        pxpay(ctx, beta, &z, &mut p); // p = z + beta p
     }
     let rnorm = pnorm2(ctx, &r);
     Ok((x, IterStats::new(cfg.max_iter, rnorm / bnorm, false)))

@@ -21,14 +21,16 @@ pub mod cg;
 pub mod gmres;
 pub mod pipecg;
 pub mod precond;
+pub mod schur;
 
 pub use bicg::bicg;
 pub use bicgstab::bicgstab;
 pub use block::{block_bicgstab, block_cg};
-pub use cg::cg;
+pub use cg::{cg, pcg};
 pub use gmres::gmres;
 pub use pipecg::pipecg;
-pub use precond::JacobiPrecond;
+pub use precond::{BlockJacobiPrecond, JacobiPrecond, Preconditioner};
+pub use schur::{schur_cg, SchurStats};
 
 pub use crate::pblas::LinOp;
 

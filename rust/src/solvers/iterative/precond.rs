@@ -1,7 +1,15 @@
-//! Jacobi (diagonal) preconditioning — an extension beyond the paper's
-//! solver set (its future-work direction is richer preconditioning; the
-//! diagonal scaler is the natural first step and exercises the same
-//! distributed plumbing).
+//! Preconditioning — an extension beyond the paper's solver set (its
+//! future-work direction is richer preconditioning; the diagonal scaler
+//! is the natural first step and exercises the same distributed
+//! plumbing).  Two flavors live here:
+//!
+//! * [`JacobiPrecond`] — symmetric diagonal scaling (transforms the
+//!   system once, solvers run unmodified);
+//! * [`BlockJacobiPrecond`] — zero-overlap additive Schwarz over the
+//!   sparse row-block distribution: `M^{-1}` applies each rank's owned
+//!   diagonal block inverse (by a communication-free local CG), consumed
+//!   through the [`Preconditioner`] trait by [`crate::solvers::pcg`]
+//!   (`DESIGN.md` §15).
 //!
 //! Rather than threading M^{-1} through every solver, the preconditioner
 //! *transforms the system*: solve `(D^{-1/2} A D^{-1/2}) (D^{1/2} x) =
@@ -20,9 +28,82 @@
 //! also preserves the dense identity-padding invariant through
 //! [`LinOp::scale_sym`].
 
+use super::schur::local_cg;
+use super::IterConfig;
 use crate::dist::DistVector;
-use crate::pblas::{Ctx, LinOp};
-use crate::Scalar;
+use crate::pblas::{tags, Ctx, LinOp};
+use crate::sparse::{CsrMatrix, DistCsrMatrix};
+use crate::{Result, Scalar};
+
+/// An application-form preconditioner: `z = M^{-1} r`.
+///
+/// Unlike [`JacobiPrecond`] (which rescales the system once up front),
+/// these are consumed *inside* the iteration — see
+/// [`crate::solvers::pcg`].  `apply` must be a fixed linear SPD operator
+/// for PCG's recurrences to hold; inexact inner solves should therefore
+/// run to a tolerance well below the outer solver's.
+pub trait Preconditioner<S: Scalar> {
+    /// Apply `M^{-1}` to a residual (column-replicated, like every vector
+    /// in the crate: replicas compute identically).
+    fn apply(&self, ctx: &Ctx<'_, S>, r: &DistVector<S>) -> Result<DistVector<S>>;
+}
+
+/// Zero-overlap additive Schwarz (block Jacobi) over the sparse row-block
+/// distribution: `M = diag(A_1, ..., A_pr)` where `A_k` is process row
+/// `k`'s owned diagonal block — exactly the halo plan's `diag_local`
+/// compact half, so the subdomains are the distribution's own partition
+/// and applying `M^{-1}` needs **zero communication**: each rank runs a
+/// local CG on its own block.
+///
+/// Padded positions are empty rows with zero right-hand sides; the local
+/// CG keeps them exactly zero (zero columns never receive mass), so the
+/// zero-padding invariant survives without special-casing.
+pub struct BlockJacobiPrecond<S: Scalar> {
+    /// This rank's owned diagonal block (square: the row-block layout
+    /// owns matching row and column tiles).
+    block: CsrMatrix<S>,
+    /// Local-solve controls (tolerance should undercut the outer tol).
+    inner: IterConfig,
+}
+
+impl<S: Scalar> BlockJacobiPrecond<S> {
+    /// Snapshot `a`'s owned diagonal block (building the halo plan if not
+    /// already cached — first use is collective over the column comm).
+    pub fn build(ctx: &Ctx<'_, S>, a: &DistCsrMatrix<S>, inner: IterConfig) -> Self {
+        let col = ctx.mesh.col_comm();
+        let plan = a.halo_plan(&col, tags::HALO_PLAN);
+        let block = plan.diag_local.clone();
+        assert_eq!(
+            block.nrows(),
+            block.ncols(),
+            "row-block diagonal block must be square (owned rows == owned cols)"
+        );
+        BlockJacobiPrecond { block, inner }
+    }
+
+    /// The local block (inspection / tests).
+    pub fn block(&self) -> &CsrMatrix<S> {
+        &self.block
+    }
+}
+
+impl<S: Scalar> Preconditioner<S> for BlockJacobiPrecond<S> {
+    fn apply(&self, ctx: &Ctx<'_, S>, r: &DistVector<S>) -> Result<DistVector<S>> {
+        let desc = *r.desc();
+        let t = desc.tile;
+        let mut rloc = Vec::with_capacity(r.local_blocks() * t);
+        for l in 0..r.local_blocks() {
+            rloc.extend_from_slice(r.block(l));
+        }
+        let (zloc, _iters) = local_cg(ctx, &self.block, &rloc, &self.inner)?;
+        let mesh = ctx.mesh;
+        let mut z = DistVector::zeros(desc, mesh.row(), mesh.col());
+        for l in 0..z.local_blocks() {
+            z.block_mut(l).copy_from_slice(&zloc[l * t..(l + 1) * t]);
+        }
+        Ok(z)
+    }
+}
 
 /// Symmetric Jacobi scaling of a distributed system.
 pub struct JacobiPrecond<S: Scalar> {
@@ -204,5 +285,60 @@ mod tests {
         assert_eq!(da[2], 1.0, "zero dense diagonal keeps scale 1: {da:?}");
         assert_eq!(ds[3], 1.0, "missing sparse diagonal keeps scale 1: {ds:?}");
         assert!((da[0] - 0.5).abs() < 1e-15, "normal entries scale: {da:?}");
+    }
+
+    /// Block-Jacobi PCG: communication-free preconditioner applications,
+    /// the same answer as plain CG at the same tolerance, and no more
+    /// iterations (M captures every intra-block coupling).
+    #[test]
+    fn block_jacobi_pcg_matches_cg() {
+        use crate::solvers::iterative::pcg;
+        let n = 37usize; // ragged edge tile on pr = 2, tile 4
+        let rows = move |i: usize| {
+            let mut r = vec![(i, 6.0 + ((i * 3) % 4) as f64)];
+            if i + 1 < n {
+                r.push((i + 1, -1.0));
+            }
+            if i >= 1 {
+                r.push((i - 1, -1.0));
+            }
+            r
+        };
+        for (pr, pc) in [(1usize, 1usize), (2, 1), (2, 2)] {
+            let out = World::run::<f64, _, _>(pr * pc, NetworkModel::ideal(), move |comm| {
+                let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+                let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(4)));
+                let desc = Descriptor::new(n, n, 4, mesh.shape());
+                let a = DistCsrMatrix::from_row_fn(desc, mesh.row(), mesh.col(), rows);
+                let b = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| {
+                    (i as f64 * 0.61).cos() + 2.0
+                });
+                let cfg = IterConfig { tol: 1e-10, max_iter: 400, restart: 30 };
+                let inner = IterConfig { tol: 1e-13, max_iter: 400, restart: 30 };
+                let m = BlockJacobiPrecond::build(&ctx, &a, inner);
+                // Preconditioner applications are communication-free.
+                let r0 = b.clone_vec();
+                let before = comm.stats().bytes_sent();
+                let _ = m.apply(&ctx, &r0).expect("block-jacobi apply");
+                let precond_bytes = comm.stats().bytes_sent() - before;
+                let (xp, sp) = pcg(&ctx, &a, &m, &b, &cfg).expect("pcg");
+                let (xc, sc) = cg(&ctx, &a, &b, &cfg).expect("cg");
+                (gather_vector(&mesh, &xp), gather_vector(&mesh, &xc), sp, sc, precond_bytes)
+            });
+            for (xp, xc, sp, sc, precond_bytes) in out {
+                assert_eq!(precond_bytes, 0, "{pr}x{pc}: M^-1 must not communicate");
+                assert!(sp.converged && sc.converged, "{pr}x{pc}: both must converge");
+                assert!(
+                    sp.iterations <= sc.iterations,
+                    "{pr}x{pc}: PCG ({}) must not exceed CG ({})",
+                    sp.iterations,
+                    sc.iterations
+                );
+                let (xp, xc) = (xp.unwrap(), xc.unwrap());
+                for i in 0..n {
+                    assert!((xp[i] - xc[i]).abs() < 1e-7, "{pr}x{pc} x[{i}]: {} vs {}", xp[i], xc[i]);
+                }
+            }
+        }
     }
 }

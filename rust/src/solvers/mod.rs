@@ -14,6 +14,7 @@ pub use direct::{
     plu_solve_panel, ptrsm, ptrsv, PivotMap, TriKind,
 };
 pub use iterative::{
-    bicg, bicgstab, block_bicgstab, block_cg, cg, gmres, pipecg, IterConfig, IterMethod,
-    IterStats, JacobiPrecond, LinOp,
+    bicg, bicgstab, block_bicgstab, block_cg, cg, gmres, pcg, pipecg, schur_cg,
+    BlockJacobiPrecond, IterConfig, IterMethod, IterStats, JacobiPrecond, LinOp, Preconditioner,
+    SchurStats,
 };

@@ -26,6 +26,8 @@
 use std::cell::{Ref, RefCell};
 
 use super::csr::CsrMatrix;
+use super::halo::HaloPlan;
+use crate::comm::Group;
 use crate::dist::Descriptor;
 use crate::Scalar;
 
@@ -55,6 +57,10 @@ pub struct DistCsrMatrix<S: Scalar> {
     /// Lazily built column split for the split-phase matvec; invalidated
     /// by [`DistCsrMatrix::local_mut`] (value edits change both halves).
     split: RefCell<Option<SplitBlocks<S>>>,
+    /// Lazily built halo-exchange plan for the neighbor-comm matvec;
+    /// invalidated by [`DistCsrMatrix::local_mut`] like the split (the
+    /// plan's compact CSR halves carry values, not just structure).
+    halo: RefCell<Option<HaloPlan<S>>>,
 }
 
 impl<S: Scalar> DistCsrMatrix<S> {
@@ -108,7 +114,7 @@ impl<S: Scalar> DistCsrMatrix<S> {
             }
         }
         let local = CsrMatrix::from_rows(desc.padded_n(), rows);
-        DistCsrMatrix { desc, prow, pcol, local, split: RefCell::new(None) }
+        DistCsrMatrix { desc, prow, pcol, local, split: RefCell::new(None), halo: RefCell::new(None) }
     }
 
     /// Build this rank's shard from a *global* triplet list: entries whose
@@ -132,7 +138,7 @@ impl<S: Scalar> DistCsrMatrix<S> {
             }
         }
         let local = CsrMatrix::from_triplets(lmt * t, desc.padded_n(), &local_trip);
-        DistCsrMatrix { desc, prow, pcol, local, split: RefCell::new(None) }
+        DistCsrMatrix { desc, prow, pcol, local, split: RefCell::new(None), halo: RefCell::new(None) }
     }
 
     /// The layout descriptor (shared with the vectors it pairs with).
@@ -158,9 +164,11 @@ impl<S: Scalar> DistCsrMatrix<S> {
     }
 
     /// Mutable access to the owned row block (values only; the pattern of a
-    /// built operator is fixed).  Invalidates the cached column split.
+    /// built operator is fixed).  Invalidates the cached column split and
+    /// the cached halo plan.
     pub fn local_mut(&mut self) -> &mut CsrMatrix<S> {
         *self.split.borrow_mut() = None;
+        *self.halo.borrow_mut() = None;
         &mut self.local
     }
 
@@ -194,6 +202,25 @@ impl<S: Scalar> DistCsrMatrix<S> {
             });
         }
         Ref::map(self.split.borrow(), |o| o.as_ref().expect("split just built"))
+    }
+
+    /// The halo-exchange plan (built on first use through one collective
+    /// index handshake over `col`, rebuilt after any
+    /// [`DistCsrMatrix::local_mut`]).  `tag` namespaces the handshake
+    /// (callers pass `pblas::tags::HALO_PLAN`).  First use is collective
+    /// over the column communicator; cached uses are free and local.
+    pub fn halo_plan(&self, col: &Group<'_, S>, tag: u32) -> Ref<'_, HaloPlan<S>> {
+        if self.halo.borrow().is_none() {
+            let plan = HaloPlan::build(self, col, tag);
+            *self.halo.borrow_mut() = Some(plan);
+        }
+        Ref::map(self.halo.borrow(), |o| o.as_ref().expect("halo plan just built"))
+    }
+
+    /// Is a halo plan currently cached?  (Introspection for the
+    /// invalidation tests — mirrors the split cache's lifecycle.)
+    pub fn halo_is_cached(&self) -> bool {
+        self.halo.borrow().is_some()
     }
 
     /// Stored entries on this rank.

@@ -1,0 +1,338 @@
+//! The neighbor-exchange (halo) plan for row-block CSR operators —
+//! `DESIGN.md` §15.
+//!
+//! PR 2's `pspmv` ships the **whole** padded vector through a column-comm
+//! allgather per matvec: O(n) wire volume regardless of sparsity.  For the
+//! operators the Krylov solvers actually see (PDE stencils, network
+//! matrices), each rank's rows reference only a thin band of remote
+//! columns — the *halo*.  A [`HaloPlan`] is the precomputed shape of that
+//! band:
+//!
+//! * [`HaloPlan::ghost_cols`] — every remote-owned global column this
+//!   rank's pattern touches, globally sorted.  The ghost buffer appends to
+//!   the local vector block in exactly this order;
+//! * [`HaloPlan::recv`] — `ghost_cols` partitioned by owning process row
+//!   (what we need *from* each neighbor), with [`HaloPlan::recv_slots`]
+//!   giving each list's positions in the ghost buffer;
+//! * [`HaloPlan::send`] — what each neighbor needs from us, learned at
+//!   build time through one split-phase all-pairs index handshake over the
+//!   column communicator (a one-time O(pr²) exchange of `Ints` payloads,
+//!   amortized over every subsequent matvec);
+//! * [`HaloPlan::diag_local`] / [`HaloPlan::off_ghost`] — the row block's
+//!   column split (same ownership test as [`super::SplitBlocks`]) with
+//!   columns **renumbered** into the compact local / ghost coordinate
+//!   spaces, so the halo matvec indexes two dense-packed small vectors
+//!   instead of a padded full-length scratch.
+//!
+//! **Bit-identity invariant:** both renumberings are strictly monotone
+//! (owned tiles keep their relative order under the block-cyclic
+//! `local_ti` map; ghost slots follow the global sort), so each row's CSR
+//! column order — and therefore the accumulation order of every floating
+//! point sum — is *identical* to the allgather path's split halves.  The
+//! halo `pspmv`/`pspmv_t` (see [`crate::pblas::pspmv_halo`]) reproduce the
+//! allgather results bit for bit; only the wire volume changes, from O(n)
+//! to O(surface).
+
+use std::collections::BTreeSet;
+
+use super::csr::CsrMatrix;
+use super::dist_csr::DistCsrMatrix;
+use crate::comm::{Group, NeighborExchange, Payload, Tag};
+use crate::dist::Descriptor;
+use crate::Scalar;
+
+/// Compact local index of an **owned** global column `c` under the
+/// block-cyclic vector layout: tile `c / tile` sits at local tile
+/// `local_ti`, preserving global order among owned tiles (the monotonicity
+/// the bit-identity contract rides on).
+pub fn owned_local_col(desc: &Descriptor, c: usize) -> usize {
+    let t = desc.tile;
+    desc.local_ti(c / t) * t + c % t
+}
+
+/// One rank's halo-exchange plan (see the module docs).  Built once per
+/// operator pattern via [`DistCsrMatrix::halo_plan`], invalidated by
+/// [`DistCsrMatrix::local_mut`] exactly like the column split.
+#[derive(Clone, Debug)]
+pub struct HaloPlan<S: Scalar> {
+    /// Locally-owned-column entries, columns renumbered to the compact
+    /// local vector block (`ncols == ` this rank's padded block length).
+    pub diag_local: CsrMatrix<S>,
+    /// Remote-column entries, columns renumbered to ghost-buffer slots
+    /// (`ncols == ghost_cols.len()`).
+    pub off_ghost: CsrMatrix<S>,
+    /// Every remote global column the pattern touches, sorted ascending.
+    pub ghost_cols: Vec<usize>,
+    /// Per process row: the sorted global columns we receive from it
+    /// (`recv[own row]` is empty).
+    pub recv: Vec<Vec<usize>>,
+    /// Per process row: each `recv` list's slot positions in `ghost_cols`.
+    pub recv_slots: Vec<Vec<usize>>,
+    /// Per process row: the sorted global columns it receives from us
+    /// (the handshake's answer; `send[own row]` is empty).
+    pub send: Vec<Vec<usize>>,
+}
+
+impl<S: Scalar> HaloPlan<S> {
+    /// Build the plan from `a`'s column structure.  `col` is the mesh's
+    /// column communicator (group rank == process row); `tag` namespaces
+    /// the one-time index handshake (callers pass
+    /// `pblas::tags::HALO_PLAN`).  Collective over `col`: every member
+    /// must call.
+    pub fn build(a: &DistCsrMatrix<S>, col: &Group<'_, S>, tag: u32) -> Self {
+        let desc = a.desc();
+        let t = desc.tile;
+        let pr = desc.shape.pr;
+        let me = a.prow();
+        assert_eq!(col.rank(), me, "column group rank must equal the process row");
+        assert_eq!(col.size(), pr, "column group spans the process rows");
+        let local = a.local();
+        let width = local.nrows(); // square operator: local rows == local x elems
+
+        // 1. Ghost columns: remote-owned, pattern-touched, globally sorted.
+        let mut ghost_set = BTreeSet::new();
+        for li in 0..local.nrows() {
+            for &c in local.row(li).0 {
+                if (c / t) % pr != me {
+                    ghost_set.insert(c);
+                }
+            }
+        }
+        let ghost_cols: Vec<usize> = ghost_set.into_iter().collect();
+
+        // 2. Partition by owning process row (order preserved => sorted).
+        let mut recv: Vec<Vec<usize>> = vec![Vec::new(); pr];
+        let mut recv_slots: Vec<Vec<usize>> = vec![Vec::new(); pr];
+        for (slot, &c) in ghost_cols.iter().enumerate() {
+            let owner = (c / t) % pr;
+            recv[owner].push(c);
+            recv_slots[owner].push(slot);
+        }
+
+        // 3. Handshake: tell each process row what we need from it; learn
+        //    what it needs from us.  All pairs exchange exactly one `Ints`
+        //    message (empty lists included) so matching is deterministic;
+        //    receives post first, so the symmetric exchange cannot block.
+        let mut send: Vec<Vec<usize>> = vec![Vec::new(); pr];
+        if pr > 1 {
+            let reqs: Vec<(usize, _)> = (0..pr)
+                .filter(|&q| q != me)
+                .map(|q| (q, col.irecv(q, Tag::P2p(tag))))
+                .collect();
+            let outs: Vec<_> = (0..pr)
+                .filter(|&q| q != me)
+                .map(|q| {
+                    let wanted = recv[q].iter().map(|&c| c as i64).collect();
+                    col.isend(q, Tag::P2p(tag), Payload::Ints(wanted))
+                })
+                .collect();
+            for (q, req) in reqs {
+                send[q] = req.wait().into_ints().into_iter().map(|c| c as usize).collect();
+            }
+            for s in outs {
+                s.wait();
+            }
+        }
+
+        // 4. The renumbered column split.  Both maps are monotone, so
+        //    `from_rows`'s column sort reproduces the global-order CSR
+        //    layout of the allgather path's halves entry for entry.
+        let mut diag_rows: Vec<Vec<(usize, S)>> = Vec::with_capacity(local.nrows());
+        let mut off_rows: Vec<Vec<(usize, S)>> = Vec::with_capacity(local.nrows());
+        for li in 0..local.nrows() {
+            let (cols, vals) = local.row(li);
+            let (mut dr, mut or) = (Vec::new(), Vec::new());
+            for (&c, &v) in cols.iter().zip(vals) {
+                if (c / t) % pr == me {
+                    dr.push((owned_local_col(desc, c), v));
+                } else {
+                    let slot = ghost_cols.binary_search(&c).expect("ghost col indexed");
+                    or.push((slot, v));
+                }
+            }
+            diag_rows.push(dr);
+            off_rows.push(or);
+        }
+        HaloPlan {
+            diag_local: CsrMatrix::from_rows(width, diag_rows),
+            off_ghost: CsrMatrix::from_rows(ghost_cols.len(), off_rows),
+            ghost_cols,
+            recv,
+            recv_slots,
+            send,
+        }
+    }
+
+    /// Ghost-buffer length — the elements received per forward matvec.
+    pub fn ghost_elems(&self) -> usize {
+        self.ghost_cols.len()
+    }
+
+    /// Elements shipped out per forward matvec (what the neighbors' ghost
+    /// buffers need from us).
+    pub fn send_elems(&self) -> usize {
+        self.send.iter().map(Vec::len).sum()
+    }
+
+    /// Process rows we exchange with in either direction.
+    pub fn neighbors(&self) -> usize {
+        (0..self.recv.len())
+            .filter(|&q| !self.recv[q].is_empty() || !self.send[q].is_empty())
+            .count()
+    }
+
+    /// Gather the outgoing ghost segments from this rank's local vector
+    /// block: one `(process row, values)` pair per nonempty send list.
+    pub fn gather_sends(&self, desc: &Descriptor, xloc: &[S]) -> Vec<(usize, Vec<S>)> {
+        self.send
+            .iter()
+            .enumerate()
+            .filter(|(_, cols)| !cols.is_empty())
+            .map(|(q, cols)| {
+                (q, cols.iter().map(|&c| xloc[owned_local_col(desc, c)]).collect())
+            })
+            .collect()
+    }
+
+    /// The process rows we expect forward-halo segments from.
+    pub fn recv_neighbors(&self) -> Vec<usize> {
+        (0..self.recv.len()).filter(|&q| !self.recv[q].is_empty()).collect()
+    }
+
+    /// Run the plan's forward ghost exchange: returns the started
+    /// [`NeighborExchange`]; scatter the received segments into a ghost
+    /// buffer with [`HaloPlan::scatter_recv`].
+    pub fn start_exchange<'a>(
+        &self,
+        col: &Group<'a, S>,
+        tag: u32,
+        desc: &Descriptor,
+        xloc: &[S],
+    ) -> NeighborExchange<'a, S> {
+        NeighborExchange::start(
+            col,
+            tag,
+            self.gather_sends(desc, xloc),
+            &self.recv_neighbors(),
+        )
+    }
+
+    /// Scatter completed forward-exchange segments into the ghost buffer
+    /// (`xghost.len() == ghost_elems()`).
+    pub fn scatter_recv(&self, received: &[(usize, Vec<S>)], xghost: &mut [S]) {
+        for (q, seg) in received {
+            let slots = &self.recv_slots[*q];
+            assert_eq!(seg.len(), slots.len(), "ghost segment length mismatch");
+            for (&slot, &v) in slots.iter().zip(seg.iter()) {
+                xghost[slot] = v;
+            }
+        }
+    }
+}
+
+/// A [`DistCsrMatrix`] routed through the halo-exchange matvecs: the same
+/// operator, the same layout, but [`crate::pblas::LinOp::apply`] runs
+/// [`crate::pblas::pspmv_halo`] (point-to-point ghost exchange) instead of
+/// the allgather path.  Results are bit-identical by the plan's
+/// monotone-renumbering contract; only the wire volume differs.
+#[derive(Clone, Debug)]
+pub struct HaloCsr<S: Scalar> {
+    inner: DistCsrMatrix<S>,
+}
+
+impl<S: Scalar> HaloCsr<S> {
+    /// Route `a` through the halo matvecs.
+    pub fn new(a: DistCsrMatrix<S>) -> Self {
+        HaloCsr { inner: a }
+    }
+
+    /// The wrapped operator.
+    pub fn inner(&self) -> &DistCsrMatrix<S> {
+        &self.inner
+    }
+
+    /// Mutable access (value edits invalidate the cached plan via
+    /// [`DistCsrMatrix::local_mut`]).
+    pub fn inner_mut(&mut self) -> &mut DistCsrMatrix<S> {
+        &mut self.inner
+    }
+
+    /// Unwrap back to the allgather-routed operator.
+    pub fn into_inner(self) -> DistCsrMatrix<S> {
+        self.inner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{NetworkModel, World};
+    use crate::mesh::{Mesh, MeshShape};
+
+    fn rows_of(m: usize) -> impl Fn(usize) -> Vec<(usize, f64)> + Clone + Send + Sync {
+        move |i| {
+            let mut r = vec![(i, 2.0 + i as f64)];
+            if i + 3 < m {
+                r.push((i + 3, -1.0));
+            }
+            if i >= 3 {
+                r.push((i - 3, 0.5));
+            }
+            r
+        }
+    }
+
+    #[test]
+    fn serial_plan_has_no_ghosts_and_identity_renumbering() {
+        let out = World::run::<f64, _, _>(1, NetworkModel::ideal(), |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(1, 1));
+            let desc = crate::dist::Descriptor::new(11, 11, 4, mesh.shape());
+            let a = DistCsrMatrix::from_row_fn(desc, 0, 0, rows_of(11));
+            let plan = HaloPlan::build(&a, &mesh.col_comm(), 61);
+            assert_eq!(plan.ghost_elems(), 0);
+            assert_eq!(plan.send_elems(), 0);
+            assert_eq!(plan.neighbors(), 0);
+            assert_eq!(plan.off_ghost.nnz(), 0);
+            // pr = 1: local_ti is the identity, so diag_local == local.
+            assert_eq!(plan.diag_local.nnz(), a.local_nnz());
+            for li in 0..a.local().nrows() {
+                assert_eq!(plan.diag_local.row(li), a.local().row(li));
+            }
+            comm.stats().bytes_sent()
+        });
+        assert_eq!(out[0], 0, "a serial plan must never touch the wire");
+    }
+
+    #[test]
+    fn plan_covers_exactly_the_off_block_columns_and_is_symmetric() {
+        let (pr, m, t) = (3, 23, 4);
+        let out = World::run::<f64, _, _>(pr, NetworkModel::ideal(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(pr, 1));
+            let desc = crate::dist::Descriptor::new(m, m, t, mesh.shape());
+            let a = DistCsrMatrix::from_row_fn(desc, mesh.row(), mesh.col(), rows_of(m));
+            let plan = HaloPlan::build(&a, &mesh.col_comm(), 61);
+            // Ghosts == the distinct remote columns of the pattern.
+            let mut want = std::collections::BTreeSet::new();
+            for li in 0..a.local().nrows() {
+                for &c in a.local().row(li).0 {
+                    if (c / t) % pr != mesh.row() {
+                        want.insert(c);
+                    }
+                }
+            }
+            assert_eq!(plan.ghost_cols, want.into_iter().collect::<Vec<_>>());
+            // Split halves partition the block.
+            assert_eq!(plan.diag_local.nnz() + plan.off_ghost.nnz(), a.local_nnz());
+            (plan.recv.clone(), plan.send.clone())
+        });
+        // Symmetry across ranks: i's recv-from-j is j's send-to-i.
+        for i in 0..pr {
+            for j in 0..pr {
+                assert_eq!(
+                    out[i].0[j], out[j].1[i],
+                    "recv[{i}<-{j}] must equal send[{j}->{i}]"
+                );
+            }
+        }
+    }
+}

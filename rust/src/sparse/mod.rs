@@ -12,7 +12,13 @@
 //! * [`DistCsrMatrix`] — the distributed operator: rows partitioned into
 //!   the *same* tile row blocks as [`crate::dist::Descriptor`] (tile row
 //!   `ti` on process row `ti mod pr`, replicated across process columns),
-//!   so it composes with [`crate::dist::DistVector`] unchanged.
+//!   so it composes with [`crate::dist::DistVector`] unchanged;
+//! * [`HaloPlan`] / [`HaloCsr`] — the neighbor-exchange distribution over
+//!   the same layout: per-neighbor send/recv index lists built from the
+//!   column structure, ghost-cell storage appended to the local block, and
+//!   a wrapper routing [`crate::pblas::LinOp`] through the point-to-point
+//!   halo matvecs (`DESIGN.md` §15) — O(surface) wire volume per matvec,
+//!   bit-identical results to the allgather path.
 //!
 //! Distributed matvecs live in [`crate::pblas::pspmv()`] /
 //! [`crate::pblas::pspmv_t`]; the [`crate::pblas::LinOp`] trait lets every
@@ -22,6 +28,8 @@
 
 pub mod csr;
 pub mod dist_csr;
+pub mod halo;
 
 pub use csr::CsrMatrix;
 pub use dist_csr::{DistCsrMatrix, SplitBlocks};
+pub use halo::{owned_local_col, HaloCsr, HaloPlan};

@@ -12,7 +12,10 @@
 
 pub mod stencil;
 
-pub use stencil::{poisson2d_csr, poisson2d_row, poisson3d_csr, poisson3d_row};
+pub use stencil::{
+    poisson1d_csr, poisson1d_row, poisson2d_csr, poisson2d_row, poisson3d_csr, poisson3d_row,
+    stencil_halo_counts, StencilHalo,
+};
 
 use crate::Scalar;
 

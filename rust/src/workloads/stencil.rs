@@ -96,6 +96,33 @@ pub fn poisson3d_csr<S: Scalar>(desc: Descriptor, prow: usize, pcol: usize) -> D
     DistCsrMatrix::from_row_fn(desc, prow, pcol, |i| poisson3d_row(g, i))
 }
 
+/// Nonzero `(col, val)` entries of row `i` of the 1-D 3-point Poisson
+/// operator (tridiagonal `(-1, 2, -1)`) on a `g`-point line.
+pub fn poisson1d_row<S: Scalar>(g: usize, i: usize) -> Vec<(usize, S)> {
+    assert!(i < g, "row {i} outside the {g}-point line");
+    let mut out = Vec::with_capacity(3);
+    if i > 0 {
+        out.push((i - 1, -S::one()));
+    }
+    out.push((i, S::from_f64(2.0).unwrap()));
+    if i + 1 < g {
+        out.push((i + 1, -S::one()));
+    }
+    out
+}
+
+/// This rank's shard of the distributed-CSR 1-D Poisson operator
+/// (`desc.m` is the line length `g` directly).
+pub fn poisson1d_csr<S: Scalar>(desc: Descriptor, prow: usize, pcol: usize) -> DistCsrMatrix<S> {
+    let g = desc.m;
+    DistCsrMatrix::from_row_fn(desc, prow, pcol, |i| poisson1d_row(g, i))
+}
+
+/// Stored entries of the 1-D operator: `3g - 2`.
+pub fn poisson1d_nnz(g: usize) -> usize {
+    3 * g - 2
+}
+
 /// Stored entries of the 2-D operator: `5g² - 4g`.
 pub fn poisson2d_nnz(g: usize) -> usize {
     5 * g * g - 4 * g
@@ -111,6 +138,102 @@ pub fn poisson3d_nnz(g: usize) -> usize {
 /// its rhs blocks in O(row nnz).
 pub fn stencil_rhs<S: Scalar>(row: &[(usize, S)], x_true: impl Fn(usize) -> S) -> S {
     row.iter().fold(S::zero(), |acc, &(j, v)| acc + v * x_true(j))
+}
+
+/// Axis strides of a `dim`-dimensional `g`-point-per-side Poisson stencil:
+/// the off-diagonal couplings of row `i` sit at `i ± stride`.
+pub fn stencil_strides(g: usize, dim: u32) -> Vec<usize> {
+    (0..dim).map(|k| g.pow(k)).collect()
+}
+
+/// Exact halo-surface counts of a Poisson stencil under the round-robin
+/// tile-row distribution (tile row `ti` on process row `ti mod pr`) —
+/// the inputs the halo cost model needs
+/// ([`crate::bench_harness::model::sparse_iter_makespan_halo`]).
+///
+/// Round-robin tiling makes the coupling surface irregular (every tile
+/// boundary is a rank boundary, and which neighbor owns the far side
+/// cycles), so there is no trustworthy closed form; this is an exact
+/// `O(n · dim)` enumeration, mirrored verbatim in
+/// `python/tests/model_mirror.py`.  All `max` fields are worst-case over
+/// process rows — the makespan rank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StencilHalo {
+    /// Max over process rows: distinct remote columns referenced (= ghost
+    /// slots = elements received per matvec).
+    pub ghost_elems: usize,
+    /// Max over process rows: elements sent per matvec (one copy per
+    /// neighbor that references the column).
+    pub send_elems: usize,
+    /// Max over process rows: peers exchanged with (send or receive).
+    pub neighbors: usize,
+    /// Stored entries whose column tile lives on the owning process row
+    /// (the overlap-eligible diagonal-block share), summed over ranks.
+    pub diag_nnz: usize,
+    /// All stored entries (`poisson{1,2,3}d_nnz`).
+    pub total_nnz: usize,
+}
+
+/// Enumerate [`StencilHalo`] for a `dim`-D Poisson operator on a
+/// `g`-per-side grid, tile size `tile`, `pr` process rows.
+pub fn stencil_halo_counts(g: usize, dim: u32, tile: usize, pr: usize) -> StencilHalo {
+    let n = g.pow(dim);
+    let strides = stencil_strides(g, dim);
+    let owner = |x: usize| (x / tile) % pr;
+    let mut ghost = vec![0usize; pr];
+    let mut send = vec![0usize; pr];
+    // pair[r][q]: does r exchange with q (either direction)?
+    let mut pair = vec![vec![false; pr]; pr];
+    let mut diag_nnz = n; // every diagonal entry is owned by its own row
+    let mut total_nnz = n;
+    for j in 0..n {
+        let oj = owner(j);
+        // Process rows referencing column j from a remote row i = j -+ s.
+        let mut refs: Vec<usize> = Vec::with_capacity(2 * dim as usize);
+        for &s in &strides {
+            // i = j - s references j = i + s: valid when i's axis
+            // coordinate is below the far face.
+            if j >= s && (j - s) / s % g < g - 1 {
+                let oi = owner(j - s);
+                total_nnz += 1;
+                if oi != oj {
+                    if !refs.contains(&oi) {
+                        refs.push(oi);
+                    }
+                } else {
+                    diag_nnz += 1;
+                }
+            }
+            // i = j + s references j = i - s: valid when i's axis
+            // coordinate is above the near face.
+            if j + s < n && (j + s) / s % g > 0 {
+                let oi = owner(j + s);
+                total_nnz += 1;
+                if oi != oj {
+                    if !refs.contains(&oi) {
+                        refs.push(oi);
+                    }
+                } else {
+                    diag_nnz += 1;
+                }
+            }
+        }
+        for &r in &refs {
+            ghost[r] += 1;
+            pair[r][oj] = true;
+            pair[oj][r] = true;
+        }
+        send[oj] += refs.len();
+    }
+    let neighbors =
+        (0..pr).map(|r| (0..pr).filter(|&q| pair[r][q]).count()).max().unwrap_or(0);
+    StencilHalo {
+        ghost_elems: ghost.iter().copied().max().unwrap_or(0),
+        send_elems: send.iter().copied().max().unwrap_or(0),
+        neighbors,
+        diag_nnz,
+        total_nnz,
+    }
 }
 
 #[cfg(test)]
@@ -205,6 +328,87 @@ mod tests {
     fn non_square_size_rejected() {
         let desc = Descriptor::new(10, 10, 4, MeshShape::new(1, 1));
         let _ = poisson2d_csr::<f64>(desc, 0, 0);
+    }
+
+    #[test]
+    fn poisson1d_is_tridiagonal_and_counted() {
+        let g = 7;
+        for i in 0..g {
+            let row = poisson1d_row::<f64>(g, i);
+            for &(j, v) in &row {
+                assert_eq!(v, if i == j { 2.0 } else { -1.0 }, "({i},{j})");
+                assert!(j.abs_diff(i) <= 1);
+            }
+            assert_eq!(row.len(), if i == 0 || i == g - 1 { 2 } else { 3 });
+        }
+        let count: usize = (0..g).map(|i| poisson1d_row::<f64>(g, i).len()).sum();
+        assert_eq!(count, poisson1d_nnz(g));
+    }
+
+    /// The enumeration must agree with real `HaloPlan`s built from the
+    /// same operators — worst-case-over-ranks, field for field.
+    #[test]
+    fn halo_counts_match_built_plans() {
+        use crate::comm::{NetworkModel, World};
+        use crate::mesh::Mesh;
+        let cases: [(usize, u32, usize, usize); 5] = [
+            (12, 1, 4, 2),
+            (5, 2, 4, 2),  // ragged: n = 25, tile 4
+            (4, 2, 4, 3),  // pr = 3, some rank pairs never touch
+            (3, 3, 4, 2),  // n = 27
+            (2, 3, 2, 4),  // tiny tiles, pr = 4 (empty-neighbor ranks)
+        ];
+        for (g, dim, tile, pr) in cases {
+            let n = g.pow(dim);
+            let want = stencil_halo_counts(g, dim, tile, pr);
+            let got = World::run::<f64, _, _>(pr, NetworkModel::ideal(), move |comm| {
+                let mesh = Mesh::new(&comm, MeshShape::new(pr, 1));
+                let desc = Descriptor::new(n, n, tile, mesh.shape());
+                let a = match dim {
+                    1 => poisson1d_csr::<f64>(desc, mesh.row(), mesh.col()),
+                    2 => poisson2d_csr::<f64>(desc, mesh.row(), mesh.col()),
+                    _ => poisson3d_csr::<f64>(desc, mesh.row(), mesh.col()),
+                };
+                let col = mesh.col_comm();
+                let plan = a.halo_plan(&col, 61);
+                (
+                    plan.ghost_elems(),
+                    plan.send_elems(),
+                    plan.neighbors(),
+                    plan.diag_local.nnz(),
+                    a.local_nnz(),
+                )
+            });
+            let ghost = got.iter().map(|r| r.0).max().unwrap();
+            let send = got.iter().map(|r| r.1).max().unwrap();
+            let neigh = got.iter().map(|r| r.2).max().unwrap();
+            let diag: usize = got.iter().map(|r| r.3).sum();
+            let total: usize = got.iter().map(|r| r.4).sum();
+            let label = format!("g={g} dim={dim} tile={tile} pr={pr}");
+            assert_eq!(want.ghost_elems, ghost, "{label} ghost");
+            assert_eq!(want.send_elems, send, "{label} send");
+            assert_eq!(want.neighbors, neigh, "{label} neighbors");
+            assert_eq!(want.diag_nnz, diag, "{label} diag nnz");
+            assert_eq!(want.total_nnz, total, "{label} total nnz");
+        }
+    }
+
+    /// Serial counts degenerate: no ghosts, no neighbors, all-diag nnz
+    /// equal to the closed forms.
+    #[test]
+    fn halo_counts_serial_degenerate() {
+        for (g, dim, nnz) in [
+            (9usize, 1u32, poisson1d_nnz(9)),
+            (6, 2, poisson2d_nnz(6)),
+            (3, 3, poisson3d_nnz(3)),
+        ] {
+            let h = stencil_halo_counts(g, dim, 4, 1);
+            assert_eq!(h.ghost_elems, 0, "dim {dim}");
+            assert_eq!(h.send_elems, 0, "dim {dim}");
+            assert_eq!(h.neighbors, 0, "dim {dim}");
+            assert_eq!(h.diag_nnz, nnz, "dim {dim}");
+            assert_eq!(h.total_nnz, nnz, "dim {dim}");
+        }
     }
 
     #[test]

@@ -1,0 +1,380 @@
+//! Integration: the neighbor-exchange (halo) distribution — bit-identity
+//! against the allgather path, wire volume pinned to the coupling surface,
+//! the Krylov solvers routed through the halo `LinOp`, the Schur and
+//! block-Jacobi consumers, and the plan invariants under random sparsity
+//! (`DESIGN.md` §15).
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use cuplss::accel::CpuEngine;
+use cuplss::comm::{NetworkModel, World};
+use cuplss::dist::{gather_vector, Descriptor, DistVector};
+use cuplss::mesh::{Mesh, MeshShape};
+use cuplss::pblas::{pspmv, pspmv_halo, pspmv_t, pspmv_t_halo, Ctx};
+use cuplss::solvers::{bicgstab, cg, pcg, schur_cg, BlockJacobiPrecond, IterConfig};
+use cuplss::sparse::{DistCsrMatrix, HaloCsr};
+use cuplss::util::prop;
+use cuplss::workloads::stencil::{poisson2d_csr, poisson2d_row, stencil_rhs};
+
+fn x_true(i: usize) -> f64 {
+    ((i as f64) * 0.21).sin() + 1.0
+}
+
+fn x_probe(i: usize) -> f64 {
+    ((i as f64) * 0.37).cos() + 0.25
+}
+
+/// Nonsymmetric banded test pattern: diagonal plus ±1 and ±5 bands with
+/// different weights, so the transpose path is genuinely distinct.
+fn band_rows(m: usize) -> impl Fn(usize) -> Vec<(usize, f64)> + Clone + Send + Sync {
+    move |i| {
+        let mut r = vec![(i, 6.0 + ((i * 3) % 5) as f64)];
+        if i >= 1 {
+            r.push((i - 1, -1.0));
+        }
+        if i + 1 < m {
+            r.push((i + 1, -1.5));
+        }
+        if i >= 5 {
+            r.push((i - 5, 0.25));
+        }
+        if i + 5 < m {
+            r.push((i + 5, 0.75));
+        }
+        r
+    }
+}
+
+const MESHES: &[(usize, usize)] = &[(1, 1), (2, 1), (2, 2), (4, 1)];
+
+/// Forward and transpose halo matvecs must reproduce the allgather results
+/// bit for bit on every rank's every block — padding included.
+fn check_bit_identity(m: usize, tile: usize) {
+    for &(pr, pc) in MESHES {
+        World::run::<f64, _, _>(pr * pc, NetworkModel::gigabit_ethernet(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+            let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(tile)));
+            let desc = Descriptor::new(m, m, tile, mesh.shape());
+            let a = DistCsrMatrix::from_row_fn(desc, mesh.row(), mesh.col(), band_rows(m));
+            let x = DistVector::from_fn(desc, mesh.row(), mesh.col(), x_probe);
+            let y_ag = pspmv(&ctx, &a, &x);
+            let y_ha = pspmv_halo(&ctx, &a, &x);
+            let z_ag = pspmv_t(&ctx, &a, &x);
+            let z_ha = pspmv_t_halo(&ctx, &a, &x);
+            for l in 0..y_ag.local_blocks() {
+                for (k, (u, v)) in y_ag.block(l).iter().zip(y_ha.block(l)).enumerate() {
+                    assert_eq!(
+                        u.to_bits(),
+                        v.to_bits(),
+                        "forward drift m={m} mesh {pr}x{pc} block {l} elem {k}: {u} vs {v}"
+                    );
+                }
+                for (k, (u, v)) in z_ag.block(l).iter().zip(z_ha.block(l)).enumerate() {
+                    assert_eq!(
+                        u.to_bits(),
+                        v.to_bits(),
+                        "transpose drift m={m} mesh {pr}x{pc} block {l} elem {k}: {u} vs {v}"
+                    );
+                }
+            }
+        });
+    }
+}
+
+#[test]
+fn halo_matvecs_bit_identical_even_meshes() {
+    check_bit_identity(12, 4); // every rank's blocks full
+}
+
+#[test]
+fn halo_matvecs_bit_identical_ragged() {
+    check_bit_identity(13, 4); // non-divisible n: padded edge block
+    check_bit_identity(11, 3); // odd tile too
+}
+
+/// A block-diagonal tail: ranks owning only uncoupled rows have zero
+/// neighbors, send nothing, and still agree with the serial oracle.
+#[test]
+fn empty_neighbor_ranks_are_exact_and_silent() {
+    let (n, tile, pr) = (16usize, 4usize, 4usize);
+    // Rows 0..8 couple across tiles 0 and 1 (ranks 0, 1); rows 8.. are
+    // diagonal-only, so ranks 2 and 3 exchange nothing.
+    let rows = move |i: usize| {
+        let mut r = vec![(i, 5.0 + i as f64)];
+        if i < 8 {
+            if i >= 4 {
+                r.push((i - 4, -1.0));
+            }
+            if i + 4 < 8 {
+                r.push((i + 4, -2.0));
+            }
+        }
+        r
+    };
+    let out = World::run::<f64, _, _>(pr, NetworkModel::gigabit_ethernet(), move |comm| {
+        let mesh = Mesh::new(&comm, MeshShape::new(pr, 1));
+        let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(tile)));
+        let desc = Descriptor::new(n, n, tile, mesh.shape());
+        let a = DistCsrMatrix::from_row_fn(desc, mesh.row(), mesh.col(), rows);
+        let x = DistVector::from_fn(desc, mesh.row(), mesh.col(), x_probe);
+        let neighbors = a.halo_plan(&mesh.col_comm(), 91).neighbors();
+        let before = comm.stats().bytes_sent();
+        let y = pspmv_halo(&ctx, &a, &x);
+        let sent = comm.stats().bytes_sent() - before;
+        let y_ag = pspmv(&ctx, &a, &x);
+        for l in 0..y.local_blocks() {
+            for (u, v) in y.block(l).iter().zip(y_ag.block(l)) {
+                assert_eq!(u.to_bits(), v.to_bits(), "halo vs allgather drift");
+            }
+        }
+        (neighbors, sent, gather_vector(&mesh, &y))
+    });
+    // Ranks 0 and 1 talk to exactly each other; ranks 2 and 3 are silent.
+    assert_eq!(out[0].0, 1);
+    assert_eq!(out[1].0, 1);
+    assert_eq!(out[2].0, 0, "rank 2 owns uncoupled rows: no neighbors");
+    assert_eq!(out[3].0, 0);
+    assert_eq!(out[2].1, 0, "no neighbors must mean zero bytes on the wire");
+    assert_eq!(out[3].1, 0);
+    // Serial oracle.
+    let y = out.into_iter().next().unwrap().2.unwrap();
+    for i in 0..n {
+        let want: f64 = rows(i).into_iter().map(|(j, v)| v * x_probe(j)).sum();
+        assert!((y[i] - want).abs() < 1e-12, "row {i}: {} vs {want}", y[i]);
+    }
+}
+
+/// The per-matvec wire volume is exactly the coupling surface (send-list
+/// elements x 8 bytes for f64), not the allgather's O(n) ring.
+#[test]
+fn wire_volume_is_the_coupling_surface() {
+    let g = 8usize;
+    let (pr, tile) = (4usize, 4usize);
+    let n = g * g;
+    let out = World::run::<f64, _, _>(pr, NetworkModel::gigabit_ethernet(), move |comm| {
+        let mesh = Mesh::new(&comm, MeshShape::new(pr, 1));
+        let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(tile)));
+        let desc = Descriptor::new(n, n, tile, mesh.shape());
+        let a = DistCsrMatrix::from_row_fn(desc, mesh.row(), mesh.col(), move |i| {
+            poisson2d_row::<f64>(g, i)
+        });
+        let x = DistVector::from_fn(desc, mesh.row(), mesh.col(), x_probe);
+        // Warm both plans so only the steady-state wire remains.
+        let _ = pspmv(&ctx, &a, &x);
+        let _ = pspmv_halo(&ctx, &a, &x);
+        let (send_elems, ghost_elems) = {
+            let plan = a.halo_plan(&mesh.col_comm(), 91);
+            (plan.send_elems(), plan.ghost_elems())
+        };
+        let before = comm.stats().bytes_sent();
+        let _ = pspmv_halo(&ctx, &a, &x);
+        let halo_bytes = comm.stats().bytes_sent() - before;
+        let before = comm.stats().bytes_sent();
+        let _ = pspmv(&ctx, &a, &x);
+        let ag_bytes = comm.stats().bytes_sent() - before;
+        (halo_bytes, ag_bytes, send_elems, ghost_elems)
+    });
+    let mut total_send = 0usize;
+    let mut total_ghost = 0usize;
+    for (r, &(halo, ag, send_elems, ghost_elems)) in out.iter().enumerate() {
+        assert_eq!(
+            halo,
+            send_elems as u64 * 8,
+            "rank {r}: halo wire must be exactly the send lists ({send_elems} elems)"
+        );
+        assert!(
+            halo < ag,
+            "rank {r}: halo {halo} B must undercut the allgather's {ag} B"
+        );
+        total_send += send_elems;
+        total_ghost += ghost_elems;
+    }
+    // What everyone sends is what everyone receives.
+    assert_eq!(total_send, total_ghost, "global send/ghost element conservation");
+}
+
+/// CG and BiCGSTAB through the halo `LinOp`: bit-identical trajectory to
+/// the allgather operator (same iterations, same solution bits) and
+/// correct against the known solution.
+#[test]
+fn krylov_through_the_halo_operator() {
+    for &(g, tile) in &[(6usize, 4usize), (5, 4)] {
+        let n = g * g;
+        for &(pr, pc) in MESHES {
+            let out =
+                World::run::<f64, _, _>(pr * pc, NetworkModel::gigabit_ethernet(), move |comm| {
+                    let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+                    let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(tile)));
+                    let desc = Descriptor::new(n, n, tile, mesh.shape());
+                    let a = poisson2d_csr::<f64>(desc, mesh.row(), mesh.col());
+                    let b = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| {
+                        stencil_rhs(&poisson2d_row::<f64>(g, i), x_true)
+                    });
+                    let cfg = IterConfig { tol: 1e-12, max_iter: 2_000, restart: 30 };
+                    let halo = HaloCsr::new(a.clone());
+                    let (x_ag, st_ag) = cg(&ctx, &a, &b, &cfg).expect("cg allgather");
+                    let (x_ha, st_ha) = cg(&ctx, &halo, &b, &cfg).expect("cg halo");
+                    assert!(st_ag.converged && st_ha.converged);
+                    assert_eq!(
+                        st_ag.iterations, st_ha.iterations,
+                        "bit-identical matvecs must give the identical trajectory"
+                    );
+                    for l in 0..x_ag.local_blocks() {
+                        for (u, v) in x_ag.block(l).iter().zip(x_ha.block(l)) {
+                            assert_eq!(u.to_bits(), v.to_bits(), "cg solution drift");
+                        }
+                    }
+                    let (x_bs, st_bs) = bicgstab(&ctx, &halo, &b, &cfg).expect("bicgstab halo");
+                    assert!(st_bs.converged);
+                    (gather_vector(&mesh, &x_ha), gather_vector(&mesh, &x_bs))
+                });
+            let (x_cg, x_bs) = out.into_iter().next().unwrap();
+            let (x_cg, x_bs) = (x_cg.unwrap(), x_bs.unwrap());
+            for i in 0..n {
+                assert!(
+                    (x_cg[i] - x_true(i)).abs() < 1e-8,
+                    "halo cg g={g} mesh {pr}x{pc} x[{i}]"
+                );
+                assert!(
+                    (x_bs[i] - x_true(i)).abs() < 1e-7,
+                    "halo bicgstab g={g} mesh {pr}x{pc} x[{i}]"
+                );
+            }
+        }
+    }
+}
+
+/// The two halo consumers — Schur sub-structuring and block-Jacobi PCG —
+/// land on the plain-CG solution across mesh shapes.
+#[test]
+fn schur_and_block_jacobi_agree_with_cg() {
+    let (g, tile) = (5usize, 4usize);
+    let n = g * g;
+    for &pr in &[1usize, 2, 4] {
+        let out = World::run::<f64, _, _>(pr, NetworkModel::gigabit_ethernet(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(pr, 1));
+            let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(tile)));
+            let desc = Descriptor::new(n, n, tile, mesh.shape());
+            let a = poisson2d_csr::<f64>(desc, mesh.row(), mesh.col());
+            let b = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| {
+                stencil_rhs(&poisson2d_row::<f64>(g, i), x_true)
+            });
+            let cfg = IterConfig { tol: 1e-10, max_iter: 2_000, restart: 30 };
+            let inner = IterConfig { tol: 1e-13, max_iter: 2_000, restart: 30 };
+            let (x_cg, st_cg) = cg(&ctx, &a, &b, &cfg).expect("cg");
+            let (x_sc, st_sc) = schur_cg(&ctx, &a, &b, &cfg, &inner).expect("schur");
+            let m = BlockJacobiPrecond::build(&ctx, &a, inner);
+            let (x_pc, st_pc) = pcg(&ctx, &a, &m, &b, &cfg).expect("pcg");
+            assert!(st_cg.converged && st_pc.converged);
+            assert!(
+                st_pc.iterations <= st_cg.iterations + 2,
+                "block-Jacobi must not slow CG down ({} vs {})",
+                st_pc.iterations,
+                st_cg.iterations
+            );
+            if pr == 1 {
+                // One rank: the block is the whole operator, so the
+                // preconditioner is (numerically) A^{-1}.
+                assert!(st_pc.iterations <= 3, "exact block solve: {}", st_pc.iterations);
+                assert_eq!(st_sc.outer.iterations, 0, "serial Schur is one local solve");
+                assert_eq!(st_sc.interface_unknowns, 0);
+            } else {
+                assert!(st_sc.interface_unknowns > 0 && st_sc.interface_unknowns < n);
+            }
+            (
+                gather_vector(&mesh, &x_cg),
+                gather_vector(&mesh, &x_sc),
+                gather_vector(&mesh, &x_pc),
+            )
+        });
+        let (x_cg, x_sc, x_pc) = out.into_iter().next().unwrap();
+        let (x_cg, x_sc, x_pc) = (x_cg.unwrap(), x_sc.unwrap(), x_pc.unwrap());
+        for i in 0..n {
+            assert!((x_cg[i] - x_true(i)).abs() < 1e-8, "cg pr={pr} x[{i}]");
+            assert!((x_sc[i] - x_cg[i]).abs() < 1e-7, "schur pr={pr} x[{i}]");
+            assert!((x_pc[i] - x_cg[i]).abs() < 1e-7, "pcg pr={pr} x[{i}]");
+        }
+    }
+}
+
+/// Property: over random sparsity patterns the plan's send/recv lists are
+/// symmetric across ranks, the ghosts cover exactly the off-block columns,
+/// and `local_mut` invalidates the cache (the rebuild is identical).
+#[test]
+fn plan_invariants_on_random_sparsity() {
+    prop::forall(8, 0xa1_0_5eed, |rng| {
+        let n = 8 + rng.below(33); // 8..=40
+        let tile = 2 + rng.below(4); // 2..=5
+        let pr = 2 + rng.below(3); // 2..=4
+        let pattern: Arc<Vec<Vec<(usize, f64)>>> = Arc::new(
+            (0..n)
+                .map(|i| {
+                    let mut r = vec![(i, 4.0 + rng.uniform())];
+                    for _ in 0..(1 + rng.below(3)) {
+                        let j = rng.below(n);
+                        if j != i {
+                            r.push((j, rng.range(-1.0, 1.0)));
+                        }
+                    }
+                    r
+                })
+                .collect(),
+        );
+        let out = World::run::<f64, _, _>(pr, NetworkModel::ideal(), {
+            let pattern = pattern.clone();
+            move |comm| {
+                let mesh = Mesh::new(&comm, MeshShape::new(pr, 1));
+                let desc = Descriptor::new(n, n, tile, mesh.shape());
+                let rows = {
+                    let pattern = pattern.clone();
+                    move |i: usize| pattern[i].clone()
+                };
+                let mut a = DistCsrMatrix::from_row_fn(desc, mesh.row(), mesh.col(), rows);
+                let col = mesh.col_comm();
+                let (ghost, recv, send, diag_nnz, off_nnz) = {
+                    let plan = a.halo_plan(&col, 91);
+                    (
+                        plan.ghost_cols.clone(),
+                        plan.recv.clone(),
+                        plan.send.clone(),
+                        plan.diag_local.nnz(),
+                        plan.off_ghost.nnz(),
+                    )
+                };
+                // Coverage: ghosts are exactly the distinct off-block columns.
+                let me = mesh.row();
+                let mut want = BTreeSet::new();
+                for li in 0..a.local().nrows() {
+                    for &c in a.local().row(li).0 {
+                        if (c / tile) % pr != me {
+                            want.insert(c);
+                        }
+                    }
+                }
+                assert_eq!(ghost, want.into_iter().collect::<Vec<_>>());
+                assert_eq!(diag_nnz + off_nnz, a.local_nnz(), "split halves partition");
+                // Invalidation: a value edit drops the cache; the rebuild
+                // over the unchanged pattern is identical.
+                assert!(a.halo_is_cached());
+                a.local_mut();
+                assert!(!a.halo_is_cached(), "local_mut must invalidate the plan");
+                {
+                    let plan = a.halo_plan(&col, 91);
+                    assert_eq!(plan.ghost_cols, ghost);
+                    assert_eq!(plan.send, send);
+                }
+                (recv, send)
+            }
+        });
+        // Symmetry: what i receives from j is what j sends to i.
+        for i in 0..pr {
+            for j in 0..pr {
+                assert_eq!(
+                    out[i].0[j], out[j].1[i],
+                    "recv[{i}<-{j}] must mirror send[{j}->{i}] (n={n} tile={tile} pr={pr})"
+                );
+            }
+        }
+    });
+}
