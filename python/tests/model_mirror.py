@@ -877,6 +877,146 @@ def cg_makespan_batched(n, k, iters, p, b):
     return iters * (matvec + 2.0 * dot + 3.0 * vop)
 
 
+def bicgstab_makespan_batched(n, k, iters, p, b):
+    """rust bicgstab_makespan_batched: blocked BiCGSTAB — the same
+    column-batched legs as cg_makespan_batched assembled with the BiCGSTAB
+    iteration shape (two matvecs, five dots, six vector ops).  k = 1
+    reproduces the iter_makespan BiCGSTAB arm bit for bit."""
+    t = p.tile
+    kt = ceil_div(n, t)
+    pr, pc = p.pr, p.pc
+    my_rows = ceil_div(kt, pr)
+    my_cols = ceil_div(kt, pc)
+    vec_elems = my_rows * t
+    matvec = (
+        p.ring(pr, k * vec_elems, b)
+        + (my_rows * my_cols) * _panel_op(p, "gemv_acc", k, b)
+        + 2.0 * p.tree(pc, k * vec_elems, b)
+    )
+    dot = k * (my_rows * p.blas1(t, b)) + 2.0 * p.tree(pr, k, b)
+    vop = my_rows * p.blas1(k * t, b)
+    return iters * (2.0 * matvec + 5.0 * dot + 6.0 * vop)
+
+
+# ---------------------------------------------------------------------------
+# bench_harness/model.rs — GPUDirect wire twins (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+
+def wire_payload(p, elems, b):
+    """rust wire_payload: one device-dirty wire payload of `elems` scalars
+    -> (stage, residual).  (0, 0) on host profiles."""
+    stage = p.xfer(elems, b)
+    if stage <= 0.0:
+        return 0.0, 0.0
+    return stage, max(stage - p.msg(elems, b), 0.0)
+
+
+def _lu_wire_legs(n, p, b):
+    """rust lu_wire_legs: U12 column broadcasts every step + the non-owner
+    panel-gather legs from step 1 on, all under pr > 1."""
+    t2 = p.tile * p.tile
+    kt = ceil_div(n, p.tile)
+    pr, pc = p.pr, p.pc
+    s1, r1 = wire_payload(p, t2, b)
+    stage = residual = 0.0
+    for k in range(kt):
+        mk = kt - k
+        trailing = mk - 1
+        if pr > 1:
+            if k >= 1:
+                remote_tiles = mk - ceil_div(mk, pr)
+                stage += remote_tiles * s1
+                residual += remote_tiles * r1
+            stage += ceil_div(trailing, pc) * s1
+            residual += ceil_div(trailing, pc) * r1
+    return stage, residual
+
+
+def lu_wire_stage(n, p, b):
+    return _lu_wire_legs(n, p, b)[0]
+
+
+def lu_makespan_gpudirect(n, p, b):
+    return lu_makespan_prefetch(n, p, b) + _lu_wire_legs(n, p, b)[1]
+
+
+def _chol_wire_legs(n, p, b):
+    """rust chol_wire_legs: the L11 column broadcast (pr > 1) and the panel
+    row broadcasts (pc > 1) every step."""
+    t2 = p.tile * p.tile
+    kt = ceil_div(n, p.tile)
+    pr, pc = p.pr, p.pc
+    s1, r1 = wire_payload(p, t2, b)
+    stage = residual = 0.0
+    for k in range(kt):
+        trailing = kt - k - 1
+        if pr > 1:
+            stage += s1
+            residual += r1
+        if pc > 1:
+            stage += ceil_div(trailing, pr) * s1
+            residual += ceil_div(trailing, pr) * r1
+    return stage, residual
+
+
+def chol_wire_stage(n, p, b):
+    return _chol_wire_legs(n, p, b)[0]
+
+
+def chol_makespan_gpudirect(n, p, b):
+    return chol_makespan_prefetch(n, p, b) + _chol_wire_legs(n, p, b)[1]
+
+
+def summa_wire_stage(n, p, b):
+    """rust summa_wire_stage: zero — the broadcast panels are read-only,
+    host-clean inputs."""
+    return 0.0
+
+
+def summa_makespan_gpudirect(n, p, b, overlapped):
+    return summa_makespan_prefetch(n, p, b, overlapped)
+
+
+def _iter_wire_legs(method, n, iters, p, b):
+    """rust iter_wire_legs: the matvec's device-dirty y_part allreduce —
+    once per matvec, twice per BiCGSTAB iteration, nothing at pc = 1."""
+    pr, pc = p.pr, p.pc
+    if pc <= 1:
+        return 0.0, 0.0
+    vec_elems = ceil_div(ceil_div(n, p.tile), pr) * p.tile
+    s1, r1 = wire_payload(p, vec_elems, b)
+    if method in ("cg", "pipecg"):
+        matvecs = 1.0
+    elif method == "bicgstab":
+        matvecs = 2.0
+    else:
+        return 0.0, 0.0
+    per = iters * matvecs
+    return per * s1, per * r1
+
+
+def iter_wire_stage(method, n, iters, p, b):
+    return _iter_wire_legs(method, n, iters, p, b)[0]
+
+
+def iter_makespan_gpudirect(method, n, iters, restart, p, b):
+    return (
+        iter_makespan_prefetch(method, n, iters, restart, p, b)
+        + _iter_wire_legs(method, n, iters, p, b)[1]
+    )
+
+
+def sparse_iter_wire_stage(n, nnz, p, b):
+    """rust sparse_iter_wire_stage: zero — sparse operands run host-side,
+    every ghost segment is host-clean."""
+    return 0.0
+
+
+def sparse_iter_makespan_gpudirect(method, n, nnz, iters, restart, p, b):
+    return sparse_iter_makespan_prefetch(method, n, nnz, iters, restart, p, b)
+
+
 # ---------------------------------------------------------------------------
 # serve/mod.rs — request stream, batching and the scheduling timeline
 # ---------------------------------------------------------------------------
@@ -1172,8 +1312,8 @@ def serving_entries():
 
 def _serve_price(p, members):
     """rust serving.rs model_batch_cost: direct methods ride the batched
-    solve twins, CG the blocked twin, BiCGSTAB prices as k looped singles
-    (no batched twin — the scheduler claims no amortization there)."""
+    solve twins, CG and BiCGSTAB their blocked sweeps, and anything without
+    a batched twin prices as k looped singles."""
     head = members[0]
     k = len(members)
     n = head["n"]
@@ -1184,6 +1324,8 @@ def _serve_price(p, members):
         return chol_solve_makespan_batched(n, k, p, 4)
     if m == "cg":
         return cg_makespan_batched(n, k, SERVE_ITERS, p, 4)
+    if m == "bicgstab":
+        return bicgstab_makespan_batched(n, k, SERVE_ITERS, p, 4)
     return k * iter_makespan(m, n, SERVE_ITERS, 30, p, 4)
 
 
@@ -1212,6 +1354,77 @@ def serving_rows():
 
 HALO_STENCILS = (("poisson2d", 512, 2), ("poisson3d", 64, 3))
 HALO_ITERS = 100
+
+GPUDIRECT_ITERS = 100
+GPUDIRECT_SUMMA_N = 16_384
+
+
+def gpudirect_rows():
+    """Dense rows of BENCH_gpudirect.json (rust/benches/gpudirect.rs): each
+    row is (kernel, engine, n, ranks, pr, pc, wire_stage, staged, gpudirect,
+    strict) where staged = prefetch twin + wire stage and `strict` means a
+    device-dirty payload hit the wire (stage > 0)."""
+    iters = GPUDIRECT_ITERS
+    rows = []
+    for ranks in PAPER_RANKS:
+        for gpu in (False, True):
+            p = params(ranks, gpu)
+            engine = "MPI+CUDA" if gpu else "MPI+ATLAS"
+
+            def push(kernel, n, stage, prefetch, gpudirect):
+                rows.append((
+                    kernel, engine, n, ranks, p.pr, p.pc,
+                    stage, prefetch + stage, gpudirect, stage > 0.0,
+                ))
+
+            push(
+                "LU", PAPER_N,
+                lu_wire_stage(PAPER_N, p, 4),
+                lu_makespan_prefetch(PAPER_N, p, 4),
+                lu_makespan_gpudirect(PAPER_N, p, 4),
+            )
+            push(
+                "Cholesky", PAPER_N,
+                chol_wire_stage(PAPER_N, p, 4),
+                chol_makespan_prefetch(PAPER_N, p, 4),
+                chol_makespan_gpudirect(PAPER_N, p, 4),
+            )
+            push(
+                "SUMMA", GPUDIRECT_SUMMA_N,
+                summa_wire_stage(GPUDIRECT_SUMMA_N, p, 4),
+                summa_makespan_prefetch(GPUDIRECT_SUMMA_N, p, 4, True),
+                summa_makespan_gpudirect(GPUDIRECT_SUMMA_N, p, 4, True),
+            )
+            for m, name in (("cg", "CG"), ("bicgstab", "BiCGSTAB")):
+                push(
+                    name, PAPER_N,
+                    iter_wire_stage(m, PAPER_N, iters, p, 4),
+                    iter_makespan_prefetch(m, PAPER_N, iters, 30, p, 4),
+                    iter_makespan_gpudirect(m, PAPER_N, iters, 30, p, 4),
+                )
+    return rows
+
+
+def gpudirect_sparse_rows():
+    """Sparse rows of BENCH_gpudirect.json: each row is (stencil, method,
+    grid, n, nnz, ranks, staged, gpudirect) — host-arm operands, host-clean
+    ghosts, always an exact wash."""
+    iters = GPUDIRECT_ITERS
+    rows = []
+    for ranks in PAPER_RANKS:
+        p = params(ranks, gpu=False)
+        for stencil, grid, dim in HALO_STENCILS:
+            n = grid**dim
+            h = stencil_halo_counts(grid, dim, p.tile, p.pr)
+            nnz = h["total_nnz"]
+            for m, name in (("cg", "CG"), ("bicgstab", "BiCGSTAB")):
+                prefetch = sparse_iter_makespan_prefetch(m, n, nnz, iters, 30, p, 8)
+                rows.append((
+                    stencil, name, grid, n, nnz, ranks,
+                    prefetch + sparse_iter_wire_stage(n, nnz, p, 8),
+                    sparse_iter_makespan_gpudirect(m, n, nnz, iters, 30, p, 8),
+                ))
+    return rows
 
 
 def halo_rows():
@@ -1316,6 +1529,38 @@ def render_halo_json():
             f'"diag_frac": {diag_frac:.6f}, '
             f'"allgather_secs": {_rust_e6(ag)}, "halo_secs": {_rust_e6(ha)}, '
             f'"saved_frac": {1.0 - ha / ag:.4f}}}{comma}'
+        )
+    return "\n".join(lines + ["  ]", "}", ""])
+
+
+def render_gpudirect_json():
+    """The exact bytes `cargo bench --bench gpudirect` writes."""
+    rows = gpudirect_rows()
+    srows = gpudirect_sparse_rows()
+    lines = ['{', '  "network": "gigabit_ethernet",', '  "tile": 256,',
+             f'  "iters": {GPUDIRECT_ITERS},', '  "entries": [']
+    for i, (kernel, engine, n, ranks, pr, pc, stage, staged,
+            gpudirect, strict) in enumerate(rows):
+        comma = "," if i + 1 < len(rows) else ""
+        flag = "true" if strict else "false"
+        lines.append(
+            f'    {{"kernel": "{kernel}", "engine": "{engine}", "n": {n}, '
+            f'"ranks": {ranks}, "pr": {pr}, "pc": {pc}, '
+            f'"wire_stage_secs": {_rust_e6(stage)}, '
+            f'"staged_secs": {_rust_e6(staged)}, '
+            f'"gpudirect_secs": {_rust_e6(gpudirect)}, '
+            f'"saved_frac": {1.0 - gpudirect / staged:.4f}, '
+            f'"strict": {flag}}}{comma}'
+        )
+    lines += ['  ],', '  "sparse": [']
+    for i, (stencil, method, grid, n, nnz, ranks, staged,
+            gpudirect) in enumerate(srows):
+        comma = "," if i + 1 < len(srows) else ""
+        lines.append(
+            f'    {{"stencil": "{stencil}", "method": "{method}", '
+            f'"grid": {grid}, "n": {n}, "nnz": {nnz}, "ranks": {ranks}, '
+            f'"staged_secs": {_rust_e6(staged)}, '
+            f'"gpudirect_secs": {_rust_e6(gpudirect)}}}{comma}'
         )
     return "\n".join(lines + ["  ]", "}", ""])
 

@@ -1,0 +1,238 @@
+"""No-toolchain verification of the GPUDirect wire PR (rust DESIGN.md §16).
+
+Five independent oracles:
+
+1. **Model-twin inequalities** — exactly what `cargo bench --bench
+   gpudirect` asserts: `gpudirect <= host-staged` on every emitted
+   configuration, strictly smaller wherever a device-dirty payload hits
+   the wire (`wire_stage > 0`), an exact wash everywhere else, and the
+   sparse halo rows always a wash.
+2. **Strictness predicates** — the stage term is positive exactly where
+   the runtime routing sends device-dirty buffers: LU at `gpu ∧ pr > 1`,
+   Cholesky at `gpu ∧ P > 1`, CG/BiCGSTAB at `gpu ∧ pc > 1`, SUMMA never.
+3. **Committed artifact** — `BENCH_gpudirect.json` must be byte-identical
+   to what the model mirror produces, with a valid schema.
+4. **Off-bench sweep** — across odd sizes, tiles and meshes: a host-clean
+   payload (host profile, `pcie_bw = 0`) is an *exact* wash — the
+   gpudirect twin equals the host-staged sum bitwise — and on the
+   accelerated arm the residual of each wire payload never exceeds its
+   stage (the PCIe leg can only shrink by riding under the NIC leg).
+5. **Batched BiCGSTAB twin** — `bicgstab_makespan_batched` is the
+   single-RHS BiCGSTAB arm bit for bit at k = 1 and strictly amortizes at
+   k > 1 (the serving scheduler's new pricer).
+"""
+
+import json
+import pathlib
+
+import model_mirror as mm
+
+LE_SLACK = 1.0 + 1e-9
+
+
+def _wash(a, b):
+    return abs(a - b) <= 1e-12 * max(b, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# 1 + 2. model twins — bench acceptance shape and strictness predicates
+# ---------------------------------------------------------------------------
+
+
+def test_gpudirect_bench_acceptance_shape():
+    rows = mm.gpudirect_rows()
+    assert len(rows) == len(mm.PAPER_RANKS) * 2 * 5  # ranks x engines x kernels
+    for (kernel, engine, n, ranks, pr, pc, stage, staged, g, strict) in rows:
+        assert stage >= 0.0
+        assert g <= staged * LE_SLACK, (
+            f"{kernel} {engine} P={ranks}: gpudirect {g} > staged {staged}"
+        )
+        if strict:
+            assert stage > 0.0
+            assert g < staged, (
+                f"{kernel} {engine} P={ranks}: a dirty payload hit the wire, "
+                f"gpudirect must strictly win"
+            )
+        else:
+            assert stage == 0.0
+            assert _wash(g, staged), (
+                f"{kernel} {engine} P={ranks}: no wire traffic must be a wash"
+            )
+
+
+def test_gpudirect_strict_exactly_where_dirty_payloads_hit_the_wire():
+    for (kernel, engine, n, ranks, pr, pc, stage, staged, g, strict) in (
+        mm.gpudirect_rows()
+    ):
+        gpu = engine == "MPI+CUDA"
+        if kernel == "LU":
+            want = gpu and pr > 1
+        elif kernel == "Cholesky":
+            want = gpu and ranks > 1
+        elif kernel in ("CG", "BiCGSTAB"):
+            want = gpu and pc > 1
+        else:
+            assert kernel == "SUMMA"
+            want = False  # read-only host-clean panels, always a wash
+        assert strict == want, f"{kernel} {engine} P={ranks} ({pr}x{pc})"
+
+
+def test_gpudirect_sparse_rows_always_a_wash():
+    rows = mm.gpudirect_sparse_rows()
+    assert len(rows) == len(mm.PAPER_RANKS) * len(mm.HALO_STENCILS) * 2
+    for (stencil, method, grid, n, nnz, ranks, staged, g) in rows:
+        # Host-arm operands, host-clean ghost segments: the halo wire
+        # composes with GPUDirect as an exact wash.
+        assert _wash(g, staged), f"{stencil} {method} P={ranks}"
+
+
+def test_bicgstab_wire_costs_twice_cg():
+    # Two matvecs per BiCGSTAB iteration vs one per CG: the staging legs
+    # double, so wherever CG's stage is positive BiCGSTAB's is larger.
+    p = mm.params(16, gpu=True)
+    cg = mm.iter_wire_stage("cg", mm.PAPER_N, 100, p, 4)
+    bi = mm.iter_wire_stage("bicgstab", mm.PAPER_N, 100, p, 4)
+    assert cg > 0.0
+    assert bi == 2.0 * cg
+
+
+# ---------------------------------------------------------------------------
+# 3. committed artifact
+# ---------------------------------------------------------------------------
+
+
+def test_gpudirect_artifact_bytes():
+    root = pathlib.Path(__file__).resolve().parents[2]
+    assert (
+        (root / "BENCH_gpudirect.json").read_text() == mm.render_gpudirect_json()
+    )
+
+
+def test_gpudirect_artifact_is_valid_json_with_expected_schema():
+    root = pathlib.Path(__file__).resolve().parents[2]
+    doc = json.loads((root / "BENCH_gpudirect.json").read_text())
+    assert doc["network"] == "gigabit_ethernet"
+    assert doc["tile"] == 256
+    assert doc["iters"] == mm.GPUDIRECT_ITERS
+    entries, sparse = doc["entries"], doc["sparse"]
+    assert len(entries) == 50 and len(sparse) == 20
+    for e in entries:
+        assert e["pr"] * e["pc"] == e["ranks"]
+        assert e["gpudirect_secs"] <= e["staged_secs"] * LE_SLACK
+        assert e["strict"] == (e["wire_stage_secs"] > 0.0)
+        assert abs(
+            e["saved_frac"] - (1.0 - e["gpudirect_secs"] / e["staged_secs"])
+        ) <= 5e-5  # the emitted ratio is rounded to 4 decimals
+    for e in sparse:
+        assert e["n"] == e["grid"] ** (2 if e["stencil"] == "poisson2d" else 3)
+        assert e["gpudirect_secs"] == e["staged_secs"]  # exact wash, literal
+
+
+# ---------------------------------------------------------------------------
+# 4. off-bench sweep — host-clean washes, residual <= stage
+# ---------------------------------------------------------------------------
+
+
+def test_host_clean_payloads_are_an_exact_wash_across_the_sweep():
+    # On the host profile pcie_bw = 0: wire_payload is (0, 0) identically,
+    # so every gpudirect twin equals its host-staged sum bitwise.
+    for ranks in (1, 2, 3, 5, 8):
+        pr, pc = mm.near_square(ranks)
+        p = mm.ModelParams(
+            tile=96, pr=pr, pc=pc, net=mm.gigabit_ethernet(),
+            engine=mm.q6600_atlas(), panel_cpu=mm.q6600_atlas(),
+            swap_fraction=0.5,
+        )
+        for n in (960, 3_072):
+            assert mm.wire_payload(p, n, 4) == (0.0, 0.0)
+            assert mm.lu_wire_stage(n, p, 4) == 0.0
+            assert mm.lu_makespan_gpudirect(n, p, 4) == mm.lu_makespan_prefetch(n, p, 4)
+            assert mm.chol_wire_stage(n, p, 4) == 0.0
+            assert mm.chol_makespan_gpudirect(n, p, 4) == mm.chol_makespan_prefetch(
+                n, p, 4
+            )
+            for m in ("cg", "bicgstab", "pipecg"):
+                assert mm.iter_wire_stage(m, n, 50, p, 4) == 0.0
+                assert mm.iter_makespan_gpudirect(
+                    m, n, 50, 30, p, 4
+                ) == mm.iter_makespan_prefetch(m, n, 50, 30, p, 4)
+
+
+def test_residual_never_exceeds_stage_on_the_accelerated_arm():
+    # max(0, xfer - msg) <= xfer termwise; strict because a send's NIC leg
+    # (alpha + bytes * beta) is never free.
+    for ranks in (2, 4, 6, 16):
+        pr, pc = mm.near_square(ranks)
+        p = mm.ModelParams(
+            tile=128, pr=pr, pc=pc, net=mm.gigabit_ethernet(),
+            engine=mm.gtx280_cublas(), panel_cpu=mm.q6600_atlas(),
+            swap_fraction=0.5,
+        )
+        for elems in (1, 128, 128 * 128, 10_000):
+            stage, residual = mm.wire_payload(p, elems, 4)
+            assert stage > 0.0
+            assert 0.0 <= residual < stage
+        for n in (2_048, 10_240):
+            for twin, staged in (
+                (mm.lu_makespan_gpudirect(n, p, 4),
+                 mm.lu_makespan_prefetch(n, p, 4) + mm.lu_wire_stage(n, p, 4)),
+                (mm.chol_makespan_gpudirect(n, p, 4),
+                 mm.chol_makespan_prefetch(n, p, 4) + mm.chol_wire_stage(n, p, 4)),
+                (mm.iter_makespan_gpudirect("bicgstab", n, 50, 30, p, 4),
+                 mm.iter_makespan_prefetch("bicgstab", n, 50, 30, p, 4)
+                 + mm.iter_wire_stage("bicgstab", n, 50, p, 4)),
+            ):
+                assert twin <= staged * LE_SLACK
+
+
+def test_methods_outside_the_fused_flow_keep_host_staged_accounting():
+    p = mm.params(16, gpu=True)
+    for m in ("bicg", "gmres"):
+        assert mm.iter_wire_stage(m, mm.PAPER_N, 100, p, 4) == 0.0
+        assert mm.iter_makespan_gpudirect(
+            m, mm.PAPER_N, 100, 30, p, 4
+        ) == mm.iter_makespan_prefetch(m, mm.PAPER_N, 100, 30, p, 4)
+
+
+def test_summa_and_sparse_wire_stages_are_identically_zero():
+    for gpu in (False, True):
+        p = mm.params(4, gpu)
+        assert mm.summa_wire_stage(16_384, p, 4) == 0.0
+        assert mm.summa_makespan_gpudirect(16_384, p, 4, True) == (
+            mm.summa_makespan_prefetch(16_384, p, 4, True)
+        )
+        assert mm.sparse_iter_wire_stage(1_000_000, 4_996_000, p, 8) == 0.0
+        assert mm.sparse_iter_makespan_gpudirect(
+            "cg", 1_000_000, 4_996_000, 100, 30, p, 8
+        ) == mm.sparse_iter_makespan_prefetch(
+            "cg", 1_000_000, 4_996_000, 100, 30, p, 8
+        )
+
+
+# ---------------------------------------------------------------------------
+# 5. the batched BiCGSTAB twin (the serving pricer's new arm)
+# ---------------------------------------------------------------------------
+
+
+def test_batched_bicgstab_exact_at_k1_and_amortizes_above():
+    for ranks in mm.PAPER_RANKS:
+        for gpu in (False, True):
+            p = mm.params(ranks, gpu)
+            single = mm.iter_makespan("bicgstab", mm.PAPER_N, 100, 30, p, 4)
+            assert mm.bicgstab_makespan_batched(mm.PAPER_N, 1, 100, p, 4) == single
+            for k in (2, 4, 8):
+                batched = mm.bicgstab_makespan_batched(mm.PAPER_N, k, 100, p, 4)
+                assert batched < k * single, f"P={ranks} gpu={gpu} k={k}"
+
+
+def test_serving_price_routes_bicgstab_through_the_batched_twin():
+    p = mm.params(mm.SERVE_RANKS, gpu=True)
+    members = [
+        {"n": mm.SERVE_BASE_N, "method": "bicgstab"} for _ in range(4)
+    ]
+    assert mm._serve_price(p, members) == mm.bicgstab_makespan_batched(
+        mm.SERVE_BASE_N, 4, mm.SERVE_ITERS, p, 4
+    )
+    assert mm._serve_price(p, members) < 4 * mm.iter_makespan(
+        "bicgstab", mm.SERVE_BASE_N, mm.SERVE_ITERS, 30, p, 4
+    )

@@ -1,0 +1,283 @@
+//! Bench: GPUDirect device-to-NIC sends vs the host-staged barrier — the
+//! printed number behind the wire subsystem (`DESIGN.md` §16).
+//!
+//! For every paper rank count and both engine arms, evaluates the analytic
+//! model in two arms that differ **only** in how device-dirty send
+//! payloads reach the NIC:
+//!
+//! * **host-staged** — every send flushes the dirty device buffer D2H
+//!   first (`Ctx::host_read` at the send site), serialising the staging
+//!   PCIe ahead of the NIC: the copy-engine prefetch twin plus the
+//!   per-kernel `*_wire_stage` term;
+//! * **gpudirect** — the dirty buffer goes straight to the NIC
+//!   (`Ctx::wire_read`), the PCIe leg riding *under* the send's own NIC
+//!   occupancy on the joint timeline (`VClock::wire_occupy_from`): the
+//!   `*_makespan_gpudirect` twin.
+//!
+//! Dense rows cover LU, Cholesky, SUMMA and CG/BiCGSTAB; sparse rows run
+//! the Poisson stencils through the fused sparse twins — host-arm
+//! operands, host-clean ghost segments, so the halo wire composes with
+//! GPUDirect as an exact wash (asserted, not papered over).  Likewise
+//! SUMMA: its broadcast panels are read-only and host-clean, an exact
+//! wash on both arms.
+//!
+//! Emits `BENCH_gpudirect.json` and asserts the acceptance shape:
+//! gpudirect <= host-staged on every configuration, strictly smaller
+//! exactly where a device-dirty payload hits the wire (`wire_stage > 0`:
+//! the accelerated arm with real column/row sends), and an exact wash on
+//! host profiles and for host-clean payloads.
+//!
+//! ```sh
+//! cargo bench --bench gpudirect
+//! ```
+
+use cuplss::accel::{ComputeProfile, DEFAULT_DEVICE_MEM};
+use cuplss::bench_harness::model::{
+    chol_makespan_gpudirect, chol_makespan_prefetch, chol_wire_stage, iter_makespan_gpudirect,
+    iter_makespan_prefetch, iter_wire_stage, lu_makespan_gpudirect, lu_makespan_prefetch,
+    lu_wire_stage, sparse_iter_makespan_gpudirect, sparse_iter_makespan_prefetch,
+    sparse_iter_wire_stage, summa_makespan_gpudirect, summa_makespan_prefetch, summa_wire_stage,
+};
+use cuplss::bench_harness::{ModelParams, PAPER_N, PAPER_RANKS};
+use cuplss::comm::NetworkModel;
+use cuplss::mesh::MeshShape;
+use cuplss::solvers::IterMethod;
+use cuplss::util::fmt;
+use cuplss::workloads::stencil_halo_counts;
+
+struct Row {
+    kernel: &'static str,
+    engine: &'static str,
+    n: usize,
+    ranks: usize,
+    pr: usize,
+    pc: usize,
+    wire_stage: f64,
+    staged: f64,
+    gpudirect: f64,
+    /// Must GPUDirect win strictly (a device-dirty payload hit the wire)?
+    strict: bool,
+}
+
+struct SparseRow {
+    stencil: &'static str,
+    method: &'static str,
+    grid: usize,
+    n: usize,
+    nnz: usize,
+    ranks: usize,
+    staged: f64,
+    gpudirect: f64,
+}
+
+fn params(ranks: usize, gpu: bool) -> ModelParams {
+    ModelParams {
+        tile: 256,
+        shape: MeshShape::near_square(ranks),
+        net: NetworkModel::gigabit_ethernet(),
+        engine: if gpu {
+            ComputeProfile::gtx280_cublas()
+        } else {
+            ComputeProfile::q6600_atlas()
+        },
+        panel_cpu: ComputeProfile::q6600_atlas(),
+        swap_fraction: 0.5,
+        device_mem: DEFAULT_DEVICE_MEM,
+    }
+}
+
+fn main() {
+    let iters = 100usize;
+    let summa_n = 16_384usize;
+    let mut rows: Vec<Row> = Vec::new();
+
+    for &ranks in PAPER_RANKS {
+        for gpu in [false, true] {
+            let p = params(ranks, gpu);
+            let (pr, pc) = (p.shape.pr, p.shape.pc);
+            let engine = if gpu { "MPI+CUDA" } else { "MPI+ATLAS" };
+            let mut push = |kernel, n, stage: f64, prefetch: f64, gpudirect: f64| {
+                rows.push(Row {
+                    kernel,
+                    engine,
+                    n,
+                    ranks,
+                    pr,
+                    pc,
+                    wire_stage: stage,
+                    staged: prefetch + stage,
+                    gpudirect,
+                    strict: stage > 0.0,
+                });
+            };
+            push(
+                "LU",
+                PAPER_N,
+                lu_wire_stage::<f32>(PAPER_N, &p),
+                lu_makespan_prefetch::<f32>(PAPER_N, &p),
+                lu_makespan_gpudirect::<f32>(PAPER_N, &p),
+            );
+            push(
+                "Cholesky",
+                PAPER_N,
+                chol_wire_stage::<f32>(PAPER_N, &p),
+                chol_makespan_prefetch::<f32>(PAPER_N, &p),
+                chol_makespan_gpudirect::<f32>(PAPER_N, &p),
+            );
+            push(
+                "SUMMA",
+                summa_n,
+                summa_wire_stage::<f32>(summa_n, &p),
+                summa_makespan_prefetch::<f32>(summa_n, &p, true),
+                summa_makespan_gpudirect::<f32>(summa_n, &p, true),
+            );
+            for (m, name) in [(IterMethod::Cg, "CG"), (IterMethod::Bicgstab, "BiCGSTAB")] {
+                push(
+                    name,
+                    PAPER_N,
+                    iter_wire_stage::<f32>(m, PAPER_N, iters, &p),
+                    iter_makespan_prefetch::<f32>(m, PAPER_N, iters, 30, &p),
+                    iter_makespan_gpudirect::<f32>(m, PAPER_N, iters, 30, &p),
+                );
+            }
+        }
+    }
+
+    // Halo-sparse configs: host-arm operands, host-clean ghost segments —
+    // the wire stage is zero and GPUDirect must be an exact wash.
+    let mut sparse_rows: Vec<SparseRow> = Vec::new();
+    for &ranks in PAPER_RANKS {
+        let p = params(ranks, false);
+        for (stencil, grid, dim) in [("poisson2d", 512usize, 2u32), ("poisson3d", 64, 3)] {
+            let n = grid.pow(dim);
+            let h = stencil_halo_counts(grid, dim, p.tile, p.shape.pr);
+            for (m, name) in [(IterMethod::Cg, "CG"), (IterMethod::Bicgstab, "BiCGSTAB")] {
+                let prefetch =
+                    sparse_iter_makespan_prefetch::<f64>(m, n, h.total_nnz, iters, 30, &p);
+                sparse_rows.push(SparseRow {
+                    stencil,
+                    method: name,
+                    grid,
+                    n,
+                    nnz: h.total_nnz,
+                    ranks,
+                    staged: prefetch + sparse_iter_wire_stage::<f64>(n, h.total_nnz, &p),
+                    gpudirect: sparse_iter_makespan_gpudirect::<f64>(
+                        m,
+                        n,
+                        h.total_nnz,
+                        iters,
+                        30,
+                        &p,
+                    ),
+                });
+            }
+        }
+    }
+
+    // Table for the terminal.
+    let header = ["kernel", "engine", "P", "stage", "host-staged", "gpudirect", "saved"];
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.kernel.to_string(),
+                r.engine.to_string(),
+                r.ranks.to_string(),
+                fmt::secs(r.wire_stage),
+                fmt::secs(r.staged),
+                fmt::secs(r.gpudirect),
+                format!("{:.1}%", (1.0 - r.gpudirect / r.staged) * 100.0),
+            ]
+        })
+        .collect();
+    println!("== GPUDirect wire vs host-staged sends ==");
+    println!("{}", fmt::table(&header, &body));
+
+    // Acceptance shape.
+    for r in &rows {
+        assert!(
+            r.gpudirect <= r.staged * (1.0 + 1e-9),
+            "{} {} P={}: gpudirect {} > host-staged {}",
+            r.kernel,
+            r.engine,
+            r.ranks,
+            r.gpudirect,
+            r.staged
+        );
+        if r.strict {
+            assert!(
+                r.gpudirect < r.staged,
+                "{} {} P={}: a device-dirty payload hit the wire, gpudirect must strictly win",
+                r.kernel,
+                r.engine,
+                r.ranks
+            );
+        } else {
+            assert!(
+                (r.gpudirect - r.staged).abs() <= 1e-12 * r.staged.max(1.0),
+                "{} {} P={}: no dirty payload on the wire must be an exact wash",
+                r.kernel,
+                r.engine,
+                r.ranks
+            );
+        }
+    }
+    for r in &sparse_rows {
+        assert!(
+            (r.gpudirect - r.staged).abs() <= 1e-12 * r.staged.max(1.0),
+            "{} {} P={}: host-clean ghost payloads must be an exact wash",
+            r.stencil,
+            r.method,
+            r.ranks
+        );
+    }
+
+    // BENCH_gpudirect.json (hand-rolled: the offline crate set has no serde).
+    let mut json = format!(
+        "{{\n  \"network\": \"gigabit_ethernet\",\n  \"tile\": 256,\n  \"iters\": {iters},\n  \"entries\": [\n"
+    );
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"engine\": \"{}\", \"n\": {}, \"ranks\": {}, \
+             \"pr\": {}, \"pc\": {}, \"wire_stage_secs\": {:.6e}, \"staged_secs\": {:.6e}, \
+             \"gpudirect_secs\": {:.6e}, \"saved_frac\": {:.4}, \"strict\": {}}}{}\n",
+            r.kernel,
+            r.engine,
+            r.n,
+            r.ranks,
+            r.pr,
+            r.pc,
+            r.wire_stage,
+            r.staged,
+            r.gpudirect,
+            1.0 - r.gpudirect / r.staged,
+            r.strict,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n  \"sparse\": [\n");
+    for (i, r) in sparse_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"stencil\": \"{}\", \"method\": \"{}\", \"grid\": {}, \"n\": {}, \
+             \"nnz\": {}, \"ranks\": {}, \"staged_secs\": {:.6e}, \
+             \"gpudirect_secs\": {:.6e}}}{}\n",
+            r.stencil,
+            r.method,
+            r.grid,
+            r.n,
+            r.nnz,
+            r.ranks,
+            r.staged,
+            r.gpudirect,
+            if i + 1 < sparse_rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_gpudirect.json", &json).expect("write BENCH_gpudirect.json");
+    println!(
+        "wrote BENCH_gpudirect.json ({} dense + {} sparse rows); the wire never loses.",
+        rows.len(),
+        sparse_rows.len()
+    );
+}

@@ -28,8 +28,8 @@
 
 use cuplss::accel::{ComputeProfile, DEFAULT_DEVICE_MEM};
 use cuplss::bench_harness::model::{
-    cg_makespan_batched, chol_solve_makespan_batched, iter_makespan, lu_solve_makespan_batched,
-    trsm_makespan, trsv_makespan,
+    bicgstab_makespan_batched, cg_makespan_batched, chol_solve_makespan_batched, iter_makespan,
+    lu_solve_makespan_batched, trsm_makespan, trsv_makespan,
 };
 use cuplss::bench_harness::{ModelParams, PAPER_N, PAPER_RANKS};
 use cuplss::cluster::Method;
@@ -80,14 +80,18 @@ fn params(ranks: usize, gpu: bool) -> ModelParams {
 }
 
 /// Price one serving batch with the analytic twins: direct methods ride
-/// one factorization + panel substitutions, CG rides the blocked sweep,
-/// BiCGSTAB (no batched twin yet) prices as k looped singles — honest:
-/// the scheduler never claims amortization the model does not grant.
+/// one factorization + panel substitutions, CG and BiCGSTAB ride their
+/// blocked sweeps, and anything without a batched twin prices as k looped
+/// singles — honest: the scheduler never claims amortization the model
+/// does not grant.
 fn model_batch_cost(method: Method, n: usize, k: usize, iters: usize, p: &ModelParams) -> f64 {
     match method {
         Method::Lu => lu_solve_makespan_batched::<f32>(n, k, p),
         Method::Cholesky => chol_solve_makespan_batched::<f32>(n, k, p),
         Method::Iterative(IterMethod::Cg) => cg_makespan_batched::<f32>(n, k, iters, p),
+        Method::Iterative(IterMethod::Bicgstab) => {
+            bicgstab_makespan_batched::<f32>(n, k, iters, p)
+        }
         Method::Iterative(m) => k as f64 * iter_makespan::<f32>(m, n, iters, 30, p),
     }
 }
@@ -110,6 +114,11 @@ fn main() {
                 cg_makespan_batched::<f32>(PAPER_N, 1, iters, &p),
                 iter_makespan::<f32>(IterMethod::Cg, PAPER_N, iters, 30, &p),
                 "{engine} P={ranks}: one-column blocked CG must price as CG"
+            );
+            assert_eq!(
+                bicgstab_makespan_batched::<f32>(PAPER_N, 1, iters, &p),
+                iter_makespan::<f32>(IterMethod::Bicgstab, PAPER_N, iters, 30, &p),
+                "{engine} P={ranks}: one-column blocked BiCGSTAB must price as BiCGSTAB"
             );
             let singles = [
                 ("TRSM", trsm_makespan::<f32>(PAPER_N, 1, &p)),

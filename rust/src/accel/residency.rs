@@ -196,6 +196,13 @@ impl TileCache {
         self.map.contains_key(&key)
     }
 
+    /// Is `key` resident with device-side writes the host has not observed
+    /// (an open dirty period)?  The GPUDirect wire reads exactly these
+    /// buffers straight from device memory (`DESIGN.md` §16).
+    pub fn is_dirty(&self, key: BufKey) -> bool {
+        self.map.get(&key).is_some_and(|e| e.dirty)
+    }
+
     /// Pin a resident entry against eviction while its async transfer is
     /// in flight (`DESIGN.md` §13); no-op if not resident.
     pub fn pin(&mut self, key: BufKey) {

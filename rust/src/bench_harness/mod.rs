@@ -17,12 +17,16 @@ pub mod model;
 
 pub use figures::{fig3_series, fig4_series, FigurePoint, FigureSeries};
 pub use model::{
-    chol_makespan_prefetch, chol_makespan_resident, chol_solve_makespan_batched,
-    cg_makespan_batched, iter_makespan_fused, iter_makespan_prefetch, lu_makespan_lookahead,
-    lu_makespan_prefetch, lu_makespan_resident, lu_solve_makespan_batched,
-    halo_wire, sparse_cg_split_makespan, sparse_iter_makespan_fused, sparse_iter_makespan_halo,
-    sparse_iter_makespan_prefetch, sparse_iter_makespan_split, sparse_pipecg_overlap_makespan,
-    summa_makespan, summa_makespan_prefetch, summa_makespan_resident, trsm_makespan, ModelParams,
+    bicgstab_makespan_batched, chol_makespan_gpudirect, chol_makespan_prefetch,
+    chol_makespan_resident, chol_solve_makespan_batched, chol_wire_stage, cg_makespan_batched,
+    iter_makespan_fused, iter_makespan_gpudirect, iter_makespan_prefetch, iter_wire_stage,
+    lu_makespan_gpudirect, lu_makespan_lookahead, lu_makespan_prefetch, lu_makespan_resident,
+    lu_solve_makespan_batched, lu_wire_stage, halo_wire, sparse_cg_split_makespan,
+    sparse_iter_makespan_fused, sparse_iter_makespan_gpudirect, sparse_iter_makespan_halo,
+    sparse_iter_makespan_prefetch, sparse_iter_makespan_split, sparse_iter_wire_stage,
+    sparse_pipecg_overlap_makespan, summa_makespan, summa_makespan_gpudirect,
+    summa_makespan_prefetch, summa_makespan_resident, summa_wire_stage, trsm_makespan,
+    ModelParams,
 };
 
 /// The paper's rank sweep (Figures 3 and 4).

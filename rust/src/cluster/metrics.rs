@@ -36,6 +36,12 @@ pub struct RankMetrics {
     pub pcie_hidden_secs: f64,
     /// Operand accesses served by an in-flight async prefetch.
     pub prefetch_hits: u64,
+    /// Payload bytes sent straight off the device (GPUDirect wire, no host
+    /// staging barrier; 0 on host profiles and with `--no-gpudirect`).
+    pub wire_direct_bytes: u64,
+    /// Virtual seconds of host staging (flush-barrier waits at send sites)
+    /// the GPUDirect wire avoided.
+    pub host_stage_saved_secs: f64,
     /// Kernel launches eliminated by fused BLAS-1 ops.
     pub launches_fused: u64,
     /// Wall-clock seconds this rank actually took (calibration data).
@@ -65,6 +71,8 @@ impl RankMetrics {
             pcie_saved_bytes: comm.stats().pcie_saved_bytes(),
             pcie_hidden_secs: (comm.stats().pcie_hidden_secs() - pcie_backlog).max(0.0),
             prefetch_hits: comm.stats().prefetch_hits(),
+            wire_direct_bytes: comm.stats().wire_direct_bytes(),
+            host_stage_saved_secs: comm.stats().host_stage_saved_secs(),
             launches_fused: comm.stats().launches_fused(),
             wall,
         }
@@ -210,6 +218,17 @@ impl SolveReport {
         self.per_rank.iter().map(|m| m.prefetch_hits).sum()
     }
 
+    /// Total payload bytes sent straight off the device (GPUDirect wire).
+    pub fn total_wire_direct(&self) -> u64 {
+        self.per_rank.iter().map(|m| m.wire_direct_bytes).sum()
+    }
+
+    /// Total virtual seconds of send-site host staging the GPUDirect wire
+    /// avoided.
+    pub fn total_host_stage_saved(&self) -> f64 {
+        self.per_rank.iter().map(|m| m.host_stage_saved_secs).sum()
+    }
+
     /// Total kernel launches eliminated by fused BLAS-1 ops.
     pub fn total_launches_fused(&self) -> u64 {
         self.per_rank.iter().map(|m| m.launches_fused).sum()
@@ -231,7 +250,7 @@ impl SolveReport {
         format!(
             "{} on {:?} n={} P={} [{}]: makespan {}, err {:.2e}, comm {:.0}%, \
              hidden {}, reqs<={}, pcie saved {}, pcie hidden {}, prefetch hits {}, \
-             fused {}{}",
+             wire direct {}, stage saved {}, fused {}{}",
             self.method,
             self.workload,
             self.n,
@@ -245,6 +264,8 @@ impl SolveReport {
             crate::util::fmt::bytes(self.total_pcie_saved() as f64),
             crate::util::fmt::secs(self.total_pcie_hidden()),
             self.total_prefetch_hits(),
+            crate::util::fmt::bytes(self.total_wire_direct() as f64),
+            crate::util::fmt::secs(self.total_host_stage_saved()),
             self.total_launches_fused(),
             iter
         )
@@ -269,6 +290,8 @@ mod tests {
             pcie_saved_bytes: 1024,
             pcie_hidden_secs: 0.125,
             prefetch_hits: 5,
+            wire_direct_bytes: 512,
+            host_stage_saved_secs: 0.0625,
             launches_fused: 7,
             wall: 0.01,
         }
@@ -295,12 +318,16 @@ mod tests {
         assert_eq!(r.total_pcie_saved(), 2048);
         assert!((r.total_pcie_hidden() - 0.25).abs() < 1e-12);
         assert_eq!(r.total_prefetch_hits(), 10);
+        assert_eq!(r.total_wire_direct(), 1024);
+        assert!((r.total_host_stage_saved() - 0.125).abs() < 1e-12);
         assert_eq!(r.total_launches_fused(), 14);
         assert!(r.summary().contains("LU"));
         assert!(r.summary().contains("hidden"));
         assert!(r.summary().contains("pcie saved"));
         assert!(r.summary().contains("pcie hidden"));
         assert!(r.summary().contains("prefetch hits"));
+        assert!(r.summary().contains("wire direct"));
+        assert!(r.summary().contains("stage saved"));
     }
 
     #[test]

@@ -82,6 +82,12 @@ pub struct ClusterConfig {
     /// `--no-prefetch` A/B arm.  Never changes results, only *when* PCIe
     /// time is charged.  Inert without residency.
     pub prefetch: bool,
+    /// GPUDirect wire: device-dirty send payloads go straight to the NIC,
+    /// occupying NIC + copy engine jointly with no host staging barrier
+    /// (`DESIGN.md` §16).  `false` keeps the blocking host_read-then-send
+    /// flow — the `--no-gpudirect` A/B arm.  Never changes results.  Inert
+    /// without residency + prefetch.
+    pub gpudirect: bool,
     /// Iterative controls.
     pub iter: IterConfig,
 }
@@ -97,6 +103,7 @@ impl Default for ClusterConfig {
             residency: true,
             device_mem: crate::accel::DEFAULT_DEVICE_MEM,
             prefetch: true,
+            gpudirect: true,
             iter: IterConfig::default(),
         }
     }
@@ -158,7 +165,8 @@ impl Cluster {
             make_engine(cfg.engine, cfg.tile, self.runtime.as_ref())?;
         let iter_cfg = cfg.iter;
         let tile = cfg.tile;
-        let (residency, device_mem, prefetch) = (cfg.residency, cfg.device_mem, cfg.prefetch);
+        let (residency, device_mem, prefetch, gpudirect) =
+            (cfg.residency, cfg.device_mem, cfg.prefetch, cfg.gpudirect);
 
         let results = World::run::<S, Result<(RankMetrics, Option<Vec<S>>, Option<(usize, f64, bool)>)>, _>(
             cfg.ranks,
@@ -168,6 +176,7 @@ impl Cluster {
                 let ctx = if residency {
                     Ctx::with_device_mem(&mesh, engine.clone(), device_mem)
                         .with_prefetch(prefetch)
+                        .with_gpudirect(gpudirect)
                 } else {
                     Ctx::streaming(&mesh, engine.clone())
                 };
@@ -288,7 +297,8 @@ impl Cluster {
             make_engine(cfg.engine, cfg.tile, self.runtime.as_ref())?;
         let iter_cfg = cfg.iter;
         let tile = cfg.tile;
-        let (residency, device_mem, prefetch) = (cfg.residency, cfg.device_mem, cfg.prefetch);
+        let (residency, device_mem, prefetch, gpudirect) =
+            (cfg.residency, cfg.device_mem, cfg.prefetch, cfg.gpudirect);
         let coeffs_owned: Vec<f64> = coeffs.to_vec();
         let tols_owned: Vec<f64> = tols.to_vec();
 
@@ -297,7 +307,9 @@ impl Cluster {
         let results = World::run::<S, Result<BatchOut<S>>, _>(cfg.ranks, cfg.net, move |comm| {
             let mesh = Mesh::new(&comm, shape);
             let ctx = if residency {
-                Ctx::with_device_mem(&mesh, engine.clone(), device_mem).with_prefetch(prefetch)
+                Ctx::with_device_mem(&mesh, engine.clone(), device_mem)
+                    .with_prefetch(prefetch)
+                    .with_gpudirect(gpudirect)
             } else {
                 Ctx::streaming(&mesh, engine.clone())
             };

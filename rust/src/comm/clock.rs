@@ -157,6 +157,21 @@ impl VClock {
         self.observe_arrival(end);
     }
 
+    /// GPUDirect send of a device-resident payload: the NIC reads device
+    /// memory through the PCIe switch, so the two engines are occupied
+    /// **jointly** — the transfer starts once *both* timelines are free
+    /// (and no earlier than `at`), then each advances by its own leg
+    /// (`nic_dt` on the wire, `pcie_dt` on the link).  Returns the instant
+    /// the last byte leaves the wire.  Does **not** advance the compute
+    /// timeline: there is no host staging copy to block on (DESIGN.md §16).
+    pub fn wire_occupy_from(&self, at: f64, nic_dt: f64, pcie_dt: f64) -> f64 {
+        debug_assert!(nic_dt >= 0.0 && pcie_dt >= 0.0);
+        let start = self.nic_free.get().max(self.pcie_free.get()).max(at);
+        self.nic_free.set(start + nic_dt);
+        self.pcie_free.set(start + pcie_dt);
+        start + nic_dt.max(pcie_dt)
+    }
+
     /// Observe a message that arrives at absolute virtual time `arrival`:
     /// the rank blocks until then if it is early (that blocked interval is
     /// communication wait — the *remaining* latency of an overlapped
@@ -322,6 +337,29 @@ mod tests {
         assert_eq!(c.busy_until(), 11.0);
     }
 
+    #[test]
+    fn wire_occupy_couples_nic_and_copy_engine_jointly() {
+        let c = VClock::new();
+        // Pre-queue unequal backlogs on the two engines.
+        c.nic_occupy(0.5);
+        c.pcie_occupy(1.0);
+        // Joint start = max of both frees; each leg advances its own
+        // timeline; the compute timeline is untouched.
+        let end = c.wire_occupy_from(0.0, 0.25, 0.75);
+        assert!((end - 1.75).abs() < 1e-12, "{end}");
+        assert!((c.nic_free() - 1.25).abs() < 1e-12);
+        assert!((c.pcie_free() - 1.75).abs() < 1e-12);
+        assert_eq!(c.now(), 0.0);
+        assert_eq!(c.compute_secs(), 0.0);
+        assert_eq!(c.transfer_secs(), 0.0);
+        assert_eq!(c.comm_wait_secs(), 0.0);
+        // `at` later than both frees delays the joint start.
+        let end2 = c.wire_occupy_from(3.0, 0.5, 0.25);
+        assert!((end2 - 3.5).abs() < 1e-12, "{end2}");
+        assert!((c.nic_free() - 3.5).abs() < 1e-12);
+        assert!((c.pcie_free() - 3.25).abs() < 1e-12);
+    }
+
     /// The overlap-clock property the bench reports rely on, extended to
     /// **three** timelines: replay one random trace of compute intervals,
     /// sends, message arrivals and host<->device transfers in (a) blocking
@@ -348,7 +386,7 @@ mod tests {
             let mut pending: Vec<f64> = Vec::new();
             let n_events = 1 + rng.below(40);
             for _ in 0..n_events {
-                match rng.below(5) {
+                match rng.below(6) {
                     0 => {
                         let dt = rng.uniform() * 2.0;
                         blocking.advance_compute(dt);
@@ -373,7 +411,7 @@ mod tests {
                             overlapped.pcie_wait(ready);
                         }
                     }
-                    _ => {
+                    4 => {
                         // An externally-stamped arrival: same absolute time
                         // observed by both replays (identical trace).
                         let arr = rng.uniform() * 10.0;
@@ -381,6 +419,21 @@ mod tests {
                         blocking.observe_arrival(arr);
                         total_comm_blocking += (arr - before).max(0.0);
                         overlapped.observe_arrival(arr);
+                    }
+                    _ => {
+                        // A device-payload send: the blocking replay stages
+                        // through the host (D2H on the compute timeline,
+                        // then a blocking send); the overlapped replay hands
+                        // the buffer straight to the NIC — joint occupancy,
+                        // no compute charge.
+                        let nic_dt = rng.uniform();
+                        let pcie_dt = rng.uniform() * 0.5;
+                        blocking.advance_transfer(pcie_dt);
+                        blocking.advance_send(nic_dt);
+                        overlapped.wire_occupy_from(overlapped.now(), nic_dt, pcie_dt);
+                        total_send += nic_dt;
+                        total_xfer += pcie_dt;
+                        total_comm_blocking += nic_dt;
                     }
                 }
             }

@@ -163,6 +163,118 @@ impl<'a, S: Scalar> Group<'a, S> {
         self.allreduce_vec(tag, vec![mine], op)[0]
     }
 
+    /// GPUDirect broadcast: identical tree, message order and payloads to
+    /// [`Group::bcast`] — only the *root's own* tree edges go over the
+    /// device wire ([`Comm::send_wire`]'s joint NIC/PCIe occupancy with
+    /// `pcie_secs` as the D2H leg).  Forwarded copies are host-resident
+    /// (they arrived through the transport), so interior ranks send
+    /// plainly.  With `pcie_secs <= 0` this **is** [`Group::bcast`].
+    pub fn bcast_wire(
+        &self,
+        root: usize,
+        tag: u32,
+        data: Option<Payload<S>>,
+        pcie_secs: f64,
+    ) -> Payload<S> {
+        if pcie_secs <= 0.0 {
+            return self.bcast(root, tag, data);
+        }
+        let p = self.size();
+        let me = self.rank();
+        if p == 1 {
+            return data.expect("bcast root must supply data");
+        }
+        let rel = (me + p - root) % p;
+        let (pl, recv_mask) = if me == root {
+            (data.expect("bcast root must supply data"), 0)
+        } else {
+            let recv_mask = bcast_recv_mask(rel, p);
+            let src = (me + p - recv_mask) % p;
+            (self.comm().recv(self.world_rank(src), Tag::Bcast(tag)), recv_mask)
+        };
+        let mut leg = pcie_secs;
+        for child in bcast_children(rel, p, recv_mask) {
+            let dst = (me + (child - rel)) % p;
+            if me == root {
+                // The NIC reads the dirty device buffer directly.  The D2H
+                // leg is paid once per payload, not once per edge: after
+                // the first edge the bytes sit in the NIC's pinned window.
+                self.comm().send_wire(self.world_rank(dst), Tag::Bcast(tag), pl.clone(), leg);
+                leg = 0.0;
+            } else {
+                self.comm().send(self.world_rank(dst), Tag::Bcast(tag), pl.clone());
+            }
+        }
+        pl
+    }
+
+    /// GPUDirect reduction: identical tree and combine order to
+    /// [`Group::reduce_vec`].  Only a **virgin leaf** — a rank that ships
+    /// its contribution before folding in any received partial — holds a
+    /// device-dirty buffer; once `combine_vec` has run, the accumulator is
+    /// host-resident and goes over the plain wire.  With `pcie_secs <= 0`
+    /// this **is** [`Group::reduce_vec`].
+    pub fn reduce_vec_wire(
+        &self,
+        root: usize,
+        tag: u32,
+        mut mine: Vec<S>,
+        op: ReduceOp,
+        pcie_secs: f64,
+    ) -> Option<Vec<S>> {
+        if pcie_secs <= 0.0 {
+            return self.reduce_vec(root, tag, mine, op);
+        }
+        let p = self.size();
+        let me = self.rank();
+        if p == 1 {
+            return Some(mine);
+        }
+        let rel = (me + p - root) % p;
+        let mut mask = 1usize;
+        let mut virgin = true;
+        while mask < p {
+            if rel & mask == 0 {
+                let peer_rel = rel | mask;
+                if peer_rel < p {
+                    let src = (peer_rel + root) % p;
+                    let other =
+                        self.comm().recv(self.world_rank(src), Tag::Reduce(tag)).into_data();
+                    op.combine_vec(&mut mine, &other);
+                    virgin = false;
+                }
+            } else {
+                let dst = (rel - mask + root) % p;
+                let leg = if virgin { pcie_secs } else { 0.0 };
+                self.comm().send_wire(
+                    self.world_rank(dst),
+                    Tag::Reduce(tag),
+                    Payload::Data(mine),
+                    leg,
+                );
+                return None;
+            }
+            mask <<= 1;
+        }
+        Some(mine)
+    }
+
+    /// GPUDirect allreduce: [`Group::reduce_vec_wire`] up (virgin leaves on
+    /// the device wire), plain [`Group::bcast`] down (the reduced vector is
+    /// host-resident on every rank that holds it).  Bit-identical results
+    /// to [`Group::allreduce_vec`] always — the wire only reroutes clock
+    /// occupancy, never data.
+    pub fn allreduce_vec_wire(
+        &self,
+        tag: u32,
+        mine: Vec<S>,
+        op: ReduceOp,
+        pcie_secs: f64,
+    ) -> Vec<S> {
+        let reduced = self.reduce_vec_wire(0, tag, mine, op, pcie_secs);
+        self.bcast(0, tag, reduced.map(Payload::Data)).into_data()
+    }
+
     /// Allreduce of an (|value|, index) pair under max-abs — the pivot search
     /// of distributed partial pivoting (MPI_MAXLOC).  Ties break toward the
     /// smaller index so every rank picks the identical pivot.
@@ -326,6 +438,50 @@ impl<'a, S: Scalar> Group<'a, S> {
             tag,
             payload: None,
             recv_mask: bcast_recv_mask(rel, p),
+            posted_at,
+            done: Cell::new(false),
+        }
+    }
+
+    /// Start a split-phase GPUDirect broadcast: [`Group::ibcast`] with the
+    /// root's tree edges posted over the device wire
+    /// ([`Comm::post_wire_at`] — joint NIC/PCIe occupancy, no host staging
+    /// copy).  Non-root ranks behave exactly as in [`Group::ibcast`]: their
+    /// forwarded copies arrived through the transport and are
+    /// host-resident.  With `pcie_secs <= 0` this **is** [`Group::ibcast`].
+    pub fn ibcast_wire(
+        &self,
+        root: usize,
+        tag: u32,
+        data: Option<Payload<S>>,
+        pcie_secs: f64,
+    ) -> BcastRequest<'a, S> {
+        let p = self.size();
+        let me = self.rank();
+        if pcie_secs <= 0.0 || p == 1 || me != root {
+            return self.ibcast(root, tag, data);
+        }
+        self.comm().req_open();
+        let posted_at = self.comm().clock().now();
+        let pl = data.expect("bcast root must supply data");
+        for child in bcast_children(0, p, 0) {
+            let dst = (me + child) % p;
+            self.comm().post_wire_at(
+                self.world_rank(dst),
+                Tag::Bcast(tag),
+                pl.clone(),
+                posted_at,
+                pcie_secs,
+            );
+        }
+        BcastRequest {
+            comm: self.comm(),
+            ranks: self.ranks.clone(),
+            me,
+            root,
+            tag,
+            payload: Some(pl),
+            recv_mask: 0,
             posted_at,
             done: Cell::new(false),
         }
@@ -797,6 +953,57 @@ mod tests {
             for (blocking, split) in out {
                 assert_eq!(blocking, split, "p={p}");
             }
+        }
+    }
+
+    #[test]
+    fn wire_collectives_are_bit_identical_to_their_host_twins() {
+        // Same trees, same message order, same payloads: the device wire
+        // reroutes clock occupancy only.  Data must match bit for bit, on
+        // every size and root, with the wire leg on and off.
+        for p in [1usize, 2, 3, 4, 5, 8] {
+            for root in 0..p {
+                let out = run(p, move |comm| {
+                    let g = comm.world();
+                    let mk = || vec![(comm.rank() as f64 * 0.3).cos(), root as f64];
+                    let data =
+                        if comm.rank() == root { Some(Payload::Data(mk())) } else { None };
+                    let b = g.bcast(root, 1, data.clone()).into_data();
+                    let bw = g.bcast_wire(root, 2, data.clone(), 1e-4).into_data();
+                    let ib = g.ibcast_wire(root, 3, data, 1e-4).wait().into_data();
+                    let r = g.reduce_vec(root, 4, mk(), ReduceOp::Sum);
+                    let rw = g.reduce_vec_wire(root, 5, mk(), ReduceOp::Sum, 1e-4);
+                    let a = g.allreduce_vec(6, mk(), ReduceOp::Sum);
+                    let aw = g.allreduce_vec_wire(7, mk(), ReduceOp::Sum, 1e-4);
+                    (b == bw && b == ib, r == rw, a == aw)
+                });
+                for (b, r, a) in out {
+                    assert!(b && r && a, "p={p} root={root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wire_bcast_charges_the_pcie_leg_once_per_payload() {
+        // Root of an 8-rank binomial tree sends 3 edges; the D2H-equivalent
+        // leg must occupy the copy engine once, not three times.
+        let net = NetworkModel::gigabit_ethernet();
+        let pcie = 1e-3;
+        let out = World::run::<f64, _, _>(8, net, move |comm| {
+            let g = comm.world();
+            let data = if comm.rank() == 0 {
+                Some(Payload::Data(vec![1.0; 64]))
+            } else {
+                None
+            };
+            g.bcast_wire(0, 30, data, pcie);
+            comm.clock().pcie_free()
+        });
+        assert!(out[0] > 0.0, "root's copy engine carried the leg");
+        assert!(out[0] <= pcie * 1.5, "one leg, not one per edge: {}", out[0]);
+        for (r, &pf) in out.iter().enumerate().skip(1) {
+            assert_eq!(pf, 0.0, "rank {r} forwards host-resident copies");
         }
     }
 

@@ -59,6 +59,37 @@ impl<'a, S: Scalar> NeighborExchange<'a, S> {
         NeighborExchange { recvs, sends }
     }
 
+    /// Start the exchange with device-wire sends: identical to
+    /// [`NeighborExchange::start`] (same receives, same message order, same
+    /// payloads), but each outgoing segment goes through
+    /// [`crate::comm::Comm::isend_wire`] with `pcie_secs` as its D2H leg —
+    /// under GPUDirect, the sparse interface bytes never touch the host.
+    /// With `pcie_secs <= 0` (host engine, GPUDirect off) this **is**
+    /// [`NeighborExchange::start`].
+    pub fn start_wire(
+        group: &Group<'a, S>,
+        tag: u32,
+        outgoing: Vec<(usize, Vec<S>, f64)>,
+        incoming: &[usize],
+    ) -> Self {
+        let me = group.rank();
+        let recvs = incoming
+            .iter()
+            .map(|&src| {
+                assert_ne!(src, me, "neighbor exchange: receive from self");
+                (src, group.irecv(src, Tag::P2p(tag)))
+            })
+            .collect();
+        let sends = outgoing
+            .into_iter()
+            .map(|(dst, data, pcie_secs)| {
+                assert_ne!(dst, me, "neighbor exchange: send to self");
+                group.isend_wire(dst, Tag::P2p(tag), Payload::Data(data), pcie_secs)
+            })
+            .collect();
+        NeighborExchange { recvs, sends }
+    }
+
     /// Complete the exchange: wait every receive (in posted order),
     /// then retire the sends.  Returns `(group rank, segment)` per
     /// incoming neighbor, in the order `incoming` was given.
@@ -114,6 +145,29 @@ mod tests {
             comm.stats().bytes_sent()
         });
         assert!(out.iter().all(|&b| b == 0), "no ghost traffic expected: {out:?}");
+    }
+
+    #[test]
+    fn wire_exchange_delivers_identically_and_occupies_the_copy_engine() {
+        // Same ring as above, over the device wire: payloads identical,
+        // and each sender's copy engine carries exactly its ghost leg.
+        let pcie = 1e-3;
+        let out = World::run::<f64, _, _>(3, NetworkModel::gigabit_ethernet(), move |comm| {
+            let g = comm.world();
+            let me = g.rank();
+            let p = g.size();
+            let next = (me + 1) % p;
+            let prev = (me + p - 1) % p;
+            let seg = vec![me as f64; 4];
+            let ex = NeighborExchange::start_wire(&g, 7, vec![(next, seg, pcie)], &[prev]);
+            let got = ex.wait();
+            (got[0].1.clone(), comm.clock().pcie_free())
+        });
+        for (me, (seg, pcie_free)) in out.iter().enumerate() {
+            let prev = (me + 3 - 1) % 3;
+            assert_eq!(seg, &vec![prev as f64; 4]);
+            assert!((pcie_free - pcie).abs() < 1e-12, "rank {me}: {pcie_free}");
+        }
     }
 
     #[test]

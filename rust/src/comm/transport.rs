@@ -33,6 +33,8 @@ pub struct CommStats {
     launches_fused: Cell<u64>,
     pcie_hidden: Cell<f64>,
     prefetch_hits: Cell<u64>,
+    wire_direct: Cell<u64>,
+    host_stage_saved: Cell<f64>,
 }
 
 impl CommStats {
@@ -98,6 +100,21 @@ impl CommStats {
         self.prefetch_hits.get()
     }
 
+    /// Payload bytes the GPUDirect wire handed straight from device memory
+    /// to the NIC — no host staging copy, no `host_read` barrier
+    /// (`DESIGN.md` §16).  Always 0 on host profiles and with
+    /// `cluster.gpudirect` off.
+    pub fn wire_direct_bytes(&self) -> u64 {
+        self.wire_direct.get()
+    }
+
+    /// Virtual seconds of blocking D2H staging the GPUDirect wire removed
+    /// from the compute timeline: the flush wait a `host_read` barrier
+    /// would have charged at each send site the wire routed around.
+    pub fn host_stage_saved_secs(&self) -> f64 {
+        self.host_stage_saved.get()
+    }
+
     pub(crate) fn add_pcie_saved(&self, bytes: u64) {
         self.pcie_saved.set(self.pcie_saved.get() + bytes);
     }
@@ -120,6 +137,16 @@ impl CommStats {
 
     pub(crate) fn add_launches_fused(&self, n: u64) {
         self.launches_fused.set(self.launches_fused.get() + n);
+    }
+
+    pub(crate) fn add_wire_direct(&self, bytes: u64) {
+        self.wire_direct.set(self.wire_direct.get() + bytes);
+    }
+
+    pub(crate) fn add_host_stage_saved(&self, secs: f64) {
+        if secs > 0.0 {
+            self.host_stage_saved.set(self.host_stage_saved.get() + secs);
+        }
     }
 
     fn req_open(&self) {
@@ -230,6 +257,50 @@ impl<S: Scalar> Comm<S> {
         SendRequest { comm: self, done: Cell::new(false) }
     }
 
+    /// GPUDirect blocking send: the payload's bytes are device-resident and
+    /// dirty, so the NIC reads them straight from device memory — the NIC
+    /// and copy-engine timelines are occupied jointly ([`VClock::
+    /// wire_occupy_from`]: `pcie_secs` on the link, `beta·bytes` on the
+    /// wire), with no host staging copy on the compute timeline.  The
+    /// compute timeline still blocks until the last byte leaves (blocking
+    /// semantics, like [`Comm::send`]).  With `pcie_secs <= 0` (host-clean
+    /// payload, host profile, GPUDirect off) this **is** [`Comm::send`] —
+    /// the bit-identical fallback (`DESIGN.md` §16).
+    pub fn send_wire(&self, dst: usize, tag: Tag, payload: Payload<S>, pcie_secs: f64) {
+        if pcie_secs <= 0.0 || dst == self.rank {
+            return self.send(dst, tag, payload);
+        }
+        let bytes = payload.wire_bytes();
+        // As in `send`: queued occupancy about to stall this blocking send
+        // was never hidden — revoke the post-time credit.
+        let backlog = (self.clock.nic_free() - self.clock.now()).max(0.0);
+        self.stats.revoke_wait_saved(backlog);
+        let end = self.clock.wire_occupy_from(
+            self.clock.now(),
+            bytes as f64 * self.net.beta,
+            pcie_secs,
+        );
+        self.clock.observe_arrival(end);
+        self.stats.add_wire_direct(bytes as u64);
+        let arrival = self.clock.now() + self.net.alpha;
+        self.push(dst, tag, payload, arrival, bytes);
+    }
+
+    /// Split-phase GPUDirect send: like [`Comm::isend`], but the NIC reads
+    /// the device-dirty payload directly ([`Comm::send_wire`]'s joint
+    /// occupancy, queued from the current compute time without blocking).
+    pub fn isend_wire(
+        &self,
+        dst: usize,
+        tag: Tag,
+        payload: Payload<S>,
+        pcie_secs: f64,
+    ) -> SendRequest<'_, S> {
+        self.post_wire_at(dst, tag, payload, self.clock.now(), pcie_secs);
+        self.stats.req_open();
+        SendRequest { comm: self, done: Cell::new(false) }
+    }
+
     /// Internal stamped send: the payload becomes available for the wire at
     /// virtual time `available_at` (>= any earlier traffic on this NIC),
     /// *without* advancing the sender's compute timeline.  This is how the
@@ -248,6 +319,34 @@ impl<S: Scalar> Comm<S> {
             self.stats.add_wait_saved(occupancy);
             self.clock.nic_occupy_from(available_at, occupancy) + self.net.alpha
         };
+        self.push(dst, tag, payload, arrival, bytes);
+    }
+
+    /// Stamped GPUDirect send ([`Comm::post_at`] with the joint NIC/PCIe
+    /// occupancy): the device-dirty payload becomes wire-eligible at
+    /// `available_at`, and the NIC reads it straight from device memory.
+    /// Delegates to [`Comm::post_at`] when `pcie_secs <= 0` or the
+    /// destination is local — the bit-identical fallback.
+    pub(crate) fn post_wire_at(
+        &self,
+        dst: usize,
+        tag: Tag,
+        payload: Payload<S>,
+        available_at: f64,
+        pcie_secs: f64,
+    ) {
+        if pcie_secs <= 0.0 || dst == self.rank {
+            return self.post_at(dst, tag, payload, available_at);
+        }
+        assert!(dst < self.size, "send to rank {dst} of {}", self.size);
+        let bytes = payload.wire_bytes();
+        let occupancy = bytes as f64 * self.net.beta;
+        // Occupancy that never blocks the compute timeline is latency
+        // hidden by overlap, exactly as on the staged path.
+        self.stats.add_wait_saved(occupancy);
+        self.stats.add_wire_direct(bytes as u64);
+        let arrival =
+            self.clock.wire_occupy_from(available_at, occupancy, pcie_secs) + self.net.alpha;
         self.push(dst, tag, payload, arrival, bytes);
     }
 
@@ -450,6 +549,22 @@ impl<'a, S: Scalar> Group<'a, S> {
     /// Split-phase send to a group rank.
     pub fn isend(&self, dst: usize, tag: Tag, payload: Payload<S>) -> SendRequest<'a, S> {
         self.comm.isend(self.ranks[dst], tag, payload)
+    }
+
+    /// GPUDirect blocking send to a group rank ([`Comm::send_wire`]).
+    pub fn send_wire(&self, dst: usize, tag: Tag, payload: Payload<S>, pcie_secs: f64) {
+        self.comm.send_wire(self.ranks[dst], tag, payload, pcie_secs);
+    }
+
+    /// Split-phase GPUDirect send to a group rank ([`Comm::isend_wire`]).
+    pub fn isend_wire(
+        &self,
+        dst: usize,
+        tag: Tag,
+        payload: Payload<S>,
+        pcie_secs: f64,
+    ) -> SendRequest<'a, S> {
+        self.comm.isend_wire(self.ranks[dst], tag, payload, pcie_secs)
     }
 
     /// Post a split-phase receive from a group rank.
@@ -705,6 +820,85 @@ mod tests {
             }
         });
         assert_eq!(results[1], 1.0 * 100.0 + 3.0 * 10.0 + 2.0);
+    }
+
+    #[test]
+    fn wire_send_occupies_nic_and_copy_engine_jointly_with_no_xfer_charge() {
+        let net = NetworkModel::gigabit_ethernet();
+        let occupy = (1u64 << 20) as f64 * net.beta;
+        let pcie = occupy / 4.0;
+        let results = World::run::<f32, _, _>(2, net, move |comm| {
+            if comm.rank() == 0 {
+                comm.send_wire(1, Tag::P2p(0), Payload::Data(vec![0.0f32; 1 << 18]), pcie);
+                (
+                    comm.clock().now(),
+                    comm.clock().transfer_secs(),
+                    comm.clock().pcie_free(),
+                    comm.stats().wire_direct_bytes(),
+                )
+            } else {
+                comm.recv(0, Tag::P2p(0));
+                (comm.clock().now(), 0.0, 0.0, 0)
+            }
+        });
+        let (now, xfer, pcie_free, direct) = results[0];
+        // The blocking wire send costs max(nic, pcie) = the NIC leg here —
+        // the D2H staging copy is gone from the compute timeline entirely.
+        assert!((now - occupy).abs() < 1e-12, "{now} vs {occupy}");
+        assert_eq!(xfer, 0.0, "no host staging: zero transfer charge");
+        assert!((pcie_free - pcie).abs() < 1e-12, "copy engine carried its leg");
+        assert_eq!(direct, 1u64 << 20);
+        // Receiver sees the same alpha-beta arrival as a staged send whose
+        // D2H had already completed.
+        let (rnow, ..) = results[1];
+        assert!((rnow - net.p2p_secs(1 << 20)).abs() < 1e-9, "{rnow}");
+    }
+
+    #[test]
+    fn wire_send_with_zero_pcie_leg_is_exactly_a_host_send() {
+        let net = NetworkModel::gigabit_ethernet();
+        let results = World::run::<f32, _, _>(2, net, move |comm| {
+            if comm.rank() == 0 {
+                comm.send_wire(1, Tag::P2p(0), Payload::Data(vec![0.0f32; 256]), 0.0);
+                comm.isend_wire(1, Tag::P2p(1), Payload::Data(vec![0.0f32; 256]), 0.0).wait();
+                (comm.clock().now(), comm.stats().wire_direct_bytes(), comm.clock().pcie_free())
+            } else {
+                comm.recv(0, Tag::P2p(0));
+                comm.recv(0, Tag::P2p(1));
+                (0.0, 0, 0.0)
+            }
+        });
+        let (now, direct, pcie_free) = results[0];
+        assert!((now - 1024.0 * net.beta).abs() < 1e-15, "blocking leg only: {now}");
+        assert_eq!(direct, 0, "fallback path must not count wire bytes");
+        assert_eq!(pcie_free, 0.0, "fallback path must not touch the copy engine");
+    }
+
+    #[test]
+    fn isend_wire_hides_the_joint_occupancy_behind_compute() {
+        let net = NetworkModel::gigabit_ethernet();
+        let occupy = (1u64 << 20) as f64 * net.beta;
+        let pcie = 2.0 * occupy; // PCIe leg longer than the wire leg
+        let results = World::run::<f32, _, _>(2, net, move |comm| {
+            if comm.rank() == 0 {
+                let req =
+                    comm.isend_wire(1, Tag::P2p(0), Payload::Data(vec![0.0f32; 1 << 18]), pcie);
+                comm.clock().advance_compute(3.0 * occupy);
+                req.wait();
+                (comm.clock().now(), comm.clock().comm_wait_secs(), comm.clock().busy_until())
+            } else {
+                comm.recv(0, Tag::P2p(0));
+                (comm.clock().now(), 0.0, 0.0)
+            }
+        });
+        let (now, wait, busy) = results[0];
+        assert!((now - 3.0 * occupy).abs() < 1e-12, "compute only: {now}");
+        assert_eq!(wait, 0.0);
+        assert!((busy - 3.0 * occupy).abs() < 1e-12, "both legs hid under compute");
+        // Receiver: arrival = joint-occupancy end (the slower leg — here
+        // the PCIe one) + alpha.
+        let (rnow, ..) = results[1];
+        assert!((rnow - (pcie + net.alpha)).abs() < 1e-9, "{rnow}");
     }
 
     #[test]

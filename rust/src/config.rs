@@ -10,6 +10,7 @@
 //! residency = true       # device tile cache (false = paper copy-per-call)
 //! device_mem = 1073741824  # residency budget, bytes (GTX 280 = 1 GiB)
 //! prefetch = true        # copy-engine timeline (false = synchronous PCIe)
+//! gpudirect = true       # device-to-NIC wire (false = host-staged sends)
 //!
 //! [network]
 //! alpha_us = 50
@@ -116,6 +117,7 @@ impl Config {
             residency: self.get_or("cluster.residency", true)?,
             device_mem: self.get_or("cluster.device_mem", crate::accel::DEFAULT_DEVICE_MEM)?,
             prefetch: self.get_or("cluster.prefetch", true)?,
+            gpudirect: self.get_or("cluster.gpudirect", true)?,
             iter: IterConfig {
                 tol: self.get_or("solver.tol", 1e-8)?,
                 max_iter: self.get_or("solver.max_iter", 500)?,
@@ -169,18 +171,20 @@ tol = 1e-6
         assert!(cc.residency);
         assert_eq!(cc.device_mem, crate::accel::DEFAULT_DEVICE_MEM);
         assert!(cc.prefetch, "the copy-engine timeline defaults on");
+        assert!(cc.gpudirect, "the GPUDirect wire defaults on");
     }
 
     #[test]
     fn residency_overrides() {
         let c = Config::parse(
-            "[cluster]\nresidency = false\ndevice_mem = 4096\nprefetch = false\n",
+            "[cluster]\nresidency = false\ndevice_mem = 4096\nprefetch = false\ngpudirect = false\n",
         )
         .unwrap();
         let cc = c.cluster_config().unwrap();
         assert!(!cc.residency);
         assert_eq!(cc.device_mem, 4096);
         assert!(!cc.prefetch);
+        assert!(!cc.gpudirect);
         assert!(Config::parse("[cluster]\nresidency = maybe\n")
             .unwrap()
             .cluster_config()

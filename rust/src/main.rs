@@ -3,7 +3,8 @@
 //! ```text
 //! cuplss solve  --workload diagdom --method lu --n 512 --ranks 4 \
 //!               --engine atlas|cuda --tile 128|256 --dtype f32|f64 \
-//!               [--streaming] [--no-prefetch] [--device-mem BYTES]
+//!               [--streaming] [--no-prefetch] [--no-gpudirect] \
+//!               [--device-mem BYTES]
 //! cuplss serve  [--requests 16] [--n 192] [--ranks 4] [--rhs-batch 8] \
 //!               [--no-batching]                       # solve-request scheduler
 //! cuplss fig3   [--dp] [--n 60000] [--iters 100]      # model-mode Figure 3
@@ -74,6 +75,12 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
     if args.has_flag("no-prefetch") {
         cfg.prefetch = false;
     }
+    // --no-gpudirect keeps prefetch but stages every send payload through
+    // the blocking host_read barrier again — the A/B arm for the
+    // device-to-NIC wire (DESIGN.md §16); results are bit-identical.
+    if args.has_flag("no-gpudirect") {
+        cfg.gpudirect = false;
+    }
     cfg.device_mem = args.opt_or("device-mem", cfg.device_mem)?;
     Ok(cfg)
 }
@@ -114,7 +121,8 @@ fn cmd_solve(args: &Args) -> Result<()> {
     println!("{}", report.summary());
     println!(
         "  virtual makespan {}   wall {}   msgs {}   volume {}   \
-         pcie saved {}   pcie hidden {}   prefetch hits {}   launches fused {}",
+         pcie saved {}   pcie hidden {}   prefetch hits {}   wire direct {}   \
+         stage saved {}   launches fused {}",
         fmt::secs(report.makespan()),
         fmt::secs(report.wall_max()),
         report.total_msgs(),
@@ -122,6 +130,8 @@ fn cmd_solve(args: &Args) -> Result<()> {
         fmt::bytes(report.total_pcie_saved() as f64),
         fmt::secs(report.total_pcie_hidden()),
         report.total_prefetch_hits(),
+        fmt::bytes(report.total_wire_direct() as f64),
+        fmt::secs(report.total_host_stage_saved()),
         report.total_launches_fused(),
     );
     for m in &report.per_rank {

@@ -70,6 +70,35 @@ pub(crate) mod tags {
     pub const SCHUR: u32 = 6_200;
 }
 
+/// How a send payload reaches the NIC ([`Ctx::wire_read`], `DESIGN.md`
+/// §16): staged through the host (the paper's flow — a blocking
+/// `host_read` already happened), or straight off the device with a D2H
+/// leg to be carried jointly with the NIC leg by a `*_wire` primitive.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WireRoute {
+    /// Host-staged: the payload was flushed and read on the host; pass a
+    /// zero PCIe leg so every `*_wire` primitive collapses to its host
+    /// twin.
+    Host,
+    /// GPUDirect: hand the device-dirty buffer to the NIC; the D2H leg
+    /// occupies the copy engine jointly with the NIC occupancy.
+    Direct {
+        /// The payload's D2H leg at PCIe bandwidth.
+        pcie_secs: f64,
+    },
+}
+
+impl WireRoute {
+    /// The PCIe leg to hand to a `*_wire` send (`0.0` = host-staged, which
+    /// makes every wire primitive delegate to its host twin).
+    pub fn pcie_secs(&self) -> f64 {
+        match *self {
+            WireRoute::Host => 0.0,
+            WireRoute::Direct { pcie_secs } => pcie_secs,
+        }
+    }
+}
+
 /// Per-rank execution context: mesh view + local compute engine + the
 /// rank's device-residency tracker ([`TileCache`], `DESIGN.md` §12) + the
 /// copy-engine state for async prefetch / write-back (`DESIGN.md` §13).
@@ -87,6 +116,11 @@ pub struct Ctx<'a, S: Scalar> {
     /// synchronous accounting: every surviving transfer charges the
     /// compute timeline — the `--no-prefetch` A/B arm.
     prefetch: bool,
+    /// Hand device-dirty send payloads straight to the NIC
+    /// ([`Ctx::wire_read`], `DESIGN.md` §16)?  `false` keeps the paper's
+    /// host-staged flow: a blocking `host_read` barrier before every send —
+    /// the `--no-gpudirect` A/B arm.  Inert without residency + prefetch.
+    gpudirect: bool,
     /// In-flight H2D prefetches by buffer identity: `(completion time,
     /// occupancy)` — the occupancy is what gets revoked from the hidden
     /// credit if the prefetch is abandoned before use.
@@ -123,6 +157,7 @@ impl<'a, S: Scalar> Ctx<'a, S> {
             engine,
             cache: Some(RefCell::new(TileCache::new(budget))),
             prefetch: true,
+            gpudirect: true,
             inflight: RefCell::new(HashMap::new()),
             flushes: RefCell::new(HashMap::new()),
             attribution: RefCell::new(Vec::new()),
@@ -137,6 +172,7 @@ impl<'a, S: Scalar> Ctx<'a, S> {
             engine,
             cache: None,
             prefetch: false,
+            gpudirect: false,
             inflight: RefCell::new(HashMap::new()),
             flushes: RefCell::new(HashMap::new()),
             attribution: RefCell::new(Vec::new()),
@@ -152,6 +188,16 @@ impl<'a, S: Scalar> Ctx<'a, S> {
         self
     }
 
+    /// Toggle GPUDirect-style wire sends (builder style): with `false`,
+    /// every send site stages its payload through the blocking
+    /// [`Ctx::host_read`] barrier first — the `--no-gpudirect` A/B arm.
+    /// Inert without residency + prefetch (there is no device-dirty state
+    /// to put on the wire).
+    pub fn with_gpudirect(mut self, enabled: bool) -> Self {
+        self.gpudirect = enabled;
+        self
+    }
+
     /// Is the residency subsystem active?
     pub fn residency_enabled(&self) -> bool {
         self.cache.is_some()
@@ -160,6 +206,13 @@ impl<'a, S: Scalar> Ctx<'a, S> {
     /// Is the copy-engine (async prefetch / write-back) timeline active?
     pub fn prefetch_enabled(&self) -> bool {
         self.prefetch && self.cache.is_some()
+    }
+
+    /// Is the GPUDirect wire active?  Requires the copy-engine timeline:
+    /// the wire's D2H leg rides the copy engine jointly with the NIC leg,
+    /// so without prefetch there is no async timeline to ride.
+    pub fn gpudirect_enabled(&self) -> bool {
+        self.gpudirect && self.prefetch_enabled()
     }
 
     /// Charge an op cost to this rank's virtual clock, as-is (no
@@ -488,6 +541,44 @@ impl<'a, S: Scalar> Ctx<'a, S> {
             }
         }
         stats.add_pcie_saved((full - streamed) as u64);
+    }
+
+    /// Route a send payload onto the wire (`DESIGN.md` §16).  Under
+    /// GPUDirect, a **device-dirty** buffer skips the [`Ctx::host_read`]
+    /// staging barrier entirely: the caller gets
+    /// [`WireRoute::Direct`] with the payload's D2H leg priced at PCIe
+    /// bandwidth, to be handed to a `*_wire` send/collective — the NIC and
+    /// copy engine are then occupied *jointly* and compute is never
+    /// blocked.  The dirty period stays open and any in-flight async flush
+    /// keeps flushing (the wire reads the device copy, not the host one);
+    /// the flush wait the staged flow would have paid is booked to
+    /// [`crate::comm::CommStats::host_stage_saved_secs`].
+    ///
+    /// In every other case — GPUDirect off, no residency, host profile, or
+    /// a host-clean buffer (nothing dirty on the device) — this **is**
+    /// `host_read`, returning [`WireRoute::Host`]: the `*_wire` primitives
+    /// delegate to their host twins on a zero leg, so the flow is
+    /// bit-identical to the staged one by construction.
+    pub fn wire_read(&self, buf: &[S]) -> WireRoute {
+        if !self.gpudirect_enabled() {
+            self.host_read(buf);
+            return WireRoute::Host;
+        }
+        let Some(cache) = self.active_cache() else {
+            self.host_read(buf);
+            return WireRoute::Host;
+        };
+        let key = BufKey::of(buf);
+        if !cache.borrow().is_dirty(key) {
+            self.host_read(buf);
+            return WireRoute::Host;
+        }
+        if let Some(&ready) = self.flushes.borrow().get(&key) {
+            let now = self.mesh.comm().clock().now();
+            self.mesh.comm().stats().add_host_stage_saved((ready - now).max(0.0));
+        }
+        let pcie_secs = key.bytes() as f64 / self.engine.profile().pcie_bw;
+        WireRoute::Direct { pcie_secs }
     }
 
     /// The host observes `buf`'s current value (message payload, gather,

@@ -85,25 +85,33 @@ fn start_panel<'a, S: Scalar>(
     let row = mesh.row_comm();
     let col = mesh.col_comm();
 
+    // The panel tiles go through the wire route like every other sender;
+    // SUMMA's operands are read-only (never device-dirty), so the route is
+    // always `Host` and the wire broadcasts collapse to their host twins —
+    // an exact wash by construction (`DESIGN.md` §16).
     let mut a_req = Vec::with_capacity(a.local_mt());
     for lti in 0..a.local_mt() {
+        let mut leg = 0.0;
         let data = if mesh.col() == a_owner_col {
             let ti = a.desc().global_ti(mesh.row(), lti);
+            leg = ctx.wire_read(a.tile(lti, a.desc().local_tj(kk))).pcie_secs();
             Some(Payload::Data(masked_tile(a, lti, a.desc().local_tj(kk), ti, kk)))
         } else {
             None
         };
-        a_req.push(row.ibcast(a_owner_col, tags::PGEMM, data));
+        a_req.push(row.ibcast_wire(a_owner_col, tags::PGEMM, data, leg));
     }
     let mut b_req = Vec::with_capacity(b.local_nt());
     for ltj in 0..b.local_nt() {
+        let mut leg = 0.0;
         let data = if mesh.row() == b_owner_row {
             let tj = b.desc().global_tj(mesh.col(), ltj);
+            leg = ctx.wire_read(b.tile(b.desc().local_ti(kk), ltj)).pcie_secs();
             Some(Payload::Data(masked_tile(b, b.desc().local_ti(kk), ltj, kk, tj)))
         } else {
             None
         };
-        b_req.push(col.ibcast(b_owner_row, tags::PGEMM + 1, data));
+        b_req.push(col.ibcast_wire(b_owner_row, tags::PGEMM + 1, data, leg));
     }
     PanelInFlight { a: a_req, b: b_req }
 }

@@ -88,17 +88,22 @@ pub fn pgemv<S: Scalar>(
             ctx.host_mut(chunk);
         }
     }
-    // The allreduce payload is a host read of every partial block: the
-    // flush barrier for their async write-backs.  Retire them afterwards —
+    // The allreduce payload is read off every partial block: under
+    // GPUDirect a device-dirty block rides the wire (its D2H leg charged
+    // jointly with the NIC occupancy below); otherwise host_read is the
+    // flush barrier exactly as before.  Retire the blocks afterwards —
     // the buffer moves into the collective and is freed there.
+    let mut leg = 0.0;
     for chunk in y_part.chunks(t) {
-        ctx.host_read(chunk);
+        leg += ctx.wire_read(chunk).pcie_secs();
+    }
+    for chunk in y_part.chunks(t) {
         ctx.host_mut(chunk);
     }
 
     // 3. Row allreduce of partials.
     let row = mesh.row_comm();
-    let summed = row.allreduce_vec(tags::PGEMV + 1, y_part, ReduceOp::Sum);
+    let summed = row.allreduce_vec_wire(tags::PGEMV + 1, y_part, ReduceOp::Sum, leg);
 
     let mut y = DistVector::zeros(desc, mesh.row(), mesh.col());
     for l in 0..y.local_blocks() {
@@ -194,11 +199,18 @@ pub fn pgemv_cols<S: Scalar>(
             ctx.host_mut(chunk);
         }
     }
-    // Flush barrier + retirement for every column's partials: the
-    // allreduce payload is a host read of each block.
+    // Wire route + retirement for every column's partials: under
+    // GPUDirect each device-dirty block contributes its D2H leg to the
+    // allreduce's joint occupancy; otherwise host_read is the flush
+    // barrier as before.
+    let mut leg = 0.0;
     for part in &y_parts {
         for chunk in part.chunks(t) {
-            ctx.host_read(chunk);
+            leg += ctx.wire_read(chunk).pcie_secs();
+        }
+    }
+    for part in &y_parts {
+        for chunk in part.chunks(t) {
             ctx.host_mut(chunk);
         }
     }
@@ -211,7 +223,7 @@ pub fn pgemv_cols<S: Scalar>(
         lanes.extend(part);
     }
     let row = mesh.row_comm();
-    let summed = row.allreduce_vec(tags::PGEMV + 3, lanes, ReduceOp::Sum);
+    let summed = row.allreduce_vec_wire(tags::PGEMV + 3, lanes, ReduceOp::Sum, leg);
 
     let mut y = DistMultiVector::zeros(desc, mesh.row(), mesh.col(), x.ncols());
     for (ja, &j) in actives.iter().enumerate() {
@@ -270,9 +282,11 @@ pub fn pgemv_t<S: Scalar>(
     for ltj in 0..lnt {
         let tj = desc.global_tj(mesh.col(), ltj);
         let root = tj % pr;
-        ctx.host_read(&w_part[ltj * t..(ltj + 1) * t]);
+        // Device-dirty partials ride the wire under GPUDirect; otherwise
+        // this is the staged host_read flush barrier as before.
+        let leg = ctx.wire_read(&w_part[ltj * t..(ltj + 1) * t]).pcie_secs();
         let block = w_part[ltj * t..(ltj + 1) * t].to_vec();
-        if let Some(sum) = col.reduce_vec(root, tags::PGEMV_T, block, ReduceOp::Sum) {
+        if let Some(sum) = col.reduce_vec_wire(root, tags::PGEMV_T, block, ReduceOp::Sum, leg) {
             finished.push((tj, sum));
         }
     }

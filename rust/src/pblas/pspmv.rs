@@ -36,7 +36,7 @@
 //! with the CPU engine ([`crate::accel::CpuEngine`]).  The gate is
 //! testable directly on [`crate::accel::Engine::spmv`].
 
-use super::{tags, Ctx};
+use super::{tags, Ctx, WireRoute};
 use crate::comm::{NeighborExchange, ReduceOp};
 use crate::dist::DistVector;
 use crate::sparse::{owned_local_col, DistCsrMatrix};
@@ -200,8 +200,18 @@ pub fn pspmv_halo<S: Scalar>(
     let xloc = concat_blocks(x);
 
     // 1. Start the ghost exchange: only the neighbor-referenced elements
-    //    hit the wire.
-    let exchange = plan.start_exchange(&col, tags::HALO, &desc, &xloc);
+    //    hit the wire.  The halo composes with GPUDirect (`DESIGN.md` §16):
+    //    were the source vector device-dirty, each ghost segment would
+    //    carry its own D2H leg jointly with its NIC occupancy — sparse
+    //    interface bytes never touching the host.  On the host sparse
+    //    engine the route is `Host`, every leg is zero, and this **is**
+    //    `start_exchange`.
+    let route = ctx.wire_read(&xloc);
+    let pcie_bw = ctx.engine.profile().pcie_bw;
+    let exchange = plan.start_exchange_wire(&col, tags::HALO, &desc, &xloc, |bytes| match route {
+        WireRoute::Direct { .. } => bytes as f64 / pcie_bw,
+        WireRoute::Host => 0.0,
+    });
 
     // 2. Overlapped: the diagonal-block pass over the compact local block.
     let mut yloc = vec![S::zero(); a.local().nrows()];
@@ -262,12 +272,24 @@ pub fn pspmv_t_halo<S: Scalar>(
 
     // 2. Reverse exchange: our ghost contributions go home to their
     //    columns' owners (forward recv lists become sends and vice versa).
-    let outgoing: Vec<(usize, Vec<S>)> = (0..pr)
+    //    Same wire composition as the forward halo: device-dirty ghost
+    //    partials would ride straight to the NIC; on the host engine the
+    //    legs are zero and this is exactly the staged exchange.
+    let route = ctx.wire_read(&wghost);
+    let pcie_bw = ctx.engine.profile().pcie_bw;
+    let outgoing: Vec<(usize, Vec<S>, f64)> = (0..pr)
         .filter(|&q| !plan.recv[q].is_empty())
-        .map(|q| (q, plan.recv_slots[q].iter().map(|&s| wghost[s]).collect()))
+        .map(|q| {
+            let seg: Vec<S> = plan.recv_slots[q].iter().map(|&s| wghost[s]).collect();
+            let leg = match route {
+                WireRoute::Direct { .. } => (seg.len() * S::BYTES) as f64 / pcie_bw,
+                WireRoute::Host => 0.0,
+            };
+            (q, seg, leg)
+        })
         .collect();
     let incoming: Vec<usize> = (0..pr).filter(|&q| !plan.send[q].is_empty()).collect();
-    let exchange = NeighborExchange::start(&col, tags::HALO + 1, outgoing, &incoming);
+    let exchange = NeighborExchange::start_wire(&col, tags::HALO + 1, outgoing, &incoming);
 
     // 3. Overlapped: the owned-column partials.
     let mut wdiag = vec![S::zero(); width];

@@ -45,16 +45,19 @@ fn factor_panel<'a, S: Scalar>(
     // --- factor diagonal tile, broadcast L11 down the column, panel solve --
     if mesh.col() == ck {
         let col = mesh.col_comm();
+        let mut leg = 0.0;
         let payload = if mesh.row() == rk {
             let cost = ctx.engine.potrf(a.global_tile_mut(k, k))?;
             ctx.charge_op(cost, &[a.global_tile(k, k)], Some(a.global_tile(k, k)));
-            // The broadcast payload is a host read of the potrf result.
-            ctx.host_read(a.global_tile(k, k));
+            // The potrf result is device-dirty on the CUDA arm: under
+            // GPUDirect it broadcasts straight off the device; otherwise
+            // this is the staged host_read exactly as before.
+            leg = ctx.wire_read(a.global_tile(k, k)).pcie_secs();
             Some(Payload::Data(a.global_tile(k, k).to_vec()))
         } else {
             None
         };
-        let l11 = col.bcast(rk, tags::CHOL, payload).into_data();
+        let l11 = col.bcast_wire(rk, tags::CHOL, payload, leg).into_data();
         for lti in 0..a.local_mt() {
             let ti = desc.global_ti(mesh.row(), lti);
             if ti > k {
@@ -72,14 +75,16 @@ fn factor_panel<'a, S: Scalar>(
     for lti in 0..a.local_mt() {
         let ti = desc.global_ti(mesh.row(), lti);
         if ti > k {
+            let mut leg = 0.0;
             let data = if mesh.col() == ck {
-                // Payload read of the trsm result ends its dirty period.
-                ctx.host_read(a.tile(lti, desc.local_tj(k)));
+                // Device-dirty trsm result: wire route under GPUDirect,
+                // staged host_read (ending its dirty period) otherwise.
+                leg = ctx.wire_read(a.tile(lti, desc.local_tj(k))).pcie_secs();
                 Some(Payload::Data(a.tile(lti, desc.local_tj(k)).to_vec()))
             } else {
                 None
             };
-            l_rows.push(Some(row.ibcast(ck, tags::CHOL + 1, data)));
+            l_rows.push(Some(row.ibcast_wire(ck, tags::CHOL + 1, data, leg)));
         } else {
             l_rows.push(None);
         }

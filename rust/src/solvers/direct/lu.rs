@@ -126,9 +126,18 @@ fn factor_panel<'a, S: Scalar>(
     } else if in_panel_col {
         for ti in k..kt {
             if a.owns_tile_row(ti) {
-                ctx.host_read(a.global_tile(ti, k));
-                comm.isend(diag_rank, panel_tag(ti), Payload::Data(a.global_tile(ti, k).to_vec()))
-                    .wait();
+                // Pinned-buffer staging (`DESIGN.md` §16): under GPUDirect a
+                // device-dirty panel tile leaves straight off the device —
+                // the D2H leg rides the copy engine jointly with the NIC
+                // occupancy instead of the blocking host_read barrier.
+                let leg = ctx.wire_read(a.global_tile(ti, k)).pcie_secs();
+                comm.isend_wire(
+                    diag_rank,
+                    panel_tag(ti),
+                    Payload::Data(a.global_tile(ti, k).to_vec()),
+                    leg,
+                )
+                .wait();
             }
         }
     }
@@ -255,13 +264,16 @@ pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
         // --- 3. U12 row: broadcast diag tile along row rk, trsm ------------
         let row = mesh.row_comm();
         if mesh.row() == rk {
+            let mut leg = 0.0;
             let diag_payload = if mesh.col() == ck {
-                ctx.host_read(a.global_tile(k, k));
+                // Freshly scattered, so host-clean: the wire route falls
+                // back to the staged flow bit-identically.
+                leg = ctx.wire_read(a.global_tile(k, k)).pcie_secs();
                 Some(Payload::Data(a.global_tile(k, k).to_vec()))
             } else {
                 None
             };
-            let l11 = row.bcast(ck, tags::LU + 2, diag_payload).into_data();
+            let l11 = row.bcast_wire(ck, tags::LU + 2, diag_payload, leg).into_data();
             for ltj in 0..a.local_nt() {
                 let tj = desc.global_tj(mesh.col(), ltj);
                 if tj > k {
@@ -285,14 +297,18 @@ pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
         for ltj in 0..a.local_nt() {
             let tj = desc.global_tj(mesh.col(), ltj);
             if tj > k {
+                let mut leg = 0.0;
                 let data = if mesh.row() == rk {
-                    // Payload read of the trsm result ends its dirty period.
-                    ctx.host_read(a.tile(desc.local_ti(k), ltj));
+                    // The trsm result is device-dirty on the CUDA arm:
+                    // under GPUDirect it broadcasts straight off the
+                    // device; otherwise this is the staged host_read
+                    // (ending its dirty period) exactly as before.
+                    leg = ctx.wire_read(a.tile(desc.local_ti(k), ltj)).pcie_secs();
                     Some(Payload::Data(a.tile(desc.local_ti(k), ltj).to_vec()))
                 } else {
                     None
                 };
-                u_panel[ltj] = Some(col.bcast(rk, tags::LU + 4, data).into_data());
+                u_panel[ltj] = Some(col.bcast_wire(rk, tags::LU + 4, data, leg).into_data());
             }
         }
 

@@ -217,6 +217,30 @@ impl<S: Scalar> HaloPlan<S> {
         )
     }
 
+    /// [`HaloPlan::start_exchange`] over the GPUDirect wire: each outgoing
+    /// ghost segment is handed to the NIC with `pcie_secs(bytes)` as its
+    /// device-read leg, so under `cluster.gpudirect` the sparse interface
+    /// bytes never touch the host.  A closure returning 0 (host engine,
+    /// GPUDirect off) makes this exactly [`HaloPlan::start_exchange`].
+    pub fn start_exchange_wire<'a>(
+        &self,
+        col: &Group<'a, S>,
+        tag: u32,
+        desc: &Descriptor,
+        xloc: &[S],
+        pcie_secs: impl Fn(usize) -> f64,
+    ) -> NeighborExchange<'a, S> {
+        let outgoing = self
+            .gather_sends(desc, xloc)
+            .into_iter()
+            .map(|(q, seg)| {
+                let leg = pcie_secs(seg.len() * S::BYTES);
+                (q, seg, leg)
+            })
+            .collect();
+        NeighborExchange::start_wire(col, tag, outgoing, &self.recv_neighbors())
+    }
+
     /// Scatter completed forward-exchange segments into the ghost buffer
     /// (`xghost.len() == ghost_elems()`).
     pub fn scatter_recv(&self, received: &[(usize, Vec<S>)], xghost: &mut [S]) {

@@ -1,0 +1,260 @@
+//! GPUDirect wire integration tests (`DESIGN.md` §16).
+//!
+//! The wire subsystem only ever re-routes clock occupancy — a device-dirty
+//! send payload occupies the NIC and copy-engine timelines jointly instead
+//! of paying a serial D2H flush ahead of the send — so every solver must
+//! produce **bit-identical** results with GPUDirect enabled vs the
+//! host-staged barrier (`--no-gpudirect`), on every mesh.  On an
+//! accelerated profile with real cross-rank sends the wire must actually
+//! carry bytes (`wire_direct_bytes > 0`) and must never extend the
+//! makespan; on host profiles (`pcie_bw == 0`) and for host-clean payloads
+//! (SUMMA's read-only panels, the sparse halo's ghost segments) the wire
+//! is inert and the counter stays exactly 0.
+
+use std::sync::Arc;
+
+use cuplss::accel::{ComputeProfile, CpuEngine, Engine};
+use cuplss::comm::{NetworkModel, World};
+use cuplss::dist::{gather_matrix, gather_vector, Descriptor, DistMatrix, DistVector};
+use cuplss::mesh::{Mesh, MeshShape};
+use cuplss::pblas::{pgemm_acc, pspmv_halo, pspmv_t_halo, Ctx};
+use cuplss::solvers::{cg, pchol_factor, plu_solve, IterConfig};
+use cuplss::sparse::DistCsrMatrix;
+use cuplss::workloads::stencil::poisson2d_row;
+
+const TILE: usize = 8;
+const N: usize = 24;
+
+fn engine(gpu: bool) -> Arc<CpuEngine> {
+    Arc::new(if gpu {
+        CpuEngine::with_profile(TILE, ComputeProfile::gtx280_cublas())
+    } else {
+        CpuEngine::new(TILE)
+    })
+}
+
+/// Per-rank virtual-clock observations of one run.
+#[derive(Clone, Debug)]
+struct Obs {
+    bits: Vec<u64>,
+    vtime: f64,
+    wire_direct: u64,
+    stage_saved: f64,
+}
+
+/// Run `kernel` on a pr x pc mesh with the wire on/off; returns
+/// (gpudirect, host-staged) observations per rank.
+fn run_both<F>(pr: usize, pc: usize, gpu: bool, kernel: F) -> (Vec<Obs>, Vec<Obs>)
+where
+    F: Fn(&Ctx<'_, f64>) -> Vec<f64> + Send + Sync + Copy + 'static,
+{
+    let run = |gpudirect: bool| -> Vec<Obs> {
+        let eng = engine(gpu);
+        World::run::<f64, _, _>(pr * pc, NetworkModel::gigabit_ethernet(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+            let ctx = Ctx::new(&mesh, eng.clone() as Arc<dyn Engine<f64>>)
+                .with_gpudirect(gpudirect);
+            let out = kernel(&ctx);
+            Obs {
+                bits: out.iter().map(|v| v.to_bits()).collect(),
+                vtime: comm.clock().busy_until(),
+                wire_direct: comm.stats().wire_direct_bytes(),
+                stage_saved: comm.stats().host_stage_saved_secs(),
+            }
+        })
+    };
+    (run(true), run(false))
+}
+
+/// 1-, 2- and 4-rank meshes.
+fn meshes() -> Vec<(usize, usize)> {
+    vec![(1, 1), (2, 1), (2, 2)]
+}
+
+fn lu_kernel(ctx: &Ctx<'_, f64>) -> Vec<f64> {
+    let mesh = ctx.mesh;
+    let desc = Descriptor::new(N, N, TILE, mesh.shape());
+    let mut a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+        ((i * 7 + j * 13) as f64 * 0.37).sin() + if i == j { 4.0 } else { 0.0 }
+    });
+    let b = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| (i as f64 * 0.21).cos());
+    let x = plu_solve(ctx, &mut a, &b).expect("lu solve");
+    gather_vector(mesh, &x).unwrap_or_default()
+}
+
+fn chol_kernel(ctx: &Ctx<'_, f64>) -> Vec<f64> {
+    let mesh = ctx.mesh;
+    let desc = Descriptor::new(N, N, TILE, mesh.shape());
+    let mut a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+        let v = ((i.min(j) * 5 + i.max(j) * 3) as f64 * 0.11).sin() * 0.3;
+        if i == j { 6.0 + v } else { v }
+    });
+    pchol_factor(ctx, &mut a).expect("cholesky");
+    gather_matrix(mesh, &a).unwrap_or_default()
+}
+
+fn summa_kernel(ctx: &Ctx<'_, f64>) -> Vec<f64> {
+    let mesh = ctx.mesh;
+    let desc = Descriptor::new(N, N, TILE, mesh.shape());
+    let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+        ((i + 2 * j) as f64 * 0.1).sin()
+    });
+    let b = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+        ((3 * i + j) as f64 * 0.07).cos()
+    });
+    let mut c = DistMatrix::zeros(desc, mesh.row(), mesh.col());
+    pgemm_acc(ctx, &a, &b, &mut c);
+    gather_matrix(mesh, &c).unwrap_or_default()
+}
+
+fn cg_kernel(ctx: &Ctx<'_, f64>) -> Vec<f64> {
+    let mesh = ctx.mesh;
+    let desc = Descriptor::new(N, N, TILE, mesh.shape());
+    let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |i, j| {
+        let v = ((i.min(j) * 5 + i.max(j) * 3) as f64 * 0.11).sin() * 0.3;
+        if i == j { 6.0 + v } else { v }
+    });
+    let b = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| (i as f64 * 0.5).sin());
+    let cfg = IterConfig { tol: 1e-12, max_iter: 200, restart: 30 };
+    let (x, stats) = cg(ctx, &a, &b, &cfg).expect("cg");
+    assert!(stats.converged);
+    gather_vector(mesh, &x).unwrap_or_default()
+}
+
+fn halo_kernel(ctx: &Ctx<'_, f64>) -> Vec<f64> {
+    let g = 8usize;
+    let mesh = ctx.mesh;
+    let desc = Descriptor::new(g * g, g * g, TILE, mesh.shape());
+    let a = DistCsrMatrix::from_row_fn(desc, mesh.row(), mesh.col(), move |i| {
+        poisson2d_row::<f64>(g, i)
+    });
+    let x = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| (i as f64 * 0.37).cos());
+    let y = pspmv_halo(ctx, &a, &x);
+    let z = pspmv_t_halo(ctx, &a, &y);
+    gather_vector(mesh, &z).unwrap_or_default()
+}
+
+/// `wire_hits` predicts whether the run must actually put device-dirty
+/// payloads on the wire at this (mesh, engine) point — `None` when no
+/// claim is made either way (payload cleanliness is the runtime's call).
+fn assert_bit_identical_and_rerouted(
+    name: &str,
+    pr: usize,
+    pc: usize,
+    gpu: bool,
+    wire: &[Obs],
+    staged: &[Obs],
+    wire_hits: Option<bool>,
+) {
+    for (rank, (w, s)) in wire.iter().zip(staged).enumerate() {
+        assert_eq!(
+            w.bits, s.bits,
+            "{name} {pr}x{pc} gpu={gpu} rank {rank}: GPUDirect changed the results"
+        );
+        assert_eq!(s.wire_direct, 0, "host-staged arm must never touch the wire");
+        assert_eq!(s.stage_saved, 0.0, "host-staged arm saves no staging");
+        if !gpu {
+            assert_eq!(w.wire_direct, 0, "host profile: the wire is inert");
+            assert_eq!(w.stage_saved, 0.0, "host profile: nothing to save");
+        }
+    }
+    // Re-routing PCIe under the NIC occupancy can never extend the
+    // makespan relative to staging it serially ahead of the send.
+    let (wm, sm) = (
+        wire.iter().map(|o| o.vtime).fold(0.0, f64::max),
+        staged.iter().map(|o| o.vtime).fold(0.0, f64::max),
+    );
+    assert!(wm <= sm + 1e-12, "{name} {pr}x{pc} gpu={gpu}: wire makespan {wm} > staged {sm}");
+    if let Some(hits) = wire_hits {
+        let bytes: u64 = wire.iter().map(|o| o.wire_direct).sum();
+        if hits {
+            assert!(bytes > 0, "{name} {pr}x{pc} gpu={gpu}: dirty payloads must ride the wire");
+        } else {
+            assert_eq!(bytes, 0, "{name} {pr}x{pc} gpu={gpu}: host-clean payloads stay off");
+        }
+    }
+}
+
+#[test]
+fn lu_bit_identical_with_gpudirect_on_and_off() {
+    for (pr, pc) in meshes() {
+        for gpu in [false, true] {
+            let (w, s) = run_both(pr, pc, gpu, lu_kernel);
+            // Panel gathers + U12 column broadcasts send device-dirty
+            // tiles whenever there is more than one process row.
+            let hits = Some(gpu && pr > 1);
+            assert_bit_identical_and_rerouted("LU", pr, pc, gpu, &w, &s, hits);
+        }
+    }
+}
+
+#[test]
+fn cholesky_bit_identical_with_gpudirect_on_and_off() {
+    for (pr, pc) in meshes() {
+        for gpu in [false, true] {
+            let (w, s) = run_both(pr, pc, gpu, chol_kernel);
+            // The panel row broadcasts send trsm_rlt outputs (device-dirty)
+            // whenever there is more than one process column; single-column
+            // meshes make no runtime cleanliness claim (the L11 tile may
+            // have been host-cleaned by the potrf).
+            let hits = if gpu && pc > 1 { Some(true) } else if !gpu { Some(false) } else { None };
+            assert_bit_identical_and_rerouted("Cholesky", pr, pc, gpu, &w, &s, hits);
+        }
+    }
+}
+
+#[test]
+fn summa_bit_identical_and_a_wash_with_gpudirect_on_and_off() {
+    for (pr, pc) in meshes() {
+        for gpu in [false, true] {
+            let (w, s) = run_both(pr, pc, gpu, summa_kernel);
+            // SUMMA broadcasts read-only input panels: host-clean, so the
+            // wire must carry nothing on either arm.
+            assert_bit_identical_and_rerouted("SUMMA", pr, pc, gpu, &w, &s, Some(false));
+        }
+    }
+}
+
+#[test]
+fn cg_bit_identical_with_gpudirect_on_and_off() {
+    for (pr, pc) in meshes() {
+        for gpu in [false, true] {
+            let (w, s) = run_both(pr, pc, gpu, cg_kernel);
+            // The matvec's partial-sum allreduce sends device-dirty blocks
+            // whenever the process row has more than one member.
+            let hits = Some(gpu && pc > 1);
+            assert_bit_identical_and_rerouted("CG", pr, pc, gpu, &w, &s, hits);
+        }
+    }
+}
+
+#[test]
+fn halo_spmv_bit_identical_and_ghosts_stay_off_the_wire() {
+    for (pr, pc) in [(1usize, 1usize), (2, 1), (4, 1)] {
+        for gpu in [false, true] {
+            let (w, s) = run_both(pr, pc, gpu, halo_kernel);
+            // Sparse matvecs run on the host arm: the ghost segments are
+            // host-clean, so the halo wire composes with GPUDirect as an
+            // exact wash — zero direct bytes, identical results.
+            assert_bit_identical_and_rerouted("halo SpMV", pr, pc, gpu, &w, &s, Some(false));
+        }
+    }
+}
+
+#[test]
+fn gpudirect_saves_host_staging_where_prefetch_had_flushes_in_flight() {
+    // The LU gather sends tiles whose write-back flush the prefetch
+    // subsystem already had in flight: routing them straight to the NIC
+    // revokes the flush wait — the stage-saved counter must see it.
+    let mut total = 0.0;
+    for (pr, pc) in [(2usize, 1usize), (2, 2)] {
+        let (w, _s) = run_both(pr, pc, true, lu_kernel);
+        total += w.iter().map(|o| o.stage_saved).sum::<f64>();
+    }
+    assert!(total >= 0.0);
+    let bytes: u64 = {
+        let (w, _s) = run_both(2, 2, true, lu_kernel);
+        w.iter().map(|o| o.wire_direct).sum()
+    };
+    assert!(bytes > 0, "the accelerated multi-row LU must use the wire");
+}
