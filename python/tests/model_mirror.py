@@ -304,6 +304,24 @@ def trsv_makespan(n, p, b):
     return total
 
 
+def trsv_resident_makespan(n, p, b):
+    """rust trsv_resident_makespan: substitution against already-broadcast
+    resident factors — the my_rows·tree(pc, t²) factor-tile wire leg drops;
+    only the diagonal solve, the solved-chunk bcast and the local
+    gemv_updates recur."""
+    t = p.tile
+    kt = ceil_div(n, t)
+    pr, pc = p.pr, p.pc
+    total = 0.0
+    for k in range(kt):
+        others = kt - k - 1
+        total += p.op("trsv_lu", b)
+        total += p.tree(pr * pc, t, b)
+        my_rows = ceil_div(others, pr)
+        total += my_rows * p.op("gemv_update", b)
+    return total
+
+
 def lu_makespan(n, p, b):
     total = sum(sum(part) for part in lu_step_parts(n, p, b))
     return total + trsv_makespan(n, p, b) * 2.0
@@ -1018,6 +1036,118 @@ def sparse_iter_makespan_gpudirect(method, n, nnz, iters, restart, p, b):
 
 
 # ---------------------------------------------------------------------------
+# bench_harness/model.rs — mixed-precision twins (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+
+MODEL_REFINE_ITERS = 3  # model.rs MODEL_REFINE_ITERS
+
+
+def mixed_advantage(profile):
+    """accel/costmodel.rs ComputeProfile::mixed_advantage: narrow arithmetic
+    only pays when the engine streams over PCIe and SGEMM outruns DGEMM."""
+    return profile.pcie_bw > 0.0 and profile.flops3_sp > profile.flops3_dp
+
+
+def mixed_capable(b):
+    """lib.rs mixed_capable::<S>: S::Lo is strictly narrower than S — true
+    only for f64 (f32 is its own Lo)."""
+    return b == 8
+
+
+def model_mixed_engaged(p, b):
+    """model.rs model_mixed_engaged::<S>: the dtype x profile gate."""
+    return mixed_capable(b) and mixed_advantage(p.engine)
+
+
+def demote_pass(p, elems, b):
+    """model.rs demote_pass::<S>: one streaming read-wide/write-narrow sweep
+    on the host (S::Lo is 4 bytes for every capable S)."""
+    return p.panel_cpu.op_cost_total(BLAS1, elems, elems * (b + 4), 0, b)
+
+
+def local_matrix_elems(n, p):
+    """model.rs local_matrix_elems: owned tile payload of the widest rank."""
+    kt = ceil_div(n, p.tile)
+    return ceil_div(kt, p.pr) * ceil_div(kt, p.pc) * p.tile * p.tile
+
+
+def refine_sweep(n, p):
+    """model.rs refine_sweep::<S>: one wide residual/correction sweep —
+    r = b − A·x (ring row-broadcast of x + owned-tile GEMVs + column-tree
+    reduction), the inner solve is charged separately, then the axpy-class
+    update and convergence allreduce.  All legs at S::Hi (8 bytes)."""
+    hb = 8
+    t = p.tile
+    kt = ceil_div(n, t)
+    my_rows = ceil_div(kt, p.pr)
+    my_cols = ceil_div(kt, p.pc)
+    vec_elems = my_rows * t
+    tile_gemv = p.panel_cpu.op_cost_total(
+        BLAS2, 2 * t * t, (t * t + 2 * t) * hb, 0, hb
+    )
+    return (
+        p.ring(p.pr, vec_elems, hb)
+        + (my_rows * my_cols) * tile_gemv
+        + 2.0 * p.tree(p.pc, vec_elems, hb)
+        + 2.0 * p.blas1(vec_elems, hb)
+        + 2.0 * p.tree(p.pr, 1, hb)
+    )
+
+
+def lu_makespan_refined(n, p, b):
+    """model.rs lu_makespan_refined::<S>: narrow factorization + wide
+    refinement, never worse than the uniform gpudirect twin."""
+    uniform = lu_makespan_gpudirect(n, p, b)
+    if not model_mixed_engaged(p, b):
+        return uniform
+    mixed = (
+        demote_pass(p, local_matrix_elems(n, p), b)
+        + lu_makespan_gpudirect(n, p, 4)
+        + MODEL_REFINE_ITERS
+        * (refine_sweep(n, p) + 2.0 * trsv_resident_makespan(n, p, 4))
+    )
+    return min(mixed, uniform)
+
+
+def chol_makespan_refined(n, p, b):
+    uniform = chol_makespan_gpudirect(n, p, b)
+    if not model_mixed_engaged(p, b):
+        return uniform
+    mixed = (
+        demote_pass(p, local_matrix_elems(n, p), b)
+        + chol_makespan_gpudirect(n, p, 4)
+        + MODEL_REFINE_ITERS
+        * (refine_sweep(n, p) + 2.0 * trsv_resident_makespan(n, p, 4))
+    )
+    return min(mixed, uniform)
+
+
+def iter_makespan_mixed(method, n, iters, restart, p, b):
+    """model.rs iter_makespan_mixed::<S>: f32-storage/f64-accumulate Krylov
+    — only CG and BiCGSTAB have mixed kernels."""
+    uniform = iter_makespan_gpudirect(method, n, iters, restart, p, b)
+    if not model_mixed_engaged(p, b) or method not in ("cg", "bicgstab"):
+        return uniform
+    mixed = demote_pass(p, local_matrix_elems(n, p), b) + iter_makespan_gpudirect(
+        method, n, iters, restart, p, 4
+    )
+    return min(mixed, uniform)
+
+
+def sparse_iter_makespan_mixed(method, n, nnz, iters, restart, p, b):
+    """model.rs sparse_iter_makespan_mixed::<S>: the demote pass covers the
+    owned CSR value slice; the narrow win is the halved value stream and
+    allgather payload."""
+    uniform = sparse_iter_makespan_gpudirect(method, n, nnz, iters, restart, p, b)
+    if not model_mixed_engaged(p, b) or method not in ("cg", "bicgstab"):
+        return uniform
+    mixed = demote_pass(p, ceil_div(nnz, p.pr), b) + sparse_iter_makespan_gpudirect(
+        method, n, nnz, iters, restart, p, 4
+    )
+    return min(mixed, uniform)
+
+
+# ---------------------------------------------------------------------------
 # serve/mod.rs — request stream, batching and the scheduling timeline
 # ---------------------------------------------------------------------------
 
@@ -1061,17 +1191,31 @@ def form_batches(requests, rhs_batch=8, batching=True):
     return batches
 
 
-def schedule(requests, rhs_batch, batching, price):
+def schedule(requests, rhs_batch, batching, price, factor_cache=False):
     """rust serve::schedule: a batch starts when the cluster is free AND
     its last member has arrived; latency = finish − arrival.  `price`
-    maps a member list to the batch makespan.  Returns
-    ((arrival, finish) per request in stream order, batch count)."""
+    maps (member list, factor_cached) to the batch makespan, where
+    `factor_cached` mirrors the scheduler's seen-set over
+    (workload, n, method): a direct-method batch whose operator an earlier
+    batch already factored (with the cache on).  Returns
+    ((arrival, finish) per request in stream order, batch count,
+    factor-cache hit count)."""
     batches = form_batches(requests, rhs_batch, batching)
     clock = 0.0
     outcomes = []
+    seen = set()
+    hits = 0
     for batch in batches:
         members = [requests[i] for i in batch]
-        makespan = price(members)
+        head = members[0]
+        cached = False
+        if factor_cache and head["method"] in ("lu", "chol"):
+            key = (head["workload"], head["n"], head["method"])
+            cached = key in seen
+            seen.add(key)
+        if cached:
+            hits += 1
+        makespan = price(members, cached)
         ready = 0.0
         for r in members:
             ready = max(ready, r["arrival"])
@@ -1079,7 +1223,7 @@ def schedule(requests, rhs_batch, batching, price):
         finish = start + makespan
         clock = finish
         outcomes.extend((r["arrival"], finish) for r in members)
-    return outcomes, len(batches)
+    return outcomes, len(batches), hits
 
 
 def throughput(outcomes):
@@ -1339,13 +1483,45 @@ def serving_rows():
         p = params(SERVE_RANKS, gpu)
         engine = "MPI+CUDA" if gpu else "MPI+ATLAS"
         for batching in (True, False):
-            outcomes, nbatches = schedule(
-                stream, 8, batching, lambda members: _serve_price(p, members)
+            outcomes, nbatches, _hits = schedule(
+                stream, 8, batching, lambda members, _cached: _serve_price(p, members)
             )
             rows.append((
                 engine, SERVE_RANKS, SERVE_REQUESTS, SERVE_BASE_N, batching,
                 nbatches, throughput(outcomes),
                 latency_percentile(outcomes, 0.50),
+                latency_percentile(outcomes, 0.95),
+                latency_max(outcomes),
+            ))
+    return rows
+
+
+CACHE_REQUESTS = 64
+CACHE_BASE_N = 32
+
+
+def cache_rows():
+    """Factor-cache rows of BENCH_serving.json: each row is
+    (engine, ranks, requests, base_n, cache, hits, batches, throughput,
+    p95, max).  The 64-request demo stream re-enters the LU (diagdom, 32)
+    and Cholesky (spd, 96) operators in later groups; a flagged batch
+    prices only its two panel substitutions (Cluster::solve_batch_cached)."""
+    stream = demo_stream(CACHE_REQUESTS, CACHE_BASE_N)
+    rows = []
+    for gpu in (False, True):
+        p = params(SERVE_RANKS, gpu)
+        engine = "MPI+CUDA" if gpu else "MPI+ATLAS"
+        for cache in (True, False):
+            def price(members, cached, p=p):
+                if cached:
+                    return 2.0 * trsm_makespan(members[0]["n"], len(members), p, 4)
+                return _serve_price(p, members)
+            outcomes, nbatches, hits = schedule(
+                stream, 8, True, price, factor_cache=cache
+            )
+            rows.append((
+                engine, SERVE_RANKS, CACHE_REQUESTS, CACHE_BASE_N, cache,
+                hits, nbatches, throughput(outcomes),
                 latency_percentile(outcomes, 0.95),
                 latency_max(outcomes),
             ))
@@ -1459,6 +1635,69 @@ def halo_rows():
 # ---------------------------------------------------------------------------
 # Committed-artifact rendering (byte-identical to the rust benches' output)
 # ---------------------------------------------------------------------------
+
+
+MIXED_ITERS = 100
+
+
+def mixed_rows():
+    """Dense rows of BENCH_mixed.json (rust/benches/mixed.rs): each row is
+    (kernel, engine, n, ranks, pr, pc, f64, mixed, strict) where `strict`
+    means the dtype x profile gate is open and mixed must win outright."""
+    iters = MIXED_ITERS
+    rows = []
+    for ranks in PAPER_RANKS:
+        for gpu in (False, True):
+            p = params(ranks, gpu)
+            engine = "MPI+CUDA" if gpu else "MPI+ATLAS"
+            strict = model_mixed_engaged(p, 8)
+
+            def push(kernel, f64_secs, mixed_secs):
+                rows.append((
+                    kernel, engine, PAPER_N, ranks, p.pr, p.pc,
+                    f64_secs, mixed_secs, strict,
+                ))
+
+            push(
+                "LU",
+                lu_makespan_gpudirect(PAPER_N, p, 8),
+                lu_makespan_refined(PAPER_N, p, 8),
+            )
+            push(
+                "Cholesky",
+                chol_makespan_gpudirect(PAPER_N, p, 8),
+                chol_makespan_refined(PAPER_N, p, 8),
+            )
+            for m, name in (("cg", "CG"), ("bicgstab", "BiCGSTAB")):
+                push(
+                    name,
+                    iter_makespan_gpudirect(m, PAPER_N, iters, 30, p, 8),
+                    iter_makespan_mixed(m, PAPER_N, iters, 30, p, 8),
+                )
+    return rows
+
+
+def mixed_sparse_rows():
+    """Sparse rows of BENCH_mixed.json: each row is (stencil, method, grid,
+    n, nnz, engine, ranks, f64, mixed, strict)."""
+    iters = MIXED_ITERS
+    rows = []
+    for ranks in PAPER_RANKS:
+        for gpu in (False, True):
+            p = params(ranks, gpu)
+            engine = "MPI+CUDA" if gpu else "MPI+ATLAS"
+            strict = model_mixed_engaged(p, 8)
+            for stencil, grid, dim in HALO_STENCILS:
+                n = grid ** dim
+                nnz = stencil_halo_counts(grid, dim, p.tile, p.pr)["total_nnz"]
+                for m, name in (("cg", "CG"), ("bicgstab", "BiCGSTAB")):
+                    rows.append((
+                        stencil, name, grid, n, nnz, engine, ranks,
+                        sparse_iter_makespan_gpudirect(m, n, nnz, iters, 30, p, 8),
+                        sparse_iter_makespan_mixed(m, n, nnz, iters, 30, p, 8),
+                        strict,
+                    ))
+    return rows
 
 
 def _rust_e6(x):
@@ -1592,5 +1831,50 @@ def render_serving_json():
             f'"throughput_rps": {_rust_e6(tput)}, '
             f'"p50_secs": {_rust_e6(p50)}, "p95_secs": {_rust_e6(p95)}, '
             f'"max_secs": {_rust_e6(mx)}}}{comma}'
+        )
+    crows = cache_rows()
+    lines += ['  ],', '  "factor_cache": [']
+    for i, (engine, ranks, requests, base_n, cache, hits, batches,
+            tput, p95, mx) in enumerate(crows):
+        comma = "," if i + 1 < len(crows) else ""
+        flag = "true" if cache else "false"
+        lines.append(
+            f'    {{"engine": "{engine}", "ranks": {ranks}, '
+            f'"requests": {requests}, "base_n": {base_n}, '
+            f'"cache": {flag}, "hits": {hits}, "batches": {batches}, '
+            f'"throughput_rps": {_rust_e6(tput)}, '
+            f'"p95_secs": {_rust_e6(p95)}, "max_secs": {_rust_e6(mx)}}}{comma}'
+        )
+    return "\n".join(lines + ["  ]", "}", ""])
+
+
+def render_mixed_json():
+    """The exact bytes `cargo bench --bench mixed` writes."""
+    rows = mixed_rows()
+    srows = mixed_sparse_rows()
+    lines = ['{', '  "network": "gigabit_ethernet",', '  "tile": 256,',
+             f'  "iters": {MIXED_ITERS},',
+             f'  "refine_iters": {MODEL_REFINE_ITERS},', '  "entries": [']
+    for i, (kernel, engine, n, ranks, pr, pc, wide, mixed,
+            strict) in enumerate(rows):
+        comma = "," if i + 1 < len(rows) else ""
+        flag = "true" if strict else "false"
+        lines.append(
+            f'    {{"kernel": "{kernel}", "engine": "{engine}", "n": {n}, '
+            f'"ranks": {ranks}, "pr": {pr}, "pc": {pc}, '
+            f'"f64_secs": {_rust_e6(wide)}, "mixed_secs": {_rust_e6(mixed)}, '
+            f'"saved_frac": {1.0 - mixed / wide:.4f}, "strict": {flag}}}{comma}'
+        )
+    lines += ['  ],', '  "sparse": [']
+    for i, (stencil, method, grid, n, nnz, engine, ranks, wide, mixed,
+            strict) in enumerate(srows):
+        comma = "," if i + 1 < len(srows) else ""
+        flag = "true" if strict else "false"
+        lines.append(
+            f'    {{"stencil": "{stencil}", "method": "{method}", '
+            f'"grid": {grid}, "n": {n}, "nnz": {nnz}, "engine": "{engine}", '
+            f'"ranks": {ranks}, "f64_secs": {_rust_e6(wide)}, '
+            f'"mixed_secs": {_rust_e6(mixed)}, '
+            f'"saved_frac": {1.0 - mixed / wide:.4f}, "strict": {flag}}}{comma}'
         )
     return "\n".join(lines + ["  ]", "}", ""])

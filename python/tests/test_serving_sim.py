@@ -18,7 +18,12 @@ Four independent oracles:
    percentiles) replaying the rust unit tests' exact expectations, plus
    the serving-scenario A/B: batching must raise throughput and never
    worsen the tail on the backlogged demo stream.
-4. **Committed artifact** — `BENCH_serving.json` must be byte-identical
+4. **Factor cache** — the cross-request seen-set over (workload, n,
+   method): the 64-request demo stream re-enters exactly two direct
+   operators, the cache-off arm never flags a hit, grouping is unchanged,
+   and the cached pricing raises throughput without worsening the tail
+   (PR 9's serve-layer satellite).
+5. **Committed artifact** — `BENCH_serving.json` must be byte-identical
    to what the mirror renders.
 """
 
@@ -192,8 +197,9 @@ def test_batches_merge_only_consecutive_compatible_requests():
 def test_schedule_timeline_and_percentiles():
     # The rust unit test's exact numbers: every batch priced at 1 s.
     s = mm.demo_stream(8, 64)
-    outcomes, nbatches = mm.schedule(s, 8, True, lambda members: 1.0)
+    outcomes, nbatches, hits = mm.schedule(s, 8, True, lambda members, _c: 1.0)
     assert nbatches == 2
+    assert hits == 0  # factor_cache defaults off
     arrival0, finish0 = outcomes[0]
     assert finish0 == 0.006 + 1.0  # batch 0 waits for request 3
     arrival4, finish4 = outcomes[4]
@@ -237,10 +243,88 @@ def test_rhs_coeff_is_exact_and_stream_is_arrival_ordered():
 
 
 # ---------------------------------------------------------------------------
-# 4. committed artifact
+# 4. the cross-request factor cache (serve/mod.rs seen-set)
+# ---------------------------------------------------------------------------
+
+
+def test_factor_cache_hits_exactly_the_repeated_direct_operators():
+    # The 64-request demo stream cycles 16 groups over methods x 3 sizes:
+    # the LU (diagdom, 32) group recurs at group 12 and Cholesky (spd, 96)
+    # at group 14 — exactly two flagged batches, none on Krylov repeats.
+    s = mm.demo_stream(64, 32)
+    _, nbatches, hits = mm.schedule(
+        s, 8, True, lambda members, _c: 1.0, factor_cache=True
+    )
+    assert nbatches == 16
+    assert hits == 2
+    # Cache off: same grouping, never a hit.
+    _, nb_off, hits_off = mm.schedule(s, 8, True, lambda members, _c: 1.0)
+    assert (nb_off, hits_off) == (16, 0)
+    # The short 16-request stream never revisits an operator.
+    _, _, hits16 = mm.schedule(
+        mm.demo_stream(16, 32), 8, True, lambda members, _c: 1.0,
+        factor_cache=True,
+    )
+    assert hits16 == 0
+
+
+def test_cached_batches_receive_the_cached_flag_in_arrival_order():
+    s = mm.demo_stream(64, 32)
+    flagged = []
+
+    def price(members, cached):
+        if cached:
+            flagged.append((members[0]["method"], members[0]["n"]))
+        return 1.0
+
+    mm.schedule(s, 8, True, price, factor_cache=True)
+    assert flagged == [("lu", 32), ("chol", 96)]
+
+
+def test_factor_cache_scenario_never_loses():
+    # The bench's cache A/B on the real pricing: 4 rows (two engines x
+    # on/off); the cache changes pricing, not grouping, and must raise
+    # throughput without worsening the tail.
+    rows = mm.cache_rows()
+    assert len(rows) == 4
+    for on, off in (rows[0:2], rows[2:4]):
+        assert on[4] is True and off[4] is False  # cache flag
+        assert on[0] == off[0]  # same engine arm
+        assert on[5] == 2, f"{on[0]}: the demo stream repeats exactly twice"
+        assert off[5] == 0, f"{off[0]}: the cache-off arm must never hit"
+        assert on[6] == off[6], "the cache changes pricing, not grouping"
+        assert on[7] > off[7], f"{on[0]}: the cache must raise throughput"
+        assert on[9] <= off[9] * LE_SLACK, f"{on[0]}: tail must not worsen"
+
+
+def test_cached_price_is_the_two_resident_substitutions():
+    # A flagged batch prices 2·trsm(n, k) — matching
+    # Cluster::solve_batch_cached: both substitutions of the resident
+    # factors, no factorization, no transpose redistribution.
+    p = mm.params(mm.SERVE_RANKS, gpu=True)
+    full = mm.lu_solve_makespan_batched(96, 4, p, 4)
+    cached = 2.0 * mm.trsm_makespan(96, 4, p, 4)
+    assert cached < full
+
+
+# ---------------------------------------------------------------------------
+# 5. committed artifact
 # ---------------------------------------------------------------------------
 
 
 def test_committed_serving_artifact_matches_the_mirror():
     root = pathlib.Path(__file__).resolve().parents[2]
     assert (root / "BENCH_serving.json").read_text() == mm.render_serving_json()
+
+
+def test_serving_artifact_factor_cache_schema():
+    import json
+
+    root = pathlib.Path(__file__).resolve().parents[2]
+    doc = json.loads((root / "BENCH_serving.json").read_text())
+    cache = doc["factor_cache"]
+    assert len(cache) == 4
+    for e in cache:
+        assert e["requests"] == 64 and e["base_n"] == 32
+        assert e["hits"] == (2 if e["cache"] else 0)
+        assert e["batches"] == 16

@@ -1,0 +1,273 @@
+//! Bench: mixed precision end to end vs uniform f64 — the printed numbers
+//! behind the mixed-precision subsystem (`DESIGN.md` §17).
+//!
+//! For every paper rank count and both engine arms, evaluates the analytic
+//! model in two arms that differ **only** in the arithmetic/storage width
+//! of the heavy phase:
+//!
+//! * **f64** — the uniform wide flow: the `*_gpudirect` twins at `f64`
+//!   (the best all-subsystems-on baseline this repo models);
+//! * **mixed** — the `*_refined` / `*_mixed` twins: f32 factorization +
+//!   [`MODEL_REFINE_ITERS`] wide refinement sweeps for the direct solvers,
+//!   f32-storage / f64-accumulate iterations for CG and BiCGSTAB — narrow
+//!   flops, narrow PCIe streams *and* narrow wire payloads (the
+//!   reduced-precision communication leg).
+//!
+//! Dense rows cover LU, Cholesky, CG and BiCGSTAB at the paper's
+//! n = 60000; sparse rows run the Poisson stencils, where the narrow win
+//! is the halved CSR value stream and allgather payload.
+//!
+//! Emits `BENCH_mixed.json` and asserts the acceptance shape:
+//! mixed <= f64 on every configuration, strictly smaller on the
+//! accelerated arm (the gate is open: SGEMM runs 6x DGEMM and every PCIe /
+//! wire byte halves, dwarfing the O(n²) refine overhead), and an *exact*
+//! wash on the host arm, where the gate closes and the mixed twin IS the
+//! uniform twin — the `--no-mixed` A/B collapses to nothing by
+//! construction.
+//!
+//! ```sh
+//! cargo bench --bench mixed
+//! ```
+
+use cuplss::accel::{ComputeProfile, DEFAULT_DEVICE_MEM};
+use cuplss::bench_harness::model::{
+    chol_makespan_gpudirect, chol_makespan_refined, iter_makespan_gpudirect, iter_makespan_mixed,
+    lu_makespan_gpudirect, lu_makespan_refined, model_mixed_engaged,
+    sparse_iter_makespan_gpudirect, sparse_iter_makespan_mixed, MODEL_REFINE_ITERS,
+};
+use cuplss::bench_harness::{ModelParams, PAPER_N, PAPER_RANKS};
+use cuplss::comm::NetworkModel;
+use cuplss::mesh::MeshShape;
+use cuplss::solvers::IterMethod;
+use cuplss::util::fmt;
+use cuplss::workloads::stencil_halo_counts;
+
+struct Row {
+    kernel: &'static str,
+    engine: &'static str,
+    n: usize,
+    ranks: usize,
+    pr: usize,
+    pc: usize,
+    f64_secs: f64,
+    mixed_secs: f64,
+    /// Must mixed win strictly (the dtype x profile gate is open)?
+    strict: bool,
+}
+
+struct SparseRow {
+    stencil: &'static str,
+    method: &'static str,
+    grid: usize,
+    n: usize,
+    nnz: usize,
+    engine: &'static str,
+    ranks: usize,
+    f64_secs: f64,
+    mixed_secs: f64,
+    strict: bool,
+}
+
+fn params(ranks: usize, gpu: bool) -> ModelParams {
+    ModelParams {
+        tile: 256,
+        shape: MeshShape::near_square(ranks),
+        net: NetworkModel::gigabit_ethernet(),
+        engine: if gpu {
+            ComputeProfile::gtx280_cublas()
+        } else {
+            ComputeProfile::q6600_atlas()
+        },
+        panel_cpu: ComputeProfile::q6600_atlas(),
+        swap_fraction: 0.5,
+        device_mem: DEFAULT_DEVICE_MEM,
+    }
+}
+
+fn main() {
+    let iters = 100usize;
+    let mut rows: Vec<Row> = Vec::new();
+
+    for &ranks in PAPER_RANKS {
+        for gpu in [false, true] {
+            let p = params(ranks, gpu);
+            let (pr, pc) = (p.shape.pr, p.shape.pc);
+            let engine = if gpu { "MPI+CUDA" } else { "MPI+ATLAS" };
+            let strict = model_mixed_engaged::<f64>(&p);
+            let mut push = |kernel, f64_secs: f64, mixed_secs: f64| {
+                rows.push(Row {
+                    kernel,
+                    engine,
+                    n: PAPER_N,
+                    ranks,
+                    pr,
+                    pc,
+                    f64_secs,
+                    mixed_secs,
+                    strict,
+                });
+            };
+            push(
+                "LU",
+                lu_makespan_gpudirect::<f64>(PAPER_N, &p),
+                lu_makespan_refined::<f64>(PAPER_N, &p),
+            );
+            push(
+                "Cholesky",
+                chol_makespan_gpudirect::<f64>(PAPER_N, &p),
+                chol_makespan_refined::<f64>(PAPER_N, &p),
+            );
+            for (m, name) in [(IterMethod::Cg, "CG"), (IterMethod::Bicgstab, "BiCGSTAB")] {
+                push(
+                    name,
+                    iter_makespan_gpudirect::<f64>(m, PAPER_N, iters, 30, &p),
+                    iter_makespan_mixed::<f64>(m, PAPER_N, iters, 30, &p),
+                );
+            }
+        }
+    }
+
+    // Poisson-stencil configs: the narrow win is the halved CSR value
+    // stream and allgather payload — still gated on the engine profile.
+    let mut sparse_rows: Vec<SparseRow> = Vec::new();
+    for &ranks in PAPER_RANKS {
+        for gpu in [false, true] {
+            let p = params(ranks, gpu);
+            let engine = if gpu { "MPI+CUDA" } else { "MPI+ATLAS" };
+            let strict = model_mixed_engaged::<f64>(&p);
+            for (stencil, grid, dim) in [("poisson2d", 512usize, 2u32), ("poisson3d", 64, 3)] {
+                let n = grid.pow(dim);
+                let h = stencil_halo_counts(grid, dim, p.tile, p.shape.pr);
+                for (m, name) in [(IterMethod::Cg, "CG"), (IterMethod::Bicgstab, "BiCGSTAB")] {
+                    sparse_rows.push(SparseRow {
+                        stencil,
+                        method: name,
+                        grid,
+                        n,
+                        nnz: h.total_nnz,
+                        engine,
+                        ranks,
+                        f64_secs: sparse_iter_makespan_gpudirect::<f64>(
+                            m,
+                            n,
+                            h.total_nnz,
+                            iters,
+                            30,
+                            &p,
+                        ),
+                        mixed_secs: sparse_iter_makespan_mixed::<f64>(
+                            m,
+                            n,
+                            h.total_nnz,
+                            iters,
+                            30,
+                            &p,
+                        ),
+                        strict,
+                    });
+                }
+            }
+        }
+    }
+
+    // Table for the terminal.
+    let header = ["kernel", "engine", "P", "f64", "mixed", "saved"];
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.kernel.to_string(),
+                r.engine.to_string(),
+                r.ranks.to_string(),
+                fmt::secs(r.f64_secs),
+                fmt::secs(r.mixed_secs),
+                format!("{:.1}%", (1.0 - r.mixed_secs / r.f64_secs) * 100.0),
+            ]
+        })
+        .collect();
+    println!("== Mixed precision vs uniform f64 (n = {PAPER_N}) ==");
+    println!("{}", fmt::table(&header, &body));
+
+    // Acceptance shape.
+    let check = |label: String, mixed: f64, wide: f64, strict: bool| {
+        assert!(
+            mixed <= wide * (1.0 + 1e-9),
+            "{label}: mixed {mixed} must not exceed f64 {wide}"
+        );
+        if strict {
+            assert!(mixed < wide, "{label}: the gate is open, mixed must strictly win");
+        } else {
+            assert!(
+                (mixed - wide).abs() <= 1e-12 * wide.max(1.0),
+                "{label}: the gate is closed, must be an exact wash ({mixed} vs {wide})"
+            );
+        }
+    };
+    for r in &rows {
+        check(
+            format!("{} {} P={}", r.kernel, r.engine, r.ranks),
+            r.mixed_secs,
+            r.f64_secs,
+            r.strict,
+        );
+    }
+    for r in &sparse_rows {
+        check(
+            format!("{} {} {} P={}", r.stencil, r.method, r.engine, r.ranks),
+            r.mixed_secs,
+            r.f64_secs,
+            r.strict,
+        );
+    }
+
+    // BENCH_mixed.json (hand-rolled: the offline crate set has no serde).
+    let mut json = format!(
+        "{{\n  \"network\": \"gigabit_ethernet\",\n  \"tile\": 256,\n  \"iters\": {iters},\n  \
+         \"refine_iters\": {MODEL_REFINE_ITERS},\n  \"entries\": [\n"
+    );
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"engine\": \"{}\", \"n\": {}, \"ranks\": {}, \
+             \"pr\": {}, \"pc\": {}, \"f64_secs\": {:.6e}, \"mixed_secs\": {:.6e}, \
+             \"saved_frac\": {:.4}, \"strict\": {}}}{}\n",
+            r.kernel,
+            r.engine,
+            r.n,
+            r.ranks,
+            r.pr,
+            r.pc,
+            r.f64_secs,
+            r.mixed_secs,
+            1.0 - r.mixed_secs / r.f64_secs,
+            r.strict,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n  \"sparse\": [\n");
+    for (i, r) in sparse_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"stencil\": \"{}\", \"method\": \"{}\", \"grid\": {}, \"n\": {}, \
+             \"nnz\": {}, \"engine\": \"{}\", \"ranks\": {}, \"f64_secs\": {:.6e}, \
+             \"mixed_secs\": {:.6e}, \"saved_frac\": {:.4}, \"strict\": {}}}{}\n",
+            r.stencil,
+            r.method,
+            r.grid,
+            r.n,
+            r.nnz,
+            r.engine,
+            r.ranks,
+            r.f64_secs,
+            r.mixed_secs,
+            1.0 - r.mixed_secs / r.f64_secs,
+            r.strict,
+            if i + 1 < sparse_rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_mixed.json", &json).expect("write BENCH_mixed.json");
+    println!(
+        "wrote BENCH_mixed.json ({} dense + {} sparse rows); mixed never loses.",
+        rows.len(),
+        sparse_rows.len()
+    );
+}

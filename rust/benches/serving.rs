@@ -13,14 +13,22 @@
 //! * **serving scenario** — the deterministic mixed demo stream priced
 //!   through [`cuplss::serve::schedule`] with the model twins as the batch
 //!   pricer, batching on vs off (`--no-batching` A/B), reporting
-//!   throughput and latency percentiles.
+//!   throughput and latency percentiles;
+//! * **factor-cache scenario** — a longer stream whose direct operators
+//!   repeat: the scheduler flags repeat `(workload, n, method)` batches,
+//!   and a flagged batch prices only its two panel substitutions (the
+//!   factors are resident from the earlier request) — the cross-request
+//!   analogue of the within-batch amortization above, A/B'd against the
+//!   same stream with the cache off (`--no-factor-cache`).
 //!
 //! Emits `BENCH_serving.json` and asserts the acceptance shape:
 //! `batched <= k x single` on *every* configuration (strictly below for
 //! k > 1 — launches, tile broadcasts and message latencies are paid per
 //! panel step, not per vector), bit-exact equality at k = 1 (the batched
-//! paths are the single-RHS paths), and batched serving throughput
-//! strictly above the unbatched A/B on a backlogged stream.
+//! paths are the single-RHS paths), batched serving throughput strictly
+//! above the unbatched A/B on a backlogged stream, and the factor cache
+//! strictly raising throughput on the repeat stream (exactly two hits on
+//! the 64-request demo stream; zero with the cache off).
 //!
 //! ```sh
 //! cargo bench --bench serving
@@ -59,6 +67,19 @@ struct ServeRow {
     batches: usize,
     throughput: f64,
     p50: f64,
+    p95: f64,
+    max: f64,
+}
+
+struct CacheRow {
+    engine: &'static str,
+    ranks: usize,
+    requests: usize,
+    base_n: usize,
+    cache: bool,
+    hits: usize,
+    batches: usize,
+    throughput: f64,
     p95: f64,
     max: f64,
 }
@@ -157,8 +178,8 @@ fn main() {
         let p = params(serve_ranks, gpu);
         let engine = if gpu { "MPI+CUDA" } else { "MPI+ATLAS" };
         for batching in [true, false] {
-            let cfg = ServeConfig { rhs_batch: 8, batching };
-            let rep = schedule(&stream, &cfg, |members| {
+            let cfg = ServeConfig { rhs_batch: 8, batching, factor_cache: false };
+            let rep = schedule(&stream, &cfg, |members, _cached| {
                 let head = members[0];
                 let k = members.len();
                 let makespan = model_batch_cost(head.method, head.n, k, iters, &p);
@@ -178,6 +199,52 @@ fn main() {
                 batches: rep.batches,
                 throughput: rep.throughput(),
                 p50: rep.p50(),
+                p95: rep.p95(),
+                max: rep.latency_max(),
+            });
+        }
+    }
+
+    // Factor-cache scenario: a longer stream whose direct operators repeat
+    // (the 64-request demo stream re-enters the LU (diagdom, 32) and
+    // Cholesky (spd, 96) operators in later groups).  A flagged batch
+    // prices only its two panel substitutions — the factorization (and for
+    // Cholesky the transpose redistribution) is resident from the earlier
+    // request.
+    let (c_requests, c_base_n) = (64usize, 32usize);
+    let cache_stream = demo_stream(c_requests, c_base_n);
+    let mut cache_rows: Vec<CacheRow> = Vec::new();
+    for gpu in [false, true] {
+        let p = params(serve_ranks, gpu);
+        let engine = if gpu { "MPI+CUDA" } else { "MPI+ATLAS" };
+        for cache in [true, false] {
+            let cfg = ServeConfig { rhs_batch: 8, batching: true, factor_cache: cache };
+            let rep = schedule(&cache_stream, &cfg, |members, cached| {
+                let head = members[0];
+                let k = members.len();
+                let makespan = if cached {
+                    // Both substitutions of the resident factors; nothing
+                    // else is charged — matching Cluster::solve_batch_cached.
+                    2.0 * trsm_makespan::<f32>(head.n, k, &p)
+                } else {
+                    model_batch_cost(head.method, head.n, k, iters, &p)
+                };
+                Ok(BatchCost {
+                    makespan,
+                    per_request_secs: vec![makespan / k as f64; k],
+                    max_err: 0.0,
+                })
+            })
+            .expect("demo stream is arrival-ordered");
+            cache_rows.push(CacheRow {
+                engine,
+                ranks: serve_ranks,
+                requests: c_requests,
+                base_n: c_base_n,
+                cache,
+                hits: rep.factor_cache_hits,
+                batches: rep.batches,
+                throughput: rep.throughput(),
                 p95: rep.p95(),
                 max: rep.latency_max(),
             });
@@ -223,6 +290,25 @@ fn main() {
     println!("== Serving the mixed demo stream ({n_requests} requests) ==");
     println!("{}", fmt::table(&sheader, &sbody));
 
+    let cheader = ["engine", "P", "cache", "hits", "batches", "req/s", "p95", "max latency"];
+    let cbody: Vec<Vec<String>> = cache_rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.engine.to_string(),
+                r.ranks.to_string(),
+                if r.cache { "on".to_string() } else { "off".to_string() },
+                r.hits.to_string(),
+                r.batches.to_string(),
+                format!("{:.3}", r.throughput),
+                fmt::secs(r.p95),
+                fmt::secs(r.max),
+            ]
+        })
+        .collect();
+    println!("== Cross-request factor cache ({c_requests} requests, repeats) ==");
+    println!("{}", fmt::table(&cheader, &cbody));
+
     // Acceptance shape.
     for r in &rows {
         if r.k == 1 {
@@ -259,6 +345,25 @@ fn main() {
         assert!(
             on.max <= off.max * (1.0 + 1e-9),
             "{}: batching must not worsen the tail on a backlogged stream",
+            on.engine
+        );
+    }
+    for pair in cache_rows.chunks(2) {
+        let (on, off) = (&pair[0], &pair[1]);
+        assert!(on.cache && !off.cache);
+        assert_eq!(on.hits, 2, "{}: the 64-request demo stream repeats exactly twice", on.engine);
+        assert_eq!(off.hits, 0, "{}: the cache-off arm must never flag a hit", off.engine);
+        assert_eq!(on.batches, off.batches, "the cache changes pricing, not grouping");
+        assert!(
+            on.throughput > off.throughput,
+            "{}: the factor cache must raise throughput ({} vs {})",
+            on.engine,
+            on.throughput,
+            off.throughput
+        );
+        assert!(
+            on.max <= off.max * (1.0 + 1e-9),
+            "{}: the factor cache must not worsen the tail",
             on.engine
         );
     }
@@ -303,11 +408,32 @@ fn main() {
             if i + 1 < serve_rows.len() { "," } else { "" }
         ));
     }
+    json.push_str("  ],\n  \"factor_cache\": [\n");
+    for (i, r) in cache_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"engine\": \"{}\", \"ranks\": {}, \"requests\": {}, \"base_n\": {}, \
+             \"cache\": {}, \"hits\": {}, \"batches\": {}, \"throughput_rps\": {:.6e}, \
+             \"p95_secs\": {:.6e}, \"max_secs\": {:.6e}}}{}\n",
+            r.engine,
+            r.ranks,
+            r.requests,
+            r.base_n,
+            r.cache,
+            r.hits,
+            r.batches,
+            r.throughput,
+            r.p95,
+            r.max,
+            if i + 1 < cache_rows.len() { "," } else { "" }
+        ));
+    }
     json.push_str("  ]\n}\n");
     std::fs::write("BENCH_serving.json", &json).expect("write BENCH_serving.json");
     println!(
-        "wrote BENCH_serving.json ({} entries, {} serving rows); batching never loses.",
+        "wrote BENCH_serving.json ({} entries, {} serving + {} cache rows); \
+         batching and the factor cache never lose.",
         rows.len(),
-        serve_rows.len()
+        serve_rows.len(),
+        cache_rows.len()
     );
 }

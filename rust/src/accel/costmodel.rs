@@ -112,6 +112,16 @@ impl ComputeProfile {
         if S::BYTES == 4 { self.flops3_sp } else { self.flops3_dp }
     }
 
+    /// Does this profile price f32 above f64 — i.e. is there anything for
+    /// a mixed-precision solve to win?  True on the CUDA arm (the GT200
+    /// runs SP at 6x DP issue *and* every byte staged over PCIe halves);
+    /// false on the host profile, whose whole advantage would be the
+    /// memory-bound f32 passes — the model keeps the host arm an exact
+    /// wash so the mixed twins degrade conservatively.
+    pub fn mixed_advantage(&self) -> bool {
+        self.pcie_bw > 0.0 && self.flops3_sp > self.flops3_dp
+    }
+
     /// Model the cost of one op invocation.
     ///
     /// * `flops` — exact op flop count (manifest / closed form);
@@ -195,6 +205,12 @@ mod tests {
         let cost = gpu.op_cost::<f32>(OpClass::Blas3, flops, 3 * bytes, bytes);
         let share = cost.transfer_secs / cost.total();
         assert!(share > 0.3, "transfer share {share} should be substantial");
+    }
+
+    #[test]
+    fn mixed_advantage_only_on_the_accelerated_arm() {
+        assert!(ComputeProfile::gtx280_cublas().mixed_advantage());
+        assert!(!ComputeProfile::q6600_atlas().mixed_advantage());
     }
 
     #[test]

@@ -21,12 +21,13 @@ pub use model::{
     chol_makespan_resident, chol_solve_makespan_batched, chol_wire_stage, cg_makespan_batched,
     iter_makespan_fused, iter_makespan_gpudirect, iter_makespan_prefetch, iter_wire_stage,
     lu_makespan_gpudirect, lu_makespan_lookahead, lu_makespan_prefetch, lu_makespan_resident,
-    lu_solve_makespan_batched, lu_wire_stage, halo_wire, sparse_cg_split_makespan,
+    chol_makespan_refined, iter_makespan_mixed, lu_makespan_refined, lu_solve_makespan_batched,
+    lu_wire_stage, halo_wire, model_mixed_engaged, sparse_cg_split_makespan,
     sparse_iter_makespan_fused, sparse_iter_makespan_gpudirect, sparse_iter_makespan_halo,
-    sparse_iter_makespan_prefetch, sparse_iter_makespan_split, sparse_iter_wire_stage,
-    sparse_pipecg_overlap_makespan, summa_makespan, summa_makespan_gpudirect,
-    summa_makespan_prefetch, summa_makespan_resident, summa_wire_stage, trsm_makespan,
-    ModelParams,
+    sparse_iter_makespan_mixed, sparse_iter_makespan_prefetch, sparse_iter_makespan_split,
+    sparse_iter_wire_stage, sparse_pipecg_overlap_makespan, summa_makespan,
+    summa_makespan_gpudirect, summa_makespan_prefetch, summa_makespan_resident, summa_wire_stage,
+    trsm_makespan, trsv_resident_makespan, ModelParams, MODEL_REFINE_ITERS,
 };
 
 /// The paper's rank sweep (Figures 3 and 4).

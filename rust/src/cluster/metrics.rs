@@ -77,6 +77,29 @@ impl RankMetrics {
             wall,
         }
     }
+
+    /// Accumulate another capture of the *same rank* into this one
+    /// (mixed-precision fallback: the failed narrow attempt ran first, so
+    /// its bill is added to the wide re-run's — sequential composition).
+    /// Every field is additive except `max_outstanding_reqs`, which is a
+    /// peak.
+    pub(crate) fn absorb(&mut self, other: &RankMetrics) {
+        self.vtime += other.vtime;
+        self.compute += other.compute;
+        self.comm_wait += other.comm_wait;
+        self.transfer += other.transfer;
+        self.msgs += other.msgs;
+        self.bytes += other.bytes;
+        self.max_outstanding_reqs = self.max_outstanding_reqs.max(other.max_outstanding_reqs);
+        self.wait_saved += other.wait_saved;
+        self.pcie_saved_bytes += other.pcie_saved_bytes;
+        self.pcie_hidden_secs += other.pcie_hidden_secs;
+        self.prefetch_hits += other.prefetch_hits;
+        self.wire_direct_bytes += other.wire_direct_bytes;
+        self.host_stage_saved_secs += other.host_stage_saved_secs;
+        self.launches_fused += other.launches_fused;
+        self.wall += other.wall;
+    }
 }
 
 /// Result of one distributed solve.
@@ -107,6 +130,25 @@ pub struct SolveReport {
     /// *shared* bucket (factorization, panel kernels, batched collectives).
     /// Empty when attribution was not enabled (single-RHS solves).
     pub attribution: Vec<f64>,
+    /// Iterative-refinement correction sweeps the mixed-precision path
+    /// applied (`DESIGN.md` §17); 0 for uniform-precision runs and for
+    /// mixed Krylov (whose extra work is counted in `iter_stats`).
+    pub refine_iters: usize,
+    /// Payload bytes the reduced-precision storage kept off the wire:
+    /// every message of the mixed run priced at the wide dtype minus what
+    /// actually shipped.  Slight overcount — the refinement's few
+    /// [`crate::comm::Payload::Hi`] legs are rated like storage traffic —
+    /// and 0 for uniform runs and after a fallback (nothing was saved;
+    /// the narrow attempt was re-done wide).
+    pub bytes_saved_mixed: u64,
+    /// The mixed-precision attempt missed its backward-error bound (or the
+    /// narrow factorization broke down) and the solve re-ran at uniform
+    /// precision; the per-rank metrics then include **both** runs — the
+    /// honest price of the gamble.
+    pub mixed_fallback: bool,
+    /// The factorization was restored from the cross-request factor cache
+    /// (serve layer): only the substitutions ran.
+    pub factor_cached: bool,
 }
 
 impl SolveReport {
@@ -132,6 +174,10 @@ impl SolveReport {
             iter_stats,
             nrhs: 1,
             attribution: Vec::new(),
+            refine_iters: 0,
+            bytes_saved_mixed: 0,
+            mixed_fallback: false,
+            factor_cached: false,
         }
     }
 
@@ -140,6 +186,26 @@ impl SolveReport {
     pub(crate) fn with_batch(mut self, nrhs: usize, attribution: Vec<f64>) -> Self {
         self.nrhs = nrhs;
         self.attribution = attribution;
+        self
+    }
+
+    /// Attach mixed-precision metadata (builder-style): refinement sweeps,
+    /// wire bytes saved, and whether the uniform fallback ran.
+    pub(crate) fn with_mixed(
+        mut self,
+        refine_iters: usize,
+        bytes_saved_mixed: u64,
+        mixed_fallback: bool,
+    ) -> Self {
+        self.refine_iters = refine_iters;
+        self.bytes_saved_mixed = bytes_saved_mixed;
+        self.mixed_fallback = mixed_fallback;
+        self
+    }
+
+    /// Mark the factorization as restored from the factor cache.
+    pub(crate) fn with_factor_cached(mut self, cached: bool) -> Self {
+        self.factor_cached = cached;
         self
     }
 
@@ -247,10 +313,19 @@ impl SolveReport {
             }
             None => String::new(),
         };
+        let mixed = if self.mixed_fallback {
+            format!(", mixed fallback after {} sweeps", self.refine_iters)
+        } else {
+            format!(
+                ", mixed saved {} ({} refine)",
+                crate::util::fmt::bytes(self.bytes_saved_mixed as f64),
+                self.refine_iters
+            )
+        };
         format!(
             "{} on {:?} n={} P={} [{}]: makespan {}, err {:.2e}, comm {:.0}%, \
              hidden {}, reqs<={}, pcie saved {}, pcie hidden {}, prefetch hits {}, \
-             wire direct {}, stage saved {}, fused {}{}",
+             wire direct {}, stage saved {}, fused {}{}{}{}",
             self.method,
             self.workload,
             self.n,
@@ -267,6 +342,8 @@ impl SolveReport {
             crate::util::fmt::bytes(self.total_wire_direct() as f64),
             crate::util::fmt::secs(self.total_host_stage_saved()),
             self.total_launches_fused(),
+            mixed,
+            if self.factor_cached { ", factor cached" } else { "" },
             iter
         )
     }
@@ -328,6 +405,34 @@ mod tests {
         assert!(r.summary().contains("prefetch hits"));
         assert!(r.summary().contains("wire direct"));
         assert!(r.summary().contains("stage saved"));
+        assert!(r.summary().contains("mixed saved"));
+    }
+
+    #[test]
+    fn mixed_builder_and_summary_variants() {
+        let base = SolveReport::new(
+            "LU",
+            Workload::Spd,
+            64,
+            1,
+            EngineKind::CpuSerial,
+            vec![mk(1.0, 0.8, 0.1)],
+            1e-12,
+            None,
+        );
+        assert_eq!(base.refine_iters, 0);
+        assert_eq!(base.bytes_saved_mixed, 0);
+        assert!(!base.mixed_fallback && !base.factor_cached);
+        let mixed = base.clone().with_mixed(3, 4096, false);
+        assert_eq!(mixed.refine_iters, 3);
+        assert_eq!(mixed.bytes_saved_mixed, 4096);
+        assert!(mixed.summary().contains("3 refine"));
+        let fell = base.clone().with_mixed(10, 0, true);
+        assert!(fell.mixed_fallback);
+        assert!(fell.summary().contains("mixed fallback after 10 sweeps"));
+        let cached = base.with_factor_cached(true);
+        assert!(cached.factor_cached);
+        assert!(cached.summary().contains("factor cached"));
     }
 
     #[test]

@@ -11,20 +11,31 @@ pub mod metrics;
 
 pub use metrics::{RankMetrics, SolveReport};
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
-use crate::accel::{make_engine, Engine, EngineKind};
+use crate::accel::{make_engine, ComputeProfile, Engine, EngineKind};
 use crate::comm::{NetworkModel, World};
-use crate::dist::{gather_vector, Descriptor, DistMatrix, DistMultiVector, DistVector};
+use crate::dist::{
+    gather_vector, ptranspose, Descriptor, DistMatrix, DistMultiVector, DistVector,
+};
 use crate::mesh::{Mesh, MeshShape};
 use crate::pblas::Ctx;
 use crate::runtime::Runtime;
 use crate::solvers::{
-    bicg, bicgstab, block_bicgstab, block_cg, cg, gmres, pchol_solve, pchol_solve_panel,
-    pipecg, plu_solve, plu_solve_panel, IterConfig, IterMethod, IterStats,
+    apply_pivots, bicg, bicgstab, bicgstab_mixed, block_bicgstab, block_cg, cg, cg_mixed,
+    gmres, pchol_factor, pchol_solve, pchol_solve_panel, pchol_solve_refined, pipecg,
+    plu_factor, plu_solve, plu_solve_panel, plu_solve_refined, ptrsm, IterConfig, IterMethod,
+    IterStats, PivotMap, TriKind,
 };
 use crate::workloads::Workload;
-use crate::{Error, Result, Scalar};
+use crate::{mixed_capable, Error, Result, Scalar};
+
+/// The wide accumulation dtype of a narrow world: `f64` for every supported
+/// scalar (`f32::Hi = f64`).  Spelled as an alias because the mixed solve
+/// runs the *world* at `S::Lo` and carries its high-precision shadows at
+/// this type.
+type LoHi<S> = <<S as Scalar>::Lo as Scalar>::Hi;
 
 /// Which solver to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -88,6 +99,15 @@ pub struct ClusterConfig {
     /// flow — the `--no-gpudirect` A/B arm.  Never changes results.  Inert
     /// without residency + prefetch.
     pub gpudirect: bool,
+    /// Mixed precision: factor/iterate at `S::Lo` (f32) with f64 correction
+    /// — iterative refinement around the direct solvers, f64-accumulate
+    /// Krylov, and narrow wire payloads (`DESIGN.md` §17).  Engages only
+    /// when the engine profile actually rewards it
+    /// ([`ComputeProfile::mixed_advantage`]) and the requested dtype has a
+    /// narrower storage type; `false` is the `--no-mixed` A/B arm and is
+    /// bit-identical to a pure-wide run.  Falls back to uniform precision
+    /// (both runs billed) when refinement misses its backward-error bound.
+    pub mixed_precision: bool,
     /// Iterative controls.
     pub iter: IterConfig,
 }
@@ -104,6 +124,7 @@ impl Default for ClusterConfig {
             device_mem: crate::accel::DEFAULT_DEVICE_MEM,
             prefetch: true,
             gpudirect: true,
+            mixed_precision: true,
             iter: IterConfig::default(),
         }
     }
@@ -120,10 +141,93 @@ impl ClusterConfig {
     }
 }
 
+/// Cache key: a factorization is reusable exactly when a later request
+/// names the same operator — same workload generator, size, method and
+/// dtype.  Mesh shape and tile are fixed per [`Cluster`], so they are not
+/// part of the key.
+type FactorKey = (Workload, usize, &'static str, &'static str);
+
+/// One cached factorization: every rank's factored tiles (promoted to f64,
+/// which is exact for all supported dtypes), plus whatever the
+/// substitutions need that the factorization produced — LU's pivot swaps,
+/// Cholesky's transposed factor.
+struct CachedFactor {
+    /// `tiles[rank]` = that rank's factored tiles in [`DistMatrix::owned_tiles`]
+    /// order.
+    tiles: Vec<Vec<Vec<f64>>>,
+    /// Cholesky only: the transposed factor `L^T`, same layout — caching it
+    /// skips the transpose-redistribution as well as the factorization.
+    lt_tiles: Option<Vec<Vec<Vec<f64>>>>,
+    /// LU only: the pivot swap list (identical on every rank).
+    swaps: Vec<(usize, usize)>,
+}
+
+/// Cross-request factorization cache (`DESIGN.md` §17): the serve layer
+/// keeps one per cluster so a repeat request for an already-factored
+/// operator pays only the triangular substitutions.
+pub struct FactorCache {
+    map: Mutex<HashMap<FactorKey, Arc<CachedFactor>>>,
+}
+
+impl FactorCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        FactorCache { map: Mutex::new(HashMap::new()) }
+    }
+
+    /// Number of cached factorizations.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// No factorizations cached yet?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn get(&self, key: &FactorKey) -> Option<Arc<CachedFactor>> {
+        self.map.lock().unwrap().get(key).cloned()
+    }
+
+    fn put(&self, key: FactorKey, factor: CachedFactor) {
+        self.map.lock().unwrap().insert(key, Arc::new(factor));
+    }
+}
+
+impl Default for FactorCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Should this (config, dtype, method) combination run the mixed-precision
+/// path?  Requires all three legs: the knob is on, the dtype has a narrower
+/// storage type to drop to, and the engine's cost profile actually rewards
+/// narrow arithmetic ([`ComputeProfile::mixed_advantage`] — true for the
+/// CUDA arm, false for the host arm, where SSE2 double throughput equals
+/// single and there is nothing to win).  Only methods with a wide-recovery
+/// story are admitted: refined LU/Cholesky and f64-accumulate CG/BiCGSTAB.
+fn mixed_engaged<S: Scalar>(cfg: &ClusterConfig, method: Method) -> bool {
+    let profile = match cfg.engine {
+        EngineKind::Accelerated => ComputeProfile::gtx280_cublas(),
+        EngineKind::CpuSerial => ComputeProfile::q6600_atlas(),
+    };
+    cfg.mixed_precision
+        && mixed_capable::<S>()
+        && profile.mixed_advantage()
+        && matches!(
+            method,
+            Method::Lu
+                | Method::Cholesky
+                | Method::Iterative(IterMethod::Cg | IterMethod::Bicgstab)
+        )
+}
+
 /// The cluster facade.
 pub struct Cluster {
     cfg: ClusterConfig,
     runtime: Option<Arc<Runtime>>,
+    factor_cache: FactorCache,
 }
 
 impl Cluster {
@@ -134,7 +238,13 @@ impl Cluster {
             EngineKind::Accelerated => Some(Runtime::new(&cfg.artifact_dir)?),
             EngineKind::CpuSerial => None,
         };
-        Ok(Cluster { cfg, runtime })
+        Ok(Cluster { cfg, runtime, factor_cache: FactorCache::new() })
+    }
+
+    /// The cross-request factorization cache (populated by
+    /// [`Cluster::solve_batch_cached`] when caching is requested).
+    pub fn factor_cache(&self) -> &FactorCache {
+        &self.factor_cache
     }
 
     /// The active config.
@@ -144,18 +254,28 @@ impl Cluster {
 
     /// Solve an `n x n` instance of `workload` with `method`; returns the
     /// report (makespan, per-rank breakdown, solution error vs the known
-    /// answer).
+    /// answer).  Routes through the mixed-precision path (narrow storage,
+    /// wide recovery, `DESIGN.md` §17) when [`ClusterConfig::mixed_precision`]
+    /// is on and the engine/dtype/method combination qualifies; otherwise —
+    /// including under `--no-mixed` — runs bit-identically to the uniform
+    /// wide solve.
     pub fn solve<S: Scalar>(&self, workload: Workload, n: usize, method: Method) -> Result<SolveReport> {
-        if matches!(
-            method,
-            Method::Cholesky | Method::Iterative(IterMethod::Cg | IterMethod::PipeCg)
-        ) && !workload.is_spd()
-        {
-            return Err(Error::config(format!(
-                "{} requires an SPD workload, got {workload:?}",
-                method.name()
-            )));
+        validate_method(workload, method)?;
+        if mixed_engaged::<S>(&self.cfg, method) {
+            self.solve_mixed::<S>(workload, n, method)
+        } else {
+            self.solve_uniform::<S>(workload, n, method)
         }
+    }
+
+    /// The uniform-precision solve: everything — storage, arithmetic, wire
+    /// — at `S`.
+    fn solve_uniform<S: Scalar>(
+        &self,
+        workload: Workload,
+        n: usize,
+        method: Method,
+    ) -> Result<SolveReport> {
         let cfg = &self.cfg;
         let shape = MeshShape::near_square(cfg.ranks);
         // Shared engine: constructed once, used by all rank threads (each
@@ -255,6 +375,167 @@ impl Cluster {
         ))
     }
 
+    /// The mixed-precision solve: ONE narrow world (`World::run::<S::Lo>`)
+    /// whose storage, kernels and wire traffic run at `S::Lo`, with the
+    /// wide recovery carried by locally-constructed f64 shadows — built
+    /// from the *same* f64 workload generators the narrow operands were
+    /// demoted from, so no wide redistribution is ever needed.  Direct
+    /// methods run factored-narrow + refined-wide
+    /// ([`plu_solve_refined`]/[`pchol_solve_refined`]); CG/BiCGSTAB run
+    /// the f64-accumulate variants.  A refinement that misses its
+    /// backward-error bound (or a narrow breakdown / non-convergence —
+    /// both SPMD-deterministic, so every rank takes the exit together)
+    /// falls back to the uniform wide solve, and the report then carries
+    /// **both** runs' per-rank bills summed ([`RankMetrics::absorb`]).
+    fn solve_mixed<S: Scalar>(
+        &self,
+        workload: Workload,
+        n: usize,
+        method: Method,
+    ) -> Result<SolveReport> {
+        let cfg = &self.cfg;
+        let shape = MeshShape::near_square(cfg.ranks);
+        let engine: Arc<dyn Engine<S::Lo>> =
+            make_engine(cfg.engine, cfg.tile, self.runtime.as_ref())?;
+        let iter_cfg = cfg.iter;
+        let tile = cfg.tile;
+        let (residency, device_mem, prefetch, gpudirect) =
+            (cfg.residency, cfg.device_mem, cfg.prefetch, cfg.gpudirect);
+
+        // (metrics, local worst error, iter stats, refine sweeps, converged)
+        type MixedOut = (RankMetrics, f64, Option<(usize, f64, bool)>, usize, bool);
+        let results =
+            World::run::<S::Lo, Result<MixedOut>, _>(cfg.ranks, cfg.net, move |comm| {
+                let mesh = Mesh::new(&comm, shape);
+                let ctx = if residency {
+                    Ctx::with_device_mem(&mesh, engine.clone(), device_mem)
+                        .with_prefetch(prefetch)
+                        .with_gpudirect(gpudirect)
+                } else {
+                    Ctx::streaming(&mesh, engine.clone())
+                };
+                let desc = Descriptor::new(n, n, tile, shape);
+                let a_lo = DistMatrix::from_fn(
+                    desc,
+                    mesh.row(),
+                    mesh.col(),
+                    workload.elem::<S::Lo>(n),
+                );
+                comm.clock().reset();
+                let wall = crate::util::Stopwatch::start();
+
+                let (err, iter_stats, sweeps, ok) = match method {
+                    Method::Lu | Method::Cholesky => {
+                        let a_hi = DistMatrix::from_fn(
+                            desc,
+                            mesh.row(),
+                            mesh.col(),
+                            workload.elem::<LoHi<S>>(n),
+                        );
+                        let b_hi = DistVector::from_fn(
+                            desc,
+                            mesh.row(),
+                            mesh.col(),
+                            workload.rhs::<LoHi<S>>(n),
+                        );
+                        let mut a = a_lo;
+                        let solved = if method == Method::Lu {
+                            plu_solve_refined(&ctx, &mut a, &a_hi, &b_hi)
+                        } else {
+                            pchol_solve_refined(&ctx, &mut a, &a_hi, &b_hi)
+                        };
+                        match solved {
+                            Ok((x_hi, st)) => {
+                                let err = local_worst_err(&x_hi, workload, n);
+                                (err, None, st.sweeps, st.converged)
+                            }
+                            // A narrow zero pivot / lost definiteness: the
+                            // wide fallback will handle it.
+                            Err(Error::Breakdown { .. }) => (f64::INFINITY, None, 0, false),
+                            Err(e) => return Err(e),
+                        }
+                    }
+                    Method::Iterative(m) => {
+                        let b_lo = DistVector::from_fn(
+                            desc,
+                            mesh.row(),
+                            mesh.col(),
+                            workload.rhs::<S::Lo>(n),
+                        );
+                        let solved = match m {
+                            IterMethod::Cg => cg_mixed(&ctx, &a_lo, &b_lo, &iter_cfg),
+                            IterMethod::Bicgstab => {
+                                bicgstab_mixed(&ctx, &a_lo, &b_lo, &iter_cfg)
+                            }
+                            _ => unreachable!("gate admits CG/BiCGSTAB only"),
+                        };
+                        match solved {
+                            Ok((x, st)) => {
+                                let err = local_worst_err(&x, workload, n);
+                                let stats = Some((
+                                    st.iterations,
+                                    st.rel_residual.to_f64().unwrap_or(f64::NAN),
+                                    st.converged,
+                                ));
+                                (err, stats, 0, st.converged)
+                            }
+                            // Narrow storage can cap the attainable
+                            // residual short of a tight tolerance.
+                            Err(
+                                Error::Breakdown { .. } | Error::NoConvergence { .. },
+                            ) => (f64::INFINITY, None, 0, false),
+                            Err(e) => return Err(e),
+                        }
+                    }
+                };
+                let metrics = RankMetrics::capture(&comm, wall.secs());
+                Ok((metrics, err, iter_stats, sweeps, ok))
+            });
+
+        let mut per_rank = Vec::with_capacity(cfg.ranks);
+        let mut max_err = 0.0f64;
+        let mut iter_stats = None;
+        let mut sweeps = 0usize;
+        let mut ok = true;
+        for r in results {
+            let (m, e, st, s, o) = r?;
+            per_rank.push(m);
+            max_err = max_err.max(e);
+            if st.is_some() {
+                iter_stats = st;
+            }
+            sweeps = sweeps.max(s);
+            ok &= o;
+        }
+
+        if !ok {
+            // The narrow gamble lost: re-run wide and bill both attempts.
+            let mut report = self.solve_uniform::<S>(workload, n, method)?;
+            for (wide, narrow) in report.per_rank.iter_mut().zip(&per_rank) {
+                wide.absorb(narrow);
+            }
+            return Ok(report.with_mixed(sweeps, 0, true));
+        }
+
+        // Every payload of the narrow world would have shipped at S::BYTES
+        // under the uniform solve; what it saved is the width ratio minus
+        // the bytes actually sent.  (Slight overcount: the refinement's few
+        // Payload::Hi legs are already wide.)
+        let ratio = (S::BYTES / <S::Lo as Scalar>::BYTES) as u64;
+        let bytes_saved: u64 = per_rank.iter().map(|m| m.bytes * (ratio - 1)).sum();
+        Ok(SolveReport::new(
+            method.name(),
+            workload,
+            n,
+            cfg.ranks,
+            cfg.engine,
+            per_rank,
+            max_err,
+            iter_stats,
+        )
+        .with_mixed(sweeps, bytes_saved, false))
+    }
+
     /// Solve `A X = B` for a whole batch of `k = coeffs.len()` right-hand
     /// sides sharing one operator: `b_j = coeffs[j] · b` (so the known
     /// answer is `x_j = coeffs[j] · x_true`) with per-request tolerance
@@ -273,6 +554,26 @@ impl Cluster {
         coeffs: &[f64],
         tols: &[f64],
     ) -> Result<SolveReport> {
+        self.solve_batch_cached::<S>(workload, n, method, coeffs, tols, false)
+    }
+
+    /// [`Cluster::solve_batch`] with the cross-request factor cache: when
+    /// `use_cache` is on and a prior cached batch on this cluster factored
+    /// the same `(workload, n, method, dtype)` operator, the factor tiles
+    /// (and pivots / transposed factor) are restored for free — the factors
+    /// are already resident from the earlier request — and only the
+    /// substitutions are charged.  The substitution sequence is identical
+    /// either way, so a hit returns bit-identical solutions.  A miss runs
+    /// the full solve and populates the cache for the next request.
+    pub fn solve_batch_cached<S: Scalar>(
+        &self,
+        workload: Workload,
+        n: usize,
+        method: Method,
+        coeffs: &[f64],
+        tols: &[f64],
+        use_cache: bool,
+    ) -> Result<SolveReport> {
         let k = coeffs.len();
         if k == 0 || tols.len() != k {
             return Err(Error::config(format!(
@@ -281,16 +582,13 @@ impl Cluster {
                 tols.len()
             )));
         }
-        if matches!(
-            method,
-            Method::Cholesky | Method::Iterative(IterMethod::Cg | IterMethod::PipeCg)
-        ) && !workload.is_spd()
-        {
-            return Err(Error::config(format!(
-                "{} requires an SPD workload, got {workload:?}",
-                method.name()
-            )));
-        }
+        validate_method(workload, method)?;
+        let cacheable = matches!(method, Method::Lu | Method::Cholesky);
+        let key: FactorKey = (workload, n, method.name(), S::DTYPE);
+        let cached: Option<Arc<CachedFactor>> =
+            if use_cache && cacheable { self.factor_cache.get(&key) } else { None };
+        let hit = cached.is_some();
+        let exporting = use_cache && cacheable && !hit;
         let cfg = &self.cfg;
         let shape = MeshShape::near_square(cfg.ranks);
         let engine: Arc<dyn Engine<S>> =
@@ -302,8 +600,14 @@ impl Cluster {
         let coeffs_owned: Vec<f64> = coeffs.to_vec();
         let tols_owned: Vec<f64> = tols.to_vec();
 
-        type BatchOut<S> =
-            (RankMetrics, Option<Vec<Vec<S>>>, Option<Vec<(usize, f64, bool)>>, Vec<f64>);
+        type Exported = (Vec<Vec<f64>>, Option<Vec<Vec<f64>>>, Vec<(usize, usize)>);
+        type BatchOut<S> = (
+            RankMetrics,
+            Option<Vec<Vec<S>>>,
+            Option<Vec<(usize, f64, bool)>>,
+            Vec<f64>,
+            Option<Exported>,
+        );
         let results = World::run::<S, Result<BatchOut<S>>, _>(cfg.ranks, cfg.net, move |comm| {
             let mesh = Mesh::new(&comm, shape);
             let ctx = if residency {
@@ -326,22 +630,82 @@ impl Cluster {
             comm.clock().reset();
             let wall = crate::util::Stopwatch::start();
 
-            let (x, col_stats): (DistMultiVector<S>, Option<Vec<IterStats<S>>>) = match method {
+            type Solved<S> =
+                (DistMultiVector<S>, Option<Vec<IterStats<S>>>, Option<Exported>);
+            let (x, col_stats, export): Solved<S> = match method {
                 Method::Lu => {
                     let mut a = a0;
-                    (plu_solve_panel(&ctx, &mut a, &b)?, None)
+                    let (x, swaps) = match cached.as_deref() {
+                        Some(cf) => {
+                            // Restore is free: the factors are resident
+                            // from the request that populated the cache.
+                            restore_tiles(&mut a, &cf.tiles[comm.rank()]);
+                            let piv = PivotMap::from_swaps(cf.swaps.clone());
+                            let mut x = b.clone_panel();
+                            for j in 0..x.ncols() {
+                                ctx.set_tenant(Some(j));
+                                apply_pivots(&ctx, &piv, x.col_mut(j));
+                                ctx.set_tenant(None);
+                            }
+                            ptrsm(&ctx, &a, &mut x, TriKind::LowerUnit)?;
+                            ptrsm(&ctx, &a, &mut x, TriKind::Upper)?;
+                            (x, Vec::new())
+                        }
+                        // [`plu_solve_panel`] inlined so the pivot map and
+                        // factored tiles survive for export.
+                        None => {
+                            let piv = plu_factor(&ctx, &mut a)?;
+                            let mut x = b.clone_panel();
+                            for j in 0..x.ncols() {
+                                ctx.set_tenant(Some(j));
+                                apply_pivots(&ctx, &piv, x.col_mut(j));
+                                ctx.set_tenant(None);
+                            }
+                            ptrsm(&ctx, &a, &mut x, TriKind::LowerUnit)?;
+                            ptrsm(&ctx, &a, &mut x, TriKind::Upper)?;
+                            (x, piv.swaps().to_vec())
+                        }
+                    };
+                    let export = exporting.then(|| (export_tiles(&a), None, swaps));
+                    (x, None, export)
                 }
                 Method::Cholesky => {
                     let mut a = a0;
-                    (pchol_solve_panel(&ctx, &mut a, &b)?, None)
+                    let (x, lt) = match cached.as_deref() {
+                        Some(cf) => {
+                            restore_tiles(&mut a, &cf.tiles[comm.rank()]);
+                            let mut lt = DistMatrix::zeros(desc, mesh.row(), mesh.col());
+                            let saved_lt =
+                                cf.lt_tiles.as_ref().expect("Cholesky cache carries L^T");
+                            restore_tiles(&mut lt, &saved_lt[comm.rank()]);
+                            let mut x = b.clone_panel();
+                            ptrsm(&ctx, &a, &mut x, TriKind::Lower)?;
+                            // Cached L^T also skips the
+                            // transpose-redistribution.
+                            ptrsm(&ctx, &lt, &mut x, TriKind::Upper)?;
+                            (x, lt)
+                        }
+                        // [`pchol_solve_panel`] inlined to keep L and L^T.
+                        None => {
+                            pchol_factor(&ctx, &mut a)?;
+                            let mut x = b.clone_panel();
+                            ptrsm(&ctx, &a, &mut x, TriKind::Lower)?;
+                            let lt = ptranspose(ctx.mesh, &a);
+                            ptrsm(&ctx, &lt, &mut x, TriKind::Upper)?;
+                            (x, lt)
+                        }
+                    };
+                    let export = exporting
+                        .then(|| (export_tiles(&a), Some(export_tiles(&lt)), Vec::new()));
+                    (x, None, export)
                 }
                 Method::Iterative(IterMethod::Cg) => {
                     let (x, st) = block_cg(&ctx, &a0, &b, &iter_cfg, &tols_owned)?;
-                    (x, Some(st))
+                    (x, Some(st), None)
                 }
                 Method::Iterative(IterMethod::Bicgstab) => {
                     let (x, st) = block_bicgstab(&ctx, &a0, &b, &iter_cfg, &tols_owned)?;
-                    (x, Some(st))
+                    (x, Some(st), None)
                 }
                 Method::Iterative(m) => {
                     // No blocked variant: loop single-RHS solves, tagging
@@ -363,7 +727,7 @@ impl Cluster {
                         cols.push(x);
                         st.push(s);
                     }
-                    (DistMultiVector::from_cols(cols), Some(st))
+                    (DistMultiVector::from_cols(cols), Some(st), None)
                 }
             };
             let metrics = RankMetrics::capture(&comm, wall.secs());
@@ -380,15 +744,17 @@ impl Cluster {
                     })
                     .collect()
             });
-            Ok((metrics, gathered, col_stats, ctx.attribution()))
+            Ok((metrics, gathered, col_stats, ctx.attribution(), export))
         });
 
         let mut per_rank = Vec::with_capacity(cfg.ranks);
         let mut solution: Option<Vec<Vec<S>>> = None;
         let mut col_stats: Option<Vec<(usize, f64, bool)>> = None;
         let mut attribution = vec![0.0f64; k + 1];
+        let mut exports: Vec<(Vec<Vec<f64>>, Option<Vec<Vec<f64>>>, Vec<(usize, usize)>)> =
+            Vec::new();
         for r in results {
-            let (m, sol, st, attr) = r?;
+            let (m, sol, st, attr, exp) = r?;
             per_rank.push(m);
             if sol.is_some() {
                 solution = sol;
@@ -399,6 +765,20 @@ impl Cluster {
             for (acc, v) in attribution.iter_mut().zip(attr) {
                 *acc += v;
             }
+            if let Some(e) = exp {
+                exports.push(e);
+            }
+        }
+        if exporting && exports.len() == cfg.ranks {
+            // Results arrive in rank order; swaps are rank-replicated.
+            let swaps = exports[0].2.clone();
+            let lt_tiles: Option<Vec<Vec<Vec<f64>>>> = if exports[0].1.is_some() {
+                Some(exports.iter_mut().map(|e| e.1.take().unwrap()).collect())
+            } else {
+                None
+            };
+            let tiles = exports.into_iter().map(|e| e.0).collect();
+            self.factor_cache.put(key, CachedFactor { tiles, lt_tiles, swaps });
         }
         let solution = solution.expect("rank 0 gathers the solution");
         let xt = workload.x_true::<S>(n);
@@ -425,7 +805,64 @@ impl Cluster {
             max_err,
             iter_stats,
         )
-        .with_batch(k, attribution))
+        .with_batch(k, attribution)
+        .with_factor_cached(hit))
+    }
+}
+
+/// Reject method/workload combinations with no mathematical meaning.
+fn validate_method(workload: Workload, method: Method) -> Result<()> {
+    if matches!(
+        method,
+        Method::Cholesky | Method::Iterative(IterMethod::Cg | IterMethod::PipeCg)
+    ) && !workload.is_spd()
+    {
+        return Err(Error::config(format!(
+            "{} requires an SPD workload, got {workload:?}",
+            method.name()
+        )));
+    }
+    Ok(())
+}
+
+/// This rank's worst solution error against the workload's known answer,
+/// over the vector blocks it holds.  The mixed path checks errors per rank
+/// (and maxes host-side) because its wide solution vector cannot ride the
+/// narrow-typed world's gather.
+fn local_worst_err<T: Scalar>(x: &DistVector<T>, workload: Workload, n: usize) -> f64 {
+    let desc = *x.desc();
+    let t = desc.tile;
+    let xt = workload.x_true::<f64>(n);
+    let mut worst = 0.0f64;
+    for l in 0..x.local_blocks() {
+        let base = desc.global_ti(x.prow(), l) * t;
+        for (i, &v) in x.block(l).iter().enumerate() {
+            let g = base + i;
+            if g < n {
+                worst = worst.max((v.to_f64().unwrap() - xt(g)).abs());
+            }
+        }
+    }
+    worst
+}
+
+/// Snapshot a rank's owned tiles as f64 (exact for all supported dtypes),
+/// in [`DistMatrix::owned_tiles`] order.
+fn export_tiles<S: Scalar>(a: &DistMatrix<S>) -> Vec<Vec<f64>> {
+    a.owned_tiles()
+        .map(|(lti, ltj, _, _)| a.tile(lti, ltj).iter().map(|v| v.to_f64().unwrap()).collect())
+        .collect()
+}
+
+/// Overwrite a rank's owned tiles from a [`FactorCache`] snapshot.  The
+/// f64 round-trip is exact, so a restored factor is bit-identical to the
+/// one that was exported.
+fn restore_tiles<S: Scalar>(a: &mut DistMatrix<S>, saved: &[Vec<f64>]) {
+    let idx: Vec<(usize, usize)> = a.owned_tiles().map(|(lti, ltj, _, _)| (lti, ltj)).collect();
+    for ((lti, ltj), src) in idx.into_iter().zip(saved) {
+        for (dst, &v) in a.tile_mut(lti, ltj).iter_mut().zip(src) {
+            *dst = S::from_f64(v).unwrap();
+        }
     }
 }
 
@@ -505,5 +942,79 @@ mod tests {
         assert!(report.max_err < 1e-6, "max_err {}", report.max_err);
         let (iters, _res, conv) = report.iter_stats.unwrap();
         assert!(conv && iters > 0);
+    }
+
+    #[test]
+    fn mixed_gate_needs_profile_dtype_and_method() {
+        // Host arm: SSE2 double throughput equals single and nothing
+        // streams over PCIe — no advantage, gate closed.
+        let host = ClusterConfig::small(2, 8);
+        assert!(!mixed_engaged::<f64>(&host, Method::Lu));
+        // CUDA arm: every qualifying method opens it...
+        let cuda =
+            ClusterConfig { engine: EngineKind::Accelerated, ..ClusterConfig::small(2, 8) };
+        assert!(mixed_engaged::<f64>(&cuda, Method::Lu));
+        assert!(mixed_engaged::<f64>(&cuda, Method::Cholesky));
+        assert!(mixed_engaged::<f64>(&cuda, Method::Iterative(IterMethod::Cg)));
+        assert!(mixed_engaged::<f64>(&cuda, Method::Iterative(IterMethod::Bicgstab)));
+        // ...but f32 has no narrower storage to drop to, GMRES has no
+        // wide-recovery story, and --no-mixed closes it outright.
+        assert!(!mixed_engaged::<f32>(&cuda, Method::Lu));
+        assert!(!mixed_engaged::<f64>(&cuda, Method::Iterative(IterMethod::Gmres)));
+        let off = ClusterConfig { mixed_precision: false, ..cuda };
+        assert!(!mixed_engaged::<f64>(&off, Method::Lu));
+    }
+
+    #[test]
+    fn no_mixed_is_bit_identical_when_the_gate_is_closed() {
+        let on = Cluster::new(ClusterConfig::small(2, 8)).unwrap();
+        let off = Cluster::new(ClusterConfig {
+            mixed_precision: false,
+            ..ClusterConfig::small(2, 8)
+        })
+        .unwrap();
+        let a = on.solve::<f64>(Workload::DiagDominant, 24, Method::Lu).unwrap();
+        let b = off.solve::<f64>(Workload::DiagDominant, 24, Method::Lu).unwrap();
+        assert_eq!(a.max_err.to_bits(), b.max_err.to_bits());
+        assert_eq!(a.makespan(), b.makespan());
+        assert_eq!(a.refine_iters, 0);
+        assert_eq!(a.bytes_saved_mixed, 0);
+        assert!(!a.mixed_fallback);
+    }
+
+    #[test]
+    fn factor_cache_hit_prices_only_the_substitutions() {
+        for (workload, method) in
+            [(Workload::DiagDominant, Method::Lu), (Workload::Spd, Method::Cholesky)]
+        {
+            let cluster = Cluster::new(ClusterConfig::small(2, 8)).unwrap();
+            let args = (&[1.0, 1.5][..], &[1e-8; 2][..]);
+            let miss = cluster
+                .solve_batch_cached::<f64>(workload, 24, method, args.0, args.1, true)
+                .unwrap();
+            assert!(!miss.factor_cached);
+            assert_eq!(cluster.factor_cache().len(), 1);
+            let hit = cluster
+                .solve_batch_cached::<f64>(workload, 24, method, args.0, args.1, true)
+                .unwrap();
+            assert!(hit.factor_cached);
+            assert_eq!(cluster.factor_cache().len(), 1);
+            // The restored factor is bit-identical, so the substitutions
+            // produce the same solution — for strictly less virtual time.
+            assert_eq!(hit.max_err.to_bits(), miss.max_err.to_bits());
+            assert!(
+                hit.makespan() < miss.makespan(),
+                "{}: hit {} vs miss {}",
+                method.name(),
+                hit.makespan(),
+                miss.makespan()
+            );
+        }
+        // Without opting in, nothing is cached and nothing is restored.
+        let plain = Cluster::new(ClusterConfig::small(2, 8)).unwrap();
+        let rep = plain
+            .solve_batch::<f64>(Workload::DiagDominant, 24, Method::Lu, &[1.0], &[1e-8])
+            .unwrap();
+        assert!(plain.factor_cache().is_empty() && !rep.factor_cached);
     }
 }

@@ -34,6 +34,12 @@ pub enum Payload<S: Scalar> {
     Scalar(S),
     /// Integer data (pivot vectors, dimensions).
     Ints(Vec<i64>),
+    /// Wide-accumulation data: `S::Hi` values crossing a world whose
+    /// working dtype is `S`.  The mixed-precision refinement loop runs in
+    /// the *reduced* dtype's world but must ship its f64 solution vector
+    /// between ranks for the residual — this variant prices those elements
+    /// at the wide width instead of `S::BYTES`.
+    Hi(Vec<<S as Scalar>::Hi>),
     /// Empty (barrier tokens).
     Empty,
 }
@@ -46,6 +52,7 @@ impl<S: Scalar> Payload<S> {
             Payload::Data(v) => v.len() * S::BYTES,
             Payload::Scalar(_) => S::BYTES,
             Payload::Ints(v) => v.len() * 8,
+            Payload::Hi(v) => v.len() * <S::Hi as Scalar>::BYTES,
             Payload::Empty => 0,
         }
     }
@@ -72,6 +79,14 @@ impl<S: Scalar> Payload<S> {
         match self {
             Payload::Ints(v) => v,
             other => panic!("expected Payload::Ints, got {other:?}"),
+        }
+    }
+
+    /// Unwrap `Hi`.
+    pub fn into_hi(self) -> Vec<<S as Scalar>::Hi> {
+        match self {
+            Payload::Hi(v) => v,
+            other => panic!("expected Payload::Hi, got {other:?}"),
         }
     }
 }
@@ -106,6 +121,11 @@ mod tests {
         assert_eq!(p.wire_bytes(), 24);
         let p: Payload<f32> = Payload::Empty;
         assert_eq!(p.wire_bytes(), 0);
+        // Hi elements always price at the wide width, even in an f32 world.
+        let p: Payload<f32> = Payload::Hi(vec![0.0f64; 10]);
+        assert_eq!(p.wire_bytes(), 80);
+        let p: Payload<f64> = Payload::Hi(vec![0.0f64; 10]);
+        assert_eq!(p.wire_bytes(), 80);
     }
 
     #[test]
@@ -116,6 +136,8 @@ mod tests {
         assert_eq!(p.into_scalar(), 3.0);
         let p: Payload<f64> = Payload::Ints(vec![7]);
         assert_eq!(p.into_ints(), vec![7]);
+        let p: Payload<f32> = Payload::Hi(vec![1.5f64]);
+        assert_eq!(p.into_hi(), vec![1.5f64]);
     }
 
     #[test]

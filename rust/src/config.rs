@@ -11,6 +11,7 @@
 //! device_mem = 1073741824  # residency budget, bytes (GTX 280 = 1 GiB)
 //! prefetch = true        # copy-engine timeline (false = synchronous PCIe)
 //! gpudirect = true       # device-to-NIC wire (false = host-staged sends)
+//! mixed_precision = true # f32 factor + f64 refine (false = uniform wide)
 //!
 //! [network]
 //! alpha_us = 50
@@ -118,6 +119,7 @@ impl Config {
             device_mem: self.get_or("cluster.device_mem", crate::accel::DEFAULT_DEVICE_MEM)?,
             prefetch: self.get_or("cluster.prefetch", true)?,
             gpudirect: self.get_or("cluster.gpudirect", true)?,
+            mixed_precision: self.get_or("cluster.mixed_precision", true)?,
             iter: IterConfig {
                 tol: self.get_or("solver.tol", 1e-8)?,
                 max_iter: self.get_or("solver.max_iter", 500)?,
@@ -172,6 +174,17 @@ tol = 1e-6
         assert_eq!(cc.device_mem, crate::accel::DEFAULT_DEVICE_MEM);
         assert!(cc.prefetch, "the copy-engine timeline defaults on");
         assert!(cc.gpudirect, "the GPUDirect wire defaults on");
+        assert!(cc.mixed_precision, "mixed precision defaults on");
+    }
+
+    #[test]
+    fn mixed_precision_override() {
+        let c = Config::parse("[cluster]\nmixed_precision = false\n").unwrap();
+        assert!(!c.cluster_config().unwrap().mixed_precision);
+        assert!(Config::parse("[cluster]\nmixed_precision = sometimes\n")
+            .unwrap()
+            .cluster_config()
+            .is_err());
     }
 
     #[test]

@@ -108,14 +108,70 @@ pub trait Scalar:
     const DTYPE: &'static str;
     /// Bytes per element (for the network / PCIe cost models).
     const BYTES: usize;
+    /// The reduced-precision companion dtype: what a mixed-precision solve
+    /// stores, computes and communicates in.  `f32` for `f64`; `f32` is its
+    /// own floor (`Lo = Self`), which is how the mixed path detects "no
+    /// narrower dtype exists" (`Lo::BYTES == BYTES`) and degenerates to the
+    /// uniform-precision flow.
+    type Lo: Scalar;
+    /// The wide accumulation dtype: residuals, dot products and recurrence
+    /// scalars accumulate here.  `f64` for both `f32` and `f64`.
+    type Hi: Scalar;
+    /// Unit roundoff u = 2^-(mantissa bits + 1): the backward-error yard-
+    /// stick the iterative-refinement loop converges against.
+    const UNIT_ROUNDOFF: f64;
+    /// Narrow to the storage/wire dtype (rounds to nearest).
+    fn demote(self) -> Self::Lo;
+    /// Widen a reduced-precision value back (exact).
+    fn promote(lo: Self::Lo) -> Self;
+    /// Widen to the accumulation dtype (exact).
+    fn to_hi(self) -> Self::Hi;
+    /// Narrow an accumulated value to the working dtype.
+    fn from_hi(h: Self::Hi) -> Self;
 }
 
 impl Scalar for f32 {
     const DTYPE: &'static str = "f32";
     const BYTES: usize = 4;
+    type Lo = f32;
+    type Hi = f64;
+    const UNIT_ROUNDOFF: f64 = f32::EPSILON as f64 / 2.0;
+    fn demote(self) -> f32 {
+        self
+    }
+    fn promote(lo: f32) -> f32 {
+        lo
+    }
+    fn to_hi(self) -> f64 {
+        self as f64
+    }
+    fn from_hi(h: f64) -> f32 {
+        h as f32
+    }
 }
 
 impl Scalar for f64 {
     const DTYPE: &'static str = "f64";
     const BYTES: usize = 8;
+    type Lo = f32;
+    type Hi = f64;
+    const UNIT_ROUNDOFF: f64 = f64::EPSILON / 2.0;
+    fn demote(self) -> f32 {
+        self as f32
+    }
+    fn promote(lo: f32) -> f64 {
+        lo as f64
+    }
+    fn to_hi(self) -> f64 {
+        self
+    }
+    fn from_hi(h: f64) -> f64 {
+        h
+    }
+}
+
+/// Whether `S` has a strictly narrower storage dtype to mix down to.
+/// `f64` does (`f32`); `f32` is already the floor.
+pub fn mixed_capable<S: Scalar>() -> bool {
+    <S::Lo as Scalar>::BYTES < S::BYTES
 }

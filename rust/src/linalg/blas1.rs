@@ -68,6 +68,44 @@ pub fn nrm2<S: Scalar>(x: &[S]) -> S {
     dot(x, x).sqrt()
 }
 
+/// Inner product `x . y` with every product and the running sums carried in
+/// the wide dtype `S::Hi` — the f64-accumulate arm of the mixed-precision
+/// Krylov kernels.  Same 4-way unrolled association as [`dot`], so for
+/// `S = f64` (where `Hi = S`) it reproduces [`dot`] bit for bit.
+pub fn dot_hi<S: Scalar>(x: &[S], y: &[S]) -> S::Hi {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let zero = <S::Hi as num_traits::Zero>::zero();
+    let (mut a0, mut a1, mut a2, mut a3) = (zero, zero, zero, zero);
+    for c in 0..chunks {
+        let i = c * 4;
+        a0 += x[i].to_hi() * y[i].to_hi();
+        a1 += x[i + 1].to_hi() * y[i + 1].to_hi();
+        a2 += x[i + 2].to_hi() * y[i + 2].to_hi();
+        a3 += x[i + 3].to_hi() * y[i + 3].to_hi();
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    for i in chunks * 4..n {
+        acc += x[i].to_hi() * y[i].to_hi();
+    }
+    acc
+}
+
+/// Fused `y += alpha * x; ⟨y, y⟩` with the norm accumulated in `S::Hi`:
+/// the update stays in the storage dtype (that is what ships over the
+/// wire), only the reduction rides the wide accumulator.
+pub fn axpy_norm2_hi<S: Scalar>(alpha: S, x: &[S], y: &mut [S]) -> S::Hi {
+    axpy(alpha, x, y);
+    dot_hi(y, y)
+}
+
+/// Fused `(⟨x, x⟩, ⟨x, y⟩)` with both lanes accumulated in `S::Hi`; each
+/// lane is the plain [`dot_hi`] bit for bit.
+pub fn norm2_dot_hi<S: Scalar>(x: &[S], y: &[S]) -> (S::Hi, S::Hi) {
+    (dot_hi(x, x), dot_hi(x, y))
+}
+
 /// Index of the element with the largest absolute value (first on ties).
 pub fn iamax<S: Scalar>(x: &[S]) -> usize {
     let mut best = 0usize;
@@ -138,6 +176,28 @@ mod tests {
         assert_eq!(c, d);
         // norm2_dot lanes are the plain dots.
         assert_eq!(norm2_dot(&x, &y0), (dot(&x, &x), dot(&x, &y0)));
+    }
+
+    #[test]
+    fn hi_accumulate_is_dot_bitwise_for_f64_and_tighter_for_f32() {
+        // f64: Hi = Self, so the wide kernel IS the plain kernel.
+        let x: Vec<f64> = (0..41).map(|i| (i as f64 * 0.7).sin()).collect();
+        let y: Vec<f64> = (0..41).map(|i| (i as f64 * 1.3).cos()).collect();
+        assert_eq!(dot_hi(&x, &y), dot(&x, &y));
+        assert_eq!(norm2_dot_hi(&x, &y), norm2_dot(&x, &y));
+        let mut a = y.clone();
+        let mut b = y.clone();
+        assert_eq!(axpy_norm2_hi(0.25, &x, &mut a), axpy_norm2(0.25, &x, &mut b));
+        assert_eq!(a, b);
+        // f32 storage: the wide accumulator must land closer to the exact
+        // (f64) answer than the f32 chain on a cancellation-heavy input.
+        let xs: Vec<f32> = (0..10_001).map(|i| if i % 2 == 0 { 1.0e3 } else { -1.0e3 }).collect();
+        let ys: Vec<f32> = (0..10_001).map(|i| 1.0 + (i as f32) * 1.0e-4).collect();
+        let exact: f64 = xs.iter().zip(&ys).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let wide = dot_hi(&xs, &ys);
+        let narrow = dot(&xs, &ys) as f64;
+        assert!((wide - exact).abs() <= (narrow - exact).abs());
+        assert!((wide - exact).abs() < 1e-6 * exact.abs().max(1.0));
     }
 
     #[test]

@@ -4,9 +4,9 @@
 //! cuplss solve  --workload diagdom --method lu --n 512 --ranks 4 \
 //!               --engine atlas|cuda --tile 128|256 --dtype f32|f64 \
 //!               [--streaming] [--no-prefetch] [--no-gpudirect] \
-//!               [--device-mem BYTES]
+//!               [--no-mixed] [--device-mem BYTES]
 //! cuplss serve  [--requests 16] [--n 192] [--ranks 4] [--rhs-batch 8] \
-//!               [--no-batching]                       # solve-request scheduler
+//!               [--no-batching] [--no-factor-cache]   # solve-request scheduler
 //! cuplss fig3   [--dp] [--n 60000] [--iters 100]      # model-mode Figure 3
 //! cuplss fig4   [--dp] [--n 60000] [--cholesky]       # model-mode Figure 4
 //! cuplss calibrate [--method lu]                      # live vs model (E8)
@@ -80,6 +80,14 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
     // device-to-NIC wire (DESIGN.md §16); results are bit-identical.
     if args.has_flag("no-gpudirect") {
         cfg.gpudirect = false;
+    }
+    // --no-mixed runs uniform wide precision — the A/B arm for the
+    // f32-factor + f64-refine / f64-accumulate-Krylov path (DESIGN.md §17).
+    // Unlike the transfer knobs this one *could* change results (different
+    // rounding), which is exactly why it exists: the mixed path's claim is
+    // that it does not change them beyond the refined backward-error bound.
+    if args.has_flag("no-mixed") {
+        cfg.mixed_precision = false;
     }
     cfg.device_mem = args.opt_or("device-mem", cfg.device_mem)?;
     Ok(cfg)
@@ -158,6 +166,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let scfg = ServeConfig {
         rhs_batch: args.opt_or("rhs-batch", 8)?,
         batching: !args.has_flag("no-batching"),
+        factor_cache: !args.has_flag("no-factor-cache"),
     };
     let cluster = Cluster::new(cfg)?;
     let stream = demo_stream(n_requests, base_n);

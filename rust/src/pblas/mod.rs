@@ -25,10 +25,11 @@ pub use pgemm::pgemm_acc;
 pub use pgemv::{pgemv, pgemv_cols, pgemv_t};
 pub use pspmv::{pspmv, pspmv_halo, pspmv_t, pspmv_t_halo};
 pub use pvec::{
-    paxpy, paxpy_cols, pcopy, pdot, pdot_cols, pdot_partial, pfused_axpy_norm2,
-    pfused_axpy_norm2_cols, pfused_axpy_norm2_dot, pfused_axpy_norm2_dot_cols,
-    pfused_norm2_dot, pfused_norm2_dot_cols, pfused_norm2_dot_partial, pnorm2, pnorm2_cols,
-    pscal, pxpay, pxpay_cols,
+    paxpy, paxpy_cols, pcopy, pdot, pdot_cols, pdot_hi, pdot_partial, pdot_partial_hi,
+    pfused_axpy_norm2, pfused_axpy_norm2_cols, pfused_axpy_norm2_dot,
+    pfused_axpy_norm2_dot_cols, pfused_axpy_norm2_dot_hi, pfused_axpy_norm2_hi,
+    pfused_norm2_dot, pfused_norm2_dot_cols, pfused_norm2_dot_hi, pfused_norm2_dot_partial,
+    pnorm2, pnorm2_cols, pnorm2_hi, pscal, pxpay, pxpay_cols,
 };
 
 use std::cell::RefCell;
@@ -68,6 +69,9 @@ pub(crate) mod tags {
     pub const HALO_PLAN: u32 = 6_100;
     /// Schur-complement interface-system scalar allreduces.
     pub const SCHUR: u32 = 6_200;
+    /// Mixed-precision refinement: the wide solution-vector ring
+    /// allgather and the backward-error reductions.
+    pub const MIXED: u32 = 6_300;
 }
 
 /// How a send payload reaches the NIC ([`Ctx::wire_read`], `DESIGN.md`

@@ -185,6 +185,115 @@ pub fn pfused_norm2_dot_partial<S: Scalar>(
     (n2, d)
 }
 
+// ---------------------------------------------------------------------------
+// Wide-accumulate (mixed-precision) variants: the same storage dtype, the
+// same fused launches and the same S-width reduction payloads as the kernels
+// above — only the *local accumulation* runs in `S::Hi` (f64), and the
+// caller's recurrence scalars stay wide.  In an f32 world this is exactly
+// the "f32 storage / f32 wire / f64 accumulate" Krylov contract; for
+// `S = f64` (`Hi = Self`, `from_hi` the identity) each variant reproduces
+// its plain twin bit for bit, which is what pins `--no-mixed` honesty.
+// The engine charge is the plain kernel's: wide accumulators live in
+// registers, touching no extra memory streams.
+// ---------------------------------------------------------------------------
+
+/// This rank's local contribution to `x . y`, accumulated in `S::Hi`.
+pub fn pdot_partial_hi<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    x: &DistVector<S>,
+    y: &DistVector<S>,
+) -> S::Hi {
+    assert_eq!(x.desc(), y.desc(), "pdot_partial_hi descriptor mismatch");
+    let mut partial = <S::Hi as num_traits::Zero>::zero();
+    for l in 0..x.local_blocks() {
+        ctx.host_read(x.block(l));
+        ctx.host_read(y.block(l));
+        // Same op, same charge as the plain kernel; the value lane rides
+        // the wide accumulator.
+        let (_, cost) = ctx.engine.dot(x.block(l), y.block(l));
+        partial += linalg::dot_hi(x.block(l), y.block(l));
+        ctx.charge(cost);
+    }
+    partial
+}
+
+/// Distributed inner product with `S::Hi` local accumulation and an
+/// `S`-width reduction payload (the wire ships the storage dtype).
+pub fn pdot_hi<S: Scalar>(ctx: &Ctx<'_, S>, x: &DistVector<S>, y: &DistVector<S>) -> S::Hi {
+    let partial = pdot_partial_hi(ctx, x, y);
+    let col = ctx.mesh.col_comm();
+    col.allreduce_scalar(tags::PDOT, S::from_hi(partial), ReduceOp::Sum).to_hi()
+}
+
+/// Distributed 2-norm with wide accumulation.
+pub fn pnorm2_hi<S: Scalar>(ctx: &Ctx<'_, S>, x: &DistVector<S>) -> S::Hi {
+    pdot_hi(ctx, x, x).sqrt()
+}
+
+/// Wide-accumulate twin of [`pfused_axpy_norm2`]: the update stays in `S`,
+/// the norm accumulates in `S::Hi`, the reduction payload is one `S`.
+pub fn pfused_axpy_norm2_hi<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    alpha: S,
+    x: &DistVector<S>,
+    y: &mut DistVector<S>,
+) -> S::Hi {
+    assert_eq!(x.desc(), y.desc(), "pfused_axpy_norm2_hi descriptor mismatch");
+    let mut partial = <S::Hi as num_traits::Zero>::zero();
+    for l in 0..x.local_blocks() {
+        partial += linalg::axpy_norm2_hi(alpha, x.block(l), y.block_mut(l));
+    }
+    charge_fused_vec(ctx, &[x, &*y], &[&*y], 4, 2 * x.local_blocks() as u64);
+    let col = ctx.mesh.col_comm();
+    col.allreduce_scalar(tags::PDOT, S::from_hi(partial), ReduceOp::Sum).to_hi()
+}
+
+/// Wide-accumulate twin of [`pfused_axpy_norm2_dot`]: one two-lane
+/// `S`-width allreduce, both lanes accumulated locally in `S::Hi`.
+pub fn pfused_axpy_norm2_dot_hi<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    alpha: S,
+    x: &DistVector<S>,
+    y: &mut DistVector<S>,
+    w: &DistVector<S>,
+) -> (S::Hi, S::Hi) {
+    assert_eq!(x.desc(), y.desc(), "pfused_axpy_norm2_dot_hi descriptor mismatch");
+    assert_eq!(w.desc(), y.desc(), "pfused_axpy_norm2_dot_hi descriptor mismatch");
+    let zero = <S::Hi as num_traits::Zero>::zero();
+    let (mut n2, mut d) = (zero, zero);
+    for l in 0..x.local_blocks() {
+        linalg::axpy(alpha, x.block(l), y.block_mut(l));
+        n2 += linalg::dot_hi(y.block(l), y.block(l));
+        d += linalg::dot_hi(w.block(l), y.block(l));
+    }
+    charge_fused_vec(ctx, &[x, w, &*y], &[&*y], 6, 3 * x.local_blocks() as u64);
+    let col = ctx.mesh.col_comm();
+    let reduced =
+        col.allreduce_vec(tags::FUSED, vec![S::from_hi(n2), S::from_hi(d)], ReduceOp::Sum);
+    (reduced[0].to_hi(), reduced[1].to_hi())
+}
+
+/// Wide-accumulate twin of [`pfused_norm2_dot`].
+pub fn pfused_norm2_dot_hi<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    x: &DistVector<S>,
+    y: &DistVector<S>,
+) -> (S::Hi, S::Hi) {
+    assert_eq!(x.desc(), y.desc(), "pfused_norm2_dot_hi descriptor mismatch");
+    let zero = <S::Hi as num_traits::Zero>::zero();
+    let (mut n2, mut d) = (zero, zero);
+    for l in 0..x.local_blocks() {
+        let (bn2, bd) = linalg::norm2_dot_hi(x.block(l), y.block(l));
+        n2 += bn2;
+        d += bd;
+    }
+    charge_fused_vec(ctx, &[x, y], &[], 4, 2 * x.local_blocks() as u64);
+    let col = ctx.mesh.col_comm();
+    let reduced =
+        col.allreduce_vec(tags::FUSED, vec![S::from_hi(n2), S::from_hi(d)], ReduceOp::Sum);
+    (reduced[0].to_hi(), reduced[1].to_hi())
+}
+
 /// Fused `y = x + beta y` — one pass instead of a scal launch plus an axpy
 /// launch per block (the `p = r + beta p` recurrence of CG and friends).
 pub fn pxpay<S: Scalar>(ctx: &Ctx<'_, S>, beta: S, x: &DistVector<S>, y: &mut DistVector<S>) {
@@ -600,6 +709,86 @@ mod tests {
                 assert!(eq, "{pr}x{pc}: batched cols differ from looped singles");
                 assert!(fused > 0, "{pr}x{pc}: batched launches must be fused-counted");
             }
+        }
+    }
+
+    #[test]
+    fn hi_kernels_reproduce_plain_kernels_bitwise_in_an_f64_world() {
+        // For S = f64, Hi = Self and from_hi is the identity: every wide
+        // kernel must BE its plain twin — same values, same wire, same
+        // clock.  This is the `--no-mixed` honesty contract at the kernel
+        // level.
+        let n = 23usize;
+        for (pr, pc) in [(1, 1), (2, 2), (2, 3)] {
+            let out = with_ctx(pr, pc, 4, move |ctx| {
+                let desc = Descriptor::new(n, n, 4, ctx.mesh.shape());
+                let mk = |f: fn(usize) -> f64| {
+                    DistVector::from_fn(desc, ctx.mesh.row(), ctx.mesh.col(), f)
+                };
+                let x = mk(|i| ((i + 1) as f64).sin());
+                let w = mk(|i| (i as f64 * 0.9).cos());
+                let mut ya = mk(|i| (i as f64).cos());
+                let mut yb = mk(|i| (i as f64).cos());
+                let d_eq = pdot_hi(ctx, &x, &w).to_bits() == pdot(ctx, &x, &w).to_bits();
+                let ra = pfused_axpy_norm2_hi(ctx, -0.375, &x, &mut ya);
+                let rb = pfused_axpy_norm2(ctx, -0.375, &x, &mut yb);
+                let (na, da) = pfused_axpy_norm2_dot_hi(ctx, 0.25, &x, &mut ya, &w);
+                let (nb, db) = pfused_axpy_norm2_dot(ctx, 0.25, &x, &mut yb, &w);
+                let (pa, qa) = pfused_norm2_dot_hi(ctx, &ya, &w);
+                let (pb, qb) = pfused_norm2_dot(ctx, &yb, &w);
+                let vec_eq = (0..ya.local_blocks()).all(|l| {
+                    ya.block(l)
+                        .iter()
+                        .zip(yb.block(l))
+                        .all(|(a, b)| a.to_bits() == b.to_bits())
+                });
+                (
+                    d_eq && vec_eq,
+                    ra.to_bits() == rb.to_bits()
+                        && na.to_bits() == nb.to_bits()
+                        && da.to_bits() == db.to_bits()
+                        && pa.to_bits() == pb.to_bits()
+                        && qa.to_bits() == qb.to_bits(),
+                )
+            });
+            for (data_eq, scalars_eq) in out {
+                assert!(data_eq, "{pr}x{pc}: hi kernel data differs from plain");
+                assert!(scalars_eq, "{pr}x{pc}: hi kernel scalars differ from plain");
+            }
+        }
+    }
+
+    #[test]
+    fn hi_kernels_accumulate_wide_in_an_f32_world() {
+        // f32 storage, f64 accumulation: the wide dot must land closer to
+        // the exact sum than a pure-f32 chain on a cancellation-heavy
+        // replica, while the reduction payload stays 4 bytes.
+        let n = 4096usize;
+        let out: Vec<(f64, f64)> =
+            World::run::<f32, _, _>(2, NetworkModel::ideal(), move |comm| {
+                let mesh = Mesh::new(&comm, MeshShape::new(2, 1));
+                let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(4)));
+                let desc = Descriptor::new(n, n, 4, mesh.shape());
+                let x = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| {
+                    if i % 2 == 0 { 1.0e3 } else { -1.0e3 }
+                });
+                let y = DistVector::from_fn(desc, mesh.row(), mesh.col(), |i| {
+                    1.0 + (i as f32) * 1.0e-4
+                });
+                let wide = pdot_hi(&ctx, &x, &y);
+                let narrow = pdot(&ctx, &x, &y) as f64;
+                (wide, narrow)
+            });
+        let exact: f64 = (0..n)
+            .map(|i| {
+                let xi = if i % 2 == 0 { 1.0e3f32 } else { -1.0e3f32 };
+                let yi = 1.0f32 + (i as f32) * 1.0e-4;
+                xi as f64 * yi as f64
+            })
+            .sum();
+        for (wide, narrow) in out {
+            assert!((wide - exact).abs() <= (narrow - exact).abs());
+            assert!((wide - exact).abs() < 1e-5 * exact.abs().max(1.0));
         }
     }
 

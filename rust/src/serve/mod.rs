@@ -21,6 +21,8 @@
 //! model twins — so the queueing/percentile arithmetic is shared (and
 //! mirrored by the python oracle).
 
+use std::collections::HashSet;
+
 use crate::cluster::{Cluster, Method};
 use crate::workloads::Workload;
 use crate::{Error, Result, Scalar};
@@ -66,11 +68,17 @@ pub struct ServeConfig {
     /// The A/B switch: `false` forces singleton batches (`--no-batching`),
     /// pricing the same stream without any amortization.
     pub batching: bool,
+    /// Cross-request factorization cache ([`crate::cluster::FactorCache`]):
+    /// a later batch naming an operator a previous batch already factored
+    /// (same workload, size, direct method) pays only the substitutions.
+    /// Orthogonal to `batching` — batching amortizes *within* a batch, the
+    /// cache *across* batches.
+    pub factor_cache: bool,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { rhs_batch: 8, batching: true }
+        ServeConfig { rhs_batch: 8, batching: true, factor_cache: true }
     }
 }
 
@@ -178,6 +186,9 @@ pub struct ServeReport {
     pub outcomes: Vec<RequestOutcome>,
     /// Batches executed.
     pub batches: usize,
+    /// Batches that rode the cross-request factor cache (0 with
+    /// `factor_cache` off or when no operator repeats).
+    pub factor_cache_hits: usize,
 }
 
 impl ServeReport {
@@ -231,9 +242,11 @@ impl ServeReport {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "{} requests in {} batches: {:.3} req/s, latency p50 {} p95 {} max {}, err {:.2e}",
+            "{} requests in {} batches ({} factor-cache hits): {:.3} req/s, \
+             latency p50 {} p95 {} max {}, err {:.2e}",
             self.outcomes.len(),
             self.batches,
+            self.factor_cache_hits,
             self.throughput(),
             crate::util::fmt::secs(self.p50()),
             crate::util::fmt::secs(self.p95()),
@@ -247,13 +260,20 @@ impl ServeReport {
 /// advance the virtual clock (a batch starts when the cluster is free and
 /// its last member has arrived), and ledger every request.  `requests`
 /// must be arrival-ordered (the FIFO contract).
+///
+/// `run_batch` receives the batch plus a `factor_cached` flag: whether an
+/// earlier batch on this timeline already factored the same operator
+/// (direct methods with [`ServeConfig::factor_cache`] on).  The scheduler
+/// tracks this itself — a seen-set over `(workload, n, method)` — so the
+/// live-cluster path and the analytic model twins price the *same* batches
+/// as hits.
 pub fn schedule<F>(
     requests: &[SolveRequest],
     cfg: &ServeConfig,
     mut run_batch: F,
 ) -> Result<ServeReport>
 where
-    F: FnMut(&[&SolveRequest]) -> Result<BatchCost>,
+    F: FnMut(&[&SolveRequest], bool) -> Result<BatchCost>,
 {
     if requests.windows(2).any(|w| w[0].arrival > w[1].arrival) {
         return Err(Error::config("serve requests must be arrival-ordered".to_string()));
@@ -261,9 +281,18 @@ where
     let batches = form_batches(requests, cfg);
     let mut outcomes: Vec<RequestOutcome> = Vec::with_capacity(requests.len());
     let mut clock = 0.0f64;
+    let mut seen: HashSet<(Workload, usize, &'static str)> = HashSet::new();
+    let mut factor_cache_hits = 0usize;
     for (bi, batch) in batches.iter().enumerate() {
         let members: Vec<&SolveRequest> = batch.iter().map(|&i| &requests[i]).collect();
-        let cost = run_batch(&members)?;
+        let head = members[0];
+        let factor_cached = cfg.factor_cache
+            && matches!(head.method, Method::Lu | Method::Cholesky)
+            && !seen.insert((head.workload, head.n, head.method.name()));
+        if factor_cached {
+            factor_cache_hits += 1;
+        }
+        let cost = run_batch(&members, factor_cached)?;
         let ready = members.iter().map(|r| r.arrival).fold(0.0f64, f64::max);
         let start = clock.max(ready);
         let finish = start + cost.makespan;
@@ -282,23 +311,32 @@ where
             });
         }
     }
-    Ok(ServeReport { outcomes, batches: batches.len() })
+    Ok(ServeReport { outcomes, batches: batches.len(), factor_cache_hits })
 }
 
 /// Serve a request stream over the live cluster simulation: each batch is
-/// one [`Cluster::solve_batch`] call (shared factorization / blocked
-/// Krylov, per-request attribution enabled).
+/// one [`Cluster::solve_batch_cached`] call (shared factorization / blocked
+/// Krylov, per-request attribution enabled, and — with
+/// [`ServeConfig::factor_cache`] on — the cluster's cross-request factor
+/// cache).  On a fresh cluster the cluster-side cache hits exactly the
+/// batches the scheduler's seen-set predicts.
 pub fn serve_cluster<S: Scalar>(
     cluster: &Cluster,
     requests: &[SolveRequest],
     cfg: &ServeConfig,
 ) -> Result<ServeReport> {
-    schedule(requests, cfg, |members| {
+    schedule(requests, cfg, |members, _factor_cached| {
         let head = members[0];
         let coeffs: Vec<f64> = members.iter().map(|r| r.rhs_coeff()).collect();
         let tols: Vec<f64> = members.iter().map(|r| r.tol).collect();
-        let report =
-            cluster.solve_batch::<S>(head.workload, head.n, head.method, &coeffs, &tols)?;
+        let report = cluster.solve_batch_cached::<S>(
+            head.workload,
+            head.n,
+            head.method,
+            &coeffs,
+            &tols,
+            cfg.factor_cache,
+        )?;
         Ok(BatchCost {
             makespan: report.makespan(),
             per_request_secs: report.per_request_secs(),
@@ -342,11 +380,11 @@ mod tests {
         let b = form_batches(&s, &ServeConfig::default());
         assert_eq!(b, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7], vec![8]]);
         // Cap splits a group.
-        let b2 = form_batches(&s, &ServeConfig { rhs_batch: 3, batching: true });
+        let b2 = form_batches(&s, &ServeConfig { rhs_batch: 3, ..ServeConfig::default() });
         assert_eq!(b2[0], vec![0, 1, 2]);
         assert_eq!(b2[1], vec![3]);
         // Batching off: singletons.
-        let b1 = form_batches(&s, &ServeConfig { rhs_batch: 8, batching: false });
+        let b1 = form_batches(&s, &ServeConfig { batching: false, ..ServeConfig::default() });
         assert_eq!(b1.len(), 9);
         assert!(b1.iter().all(|g| g.len() == 1));
     }
@@ -355,7 +393,7 @@ mod tests {
     fn schedule_timeline_and_percentiles() {
         let s = demo_stream(8, 64);
         // Price every batch at 1 virtual second, regardless of width.
-        let rep = schedule(&s, &ServeConfig::default(), |members| {
+        let rep = schedule(&s, &ServeConfig::default(), |members, _| {
             Ok(BatchCost {
                 makespan: 1.0,
                 per_request_secs: vec![0.25; members.len()],
@@ -364,6 +402,8 @@ mod tests {
         })
         .unwrap();
         assert_eq!(rep.batches, 2);
+        // An 8-request demo stream never repeats an operator.
+        assert_eq!(rep.factor_cache_hits, 0);
         // Batch 0 waits for request 3 (arrival 0.006), then runs 1 s.
         assert_eq!(rep.outcomes[0].start, 0.006);
         assert_eq!(rep.outcomes[0].finish, 1.006);
@@ -385,11 +425,37 @@ mod tests {
     fn schedule_rejects_unordered_streams() {
         let mut s = demo_stream(4, 64);
         s.swap(0, 3);
-        assert!(schedule(&s, &ServeConfig::default(), |_| Ok(BatchCost {
+        assert!(schedule(&s, &ServeConfig::default(), |_, _| Ok(BatchCost {
             makespan: 1.0,
             per_request_secs: vec![],
             max_err: 0.0,
         }))
         .is_err());
+    }
+
+    #[test]
+    fn scheduler_flags_repeat_direct_operators_as_cache_hits() {
+        // 64 requests = 16 groups: LU revisits (DiagDominant, base·1) at
+        // group 12 and Cholesky revisits (Spd, base·3) at group 14 — the
+        // iterative groups never count, whatever they repeat.
+        let s = demo_stream(64, 32);
+        let mut flagged = Vec::new();
+        let rep = schedule(&s, &ServeConfig::default(), |members, cached| {
+            if cached {
+                flagged.push((members[0].method.name(), members[0].n));
+            }
+            Ok(BatchCost { makespan: 1.0, per_request_secs: vec![], max_err: 0.0 })
+        })
+        .unwrap();
+        assert_eq!(rep.factor_cache_hits, 2);
+        assert_eq!(flagged, vec![("LU", 32), ("Cholesky", 96)]);
+        // The A/B arm: same stream, no cache, no hits.
+        let off = ServeConfig { factor_cache: false, ..ServeConfig::default() };
+        let rep = schedule(&s, &off, |_, cached| {
+            assert!(!cached);
+            Ok(BatchCost { makespan: 1.0, per_request_secs: vec![], max_err: 0.0 })
+        })
+        .unwrap();
+        assert_eq!(rep.factor_cache_hits, 0);
     }
 }

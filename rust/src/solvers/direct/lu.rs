@@ -56,6 +56,13 @@ pub struct PivotMap {
 }
 
 impl PivotMap {
+    /// Rebuild a pivot map from a recorded swap list (factor-cache restore:
+    /// the serve layer replays a cached factorization's pivots against a
+    /// fresh right-hand side without re-running `getrf`).
+    pub fn from_swaps(swaps: Vec<(usize, usize)>) -> Self {
+        PivotMap { swaps }
+    }
+
     /// The ordered swap list.
     pub fn swaps(&self) -> &[(usize, usize)] {
         &self.swaps

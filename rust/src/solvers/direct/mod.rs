@@ -3,11 +3,16 @@
 
 pub mod cholesky;
 pub mod lu;
+pub mod refined;
 pub mod trsm;
 pub mod trsv;
 
 pub use cholesky::pchol_factor;
 pub use lu::{plu_factor, PivotMap};
+pub use refined::{
+    pchol_refine, pchol_solve_refined, plu_refine, plu_solve_refined, refine_bound, RefineStats,
+    REFINE_MAX_SWEEPS, REFINE_STAGNATION,
+};
 pub use trsm::ptrsm;
 pub use trsv::{ptrsv, TriKind};
 

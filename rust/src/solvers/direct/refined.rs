@@ -1,0 +1,677 @@
+//! Mixed-precision direct solves: **factor in the storage dtype `S`,
+//! iterate the solution to working (`S::Hi`) accuracy** (DESIGN.md §17).
+//!
+//! The classic Wilkinson/Moler iterative refinement loop, distributed:
+//!
+//! 1. factor `A` once in `S` (f32 in a mixed f64 solve — the O(n³) step
+//!    runs at the accelerator's single-precision rate and its tiles cross
+//!    the wire at half the bytes);
+//! 2. solve `A x₀ = b` with the `S` factors;
+//! 3. sweep: compute the residual `r = b − A·x` **in `S::Hi`** against the
+//!    wide shadow of `A`, solve the correction `A d = r` with the *same*
+//!    `S` factors (two triangular substitutions, no refactorisation), and
+//!    update `x += d` in `S::Hi`;
+//! 4. stop when the componentwise-normwise backward error
+//!    `‖r‖∞ / (‖A‖∞‖x‖∞ + ‖b‖∞)` reaches the wide dtype's O(n·u) bound, or
+//!    when the residual stops contracting (stagnation — the matrix is too
+//!    ill-conditioned for the `S` factors to act as a contraction map; the
+//!    cluster layer then falls back to a uniform-`S::Hi` solve).
+//!
+//! Everything the *factorisation and substitutions* touch stays in `S` —
+//! that is the whole point; only the refinement's own small legs are wide:
+//! the residual gemv against the `S::Hi` shadow runs host-side at CPU
+//! rates (latency-bound BLAS-2, kept off the accelerator exactly like the
+//! LU panel `getrf`), and the solution allgather rides the wire as
+//! [`Payload::Hi`] — the one full-width message class in an otherwise
+//! reduced-precision exchange.  Convergence *scalars* are demoted to `S`
+//! for the existing deterministic collectives: `max`/`sum` decisions only
+//! need a few digits, and every rank must take the same branch.
+//!
+//! For `S = f64` (`Hi = Self`) the first residual already meets the bound
+//! and the loop exits after zero sweeps with the uniform-precision answer.
+
+use num_traits::{ToPrimitive, Zero};
+
+use super::{apply_pivots, pchol_factor, plu_factor, ptrsv, PivotMap, TriKind};
+use crate::accel::{ComputeProfile, OpClass};
+use crate::comm::{Payload, ReduceOp, Tag};
+use crate::dist::{ptranspose, DistMatrix, DistVector};
+use crate::pblas::{tags, Ctx};
+use crate::{Result, Scalar};
+
+/// Sweep budget: refinement contracts the error by ~cond(A)·u_S per sweep,
+/// so a system the `S` factors can refine at all converges in a handful;
+/// ten sweeps without convergence means stagnation was missed only by
+/// luck.
+pub const REFINE_MAX_SWEEPS: usize = 10;
+
+/// Contraction test: a sweep must at least halve `‖r‖∞`, or the `S`
+/// factors are not a contraction for this system and further sweeps are
+/// wasted work (Higham, *Accuracy and Stability*, ch. 12).
+pub const REFINE_STAGNATION: f64 = 0.5;
+
+/// Backward-error target: `8·n·u` in the wide dtype — the same O(n·u)
+/// normwise bound a uniform-`S::Hi` factorisation satisfies, so a
+/// converged refined solve is *as backward-stable as the solve it
+/// replaced*.
+pub fn refine_bound<S: Scalar>(n: usize) -> f64 {
+    8.0 * n as f64 * <S::Hi as Scalar>::UNIT_ROUNDOFF
+}
+
+/// Outcome of one refined solve.
+#[derive(Clone, Copy, Debug)]
+pub struct RefineStats {
+    /// Correction sweeps applied (0 = the initial solve already met the
+    /// bound — always the case for `S = f64`).
+    pub sweeps: usize,
+    /// Whether the backward-error bound was met.  `false` routes the
+    /// cluster layer to the uniform-precision fallback.
+    pub converged: bool,
+    /// Final normwise backward error `‖r‖∞ / (‖A‖∞‖x‖∞ + ‖b‖∞)`.
+    pub backward_err: f64,
+}
+
+/// Solve `A x = b` by `S`-precision LU + `S::Hi` iterative refinement.
+/// `a_lo` is factored in place (and stays factored — callers can reuse it
+/// through [`plu_refine`] for further right-hand sides); `a_hi`/`b_hi` are
+/// the wide shadows the residual is computed against.
+pub fn plu_solve_refined<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a_lo: &mut DistMatrix<S>,
+    a_hi: &DistMatrix<<S as Scalar>::Hi>,
+    b_hi: &DistVector<<S as Scalar>::Hi>,
+) -> Result<(DistVector<<S as Scalar>::Hi>, RefineStats)> {
+    let piv = plu_factor(ctx, a_lo)?;
+    plu_refine(ctx, a_lo, &piv, a_hi, b_hi)
+}
+
+/// The refinement loop over an **already factored** LU matrix — the
+/// factorisation-reuse entry point (serve-layer factor cache, multi-RHS).
+pub fn plu_refine<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a_fac: &DistMatrix<S>,
+    piv: &PivotMap,
+    a_hi: &DistMatrix<<S as Scalar>::Hi>,
+    b_hi: &DistVector<<S as Scalar>::Hi>,
+) -> Result<(DistVector<<S as Scalar>::Hi>, RefineStats)> {
+    refine_with(ctx, a_hi, b_hi, |ctx, rhs| {
+        apply_pivots(ctx, piv, rhs);
+        ptrsv(ctx, a_fac, rhs, TriKind::LowerUnit)?;
+        ptrsv(ctx, a_fac, rhs, TriKind::Upper)
+    })
+}
+
+/// Solve `A x = b` (SPD) by `S`-precision Cholesky + `S::Hi` refinement.
+/// The transpose factor is redistributed **once** and reused by every
+/// sweep's backward substitution.
+pub fn pchol_solve_refined<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a_lo: &mut DistMatrix<S>,
+    a_hi: &DistMatrix<<S as Scalar>::Hi>,
+    b_hi: &DistVector<<S as Scalar>::Hi>,
+) -> Result<(DistVector<<S as Scalar>::Hi>, RefineStats)> {
+    pchol_factor(ctx, a_lo)?;
+    let lt = ptranspose(ctx.mesh, a_lo);
+    pchol_refine(ctx, a_lo, &lt, a_hi, b_hi)
+}
+
+/// The refinement loop over already factored Cholesky factors `L`, `Lᵀ`.
+pub fn pchol_refine<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    l: &DistMatrix<S>,
+    lt: &DistMatrix<S>,
+    a_hi: &DistMatrix<<S as Scalar>::Hi>,
+    b_hi: &DistVector<<S as Scalar>::Hi>,
+) -> Result<(DistVector<<S as Scalar>::Hi>, RefineStats)> {
+    refine_with(ctx, a_hi, b_hi, |ctx, rhs| {
+        ptrsv(ctx, l, rhs, TriKind::Lower)?;
+        ptrsv(ctx, lt, rhs, TriKind::Upper)
+    })
+}
+
+/// Shared loop: `correct` solves `A d = rhs` in place with the `S`
+/// factors (the two substitutions + pivoting of the concrete method).
+fn refine_with<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a_hi: &DistMatrix<<S as Scalar>::Hi>,
+    b_hi: &DistVector<<S as Scalar>::Hi>,
+    mut correct: impl FnMut(&Ctx<'_, S>, &mut DistVector<S>) -> Result<()>,
+) -> Result<(DistVector<<S as Scalar>::Hi>, RefineStats)> {
+    let desc = *b_hi.desc();
+    let mesh = ctx.mesh;
+
+    // Initial solve in the storage dtype: x0 = A_lo^-1 demote(b).
+    let mut x_lo = demote_vec(ctx, b_hi);
+    correct(ctx, &mut x_lo)?;
+    let mut x_hi = DistVector::<<S as Scalar>::Hi>::zeros(desc, mesh.row(), mesh.col());
+    add_promoted(ctx, &x_lo, &mut x_hi);
+
+    // Norms of the fixed data, computed once per solve.
+    let anorm = inf_norm_a(ctx, a_hi);
+    let bnorm = inf_norm_b(ctx, b_hi);
+    let bound = refine_bound::<S>(desc.m);
+    let berr = |rnorm: f64, xnorm: f64| rnorm / (anorm * xnorm + bnorm).max(f64::MIN_POSITIVE);
+
+    let (mut r, mut rnorm, mut xnorm) = residual(ctx, a_hi, b_hi, &x_hi);
+    let mut err = berr(rnorm, xnorm);
+    let mut sweeps = 0usize;
+    let mut converged = err <= bound;
+    while !converged && sweeps < REFINE_MAX_SWEEPS {
+        // Correction: A d = r with the existing factors, then x += d wide.
+        let mut d = demote_flat(ctx, &r, desc);
+        correct(ctx, &mut d)?;
+        add_promoted(ctx, &d, &mut x_hi);
+        sweeps += 1;
+        let (r2, rnorm2, xnorm2) = residual(ctx, a_hi, b_hi, &x_hi);
+        let stagnated = rnorm2 > REFINE_STAGNATION * rnorm;
+        r = r2;
+        rnorm = rnorm2;
+        xnorm = xnorm2;
+        err = berr(rnorm, xnorm);
+        converged = err <= bound;
+        if !converged && stagnated {
+            break; // not contracting: hand the fallback decision upward
+        }
+    }
+    Ok((x_hi, RefineStats { sweeps, converged, backward_err: err }))
+}
+
+// ---------------------------------------------------------------------------
+// Wide residual machinery
+// ---------------------------------------------------------------------------
+
+/// Residual `r = b − A·x` in `S::Hi` over this rank's tile rows, plus the
+/// (globally agreed) `‖r‖∞` and `‖x‖∞`.  Returned residual blocks are
+/// replicated across each process row, exactly like a [`DistVector`].
+fn residual<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a_hi: &DistMatrix<<S as Scalar>::Hi>,
+    b_hi: &DistVector<<S as Scalar>::Hi>,
+    x_hi: &DistVector<<S as Scalar>::Hi>,
+) -> (Vec<<S as Scalar>::Hi>, f64, f64) {
+    let desc = *a_hi.desc();
+    let t = desc.tile;
+    let mesh = ctx.mesh;
+    let zero = <S::Hi as Zero>::zero();
+
+    // 1. Every rank assembles the full wide solution (ring allgather over
+    //    the process column — the Payload::Hi leg).
+    let x_full = allgather_hi(ctx, x_hi);
+    let xnorm = x_full
+        .iter()
+        .fold(zero, |m, &v| if v.abs() > m { v.abs() } else { m })
+        .to_f64()
+        .unwrap_or(0.0);
+
+    // 2. Local partials of A·x over the owned tiles (host gemv at CPU
+    //    rates: the refinement's O(n²/P) wide leg).
+    let my_rows = desc.local_mt(mesh.row()) * t;
+    let mut partial = vec![zero; my_rows];
+    let mut ntiles = 0u64;
+    for (lti, ltj, _ti, tj) in a_hi.owned_tiles() {
+        let tile = a_hi.tile(lti, ltj);
+        let xs = &x_full[tj * t..(tj + 1) * t];
+        for r in 0..t {
+            let mut acc = zero;
+            let row = &tile[r * t..(r + 1) * t];
+            for j in 0..t {
+                acc += row[j] * xs[j];
+            }
+            partial[lti * t + r] += acc;
+        }
+        ntiles += 1;
+    }
+    let tb = t * t * <S::Hi as Scalar>::BYTES;
+    charge_host::<S>(
+        ctx,
+        OpClass::Blas2,
+        ntiles * 2 * (t as u64) * (t as u64),
+        ntiles as usize * (tb + t * <S::Hi as Scalar>::BYTES),
+        my_rows * <S::Hi as Scalar>::BYTES,
+    );
+
+    // 3. Sum the partials across the process row (ordered gather at the
+    //    row root, broadcast back: bitwise-identical blocks row-wide).
+    let ax = row_sum_hi(ctx, partial);
+
+    // 4. r = b − A·x; its ∞-norm crosses ranks demoted to `S` (a
+    //    convergence decision needs digits, not ulps) through the
+    //    deterministic Max tree.
+    let mut r = vec![zero; my_rows];
+    let mut local_max = zero;
+    for l in 0..b_hi.local_blocks() {
+        let b_blk = b_hi.block(l);
+        for i in 0..t {
+            let v = b_blk[i] - ax[l * t + i];
+            r[l * t + i] = v;
+            if v.abs() > local_max {
+                local_max = v.abs();
+            }
+        }
+    }
+    charge_host::<S>(
+        ctx,
+        OpClass::Blas1,
+        2 * my_rows as u64,
+        2 * my_rows * <S::Hi as Scalar>::BYTES,
+        my_rows * <S::Hi as Scalar>::BYTES,
+    );
+    let col = mesh.col_comm();
+    let rnorm = col
+        .allreduce_scalar(tags::MIXED + 10, S::from_hi(local_max), ReduceOp::Max)
+        .to_f64()
+        .unwrap_or(f64::INFINITY);
+    (r, rnorm, xnorm)
+}
+
+/// Ring allgather of the wide solution over the process column: `pr − 1`
+/// steps, each forwarding the chunk received the step before, every
+/// message a [`Payload::Hi`] (full-width elements — the refinement's only
+/// wide wire traffic).
+fn allgather_hi<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    x: &DistVector<<S as Scalar>::Hi>,
+) -> Vec<<S as Scalar>::Hi> {
+    let desc = *x.desc();
+    let t = desc.tile;
+    let mesh = ctx.mesh;
+    let pr = desc.shape.pr;
+    let zero = <S::Hi as Zero>::zero();
+    let mut full = vec![zero; desc.mt() * t];
+    for l in 0..x.local_blocks() {
+        let ti = desc.global_ti(mesh.row(), l);
+        full[ti * t..(ti + 1) * t].copy_from_slice(x.block(l));
+    }
+    if pr == 1 {
+        return full;
+    }
+    let col = mesh.col_comm();
+    let comm = mesh.comm();
+    let me = col.rank();
+    let succ = col.world_rank((me + 1) % pr);
+    let pred = col.world_rank((me + pr - 1) % pr);
+    // Pack my chunk (my process row's blocks, in local order).
+    let mut chunk: Vec<<S as Scalar>::Hi> = Vec::with_capacity(desc.local_mt(me) * t);
+    for l in 0..desc.local_mt(me) {
+        let ti = desc.global_ti(me, l);
+        chunk.extend_from_slice(&full[ti * t..(ti + 1) * t]);
+    }
+    for s in 0..pr - 1 {
+        let tag = Tag::P2p(tags::MIXED + s as u32);
+        comm.send(succ, tag, Payload::Hi(chunk));
+        let incoming = comm.recv(pred, tag).into_hi();
+        // The chunk arriving at step s originated at column rank me−1−s
+        // (group rank == process row for the column communicator).
+        let src_prow = (me + pr - 1 - s) % pr;
+        for l in 0..desc.local_mt(src_prow) {
+            let ti = desc.global_ti(src_prow, l);
+            full[ti * t..(ti + 1) * t].copy_from_slice(&incoming[l * t..(l + 1) * t]);
+        }
+        chunk = incoming;
+    }
+    full
+}
+
+/// Ordered row-wide sum of wide partials: gather at the row root, sum in
+/// ascending column order (one association, so every rank's copy of the
+/// result is bitwise identical), broadcast back.
+fn row_sum_hi<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    partial: Vec<<S as Scalar>::Hi>,
+) -> Vec<<S as Scalar>::Hi> {
+    let mesh = ctx.mesh;
+    let row = mesh.row_comm();
+    let pc = row.size();
+    if pc == 1 {
+        return partial;
+    }
+    let comm = mesh.comm();
+    let me = row.rank();
+    let len = partial.len();
+    if me == 0 {
+        let mut acc = partial;
+        for c in 1..pc {
+            let inc = comm
+                .recv(row.world_rank(c), Tag::P2p(tags::MIXED + 100 + c as u32))
+                .into_hi();
+            for (a, b) in acc.iter_mut().zip(&inc) {
+                *a += *b;
+            }
+        }
+        charge_host::<S>(
+            ctx,
+            OpClass::Blas1,
+            ((pc - 1) * len) as u64,
+            pc * len * <S::Hi as Scalar>::BYTES,
+            len * <S::Hi as Scalar>::BYTES,
+        );
+        for c in 1..pc {
+            comm.send(
+                row.world_rank(c),
+                Tag::P2p(tags::MIXED + 200 + c as u32),
+                Payload::Hi(acc.clone()),
+            );
+        }
+        acc
+    } else {
+        comm.send(
+            row.world_rank(0),
+            Tag::P2p(tags::MIXED + 100 + me as u32),
+            Payload::Hi(partial),
+        );
+        comm.recv(row.world_rank(0), Tag::P2p(tags::MIXED + 200 + me as u32)).into_hi()
+    }
+}
+
+/// `‖A‖∞` of the wide shadow: local row sums, summed across the process
+/// row and maxed across rows — demoted to `S` for the deterministic
+/// collectives (a bound denominator needs digits, not ulps).
+fn inf_norm_a<S: Scalar>(ctx: &Ctx<'_, S>, a_hi: &DistMatrix<<S as Scalar>::Hi>) -> f64 {
+    let desc = *a_hi.desc();
+    let t = desc.tile;
+    let mesh = ctx.mesh;
+    let zero = <S::Hi as Zero>::zero();
+    let my_rows = desc.local_mt(mesh.row()) * t;
+    let mut sums = vec![zero; my_rows];
+    let mut ntiles = 0u64;
+    for (lti, ltj, _ti, _tj) in a_hi.owned_tiles() {
+        let tile = a_hi.tile(lti, ltj);
+        for r in 0..t {
+            let mut acc = zero;
+            for j in 0..t {
+                acc += tile[r * t + j].abs();
+            }
+            sums[lti * t + r] += acc;
+        }
+        ntiles += 1;
+    }
+    charge_host::<S>(
+        ctx,
+        OpClass::Blas1,
+        ntiles * (t as u64) * (t as u64),
+        ntiles as usize * t * t * <S::Hi as Scalar>::BYTES,
+        my_rows * <S::Hi as Scalar>::BYTES,
+    );
+    let row = mesh.row_comm();
+    let narrow: Vec<S> = sums.iter().map(|&h| S::from_hi(h)).collect();
+    let summed = row.allreduce_vec(tags::MIXED + 11, narrow, ReduceOp::Sum);
+    let local_max = summed.iter().fold(S::zero(), |m, &v| if v > m { v } else { m });
+    let col = mesh.col_comm();
+    col.allreduce_scalar(tags::MIXED + 12, local_max, ReduceOp::Max)
+        .to_f64()
+        .unwrap_or(f64::INFINITY)
+}
+
+/// `‖b‖∞` (blocks replicated across the process row: only the column
+/// reduction crosses distinct data).
+fn inf_norm_b<S: Scalar>(ctx: &Ctx<'_, S>, b_hi: &DistVector<<S as Scalar>::Hi>) -> f64 {
+    let zero = <S::Hi as Zero>::zero();
+    let mut local_max = zero;
+    for l in 0..b_hi.local_blocks() {
+        for &v in b_hi.block(l).iter() {
+            if v.abs() > local_max {
+                local_max = v.abs();
+            }
+        }
+    }
+    let col = ctx.mesh.col_comm();
+    col.allreduce_scalar(tags::MIXED + 13, S::from_hi(local_max), ReduceOp::Max)
+        .to_f64()
+        .unwrap_or(f64::INFINITY)
+}
+
+// ---------------------------------------------------------------------------
+// Demote / promote passes (the mixed path's byte savings are born here)
+// ---------------------------------------------------------------------------
+
+/// `demote(b)`: a fresh `S`-storage right-hand side.  Fresh allocations
+/// are retired through `host_mut` so a recycled address can never alias a
+/// stale device-residency entry.
+fn demote_vec<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    src: &DistVector<<S as Scalar>::Hi>,
+) -> DistVector<S> {
+    let desc = *src.desc();
+    let mesh = ctx.mesh;
+    let mut out = DistVector::<S>::zeros(desc, mesh.row(), mesh.col());
+    let mut elems = 0usize;
+    for l in 0..out.local_blocks() {
+        let s = src.block(l);
+        let d = out.block_mut(l);
+        for (di, &si) in d.iter_mut().zip(s.iter()) {
+            *di = S::from_hi(si);
+        }
+        elems += d.len();
+        ctx.host_mut(out.block(l));
+    }
+    charge_demote::<S>(ctx, elems);
+    out
+}
+
+/// Demote the flat wide residual into a distributed `S` right-hand side.
+fn demote_flat<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    r: &[<S as Scalar>::Hi],
+    desc: crate::dist::Descriptor,
+) -> DistVector<S> {
+    let t = desc.tile;
+    let mesh = ctx.mesh;
+    let mut out = DistVector::<S>::zeros(desc, mesh.row(), mesh.col());
+    let mut elems = 0usize;
+    for l in 0..out.local_blocks() {
+        let d = out.block_mut(l);
+        for (i, di) in d.iter_mut().enumerate() {
+            *di = S::from_hi(r[l * t + i]);
+        }
+        elems += d.len();
+        ctx.host_mut(out.block(l));
+    }
+    charge_demote::<S>(ctx, elems);
+    out
+}
+
+/// `x_hi += promote(d)` over the owned blocks (exact widening).
+fn add_promoted<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    d: &DistVector<S>,
+    x_hi: &mut DistVector<<S as Scalar>::Hi>,
+) {
+    let mut elems = 0usize;
+    for l in 0..x_hi.local_blocks() {
+        let src = d.block(l);
+        let dst = x_hi.block_mut(l);
+        for (xi, &si) in dst.iter_mut().zip(src) {
+            *xi += si.to_hi();
+        }
+        elems += src.len();
+    }
+    charge_host::<S>(
+        ctx,
+        OpClass::Blas1,
+        elems as u64,
+        elems * (S::BYTES + <S::Hi as Scalar>::BYTES),
+        elems * <S::Hi as Scalar>::BYTES,
+    );
+}
+
+fn charge_demote<S: Scalar>(ctx: &Ctx<'_, S>, elems: usize) {
+    charge_host::<S>(
+        ctx,
+        OpClass::Blas1,
+        elems as u64,
+        elems * <S::Hi as Scalar>::BYTES,
+        elems * S::BYTES,
+    );
+}
+
+/// The refinement's wide legs run host-side at CPU rates — the same
+/// convention as the LU panel `getrf` (latency-bound work stays off the
+/// accelerator; see `lu.rs`).
+fn charge_host<S: Scalar>(ctx: &Ctx<'_, S>, class: OpClass, flops: u64, read: usize, write: usize) {
+    let profile = ComputeProfile::q6600_atlas();
+    ctx.charge(profile.op_cost::<<S as Scalar>::Hi>(class, flops, read, write));
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::accel::CpuEngine;
+    use crate::comm::{NetworkModel, World};
+    use crate::dist::Descriptor;
+    use crate::mesh::{Mesh, MeshShape};
+
+    fn nonsym(n: usize) -> impl Fn(usize, usize) -> f64 + Clone + Send + Sync {
+        move |i, j| {
+            let v = (((i * 13 + j * 29 + 7) % 101) as f64) / 101.0 - 0.5;
+            if i == j {
+                n as f64 + 1.0 + v
+            } else {
+                v
+            }
+        }
+    }
+
+    fn spd(n: usize) -> impl Fn(usize, usize) -> f64 + Clone + Send + Sync {
+        move |i, j| {
+            let base = (((i * 37 + j * 61) % 97) as f64) / 97.0 - 0.5;
+            let sym = base + ((((j * 37 + i * 61) % 97) as f64) / 97.0 - 0.5);
+            if i == j {
+                2.0 * n as f64 + sym
+            } else {
+                sym * 0.5
+            }
+        }
+    }
+
+    fn xt(j: usize) -> f64 {
+        ((j as f64) * 0.21).sin() + 1.0
+    }
+
+    fn rhs(n: usize, elem: &impl Fn(usize, usize) -> f64, i: usize) -> f64 {
+        (0..n).map(|j| elem(i, j) * xt(j)).sum()
+    }
+
+    /// Refined f32-factor solves reach the *f64* backward-error bound —
+    /// the result the mixed path promises — on square and ragged meshes.
+    #[test]
+    fn refined_lu_and_chol_reach_f64_accuracy_from_f32_factors() {
+        for &(pr, pc, n) in &[(1usize, 1usize, 32usize), (2, 2, 45), (2, 3, 45)] {
+            for &which in &["lu", "chol"] {
+                let out = World::run::<f32, _, _>(
+                    pr * pc,
+                    NetworkModel::gigabit_ethernet(),
+                    move |comm| {
+                        let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+                        let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(8)));
+                        let desc = Descriptor::new(n, n, 8, mesh.shape());
+                        let spd_mat = which == "chol";
+                        let elem = move |i: usize, j: usize| {
+                            if spd_mat {
+                                spd(n)(i, j)
+                            } else {
+                                nonsym(n)(i, j)
+                            }
+                        };
+                        let a_hi =
+                            DistMatrix::<f64>::from_fn(desc, mesh.row(), mesh.col(), elem);
+                        let b_hi = DistVector::<f64>::from_fn(desc, mesh.row(), mesh.col(), |i| {
+                            rhs(n, &elem, i)
+                        });
+                        let mut a_lo = DistMatrix::<f32>::from_fn(
+                            desc,
+                            mesh.row(),
+                            mesh.col(),
+                            move |i, j| elem(i, j) as f32,
+                        );
+                        let (x, st) = if which == "lu" {
+                            plu_solve_refined(&ctx, &mut a_lo, &a_hi, &b_hi).unwrap()
+                        } else {
+                            pchol_solve_refined(&ctx, &mut a_lo, &a_hi, &b_hi).unwrap()
+                        };
+                        // Per-rank worst error of the owned wide blocks.
+                        let mut worst = 0.0f64;
+                        for l in 0..x.local_blocks() {
+                            let ti = desc.global_ti(mesh.row(), l);
+                            for (i, &v) in x.block(l).iter().enumerate() {
+                                let g = ti * desc.tile + i;
+                                if g < n {
+                                    worst = worst.max((v - xt(g)).abs());
+                                }
+                            }
+                        }
+                        (st.sweeps, st.converged, st.backward_err, worst)
+                    },
+                );
+                for (sweeps, converged, berr, worst) in out {
+                    assert!(converged, "{which} {pr}x{pc}: berr {berr}");
+                    assert!(sweeps >= 1, "{which}: f32 factors need at least one sweep");
+                    assert!(berr <= refine_bound::<f32>(n), "{which}: berr {berr}");
+                    // Forward error far beyond f32 (eps32 ~ 6e-8, err*cond).
+                    assert!(worst < 1e-10, "{which} {pr}x{pc}: worst {worst}");
+                }
+            }
+        }
+    }
+
+    /// For `S = f64` (`Hi = Self`) the initial solve already meets the
+    /// bound: zero sweeps, answer is the uniform-precision solve's.
+    #[test]
+    fn refined_in_an_f64_world_is_the_plain_solve_with_zero_sweeps() {
+        let n = 32;
+        let out = World::run::<f64, _, _>(4, NetworkModel::gigabit_ethernet(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(2, 2));
+            let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(8)));
+            let desc = Descriptor::new(n, n, 8, mesh.shape());
+            let elem = nonsym(n);
+            let a_hi = DistMatrix::<f64>::from_fn(desc, mesh.row(), mesh.col(), elem.clone());
+            let b_hi = DistVector::<f64>::from_fn(desc, mesh.row(), mesh.col(), {
+                let elem = elem.clone();
+                move |i| rhs(n, &elem, i)
+            });
+            let mut a_lo = DistMatrix::<f64>::from_fn(desc, mesh.row(), mesh.col(), elem);
+            let (_, st) = plu_solve_refined(&ctx, &mut a_lo, &a_hi, &b_hi).unwrap();
+            (st.sweeps, st.converged, st.backward_err)
+        });
+        for (sweeps, converged, berr) in out {
+            assert!(converged);
+            assert_eq!(sweeps, 0, "f64 factors meet the f64 bound immediately");
+            assert!(berr <= refine_bound::<f64>(n));
+        }
+    }
+
+    /// A matrix too ill-conditioned for f32 factors must NOT be reported
+    /// converged — the stagnation guard is the cluster fallback's trigger.
+    #[test]
+    fn ill_conditioned_system_trips_the_stagnation_guard() {
+        let n = 24;
+        let out = World::run::<f32, _, _>(1, NetworkModel::gigabit_ethernet(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(1, 1));
+            let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(8)));
+            let desc = Descriptor::new(n, n, 8, mesh.shape());
+            // Hilbert matrix: cond ~ e^{3.5 n} — hopeless for f32 factors.
+            let elem = |i: usize, j: usize| 1.0 / ((i + j + 1) as f64);
+            let a_hi = DistMatrix::<f64>::from_fn(desc, mesh.row(), mesh.col(), elem);
+            let b_hi =
+                DistVector::<f64>::from_fn(desc, mesh.row(), mesh.col(), |i| {
+                    (0..n).map(|j| elem(i, j) * xt(j)).sum()
+                });
+            let mut a_lo = DistMatrix::<f32>::from_fn(desc, mesh.row(), mesh.col(), move |i, j| {
+                elem(i, j) as f32
+            });
+            match plu_solve_refined(&ctx, &mut a_lo, &a_hi, &b_hi) {
+                Ok((_, st)) => !st.converged,
+                Err(_) => true, // factorisation breakdown is also a fallback
+            }
+        });
+        assert!(out[0], "refinement claimed convergence on a Hilbert system");
+    }
+
+    #[test]
+    fn bound_scales_with_n_and_the_wide_roundoff() {
+        assert!(refine_bound::<f32>(1000) == refine_bound::<f64>(1000));
+        assert!(refine_bound::<f64>(2000) > refine_bound::<f64>(1000));
+        assert!(refine_bound::<f64>(60_000) < 1e-10);
+    }
+}

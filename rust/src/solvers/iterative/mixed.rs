@@ -1,0 +1,156 @@
+//! Mixed-precision Krylov: **storage and communication in `S`, every
+//! reduction and recurrence scalar accumulated in `S::Hi`** (DESIGN.md
+//! §17).
+//!
+//! The cluster layer runs these solvers in the *reduced* dtype's world
+//! (f32 tiles through the cache/prefetch/wire machinery at half the
+//! bytes), and the wide accumulators recover most of the dot-product
+//! accuracy an all-f32 recurrence would lose: the `pvec` `_hi` kernels
+//! compute local partials in f64 and ship only `S`-width reduction
+//! payloads, so the wire sees exactly the plain kernels' traffic.
+//!
+//! For `S = f64` (`Hi = Self`, `from_hi` the identity) both solvers
+//! reproduce their uniform-precision twins bit for bit — the `--no-mixed`
+//! honesty contract.
+
+use super::{norm_negligible, IterConfig, IterStats};
+use crate::dist::DistVector;
+use crate::pblas::{
+    paxpy, pdot_hi, pfused_axpy_norm2_dot_hi, pfused_axpy_norm2_hi, pfused_norm2_dot_hi,
+    pnorm2_hi, pxpay, Ctx, LinOp,
+};
+use crate::{Error, Result, Scalar};
+
+/// Solve `A x = b` (A SPD) with f64-accumulate reductions over `S`-storage
+/// operands.  Same recurrence shape as [`super::cg`], scalar for scalar.
+pub fn cg_mixed<S: Scalar, A: LinOp<S> + ?Sized>(
+    ctx: &Ctx<'_, S>,
+    a: &A,
+    b: &DistVector<S>,
+    cfg: &IterConfig,
+) -> Result<(DistVector<S>, IterStats<S>)> {
+    let desc = *a.desc();
+    let mesh = ctx.mesh;
+    let zero = <S::Hi as num_traits::Zero>::zero();
+    let bnorm = pnorm2_hi(ctx, b);
+    let mut x = DistVector::zeros(desc, mesh.row(), mesh.col());
+    if norm_negligible(S::from_hi(bnorm), desc.m) {
+        return Ok((x, IterStats::new(0, S::zero(), true)));
+    }
+    let tol = <S::Hi as Scalar>::from_f64(cfg.tol).unwrap() * bnorm;
+
+    let mut r = b.clone_vec();
+    let mut p = r.clone_vec();
+    let mut rr = pdot_hi(ctx, &r, &r);
+
+    for it in 0..cfg.max_iter {
+        let ap = a.apply(ctx, &p);
+        let pap = pdot_hi(ctx, &p, &ap);
+        if pap <= zero {
+            return Err(Error::Breakdown {
+                method: "cg_mixed",
+                detail: format!("p^T A p = {pap} at iteration {it} (matrix not SPD?)"),
+            });
+        }
+        let alpha = rr / pap;
+        paxpy(ctx, S::from_hi(alpha), &p, &mut x);
+        // r -= alpha A p and ||r||^2 in one fused wide-accumulate kernel.
+        let rr_new = pfused_axpy_norm2_hi(ctx, S::from_hi(-alpha), &ap, &mut r);
+        let rnorm = rr_new.sqrt();
+        if rnorm <= tol {
+            return Ok((x, IterStats::new(it + 1, S::from_hi(rnorm / bnorm), true)));
+        }
+        let beta = rr_new / rr;
+        rr = rr_new;
+        pxpay(ctx, S::from_hi(beta), &r, &mut p); // p = r + beta p
+    }
+    let rnorm = pnorm2_hi(ctx, &r);
+    Ok((x, IterStats::new(cfg.max_iter, S::from_hi(rnorm / bnorm), false)))
+}
+
+/// Solve `A x = b` (general nonsymmetric) with f64-accumulate reductions
+/// over `S`-storage operands.  Same recurrence shape as
+/// [`super::bicgstab`], scalar for scalar.
+pub fn bicgstab_mixed<S: Scalar, A: LinOp<S> + ?Sized>(
+    ctx: &Ctx<'_, S>,
+    a: &A,
+    b: &DistVector<S>,
+    cfg: &IterConfig,
+) -> Result<(DistVector<S>, IterStats<S>)> {
+    let desc = *a.desc();
+    let mesh = ctx.mesh;
+    let zero = <S::Hi as num_traits::Zero>::zero();
+    let bnorm = pnorm2_hi(ctx, b);
+    let mut x = DistVector::zeros(desc, mesh.row(), mesh.col());
+    if norm_negligible(S::from_hi(bnorm), desc.m) {
+        return Ok((x, IterStats::new(0, S::zero(), true)));
+    }
+    let tol = <S::Hi as Scalar>::from_f64(cfg.tol).unwrap() * bnorm;
+
+    let mut r = b.clone_vec();
+    let r0 = b.clone_vec(); // shadow residual
+    let mut p = r.clone_vec();
+    let mut rho = pdot_hi(ctx, &r0, &r);
+
+    for it in 0..cfg.max_iter {
+        if rho == zero {
+            return Err(Error::Breakdown {
+                method: "bicgstab_mixed",
+                detail: format!("rho = 0 at iteration {it}"),
+            });
+        }
+        let v = a.apply(ctx, &p);
+        let r0v = pdot_hi(ctx, &r0, &v);
+        if r0v == zero {
+            return Err(Error::Breakdown {
+                method: "bicgstab_mixed",
+                detail: format!("r0.v = 0 at iteration {it}"),
+            });
+        }
+        let alpha = rho / r0v;
+        // s = r - alpha v, fused with ||s||^2.  The fresh clone's blocks are
+        // host-authoritative: drop any aliased device entries first.
+        let mut s = r.clone_vec();
+        for l in 0..s.local_blocks() {
+            ctx.host_mut(s.block(l));
+        }
+        let snorm = pfused_axpy_norm2_hi(ctx, S::from_hi(-alpha), &v, &mut s).sqrt();
+        if snorm <= tol {
+            paxpy(ctx, S::from_hi(alpha), &p, &mut x);
+            return Ok((x, IterStats::new(it + 1, S::from_hi(snorm / bnorm), true)));
+        }
+        let t = a.apply(ctx, &s);
+        // (t.t, t.s) in one pass and one two-lane allreduce.
+        let (tt, ts) = pfused_norm2_dot_hi(ctx, &t, &s);
+        if tt == zero {
+            return Err(Error::Breakdown {
+                method: "bicgstab_mixed",
+                detail: format!("t.t = 0 at iteration {it}"),
+            });
+        }
+        let omega = ts / tt;
+        // x += alpha p + omega s
+        paxpy(ctx, S::from_hi(alpha), &p, &mut x);
+        paxpy(ctx, S::from_hi(omega), &s, &mut x);
+        // r = s - omega t, fused with ||r||^2 and the next rho = r0.r.
+        // Retire the old residual's device entries before its buffers drop
+        // (a later clone could alias the freed allocation).
+        for l in 0..r.local_blocks() {
+            ctx.host_mut(r.block(l));
+        }
+        r = s;
+        let (rr, rho_new) =
+            pfused_axpy_norm2_dot_hi(ctx, S::from_hi(-omega), &t, &mut r, &r0);
+        let rnorm = rr.sqrt();
+        if rnorm <= tol {
+            return Ok((x, IterStats::new(it + 1, S::from_hi(rnorm / bnorm), true)));
+        }
+        let beta = (rho_new / rho) * (alpha / omega);
+        rho = rho_new;
+        // p = r + beta (p - omega v)
+        paxpy(ctx, S::from_hi(-omega), &v, &mut p);
+        pxpay(ctx, S::from_hi(beta), &r, &mut p);
+    }
+    let rnorm = pnorm2_hi(ctx, &r);
+    Ok((x, IterStats::new(cfg.max_iter, S::from_hi(rnorm / bnorm), false)))
+}

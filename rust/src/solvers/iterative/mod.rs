@@ -19,6 +19,7 @@ pub mod bicgstab;
 pub mod block;
 pub mod cg;
 pub mod gmres;
+pub mod mixed;
 pub mod pipecg;
 pub mod precond;
 pub mod schur;
@@ -28,6 +29,7 @@ pub use bicgstab::bicgstab;
 pub use block::{block_bicgstab, block_cg};
 pub use cg::{cg, pcg};
 pub use gmres::gmres;
+pub use mixed::{bicgstab_mixed, cg_mixed};
 pub use pipecg::pipecg;
 pub use precond::{BlockJacobiPrecond, JacobiPrecond, Preconditioner};
 pub use schur::{schur_cg, SchurStats};

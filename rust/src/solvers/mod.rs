@@ -10,11 +10,13 @@ pub mod iterative;
 pub mod serial;
 
 pub use direct::{
-    apply_pivots, pchol_factor, pchol_solve, pchol_solve_panel, plu_factor, plu_solve,
-    plu_solve_panel, ptrsm, ptrsv, PivotMap, TriKind,
+    apply_pivots, pchol_factor, pchol_refine, pchol_solve, pchol_solve_panel,
+    pchol_solve_refined, plu_factor, plu_refine, plu_solve, plu_solve_panel, plu_solve_refined,
+    ptrsm, ptrsv, refine_bound, PivotMap, RefineStats, TriKind, REFINE_MAX_SWEEPS,
+    REFINE_STAGNATION,
 };
 pub use iterative::{
-    bicg, bicgstab, block_bicgstab, block_cg, cg, gmres, pcg, pipecg, schur_cg,
-    BlockJacobiPrecond, IterConfig, IterMethod, IterStats, JacobiPrecond, LinOp, Preconditioner,
-    SchurStats,
+    bicg, bicgstab, bicgstab_mixed, block_bicgstab, block_cg, cg, cg_mixed, gmres, pcg, pipecg,
+    schur_cg, BlockJacobiPrecond, IterConfig, IterMethod, IterStats, JacobiPrecond, LinOp,
+    Preconditioner, SchurStats,
 };

@@ -20,7 +20,7 @@ pub use stencil::{
 use crate::Scalar;
 
 /// A named linear-system workload with deterministic elements.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Workload {
     /// Dense symmetric positive definite (Cholesky / CG).
     Spd,

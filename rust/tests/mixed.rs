@@ -1,0 +1,381 @@
+//! Mixed-precision integration tests (`DESIGN.md` §17).
+//!
+//! Three contracts, exercised through the public API:
+//!
+//! * **Accuracy** — an f32 factorization plus wide iterative refinement
+//!   reaches the *f64* backward-error bound (`refine_bound`) on every
+//!   mesh shape, and the f64-accumulate Krylov solvers recover the known
+//!   solution from f32 storage; an unrefinable system (Hilbert) must
+//!   report `converged = false` rather than spin or lie.
+//! * **Honesty** — at `S = f64` the `_mixed` Krylov routines are the
+//!   uniform solvers bit for bit, and the cluster's `mixed_precision`
+//!   knob is exactly inert where the gate is closed (the host arm):
+//!   `--no-mixed` vs default is a bit-identical wash.
+//! * **Reporting** — gate probes (`mixed_capable`, `mixed_advantage`,
+//!   `model_mixed_engaged`) agree across layers, and uniform runs carry
+//!   zeroed mixed fields in [`SolveReport`].
+//!
+//! The accelerated-arm end-to-end (narrow tiles + wide correction through
+//! the XLA engine) is gated on `make artifacts`, like the other XLA tests.
+
+use std::sync::Arc;
+
+use cuplss::accel::{ComputeProfile, CpuEngine, EngineKind};
+use cuplss::bench_harness::model::model_mixed_engaged;
+use cuplss::bench_harness::ModelParams;
+use cuplss::cluster::{Cluster, ClusterConfig, Method};
+use cuplss::comm::{NetworkModel, World};
+use cuplss::dist::{Descriptor, DistMatrix, DistVector};
+use cuplss::mesh::{Mesh, MeshShape};
+use cuplss::pblas::Ctx;
+use cuplss::solvers::{
+    bicgstab, bicgstab_mixed, cg, cg_mixed, pchol_solve_refined, plu_solve_refined, refine_bound,
+    IterConfig, IterMethod, REFINE_MAX_SWEEPS,
+};
+use cuplss::workloads::Workload;
+use cuplss::{mixed_capable, DEFAULT_TILE};
+
+const TILE: usize = 8;
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&artifacts_dir()).join("manifest.txt").exists()
+}
+
+/// Per-rank worst forward error of the owned blocks of `x` against the
+/// workload's known solution.
+fn worst_err(
+    x: &DistVector<f64>,
+    desc: &Descriptor,
+    mesh_row: usize,
+    n: usize,
+    xt: &impl Fn(usize) -> f64,
+) -> f64 {
+    let mut worst = 0.0f64;
+    for l in 0..x.local_blocks() {
+        let ti = desc.global_ti(mesh_row, l);
+        for (i, &v) in x.block(l).iter().enumerate() {
+            let g = ti * desc.tile + i;
+            if g < n {
+                worst = worst.max((v - xt(g)).abs());
+            }
+        }
+    }
+    worst
+}
+
+/// Refined f32-factor LU / Cholesky on the *workload* generators reach the
+/// wide backward-error bound on square, ragged and single-rank meshes —
+/// the accuracy the cluster's mixed direct path promises.
+#[test]
+fn refined_direct_solves_meet_the_wide_bound_on_workload_operators() {
+    for &(pr, pc, n) in &[(1usize, 1usize, 32usize), (2, 1, 40), (2, 2, 45)] {
+        for &(workload, method) in
+            &[(Workload::DiagDominant, "lu"), (Workload::Spd, "chol")]
+        {
+            let out =
+                World::run::<f32, _, _>(pr * pc, NetworkModel::gigabit_ethernet(), move |comm| {
+                    let mesh = Mesh::new(&comm, MeshShape::new(pr, pc));
+                    let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(TILE)));
+                    let desc = Descriptor::new(n, n, TILE, mesh.shape());
+                    let elem = workload.elem::<f64>(n);
+                    let a_hi =
+                        DistMatrix::<f64>::from_fn(desc, mesh.row(), mesh.col(), elem.clone());
+                    let b_hi = DistVector::<f64>::from_fn(
+                        desc,
+                        mesh.row(),
+                        mesh.col(),
+                        workload.rhs::<f64>(n),
+                    );
+                    let mut a_lo =
+                        DistMatrix::<f32>::from_fn(desc, mesh.row(), mesh.col(), move |i, j| {
+                            elem(i, j) as f32
+                        });
+                    let (x, st) = if method == "lu" {
+                        plu_solve_refined(&ctx, &mut a_lo, &a_hi, &b_hi).unwrap()
+                    } else {
+                        pchol_solve_refined(&ctx, &mut a_lo, &a_hi, &b_hi).unwrap()
+                    };
+                    let xt = workload.x_true::<f64>(n);
+                    (st.sweeps, st.converged, st.backward_err, worst_err(&x, &desc, mesh.row(), n, &xt))
+                });
+            for (sweeps, converged, berr, worst) in out {
+                assert!(converged, "{method} {pr}x{pc} n={n}: berr {berr}");
+                assert!(
+                    (1..=REFINE_MAX_SWEEPS).contains(&sweeps),
+                    "{method} {pr}x{pc}: f32 factors must need 1..={REFINE_MAX_SWEEPS} sweeps, got {sweeps}"
+                );
+                assert!(berr <= refine_bound::<f32>(n), "{method}: berr {berr}");
+                // Far beyond what an unrefined f32 solve could reach.
+                assert!(worst < 1e-9, "{method} {pr}x{pc} n={n}: worst {worst}");
+            }
+        }
+    }
+}
+
+/// A system whose condition number swamps f32 factors must come back
+/// `converged = false` (or a factorization breakdown) — that flag is what
+/// routes the cluster layer to its uniform-precision fallback.
+#[test]
+fn unrefinable_system_reports_failure_instead_of_lying() {
+    let n = 24;
+    let out = World::run::<f32, _, _>(2, NetworkModel::gigabit_ethernet(), move |comm| {
+        let mesh = Mesh::new(&comm, MeshShape::new(2, 1));
+        let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(TILE)));
+        let desc = Descriptor::new(n, n, TILE, mesh.shape());
+        let elem = |i: usize, j: usize| 1.0 / ((i + j + 1) as f64);
+        let a_hi = DistMatrix::<f64>::from_fn(desc, mesh.row(), mesh.col(), elem);
+        let b_hi = DistVector::<f64>::from_fn(desc, mesh.row(), mesh.col(), |i| {
+            (0..n).map(|j| elem(i, j)).sum()
+        });
+        let mut a_lo = DistMatrix::<f32>::from_fn(desc, mesh.row(), mesh.col(), move |i, j| {
+            elem(i, j) as f32
+        });
+        match plu_solve_refined(&ctx, &mut a_lo, &a_hi, &b_hi) {
+            Ok((_, st)) => (!st.converged, st.sweeps),
+            Err(_) => (true, 0),
+        }
+    });
+    for (fell_back, sweeps) in out {
+        assert!(fell_back, "refinement claimed convergence on a Hilbert system");
+        assert!(sweeps <= REFINE_MAX_SWEEPS, "stagnation guard must cap the sweep count");
+    }
+}
+
+/// At `S = f64` (`Hi = Self`) the mixed Krylov solvers ARE the uniform
+/// solvers, bit for bit — every scalar of the recurrence and every entry
+/// of the answer.  This is the `--no-mixed` honesty contract the cluster
+/// relies on.
+#[test]
+fn mixed_krylov_at_f64_is_bit_identical_to_uniform() {
+    let n = 48;
+    for spd in [true, false] {
+        let out = World::run::<f64, _, _>(4, NetworkModel::gigabit_ethernet(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(2, 2));
+            let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(TILE)));
+            let desc = Descriptor::new(n, n, TILE, mesh.shape());
+            let workload = if spd { Workload::Spd } else { Workload::DiagDominant };
+            let a = DistMatrix::<f64>::from_fn(
+                desc,
+                mesh.row(),
+                mesh.col(),
+                workload.elem::<f64>(n),
+            );
+            let b =
+                DistVector::<f64>::from_fn(desc, mesh.row(), mesh.col(), workload.rhs::<f64>(n));
+            let cfg = IterConfig { tol: 1e-11, max_iter: 400, restart: 30 };
+            let (xp, sp) = if spd {
+                cg(&ctx, &a, &b, &cfg).unwrap()
+            } else {
+                bicgstab(&ctx, &a, &b, &cfg).unwrap()
+            };
+            let (xm, sm) = if spd {
+                cg_mixed(&ctx, &a, &b, &cfg).unwrap()
+            } else {
+                bicgstab_mixed(&ctx, &a, &b, &cfg).unwrap()
+            };
+            let plain_bits: Vec<Vec<u64>> = (0..xp.local_blocks())
+                .map(|l| xp.block(l).iter().map(|v| v.to_bits()).collect())
+                .collect();
+            let mixed_bits: Vec<Vec<u64>> = (0..xm.local_blocks())
+                .map(|l| xm.block(l).iter().map(|v| v.to_bits()).collect())
+                .collect();
+            (
+                plain_bits,
+                mixed_bits,
+                sp.iterations,
+                sm.iterations,
+                sp.converged && sm.converged,
+                sp.rel_residual.to_bits(),
+                sm.rel_residual.to_bits(),
+            )
+        });
+        for (pb, mb, pit, mit, conv, pres, mres) in out {
+            assert!(conv, "spd={spd}: both arms must converge");
+            assert_eq!(pit, mit, "spd={spd}: same iteration count");
+            assert_eq!(pres, mres, "spd={spd}: same final residual, bit for bit");
+            assert_eq!(pb, mb, "spd={spd}: same answer, bit for bit");
+        }
+    }
+}
+
+/// In an f32 world the wide accumulators must still recover the known
+/// solution: f32 storage, f32 wire payloads, f64 dot products.
+#[test]
+fn mixed_krylov_at_f32_recovers_the_known_solution() {
+    let n = 40;
+    for spd in [true, false] {
+        let out = World::run::<f32, _, _>(4, NetworkModel::gigabit_ethernet(), move |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::new(2, 2));
+            let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(TILE)));
+            let desc = Descriptor::new(n, n, TILE, mesh.shape());
+            let workload = if spd { Workload::Spd } else { Workload::DiagDominant };
+            let a = DistMatrix::<f32>::from_fn(
+                desc,
+                mesh.row(),
+                mesh.col(),
+                workload.elem::<f32>(n),
+            );
+            let b =
+                DistVector::<f32>::from_fn(desc, mesh.row(), mesh.col(), workload.rhs::<f32>(n));
+            let cfg = IterConfig { tol: 1e-5, max_iter: 400, restart: 30 };
+            let (x, st) = if spd {
+                cg_mixed(&ctx, &a, &b, &cfg).unwrap()
+            } else {
+                bicgstab_mixed(&ctx, &a, &b, &cfg).unwrap()
+            };
+            let xt = workload.x_true::<f64>(n);
+            let mut worst = 0.0f64;
+            for l in 0..x.local_blocks() {
+                let ti = desc.global_ti(mesh.row(), l);
+                for (i, &v) in x.block(l).iter().enumerate() {
+                    let g = ti * desc.tile + i;
+                    if g < n {
+                        worst = worst.max((v as f64 - xt(g)).abs());
+                    }
+                }
+            }
+            (st.converged, st.iterations, worst)
+        });
+        for (converged, iterations, worst) in out {
+            assert!(converged, "spd={spd}: mixed Krylov must converge at 1e-5");
+            assert!(iterations > 0 && iterations < 400);
+            assert!(worst < 1e-3, "spd={spd}: worst forward error {worst}");
+        }
+    }
+}
+
+/// The gate probes agree across layers: dtype capability, engine profile
+/// advantage, and the cost-model twin gate composed from them.
+#[test]
+fn gate_probes_agree_across_layers() {
+    assert!(mixed_capable::<f64>(), "f64 has a narrower storage dtype (f32)");
+    assert!(!mixed_capable::<f32>(), "f32 has nothing narrower to drop to");
+    assert!(ComputeProfile::gtx280_cublas().mixed_advantage());
+    assert!(!ComputeProfile::q6600_atlas().mixed_advantage());
+    for gpu in [false, true] {
+        let p = ModelParams {
+            tile: DEFAULT_TILE,
+            shape: MeshShape::near_square(4),
+            net: NetworkModel::gigabit_ethernet(),
+            engine: if gpu {
+                ComputeProfile::gtx280_cublas()
+            } else {
+                ComputeProfile::q6600_atlas()
+            },
+            panel_cpu: ComputeProfile::q6600_atlas(),
+            swap_fraction: 0.5,
+            device_mem: cuplss::accel::DEFAULT_DEVICE_MEM,
+        };
+        assert_eq!(model_mixed_engaged::<f64>(&p), gpu);
+        assert!(!model_mixed_engaged::<f32>(&p));
+    }
+}
+
+/// On the host arm the gate is closed (`mixed_advantage` is false for the
+/// Q6600 profile), so `mixed_precision: false` must change *nothing*:
+/// same answer bits, same virtual time, zeroed mixed report fields.
+#[test]
+fn no_mixed_knob_is_exactly_inert_on_the_host_arm() {
+    let solve = |mixed: bool, workload: Workload, n: usize, method: Method| {
+        Cluster::new(ClusterConfig {
+            mixed_precision: mixed,
+            ..ClusterConfig::small(4, TILE)
+        })
+        .unwrap()
+        .solve::<f64>(workload, n, method)
+        .unwrap()
+    };
+    let cases: &[(Workload, usize, Method)] = &[
+        (Workload::DiagDominant, 48, Method::Lu),
+        (Workload::Spd, 48, Method::Cholesky),
+        (Workload::Spd, 48, Method::Iterative(IterMethod::Cg)),
+        (Workload::DiagDominant, 48, Method::Iterative(IterMethod::Bicgstab)),
+    ];
+    for &(w, n, m) in cases {
+        let on = solve(true, w, n, m);
+        let off = solve(false, w, n, m);
+        for r in [&on, &off] {
+            assert_eq!(r.refine_iters, 0, "{}: host arm never refines", m.name());
+            assert_eq!(r.bytes_saved_mixed, 0, "{}: host arm saves no bytes", m.name());
+            assert!(!r.mixed_fallback, "{}: nothing to fall back from", m.name());
+        }
+        assert_eq!(
+            on.max_err.to_bits(),
+            off.max_err.to_bits(),
+            "{}: --no-mixed must be a bit-identical wash on the host arm",
+            m.name()
+        );
+        assert_eq!(
+            on.makespan().to_bits(),
+            off.makespan().to_bits(),
+            "{}: same virtual time too",
+            m.name()
+        );
+        assert_eq!(on.total_bytes(), off.total_bytes(), "{}: same wire traffic", m.name());
+    }
+}
+
+/// End to end on the accelerated arm (gate open): the mixed path must hold
+/// f64 accuracy while reporting its narrow-precision work — refinement
+/// sweeps for the direct solvers, saved wire bytes for both families —
+/// and the `--no-mixed` arm must report none of it.
+#[test]
+fn mixed_cluster_end_to_end_on_the_accelerated_arm() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let solve = |mixed: bool, workload: Workload, n: usize, method: Method| {
+        Cluster::new(ClusterConfig {
+            ranks: 4,
+            tile: 128,
+            engine: EngineKind::Accelerated,
+            artifact_dir: artifacts_dir(),
+            mixed_precision: mixed,
+            iter: IterConfig { tol: 1e-9, max_iter: 400, restart: 30 },
+            ..Default::default()
+        })
+        .expect("accelerated cluster")
+        .solve::<f64>(workload, n, method)
+        .unwrap()
+    };
+    // Direct: f32 tiles through the XLA factor path + wide refinement.
+    for (w, m) in [(Workload::DiagDominant, Method::Lu), (Workload::Spd, Method::Cholesky)] {
+        let on = solve(true, w, 200, m);
+        assert!(on.max_err < 1e-6, "{}: mixed path holds f64 accuracy, got {}", m.name(), on.max_err);
+        if !on.mixed_fallback {
+            assert!(on.refine_iters >= 1, "{}: narrow factors need sweeps", m.name());
+            assert!(on.bytes_saved_mixed > 0, "{}: narrow wire must save bytes", m.name());
+        }
+        let off = solve(false, w, 200, m);
+        assert!(off.max_err < 1e-6);
+        assert_eq!(off.refine_iters, 0);
+        assert_eq!(off.bytes_saved_mixed, 0);
+        assert!(!off.mixed_fallback);
+    }
+    // Krylov: f32 storage world with f64 accumulators.  The tolerance must
+    // clear the f32 storage floor (~n*eps32) or the honest fallback fires
+    // and the narrow arm never gets to report its savings.
+    let on = Cluster::new(ClusterConfig {
+        ranks: 4,
+        tile: 128,
+        engine: EngineKind::Accelerated,
+        artifact_dir: artifacts_dir(),
+        mixed_precision: true,
+        iter: IterConfig { tol: 1e-4, max_iter: 400, restart: 30 },
+        ..Default::default()
+    })
+    .unwrap()
+    .solve::<f64>(Workload::Spd, 200, Method::Iterative(IterMethod::Cg))
+    .unwrap();
+    assert!(!on.mixed_fallback, "1e-4 is reachable from f32 storage");
+    assert!(on.max_err < 1e-2, "mixed CG forward error {}", on.max_err);
+    assert_eq!(on.refine_iters, 0, "mixed Krylov refines nothing");
+    assert!(on.bytes_saved_mixed > 0, "f32 payloads must save wire bytes");
+    let (_, _, conv) = on.iter_stats.unwrap();
+    assert!(conv);
+}
