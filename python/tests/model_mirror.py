@@ -424,30 +424,42 @@ def _summa_makespan_cached(n, p, b, overlapped, combine):
 def chol_factor_impl(n, p, b, resident=False, combine=_add):
     """rust chol_factor_impl: the factor loop alone (no substitutions, no
     transpose traffic) — split out so the batched solve twin can reuse it."""
+    kt = ceil_div(n, p.tile)
+    total = 0.0
+    for k in range(kt):
+        # Term-level accumulation (NOT a per-step regroup): the committed
+        # artifacts pin these bits, and (x + a) + b != x + (a + b).
+        total = chol_step_cost(n, p, b, k, resident, combine, total)
+    return total
+
+
+def chol_step_cost(n, p, b, k, resident, combine, total):
+    """rust chol_step_cost: one panel step of the Cholesky factor loop,
+    accumulated onto `total` term by term — threading the accumulator keeps
+    the full-loop float association identical to the pre-split code while
+    letting the fault-recovery twins price replay spans `[a, b)`."""
     t = p.tile
     kt = ceil_div(n, t)
     pr, pc = p.pr, p.pc
     t2 = t * t
-    total = 0.0
-    for k in range(kt):
-        trailing = kt - k - 1
-        total += p.op("potrf", b)
-        total += p.tree(pr, t2, b)
-        total += ceil_div(trailing, pr) * p.op("trsm_rlt", b)
-        if trailing == 0:
-            continue
-        total += ceil_div(trailing, pr) * p.tree(pc, t2, b)
-        total += ceil_div(trailing, pc) * p.tree(pr, t2, b)
-        my_rows = ceil_div(trailing, pr)
-        my_cols = ceil_div(trailing, pc)
-        my_tiles = ceil_div(my_rows * my_cols, 2)
-        if resident and p.engine.pcie_bw > 0.0:
-            total += combine(
-                my_tiles * p.op_resident("gemm_nt_update", b),
-                p.resident_extra(my_rows, my_cols, my_tiles, k == 0, 0.0, 4, 1, b),
-            )
-        else:
-            total += my_tiles * p.op("gemm_nt_update", b)
+    trailing = kt - k - 1
+    total += p.op("potrf", b)
+    total += p.tree(pr, t2, b)
+    total += ceil_div(trailing, pr) * p.op("trsm_rlt", b)
+    if trailing == 0:
+        return total
+    total += ceil_div(trailing, pr) * p.tree(pc, t2, b)
+    total += ceil_div(trailing, pc) * p.tree(pr, t2, b)
+    my_rows = ceil_div(trailing, pr)
+    my_cols = ceil_div(trailing, pc)
+    my_tiles = ceil_div(my_rows * my_cols, 2)
+    if resident and p.engine.pcie_bw > 0.0:
+        total += combine(
+            my_tiles * p.op_resident("gemm_nt_update", b),
+            p.resident_extra(my_rows, my_cols, my_tiles, k == 0, 0.0, 4, 1, b),
+        )
+    else:
+        total += my_tiles * p.op("gemm_nt_update", b)
     return total
 
 
@@ -1145,6 +1157,139 @@ def sparse_iter_makespan_mixed(method, n, nnz, iters, restart, p, b):
         method, n, nnz, iters, restart, p, 4
     )
     return min(mixed, uniform)
+
+
+# ---------------------------------------------------------------------------
+# bench_harness/model.rs — fault-tolerance twins (DESIGN.md §18)
+# ---------------------------------------------------------------------------
+
+
+def ckpt_leg(n, p, b):
+    """model.rs ckpt_leg::<S>: one direct-method checkpoint — D2H of the
+    rank's local tile share.  0 on host profiles."""
+    return p.xfer(local_matrix_elems(n, p), b)
+
+
+def n_panels(n, p):
+    """model.rs n_panels: panel count of an n x n factorisation."""
+    return ceil_div(n, p.tile)
+
+
+def n_checkpoints(panels, every):
+    """model.rs n_checkpoints: one per `every` panels, panel 0 included."""
+    return ceil_div(panels, max(every, 1))
+
+
+def lu_span(n, p, b, start, stop):
+    """model.rs lu_span: replay span of LU panels [start, stop) — the
+    identical per-step terms of the resident/prefetch (gpudirect) flow."""
+    parts = lu_step_parts(n, p, b, resident=True)
+    return sum(
+        cpu + comm + pre + max(uc, up)
+        for cpu, comm, pre, uc, up in parts[start:stop]
+    )
+
+
+def chol_span(n, p, b, start, stop):
+    """model.rs chol_span: replay span of Cholesky panels [start, stop)."""
+    acc = 0.0
+    for k in range(start, stop):
+        acc = chol_step_cost(n, p, b, k, True, max, acc)
+    return acc
+
+
+def lu_makespan_ckpt(n, every, p, b):
+    """model.rs lu_makespan_ckpt::<S>: the gpudirect twin plus one D2H leg
+    per checkpoint — fault-free overhead is exactly the leg sum."""
+    return (
+        lu_makespan_gpudirect(n, p, b)
+        + n_checkpoints(n_panels(n, p), every) * ckpt_leg(n, p, b)
+    )
+
+
+def chol_makespan_ckpt(n, every, p, b):
+    return (
+        chol_makespan_gpudirect(n, p, b)
+        + n_checkpoints(n_panels(n, p), every) * ckpt_leg(n, p, b)
+    )
+
+
+def lu_recovery_full(n, crash, reboot, p, b):
+    """model.rs lu_recovery_full::<S>: fault-free run + reboot + a full
+    replay of panels [0, crash)."""
+    return lu_makespan_gpudirect(n, p, b) + reboot + lu_span(n, p, b, 0, crash)
+
+
+def lu_recovery_ckpt(n, every, crash, reboot, p, b):
+    """model.rs lu_recovery_ckpt::<S>: the checkpoint-taxed run + reboot +
+    one restore leg + replay of only [last_checkpoint, crash)."""
+    e = max(every, 1)
+    last = (crash // e) * e
+    return (
+        lu_makespan_ckpt(n, every, p, b)
+        + reboot
+        + ckpt_leg(n, p, b)
+        + lu_span(n, p, b, last, crash)
+    )
+
+
+def chol_recovery_full(n, crash, reboot, p, b):
+    return chol_makespan_gpudirect(n, p, b) + reboot + chol_span(n, p, b, 0, crash)
+
+
+def chol_recovery_ckpt(n, every, crash, reboot, p, b):
+    e = max(every, 1)
+    last = (crash // e) * e
+    return (
+        chol_makespan_ckpt(n, every, p, b)
+        + reboot
+        + ckpt_leg(n, p, b)
+        + chol_span(n, p, b, last, crash)
+    )
+
+
+def krylov_snap_leg(method, n, p, b):
+    """model.rs krylov_snap_leg::<S>: CG/BiCGSTAB snapshot three local
+    vector blocks (x, r, p), GMRES snapshots x alone; 0 on host profiles
+    and for methods without a fault-tolerant variant."""
+    vecs = {"cg": 3, "bicgstab": 3, "gmres": 1}.get(method, 0)
+    vec_elems = ceil_div(ceil_div(n, p.tile), p.pr) * p.tile
+    return vecs * p.xfer(vec_elems, b)
+
+
+def krylov_snap_period(method, every, restart):
+    """model.rs krylov_snap_period: GMRES snapshots at every restart cycle
+    (the policy's period is ignored), CG/BiCGSTAB honor `every`."""
+    return max(restart, 1) if method == "gmres" else max(every, 1)
+
+
+def iter_makespan_ckpt(method, n, iters, restart, every, p, b):
+    """model.rs iter_makespan_ckpt::<S>: one snapshot leg per period,
+    iteration 0 included."""
+    period = krylov_snap_period(method, every, restart)
+    return (
+        iter_makespan_gpudirect(method, n, iters, restart, p, b)
+        + n_checkpoints(iters, period) * krylov_snap_leg(method, n, p, b)
+    )
+
+
+def iter_recovery_full(method, n, iters, restart, crash, reboot, p, b):
+    return (
+        iter_makespan_gpudirect(method, n, iters, restart, p, b)
+        + reboot
+        + iter_makespan_gpudirect(method, n, crash, restart, p, b)
+    )
+
+
+def iter_recovery_ckpt(method, n, iters, restart, every, crash, reboot, p, b):
+    period = krylov_snap_period(method, every, restart)
+    last = (crash // period) * period
+    return (
+        iter_makespan_ckpt(method, n, iters, restart, every, p, b)
+        + reboot
+        + krylov_snap_leg(method, n, p, b)
+        + iter_makespan_gpudirect(method, n, crash - last, restart, p, b)
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -1876,5 +2021,113 @@ def render_mixed_json():
             f'"ranks": {ranks}, "f64_secs": {_rust_e6(wide)}, '
             f'"mixed_secs": {_rust_e6(mixed)}, '
             f'"saved_frac": {1.0 - mixed / wide:.4f}, "strict": {flag}}}{comma}'
+        )
+    return "\n".join(lines + ["  ]", "}", ""])
+
+
+FAULTS_ITERS = 100
+FAULTS_RESTART = 30
+FAULTS_EVERY_DIRECT = 16
+FAULTS_EVERY_KRYLOV = 10
+FAULTS_CRASH_FRACS = (0.25, 0.5, 0.9)
+FAULTS_REBOOT = 0.5  # comm/faults.rs FaultPlan::default().reboot_secs
+
+
+def faults_rows():
+    """Rows of BENCH_faults.json (rust/benches/faults.rs): each row is
+    (kernel, engine, n, ranks, pr, pc, every, crash, base, ckpt, legs,
+    full_rec, ckpt_rec, strict).  Row order mirrors the bench exactly:
+    direct kernels interleave LU/Cholesky per crash fraction."""
+    rows = []
+    for ranks in PAPER_RANKS:
+        for gpu in (False, True):
+            p = params(ranks, gpu)
+            engine = "MPI+CUDA" if gpu else "MPI+ATLAS"
+
+            panels = n_panels(PAPER_N, p)
+            dlegs = (
+                n_checkpoints(panels, FAULTS_EVERY_DIRECT)
+                * ckpt_leg(PAPER_N, p, 4)
+            )
+            for frac in FAULTS_CRASH_FRACS:
+                crash = max(int(panels * frac), FAULTS_EVERY_DIRECT)
+                rows.append((
+                    "LU", engine, PAPER_N, ranks, p.pr, p.pc,
+                    FAULTS_EVERY_DIRECT, crash,
+                    lu_makespan_gpudirect(PAPER_N, p, 4),
+                    lu_makespan_ckpt(PAPER_N, FAULTS_EVERY_DIRECT, p, 4),
+                    dlegs,
+                    lu_recovery_full(PAPER_N, crash, FAULTS_REBOOT, p, 4),
+                    lu_recovery_ckpt(
+                        PAPER_N, FAULTS_EVERY_DIRECT, crash, FAULTS_REBOOT, p, 4
+                    ),
+                    crash >= FAULTS_EVERY_DIRECT,
+                ))
+                rows.append((
+                    "Cholesky", engine, PAPER_N, ranks, p.pr, p.pc,
+                    FAULTS_EVERY_DIRECT, crash,
+                    chol_makespan_gpudirect(PAPER_N, p, 4),
+                    chol_makespan_ckpt(PAPER_N, FAULTS_EVERY_DIRECT, p, 4),
+                    dlegs,
+                    chol_recovery_full(PAPER_N, crash, FAULTS_REBOOT, p, 4),
+                    chol_recovery_ckpt(
+                        PAPER_N, FAULTS_EVERY_DIRECT, crash, FAULTS_REBOOT, p, 4
+                    ),
+                    crash >= FAULTS_EVERY_DIRECT,
+                ))
+
+            for m, name in (("cg", "CG"), ("bicgstab", "BiCGSTAB")):
+                period = krylov_snap_period(m, FAULTS_EVERY_KRYLOV, FAULTS_RESTART)
+                klegs = (
+                    n_checkpoints(FAULTS_ITERS, period)
+                    * krylov_snap_leg(m, PAPER_N, p, 4)
+                )
+                for frac in FAULTS_CRASH_FRACS:
+                    crash = max(int(FAULTS_ITERS * frac), period)
+                    rows.append((
+                        name, engine, PAPER_N, ranks, p.pr, p.pc,
+                        period, crash,
+                        iter_makespan_gpudirect(
+                            m, PAPER_N, FAULTS_ITERS, FAULTS_RESTART, p, 4
+                        ),
+                        iter_makespan_ckpt(
+                            m, PAPER_N, FAULTS_ITERS, FAULTS_RESTART,
+                            FAULTS_EVERY_KRYLOV, p, 4,
+                        ),
+                        klegs,
+                        iter_recovery_full(
+                            m, PAPER_N, FAULTS_ITERS, FAULTS_RESTART, crash,
+                            FAULTS_REBOOT, p, 4,
+                        ),
+                        iter_recovery_ckpt(
+                            m, PAPER_N, FAULTS_ITERS, FAULTS_RESTART,
+                            FAULTS_EVERY_KRYLOV, crash, FAULTS_REBOOT, p, 4,
+                        ),
+                        crash >= period,
+                    ))
+    return rows
+
+
+def render_faults_json():
+    """The exact bytes `cargo bench --bench faults` writes."""
+    rows = faults_rows()
+    lines = ['{', '  "network": "gigabit_ethernet",', '  "tile": 256,',
+             f'  "n": {PAPER_N},', f'  "iters": {FAULTS_ITERS},',
+             f'  "every_direct": {FAULTS_EVERY_DIRECT},',
+             f'  "every_krylov": {FAULTS_EVERY_KRYLOV},',
+             f'  "reboot_secs": {_rust_e6(FAULTS_REBOOT)},', '  "entries": [']
+    for i, (kernel, engine, n, ranks, pr, pc, every, crash, base, ckpt,
+            legs, full_rec, ckpt_rec, strict) in enumerate(rows):
+        comma = "," if i + 1 < len(rows) else ""
+        flag = "true" if strict else "false"
+        lines.append(
+            f'    {{"kernel": "{kernel}", "engine": "{engine}", "n": {n}, '
+            f'"ranks": {ranks}, "pr": {pr}, "pc": {pc}, "every": {every}, '
+            f'"crash": {crash}, "base_secs": {_rust_e6(base)}, '
+            f'"ckpt_secs": {_rust_e6(ckpt)}, "legs_secs": {_rust_e6(legs)}, '
+            f'"full_recovery_secs": {_rust_e6(full_rec)}, '
+            f'"ckpt_recovery_secs": {_rust_e6(ckpt_rec)}, '
+            f'"saved_frac": {1.0 - ckpt_rec / full_rec:.4f}, '
+            f'"strict": {flag}}}{comma}'
         )
     return "\n".join(lines + ["  ]", "}", ""])

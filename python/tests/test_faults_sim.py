@@ -1,0 +1,367 @@
+"""No-toolchain verification of the fault-tolerance PR (rust DESIGN.md §18).
+
+Five independent oracles:
+
+1. **Model-twin shape** — exactly what `cargo bench --bench faults`
+   asserts: on every emitted grid point the fault-free checkpointed
+   makespan is the base **plus exactly the priced D2H legs** (bitwise:
+   the twin IS literally `base + legs`), every crash lands at or past
+   the first checkpoint, and checkpointed recovery strictly undercuts
+   recompute-from-scratch.  On the host arm the legs are literally zero
+   (no PCIe), so the checkpointed makespan IS the base and the win is a
+   pure replay-span shrink.
+2. **Committed artifact** — `BENCH_faults.json` must be byte-identical
+   to what the model mirror produces, with a valid schema and the
+   inequalities re-checked straight from the parsed JSON.
+3. **Model structure** — the checkpoint/snapshot counters, the
+   restore-leg pricing (CG/BiCGSTAB snapshot 3 vectors, GMRES 1; GMRES
+   ignores the policy period in favour of its restart cycle), and the
+   crash-at-a-checkpoint limit where checkpointed recovery replays
+   exactly zero panels.
+4. **Numeric recovery simulation** — numpy mirrors of the rust
+   `rust/tests/faults.rs` bit-identity tests: a panel-checkpointed LU
+   and a snapshot-restarted CG that crash mid-run and recover to
+   **bit-identical** results, a crash with no checkpoint that fails
+   loudly (message contains "crash"), and a non-finite recurrence guard
+   that reports a diagnostic instead of iterating on NaNs.
+5. **Retry pricing arithmetic** — the transport's exponential-backoff
+   charge for scripted drops: `times` drops of one message cost exactly
+   `sum(timeout * 2^i)` seconds of waiting, mirrored against the
+   `drop:0-1#2x2; timeout:1e-3` integration test's 3 ms timeline.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+
+import model_mirror as mm
+
+RETRY_TIMEOUT = 1e-3  # comm/faults.rs FaultPlan::default().retry_timeout
+
+
+# ---------------------------------------------------------------------------
+# 1. model twins — bench acceptance shape
+# ---------------------------------------------------------------------------
+
+
+def test_faults_bench_acceptance_shape():
+    rows = mm.faults_rows()
+    # ranks x engines x 4 kernels x 3 crash fractions
+    assert len(rows) == len(mm.PAPER_RANKS) * 2 * 4 * 3
+    for (kernel, engine, n, ranks, pr, pc, every, crash, base, ckpt, legs,
+         full_rec, ckpt_rec, strict) in rows:
+        label = f"{kernel} {engine} P={ranks} crash={crash}"
+        assert n == mm.PAPER_N and pr * pc == ranks
+        # Bitwise: the ckpt twin is constructed as base + legs, nothing else.
+        assert ckpt == base + legs, label
+        assert strict and crash >= every, label
+        assert ckpt_rec < full_rec, label
+
+
+def test_host_arm_checkpoints_are_free_and_still_win():
+    for row in mm.faults_rows():
+        engine, base, ckpt, legs = row[1], row[8], row[9], row[10]
+        if engine == "MPI+ATLAS":
+            # No PCIe: the D2H leg prices to literal zero...
+            assert legs == 0.0
+            assert ckpt == base
+        else:
+            # ...while the CUDA arm pays a real, strictly positive tax.
+            assert legs > 0.0
+            assert ckpt > base
+
+
+def test_savings_grow_with_the_crash_point():
+    # Later crashes replay more under full recovery but the same bounded
+    # tail under checkpointing, so the saved fraction must be monotone in
+    # the crash point within each (kernel, engine, ranks) cell.
+    cells = {}
+    for row in mm.faults_rows():
+        kernel, engine, ranks, crash = row[0], row[1], row[3], row[7]
+        full_rec, ckpt_rec = row[11], row[12]
+        cells.setdefault((kernel, engine, ranks), []).append(
+            (crash, 1.0 - ckpt_rec / full_rec)
+        )
+    for key, pts in cells.items():
+        pts.sort()
+        saved = [s for _, s in pts]
+        assert saved == sorted(saved), f"{key}: {saved}"
+
+
+# ---------------------------------------------------------------------------
+# 2. committed artifact
+# ---------------------------------------------------------------------------
+
+
+def test_faults_artifact_bytes():
+    root = pathlib.Path(__file__).resolve().parents[2]
+    assert (root / "BENCH_faults.json").read_text() == mm.render_faults_json()
+
+
+def test_faults_artifact_is_valid_json_with_expected_schema():
+    root = pathlib.Path(__file__).resolve().parents[2]
+    doc = json.loads((root / "BENCH_faults.json").read_text())
+    assert doc["network"] == "gigabit_ethernet"
+    assert doc["tile"] == 256
+    assert doc["n"] == mm.PAPER_N
+    assert doc["iters"] == mm.FAULTS_ITERS
+    assert doc["every_direct"] == mm.FAULTS_EVERY_DIRECT
+    assert doc["every_krylov"] == mm.FAULTS_EVERY_KRYLOV
+    assert doc["reboot_secs"] == mm.FAULTS_REBOOT
+    entries = doc["entries"]
+    assert len(entries) == 120
+    kernels = {e["kernel"] for e in entries}
+    assert kernels == {"LU", "Cholesky", "CG", "BiCGSTAB"}
+    for e in entries:
+        assert e["strict"] is True
+        assert e["crash"] >= e["every"]
+        assert e["ckpt_recovery_secs"] < e["full_recovery_secs"]
+        assert abs(
+            e["ckpt_secs"] - (e["base_secs"] + e["legs_secs"])
+        ) <= 1e-6 * e["ckpt_secs"]  # 6-sig-digit serialization of an exact sum
+        assert abs(
+            e["saved_frac"]
+            - (1.0 - e["ckpt_recovery_secs"] / e["full_recovery_secs"])
+        ) <= 5e-5  # the emitted ratio is rounded to 4 decimals
+
+
+# ---------------------------------------------------------------------------
+# 3. model structure
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_counter_includes_panel_zero():
+    # One checkpoint per `every` panels, the panel-0 snapshot included, so
+    # any detectable crash (probes run at boundaries > 0) has a restore
+    # point at or before it.
+    assert mm.n_checkpoints(235, 16) == 15
+    assert mm.n_checkpoints(16, 16) == 1
+    assert mm.n_checkpoints(17, 16) == 2
+    assert mm.n_checkpoints(100, 10) == 10
+    # Degenerate policies clamp to every-panel checkpointing.
+    assert mm.n_checkpoints(8, 0) == 8
+
+
+def test_direct_ckpt_leg_is_the_local_tile_share():
+    for ranks in mm.PAPER_RANKS:
+        p = mm.params(ranks, gpu=True)
+        expect = p.xfer(mm.local_matrix_elems(mm.PAPER_N, p), 4)
+        assert mm.ckpt_leg(mm.PAPER_N, p, 4) == expect
+        assert expect > 0.0
+        # Host profile: no PCIe link to price.
+        assert mm.ckpt_leg(mm.PAPER_N, mm.params(ranks, gpu=False), 4) == 0.0
+
+
+def test_krylov_snapshot_legs_and_periods():
+    p = mm.params(4, gpu=True)
+    n = mm.PAPER_N
+    # CG and BiCGSTAB snapshot (x, r, p): exactly 3x the GMRES x-only leg.
+    assert mm.krylov_snap_leg("cg", n, p, 4) == 3 * mm.krylov_snap_leg(
+        "gmres", n, p, 4
+    )
+    assert mm.krylov_snap_leg("bicgstab", n, p, 4) == mm.krylov_snap_leg(
+        "cg", n, p, 4
+    )
+    # Methods without a fault-tolerant variant snapshot nothing.
+    assert mm.krylov_snap_leg("pipecg", n, p, 4) == 0.0
+    # GMRES snapshots at restart-cycle boundaries, ignoring the policy.
+    assert mm.krylov_snap_period("gmres", 10, 30) == 30
+    assert mm.krylov_snap_period("cg", 10, 30) == 10
+    assert mm.krylov_snap_period("cg", 0, 30) == 1
+
+
+def test_crash_at_a_checkpoint_replays_zero_panels():
+    # When the crash lands exactly on a checkpoint boundary the ckpt arm
+    # replays nothing: recovery is the taxed run + reboot + one restore leg.
+    p = mm.params(8, gpu=True)
+    n, every, reboot = mm.PAPER_N, 16, mm.FAULTS_REBOOT
+    crash = 3 * every
+    assert mm.lu_recovery_ckpt(n, every, crash, reboot, p, 4) == (
+        mm.lu_makespan_ckpt(n, every, p, 4) + reboot + mm.ckpt_leg(n, p, 4)
+    )
+    # The full arm replays all 48 panels and must pay strictly more.
+    assert mm.lu_span(n, p, 4, 0, crash) > 0.0
+    assert mm.lu_recovery_full(n, crash, reboot, p, 4) > (
+        mm.lu_recovery_ckpt(n, every, crash, reboot, p, 4)
+    )
+
+
+def test_recovery_twins_decompose_into_their_priced_legs():
+    p = mm.params(16, gpu=True)
+    n, every, reboot = mm.PAPER_N, 16, mm.FAULTS_REBOOT
+    crash = 117  # mid-run, not on a boundary
+    last = (crash // every) * every
+    # Same association as the twins: taxed run + reboot + restore + replay.
+    assert mm.chol_recovery_ckpt(n, every, crash, reboot, p, 4) == (
+        mm.chol_makespan_ckpt(n, every, p, 4)
+        + reboot
+        + mm.ckpt_leg(n, p, 4)
+        + mm.chol_span(n, p, 4, last, crash)
+    )
+    period = mm.krylov_snap_period("cg", 10, 30)
+    it_crash, it_last = 57, 50
+    assert mm.iter_recovery_ckpt("cg", n, 100, 30, 10, it_crash, reboot, p, 4) == (
+        mm.iter_makespan_ckpt("cg", n, 100, 30, 10, p, 4)
+        + reboot
+        + mm.krylov_snap_leg("cg", n, p, 4)
+        + mm.iter_makespan_gpudirect("cg", n, it_crash - it_last, 30, p, 4)
+    )
+    assert (it_crash // period) * period == it_last
+
+
+# ---------------------------------------------------------------------------
+# 4. numeric recovery simulation (numpy mirrors of rust/tests/faults.rs)
+# ---------------------------------------------------------------------------
+
+
+def _lu_panel_step(a, k0, bs):
+    """One right-looking panel of an unpivoted LU (diag-dominant input)."""
+    n = a.shape[0]
+    for k in range(k0, min(k0 + bs, n)):
+        a[k + 1:, k] /= a[k, k]
+        a[k + 1:, k + 1:] -= np.outer(a[k + 1:, k], a[k, k + 1:])
+
+
+def _ckpt_lu(a0, bs, every=None, crash_panel=None):
+    """Panel-checkpointed LU mirroring plu_solve_panel_ckpt: snapshot every
+    `every` panels (panel 0 included), on a crash restore the last snapshot
+    and replay.  `every=None` disables checkpointing — a crash then raises
+    the same diagnostic shape the rust solver returns."""
+    a = a0.copy()
+    n = a.shape[0]
+    panels = list(range(0, n, bs))
+    snap = None
+    idx = 0
+    crashed = False
+    while idx < len(panels):
+        if every is not None and idx % every == 0:
+            snap = (a.copy(), idx)
+        if crash_panel is not None and not crashed and idx == crash_panel:
+            crashed = True
+            if snap is None:
+                raise RuntimeError(
+                    f"rank crash detected at panel {idx} with no checkpoint"
+                )
+            a, idx = snap[0].copy(), snap[1]
+            continue
+        _lu_panel_step(a, panels[idx], bs)
+        idx += 1
+    return a
+
+
+def _diag_dominant(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n))
+    a += np.diag(np.abs(a).sum(axis=1) + 1.0)
+    return a
+
+
+def test_checkpointed_lu_crash_recovery_is_bit_identical():
+    a0 = _diag_dominant(96, seed=3)
+    plain = _ckpt_lu(a0, bs=8)
+    ckpt = _ckpt_lu(a0, bs=8, every=4)
+    # The checkpoint taxes time, never bits.
+    assert ckpt.tobytes() == plain.tobytes()
+    # Crash mid-factorization (panel 7, last snapshot at 4): restore and
+    # replay reproduce the fault-free factors exactly.
+    crashed = _ckpt_lu(a0, bs=8, every=4, crash_panel=7)
+    assert crashed.tobytes() == plain.tobytes()
+
+
+def test_crash_without_checkpoints_fails_loudly():
+    a0 = _diag_dominant(64, seed=5)
+    try:
+        _ckpt_lu(a0, bs=8, every=None, crash_panel=5)
+    except RuntimeError as e:
+        assert "crash" in str(e)
+    else:
+        raise AssertionError("crash with no checkpoint must not succeed")
+
+
+def _cg(a, b, iters, every=None, crash_iter=None):
+    """Snapshot-restarted CG mirroring cg_ft: snapshot (x, r, p) every
+    `every` iterations (iteration 0 included), restore + replay on crash."""
+    x = np.zeros_like(b)
+    r = b - a @ x
+    p = r.copy()
+    rs = float(r @ r)
+    snap = None
+    it = 0
+    crashed = False
+    while it < iters:
+        if every is not None and it % every == 0:
+            snap = (x.copy(), r.copy(), p.copy(), rs, it)
+        if crash_iter is not None and not crashed and it == crash_iter:
+            crashed = True
+            x, r, p, rs, it = (
+                snap[0].copy(), snap[1].copy(), snap[2].copy(), snap[3], snap[4],
+            )
+            continue
+        ap = a @ p
+        with np.errstate(divide="ignore", invalid="ignore"):
+            alpha = np.float64(rs) / np.float64(p @ ap)
+        if not np.isfinite(alpha):
+            raise RuntimeError(f"cg: non-finite recurrence at iteration {it}")
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs2 = float(r @ r)
+        beta = rs2 / rs
+        p = r + beta * p
+        rs = rs2
+        it += 1
+    return x
+
+
+def test_snapshot_restarted_cg_is_bit_identical():
+    n = 80
+    a = _diag_dominant(n, seed=9)
+    a = (a + a.T) / 2.0 + n * np.eye(n)  # SPD
+    b = np.random.default_rng(13).standard_normal(n)
+    plain = _cg(a, b, iters=30)
+    snapped = _cg(a, b, iters=30, every=10)
+    assert snapped.tobytes() == plain.tobytes()
+    # Crash at iteration 17 (last snapshot at 10): replay matches exactly.
+    crashed = _cg(a, b, iters=30, every=10, crash_iter=17)
+    assert crashed.tobytes() == plain.tobytes()
+    # And the answer is actually a solve, not a fixed point of the harness.
+    assert np.abs(a @ plain - b).max() / np.abs(b).max() < 1e-8
+
+
+def test_nonfinite_recurrence_guard_reports_a_diagnostic():
+    # A zero operator drives p' A p to 0 -> alpha = inf: the guard must
+    # surface a diagnostic error instead of iterating on garbage.
+    n = 16
+    a = np.zeros((n, n))
+    b = np.ones(n)
+    try:
+        _cg(a, b, iters=5)
+    except RuntimeError as e:
+        assert "non-finite" in str(e)
+    else:
+        raise AssertionError("CG iterated on a non-finite recurrence")
+
+
+# ---------------------------------------------------------------------------
+# 5. retry pricing arithmetic
+# ---------------------------------------------------------------------------
+
+
+def _retry_wait(times, timeout):
+    """transport.rs exponential backoff: the i-th re-send of a dropped
+    message waits timeout * 2^i before going out again."""
+    return sum(timeout * 2.0 ** i for i in range(times))
+
+
+def test_scripted_drop_backoff_matches_the_transport_timeline():
+    # drop:0-1#2x2 with timeout:1e-3 -> two retries, 1 ms + 2 ms waited:
+    # the exact numbers rust/tests/faults.rs pins on the sender's CommStats.
+    assert abs(_retry_wait(2, RETRY_TIMEOUT) - 3e-3) < 1e-12
+    assert _retry_wait(0, RETRY_TIMEOUT) == 0.0
+    assert abs(_retry_wait(3, RETRY_TIMEOUT) - 7e-3) < 1e-12
+    # Doubling: each extra drop of the same message costs more than all
+    # previous waits combined, so stuck links surface fast in the stats.
+    for k in range(1, 6):
+        assert _retry_wait(k + 1, RETRY_TIMEOUT) > 2.0 * _retry_wait(
+            k, RETRY_TIMEOUT
+        ) - RETRY_TIMEOUT * 1e-9

@@ -178,8 +178,9 @@ fn main() {
         let p = params(serve_ranks, gpu);
         let engine = if gpu { "MPI+CUDA" } else { "MPI+ATLAS" };
         for batching in [true, false] {
-            let cfg = ServeConfig { rhs_batch: 8, batching, factor_cache: false };
-            let rep = schedule(&stream, &cfg, |members, _cached| {
+            let cfg =
+                ServeConfig { rhs_batch: 8, batching, factor_cache: false, ..ServeConfig::default() };
+            let rep = schedule(&stream, &cfg, |members, _ctx| {
                 let head = members[0];
                 let k = members.len();
                 let makespan = model_batch_cost(head.method, head.n, k, iters, &p);
@@ -187,6 +188,7 @@ fn main() {
                     makespan,
                     per_request_secs: vec![makespan / k as f64; k],
                     max_err: 0.0,
+                    degraded: false,
                 })
             })
             .expect("demo stream is arrival-ordered");
@@ -218,11 +220,16 @@ fn main() {
         let p = params(serve_ranks, gpu);
         let engine = if gpu { "MPI+CUDA" } else { "MPI+ATLAS" };
         for cache in [true, false] {
-            let cfg = ServeConfig { rhs_batch: 8, batching: true, factor_cache: cache };
-            let rep = schedule(&cache_stream, &cfg, |members, cached| {
+            let cfg = ServeConfig {
+                rhs_batch: 8,
+                batching: true,
+                factor_cache: cache,
+                ..ServeConfig::default()
+            };
+            let rep = schedule(&cache_stream, &cfg, |members, ctx| {
                 let head = members[0];
                 let k = members.len();
-                let makespan = if cached {
+                let makespan = if ctx.factor_cached {
                     // Both substitutions of the resident factors; nothing
                     // else is charged — matching Cluster::solve_batch_cached.
                     2.0 * trsm_makespan::<f32>(head.n, k, &p)
@@ -233,6 +240,7 @@ fn main() {
                     makespan,
                     per_request_secs: vec![makespan / k as f64; k],
                     max_err: 0.0,
+                    degraded: false,
                 })
             })
             .expect("demo stream is arrival-ordered");

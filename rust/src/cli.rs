@@ -17,6 +17,7 @@ pub struct Args {
 const VALUE_OPTS: &[&str] = &[
     "ranks", "tile", "engine", "method", "workload", "n", "dtype", "tol", "max-iter",
     "restart", "config", "net", "iters", "out", "device-mem", "rhs-batch", "requests",
+    "fault-plan", "ckpt-every", "factor-cache-cap", "deadline", "retry-budget",
 ];
 
 impl Args {

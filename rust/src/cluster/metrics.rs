@@ -44,6 +44,12 @@ pub struct RankMetrics {
     pub host_stage_saved_secs: f64,
     /// Kernel launches eliminated by fused BLAS-1 ops.
     pub launches_fused: u64,
+    /// Sends retransmitted after a scripted drop (fault plan; 0 without
+    /// one).
+    pub retries: u64,
+    /// Virtual seconds spent in retry timeouts (bounded exponential
+    /// backoff) waiting out those drops.
+    pub timeout_secs: f64,
     /// Wall-clock seconds this rank actually took (calibration data).
     pub wall: f64,
 }
@@ -74,6 +80,8 @@ impl RankMetrics {
             wire_direct_bytes: comm.stats().wire_direct_bytes(),
             host_stage_saved_secs: comm.stats().host_stage_saved_secs(),
             launches_fused: comm.stats().launches_fused(),
+            retries: comm.stats().retries(),
+            timeout_secs: comm.stats().timeout_secs(),
             wall,
         }
     }
@@ -98,6 +106,8 @@ impl RankMetrics {
         self.wire_direct_bytes += other.wire_direct_bytes;
         self.host_stage_saved_secs += other.host_stage_saved_secs;
         self.launches_fused += other.launches_fused;
+        self.retries += other.retries;
+        self.timeout_secs += other.timeout_secs;
         self.wall += other.wall;
     }
 }
@@ -300,6 +310,16 @@ impl SolveReport {
         self.per_rank.iter().map(|m| m.launches_fused).sum()
     }
 
+    /// Total sends retransmitted after scripted drops (fault plan).
+    pub fn total_retries(&self) -> u64 {
+        self.per_rank.iter().map(|m| m.retries).sum()
+    }
+
+    /// Total virtual seconds spent in retry timeouts across ranks.
+    pub fn total_timeout_secs(&self) -> f64 {
+        self.per_rank.iter().map(|m| m.timeout_secs).sum()
+    }
+
     /// Max wall-clock across ranks (the real elapsed time of the run).
     pub fn wall_max(&self) -> f64 {
         self.per_rank.iter().map(|m| m.wall).fold(0.0, f64::max)
@@ -313,6 +333,15 @@ impl SolveReport {
             }
             None => String::new(),
         };
+        let faults = if self.total_retries() > 0 {
+            format!(
+                ", retries {} ({} timeout)",
+                self.total_retries(),
+                crate::util::fmt::secs(self.total_timeout_secs())
+            )
+        } else {
+            String::new()
+        };
         let mixed = if self.mixed_fallback {
             format!(", mixed fallback after {} sweeps", self.refine_iters)
         } else {
@@ -325,7 +354,7 @@ impl SolveReport {
         format!(
             "{} on {:?} n={} P={} [{}]: makespan {}, err {:.2e}, comm {:.0}%, \
              hidden {}, reqs<={}, pcie saved {}, pcie hidden {}, prefetch hits {}, \
-             wire direct {}, stage saved {}, fused {}{}{}{}",
+             wire direct {}, stage saved {}, fused {}{}{}{}{}",
             self.method,
             self.workload,
             self.n,
@@ -342,6 +371,7 @@ impl SolveReport {
             crate::util::fmt::bytes(self.total_wire_direct() as f64),
             crate::util::fmt::secs(self.total_host_stage_saved()),
             self.total_launches_fused(),
+            faults,
             mixed,
             if self.factor_cached { ", factor cached" } else { "" },
             iter
@@ -370,6 +400,8 @@ mod tests {
             wire_direct_bytes: 512,
             host_stage_saved_secs: 0.0625,
             launches_fused: 7,
+            retries: 2,
+            timeout_secs: 0.003,
             wall: 0.01,
         }
     }
@@ -398,6 +430,8 @@ mod tests {
         assert_eq!(r.total_wire_direct(), 1024);
         assert!((r.total_host_stage_saved() - 0.125).abs() < 1e-12);
         assert_eq!(r.total_launches_fused(), 14);
+        assert_eq!(r.total_retries(), 4);
+        assert!((r.total_timeout_secs() - 0.006).abs() < 1e-12);
         assert!(r.summary().contains("LU"));
         assert!(r.summary().contains("hidden"));
         assert!(r.summary().contains("pcie saved"));

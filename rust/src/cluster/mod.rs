@@ -15,7 +15,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::accel::{make_engine, ComputeProfile, Engine, EngineKind};
-use crate::comm::{NetworkModel, World};
+use crate::comm::{CheckpointPolicy, FaultPlan, NetworkModel, World};
 use crate::dist::{
     gather_vector, ptranspose, Descriptor, DistMatrix, DistMultiVector, DistVector,
 };
@@ -23,10 +23,10 @@ use crate::mesh::{Mesh, MeshShape};
 use crate::pblas::Ctx;
 use crate::runtime::Runtime;
 use crate::solvers::{
-    apply_pivots, bicg, bicgstab, bicgstab_mixed, block_bicgstab, block_cg, cg, cg_mixed,
-    gmres, pchol_factor, pchol_solve, pchol_solve_panel, pchol_solve_refined, pipecg,
-    plu_factor, plu_solve, plu_solve_panel, plu_solve_refined, ptrsm, IterConfig, IterMethod,
-    IterStats, PivotMap, TriKind,
+    apply_pivots, bicg, bicgstab_ft, bicgstab_mixed, block_bicgstab, block_cg, cg_ft,
+    cg_mixed, gmres_ft, pchol_factor_ckpt, pchol_solve_panel_ckpt, pchol_solve_refined,
+    pipecg, plu_factor_ckpt, plu_solve_panel_ckpt, plu_solve_refined, ptrsm, IterConfig,
+    IterMethod, IterStats, PivotMap, TriKind,
 };
 use crate::workloads::Workload;
 use crate::{mixed_capable, Error, Result, Scalar};
@@ -110,6 +110,17 @@ pub struct ClusterConfig {
     pub mixed_precision: bool,
     /// Iterative controls.
     pub iter: IterConfig,
+    /// Scripted fault schedule (`DESIGN.md` §18): rank crashes, link
+    /// degradation windows, message drops, ECC retirements, stragglers —
+    /// all priced on the virtual clock.  The empty plan (the default) is
+    /// bit-identical to a run with no fault layer at all.
+    pub fault_plan: FaultPlan,
+    /// Checkpoint period for fault-tolerant solving: every `k` panels
+    /// (direct) or iterations (Krylov) the solver snapshots its state so a
+    /// scripted crash rolls back at most `k` steps instead of restarting.
+    /// `None` disables checkpointing — a crash then fails the solve with a
+    /// diagnostic instead of silently recomputing.
+    pub ckpt_every: Option<usize>,
 }
 
 impl Default for ClusterConfig {
@@ -126,6 +137,8 @@ impl Default for ClusterConfig {
             gpudirect: true,
             mixed_precision: true,
             iter: IterConfig::default(),
+            fault_plan: FaultPlan::default(),
+            ckpt_every: None,
         }
     }
 }
@@ -164,20 +177,63 @@ struct CachedFactor {
 
 /// Cross-request factorization cache (`DESIGN.md` §17): the serve layer
 /// keeps one per cluster so a repeat request for an already-factored
-/// operator pays only the triangular substitutions.
+/// operator pays only the triangular substitutions.  **Bounded**: holds at
+/// most `capacity` factorizations and evicts in LRU order (a hit or a
+/// re-insert refreshes recency) — the default capacity is unbounded, so
+/// existing callers see the old seen-forever behaviour unchanged.
 pub struct FactorCache {
-    map: Mutex<HashMap<FactorKey, Arc<CachedFactor>>>,
+    inner: Mutex<FactorCacheInner>,
+}
+
+struct FactorCacheInner {
+    map: HashMap<FactorKey, Arc<CachedFactor>>,
+    /// Recency order: front = least recently used, back = most recent.
+    order: Vec<FactorKey>,
+    capacity: usize,
+    evictions: u64,
+}
+
+impl FactorCacheInner {
+    /// Move `key` to the most-recent slot (appending if absent).
+    fn touch(&mut self, key: &FactorKey) {
+        if let Some(pos) = self.order.iter().position(|k| k == key) {
+            self.order.remove(pos);
+        }
+        self.order.push(*key);
+    }
+
+    /// Evict least-recently-used entries until within capacity.
+    fn shrink(&mut self) {
+        while self.map.len() > self.capacity {
+            let lru = self.order.remove(0);
+            self.map.remove(&lru);
+            self.evictions += 1;
+        }
+    }
 }
 
 impl FactorCache {
-    /// Empty cache.
+    /// Empty, unbounded cache.
     pub fn new() -> Self {
-        FactorCache { map: Mutex::new(HashMap::new()) }
+        Self::with_capacity(usize::MAX)
+    }
+
+    /// Empty cache holding at most `capacity` factorizations (0 caches
+    /// nothing: every insert is immediately evicted).
+    pub fn with_capacity(capacity: usize) -> Self {
+        FactorCache {
+            inner: Mutex::new(FactorCacheInner {
+                map: HashMap::new(),
+                order: Vec::new(),
+                capacity,
+                evictions: 0,
+            }),
+        }
     }
 
     /// Number of cached factorizations.
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.inner.lock().unwrap().map.len()
     }
 
     /// No factorizations cached yet?
@@ -185,12 +241,32 @@ impl FactorCache {
         self.len() == 0
     }
 
+    /// Factorizations evicted to stay within capacity so far.
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
+    }
+
+    /// Change the capacity, evicting LRU entries if the cache is over it.
+    pub fn set_capacity(&self, capacity: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.capacity = capacity;
+        inner.shrink();
+    }
+
     fn get(&self, key: &FactorKey) -> Option<Arc<CachedFactor>> {
-        self.map.lock().unwrap().get(key).cloned()
+        let mut inner = self.inner.lock().unwrap();
+        let hit = inner.map.get(key).cloned();
+        if hit.is_some() {
+            inner.touch(key);
+        }
+        hit
     }
 
     fn put(&self, key: FactorKey, factor: CachedFactor) {
-        self.map.lock().unwrap().insert(key, Arc::new(factor));
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.insert(key, Arc::new(factor));
+        inner.touch(&key);
+        inner.shrink();
     }
 }
 
@@ -261,7 +337,11 @@ impl Cluster {
     /// wide solve.
     pub fn solve<S: Scalar>(&self, workload: Workload, n: usize, method: Method) -> Result<SolveReport> {
         validate_method(workload, method)?;
-        if mixed_engaged::<S>(&self.cfg, method) {
+        // Crash recovery (checkpoint/rollback) lives in the uniform-precision
+        // solvers; with crashes scheduled the mixed gamble stands down so the
+        // fault story stays single-path.  Stragglers/degradation/drops/ECC
+        // ride along on either path.
+        if mixed_engaged::<S>(&self.cfg, method) && !self.cfg.fault_plan.has_crashes() {
             self.solve_mixed::<S>(workload, n, method)
         } else {
             self.solve_uniform::<S>(workload, n, method)
@@ -287,12 +367,18 @@ impl Cluster {
         let tile = cfg.tile;
         let (residency, device_mem, prefetch, gpudirect) =
             (cfg.residency, cfg.device_mem, cfg.prefetch, cfg.gpudirect);
+        let ckpt = cfg.ckpt_every.map(CheckpointPolicy::every);
+        let plan = cfg.fault_plan.clone();
 
-        let results = World::run::<S, Result<(RankMetrics, Option<Vec<S>>, Option<(usize, f64, bool)>)>, _>(
+        let results = World::run_with_faults::<S, Result<(RankMetrics, Option<Vec<S>>, Option<(usize, f64, bool)>)>, _>(
             cfg.ranks,
             cfg.net,
+            plan,
             move |comm| {
                 let mesh = Mesh::new(&comm, shape);
+                // An ECC retirement shrinks this rank's residency budget
+                // (min with usize::MAX — the no-event value — is exact).
+                let device_mem = device_mem.min(comm.fault_plan().keep_bytes(comm.rank()));
                 let ctx = if residency {
                     Ctx::with_device_mem(&mesh, engine.clone(), device_mem)
                         .with_prefetch(prefetch)
@@ -312,19 +398,31 @@ impl Cluster {
                 let (x, iter_stats) = match method {
                     Method::Lu => {
                         let mut a = a0;
-                        (plu_solve(&ctx, &mut a, &b)?, None)
+                        let x = plu_solve_panel_ckpt(
+                            &ctx,
+                            &mut a,
+                            &DistMultiVector::from_cols(vec![b.clone_vec()]),
+                            ckpt,
+                        )?;
+                        (x.into_cols().remove(0), None)
                     }
                     Method::Cholesky => {
                         let mut a = a0;
-                        (pchol_solve(&ctx, &mut a, &b)?, None)
+                        let x = pchol_solve_panel_ckpt(
+                            &ctx,
+                            &mut a,
+                            &DistMultiVector::from_cols(vec![b.clone_vec()]),
+                            ckpt,
+                        )?;
+                        (x.into_cols().remove(0), None)
                     }
                     Method::Iterative(m) => {
                         let (x, st) = match m {
-                            IterMethod::Cg => cg(&ctx, &a0, &b, &iter_cfg)?,
+                            IterMethod::Cg => cg_ft(&ctx, &a0, &b, &iter_cfg, ckpt)?,
                             IterMethod::PipeCg => pipecg(&ctx, &a0, &b, &iter_cfg)?,
                             IterMethod::Bicg => bicg(&ctx, &a0, &b, &iter_cfg)?,
-                            IterMethod::Bicgstab => bicgstab(&ctx, &a0, &b, &iter_cfg)?,
-                            IterMethod::Gmres => gmres(&ctx, &a0, &b, &iter_cfg)?,
+                            IterMethod::Bicgstab => bicgstab_ft(&ctx, &a0, &b, &iter_cfg, ckpt)?,
+                            IterMethod::Gmres => gmres_ft(&ctx, &a0, &b, &iter_cfg, ckpt)?,
                         };
                         (
                             x,
@@ -402,11 +500,14 @@ impl Cluster {
         let (residency, device_mem, prefetch, gpudirect) =
             (cfg.residency, cfg.device_mem, cfg.prefetch, cfg.gpudirect);
 
+        let plan = cfg.fault_plan.clone();
+
         // (metrics, local worst error, iter stats, refine sweeps, converged)
         type MixedOut = (RankMetrics, f64, Option<(usize, f64, bool)>, usize, bool);
         let results =
-            World::run::<S::Lo, Result<MixedOut>, _>(cfg.ranks, cfg.net, move |comm| {
+            World::run_with_faults::<S::Lo, Result<MixedOut>, _>(cfg.ranks, cfg.net, plan, move |comm| {
                 let mesh = Mesh::new(&comm, shape);
+                let device_mem = device_mem.min(comm.fault_plan().keep_bytes(comm.rank()));
                 let ctx = if residency {
                     Ctx::with_device_mem(&mesh, engine.clone(), device_mem)
                         .with_prefetch(prefetch)
@@ -599,6 +700,8 @@ impl Cluster {
             (cfg.residency, cfg.device_mem, cfg.prefetch, cfg.gpudirect);
         let coeffs_owned: Vec<f64> = coeffs.to_vec();
         let tols_owned: Vec<f64> = tols.to_vec();
+        let ckpt = cfg.ckpt_every.map(CheckpointPolicy::every);
+        let plan = cfg.fault_plan.clone();
 
         type Exported = (Vec<Vec<f64>>, Option<Vec<Vec<f64>>>, Vec<(usize, usize)>);
         type BatchOut<S> = (
@@ -608,8 +711,9 @@ impl Cluster {
             Vec<f64>,
             Option<Exported>,
         );
-        let results = World::run::<S, Result<BatchOut<S>>, _>(cfg.ranks, cfg.net, move |comm| {
+        let results = World::run_with_faults::<S, Result<BatchOut<S>>, _>(cfg.ranks, cfg.net, plan, move |comm| {
             let mesh = Mesh::new(&comm, shape);
+            let device_mem = device_mem.min(comm.fault_plan().keep_bytes(comm.rank()));
             let ctx = if residency {
                 Ctx::with_device_mem(&mesh, engine.clone(), device_mem)
                     .with_prefetch(prefetch)
@@ -654,7 +758,7 @@ impl Cluster {
                         // [`plu_solve_panel`] inlined so the pivot map and
                         // factored tiles survive for export.
                         None => {
-                            let piv = plu_factor(&ctx, &mut a)?;
+                            let piv = plu_factor_ckpt(&ctx, &mut a, ckpt)?;
                             let mut x = b.clone_panel();
                             for j in 0..x.ncols() {
                                 ctx.set_tenant(Some(j));
@@ -687,7 +791,7 @@ impl Cluster {
                         }
                         // [`pchol_solve_panel`] inlined to keep L and L^T.
                         None => {
-                            pchol_factor(&ctx, &mut a)?;
+                            pchol_factor_ckpt(&ctx, &mut a, ckpt)?;
                             let mut x = b.clone_panel();
                             ptrsm(&ctx, &a, &mut x, TriKind::Lower)?;
                             let lt = ptranspose(ctx.mesh, &a);
@@ -719,7 +823,7 @@ impl Cluster {
                         let out = match m {
                             IterMethod::PipeCg => pipecg(&ctx, &a0, b.col(j), &cfg_j),
                             IterMethod::Bicg => bicg(&ctx, &a0, b.col(j), &cfg_j),
-                            IterMethod::Gmres => gmres(&ctx, &a0, b.col(j), &cfg_j),
+                            IterMethod::Gmres => gmres_ft(&ctx, &a0, b.col(j), &cfg_j, ckpt),
                             IterMethod::Cg | IterMethod::Bicgstab => unreachable!(),
                         };
                         ctx.set_tenant(None);
@@ -1016,5 +1120,44 @@ mod tests {
             .solve_batch::<f64>(Workload::DiagDominant, 24, Method::Lu, &[1.0], &[1e-8])
             .unwrap();
         assert!(plain.factor_cache().is_empty() && !rep.factor_cached);
+    }
+
+    #[test]
+    fn factor_cache_capacity_evicts_lru() {
+        let cache = FactorCache::with_capacity(2);
+        let factor = || CachedFactor { tiles: Vec::new(), lt_tiles: None, swaps: Vec::new() };
+        let k1: FactorKey = (Workload::DiagDominant, 16, "LU", "f64");
+        let k2: FactorKey = (Workload::DiagDominant, 32, "LU", "f64");
+        let k3: FactorKey = (Workload::DiagDominant, 64, "LU", "f64");
+        cache.put(k1, factor());
+        cache.put(k2, factor());
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 0);
+        // A hit refreshes recency: k1 survives the next eviction, k2 does
+        // not.
+        assert!(cache.get(&k1).is_some());
+        cache.put(k3, factor());
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        assert!(cache.get(&k2).is_none());
+        assert!(cache.get(&k1).is_some() && cache.get(&k3).is_some());
+        // Shrinking the capacity evicts down to it, LRU first.
+        cache.set_capacity(1);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.evictions(), 2);
+        assert!(cache.get(&k3).is_some());
+    }
+
+    #[test]
+    fn unbounded_default_cache_never_evicts() {
+        let cache = FactorCache::new();
+        for n in [16usize, 32, 64, 128] {
+            cache.put(
+                (Workload::DiagDominant, n, "LU", "f64"),
+                CachedFactor { tiles: Vec::new(), lt_tiles: None, swaps: Vec::new() },
+            );
+        }
+        assert_eq!(cache.len(), 4);
+        assert_eq!(cache.evictions(), 0);
     }
 }

@@ -37,7 +37,7 @@ use std::cell::Cell;
 /// Virtual time accounting for one rank.  Single-threaded by design: each
 /// rank thread owns its clock (interior mutability avoids `&mut` plumbing
 /// through the solver call trees).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct VClock {
     now: Cell<f64>,
     /// When this rank's NIC finishes serialising everything queued so far.
@@ -50,6 +50,25 @@ pub struct VClock {
     compute: Cell<f64>,
     comm_wait: Cell<f64>,
     xfer: Cell<f64>,
+    /// Compute-rate multiplier: a straggler rank ([`crate::comm::faults::
+    /// FaultEvent::Straggler`]) advances `rate×` slower per unit of work.
+    /// 1.0 (an IEEE-exact identity) everywhere else; survives `reset`
+    /// because it is a property of the rank, not of the run.
+    rate: Cell<f64>,
+}
+
+impl Default for VClock {
+    fn default() -> Self {
+        Self {
+            now: Cell::new(0.0),
+            nic_free: Cell::new(0.0),
+            pcie_free: Cell::new(0.0),
+            compute: Cell::new(0.0),
+            comm_wait: Cell::new(0.0),
+            xfer: Cell::new(0.0),
+            rate: Cell::new(1.0),
+        }
+    }
 }
 
 impl VClock {
@@ -82,11 +101,25 @@ impl VClock {
         self.now.get().max(self.nic_free.get()).max(self.pcie_free.get())
     }
 
-    /// Advance by a local-compute interval.
+    /// Advance by a local-compute interval (scaled by the rank's
+    /// compute-rate multiplier — `× 1.0` exactly on non-straggler ranks).
     pub fn advance_compute(&self, dt: f64) {
         debug_assert!(dt >= 0.0, "negative compute interval {dt}");
+        let dt = dt * self.rate.get();
         self.now.set(self.now.get() + dt);
         self.compute.set(self.compute.get() + dt);
+    }
+
+    /// Set the straggler compute-rate multiplier (>= 1 slows the rank
+    /// down).  `1.0` is the exact identity.
+    pub fn set_compute_rate(&self, rate: f64) {
+        debug_assert!(rate > 0.0, "non-positive compute rate {rate}");
+        self.rate.set(rate);
+    }
+
+    /// The straggler compute-rate multiplier in force.
+    pub fn compute_rate(&self) -> f64 {
+        self.rate.get()
     }
 
     /// Advance by a host<->accelerator transfer interval (the PCIe term of
@@ -205,7 +238,8 @@ impl VClock {
         self.xfer.get()
     }
 
-    /// Reset to t = 0 (between bench repetitions).
+    /// Reset to t = 0 (between bench repetitions).  The compute-rate
+    /// multiplier is a rank property, not run state, and survives.
     pub fn reset(&self) {
         self.now.set(0.0);
         self.nic_free.set(0.0);
@@ -299,6 +333,21 @@ mod tests {
         assert_eq!(c.pcie_free(), 0.0);
         assert_eq!(c.compute_secs(), 0.0);
         assert_eq!(c.comm_wait_secs(), 0.0);
+    }
+
+    #[test]
+    fn straggler_rate_scales_compute_and_survives_reset() {
+        let c = VClock::new();
+        assert_eq!(c.compute_rate(), 1.0);
+        c.set_compute_rate(1.5);
+        c.advance_compute(2.0);
+        assert!((c.now() - 3.0).abs() < 1e-12);
+        assert!((c.compute_secs() - 3.0).abs() < 1e-12);
+        c.reset();
+        assert_eq!(c.now(), 0.0);
+        assert_eq!(c.compute_rate(), 1.5); // rank property: survives reset
+        // The NIC and copy-engine timelines are unaffected by stragglers.
+        assert_eq!(c.nic_occupy(0.5), 0.5);
     }
 
     #[test]

@@ -1,0 +1,372 @@
+//! Deterministic fault injection: an explicit, RNG-free schedule of
+//! failures consumed by the transport and the virtual clock.
+//!
+//! The paper's cluster (and this simulator through PR 9) assumes every
+//! rank, link and device is perfect forever.  A [`FaultPlan`] breaks that
+//! assumption *reproducibly*: each event names a rank/route and a virtual
+//! time or ordinal, so the same plan replays the same failure sequence on
+//! every run — failures are part of the schedule, not noise.  The plan is
+//! threaded through [`super::transport::World::run_with_faults`]; an empty
+//! plan is pinned **bit-identical** to running with no fault layer at all
+//! (every hook either short-circuits before touching a float or applies an
+//! exact `× 1.0`), so the fault-free hot paths pay nothing (DESIGN.md §18).
+//!
+//! Event semantics:
+//!
+//! * **crash** — the rank's device/solver state is lost at virtual time
+//!   `t`.  Detection is cooperative: solvers probe at checkpoint
+//!   boundaries ([`crate::pblas::fault_probe`]); the crashed rank pays
+//!   [`FaultPlan::reboot_secs`] and every rank rolls back to the last
+//!   checkpoint ([`CheckpointPolicy`]).
+//! * **drop** — the `nth` point-to-point send on a route is lost `times`
+//!   consecutive times; the transport re-flies it after a timeout that
+//!   doubles per attempt (bounded exponential backoff), priced on the NIC
+//!   timeline and counted in `CommStats::{retries, timeout_secs}`.
+//! * **degrade** — a rank's NIC serialises `factor×` slower over a virtual
+//!   time window (a flapping or congested link).
+//! * **slow** — a straggler: the rank's compute timeline advances `rate×`
+//!   slower for the whole run ([`super::VClock::set_compute_rate`]).
+//! * **ecc** — device "ECC page retirement": the rank's usable device
+//!   memory budget shrinks to `keep_bytes`, forcing the residency layer
+//!   to evict harder.  Never changes results, only PCIe traffic.
+
+use crate::{Error, Result};
+
+/// One scripted failure.  Times are virtual seconds on the affected
+/// rank's clock; ordinals count that route's remote sends from 1.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultEvent {
+    /// Rank `rank` loses its device/solver state at virtual time `at`.
+    RankCrash { rank: usize, at: f64 },
+    /// Rank `rank`'s NIC serialises `factor`× slower over `[from, until)`.
+    LinkDegrade { rank: usize, factor: f64, from: f64, until: f64 },
+    /// The `nth` remote send from `src` to `dst` is lost `times`
+    /// consecutive times before going through.
+    MessageDrop { src: usize, dst: usize, nth: u64, times: u32 },
+    /// Rank `rank`'s device memory budget shrinks to `keep_bytes`.
+    EccRetirement { rank: usize, keep_bytes: usize },
+    /// Rank `rank` computes `rate`× slower for the whole run.
+    Straggler { rank: usize, rate: f64 },
+}
+
+/// A deterministic failure schedule plus the recovery-pricing knobs.
+///
+/// Build programmatically ([`FaultPlan::push`]) or from the compact DSL
+/// ([`FaultPlan::parse`]) used by `--fault-plan` / `cluster.fault_plan`:
+/// `;`-separated events —
+///
+/// ```text
+/// crash:RANK@T           rank crash at virtual time T
+/// slow:RANKxRATE         straggler (compute RATE× slower)
+/// degrade:RANKxF@T0-T1   link F× slower over [T0, T1)
+/// drop:SRC-DST#NTH       drop the NTH send on the route once
+/// drop:SRC-DST#NTHxK     ... K consecutive times
+/// ecc:RANK@BYTES         shrink device memory to BYTES
+/// timeout:SECS           base retry timeout (default 1e-3)
+/// reboot:SECS            crash reboot cost (default 0.5)
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// The scripted events, in declaration order.
+    pub events: Vec<FaultEvent>,
+    /// Base send-timeout before the first retry; doubles per attempt.
+    pub retry_timeout: f64,
+    /// Virtual seconds a crashed rank spends rebooting before it rejoins
+    /// the recovery protocol.
+    pub reboot_secs: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self { events: Vec::new(), retry_timeout: 1e-3, reboot_secs: 0.5 }
+    }
+}
+
+impl FaultPlan {
+    /// The empty plan (no events; bit-identical to no fault layer).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append an event (builder style).
+    pub fn push(mut self, event: FaultEvent) -> Self {
+        self.events.push(event);
+        self
+    }
+
+    /// No events scripted: every transport hook short-circuits.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Whether any rank crash is scripted (gates the solvers' probe
+    /// collectives, so crash-free plans add zero probe traffic).
+    pub fn has_crashes(&self) -> bool {
+        self.events.iter().any(|e| matches!(e, FaultEvent::RankCrash { .. }))
+    }
+
+    /// Scripted crash times for `rank`, sorted ascending.
+    pub fn crash_times(&self, rank: usize) -> Vec<f64> {
+        let mut times: Vec<f64> = self
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::RankCrash { rank: r, at } if *r == rank => Some(*at),
+                _ => None,
+            })
+            .collect();
+        times.sort_by(|a, b| a.partial_cmp(b).expect("crash time NaN"));
+        times
+    }
+
+    /// The rank's compute-rate multiplier (product of its straggler
+    /// events; 1.0 when none).
+    pub fn compute_rate(&self, rank: usize) -> f64 {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::Straggler { rank: r, rate } if *r == rank => Some(*rate),
+                _ => None,
+            })
+            .product()
+    }
+
+    /// The rank's NIC slowdown factor at virtual time `at` (product of
+    /// the degrade windows covering `at`; 1.0 when none).
+    pub fn degrade_factor(&self, rank: usize, at: f64) -> f64 {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::LinkDegrade { rank: r, factor, from, until }
+                    if *r == rank && at >= *from && at < *until =>
+                {
+                    Some(*factor)
+                }
+                _ => None,
+            })
+            .product()
+    }
+
+    /// How many consecutive times the `nth` remote send from `src` to
+    /// `dst` is scripted to drop (sum over matching events; 0 when none).
+    pub fn drops(&self, src: usize, dst: usize, nth: u64) -> u32 {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::MessageDrop { src: s, dst: d, nth: n, times }
+                    if *s == src && *d == dst && *n == nth =>
+                {
+                    Some(*times)
+                }
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// The rank's usable device-memory budget after ECC retirements
+    /// (minimum over matching events; `usize::MAX` when none).
+    pub fn keep_bytes(&self, rank: usize) -> usize {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::EccRetirement { rank: r, keep_bytes } if *r == rank => {
+                    Some(*keep_bytes)
+                }
+                _ => None,
+            })
+            .min()
+            .unwrap_or(usize::MAX)
+    }
+
+    /// Parse the `--fault-plan` DSL (see the type docs for the grammar).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = FaultPlan::default();
+        for item in spec.split(';') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (kind, body) = item
+                .split_once(':')
+                .ok_or_else(|| bad_plan(item, "expected KIND:ARGS"))?;
+            match kind.trim() {
+                "crash" => {
+                    let (rank, at) = split2(body, '@', item)?;
+                    plan.events.push(FaultEvent::RankCrash {
+                        rank: parse_usize(rank, item)?,
+                        at: parse_f64(at, item)?,
+                    });
+                }
+                "slow" => {
+                    let (rank, rate) = split2(body, 'x', item)?;
+                    plan.events.push(FaultEvent::Straggler {
+                        rank: parse_usize(rank, item)?,
+                        rate: parse_f64(rate, item)?,
+                    });
+                }
+                "degrade" => {
+                    let (head, window) = split2(body, '@', item)?;
+                    let (rank, factor) = split2(head, 'x', item)?;
+                    let (from, until) = split2(window, '-', item)?;
+                    plan.events.push(FaultEvent::LinkDegrade {
+                        rank: parse_usize(rank, item)?,
+                        factor: parse_f64(factor, item)?,
+                        from: parse_f64(from, item)?,
+                        until: parse_f64(until, item)?,
+                    });
+                }
+                "drop" => {
+                    let (route, ordinal) = split2(body, '#', item)?;
+                    let (src, dst) = split2(route, '-', item)?;
+                    let (nth, times) = match ordinal.split_once('x') {
+                        Some((n, k)) => (n, parse_u32(k, item)?),
+                        None => (ordinal, 1),
+                    };
+                    plan.events.push(FaultEvent::MessageDrop {
+                        src: parse_usize(src, item)?,
+                        dst: parse_usize(dst, item)?,
+                        nth: parse_u64(nth, item)?,
+                        times,
+                    });
+                }
+                "ecc" => {
+                    let (rank, bytes) = split2(body, '@', item)?;
+                    plan.events.push(FaultEvent::EccRetirement {
+                        rank: parse_usize(rank, item)?,
+                        keep_bytes: parse_usize(bytes, item)?,
+                    });
+                }
+                "timeout" => plan.retry_timeout = parse_f64(body, item)?,
+                "reboot" => plan.reboot_secs = parse_f64(body, item)?,
+                other => {
+                    return Err(bad_plan(item, &format!("unknown event kind `{other}`")));
+                }
+            }
+        }
+        if plan.retry_timeout <= 0.0 {
+            return Err(Error::Config("fault plan: retry timeout must be positive".into()));
+        }
+        if plan.reboot_secs < 0.0 {
+            return Err(Error::Config("fault plan: reboot cost must be >= 0".into()));
+        }
+        Ok(plan)
+    }
+}
+
+/// Checkpoint cadence for the fault-tolerant direct factorizations (and,
+/// by the same parameter, the Krylov snapshot interval): solver state is
+/// snapshotted every `every_k_panels` panels (iterations), so a crash
+/// costs at most that much rework plus the reboot and restore traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CheckpointPolicy {
+    /// Panels (direct) or iterations (Krylov) between checkpoints; >= 1.
+    pub every_k_panels: usize,
+}
+
+impl CheckpointPolicy {
+    /// Checkpoint every `k` panels/iterations (`k` is clamped to >= 1).
+    pub fn every(k: usize) -> Self {
+        Self { every_k_panels: k.max(1) }
+    }
+}
+
+fn bad_plan(item: &str, detail: &str) -> Error {
+    Error::Config(format!("fault plan item `{item}`: {detail}"))
+}
+
+fn split2<'a>(s: &'a str, sep: char, item: &str) -> Result<(&'a str, &'a str)> {
+    s.split_once(sep)
+        .ok_or_else(|| bad_plan(item, &format!("expected `{sep}` separator")))
+}
+
+fn parse_usize(s: &str, item: &str) -> Result<usize> {
+    s.trim().parse().map_err(|_| bad_plan(item, &format!("bad integer `{s}`")))
+}
+
+fn parse_u64(s: &str, item: &str) -> Result<u64> {
+    s.trim().parse().map_err(|_| bad_plan(item, &format!("bad integer `{s}`")))
+}
+
+fn parse_u32(s: &str, item: &str) -> Result<u32> {
+    s.trim().parse().map_err(|_| bad_plan(item, &format!("bad integer `{s}`")))
+}
+
+fn parse_f64(s: &str, item: &str) -> Result<f64> {
+    s.trim().parse().map_err(|_| bad_plan(item, &format!("bad number `{s}`")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_empty() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_empty());
+        assert!(!plan.has_crashes());
+        assert_eq!(plan.compute_rate(3), 1.0);
+        assert_eq!(plan.degrade_factor(0, 1.0), 1.0);
+        assert_eq!(plan.drops(0, 1, 5), 0);
+        assert_eq!(plan.keep_bytes(2), usize::MAX);
+        assert!(plan.crash_times(0).is_empty());
+    }
+
+    #[test]
+    fn parse_full_grammar() {
+        let plan = FaultPlan::parse(
+            "crash:2@0.5; slow:3x1.5; degrade:1x2.0@0.1-0.9; \
+             drop:0-1#3x2; drop:0-1#7; ecc:0@1048576; timeout:2e-3; reboot:0.25",
+        )
+        .unwrap();
+        assert_eq!(plan.events.len(), 6);
+        assert!(plan.has_crashes());
+        assert_eq!(plan.crash_times(2), vec![0.5]);
+        assert!(plan.crash_times(0).is_empty());
+        assert_eq!(plan.compute_rate(3), 1.5);
+        assert_eq!(plan.compute_rate(2), 1.0);
+        assert_eq!(plan.degrade_factor(1, 0.5), 2.0);
+        assert_eq!(plan.degrade_factor(1, 0.95), 1.0); // outside the window
+        assert_eq!(plan.drops(0, 1, 3), 2);
+        assert_eq!(plan.drops(0, 1, 7), 1);
+        assert_eq!(plan.drops(1, 0, 3), 0); // routes are directed
+        assert_eq!(plan.keep_bytes(0), 1048576);
+        assert_eq!(plan.retry_timeout, 2e-3);
+        assert_eq!(plan.reboot_secs, 0.25);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_items() {
+        assert!(FaultPlan::parse("crash:2").is_err()); // missing @T
+        assert!(FaultPlan::parse("boom:1@2").is_err()); // unknown kind
+        assert!(FaultPlan::parse("drop:0-1").is_err()); // missing #N
+        assert!(FaultPlan::parse("timeout:0").is_err()); // non-positive
+        assert!(FaultPlan::parse("crash:x@1").is_err()); // bad integer
+    }
+
+    #[test]
+    fn parse_empty_spec_is_the_empty_plan() {
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+        assert_eq!(FaultPlan::parse(" ; ;").unwrap(), FaultPlan::default());
+    }
+
+    #[test]
+    fn overlapping_degrade_windows_compound() {
+        let plan = FaultPlan::parse("degrade:0x2.0@0.0-1.0; degrade:0x3.0@0.5-2.0").unwrap();
+        assert_eq!(plan.degrade_factor(0, 0.25), 2.0);
+        assert_eq!(plan.degrade_factor(0, 0.75), 6.0);
+        assert_eq!(plan.degrade_factor(0, 1.5), 3.0);
+    }
+
+    #[test]
+    fn checkpoint_policy_clamps() {
+        assert_eq!(CheckpointPolicy::every(0).every_k_panels, 1);
+        assert_eq!(CheckpointPolicy::every(8).every_k_panels, 8);
+    }
+
+    #[test]
+    fn crash_times_sorted() {
+        let plan = FaultPlan::parse("crash:1@2.0; crash:1@0.5; crash:0@1.0").unwrap();
+        assert_eq!(plan.crash_times(1), vec![0.5, 2.0]);
+        assert_eq!(plan.crash_times(0), vec![1.0]);
+    }
+}

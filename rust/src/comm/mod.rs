@@ -31,12 +31,14 @@
 
 pub mod clock;
 pub mod collectives;
+pub mod faults;
 pub mod message;
 pub mod model;
 pub mod neighbor;
 pub mod transport;
 
 pub use clock::VClock;
+pub use faults::{CheckpointPolicy, FaultEvent, FaultPlan};
 pub use message::{Payload, Tag};
 pub use model::NetworkModel;
 pub use collectives::{AllgatherRequest, AllreduceRequest, BcastRequest, ReduceOp};

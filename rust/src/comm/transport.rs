@@ -12,9 +12,10 @@
 use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
 use std::rc::Rc;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 
 use super::clock::VClock;
+use super::faults::FaultPlan;
 use super::message::{Message, Payload, Tag};
 use super::model::NetworkModel;
 use crate::Scalar;
@@ -35,6 +36,8 @@ pub struct CommStats {
     prefetch_hits: Cell<u64>,
     wire_direct: Cell<u64>,
     host_stage_saved: Cell<f64>,
+    retries: Cell<u64>,
+    timeout_secs: Cell<f64>,
 }
 
 impl CommStats {
@@ -115,6 +118,24 @@ impl CommStats {
         self.host_stage_saved.get()
     }
 
+    /// Send attempts re-flown after a scripted message drop
+    /// ([`super::faults::FaultEvent::MessageDrop`]).  0 without a fault
+    /// plan.
+    pub fn retries(&self) -> u64 {
+        self.retries.get()
+    }
+
+    /// Virtual seconds spent in retry-timeout windows (the sender's
+    /// loss-detection delay: base timeout doubling per attempt).
+    pub fn timeout_secs(&self) -> f64 {
+        self.timeout_secs.get()
+    }
+
+    pub(crate) fn add_retries(&self, n: u64, secs: f64) {
+        self.retries.set(self.retries.get() + n);
+        self.timeout_secs.set(self.timeout_secs.get() + secs);
+    }
+
     pub(crate) fn add_pcie_saved(&self, bytes: u64) {
         self.pcie_saved.set(self.pcie_saved.get() + bytes);
     }
@@ -191,6 +212,17 @@ pub struct Comm<S: Scalar> {
     clock: VClock,
     net: NetworkModel,
     stats: CommStats,
+    /// The fault schedule in force (empty by default: every hook below
+    /// short-circuits, pinning the fault-free paths bit-identical).
+    faults: Arc<FaultPlan>,
+    /// This rank's scripted crash times, sorted; consumed monotonically
+    /// by [`Comm::take_crash`].
+    crash_times: Vec<f64>,
+    crash_next: Cell<usize>,
+    /// Per-destination count of remote sends, for matching scripted
+    /// `MessageDrop { nth }` events.  Only bumped when the plan is
+    /// non-empty.
+    route_sends: Vec<Cell<u64>>,
 }
 
 impl<S: Scalar> Comm<S> {
@@ -223,6 +255,70 @@ impl<S: Scalar> Comm<S> {
         &self.stats
     }
 
+    /// The fault schedule in force (the empty plan without one).
+    pub fn fault_plan(&self) -> &FaultPlan {
+        &self.faults
+    }
+
+    /// True exactly once per scripted crash of this rank whose virtual
+    /// time has passed.  The caller (a solver's fault probe) prices the
+    /// reboot and drives recovery; consumption is monotone, so a crash
+    /// fires at the first probe at or after its scripted time and never
+    /// again — in particular not during the recovery replay.
+    pub fn take_crash(&self) -> bool {
+        match self.crash_times.get(self.crash_next.get()) {
+            Some(&t) if self.clock.now() >= t => {
+                self.crash_next.set(self.crash_next.get() + 1);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// NIC occupancy of `bytes` starting at `at`, under any link
+    /// degradation active then.  With an empty plan this is exactly
+    /// `beta · bytes` (no multiply touches it).
+    fn occupancy(&self, bytes: usize, at: f64) -> f64 {
+        let base = bytes as f64 * self.net.beta;
+        if self.faults.is_empty() {
+            base
+        } else {
+            base * self.faults.degrade_factor(self.rank, at)
+        }
+    }
+
+    /// Deterministic drop/retry pricing for the next logical send to
+    /// `dst`: count the route's remote sends, look up scripted drops of
+    /// this one, and price each failed attempt as its NIC occupancy
+    /// followed by a loss-detection timeout that doubles per attempt
+    /// (bounded exponential backoff).  The failed occupancies queue on
+    /// the NIC timeline; the returned instant is when the wire may carry
+    /// the successful attempt (`available_at` exactly when nothing is
+    /// scripted or the plan is empty).
+    fn retry_gate(&self, dst: usize, available_at: f64, bytes: usize) -> f64 {
+        if self.faults.is_empty() || dst == self.rank {
+            return available_at;
+        }
+        let nth = self.route_sends[dst].get() + 1;
+        self.route_sends[dst].set(nth);
+        let drops = self.faults.drops(self.rank, dst, nth);
+        if drops == 0 {
+            return available_at;
+        }
+        let mut at = available_at;
+        let mut timeout = self.faults.retry_timeout;
+        let mut waited = 0.0;
+        for _ in 0..drops {
+            let end = self.clock.nic_occupy_from(at, self.occupancy(bytes, at));
+            // The sender only learns of the loss when the timeout expires.
+            at = end + timeout;
+            waited += timeout;
+            timeout *= 2.0;
+        }
+        self.stats.add_retries(drops as u64, waited);
+        at
+    }
+
     /// Send `payload` to world rank `dst` under `tag` (blocking semantics).
     ///
     /// LogGP semantics: the sender's clock advances by the NIC occupancy
@@ -240,7 +336,12 @@ impl<S: Scalar> Comm<S> {
             // time but is being paid after all, so revoke it.
             let backlog = (self.clock.nic_free() - self.clock.now()).max(0.0);
             self.stats.revoke_wait_saved(backlog);
-            self.clock.advance_send(bytes as f64 * self.net.beta);
+            // Scripted drops re-fly first (failed occupancies + timeouts
+            // queue ahead on the NIC); the blocking caller waits through
+            // the successful attempt's occupancy end.
+            let at = self.retry_gate(dst, self.clock.now(), bytes);
+            let end = self.clock.nic_occupy_from(at, self.occupancy(bytes, at));
+            self.clock.observe_arrival(end);
             self.clock.now() + self.net.alpha
         };
         self.push(dst, tag, payload, arrival, bytes);
@@ -275,11 +376,11 @@ impl<S: Scalar> Comm<S> {
         // was never hidden — revoke the post-time credit.
         let backlog = (self.clock.nic_free() - self.clock.now()).max(0.0);
         self.stats.revoke_wait_saved(backlog);
-        let end = self.clock.wire_occupy_from(
-            self.clock.now(),
-            bytes as f64 * self.net.beta,
-            pcie_secs,
-        );
+        // Scripted drops re-fly as NIC-only attempts (the retransmit comes
+        // from the NIC's bounce buffer; the device is read once, on the
+        // successful attempt's joint occupancy).
+        let at = self.retry_gate(dst, self.clock.now(), bytes);
+        let end = self.clock.wire_occupy_from(at, self.occupancy(bytes, at), pcie_secs);
         self.clock.observe_arrival(end);
         self.stats.add_wire_direct(bytes as u64);
         let arrival = self.clock.now() + self.net.alpha;
@@ -313,11 +414,12 @@ impl<S: Scalar> Comm<S> {
         let arrival = if dst == self.rank {
             available_at + self.net.local_secs(bytes)
         } else {
-            let occupancy = bytes as f64 * self.net.beta;
+            let at = self.retry_gate(dst, available_at, bytes);
+            let occupancy = self.occupancy(bytes, at);
             // Occupancy that never blocks the compute timeline is latency
             // hidden by overlap (a blocking send would have charged it).
             self.stats.add_wait_saved(occupancy);
-            self.clock.nic_occupy_from(available_at, occupancy) + self.net.alpha
+            self.clock.nic_occupy_from(at, occupancy) + self.net.alpha
         };
         self.push(dst, tag, payload, arrival, bytes);
     }
@@ -340,13 +442,13 @@ impl<S: Scalar> Comm<S> {
         }
         assert!(dst < self.size, "send to rank {dst} of {}", self.size);
         let bytes = payload.wire_bytes();
-        let occupancy = bytes as f64 * self.net.beta;
+        let at = self.retry_gate(dst, available_at, bytes);
+        let occupancy = self.occupancy(bytes, at);
         // Occupancy that never blocks the compute timeline is latency
         // hidden by overlap, exactly as on the staged path.
         self.stats.add_wait_saved(occupancy);
         self.stats.add_wire_direct(bytes as u64);
-        let arrival =
-            self.clock.wire_occupy_from(available_at, occupancy, pcie_secs) + self.net.alpha;
+        let arrival = self.clock.wire_occupy_from(at, occupancy, pcie_secs) + self.net.alpha;
         self.push(dst, tag, payload, arrival, bytes);
     }
 
@@ -586,7 +688,22 @@ impl World {
         R: Send,
         F: Fn(Comm<S>) -> R + Send + Sync,
     {
+        Self::run_with_faults(p, net, FaultPlan::default(), f)
+    }
+
+    /// [`World::run`] under a deterministic fault schedule: stragglers set
+    /// each rank's compute rate, link degradation and scripted message
+    /// drops are priced inside the transport, and crashes are exposed to
+    /// the solvers via [`Comm::take_crash`].  The empty plan is
+    /// bit-identical to [`World::run`].
+    pub fn run_with_faults<S, R, F>(p: usize, net: NetworkModel, plan: FaultPlan, f: F) -> Vec<R>
+    where
+        S: Scalar,
+        R: Send,
+        F: Fn(Comm<S>) -> R + Send + Sync,
+    {
         assert!(p > 0, "world size must be positive");
+        let plan = Arc::new(plan);
         // channels[src][dst]
         let mut senders: Vec<Vec<mpsc::Sender<Message<S>>>> = Vec::with_capacity(p);
         let mut receivers: Vec<Vec<Option<mpsc::Receiver<Message<S>>>>> =
@@ -604,19 +721,27 @@ impl World {
             .into_iter()
             .zip(receivers)
             .enumerate()
-            .map(|(rank, (senders, rxs))| Comm {
-                rank,
-                size: p,
-                senders,
-                receivers: rxs
-                    .into_iter()
-                    .map(|rx| {
-                        RefCell::new(PendingRx { rx: rx.unwrap(), pending: VecDeque::new() })
-                    })
-                    .collect(),
-                clock: VClock::new(),
-                net,
-                stats: CommStats::default(),
+            .map(|(rank, (senders, rxs))| {
+                let clock = VClock::new();
+                clock.set_compute_rate(plan.compute_rate(rank));
+                Comm {
+                    rank,
+                    size: p,
+                    senders,
+                    receivers: rxs
+                        .into_iter()
+                        .map(|rx| {
+                            RefCell::new(PendingRx { rx: rx.unwrap(), pending: VecDeque::new() })
+                        })
+                        .collect(),
+                    clock,
+                    net,
+                    stats: CommStats::default(),
+                    faults: Arc::clone(&plan),
+                    crash_times: plan.crash_times(rank),
+                    crash_next: Cell::new(0),
+                    route_sends: (0..p).map(|_| Cell::new(0)).collect(),
+                }
             })
             .collect();
 
@@ -899,6 +1024,92 @@ mod tests {
         // the PCIe one) + alpha.
         let (rnow, ..) = results[1];
         assert!((rnow - (pcie + net.alpha)).abs() < 1e-9, "{rnow}");
+    }
+
+    #[test]
+    fn scripted_drop_prices_retries_exactly() {
+        use super::super::faults::FaultPlan;
+        // Drop the 2nd send from rank 0 to rank 1 twice: the sender pays
+        // two extra occupancies plus timeout + 2*timeout (exponential
+        // backoff), then the message goes through unchanged.
+        let net = NetworkModel::gigabit_ethernet();
+        let plan = FaultPlan::parse("drop:0-1#2x2; timeout:1e-3").unwrap();
+        let occupy = 800.0 * net.beta;
+        let results = World::run_with_faults::<f64, _, _>(2, net, plan, |comm| {
+            if comm.rank() == 0 {
+                comm.send(1, Tag::P2p(0), Payload::Data(vec![0.0; 100]));
+                comm.send(1, Tag::P2p(1), Payload::Data(vec![0.0; 100]));
+                (
+                    comm.clock().now(),
+                    comm.stats().retries(),
+                    comm.stats().timeout_secs(),
+                )
+            } else {
+                let a = comm.recv(0, Tag::P2p(0)).into_data();
+                let b = comm.recv(0, Tag::P2p(1)).into_data();
+                ((a.len() + b.len()) as f64, 0, 0.0)
+            }
+        });
+        let (now, retries, waited) = results[0];
+        assert_eq!(retries, 2);
+        assert!((waited - 3e-3).abs() < 1e-12, "1ms + 2ms backoff: {waited}");
+        // Timeline: send 1 occupies [0, o); send 2's failed attempts end
+        // at 2o and 3o+1ms, the successful one at 4o+3ms.
+        assert!((now - (4.0 * occupy + 3e-3)).abs() < 1e-12, "{now}");
+        // Payloads still arrive intact and in order.
+        assert_eq!(results[1].0, 200.0);
+    }
+
+    #[test]
+    fn degraded_link_slows_only_its_window() {
+        use super::super::faults::FaultPlan;
+        let net = NetworkModel::gigabit_ethernet();
+        let occupy = 800.0 * net.beta;
+        // The window covers the first send only (it starts at t=0).
+        let plan = FaultPlan::parse(&format!("degrade:0x3.0@0.0-{}", occupy * 2.0)).unwrap();
+        let results = World::run_with_faults::<f64, _, _>(2, net, plan, |comm| {
+            if comm.rank() == 0 {
+                comm.send(1, Tag::P2p(0), Payload::Data(vec![0.0; 100]));
+                let mid = comm.clock().now();
+                comm.clock().advance_compute(occupy * 2.0); // leave the window
+                comm.send(1, Tag::P2p(1), Payload::Data(vec![0.0; 100]));
+                (mid, comm.clock().now())
+            } else {
+                comm.recv(0, Tag::P2p(0));
+                comm.recv(0, Tag::P2p(1));
+                (0.0, 0.0)
+            }
+        });
+        let (mid, end) = results[0];
+        assert!((mid - 3.0 * occupy).abs() < 1e-12, "degraded leg 3x: {mid}");
+        let expect = 3.0 * occupy + 2.0 * occupy + occupy;
+        assert!((end - expect).abs() < 1e-12, "clean leg past the window: {end}");
+    }
+
+    #[test]
+    fn take_crash_fires_once_at_its_time() {
+        use super::super::faults::FaultPlan;
+        let plan = FaultPlan::parse("crash:0@1.0").unwrap();
+        let results = World::run_with_faults::<f64, _, _>(1, NetworkModel::ideal(), plan, |comm| {
+            let before = comm.take_crash(); // t=0: not yet
+            comm.clock().advance_compute(2.0);
+            let fired = comm.take_crash();
+            let again = comm.take_crash(); // consumed: never re-fires
+            (before, fired, again)
+        });
+        assert_eq!(results[0], (false, true, false));
+    }
+
+    #[test]
+    fn straggler_slows_compute_not_results() {
+        use super::super::faults::FaultPlan;
+        let plan = FaultPlan::parse("slow:1x2.0").unwrap();
+        let results = World::run_with_faults::<f64, _, _>(2, NetworkModel::ideal(), plan, |comm| {
+            comm.clock().advance_compute(1.0);
+            comm.clock().now()
+        });
+        assert_eq!(results[0], 1.0);
+        assert_eq!(results[1], 2.0);
     }
 
     #[test]

@@ -12,6 +12,8 @@
 //! prefetch = true        # copy-engine timeline (false = synchronous PCIe)
 //! gpudirect = true       # device-to-NIC wire (false = host-staged sends)
 //! mixed_precision = true # f32 factor + f64 refine (false = uniform wide)
+//! fault_plan = crash:1@0.5; slow:2x0.5   # injected faults (see comm::faults)
+//! ckpt_every = 16        # checkpoint period, panels/iterations (absent = off)
 //!
 //! [network]
 //! alpha_us = 50
@@ -27,7 +29,7 @@ use std::collections::HashMap;
 
 use crate::accel::EngineKind;
 use crate::cluster::ClusterConfig;
-use crate::comm::NetworkModel;
+use crate::comm::{FaultPlan, NetworkModel};
 use crate::solvers::IterConfig;
 use crate::{Error, Result};
 
@@ -120,6 +122,14 @@ impl Config {
             prefetch: self.get_or("cluster.prefetch", true)?,
             gpudirect: self.get_or("cluster.gpudirect", true)?,
             mixed_precision: self.get_or("cluster.mixed_precision", true)?,
+            fault_plan: match self.get("cluster.fault_plan") {
+                Some(spec) => FaultPlan::parse(spec)?,
+                None => FaultPlan::default(),
+            },
+            ckpt_every: match self.get("cluster.ckpt_every") {
+                Some(_) => Some(self.get_or("cluster.ckpt_every", 0usize)?),
+                None => None,
+            },
             iter: IterConfig {
                 tol: self.get_or("solver.tol", 1e-8)?,
                 max_iter: self.get_or("solver.max_iter", 500)?,
@@ -210,6 +220,22 @@ tol = 1e-6
         let cc = c.cluster_config().unwrap();
         assert!((cc.net.alpha - 2e-6).abs() < 1e-12);
         assert!((cc.net.beta - 0.5e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn fault_plan_and_checkpoint_overrides() {
+        let c = Config::parse("[cluster]\nfault_plan = crash:1@0.5\nckpt_every = 16\n").unwrap();
+        let cc = c.cluster_config().unwrap();
+        assert!(cc.fault_plan.has_crashes());
+        assert_eq!(cc.ckpt_every, Some(16));
+        // Defaults: no faults, no checkpoints.
+        let cc = Config::parse("").unwrap().cluster_config().unwrap();
+        assert!(cc.fault_plan.is_empty());
+        assert_eq!(cc.ckpt_every, None);
+        assert!(Config::parse("[cluster]\nfault_plan = crash:oops\n")
+            .unwrap()
+            .cluster_config()
+            .is_err());
     }
 
     #[test]

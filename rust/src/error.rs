@@ -41,6 +41,18 @@ pub enum Error {
         detail: String,
     },
 
+    /// A Krylov recurrence produced a NaN/Inf (poisoned operand, overflow):
+    /// reported at the iteration it appears instead of silently iterating
+    /// to `max_iter` on garbage.
+    NonFinite {
+        /// Solver name.
+        method: &'static str,
+        /// Iteration at which the non-finite value was detected.
+        iteration: usize,
+        /// Which recurrence quantity went non-finite.
+        quantity: &'static str,
+    },
+
     /// Underlying XLA error.
     Xla(xla::Error),
 
@@ -63,6 +75,11 @@ impl fmt::Display for Error {
             Error::Breakdown { method, detail } => {
                 write!(f, "numerical breakdown in {method}: {detail}")
             }
+            Error::NonFinite { method, iteration, quantity } => write!(
+                f,
+                "non-finite value in {method}: {quantity} at iteration {iteration} \
+                 is NaN or infinite"
+            ),
             Error::Xla(e) => write!(f, "xla: {e}"),
             Error::Io(e) => write!(f, "io: {e}"),
         }
@@ -127,6 +144,9 @@ mod tests {
         let e = Error::NoConvergence { method: "bicgstab", residual: 1.0, iterations: 7, tol: 1e-9 };
         let s = e.to_string();
         assert!(s.contains("bicgstab") && s.contains('7'));
+        let e = Error::NonFinite { method: "cg", iteration: 3, quantity: "p'Ap" };
+        let s = e.to_string();
+        assert!(s.contains("cg") && s.contains("p'Ap") && s.contains('3'), "{s}");
     }
 
     #[test]

@@ -4,9 +4,11 @@
 //! cuplss solve  --workload diagdom --method lu --n 512 --ranks 4 \
 //!               --engine atlas|cuda --tile 128|256 --dtype f32|f64 \
 //!               [--streaming] [--no-prefetch] [--no-gpudirect] \
-//!               [--no-mixed] [--device-mem BYTES]
+//!               [--no-mixed] [--device-mem BYTES] \
+//!               [--fault-plan SPEC] [--ckpt-every K]
 //! cuplss serve  [--requests 16] [--n 192] [--ranks 4] [--rhs-batch 8] \
-//!               [--no-batching] [--no-factor-cache]   # solve-request scheduler
+//!               [--no-batching] [--no-factor-cache] [--factor-cache-cap K] \
+//!               [--deadline SECS] [--retry-budget K] # solve-request scheduler
 //! cuplss fig3   [--dp] [--n 60000] [--iters 100]      # model-mode Figure 3
 //! cuplss fig4   [--dp] [--n 60000] [--cholesky]       # model-mode Figure 4
 //! cuplss calibrate [--method lu]                      # live vs model (E8)
@@ -90,6 +92,16 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
         cfg.mixed_precision = false;
     }
     cfg.device_mem = args.opt_or("device-mem", cfg.device_mem)?;
+    // --fault-plan injects deterministic failures (see comm::faults for the
+    // spec grammar: "crash:RANK@T; slow:RANKxRATE; drop:SRC-DST#N; ...");
+    // --ckpt-every K checkpoints factorizations/Krylov state every K panels
+    // or iterations so a crash rolls back instead of recomputing from zero.
+    if let Some(spec) = args.opt("fault-plan") {
+        cfg.fault_plan = cuplss::comm::FaultPlan::parse(spec)?;
+    }
+    if args.opt("ckpt-every").is_some() {
+        cfg.ckpt_every = Some(args.opt_or("ckpt-every", 0usize)?);
+    }
     Ok(cfg)
 }
 
@@ -167,6 +179,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         rhs_batch: args.opt_or("rhs-batch", 8)?,
         batching: !args.has_flag("no-batching"),
         factor_cache: !args.has_flag("no-factor-cache"),
+        factor_cache_cap: args.opt_or("factor-cache-cap", usize::MAX)?,
+        deadline: args.opt("deadline").map(|_| args.opt_or("deadline", 0.0)).transpose()?,
+        retry_budget: args.opt_or("retry-budget", 0)?,
     };
     let cluster = Cluster::new(cfg)?;
     let stream = demo_stream(n_requests, base_n);
@@ -195,6 +210,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             fmt::secs(o.latency()),
             fmt::secs(o.attributed_secs),
         );
+        if o.deadline_missed {
+            println!("           ^ missed its deadline");
+        }
     }
     Ok(())
 }

@@ -37,8 +37,31 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::accel::{BufKey, Engine, OpCost, TileCache, DEFAULT_DEVICE_MEM};
+use crate::comm::ReduceOp;
 use crate::mesh::Mesh;
 use crate::Scalar;
+
+/// Crash probe at a checkpoint/snapshot boundary (`DESIGN.md` §18): every
+/// rank reports whether its scripted crash has fired
+/// ([`crate::comm::Comm::take_crash`]), a crashed rank first pays the
+/// plan's reboot cost on its own timeline (the allreduce then propagates
+/// the stall to everyone, exactly like a real recovery barrier), and the
+/// max-reduction tells all ranks — collectively and deterministically —
+/// whether to roll back.  Callers gate on
+/// [`crate::comm::FaultPlan::has_crashes`], so crash-free plans (and the
+/// empty plan) add zero probe traffic.
+pub fn fault_probe<S: Scalar>(ctx: &Ctx<'_, S>) -> bool {
+    let comm = ctx.mesh.comm();
+    let mine = if comm.take_crash() {
+        let clock = comm.clock();
+        clock.observe_arrival(clock.now() + comm.fault_plan().reboot_secs);
+        S::one()
+    } else {
+        S::zero()
+    };
+    let hit = comm.world().allreduce_scalar(tags::FAULT, mine, ReduceOp::Max);
+    hit > S::zero()
+}
 
 /// Tag blocks per routine family (collectives add small offsets).
 pub(crate) mod tags {
@@ -72,6 +95,8 @@ pub(crate) mod tags {
     /// Mixed-precision refinement: the wide solution-vector ring
     /// allgather and the backward-error reductions.
     pub const MIXED: u32 = 6_300;
+    /// Fault-probe allreduces at checkpoint/snapshot boundaries.
+    pub const FAULT: u32 = 6_400;
 }
 
 /// How a send payload reaches the NIC ([`Ctx::wire_read`], `DESIGN.md`
@@ -601,6 +626,27 @@ impl<'a, S: Scalar> Ctx<'a, S> {
             }
             cache.borrow_mut().host_read(key);
         }
+    }
+
+    /// Price the D2H leg of checkpointing `buf` (`DESIGN.md` §18): a
+    /// device-dirty buffer's authoritative copy lives on the device, so a
+    /// host-side checkpoint must copy it down — a blocking transfer on
+    /// the copy-engine timeline (queued behind any in-flight async
+    /// traffic, then waited).  Unlike [`Ctx::host_read`] this does **not**
+    /// end the dirty period or touch the flush bookkeeping: the snapshot
+    /// is a side read, and all later PCIe accounting must be exactly what
+    /// it would have been without it.  No-op for host-clean buffers, host
+    /// profiles, and with residency off.
+    pub fn snapshot_read(&self, buf: &[S]) {
+        let Some(cache) = self.active_cache() else { return };
+        let key = BufKey::of(buf);
+        if !cache.borrow().is_dirty(key) {
+            return;
+        }
+        let dt = key.bytes() as f64 / self.engine.profile().pcie_bw;
+        let clock = self.mesh.comm().clock();
+        let ready = clock.pcie_occupy(dt);
+        clock.pcie_wait(ready);
     }
 
     /// The host mutated `buf` (row swap, panel scatter) — or is about to

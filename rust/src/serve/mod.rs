@@ -21,9 +21,9 @@
 //! model twins — so the queueing/percentile arithmetic is shared (and
 //! mirrored by the python oracle).
 
-use std::collections::HashSet;
-
-use crate::cluster::{Cluster, Method};
+use crate::accel::EngineKind;
+use crate::cluster::{Cluster, ClusterConfig, Method};
+use crate::comm::FaultPlan;
 use crate::workloads::Workload;
 use crate::{Error, Result, Scalar};
 
@@ -74,12 +74,46 @@ pub struct ServeConfig {
     /// Orthogonal to `batching` — batching amortizes *within* a batch, the
     /// cache *across* batches.
     pub factor_cache: bool,
+    /// Max distinct operators the factor cache tracks, LRU-evicted beyond
+    /// it.  The default (`usize::MAX`) is the old unbounded seen-forever
+    /// behaviour, byte for byte.
+    pub factor_cache_cap: usize,
+    /// Per-request latency deadline, seconds: a request whose batch
+    /// finishes more than this after its arrival counts as a deadline miss
+    /// ([`ServeReport::deadline_misses`]).  `None` disables the check.
+    pub deadline: Option<f64>,
+    /// Failed batch attempts to retry before falling back to the degraded
+    /// arm.  0 (the default) goes straight to degraded on the first
+    /// failure.
+    pub retry_budget: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { rhs_batch: 8, batching: true, factor_cache: true }
+        ServeConfig {
+            rhs_batch: 8,
+            batching: true,
+            factor_cache: true,
+            factor_cache_cap: usize::MAX,
+            deadline: None,
+            retry_budget: 0,
+        }
     }
+}
+
+/// Per-attempt context handed to the batch pricer ([`schedule`]'s
+/// `run_batch`).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchCtx {
+    /// An earlier batch on this timeline already factored this operator
+    /// (direct methods with [`ServeConfig::factor_cache`] on).
+    pub factor_cached: bool,
+    /// 0 on the first attempt; incremented per retry after a failure.
+    pub attempt: usize,
+    /// Last-resort attempt with the retry budget exhausted: the pricer
+    /// should degrade — run the host arm instead of the faulted device
+    /// path.  An error from a degraded attempt fails the whole run.
+    pub degraded: bool,
 }
 
 /// A deterministic mixed demo stream: groups of four consecutive requests
@@ -147,6 +181,10 @@ pub struct BatchCost {
     pub per_request_secs: Vec<f64>,
     /// Max abs solution error across the batch vs the known answers.
     pub max_err: f64,
+    /// The pricer itself degraded mid-batch (e.g. mixed-precision
+    /// stagnation forced the reported wide fallback) — the batch's
+    /// requests count as degraded even on a first, un-retried attempt.
+    pub degraded: bool,
 }
 
 /// One request's fate on the serving timeline.
@@ -170,6 +208,9 @@ pub struct RequestOutcome {
     pub attributed_secs: f64,
     /// Max abs error of the whole batch (requests share the check).
     pub max_err: f64,
+    /// The batch finished past this request's deadline
+    /// ([`ServeConfig::deadline`]; always `false` with no deadline set).
+    pub deadline_missed: bool,
 }
 
 impl RequestOutcome {
@@ -189,6 +230,17 @@ pub struct ServeReport {
     /// Batches that rode the cross-request factor cache (0 with
     /// `factor_cache` off or when no operator repeats).
     pub factor_cache_hits: usize,
+    /// Operators LRU-evicted from the bounded factor cache
+    /// ([`ServeConfig::factor_cache_cap`]; 0 at the unbounded default).
+    pub factor_cache_evictions: usize,
+    /// Requests whose batch finished past their deadline (0 with no
+    /// deadline configured).
+    pub deadline_misses: usize,
+    /// Requests whose batch needed at least one retry.
+    pub retried_requests: usize,
+    /// Requests served by a degraded attempt (host-arm fallback) or whose
+    /// pricer reported in-batch degradation ([`BatchCost::degraded`]).
+    pub degraded_requests: usize,
 }
 
 impl ServeReport {
@@ -241,9 +293,23 @@ impl ServeReport {
 
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
+        let robustness = if self.deadline_misses + self.retried_requests + self.degraded_requests
+            + self.factor_cache_evictions
+            > 0
+        {
+            format!(
+                ", {} deadline misses, {} retried, {} degraded, {} evictions",
+                self.deadline_misses,
+                self.retried_requests,
+                self.degraded_requests,
+                self.factor_cache_evictions
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{} requests in {} batches ({} factor-cache hits): {:.3} req/s, \
-             latency p50 {} p95 {} max {}, err {:.2e}",
+             latency p50 {} p95 {} max {}, err {:.2e}{}",
             self.outcomes.len(),
             self.batches,
             self.factor_cache_hits,
@@ -252,6 +318,7 @@ impl ServeReport {
             crate::util::fmt::secs(self.p95()),
             crate::util::fmt::secs(self.latency_max()),
             self.max_err(),
+            robustness,
         )
     }
 }
@@ -261,19 +328,25 @@ impl ServeReport {
 /// its last member has arrived), and ledger every request.  `requests`
 /// must be arrival-ordered (the FIFO contract).
 ///
-/// `run_batch` receives the batch plus a `factor_cached` flag: whether an
-/// earlier batch on this timeline already factored the same operator
-/// (direct methods with [`ServeConfig::factor_cache`] on).  The scheduler
-/// tracks this itself — a seen-set over `(workload, n, method)` — so the
-/// live-cluster path and the analytic model twins price the *same* batches
-/// as hits.
+/// `run_batch` receives the batch plus a [`BatchCtx`]: whether an earlier
+/// batch on this timeline already factored the same operator (direct
+/// methods with [`ServeConfig::factor_cache`] on), which attempt this is,
+/// and whether the retry budget is spent (the degraded last resort).  The
+/// scheduler tracks cache hits itself — a capacity-bounded LRU over
+/// `(workload, n, method)` — so the live-cluster path and the analytic
+/// model twins price the *same* batches as hits.
+///
+/// A failing batch is retried up to [`ServeConfig::retry_budget`] times,
+/// then re-attempted once degraded; only a degraded failure propagates.
+/// Failed attempts cost nothing on the virtual timeline (an `Err` carries
+/// no makespan) — the robustness ledger, not the clock, records them.
 pub fn schedule<F>(
     requests: &[SolveRequest],
     cfg: &ServeConfig,
     mut run_batch: F,
 ) -> Result<ServeReport>
 where
-    F: FnMut(&[&SolveRequest], bool) -> Result<BatchCost>,
+    F: FnMut(&[&SolveRequest], BatchCtx) -> Result<BatchCost>,
 {
     if requests.windows(2).any(|w| w[0].arrival > w[1].arrival) {
         return Err(Error::config("serve requests must be arrival-ordered".to_string()));
@@ -281,23 +354,64 @@ where
     let batches = form_batches(requests, cfg);
     let mut outcomes: Vec<RequestOutcome> = Vec::with_capacity(requests.len());
     let mut clock = 0.0f64;
-    let mut seen: HashSet<(Workload, usize, &'static str)> = HashSet::new();
+    // LRU over operators: front = least recently used.  At the unbounded
+    // default capacity this is the old seen-forever set, hit for hit.
+    let mut seen: Vec<(Workload, usize, &'static str)> = Vec::new();
     let mut factor_cache_hits = 0usize;
+    let mut factor_cache_evictions = 0usize;
+    let mut deadline_misses = 0usize;
+    let mut retried_requests = 0usize;
+    let mut degraded_requests = 0usize;
     for (bi, batch) in batches.iter().enumerate() {
         let members: Vec<&SolveRequest> = batch.iter().map(|&i| &requests[i]).collect();
         let head = members[0];
+        let key = (head.workload, head.n, head.method.name());
         let factor_cached = cfg.factor_cache
             && matches!(head.method, Method::Lu | Method::Cholesky)
-            && !seen.insert((head.workload, head.n, head.method.name()));
+            && match seen.iter().position(|k| *k == key) {
+                Some(pos) => {
+                    // A hit refreshes recency.
+                    seen.remove(pos);
+                    seen.push(key);
+                    true
+                }
+                None => {
+                    seen.push(key);
+                    while seen.len() > cfg.factor_cache_cap {
+                        seen.remove(0);
+                        factor_cache_evictions += 1;
+                    }
+                    false
+                }
+            };
         if factor_cached {
             factor_cache_hits += 1;
         }
-        let cost = run_batch(&members, factor_cached)?;
+        let mut attempt = 0usize;
+        let mut degraded = false;
+        let cost = loop {
+            match run_batch(&members, BatchCtx { factor_cached, attempt, degraded }) {
+                Ok(c) => break c,
+                Err(e) if degraded => return Err(e),
+                Err(_) if attempt < cfg.retry_budget => attempt += 1,
+                Err(_) => degraded = true,
+            }
+        };
+        if attempt > 0 {
+            retried_requests += members.len();
+        }
+        if degraded || cost.degraded {
+            degraded_requests += members.len();
+        }
         let ready = members.iter().map(|r| r.arrival).fold(0.0f64, f64::max);
         let start = clock.max(ready);
         let finish = start + cost.makespan;
         clock = finish;
         for (j, r) in members.iter().enumerate() {
+            let deadline_missed = cfg.deadline.map_or(false, |d| finish - r.arrival > d);
+            if deadline_missed {
+                deadline_misses += 1;
+            }
             outcomes.push(RequestOutcome {
                 id: r.id,
                 method: r.method.name(),
@@ -308,10 +422,19 @@ where
                 batch: bi,
                 attributed_secs: cost.per_request_secs.get(j).copied().unwrap_or(0.0),
                 max_err: cost.max_err,
+                deadline_missed,
             });
         }
     }
-    Ok(ServeReport { outcomes, batches: batches.len(), factor_cache_hits })
+    Ok(ServeReport {
+        outcomes,
+        batches: batches.len(),
+        factor_cache_hits,
+        factor_cache_evictions,
+        deadline_misses,
+        retried_requests,
+        degraded_requests,
+    })
 }
 
 /// Serve a request stream over the live cluster simulation: each batch is
@@ -325,22 +448,44 @@ pub fn serve_cluster<S: Scalar>(
     requests: &[SolveRequest],
     cfg: &ServeConfig,
 ) -> Result<ServeReport> {
-    schedule(requests, cfg, |members, _factor_cached| {
+    // Bound the cluster-side cache to match the scheduler's LRU, so what
+    // the scheduler predicts as evicted really is re-factored.
+    cluster.factor_cache().set_capacity(cfg.factor_cache_cap);
+    // Degraded arm, built on first use: a device fault (e.g. a crash with
+    // no checkpoint) falls back to the host engine with a clean fault
+    // plan — the recovery path, not another roll of the same dice.
+    let mut degraded_cluster: Option<Cluster> = None;
+    schedule(requests, cfg, |members, ctx| {
         let head = members[0];
         let coeffs: Vec<f64> = members.iter().map(|r| r.rhs_coeff()).collect();
         let tols: Vec<f64> = members.iter().map(|r| r.tol).collect();
-        let report = cluster.solve_batch_cached::<S>(
+        let target: &Cluster = if ctx.degraded {
+            if degraded_cluster.is_none() {
+                degraded_cluster = Some(Cluster::new(ClusterConfig {
+                    engine: EngineKind::CpuSerial,
+                    fault_plan: FaultPlan::default(),
+                    ..cluster.config().clone()
+                })?);
+            }
+            degraded_cluster.as_ref().expect("just built")
+        } else {
+            cluster
+        };
+        let report = target.solve_batch_cached::<S>(
             head.workload,
             head.n,
             head.method,
             &coeffs,
             &tols,
-            cfg.factor_cache,
+            cfg.factor_cache && !ctx.degraded,
         )?;
         Ok(BatchCost {
             makespan: report.makespan(),
             per_request_secs: report.per_request_secs(),
             max_err: report.max_err,
+            // Mixed-precision stagnation already re-ran wide inside the
+            // batch: report it so the ledger counts the degradation.
+            degraded: report.mixed_fallback,
         })
     })
 }
@@ -393,11 +538,12 @@ mod tests {
     fn schedule_timeline_and_percentiles() {
         let s = demo_stream(8, 64);
         // Price every batch at 1 virtual second, regardless of width.
-        let rep = schedule(&s, &ServeConfig::default(), |members, _| {
+        let rep = schedule(&s, &ServeConfig::default(), |members, _ctx| {
             Ok(BatchCost {
                 makespan: 1.0,
                 per_request_secs: vec![0.25; members.len()],
                 max_err: 1e-12,
+                degraded: false,
             })
         })
         .unwrap();
@@ -429,6 +575,7 @@ mod tests {
             makespan: 1.0,
             per_request_secs: vec![],
             max_err: 0.0,
+            degraded: false,
         }))
         .is_err());
     }
@@ -440,22 +587,128 @@ mod tests {
         // iterative groups never count, whatever they repeat.
         let s = demo_stream(64, 32);
         let mut flagged = Vec::new();
-        let rep = schedule(&s, &ServeConfig::default(), |members, cached| {
-            if cached {
+        let rep = schedule(&s, &ServeConfig::default(), |members, ctx| {
+            if ctx.factor_cached {
                 flagged.push((members[0].method.name(), members[0].n));
             }
-            Ok(BatchCost { makespan: 1.0, per_request_secs: vec![], max_err: 0.0 })
+            Ok(BatchCost { makespan: 1.0, per_request_secs: vec![], max_err: 0.0, degraded: false })
         })
         .unwrap();
         assert_eq!(rep.factor_cache_hits, 2);
+        assert_eq!(rep.factor_cache_evictions, 0);
         assert_eq!(flagged, vec![("LU", 32), ("Cholesky", 96)]);
         // The A/B arm: same stream, no cache, no hits.
         let off = ServeConfig { factor_cache: false, ..ServeConfig::default() };
-        let rep = schedule(&s, &off, |_, cached| {
-            assert!(!cached);
-            Ok(BatchCost { makespan: 1.0, per_request_secs: vec![], max_err: 0.0 })
+        let rep = schedule(&s, &off, |_, ctx| {
+            assert!(!ctx.factor_cached);
+            Ok(BatchCost { makespan: 1.0, per_request_secs: vec![], max_err: 0.0, degraded: false })
         })
         .unwrap();
         assert_eq!(rep.factor_cache_hits, 0);
+    }
+
+    #[test]
+    fn bounded_scheduler_cache_evicts_lru_operators() {
+        // 64 requests touch 6 distinct operators; a capacity-1 LRU forgets
+        // each direct operator before its group-12/14 revisit, so the hits
+        // the unbounded default reports become misses — and every push past
+        // capacity is an eviction.
+        let s = demo_stream(64, 32);
+        let tight = ServeConfig { factor_cache_cap: 1, ..ServeConfig::default() };
+        let rep = schedule(&s, &tight, |_, _ctx| {
+            Ok(BatchCost { makespan: 1.0, per_request_secs: vec![], max_err: 0.0, degraded: false })
+        })
+        .unwrap();
+        assert_eq!(rep.factor_cache_hits, 0);
+        // Only direct-method batches enter the LRU: 8 direct groups (LU and
+        // Cholesky alternate among the 16), each evicting its predecessor.
+        assert_eq!(rep.factor_cache_evictions, 7);
+        // A capacity that holds the working set behaves like the default.
+        let roomy = ServeConfig { factor_cache_cap: 8, ..ServeConfig::default() };
+        let rep = schedule(&s, &roomy, |_, _ctx| {
+            Ok(BatchCost { makespan: 1.0, per_request_secs: vec![], max_err: 0.0, degraded: false })
+        })
+        .unwrap();
+        assert_eq!(rep.factor_cache_hits, 2);
+        assert_eq!(rep.factor_cache_evictions, 0);
+    }
+
+    #[test]
+    fn retry_budget_then_degraded_fallback_is_ledgered() {
+        let s = demo_stream(4, 64); // one batch of 4
+        let cfg = ServeConfig { retry_budget: 2, ..ServeConfig::default() };
+        let mut attempts = Vec::new();
+        let rep = schedule(&s, &cfg, |members, ctx| {
+            attempts.push((ctx.attempt, ctx.degraded));
+            if !ctx.degraded {
+                return Err(Error::Runtime("device fault".to_string()));
+            }
+            Ok(BatchCost {
+                makespan: 1.0,
+                per_request_secs: vec![0.25; members.len()],
+                max_err: 1e-12,
+                degraded: false,
+            })
+        })
+        .unwrap();
+        // Attempt 0, two retries, then the degraded last resort.
+        assert_eq!(attempts, vec![(0, false), (1, false), (2, false), (2, true)]);
+        assert_eq!(rep.retried_requests, 4);
+        assert_eq!(rep.degraded_requests, 4);
+        // Failed attempts cost nothing on the timeline: the batch still
+        // starts at its last arrival and runs one priced makespan.
+        assert_eq!(rep.outcomes[0].start, 0.006);
+        assert_eq!(rep.outcomes[0].finish, 1.006);
+
+        // A degraded failure propagates instead of looping.
+        let err = schedule(&s, &cfg, |_, _ctx| -> Result<BatchCost> {
+            Err(Error::Runtime("unrecoverable".to_string()))
+        });
+        assert!(err.is_err());
+
+        // A pricer-reported in-batch degradation counts without any retry.
+        let rep = schedule(&s, &ServeConfig::default(), |members, _ctx| {
+            Ok(BatchCost {
+                makespan: 1.0,
+                per_request_secs: vec![0.25; members.len()],
+                max_err: 1e-12,
+                degraded: true,
+            })
+        })
+        .unwrap();
+        assert_eq!(rep.retried_requests, 0);
+        assert_eq!(rep.degraded_requests, 4);
+    }
+
+    #[test]
+    fn deadlines_count_late_finishes_per_request() {
+        let s = demo_stream(8, 64); // two batches, finishes 1.006 and 2.006
+        let cfg = ServeConfig { deadline: Some(1.05), ..ServeConfig::default() };
+        let rep = schedule(&s, &cfg, |members, _ctx| {
+            Ok(BatchCost {
+                makespan: 1.0,
+                per_request_secs: vec![0.25; members.len()],
+                max_err: 1e-12,
+                degraded: false,
+            })
+        })
+        .unwrap();
+        // Batch 0 latencies run 1.006 .. 1.000: all inside 1.05.  Batch 1
+        // latencies run 1.998 .. 1.992: all late.
+        assert_eq!(rep.deadline_misses, 4);
+        assert!(rep.outcomes[..4].iter().all(|o| !o.deadline_missed));
+        assert!(rep.outcomes[4..].iter().all(|o| o.deadline_missed));
+        // Summary surfaces the robustness clause only when something fired.
+        assert!(rep.summary().contains("4 deadline misses"));
+        let quiet = schedule(&s, &ServeConfig::default(), |members, _ctx| {
+            Ok(BatchCost {
+                makespan: 1.0,
+                per_request_secs: vec![0.25; members.len()],
+                max_err: 1e-12,
+                degraded: false,
+            })
+        })
+        .unwrap();
+        assert!(!quiet.summary().contains("deadline"));
     }
 }

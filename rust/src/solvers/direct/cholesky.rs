@@ -22,10 +22,11 @@
 //! Only the lower triangle is referenced or updated; the strict upper
 //! triangle of the shard is left stale.
 
+use super::lu::{restore_checkpoint, take_checkpoint, PanelCheckpoint};
 use crate::comm::{BcastRequest, Payload};
 use crate::dist::DistMatrix;
-use crate::pblas::{tags, Ctx};
-use crate::{Result, Scalar};
+use crate::pblas::{fault_probe, tags, Ctx};
+use crate::{Error, Result, Scalar};
 
 /// Factor panel `k` (its column must already hold all updates through step
 /// `k-1`): potrf the diagonal tile, broadcast L11 down the panel's process
@@ -92,19 +93,96 @@ fn factor_panel<'a, S: Scalar>(
     Ok(l_rows)
 }
 
+/// Re-post panel `k`'s split-phase row broadcasts from *restored* state:
+/// the recovery twin of [`factor_panel`]'s final section.  The panel
+/// column in `a` already holds the checkpointed factors (host-clean after
+/// the rollback, so the plain broadcast is the right wire route); no
+/// `potrf`/`trsm` re-runs.
+fn repost_panel<'a, S: Scalar>(
+    ctx: &Ctx<'a, S>,
+    a: &DistMatrix<S>,
+    k: usize,
+) -> Vec<Option<BcastRequest<'a, S>>> {
+    let desc = *a.desc();
+    let mesh = ctx.mesh;
+    let ck = k % desc.shape.pc;
+    let row = mesh.row_comm();
+    let mut l_rows: Vec<Option<BcastRequest<'a, S>>> = Vec::with_capacity(a.local_mt());
+    for lti in 0..a.local_mt() {
+        let ti = desc.global_ti(mesh.row(), lti);
+        if ti > k {
+            let data = if mesh.col() == ck {
+                Some(Payload::Data(a.tile(lti, desc.local_tj(k)).to_vec()))
+            } else {
+                None
+            };
+            l_rows.push(Some(row.ibcast(ck, tags::CHOL + 1, data)));
+        } else {
+            l_rows.push(None);
+        }
+    }
+    l_rows
+}
+
 /// In-place distributed Cholesky: on return the lower triangle of `a` holds
 /// L (with its diagonal); the strict upper triangle is unspecified.
 pub fn pchol_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<()> {
+    pchol_factor_ckpt(ctx, a, None)
+}
+
+/// [`pchol_factor`] with panel-granularity fault tolerance: the Cholesky
+/// twin of [`super::lu::plu_factor_ckpt`] (same boundary schedule — probe
+/// when the fault plan scripts crashes, snapshot every `every_k_panels`
+/// panels pricing only the device-dirty D2H legs, roll back + re-post +
+/// replay on a positive probe — minus the pivot state Cholesky does not
+/// have).  `ckpt = None` with a crash-free plan is byte-for-byte the
+/// plain schedule.
+pub fn pchol_factor_ckpt<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &mut DistMatrix<S>,
+    ckpt: Option<crate::comm::CheckpointPolicy>,
+) -> Result<()> {
     let desc = *a.desc();
     assert!(desc.is_square(), "pchol_factor requires a square matrix");
     let kt = desc.mt();
     let mesh = ctx.mesh;
     let pr = desc.shape.pr;
 
+    let probing = mesh.comm().fault_plan().has_crashes();
+    let every = ckpt.map(|c| c.every_k_panels.max(1));
+    let mut saved: Option<PanelCheckpoint<S>> = None;
+    let mut just_restored = false;
+
     // Prologue: factor panel 0; its row broadcasts go on the wire now.
     let mut pending = Some(factor_panel(ctx, a, 0)?);
 
-    for k in 0..kt {
+    let mut k = 0;
+    while k < kt {
+        // --- 0. fault boundary: probe for crashes, then checkpoint ---------
+        let boundary = every.map_or(probing, |e| k % e == 0);
+        if probing && boundary && k > 0 && !just_restored && fault_probe(ctx) {
+            for req in pending.take().expect("panel in flight").into_iter().flatten() {
+                req.wait(); // drain: keep the collectives aligned
+            }
+            let Some(c) = saved.as_ref() else {
+                return Err(Error::Runtime(format!(
+                    "pchol_factor: rank crash detected at panel {k} with no checkpoint \
+                     (CheckpointPolicy not set)"
+                )));
+            };
+            restore_checkpoint(ctx, a, c);
+            k = c.k;
+            pending = Some(repost_panel(ctx, &*a, k));
+            just_restored = true;
+            continue;
+        }
+        if let Some(e) = every {
+            if k % e == 0 && !just_restored {
+                saved = Some(take_checkpoint(ctx, a, k, 0, &[]));
+            }
+        }
+        just_restored = false;
+
         let inflight = pending.take().expect("panel in flight");
 
         // --- 1. complete the L(i,k) row broadcasts -------------------------
@@ -204,6 +282,7 @@ pub fn pchol_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Resul
         for buf in l_rows.iter().chain(&l_cols).flatten() {
             ctx.host_mut(buf);
         }
+        k += 1;
     }
     Ok(())
 }

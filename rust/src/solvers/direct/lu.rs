@@ -45,7 +45,7 @@
 
 use crate::comm::{BcastRequest, Payload, Tag};
 use crate::dist::DistMatrix;
-use crate::pblas::{tags, Ctx};
+use crate::pblas::{fault_probe, tags, Ctx};
 use crate::{linalg, Error, Result, Scalar};
 
 /// Pivot record of one factorisation: `swaps[g] = p` means global rows
@@ -90,11 +90,14 @@ struct PanelInFlight<'a, S: Scalar> {
 /// the factored tiles back, and start the split-phase pivot + L21
 /// broadcasts.  Mirrors steps 1–3 of the classic schedule; the broadcasts
 /// ride the network while the caller returns to trailing-update work.
+/// Also returns the diagonal owner's copy of the panel's global pivot rows
+/// (empty elsewhere), so a checkpoint taken while the panel is in flight
+/// can re-post the pivot broadcast without re-factoring ([`repost_panel`]).
 fn factor_panel<'a, S: Scalar>(
     ctx: &Ctx<'a, S>,
     a: &mut DistMatrix<S>,
     k: usize,
-) -> Result<PanelInFlight<'a, S>> {
+) -> Result<(PanelInFlight<'a, S>, Vec<i64>)> {
     let desc = *a.desc();
     let t = desc.tile;
     let kt = desc.mt();
@@ -203,7 +206,7 @@ fn factor_panel<'a, S: Scalar>(
     // --- start the split-phase pivot + L21 broadcasts ----------------------
     let world = comm.world();
     let piv_payload = if comm.rank() == diag_rank {
-        Some(Payload::Ints(piv_global))
+        Some(Payload::Ints(piv_global.clone()))
     } else {
         None
     };
@@ -224,12 +227,144 @@ fn factor_panel<'a, S: Scalar>(
             l21.push(None);
         }
     }
-    Ok(PanelInFlight { piv, l21 })
+    Ok((PanelInFlight { piv, l21 }, piv_global))
+}
+
+/// Re-post panel `k`'s split-phase broadcasts from *restored* state: the
+/// recovery twin of [`factor_panel`]'s final section.  The panel column in
+/// `a` already holds the checkpointed factors and `piv_global` the
+/// checkpointed pivot rows, so no gather, `getrf` or scatter re-runs —
+/// recovery re-flies only the broadcasts the drained step lost.
+fn repost_panel<'a, S: Scalar>(
+    ctx: &Ctx<'a, S>,
+    a: &DistMatrix<S>,
+    k: usize,
+    piv_global: &[i64],
+) -> (PanelInFlight<'a, S>, Vec<i64>) {
+    let desc = *a.desc();
+    let mesh = ctx.mesh;
+    let comm = mesh.comm();
+    let ck = k % desc.shape.pc;
+    let diag_rank = desc.shape.rank_at(k % desc.shape.pr, ck);
+    let in_panel_col = mesh.col() == ck;
+
+    let piv_payload = if comm.rank() == diag_rank {
+        Some(Payload::Ints(piv_global.to_vec()))
+    } else {
+        None
+    };
+    let piv = comm.world().ibcast(diag_rank, tags::LU + 1, piv_payload);
+
+    let row = mesh.row_comm();
+    let mut l21: Vec<Option<BcastRequest<'a, S>>> = Vec::with_capacity(a.local_mt());
+    for lti in 0..a.local_mt() {
+        let ti = desc.global_ti(mesh.row(), lti);
+        if ti > k {
+            let data = if in_panel_col {
+                Some(Payload::Data(a.tile(lti, desc.local_tj(k)).to_vec()))
+            } else {
+                None
+            };
+            l21.push(Some(row.ibcast(ck, tags::LU + 3, data)));
+        } else {
+            l21.push(None);
+        }
+    }
+    (PanelInFlight { piv, l21 }, piv_global.to_vec())
+}
+
+/// Host-side snapshot of one rank's factorization state at a panel
+/// boundary: every local tile, the pivot count, and the in-flight panel's
+/// pivot rows (diagonal owner only) — enough to re-enter the main loop at
+/// panel `k` as if the steps since never ran.
+pub(crate) struct PanelCheckpoint<S: Scalar> {
+    pub(crate) k: usize,
+    /// All local tiles, `[lti * local_nt + ltj]`.
+    pub(crate) tiles: Vec<Vec<S>>,
+    /// Pivot swaps recorded so far (the restore truncates to this).
+    pub(crate) n_swaps: usize,
+    /// The in-flight panel `k`'s global pivot rows (empty off the
+    /// diagonal owner, and for Cholesky).
+    pub(crate) piv_pending: Vec<i64>,
+}
+
+/// Snapshot the rank's local tiles at panel boundary `k`.  Device-dirty
+/// tiles must come down to the host first: each prices a blocking D2H on
+/// the copy-engine timeline ([`Ctx::snapshot_read`]) *without* closing its
+/// dirty period — the checkpoint is a side read, and the fault-free run's
+/// later PCIe accounting stays exactly what it was (DESIGN.md §18).
+pub(crate) fn take_checkpoint<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &DistMatrix<S>,
+    k: usize,
+    n_swaps: usize,
+    piv_pending: &[i64],
+) -> PanelCheckpoint<S> {
+    let nt = a.local_nt();
+    let mut tiles = Vec::with_capacity(a.local_mt() * nt);
+    for lti in 0..a.local_mt() {
+        for ltj in 0..nt {
+            ctx.snapshot_read(a.tile(lti, ltj));
+            tiles.push(a.tile(lti, ltj).to_vec());
+        }
+    }
+    PanelCheckpoint { k, tiles, n_swaps, piv_pending: piv_pending.to_vec() }
+}
+
+/// Roll the rank's local tiles back to a checkpoint.  Every tile is a host
+/// write ([`Ctx::host_mut`]): stale device copies drop out of the
+/// `TileCache` and the surviving factors re-admit (re-stream) on first
+/// touch during the replay — recovery re-prices exactly the traffic it
+/// re-causes.
+pub(crate) fn restore_checkpoint<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>, c: &PanelCheckpoint<S>) {
+    let nt = a.local_nt();
+    for lti in 0..a.local_mt() {
+        for ltj in 0..nt {
+            a.tile_mut(lti, ltj).copy_from_slice(&c.tiles[lti * nt + ltj]);
+            ctx.host_mut(a.tile(lti, ltj));
+        }
+    }
+}
+
+/// Drain a panel's in-flight broadcasts (crash detected: the step that
+/// would have consumed them is abandoned, but every rank must still
+/// complete the collectives so the channels stay aligned).
+fn drain_panel<S: Scalar>(inflight: PanelInFlight<'_, S>) {
+    inflight.piv.wait();
+    for req in inflight.l21.into_iter().flatten() {
+        req.wait();
+    }
 }
 
 /// In-place distributed LU: on return `a` holds L (unit lower, implicit
 /// diagonal) and U; the returned [`PivotMap`] records the interchanges.
 pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<PivotMap> {
+    plu_factor_ckpt(ctx, a, None)
+}
+
+/// [`plu_factor`] with panel-granularity fault tolerance (DESIGN.md §18).
+///
+/// With a [`CheckpointPolicy`], every `every_k_panels`-th panel boundary
+/// snapshots the local tiles (+ pivots and the in-flight panel's pivot
+/// rows) to the host, pricing one blocking D2H per device-dirty tile on
+/// the copy-engine timeline and nothing else — the fault-free overhead is
+/// exactly those legs.  When the run's [`crate::comm::FaultPlan`] scripts
+/// crashes, every boundary after the first also *probes* (a scalar
+/// allreduce): a crashed rank pays the plan's reboot cost, and on a
+/// positive probe all ranks drain the in-flight panel, roll their tiles
+/// back to the last checkpoint, re-post its broadcasts and replay — at
+/// most `every_k_panels` panels of rework, with bit-identical factors
+/// (the replay recomputes exactly the drained steps from identical
+/// inputs).  A crash with no checkpoint to roll back to (no policy, or a
+/// crash firing before the first probe) is an honest error on all ranks.
+///
+/// `ckpt = None` together with a crash-free plan runs byte-for-byte the
+/// plain schedule: no probe, no snapshot, no extra traffic.
+pub fn plu_factor_ckpt<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &mut DistMatrix<S>,
+    ckpt: Option<crate::comm::CheckpointPolicy>,
+) -> Result<PivotMap> {
     let desc = *a.desc();
     assert!(desc.is_square(), "plu_factor requires a square matrix");
     let t = desc.tile;
@@ -238,13 +373,48 @@ pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
     let (pr, pc) = (desc.shape.pr, desc.shape.pc);
     let mut pivots = PivotMap::default();
 
+    let probing = mesh.comm().fault_plan().has_crashes();
+    let every = ckpt.map(|c| c.every_k_panels.max(1));
+    let mut saved: Option<PanelCheckpoint<S>> = None;
+    // Suppress the boundary work once right after a rollback: the state
+    // *is* the checkpoint, so re-probing / re-snapshotting it is pure
+    // waste (and the consumed crash cannot re-fire anyway).
+    let mut just_restored = false;
+
     // Prologue: factor panel 0; its pivots and L21 go on the wire now.
     let mut pending = Some(factor_panel(ctx, a, 0)?);
 
-    for k in 0..kt {
+    let mut k = 0;
+    while k < kt {
+        // --- 0. fault boundary: probe for crashes, then checkpoint ---------
+        let boundary = every.map_or(probing, |e| k % e == 0);
+        if probing && boundary && k > 0 && !just_restored && fault_probe(ctx) {
+            let (inflight, _) = pending.take().expect("panel in flight");
+            drain_panel(inflight);
+            let Some(c) = saved.as_ref() else {
+                return Err(Error::Runtime(format!(
+                    "plu_factor: rank crash detected at panel {k} with no checkpoint \
+                     (CheckpointPolicy not set)"
+                )));
+            };
+            restore_checkpoint(ctx, a, c);
+            pivots.swaps.truncate(c.n_swaps);
+            k = c.k;
+            pending = Some(repost_panel(ctx, &*a, k, &c.piv_pending));
+            just_restored = true;
+            continue;
+        }
+        if let Some(e) = every {
+            if k % e == 0 && !just_restored {
+                let piv_pending = &pending.as_ref().expect("panel in flight").1;
+                saved = Some(take_checkpoint(ctx, a, k, pivots.swaps.len(), piv_pending));
+            }
+        }
+        just_restored = false;
+
         let ck = k % pc; // panel's process column
         let rk = k % pr; // diagonal tile's process row
-        let inflight = pending.take().expect("panel in flight");
+        let (inflight, _) = pending.take().expect("panel in flight");
 
         let m_real = desc.m - k * t;
         let n_real = m_real.min(t);
@@ -387,6 +557,7 @@ pub fn plu_factor<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
         for buf in l_panel.iter().chain(&u_panel).flatten() {
             ctx.host_mut(buf);
         }
+        k += 1;
     }
     Ok(pivots)
 }

@@ -7,8 +7,8 @@ pub mod refined;
 pub mod trsm;
 pub mod trsv;
 
-pub use cholesky::pchol_factor;
-pub use lu::{plu_factor, PivotMap};
+pub use cholesky::{pchol_factor, pchol_factor_ckpt};
+pub use lu::{plu_factor, plu_factor_ckpt, PivotMap};
 pub use refined::{
     pchol_refine, pchol_solve_refined, plu_refine, plu_solve_refined, refine_bound, RefineStats,
     REFINE_MAX_SWEEPS, REFINE_STAGNATION,
@@ -16,7 +16,7 @@ pub use refined::{
 pub use trsm::ptrsm;
 pub use trsv::{ptrsv, TriKind};
 
-use crate::comm::{Payload, Tag};
+use crate::comm::{CheckpointPolicy, Payload, Tag};
 use crate::dist::{ptranspose, DistMatrix, DistMultiVector, DistVector};
 use crate::pblas::Ctx;
 use crate::{Result, Scalar};
@@ -84,7 +84,21 @@ pub fn plu_solve_panel<S: Scalar>(
     a: &mut DistMatrix<S>,
     b: &DistMultiVector<S>,
 ) -> Result<DistMultiVector<S>> {
-    let piv = plu_factor(ctx, a)?;
+    plu_solve_panel_ckpt(ctx, a, b, None)
+}
+
+/// [`plu_solve_panel`] with an optional panel-checkpoint policy threaded into
+/// the factorization: under a fault plan with crashes, the factor phase rolls
+/// back to the last checkpoint instead of restarting from scratch.  The
+/// substitution sweeps run after the (recovered) factorization and need no
+/// checkpointing of their own.
+pub fn plu_solve_panel_ckpt<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &mut DistMatrix<S>,
+    b: &DistMultiVector<S>,
+    ckpt: Option<CheckpointPolicy>,
+) -> Result<DistMultiVector<S>> {
+    let piv = plu_factor_ckpt(ctx, a, ckpt)?;
     let mut x = b.clone_panel();
     for j in 0..x.ncols() {
         ctx.set_tenant(Some(j));
@@ -116,7 +130,18 @@ pub fn pchol_solve_panel<S: Scalar>(
     a: &mut DistMatrix<S>,
     b: &DistMultiVector<S>,
 ) -> Result<DistMultiVector<S>> {
-    pchol_factor(ctx, a)?;
+    pchol_solve_panel_ckpt(ctx, a, b, None)
+}
+
+/// [`pchol_solve_panel`] with an optional panel-checkpoint policy threaded
+/// into the factorization (see [`plu_solve_panel_ckpt`]).
+pub fn pchol_solve_panel_ckpt<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &mut DistMatrix<S>,
+    b: &DistMultiVector<S>,
+    ckpt: Option<CheckpointPolicy>,
+) -> Result<DistMultiVector<S>> {
+    pchol_factor_ckpt(ctx, a, ckpt)?;
     let mut x = b.clone_panel();
     ptrsm(ctx, a, &mut x, TriKind::Lower)?;
     // U = L^T: the Upper substitution only reads the (valid) upper triangle

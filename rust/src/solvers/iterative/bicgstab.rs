@@ -9,11 +9,12 @@
 //! [`pxpay`] — four reduction latencies per iteration instead of six, with
 //! every scalar bit-identical to the unfused sequence's.
 
-use super::{norm_negligible, IterConfig, IterStats};
+use super::{norm_negligible, restore_vec, snapshot_vecs, IterConfig, IterStats};
+use crate::comm::CheckpointPolicy;
 use crate::dist::DistVector;
 use crate::pblas::{
-    paxpy, pdot, pfused_axpy_norm2, pfused_axpy_norm2_dot, pfused_norm2_dot, pnorm2, pxpay,
-    Ctx, LinOp,
+    fault_probe, paxpy, pdot, pfused_axpy_norm2, pfused_axpy_norm2_dot, pfused_norm2_dot,
+    pnorm2, pxpay, Ctx, LinOp,
 };
 use crate::{Error, Result, Scalar};
 
@@ -24,6 +25,21 @@ pub fn bicgstab<S: Scalar, A: LinOp<S> + ?Sized>(
     a: &A,
     b: &DistVector<S>,
     cfg: &IterConfig,
+) -> Result<(DistVector<S>, IterStats<S>)> {
+    bicgstab_ft(ctx, a, b, cfg, None)
+}
+
+/// [`bicgstab`] with snapshot-restart fault tolerance (see
+/// [`super::cg::cg_ft`] for the protocol): the snapshotted recurrence state
+/// is `(x, r, p, rho)` — the shadow residual `r0` is constant and needs no
+/// snapshot.  A fault costs at most `snap.every_k_panels` replayed
+/// iterations plus the snapshot D2H traffic.
+pub fn bicgstab_ft<S: Scalar, A: LinOp<S> + ?Sized>(
+    ctx: &Ctx<'_, S>,
+    a: &A,
+    b: &DistVector<S>,
+    cfg: &IterConfig,
+    snap: Option<CheckpointPolicy>,
 ) -> Result<(DistVector<S>, IterStats<S>)> {
     let desc = *a.desc();
     let mesh = ctx.mesh;
@@ -39,7 +55,42 @@ pub fn bicgstab<S: Scalar, A: LinOp<S> + ?Sized>(
     let mut p = r.clone_vec();
     let mut rho = pdot(ctx, &r0, &r);
 
-    for it in 0..cfg.max_iter {
+    let probing = mesh.comm().fault_plan().has_crashes();
+    let every = snap.map(|c| c.every_k_panels.max(1));
+    let mut saved: Option<(usize, DistVector<S>, DistVector<S>, DistVector<S>, S)> = None;
+    let mut just_restored = false;
+    let mut it = 0usize;
+    while it < cfg.max_iter {
+        let boundary = every.map_or(probing, |e| it % e == 0);
+        if probing && boundary && it > 0 && !just_restored && fault_probe(ctx) {
+            let Some((sit, sx, sr, sp, srho)) = saved.as_ref() else {
+                return Err(Error::Runtime(format!(
+                    "bicgstab: rank crash detected at iteration {it} with no snapshot \
+                     (CheckpointPolicy not set)"
+                )));
+            };
+            restore_vec(ctx, &mut x, sx);
+            restore_vec(ctx, &mut r, sr);
+            restore_vec(ctx, &mut p, sp);
+            rho = *srho;
+            it = *sit;
+            just_restored = true;
+            continue;
+        }
+        if let Some(e) = every {
+            if it % e == 0 && !just_restored {
+                let mut vs = snapshot_vecs(ctx, &[&x, &r, &p]);
+                let sp = vs.pop().unwrap();
+                let sr = vs.pop().unwrap();
+                let sx = vs.pop().unwrap();
+                saved = Some((it, sx, sr, sp, rho));
+            }
+        }
+        just_restored = false;
+
+        if !rho.is_finite() {
+            return Err(Error::NonFinite { method: "bicgstab", iteration: it, quantity: "rho" });
+        }
         if rho == S::zero() {
             return Err(Error::Breakdown {
                 method: "bicgstab",
@@ -48,6 +99,9 @@ pub fn bicgstab<S: Scalar, A: LinOp<S> + ?Sized>(
         }
         let v = a.apply(ctx, &p);
         let r0v = pdot(ctx, &r0, &v);
+        if !r0v.is_finite() {
+            return Err(Error::NonFinite { method: "bicgstab", iteration: it, quantity: "r0'v" });
+        }
         if r0v == S::zero() {
             return Err(Error::Breakdown {
                 method: "bicgstab",
@@ -69,6 +123,9 @@ pub fn bicgstab<S: Scalar, A: LinOp<S> + ?Sized>(
         let t = a.apply(ctx, &s);
         // (t.t, t.s) in one pass and one two-lane allreduce.
         let (tt, ts) = pfused_norm2_dot(ctx, &t, &s);
+        if !tt.is_finite() {
+            return Err(Error::NonFinite { method: "bicgstab", iteration: it, quantity: "t't" });
+        }
         if tt == S::zero() {
             return Err(Error::Breakdown {
                 method: "bicgstab",
@@ -87,6 +144,9 @@ pub fn bicgstab<S: Scalar, A: LinOp<S> + ?Sized>(
         }
         r = s;
         let (rr, rho_new) = pfused_axpy_norm2_dot(ctx, -omega, &t, &mut r, &r0);
+        if !rr.is_finite() {
+            return Err(Error::NonFinite { method: "bicgstab", iteration: it, quantity: "||r||^2" });
+        }
         let rnorm = rr.sqrt();
         if rnorm <= tol {
             return Ok((x, IterStats::new(it + 1, rnorm / bnorm, true)));
@@ -96,6 +156,7 @@ pub fn bicgstab<S: Scalar, A: LinOp<S> + ?Sized>(
         // p = r + beta (p - omega v)
         paxpy(ctx, -omega, &v, &mut p);
         pxpay(ctx, beta, &r, &mut p);
+        it += 1;
     }
     let rnorm = pnorm2(ctx, &r);
     Ok((x, IterStats::new(cfg.max_iter, rnorm / bnorm, false)))

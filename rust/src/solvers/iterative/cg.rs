@@ -11,9 +11,10 @@
 //! launch-per-block fewer each iteration.
 
 use super::precond::Preconditioner;
-use super::{norm_negligible, IterConfig, IterStats};
+use super::{norm_negligible, restore_vec, snapshot_vecs, IterConfig, IterStats};
+use crate::comm::CheckpointPolicy;
 use crate::dist::DistVector;
-use crate::pblas::{paxpy, pdot, pfused_axpy_norm2, pnorm2, pxpay, Ctx, LinOp};
+use crate::pblas::{fault_probe, paxpy, pdot, pfused_axpy_norm2, pnorm2, pxpay, Ctx, LinOp};
 use crate::{Error, Result, Scalar};
 
 /// Solve `A x = b` (A SPD) from the zero initial guess.
@@ -22,6 +23,25 @@ pub fn cg<S: Scalar, A: LinOp<S> + ?Sized>(
     a: &A,
     b: &DistVector<S>,
     cfg: &IterConfig,
+) -> Result<(DistVector<S>, IterStats<S>)> {
+    cg_ft(ctx, a, b, cfg, None)
+}
+
+/// [`cg`] with snapshot-restart fault tolerance.  Every
+/// `snap.every_k_panels` iterations the recurrence state `(x, r, p, rr)` is
+/// snapshotted — pricing the D2H leg of every device-dirty block, nothing
+/// else — and when the cluster fault plan schedules a rank crash, the
+/// collective probe at the next boundary detects it and **all** ranks roll
+/// back to the last snapshot: a fault costs at most `k` replayed iterations
+/// plus the snapshot traffic.  With `snap = None` and no crash scheduled
+/// this is bit-identical to the un-instrumented loop; a crash with no
+/// policy is an honest [`Error::Runtime`] on every rank.
+pub fn cg_ft<S: Scalar, A: LinOp<S> + ?Sized>(
+    ctx: &Ctx<'_, S>,
+    a: &A,
+    b: &DistVector<S>,
+    cfg: &IterConfig,
+    snap: Option<CheckpointPolicy>,
 ) -> Result<(DistVector<S>, IterStats<S>)> {
     let desc = *a.desc();
     let mesh = ctx.mesh;
@@ -36,9 +56,48 @@ pub fn cg<S: Scalar, A: LinOp<S> + ?Sized>(
     let mut p = r.clone_vec();
     let mut rr = pdot(ctx, &r, &r);
 
-    for it in 0..cfg.max_iter {
+    let probing = mesh.comm().fault_plan().has_crashes();
+    let every = snap.map(|c| c.every_k_panels.max(1));
+    let mut saved: Option<(usize, DistVector<S>, DistVector<S>, DistVector<S>, S)> = None;
+    let mut just_restored = false;
+    let mut it = 0usize;
+    while it < cfg.max_iter {
+        // Snapshot/probe boundary (same protocol as the factorizations):
+        // probe collectively for a crash first — rolling back, if one hit —
+        // then snapshot.  Without a policy every iteration is a probe
+        // boundary, so a crash is reported rather than silently absorbed.
+        let boundary = every.map_or(probing, |e| it % e == 0);
+        if probing && boundary && it > 0 && !just_restored && fault_probe(ctx) {
+            let Some((sit, sx, sr, sp, srr)) = saved.as_ref() else {
+                return Err(Error::Runtime(format!(
+                    "cg: rank crash detected at iteration {it} with no snapshot \
+                     (CheckpointPolicy not set)"
+                )));
+            };
+            restore_vec(ctx, &mut x, sx);
+            restore_vec(ctx, &mut r, sr);
+            restore_vec(ctx, &mut p, sp);
+            rr = *srr;
+            it = *sit;
+            just_restored = true;
+            continue;
+        }
+        if let Some(e) = every {
+            if it % e == 0 && !just_restored {
+                let mut vs = snapshot_vecs(ctx, &[&x, &r, &p]);
+                let sp = vs.pop().unwrap();
+                let sr = vs.pop().unwrap();
+                let sx = vs.pop().unwrap();
+                saved = Some((it, sx, sr, sp, rr));
+            }
+        }
+        just_restored = false;
+
         let ap = a.apply(ctx, &p);
         let pap = pdot(ctx, &p, &ap);
+        if !pap.is_finite() {
+            return Err(Error::NonFinite { method: "cg", iteration: it, quantity: "p'Ap" });
+        }
         if pap <= S::zero() {
             return Err(Error::Breakdown {
                 method: "cg",
@@ -49,6 +108,9 @@ pub fn cg<S: Scalar, A: LinOp<S> + ?Sized>(
         paxpy(ctx, alpha, &p, &mut x);
         // r -= alpha A p and ||r||^2 in one fused kernel.
         let rr_new = pfused_axpy_norm2(ctx, -alpha, &ap, &mut r);
+        if !rr_new.is_finite() {
+            return Err(Error::NonFinite { method: "cg", iteration: it, quantity: "||r||^2" });
+        }
         let rnorm = rr_new.sqrt();
         if rnorm <= tol {
             return Ok((x, IterStats::new(it + 1, rnorm / bnorm, true)));
@@ -56,6 +118,7 @@ pub fn cg<S: Scalar, A: LinOp<S> + ?Sized>(
         let beta = rr_new / rr;
         rr = rr_new;
         pxpay(ctx, beta, &r, &mut p); // p = r + beta p
+        it += 1;
     }
     let rnorm = pnorm2(ctx, &r);
     Ok((x, IterStats::new(cfg.max_iter, rnorm / bnorm, false)))
@@ -96,6 +159,9 @@ pub fn pcg<S: Scalar, A: LinOp<S> + ?Sized, M: Preconditioner<S> + ?Sized>(
     for it in 0..cfg.max_iter {
         let ap = a.apply(ctx, &p);
         let pap = pdot(ctx, &p, &ap);
+        if !pap.is_finite() {
+            return Err(Error::NonFinite { method: "pcg", iteration: it, quantity: "p'Ap" });
+        }
         if pap <= S::zero() {
             return Err(Error::Breakdown {
                 method: "pcg",
@@ -112,6 +178,9 @@ pub fn pcg<S: Scalar, A: LinOp<S> + ?Sized, M: Preconditioner<S> + ?Sized>(
         }
         let z = m.apply(ctx, &r)?;
         let rz_new = pdot(ctx, &r, &z);
+        if !rz_new.is_finite() {
+            return Err(Error::NonFinite { method: "pcg", iteration: it, quantity: "r'z" });
+        }
         if rz_new <= S::zero() {
             return Err(Error::Breakdown {
                 method: "pcg",

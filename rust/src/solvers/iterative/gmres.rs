@@ -18,11 +18,14 @@
 //! sequence's bit for bit: the fused kernel is the same per-block axpy
 //! loop followed by the same 4-wide dot, in the same order.
 
-use super::{negligible_at_scale, norm_negligible, IterConfig, IterStats};
+use super::{
+    negligible_at_scale, norm_negligible, restore_vec, snapshot_vecs, IterConfig, IterStats,
+};
+use crate::comm::CheckpointPolicy;
 use crate::dist::DistVector;
 use crate::linalg::givens::HessenbergQr;
-use crate::pblas::{paxpy, pdot, pfused_axpy_norm2, pnorm2, pscal, Ctx, LinOp};
-use crate::{Result, Scalar};
+use crate::pblas::{fault_probe, paxpy, pdot, pfused_axpy_norm2, pnorm2, pscal, Ctx, LinOp};
+use crate::{Error, Result, Scalar};
 
 /// `||b - A x||²` with the subtraction fused into the norm pass: clone `b`,
 /// retire the clone's blocks (a reused allocation must never alias a stale
@@ -50,6 +53,23 @@ pub fn gmres<S: Scalar, A: LinOp<S> + ?Sized>(
     b: &DistVector<S>,
     cfg: &IterConfig,
 ) -> Result<(DistVector<S>, IterStats<S>)> {
+    gmres_ft(ctx, a, b, cfg, None)
+}
+
+/// [`gmres`] with snapshot-restart fault tolerance.  GMRES already rebuilds
+/// its whole Krylov basis from `x` at every restart, so the natural
+/// snapshot is just `x` at each cycle boundary — the policy's period is
+/// ignored (the restart length `m` **is** the rework bound: a fault costs
+/// at most one replayed cycle plus the snapshot D2H traffic).  `snap`
+/// enables snapshotting; with crashes scheduled and `snap = None` a
+/// detected crash is an honest [`Error::Runtime`] on every rank.
+pub fn gmres_ft<S: Scalar, A: LinOp<S> + ?Sized>(
+    ctx: &Ctx<'_, S>,
+    a: &A,
+    b: &DistVector<S>,
+    cfg: &IterConfig,
+    snap: Option<CheckpointPolicy>,
+) -> Result<(DistVector<S>, IterStats<S>)> {
     let desc = *a.desc();
     let mesh = ctx.mesh;
     let bnorm = pnorm2(ctx, b);
@@ -61,9 +81,40 @@ pub fn gmres<S: Scalar, A: LinOp<S> + ?Sized>(
     let m = cfg.restart.max(1);
     let mut total_iters = 0usize;
 
+    let probing = mesh.comm().fault_plan().has_crashes();
+    let snapping = snap.is_some();
+    let mut saved: Option<(usize, DistVector<S>)> = None;
+    let mut just_restored = false;
     loop {
+        // Cycle boundary: probe collectively for a crash, rolling x back to
+        // the last cycle's snapshot if one hit; otherwise snapshot x.
+        if probing && total_iters > 0 && !just_restored && fault_probe(ctx) {
+            let Some((sit, sx)) = saved.as_ref() else {
+                return Err(Error::Runtime(format!(
+                    "gmres: rank crash detected at iteration {total_iters} with no snapshot \
+                     (CheckpointPolicy not set)"
+                )));
+            };
+            restore_vec(ctx, &mut x, sx);
+            total_iters = *sit;
+            just_restored = true;
+            continue;
+        }
+        if snapping && !just_restored {
+            let sx = snapshot_vecs(ctx, &[&x]).pop().expect("one snapshot vector");
+            saved = Some((total_iters, sx));
+        }
+        just_restored = false;
+
         // r = b - A x (fresh residual at each restart), fused with ||r||².
         let (mut r, beta) = residual_fused(ctx, a, b, &x);
+        if !beta.is_finite() {
+            return Err(Error::NonFinite {
+                method: "gmres",
+                iteration: total_iters,
+                quantity: "||r||",
+            });
+        }
         if beta <= tol {
             return Ok((x, IterStats::new(total_iters, beta / bnorm, true)));
         }
@@ -93,6 +144,13 @@ pub fn gmres<S: Scalar, A: LinOp<S> + ?Sized>(
             let wnorm2 = pfused_axpy_norm2(ctx, -hkk, &basis[k], &mut w);
             h.push(hkk);
             let wnorm = wnorm2.sqrt();
+            if !wnorm.is_finite() {
+                return Err(Error::NonFinite {
+                    method: "gmres",
+                    iteration: total_iters,
+                    quantity: "||w||",
+                });
+            }
             h.push(wnorm);
             let hscale = h.iter().fold(S::zero(), |acc, &v| acc.max(v.abs()));
             let res = qr.push_column(h);

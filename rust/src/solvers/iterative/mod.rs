@@ -25,10 +25,10 @@ pub mod precond;
 pub mod schur;
 
 pub use bicg::bicg;
-pub use bicgstab::bicgstab;
+pub use bicgstab::{bicgstab, bicgstab_ft};
 pub use block::{block_bicgstab, block_cg};
-pub use cg::{cg, pcg};
-pub use gmres::gmres;
+pub use cg::{cg, cg_ft, pcg};
+pub use gmres::{gmres, gmres_ft};
 pub use mixed::{bicgstab_mixed, cg_mixed};
 pub use pipecg::pipecg;
 pub use precond::{BlockJacobiPrecond, JacobiPrecond, Preconditioner};
@@ -36,7 +36,42 @@ pub use schur::{schur_cg, SchurStats};
 
 pub use crate::pblas::LinOp;
 
+use crate::dist::DistVector;
+use crate::pblas::Ctx;
 use crate::Scalar;
+
+/// Snapshot a set of recurrence vectors for fault-tolerant restart: price
+/// the D2H leg of every device-dirty block ([`Ctx::snapshot_read`] — the
+/// dirty period stays open, exactly like the factorization checkpoints),
+/// then clone the host copies.  Under an empty fault layer the pricing is a
+/// no-op and the clones are plain host copies.
+pub(crate) fn snapshot_vecs<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    vecs: &[&DistVector<S>],
+) -> Vec<DistVector<S>> {
+    vecs.iter()
+        .map(|v| {
+            for l in 0..v.local_blocks() {
+                ctx.snapshot_read(v.block(l));
+            }
+            v.clone_vec()
+        })
+        .collect()
+}
+
+/// Roll a recurrence vector back to its snapshot: retire the live vector's
+/// device entries (its buffers are about to be replaced and a later clone
+/// could alias the freed allocation), install a fresh clone of the snapshot,
+/// and mark the clone's blocks host-authoritative.
+pub(crate) fn restore_vec<S: Scalar>(ctx: &Ctx<'_, S>, dst: &mut DistVector<S>, src: &DistVector<S>) {
+    for l in 0..dst.local_blocks() {
+        ctx.host_mut(dst.block(l));
+    }
+    *dst = src.clone_vec();
+    for l in 0..dst.local_blocks() {
+        ctx.host_mut(dst.block(l));
+    }
+}
 
 /// Underflow guard for vector norms, replacing the exact `norm == 0` float
 /// comparisons the Krylov solvers used to make.  Below

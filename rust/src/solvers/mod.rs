@@ -10,13 +10,14 @@ pub mod iterative;
 pub mod serial;
 
 pub use direct::{
-    apply_pivots, pchol_factor, pchol_refine, pchol_solve, pchol_solve_panel,
-    pchol_solve_refined, plu_factor, plu_refine, plu_solve, plu_solve_panel, plu_solve_refined,
-    ptrsm, ptrsv, refine_bound, PivotMap, RefineStats, TriKind, REFINE_MAX_SWEEPS,
-    REFINE_STAGNATION,
+    apply_pivots, pchol_factor, pchol_factor_ckpt, pchol_refine, pchol_solve,
+    pchol_solve_panel, pchol_solve_panel_ckpt, pchol_solve_refined, plu_factor,
+    plu_factor_ckpt, plu_refine, plu_solve, plu_solve_panel, plu_solve_panel_ckpt,
+    plu_solve_refined, ptrsm, ptrsv, refine_bound, PivotMap, RefineStats, TriKind,
+    REFINE_MAX_SWEEPS, REFINE_STAGNATION,
 };
 pub use iterative::{
-    bicg, bicgstab, bicgstab_mixed, block_bicgstab, block_cg, cg, cg_mixed, gmres, pcg, pipecg,
-    schur_cg, BlockJacobiPrecond, IterConfig, IterMethod, IterStats, JacobiPrecond, LinOp,
-    Preconditioner, SchurStats,
+    bicg, bicgstab, bicgstab_ft, bicgstab_mixed, block_bicgstab, block_cg, cg, cg_ft, cg_mixed,
+    gmres, gmres_ft, pcg, pipecg, schur_cg, BlockJacobiPrecond, IterConfig, IterMethod,
+    IterStats, JacobiPrecond, LinOp, Preconditioner, SchurStats,
 };

@@ -1,0 +1,282 @@
+//! Fault-injection integration tests (`DESIGN.md` §18).
+//!
+//! Four contracts, exercised through the public API:
+//!
+//! * **Zero cost when off** — the empty [`FaultPlan`] is bit-identical to
+//!   running with no fault layer at all (same answer bits, same virtual
+//!   clock bits, same wire counters), and so is a plan whose events can
+//!   never fire (hooks engaged, every multiplier an exact `× 1.0`).
+//! * **Recovery is exact** — a mid-factorization (mid-Krylov) crash under
+//!   a checkpoint policy reproduces the fault-free solution *bit for bit*;
+//!   only the virtual makespan grows (reboot + replay).  A crash with no
+//!   checkpoint policy is an [`Error::Runtime`] on every rank, not a hang
+//!   or a wrong answer.
+//! * **Stragglers price, never perturb** — a slow rank changes makespans
+//!   only; answers, message counts and byte counts are untouched.
+//! * **Retries are ledgered exactly** — scripted message drops inside a
+//!   live solve surface in `CommStats::{retries, timeout_secs}` with the
+//!   exponential-backoff total, and the payload still arrives intact: the
+//!   answer is the fault-free answer, bit for bit.
+
+use std::sync::Arc;
+
+use cuplss::accel::CpuEngine;
+use cuplss::comm::{CheckpointPolicy, FaultPlan, NetworkModel, World};
+use cuplss::dist::{Descriptor, DistMatrix, DistMultiVector, DistVector};
+use cuplss::mesh::{Mesh, MeshShape};
+use cuplss::pblas::{pgemm_acc, Ctx};
+use cuplss::solvers::{
+    cg_ft, gmres_ft, pchol_solve_panel_ckpt, plu_solve_panel_ckpt, IterConfig,
+};
+use cuplss::workloads::Workload;
+
+const TILE: usize = 8;
+const N: usize = 40;
+
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum Kernel {
+    Lu,
+    Chol,
+    Summa,
+    Cg,
+    Gmres,
+}
+
+const ALL_KERNELS: [Kernel; 5] =
+    [Kernel::Lu, Kernel::Chol, Kernel::Summa, Kernel::Cg, Kernel::Gmres];
+
+/// Per-rank observation: answer bits, clock bits, wire/retry counters.
+#[derive(Clone, PartialEq, Debug)]
+struct Obs {
+    bits: Vec<u64>,
+    now: u64,
+    bytes: u64,
+    msgs: u64,
+    retries: u64,
+    timeout: u64,
+}
+
+fn vec_bits(x: &DistVector<f64>) -> Vec<u64> {
+    (0..x.local_blocks())
+        .flat_map(|l| x.block(l).iter().map(|v| v.to_bits()).collect::<Vec<_>>())
+        .collect()
+}
+
+/// Run one kernel on `ranks` ranks under `plan`, checkpointing every
+/// `every` panels/iterations when given, and observe every rank.
+fn run_kernel(kernel: Kernel, ranks: usize, plan: FaultPlan, every: Option<usize>) -> Vec<Obs> {
+    World::run_with_faults::<f64, _, _>(ranks, NetworkModel::gigabit_ethernet(), plan, move |comm| {
+        let mesh = Mesh::new(&comm, MeshShape::near_square(ranks));
+        let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(TILE)));
+        let desc = Descriptor::new(N, N, TILE, mesh.shape());
+        let ckpt = every.map(CheckpointPolicy::every);
+        let bits = match kernel {
+            Kernel::Lu | Kernel::Chol => {
+                let w = if kernel == Kernel::Lu { Workload::DiagDominant } else { Workload::Spd };
+                let mut a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), w.elem::<f64>(N));
+                let b = DistMultiVector::from_cols(vec![DistVector::from_fn(
+                    desc,
+                    mesh.row(),
+                    mesh.col(),
+                    w.rhs::<f64>(N),
+                )]);
+                let x = if kernel == Kernel::Lu {
+                    plu_solve_panel_ckpt(&ctx, &mut a, &b, ckpt).unwrap()
+                } else {
+                    pchol_solve_panel_ckpt(&ctx, &mut a, &b, ckpt).unwrap()
+                };
+                vec_bits(&x.into_cols().remove(0))
+            }
+            Kernel::Summa => {
+                let a = DistMatrix::from_fn(
+                    desc,
+                    mesh.row(),
+                    mesh.col(),
+                    Workload::DiagDominant.elem::<f64>(N),
+                );
+                let b =
+                    DistMatrix::from_fn(desc, mesh.row(), mesh.col(), Workload::Spd.elem::<f64>(N));
+                let mut c = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), |_, _| 0.0);
+                pgemm_acc(&ctx, &a, &b, &mut c);
+                (0..c.local_mt())
+                    .flat_map(|lti| {
+                        (0..c.local_nt())
+                            .flat_map(|ltj| c.tile(lti, ltj).iter().map(|v| v.to_bits()))
+                            .collect::<Vec<_>>()
+                    })
+                    .collect()
+            }
+            Kernel::Cg | Kernel::Gmres => {
+                let w = if kernel == Kernel::Cg { Workload::Spd } else { Workload::DiagDominant };
+                let a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), w.elem::<f64>(N));
+                let b = DistVector::from_fn(desc, mesh.row(), mesh.col(), w.rhs::<f64>(N));
+                let cfg = IterConfig { tol: 1e-10, max_iter: 200, restart: 10 };
+                let (x, st) = if kernel == Kernel::Cg {
+                    cg_ft(&ctx, &a, &b, &cfg, ckpt).unwrap()
+                } else {
+                    gmres_ft(&ctx, &a, &b, &cfg, ckpt).unwrap()
+                };
+                assert!(st.converged, "{kernel:?} must converge at 1e-10");
+                vec_bits(&x)
+            }
+        };
+        Obs {
+            bits,
+            now: comm.clock().now().to_bits(),
+            bytes: comm.stats().bytes_sent(),
+            msgs: comm.stats().msgs_sent(),
+            retries: comm.stats().retries(),
+            timeout: comm.stats().timeout_secs().to_bits(),
+        }
+    })
+}
+
+fn makespan(obs: &[Obs]) -> f64 {
+    obs.iter().map(|o| f64::from_bits(o.now)).fold(0.0, f64::max)
+}
+
+/// The empty plan is running with no fault layer: `World::run` and
+/// `World::run_with_faults(default)` agree bit for bit on answers, clocks
+/// and counters — for every kernel on 1, 2 and 4 ranks.
+#[test]
+fn zero_event_plan_is_bit_identical_to_no_fault_layer() {
+    for &ranks in &[1usize, 2, 4] {
+        for &kernel in &ALL_KERNELS {
+            let bare = run_kernel(kernel, ranks, FaultPlan::default(), None);
+            let zero = run_kernel(kernel, ranks, FaultPlan::new(), None);
+            assert_eq!(bare, zero, "{kernel:?} P={ranks}: empty plan must cost nothing");
+            assert!(bare.iter().all(|o| o.retries == 0 && o.timeout == 0));
+        }
+    }
+}
+
+/// A plan whose events can never fire (straggler/degrade/ecc on a rank
+/// outside the world, a drop ordinal never reached) keeps every hook
+/// engaged yet changes nothing: exact `× 1.0` multipliers, no drift.
+#[test]
+fn inert_events_are_an_exact_multiplicative_identity() {
+    let inert = FaultPlan::parse(
+        "slow:99x2.0; degrade:99x4.0@0.0-1e9; ecc:99@1024; drop:0-1#999999999",
+    )
+    .unwrap();
+    for &ranks in &[2usize, 4] {
+        for &kernel in &ALL_KERNELS {
+            let base = run_kernel(kernel, ranks, FaultPlan::default(), None);
+            let hooked = run_kernel(kernel, ranks, inert.clone(), None);
+            assert_eq!(base, hooked, "{kernel:?} P={ranks}: inert events must be invisible");
+        }
+    }
+}
+
+/// Crash mid-run under a checkpoint policy: the recovered answer is the
+/// fault-free answer bit for bit, and only the clock grows (reboot +
+/// replay from the last checkpoint).  Checkpointing itself never changes
+/// answer bits either (with or against the un-checkpointed run).
+#[test]
+fn crash_recovery_reproduces_the_fault_free_bits() {
+    for &(kernel, every) in
+        &[(Kernel::Lu, 2usize), (Kernel::Chol, 2), (Kernel::Cg, 5), (Kernel::Gmres, 1)]
+    {
+        let plain = run_kernel(kernel, 4, FaultPlan::default(), None);
+        let ckpt = run_kernel(kernel, 4, FaultPlan::default(), Some(every));
+        assert_eq!(
+            plain.iter().map(|o| &o.bits).collect::<Vec<_>>(),
+            ckpt.iter().map(|o| &o.bits).collect::<Vec<_>>(),
+            "{kernel:?}: checkpointing must not perturb the answer"
+        );
+        // Crash rank 2 at ~40% of the fault-free makespan: comfortably
+        // inside the factorization / iteration sweep.
+        let at = 0.4 * makespan(&ckpt);
+        assert!(at > 0.0);
+        let plan = FaultPlan::parse(&format!("crash:2@{at}")).unwrap();
+        let crashed = run_kernel(kernel, 4, plan, Some(every));
+        assert_eq!(
+            plain.iter().map(|o| &o.bits).collect::<Vec<_>>(),
+            crashed.iter().map(|o| &o.bits).collect::<Vec<_>>(),
+            "{kernel:?}: recovery must reproduce the fault-free bits"
+        );
+        assert!(
+            makespan(&crashed) > makespan(&ckpt) + FaultPlan::default().reboot_secs,
+            "{kernel:?}: the crash must cost at least the reboot ({} vs {})",
+            makespan(&crashed),
+            makespan(&ckpt)
+        );
+    }
+}
+
+/// A scripted crash with no checkpoint policy must surface as a runtime
+/// error on every rank (the probe is collective — nobody hangs, nobody
+/// returns a half-factored answer).
+#[test]
+fn crash_without_checkpoints_errors_on_every_rank() {
+    let base = run_kernel(Kernel::Lu, 4, FaultPlan::default(), None);
+    let at = 0.3 * makespan(&base);
+    let plan = FaultPlan::parse(&format!("crash:1@{at}")).unwrap();
+    let outcomes =
+        World::run_with_faults::<f64, _, _>(4, NetworkModel::gigabit_ethernet(), plan, |comm| {
+            let mesh = Mesh::new(&comm, MeshShape::near_square(4));
+            let ctx = Ctx::new(&mesh, Arc::new(CpuEngine::new(TILE)));
+            let desc = Descriptor::new(N, N, TILE, mesh.shape());
+            let w = Workload::DiagDominant;
+            let mut a = DistMatrix::from_fn(desc, mesh.row(), mesh.col(), w.elem::<f64>(N));
+            let b = DistMultiVector::from_cols(vec![DistVector::from_fn(
+                desc,
+                mesh.row(),
+                mesh.col(),
+                w.rhs::<f64>(N),
+            )]);
+            match plu_solve_panel_ckpt(&ctx, &mut a, &b, None) {
+                Ok(_) => None,
+                Err(e) => Some(e.to_string()),
+            }
+        });
+    for (rank, outcome) in outcomes.iter().enumerate() {
+        let msg = outcome.as_ref().unwrap_or_else(|| {
+            panic!("rank {rank}: crash without checkpoints must error, not succeed")
+        });
+        assert!(msg.contains("crash"), "rank {rank}: diagnostic should name the crash: {msg}");
+    }
+}
+
+/// A straggler re-prices compute, nothing else: answers, message counts
+/// and byte counts are bit-for-bit the fault-free run; only makespans
+/// move (and they must move — rank 0 computes 2× slower).
+#[test]
+fn stragglers_change_only_the_makespan() {
+    let plan = FaultPlan::parse("slow:0x2.0").unwrap();
+    for &kernel in &[Kernel::Lu, Kernel::Summa, Kernel::Cg] {
+        let base = run_kernel(kernel, 4, FaultPlan::default(), None);
+        let slow = run_kernel(kernel, 4, plan.clone(), None);
+        for (rank, (b, s)) in base.iter().zip(&slow).enumerate() {
+            assert_eq!(b.bits, s.bits, "{kernel:?} rank {rank}: answers must not move");
+            assert_eq!(b.bytes, s.bytes, "{kernel:?} rank {rank}: same wire traffic");
+            assert_eq!(b.msgs, s.msgs, "{kernel:?} rank {rank}: same message count");
+            assert_eq!(s.retries, 0);
+        }
+        assert!(
+            makespan(&slow) > makespan(&base),
+            "{kernel:?}: a 2x straggler must stretch the makespan"
+        );
+    }
+}
+
+/// Scripted drops inside a live CG solve: the transport re-flies the lost
+/// sends, the ledger prices exactly the exponential backoff (1 ms + 2 ms),
+/// and the answer is untouched.
+#[test]
+fn scripted_drops_inside_a_solve_are_priced_and_harmless() {
+    let base = run_kernel(Kernel::Cg, 2, FaultPlan::default(), None);
+    let plan = FaultPlan::parse("drop:0-1#2x2; timeout:1e-3").unwrap();
+    let dropped = run_kernel(Kernel::Cg, 2, plan, None);
+    for (rank, (b, d)) in base.iter().zip(&dropped).enumerate() {
+        assert_eq!(b.bits, d.bits, "rank {rank}: the re-flown payload must arrive intact");
+    }
+    assert_eq!(dropped[0].retries, 2, "two scripted drops = two retries");
+    assert_eq!(dropped[1].retries, 0, "the receiver retries nothing");
+    let waited = f64::from_bits(dropped[0].timeout);
+    assert!((waited - 3e-3).abs() < 1e-12, "1ms + 2ms backoff: {waited}");
+    assert!(
+        makespan(&dropped) >= makespan(&base) + 3e-3 - 1e-12,
+        "the backoff must land on the critical path"
+    );
+}
